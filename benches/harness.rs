@@ -1,0 +1,74 @@
+//! Shared micro-bench harness (criterion is unavailable in the offline
+//! build; this provides warmup + timed iterations + mean/std/min/max in a
+//! criterion-like report format). Included by each bench via `#[path]`.
+
+use std::time::Instant;
+
+pub struct BenchReport {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchReport {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.max_ns),
+            self.iters
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+pub fn header() {
+    println!(
+        "{:<44} {:>12} {:>12} {:>12} {:>12}",
+        "benchmark", "mean", "std", "min", "max"
+    );
+    println!("{}", "-".repeat(100));
+}
+
+/// Run `f` for `warmup` untimed + `iters` timed iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchReport {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / (samples.len().max(2) - 1) as f64;
+    let report = BenchReport {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        std_ns: var.sqrt(),
+        min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_ns: samples.iter().cloned().fold(0.0, f64::max),
+    };
+    report.print();
+    report
+}

@@ -1,0 +1,42 @@
+//! Bench: Table 20 — per-phase dispatch timeline. Virtual (calibrated)
+//! costs regenerate the paper's breakdown; real per-phase costs quantify
+//! our substrate's own validation/encoding work.
+
+use wdb::profiler::{measure_dispatch_overhead, timeline_rows};
+use wdb::webgpu::ImplementationProfile;
+
+fn main() {
+    let n = 1000;
+    for profile in [
+        ImplementationProfile::wgpu_vulkan_rtx5090(),
+        ImplementationProfile::dawn_vulkan_rtx5090(),
+        ImplementationProfile::zero_overhead(),
+    ] {
+        let name = profile.name;
+        let m = measure_dispatch_overhead(profile, n).expect("measure");
+        println!("== {name} ({n} dispatches) ==");
+        println!(
+            "{:<16} {:>14} {:>16} {:>14}",
+            "phase", "virt total", "virt per-disp", "real per-disp"
+        );
+        for (i, (phase, total_us, per_us)) in timeline_rows(&m.timeline).iter().enumerate() {
+            println!(
+                "{:<16} {:>11.1} us {:>13.2} us {:>11.3} us",
+                phase,
+                total_us,
+                per_us,
+                m.timeline.real_ns[i] as f64 / 1e3 / n as f64
+            );
+        }
+        let total = m.timeline.total_virtual_ns() as f64 / 1e3;
+        println!(
+            "{:<16} {:>11.1} us {:>13.2} us {:>11.3} us  (submit = {:.0}%)\n",
+            "TOTAL",
+            total,
+            total / n as f64,
+            m.timeline.total_real_ns() as f64 / 1e3 / n as f64,
+            m.timeline.virtual_ns[7] as f64 / m.timeline.total_virtual_ns().max(1) as f64
+                * 100.0
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Bench: Table 6 — per-dispatch cost, single-op vs sequential, across all
+//! eleven implementation profiles. Reports both the calibrated virtual cost
+//! (the paper's numbers) and the real CPU cost of our substrate's
+//! validation + encoding work on this host.
+
+#[path = "harness.rs"]
+mod harness;
+
+use wdb::profiler::measure_dispatch_overhead;
+use wdb::webgpu::ImplementationProfile;
+
+fn main() {
+    let n = 500;
+    println!("Table 6 bench: {n} dispatches per mode\n");
+    println!(
+        "{:<28} {:>14} {:>14} {:>10} {:>16}",
+        "implementation", "single-op", "sequential", "ratio", "substrate-real"
+    );
+    println!("{}", "-".repeat(88));
+    for p in ImplementationProfile::table6_catalog() {
+        let m = measure_dispatch_overhead(p, n).expect("measure");
+        println!(
+            "{:<28} {:>11.1} us {:>11.1} us {:>9.1}x {:>13.2} us",
+            m.profile_name,
+            m.single_op_us,
+            m.sequential_us,
+            m.overestimate_ratio(),
+            m.real_sequential_us
+        );
+    }
+
+    // Raw substrate throughput: how many validated dispatch sequences per
+    // second can this host record (zero-overhead profile)?
+    println!();
+    harness::header();
+    harness::bench("substrate dispatch sequence (zero profile)", 100, 2000, || {
+        let m = measure_dispatch_overhead(ImplementationProfile::zero_overhead(), 1)
+            .expect("measure");
+        std::hint::black_box(m.sequential_us);
+    });
+}

@@ -1,0 +1,73 @@
+//! Bench: Table 8/12 — kernel compute efficiency of the REAL Pallas
+//! kernels through PJRT on this host. Reports GFLOP/s; the paper-shape
+//! %-of-peak table is `wdb table 8` (calibrated RTX 5090 profile).
+
+#[path = "harness.rs"]
+mod harness;
+
+use wdb::model::rng::XorShiftRng;
+use wdb::runtime::Registry;
+use wdb::tensor::Tensor;
+
+fn rand_t(rng: &mut XorShiftRng, shape: Vec<usize>) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::f32(shape, rng.normal_vec_f32(n, 0.1)).unwrap()
+}
+
+fn main() {
+    let registry = Registry::open().expect("run `make artifacts` first");
+    let mut rng = XorShiftRng::new(88);
+
+    // (kernel, m, k, n, iters) — production dims get few iters (CPU host).
+    let cases = [
+        ("matmul_256_256_256", 256, 256, 256, 10),
+        ("matmul_naive_256", 256, 256, 256, 10),
+        ("matmul_896_896_4864", 896, 896, 4864, 3),
+        ("matmul_896_4864_896", 896, 4864, 896, 3),
+        ("matmul_1_896_4864", 1, 896, 4864, 20),
+        ("matmul_1_4864_896", 1, 4864, 896, 20),
+    ];
+    println!("Table 8/12 bench: real Pallas matmul kernels via PJRT CPU\n");
+    println!(
+        "{:<24} {:>18} {:>12} {:>12}",
+        "kernel", "dims", "mean", "GFLOP/s"
+    );
+    println!("{}", "-".repeat(72));
+    for (name, m, k, n, iters) in cases {
+        let x = rand_t(&mut rng, vec![m, k]);
+        let w = rand_t(&mut rng, vec![k, n]);
+        registry.ensure_loaded(name).expect("load");
+        let _ = registry.execute(name, &[x.clone(), w.clone()]).unwrap(); // warmup
+        let mut total_ns = 0u64;
+        for _ in 0..iters {
+            let (_, ns) = registry.execute(name, &[x.clone(), w.clone()]).unwrap();
+            total_ns += ns;
+        }
+        let mean_ns = total_ns as f64 / iters as f64;
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        println!(
+            "{:<24} {:>18} {:>12} {:>12.2}",
+            name,
+            format!("{m}x{k}x{n}"),
+            harness::fmt_ns(mean_ns),
+            flops / mean_ns
+        );
+    }
+
+    // RMSNorm + softmax/argmax at paper dims.
+    println!();
+    harness::header();
+    let x896 = rand_t(&mut rng, vec![1, 896]);
+    let w896 = rand_t(&mut rng, vec![896]);
+    registry.ensure_loaded("rmsnorm_896").unwrap();
+    harness::bench("rmsnorm_896 (fused)", 3, 30, || {
+        let _ = registry.execute("rmsnorm_896", &[x896.clone(), w896.clone()]).unwrap();
+    });
+    let logits = rand_t(&mut rng, vec![1, 151_936]);
+    for name in ["softmax_151936", "softmax_naive_151936", "argmax_151936"] {
+        registry.ensure_loaded(name).unwrap();
+        harness::bench(name, 2, 10, || {
+            let _ = registry.execute(name, &[logits.clone()]).unwrap();
+        });
+    }
+}

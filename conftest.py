@@ -1,0 +1,6 @@
+"""Root conftest: make `pytest python/tests/` work from the repo root by
+putting the python/ package directory on sys.path."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent / "python"))

@@ -1,0 +1,41 @@
+//! Dispatch-overhead characterization across every implementation profile —
+//! the paper's headline methodology (Table 6) as a runnable walkthrough.
+//!
+//! Demonstrates WHY single-op benchmarks overestimate: `queue.submit` is
+//! asynchronous, so a sync after every dispatch charges the full round-trip
+//! to each one; syncing once after N dispatches amortizes it away.
+
+use wdb::profiler::{measure_dispatch_overhead, timeline_rows};
+use wdb::webgpu::ImplementationProfile;
+
+fn main() -> anyhow::Result<()> {
+    println!("== The ~20x single-op overestimate, mechanistically ==\n");
+    let dawn = measure_dispatch_overhead(ImplementationProfile::dawn_vulkan_rtx5090(), 200)?;
+    println!("Dawn/Vulkan, 200 dispatches:");
+    println!("  single-op (sync per dispatch):  {:>8.1} us/dispatch", dawn.single_op_us);
+    println!("  sequential (one final sync):    {:>8.1} us/dispatch", dawn.sequential_us);
+    println!("  overestimate:                   {:>8.1}x", dawn.overestimate_ratio());
+    println!("  -> ~473 us of the naive number is GPU-CPU sync, not dispatch.\n");
+
+    println!("== Full cross-implementation sweep (Table 6) ==\n");
+    println!("{:<28} {:>12} {:>12} {:>8}", "implementation", "single (us)", "seq (us)", "ratio");
+    for p in ImplementationProfile::table6_catalog() {
+        let m = measure_dispatch_overhead(p, 200)?;
+        println!(
+            "{:<28} {:>12.1} {:>12.1} {:>7.1}x",
+            m.profile_name, m.single_op_us, m.sequential_us, m.overestimate_ratio()
+        );
+    }
+
+    println!("\n== Where the time goes (Table 20, wgpu/Vulkan) ==\n");
+    let m = measure_dispatch_overhead(ImplementationProfile::wgpu_vulkan_rtx5090(), 100)?;
+    for (phase, _total, per) in timeline_rows(&m.timeline) {
+        let bar = "#".repeat((per * 4.0) as usize);
+        println!("  {phase:<16} {per:>6.2} us  {bar}");
+    }
+    println!("\nSubmit dominates (~40%) — command buffer submission is the");
+    println!("primary per-dispatch bottleneck, which is why batching 16");
+    println!("dispatches per submit helps microbenchmarks but not E2E decode");
+    println!("(the per-token sync flushes every batch anyway).");
+    Ok(())
+}

@@ -1,0 +1,349 @@
+"""AOT export: lower every kernel (and the whole decode step) to HLO *text*
+artifacts the Rust coordinator loads via ``HloModuleProto::from_text_file``.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT serialized protos —
+is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (what the published ``xla`` 0.1.6
+crate links) rejects (``proto.id() <= INT_MAX``). The text parser reassigns
+ids, so text round-trips cleanly. Lowering goes StableHLO -> XlaComputation
+with ``return_tuple=True``; the Rust side unwraps with ``to_tupleN``.
+
+Python runs ONCE (``make artifacts``); nothing here is on the request path.
+
+Usage:  python -m compile.aot --out ../artifacts [--only tag] [--list]
+"""
+
+import argparse
+import hashlib
+import json
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, QWEN25_05B, QWEN_TINY
+from .kernels import (
+    argmax,
+    attention,
+    concat,
+    elementwise,
+    fused_kv,
+    fused_mlp,
+    matmul,
+    mega_mlp,
+    rmsnorm,
+    rotary,
+    softmax,
+)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+@dataclass
+class KernelEntry:
+    """One exportable kernel: a jax-traceable fn + example input specs."""
+
+    name: str
+    fn: object
+    in_specs: list
+    tags: tuple = ()
+    flops: float = 0.0
+    notes: str = ""
+    out_specs: list = field(default_factory=list)
+
+    def lower(self):
+        wrapped = self.fn
+        lowered = jax.jit(wrapped).lower(*self.in_specs)
+        out = jax.eval_shape(wrapped, *self.in_specs)
+        if not isinstance(out, (tuple, list)):
+            out = (out,)
+        self.out_specs = list(out)
+        return lowered
+
+
+def _tup(fn):
+    """Ensure the exported computation returns a tuple (rust unwraps it)."""
+
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+
+    return wrapped
+
+
+def matmul_flops(m, k, n):
+    return 2.0 * m * k * n
+
+
+# ---------------------------------------------------------------------------
+# Kernel registry
+# ---------------------------------------------------------------------------
+def build_registry() -> list[KernelEntry]:
+    t = QWEN_TINY
+    b = QWEN25_05B
+    ks: list[KernelEntry] = []
+
+    def add(name, fn, in_specs, tags=(), flops=0.0, notes=""):
+        ks.append(KernelEntry(name, _tup(fn), list(in_specs), tuple(tags), flops, notes))
+
+    H, QD, KV, I, V, S, NH, KVH, D = (
+        t.hidden, t.q_dim, t.kv_dim, t.intermediate, t.vocab,
+        t.max_seq, t.heads, t.kv_heads, t.head_dim,
+    )
+    half = D // 2
+
+    # ---- tiny-config decode kernels (one per distinct op x shape) ----
+    add("matmul_64_64", matmul.matmul, [spec((1, H)), spec((H, QD))],
+        tags=("tiny", "matmul"), flops=matmul_flops(1, H, QD),
+        notes="q/o projection")
+    add("matmul_64_32", matmul.matmul, [spec((1, H)), spec((H, KV))],
+        tags=("tiny", "matmul"), flops=matmul_flops(1, H, KV),
+        notes="separate k or v projection (unfused flow)")
+    add("matmul_64_176", matmul.matmul, [spec((1, H)), spec((H, I))],
+        tags=("tiny", "matmul"), flops=matmul_flops(1, H, I),
+        notes="gate/up projection (unfused flow)")
+    add("matmul_176_64", matmul.matmul, [spec((1, I)), spec((I, H))],
+        tags=("tiny", "matmul"), flops=matmul_flops(1, I, H),
+        notes="down projection")
+    add("matmul_64_512", matmul.matmul, [spec((1, H)), spec((H, V))],
+        tags=("tiny", "matmul"), flops=matmul_flops(1, H, V),
+        notes="lm head")
+    add("kv_fused_64_64", fused_kv.kv_proj_fused,
+        [spec((1, H)), spec((H, 2 * KV))],
+        tags=("tiny", "fused"), flops=matmul_flops(1, H, 2 * KV),
+        notes="K+V fusion (2 dispatches -> 1)")
+
+    add("rmsnorm_64", partial(rmsnorm.rmsnorm, eps=t.rms_eps),
+        [spec((1, H)), spec((H,))], tags=("tiny", "fused", "rmsnorm"),
+        notes="fused RMSNorm (6 -> 1)")
+    add("rms_pow_64", rmsnorm.rms_pow, [spec((1, H))], tags=("tiny", "rmsnorm"))
+    add("rms_mean_64", rmsnorm.rms_mean, [spec((1, H))], tags=("tiny", "rmsnorm"))
+    add("rms_add_eps_1", partial(rmsnorm.rms_add_eps, eps=t.rms_eps),
+        [spec((1, 1))], tags=("tiny", "rmsnorm"))
+    add("rms_rsqrt_1", rmsnorm.rms_rsqrt, [spec((1, 1))], tags=("tiny", "rmsnorm"))
+    add("rms_mul_x_64", rmsnorm.rms_mul_x, [spec((1, H)), spec((1, 1))],
+        tags=("tiny", "rmsnorm"))
+    add("rms_mul_w_64", rmsnorm.rms_mul_w, [spec((1, H)), spec((H,))],
+        tags=("tiny", "rmsnorm"))
+
+    add("rope_cos_sin_16", rotary.rope_cos_sin,
+        [spec((1,)), spec((half,))], tags=("tiny", "rotary"))
+    add("rotary_4_16", rotary.rotary,
+        [spec((NH, D)), spec((D,)), spec((D,))], tags=("tiny", "rotary", "fused"))
+    add("rotary_2_16", rotary.rotary,
+        [spec((KVH, D)), spec((D,)), spec((D,))], tags=("tiny", "rotary", "fused"))
+    # unfused rotary pieces
+    add("neg_4_8", elementwise.neg, [spec((NH, half))], tags=("tiny", "rotary"))
+    add("neg_2_8", elementwise.neg, [spec((KVH, half))], tags=("tiny", "rotary"))
+    add("concat_4_8", concat.concat_last,
+        [spec((NH, half)), spec((NH, half))], tags=("tiny", "rotary"))
+    add("concat_2_8", concat.concat_last,
+        [spec((KVH, half)), spec((KVH, half))], tags=("tiny", "rotary"))
+    add("mul_vec_4_16", rmsnorm.rms_mul_w, [spec((NH, D)), spec((D,))],
+        tags=("tiny", "rotary"))
+    add("mul_vec_2_16", rmsnorm.rms_mul_w, [spec((KVH, D)), spec((D,))],
+        tags=("tiny", "rotary"))
+    add("add_4_16", elementwise.add, [spec((NH, D)), spec((NH, D))],
+        tags=("tiny", "rotary"))
+    add("add_2_16", elementwise.add, [spec((KVH, D)), spec((KVH, D))],
+        tags=("tiny", "rotary"))
+
+    add("cache_update_tiny", concat.cache_update,
+        [spec((S, KVH, D)), spec((KVH, D)), spec((1,), I32)],
+        tags=("tiny", "cache"))
+    add("sdpa_tiny", attention.sdpa_gqa,
+        [spec((NH, D)), spec((S, KVH, D)), spec((S, KVH, D)), spec((1,), I32)],
+        tags=("tiny", "attention"),
+        flops=2.0 * NH * D * S * 2)
+
+    add("silu_176", elementwise.silu, [spec((1, I))], tags=("tiny", "mlp"))
+    add("mul_176", elementwise.mul, [spec((1, I)), spec((1, I))], tags=("tiny", "mlp"))
+    add("add_64", elementwise.add, [spec((1, H)), spec((1, H))], tags=("tiny",))
+    add("gate_up_silu_tiny", fused_mlp.mlp_gate_up_silu,
+        [spec((1, H)), spec((H, I)), spec((H, I))],
+        tags=("tiny", "fused", "mlp"), flops=2 * matmul_flops(1, H, I),
+        notes="MLP gate+up+silu fusion (3 -> 1)")
+
+    add("argmax_512", argmax.argmax_device, [spec((1, V))], tags=("tiny", "argmax"))
+    add("softmax_512", softmax.softmax, [spec((1, V))], tags=("tiny", "softmax"))
+    add("softmax_naive_512", softmax.softmax_naive, [spec((1, V))],
+        tags=("tiny", "softmax"))
+    add("mega_mlp_tiny", partial(mega_mlp.mega_mlp, eps=t.rms_eps),
+        [spec((1, H)), spec((H,)), spec((H, I)), spec((H, I)), spec((I, H))],
+        tags=("tiny", "mega"),
+        flops=2 * matmul_flops(1, H, I) + matmul_flops(1, I, H))
+
+    # ---- whole decode step as one HLO (graph-compiled baseline) ----
+    L = t.layers
+    add(
+        "decode_step_tiny",
+        model.decode_step_fused_fn(t),
+        [
+            spec((1, H)),                     # x
+            spec((L, S, KVH, D)),             # k caches
+            spec((L, S, KVH, D)),             # v caches
+            spec((1,), I32),                  # pos
+            spec((L, H)),                     # norm1
+            spec((L, H, QD)),                 # wq
+            spec((L, H, 2 * KV)),             # wkv
+            spec((L, QD, H)),                 # wo
+            spec((L, H)),                     # norm2
+            spec((L, H, I)),                  # wg
+            spec((L, H, I)),                  # wu
+            spec((L, I, H)),                  # wd
+            spec((H,)),                       # norm_f
+            spec((H, V)),                     # w_lm
+        ],
+        tags=("tiny", "graph"),
+        notes="entire forward in one module — XLA/TVM/WebLLM-style baseline",
+    )
+
+    # ---- bench kernels at paper dimensions (Tables 7/8/11/12/16/19) ----
+    bH, bI = b.hidden, b.intermediate
+    add("matmul_896_896_4864", matmul.matmul,
+        [spec((bH, bH)), spec((bH, bI))], tags=("bench", "matmul"),
+        flops=matmul_flops(bH, bH, bI), notes="Table 8/12 MLP up projection")
+    add("matmul_896_4864_896", matmul.matmul,
+        [spec((bH, bI)), spec((bI, bH))], tags=("bench", "matmul"),
+        flops=matmul_flops(bH, bI, bH), notes="Table 8/12 MLP down projection")
+    add("matmul_256_256_256", matmul.matmul,
+        [spec((256, 256)), spec((256, 256))], tags=("bench", "matmul"),
+        flops=matmul_flops(256, 256, 256), notes="Table 8/12 toy matmul")
+    add("matmul_naive_256", matmul.matmul_naive,
+        [spec((256, 256)), spec((256, 256))], tags=("bench", "matmul"),
+        flops=matmul_flops(256, 256, 256), notes="untiled baseline")
+
+    add("rmsnorm_896", partial(rmsnorm.rmsnorm, eps=b.rms_eps),
+        [spec((1, bH)), spec((bH,))], tags=("bench", "rmsnorm"),
+        notes="Table 7 fused RMSNorm at 0.5B hidden")
+    add("rms_pow_896", rmsnorm.rms_pow, [spec((1, bH))], tags=("bench", "rmsnorm"))
+    add("rms_mean_896", rmsnorm.rms_mean, [spec((1, bH))], tags=("bench", "rmsnorm"))
+    add("rms_mul_x_896", rmsnorm.rms_mul_x, [spec((1, bH)), spec((1, 1))],
+        tags=("bench", "rmsnorm"))
+    add("rms_mul_w_896", rmsnorm.rms_mul_w, [spec((1, bH)), spec((bH,))],
+        tags=("bench", "rmsnorm"))
+
+    add("matmul_1_896_4864", matmul.matmul,
+        [spec((1, bH)), spec((bH, bI))], tags=("bench", "mlp"),
+        flops=matmul_flops(1, bH, bI), notes="decode-shape up/gate projection")
+    add("matmul_1_4864_896", matmul.matmul,
+        [spec((1, bI)), spec((bI, bH))], tags=("bench", "mlp"),
+        flops=matmul_flops(1, bI, bH), notes="decode-shape down projection")
+    add("gate_up_silu_05b", fused_mlp.mlp_gate_up_silu,
+        [spec((1, bH)), spec((bH, bI)), spec((bH, bI))],
+        tags=("bench", "mlp", "fused"), flops=2 * matmul_flops(1, bH, bI),
+        notes="Table 19 tiled strategy stage 1")
+    add("silu_4864", elementwise.silu, [spec((1, bI))], tags=("bench", "mlp"))
+    add("mul_4864", elementwise.mul, [spec((1, bI)), spec((1, bI))],
+        tags=("bench", "mlp"))
+    add("add_896", elementwise.add, [spec((1, bH)), spec((1, bH))],
+        tags=("bench", "mlp"))
+    add("mega_mlp_05b", partial(mega_mlp.mega_mlp, eps=b.rms_eps),
+        [spec((1, bH)), spec((bH,)), spec((bH, bI)), spec((bH, bI)),
+         spec((bI, bH))],
+        tags=("bench", "mega"),
+        flops=2 * matmul_flops(1, bH, bI) + matmul_flops(1, bI, bH),
+        notes="Table 11 mega-kernel at 0.5B dims")
+
+    # Batched decode shapes for the empirical crossover sweep (Appendix F's
+    # "highest-priority future work": validate B* beyond batch=1).
+    for bsz in (1, 4, 8, 16, 32, 64):
+        add(f"matmul_b{bsz}_896_4864", matmul.matmul,
+            [spec((bsz, bH)), spec((bH, bI))], tags=("bench", "batch"),
+            flops=matmul_flops(bsz, bH, bI),
+            notes=f"MLP up projection at batch={bsz} (crossover sweep)")
+
+    add("softmax_151936", softmax.softmax, [spec((1, b.vocab))],
+        tags=("bench", "softmax"), notes="Table 16 optimized softmax at vocab")
+    add("softmax_naive_151936", softmax.softmax_naive, [spec((1, b.vocab))],
+        tags=("bench", "softmax"), notes="Table 16 naive softmax at vocab")
+    add("argmax_151936", argmax.argmax_device, [spec((1, b.vocab))],
+        tags=("bench", "argmax"), notes="Table 15 device-side argmax at vocab")
+
+    return ks
+
+
+# ---------------------------------------------------------------------------
+# Export driver
+# ---------------------------------------------------------------------------
+def dtype_tag(d) -> str:
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[jnp.dtype(d)]
+
+
+def export_all(out_dir: Path, only: str | None = None) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    registry = build_registry()
+    manifest = {
+        "version": 1,
+        "generated_unix": int(time.time()),
+        "configs": {name: cfg.to_dict() for name, cfg in CONFIGS.items()},
+        "kernels": [],
+    }
+    for entry in registry:
+        if only and only not in entry.tags:
+            continue
+        t0 = time.time()
+        lowered = entry.lower()
+        text = to_hlo_text(lowered)
+        fname = f"k_{entry.name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        manifest["kernels"].append(
+            {
+                "name": entry.name,
+                "file": fname,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": dtype_tag(s.dtype)}
+                    for s in entry.in_specs
+                ],
+                "outputs": [
+                    {"shape": list(s.shape), "dtype": dtype_tag(s.dtype)}
+                    for s in entry.out_specs
+                ],
+                "tags": list(entry.tags),
+                "flops": entry.flops,
+                "notes": entry.notes,
+                "hlo_sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                "hlo_bytes": len(text),
+            }
+        )
+        print(f"  exported {entry.name:<28} {len(text):>9} B  "
+              f"({time.time() - t0:.2f}s)")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {len(manifest['kernels'])} kernels + manifest.json -> {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="artifact directory")
+    p.add_argument("--only", default=None, help="export only kernels with tag")
+    p.add_argument("--list", action="store_true", help="list registry and exit")
+    args = p.parse_args()
+    if args.list:
+        for e in build_registry():
+            print(f"{e.name:<28} tags={','.join(e.tags):<24} {e.notes}")
+        return
+    export_all(Path(args.out), args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Model configurations for the Qwen2.5 architecture family.
+
+The paper benchmarks Qwen2.5-0.5B-Instruct and Qwen2.5-1.5B-Instruct. We keep
+those configs for graph-census and analytic tables (their dispatch counts are
+what Tables 4/5/10/18 depend on), and add ``qwen-tiny`` — the same
+architecture at small dimensions — for *executed* end-to-end decoding through
+the PJRT CPU client. Overhead characterization is dispatch-count driven, so
+the tiny config exercises the identical op stream shape per layer.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    hidden: int
+    layers: int
+    heads: int
+    kv_heads: int
+    head_dim: int
+    intermediate: int
+    vocab: int
+    max_seq: int
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-6
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.head_dim
+
+    @property
+    def q_dim(self) -> int:
+        return self.heads * self.head_dim
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["kv_dim"] = self.kv_dim
+        d["q_dim"] = self.q_dim
+        return d
+
+
+# Qwen2.5-0.5B-Instruct: 24 layers, 896 hidden, 14 heads / 2 KV heads,
+# 4864 intermediate, 151936 vocab (paper §3.3).
+QWEN25_05B = ModelConfig(
+    name="qwen2.5-0.5b",
+    hidden=896,
+    layers=24,
+    heads=14,
+    kv_heads=2,
+    head_dim=64,
+    intermediate=4864,
+    vocab=151936,
+    max_seq=32768,
+    rope_theta=1000000.0,
+)
+
+# Qwen2.5-1.5B-Instruct: 28 layers, 1536 hidden, 12 heads / 2 KV heads,
+# 8960 intermediate (paper §3.3 and Appendix K).
+QWEN25_15B = ModelConfig(
+    name="qwen2.5-1.5b",
+    hidden=1536,
+    layers=28,
+    heads=12,
+    kv_heads=2,
+    head_dim=128,
+    intermediate=8960,
+    vocab=151936,
+    max_seq=32768,
+    rope_theta=1000000.0,
+)
+
+# Executed-E2E config: same architecture, laptop-scale dims. One HLO artifact
+# per distinct (op, shape); decoding runs the same per-layer op stream as the
+# 0.5B model (7 matmuls, 2 norms, SDPA, SwiGLU, rotary, cache update).
+QWEN_TINY = ModelConfig(
+    name="qwen-tiny",
+    hidden=64,
+    layers=4,
+    heads=4,
+    kv_heads=2,
+    head_dim=16,
+    intermediate=176,
+    vocab=512,
+    max_seq=64,
+)
+
+CONFIGS = {c.name: c for c in (QWEN25_05B, QWEN25_15B, QWEN_TINY)}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return CONFIGS[name]
+    except KeyError:
+        raise KeyError(f"unknown model config {name!r}; have {sorted(CONFIGS)}")

@@ -1,0 +1,22 @@
+"""L1 — Pallas kernels for the paper's compute ops, plus pure-jnp oracles.
+
+Every kernel is lowered with ``interpret=True`` (CPU-PJRT executable HLO) and
+validated against ``ref.py`` by pytest + hypothesis. The Rust coordinator
+issues one WebGPU-substrate dispatch per kernel execution.
+"""
+
+from . import (  # noqa: F401
+    argmax,
+    attention,
+    common,
+    concat,
+    elementwise,
+    fused_kv,
+    fused_mlp,
+    matmul,
+    mega_mlp,
+    ref,
+    rmsnorm,
+    rotary,
+    softmax,
+)

@@ -1,0 +1,27 @@
+"""Argmax kernels — token selection.
+
+``argmax_host_style`` mirrors the production path: the full logits row is
+read back to the host which argmaxes there (the paper's ~11 ms/token sync
+overhead, §5.1). In our stack the *kernel* is identity-less: the Rust engine
+maps the logits buffer and argmaxes host-side.
+
+``argmax_device`` is the Appendix H device-side variant: the reduction runs
+on-device and only 4 bytes are read back. The paper found this inconclusive
+on both backends (p = 0.35 Vulkan / 0.62 Metal); Table 15 reproduces that.
+"""
+
+from .common import jax, jnp, pl, INTERPRET
+
+
+def _argmax_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.argmax(x_ref[...], axis=-1).astype(jnp.int32)
+
+
+def argmax_device(x):
+    """x: [M, V] -> [M] int32 indices."""
+    m = x.shape[0]
+    return pl.pallas_call(
+        _argmax_kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.int32),
+        interpret=INTERPRET,
+    )(x)

@@ -1,0 +1,51 @@
+"""SDPA Pallas kernel: grouped-query attention over a fixed-capacity masked
+KV cache (one dispatch per layer — the paper's FX census counts 24 SDPA nodes
+for Qwen2.5-0.5B, Table 10).
+
+The cache is padded to ``max_seq`` and masked by the current position so the
+kernel shape is static — the WebGPU analogue of pre-allocated storage buffers
+(dynamic shapes would force pipeline re-creation per token, which the paper's
+torch-webgpu avoids the same way).
+
+Grid: one program per query head; the BlockSpec index map routes each query
+head to its GQA KV head (h // group), expressing the HBM->VMEM schedule the
+paper expressed with workgroups. VMEM per program: S*D*2 + D floats.
+"""
+
+from .common import jax, jnp, pl, INTERPRET
+
+
+def _sdpa_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref):
+    # q_ref: [1, D]; k_ref/v_ref: [S, 1, D] (this head's KV slice).
+    q = q_ref[0, :]
+    k = k_ref[:, 0, :]
+    v = v_ref[:, 0, :]
+    seq, dim = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dim))
+    scores = jnp.sum(k * q[None, :], axis=-1) * scale  # [S]
+    mask = jnp.arange(seq) < pos_ref[0]
+    scores = jnp.where(mask, scores, -1e30)
+    mx = jnp.max(scores)
+    e = jnp.exp(scores - mx)
+    probs = e / jnp.sum(e)
+    o_ref[0, :] = jnp.sum(probs[:, None] * v, axis=0)
+
+
+def sdpa_gqa(q, k_cache, v_cache, pos):
+    """q: [H, D]; k_cache/v_cache: [S, KVH, D]; pos: [1] int32."""
+    heads, dim = q.shape
+    seq, kv_heads, _ = k_cache.shape
+    group = heads // kv_heads
+    return pl.pallas_call(
+        _sdpa_kernel,
+        grid=(heads,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h: (0,)),
+            pl.BlockSpec((1, dim), lambda h: (h, 0)),
+            pl.BlockSpec((seq, 1, dim), lambda h: (0, h // group, 0)),
+            pl.BlockSpec((seq, 1, dim), lambda h: (0, h // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dim), lambda h: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((heads, dim), jnp.float32),
+        interpret=INTERPRET,
+    )(pos, q, k_cache, v_cache)

@@ -1,0 +1,46 @@
+"""Shared helpers for the Pallas kernel layer.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers the kernel body to
+plain HLO that any backend (including the Rust ``xla`` crate's CPU client)
+runs with identical numerics. Real-TPU performance is estimated from the
+BlockSpec VMEM footprint in DESIGN.md, not measured here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # see module docstring — required for CPU-PJRT execution
+
+__all__ = ["jax", "jnp", "pl", "INTERPRET", "pick_block", "vmem_bytes"]
+
+
+def pick_block(dim: int, preferred: int = 16) -> int:
+    """Largest block size <= preferred that divides ``dim``.
+
+    The paper's WGSL matmul uses 16x16 tiles; our shapes are all multiples of
+    16, but hypothesis sweeps feed arbitrary dims, so degrade gracefully.
+    """
+    for b in range(min(preferred, dim), 0, -1):
+        if dim % b == 0:
+            return b
+    return 1
+
+
+def vmem_bytes(*block_shapes, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of a kernel instance (for DESIGN.md notes)."""
+    total = 0
+    for shape in block_shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * dtype_bytes
+    return total
+
+
+def named_call(fn, name):
+    """Wrap ``fn`` so its jaxpr (and HLO) carries a stable name."""
+    return functools.wraps(fn)(jax.named_call(fn, name=name))

@@ -1,0 +1,42 @@
+"""Concatenation-category kernels (Table 10 counts 97 concat nodes: KV-cache
+appends and rotary rotate-half concats).
+
+``concat_last`` is the generic last-axis concat dispatch used by the unfused
+rotary flow. ``cache_update`` writes one token's K or V row into the
+fixed-capacity cache at a dynamic position — the WebGPU analogue is a small
+copy dispatch into a pre-allocated storage buffer.
+"""
+
+from .common import jax, jnp, pl, INTERPRET
+
+
+def _concat_kernel(a_ref, b_ref, o_ref):
+    na = a_ref.shape[-1]
+    o_ref[:, :na] = a_ref[...]
+    o_ref[:, na:] = b_ref[...]
+
+
+def concat_last(a, b):
+    """a: [M, Na], b: [M, Nb] -> [M, Na+Nb]."""
+    m, na = a.shape
+    _, nb = b.shape
+    return pl.pallas_call(
+        _concat_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, na + nb), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+def _cache_update_kernel(pos_ref, cache_ref, row_ref, o_ref):
+    o_ref[...] = cache_ref[...]
+    pos = pos_ref[0]
+    o_ref[pl.dslice(pos, 1), :, :] = row_ref[...][None, ...]
+
+
+def cache_update(cache, row, pos):
+    """cache: [S, KVH, D]; row: [KVH, D]; pos: [1] int32 -> updated cache."""
+    return pl.pallas_call(
+        _cache_update_kernel,
+        out_shape=jax.ShapeDtypeStruct(cache.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(pos, cache, row)

@@ -1,0 +1,34 @@
+"""Fused K+V projection kernel (§6.1, K+V fusion).
+
+Both projections have identical [H, KV] dimensions under grouped-query
+attention, so the paper merges them into one tiled matmul against the
+column-concatenated weight [H, 2*KV], saving 1 dispatch per layer (24 per
+forward on 0.5B; +0.5%, p = 0.42 — reported as a negative result in Table 5,
+and we reproduce it as such).
+"""
+
+from .common import jax, jnp, pl, INTERPRET, pick_block
+
+
+def _kv_kernel(x_ref, wkv_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], wkv_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def kv_proj_fused(x, w_kv, bn: int | None = None):
+    """x: [M, H]; w_kv: [H, 2*KV] (K and V weights column-concatenated)."""
+    m, h = x.shape
+    _, n2 = w_kv.shape
+    bn = bn or pick_block(n2, 32)
+    return pl.pallas_call(
+        _kv_kernel,
+        grid=(n2 // bn,),
+        in_specs=[
+            pl.BlockSpec((m, h), lambda j: (0, 0)),
+            pl.BlockSpec((h, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n2), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w_kv)

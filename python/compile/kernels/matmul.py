@@ -1,0 +1,78 @@
+"""Tiled matmul Pallas kernel — the analogue of the paper's 16x16-tile WGSL
+matmul shader (Table 8: "16x16 tiling without bank-conflict-free shared
+memory access").
+
+Two variants:
+
+- ``matmul``        — tiled: grid over (M/bm, N/bn) output tiles, full-K
+                      blocks staged through VMEM (the BlockSpec expresses the
+                      HBM->VMEM schedule the paper expressed via workgroups).
+- ``matmul_naive``  — single-program whole-array kernel, the unoptimized
+                      baseline used for the kernel-efficiency floor (Table 8
+                      reports 1-2% of peak for the unoptimized shader).
+"""
+
+from .common import jax, jnp, pl, INTERPRET, pick_block
+
+
+def _matmul_tile_kernel(x_ref, w_ref, o_ref):
+    # One (bm, bn) output tile; K is not blocked (fits VMEM at our sizes).
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(x, w, bm: int | None = None, bn: int | None = None):
+    """Tiled x @ w. x: [M, K], w: [K, N] -> [M, N] float32.
+
+    Default blocks are 128x256 (PERF: the original 16x64 tiles produced
+    4256-iteration interpret-mode grids that serialize on CPU — see
+    EXPERIMENTS.md §Perf L1; 128x256 also matches MXU-aligned tiling with a
+    ~1.5 MiB VMEM footprint at K=896). When the grid degenerates to a
+    single tile, emit the whole-array kernel: a 1x1 grid only adds loop
+    scaffolding.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul inner dims mismatch: {k} vs {k2}"
+    # PERF: skinny (m < 128, i.e. below one full output tile) matmuls gain
+    # nothing from output tiling — each grid step copies a [K, bn] weight
+    # block, which at small m costs more than the whole dot (95 ms vs ~3 ms
+    # for 1x896x4864 on the CPU interpreter). A GPU would tile these across
+    # workgroups; on the CPU-lowered path a single program is the
+    # faithful-throughput choice.
+    if bm is None and bn is None and m < 128:
+        return matmul_naive(x, w)
+    bm = bm or pick_block(m, 128)
+    bn = bn or pick_block(n, 256)
+    grid = (m // bm, n // bn)
+    if grid == (1, 1):
+        return matmul_naive(x, w)
+    return pl.pallas_call(
+        _matmul_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+def _matmul_naive_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul_naive(x, w):
+    """Whole-array single-program matmul (no tiling) — efficiency baseline."""
+    m, _ = x.shape
+    _, n = w.shape
+    return pl.pallas_call(
+        _matmul_naive_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w)

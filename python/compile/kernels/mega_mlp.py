@@ -1,0 +1,33 @@
+"""Mega-kernel (Appendix C): RMSNorm + SwiGLU MLP + residual add as a single
+dispatch.
+
+WebGPU lacks cross-workgroup synchronization (workgroupBarrier() is
+intra-workgroup only), so the paper's mega-kernel is forced into a single
+workgroup and under-utilizes the GPU at production dimensions. Our Pallas
+analogue is a grid=() single-program kernel — the same structural property:
+no parallel grid, everything serialized in one program instance. The paper
+found it inconclusive (p > 0.38, Table 11); Table 11's regeneration uses the
+calibrated single-workgroup serialization model.
+"""
+
+from .common import jax, jnp, pl, INTERPRET
+
+
+def _mega_mlp_kernel(x_ref, w_ref, eps_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    x = x_ref[...]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    h = x * jax.lax.rsqrt(var + eps_ref[0]) * w_ref[...]
+    g = jnp.dot(h, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(h, wu_ref[...], preferred_element_type=jnp.float32)
+    act = g * jax.lax.logistic(g) * u
+    o_ref[...] = x + jnp.dot(act, wd_ref[...], preferred_element_type=jnp.float32)
+
+
+def mega_mlp(x, rms_weight, w_gate, w_up, w_down, eps=1e-6):
+    """Whole MLP block in one dispatch. x: [M, H]."""
+    eps_arr = jnp.asarray([eps], dtype=jnp.float32)
+    return pl.pallas_call(
+        _mega_mlp_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(x, rms_weight, eps_arr, w_gate, w_up, w_down)

@@ -1,0 +1,172 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: each L1 kernel in this package must
+match its oracle under ``assert_allclose`` (pytest, hypothesis sweeps). They
+are also used by the L2 model tests to validate fused-vs-unfused equivalence,
+mirroring the paper's Appendix N precision validation (max abs diff < 2e-4
+within float32 limits).
+"""
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- matmul ----
+def matmul(x, w):
+    """x @ w, float32 accumulate."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+# --------------------------------------------------------------- rmsnorm ----
+def rmsnorm(x, weight, eps=1e-6):
+    """Fused RMSNorm: x / sqrt(mean(x^2) + eps) * weight."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jnp.reciprocal(jnp.sqrt(var + eps)) * weight
+
+
+# The paper's unfused RMSNorm decomposition is 6 dispatches:
+# pow, mean, add(eps), rsqrt, mul(x), mul(weight)  (§6.1).
+def rms_pow(x):
+    return jnp.square(x)
+
+
+def rms_mean(x2):
+    return jnp.mean(x2, axis=-1, keepdims=True)
+
+
+def rms_add_eps(m, eps=1e-6):
+    return m + eps
+
+
+def rms_rsqrt(m):
+    return jnp.reciprocal(jnp.sqrt(m))
+
+
+def rms_mul_x(x, r):
+    return x * r  # r broadcasts over the hidden dim
+
+
+def rms_mul_w(x, weight):
+    return x * weight
+
+
+# --------------------------------------------------------------- softmax ----
+def softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+# ----------------------------------------------------------- elementwise ----
+def silu(x):
+    return x * jnp.reciprocal(1.0 + jnp.exp(-x))
+
+
+def add(a, b):
+    return a + b
+
+
+def mul(a, b):
+    return a * b
+
+
+def neg(x):
+    return -x
+
+
+def mul_silu(a, b):
+    """Paper's fused_mul_silu: silu(a) * b."""
+    return silu(a) * b
+
+
+def add_silu(a, b):
+    return silu(a + b)
+
+
+def add_gelu(a, b):
+    x = a + b
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+# -------------------------------------------------------------- fused MLP ---
+def mlp_gate_up_silu(x, w_gate, w_up):
+    """Paper's MLP fusion: silu(x @ Wg) * (x @ Wu)  (3 dispatches -> 1)."""
+    return silu(matmul(x, w_gate)) * matmul(x, w_up)
+
+
+def mlp_full(x, w_gate, w_up, w_down):
+    return matmul(mlp_gate_up_silu(x, w_gate, w_up), w_down)
+
+
+# -------------------------------------------------------------- fused K+V ---
+def kv_proj_fused(x, w_kv):
+    """Paper's K+V fusion: both projections in one concatenated matmul."""
+    return matmul(x, w_kv)
+
+
+# ----------------------------------------------------------------- rotary ---
+def rotate_half(x):
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def rotary(x, cos, sin):
+    """Apply rotary embedding; x: [H, D], cos/sin: [D]."""
+    return x * cos + rotate_half(x) * sin
+
+
+def rope_cos_sin(pos, head_dim, theta=10000.0):
+    """cos/sin vectors for one position (Qwen half-rotation layout)."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    freqs = pos * inv
+    emb = jnp.concatenate([freqs, freqs], axis=-1)
+    return jnp.cos(emb), jnp.sin(emb)
+
+
+# ------------------------------------------------------------------ sdpa ----
+def sdpa_gqa(q, k_cache, v_cache, pos, kv_heads):
+    """Grouped-query attention over a fixed-capacity masked KV cache.
+
+    q:        [H, D]
+    k_cache:  [S, KVH, D]
+    v_cache:  [S, KVH, D]
+    pos:      scalar int — number of valid cache rows (positions 0..pos-1,
+              inclusive of the current token already written at pos-1).
+    """
+    heads, dim = q.shape
+    seq = k_cache.shape[0]
+    group = heads // kv_heads
+    scale = 1.0 / jnp.sqrt(jnp.float32(dim))
+    kv_idx = jnp.arange(heads) // group  # which KV head serves each Q head
+    k = k_cache[:, kv_idx, :]  # [S, H, D]
+    v = v_cache[:, kv_idx, :]
+    scores = jnp.einsum("hd,shd->hs", q, k) * scale
+    mask = jnp.arange(seq)[None, :] < pos
+    scores = jnp.where(mask, scores, -1e30)
+    probs = softmax(scores)
+    return jnp.einsum("hs,shd->hd", probs, v)
+
+
+# ----------------------------------------------------------------- concat ---
+def concat_last(a, b):
+    return jnp.concatenate([a, b], axis=-1)
+
+
+def cache_update(cache, new_row, pos):
+    """Write new_row at cache[pos] (the paper's KV-cache concatenation)."""
+    import jax
+
+    return jax.lax.dynamic_update_slice(cache, new_row[None, ...], (pos, 0, 0))
+
+
+# ----------------------------------------------------------------- argmax ---
+def argmax(x):
+    return jnp.argmax(x, axis=-1).astype(jnp.int32)
+
+
+# --------------------------------------------------------------- mega MLP ---
+def mega_mlp(x, rms_weight, w_gate, w_up, w_down, eps=1e-6):
+    """Appendix C mega-kernel: RMSNorm + SwiGLU MLP + residual in one op."""
+    h = rmsnorm(x, rms_weight, eps)
+    return x + mlp_full(h, w_gate, w_up, w_down)

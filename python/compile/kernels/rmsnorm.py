@@ -1,0 +1,113 @@
+"""RMSNorm kernels — both the fused single-dispatch kernel and the paper's
+6-dispatch decomposition (pow, mean, add-eps, rsqrt, mul-x, mul-w; §6.1).
+
+The fusion of this decomposition is the paper's single most impactful
+optimization: 240 dispatches saved per forward pass on Qwen2.5-0.5B
+(24 layers x 2 norms x 5 saved dispatches), +44% tok/s, p < 0.001 (Table 5).
+Each decomposed stage is its own Pallas kernel so the Rust coordinator can
+issue them as distinct dispatches in the unfused flow.
+"""
+
+from .common import jax, jnp, pl, INTERPRET
+
+
+# ------------------------------------------------------------------ fused ---
+def _rmsnorm_kernel(x_ref, w_ref, eps_ref, o_ref):
+    x = x_ref[...]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(var + eps_ref[0]) * w_ref[...]
+
+
+def rmsnorm(x, weight, eps=1e-6):
+    """Fused RMSNorm. x: [M, H], weight: [H]."""
+    eps_arr = jnp.asarray([eps], dtype=jnp.float32)
+    return pl.pallas_call(
+        _rmsnorm_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(x, weight, eps_arr)
+
+
+# ----------------------------------------------------------- decomposition --
+def _pow_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.square(x_ref[...])
+
+
+def rms_pow(x):
+    return pl.pallas_call(
+        _pow_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(x)
+
+
+def _mean_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.mean(x_ref[...], axis=-1, keepdims=True)
+
+
+def rms_mean(x2):
+    m = x2.shape[0]
+    return pl.pallas_call(
+        _mean_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=INTERPRET,
+    )(x2)
+
+
+def _add_eps_kernel(m_ref, eps_ref, o_ref):
+    o_ref[...] = m_ref[...] + eps_ref[0]
+
+
+def rms_add_eps(m, eps=1e-6):
+    eps_arr = jnp.asarray([eps], dtype=jnp.float32)
+    return pl.pallas_call(
+        _add_eps_kernel,
+        out_shape=jax.ShapeDtypeStruct(m.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(m, eps_arr)
+
+
+def _rsqrt_kernel(m_ref, o_ref):
+    o_ref[...] = jax.lax.rsqrt(m_ref[...])
+
+
+def rms_rsqrt(m):
+    return pl.pallas_call(
+        _rsqrt_kernel,
+        out_shape=jax.ShapeDtypeStruct(m.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(m)
+
+
+def _mul_bcast_kernel(x_ref, r_ref, o_ref):
+    o_ref[...] = x_ref[...] * r_ref[...]  # r: [M, 1] broadcasts over hidden
+
+
+def rms_mul_x(x, r):
+    return pl.pallas_call(
+        _mul_bcast_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(x, r)
+
+
+def _mul_w_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = x_ref[...] * w_ref[...]  # w: [H] broadcasts over rows
+
+
+def rms_mul_w(x, weight):
+    return pl.pallas_call(
+        _mul_w_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(x, weight)
+
+
+def rmsnorm_unfused(x, weight, eps=1e-6):
+    """The full 6-dispatch chain, used to validate fused == unfused."""
+    x2 = rms_pow(x)
+    m = rms_mean(x2)
+    me = rms_add_eps(m, eps)
+    r = rms_rsqrt(me)
+    xn = rms_mul_x(x, r)
+    return rms_mul_w(xn, weight)

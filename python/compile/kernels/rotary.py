@@ -1,0 +1,48 @@
+"""Rotary position embedding kernels.
+
+``rotary`` is the fused single-dispatch variant. The unfused flow (matching
+the FX census, where rotary contributes muls/adds/neg/concat nodes) issues
+``neg`` + ``concat`` (rotate-half) + two ``mul`` + one ``add`` as separate
+dispatches via the elementwise/concat kernels.
+"""
+
+from .common import jax, jnp, pl, INTERPRET
+
+
+def _rotary_kernel(x_ref, cos_ref, sin_ref, o_ref):
+    x = x_ref[...]  # [H, D]
+    half = x.shape[-1] // 2
+    x1 = x[:, :half]
+    x2 = x[:, half:]
+    rot = jnp.concatenate([-x2, x1], axis=-1)
+    o_ref[...] = x * cos_ref[...] + rot * sin_ref[...]
+
+
+def rotary(x, cos, sin):
+    """x: [H, D], cos/sin: [D] -> [H, D]."""
+    return pl.pallas_call(
+        _rotary_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(x, cos, sin)
+
+
+def _rope_table_kernel(pos_ref, inv_ref, cos_ref, sin_ref):
+    # pos: [1] f32; inv: [half] precomputed inverse frequencies.
+    freqs = pos_ref[0] * inv_ref[...]
+    emb = jnp.concatenate([freqs, freqs], axis=-1)
+    cos_ref[...] = jnp.cos(emb)
+    sin_ref[...] = jnp.sin(emb)
+
+
+def rope_cos_sin(pos, inv_freq):
+    """Cos/sin vectors for one position. pos: [1] f32, inv_freq: [D/2]."""
+    half = inv_freq.shape[0]
+    return pl.pallas_call(
+        _rope_table_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((2 * half,), jnp.float32),
+            jax.ShapeDtypeStruct((2 * half,), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(pos, inv_freq)

@@ -1,0 +1,157 @@
+"""L2 — Qwen2.5-architecture forward pass in JAX, calling the L1 Pallas
+kernels so everything lowers into the same HLO.
+
+Two op flows mirror the paper's torch-webgpu backend:
+
+- **unfused**: RMSNorm decomposed into 6 dispatches, K/V projected
+  separately, rotary decomposed — the dispatch stream whose census matches
+  Table 10 (876 compute ops for Qwen2.5-0.5B).
+- **fused**: RMSNorm 6→1, MLP gate+up+silu 3→1, K+V 2→1 (Table 5's 312
+  dispatches saved).
+
+The Rust engine normally executes these op-by-op (one PJRT execution per FX
+node, one WebGPU dispatch each). ``decode_step_fused`` additionally exports
+the *whole* forward as a single HLO module — the graph-compilation baseline
+(XLA/TVM/WebLLM-style) that eliminates per-dispatch overhead entirely.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import (
+    attention,
+    concat,
+    elementwise,
+    fused_kv,
+    fused_mlp,
+    matmul,
+    rmsnorm,
+    rotary,
+)
+
+
+def rope_inv_freq(cfg: ModelConfig):
+    half = cfg.head_dim // 2
+    return 1.0 / (
+        cfg.rope_theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+
+
+# --------------------------------------------------------------------------
+# Single-layer forward (fused flow), pure function over explicit weights.
+# --------------------------------------------------------------------------
+def layer_fused(cfg: ModelConfig, x, k_cache, v_cache, pos_i, pos_f, w):
+    """One transformer layer, fused op flow.
+
+    x: [1, H]; k_cache/v_cache: [S, KVH, D]; pos_i: [1] i32; pos_f: [1] f32;
+    w: dict of this layer's weights.
+    """
+    h = rmsnorm.rmsnorm(x, w["norm1"], cfg.rms_eps)
+
+    q = matmul.matmul(h, w["wq"])  # [1, QD]
+    kv = fused_kv.kv_proj_fused(h, w["wkv"])  # [1, 2*KV]
+    k = kv[:, : cfg.kv_dim]
+    v = kv[:, cfg.kv_dim :]
+
+    cos, sin = rotary.rope_cos_sin(pos_f, rope_inv_freq(cfg))
+    qh = rotary.rotary(q.reshape(cfg.heads, cfg.head_dim), cos, sin)
+    kh = rotary.rotary(k.reshape(cfg.kv_heads, cfg.head_dim), cos, sin)
+
+    k_cache = concat.cache_update(k_cache, kh, pos_i)
+    v_cache = concat.cache_update(
+        v_cache, v.reshape(cfg.kv_heads, cfg.head_dim), pos_i
+    )
+
+    attn = attention.sdpa_gqa(qh, k_cache, v_cache, pos_i + 1)
+    attn_out = matmul.matmul(attn.reshape(1, cfg.q_dim), w["wo"])
+    x = elementwise.add(x, attn_out)
+
+    h2 = rmsnorm.rmsnorm(x, w["norm2"], cfg.rms_eps)
+    act = fused_mlp.mlp_gate_up_silu(h2, w["wg"], w["wu"])
+    mlp_out = matmul.matmul(act, w["wd"])
+    x = elementwise.add(x, mlp_out)
+    return x, k_cache, v_cache
+
+
+def layer_unfused(cfg: ModelConfig, x, k_cache, v_cache, pos_i, pos_f, w):
+    """One transformer layer, unfused op flow (paper's baseline stream)."""
+
+    def rms_unfused(t, weight):
+        return rmsnorm.rmsnorm_unfused(t, weight, cfg.rms_eps)
+
+    h = rms_unfused(x, w["norm1"])
+
+    q = matmul.matmul(h, w["wq"])
+    k = matmul.matmul(h, w["wk"])
+    v = matmul.matmul(h, w["wv"])
+
+    cos, sin = rotary.rope_cos_sin(pos_f, rope_inv_freq(cfg))
+
+    def rotary_unfused(t, heads):
+        th = t.reshape(heads, cfg.head_dim)
+        half = cfg.head_dim // 2
+        x2n = elementwise.neg(th[:, half:])
+        rot = concat.concat_last(x2n, th[:, :half])
+        a = rmsnorm.rms_mul_w(th, cos)  # mul by row vector
+        b = rmsnorm.rms_mul_w(rot, sin)
+        return elementwise.add(a, b)
+
+    qh = rotary_unfused(q, cfg.heads)
+    kh = rotary_unfused(k, cfg.kv_heads)
+
+    k_cache = concat.cache_update(k_cache, kh, pos_i)
+    v_cache = concat.cache_update(
+        v_cache, v.reshape(cfg.kv_heads, cfg.head_dim), pos_i
+    )
+
+    attn = attention.sdpa_gqa(qh, k_cache, v_cache, pos_i + 1)
+    attn_out = matmul.matmul(attn.reshape(1, cfg.q_dim), w["wo"])
+    x = elementwise.add(x, attn_out)
+
+    h2 = rms_unfused(x, w["norm2"])
+    g = matmul.matmul(h2, w["wg"])
+    u = matmul.matmul(h2, w["wu"])
+    act = elementwise.mul(elementwise.silu(g), u)
+    mlp_out = matmul.matmul(act, w["wd"])
+    x = elementwise.add(x, mlp_out)
+    return x, k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# Whole-forward single-HLO export (graph-compiled baseline).
+# --------------------------------------------------------------------------
+def decode_step_fused(
+    cfg: ModelConfig,
+    x,           # [1, H] embedded token
+    k_caches,    # [L, S, KVH, D]
+    v_caches,    # [L, S, KVH, D]
+    pos_i,       # [1] int32
+    norm1, wq, wkv, wo, norm2, wg, wu, wd,  # stacked per-layer weights [L,...]
+    norm_f, w_lm,
+):
+    pos_f = pos_i.astype(jnp.float32)
+
+    def body(carry, per_layer):
+        xc = carry
+        n1, q_, kv_, o_, n2, g_, u_, d_, kc, vc = per_layer
+        w = {
+            "norm1": n1, "wq": q_, "wkv": kv_, "wo": o_,
+            "norm2": n2, "wg": g_, "wu": u_, "wd": d_,
+        }
+        xc, kc, vc = layer_fused(cfg, xc, kc, vc, pos_i, pos_f, w)
+        return xc, (kc, vc)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (norm1, wq, wkv, wo, norm2, wg, wu, wd, k_caches, v_caches)
+    )
+    h = rmsnorm.rmsnorm(x, norm_f, cfg.rms_eps)
+    logits = matmul.matmul(h, w_lm)
+    return logits, new_k, new_v
+
+
+def decode_step_fused_fn(cfg: ModelConfig):
+    """Partially-applied, jit-lowerable decode step for AOT export."""
+    return partial(decode_step_fused, cfg)

@@ -1,0 +1,39 @@
+"""Shared pytest fixtures for the L1/L2 test suite."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.configs import QWEN_TINY
+
+
+@pytest.fixture(scope="session")
+def cfg():
+    return QWEN_TINY
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(1234)
+
+
+def randf(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(0.0, scale, shape), jnp.float32)
+
+
+@pytest.fixture()
+def tiny_weights(rng, cfg):
+    """Deterministic synthetic weights for one tiny layer."""
+    w = {
+        "norm1": jnp.abs(randf(rng, cfg.hidden, scale=0.5)) + 0.5,
+        "wq": randf(rng, cfg.hidden, cfg.q_dim, scale=0.05),
+        "wk": randf(rng, cfg.hidden, cfg.kv_dim, scale=0.05),
+        "wv": randf(rng, cfg.hidden, cfg.kv_dim, scale=0.05),
+        "wo": randf(rng, cfg.q_dim, cfg.hidden, scale=0.05),
+        "norm2": jnp.abs(randf(rng, cfg.hidden, scale=0.5)) + 0.5,
+        "wg": randf(rng, cfg.hidden, cfg.intermediate, scale=0.05),
+        "wu": randf(rng, cfg.hidden, cfg.intermediate, scale=0.05),
+        "wd": randf(rng, cfg.intermediate, cfg.hidden, scale=0.05),
+    }
+    w["wkv"] = jnp.concatenate([w["wk"], w["wv"]], axis=1)
+    return w

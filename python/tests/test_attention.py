@@ -1,0 +1,57 @@
+"""SDPA GQA kernel vs oracle, masking semantics, cache padding."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import attention, ref
+
+
+def _setup(seed, heads=4, kv_heads=2, dim=16, seq=32):
+    k0 = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k0, 3)
+    q = jax.random.normal(ks[0], (heads, dim), jnp.float32)
+    kc = jax.random.normal(ks[1], (seq, kv_heads, dim), jnp.float32)
+    vc = jax.random.normal(ks[2], (seq, kv_heads, dim), jnp.float32)
+    return q, kc, vc
+
+
+@pytest.mark.parametrize("pos", [1, 3, 17, 32])
+def test_sdpa_matches_oracle(pos):
+    q, kc, vc = _setup(pos)
+    got = attention.sdpa_gqa(q, kc, vc, jnp.asarray([pos], jnp.int32))
+    want = ref.sdpa_gqa(q, kc, vc, pos, kv_heads=2)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("heads,kv_heads", [(4, 4), (4, 2), (8, 2), (4, 1)])
+def test_gqa_group_routing(heads, kv_heads):
+    q, kc, vc = _setup(9, heads=heads, kv_heads=kv_heads)
+    got = attention.sdpa_gqa(q, kc, vc, jnp.asarray([10], jnp.int32))
+    want = ref.sdpa_gqa(q, kc, vc, 10, kv_heads=kv_heads)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-5, atol=1e-5)
+
+
+def test_mask_ignores_padding():
+    """Garbage beyond pos must not leak into the output (fixed-capacity
+    cache semantics — the WebGPU pre-allocated storage buffer analogue)."""
+    q, kc, vc = _setup(11)
+    pos = 5
+    poisoned_k = kc.at[pos:].set(1e6)
+    poisoned_v = vc.at[pos:].set(-1e6)
+    clean = attention.sdpa_gqa(q, kc, vc, jnp.asarray([pos], jnp.int32))
+    dirty = attention.sdpa_gqa(
+        q, poisoned_k, poisoned_v, jnp.asarray([pos], jnp.int32)
+    )
+    np.testing.assert_allclose(np.array(clean), np.array(dirty), rtol=1e-6)
+
+
+def test_single_position_attends_fully():
+    """pos=1: output must equal v[0] exactly (softmax over one element)."""
+    q, kc, vc = _setup(13)
+    out = np.array(attention.sdpa_gqa(q, kc, vc, jnp.asarray([1], jnp.int32)))
+    v0 = np.array(vc[0])  # [KVH, D]
+    group = 4 // 2
+    for h in range(4):
+        np.testing.assert_allclose(out[h], v0[h // group], rtol=1e-5)

@@ -1,0 +1,59 @@
+"""KV-cache update and argmax kernels."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import argmax, concat, ref
+
+
+def test_cache_update_writes_row():
+    cache = jnp.zeros((16, 2, 8), jnp.float32)
+    row = jax.random.normal(jax.random.PRNGKey(0), (2, 8))
+    out = np.array(concat.cache_update(cache, row, jnp.asarray([5], jnp.int32)))
+    np.testing.assert_allclose(out[5], np.array(row), rtol=1e-6)
+    assert np.all(out[:5] == 0) and np.all(out[6:] == 0)
+
+
+@pytest.mark.parametrize("pos", [0, 7, 15])
+def test_cache_update_matches_oracle(pos):
+    cache = jax.random.normal(jax.random.PRNGKey(1), (16, 2, 8))
+    row = jax.random.normal(jax.random.PRNGKey(2), (2, 8))
+    got = concat.cache_update(cache, row, jnp.asarray([pos], jnp.int32))
+    want = ref.cache_update(cache, row, pos)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-6)
+
+
+def test_cache_update_sequence_fills_in_order():
+    cache = jnp.zeros((8, 1, 4), jnp.float32)
+    for p in range(8):
+        row = jnp.full((1, 4), float(p + 1), jnp.float32)
+        cache = concat.cache_update(cache, row, jnp.asarray([p], jnp.int32))
+    out = np.array(cache)
+    for p in range(8):
+        assert np.all(out[p] == p + 1)
+
+
+def test_concat_last():
+    a = jnp.arange(8, dtype=jnp.float32).reshape(2, 4)
+    b = -jnp.arange(6, dtype=jnp.float32).reshape(2, 3)
+    out = np.array(concat.concat_last(a, b))
+    np.testing.assert_allclose(out, np.concatenate([a, b], axis=-1))
+
+
+@pytest.mark.parametrize("v", [16, 512, 151936])
+def test_argmax_matches_oracle(v):
+    x = jax.random.normal(jax.random.PRNGKey(v), (1, v))
+    got = int(argmax.argmax_device(x)[0])
+    assert got == int(jnp.argmax(x))
+
+
+def test_argmax_ties_take_first():
+    x = jnp.asarray([[1.0, 3.0, 3.0, 0.0]], jnp.float32)
+    assert int(argmax.argmax_device(x)[0]) == 1
+
+
+def test_argmax_peak_position():
+    x = jnp.zeros((1, 100), jnp.float32).at[0, 63].set(10.0)
+    assert int(argmax.argmax_device(x)[0]) == 63

@@ -1,0 +1,53 @@
+"""Elementwise kernels + the paper's small elementwise fusions (§6.1)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import elementwise as ew, ref
+
+
+def _pair(rng, shape=(2, 64)):
+    a = jnp.asarray(rng.normal(0, 2, shape), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 2, shape), jnp.float32)
+    return a, b
+
+
+@pytest.mark.parametrize(
+    "name", ["silu", "neg", "add", "mul", "mul_silu", "add_silu", "add_gelu"]
+)
+def test_matches_oracle(name):
+    rng = np.random.default_rng(hash(name) % 2**31)
+    a, b = _pair(rng)
+    kern = getattr(ew, name)
+    oracle = getattr(ref, name)
+    got = kern(a) if name in ("silu", "neg") else kern(a, b)
+    want = oracle(a) if name in ("silu", "neg") else oracle(a, b)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-5, atol=1e-6)
+
+
+def test_binary_shape_mismatch_raises():
+    rng = np.random.default_rng(1)
+    a = jnp.zeros((2, 4), jnp.float32)
+    b = jnp.zeros((2, 5), jnp.float32)
+    with pytest.raises(AssertionError):
+        ew.add(a, b)
+
+
+def test_silu_properties():
+    x = jnp.asarray(np.linspace(-10, 10, 101), jnp.float32).reshape(1, -1)
+    y = np.array(ew.silu(x))
+    # silu(0) = 0; silu(x) -> x for large x; silu(x) -> 0 for very negative x
+    assert abs(y[0, 50]) < 1e-6
+    np.testing.assert_allclose(y[0, -1], 10.0, rtol=1e-3)
+    assert abs(y[0, 0]) < 1e-3
+
+
+def test_fused_mul_silu_equals_composition():
+    """fused_mul_silu(a, b) == mul(silu(a), b) — dispatch fusion only."""
+    rng = np.random.default_rng(5)
+    a, b = _pair(rng)
+    np.testing.assert_allclose(
+        np.array(ew.mul_silu(a, b)), np.array(ew.mul(ew.silu(a), b)),
+        rtol=1e-6, atol=1e-7,
+    )

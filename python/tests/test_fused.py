@@ -1,0 +1,77 @@
+"""Fused kernels (MLP gate+up+silu, K+V projection, mega-MLP) vs their
+unfused compositions — fusion must be numerics-preserving (Appendix N)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import (
+    elementwise,
+    fused_kv,
+    fused_mlp,
+    matmul,
+    mega_mlp,
+    ref,
+    rmsnorm,
+)
+
+
+def _w(seed, *shape, scale=0.08):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+@pytest.mark.parametrize("h,i", [(64, 176), (32, 64), (896, 4864)])
+def test_mlp_fusion_matches_oracle(h, i):
+    x = _w(1, 1, h, scale=1.0)
+    wg, wu = _w(2, h, i), _w(3, h, i)
+    got = fused_mlp.mlp_gate_up_silu(x, wg, wu)
+    want = ref.mlp_gate_up_silu(x, wg, wu)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-4, atol=1e-5)
+
+
+def test_mlp_fusion_matches_unfused_dispatches():
+    """fused == matmul + matmul + silu + mul (3 dispatches saved -> 1)."""
+    x = _w(4, 1, 64, scale=1.0)
+    wg, wu = _w(5, 64, 176), _w(6, 64, 176)
+    g = matmul.matmul(x, wg)
+    u = matmul.matmul(x, wu)
+    unfused = elementwise.mul(elementwise.silu(g), u)
+    fused = fused_mlp.mlp_gate_up_silu(x, wg, wu)
+    assert np.max(np.abs(np.array(fused) - np.array(unfused))) < 2e-4
+
+
+def test_kv_fusion_matches_separate_projections():
+    """Concatenated-weight KV matmul == separate K and V matmuls."""
+    x = _w(7, 1, 64, scale=1.0)
+    wk, wv = _w(8, 64, 32), _w(9, 64, 32)
+    wkv = jnp.concatenate([wk, wv], axis=1)
+    fused = np.array(fused_kv.kv_proj_fused(x, wkv))
+    k = np.array(matmul.matmul(x, wk))
+    v = np.array(matmul.matmul(x, wv))
+    np.testing.assert_allclose(fused[:, :32], k, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(fused[:, 32:], v, rtol=1e-5, atol=1e-6)
+
+
+def test_mega_mlp_matches_oracle():
+    x = _w(10, 1, 64, scale=1.0)
+    w = jnp.abs(_w(11, 64, scale=0.5)) + 0.5
+    wg, wu, wd = _w(12, 64, 176), _w(13, 64, 176), _w(14, 176, 64)
+    got = mega_mlp.mega_mlp(x, w, wg, wu, wd)
+    want = ref.mega_mlp(x, w, wg, wu, wd)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-4, atol=1e-5)
+
+
+def test_mega_mlp_matches_7_dispatch_chain():
+    """mega (1 dispatch) == rmsnorm + gate + up + silu + mul + down + add."""
+    x = _w(15, 1, 64, scale=1.0)
+    w = jnp.abs(_w(16, 64, scale=0.5)) + 0.5
+    wg, wu, wd = _w(17, 64, 176), _w(18, 64, 176), _w(19, 176, 64)
+    h = rmsnorm.rmsnorm(x, w)
+    g = matmul.matmul(h, wg)
+    u = matmul.matmul(h, wu)
+    act = elementwise.mul(elementwise.silu(g), u)
+    down = matmul.matmul(act, wd)
+    unfused = elementwise.add(x, down)
+    fused = mega_mlp.mega_mlp(x, w, wg, wu, wd)
+    assert np.max(np.abs(np.array(fused) - np.array(unfused))) < 2e-4

@@ -1,0 +1,107 @@
+"""Hypothesis sweeps: kernels vs oracles across randomized shapes/values.
+
+The system prompt for this reproduction requires hypothesis-driven shape
+sweeps on the Pallas kernels with assert_allclose against ref.py — these are
+the property-based analogue of the paper's Appendix N precision validation.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    attention,
+    elementwise,
+    matmul,
+    ref,
+    rmsnorm,
+    softmax,
+)
+
+_dims = st.integers(min_value=1, max_value=96)
+_small = st.integers(min_value=1, max_value=8)
+_seed = st.integers(min_value=0, max_value=2**31 - 1)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arr(seed, *shape, scale=2.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape), jnp.float32)
+
+
+@given(m=_small, k=_dims, n=_dims, seed=_seed)
+@settings(**SETTINGS)
+def test_matmul_any_shape(m, k, n, seed):
+    x, w = _arr(seed, m, k), _arr(seed + 1, k, n)
+    got = np.array(matmul.matmul(x, w))
+    want = np.array(ref.matmul(x, w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(m=_small, h=_dims, seed=_seed)
+@settings(**SETTINGS)
+def test_rmsnorm_any_shape(m, h, seed):
+    x = _arr(seed, m, h)
+    w = jnp.asarray(np.random.default_rng(seed + 2).uniform(0.5, 1.5, (h,)),
+                    jnp.float32)
+    got = np.array(rmsnorm.rmsnorm(x, w))
+    want = np.array(ref.rmsnorm(x, w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@given(m=_small, h=_dims, seed=_seed)
+@settings(**SETTINGS)
+def test_rmsnorm_fused_equals_unfused(m, h, seed):
+    x = _arr(seed, m, h)
+    w = jnp.asarray(np.random.default_rng(seed + 3).uniform(0.5, 1.5, (h,)),
+                    jnp.float32)
+    fused = np.array(rmsnorm.rmsnorm(x, w))
+    unfused = np.array(rmsnorm.rmsnorm_unfused(x, w))
+    assert np.max(np.abs(fused - unfused)) < 2e-4  # paper Appendix N bound
+
+
+@given(m=_small, n=_dims, seed=_seed, shift=st.floats(-50, 50))
+@settings(**SETTINGS)
+def test_softmax_any_shape(m, n, seed, shift):
+    x = _arr(seed, m, n) + shift
+    got = np.array(softmax.softmax(x))
+    np.testing.assert_allclose(got, np.array(ref.softmax(x)), rtol=1e-4,
+                               atol=1e-6)
+    np.testing.assert_allclose(got.sum(axis=-1), np.ones(m), rtol=1e-4)
+
+
+@given(m=_small, n=_dims, seed=_seed)
+@settings(**SETTINGS)
+def test_elementwise_fusions(m, n, seed):
+    a, b = _arr(seed, m, n), _arr(seed + 1, m, n)
+    np.testing.assert_allclose(
+        np.array(elementwise.mul_silu(a, b)), np.array(ref.mul_silu(a, b)),
+        rtol=1e-4, atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        np.array(elementwise.add_silu(a, b)), np.array(ref.add_silu(a, b)),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+@given(
+    kv_heads=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    dim=st.sampled_from([8, 16, 32]),
+    seq=st.sampled_from([8, 32]),
+    data=st.data(),
+)
+@settings(max_examples=15, deadline=None)
+def test_sdpa_any_config(kv_heads, group, dim, seq, data):
+    heads = kv_heads * group
+    pos = data.draw(st.integers(1, seq))
+    seed = data.draw(_seed)
+    q = _arr(seed, heads, dim, scale=1.0)
+    kc = _arr(seed + 1, seq, kv_heads, dim, scale=1.0)
+    vc = _arr(seed + 2, seq, kv_heads, dim, scale=1.0)
+    got = np.array(
+        attention.sdpa_gqa(q, kc, vc, jnp.asarray([pos], jnp.int32))
+    )
+    want = np.array(ref.sdpa_gqa(q, kc, vc, pos, kv_heads=kv_heads))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-4)

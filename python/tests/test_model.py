@@ -1,0 +1,97 @@
+"""L2 model tests: fused/unfused layer equivalence, decode-step consistency,
+KV-cache autoregression over the tiny config."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import QWEN_TINY, get_config
+
+
+def _caches(cfg):
+    shape = (cfg.max_seq, cfg.kv_heads, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def _pos(p):
+    return jnp.asarray([p], jnp.int32), jnp.asarray([float(p)], jnp.float32)
+
+
+def test_layer_fused_equals_unfused(cfg, tiny_weights, rng):
+    x = jnp.asarray(rng.normal(0, 1, (1, cfg.hidden)), jnp.float32)
+    kc, vc = _caches(cfg)
+    pi, pf = _pos(0)
+    xf, kf, vf = model.layer_fused(cfg, x, kc, vc, pi, pf, tiny_weights)
+    xu, ku, vu = model.layer_unfused(cfg, x, kc, vc, pi, pf, tiny_weights)
+    np.testing.assert_allclose(np.array(xf), np.array(xu), rtol=1e-4, atol=2e-5)
+    np.testing.assert_allclose(np.array(kf), np.array(ku), rtol=1e-4, atol=2e-5)
+    np.testing.assert_allclose(np.array(vf), np.array(vu), rtol=1e-4, atol=2e-5)
+
+
+def test_layer_updates_cache_at_pos(cfg, tiny_weights, rng):
+    x = jnp.asarray(rng.normal(0, 1, (1, cfg.hidden)), jnp.float32)
+    kc, vc = _caches(cfg)
+    pi, pf = _pos(3)
+    _, kf, vf = model.layer_fused(cfg, x, kc, vc, pi, pf, tiny_weights)
+    kf, vf = np.array(kf), np.array(vf)
+    assert np.any(kf[3] != 0) and np.any(vf[3] != 0)
+    assert np.all(kf[:3] == 0) and np.all(kf[4:] == 0)
+
+
+def test_layer_output_deterministic(cfg, tiny_weights, rng):
+    x = jnp.asarray(rng.normal(0, 1, (1, cfg.hidden)), jnp.float32)
+    kc, vc = _caches(cfg)
+    pi, pf = _pos(0)
+    a, _, _ = model.layer_fused(cfg, x, kc, vc, pi, pf, tiny_weights)
+    b, _, _ = model.layer_fused(cfg, x, kc, vc, pi, pf, tiny_weights)
+    np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_decode_step_shapes(cfg, tiny_weights, rng):
+    L, S = cfg.layers, cfg.max_seq
+    stack = lambda a: jnp.stack([a] * L)
+    kc, vc = _caches(cfg)
+    x = jnp.asarray(rng.normal(0, 1, (1, cfg.hidden)), jnp.float32)
+    pi, _ = _pos(0)
+    logits, nk, nv = model.decode_step_fused(
+        cfg, x, stack(kc), stack(vc), pi,
+        stack(tiny_weights["norm1"]), stack(tiny_weights["wq"]),
+        stack(tiny_weights["wkv"]), stack(tiny_weights["wo"]),
+        stack(tiny_weights["norm2"]), stack(tiny_weights["wg"]),
+        stack(tiny_weights["wu"]), stack(tiny_weights["wd"]),
+        jnp.ones((cfg.hidden,), jnp.float32),
+        jnp.asarray(rng.normal(0, 0.05, (cfg.hidden, cfg.vocab)), jnp.float32),
+    )
+    assert logits.shape == (1, cfg.vocab)
+    assert nk.shape == (L, S, cfg.kv_heads, cfg.head_dim)
+    assert nv.shape == nk.shape
+    assert np.isfinite(np.array(logits)).all()
+
+
+def test_configs_registered():
+    for name in ("qwen2.5-0.5b", "qwen2.5-1.5b", "qwen-tiny"):
+        c = get_config(name)
+        assert c.q_dim == c.heads * c.head_dim
+        assert c.kv_dim == c.kv_heads * c.head_dim
+        assert c.heads % c.kv_heads == 0
+
+
+def test_paper_config_dims():
+    """Table 10's census depends on these exact dims — pin them."""
+    c05 = get_config("qwen2.5-0.5b")
+    assert (c05.layers, c05.hidden, c05.intermediate) == (24, 896, 4864)
+    assert c05.vocab == 151936
+    c15 = get_config("qwen2.5-1.5b")
+    assert (c15.layers, c15.hidden, c15.intermediate) == (28, 1536, 8960)
+
+
+def test_unknown_config_raises():
+    with pytest.raises(KeyError):
+        get_config("qwen-99b")
+
+
+def test_rope_inv_freq_monotone():
+    inv = np.array(model.rope_inv_freq(QWEN_TINY))
+    assert inv.shape == (QWEN_TINY.head_dim // 2,)
+    assert np.all(np.diff(inv) < 0) and inv[0] == 1.0

@@ -1,0 +1,77 @@
+"""RMSNorm kernels: fused, 6-op decomposition, and their equivalence —
+the paper's highest-impact fusion (§6.1, +44%, p<0.001)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref, rmsnorm
+
+
+def _xw(rng, m=1, h=64):
+    x = jnp.asarray(rng.normal(0, 1, (m, h)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 1.5, (h,)), jnp.float32)
+    return x, w
+
+
+@pytest.mark.parametrize("m,h", [(1, 64), (1, 896), (4, 128), (2, 32)])
+def test_fused_matches_oracle(m, h):
+    rng = np.random.default_rng(h + m)
+    x, w = _xw(rng, m, h)
+    np.testing.assert_allclose(
+        np.array(rmsnorm.rmsnorm(x, w)), np.array(ref.rmsnorm(x, w)),
+        rtol=2e-5, atol=1e-6,
+    )
+
+
+def test_unfused_chain_matches_oracle():
+    rng = np.random.default_rng(42)
+    x, w = _xw(rng)
+    np.testing.assert_allclose(
+        np.array(rmsnorm.rmsnorm_unfused(x, w)), np.array(ref.rmsnorm(x, w)),
+        rtol=2e-5, atol=1e-6,
+    )
+
+
+def test_fused_equals_unfused():
+    """The paper's fusion must not change numerics (Appendix N)."""
+    rng = np.random.default_rng(43)
+    x, w = _xw(rng, 1, 896)
+    fused = np.array(rmsnorm.rmsnorm(x, w))
+    unfused = np.array(rmsnorm.rmsnorm_unfused(x, w))
+    assert np.max(np.abs(fused - unfused)) < 2e-4  # paper's threshold
+
+
+def test_each_stage_matches_oracle():
+    rng = np.random.default_rng(44)
+    x, w = _xw(rng)
+    x2 = rmsnorm.rms_pow(x)
+    np.testing.assert_allclose(np.array(x2), np.array(ref.rms_pow(x)), rtol=1e-6)
+    m = rmsnorm.rms_mean(x2)
+    np.testing.assert_allclose(np.array(m), np.array(ref.rms_mean(x2)), rtol=1e-6)
+    me = rmsnorm.rms_add_eps(m)
+    np.testing.assert_allclose(np.array(me), np.array(ref.rms_add_eps(m)), rtol=1e-6)
+    r = rmsnorm.rms_rsqrt(me)
+    np.testing.assert_allclose(np.array(r), np.array(ref.rms_rsqrt(me)), rtol=1e-5)
+    xn = rmsnorm.rms_mul_x(x, r)
+    np.testing.assert_allclose(np.array(xn), np.array(ref.rms_mul_x(x, r)), rtol=1e-6)
+    out = rmsnorm.rms_mul_w(xn, w)
+    np.testing.assert_allclose(np.array(out), np.array(ref.rms_mul_w(xn, w)), rtol=1e-6)
+
+
+def test_scale_invariance():
+    """RMSNorm(c*x) == RMSNorm(x) for c > 0 (up to float error)."""
+    rng = np.random.default_rng(45)
+    x, w = _xw(rng)
+    a = np.array(rmsnorm.rmsnorm(x, w))
+    b = np.array(rmsnorm.rmsnorm(x * 7.5, w))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_unit_weight_gives_unit_rms():
+    rng = np.random.default_rng(46)
+    x = jnp.asarray(rng.normal(0, 3, (1, 256)), jnp.float32)
+    w = jnp.ones((256,), jnp.float32)
+    out = np.array(rmsnorm.rmsnorm(x, w))
+    rms = np.sqrt(np.mean(out**2))
+    assert abs(rms - 1.0) < 1e-3

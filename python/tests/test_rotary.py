@@ -1,0 +1,65 @@
+"""Rotary embedding kernels: fused kernel, cos/sin table kernel, and the
+unfused neg/concat/mul/add decomposition used by the unfused op flow."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import concat, elementwise, ref, rmsnorm, rotary
+
+
+@pytest.mark.parametrize("pos", [0.0, 1.0, 17.0, 63.0])
+def test_rope_table_matches_oracle(pos):
+    dim = 16
+    half = dim // 2
+    inv = 1.0 / (10000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    cos, sin = rotary.rope_cos_sin(jnp.asarray([pos], jnp.float32), inv)
+    rc, rs = ref.rope_cos_sin(pos, dim)
+    np.testing.assert_allclose(np.array(cos), np.array(rc), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.array(sin), np.array(rs), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("heads,dim", [(4, 16), (2, 16), (8, 32)])
+def test_rotary_matches_oracle(heads, dim):
+    x = jax.random.normal(jax.random.PRNGKey(heads * dim), (heads, dim))
+    cos, sin = ref.rope_cos_sin(5.0, dim)
+    got = rotary.rotary(x, cos, sin)
+    want = ref.rotary(x, cos, sin)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-6)
+
+
+def test_unfused_decomposition_matches_fused():
+    """neg + concat + 2 mul + add (5 dispatches) == fused rotary kernel."""
+    heads, dim = 4, 16
+    half = dim // 2
+    x = jax.random.normal(jax.random.PRNGKey(0), (heads, dim))
+    cos, sin = ref.rope_cos_sin(9.0, dim)
+    # unfused flow, each step a separate Pallas dispatch:
+    x2n = elementwise.neg(x[:, half:])
+    rot = concat.concat_last(x2n, x[:, :half])
+    a = rmsnorm.rms_mul_w(x, cos)
+    b = rmsnorm.rms_mul_w(rot, sin)
+    unfused = elementwise.add(a, b)
+    fused = rotary.rotary(x, cos, sin)
+    np.testing.assert_allclose(
+        np.array(unfused), np.array(fused), rtol=1e-6, atol=1e-7
+    )
+
+
+def test_rotation_preserves_norm():
+    """Rotary is a rotation: per-head L2 norm is preserved."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 16))
+    cos, sin = ref.rope_cos_sin(21.0, 16)
+    y = np.array(rotary.rotary(x, cos, sin))
+    np.testing.assert_allclose(
+        np.linalg.norm(y, axis=-1), np.linalg.norm(np.array(x), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_position_zero_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, 16))
+    cos, sin = ref.rope_cos_sin(0.0, 16)
+    y = rotary.rotary(x, cos, sin)
+    np.testing.assert_allclose(np.array(y), np.array(x), rtol=1e-6, atol=1e-7)

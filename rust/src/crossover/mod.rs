@@ -1,0 +1,176 @@
+//! Dispatch-bound crossover analysis (Appendix F, Table 14).
+//!
+//! For a linear layer [B, d_in] x [d_in, d_out]:
+//!
+//! ```text
+//! T_compute(B) = 2 B d_in d_out / throughput
+//! B*           = T_overhead * throughput / (2 d_in d_out)
+//! ```
+//!
+//! Below B* the operation is overhead-bound; above, compute-bound. This is
+//! the roofline-style model showing batch=1 LLM decode is deeply
+//! overhead-bound (B* >= 7 even for the largest matmuls).
+
+/// Model parameters (paper values: 95 us per-op overhead, 2 TFLOP/s WGSL).
+#[derive(Debug, Clone, Copy)]
+pub struct CrossoverModel {
+    pub overhead_us: f64,
+    pub throughput_tflops: f64,
+}
+
+impl CrossoverModel {
+    pub fn paper() -> Self {
+        CrossoverModel { overhead_us: 95.0, throughput_tflops: 2.0 }
+    }
+
+    /// Compute time of [B, d_in] x [d_in, d_out] in microseconds.
+    pub fn compute_time_us(&self, batch: usize, d_in: usize, d_out: usize) -> f64 {
+        2.0 * batch as f64 * d_in as f64 * d_out as f64
+            / (self.throughput_tflops * 1e12)
+            * 1e6
+    }
+
+    /// Crossover batch size B* (ceiling, min 1).
+    pub fn crossover_batch(&self, d_in: usize, d_out: usize) -> usize {
+        let b = self.overhead_us * 1e-6 * self.throughput_tflops * 1e12
+            / (2.0 * d_in as f64 * d_out as f64);
+        b.ceil().max(1.0) as usize
+    }
+
+    pub fn regime_at(&self, batch: usize, d_in: usize, d_out: usize) -> Regime {
+        if batch < self.crossover_batch(d_in, d_out) {
+            Regime::OverheadBound
+        } else {
+            Regime::ComputeBound
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Regime {
+    OverheadBound,
+    ComputeBound,
+}
+
+impl std::fmt::Display for Regime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Regime::OverheadBound => write!(f, "Overhead-bound"),
+            Regime::ComputeBound => write!(f, "Compute-bound"),
+        }
+    }
+}
+
+/// One Table 14 row.
+#[derive(Debug, Clone)]
+pub struct CrossoverRow {
+    pub operation: String,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub b_star: usize,
+    pub regime_b1: Regime,
+}
+
+/// Table 14's operations for both model sizes.
+pub fn table14_rows(model: &CrossoverModel) -> Vec<(String, Vec<CrossoverRow>)> {
+    let specs: [(&str, &[(&str, usize, usize)]); 2] = [
+        (
+            "Qwen2.5-0.5B (896 hidden, 4864 intermediate)",
+            &[
+                ("Attention Q/K/V proj", 896, 896),
+                ("MLP up projection", 896, 4864),
+                ("MLP down projection", 4864, 896),
+            ],
+        ),
+        (
+            "Qwen2.5-1.5B (1536 hidden, 8960 intermediate)",
+            &[
+                ("Attention Q/K/V proj", 1536, 1536),
+                ("MLP up projection", 1536, 8960),
+                ("MLP down projection", 8960, 1536),
+            ],
+        ),
+    ];
+    specs
+        .iter()
+        .map(|(group, ops)| {
+            let rows = ops
+                .iter()
+                .map(|(name, din, dout)| CrossoverRow {
+                    operation: name.to_string(),
+                    d_in: *din,
+                    d_out: *dout,
+                    b_star: model.crossover_batch(*din, *dout),
+                    regime_b1: model.regime_at(1, *din, *dout),
+                })
+                .collect();
+            (group.to_string(), rows)
+        })
+        .collect()
+}
+
+/// Appendix G sensitivity: vary overhead by +/- pct and report the B* range
+/// for one operation.
+pub fn b_star_sensitivity(
+    model: &CrossoverModel,
+    d_in: usize,
+    d_out: usize,
+    pct: f64,
+) -> (usize, usize) {
+    let lo = CrossoverModel { overhead_us: model.overhead_us * (1.0 - pct), ..*model };
+    let hi = CrossoverModel { overhead_us: model.overhead_us * (1.0 + pct), ..*model };
+    (lo.crossover_batch(d_in, d_out), hi.crossover_batch(d_in, d_out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table14_b_stars_match_paper() {
+        let m = CrossoverModel::paper();
+        // Paper: 119 / 22 / 22 for 0.5B; 40 / 7 / 7 for 1.5B.
+        assert_eq!(m.crossover_batch(896, 896), 119);
+        assert_eq!(m.crossover_batch(896, 4864), 22);
+        assert_eq!(m.crossover_batch(4864, 896), 22);
+        assert_eq!(m.crossover_batch(1536, 1536), 41); // paper rounds to 40
+        assert_eq!(m.crossover_batch(1536, 8960), 7);
+        assert_eq!(m.crossover_batch(8960, 1536), 7);
+    }
+
+    #[test]
+    fn batch1_is_always_overhead_bound() {
+        let m = CrossoverModel::paper();
+        for (_, rows) in table14_rows(&m) {
+            for r in rows {
+                assert_eq!(r.regime_b1, Regime::OverheadBound, "{}", r.operation);
+                assert!(r.b_star >= 7);
+            }
+        }
+    }
+
+    #[test]
+    fn compute_time_scales_linearly_with_batch() {
+        let m = CrossoverModel::paper();
+        let t1 = m.compute_time_us(1, 896, 4864);
+        let t8 = m.compute_time_us(8, 896, 4864);
+        assert!((t8 / t1 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn crossover_balances_overhead_and_compute() {
+        let m = CrossoverModel::paper();
+        let b = m.crossover_batch(896, 4864);
+        let t = m.compute_time_us(b, 896, 4864);
+        // At B*, compute time ~= overhead (within one batch quantum).
+        assert!(t >= m.overhead_us && t <= m.overhead_us * 1.1, "t {t}");
+    }
+
+    #[test]
+    fn sensitivity_moves_b_star_proportionally() {
+        let m = CrossoverModel::paper();
+        let (lo, hi) = b_star_sensitivity(&m, 896, 896, 0.2);
+        assert!(lo < 119 && hi > 119);
+        assert!((lo as f64 - 119.0 * 0.8).abs() <= 1.0);
+    }
+}

@@ -1,0 +1,381 @@
+//! Graph executor: one WebGPU dispatch per kernel node, host ops in
+//! between, buffer pooling, per-op framework-overhead accounting.
+//!
+//! This is the torch-webgpu eager executor analogue: it walks the FX graph
+//! in order, paying (1) the per-op framework cost (Python interpreter /
+//! tensor metadata in the paper, ~59-71 us — a virtual-clock constant
+//! here), (2) the full 8-phase dispatch sequence per kernel node, and
+//! (3) kernel execution on the real PJRT CPU client. Intermediate values
+//! chain GPU-side (no sync); only the caller's explicit `map_read` on the
+//! logits buffer synchronizes.
+
+use std::collections::HashMap;
+
+use crate::fx::graph::FxGraph;
+use crate::fx::node::{HostOp, OpKind, ValueId};
+use crate::runtime::hostops;
+use crate::runtime::registry::Registry;
+use crate::tensor::Tensor;
+use crate::webgpu::queue::{bind_buffers, kernel_layout};
+use crate::webgpu::{
+    BindGroupLayoutId, BufferDesc, BufferId, BufferUsage, ComputePipelineId,
+    Device, KernelIoSpec, ShaderModuleDesc,
+};
+use crate::{Error, Result};
+
+/// A prepared pipeline: compiled-pipeline id + its layout + IO specs.
+#[derive(Debug, Clone)]
+struct Prepared {
+    pipeline: ComputePipelineId,
+    layout: BindGroupLayoutId,
+    inputs: Vec<KernelIoSpec>,
+    outputs: Vec<KernelIoSpec>,
+    workgroups: (u32, u32, u32),
+}
+
+pub struct GraphExecutor<'r> {
+    pub device: Device,
+    registry: &'r Registry,
+    prepared: HashMap<String, Prepared>,
+    layouts: HashMap<(usize, usize), BindGroupLayoutId>,
+    /// Size-class buffer pool (the paper's buffer-pooling experiment; on by
+    /// default because re-creating buffers per dispatch is purely hostile).
+    pool: HashMap<usize, Vec<BufferId>>,
+    /// PERF (§Perf L3): weights pinned into persistent device buffers at
+    /// prepare time — uploaded once, bound directly per dispatch. This is
+    /// also the faithful WebGPU pattern: weight buffers live on the GPU for
+    /// the model's lifetime; only activations move.
+    pinned: HashMap<ValueId, BufferId>,
+    /// PERF: bind-group cache keyed by (layout, bound buffers) — the
+    /// paper's "bind group caching" experiment (hash-based lookup, §5.1).
+    /// With pinned weights + pooled activations the key set is small, so
+    /// bind-group creation cost is paid O(distinct bindings), not O(steps).
+    bind_cache: HashMap<(u64, Vec<BufferId>), crate::webgpu::BindGroupId>,
+    /// Per-op framework overhead (virtual ns) — the "Python/framework"
+    /// component of the paper's ~95 us per-operation overhead.
+    pub framework_ns_per_op: u64,
+    /// Dispatches issued since construction.
+    pub dispatch_count: u64,
+}
+
+impl<'r> GraphExecutor<'r> {
+    pub fn new(device: Device, registry: &'r Registry, framework_ns_per_op: u64) -> Self {
+        GraphExecutor {
+            device,
+            registry,
+            prepared: HashMap::new(),
+            layouts: HashMap::new(),
+            pool: HashMap::new(),
+            pinned: HashMap::new(),
+            bind_cache: HashMap::new(),
+            framework_ns_per_op,
+            dispatch_count: 0,
+        }
+    }
+
+    /// Upload weight tensors into persistent device buffers, once. Inputs
+    /// named in `weights` are bound directly at dispatch time instead of
+    /// being re-uploaded per use.
+    pub fn pin_inputs(
+        &mut self,
+        graph: &FxGraph,
+        weights: &HashMap<String, Tensor>,
+    ) -> Result<usize> {
+        let mut pinned = 0;
+        for (name, &vid) in &graph.inputs {
+            let Some(t) = weights.get(name) else { continue };
+            let buf = self.device.create_buffer(BufferDesc {
+                label: format!("weight-{name}"),
+                size: t.size_bytes(),
+                usage: BufferUsage::STORAGE | BufferUsage::COPY_DST,
+            })?;
+            self.device.write_buffer(buf, 0, t.data.as_bytes())?;
+            self.pinned.insert(vid, buf);
+            pinned += 1;
+        }
+        Ok(pinned)
+    }
+
+    /// Create pipelines for every kernel a graph uses and compile the AOT
+    /// modules (off the request path, like Dawn pipeline caching).
+    pub fn prepare(&mut self, graph: &FxGraph) -> Result<()> {
+        for name in graph.kernel_names() {
+            if self.prepared.contains_key(&name) {
+                continue;
+            }
+            self.registry.ensure_loaded(&name)?;
+            let spec = self.registry.spec(&name)?;
+            let key = (spec.inputs.len(), spec.outputs.len());
+            let layout = match self.layouts.get(&key) {
+                Some(&l) => l,
+                None => {
+                    let l = kernel_layout(&mut self.device, &name, key.0, key.1)?;
+                    self.layouts.insert(key, l);
+                    l
+                }
+            };
+            let module = self.device.create_shader_module(ShaderModuleDesc {
+                label: name.clone(),
+                kernel: name.clone(),
+                inputs: spec.inputs.clone(),
+                outputs: spec.outputs.clone(),
+            })?;
+            let pipeline = self.device.create_compute_pipeline(&name, module, layout)?;
+            // Workgroup count: ceil(out elements / 256) — matches the WGSL
+            // convention of 256-thread workgroups.
+            let out_elems: usize = spec.outputs.iter().map(KernelIoSpec::numel).sum();
+            let wg = ((out_elems + 255) / 256).max(1) as u32;
+            self.prepared.insert(
+                name.clone(),
+                Prepared {
+                    pipeline,
+                    layout,
+                    inputs: spec.inputs.clone(),
+                    outputs: spec.outputs.clone(),
+                    workgroups: (wg.min(65_535), 1, 1),
+                },
+            );
+        }
+        Ok(())
+    }
+
+    fn acquire(&mut self, size: usize) -> Result<BufferId> {
+        if let Some(free) = self.pool.get_mut(&size) {
+            if let Some(b) = free.pop() {
+                return Ok(b);
+            }
+        }
+        self.device.create_buffer(BufferDesc {
+            label: format!("pool-{size}"),
+            size,
+            usage: BufferUsage::STORAGE
+                | BufferUsage::COPY_DST
+                | BufferUsage::COPY_SRC
+                | BufferUsage::MAP_READ,
+        })
+    }
+
+    fn release(&mut self, size: usize, id: BufferId) {
+        self.pool.entry(size).or_default().push(id);
+    }
+
+    /// Execute the graph. `inputs` must cover every graph input.
+    /// Returns (named outputs, the logits output's live buffer id) — the
+    /// caller `map_read`s that buffer to model the per-token sync.
+    pub fn run(
+        &mut self,
+        graph: &FxGraph,
+        inputs: &HashMap<String, Tensor>,
+    ) -> Result<(HashMap<String, Tensor>, Option<BufferId>)> {
+        let mut values: Vec<Option<Tensor>> = vec![None; graph.n_values];
+        for (name, &vid) in &graph.inputs {
+            if self.pinned.contains_key(&vid) {
+                continue; // weight lives in its persistent device buffer
+            }
+            let t = inputs
+                .get(name)
+                .ok_or_else(|| Error::Graph(format!("missing graph input '{name}'")))?;
+            values[vid.0] = Some(t.clone());
+        }
+
+        let logits_value = graph.outputs.get("logits").copied();
+        let mut logits_buffer: Option<BufferId> = None;
+        let mut borrowed: Vec<(usize, BufferId)> = Vec::with_capacity(8);
+
+        for node in &graph.nodes {
+            match &node.op {
+                OpKind::Host(op) => {
+                    self.run_host(*op, node.inputs.as_slice(), &node.outputs, &mut values)?;
+                }
+                OpKind::Kernel(kname) => {
+                    // (1) framework overhead — Python interpreter / tensor
+                    // metadata cost in torch-webgpu (drifted per run).
+                    let fw = self.device.drifted_cost(self.framework_ns_per_op);
+                    self.device.clock.advance_cpu(fw);
+
+                    let prep = self
+                        .prepared
+                        .get(kname)
+                        .ok_or_else(|| {
+                            Error::Graph(format!("kernel '{kname}' not prepared"))
+                        })?
+                        .clone();
+
+                    // (2) bind inputs: pinned weights directly, activations
+                    // via pooled upload.
+                    borrowed.clear();
+                    let mut in_bufs = Vec::with_capacity(prep.inputs.len());
+                    for (i, spec) in prep.inputs.iter().enumerate() {
+                        if let Some(&buf) = self.pinned.get(&node.inputs[i]) {
+                            in_bufs.push(buf);
+                            continue;
+                        }
+                        let t = values[node.inputs[i].0].as_ref().ok_or_else(|| {
+                            Error::Graph(format!("{}: input {i} missing", node.name))
+                        })?;
+                        if t.shape != spec.shape {
+                            return Err(Error::Graph(format!(
+                                "{}: input {i} shape {:?} != kernel spec {:?}",
+                                node.name, t.shape, spec.shape
+                            )));
+                        }
+                        let size = spec.size_bytes();
+                        let buf = self.acquire(size)?;
+                        self.device.write_buffer(buf, 0, t.data.as_bytes())?;
+                        in_bufs.push(buf);
+                        borrowed.push((size, buf));
+                    }
+                    let mut out_bufs = Vec::with_capacity(prep.outputs.len());
+                    for spec in &prep.outputs {
+                        let size = spec.size_bytes();
+                        let buf = self.acquire(size)?;
+                        out_bufs.push(buf);
+                        borrowed.push((size, buf));
+                    }
+
+                    // (3) the 8-phase dispatch sequence. Bind groups are
+                    // cached by (layout, buffers) — hash-based lookup.
+                    let mut key_bufs = in_bufs.clone();
+                    key_bufs.extend_from_slice(&out_bufs);
+                    let cache_key = (prep.layout.0, key_bufs);
+                    let group = match self.bind_cache.get(&cache_key) {
+                        Some(&g) => g,
+                        None => {
+                            let g = bind_buffers(
+                                &mut self.device, &node.name, prep.layout, &in_bufs, &out_bufs,
+                            )?;
+                            self.bind_cache.insert(cache_key, g);
+                            g
+                        }
+                    };
+                    let enc = self.device.create_command_encoder(&node.name);
+                    self.device.begin_compute_pass(enc)?;
+                    self.device.set_pipeline(enc, prep.pipeline)?;
+                    self.device.set_bind_group(enc, group)?;
+                    self.device.dispatch_workgroups(
+                        enc,
+                        prep.workgroups.0,
+                        prep.workgroups.1,
+                        prep.workgroups.2,
+                    )?;
+                    self.device.end_compute_pass(enc)?;
+                    let cb = self.device.finish(enc)?;
+                    self.device.submit(&[cb], self.registry)?;
+                    self.dispatch_count += 1;
+
+                    // (4) chain outputs GPU-side (peek: no sync cost).
+                    for (j, spec) in prep.outputs.iter().enumerate() {
+                        let bytes = self.device.peek_buffer(out_bufs[j])?.to_vec();
+                        let t = bytes_to_tensor(spec, &bytes)?;
+                        values[node.outputs[j].0] = Some(t);
+                    }
+
+                    // Keep the logits buffer alive for the caller's map_read.
+                    let produces_logits =
+                        logits_value.is_some_and(|lv| node.outputs.contains(&lv));
+                    for &(size, buf) in &borrowed {
+                        if produces_logits && Some(buf) == out_bufs.last().copied() {
+                            logits_buffer = Some(buf);
+                        } else {
+                            self.release(size, buf);
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut outs = HashMap::with_capacity(graph.outputs.len());
+        for (name, &vid) in &graph.outputs {
+            let t = values[vid.0]
+                .take()
+                .or_else(|| values[vid.0].clone())
+                .ok_or_else(|| Error::Graph(format!("output '{name}' not produced")))?;
+            outs.insert(name.clone(), t);
+        }
+        Ok((outs, logits_buffer))
+    }
+
+    pub fn registry(&self) -> &'r Registry {
+        self.registry
+    }
+
+    pub fn registry_spec(&self, name: &str) -> Result<&crate::runtime::registry::KernelSpec> {
+        self.registry.spec(name)
+    }
+
+    /// Return the logits buffer to the pool once the caller is done with it.
+    pub fn release_logits(&mut self, buf: BufferId) -> Result<()> {
+        let size = self.device.buffer_size(buf)?;
+        self.release(size, buf);
+        Ok(())
+    }
+
+    fn run_host(
+        &mut self,
+        op: HostOp,
+        inputs: &[ValueId],
+        outputs: &[ValueId],
+        values: &mut [Option<Tensor>],
+    ) -> Result<()> {
+        let get = |v: ValueId, values: &[Option<Tensor>]| -> Result<Tensor> {
+            values[v.0]
+                .clone()
+                .ok_or_else(|| Error::Graph(format!("host op input {v:?} missing")))
+        };
+        match op {
+            HostOp::Embed => {
+                // Engine performs embedding before run(); unused in graphs.
+                return Err(Error::Graph("Embed host op not graph-executable".into()));
+            }
+            HostOp::SplitKv => {
+                let kv = get(inputs[0], values)?;
+                let (k, v) = hostops::split_kv(&kv)?;
+                values[outputs[0].0] = Some(k);
+                values[outputs[1].0] = Some(v);
+            }
+            HostOp::ToHeads { heads, head_dim } => {
+                let x = get(inputs[0], values)?;
+                values[outputs[0].0] = Some(hostops::to_heads(&x, heads, head_dim)?);
+            }
+            HostOp::FromHeads => {
+                let x = get(inputs[0], values)?;
+                values[outputs[0].0] = Some(hostops::from_heads(&x)?);
+            }
+            HostOp::Halves => {
+                let x = get(inputs[0], values)?;
+                let (a, b) = hostops::halves(&x)?;
+                values[outputs[0].0] = Some(a);
+                values[outputs[1].0] = Some(b);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn bytes_to_tensor(spec: &KernelIoSpec, bytes: &[u8]) -> Result<Tensor> {
+    use crate::tensor::DType;
+    let n = spec.numel();
+    if bytes.len() < n * 4 {
+        return Err(Error::Shape(format!(
+            "buffer {} B too small for spec {:?}",
+            bytes.len(),
+            spec.shape
+        )));
+    }
+    match spec.dtype {
+        DType::F32 => {
+            let v: Vec<f32> = bytes[..n * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Tensor::f32(spec.shape.clone(), v)
+        }
+        DType::I32 => {
+            let v: Vec<i32> = bytes[..n * 4]
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Tensor::i32(spec.shape.clone(), v)
+        }
+    }
+}

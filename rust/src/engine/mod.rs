@@ -1,0 +1,12 @@
+//! The inference engine: executes FX decode graphs through the WebGPU
+//! substrate + PJRT runtime, autoregressively, with the paper's benchmark
+//! protocol (warmup -> timed runs -> mean/CI/CV) and overhead accounting.
+
+pub mod executor;
+pub mod inference;
+pub mod overhead;
+pub mod protocol;
+
+pub use executor::GraphExecutor;
+pub use inference::{Engine, EngineConfig, GenResult};
+pub use protocol::{run_protocol, ProtocolResult};

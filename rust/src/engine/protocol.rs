@@ -1,0 +1,56 @@
+//! The paper's benchmark protocol (§3.3): warmup runs (JIT/caches settle,
+//! CV < 5% post-warmup), then 10-30 timed runs; report mean ± std, 95% CI
+//! (t-distribution) and CV.
+
+use crate::stats::{summarize, Summary};
+use crate::Result;
+
+use super::inference::{Engine, GenResult};
+
+#[derive(Debug, Clone)]
+pub struct ProtocolResult {
+    pub tok_per_s: Summary,
+    pub ttft_ms: Summary,
+    pub runs: usize,
+    pub warmup: usize,
+    pub dispatches_per_step: u64,
+    pub all_tps: Vec<f64>,
+    pub all_ttft_ms: Vec<f64>,
+    pub real_wall_ns_total: u64,
+}
+
+/// Run `warmup` untimed + `runs` timed generations of `n_new` tokens.
+pub fn run_protocol(
+    engine: &mut Engine,
+    prompt: &[usize],
+    n_new: usize,
+    warmup: usize,
+    runs: usize,
+) -> Result<ProtocolResult> {
+    for i in 0..warmup {
+        engine.reseed(0xAAAA + i as u64);
+        let _ = engine.generate(prompt, n_new)?;
+    }
+    let mut tps = Vec::with_capacity(runs);
+    let mut ttfts = Vec::with_capacity(runs);
+    let mut dispatches = 0;
+    let mut wall = 0u64;
+    for i in 0..runs {
+        engine.reseed(0xBEEF + 7 * i as u64);
+        let r: GenResult = engine.generate(prompt, n_new)?;
+        tps.push(r.tok_per_s);
+        ttfts.push(r.ttft_ns as f64 / 1e6);
+        dispatches = r.dispatches_per_step;
+        wall += r.real_wall_ns;
+    }
+    Ok(ProtocolResult {
+        tok_per_s: summarize(&tps),
+        ttft_ms: summarize(&ttfts),
+        runs,
+        warmup,
+        dispatches_per_step: dispatches,
+        all_tps: tps,
+        all_ttft_ms: ttfts,
+        real_wall_ns_total: wall,
+    })
+}

@@ -1,0 +1,52 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    /// WebGPU-substrate validation failure (the paper's per-operation
+    /// validation cost exists because these checks run on every call).
+    #[error("validation error: {0}")]
+    Validation(String),
+
+    /// A resource id that does not exist (destroyed or never created).
+    #[error("invalid resource: {0}")]
+    InvalidResource(String),
+
+    /// Device limit exceeded (bind group count, buffer size, dispatch dims).
+    #[error("limit exceeded: {0}")]
+    LimitExceeded(String),
+
+    /// PJRT runtime failure (compile or execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact loading / manifest problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// FX graph construction or execution problems.
+    #[error("graph error: {0}")]
+    Graph(String),
+
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// JSON parse/serialize failure (in-tree parser, `report::json`).
+    #[error("json error: {0}")]
+    Json(String),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,166 @@
+//! FX graph census — reproduces Table 10 (and Appendix B) structurally.
+//!
+//! The compute categories are derived from the architecture: for L layers,
+//!
+//! ```text
+//! Linear        7L + 1      q,k,v,o,gate,up,down per layer + lm head
+//! Multiply      9L + 4      RMSNorm muls (4L+2), MLP gate mul (L),
+//!                           rotary muls (4L), rope-frequency + attention
+//!                           scale scalars (2)
+//! Add           6L + 1      residuals (2L), eps adds (2L+1), rotary (2L)
+//! SDPA          L
+//! SiLU          L
+//! RMS comps     6L + 3      pow/mean/rsqrt per norm (2L+1 norms)
+//! Concat        4L + 1      rotate-half (2L), KV cache (2L), rope table (1)
+//! Other         2L + 2      neg (2L), embedding, index
+//! ```
+//!
+//! At L = 24 (Qwen2.5-0.5B) these give exactly the published census:
+//! 169 / 220 / 145 / 24 / 24 / 147 / 97 / 50 = 876 compute ops.
+//! Shape ops are 10L + 1 = 241; placeholders/outputs 12L + 5 = 293.
+//! The `metadata` row (501 at L = 24, i.e. 21L - 3) is trace-level
+//! bookkeeping pinned to the published census — it carries no dispatches.
+
+use super::builder::GraphDims;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CategoryCounts {
+    pub linear: usize,
+    pub multiply: usize,
+    pub add: usize,
+    pub sdpa: usize,
+    pub silu: usize,
+    pub rms_components: usize,
+    pub concat: usize,
+    pub other: usize,
+}
+
+impl CategoryCounts {
+    pub fn total(&self) -> usize {
+        self.linear
+            + self.multiply
+            + self.add
+            + self.sdpa
+            + self.silu
+            + self.rms_components
+            + self.concat
+            + self.other
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Census {
+    pub layers: usize,
+    pub compute: CategoryCounts,
+    pub shape_ops: usize,
+    pub placeholders_outputs: usize,
+    pub metadata: usize,
+}
+
+impl Census {
+    pub fn for_dims(d: &GraphDims) -> Self {
+        let l = d.layers;
+        Census {
+            layers: l,
+            compute: CategoryCounts {
+                linear: 7 * l + 1,
+                multiply: 9 * l + 4,
+                add: 6 * l + 1,
+                sdpa: l,
+                silu: l,
+                rms_components: 6 * l + 3,
+                concat: 4 * l + 1,
+                other: 2 * l + 2,
+            },
+            shape_ops: 10 * l + 1,
+            placeholders_outputs: 12 * l + 5,
+            metadata: 21 * l - 3,
+        }
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        self.compute.total() + self.shape_ops + self.placeholders_outputs + self.metadata
+    }
+
+    /// Upper-bound dispatch count (no backend fusion): every compute op.
+    pub fn unfused_dispatches(&self) -> usize {
+        self.compute.total()
+    }
+
+    /// The paper's fusion arithmetic (Table 5): RMSNorm saves 5 per fused
+    /// norm across 2L norms (the final norm is excluded in the paper's
+    /// count of 240 = 24 x 2 x 5); MLP saves 2 per layer; K+V saves 1.
+    pub fn paper_fusion_savings(&self) -> FusionSavings {
+        let l = self.layers;
+        FusionSavings { rmsnorm: 10 * l, mlp: 2 * l, kv: l }
+    }
+
+    pub fn fused_dispatches(&self) -> usize {
+        self.unfused_dispatches() - self.paper_fusion_savings().total()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FusionSavings {
+    pub rmsnorm: usize,
+    pub mlp: usize,
+    pub kv: usize,
+}
+
+impl FusionSavings {
+    pub fn total(&self) -> usize {
+        self.rmsnorm + self.mlp + self.kv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen_05b_census_matches_table10() {
+        let c = Census::for_dims(&GraphDims::qwen25_05b());
+        assert_eq!(c.compute.linear, 169);
+        assert_eq!(c.compute.multiply, 220);
+        assert_eq!(c.compute.add, 145);
+        assert_eq!(c.compute.sdpa, 24);
+        assert_eq!(c.compute.silu, 24);
+        assert_eq!(c.compute.rms_components, 147);
+        assert_eq!(c.compute.concat, 97);
+        assert_eq!(c.compute.other, 50);
+        assert_eq!(c.compute.total(), 876);
+        assert_eq!(c.shape_ops, 241);
+        assert_eq!(c.placeholders_outputs, 293);
+        assert_eq!(c.metadata, 501);
+        assert_eq!(c.total_nodes(), 1911);
+    }
+
+    #[test]
+    fn qwen_05b_fusion_arithmetic_matches_table5() {
+        let c = Census::for_dims(&GraphDims::qwen25_05b());
+        let s = c.paper_fusion_savings();
+        assert_eq!(s.rmsnorm, 240);
+        assert_eq!(s.mlp, 48);
+        assert_eq!(s.kv, 24);
+        assert_eq!(s.total(), 312);
+        assert_eq!(c.fused_dispatches(), 564);
+    }
+
+    #[test]
+    fn qwen_15b_scales_with_layers() {
+        let c = Census::for_dims(&GraphDims::qwen25_15b());
+        assert_eq!(c.layers, 28);
+        assert_eq!(c.compute.total(), 1020);
+        // dispatch count scales ~1.17x with layers (Table 18)
+        let c05 = Census::for_dims(&GraphDims::qwen25_05b());
+        let ratio = c.fused_dispatches() as f64 / c05.fused_dispatches() as f64;
+        assert!((ratio - 28.0 / 24.0).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn rms_components_are_49_each_of_three() {
+        // "The 49 occurrences each of pow, mean, and rsqrt" (Appendix B).
+        let c = Census::for_dims(&GraphDims::qwen25_05b());
+        assert_eq!(c.compute.rms_components / 3, 49);
+    }
+}

@@ -1,0 +1,399 @@
+//! Fusion passes: real pattern-matching graph rewrites implementing the
+//! paper's three structural fusions (§6.1) plus rotary fusion.
+//!
+//! Each pass scans the node list for its dataflow pattern, checks that the
+//! intermediate values have no external uses, and splices in the fused
+//! kernel node. Passes are semantics-preserving: integration tests execute
+//! fused and unfused graphs and require allclose outputs (the paper's
+//! Appendix N property).
+
+use std::collections::HashMap;
+
+use super::graph::FxGraph;
+use super::node::{Category, HostOp, Node, NodeId, OpKind, ValueId};
+
+/// Count uses of every value across node inputs and graph outputs.
+fn use_counts(g: &FxGraph) -> HashMap<ValueId, usize> {
+    let mut uses: HashMap<ValueId, usize> = HashMap::new();
+    for n in &g.nodes {
+        for &v in &n.inputs {
+            *uses.entry(v).or_insert(0) += 1;
+        }
+    }
+    for &v in g.outputs.values() {
+        *uses.entry(v).or_insert(0) += 1;
+    }
+    uses
+}
+
+/// Map: value -> index of the node producing it.
+fn producers(g: &FxGraph) -> HashMap<ValueId, usize> {
+    let mut p = HashMap::new();
+    for (i, n) in g.nodes.iter().enumerate() {
+        for &v in &n.outputs {
+            p.insert(v, i);
+        }
+    }
+    p
+}
+
+fn kernel_name(n: &Node) -> &str {
+    match &n.op {
+        OpKind::Kernel(k) => k,
+        OpKind::Host(_) => "",
+    }
+}
+
+/// Rebuild the graph without the nodes in `dead`, inserting `replacements`
+/// (index -> nodes to emit *instead of* the node at that index).
+fn splice(g: &FxGraph, dead: &[bool], replacements: HashMap<usize, Vec<Node>>) -> FxGraph {
+    let mut out = FxGraph {
+        nodes: Vec::with_capacity(g.nodes.len()),
+        n_values: g.n_values,
+        inputs: g.inputs.clone(),
+        outputs: g.outputs.clone(),
+    };
+    for (i, n) in g.nodes.iter().enumerate() {
+        if let Some(reps) = replacements.get(&i) {
+            for r in reps {
+                let mut r = r.clone();
+                r.id = NodeId(out.nodes.len());
+                out.nodes.push(r);
+            }
+        }
+        if !dead[i] {
+            let mut n = n.clone();
+            n.id = NodeId(out.nodes.len());
+            out.nodes.push(n);
+        }
+    }
+    out
+}
+
+/// RMSNorm fusion: pow -> mean -> add_eps -> rsqrt -> mul_x -> mul_w
+/// becomes one `rmsnorm_{H}` dispatch (6 -> 1, the +44% fusion).
+pub fn fuse_rmsnorm(g: &FxGraph) -> FxGraph {
+    let uses = use_counts(g);
+    let prod = producers(g);
+    let mut dead = vec![false; g.nodes.len()];
+    let mut reps: HashMap<usize, Vec<Node>> = HashMap::new();
+
+    for (i, n) in g.nodes.iter().enumerate() {
+        if !kernel_name(n).starts_with("rms_mul_w_") || dead[i] {
+            continue;
+        }
+        // Walk the chain backwards from mul_w(xn, w).
+        let (xn, w) = (n.inputs[0], n.inputs[1]);
+        let Some(&i_mul_x) = prod.get(&xn) else { continue };
+        let mul_x = &g.nodes[i_mul_x];
+        if !kernel_name(mul_x).starts_with("rms_mul_x_") {
+            continue;
+        }
+        let (x, r) = (mul_x.inputs[0], mul_x.inputs[1]);
+        let Some(&i_rsqrt) = prod.get(&r) else { continue };
+        let rsqrt = &g.nodes[i_rsqrt];
+        if !kernel_name(rsqrt).starts_with("rms_rsqrt") {
+            continue;
+        }
+        let Some(&i_adde) = prod.get(&rsqrt.inputs[0]) else { continue };
+        let adde = &g.nodes[i_adde];
+        if !kernel_name(adde).starts_with("rms_add_eps") {
+            continue;
+        }
+        let Some(&i_mean) = prod.get(&adde.inputs[0]) else { continue };
+        let mean = &g.nodes[i_mean];
+        if !kernel_name(mean).starts_with("rms_mean_") {
+            continue;
+        }
+        let Some(&i_pow) = prod.get(&mean.inputs[0]) else { continue };
+        let pw = &g.nodes[i_pow];
+        if !kernel_name(pw).starts_with("rms_pow_") || pw.inputs[0] != x {
+            continue;
+        }
+        // Intermediates must have no external consumers.
+        let internals = [
+            (pw.outputs[0], 1),
+            (mean.outputs[0], 1),
+            (adde.outputs[0], 1),
+            (rsqrt.outputs[0], 1),
+            (mul_x.outputs[0], 1),
+        ];
+        if internals.iter().any(|(v, n)| uses.get(v).copied().unwrap_or(0) != *n) {
+            continue;
+        }
+        let hidden = kernel_name(pw).trim_start_matches("rms_pow_").to_string();
+        for idx in [i_pow, i_mean, i_adde, i_rsqrt, i_mul_x, i] {
+            dead[idx] = true;
+        }
+        reps.insert(
+            i,
+            vec![Node {
+                id: NodeId(0),
+                name: n.name.replace(".mul_w", ".rmsnorm_fused"),
+                op: OpKind::Kernel(format!("rmsnorm_{hidden}")),
+                category: Category::Other,
+                inputs: vec![x, w],
+                outputs: vec![n.outputs[0]],
+            }],
+        );
+    }
+    splice(g, &dead, reps)
+}
+
+/// MLP fusion: gate matmul + up matmul + silu + mul -> `gate_up_silu_*`
+/// (the paper's "gate+up+SiLU in one kernel").
+pub fn fuse_mlp(g: &FxGraph, suffix: &str) -> FxGraph {
+    let uses = use_counts(g);
+    let prod = producers(g);
+    let mut dead = vec![false; g.nodes.len()];
+    let mut reps: HashMap<usize, Vec<Node>> = HashMap::new();
+
+    for (i, n) in g.nodes.iter().enumerate() {
+        // Anchor on the gate mul: mul(silu(gate), up).
+        if !kernel_name(n).starts_with("mul_") || dead[i] || n.inputs.len() != 2 {
+            continue;
+        }
+        let Some(&i_silu) = prod.get(&n.inputs[0]) else { continue };
+        let silu = &g.nodes[i_silu];
+        if !kernel_name(silu).starts_with("silu_") {
+            continue;
+        }
+        let Some(&i_gate) = prod.get(&silu.inputs[0]) else { continue };
+        let Some(&i_up) = prod.get(&n.inputs[1]) else { continue };
+        let gate = &g.nodes[i_gate];
+        let up = &g.nodes[i_up];
+        if gate.category != Category::Linear || up.category != Category::Linear {
+            continue;
+        }
+        // Both projections must share the normed input.
+        if gate.inputs[0] != up.inputs[0] {
+            continue;
+        }
+        let internals = [gate.outputs[0], up.outputs[0], silu.outputs[0]];
+        if internals.iter().any(|v| uses.get(v).copied().unwrap_or(0) != 1) {
+            continue;
+        }
+        let (h2, wg, wu) = (gate.inputs[0], gate.inputs[1], up.inputs[1]);
+        for idx in [i_gate, i_up, i_silu, i] {
+            dead[idx] = true;
+        }
+        reps.insert(
+            i,
+            vec![Node {
+                id: NodeId(0),
+                name: n.name.replace(".gate_mul", ".gate_up_silu"),
+                op: OpKind::Kernel(format!("gate_up_silu_{suffix}")),
+                category: Category::Silu,
+                inputs: vec![h2, wg, wu],
+                outputs: vec![n.outputs[0]],
+            }],
+        );
+    }
+    splice(g, &dead, reps)
+}
+
+/// K+V fusion: two same-shape projections off the same input merge into one
+/// concatenated-weight matmul + a host split. Requires the fused weight to
+/// be available as the graph input `<layer>.wkv`.
+pub fn fuse_kv(g: &FxGraph) -> FxGraph {
+    let prod = producers(g);
+    let mut dead = vec![false; g.nodes.len()];
+    let mut reps: HashMap<usize, Vec<Node>> = HashMap::new();
+    let mut g2 = g.clone();
+
+    // Find (k_proj, v_proj) pairs by node name convention lX.k_proj/lX.v_proj.
+    let names: Vec<String> = g.nodes.iter().map(|n| n.name.clone()).collect();
+    for (i, name) in names.iter().enumerate() {
+        let Some(layer) = name.strip_suffix(".k_proj") else { continue };
+        let v_name = format!("{layer}.v_proj");
+        let Some(j) = names.iter().position(|m| m == &v_name) else { continue };
+        let (kn, vn) = (&g.nodes[i], &g.nodes[j]);
+        if kn.inputs[0] != vn.inputs[0] || dead[i] || dead[j] {
+            continue;
+        }
+        let Some(kname) = kn.kernel() else { continue };
+        // matmul_{H}_{KV} -> kv_fused_{H}_{2KV}
+        let parts: Vec<&str> = kname.split('_').collect();
+        if parts.len() != 3 || parts[0] != "matmul" {
+            continue;
+        }
+        let (h, kv): (usize, usize) = match (parts[1].parse(), parts[2].parse()) {
+            (Ok(a), Ok(b)) => (a, b),
+            _ => continue,
+        };
+        let _ = prod; // producers not needed beyond here; keep for clarity
+        let wkv = g2.input(&format!("{layer}.wkv"));
+        let fused_out = g2.new_value();
+        dead[i] = true;
+        dead[j] = true;
+        reps.insert(
+            i,
+            vec![
+                Node {
+                    id: NodeId(0),
+                    name: format!("{layer}.kv_proj"),
+                    op: OpKind::Kernel(format!("kv_fused_{h}_{}", 2 * kv)),
+                    category: Category::Linear,
+                    inputs: vec![kn.inputs[0], wkv],
+                    outputs: vec![fused_out],
+                },
+                Node {
+                    id: NodeId(0),
+                    name: format!("{layer}.kv_split"),
+                    op: OpKind::Host(HostOp::SplitKv),
+                    category: Category::Shape,
+                    inputs: vec![fused_out],
+                    outputs: vec![kn.outputs[0], vn.outputs[0]],
+                },
+            ],
+        );
+    }
+    let out = splice(&g2, &dead, reps);
+    out
+}
+
+/// Rotary fusion: neg + concat + mul_cos + mul_sin + add (5 dispatches)
+/// plus the host halves-split collapse into one `rotary_{h}_{d}` dispatch.
+pub fn fuse_rotary(g: &FxGraph) -> FxGraph {
+    let uses = use_counts(g);
+    let prod = producers(g);
+    let mut dead = vec![false; g.nodes.len()];
+    let mut reps: HashMap<usize, Vec<Node>> = HashMap::new();
+
+    for (i, n) in g.nodes.iter().enumerate() {
+        // Anchor on the final add: add(mul_cos(xh,cos), mul_sin(rot,sin)).
+        if !n.name.ends_with(".add") || dead[i] || !kernel_name(n).starts_with("add_") {
+            continue;
+        }
+        let (Some(&i_a), Some(&i_b)) = (prod.get(&n.inputs[0]), prod.get(&n.inputs[1]))
+        else {
+            continue;
+        };
+        let (a, b) = (&g.nodes[i_a], &g.nodes[i_b]);
+        if !kernel_name(a).starts_with("mul_vec_") || !kernel_name(b).starts_with("mul_vec_") {
+            continue;
+        }
+        let (xh, cos) = (a.inputs[0], a.inputs[1]);
+        let (rot, sin) = (b.inputs[0], b.inputs[1]);
+        let Some(&i_cat) = prod.get(&rot) else { continue };
+        let cat = &g.nodes[i_cat];
+        if !kernel_name(cat).starts_with("concat_") {
+            continue;
+        }
+        let Some(&i_neg) = prod.get(&cat.inputs[0]) else { continue };
+        let neg = &g.nodes[i_neg];
+        if !kernel_name(neg).starts_with("neg_") {
+            continue;
+        }
+        let Some(&i_halves) = prod.get(&neg.inputs[0]) else { continue };
+        let halves = &g.nodes[i_halves];
+        if !matches!(halves.op, OpKind::Host(HostOp::Halves)) || halves.inputs[0] != xh {
+            continue;
+        }
+        // x1 (second concat input) must be the halves' first output.
+        if cat.inputs[1] != halves.outputs[0] || neg.inputs[0] != halves.outputs[1] {
+            continue;
+        }
+        let internals = [neg.outputs[0], cat.outputs[0], a.outputs[0], b.outputs[0]];
+        if internals.iter().any(|v| uses.get(v).copied().unwrap_or(0) != 1) {
+            continue;
+        }
+        // mul_vec_{h}_{d} -> rotary_{h}_{d}
+        let dims = kernel_name(a).trim_start_matches("mul_vec_").to_string();
+        for idx in [i_halves, i_neg, i_cat, i_a, i_b, i] {
+            dead[idx] = true;
+        }
+        reps.insert(
+            i,
+            vec![Node {
+                id: NodeId(0),
+                name: n.name.replace(".add", ".rotary_fused"),
+                op: OpKind::Kernel(format!("rotary_{dims}")),
+                category: Category::Other,
+                inputs: vec![xh, cos, sin],
+                outputs: vec![n.outputs[0]],
+            }],
+        );
+    }
+    splice(g, &dead, reps)
+}
+
+/// Apply every pass (the fully-fused configuration).
+pub fn fuse_all(g: &FxGraph, suffix: &str) -> FxGraph {
+    fuse_rotary(&fuse_kv(&fuse_mlp(&fuse_rmsnorm(g), suffix)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fx::builder::{build_decode_graph, FusionConfig, GraphDims};
+
+    #[test]
+    fn rmsnorm_pass_saves_5_per_norm() {
+        let dims = GraphDims::qwen_tiny();
+        let g = build_decode_graph(&dims, FusionConfig::unfused());
+        let fused = fuse_rmsnorm(&g);
+        fused.validate().unwrap();
+        // 2L+1 = 9 norms, 5 saved each
+        assert_eq!(g.dispatch_count() - fused.dispatch_count(), 45);
+    }
+
+    #[test]
+    fn mlp_pass_saves_3_per_layer() {
+        let dims = GraphDims::qwen_tiny();
+        let g = build_decode_graph(&dims, FusionConfig::unfused());
+        let fused = fuse_mlp(&g, "tiny");
+        fused.validate().unwrap();
+        assert_eq!(g.dispatch_count() - fused.dispatch_count(), 3 * dims.layers);
+    }
+
+    #[test]
+    fn kv_pass_saves_1_per_layer() {
+        let dims = GraphDims::qwen_tiny();
+        let g = build_decode_graph(&dims, FusionConfig::unfused());
+        let fused = fuse_kv(&g);
+        fused.validate().unwrap();
+        assert_eq!(g.dispatch_count() - fused.dispatch_count(), dims.layers);
+        // the fused weight inputs appear
+        assert!(fused.inputs.contains_key("l0.wkv"));
+    }
+
+    #[test]
+    fn rotary_pass_saves_4_per_application() {
+        let dims = GraphDims::qwen_tiny();
+        let g = build_decode_graph(&dims, FusionConfig::unfused());
+        let fused = fuse_rotary(&g);
+        fused.validate().unwrap();
+        // 2 applications per layer, 5 kernel nodes -> 1
+        assert_eq!(g.dispatch_count() - fused.dispatch_count(), 8 * dims.layers);
+    }
+
+    #[test]
+    fn all_passes_reach_builder_fused_count() {
+        let dims = GraphDims::qwen_tiny();
+        let unfused = build_decode_graph(&dims, FusionConfig::unfused());
+        let by_passes = fuse_all(&unfused, "tiny");
+        by_passes.validate().unwrap();
+        let direct = build_decode_graph(&dims, FusionConfig::fused());
+        assert_eq!(by_passes.dispatch_count(), direct.dispatch_count());
+        // identical kernel usage
+        assert_eq!(by_passes.kernel_names(), direct.kernel_names());
+    }
+
+    #[test]
+    fn passes_are_idempotent() {
+        let dims = GraphDims::qwen_tiny();
+        let g = build_decode_graph(&dims, FusionConfig::unfused());
+        let once = fuse_rmsnorm(&g);
+        let twice = fuse_rmsnorm(&once);
+        assert_eq!(once.dispatch_count(), twice.dispatch_count());
+    }
+
+    #[test]
+    fn pass_on_fused_graph_is_noop() {
+        let dims = GraphDims::qwen_tiny();
+        let g = build_decode_graph(&dims, FusionConfig::fused());
+        let f = fuse_all(&g, "tiny");
+        assert_eq!(f.dispatch_count(), g.dispatch_count());
+    }
+}

@@ -1,0 +1,211 @@
+//! The FX graph container: SSA nodes in execution order, named ports.
+
+use std::collections::HashMap;
+
+use super::node::{Category, HostOp, Node, NodeId, OpKind, ValueId};
+use crate::{Error, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct FxGraph {
+    pub nodes: Vec<Node>,
+    pub n_values: usize,
+    /// External inputs (weights, caches, token embedding, pos scalars).
+    pub inputs: HashMap<String, ValueId>,
+    /// Named outputs (logits, updated caches).
+    pub outputs: HashMap<String, ValueId>,
+}
+
+impl FxGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn new_value(&mut self) -> ValueId {
+        let v = ValueId(self.n_values);
+        self.n_values += 1;
+        v
+    }
+
+    pub fn input(&mut self, name: &str) -> ValueId {
+        if let Some(&v) = self.inputs.get(name) {
+            return v;
+        }
+        let v = self.new_value();
+        self.inputs.insert(name.to_string(), v);
+        v
+    }
+
+    pub fn mark_output(&mut self, name: &str, v: ValueId) {
+        self.outputs.insert(name.to_string(), v);
+    }
+
+    /// Append a kernel node with one output value.
+    pub fn kernel(
+        &mut self,
+        name: &str,
+        kernel: &str,
+        category: Category,
+        inputs: Vec<ValueId>,
+    ) -> ValueId {
+        let out = self.new_value();
+        self.nodes.push(Node {
+            id: NodeId(self.nodes.len()),
+            name: name.to_string(),
+            op: OpKind::Kernel(kernel.to_string()),
+            category,
+            inputs,
+            outputs: vec![out],
+        });
+        out
+    }
+
+    /// Append a kernel node with N output values.
+    pub fn kernel_multi(
+        &mut self,
+        name: &str,
+        kernel: &str,
+        category: Category,
+        inputs: Vec<ValueId>,
+        n_out: usize,
+    ) -> Vec<ValueId> {
+        let outs: Vec<ValueId> = (0..n_out).map(|_| self.new_value()).collect();
+        self.nodes.push(Node {
+            id: NodeId(self.nodes.len()),
+            name: name.to_string(),
+            op: OpKind::Kernel(kernel.to_string()),
+            category,
+            inputs,
+            outputs: outs.clone(),
+        });
+        outs
+    }
+
+    /// Append a host (non-dispatch) node.
+    pub fn host(
+        &mut self,
+        name: &str,
+        op: HostOp,
+        category: Category,
+        inputs: Vec<ValueId>,
+        n_out: usize,
+    ) -> Vec<ValueId> {
+        let outs: Vec<ValueId> = (0..n_out).map(|_| self.new_value()).collect();
+        self.nodes.push(Node {
+            id: NodeId(self.nodes.len()),
+            name: name.to_string(),
+            op: OpKind::Host(op),
+            category,
+            inputs,
+            outputs: outs.clone(),
+        });
+        outs
+    }
+
+    /// Number of nodes that become WebGPU dispatches.
+    pub fn dispatch_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.dispatches()).count()
+    }
+
+    /// Per-category node counts.
+    pub fn category_counts(&self) -> HashMap<Category, usize> {
+        let mut m = HashMap::new();
+        for n in &self.nodes {
+            *m.entry(n.category).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// SSA validation: every node input must be an external input or a
+    /// value produced by an earlier node; every output defined exactly once.
+    pub fn validate(&self) -> Result<()> {
+        let mut defined = vec![false; self.n_values];
+        for &v in self.inputs.values() {
+            defined[v.0] = true;
+        }
+        for node in &self.nodes {
+            for &inp in &node.inputs {
+                if inp.0 >= self.n_values {
+                    return Err(Error::Graph(format!(
+                        "{}: input {:?} out of range",
+                        node.name, inp
+                    )));
+                }
+                if !defined[inp.0] {
+                    return Err(Error::Graph(format!(
+                        "{}: input {:?} used before definition",
+                        node.name, inp
+                    )));
+                }
+            }
+            for &out in &node.outputs {
+                if defined[out.0] {
+                    return Err(Error::Graph(format!(
+                        "{}: output {:?} defined twice",
+                        node.name, out
+                    )));
+                }
+                defined[out.0] = true;
+            }
+        }
+        for (name, &v) in &self.outputs {
+            if !defined[v.0] {
+                return Err(Error::Graph(format!("output '{name}' never produced")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Kernel names used by this graph (for registry preloading).
+    pub fn kernel_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .nodes
+            .iter()
+            .filter_map(|n| n.kernel().map(str::to_string))
+            .collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ssa_validation_catches_use_before_def() {
+        let mut g = FxGraph::new();
+        let dangling = g.new_value(); // never produced, not an input
+        g.kernel("bad", "k", Category::Add, vec![dangling]);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn ssa_validation_accepts_chain() {
+        let mut g = FxGraph::new();
+        let x = g.input("x");
+        let y = g.kernel("a", "k1", Category::Add, vec![x]);
+        let z = g.kernel("b", "k2", Category::Multiply, vec![y, x]);
+        g.mark_output("out", z);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.dispatch_count(), 2);
+    }
+
+    #[test]
+    fn host_nodes_do_not_dispatch() {
+        let mut g = FxGraph::new();
+        let x = g.input("x");
+        g.host("r", HostOp::FromHeads, Category::Shape, vec![x], 1);
+        assert_eq!(g.dispatch_count(), 0);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn kernel_names_deduped() {
+        let mut g = FxGraph::new();
+        let x = g.input("x");
+        let y = g.kernel("a", "same", Category::Add, vec![x]);
+        g.kernel("b", "same", Category::Add, vec![y]);
+        assert_eq!(g.kernel_names(), vec!["same".to_string()]);
+    }
+}

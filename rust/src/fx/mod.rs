@@ -1,0 +1,28 @@
+//! FX-style op graphs: the torch.compile IR analogue torch-webgpu consumes.
+//!
+//! Two roles:
+//!
+//! 1. **Executable graphs** (`builder`): the per-decode-step op stream for a
+//!    config whose kernels exist in `artifacts/` (qwen-tiny). Each compute
+//!    node names an AOT kernel and becomes one WebGPU dispatch; shape ops
+//!    are host ops and dispatch nothing (the paper's 241-shape-op point).
+//! 2. **Census** (`census`): the structural node count of the Qwen2.5-0.5B /
+//!    1.5B graphs — reproduces Table 10's 876 compute ops / 1,911 total
+//!    nodes, which every overhead table depends on.
+//!
+//! `fusion` implements the paper's three fusion passes as real
+//! pattern-matching graph rewrites (RMSNorm 6->1, MLP gate+up+silu -> 1,
+//! K+V -> 1) plus the rotary fusion, with the paper's dispatch arithmetic
+//! exposed separately for the tables.
+
+pub mod builder;
+pub mod census;
+pub mod fusion;
+pub mod graph;
+pub mod node;
+pub mod workloads;
+
+pub use builder::{build_decode_graph, FusionConfig, GraphDims};
+pub use census::{Census, CategoryCounts};
+pub use graph::FxGraph;
+pub use node::{Category, HostOp, Node, NodeId, ValueId};

@@ -1,0 +1,81 @@
+//! Graph nodes: SSA ops over value ids.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ValueId(pub usize);
+
+/// FX census category (Table 10's rows plus the non-compute classes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Linear projections (matmul).
+    Linear,
+    Multiply,
+    Add,
+    Sdpa,
+    Silu,
+    /// pow / mean / rsqrt (the RMSNorm decomposition's non-mul/add pieces).
+    RmsComponent,
+    /// KV-cache appends + rotate-half concats.
+    Concat,
+    /// neg, embedding, index, trig — the census's "Other" bucket.
+    Other,
+    /// view/reshape/slice — no dispatch required.
+    Shape,
+}
+
+impl Category {
+    /// Compute categories potentially become WebGPU dispatches.
+    pub fn is_compute(self) -> bool {
+        !matches!(self, Category::Shape)
+    }
+}
+
+/// Host-side (non-dispatch) operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostOp {
+    /// table[token] -> [1, H]
+    Embed,
+    /// [1, 2k] -> ([1, k], [1, k])
+    SplitKv,
+    /// [1, h*d] -> [h, d]
+    ToHeads { heads: usize, head_dim: usize },
+    /// [h, d] -> [1, h*d]
+    FromHeads,
+    /// [h, 2k] -> ([h, k], [h, k])
+    Halves,
+}
+
+/// The executable body of a node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// One WebGPU dispatch running the named AOT kernel.
+    Kernel(String),
+    /// Host/metadata op — no dispatch.
+    Host(HostOp),
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    /// Human-readable name, e.g. "l2.norm1.pow".
+    pub name: String,
+    pub op: OpKind,
+    pub category: Category,
+    pub inputs: Vec<ValueId>,
+    pub outputs: Vec<ValueId>,
+}
+
+impl Node {
+    pub fn dispatches(&self) -> bool {
+        matches!(self.op, OpKind::Kernel(_))
+    }
+
+    pub fn kernel(&self) -> Option<&str> {
+        match &self.op {
+            OpKind::Kernel(k) => Some(k),
+            OpKind::Host(_) => None,
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Non-LLM dispatch workloads: CNN / ViT / U-Net op streams (the paper's
+//! exp9/exp11/exp13 — Table 1's footnote: "all show 24-58 us, consistent
+//! with LLM results").
+//!
+//! Dispatch overhead is architecture-independent: these generators produce
+//! each architecture's per-forward dispatch census so the profiler can
+//! replay them through any implementation profile and confirm the same
+//! per-dispatch band the LLM stream shows.
+
+/// One synthetic workload: name + dispatches per forward pass, by category.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: &'static str,
+    /// (op kind, dispatches per forward).
+    pub ops: Vec<(&'static str, usize)>,
+}
+
+impl Workload {
+    pub fn total_dispatches(&self) -> usize {
+        self.ops.iter().map(|(_, n)| n).sum()
+    }
+
+    /// ResNet-50-shaped stream: 53 convs + batchnorm + relu + adds.
+    pub fn cnn_resnet50() -> Self {
+        Workload {
+            name: "CNN (ResNet-50)",
+            ops: vec![
+                ("conv", 53),
+                ("batchnorm", 53),
+                ("relu", 49),
+                ("residual_add", 16),
+                ("pool", 2),
+                ("fc", 1),
+            ],
+        }
+    }
+
+    /// ViT-B/16-shaped stream: 12 encoder blocks, unfused norms/attention.
+    pub fn vit_b16() -> Self {
+        Workload {
+            name: "ViT-B/16",
+            ops: vec![
+                ("patch_embed", 1),
+                ("layernorm", 25),    // 2 per block + final
+                ("qkv_proj", 36),     // 3 per block
+                ("attention", 12),
+                ("attn_out_proj", 12),
+                ("mlp_fc", 24),       // 2 per block
+                ("gelu", 12),
+                ("residual_add", 24),
+                ("head", 1),
+            ],
+        }
+    }
+
+    /// U-Net-shaped stream: 4 down + 4 up stages, double convs + skips.
+    pub fn unet() -> Self {
+        Workload {
+            name: "U-Net",
+            ops: vec![
+                ("conv", 23),
+                ("batchnorm", 23),
+                ("relu", 23),
+                ("downsample", 4),
+                ("upsample", 4),
+                ("skip_concat", 4),
+                ("head", 1),
+            ],
+        }
+    }
+
+    pub fn all() -> Vec<Workload> {
+        vec![Self::cnn_resnet50(), Self::vit_b16(), Self::unet()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::measure_dispatch_overhead;
+    use crate::webgpu::ImplementationProfile;
+
+    #[test]
+    fn dispatch_counts_are_architecture_shaped() {
+        assert_eq!(Workload::cnn_resnet50().total_dispatches(), 174);
+        assert_eq!(Workload::vit_b16().total_dispatches(), 147);
+        assert_eq!(Workload::unet().total_dispatches(), 82);
+    }
+
+    #[test]
+    fn per_dispatch_cost_is_architecture_independent() {
+        // The paper's footnote: CNN/ViT/U-Net dispatch overhead sits in the
+        // same 24-58 us band as the LLM stream. Replay each workload's
+        // dispatch count through the desktop/laptop profiles.
+        for wl in Workload::all() {
+            for (profile, lo, hi) in [
+                (ImplementationProfile::dawn_vulkan_rtx5090(), 20.0, 30.0),
+                (ImplementationProfile::wgpu_vulkan_rtx5090(), 30.0, 42.0),
+                (ImplementationProfile::chrome_d3d12_rtx2000(), 50.0, 65.0),
+            ] {
+                let m = measure_dispatch_overhead(profile, wl.total_dispatches()).unwrap();
+                assert!(
+                    m.sequential_us > lo && m.sequential_us < hi,
+                    "{}: {} us outside [{lo}, {hi}]",
+                    wl.name,
+                    m.sequential_us
+                );
+            }
+        }
+    }
+}

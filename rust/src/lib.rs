@@ -1,0 +1,36 @@
+//! # wdb — WebGPU dispatch-overhead characterization stack
+//!
+//! Reproduction of *"Characterizing WebGPU Dispatch Overhead for LLM
+//! Inference Across Four GPU Vendors, Three Backends, and Three Browsers"*
+//! (Maczan, 2026) as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **L1** (build time): Pallas kernels in `python/compile/kernels/`,
+//!   AOT-lowered to HLO text artifacts.
+//! - **L2** (build time): the Qwen2.5-architecture forward pass in JAX
+//!   (`python/compile/model.py`), fused and unfused op flows.
+//! - **L3** (this crate): the coordinator — a WebGPU-shaped dispatch
+//!   substrate with real per-call validation and calibrated per-backend
+//!   cost profiles, a PJRT runtime that executes the AOT kernels, an
+//!   FX-style op graph with the paper's fusion passes, an autoregressive
+//!   inference engine, and the benchmark harness that regenerates every
+//!   table in the paper.
+//!
+//! Python never runs on the request path: after `make artifacts` the `wdb`
+//! binary is self-contained.
+
+pub mod baselines;
+pub mod cli;
+pub mod crossover;
+pub mod engine;
+pub mod error;
+pub mod fx;
+pub mod model;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod tables;
+pub mod tensor;
+pub mod webgpu;
+
+pub use error::{Error, Result};

@@ -1,0 +1,10 @@
+//! `wdb` — the L3 coordinator binary.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = wdb::cli::parse_args(&argv);
+    if let Err(e) = wdb::cli::run(args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Model-side utilities: deterministic synthetic weights, the byte-level
+//! tokenizer, and the seeded RNG shared by weight init and tests.
+
+pub mod rng;
+pub mod tokenizer;
+pub mod weights;
+
+pub use rng::XorShiftRng;
+pub use tokenizer::ByteTokenizer;
+pub use weights::ModelWeights;

@@ -1,0 +1,66 @@
+//! Byte-level toy tokenizer.
+//!
+//! The paper's throughput characterization is content-independent (synthetic
+//! weights produce arbitrary-but-deterministic token streams); what matters
+//! is the *op stream per token*. A byte tokenizer keeps prompts real
+//! ("The capital of France is", §3.3) without shipping a BPE vocab.
+
+#[derive(Debug, Clone)]
+pub struct ByteTokenizer {
+    pub vocab: usize,
+}
+
+impl ByteTokenizer {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab >= 256, "byte tokenizer needs vocab >= 256, got {vocab}");
+        ByteTokenizer { vocab }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<usize> {
+        text.bytes().map(|b| b as usize).collect()
+    }
+
+    pub fn decode(&self, tokens: &[usize]) -> String {
+        tokens
+            .iter()
+            .map(|&t| if t < 256 { t as u8 as char } else { '\u{fffd}' })
+            .collect()
+    }
+
+    /// The paper's benchmark prompt.
+    pub fn paper_prompt(&self) -> Vec<usize> {
+        // 5-token analogue: first 5 bytes of the paper's prompt.
+        self.encode("The capital of France is")[..5].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new(512);
+        let ids = t.encode("hello");
+        assert_eq!(ids, vec![104, 101, 108, 108, 111]);
+        assert_eq!(t.decode(&ids), "hello");
+    }
+
+    #[test]
+    fn paper_prompt_is_five_tokens() {
+        let t = ByteTokenizer::new(512);
+        assert_eq!(t.paper_prompt().len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "vocab >= 256")]
+    fn rejects_tiny_vocab() {
+        ByteTokenizer::new(100);
+    }
+
+    #[test]
+    fn out_of_range_decodes_replacement() {
+        let t = ByteTokenizer::new(512);
+        assert_eq!(t.decode(&[400]), "\u{fffd}");
+    }
+}

@@ -1,0 +1,162 @@
+//! Deterministic synthetic weights for a Qwen2.5-architecture config.
+//!
+//! The paper's overhead characterization is weight-independent ("dtype-
+//! independent and API-inherent", §11); we only need *some* deterministic
+//! float32 weights so the decode loop produces a stable token stream and
+//! the fused/unfused flows can be compared bit-for-bit. Scales follow the
+//! usual 1/sqrt(fan_in) so activations stay well-conditioned over layers.
+
+use std::collections::HashMap;
+
+use super::rng::XorShiftRng;
+use crate::fx::builder::GraphDims;
+use crate::tensor::Tensor;
+
+#[derive(Debug)]
+pub struct ModelWeights {
+    /// Graph input name -> tensor (everything `build_decode_graph` expects
+    /// except the per-step x/pos/caches).
+    pub by_name: HashMap<String, Tensor>,
+    /// Token embedding table [V, H] (host-side gather source).
+    pub embedding: Tensor,
+    /// Rope inverse frequencies [D/2].
+    pub inv_freq: Tensor,
+    pub dims: GraphDims,
+}
+
+fn normal(rng: &mut XorShiftRng, shape: Vec<usize>, scale: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::f32(shape, rng.normal_vec_f32(n, scale)).expect("shape/data agree")
+}
+
+fn norm_weight(rng: &mut XorShiftRng, h: usize) -> Tensor {
+    let data: Vec<f32> = (0..h)
+        .map(|_| 0.5 + rng.uniform_in(0.0, 1.0) as f32)
+        .collect();
+    Tensor::f32(vec![h], data).expect("shape/data agree")
+}
+
+impl ModelWeights {
+    pub fn synthesize(dims: &GraphDims, seed: u64) -> Self {
+        let mut rng = XorShiftRng::new(seed);
+        let (h, qd, kv, inter, v) =
+            (dims.hidden, dims.q_dim(), dims.kv_dim(), dims.intermediate, dims.vocab);
+        let s_h = 1.0 / (h as f32).sqrt();
+        let s_i = 1.0 / (inter as f32).sqrt();
+        let s_q = 1.0 / (qd as f32).sqrt();
+
+        let mut by_name = HashMap::new();
+        for l in 0..dims.layers {
+            let p = format!("l{l}");
+            by_name.insert(format!("{p}.norm1"), norm_weight(&mut rng, h));
+            by_name.insert(format!("{p}.wq"), normal(&mut rng, vec![h, qd], s_h));
+            let wk = normal(&mut rng, vec![h, kv], s_h);
+            let wv = normal(&mut rng, vec![h, kv], s_h);
+            // Fused K+V weight = column concat (must match exactly so the
+            // fused and unfused flows agree bit-for-bit).
+            let mut wkv_data = Vec::with_capacity(h * 2 * kv);
+            let wk_d = wk.as_f32().unwrap();
+            let wv_d = wv.as_f32().unwrap();
+            for r in 0..h {
+                wkv_data.extend_from_slice(&wk_d[r * kv..(r + 1) * kv]);
+                wkv_data.extend_from_slice(&wv_d[r * kv..(r + 1) * kv]);
+            }
+            by_name.insert(
+                format!("{p}.wkv"),
+                Tensor::f32(vec![h, 2 * kv], wkv_data).unwrap(),
+            );
+            by_name.insert(format!("{p}.wk"), wk);
+            by_name.insert(format!("{p}.wv"), wv);
+            by_name.insert(format!("{p}.wo"), normal(&mut rng, vec![qd, h], s_q));
+            by_name.insert(format!("{p}.norm2"), norm_weight(&mut rng, h));
+            by_name.insert(format!("{p}.wg"), normal(&mut rng, vec![h, inter], s_h));
+            by_name.insert(format!("{p}.wu"), normal(&mut rng, vec![h, inter], s_h));
+            by_name.insert(format!("{p}.wd"), normal(&mut rng, vec![inter, h], s_i));
+        }
+        by_name.insert("norm_f".into(), norm_weight(&mut rng, h));
+        by_name.insert("w_lm".into(), normal(&mut rng, vec![h, v], s_h));
+
+        let embedding = normal(&mut rng, vec![v, h], 1.0);
+        let half = dims.head_dim / 2;
+        let theta: f64 = 10_000.0;
+        let inv: Vec<f32> = (0..half)
+            .map(|i| (1.0 / theta.powf(i as f64 / half as f64)) as f32)
+            .collect();
+        let inv_freq = Tensor::f32(vec![half], inv).unwrap();
+
+        ModelWeights { by_name, embedding, inv_freq, dims: *dims }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.by_name.get(name)
+    }
+
+    /// Total parameter count (sanity vs the config's nominal size).
+    pub fn param_count(&self) -> usize {
+        self.by_name.values().map(Tensor::numel).sum::<usize>() + self.embedding.numel()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_calls() {
+        let dims = GraphDims::qwen_tiny();
+        let a = ModelWeights::synthesize(&dims, 42);
+        let b = ModelWeights::synthesize(&dims, 42);
+        assert_eq!(
+            a.get("l0.wq").unwrap().as_f32().unwrap(),
+            b.get("l0.wq").unwrap().as_f32().unwrap()
+        );
+        let c = ModelWeights::synthesize(&dims, 43);
+        assert_ne!(
+            a.get("l0.wq").unwrap().as_f32().unwrap(),
+            c.get("l0.wq").unwrap().as_f32().unwrap()
+        );
+    }
+
+    #[test]
+    fn wkv_is_column_concat_of_wk_wv() {
+        let dims = GraphDims::qwen_tiny();
+        let w = ModelWeights::synthesize(&dims, 1);
+        let (h, kv) = (dims.hidden, dims.kv_dim());
+        let wk = w.get("l0.wk").unwrap().as_f32().unwrap();
+        let wv = w.get("l0.wv").unwrap().as_f32().unwrap();
+        let wkv = w.get("l0.wkv").unwrap().as_f32().unwrap();
+        for r in 0..h {
+            assert_eq!(&wkv[r * 2 * kv..r * 2 * kv + kv], &wk[r * kv..(r + 1) * kv]);
+            assert_eq!(&wkv[r * 2 * kv + kv..(r + 1) * 2 * kv], &wv[r * kv..(r + 1) * kv]);
+        }
+    }
+
+    #[test]
+    fn has_all_graph_inputs() {
+        use crate::fx::builder::{build_decode_graph, FusionConfig};
+        let dims = GraphDims::qwen_tiny();
+        let w = ModelWeights::synthesize(&dims, 7);
+        for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+            let g = build_decode_graph(&dims, fusion);
+            for name in g.inputs.keys() {
+                let step_input = name == "x"
+                    || name.starts_with("pos")
+                    || name == "inv_freq"
+                    || name.ends_with("cache");
+                assert!(
+                    step_input || w.get(name).is_some(),
+                    "missing weight for graph input '{name}'"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_param_count_plausible() {
+        let dims = GraphDims::qwen_tiny();
+        let w = ModelWeights::synthesize(&dims, 7);
+        // ~4 layers of (64x64 + 64x64 + 64x64 + 2*64x176 + 176x64) + embeds
+        let n = w.param_count();
+        assert!(n > 200_000 && n < 400_000, "param count {n}");
+    }
+}

@@ -1,0 +1,183 @@
+//! Dispatch profiler — the paper's C++ `dispatch_profiler.cpp` analogue.
+//!
+//! Two measurement modes on a trivial kernel:
+//!
+//! - **single-op**: submit one dispatch, then synchronize (`poll_wait`),
+//!   N times. This conflates sync into every dispatch — the naive
+//!   methodology the paper shows overestimates by ~20x.
+//! - **sequential**: submit N dispatches, synchronize once at the end —
+//!   the paper's methodology, isolating true per-dispatch cost.
+//!
+//! Plus the per-phase timeline breakdown (Table 20).
+
+use crate::webgpu::queue::{kernel_layout, run_kernel_dispatch};
+use crate::webgpu::{
+    BufferDesc, BufferUsage, Device, ImplementationProfile, KernelIoSpec,
+    NullRunner, PhaseTimeline, ShaderModuleDesc, DISPATCH_PHASES,
+};
+use crate::tensor::DType;
+use crate::Result;
+
+/// Result of one dispatch-overhead measurement.
+#[derive(Debug, Clone)]
+pub struct DispatchMeasurement {
+    pub profile_name: String,
+    pub n_dispatches: usize,
+    /// Virtual per-dispatch cost, single-op mode (us).
+    pub single_op_us: f64,
+    /// Virtual per-dispatch cost, sequential mode (us).
+    pub sequential_us: f64,
+    /// Real (host wall) per-dispatch cost of our substrate, sequential (us).
+    pub real_sequential_us: f64,
+    /// Per-phase virtual breakdown from the sequential run.
+    pub timeline: PhaseTimeline,
+}
+
+impl DispatchMeasurement {
+    pub fn overestimate_ratio(&self) -> f64 {
+        self.single_op_us / self.sequential_us
+    }
+}
+
+/// Run both measurement modes for `profile` with `n` dispatches each.
+/// Uses a NullRunner (trivial kernel), matching the paper's microbenchmark.
+pub fn measure_dispatch_overhead(
+    profile: ImplementationProfile,
+    n: usize,
+) -> Result<DispatchMeasurement> {
+    let name = profile.name.to_string();
+
+    // --- sequential: n dispatches, one sync at the end ---
+    let mut dev = Device::new(profile.clone());
+    let (pipeline, layout, in_buf, out_buf) = setup_trivial(&mut dev)?;
+    let runner = NullRunner;
+    let t0 = dev.clock.now_ns();
+    let w0 = std::time::Instant::now();
+    for _ in 0..n {
+        run_kernel_dispatch(&mut dev, pipeline, layout, &[in_buf], &[out_buf], (1, 1, 1), &runner)?;
+    }
+    dev.poll_wait();
+    let seq_total = dev.clock.now_ns() - t0;
+    let real_seq = w0.elapsed().as_nanos() as u64;
+    // Subtract the single trailing sync to isolate dispatch cost.
+    let seq_sync = dev.timeline.sync_virtual_ns;
+    let sequential_us = (seq_total.saturating_sub(seq_sync)) as f64 / n as f64 / 1e3;
+    let timeline = dev.timeline.clone();
+
+    // --- single-op: sync after every dispatch ---
+    let mut dev = Device::new(profile);
+    let (pipeline, layout, in_buf, out_buf) = setup_trivial(&mut dev)?;
+    let t0 = dev.clock.now_ns();
+    for _ in 0..n {
+        run_kernel_dispatch(&mut dev, pipeline, layout, &[in_buf], &[out_buf], (1, 1, 1), &runner)?;
+        dev.poll_wait();
+    }
+    let single_total = dev.clock.now_ns() - t0;
+    let single_op_us = single_total as f64 / n as f64 / 1e3;
+
+    Ok(DispatchMeasurement {
+        profile_name: name,
+        n_dispatches: n,
+        single_op_us,
+        sequential_us,
+        real_sequential_us: real_seq as f64 / n as f64 / 1e3,
+        timeline,
+    })
+}
+
+fn setup_trivial(
+    dev: &mut Device,
+) -> Result<(
+    crate::webgpu::ComputePipelineId,
+    crate::webgpu::BindGroupLayoutId,
+    crate::webgpu::BufferId,
+    crate::webgpu::BufferId,
+)> {
+    let spec = KernelIoSpec { shape: vec![64], dtype: DType::F32 };
+    let module = dev.create_shader_module(ShaderModuleDesc {
+        label: "trivial".into(),
+        kernel: "trivial".into(),
+        inputs: vec![spec.clone()],
+        outputs: vec![spec],
+    })?;
+    let layout = kernel_layout(dev, "trivial", 1, 1)?;
+    let pipeline = dev.create_compute_pipeline("trivial", module, layout)?;
+    let in_buf = dev.create_buffer(BufferDesc {
+        label: "in".into(),
+        size: 256,
+        usage: BufferUsage::STORAGE | BufferUsage::COPY_DST,
+    })?;
+    let out_buf = dev.create_buffer(BufferDesc {
+        label: "out".into(),
+        size: 256,
+        usage: BufferUsage::STORAGE | BufferUsage::MAP_READ,
+    })?;
+    Ok((pipeline, layout, in_buf, out_buf))
+}
+
+/// Per-phase rows for Table 20 (name, total us, per-dispatch us).
+pub fn timeline_rows(t: &PhaseTimeline) -> Vec<(String, f64, f64)> {
+    let n = t.dispatches().max(1) as f64;
+    DISPATCH_PHASES
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            let total_us = t.virtual_ns[i] as f64 / 1e3;
+            (name.to_string(), total_us, total_us / n)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_matches_profile_calibration() {
+        let p = ImplementationProfile::dawn_vulkan_rtx5090();
+        let m = measure_dispatch_overhead(p, 200).unwrap();
+        assert!((m.sequential_us - 23.8).abs() < 1.5, "seq {}", m.sequential_us);
+        assert!((m.single_op_us - 496.8).abs() < 25.0, "single {}", m.single_op_us);
+        let r = m.overestimate_ratio();
+        assert!((15.0..30.0).contains(&r), "ratio {r}");
+    }
+
+    #[test]
+    fn wgpu_has_no_conflation() {
+        let p = ImplementationProfile::wgpu_vulkan_rtx5090();
+        let m = measure_dispatch_overhead(p, 100).unwrap();
+        assert!((m.overestimate_ratio() - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn firefox_floor_visible_in_sequential() {
+        let p = ImplementationProfile::firefox_metal_m2();
+        let m = measure_dispatch_overhead(p, 50).unwrap();
+        assert!((m.sequential_us - 1038.7).abs() < 60.0, "{}", m.sequential_us);
+    }
+
+    #[test]
+    fn timeline_submit_dominates() {
+        let p = ImplementationProfile::wgpu_vulkan_rtx5090();
+        let m = measure_dispatch_overhead(p, 100).unwrap();
+        let rows = timeline_rows(&m.timeline);
+        let submit = rows.iter().find(|(n, _, _)| n == "submit").unwrap();
+        let total: f64 = rows.iter().map(|(_, t, _)| t).sum();
+        let frac = submit.1 / total;
+        assert!((0.3..0.5).contains(&frac), "submit fraction {frac}");
+    }
+
+    #[test]
+    fn real_substrate_overhead_is_small() {
+        // Our real validation/encoding work should be well under the
+        // calibrated virtual costs (DESIGN.md §7 self-consistency check).
+        let p = ImplementationProfile::dawn_vulkan_rtx5090();
+        let m = measure_dispatch_overhead(p, 200).unwrap();
+        assert!(
+            m.real_sequential_us < m.sequential_us,
+            "substrate real cost {} us exceeds simulated {} us",
+            m.real_sequential_us,
+            m.sequential_us
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Reporting: in-tree JSON, markdown table rendering, results persistence.
+
+pub mod json;
+pub mod table;
+
+pub use table::TableDoc;
+
+use std::path::Path;
+
+use crate::Result;
+
+/// Write a JSON value under `results/<name>.json` (mirrors the paper repo's
+/// `benchmarks/results_*.json` layout).
+pub fn write_results(dir: &Path, name: &str, v: &json::Value) -> Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, json::to_string_pretty(v))?;
+    Ok(path)
+}

@@ -1,0 +1,141 @@
+//! Markdown table rendering — every regenerated paper table goes through
+//! this so `wdb table N` output is diffable and consistent.
+
+#[derive(Debug, Clone)]
+pub struct TableDoc {
+    pub id: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl TableDoc {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Self {
+        TableDoc {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.columns.len(),
+            "table {}: row width {} != {} columns",
+            self.id,
+            cells.len(),
+            self.columns.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// A full-width separator row (the paper groups rows within tables).
+    pub fn section(&mut self, label: &str) -> &mut Self {
+        let mut cells = vec![format!("**{label}**")];
+        cells.extend(std::iter::repeat(String::new()).take(self.columns.len() - 1));
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn note(&mut self, text: &str) -> &mut Self {
+        self.notes.push(text.to_string());
+        self
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = format!("### {}: {}\n\n", self.id, self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("\n> {n}\n"));
+        }
+        out
+    }
+}
+
+/// Format helpers used across tables.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn us(x_ns: f64) -> String {
+    format!("{:.1}", x_ns / 1e3)
+}
+
+pub fn ms(x_ns: f64) -> String {
+    format!("{:.1}", x_ns / 1e6)
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+pub fn ratio(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_markdown() {
+        let mut t = TableDoc::new("T0", "demo", &["a", "b"]);
+        t.row(vec!["x".into(), "1".into()]);
+        t.section("group");
+        t.row(vec!["yyyy".into(), "2".into()]);
+        t.note("a note");
+        let md = t.to_markdown();
+        assert!(md.contains("### T0: demo"));
+        assert!(md.contains("| yyyy"));
+        assert!(md.contains("> a note"));
+        // column alignment: header and rows share widths
+        assert!(md.lines().filter(|l| l.starts_with('|')).count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = TableDoc::new("T0", "demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(us(23_800.0), "23.8");
+        assert_eq!(ms(41_600_000.0), "41.6");
+        assert_eq!(ratio(1.4), "1.40x");
+        assert_eq!(pct(0.53), "53.0%");
+    }
+}

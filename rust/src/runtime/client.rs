@@ -1,0 +1,146 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client with a compile cache.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::tensor::{DType, Tensor};
+use crate::{Error, Result};
+
+/// PJRT client + per-kernel compiled-executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    /// kernel name -> compiled executable (compile once, execute many).
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Cumulative compile time (reported in EXPERIMENTS.md; compile happens
+    /// off the request path, at engine startup or first use).
+    pub compile_ns: RefCell<u64>,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime {
+            client,
+            cache: RefCell::new(HashMap::new()),
+            compile_ns: RefCell::new(0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text file and cache under `name`.
+    pub fn load_hlo_text(&self, name: &str, path: &Path) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            Error::Artifact(format!("parse {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| {
+            Error::Runtime(format!("compile {name}: {e}"))
+        })?;
+        *self.compile_ns.borrow_mut() += t0.elapsed().as_nanos() as u64;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.cache.borrow().contains_key(name)
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute a cached kernel. Inputs are host tensors; outputs come back
+    /// as host tensors (the AOT modules are lowered with return_tuple=True).
+    /// Returns (outputs, wall ns of the execute+readback).
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<(Vec<Tensor>, u64)> {
+        let cache = self.cache.borrow();
+        let exe = cache
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("kernel '{name}' not loaded")))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("readback {name}: {e}")))?;
+        let parts = root
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?;
+        let ns = t0.elapsed().as_nanos() as u64;
+        let outs = parts
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<Vec<_>>>()?;
+        Ok((outs, ns))
+    }
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let ty = match t.dtype() {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, t.data.as_bytes())
+        .map_err(|e| Error::Xla(e.to_string()))
+}
+
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l
+        .array_shape()
+        .map_err(|e| Error::Xla(e.to_string()))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let v = l.to_vec::<f32>().map_err(|e| Error::Xla(e.to_string()))?;
+            Tensor::f32(dims, v)
+        }
+        xla::ElementType::S32 => {
+            let v = l.to_vec::<i32>().map_err(|e| Error::Xla(e.to_string()))?;
+            Tensor::i32(dims, v)
+        }
+        other => Err(Error::Runtime(format!("unsupported element type {other:?}"))),
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactPaths {
+    pub dir: PathBuf,
+}
+
+impl ArtifactPaths {
+    /// Locate the artifacts directory: $WDB_ARTIFACTS, ./artifacts, or the
+    /// repo-root artifacts relative to the executable.
+    pub fn discover() -> Result<Self> {
+        if let Ok(p) = std::env::var("WDB_ARTIFACTS") {
+            let dir = PathBuf::from(p);
+            if dir.join("manifest.json").exists() {
+                return Ok(ArtifactPaths { dir });
+            }
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            let dir = PathBuf::from(cand);
+            if dir.join("manifest.json").exists() {
+                return Ok(ArtifactPaths { dir });
+            }
+        }
+        Err(Error::Artifact(
+            "artifacts/manifest.json not found — run `make artifacts` \
+             (or set WDB_ARTIFACTS)"
+                .into(),
+        ))
+    }
+}

@@ -1,0 +1,95 @@
+//! Host-side ops: the FX node categories that do NOT become WebGPU
+//! dispatches (the paper's 241 shape ops plus embedding/index glue — §4.3
+//! "shape operations don't require them").
+//!
+//! In torch-webgpu these run on CPU against tensor metadata; here they run
+//! on host tensors between dispatches. They carry no virtual-clock cost
+//! beyond the engine's per-op framework overhead.
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Embedding lookup: `table[token] -> [1, H]` (Table 10 "Other").
+pub fn embed(table: &Tensor, token: usize) -> Result<Tensor> {
+    if table.shape.len() != 2 {
+        return Err(Error::Shape(format!("embed table must be 2-D, got {:?}", table.shape)));
+    }
+    let (vocab, hidden) = (table.shape[0], table.shape[1]);
+    if token >= vocab {
+        return Err(Error::Shape(format!("token {token} >= vocab {vocab}")));
+    }
+    let data = table.as_f32()?[token * hidden..(token + 1) * hidden].to_vec();
+    Tensor::f32(vec![1, hidden], data)
+}
+
+/// Split a fused K+V projection output `[1, 2*KV]` into (K, V) `[1, KV]`.
+pub fn split_kv(kv: &Tensor) -> Result<(Tensor, Tensor)> {
+    if kv.shape.len() != 2 || kv.shape[1] % 2 != 0 {
+        return Err(Error::Shape(format!("split_kv expects [1, 2k], got {:?}", kv.shape)));
+    }
+    let half = kv.shape[1] / 2;
+    Ok((kv.slice_last_2d(0, half)?, kv.slice_last_2d(half, kv.shape[1])?))
+}
+
+/// `x.reshape(heads, head_dim)` — pure metadata.
+pub fn to_heads(x: &Tensor, heads: usize, head_dim: usize) -> Result<Tensor> {
+    x.reshape(vec![heads, head_dim])
+}
+
+/// `x.reshape(1, heads*head_dim)` — pure metadata.
+pub fn from_heads(x: &Tensor) -> Result<Tensor> {
+    let n = x.numel();
+    x.reshape(vec![1, n])
+}
+
+/// First/second half split along the last axis (unfused rotary rotate-half).
+pub fn halves(x: &Tensor) -> Result<(Tensor, Tensor)> {
+    if x.shape.len() != 2 || x.shape[1] % 2 != 0 {
+        return Err(Error::Shape(format!("halves expects [h, 2k], got {:?}", x.shape)));
+    }
+    let half = x.shape[1] / 2;
+    Ok((x.slice_last_2d(0, half)?, x.slice_last_2d(half, x.shape[1])?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: Vec<usize>, n: usize) -> Tensor {
+        Tensor::f32(shape, (0..n).map(|x| x as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn embed_picks_row() {
+        let table = t(vec![4, 3], 12);
+        let e = embed(&table, 2).unwrap();
+        assert_eq!(e.shape, vec![1, 3]);
+        assert_eq!(e.as_f32().unwrap(), &[6.0, 7.0, 8.0]);
+        assert!(embed(&table, 4).is_err());
+    }
+
+    #[test]
+    fn split_kv_halves() {
+        let kv = t(vec![1, 6], 6);
+        let (k, v) = split_kv(&kv).unwrap();
+        assert_eq!(k.as_f32().unwrap(), &[0.0, 1.0, 2.0]);
+        assert_eq!(v.as_f32().unwrap(), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn head_reshapes() {
+        let x = t(vec![1, 8], 8);
+        let h = to_heads(&x, 2, 4).unwrap();
+        assert_eq!(h.shape, vec![2, 4]);
+        let back = from_heads(&h).unwrap();
+        assert_eq!(back.shape, vec![1, 8]);
+    }
+
+    #[test]
+    fn halves_split() {
+        let x = t(vec![2, 4], 8);
+        let (a, b) = halves(&x).unwrap();
+        assert_eq!(a.as_f32().unwrap(), &[0.0, 1.0, 4.0, 5.0]);
+        assert_eq!(b.as_f32().unwrap(), &[2.0, 3.0, 6.0, 7.0]);
+    }
+}

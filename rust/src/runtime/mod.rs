@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 hot path.
+//!
+//! Flow (see /opt/xla-example/load_hlo and DESIGN.md §2):
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `PjRtClient::cpu().compile` (once, cached) -> `execute` per dispatch.
+//!
+//! HLO *text* is the interchange format: jax >= 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids.
+
+pub mod client;
+pub mod hostops;
+pub mod registry;
+
+pub use client::PjrtRuntime;
+pub use registry::{KernelSpec, Registry};

@@ -1,0 +1,227 @@
+//! Kernel registry: manifest.json -> kernel specs + lazy-compiled PJRT
+//! executables. Implements [`KernelRunner`] so the WebGPU substrate can
+//! execute dispatches against real AOT kernels.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::report::json;
+use crate::tensor::{DType, Tensor};
+use crate::webgpu::{KernelIoSpec, KernelRunner};
+use crate::{Error, Result};
+
+use super::client::{ArtifactPaths, PjrtRuntime};
+
+/// One AOT kernel's metadata from the manifest.
+#[derive(Debug, Clone)]
+pub struct KernelSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<KernelIoSpec>,
+    pub outputs: Vec<KernelIoSpec>,
+    pub tags: Vec<String>,
+    pub flops: f64,
+    pub notes: String,
+}
+
+/// Model dims parsed from the manifest's `configs` section.
+#[derive(Debug, Clone)]
+pub struct ManifestConfig {
+    pub name: String,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub intermediate: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f64,
+}
+
+pub struct Registry {
+    pub dir: PathBuf,
+    pub runtime: PjrtRuntime,
+    pub kernels: HashMap<String, KernelSpec>,
+    pub configs: HashMap<String, ManifestConfig>,
+}
+
+fn parse_io(v: &json::Value) -> Result<KernelIoSpec> {
+    let shape = v
+        .req("shape")?
+        .as_arr()
+        .ok_or_else(|| Error::Json("shape not an array".into()))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| Error::Json("bad dim".into())))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = match v.req("dtype")?.as_str() {
+        Some("f32") => DType::F32,
+        Some("i32") => DType::I32,
+        other => return Err(Error::Json(format!("bad dtype {other:?}"))),
+    };
+    Ok(KernelIoSpec { shape, dtype })
+}
+
+impl Registry {
+    /// Load manifest + create the PJRT client. Kernels compile lazily on
+    /// first execution (or eagerly via [`Registry::preload`]).
+    pub fn open() -> Result<Self> {
+        Self::open_at(ArtifactPaths::discover()?.dir)
+    }
+
+    pub fn open_at(dir: PathBuf) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!("read {}: {e}", manifest_path.display()))
+        })?;
+        let root = json::parse(&text)?;
+        let mut kernels = HashMap::new();
+        for k in root
+            .req("kernels")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("kernels not an array".into()))?
+        {
+            let spec = KernelSpec {
+                name: k.req("name")?.as_str().unwrap_or_default().to_string(),
+                file: k.req("file")?.as_str().unwrap_or_default().to_string(),
+                inputs: k
+                    .req("inputs")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<_>>()?,
+                outputs: k
+                    .req("outputs")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_io)
+                    .collect::<Result<_>>()?,
+                tags: k
+                    .get("tags")
+                    .and_then(|t| t.as_arr())
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|s| s.as_str().map(str::to_string))
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+                flops: k.get("flops").and_then(|f| f.as_f64()).unwrap_or(0.0),
+                notes: k
+                    .get("notes")
+                    .and_then(|s| s.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+            };
+            kernels.insert(spec.name.clone(), spec);
+        }
+
+        let mut configs = HashMap::new();
+        if let Some(json::Value::Obj(cfgs)) = root.get("configs") {
+            for (name, c) in cfgs {
+                configs.insert(
+                    name.clone(),
+                    ManifestConfig {
+                        name: name.clone(),
+                        hidden: c.req("hidden")?.as_usize().unwrap_or(0),
+                        layers: c.req("layers")?.as_usize().unwrap_or(0),
+                        heads: c.req("heads")?.as_usize().unwrap_or(0),
+                        kv_heads: c.req("kv_heads")?.as_usize().unwrap_or(0),
+                        head_dim: c.req("head_dim")?.as_usize().unwrap_or(0),
+                        intermediate: c.req("intermediate")?.as_usize().unwrap_or(0),
+                        vocab: c.req("vocab")?.as_usize().unwrap_or(0),
+                        max_seq: c.req("max_seq")?.as_usize().unwrap_or(0),
+                        rope_theta: c
+                            .get("rope_theta")
+                            .and_then(|v| v.as_f64())
+                            .unwrap_or(10_000.0),
+                        rms_eps: c
+                            .get("rms_eps")
+                            .and_then(|v| v.as_f64())
+                            .unwrap_or(1e-6),
+                    },
+                );
+            }
+        }
+
+        let runtime = PjrtRuntime::cpu()?;
+        Ok(Registry { dir, runtime, kernels, configs })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&KernelSpec> {
+        self.kernels
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("kernel '{name}' not in manifest")))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ManifestConfig> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("config '{name}' not in manifest")))
+    }
+
+    /// Ensure a kernel is compiled (no-op if cached).
+    pub fn ensure_loaded(&self, name: &str) -> Result<()> {
+        if self.runtime.is_loaded(name) {
+            return Ok(());
+        }
+        let spec = self.spec(name)?;
+        self.runtime.load_hlo_text(name, &self.dir.join(&spec.file))
+    }
+
+    /// Eagerly compile every kernel carrying `tag` (e.g. "tiny" at engine
+    /// startup, so compilation never lands on the request path).
+    pub fn preload(&self, tag: &str) -> Result<usize> {
+        let mut names: Vec<&String> = self
+            .kernels
+            .values()
+            .filter(|k| k.tags.iter().any(|t| t == tag))
+            .map(|k| &k.name)
+            .collect();
+        names.sort();
+        for name in &names {
+            self.ensure_loaded(name)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Execute with spec-based input validation.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<(Vec<Tensor>, u64)> {
+        let spec = self.spec(name)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "kernel {name}: {} inputs given, spec needs {}",
+                inputs.len(),
+                spec.inputs.len()
+            )));
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.shape != s.shape || t.dtype() != s.dtype {
+                return Err(Error::Runtime(format!(
+                    "kernel {name}: input {i} is {:?}/{}, spec wants {:?}/{}",
+                    t.shape,
+                    t.dtype(),
+                    s.shape,
+                    s.dtype
+                )));
+            }
+        }
+        self.ensure_loaded(name)?;
+        self.runtime.execute(name, inputs)
+    }
+}
+
+impl KernelRunner for Registry {
+    fn run(
+        &self,
+        kernel: &str,
+        inputs: &[Tensor],
+        _out_specs: &[KernelIoSpec],
+    ) -> Result<(Vec<Tensor>, u64, f64)> {
+        let flops = self.spec(kernel).map(|s| s.flops).unwrap_or(0.0);
+        let (outs, ns) = self.execute(kernel, inputs)?;
+        Ok((outs, ns, flops))
+    }
+}

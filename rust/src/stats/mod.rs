@@ -1,0 +1,137 @@
+//! Statistics: the paper's reporting machinery — mean ± std, 95% CI via
+//! the t-distribution, coefficient of variation (§3.3), and Welch's t-test
+//! p-values (Tables 5/11/15/19 report significance).
+//!
+//! No external crates: the t CDF comes from the regularized incomplete beta
+//! function (continued-fraction evaluation, Numerical Recipes style).
+
+pub mod welch;
+
+pub use welch::{welch_t_test, WelchResult};
+
+/// Descriptive summary of a sample.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub ci95_lo: f64,
+    pub ci95_hi: f64,
+    /// Coefficient of variation, sigma / mu.
+    pub cv: f64,
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n - 1 denominator).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let ss: f64 = xs.iter().map(|x| (x - m) * (x - m)).sum();
+    (ss / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Two-sided 97.5% t-critical value for `df` degrees of freedom.
+/// Exact table for small df, asymptotic beyond.
+pub fn t_critical_975(df: f64) -> f64 {
+    const TABLE: [(f64, f64); 14] = [
+        (1.0, 12.706), (2.0, 4.303), (3.0, 3.182), (4.0, 2.776),
+        (5.0, 2.571), (6.0, 2.447), (7.0, 2.365), (8.0, 2.306),
+        (9.0, 2.262), (10.0, 2.228), (15.0, 2.131), (20.0, 2.086),
+        (29.0, 2.045), (30.0, 2.042),
+    ];
+    if df <= 0.0 {
+        return f64::NAN;
+    }
+    if df >= 100.0 {
+        return 1.984; // ~z for practical sample sizes
+    }
+    // linear interpolation over the table
+    let mut prev = TABLE[0];
+    for &(d, t) in &TABLE {
+        if df <= d {
+            if (d - prev.0).abs() < 1e-12 {
+                return t;
+            }
+            let w = (df - prev.0) / (d - prev.0);
+            return prev.1 + w * (t - prev.1);
+        }
+        prev = (d, t);
+    }
+    // 30 < df < 100
+    let w = (df - 30.0) / 70.0;
+    2.042 + w * (1.984 - 2.042)
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    let n = xs.len();
+    let m = mean(xs);
+    let s = std_dev(xs);
+    let (lo, hi) = if n >= 2 {
+        let t = t_critical_975((n - 1) as f64);
+        let half = t * s / (n as f64).sqrt();
+        (m - half, m + half)
+    } else {
+        (m, m)
+    };
+    Summary {
+        n,
+        mean: m,
+        std: s,
+        ci95_lo: lo,
+        ci95_hi: hi,
+        cv: if m.abs() > 1e-300 { s / m } else { f64::NAN },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.13809).abs() < 1e-4);
+    }
+
+    #[test]
+    fn t_critical_matches_tables() {
+        assert!((t_critical_975(1.0) - 12.706).abs() < 1e-3);
+        assert!((t_critical_975(9.0) - 2.262).abs() < 1e-3);
+        assert!((t_critical_975(29.0) - 2.045).abs() < 1e-3);
+        assert!(t_critical_975(500.0) < 2.0);
+    }
+
+    #[test]
+    fn ci_contains_mean_and_tightens_with_n() {
+        let small: Vec<f64> = (0..5).map(|i| 10.0 + i as f64).collect();
+        let large: Vec<f64> = (0..50).map(|i| 10.0 + (i % 5) as f64).collect();
+        let s1 = summarize(&small);
+        let s2 = summarize(&large);
+        assert!(s1.ci95_lo < s1.mean && s1.mean < s1.ci95_hi);
+        assert!((s2.ci95_hi - s2.ci95_lo) < (s1.ci95_hi - s1.ci95_lo));
+    }
+
+    #[test]
+    fn cv_is_relative() {
+        let xs = [100.0, 102.0, 98.0, 101.0, 99.0];
+        let s = summarize(&xs);
+        assert!(s.cv > 0.0 && s.cv < 0.05);
+    }
+
+    #[test]
+    fn single_sample_degenerates() {
+        let s = summarize(&[42.0]);
+        assert_eq!(s.mean, 42.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.ci95_lo, s.ci95_hi);
+    }
+}

@@ -1,0 +1,182 @@
+//! Welch's unequal-variance t-test with a two-sided p-value.
+//!
+//! p = I_{df/(df+t^2)}(df/2, 1/2) — the regularized incomplete beta
+//! function, evaluated by Lentz's continued fraction.
+
+use super::{mean, std_dev};
+
+#[derive(Debug, Clone, Copy)]
+pub struct WelchResult {
+    pub t: f64,
+    pub df: f64,
+    /// Two-sided p-value.
+    pub p: f64,
+    pub mean_a: f64,
+    pub mean_b: f64,
+}
+
+/// ln Gamma (Lanczos approximation).
+fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 6] = [
+        76.18009172947146,
+        -86.50532032941677,
+        24.01409824083091,
+        -1.231739572450155,
+        0.1208650973866179e-2,
+        -0.5395239384953e-5,
+    ];
+    let mut y = x;
+    let tmp = x + 5.5 - (x + 0.5) * (x + 5.5).ln();
+    let mut ser = 1.000000000190015;
+    for g in G {
+        y += 1.0;
+        ser += g / y;
+    }
+    -tmp + (2.5066282746310005 * ser / x).ln()
+}
+
+/// Continued fraction for the incomplete beta function.
+fn betacf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_IT: usize = 200;
+    const EPS: f64 = 3e-14;
+    const FPMIN: f64 = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < FPMIN {
+        d = FPMIN;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_IT {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// Regularized incomplete beta I_x(a, b).
+pub fn betai(a: f64, b: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let bt = (ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b)
+        + a * x.ln()
+        + b * (1.0 - x).ln())
+    .exp();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        bt * betacf(a, b, x) / a
+    } else {
+        1.0 - bt * betacf(b, a, 1.0 - x) / b
+    }
+}
+
+/// Two-sided p-value of a t statistic with `df` degrees of freedom.
+pub fn t_p_value(t: f64, df: f64) -> f64 {
+    if !t.is_finite() || df <= 0.0 {
+        return f64::NAN;
+    }
+    betai(df / 2.0, 0.5, df / (df + t * t))
+}
+
+pub fn welch_t_test(a: &[f64], b: &[f64]) -> WelchResult {
+    let (ma, mb) = (mean(a), mean(b));
+    let (sa, sb) = (std_dev(a), std_dev(b));
+    let (na, nb) = (a.len() as f64, b.len() as f64);
+    let va = sa * sa / na;
+    let vb = sb * sb / nb;
+    let se = (va + vb).sqrt();
+    let t = if se > 0.0 { (ma - mb) / se } else { f64::INFINITY };
+    let df = if va + vb > 0.0 {
+        (va + vb) * (va + vb)
+            / (va * va / (na - 1.0).max(1.0) + vb * vb / (nb - 1.0).max(1.0))
+    } else {
+        (na + nb - 2.0).max(1.0)
+    };
+    WelchResult { t, df, p: t_p_value(t, df), mean_a: ma, mean_b: mb }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn betai_endpoints() {
+        assert_eq!(betai(2.0, 3.0, 0.0), 0.0);
+        assert_eq!(betai(2.0, 3.0, 1.0), 1.0);
+        // I_0.5(0.5, 0.5) = 0.5 by symmetry
+        assert!((betai(0.5, 0.5, 0.5) - 0.5).abs() < 1e-10);
+    }
+
+    #[test]
+    fn p_value_matches_known_t() {
+        // t = 2.0, df = 10 -> p ~ 0.0734 (two-sided)
+        let p = t_p_value(2.0, 10.0);
+        assert!((p - 0.0734).abs() < 1e-3, "p = {p}");
+        // t = 0 -> p = 1
+        assert!((t_p_value(0.0, 10.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identical_samples_not_significant() {
+        let a = [5.0, 5.1, 4.9, 5.05, 4.95];
+        let r = welch_t_test(&a, &a);
+        assert!(r.p > 0.99);
+    }
+
+    #[test]
+    fn separated_samples_significant() {
+        let a = [10.0, 10.1, 9.9, 10.05, 9.95, 10.02, 9.98, 10.01];
+        let b = [12.0, 12.1, 11.9, 12.05, 11.95, 12.02, 11.98, 12.01];
+        let r = welch_t_test(&a, &b);
+        assert!(r.p < 1e-6, "p = {}", r.p);
+        assert!(r.t < 0.0); // a < b
+    }
+
+    #[test]
+    fn overlapping_samples_not_significant() {
+        let a = [10.0, 11.0, 9.0, 10.5, 9.5];
+        let b = [10.2, 11.2, 9.2, 10.7, 9.7];
+        let r = welch_t_test(&a, &b);
+        assert!(r.p > 0.5, "p = {}", r.p);
+    }
+
+    #[test]
+    fn welch_df_between_min_and_sum() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let r = welch_t_test(&a, &b);
+        assert!(r.df >= 3.0 && r.df <= 8.0, "df = {}", r.df);
+    }
+}

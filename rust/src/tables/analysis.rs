@@ -1,0 +1,223 @@
+//! Analysis tables: 4 (overhead accounting), 10 (FX census), 13 (WebLLM),
+//! 14 (crossover), 15 (device argmax).
+
+use crate::baselines::table13 as webllm_rows;
+use crate::crossover::{table14_rows, CrossoverModel};
+use crate::engine::overhead::OverheadAccounting;
+use crate::fx::builder::GraphDims;
+use crate::fx::census::Census;
+use crate::report::table::{f1, f2, TableDoc};
+use crate::webgpu::ImplementationProfile;
+use crate::Result;
+
+pub fn table4() -> Result<TableDoc> {
+    // Paper inputs: TTFT 71.4 -> 41.6 ms, 876 -> 564 dispatches, Dawn 23.8 us.
+    let a = OverheadAccounting::derive(41.6, 71.4, 564, 876, 23.8);
+    let hi = OverheadAccounting::derive(41.6, 71.4, 564, 876, 36.0);
+    let mut t = TableDoc::new(
+        "T4",
+        "Approximate TTFT overhead accounting (fused torch-webgpu model, \
+         RTX 5090/Dawn, Qwen2.5-0.5B)",
+        &["Quantity", "Value (ms)", "Type", "Source"],
+    );
+    t.section("Directly measured");
+    t.row(vec!["TTFT (fused)".into(), f1(a.ttft_fused_ms), "Measured".into(),
+               "End-to-end benchmark".into()]);
+    t.row(vec!["TTFT (unfused)".into(), f1(a.ttft_unfused_ms), "Measured".into(),
+               "End-to-end benchmark".into()]);
+    t.row(vec!["Per-dispatch cost".into(), format!("{:.3}", a.per_dispatch_us / 1e3),
+               "Measured".into(), "Sequential dispatch (wdb table 6)".into()]);
+    t.section("Well-constrained derived quantity");
+    t.row(vec!["Per-operation overhead".into(), format!("{:.3}", a.per_op_overhead_us / 1e3),
+               "Derived".into(),
+               format!("({} - {}) / {} fewer ops", a.ttft_unfused_ms, a.ttft_fused_ms,
+                       a.dispatches_unfused - a.dispatches_fused)]);
+    t.section("Estimates (~30% uncertainty)");
+    t.row(vec!["WebGPU dispatch component".into(),
+               format!("{}-{}", f1(a.dispatch_component_ms), f1(hi.dispatch_component_ms)),
+               "Estimated".into(), "564 ops x (24-36 us)".into()]);
+    t.row(vec!["Framework component".into(),
+               format!("{}-{}", f1(hi.framework_component_ms), f1(a.framework_component_ms)),
+               "Estimated".into(), "564 ops x (per-op - dispatch) us".into()]);
+    t.row(vec!["GPU/CPU overlap".into(), format!("~{}", f1(a.overlap_residual_ms)),
+               "Residual".into(), "components - measured TTFT".into()]);
+    let (lo, hi_s) = a.sensitivity(0.20);
+    t.note(&format!(
+        "Sensitivity (Appendix G): +/-20% per-op overhead moves the framework \
+         estimate to {:.0}-{:.0} ms; the qualitative ordering is unchanged.",
+        lo, hi_s
+    ));
+    Ok(t)
+}
+
+pub fn table10() -> Result<TableDoc> {
+    let c = Census::for_dims(&GraphDims::qwen25_05b());
+    let mut t = TableDoc::new(
+        "T10",
+        "FX graph operation breakdown, Qwen2.5-0.5B (sum = 876 compute ops)",
+        &["Category", "Operations", "Count"],
+    );
+    let rows: Vec<(&str, &str, usize)> = vec![
+        ("Linear (matmul)", "Q, K, V, O proj, MLP, lm head", c.compute.linear),
+        ("Multiply", "RMSNorm weights, MLP gate, rotary", c.compute.multiply),
+        ("Add", "Residuals, eps, rotary", c.compute.add),
+        ("SDPA", "Attention per layer", c.compute.sdpa),
+        ("SiLU", "MLP activation", c.compute.silu),
+        ("RMSNorm components", "pow, mean, rsqrt", c.compute.rms_components),
+        ("Concatenation", "KV cache, rotary", c.compute.concat),
+        ("Other", "neg, embedding, index", c.compute.other),
+    ];
+    for (cat, ops, n) in rows {
+        t.row(vec![cat.into(), ops.into(), n.to_string()]);
+    }
+    t.row(vec!["Total compute ops".into(), String::new(), c.compute.total().to_string()]);
+    t.row(vec!["Shape ops (no dispatch)".into(), "view/reshape/slice".into(),
+               c.shape_ops.to_string()]);
+    t.row(vec!["Placeholder/output".into(), String::new(),
+               c.placeholders_outputs.to_string()]);
+    t.row(vec!["Other metadata".into(), String::new(), c.metadata.to_string()]);
+    t.row(vec!["Total FX nodes".into(), String::new(), c.total_nodes().to_string()]);
+    t.note("Structural derivation — see fx::census for the per-layer formulae.");
+    Ok(t)
+}
+
+pub fn table13() -> Result<TableDoc> {
+    let mut t = TableDoc::new(
+        "T13",
+        "Browser end-to-end LLM inference via WebLLM-style engine (q4f16, \
+         decode tok/s; simulated from dispatch profiles + TVM-fused op counts)",
+        &["Platform", "Browser", "Model", "Decode (tok/s)", "Prefill (tok/s)", "Backend"],
+    );
+    let mut platform = String::new();
+    for (i, r) in webllm_rows().iter().enumerate() {
+        if r.model.platform != platform {
+            platform = r.model.platform.clone();
+            t.section(&format!("{platform}"));
+        }
+        let s = r.model.summary(10, 1300 + i as u64);
+        t.row(vec![
+            r.model.platform.clone(),
+            r.browser.clone(),
+            r.qwen.to_string(),
+            format!("{} +/- {:.1}", f1(s.mean), s.std),
+            format!("~{}", f1(r.prefill_tok_s)),
+            r.backend.to_string(),
+        ]);
+    }
+    t.note(
+        "WebLLM's advantage over torch-webgpu (~2.4x) decomposes as: \
+         aggressive TVM fusion (~200 dispatches vs 564), zero Python \
+         framework overhead, and q4f16 kernels. Firefox rows sit at the \
+         rate-limit floor regardless of hardware.",
+    );
+    Ok(t)
+}
+
+pub fn table14() -> Result<TableDoc> {
+    let model = CrossoverModel::paper();
+    let mut t = TableDoc::new(
+        "T14",
+        "Dispatch-bound crossover batch size B* for representative operations",
+        &["Operation", "Dimensions (d_in x d_out)", "B* (computed)", "Regime at B=1"],
+    );
+    for (group, rows) in table14_rows(&model) {
+        t.section(&group);
+        for r in rows {
+            t.row(vec![
+                r.operation,
+                format!("{}x{}", r.d_in, r.d_out),
+                r.b_star.to_string(),
+                r.regime_b1.to_string(),
+            ]);
+        }
+    }
+    t.note(&format!(
+        "B* = (T_overhead x throughput) / (2 d_in d_out) with T_overhead = \
+         {} us, throughput = {} TFLOP/s. At batch=1 every operation is \
+         overhead-bound (B* >= 7): the roofline-style statement of the \
+         paper's thesis.",
+        model.overhead_us, model.throughput_tflops
+    ));
+    Ok(t)
+}
+
+pub fn table15() -> Result<TableDoc> {
+    let mut t = TableDoc::new(
+        "T15",
+        "Device-side argmax vs full readback (substrate map-cost model; \
+         paper p-values quoted — both verdicts inconclusive)",
+        &["Platform", "Full readback (ms)", "Device argmax (ms)", "Improvement",
+          "p (paper)", "Verdict"],
+    );
+    let vocab_bytes = 151_936usize * 4;
+    for (profile, p_paper) in [
+        (ImplementationProfile::wgpu_vulkan_rtx5090(), 0.35),
+        (ImplementationProfile::wgpu_metal_m2(), 0.62),
+    ] {
+        // Full readback: map fixed + per-byte over the logits row.
+        let full_ms =
+            (profile.map_fixed_ns as f64 + vocab_bytes as f64 * profile.map_per_byte_ns) / 1e6;
+        // Device argmax: one extra dispatch + 4-byte map.
+        let dev_ms = (profile.sequential_dispatch_ns() as f64
+            + profile.map_fixed_ns as f64
+            + 4.0 * profile.map_per_byte_ns)
+            / 1e6;
+        let improvement = (full_ms - dev_ms) / full_ms * 100.0;
+        t.row(vec![
+            profile.name.to_string(),
+            f2(full_ms),
+            f2(dev_ms),
+            format!("{improvement:+.0}%"),
+            format!("{p_paper:.2}"),
+            "Inconclusive".into(),
+        ]);
+    }
+    t.note(
+        "Vulkan's low fixed map cost (~0.1 ms) leaves room for the transfer \
+         reduction to show; Metal's ~1.6 ms fixed map cost swamps it — the \
+         Appendix H explanation. Run `wdb e2e --device-argmax` to execute \
+         both paths for real on the tiny config.",
+    );
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_accounting_reproduces_paper() {
+        let t = table4().unwrap();
+        let md = t.to_markdown();
+        assert!(md.contains("0.095") || md.contains("0.096"), "{md}");
+        assert!(md.contains("41.6") && md.contains("71.4"));
+    }
+
+    #[test]
+    fn table10_totals() {
+        let t = table10().unwrap();
+        let md = t.to_markdown();
+        assert!(md.contains("876"));
+        assert!(md.contains("1911"));
+    }
+
+    #[test]
+    fn table14_regimes() {
+        let t = table14().unwrap();
+        for row in t.rows.iter().filter(|r| !r[0].starts_with("**")) {
+            assert_eq!(row[3], "Overhead-bound");
+        }
+    }
+
+    #[test]
+    fn table15_metal_gains_nothing() {
+        let t = table15().unwrap();
+        let vulkan_imp: f64 = t.rows[0][3]
+            .trim_end_matches('%')
+            .parse()
+            .unwrap();
+        let metal_imp: f64 = t.rows[1][3].trim_end_matches('%').parse().unwrap();
+        assert!(vulkan_imp > 50.0, "vulkan {vulkan_imp}");
+        assert!(metal_imp.abs() < 15.0, "metal {metal_imp}");
+    }
+}

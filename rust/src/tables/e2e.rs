@@ -1,0 +1,255 @@
+//! End-to-end tables: 1 (scope), 2 (backends), 3 (cross-platform),
+//! 5 (fusion ablation), 18 (model scaling).
+
+use crate::baselines::{table2_05b, table2_15b, table3 as baseline_table3, E2EModel};
+use crate::fx::builder::GraphDims;
+use crate::fx::census::Census;
+use crate::report::table::{f1, ratio, TableDoc};
+use crate::stats::welch_t_test;
+use crate::Result;
+
+fn fmt_summary_row(m: &E2EModel, vs: f64, n: usize, seed: u64) -> Vec<String> {
+    let s = m.summary(n, seed);
+    vec![
+        m.name.clone(),
+        m.dtype.to_string(),
+        f1(s.mean),
+        format!("[{}, {}]", f1(s.ci95_lo), f1(s.ci95_hi)),
+        format!("{:.1}%", s.cv * 100.0),
+        f1(m.ttft_ms()),
+        if vs > 0.0 { format!("{:.2}x", s.mean / vs) } else { "1.00x".into() },
+    ]
+}
+
+pub fn table1() -> Result<TableDoc> {
+    let mut t = TableDoc::new(
+        "T1",
+        "Classification of experiments by scope and configuration coverage",
+        &["Experiment", "Type", "Dtype", "Configs", "Regenerate with"],
+    );
+    t.section("End-to-end LLM inference");
+    for (a, b, c, d, e) in [
+        ("torch-webgpu", "E2E", "fp32", "1 (RTX 5090/Dawn)", "wdb table 2 / wdb e2e"),
+        ("CUDA baselines", "E2E", "fp16, fp32", "2 GPUs, 2 platforms", "wdb table 2/3"),
+        ("MPS baselines", "E2E", "fp16, fp32", "1 (Apple M2)", "wdb table 2/3"),
+        ("CPU baselines", "E2E", "fp32", "3 platforms", "wdb table 3"),
+        ("ONNX Runtime (WebGPU)", "E2E", "fp32", "1 (RTX 5090)", "wdb table 2"),
+        ("WebLLM (browser)", "E2E", "q4f16", "6 configs", "wdb table 13"),
+    ] {
+        t.row(vec![a.into(), b.into(), c.into(), d.into(), e.into()]);
+    }
+    t.section("Dispatch overhead benchmarks (dtype-independent)");
+    for (a, b, c, d, e) in [
+        ("Native dispatch", "Micro", "-", "4 vendors, 2 impls", "wdb table 6"),
+        ("Browser dispatch", "Micro", "-", "3 browsers, 3 platforms", "wdb table 6"),
+        ("RMSNorm fusion", "Micro", "fp32", "5 configs", "wdb table 7"),
+        ("CNN/ViT/U-Net dispatch", "Micro", "-", "RTX 5090", "wdb table 6 (24-58 us band)"),
+    ] {
+        t.row(vec![a.into(), b.into(), c.into(), d.into(), e.into()]);
+    }
+    t.section("Exploratory (inconclusive, appendix only)");
+    for (a, b, c, d, e) in [
+        ("Mega-kernel", "Micro", "fp32", "RTX 5090, M2", "wdb table 11"),
+        ("Device-side argmax", "Micro", "fp32", "RTX 5090, M2", "wdb table 15"),
+    ] {
+        t.row(vec![a.into(), b.into(), c.into(), d.into(), e.into()]);
+    }
+    Ok(t)
+}
+
+pub fn table2() -> Result<TableDoc> {
+    let mut t = TableDoc::new(
+        "T2",
+        "End-to-end inference performance across backends (simulated from \
+         calibrated per-op models; 30 runs)",
+        &["Backend", "Dtype", "Tok/s", "95% CI", "CV", "TTFT (ms)", "vs CUDA"],
+    );
+    t.section("Qwen2.5-0.5B-Instruct");
+    let rows05 = table2_05b();
+    let cuda05 = rows05[0].tok_per_s();
+    for (i, m) in rows05.iter().enumerate() {
+        t.row(fmt_summary_row(m, cuda05, 30, 100 + i as u64));
+    }
+    t.section("Qwen2.5-1.5B-Instruct");
+    let rows15 = table2_15b();
+    let cuda15 = rows15[0].tok_per_s();
+    for (i, m) in rows15.iter().enumerate() {
+        t.row(fmt_summary_row(m, cuda15, 30, 200 + i as u64));
+    }
+    t.note(
+        "\"vs CUDA\" compares WGSL float32 against CUDA float16 (the paper's \
+         dtype confound, §3.6). CUDA rows are launch-overhead-consistent: \
+         876 eager launches x 7.4 us.",
+    );
+    Ok(t)
+}
+
+pub fn table3() -> Result<TableDoc> {
+    let mut t = TableDoc::new(
+        "T3",
+        "Cross-platform performance comparison (Qwen2.5-0.5B)",
+        &["Platform", "Processor", "Accelerator", "Tok/s", "95% CI", "CV", "vs WebGPU"],
+    );
+    let webgpu_tok_s = table2_05b()[3].tok_per_s();
+    let (gpu, cpu) = baseline_table3();
+    t.section("Native GPU (end-to-end inference)");
+    for (i, m) in gpu.iter().enumerate() {
+        let s = m.summary(30, 300 + i as u64);
+        t.row(vec![
+            m.platform.clone(),
+            m.processor.clone(),
+            m.accelerator.clone(),
+            f1(s.mean),
+            format!("[{}, {}]", f1(s.ci95_lo), f1(s.ci95_hi)),
+            format!("{:.1}%", s.cv * 100.0),
+            ratio(s.mean / webgpu_tok_s),
+        ]);
+    }
+    t.section("CPU (end-to-end inference)");
+    for (i, m) in cpu.iter().enumerate() {
+        let s = m.summary(30, 350 + i as u64);
+        t.row(vec![
+            m.platform.clone(),
+            m.processor.clone(),
+            m.accelerator.clone(),
+            f1(s.mean),
+            format!("[{}, {}]", f1(s.ci95_lo), f1(s.ci95_hi)),
+            format!("{:.1}%", s.cv * 100.0),
+            ratio(s.mean / webgpu_tok_s),
+        ]);
+    }
+    t.note(
+        "Windows/macOS rows are float32 for the dtype-matched comparison: the \
+         RTX PRO 2000 reaches ~1.4x WebGPU despite ~6x less compute than the \
+         RTX 5090 — dispatch/framework overhead dominates.",
+    );
+    Ok(t)
+}
+
+/// The torch-webgpu model with a given dispatch count (fusion progression).
+fn webgpu_with_ops(ops: usize) -> E2EModel {
+    let mut m = table2_05b()[3].clone();
+    m.ops_per_token = ops;
+    m
+}
+
+/// TTFT model for Table 5: per-op CPU cost minus overlap (no sync).
+fn ttft_model(ops: usize) -> f64 {
+    let m = webgpu_with_ops(ops);
+    (m.ops_per_token as f64 * m.per_op_us / 1e3).max(m.kernel_ms) - m.overlap_ms
+}
+
+pub fn table5() -> Result<TableDoc> {
+    let census = Census::for_dims(&GraphDims::qwen25_05b());
+    let s = census.paper_fusion_savings();
+    let base = census.unfused_dispatches();
+    let steps = [
+        ("No fusion (baseline)", base, String::from("-")),
+        ("+ Fused RMSNorm (6->1)", base - s.rmsnorm, format!("{}/fwd", s.rmsnorm)),
+        ("+ Fused MLP gate+up+silu (3->1)", base - s.rmsnorm - s.mlp, format!("+{}/fwd", s.mlp)),
+        ("+ Fused K+V projection (2->1)", base - s.total(), format!("+{}/fwd", s.kv)),
+    ];
+    let mut t = TableDoc::new(
+        "T5",
+        "Impact of kernel fusion (controlled progressive experiment, \
+         simulated 0.5B/Dawn model + Welch p-values over 30 jittered runs)",
+        &["Configuration", "Dispatches", "Saved", "Tok/s", "TTFT (ms)", "p vs prev"],
+    );
+    let mut prev_runs: Option<Vec<f64>> = None;
+    for (i, (name, ops, saved)) in steps.iter().enumerate() {
+        let m = webgpu_with_ops(*ops);
+        let runs = m.simulate(30, 500 + i as u64);
+        let p = prev_runs
+            .as_ref()
+            .map(|pr| {
+                let w = welch_t_test(&runs, pr);
+                if w.p < 0.001 { "<0.001".to_string() } else { format!("{:.2}", w.p) }
+            })
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            name.to_string(),
+            ops.to_string(),
+            saved.clone(),
+            f1(m.tok_per_s()),
+            f1(ttft_model(*ops)),
+            p,
+        ]);
+        prev_runs = Some(runs);
+    }
+    let unfused = webgpu_with_ops(base);
+    let fused = webgpu_with_ops(base - s.total());
+    t.row(vec![
+        "Total improvement".into(),
+        format!("{} fewer", s.total()),
+        String::new(),
+        format!("+{:.0}%", (fused.tok_per_s() / unfused.tok_per_s() - 1.0) * 100.0),
+        format!("{:.0}%", (ttft_model(base - s.total()) / ttft_model(base) - 1.0) * 100.0),
+        String::new(),
+    ]);
+    t.note(
+        "RMSNorm and MLP fusions are significant; K+V fusion is not (the \
+         paper's negative result reproduces: the jittered samples overlap). \
+         Run `wdb e2e --compare-fusion` for the same ablation executed for \
+         real on the tiny config through PJRT.",
+    );
+    Ok(t)
+}
+
+pub fn table18() -> Result<TableDoc> {
+    let c05 = Census::for_dims(&GraphDims::qwen25_05b());
+    let c15 = Census::for_dims(&GraphDims::qwen25_15b());
+    let w05f = table2_05b()[3].clone();
+    let rows15 = table2_15b();
+    let (w15f, w15u) = (rows15[2].clone(), rows15[3].clone());
+    let mut w05u = w05f.clone();
+    w05u.ops_per_token = c05.unfused_dispatches();
+    w05u.overlap_ms = 11.0;
+
+    let cuda05 = table2_05b()[1].tok_per_s();
+    let cuda15 = rows15[0].tok_per_s();
+    let mps05 = table2_05b()[2].tok_per_s();
+    let mps15 = rows15[1].tok_per_s();
+
+    let per_op = |u: &E2EModel, f: &E2EModel| {
+        let saved = (u.ops_per_token - f.ops_per_token) as f64;
+        (ttft_like(u) - ttft_like(f)) * 1e3 / saved
+    };
+    fn ttft_like(m: &E2EModel) -> f64 {
+        (m.ops_per_token as f64 * m.per_op_us / 1e3).max(m.kernel_ms) - m.overlap_ms
+    }
+
+    let mut t = TableDoc::new(
+        "T18",
+        "Model size scaling: 0.5B vs 1.5B (simulated end-to-end models)",
+        &["Metric", "0.5B", "1.5B", "Scaling"],
+    );
+    let rowv = |t: &mut TableDoc, m: &str, a: String, b: String, s: String| {
+        t.row(vec![m.into(), a, b, s]);
+    };
+    rowv(&mut t, "Layers", "24".into(), "28".into(), ratio(28.0 / 24.0));
+    rowv(
+        &mut t,
+        "Ops/forward (fused)",
+        c05.fused_dispatches().to_string(),
+        c15.fused_dispatches().to_string(),
+        ratio(c15.fused_dispatches() as f64 / c05.fused_dispatches() as f64),
+    );
+    rowv(&mut t, "WebGPU tok/s (fused)", f1(w05f.tok_per_s()), f1(w15f.tok_per_s()),
+         ratio(w15f.tok_per_s() / w05f.tok_per_s()));
+    rowv(&mut t, "WebGPU tok/s (unfused)", f1(w05u.tok_per_s()), f1(w15u.tok_per_s()),
+         ratio(w15u.tok_per_s() / w05u.tok_per_s()));
+    rowv(&mut t, "WebGPU TTFT fused (ms)", f1(ttft_like(&w05f)), f1(ttft_like(&w15f)),
+         ratio(ttft_like(&w15f) / ttft_like(&w05f)));
+    rowv(&mut t, "WebGPU TTFT unfused (ms)", f1(ttft_like(&w05u)), f1(ttft_like(&w15u)),
+         ratio(ttft_like(&w15u) / ttft_like(&w05u)));
+    rowv(&mut t, "Fusion speedup",
+         ratio(w05f.tok_per_s() / w05u.tok_per_s()),
+         ratio(w15f.tok_per_s() / w15u.tok_per_s()),
+         "more fusible ops".into());
+    rowv(&mut t, "Per-op overhead (us)", f1(per_op(&w05u, &w05f)), f1(per_op(&w15u, &w15f)),
+         "~1.0x".into());
+    rowv(&mut t, "CUDA tok/s", f1(cuda05), f1(cuda15), ratio(cuda15 / cuda05));
+    rowv(&mut t, "MPS tok/s", f1(mps05), f1(mps15), ratio(mps15 / mps05));
+    t.note("Per-operation overhead is stable across model sizes (~95-99 us).");
+    Ok(t)
+}

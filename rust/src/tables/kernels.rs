@@ -1,0 +1,224 @@
+//! Kernel-efficiency tables: 8 (compute efficiency), 11 (mega-kernel),
+//! 12 (production vs toy matmul), 16 (optimization summary), 19 (tiled
+//! strategy).
+
+use crate::model::rng::XorShiftRng;
+use crate::report::table::{f1, f2, ratio, TableDoc};
+use crate::stats::{summarize, welch_t_test};
+use crate::Result;
+
+/// RTX 5090 non-tensor-core FP32 peak: 21,760 cores x 2 (FMA) x 2.41 GHz.
+pub const RTX5090_FP32_PEAK_TFLOPS: f64 = 104.9;
+
+/// Table 8/12 matmul calibration: (label, m, k, n, TFLOP/s achieved by the
+/// paper's unoptimized 16x16-tile WGSL shader).
+pub fn matmul_ops() -> Vec<(&'static str, usize, usize, usize, f64)> {
+    vec![
+        ("MLP up projection", 896, 896, 4864, 1.22),
+        ("MLP down projection", 896, 4864, 896, 2.06),
+        ("Toy matmul", 256, 256, 256, 0.030),
+    ]
+}
+
+pub fn table8() -> Result<TableDoc> {
+    let mut t = TableDoc::new(
+        "T8",
+        "WebGPU kernel compute efficiency (wgpu/Vulkan profile, RTX 5090 \
+         calibration)",
+        &["Operation", "Dimensions", "Time (ms)", "TFLOP/s", "% Peak"],
+    );
+    for (name, m, k, n, tflops) in matmul_ops() {
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let time_ms = flops / (tflops * 1e12) * 1e3;
+        t.row(vec![
+            name.to_string(),
+            format!("{m}x{k}x{n}"),
+            f2(time_ms),
+            format!("{tflops:.2}"),
+            format!("{:.1}%", tflops / RTX5090_FP32_PEAK_TFLOPS * 100.0),
+        ]);
+    }
+    t.note(
+        "1-2% of FP32 peak reflects the unoptimized 16x16-tile shader, not a \
+         WGSL ceiling (~17% is achievable per third-party evidence). Run \
+         `cargo bench --bench t8_kernel_efficiency` for the real Pallas \
+         kernels' host GFLOP/s on this machine.",
+    );
+    Ok(t)
+}
+
+fn normal_sample(rng: &mut XorShiftRng, mean: f64, std: f64, n: usize) -> Vec<f64> {
+    (0..n).map(|_| mean + std * rng.normal()).collect()
+}
+
+pub fn table11() -> Result<TableDoc> {
+    let mut rng = XorShiftRng::new(0x11AA);
+    let mut t = TableDoc::new(
+        "T11",
+        "Mega-kernel vs multi-workgroup at toy scale (256x256, 30 runs) — \
+         inconclusive, as in the paper",
+        &["Platform", "Backend", "Mega (ms)", "Multi (ms)", "Speedup", "p-value", "Result"],
+    );
+    for (platform, backend, mega_m, mega_s, multi_m, multi_s) in [
+        ("RTX 5090", "Vulkan", 0.090, 0.03, 0.085, 0.01),
+        ("Apple M2", "Metal", 1.45, 0.32, 1.40, 0.02),
+    ] {
+        let a = normal_sample(&mut rng, mega_m, mega_s, 30);
+        let b = normal_sample(&mut rng, multi_m, multi_s, 30);
+        let (sa, sb) = (summarize(&a), summarize(&b));
+        let w = welch_t_test(&a, &b);
+        t.row(vec![
+            platform.into(),
+            backend.into(),
+            format!("{:.3} +/- {:.2}", sa.mean, sa.std),
+            format!("{:.3} +/- {:.2}", sb.mean, sb.std),
+            ratio(sb.mean / sa.mean),
+            format!("{:.2}", w.p),
+            if w.p > 0.05 { "Inconclusive" } else { "Significant" }.into(),
+        ]);
+    }
+    t.note(
+        "A single-workgroup mega-kernel serializes what multi-dispatch runs \
+         on ~65k threads; at production dims it would be strictly worse \
+         (the paper's Appendix C scale-limitation argument).",
+    );
+    Ok(t)
+}
+
+pub fn table12() -> Result<TableDoc> {
+    let mut t = TableDoc::new(
+        "T12",
+        "WebGPU matmul at production vs toy dimensions (wgpu/Vulkan calibration)",
+        &["Dimensions", "Workgroups", "Mean (ms)", "GFLOP/s"],
+    );
+    for (_, m, k, n, tflops) in matmul_ops() {
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let time_ms = flops / (tflops * 1e12) * 1e3;
+        let wg = format!("{}x{}", m / 16, n / 16);
+        t.row(vec![
+            format!("{m}x{k}x{n}"),
+            wg,
+            f2(time_ms),
+            f1(tflops * 1e3),
+        ]);
+    }
+    t.note(
+        "Production-scale matmul reaches 1.2-2.1 TFLOP/s vs 30 GFLOP/s at toy \
+         scale: 40-68x from GPU utilization alone.",
+    );
+    Ok(t)
+}
+
+pub fn table16() -> Result<TableDoc> {
+    let mut t = TableDoc::new(
+        "T16",
+        "Optimization results summary (isolated vs end-to-end impact)",
+        &["Optimization", "Implementation", "Isolated result", "E2E impact"],
+    );
+    t.section("Kernel optimizations");
+    t.row(vec![
+        "Parallel softmax".into(),
+        "Shared accumulator, single pass (softmax.py)".into(),
+        "84x (p<0.001)".into(),
+        "Bottleneck removed".into(),
+    ]);
+    t.row(vec![
+        "Tiled matmul".into(),
+        "16x16 BlockSpec tiles (matmul.py)".into(),
+        "2-3x (p<0.001)".into(),
+        "<5% improvement".into(),
+    ]);
+    t.section("Overhead reduction attempts (null results)");
+    for (name, imp) in [
+        ("Command batching", "16 dispatches per submit (DispatchBatcher)"),
+        ("Buffer pooling", "Size-class reuse (GraphExecutor pool)"),
+        ("Bind group caching", "Layout cache (GraphExecutor)"),
+    ] {
+        t.row(vec![name.into(), imp.into(), "~0%".into(), "No effect*".into()]);
+    }
+    t.note(
+        "*Autoregressive generation forces a GPU->CPU sync per token, \
+         flushing batched commands (run `wdb e2e --batch 16` to see it on \
+         the real tiny engine).",
+    );
+    Ok(t)
+}
+
+pub fn table19() -> Result<TableDoc> {
+    let mut rng = XorShiftRng::new(0x19AA);
+    let mut t = TableDoc::new(
+        "T19",
+        "Multi-dispatch tiled strategy: MLP block, 7 -> 3 -> 1 dispatches \
+         (30 jittered runs)",
+        &["Platform", "Unfused 7-disp (ms)", "Tiled 3-disp (ms)", "Mega 1-disp (ms)",
+          "Tiled speedup", "p-value"],
+    );
+    // Per-dispatch costs drive the difference: Vulkan 35.8 us, Metal 71.1 us
+    // with a Metal kernel floor. Values calibrated to the paper's Table 19.
+    for (platform, unfused, tiled, mega, jitter) in [
+        ("wgpu/Vulkan (RTX 5090)", 0.72, 0.62, 0.66, 0.02),
+        ("wgpu/Metal (Apple M2)", 5.74, 2.85, 3.1, 0.04),
+    ] {
+        let a = normal_sample(&mut rng, unfused, unfused * jitter, 30);
+        let b = normal_sample(&mut rng, tiled, tiled * jitter, 30);
+        let w = welch_t_test(&a, &b);
+        t.row(vec![
+            platform.into(),
+            f2(unfused),
+            f2(tiled),
+            f2(mega),
+            ratio(unfused / tiled),
+            if w.p < 0.001 { "<0.001".into() } else { format!("{:.3}", w.p) },
+        ]);
+    }
+    t.note(
+        "2.0x on Metal vs 1.17x on Vulkan tracks the per-dispatch overhead \
+         ratio (71 us vs 25-36 us): fusion matters more where dispatch is \
+         expensive. The mega column under-utilizes (single workgroup).",
+    );
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table8_efficiency_band() {
+        let t = table8().unwrap();
+        // % peak column between 0 and 2% for all rows
+        for row in &t.rows {
+            let pct: f64 = row[4].trim_end_matches('%').parse().unwrap();
+            assert!(pct < 2.5, "{pct}");
+        }
+    }
+
+    #[test]
+    fn table11_is_inconclusive() {
+        let t = table11().unwrap();
+        for row in &t.rows {
+            assert_eq!(row[6], "Inconclusive", "{row:?}");
+            let p: f64 = row[5].parse().unwrap();
+            assert!(p > 0.05, "p {p}");
+        }
+    }
+
+    #[test]
+    fn table19_speedups_match_paper_shape() {
+        let t = table19().unwrap();
+        let vulkan: f64 = t.rows[0][4].trim_end_matches('x').parse().unwrap();
+        let metal: f64 = t.rows[1][4].trim_end_matches('x').parse().unwrap();
+        assert!((vulkan - 1.16).abs() < 0.05, "vulkan {vulkan}");
+        assert!((metal - 2.01).abs() < 0.05, "metal {metal}");
+        assert!(metal > vulkan, "fusion must matter more on Metal");
+    }
+
+    #[test]
+    fn table12_utilization_gap() {
+        let t = table12().unwrap();
+        let toy: f64 = t.rows[2][3].parse().unwrap();
+        let prod: f64 = t.rows[1][3].parse().unwrap();
+        let gap = prod / toy;
+        assert!((40.0..80.0).contains(&gap), "gap {gap}");
+    }
+}

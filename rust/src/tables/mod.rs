@@ -1,0 +1,62 @@
+//! Table regeneration: one function per paper table (see DESIGN.md §5 for
+//! the experiment index). `wdb table <n>` prints markdown; `wdb all-tables`
+//! writes everything plus JSON dumps under `results/`.
+
+pub mod analysis;
+pub mod dispatch;
+pub mod e2e;
+pub mod kernels;
+
+use crate::report::TableDoc;
+use crate::Result;
+
+/// Generate table `id` (1..=20).
+pub fn generate(id: usize) -> Result<TableDoc> {
+    match id {
+        1 => e2e::table1(),
+        2 => e2e::table2(),
+        3 => e2e::table3(),
+        4 => analysis::table4(),
+        5 => e2e::table5(),
+        6 => dispatch::table6(),
+        7 => dispatch::table7(),
+        8 => kernels::table8(),
+        9 => dispatch::table9(),
+        10 => analysis::table10(),
+        11 => kernels::table11(),
+        12 => kernels::table12(),
+        13 => analysis::table13(),
+        14 => analysis::table14(),
+        15 => analysis::table15(),
+        16 => kernels::table16(),
+        17 => dispatch::table17(),
+        18 => e2e::table18(),
+        19 => kernels::table19(),
+        20 => dispatch::table20(),
+        other => Err(crate::Error::Graph(format!("no table {other} (1..=20)"))),
+    }
+}
+
+pub fn all_ids() -> Vec<usize> {
+    (1..=20).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_table_generates() {
+        for id in all_ids() {
+            let t = generate(id).unwrap_or_else(|e| panic!("table {id}: {e}"));
+            assert!(!t.rows.is_empty(), "table {id} empty");
+            assert!(t.to_markdown().contains(&format!("T{id}")), "table {id} header");
+        }
+    }
+
+    #[test]
+    fn unknown_table_rejected() {
+        assert!(generate(0).is_err());
+        assert!(generate(21).is_err());
+    }
+}

@@ -1,0 +1,246 @@
+//! Host-side tensor: the value type flowing through the FX executor and the
+//! WebGPU substrate's buffers. Deliberately minimal — shape + typed data.
+
+use crate::{Error, Result};
+
+
+/// Element type of a tensor (the only two the kernel ABI uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DType::F32 => write!(f, "f32"),
+            DType::I32 => write!(f, "i32"),
+        }
+    }
+}
+
+/// Typed host data.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        match self {
+            TensorData::F32(v) => bytemuck_cast_f32(v),
+            TensorData::I32(v) => bytemuck_cast_i32(v),
+        }
+    }
+}
+
+fn bytemuck_cast_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_cast_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// A host tensor: shape + data. Row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} needs {} elems, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data: TensorData::F32(data) })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} needs {} elems, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data: TensorData::I32(data) })
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape, data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Tensor { shape: vec![1], data: TensorData::I32(vec![v]) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor { shape: vec![1], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(Error::Shape("expected f32 tensor".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(Error::Shape("expected i32 tensor".into())),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(Error::Shape("expected f32 tensor".into())),
+        }
+    }
+
+    /// Reshape without moving data (numel must match).
+    pub fn reshape(&self, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.numel() {
+            return Err(Error::Shape(format!(
+                "reshape {:?} -> {:?}: numel mismatch",
+                self.shape, shape
+            )));
+        }
+        Ok(Tensor { shape, data: self.data.clone() })
+    }
+
+    /// Slice the last axis: `t[..., lo..hi]` for a 2-D tensor.
+    pub fn slice_last_2d(&self, lo: usize, hi: usize) -> Result<Tensor> {
+        if self.shape.len() != 2 {
+            return Err(Error::Shape(format!(
+                "slice_last_2d expects 2-D, got {:?}",
+                self.shape
+            )));
+        }
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        if hi > cols || lo >= hi {
+            return Err(Error::Shape(format!(
+                "slice [{lo}..{hi}] out of bounds for {cols} cols"
+            )));
+        }
+        let src = self.as_f32()?;
+        let mut out = Vec::with_capacity(rows * (hi - lo));
+        for r in 0..rows {
+            out.extend_from_slice(&src[r * cols + lo..r * cols + hi]);
+        }
+        Tensor::f32(vec![rows, hi - lo], out)
+    }
+
+    /// Host argmax over the last axis of a [1, V] tensor (the production
+    /// token-selection path: full-logits readback + CPU argmax).
+    pub fn argmax_row(&self) -> Result<usize> {
+        let v = self.as_f32()?;
+        if v.is_empty() {
+            return Err(Error::Shape("argmax of empty tensor".into()));
+        }
+        let mut best = 0usize;
+        let mut bestv = v[0];
+        for (i, &x) in v.iter().enumerate().skip(1) {
+            if x > bestv {
+                best = i;
+                bestv = x;
+            }
+        }
+        Ok(best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::i32(vec![1], vec![1, 2]).is_err());
+    }
+
+    #[test]
+    fn reshape_preserves_numel() {
+        let t = Tensor::f32(vec![2, 6], (0..12).map(|x| x as f32).collect()).unwrap();
+        let r = t.reshape(vec![3, 4]).unwrap();
+        assert_eq!(r.shape, vec![3, 4]);
+        assert_eq!(r.as_f32().unwrap()[5], 5.0);
+        assert!(t.reshape(vec![5, 5]).is_err());
+    }
+
+    #[test]
+    fn slice_last() {
+        let t = Tensor::f32(vec![2, 4], (0..8).map(|x| x as f32).collect()).unwrap();
+        let s = t.slice_last_2d(1, 3).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.as_f32().unwrap(), &[1.0, 2.0, 5.0, 6.0]);
+        assert!(t.slice_last_2d(3, 3).is_err());
+        assert!(t.slice_last_2d(2, 5).is_err());
+    }
+
+    #[test]
+    fn argmax_row_works() {
+        let t = Tensor::f32(vec![1, 5], vec![0.1, 3.0, 2.0, 3.0, -1.0]).unwrap();
+        assert_eq!(t.argmax_row().unwrap(), 1); // first max wins
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let t = Tensor::f32(vec![2], vec![1.5, -2.5]).unwrap();
+        assert_eq!(t.data.as_bytes().len(), 8);
+        assert_eq!(t.size_bytes(), 8);
+    }
+}

@@ -1,0 +1,61 @@
+//! Bind group layouts and bind groups.
+//!
+//! Bind group creation is one of the three per-dispatch costs the paper's
+//! C++ profiler instruments (encoder creation, bind group creation,
+//! submission). Layout/group compatibility is re-validated at dispatch time,
+//! matching WebGPU's draw-time validation rules.
+
+
+
+use super::buffer::BufferId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BindGroupLayoutId(pub u64);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BindGroupId(pub u64);
+
+/// Binding slot type (compute subset of `GPUBindGroupLayoutEntry`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BindingType {
+    /// Read-only storage buffer (kernel input).
+    ReadOnlyStorage,
+    /// Read-write storage buffer (kernel output).
+    Storage,
+    /// Uniform buffer (small parameters).
+    Uniform,
+}
+
+#[derive(Debug, Clone)]
+pub struct BindGroupLayoutDesc {
+    pub label: String,
+    /// Binding index -> type, dense from 0.
+    pub entries: Vec<BindingType>,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct BindGroupLayout {
+    pub desc: BindGroupLayoutDesc,
+}
+
+/// One bound buffer.
+#[derive(Debug, Clone, Copy)]
+pub struct BindGroupEntry {
+    pub binding: usize,
+    pub buffer: BufferId,
+    pub offset: usize,
+    /// Bound byte range length.
+    pub size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BindGroupDesc {
+    pub label: String,
+    pub layout: BindGroupLayoutId,
+    pub entries: Vec<BindGroupEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct BindGroup {
+    pub desc: BindGroupDesc,
+}

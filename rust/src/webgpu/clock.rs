@@ -1,0 +1,206 @@
+//! Virtual + real clocks and the per-phase dispatch timeline.
+//!
+//! The virtual clock models CPU time (API overhead) and the GPU completion
+//! frontier separately, reproducing WebGPU's asynchronous `queue.Submit()`
+//! semantics: CPU-side costs do not directly sum to wall-clock because the
+//! GPU executes operation N while the CPU encodes N+1 (the paper's ~12 ms
+//! "GPU/CPU overlap" residual in Table 4).
+
+
+
+/// The eight CPU-side phases of one dispatch, in call order (Table 20).
+pub const DISPATCH_PHASES: [&str; 8] = [
+    "encoder_create",
+    "pass_begin",
+    "set_pipeline",
+    "set_bind_group",
+    "dispatch_call",
+    "pass_end",
+    "encoder_finish",
+    "submit",
+];
+
+/// Deterministic xorshift64* RNG for calibrated jitter — the tables report
+/// CV/CI/p-values, so runs need realistic variance without nondeterminism.
+#[derive(Debug, Clone)]
+pub struct Jitter {
+    state: u64,
+}
+
+impl Jitter {
+    pub fn new(seed: u64) -> Self {
+        Jitter { state: seed.max(1) }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// `base * (1 +/- pct)`, uniform.
+    pub fn apply(&mut self, base_ns: u64, pct: f64) -> u64 {
+        if pct <= 0.0 || base_ns == 0 {
+            return base_ns;
+        }
+        let f = 1.0 + pct * (2.0 * self.next_f64() - 1.0);
+        (base_ns as f64 * f).round().max(0.0) as u64
+    }
+}
+
+/// Virtual CPU clock + GPU completion frontier (nanoseconds).
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    /// CPU-side virtual time.
+    pub cpu_ns: u64,
+    /// Time at which all submitted GPU work completes.
+    pub gpu_done_ns: u64,
+    /// Virtual time of the last queue submit (for rate-limiting models).
+    pub last_submit_ns: u64,
+    /// Total GPU busy time accumulated (kernel execution).
+    pub gpu_busy_ns: u64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance CPU time (an API call's CPU-side cost).
+    pub fn advance_cpu(&mut self, ns: u64) {
+        self.cpu_ns += ns;
+    }
+
+    /// Enqueue GPU work at the current frontier; returns its completion time.
+    pub fn enqueue_gpu(&mut self, kernel_ns: u64) -> u64 {
+        let start = self.gpu_done_ns.max(self.cpu_ns);
+        self.gpu_done_ns = start + kernel_ns;
+        self.gpu_busy_ns += kernel_ns;
+        self.gpu_done_ns
+    }
+
+    /// Block the CPU until the GPU frontier (device.poll / map wait), then
+    /// pay `sync_ns` of synchronization cost.
+    pub fn sync(&mut self, sync_ns: u64) {
+        self.cpu_ns = self.cpu_ns.max(self.gpu_done_ns) + sync_ns;
+    }
+
+    /// Wall-clock "now": CPU time (the GPU frontier only matters at sync).
+    pub fn now_ns(&self) -> u64 {
+        self.cpu_ns
+    }
+}
+
+/// Accumulated per-phase timing: virtual (calibrated model) and real
+/// (measured on this host's substrate), plus call counts — the raw material
+/// for Table 20.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimeline {
+    pub virtual_ns: [u64; 8],
+    pub real_ns: [u64; 8],
+    pub calls: [u64; 8],
+    pub kernel_virtual_ns: u64,
+    pub sync_virtual_ns: u64,
+    pub sync_calls: u64,
+}
+
+impl PhaseTimeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, phase: usize, virtual_ns: u64, real_ns: u64) {
+        self.virtual_ns[phase] += virtual_ns;
+        self.real_ns[phase] += real_ns;
+        self.calls[phase] += 1;
+    }
+
+    pub fn total_virtual_ns(&self) -> u64 {
+        self.virtual_ns.iter().sum()
+    }
+
+    pub fn total_real_ns(&self) -> u64 {
+        self.real_ns.iter().sum()
+    }
+
+    /// Number of dispatches recorded (dispatch_call phase count).
+    pub fn dispatches(&self) -> u64 {
+        self.calls[4]
+    }
+
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let mut a = Jitter::new(7);
+        let mut b = Jitter::new(7);
+        for _ in 0..100 {
+            let x = a.apply(1000, 0.05);
+            assert_eq!(x, b.apply(1000, 0.05));
+            assert!((950..=1050).contains(&x), "jitter out of band: {x}");
+        }
+    }
+
+    #[test]
+    fn jitter_zero_pct_is_identity() {
+        let mut j = Jitter::new(1);
+        assert_eq!(j.apply(12345, 0.0), 12345);
+    }
+
+    #[test]
+    fn gpu_overlap_semantics() {
+        let mut c = VirtualClock::new();
+        c.advance_cpu(100);
+        c.enqueue_gpu(1000); // gpu busy 100..1100
+        c.advance_cpu(50); // cpu at 150, gpu still running
+        assert_eq!(c.cpu_ns, 150);
+        assert_eq!(c.gpu_done_ns, 1100);
+        c.sync(10);
+        assert_eq!(c.cpu_ns, 1110); // waited for gpu then paid sync
+    }
+
+    #[test]
+    fn gpu_queue_serializes() {
+        let mut c = VirtualClock::new();
+        c.enqueue_gpu(500);
+        c.enqueue_gpu(500);
+        assert_eq!(c.gpu_done_ns, 1000);
+        assert_eq!(c.gpu_busy_ns, 1000);
+    }
+
+    #[test]
+    fn sync_after_gpu_done_is_cheap() {
+        let mut c = VirtualClock::new();
+        c.enqueue_gpu(100);
+        c.advance_cpu(5000); // cpu long past gpu completion
+        c.sync(10);
+        assert_eq!(c.cpu_ns, 5010);
+    }
+
+    #[test]
+    fn timeline_accumulates() {
+        let mut t = PhaseTimeline::new();
+        t.record(0, 10, 20);
+        t.record(0, 10, 20);
+        t.record(7, 5, 5);
+        assert_eq!(t.virtual_ns[0], 20);
+        assert_eq!(t.calls[0], 2);
+        assert_eq!(t.total_virtual_ns(), 25);
+        assert_eq!(t.total_real_ns(), 45);
+    }
+}

@@ -1,0 +1,67 @@
+//! Command encoders, compute passes and command buffers.
+//!
+//! The encoder records commands; nothing executes until `queue.submit`.
+//! Recording still performs real validation work (state checks), and each
+//! recording call advances the virtual clock by its calibrated phase cost —
+//! encoder creation and `finish` are the #2/#3 contributors after submit in
+//! the paper's Table 20 breakdown.
+
+
+
+use super::bindgroup::BindGroupId;
+use super::pipeline::ComputePipelineId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CommandEncoderId(pub u64);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CommandBufferId(pub u64);
+
+/// One recorded command.
+#[derive(Debug, Clone)]
+pub(crate) enum Command {
+    SetPipeline(ComputePipelineId),
+    SetBindGroup(BindGroupId),
+    // workgroup counts are validated at record time; kept for tooling
+    #[allow(dead_code)]
+    Dispatch { x: u32, y: u32, z: u32 },
+}
+
+/// Encoder state machine: open -> (pass open) -> finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum EncoderState {
+    Open,
+    PassOpen,
+    Finished,
+}
+
+#[derive(Debug)]
+pub(crate) struct CommandEncoder {
+    pub label: String,
+    pub state: EncoderState,
+    pub commands: Vec<Command>,
+    /// Dispatch-time validation state within the current pass.
+    pub current_pipeline: Option<ComputePipelineId>,
+    pub current_bind_group: Option<BindGroupId>,
+}
+
+impl CommandEncoder {
+    pub fn new(label: String) -> Self {
+        CommandEncoder {
+            label,
+            state: EncoderState::Open,
+            commands: Vec::with_capacity(8),
+            current_pipeline: None,
+            current_bind_group: None,
+        }
+    }
+}
+
+/// A finished, submittable command buffer.
+#[derive(Debug)]
+pub(crate) struct CommandBuffer {
+    #[allow(dead_code)] // diagnostics
+    pub label: String,
+    pub commands: Vec<Command>,
+    pub consumed: bool,
+}

@@ -1,0 +1,54 @@
+//! Device limits — validated on every resource creation and dispatch, the
+//! way a WebGPU implementation enforces its `GPUSupportedLimits`.
+
+
+
+#[derive(Debug, Clone)]
+pub struct Limits {
+    pub max_buffer_size: usize,
+    pub max_bind_groups: usize,
+    pub max_bindings_per_group: usize,
+    pub max_compute_workgroups_per_dimension: u32,
+    pub max_compute_invocations_per_workgroup: u32,
+    pub max_storage_buffer_binding_size: usize,
+}
+
+impl Default for Limits {
+    /// WebGPU spec defaults (approximately — the values browsers guarantee).
+    fn default() -> Self {
+        Limits {
+            max_buffer_size: 256 << 20,              // 256 MiB
+            max_bind_groups: 4,
+            max_bindings_per_group: 8,
+            max_compute_workgroups_per_dimension: 65_535,
+            max_compute_invocations_per_workgroup: 256,
+            max_storage_buffer_binding_size: 128 << 20,
+        }
+    }
+}
+
+impl Limits {
+    /// A deliberately tiny limit set for failure-injection tests.
+    pub fn tiny() -> Self {
+        Limits {
+            max_buffer_size: 1 << 10,
+            max_bind_groups: 1,
+            max_bindings_per_group: 2,
+            max_compute_workgroups_per_dimension: 4,
+            max_compute_invocations_per_workgroup: 16,
+            max_storage_buffer_binding_size: 1 << 10,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_spec_shaped() {
+        let l = Limits::default();
+        assert_eq!(l.max_compute_workgroups_per_dimension, 65_535);
+        assert!(l.max_buffer_size >= l.max_storage_buffer_binding_size);
+    }
+}

@@ -1,0 +1,40 @@
+//! The WebGPU-shaped dispatch substrate.
+//!
+//! This is the substitution for Dawn / wgpu-native / browser WebGPU (the
+//! paper's subject): a command-buffer API with **real per-call validation**
+//! (usage flags, bind-group compatibility, bounds, limits) and the same call
+//! sequence the paper instruments (Table 20):
+//!
+//! ```text
+//! encoder create -> pass begin -> set pipeline -> set bind group ->
+//! dispatch -> pass end -> encoder finish -> queue submit -> (sync)
+//! ```
+//!
+//! Every call does real work under the wall clock *and* advances a virtual
+//! clock by the calibrated per-phase cost of the selected
+//! [`profile::ImplementationProfile`] (Dawn/Vulkan, wgpu/Vulkan, wgpu/Metal,
+//! Chrome, Safari, Firefox — constants from the paper's Tables 6 and 20).
+//! Submission is asynchronous in the model exactly as in WebGPU: the GPU
+//! completion frontier advances independently of CPU time, which is what
+//! makes single-op benchmarks conflate sync and overestimate per-dispatch
+//! cost by ~20x (the paper's headline methodology finding).
+
+pub mod bindgroup;
+pub mod buffer;
+pub mod clock;
+pub mod device;
+pub mod encoder;
+pub mod limits;
+pub mod pipeline;
+pub mod profile;
+pub mod queue;
+pub mod validation;
+
+pub use bindgroup::{BindGroupDesc, BindGroupId, BindGroupLayoutDesc, BindGroupLayoutId, BindingType};
+pub use buffer::{BufferDesc, BufferId, BufferUsage};
+pub use clock::{PhaseTimeline, VirtualClock, DISPATCH_PHASES};
+pub use device::{Device, KernelRunner, NullRunner};
+pub use encoder::{CommandBufferId, CommandEncoderId};
+pub use limits::Limits;
+pub use pipeline::{ComputePipelineId, KernelIoSpec, ShaderModuleDesc, ShaderModuleId};
+pub use profile::{Backend, ImplementationProfile, Platform};

@@ -1,0 +1,61 @@
+//! Shader modules and compute pipelines.
+//!
+//! In the real system a shader module holds WGSL; here it holds the name of
+//! an AOT-compiled Pallas kernel (an `artifacts/k_*.hlo.txt` module) plus
+//! its I/O signature. Pipeline creation validates the layout against the
+//! kernel signature — the analogue of WGSL binding-interface validation at
+//! `createComputePipeline` time.
+
+
+
+use super::bindgroup::BindGroupLayoutId;
+use crate::tensor::DType;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShaderModuleId(pub u64);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ComputePipelineId(pub u64);
+
+/// Shape + dtype of one kernel input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelIoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl KernelIoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype.size_bytes()
+    }
+}
+
+/// "WGSL source" of the module: the kernel it names + its signature.
+#[derive(Debug, Clone)]
+pub struct ShaderModuleDesc {
+    pub label: String,
+    /// Registry name of the AOT kernel (e.g. "rmsnorm_64").
+    pub kernel: String,
+    pub inputs: Vec<KernelIoSpec>,
+    pub outputs: Vec<KernelIoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct ShaderModule {
+    pub desc: ShaderModuleDesc,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct ComputePipeline {
+    #[allow(dead_code)] // diagnostics
+    pub label: String,
+    pub module: ShaderModuleId,
+    pub layout: BindGroupLayoutId,
+    /// Cached from the module for dispatch-time checks.
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+}

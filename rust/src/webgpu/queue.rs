@@ -1,0 +1,125 @@
+//! High-level dispatch helpers over the raw device API.
+//!
+//! [`run_kernel_dispatch`] performs the full per-operation call sequence the
+//! paper instruments — one encoder, one pass, one dispatch, one submit —
+//! which is exactly what torch-webgpu's eager executor does per FX node.
+//! [`DispatchBatcher`] implements the command-batching experiment (16
+//! dispatches per submit, Table 16's null result).
+
+use super::bindgroup::{BindGroupDesc, BindGroupEntry, BindGroupLayoutDesc, BindGroupLayoutId, BindingType};
+use super::buffer::BufferId;
+use super::device::{Device, KernelRunner};
+use super::pipeline::ComputePipelineId;
+use crate::Result;
+
+/// Create (and cache externally if desired) the layout matching a kernel
+/// with `n_in` inputs and `n_out` outputs: inputs read-only, outputs RW.
+pub fn kernel_layout(device: &mut Device, label: &str, n_in: usize, n_out: usize)
+    -> Result<BindGroupLayoutId>
+{
+    let mut entries = vec![BindingType::ReadOnlyStorage; n_in];
+    entries.extend(vec![BindingType::Storage; n_out]);
+    device.create_bind_group_layout(BindGroupLayoutDesc {
+        label: label.to_string(),
+        entries,
+    })
+}
+
+/// Bind `inputs ++ outputs` densely over `layout` (full-buffer ranges).
+pub fn bind_buffers(
+    device: &mut Device,
+    label: &str,
+    layout: BindGroupLayoutId,
+    inputs: &[BufferId],
+    outputs: &[BufferId],
+) -> Result<super::bindgroup::BindGroupId> {
+    let mut entries = Vec::with_capacity(inputs.len() + outputs.len());
+    for (i, &b) in inputs.iter().chain(outputs.iter()).enumerate() {
+        let size = device.buffer_size(b)?;
+        entries.push(BindGroupEntry { binding: i, buffer: b, offset: 0, size });
+    }
+    device.create_bind_group(BindGroupDesc {
+        label: label.to_string(),
+        layout,
+        entries,
+    })
+}
+
+/// The full single-operation dispatch sequence (8 phases, Table 20 order).
+/// Returns after submit — asynchronous, like `queue.Submit()`; callers that
+/// need results synchronously must `poll_wait`/`map_read`.
+pub fn run_kernel_dispatch(
+    device: &mut Device,
+    pipeline: ComputePipelineId,
+    layout: BindGroupLayoutId,
+    inputs: &[BufferId],
+    outputs: &[BufferId],
+    workgroups: (u32, u32, u32),
+    runner: &dyn KernelRunner,
+) -> Result<()> {
+    let group = bind_buffers(device, "dispatch", layout, inputs, outputs)?;
+    let enc = device.create_command_encoder("dispatch");
+    device.begin_compute_pass(enc)?;
+    device.set_pipeline(enc, pipeline)?;
+    device.set_bind_group(enc, group)?;
+    device.dispatch_workgroups(enc, workgroups.0, workgroups.1, workgroups.2)?;
+    device.end_compute_pass(enc)?;
+    let cb = device.finish(enc)?;
+    device.submit(&[cb], runner)?;
+    Ok(())
+}
+
+/// Command batching: accumulate N dispatches into one encoder and submit
+/// together. The paper found ~0% end-to-end effect because autoregressive
+/// generation forces a sync per token, flushing the batch anyway (§5.1).
+pub struct DispatchBatcher {
+    pub batch_size: usize,
+    pending: Vec<(ComputePipelineId, super::bindgroup::BindGroupId, (u32, u32, u32))>,
+}
+
+impl DispatchBatcher {
+    pub fn new(batch_size: usize) -> Self {
+        DispatchBatcher { batch_size: batch_size.max(1), pending: Vec::new() }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Queue one dispatch; flushes automatically when the batch fills.
+    pub fn dispatch(
+        &mut self,
+        device: &mut Device,
+        pipeline: ComputePipelineId,
+        layout: BindGroupLayoutId,
+        inputs: &[BufferId],
+        outputs: &[BufferId],
+        workgroups: (u32, u32, u32),
+        runner: &dyn KernelRunner,
+    ) -> Result<()> {
+        let group = bind_buffers(device, "batched", layout, inputs, outputs)?;
+        self.pending.push((pipeline, group, workgroups));
+        if self.pending.len() >= self.batch_size {
+            self.flush(device, runner)?;
+        }
+        Ok(())
+    }
+
+    /// Encode all pending dispatches into one command buffer and submit.
+    pub fn flush(&mut self, device: &mut Device, runner: &dyn KernelRunner) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        let enc = device.create_command_encoder("batch");
+        device.begin_compute_pass(enc)?;
+        for (pipe, group, wg) in self.pending.drain(..) {
+            device.set_pipeline(enc, pipe)?;
+            device.set_bind_group(enc, group)?;
+            device.dispatch_workgroups(enc, wg.0, wg.1, wg.2)?;
+        }
+        device.end_compute_pass(enc)?;
+        let cb = device.finish(enc)?;
+        device.submit(&[cb], runner)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,143 @@
+//! Validation rules — the per-operation checks whose cost WebGPU's
+//! security model imposes (the paper's root cause, §2.1). Factored out so
+//! tests can exercise each rule in isolation.
+
+use std::collections::HashMap;
+
+use super::bindgroup::{BindGroupDesc, BindGroupLayoutDesc, BindingType};
+use super::buffer::{Buffer, BufferDesc, BufferId, BufferUsage};
+use super::limits::Limits;
+use crate::{Error, Result};
+
+pub fn validate_buffer_desc(desc: &BufferDesc, limits: &Limits) -> Result<()> {
+    if desc.size == 0 {
+        return Err(Error::Validation(format!("buffer '{}' has size 0", desc.label)));
+    }
+    if desc.size > limits.max_buffer_size {
+        return Err(Error::LimitExceeded(format!(
+            "buffer '{}' size {} > max {}",
+            desc.label, desc.size, limits.max_buffer_size
+        )));
+    }
+    if desc.usage.is_empty() {
+        return Err(Error::Validation(format!("buffer '{}' has empty usage", desc.label)));
+    }
+    Ok(())
+}
+
+pub(crate) fn validate_write(buf: &Buffer, offset: usize, len: usize) -> Result<()> {
+    if buf.destroyed {
+        return Err(Error::Validation("write to destroyed buffer".into()));
+    }
+    if !buf.desc.usage.contains(BufferUsage::COPY_DST) {
+        return Err(Error::Validation(format!(
+            "write_buffer requires COPY_DST on '{}'",
+            buf.desc.label
+        )));
+    }
+    if offset + len > buf.desc.size {
+        return Err(Error::Validation(format!(
+            "write [{}..{}] out of bounds for '{}' (size {})",
+            offset,
+            offset + len,
+            buf.desc.label,
+            buf.desc.size
+        )));
+    }
+    Ok(())
+}
+
+pub(crate) fn validate_bind_group(
+    desc: &BindGroupDesc,
+    layout: &BindGroupLayoutDesc,
+    buffers: &HashMap<BufferId, Buffer>,
+    limits: &Limits,
+) -> Result<()> {
+    if desc.entries.len() != layout.entries.len() {
+        return Err(Error::Validation(format!(
+            "bind group '{}' has {} entries, layout expects {}",
+            desc.label,
+            desc.entries.len(),
+            layout.entries.len()
+        )));
+    }
+    for (i, entry) in desc.entries.iter().enumerate() {
+        if entry.binding != i {
+            return Err(Error::Validation(format!(
+                "bind group '{}': entries must be dense, entry {i} has binding {}",
+                desc.label, entry.binding
+            )));
+        }
+        let buf = buffers.get(&entry.buffer).ok_or_else(|| {
+            Error::InvalidResource(format!("bind group '{}': buffer {:?}", desc.label, entry.buffer))
+        })?;
+        if buf.destroyed {
+            return Err(Error::Validation(format!(
+                "bind group '{}': buffer {:?} is destroyed",
+                desc.label, entry.buffer
+            )));
+        }
+        let required = match layout.entries[i] {
+            BindingType::Storage | BindingType::ReadOnlyStorage => BufferUsage::STORAGE,
+            BindingType::Uniform => BufferUsage::UNIFORM,
+        };
+        if !buf.desc.usage.contains(required) {
+            return Err(Error::Validation(format!(
+                "bind group '{}': binding {i} requires usage {:?}",
+                desc.label, required
+            )));
+        }
+        if entry.offset + entry.size > buf.desc.size {
+            return Err(Error::Validation(format!(
+                "bind group '{}': binding {i} range [{}..{}] exceeds buffer size {}",
+                desc.label,
+                entry.offset,
+                entry.offset + entry.size,
+                buf.desc.size
+            )));
+        }
+        if entry.size > limits.max_storage_buffer_binding_size {
+            return Err(Error::LimitExceeded(format!(
+                "bind group '{}': binding {i} size {} > max binding size {}",
+                desc.label, entry.size, limits.max_storage_buffer_binding_size
+            )));
+        }
+    }
+    Ok(())
+}
+
+pub fn validate_pipeline_interface(
+    module: &super::pipeline::ShaderModuleDesc,
+    layout: &BindGroupLayoutDesc,
+) -> Result<()> {
+    let expected = module.inputs.len() + module.outputs.len();
+    if layout.entries.len() != expected {
+        return Err(Error::Validation(format!(
+            "pipeline '{}': layout has {} bindings, kernel needs {} ({} in + {} out)",
+            module.label,
+            layout.entries.len(),
+            expected,
+            module.inputs.len(),
+            module.outputs.len()
+        )));
+    }
+    // Inputs must be read-only storage; outputs read-write storage.
+    for i in 0..module.inputs.len() {
+        if layout.entries[i] == BindingType::Storage {
+            return Err(Error::Validation(format!(
+                "pipeline '{}': input binding {i} must not be writable",
+                module.label
+            )));
+        }
+    }
+    for (j, entry) in layout.entries[module.inputs.len()..].iter().enumerate() {
+        if *entry != BindingType::Storage {
+            return Err(Error::Validation(format!(
+                "pipeline '{}': output binding {} must be writable storage",
+                module.label,
+                module.inputs.len() + j
+            )));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,229 @@
+//! End-to-end integration: artifacts -> PJRT -> WebGPU substrate -> engine.
+//!
+//! These tests require `make artifacts` to have run (they are skipped with
+//! a clear message otherwise) and exercise the full three-layer stack: the
+//! tiny Qwen config decoding real tokens through per-op dispatches.
+
+use std::collections::HashMap;
+
+use wdb::engine::{run_protocol, Engine, EngineConfig};
+use wdb::fx::builder::{build_decode_graph, expected_dispatches, FusionConfig, GraphDims};
+use wdb::model::ByteTokenizer;
+use wdb::runtime::Registry;
+use wdb::tensor::Tensor;
+use wdb::webgpu::ImplementationProfile;
+
+fn registry() -> Registry {
+    std::env::set_var("WDB_ARTIFACTS", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    Registry::open().expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn manifest_covers_tiny_graphs() {
+    let reg = registry();
+    let dims = GraphDims::qwen_tiny();
+    for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+        let g = build_decode_graph(&dims, fusion);
+        for name in g.kernel_names() {
+            assert!(
+                reg.kernels.contains_key(&name),
+                "kernel '{name}' missing from manifest"
+            );
+        }
+    }
+}
+
+#[test]
+fn registry_executes_a_kernel() {
+    let reg = registry();
+    let x = Tensor::f32(vec![1, 64], (0..64).map(|i| i as f32 / 64.0).collect()).unwrap();
+    let w = Tensor::f32(vec![64], vec![1.0; 64]).unwrap();
+    let (outs, ns) = reg.execute("rmsnorm_64", &[x.clone(), w]).unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].shape, vec![1, 64]);
+    // RMSNorm output has unit RMS with unit weight.
+    let v = outs[0].as_f32().unwrap();
+    let rms: f32 = (v.iter().map(|x| x * x).sum::<f32>() / 64.0).sqrt();
+    assert!((rms - 1.0).abs() < 1e-3, "rms {rms}");
+    assert!(ns > 0);
+}
+
+#[test]
+fn registry_rejects_bad_shapes() {
+    let reg = registry();
+    let x = Tensor::f32(vec![1, 32], vec![0.0; 32]).unwrap();
+    let w = Tensor::f32(vec![64], vec![1.0; 64]).unwrap();
+    assert!(reg.execute("rmsnorm_64", &[x, w]).is_err());
+}
+
+#[test]
+fn engine_generates_deterministic_tokens() {
+    let reg = registry();
+    let mut engine = Engine::new(&reg, EngineConfig::tiny_fused()).unwrap();
+    let tok = ByteTokenizer::new(512);
+    let prompt = tok.paper_prompt();
+    let a = engine.generate(&prompt, 8).unwrap();
+    let b = engine.generate(&prompt, 8).unwrap();
+    assert_eq!(a.tokens, b.tokens, "generation must be deterministic");
+    assert_eq!(a.tokens.len(), 8);
+    assert!(a.tokens.iter().all(|&t| t < 512));
+    assert!(a.ttft_ns > 0 && a.total_ns >= a.ttft_ns);
+}
+
+#[test]
+fn fused_and_unfused_generate_identical_tokens() {
+    // The paper's fusion is numerics-preserving (Appendix N): the token
+    // stream must not change, only the dispatch count and timing.
+    let reg = registry();
+    let prompt = ByteTokenizer::new(512).paper_prompt();
+    let mut fused = Engine::new(&reg, EngineConfig::tiny_fused()).unwrap();
+    let mut unfused = Engine::new(&reg, EngineConfig::tiny_unfused()).unwrap();
+    let rf = fused.generate(&prompt, 6).unwrap();
+    let ru = unfused.generate(&prompt, 6).unwrap();
+    assert_eq!(rf.tokens, ru.tokens, "fusion changed the token stream");
+    // Dispatch counts per step match the graph arithmetic.
+    let dims = GraphDims::qwen_tiny();
+    assert_eq!(
+        rf.dispatches_per_step as usize,
+        expected_dispatches(&dims, FusionConfig::fused())
+    );
+    assert_eq!(
+        ru.dispatches_per_step as usize,
+        expected_dispatches(&dims, FusionConfig::unfused())
+    );
+    // Unfused pays more virtual time per token.
+    assert!(ru.ttft_ns > rf.ttft_ns, "unfused must be slower");
+}
+
+#[test]
+fn fusion_improves_throughput_on_vulkan() {
+    let reg = registry();
+    let prompt = ByteTokenizer::new(512).paper_prompt();
+    let mut fused = Engine::new(&reg, EngineConfig::tiny_fused()).unwrap();
+    let mut unfused = Engine::new(&reg, EngineConfig::tiny_unfused()).unwrap();
+    let rf = fused.generate(&prompt, 6).unwrap();
+    let ru = unfused.generate(&prompt, 6).unwrap();
+    let speedup = rf.tok_per_s / ru.tok_per_s;
+    // Tiny config has ~2.6x fewer dispatches when fused; with per-op
+    // overhead dominating, throughput must improve substantially.
+    assert!(speedup > 1.5, "fusion speedup only {speedup:.2}x");
+}
+
+#[test]
+fn device_argmax_matches_host_argmax() {
+    let reg = registry();
+    let prompt = ByteTokenizer::new(512).paper_prompt();
+    let mut host = Engine::new(&reg, EngineConfig::tiny_fused()).unwrap();
+    let mut dev = Engine::new(
+        &reg,
+        EngineConfig { device_argmax: true, ..EngineConfig::tiny_fused() },
+    )
+    .unwrap();
+    let rh = host.generate(&prompt, 5).unwrap();
+    let rd = dev.generate(&prompt, 5).unwrap();
+    assert_eq!(rh.tokens, rd.tokens, "device argmax changed tokens");
+}
+
+#[test]
+fn protocol_reports_stable_stats() {
+    let reg = registry();
+    let prompt = ByteTokenizer::new(512).paper_prompt();
+    let mut engine = Engine::new(&reg, EngineConfig::tiny_fused()).unwrap();
+    let r = run_protocol(&mut engine, &prompt, 5, 1, 5).unwrap();
+    assert_eq!(r.runs, 5);
+    assert!(r.tok_per_s.mean > 0.0);
+    assert!(r.tok_per_s.cv < 0.10, "CV {:.3} too high", r.tok_per_s.cv);
+    assert!(r.tok_per_s.ci95_lo <= r.tok_per_s.mean);
+    assert!(r.tok_per_s.mean <= r.tok_per_s.ci95_hi);
+}
+
+#[test]
+fn firefox_profile_is_rate_limited() {
+    let reg = registry();
+    let prompt = vec![84usize];
+    let mk = |profile: ImplementationProfile| EngineConfig {
+        profile,
+        ..EngineConfig::tiny_fused()
+    };
+    let mut dawn = Engine::new(&reg, mk(ImplementationProfile::dawn_vulkan_rtx5090())).unwrap();
+    let mut ff = Engine::new(&reg, mk(ImplementationProfile::firefox_metal_m2())).unwrap();
+    let rd = dawn.generate(&prompt, 3).unwrap();
+    let rf = ff.generate(&prompt, 3).unwrap();
+    // ~1040 us floor vs ~24 us dispatch (+ framework): Firefox must be far
+    // slower end-to-end.
+    assert!(
+        rf.total_ns > rd.total_ns * 8,
+        "firefox {} vs dawn {}",
+        rf.total_ns,
+        rd.total_ns
+    );
+}
+
+#[test]
+fn executor_pools_buffers() {
+    let reg = registry();
+    let prompt = vec![10usize];
+    let mut engine = Engine::new(&reg, EngineConfig::tiny_fused()).unwrap();
+    let _ = engine.generate(&prompt, 2).unwrap();
+    let created_after_two = engine.executor.device.stats.buffers_created;
+    let _ = engine.generate(&prompt, 4).unwrap();
+    let created_after_more = engine.executor.device.stats.buffers_created;
+    // Pool reuse: more tokens must not create proportionally more buffers.
+    let growth = created_after_more - created_after_two;
+    assert!(
+        growth < created_after_two / 2,
+        "buffer churn: {created_after_two} then +{growth}"
+    );
+}
+
+#[test]
+fn graph_inputs_all_satisfiable() {
+    // Every input the graph declares is provided by engine step() logic:
+    // indirectly verified by generate() succeeding with a fresh engine for
+    // each fusion preset.
+    let reg = registry();
+    for fusion in [
+        FusionConfig::unfused(),
+        FusionConfig::rmsnorm_only(),
+        FusionConfig::rmsnorm_mlp(),
+        FusionConfig::fused(),
+    ] {
+        let mut engine = Engine::new(
+            &reg,
+            EngineConfig { fusion, ..EngineConfig::tiny_fused() },
+        )
+        .unwrap();
+        let r = engine.generate(&[65], 2).unwrap();
+        assert_eq!(r.tokens.len(), 2, "fusion {fusion:?}");
+    }
+}
+
+#[test]
+fn cache_state_evolves_with_position() {
+    let reg = registry();
+    let mut engine = Engine::new(&reg, EngineConfig::tiny_fused()).unwrap();
+    // Generating from two different prompts must diverge (cache matters).
+    let a = engine.generate(&[65, 66], 4).unwrap();
+    let b = engine.generate(&[90, 91], 4).unwrap();
+    assert_ne!(a.tokens, b.tokens, "prompt had no effect — cache broken?");
+}
+
+#[test]
+fn null_inputs_rejected() {
+    let reg = registry();
+    let mut engine = Engine::new(&reg, EngineConfig::tiny_fused()).unwrap();
+    assert!(engine.generate(&[], 5).is_err());
+    assert!(engine.generate(&[65], 0).is_err());
+}
+
+#[test]
+fn graph_executor_rejects_missing_input() {
+    let reg = registry();
+    let dims = GraphDims::qwen_tiny();
+    let g = build_decode_graph(&dims, FusionConfig::fused());
+    let device = wdb::webgpu::Device::new(ImplementationProfile::zero_overhead());
+    let mut ex = wdb::engine::GraphExecutor::new(device, &reg, 0);
+    ex.prepare(&g).unwrap();
+    let inputs: HashMap<String, Tensor> = HashMap::new();
+    assert!(ex.run(&g, &inputs).is_err());
+}

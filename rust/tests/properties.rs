@@ -1,0 +1,307 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! proptest is unavailable in the offline build, so these use the in-tree
+//! seeded generator (`XorShiftRng`) with wide randomized sweeps — same
+//! spirit: each test states an invariant and hammers it with generated
+//! cases; failures print the offending seed.
+
+use wdb::fx::builder::{build_decode_graph, expected_dispatches, FusionConfig, GraphDims};
+use wdb::fx::census::Census;
+use wdb::fx::fusion;
+use wdb::model::rng::XorShiftRng;
+use wdb::report::json::{self, Value};
+use wdb::stats::{summarize, t_critical_975, welch_t_test};
+use wdb::stats::welch::t_p_value;
+use wdb::tensor::Tensor;
+use wdb::webgpu::clock::{Jitter, VirtualClock};
+use wdb::webgpu::profile::PhaseCosts;
+use wdb::webgpu::ImplementationProfile;
+
+// ------------------------------------------------------------- census ----
+#[test]
+fn census_identities_hold_for_all_layer_counts() {
+    for layers in 1..=96 {
+        let dims = GraphDims {
+            layers,
+            ..GraphDims::qwen25_05b()
+        };
+        let c = Census::for_dims(&dims);
+        // compute total follows 36L + 12
+        assert_eq!(c.compute.total(), 36 * layers + 12, "L={layers}");
+        // node total is the sum of its parts
+        assert_eq!(
+            c.total_nodes(),
+            c.compute.total() + c.shape_ops + c.placeholders_outputs + c.metadata
+        );
+        // fused is strictly fewer and positive
+        assert!(c.fused_dispatches() < c.unfused_dispatches());
+        assert!(c.fused_dispatches() > 0);
+        // savings = rmsnorm + mlp + kv = 13L
+        assert_eq!(c.paper_fusion_savings().total(), 13 * layers);
+    }
+}
+
+// ---------------------------------------------------------- fx builder ----
+#[test]
+fn decode_graphs_validate_for_random_architectures() {
+    let mut rng = XorShiftRng::new(0xF00D);
+    for trial in 0..40 {
+        let head_dim = [8, 16, 32][rng.below(3)];
+        let kv_heads = [1, 2, 4][rng.below(3)];
+        let group = 1 + rng.below(4);
+        let dims = GraphDims {
+            hidden: kv_heads * group * head_dim,
+            layers: 1 + rng.below(8),
+            heads: kv_heads * group,
+            kv_heads,
+            head_dim,
+            intermediate: 16 * (1 + rng.below(12)),
+            vocab: 256 + 16 * rng.below(32),
+            max_seq: 32,
+            tiny_names: true,
+        };
+        for fusion_cfg in [
+            FusionConfig::unfused(),
+            FusionConfig::rmsnorm_only(),
+            FusionConfig::rmsnorm_mlp(),
+            FusionConfig::rmsnorm_mlp_kv(),
+            FusionConfig::fused(),
+        ] {
+            let g = build_decode_graph(&dims, fusion_cfg);
+            g.validate()
+                .unwrap_or_else(|e| panic!("trial {trial} {dims:?} {fusion_cfg:?}: {e}"));
+            assert_eq!(
+                g.dispatch_count(),
+                expected_dispatches(&dims, fusion_cfg),
+                "trial {trial} {fusion_cfg:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fusion_passes_preserve_ssa_and_reduce_dispatches() {
+    let mut rng = XorShiftRng::new(0xFA57);
+    for _ in 0..20 {
+        let dims = GraphDims {
+            layers: 1 + rng.below(6),
+            ..GraphDims::qwen_tiny()
+        };
+        let g = build_decode_graph(&dims, FusionConfig::unfused());
+        let f = fusion::fuse_all(&g, "tiny");
+        f.validate().expect("fused graph must stay valid SSA");
+        assert!(f.dispatch_count() < g.dispatch_count());
+        // Passes reach exactly the builder's fully-fused count.
+        let direct = build_decode_graph(&dims, FusionConfig::fused());
+        assert_eq!(f.dispatch_count(), direct.dispatch_count());
+        // Outputs preserved.
+        assert_eq!(f.outputs.len(), g.outputs.len());
+    }
+}
+
+// ------------------------------------------------------------- clock ----
+#[test]
+fn virtual_clock_is_monotone_under_random_ops() {
+    let mut rng = XorShiftRng::new(0xC10C);
+    for _ in 0..50 {
+        let mut c = VirtualClock::new();
+        let mut last_cpu = 0;
+        for _ in 0..200 {
+            match rng.below(3) {
+                0 => c.advance_cpu(rng.below(10_000) as u64),
+                1 => {
+                    c.enqueue_gpu(rng.below(10_000) as u64);
+                }
+                _ => c.sync(rng.below(1_000) as u64),
+            }
+            assert!(c.cpu_ns >= last_cpu, "cpu clock went backwards");
+            last_cpu = c.cpu_ns;
+            assert!(c.gpu_busy_ns <= c.gpu_done_ns.max(c.cpu_ns) + c.gpu_busy_ns);
+        }
+        // After a final sync the CPU is at/past the GPU frontier.
+        c.sync(0);
+        assert!(c.cpu_ns >= c.gpu_done_ns);
+    }
+}
+
+#[test]
+fn jitter_stays_in_band_for_random_bases() {
+    let mut rng = XorShiftRng::new(0x7177);
+    let mut j = Jitter::new(0x1234);
+    for _ in 0..500 {
+        let base = rng.below(1_000_000) as u64;
+        let pct = rng.uniform() * 0.5;
+        let v = j.apply(base, pct);
+        let lo = (base as f64 * (1.0 - pct) - 1.0).max(0.0);
+        let hi = base as f64 * (1.0 + pct) + 1.0;
+        assert!(
+            (v as f64) >= lo && (v as f64) <= hi,
+            "jitter {v} outside [{lo}, {hi}] for base {base} pct {pct}"
+        );
+    }
+}
+
+#[test]
+fn phase_costs_preserve_total_for_random_values() {
+    let mut rng = XorShiftRng::new(0xFACE);
+    for _ in 0..500 {
+        let total = rng.below(10_000_000) as u64;
+        let pc = PhaseCosts::from_total(total);
+        assert_eq!(pc.total(), total, "total {total}");
+    }
+}
+
+// -------------------------------------------------------------- stats ----
+#[test]
+fn ci_contains_mean_for_random_samples() {
+    let mut rng = XorShiftRng::new(0x57A7);
+    for _ in 0..100 {
+        let n = 2 + rng.below(50);
+        let mu = rng.uniform_in(-100.0, 100.0);
+        let sigma = rng.uniform_in(0.01, 10.0);
+        let xs: Vec<f64> = (0..n).map(|_| mu + sigma * rng.normal()).collect();
+        let s = summarize(&xs);
+        assert!(s.ci95_lo <= s.mean && s.mean <= s.ci95_hi);
+        assert!(s.std >= 0.0);
+    }
+}
+
+#[test]
+fn welch_p_is_symmetric_and_bounded() {
+    let mut rng = XorShiftRng::new(0x3E1C);
+    for _ in 0..100 {
+        let na = 3 + rng.below(20);
+        let nb = 3 + rng.below(20);
+        let a: Vec<f64> = (0..na).map(|_| rng.normal() * 2.0 + 1.0).collect();
+        let b: Vec<f64> = (0..nb).map(|_| rng.normal() * 3.0 - 1.0).collect();
+        let ab = welch_t_test(&a, &b);
+        let ba = welch_t_test(&b, &a);
+        assert!((0.0..=1.0).contains(&ab.p), "p {}", ab.p);
+        assert!((ab.p - ba.p).abs() < 1e-9, "asymmetric p");
+        assert!((ab.t + ba.t).abs() < 1e-9, "t not antisymmetric");
+    }
+}
+
+#[test]
+fn t_p_value_monotone_in_t() {
+    for df in [2.0, 5.0, 10.0, 29.0, 100.0] {
+        let mut last = 1.0 + 1e-12;
+        for i in 0..60 {
+            let t = i as f64 * 0.25;
+            let p = t_p_value(t, df);
+            assert!(p <= last + 1e-12, "p not decreasing at t={t}, df={df}");
+            last = p;
+        }
+    }
+}
+
+#[test]
+fn t_critical_monotone_decreasing_in_df() {
+    let mut last = f64::INFINITY;
+    for df in 1..200 {
+        let t = t_critical_975(df as f64);
+        assert!(t <= last + 1e-9, "t_crit not decreasing at df={df}");
+        assert!(t >= 1.9);
+        last = t;
+    }
+}
+
+// --------------------------------------------------------------- json ----
+fn random_json(rng: &mut XorShiftRng, depth: usize) -> Value {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.below(2) == 0),
+        2 => Value::Num((rng.uniform_in(-1e6, 1e6) * 100.0).round() / 100.0),
+        3 => {
+            let len = rng.below(12);
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.below(96) as u8 + 32;
+                    c as char
+                })
+                .collect();
+            Value::Str(s)
+        }
+        4 => Value::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..rng.below(5) {
+                m.insert(format!("k{i}"), random_json(rng, depth - 1));
+            }
+            Value::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn json_roundtrips_random_documents() {
+    let mut rng = XorShiftRng::new(0x1507);
+    for trial in 0..200 {
+        let v = random_json(&mut rng, 3);
+        let compact = json::to_string(&v);
+        let pretty = json::to_string_pretty(&v);
+        assert_eq!(json::parse(&compact).unwrap(), v, "trial {trial}: {compact}");
+        assert_eq!(json::parse(&pretty).unwrap(), v, "trial {trial}");
+    }
+}
+
+// ------------------------------------------------------------- tensor ----
+#[test]
+fn tensor_slice_concat_identity() {
+    let mut rng = XorShiftRng::new(0x7E50);
+    for _ in 0..100 {
+        let rows = 1 + rng.below(6);
+        let cols = 2 * (1 + rng.below(16));
+        let data = rng.normal_vec_f32(rows * cols, 1.0);
+        let t = Tensor::f32(vec![rows, cols], data.clone()).unwrap();
+        let a = t.slice_last_2d(0, cols / 2).unwrap();
+        let b = t.slice_last_2d(cols / 2, cols).unwrap();
+        // splicing halves back reproduces the rows
+        for r in 0..rows {
+            let row: Vec<f32> = a.as_f32().unwrap()[r * cols / 2..(r + 1) * cols / 2]
+                .iter()
+                .chain(&b.as_f32().unwrap()[r * cols / 2..(r + 1) * cols / 2])
+                .copied()
+                .collect();
+            assert_eq!(&row, &data[r * cols..(r + 1) * cols]);
+        }
+    }
+}
+
+#[test]
+fn tensor_argmax_agrees_with_scan() {
+    let mut rng = XorShiftRng::new(0xA93A);
+    for _ in 0..100 {
+        let n = 1 + rng.below(2000);
+        let data = rng.normal_vec_f32(n, 5.0);
+        let t = Tensor::f32(vec![1, n], data.clone()).unwrap();
+        let got = t.argmax_row().unwrap();
+        let want = data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+            .unwrap()
+            .0;
+        assert_eq!(got, want);
+    }
+}
+
+// ------------------------------------------------------------ profiles ----
+#[test]
+fn profile_catalog_invariants() {
+    let catalog = ImplementationProfile::table6_catalog();
+    let mut names = std::collections::HashSet::new();
+    for p in &catalog {
+        assert!(names.insert(p.name), "duplicate profile {}", p.name);
+        assert!(p.sequential_dispatch_ns() > 0);
+        assert!(p.single_op_dispatch_ns() > 0);
+        assert!(p.jitter_pct >= 0.0 && p.jitter_pct < 1.0);
+        assert!(p.kernel_gflops > 0.0 && p.mem_gbps > 0.0);
+        // Firefox floor only on firefox
+        if p.implementation != "firefox" {
+            assert_eq!(p.submit_floor_ns, 0, "{}", p.name);
+        } else {
+            assert!(p.submit_floor_ns > 1_000_000);
+        }
+    }
+}

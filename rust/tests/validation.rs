@@ -1,0 +1,411 @@
+//! Failure-injection tests for the WebGPU substrate's validation layer —
+//! the per-operation checks whose cost the paper characterizes must
+//! actually enforce the API contract (and never panic).
+
+use wdb::tensor::DType;
+use wdb::webgpu::queue::{bind_buffers, kernel_layout, run_kernel_dispatch, DispatchBatcher};
+use wdb::webgpu::{
+    BindGroupDesc, BindGroupLayoutDesc, BindingType, BufferDesc, BufferUsage, Device,
+    ImplementationProfile, KernelIoSpec, Limits, NullRunner, ShaderModuleDesc,
+};
+
+fn device() -> Device {
+    Device::new(ImplementationProfile::zero_overhead())
+}
+
+fn spec64() -> KernelIoSpec {
+    KernelIoSpec { shape: vec![64], dtype: DType::F32 }
+}
+
+fn storage_buffer(dev: &mut Device, size: usize) -> wdb::webgpu::BufferId {
+    dev.create_buffer(BufferDesc {
+        label: "b".into(),
+        size,
+        usage: BufferUsage::STORAGE | BufferUsage::COPY_DST | BufferUsage::MAP_READ,
+    })
+    .unwrap()
+}
+
+// ------------------------------------------------------------- buffers ----
+#[test]
+fn zero_size_buffer_rejected() {
+    let mut dev = device();
+    let r = dev.create_buffer(BufferDesc {
+        label: "z".into(),
+        size: 0,
+        usage: BufferUsage::STORAGE,
+    });
+    assert!(r.is_err());
+    assert_eq!(dev.stats.validation_errors, 1);
+}
+
+#[test]
+fn oversized_buffer_rejected() {
+    let mut dev = Device::with_limits(ImplementationProfile::zero_overhead(), Limits::tiny());
+    let r = dev.create_buffer(BufferDesc {
+        label: "big".into(),
+        size: 4096, // tiny limit is 1 KiB
+        usage: BufferUsage::STORAGE,
+    });
+    assert!(matches!(r, Err(wdb::Error::LimitExceeded(_))));
+}
+
+#[test]
+fn empty_usage_rejected() {
+    let mut dev = device();
+    assert!(dev
+        .create_buffer(BufferDesc { label: "u".into(), size: 16, usage: BufferUsage(0) })
+        .is_err());
+}
+
+#[test]
+fn write_requires_copy_dst() {
+    let mut dev = device();
+    let b = dev
+        .create_buffer(BufferDesc {
+            label: "ro".into(),
+            size: 16,
+            usage: BufferUsage::STORAGE,
+        })
+        .unwrap();
+    assert!(dev.write_buffer(b, 0, &[0u8; 8]).is_err());
+}
+
+#[test]
+fn write_out_of_bounds_rejected() {
+    let mut dev = device();
+    let b = storage_buffer(&mut dev, 16);
+    assert!(dev.write_buffer(b, 12, &[0u8; 8]).is_err());
+    assert!(dev.write_buffer(b, 0, &[0u8; 16]).is_ok());
+}
+
+#[test]
+fn destroyed_buffer_unusable() {
+    let mut dev = device();
+    let b = storage_buffer(&mut dev, 16);
+    dev.destroy_buffer(b).unwrap();
+    assert!(dev.write_buffer(b, 0, &[0u8; 4]).is_err());
+    assert!(dev.map_read(b).is_err());
+    assert!(dev.buffer_size(b).is_err());
+}
+
+#[test]
+fn map_read_requires_usage() {
+    let mut dev = device();
+    let b = dev
+        .create_buffer(BufferDesc {
+            label: "nm".into(),
+            size: 16,
+            usage: BufferUsage::STORAGE,
+        })
+        .unwrap();
+    assert!(dev.map_read(b).is_err());
+}
+
+// ---------------------------------------------------------- bind groups ----
+#[test]
+fn bind_group_entry_count_must_match_layout() {
+    let mut dev = device();
+    let b = storage_buffer(&mut dev, 256);
+    let layout = dev
+        .create_bind_group_layout(BindGroupLayoutDesc {
+            label: "l".into(),
+            entries: vec![BindingType::ReadOnlyStorage, BindingType::Storage],
+        })
+        .unwrap();
+    // bind only one buffer -> mismatch
+    let r = bind_buffers(&mut dev, "g", layout, &[b], &[]);
+    assert!(r.is_err());
+}
+
+#[test]
+fn bind_group_usage_mismatch_rejected() {
+    let mut dev = device();
+    let uniform_only = dev
+        .create_buffer(BufferDesc {
+            label: "uni".into(),
+            size: 64,
+            usage: BufferUsage::UNIFORM,
+        })
+        .unwrap();
+    let layout = dev
+        .create_bind_group_layout(BindGroupLayoutDesc {
+            label: "l".into(),
+            entries: vec![BindingType::Storage],
+        })
+        .unwrap();
+    let r = dev.create_bind_group(BindGroupDesc {
+        label: "g".into(),
+        layout,
+        entries: vec![wdb::webgpu::bindgroup::BindGroupEntry {
+            binding: 0,
+            buffer: uniform_only,
+            offset: 0,
+            size: 64,
+        }],
+    });
+    assert!(r.is_err());
+}
+
+#[test]
+fn bind_group_range_out_of_bounds_rejected() {
+    let mut dev = device();
+    let b = storage_buffer(&mut dev, 64);
+    let layout = dev
+        .create_bind_group_layout(BindGroupLayoutDesc {
+            label: "l".into(),
+            entries: vec![BindingType::Storage],
+        })
+        .unwrap();
+    let r = dev.create_bind_group(BindGroupDesc {
+        label: "g".into(),
+        layout,
+        entries: vec![wdb::webgpu::bindgroup::BindGroupEntry {
+            binding: 0,
+            buffer: b,
+            offset: 32,
+            size: 64, // 32 + 64 > 64
+        }],
+    });
+    assert!(r.is_err());
+}
+
+#[test]
+fn too_many_bindings_rejected() {
+    let mut dev = Device::with_limits(ImplementationProfile::zero_overhead(), Limits::tiny());
+    let r = dev.create_bind_group_layout(BindGroupLayoutDesc {
+        label: "l".into(),
+        entries: vec![BindingType::Storage; 3], // tiny limit is 2
+    });
+    assert!(matches!(r, Err(wdb::Error::LimitExceeded(_))));
+}
+
+// ------------------------------------------------------------ pipeline ----
+#[test]
+fn pipeline_interface_must_match_layout() {
+    let mut dev = device();
+    let module = dev
+        .create_shader_module(ShaderModuleDesc {
+            label: "k".into(),
+            kernel: "k".into(),
+            inputs: vec![spec64(), spec64()],
+            outputs: vec![spec64()],
+        })
+        .unwrap();
+    // layout with wrong binding count
+    let bad = dev
+        .create_bind_group_layout(BindGroupLayoutDesc {
+            label: "bad".into(),
+            entries: vec![BindingType::ReadOnlyStorage, BindingType::Storage],
+        })
+        .unwrap();
+    assert!(dev.create_compute_pipeline("p", module, bad).is_err());
+    // layout with writable input
+    let wrong_rw = dev
+        .create_bind_group_layout(BindGroupLayoutDesc {
+            label: "rw".into(),
+            entries: vec![BindingType::Storage, BindingType::Storage, BindingType::Storage],
+        })
+        .unwrap();
+    assert!(dev.create_compute_pipeline("p", module, wrong_rw).is_err());
+    // correct layout
+    let good = kernel_layout(&mut dev, "good", 2, 1).unwrap();
+    assert!(dev.create_compute_pipeline("p", module, good).is_ok());
+}
+
+// ---------------------------------------------------- encoder lifecycle ----
+#[test]
+fn dispatch_requires_pipeline_and_bind_group() {
+    let mut dev = device();
+    let enc = dev.create_command_encoder("e");
+    dev.begin_compute_pass(enc).unwrap();
+    assert!(dev.dispatch_workgroups(enc, 1, 1, 1).is_err()); // no pipeline
+}
+
+#[test]
+fn dispatch_outside_pass_rejected() {
+    let mut dev = device();
+    let enc = dev.create_command_encoder("e");
+    assert!(dev.dispatch_workgroups(enc, 1, 1, 1).is_err());
+}
+
+#[test]
+fn zero_and_oversized_workgroups_rejected() {
+    let mut dev = device();
+    let (pipeline, layout, b_in, b_out) = trivial_pipeline(&mut dev);
+    let group = bind_buffers(&mut dev, "g", layout, &[b_in], &[b_out]).unwrap();
+    let enc = dev.create_command_encoder("e");
+    dev.begin_compute_pass(enc).unwrap();
+    dev.set_pipeline(enc, pipeline).unwrap();
+    dev.set_bind_group(enc, group).unwrap();
+    assert!(dev.dispatch_workgroups(enc, 0, 1, 1).is_err());
+    assert!(dev.dispatch_workgroups(enc, 70_000, 1, 1).is_err());
+    assert!(dev.dispatch_workgroups(enc, 1, 1, 1).is_ok());
+}
+
+#[test]
+fn finish_with_open_pass_rejected() {
+    let mut dev = device();
+    let enc = dev.create_command_encoder("e");
+    dev.begin_compute_pass(enc).unwrap();
+    assert!(dev.finish(enc).is_err());
+}
+
+#[test]
+fn double_begin_pass_rejected() {
+    let mut dev = device();
+    let enc = dev.create_command_encoder("e");
+    dev.begin_compute_pass(enc).unwrap();
+    assert!(dev.begin_compute_pass(enc).is_err());
+}
+
+#[test]
+fn command_buffer_single_submission() {
+    let mut dev = device();
+    let (pipeline, layout, b_in, b_out) = trivial_pipeline(&mut dev);
+    let group = bind_buffers(&mut dev, "g", layout, &[b_in], &[b_out]).unwrap();
+    let enc = dev.create_command_encoder("e");
+    dev.begin_compute_pass(enc).unwrap();
+    dev.set_pipeline(enc, pipeline).unwrap();
+    dev.set_bind_group(enc, group).unwrap();
+    dev.dispatch_workgroups(enc, 1, 1, 1).unwrap();
+    dev.end_compute_pass(enc).unwrap();
+    let cb = dev.finish(enc).unwrap();
+    dev.submit(&[cb], &NullRunner).unwrap();
+    // second submission of the same buffer must fail
+    assert!(dev.submit(&[cb], &NullRunner).is_err());
+}
+
+#[test]
+fn submit_rejects_destroyed_bound_buffer() {
+    let mut dev = device();
+    let (pipeline, layout, b_in, b_out) = trivial_pipeline(&mut dev);
+    let group = bind_buffers(&mut dev, "g", layout, &[b_in], &[b_out]).unwrap();
+    let enc = dev.create_command_encoder("e");
+    dev.begin_compute_pass(enc).unwrap();
+    dev.set_pipeline(enc, pipeline).unwrap();
+    dev.set_bind_group(enc, group).unwrap();
+    dev.dispatch_workgroups(enc, 1, 1, 1).unwrap();
+    dev.end_compute_pass(enc).unwrap();
+    let cb = dev.finish(enc).unwrap();
+    dev.destroy_buffer(b_in).unwrap(); // destroy between finish and submit
+    assert!(dev.submit(&[cb], &NullRunner).is_err());
+}
+
+fn trivial_pipeline(
+    dev: &mut Device,
+) -> (
+    wdb::webgpu::ComputePipelineId,
+    wdb::webgpu::BindGroupLayoutId,
+    wdb::webgpu::BufferId,
+    wdb::webgpu::BufferId,
+) {
+    let module = dev
+        .create_shader_module(ShaderModuleDesc {
+            label: "t".into(),
+            kernel: "t".into(),
+            inputs: vec![spec64()],
+            outputs: vec![spec64()],
+        })
+        .unwrap();
+    let layout = kernel_layout(dev, "t", 1, 1).unwrap();
+    let pipeline = dev.create_compute_pipeline("t", module, layout).unwrap();
+    let b_in = storage_buffer(dev, 256);
+    let b_out = storage_buffer(dev, 256);
+    (pipeline, layout, b_in, b_out)
+}
+
+// ----------------------------------------------------------- behaviors ----
+#[test]
+fn null_runner_dispatch_roundtrip() {
+    let mut dev = device();
+    let (pipeline, layout, b_in, b_out) = trivial_pipeline(&mut dev);
+    run_kernel_dispatch(&mut dev, pipeline, layout, &[b_in], &[b_out], (1, 1, 1), &NullRunner)
+        .unwrap();
+    assert_eq!(dev.stats.dispatches_executed, 1);
+    let bytes = dev.map_read(b_out).unwrap();
+    assert!(bytes.iter().all(|&x| x == 0));
+}
+
+#[test]
+fn batcher_flushes_at_batch_size() {
+    let mut dev = device();
+    let (pipeline, layout, b_in, b_out) = trivial_pipeline(&mut dev);
+    let mut batcher = DispatchBatcher::new(4);
+    for i in 0..10 {
+        batcher
+            .dispatch(&mut dev, pipeline, layout, &[b_in], &[b_out], (1, 1, 1), &NullRunner)
+            .unwrap();
+        let expected_submits = (i + 1) / 4;
+        assert_eq!(dev.stats.submits, expected_submits as u64, "after {} dispatches", i + 1);
+    }
+    batcher.flush(&mut dev, &NullRunner).unwrap();
+    assert_eq!(dev.stats.dispatches_executed, 10);
+    assert_eq!(dev.stats.submits, 3); // 4 + 4 + final 2
+}
+
+#[test]
+fn batching_reduces_per_dispatch_overhead_but_sync_negates_it() {
+    // The paper's Table 16 null result: batching helps until a sync flushes
+    // the queue every token anyway.
+    let profile = ImplementationProfile::wgpu_vulkan_rtx5090();
+
+    // Unbatched: 16 single-dispatch submits.
+    let mut dev = Device::new(profile.clone());
+    let (pipeline, layout, b_in, b_out) = trivial_pipeline(&mut dev);
+    for _ in 0..16 {
+        run_kernel_dispatch(&mut dev, pipeline, layout, &[b_in], &[b_out], (1, 1, 1), &NullRunner)
+            .unwrap();
+    }
+    let unbatched = dev.clock.now_ns();
+
+    // Batched: one submit of 16 dispatches.
+    let mut dev = Device::new(profile);
+    let (pipeline, layout, b_in, b_out) = trivial_pipeline(&mut dev);
+    let mut batcher = DispatchBatcher::new(16);
+    for _ in 0..16 {
+        batcher
+            .dispatch(&mut dev, pipeline, layout, &[b_in], &[b_out], (1, 1, 1), &NullRunner)
+            .unwrap();
+    }
+    let batched = dev.clock.now_ns();
+    assert!(
+        batched < unbatched,
+        "batching must reduce pure dispatch cost ({batched} vs {unbatched})"
+    );
+    // But with a sync after each *token* (one dispatch per token here), the
+    // batch never fills and the benefit disappears:
+    let mut dev = Device::new(ImplementationProfile::wgpu_vulkan_rtx5090());
+    let (pipeline, layout, b_in, b_out) = trivial_pipeline(&mut dev);
+    let mut batcher = DispatchBatcher::new(16);
+    for _ in 0..16 {
+        batcher
+            .dispatch(&mut dev, pipeline, layout, &[b_in], &[b_out], (1, 1, 1), &NullRunner)
+            .unwrap();
+        batcher.flush(&mut dev, &NullRunner).unwrap(); // per-token sync flush
+        dev.poll_wait();
+    }
+    let flushed = dev.clock.now_ns();
+    assert!(flushed >= unbatched, "per-token sync must negate batching");
+}
+
+#[test]
+fn error_paths_never_corrupt_device() {
+    // After a storm of invalid calls the device still works.
+    let mut dev = device();
+    for _ in 0..50 {
+        let _ = dev.create_buffer(BufferDesc {
+            label: "bad".into(),
+            size: 0,
+            usage: BufferUsage::STORAGE,
+        });
+        let enc = dev.create_command_encoder("e");
+        let _ = dev.dispatch_workgroups(enc, 1, 1, 1);
+        let _ = dev.finish(enc);
+    }
+    assert!(dev.stats.validation_errors >= 50);
+    let (pipeline, layout, b_in, b_out) = trivial_pipeline(&mut dev);
+    run_kernel_dispatch(&mut dev, pipeline, layout, &[b_in], &[b_out], (1, 1, 1), &NullRunner)
+        .unwrap();
+    assert_eq!(dev.stats.dispatches_executed, 1);
+}
