@@ -1,0 +1,65 @@
+//! Bench: serving-throughput scaling — how aggregate tok/s grows with
+//! concurrent session count as the fixed per-step sync amortizes across
+//! the interleaved round (the serving-side analogue of the paper's fusion
+//! table). Runs the REAL engine path for every step; virtual-clock numbers
+//! are deterministic per seed, real wall time is this host's cost of
+//! driving the substrate.
+
+#[path = "harness.rs"]
+#[allow(dead_code)] // shared bench harness; this bin only uses fmt_ns
+mod harness;
+
+use wdb::engine::{Engine, EngineConfig};
+use wdb::model::ByteTokenizer;
+use wdb::runtime::Registry;
+use wdb::serve::{ServeConfig, ServingEngine};
+use wdb::tables::serving::{phase_attribution_table, scaling_table};
+use wdb::webgpu::ImplementationProfile;
+
+fn main() {
+    const SEED: u64 = 0x5EBE;
+    let registry = Registry::open().expect("registry");
+    let prompt = ByteTokenizer::new(512).paper_prompt();
+    let tokens = 16;
+
+    for profile in [
+        ImplementationProfile::dawn_vulkan_rtx5090(),
+        ImplementationProfile::wgpu_metal_m2(),
+    ] {
+        let name = profile.name;
+        let ec = EngineConfig { profile, ..EngineConfig::tiny_fused() };
+
+        // Single-session baseline for the N=1 parity check.
+        let mut engine = Engine::new(&registry, ec.clone()).expect("engine");
+        engine.reseed(SEED);
+        let base = engine.generate(&prompt, tokens).expect("generate");
+
+        let mut rows = Vec::new();
+        let wall0 = std::time::Instant::now();
+        for n in [1usize, 2, 4, 8] {
+            let mut se = ServingEngine::new(
+                &registry,
+                ServeConfig { engine: ec.clone(), max_concurrent: n },
+            )
+            .expect("serving engine");
+            se.reseed(SEED);
+            for _ in 0..n {
+                se.submit(&prompt, tokens).expect("submit");
+            }
+            let report = se.run_to_completion().expect("serve");
+            rows.push((n, report));
+        }
+
+        println!("== {name} ==\n");
+        println!("{}", scaling_table(&rows).to_markdown());
+        println!("{}", phase_attribution_table(&rows).to_markdown());
+        println!(
+            "N=1 parity: engine {:.2} tok/s vs serving {:.2} tok/s",
+            base.tok_per_s, rows[0].1.agg_tok_per_s
+        );
+        println!(
+            "real wall for the sweep: {}\n",
+            harness::fmt_ns(wall0.elapsed().as_nanos() as f64)
+        );
+    }
+}

@@ -8,7 +8,7 @@
 use wdb::profiler::{measure_dispatch_overhead, timeline_rows};
 use wdb::webgpu::ImplementationProfile;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> wdb::Result<()> {
     println!("== The ~20x single-op overestimate, mechanistically ==\n");
     let dawn = measure_dispatch_overhead(ImplementationProfile::dawn_vulkan_rtx5090(), 200)?;
     println!("Dawn/Vulkan, 200 dispatches:");

@@ -11,7 +11,7 @@ use wdb::fx::census::Census;
 use wdb::model::ByteTokenizer;
 use wdb::runtime::Registry;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> wdb::Result<()> {
     // --- 1. the published arithmetic ---
     let census = Census::for_dims(&GraphDims::qwen25_05b());
     let s = census.paper_fusion_savings();

@@ -13,7 +13,7 @@ use wdb::engine::{Engine, EngineConfig};
 use wdb::model::ByteTokenizer;
 use wdb::runtime::Registry;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> wdb::Result<()> {
     // 1. Open the artifact registry (compiles kernels lazily).
     let registry = Registry::open()?;
     println!("artifacts: {} kernels on {}", registry.kernels.len(),

@@ -24,7 +24,7 @@ use crate::fx::builder::{FusionConfig, GraphDims};
 use crate::fx::census::Census;
 use crate::model::ByteTokenizer;
 use crate::profiler::{measure_dispatch_overhead, timeline_rows};
-use crate::report::{json, write_results};
+use crate::report::write_results;
 use crate::runtime::Registry;
 use crate::webgpu::device::KernelTimePolicy;
 use crate::webgpu::ImplementationProfile;
@@ -123,6 +123,7 @@ pub fn run(args: Args) -> Result<()> {
         "workloads" => cmd_workloads(&args),
         "batch-sweep" => cmd_batch_sweep(&args),
         "serve" => cmd_serve(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
@@ -147,7 +148,11 @@ Commands:
   workloads                       CNN/ViT/U-Net dispatch streams (Table 1*)
   batch-sweep [--reps 5]          empirical crossover validation (App. F)
   serve [--requests 16] [--tokens 10] [--profile dawn]
-                                  FIFO request loop over the real engine";
+                                  FIFO request loop over the real engine
+  serve-bench [--sessions 1,2,4,8] [--tokens 16] [--profile dawn]
+              [--out DIR]         multi-session serving scaling table:
+                                  aggregate tok/s + per-phase attribution
+                                  vs concurrent session count";
 
 fn dims_by_model(name: &str) -> Result<GraphDims> {
     Ok(match name {
@@ -205,18 +210,7 @@ fn cmd_all_tables(args: &Args) -> Result<()> {
     for id in crate::tables::all_ids() {
         let t = crate::tables::generate(id)?;
         println!("{}", t.to_markdown());
-        let mut rows = Vec::new();
-        for r in &t.rows {
-            rows.push(json::Value::Arr(r.iter().map(|c| json::s(c)).collect()));
-        }
-        let v = json::obj(vec![
-            ("id", json::s(&t.id)),
-            ("title", json::s(&t.title)),
-            ("columns", json::Value::Arr(t.columns.iter().map(|c| json::s(c)).collect())),
-            ("rows", json::Value::Arr(rows)),
-            ("notes", json::Value::Arr(t.notes.iter().map(|c| json::s(c)).collect())),
-        ]);
-        let path = write_results(&out, &format!("table_{id:02}"), &v)?;
+        let path = write_results(&out, &format!("table_{id:02}"), &t.to_json())?;
         eprintln!("wrote {}", path.display());
     }
     Ok(())
@@ -471,12 +465,105 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse "1,2,4,8"-style session-count lists.
+fn parse_session_counts(s: &str) -> Result<Vec<usize>> {
+    let counts: Vec<usize> = s
+        .split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| {
+            p.trim()
+                .parse::<usize>()
+                .map_err(|_| Error::Graph(format!("bad session count '{p}'")))
+        })
+        .collect::<Result<_>>()?;
+    if counts.is_empty() || counts.iter().any(|&n| n == 0) {
+        return Err(Error::Graph("--sessions needs positive counts".into()));
+    }
+    Ok(counts)
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    use crate::serve::{ServeConfig, ServingEngine};
+
+    const SEED: u64 = 0x5EBE;
+    let registry = Registry::open()?;
+    let tokens = args.flag_usize("tokens", 16);
+    let profile = profile_by_name(args.flag("profile").unwrap_or("dawn"))?;
+    let counts = parse_session_counts(args.flag("sessions").unwrap_or("1,2,4,8"))?;
+    let tok = ByteTokenizer::new(registry.config("qwen-tiny")?.vocab);
+    let prompt = tok.paper_prompt();
+    let ec = EngineConfig { profile: profile.clone(), ..EngineConfig::tiny_fused() };
+
+    println!(
+        "Serving scaling bench: {} tokens/session, prompt {} tokens, profile {}\n",
+        tokens,
+        prompt.len(),
+        profile.name
+    );
+
+    // Single-session engine baseline: the N=1 serving row must match it
+    // (same shared-substrate path, same seed, same call sequence).
+    let mut engine = Engine::new(&registry, ec.clone())?;
+    engine.reseed(SEED);
+    let base = engine.generate(&prompt, tokens)?;
+
+    let mut rows = Vec::with_capacity(counts.len());
+    for &n in &counts {
+        let mut se = ServingEngine::new(
+            &registry,
+            ServeConfig { engine: ec.clone(), max_concurrent: n },
+        )?;
+        se.reseed(SEED);
+        for _ in 0..n {
+            se.submit(&prompt, tokens)?;
+        }
+        let report = se.run_to_completion()?;
+        rows.push((n, report));
+    }
+
+    let scaling = crate::tables::serving::scaling_table(&rows);
+    let phases = crate::tables::serving::phase_attribution_table(&rows);
+    println!("{}", scaling.to_markdown());
+    println!("{}", phases.to_markdown());
+    if rows[0].0 == 1 {
+        println!(
+            "single-session Engine baseline: {:.1} tok/s — serving N=1 row: \
+             {:.1} tok/s (identical substrate path)",
+            base.tok_per_s, rows[0].1.agg_tok_per_s
+        );
+    } else {
+        println!(
+            "single-session Engine baseline: {:.1} tok/s (add 1 to --sessions \
+             for the parity row)",
+            base.tok_per_s
+        );
+    }
+
+    if let Some(out) = args.flag("out") {
+        let dir = std::path::PathBuf::from(out);
+        for t in [&scaling, &phases] {
+            let path = write_results(&dir, &format!("serve_bench_{}", t.id), &t.to_json())?;
+            eprintln!("wrote {}", path.display());
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn argv(s: &[&str]) -> Vec<String> {
         s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn session_counts_parse() {
+        assert_eq!(parse_session_counts("1,2,4,8").unwrap(), vec![1, 2, 4, 8]);
+        assert_eq!(parse_session_counts("3").unwrap(), vec![3]);
+        assert!(parse_session_counts("0").is_err());
+        assert!(parse_session_counts("a,b").is_err());
+        assert!(parse_session_counts("").is_err());
     }
 
     #[test]

@@ -5,9 +5,17 @@
 //! in order, paying (1) the per-op framework cost (Python interpreter /
 //! tensor metadata in the paper, ~59-71 us — a virtual-clock constant
 //! here), (2) the full 8-phase dispatch sequence per kernel node, and
-//! (3) kernel execution on the real PJRT CPU client. Intermediate values
-//! chain GPU-side (no sync); only the caller's explicit `map_read` on the
-//! logits buffer synchronizes.
+//! (3) kernel execution on the kernel runtime. Intermediate values chain
+//! GPU-side (no sync); only the caller's explicit `map_read` on the logits
+//! buffer synchronizes.
+//!
+//! Everything a `GraphExecutor` owns is **session-independent** and shared
+//! by the multi-session serving engine (`crate::serve`): the device, the
+//! prepared-pipeline cache, the bind-group-layout cache, the size-class
+//! buffer pool, the bind-group cache, and the pinned weight buffers.
+//! Per-session decode state (KV caches, position, generated tokens) lives
+//! in `crate::serve::SessionState` — the executor never sees it except as
+//! the `inputs` of one `run` call.
 
 use std::collections::HashMap;
 
@@ -33,18 +41,74 @@ struct Prepared {
     workgroups: (u32, u32, u32),
 }
 
+/// Shared prepared-pipeline + bind-group-layout cache. Pipelines compile
+/// once per kernel name (off the request path, like Dawn pipeline caching)
+/// and are reused by every session the serving engine interleaves.
+#[derive(Default)]
+struct PipelineCache {
+    prepared: HashMap<String, Prepared>,
+    layouts: HashMap<(usize, usize), BindGroupLayoutId>,
+}
+
+impl PipelineCache {
+    /// Create pipelines for every kernel a graph uses and compile the AOT
+    /// modules.
+    fn prepare(&mut self, device: &mut Device, registry: &Registry, graph: &FxGraph) -> Result<()> {
+        for name in graph.kernel_names() {
+            if self.prepared.contains_key(&name) {
+                continue;
+            }
+            registry.ensure_loaded(&name)?;
+            let spec = registry.spec(&name)?;
+            let key = (spec.inputs.len(), spec.outputs.len());
+            let layout = match self.layouts.get(&key) {
+                Some(&l) => l,
+                None => {
+                    let l = kernel_layout(device, &name, key.0, key.1)?;
+                    self.layouts.insert(key, l);
+                    l
+                }
+            };
+            let module = device.create_shader_module(ShaderModuleDesc {
+                label: name.clone(),
+                kernel: name.clone(),
+                inputs: spec.inputs.clone(),
+                outputs: spec.outputs.clone(),
+            })?;
+            let pipeline = device.create_compute_pipeline(&name, module, layout)?;
+            // Workgroup count: ceil(out elements / 256) — matches the WGSL
+            // convention of 256-thread workgroups.
+            let out_elems: usize = spec.outputs.iter().map(KernelIoSpec::numel).sum();
+            let wg = ((out_elems + 255) / 256).max(1) as u32;
+            self.prepared.insert(
+                name.clone(),
+                Prepared {
+                    pipeline,
+                    layout,
+                    inputs: spec.inputs.clone(),
+                    outputs: spec.outputs.clone(),
+                    workgroups: (wg.min(65_535), 1, 1),
+                },
+            );
+        }
+        Ok(())
+    }
+}
+
 pub struct GraphExecutor<'r> {
     pub device: Device,
     registry: &'r Registry,
-    prepared: HashMap<String, Prepared>,
-    layouts: HashMap<(usize, usize), BindGroupLayoutId>,
+    pipelines: PipelineCache,
     /// Size-class buffer pool (the paper's buffer-pooling experiment; on by
     /// default because re-creating buffers per dispatch is purely hostile).
+    /// Shared across sessions: a retired session's buffers are recycled by
+    /// whichever session dispatches next.
     pool: HashMap<usize, Vec<BufferId>>,
     /// PERF (§Perf L3): weights pinned into persistent device buffers at
     /// prepare time — uploaded once, bound directly per dispatch. This is
     /// also the faithful WebGPU pattern: weight buffers live on the GPU for
-    /// the model's lifetime; only activations move.
+    /// the model's lifetime; only activations move. One copy serves every
+    /// session.
     pinned: HashMap<ValueId, BufferId>,
     /// PERF: bind-group cache keyed by (layout, bound buffers) — the
     /// paper's "bind group caching" experiment (hash-based lookup, §5.1).
@@ -56,6 +120,9 @@ pub struct GraphExecutor<'r> {
     pub framework_ns_per_op: u64,
     /// Dispatches issued since construction.
     pub dispatch_count: u64,
+    /// Accumulated framework-overhead virtual ns (for per-session and
+    /// per-phase attribution in the serving metrics).
+    pub framework_virtual_ns: u64,
 }
 
 impl<'r> GraphExecutor<'r> {
@@ -63,13 +130,13 @@ impl<'r> GraphExecutor<'r> {
         GraphExecutor {
             device,
             registry,
-            prepared: HashMap::new(),
-            layouts: HashMap::new(),
+            pipelines: PipelineCache::default(),
             pool: HashMap::new(),
             pinned: HashMap::new(),
             bind_cache: HashMap::new(),
             framework_ns_per_op,
             dispatch_count: 0,
+            framework_virtual_ns: 0,
         }
     }
 
@@ -96,47 +163,10 @@ impl<'r> GraphExecutor<'r> {
         Ok(pinned)
     }
 
-    /// Create pipelines for every kernel a graph uses and compile the AOT
-    /// modules (off the request path, like Dawn pipeline caching).
+    /// Create pipelines for every kernel a graph uses (off the request
+    /// path; shared across all sessions).
     pub fn prepare(&mut self, graph: &FxGraph) -> Result<()> {
-        for name in graph.kernel_names() {
-            if self.prepared.contains_key(&name) {
-                continue;
-            }
-            self.registry.ensure_loaded(&name)?;
-            let spec = self.registry.spec(&name)?;
-            let key = (spec.inputs.len(), spec.outputs.len());
-            let layout = match self.layouts.get(&key) {
-                Some(&l) => l,
-                None => {
-                    let l = kernel_layout(&mut self.device, &name, key.0, key.1)?;
-                    self.layouts.insert(key, l);
-                    l
-                }
-            };
-            let module = self.device.create_shader_module(ShaderModuleDesc {
-                label: name.clone(),
-                kernel: name.clone(),
-                inputs: spec.inputs.clone(),
-                outputs: spec.outputs.clone(),
-            })?;
-            let pipeline = self.device.create_compute_pipeline(&name, module, layout)?;
-            // Workgroup count: ceil(out elements / 256) — matches the WGSL
-            // convention of 256-thread workgroups.
-            let out_elems: usize = spec.outputs.iter().map(KernelIoSpec::numel).sum();
-            let wg = ((out_elems + 255) / 256).max(1) as u32;
-            self.prepared.insert(
-                name.clone(),
-                Prepared {
-                    pipeline,
-                    layout,
-                    inputs: spec.inputs.clone(),
-                    outputs: spec.outputs.clone(),
-                    workgroups: (wg.min(65_535), 1, 1),
-                },
-            );
-        }
-        Ok(())
+        self.pipelines.prepare(&mut self.device, self.registry, graph)
     }
 
     fn acquire(&mut self, size: usize) -> Result<BufferId> {
@@ -192,8 +222,10 @@ impl<'r> GraphExecutor<'r> {
                     // metadata cost in torch-webgpu (drifted per run).
                     let fw = self.device.drifted_cost(self.framework_ns_per_op);
                     self.device.clock.advance_cpu(fw);
+                    self.framework_virtual_ns += fw;
 
                     let prep = self
+                        .pipelines
                         .prepared
                         .get(kname)
                         .ok_or_else(|| {

@@ -1,25 +1,25 @@
-//! Autoregressive inference engine.
+//! Autoregressive single-request engine — a 1-session wrapper over the
+//! multi-session [`ServingEngine`](crate::serve::ServingEngine).
 //!
 //! Per token: host embedding gather -> full decode-step graph (one WebGPU
 //! dispatch per kernel node) -> logits readback via `map_read` (the paper's
 //! per-token GPU->CPU sync, ~11 ms) -> host argmax -> next token. The
 //! device-side-argmax variant (Appendix H) replaces the full-logits
 //! readback with an extra dispatch plus a 4-byte readback.
+//!
+//! The engine owns exactly one [`SessionState`] and drives it through the
+//! serving engine's encode/finish path, so a `generate()` here is cost-
+//! and token-identical to a 1-session serving run (`wdb serve-bench`'s
+//! N=1 row checks this).
 
-use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
 use std::time::Instant;
 
-use crate::fx::builder::{build_decode_graph, FusionConfig, GraphDims};
-use crate::fx::graph::FxGraph;
-use crate::model::weights::ModelWeights;
-use crate::runtime::hostops;
+use crate::fx::builder::FusionConfig;
 use crate::runtime::registry::Registry;
-use crate::tensor::Tensor;
-use crate::webgpu::queue::{bind_buffers, kernel_layout};
-use crate::webgpu::{Device, ImplementationProfile, ShaderModuleDesc};
+use crate::serve::{ServeConfig, ServingEngine, SessionState};
+use crate::webgpu::ImplementationProfile;
 use crate::{Error, Result};
-
-use super::executor::GraphExecutor;
 
 /// Default torch-webgpu framework overhead: per-operation overhead (~95 us)
 /// minus Dawn's per-dispatch cost (~24 us) -> ~71 us of Python/framework
@@ -39,7 +39,7 @@ pub struct EngineConfig {
     pub weight_seed: u64,
     /// How kernel time advances the virtual GPU frontier. `Calibrated`
     /// (default) keeps benchmark CV at the profile's jitter; `Measured`
-    /// feeds real PJRT wall time into the clock (the real-system mode).
+    /// feeds real kernel wall time into the clock (the real-system mode).
     pub kernel_time_policy: crate::webgpu::device::KernelTimePolicy,
 }
 
@@ -80,193 +80,56 @@ pub struct GenResult {
     pub tok_per_s: f64,
 }
 
-/// Pre-created device-argmax pipeline (Appendix H variant).
-struct ArgmaxPrepared {
-    #[allow(dead_code)] // kept for diagnostics/logging
-    kernel: String,
-    pipeline: crate::webgpu::ComputePipelineId,
-    layout: crate::webgpu::BindGroupLayoutId,
+pub struct Engine<'r> {
+    /// The underlying 1-session serving engine (shared device, prepared
+    /// pipelines, buffer pool, pinned weights). `Deref` exposes its
+    /// `executor`/`dims`/`graph`/`weights`/`config` fields directly; the
+    /// engine's `EngineConfig` lives at `serving.config.engine` (single
+    /// source of truth — no duplicated copy to drift).
+    pub serving: ServingEngine<'r>,
+    session: SessionState,
 }
 
-pub struct Engine<'r> {
-    pub config: EngineConfig,
-    pub dims: GraphDims,
-    pub graph: FxGraph,
-    pub executor: GraphExecutor<'r>,
-    pub weights: ModelWeights,
-    caches: Vec<(Tensor, Tensor)>,
-    pos: usize,
-    argmax: Option<ArgmaxPrepared>,
+impl<'r> Deref for Engine<'r> {
+    type Target = ServingEngine<'r>;
+
+    fn deref(&self) -> &ServingEngine<'r> {
+        &self.serving
+    }
+}
+
+impl<'r> DerefMut for Engine<'r> {
+    fn deref_mut(&mut self) -> &mut ServingEngine<'r> {
+        &mut self.serving
+    }
 }
 
 impl<'r> Engine<'r> {
     pub fn new(registry: &'r Registry, config: EngineConfig) -> Result<Self> {
-        let mc = registry.config(&config.model)?;
-        let dims = GraphDims::from_manifest(mc);
-        let graph = build_decode_graph(&dims, config.fusion);
-        graph.validate()?;
-        let mut device = Device::new(config.profile.clone());
-        device.kernel_time_policy = config.kernel_time_policy;
-        let mut executor = GraphExecutor::new(device, registry, config.framework_ns_per_op);
-        executor.prepare(&graph)?;
-
-        let argmax = if config.device_argmax {
-            let name = format!("argmax_{}", dims.vocab);
-            registry.ensure_loaded(&name)?;
-            let spec = registry.spec(&name)?;
-            let layout = kernel_layout(&mut executor.device, &name, 1, 1)?;
-            let module = executor.device.create_shader_module(ShaderModuleDesc {
-                label: name.clone(),
-                kernel: name.clone(),
-                inputs: spec.inputs.clone(),
-                outputs: spec.outputs.clone(),
-            })?;
-            let pipeline = executor.device.create_compute_pipeline(&name, module, layout)?;
-            Some(ArgmaxPrepared { kernel: name, pipeline, layout })
-        } else {
-            None
-        };
-
-        let weights = ModelWeights::synthesize(&dims, config.weight_seed);
-        // PERF (§Perf L3): weights live in persistent device buffers —
-        // uploaded once here, bound directly on every dispatch.
-        executor.pin_inputs(&graph, &weights.by_name)?;
-        let caches = (0..dims.layers)
-            .map(|_| {
-                let shape = vec![dims.max_seq, dims.kv_heads, dims.head_dim];
-                (Tensor::zeros_f32(shape.clone()), Tensor::zeros_f32(shape))
-            })
-            .collect();
-
-        Ok(Engine {
-            config,
-            dims,
-            graph,
-            executor,
-            weights,
-            caches,
-            pos: 0,
-            argmax,
-        })
+        let serving = ServingEngine::new(
+            registry,
+            ServeConfig { engine: config, max_concurrent: 1 },
+        )?;
+        // An open-ended session for manual `step()` driving; `generate`
+        // replaces it per run.
+        let session = serving.create_session(Vec::new(), usize::MAX, 0);
+        Ok(Engine { serving, session })
     }
 
+    /// Drop all decode state (KV caches, position, token history).
     pub fn reset(&mut self) {
-        let shape = vec![self.dims.max_seq, self.dims.kv_heads, self.dims.head_dim];
-        for c in &mut self.caches {
-            *c = (Tensor::zeros_f32(shape.clone()), Tensor::zeros_f32(shape.clone()));
-        }
-        self.pos = 0;
+        self.session = self.serving.create_session(Vec::new(), usize::MAX, 0);
     }
 
     /// Reseed the virtual-cost jitter (independent benchmark runs).
     pub fn reseed(&mut self, seed: u64) {
-        self.executor.device.reseed_jitter(seed);
+        self.serving.reseed(seed);
     }
 
     /// One decode step: returns the argmax token of the logits.
     pub fn step(&mut self, token: usize) -> Result<usize> {
-        if self.pos >= self.dims.max_seq {
-            return Err(Error::Graph(format!(
-                "KV cache capacity {} exhausted",
-                self.dims.max_seq
-            )));
-        }
-        // Host embedding gather (Table 10 "Other": embedding).
-        let x = hostops::embed(&self.weights.embedding, token)?;
-
-        let mut inputs: HashMap<String, Tensor> = HashMap::new();
-        inputs.insert("x".into(), x);
-        inputs.insert("pos_i".into(), Tensor::scalar_i32(self.pos as i32));
-        inputs.insert("pos_ip1".into(), Tensor::scalar_i32(self.pos as i32 + 1));
-        inputs.insert("pos_f".into(), Tensor::scalar_f32(self.pos as f32));
-        inputs.insert("inv_freq".into(), self.weights.inv_freq.clone());
-        for (l, (k, v)) in self.caches.iter().enumerate() {
-            inputs.insert(format!("l{l}.k_cache"), k.clone());
-            inputs.insert(format!("l{l}.v_cache"), v.clone());
-        }
-        // Weights are NOT passed per step: they were pinned into persistent
-        // device buffers at engine construction (executor.pin_inputs).
-
-        let (mut outs, logits_buf) = self.executor.run(&self.graph, &inputs)?;
-
-        // Update caches for the next step.
-        for l in 0..self.dims.layers {
-            let k = outs
-                .remove(&format!("l{l}.k_cache"))
-                .ok_or_else(|| Error::Graph(format!("missing l{l}.k_cache output")))?;
-            let v = outs
-                .remove(&format!("l{l}.v_cache"))
-                .ok_or_else(|| Error::Graph(format!("missing l{l}.v_cache output")))?;
-            self.caches[l] = (k, v);
-        }
-        self.pos += 1;
-
-        // Token selection: the per-token sync point.
-        let logits = outs
-            .remove("logits")
-            .ok_or_else(|| Error::Graph("missing logits output".into()))?;
-        let next = if self.argmax.is_some() {
-            // Device-side argmax: one more dispatch, then a 4-byte readback.
-            let idx = self.device_argmax(&logits)?;
-            if let Some(buf) = logits_buf {
-                self.executor.release_logits(buf)?;
-            }
-            idx
-        } else {
-            // Full-logits readback (map_read pays sync + per-byte transfer),
-            // then host argmax — the production path.
-            if let Some(buf) = logits_buf {
-                let bytes = self.executor.device.map_read(buf)?;
-                self.executor.release_logits(buf)?;
-                let mut best = 0usize;
-                let mut bestv = f32::NEG_INFINITY;
-                for (i, c) in bytes.chunks_exact(4).enumerate() {
-                    let x = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-                    if x > bestv {
-                        bestv = x;
-                        best = i;
-                    }
-                }
-                best
-            } else {
-                logits.argmax_row()?
-            }
-        };
-        Ok(next)
-    }
-
-    fn device_argmax(&mut self, logits: &Tensor) -> Result<usize> {
-        use crate::webgpu::{BufferDesc, BufferUsage};
-        let prep = self.argmax.as_ref().expect("device_argmax without pipeline");
-        let (pipeline, layout) = (prep.pipeline, prep.layout);
-        let dev = &mut self.executor.device;
-        let in_buf = dev.create_buffer(BufferDesc {
-            label: "argmax-in".into(),
-            size: logits.size_bytes(),
-            usage: BufferUsage::STORAGE | BufferUsage::COPY_DST,
-        })?;
-        dev.write_buffer(in_buf, 0, logits.data.as_bytes())?;
-        let out_buf = dev.create_buffer(BufferDesc {
-            label: "argmax-out".into(),
-            size: 4,
-            usage: BufferUsage::STORAGE | BufferUsage::MAP_READ,
-        })?;
-        let group = bind_buffers(dev, "argmax", layout, &[in_buf], &[out_buf])?;
-        let enc = dev.create_command_encoder("argmax");
-        dev.begin_compute_pass(enc)?;
-        dev.set_pipeline(enc, pipeline)?;
-        dev.set_bind_group(enc, group)?;
-        dev.dispatch_workgroups(enc, 1, 1, 1)?;
-        dev.end_compute_pass(enc)?;
-        let cb = dev.finish(enc)?;
-        let registry = self.executor.registry();
-        self.executor.device.submit(&[cb], registry)?;
-        // Only 4 bytes cross the bus — the Appendix H point.
-        let bytes = self.executor.device.map_read(out_buf)?;
-        let idx = i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
-        self.executor.device.destroy_buffer(in_buf)?;
-        self.executor.device.destroy_buffer(out_buf)?;
-        Ok(idx)
+        let h = self.serving.encode_session(&mut self.session, token, false)?;
+        self.serving.finish_session(&mut self.session, h)
     }
 
     /// Full generation: prefill the prompt token-by-token (seq=1 steps, the
@@ -275,37 +138,27 @@ impl<'r> Engine<'r> {
         if prompt.is_empty() || n_new == 0 {
             return Err(Error::Graph("prompt and n_new must be non-empty".into()));
         }
-        self.reset();
         let wall0 = Instant::now();
-        let t0 = self.executor.device.clock.now_ns();
-        let d0 = self.executor.dispatch_count;
-
-        // Prefill: feed prompt tokens; logits of intermediate tokens unused.
-        let mut next = 0usize;
-        for &tok in prompt {
-            next = self.step(tok)?;
+        self.session = self.serving.create_session(prompt.to_vec(), n_new, 0);
+        while !self.session.finished() {
+            let (token, was_prompt) = self
+                .session
+                .take_input()
+                .ok_or_else(|| Error::Graph("session has no input token".into()))?;
+            let h = self
+                .serving
+                .encode_session(&mut self.session, token, was_prompt)?;
+            self.serving.finish_session(&mut self.session, h)?;
         }
-        let ttft = self.executor.device.clock.now_ns() - t0;
-        let steps_so_far = prompt.len() as u64;
-        let dispatches_per_step =
-            (self.executor.dispatch_count - d0) / steps_so_far.max(1);
-
-        let mut tokens = Vec::with_capacity(n_new);
-        tokens.push(next);
-        let mut per_token_ns = vec![ttft];
-        for _ in 1..n_new {
-            let t_tok = self.executor.device.clock.now_ns();
-            next = self.step(next)?;
-            tokens.push(next);
-            per_token_ns.push(self.executor.device.clock.now_ns() - t_tok);
-        }
-        let total_ns = self.executor.device.clock.now_ns() - t0;
+        let m = &self.session.metrics;
+        let ttft_ns = m.first_token_ns.saturating_sub(m.admitted_ns);
+        let total_ns = m.finished_ns.saturating_sub(m.admitted_ns);
         Ok(GenResult {
-            tokens,
-            ttft_ns: ttft,
+            tokens: self.session.tokens.clone(),
+            ttft_ns,
             total_ns,
-            per_token_ns,
-            dispatches_per_step,
+            per_token_ns: m.per_token_ns.clone(),
+            dispatches_per_step: m.prefill_dispatches / m.prefill_steps.max(1),
             real_wall_ns: wall0.elapsed().as_nanos() as u64,
             tok_per_s: n_new as f64 / (total_ns as f64 / 1e9),
         })

@@ -1,6 +1,11 @@
 //! The inference engine: executes FX decode graphs through the WebGPU
-//! substrate + PJRT runtime, autoregressively, with the paper's benchmark
-//! protocol (warmup -> timed runs -> mean/CI/CV) and overhead accounting.
+//! substrate + kernel runtime, autoregressively, with the paper's
+//! benchmark protocol (warmup -> timed runs -> mean/CI/CV) and overhead
+//! accounting.
+//!
+//! Per-session decode state lives in [`crate::serve::SessionState`]; the
+//! [`Engine`] here is the single-request wrapper over the multi-session
+//! [`crate::serve::ServingEngine`].
 
 pub mod executor;
 pub mod inference;

@@ -1,48 +1,74 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls — no `thiserror` in the offline
+//! build (the crate is dependency-free by default; see Cargo.toml).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// WebGPU-substrate validation failure (the paper's per-operation
     /// validation cost exists because these checks run on every call).
-    #[error("validation error: {0}")]
     Validation(String),
 
     /// A resource id that does not exist (destroyed or never created).
-    #[error("invalid resource: {0}")]
     InvalidResource(String),
 
     /// Device limit exceeded (bind group count, buffer size, dispatch dims).
-    #[error("limit exceeded: {0}")]
     LimitExceeded(String),
 
-    /// PJRT runtime failure (compile or execute).
-    #[error("runtime error: {0}")]
+    /// Kernel runtime failure (reference interpreter or PJRT compile/execute).
     Runtime(String),
 
     /// Artifact loading / manifest problems.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// FX graph construction or execution problems.
-    #[error("graph error: {0}")]
     Graph(String),
 
-    #[error("shape error: {0}")]
     Shape(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// JSON parse/serialize failure (in-tree parser, `report::json`).
-    #[error("json error: {0}")]
     Json(String),
 
-    #[error("xla error: {0}")]
     Xla(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Validation(m) => write!(f, "validation error: {m}"),
+            Error::InvalidResource(m) => write!(f, "invalid resource: {m}"),
+            Error::LimitExceeded(m) => write!(f, "limit exceeded: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Graph(m) => write!(f, "graph error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

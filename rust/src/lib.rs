@@ -10,13 +10,30 @@
 //!   (`python/compile/model.py`), fused and unfused op flows.
 //! - **L3** (this crate): the coordinator — a WebGPU-shaped dispatch
 //!   substrate with real per-call validation and calibrated per-backend
-//!   cost profiles, a PJRT runtime that executes the AOT kernels, an
-//!   FX-style op graph with the paper's fusion passes, an autoregressive
-//!   inference engine, and the benchmark harness that regenerates every
-//!   table in the paper.
+//!   cost profiles, a kernel runtime that executes the AOT kernels (PJRT
+//!   with `--features pjrt`, a pure-Rust reference interpreter otherwise),
+//!   an FX-style op graph with the paper's fusion passes, an
+//!   autoregressive inference engine, a **multi-session serving engine**
+//!   ([`serve`]) that interleaves concurrent decode streams over one
+//!   shared substrate, and the benchmark harness that regenerates every
+//!   table in the paper plus the serving-scaling table.
 //!
-//! Python never runs on the request path: after `make artifacts` the `wdb`
-//! binary is self-contained.
+//! Python never runs on the request path: with artifacts the `wdb` binary
+//! is self-contained, and without them the built-in manifest + host
+//! reference runtime keep the whole stack (tests, benches, `serve-bench`)
+//! hermetic.
+//!
+//! ## Serving
+//!
+//! [`serve::ServingEngine`] owns one device, one prepared-pipeline cache,
+//! one buffer pool and one pinned copy of the weights, and round-robins
+//! decode steps across up to `max_concurrent` sessions with FIFO admission
+//! beyond that. Fixed per-step synchronization cost is paid once per round
+//! (coalesced readback) instead of once per session — the serving-side
+//! analogue of the paper's fusion result; per-dispatch and framework
+//! overheads remain per-operation, exactly as the paper's accounting
+//! predicts. See `rust/src/serve/mod.rs` for the scheduling model and
+//! `wdb serve-bench` for the scaling table.
 
 pub mod baselines;
 pub mod cli;
@@ -28,6 +45,7 @@ pub mod model;
 pub mod profiler;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod tables;
 pub mod tensor;

@@ -47,6 +47,30 @@ impl TableDoc {
         self
     }
 
+    /// JSON form for `report::write_results` (id/title/columns/rows/notes),
+    /// matching the layout `wdb all-tables` dumps.
+    pub fn to_json(&self) -> super::json::Value {
+        use super::json::{self, Value};
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| Value::Arr(r.iter().map(|c| json::s(c)).collect()))
+            .collect();
+        json::obj(vec![
+            ("id", json::s(&self.id)),
+            ("title", json::s(&self.title)),
+            (
+                "columns",
+                Value::Arr(self.columns.iter().map(|c| json::s(c)).collect()),
+            ),
+            ("rows", Value::Arr(rows)),
+            (
+                "notes",
+                Value::Arr(self.notes.iter().map(|c| json::s(c)).collect()),
+            ),
+        ])
+    }
+
     pub fn to_markdown(&self) -> String {
         let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
         for row in &self.rows {

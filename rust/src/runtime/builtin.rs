@@ -1,0 +1,280 @@
+//! Built-in kernel manifest — the in-crate mirror of the registry that
+//! `python/compile/aot.py` exports to `artifacts/manifest.json`.
+//!
+//! When no artifacts directory exists (the offline/default configuration),
+//! [`super::Registry::builtin`] loads these specs and executes them through
+//! the host reference interpreter, so the full engine/serving/test stack
+//! runs hermetically. Shapes, tags and FLOP counts match `aot.py`
+//! entry-for-entry (the `decode_step_tiny` whole-graph module is omitted:
+//! nothing on the Rust side executes it).
+
+use std::collections::HashMap;
+
+use crate::fx::builder::GraphDims;
+use crate::tensor::DType;
+use crate::webgpu::KernelIoSpec;
+
+use super::registry::{KernelSpec, ManifestConfig};
+
+fn io(shape: &[usize]) -> KernelIoSpec {
+    KernelIoSpec { shape: shape.to_vec(), dtype: DType::F32 }
+}
+
+fn io_i32(shape: &[usize]) -> KernelIoSpec {
+    KernelIoSpec { shape: shape.to_vec(), dtype: DType::I32 }
+}
+
+fn matmul_flops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+struct Builder {
+    kernels: HashMap<String, KernelSpec>,
+}
+
+impl Builder {
+    fn add(
+        &mut self,
+        name: &str,
+        inputs: Vec<KernelIoSpec>,
+        outputs: Vec<KernelIoSpec>,
+        tags: &[&str],
+        flops: f64,
+        notes: &str,
+    ) {
+        self.kernels.insert(
+            name.to_string(),
+            KernelSpec {
+                name: name.to_string(),
+                file: format!("k_{name}.hlo.txt"),
+                inputs,
+                outputs,
+                tags: tags.iter().map(|s| s.to_string()).collect(),
+                flops,
+                notes: notes.to_string(),
+            },
+        );
+    }
+}
+
+/// Every kernel the tiny decode graphs, the engine, and the bench suite
+/// reference, keyed by name.
+pub fn builtin_kernels() -> HashMap<String, KernelSpec> {
+    let t = GraphDims::qwen_tiny();
+    let (h, qd, kv, inter, v, s) =
+        (t.hidden, t.q_dim(), t.kv_dim(), t.intermediate, t.vocab, t.max_seq);
+    let (nh, kvh, d) = (t.heads, t.kv_heads, t.head_dim);
+    let half = d / 2;
+    let mut b = Builder { kernels: HashMap::new() };
+
+    // ---- tiny-config decode kernels (one per distinct op x shape) ----
+    b.add(&format!("matmul_{h}_{qd}"), vec![io(&[1, h]), io(&[h, qd])], vec![io(&[1, qd])],
+          &["tiny", "matmul"], matmul_flops(1, h, qd), "q/o projection");
+    b.add(&format!("matmul_{h}_{kv}"), vec![io(&[1, h]), io(&[h, kv])], vec![io(&[1, kv])],
+          &["tiny", "matmul"], matmul_flops(1, h, kv), "separate k or v projection (unfused flow)");
+    b.add(&format!("matmul_{h}_{inter}"), vec![io(&[1, h]), io(&[h, inter])], vec![io(&[1, inter])],
+          &["tiny", "matmul"], matmul_flops(1, h, inter), "gate/up projection (unfused flow)");
+    b.add(&format!("matmul_{inter}_{h}"), vec![io(&[1, inter]), io(&[inter, h])], vec![io(&[1, h])],
+          &["tiny", "matmul"], matmul_flops(1, inter, h), "down projection");
+    b.add(&format!("matmul_{h}_{v}"), vec![io(&[1, h]), io(&[h, v])], vec![io(&[1, v])],
+          &["tiny", "matmul"], matmul_flops(1, h, v), "lm head");
+    b.add(&format!("kv_fused_{h}_{}", 2 * kv), vec![io(&[1, h]), io(&[h, 2 * kv])],
+          vec![io(&[1, 2 * kv])], &["tiny", "fused"], matmul_flops(1, h, 2 * kv),
+          "K+V fusion (2 dispatches -> 1)");
+
+    b.add(&format!("rmsnorm_{h}"), vec![io(&[1, h]), io(&[h])], vec![io(&[1, h])],
+          &["tiny", "fused", "rmsnorm"], 0.0, "fused RMSNorm (6 -> 1)");
+    b.add(&format!("rms_pow_{h}"), vec![io(&[1, h])], vec![io(&[1, h])], &["tiny", "rmsnorm"], 0.0, "");
+    b.add(&format!("rms_mean_{h}"), vec![io(&[1, h])], vec![io(&[1, 1])], &["tiny", "rmsnorm"], 0.0, "");
+    b.add("rms_add_eps_1", vec![io(&[1, 1])], vec![io(&[1, 1])], &["tiny", "rmsnorm"], 0.0, "");
+    b.add("rms_rsqrt_1", vec![io(&[1, 1])], vec![io(&[1, 1])], &["tiny", "rmsnorm"], 0.0, "");
+    b.add(&format!("rms_mul_x_{h}"), vec![io(&[1, h]), io(&[1, 1])], vec![io(&[1, h])],
+          &["tiny", "rmsnorm"], 0.0, "");
+    b.add(&format!("rms_mul_w_{h}"), vec![io(&[1, h]), io(&[h])], vec![io(&[1, h])],
+          &["tiny", "rmsnorm"], 0.0, "");
+
+    b.add(&format!("rope_cos_sin_{d}"), vec![io(&[1]), io(&[half])],
+          vec![io(&[d]), io(&[d])], &["tiny", "rotary"], 0.0, "");
+    b.add(&format!("rotary_{nh}_{d}"), vec![io(&[nh, d]), io(&[d]), io(&[d])],
+          vec![io(&[nh, d])], &["tiny", "rotary", "fused"], 0.0, "");
+    b.add(&format!("rotary_{kvh}_{d}"), vec![io(&[kvh, d]), io(&[d]), io(&[d])],
+          vec![io(&[kvh, d])], &["tiny", "rotary", "fused"], 0.0, "");
+    // unfused rotary pieces
+    b.add(&format!("neg_{nh}_{half}"), vec![io(&[nh, half])], vec![io(&[nh, half])],
+          &["tiny", "rotary"], 0.0, "");
+    b.add(&format!("neg_{kvh}_{half}"), vec![io(&[kvh, half])], vec![io(&[kvh, half])],
+          &["tiny", "rotary"], 0.0, "");
+    b.add(&format!("concat_{nh}_{half}"), vec![io(&[nh, half]), io(&[nh, half])],
+          vec![io(&[nh, d])], &["tiny", "rotary"], 0.0, "");
+    b.add(&format!("concat_{kvh}_{half}"), vec![io(&[kvh, half]), io(&[kvh, half])],
+          vec![io(&[kvh, d])], &["tiny", "rotary"], 0.0, "");
+    b.add(&format!("mul_vec_{nh}_{d}"), vec![io(&[nh, d]), io(&[d])], vec![io(&[nh, d])],
+          &["tiny", "rotary"], 0.0, "");
+    b.add(&format!("mul_vec_{kvh}_{d}"), vec![io(&[kvh, d]), io(&[d])], vec![io(&[kvh, d])],
+          &["tiny", "rotary"], 0.0, "");
+    b.add(&format!("add_{nh}_{d}"), vec![io(&[nh, d]), io(&[nh, d])], vec![io(&[nh, d])],
+          &["tiny", "rotary"], 0.0, "");
+    b.add(&format!("add_{kvh}_{d}"), vec![io(&[kvh, d]), io(&[kvh, d])], vec![io(&[kvh, d])],
+          &["tiny", "rotary"], 0.0, "");
+
+    b.add("cache_update_tiny",
+          vec![io(&[s, kvh, d]), io(&[kvh, d]), io_i32(&[1])],
+          vec![io(&[s, kvh, d])], &["tiny", "cache"], 0.0, "");
+    b.add("sdpa_tiny",
+          vec![io(&[nh, d]), io(&[s, kvh, d]), io(&[s, kvh, d]), io_i32(&[1])],
+          vec![io(&[nh, d])], &["tiny", "attention"],
+          2.0 * nh as f64 * d as f64 * s as f64 * 2.0, "");
+
+    b.add(&format!("silu_{inter}"), vec![io(&[1, inter])], vec![io(&[1, inter])],
+          &["tiny", "mlp"], 0.0, "");
+    b.add(&format!("mul_{inter}"), vec![io(&[1, inter]), io(&[1, inter])], vec![io(&[1, inter])],
+          &["tiny", "mlp"], 0.0, "");
+    b.add(&format!("add_{h}"), vec![io(&[1, h]), io(&[1, h])], vec![io(&[1, h])],
+          &["tiny"], 0.0, "");
+    b.add("gate_up_silu_tiny", vec![io(&[1, h]), io(&[h, inter]), io(&[h, inter])],
+          vec![io(&[1, inter])], &["tiny", "fused", "mlp"],
+          2.0 * matmul_flops(1, h, inter), "MLP gate+up+silu fusion (3 -> 1)");
+
+    b.add(&format!("argmax_{v}"), vec![io(&[1, v])], vec![io_i32(&[1])],
+          &["tiny", "argmax"], 0.0, "");
+    b.add(&format!("softmax_{v}"), vec![io(&[1, v])], vec![io(&[1, v])],
+          &["tiny", "softmax"], 0.0, "");
+    b.add(&format!("softmax_naive_{v}"), vec![io(&[1, v])], vec![io(&[1, v])],
+          &["tiny", "softmax"], 0.0, "");
+    b.add("mega_mlp_tiny",
+          vec![io(&[1, h]), io(&[h]), io(&[h, inter]), io(&[h, inter]), io(&[inter, h])],
+          vec![io(&[1, h])], &["tiny", "mega"],
+          2.0 * matmul_flops(1, h, inter) + matmul_flops(1, inter, h),
+          "Appendix C mega-kernel at tiny dims");
+
+    // ---- bench kernels at paper dimensions (Tables 7/8/11/12/16/19) ----
+    let bdims = GraphDims::qwen25_05b();
+    let (bh, bi, bv) = (bdims.hidden, bdims.intermediate, bdims.vocab);
+    b.add("matmul_896_896_4864", vec![io(&[bh, bh]), io(&[bh, bi])], vec![io(&[bh, bi])],
+          &["bench", "matmul"], matmul_flops(bh, bh, bi), "Table 8/12 MLP up projection");
+    b.add("matmul_896_4864_896", vec![io(&[bh, bi]), io(&[bi, bh])], vec![io(&[bh, bh])],
+          &["bench", "matmul"], matmul_flops(bh, bi, bh), "Table 8/12 MLP down projection");
+    b.add("matmul_256_256_256", vec![io(&[256, 256]), io(&[256, 256])], vec![io(&[256, 256])],
+          &["bench", "matmul"], matmul_flops(256, 256, 256), "Table 8/12 toy matmul");
+    b.add("matmul_naive_256", vec![io(&[256, 256]), io(&[256, 256])], vec![io(&[256, 256])],
+          &["bench", "matmul"], matmul_flops(256, 256, 256), "untiled baseline");
+
+    b.add("rmsnorm_896", vec![io(&[1, bh]), io(&[bh])], vec![io(&[1, bh])],
+          &["bench", "rmsnorm"], 0.0, "Table 7 fused RMSNorm at 0.5B hidden");
+    b.add("rms_pow_896", vec![io(&[1, bh])], vec![io(&[1, bh])], &["bench", "rmsnorm"], 0.0, "");
+    b.add("rms_mean_896", vec![io(&[1, bh])], vec![io(&[1, 1])], &["bench", "rmsnorm"], 0.0, "");
+    b.add("rms_mul_x_896", vec![io(&[1, bh]), io(&[1, 1])], vec![io(&[1, bh])],
+          &["bench", "rmsnorm"], 0.0, "");
+    b.add("rms_mul_w_896", vec![io(&[1, bh]), io(&[bh])], vec![io(&[1, bh])],
+          &["bench", "rmsnorm"], 0.0, "");
+
+    b.add("matmul_1_896_4864", vec![io(&[1, bh]), io(&[bh, bi])], vec![io(&[1, bi])],
+          &["bench", "mlp"], matmul_flops(1, bh, bi), "decode-shape up/gate projection");
+    b.add("matmul_1_4864_896", vec![io(&[1, bi]), io(&[bi, bh])], vec![io(&[1, bh])],
+          &["bench", "mlp"], matmul_flops(1, bi, bh), "decode-shape down projection");
+    b.add("gate_up_silu_05b", vec![io(&[1, bh]), io(&[bh, bi]), io(&[bh, bi])],
+          vec![io(&[1, bi])], &["bench", "mlp", "fused"], 2.0 * matmul_flops(1, bh, bi),
+          "Table 19 tiled strategy stage 1");
+    b.add("silu_4864", vec![io(&[1, bi])], vec![io(&[1, bi])], &["bench", "mlp"], 0.0, "");
+    b.add("mul_4864", vec![io(&[1, bi]), io(&[1, bi])], vec![io(&[1, bi])],
+          &["bench", "mlp"], 0.0, "");
+    b.add("add_896", vec![io(&[1, bh]), io(&[1, bh])], vec![io(&[1, bh])],
+          &["bench", "mlp"], 0.0, "");
+    b.add("mega_mlp_05b",
+          vec![io(&[1, bh]), io(&[bh]), io(&[bh, bi]), io(&[bh, bi]), io(&[bi, bh])],
+          vec![io(&[1, bh])], &["bench", "mega"],
+          2.0 * matmul_flops(1, bh, bi) + matmul_flops(1, bi, bh),
+          "Table 11 mega-kernel at 0.5B dims");
+
+    // Batched decode shapes for the empirical crossover sweep (Appendix F).
+    for bsz in [1usize, 4, 8, 16, 32, 64] {
+        b.add(&format!("matmul_b{bsz}_896_4864"),
+              vec![io(&[bsz, bh]), io(&[bh, bi])], vec![io(&[bsz, bi])],
+              &["bench", "batch"], matmul_flops(bsz, bh, bi),
+              "MLP up projection (crossover sweep)");
+    }
+
+    b.add(&format!("softmax_{bv}"), vec![io(&[1, bv])], vec![io(&[1, bv])],
+          &["bench", "softmax"], 0.0, "Table 16 optimized softmax at vocab");
+    b.add(&format!("softmax_naive_{bv}"), vec![io(&[1, bv])], vec![io(&[1, bv])],
+          &["bench", "softmax"], 0.0, "Table 16 naive softmax at vocab");
+    b.add(&format!("argmax_{bv}"), vec![io(&[1, bv])], vec![io_i32(&[1])],
+          &["bench", "argmax"], 0.0, "Table 15 device-side argmax at vocab");
+
+    b.kernels
+}
+
+fn config_from_dims(name: &str, d: &GraphDims) -> ManifestConfig {
+    ManifestConfig {
+        name: name.to_string(),
+        hidden: d.hidden,
+        layers: d.layers,
+        heads: d.heads,
+        kv_heads: d.kv_heads,
+        head_dim: d.head_dim,
+        intermediate: d.intermediate,
+        vocab: d.vocab,
+        max_seq: d.max_seq,
+        rope_theta: 10_000.0,
+        rms_eps: 1e-6,
+    }
+}
+
+/// Model configs mirroring the manifest's `configs` section.
+pub fn builtin_configs() -> HashMap<String, ManifestConfig> {
+    let mut m = HashMap::new();
+    m.insert("qwen-tiny".to_string(), config_from_dims("qwen-tiny", &GraphDims::qwen_tiny()));
+    m.insert(
+        "qwen2.5-0.5b".to_string(),
+        config_from_dims("qwen2.5-0.5b", &GraphDims::qwen25_05b()),
+    );
+    m.insert(
+        "qwen2.5-1.5b".to_string(),
+        config_from_dims("qwen2.5-1.5b", &GraphDims::qwen25_15b()),
+    );
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fx::builder::{build_decode_graph, FusionConfig};
+
+    #[test]
+    fn builtin_covers_every_tiny_graph_kernel() {
+        let kernels = builtin_kernels();
+        let dims = GraphDims::qwen_tiny();
+        for fusion in [
+            FusionConfig::unfused(),
+            FusionConfig::rmsnorm_only(),
+            FusionConfig::rmsnorm_mlp(),
+            FusionConfig::rmsnorm_mlp_kv(),
+            FusionConfig::fused(),
+        ] {
+            let g = build_decode_graph(&dims, fusion);
+            for name in g.kernel_names() {
+                assert!(kernels.contains_key(&name), "missing kernel '{name}'");
+            }
+        }
+    }
+
+    #[test]
+    fn builtin_has_engine_and_bench_side_kernels() {
+        let kernels = builtin_kernels();
+        for name in [
+            "argmax_512", "softmax_512", "rmsnorm_896", "matmul_896_896_4864",
+            "matmul_naive_256", "softmax_151936", "softmax_naive_151936",
+            "argmax_151936", "matmul_b8_896_4864", "mega_mlp_tiny",
+        ] {
+            assert!(kernels.contains_key(name), "missing '{name}'");
+        }
+    }
+
+    #[test]
+    fn builtin_configs_cover_models() {
+        let c = builtin_configs();
+        assert_eq!(c["qwen-tiny"].hidden, 64);
+        assert_eq!(c["qwen2.5-0.5b"].layers, 24);
+        assert_eq!(c["qwen2.5-1.5b"].hidden, 1536);
+    }
+}

@@ -1,120 +1,135 @@
-//! Thin wrapper over the `xla` crate's PJRT CPU client with a compile cache.
+//! Artifact discovery plus (feature-gated) the PJRT CPU client.
+//!
+//! The `xla`-crate-backed [`PjrtRuntime`] only builds with the `pjrt`
+//! feature: the offline environment cannot link xla_extension, so the
+//! default build executes kernels through the pure-Rust
+//! [`super::reference::ReferenceRuntime`] instead (same kernel names, same
+//! numerics contract). Everything here that touches `xla` is `cfg`-gated;
+//! [`ArtifactPaths`] is shared by both backends.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::time::Instant;
+use std::path::PathBuf;
 
-use crate::tensor::{DType, Tensor};
 use crate::{Error, Result};
 
-/// PJRT client + per-kernel compiled-executable cache.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    /// kernel name -> compiled executable (compile once, execute many).
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-    /// Cumulative compile time (reported in EXPERIMENTS.md; compile happens
-    /// off the request path, at engine startup or first use).
-    pub compile_ns: RefCell<u64>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::time::Instant;
 
-impl PjrtRuntime {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(PjrtRuntime {
-            client,
-            cache: RefCell::new(HashMap::new()),
-            compile_ns: RefCell::new(0),
-        })
+    use crate::tensor::{DType, Tensor};
+    use crate::{Error, Result};
+
+    /// PJRT client + per-kernel compiled-executable cache.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        /// kernel name -> compiled executable (compile once, execute many).
+        cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+        /// Cumulative compile time (reported in EXPERIMENTS.md; compile
+        /// happens off the request path, at engine startup or first use).
+        pub compile_ns: RefCell<u64>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile an HLO-text file and cache under `name`.
-    pub fn load_hlo_text(&self, name: &str, path: &Path) -> Result<()> {
-        if self.cache.borrow().contains_key(name) {
-            return Ok(());
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu()?;
+            Ok(PjrtRuntime {
+                client,
+                cache: RefCell::new(HashMap::new()),
+                compile_ns: RefCell::new(0),
+            })
         }
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
-            Error::Artifact(format!("parse {}: {e}", path.display()))
-        })?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| {
-            Error::Runtime(format!("compile {name}: {e}"))
-        })?;
-        *self.compile_ns.borrow_mut() += t0.elapsed().as_nanos() as u64;
-        self.cache.borrow_mut().insert(name.to_string(), exe);
-        Ok(())
-    }
 
-    pub fn is_loaded(&self, name: &str) -> bool {
-        self.cache.borrow().contains_key(name)
-    }
-
-    pub fn loaded_count(&self) -> usize {
-        self.cache.borrow().len()
-    }
-
-    /// Execute a cached kernel. Inputs are host tensors; outputs come back
-    /// as host tensors (the AOT modules are lowered with return_tuple=True).
-    /// Returns (outputs, wall ns of the execute+readback).
-    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<(Vec<Tensor>, u64)> {
-        let cache = self.cache.borrow();
-        let exe = cache
-            .get(name)
-            .ok_or_else(|| Error::Runtime(format!("kernel '{name}' not loaded")))?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(tensor_to_literal)
-            .collect::<Result<_>>()?;
-        let t0 = Instant::now();
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
-        let root = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("readback {name}: {e}")))?;
-        let parts = root
-            .to_tuple()
-            .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?;
-        let ns = t0.elapsed().as_nanos() as u64;
-        let outs = parts
-            .iter()
-            .map(literal_to_tensor)
-            .collect::<Result<Vec<_>>>()?;
-        Ok((outs, ns))
-    }
-}
-
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let ty = match t.dtype() {
-        DType::F32 => xla::ElementType::F32,
-        DType::I32 => xla::ElementType::S32,
-    };
-    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, t.data.as_bytes())
-        .map_err(|e| Error::Xla(e.to_string()))
-}
-
-pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
-    let shape = l
-        .array_shape()
-        .map_err(|e| Error::Xla(e.to_string()))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    match shape.ty() {
-        xla::ElementType::F32 => {
-            let v = l.to_vec::<f32>().map_err(|e| Error::Xla(e.to_string()))?;
-            Tensor::f32(dims, v)
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        xla::ElementType::S32 => {
-            let v = l.to_vec::<i32>().map_err(|e| Error::Xla(e.to_string()))?;
-            Tensor::i32(dims, v)
+
+        /// Compile an HLO-text file and cache under `name`.
+        pub fn load_hlo_text(&self, name: &str, path: &Path) -> Result<()> {
+            if self.cache.borrow().contains_key(name) {
+                return Ok(());
+            }
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+                Error::Artifact(format!("parse {}: {e}", path.display()))
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| {
+                Error::Runtime(format!("compile {name}: {e}"))
+            })?;
+            *self.compile_ns.borrow_mut() += t0.elapsed().as_nanos() as u64;
+            self.cache.borrow_mut().insert(name.to_string(), exe);
+            Ok(())
         }
-        other => Err(Error::Runtime(format!("unsupported element type {other:?}"))),
+
+        pub fn is_loaded(&self, name: &str) -> bool {
+            self.cache.borrow().contains_key(name)
+        }
+
+        pub fn loaded_count(&self) -> usize {
+            self.cache.borrow().len()
+        }
+
+        /// Execute a cached kernel. Inputs are host tensors; outputs come
+        /// back as host tensors (AOT modules lower with return_tuple=True).
+        /// Returns (outputs, wall ns of the execute+readback).
+        pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<(Vec<Tensor>, u64)> {
+            let cache = self.cache.borrow();
+            let exe = cache
+                .get(name)
+                .ok_or_else(|| Error::Runtime(format!("kernel '{name}' not loaded")))?;
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(tensor_to_literal)
+                .collect::<Result<_>>()?;
+            let t0 = Instant::now();
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+            let root = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::Runtime(format!("readback {name}: {e}")))?;
+            let parts = root
+                .to_tuple()
+                .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?;
+            let ns = t0.elapsed().as_nanos() as u64;
+            let outs = parts
+                .iter()
+                .map(literal_to_tensor)
+                .collect::<Result<Vec<_>>>()?;
+            Ok((outs, ns))
+        }
+    }
+
+    pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+        let ty = match t.dtype() {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, t.data.as_bytes())
+            .map_err(|e| Error::Xla(e.to_string()))
+    }
+
+    pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+        let shape = l.array_shape().map_err(|e| Error::Xla(e.to_string()))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let v = l.to_vec::<f32>().map_err(|e| Error::Xla(e.to_string()))?;
+                Tensor::f32(dims, v)
+            }
+            xla::ElementType::S32 => {
+                let v = l.to_vec::<i32>().map_err(|e| Error::Xla(e.to_string()))?;
+                Tensor::i32(dims, v)
+            }
+            other => Err(Error::Runtime(format!("unsupported element type {other:?}"))),
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::{literal_to_tensor, tensor_to_literal, PjrtRuntime};
 
 #[derive(Debug, Clone)]
 pub struct ArtifactPaths {

@@ -1,17 +1,21 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them from the L3 hot path.
+//! Kernel runtime: specs + execution backends.
 //!
-//! Flow (see /opt/xla-example/load_hlo and DESIGN.md §2):
-//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
-//! `PjRtClient::cpu().compile` (once, cached) -> `execute` per dispatch.
-//!
-//! HLO *text* is the interchange format: jax >= 0.5 emits protos with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids.
+//! Default backend is the pure-Rust host reference interpreter
+//! (`reference`), driven by the built-in manifest (`builtin`) or an
+//! on-disk `artifacts/manifest.json`. The PJRT path — `HloModuleProto::
+//! from_text_file` -> `XlaComputation::from_proto` -> `PjRtClient::cpu()
+//! .compile` (once, cached) -> `execute` per dispatch — builds only with
+//! `--features pjrt`, because the `xla` crate links xla_extension, which
+//! the offline environment does not provide.
 
+pub mod builtin;
 pub mod client;
 pub mod hostops;
+pub mod reference;
 pub mod registry;
 
+pub use client::ArtifactPaths;
+#[cfg(feature = "pjrt")]
 pub use client::PjrtRuntime;
-pub use registry::{KernelSpec, Registry};
+pub use reference::ReferenceRuntime;
+pub use registry::{KernelRuntime, KernelSpec, Registry};

@@ -1,0 +1,608 @@
+//! Host reference runtime: a pure-Rust interpreter for every kernel the
+//! AOT registry exports (`python/compile/aot.py`), keyed by kernel name.
+//!
+//! This is the default execution backend: the offline environment cannot
+//! link the `xla` crate's PJRT client, so dispatches land here instead.
+//! Each implementation mirrors the jnp oracle in
+//! `python/compile/kernels/ref.py` operation-for-operation, and —
+//! critically for the fusion and serving equivalence tests — the fused
+//! kernels are written as the exact float32 composition of their unfused
+//! counterparts, so fused and unfused flows produce bit-identical token
+//! streams.
+
+use std::cell::RefCell;
+use std::collections::HashSet;
+use std::time::Instant;
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+use super::registry::KernelSpec;
+
+const RMS_EPS: f32 = 1e-6;
+
+/// Always-available kernel interpreter with PJRT-compatible bookkeeping
+/// (loaded-set tracking so `ensure_loaded`/`preload` behave identically).
+#[derive(Debug, Default)]
+pub struct ReferenceRuntime {
+    loaded: RefCell<HashSet<String>>,
+}
+
+impl ReferenceRuntime {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn platform(&self) -> String {
+        "host-reference".to_string()
+    }
+
+    pub fn mark_loaded(&self, name: &str) {
+        self.loaded.borrow_mut().insert(name.to_string());
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.loaded.borrow().contains(name)
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.loaded.borrow().len()
+    }
+
+    /// Execute a kernel by name. Returns (outputs, wall ns).
+    pub fn execute(&self, spec: &KernelSpec, inputs: &[Tensor]) -> Result<(Vec<Tensor>, u64)> {
+        self.mark_loaded(&spec.name);
+        let t0 = Instant::now();
+        let outs = execute_kernel(spec, inputs)?;
+        let ns = (t0.elapsed().as_nanos() as u64).max(1);
+        Ok((outs, ns))
+    }
+}
+
+fn f32s<'a>(t: &'a Tensor, what: &str) -> Result<&'a [f32]> {
+    t.as_f32()
+        .map_err(|_| Error::Runtime(format!("{what}: expected f32 input")))
+}
+
+fn scalar_pos(t: &Tensor) -> Result<usize> {
+    let v = t
+        .as_i32()
+        .map_err(|_| Error::Runtime("position input must be i32".into()))?;
+    Ok(v[0].max(0) as usize)
+}
+
+// ---------------------------------------------------------------- helpers --
+
+fn matmul(x: &Tensor, w: &Tensor) -> Result<Tensor> {
+    if x.shape.len() != 2 || w.shape.len() != 2 || x.shape[1] != w.shape[0] {
+        return Err(Error::Shape(format!(
+            "matmul {:?} x {:?}",
+            x.shape, w.shape
+        )));
+    }
+    let (m, k, n) = (x.shape[0], x.shape[1], w.shape[1]);
+    let (xd, wd) = (f32s(x, "matmul")?, f32s(w, "matmul")?);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let row = &xd[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &xv) in row.iter().enumerate() {
+            let wrow = &wd[kk * n..(kk + 1) * n];
+            for (j, &wv) in wrow.iter().enumerate() {
+                orow[j] += xv * wv;
+            }
+        }
+    }
+    Tensor::f32(vec![m, n], out)
+}
+
+fn unary(x: &Tensor, f: impl Fn(f32) -> f32) -> Result<Tensor> {
+    let v: Vec<f32> = f32s(x, "unary")?.iter().map(|&a| f(a)).collect();
+    Tensor::f32(x.shape.clone(), v)
+}
+
+fn binary_same(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+    if a.shape != b.shape {
+        return Err(Error::Shape(format!(
+            "elementwise {:?} vs {:?}",
+            a.shape, b.shape
+        )));
+    }
+    let (ad, bd) = (f32s(a, "binary")?, f32s(b, "binary")?);
+    let v: Vec<f32> = ad.iter().zip(bd).map(|(&x, &y)| f(x, y)).collect();
+    Tensor::f32(a.shape.clone(), v)
+}
+
+/// `x * v` where `v` broadcasts over the last axis (rms_mul_w / mul_vec).
+fn mul_lastdim(x: &Tensor, v: &Tensor) -> Result<Tensor> {
+    let d = *x.shape.last().ok_or_else(|| Error::Shape("mul_vec: 0-d".into()))?;
+    if v.numel() != d {
+        return Err(Error::Shape(format!(
+            "mul_vec: {:?} * {:?}",
+            x.shape, v.shape
+        )));
+    }
+    let (xd, vd) = (f32s(x, "mul_vec")?, f32s(v, "mul_vec")?);
+    let out: Vec<f32> = xd.iter().enumerate().map(|(i, &a)| a * vd[i % d]).collect();
+    Tensor::f32(x.shape.clone(), out)
+}
+
+/// `x * r` where `r` is a single scalar (rms_mul_x).
+fn mul_scalar_t(x: &Tensor, r: &Tensor) -> Result<Tensor> {
+    let s = f32s(r, "mul_scalar")?[0];
+    unary(x, |a| a * s)
+}
+
+fn silu(x: f32) -> f32 {
+    x * (1.0 / (1.0 + (-x).exp()))
+}
+
+/// Row-wise softmax over the last axis with max subtraction (the
+/// "parallel" variant); `naive` skips nothing numerically here — the naive
+/// shader differs in memory traffic, not math — so both share this body.
+fn softmax_rows(x: &Tensor) -> Result<Tensor> {
+    let d = *x.shape.last().ok_or_else(|| Error::Shape("softmax: 0-d".into()))?;
+    let xd = f32s(x, "softmax")?;
+    let mut out = vec![0f32; xd.len()];
+    for r in 0..xd.len() / d {
+        let row = &xd[r * d..(r + 1) * d];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for (j, &v) in row.iter().enumerate() {
+            let e = (v - m).exp();
+            out[r * d + j] = e;
+            sum += e;
+        }
+        for j in 0..d {
+            out[r * d + j] /= sum;
+        }
+    }
+    Tensor::f32(x.shape.clone(), out)
+}
+
+/// Fused RMSNorm, written as the exact composition of the 6-dispatch
+/// decomposition (pow, mean, +eps, rsqrt, mul_x, mul_w) so fused and
+/// unfused flows agree bit-for-bit.
+fn rmsnorm(x: &Tensor, w: &Tensor) -> Result<Tensor> {
+    let x2 = unary(x, |a| a * a)?;
+    let m = rms_mean(&x2)?;
+    let me = unary(&m, |a| a + RMS_EPS)?;
+    let r = unary(&me, |a| 1.0 / a.sqrt())?;
+    let xn = mul_scalar_t(x, &r)?;
+    mul_lastdim(&xn, w)
+}
+
+fn rms_mean(x2: &Tensor) -> Result<Tensor> {
+    let d = *x2.shape.last().ok_or_else(|| Error::Shape("rms_mean: 0-d".into()))?;
+    let xd = f32s(x2, "rms_mean")?;
+    let rows = xd.len() / d;
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let sum: f32 = xd[r * d..(r + 1) * d].iter().sum();
+        out.push(sum / d as f32);
+    }
+    let mut shape = x2.shape.clone();
+    *shape.last_mut().unwrap() = 1;
+    Tensor::f32(shape, out)
+}
+
+/// rotate_half: concat(-x2, x1) over the last axis of a 2-D tensor.
+fn rotate_half(x: &Tensor) -> Result<Tensor> {
+    let (h, d) = (x.shape[0], x.shape[1]);
+    let half = d / 2;
+    let xd = f32s(x, "rotate_half")?;
+    let mut out = vec![0f32; h * d];
+    for i in 0..h {
+        for j in 0..half {
+            out[i * d + j] = -xd[i * d + half + j];
+            out[i * d + half + j] = xd[i * d + j];
+        }
+    }
+    Tensor::f32(vec![h, d], out)
+}
+
+/// Fused rotary — exact composition of the unfused neg/concat/mul/mul/add
+/// chain: a = x*cos, b = rotate_half(x)*sin, out = a + b.
+fn rotary(x: &Tensor, cos: &Tensor, sin: &Tensor) -> Result<Tensor> {
+    let rot = rotate_half(x)?;
+    let a = mul_lastdim(x, cos)?;
+    let b = mul_lastdim(&rot, sin)?;
+    binary_same(&a, &b, |p, q| p + q)
+}
+
+fn rope_cos_sin(pos: &Tensor, inv_freq: &Tensor) -> Result<Vec<Tensor>> {
+    let p = f32s(pos, "rope")?[0];
+    let inv = f32s(inv_freq, "rope")?;
+    let half = inv.len();
+    let mut cos = vec![0f32; 2 * half];
+    let mut sin = vec![0f32; 2 * half];
+    for (j, &iv) in inv.iter().enumerate() {
+        let f = p * iv;
+        let (c, s) = (f.cos(), f.sin());
+        cos[j] = c;
+        cos[half + j] = c;
+        sin[j] = s;
+        sin[half + j] = s;
+    }
+    Ok(vec![
+        Tensor::f32(vec![2 * half], cos)?,
+        Tensor::f32(vec![2 * half], sin)?,
+    ])
+}
+
+/// Write `new_row` ([KVH, D]) at `cache[pos]` ([S, KVH, D]).
+fn cache_update(cache: &Tensor, new_row: &Tensor, pos: usize) -> Result<Tensor> {
+    if cache.shape.len() != 3 || new_row.shape.len() != 2 {
+        return Err(Error::Shape(format!(
+            "cache_update {:?} <- {:?}",
+            cache.shape, new_row.shape
+        )));
+    }
+    let (s, kvh, d) = (cache.shape[0], cache.shape[1], cache.shape[2]);
+    if pos >= s || new_row.shape != [kvh, d] {
+        return Err(Error::Shape(format!(
+            "cache_update: pos {pos} / row {:?} vs cache {:?}",
+            new_row.shape, cache.shape
+        )));
+    }
+    let mut out = f32s(cache, "cache_update")?.to_vec();
+    let row = f32s(new_row, "cache_update")?;
+    out[pos * kvh * d..(pos + 1) * kvh * d].copy_from_slice(row);
+    Tensor::f32(vec![s, kvh, d], out)
+}
+
+/// Grouped-query attention over a fixed-capacity masked KV cache
+/// (`ref.sdpa_gqa`): positions `0..pos` are valid.
+fn sdpa_gqa(q: &Tensor, k: &Tensor, v: &Tensor, pos: usize) -> Result<Tensor> {
+    if q.shape.len() != 2 || k.shape.len() != 3 || v.shape != k.shape {
+        return Err(Error::Shape(format!(
+            "sdpa q {:?} k {:?} v {:?}",
+            q.shape, k.shape, v.shape
+        )));
+    }
+    let (heads, dim) = (q.shape[0], q.shape[1]);
+    let (seq, kvh, kd) = (k.shape[0], k.shape[1], k.shape[2]);
+    if kd != dim || kvh == 0 || heads % kvh != 0 {
+        return Err(Error::Shape(format!(
+            "sdpa head layout: {heads} q heads over {kvh} kv heads, dim {dim}/{kd}"
+        )));
+    }
+    let group = heads / kvh;
+    let scale = 1.0 / (dim as f32).sqrt();
+    let valid = pos.min(seq).max(1);
+    let (qd, kdat, vdat) = (f32s(q, "sdpa")?, f32s(k, "sdpa")?, f32s(v, "sdpa")?);
+    let mut out = vec![0f32; heads * dim];
+    let mut scores = vec![0f32; valid];
+    for h in 0..heads {
+        let kv_h = h / group;
+        let qrow = &qd[h * dim..(h + 1) * dim];
+        for (s, score) in scores.iter_mut().enumerate() {
+            let krow = &kdat[(s * kvh + kv_h) * dim..(s * kvh + kv_h + 1) * dim];
+            let mut dot = 0f32;
+            for (a, b) in qrow.iter().zip(krow) {
+                dot += a * b;
+            }
+            *score = dot * scale;
+        }
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        let mut probs = vec![0f32; valid];
+        for (s, &sc) in scores.iter().enumerate() {
+            let e = (sc - m).exp();
+            probs[s] = e;
+            sum += e;
+        }
+        let orow = &mut out[h * dim..(h + 1) * dim];
+        for (s, &p) in probs.iter().enumerate() {
+            let w = p / sum;
+            let vrow = &vdat[(s * kvh + kv_h) * dim..(s * kvh + kv_h + 1) * dim];
+            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                *o += w * vv;
+            }
+        }
+    }
+    Tensor::f32(vec![heads, dim], out)
+}
+
+/// Fused MLP stage — exact composition of matmul/matmul/silu/mul.
+fn gate_up_silu(x: &Tensor, wg: &Tensor, wu: &Tensor) -> Result<Tensor> {
+    let g = matmul(x, wg)?;
+    let u = matmul(x, wu)?;
+    let s = unary(&g, silu)?;
+    binary_same(&s, &u, |a, b| a * b)
+}
+
+fn argmax_rows(x: &Tensor) -> Result<Tensor> {
+    let d = *x.shape.last().ok_or_else(|| Error::Shape("argmax: 0-d".into()))?;
+    let xd = f32s(x, "argmax")?;
+    let rows = xd.len() / d;
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &xd[r * d..(r + 1) * d];
+        let mut best = 0usize;
+        let mut bestv = f32::NEG_INFINITY;
+        for (j, &v) in row.iter().enumerate() {
+            if v > bestv {
+                bestv = v;
+                best = j;
+            }
+        }
+        out.push(best as i32);
+    }
+    Tensor::i32(vec![rows], out)
+}
+
+fn mega_mlp(
+    x: &Tensor,
+    rms_w: &Tensor,
+    wg: &Tensor,
+    wu: &Tensor,
+    wd: &Tensor,
+) -> Result<Tensor> {
+    let h = rmsnorm(x, rms_w)?;
+    let act = gate_up_silu(&h, wg, wu)?;
+    let down = matmul(&act, wd)?;
+    binary_same(x, &down, |a, b| a + b)
+}
+
+/// Concatenate two 2-D tensors along the last axis.
+fn concat_last(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.shape.len() != 2 || b.shape.len() != 2 || a.shape[0] != b.shape[0] {
+        return Err(Error::Shape(format!(
+            "concat {:?} ++ {:?}",
+            a.shape, b.shape
+        )));
+    }
+    let (rows, ca, cb) = (a.shape[0], a.shape[1], b.shape[1]);
+    let (ad, bd) = (f32s(a, "concat")?, f32s(b, "concat")?);
+    let mut out = Vec::with_capacity(rows * (ca + cb));
+    for r in 0..rows {
+        out.extend_from_slice(&ad[r * ca..(r + 1) * ca]);
+        out.extend_from_slice(&bd[r * cb..(r + 1) * cb]);
+    }
+    Tensor::f32(vec![rows, ca + cb], out)
+}
+
+// --------------------------------------------------------------- dispatch --
+
+fn need(inputs: &[Tensor], n: usize, name: &str) -> Result<()> {
+    if inputs.len() != n {
+        return Err(Error::Runtime(format!(
+            "kernel {name}: needs {n} inputs, got {}",
+            inputs.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Interpret `spec.name` and produce outputs matching `spec.outputs`.
+pub fn execute_kernel(spec: &KernelSpec, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let name = spec.name.as_str();
+    // Ordering matters: check longer/more-specific prefixes before shorter
+    // ones (e.g. "matmul" before "mul_", "rms_mul_x" before "rms_mul_w",
+    // "softmax_naive" before "softmax").
+    let outs: Vec<Tensor> = if name.starts_with("matmul") || name.starts_with("kv_fused") {
+        need(inputs, 2, name)?;
+        vec![matmul(&inputs[0], &inputs[1])?]
+    } else if name.starts_with("gate_up_silu") {
+        need(inputs, 3, name)?;
+        vec![gate_up_silu(&inputs[0], &inputs[1], &inputs[2])?]
+    } else if name.starts_with("mega_mlp") {
+        need(inputs, 5, name)?;
+        vec![mega_mlp(&inputs[0], &inputs[1], &inputs[2], &inputs[3], &inputs[4])?]
+    } else if name.starts_with("rmsnorm") {
+        need(inputs, 2, name)?;
+        vec![rmsnorm(&inputs[0], &inputs[1])?]
+    } else if name.starts_with("rms_pow") {
+        need(inputs, 1, name)?;
+        vec![unary(&inputs[0], |a| a * a)?]
+    } else if name.starts_with("rms_mean") {
+        need(inputs, 1, name)?;
+        vec![rms_mean(&inputs[0])?]
+    } else if name.starts_with("rms_add_eps") {
+        need(inputs, 1, name)?;
+        vec![unary(&inputs[0], |a| a + RMS_EPS)?]
+    } else if name.starts_with("rms_rsqrt") {
+        need(inputs, 1, name)?;
+        vec![unary(&inputs[0], |a| 1.0 / a.sqrt())?]
+    } else if name.starts_with("rms_mul_x") {
+        need(inputs, 2, name)?;
+        vec![mul_scalar_t(&inputs[0], &inputs[1])?]
+    } else if name.starts_with("rms_mul_w") || name.starts_with("mul_vec") {
+        need(inputs, 2, name)?;
+        vec![mul_lastdim(&inputs[0], &inputs[1])?]
+    } else if name.starts_with("rope_cos_sin") {
+        need(inputs, 2, name)?;
+        rope_cos_sin(&inputs[0], &inputs[1])?
+    } else if name.starts_with("rotary") {
+        need(inputs, 3, name)?;
+        vec![rotary(&inputs[0], &inputs[1], &inputs[2])?]
+    } else if name.starts_with("neg") {
+        need(inputs, 1, name)?;
+        vec![unary(&inputs[0], |a| -a)?]
+    } else if name.starts_with("concat") {
+        need(inputs, 2, name)?;
+        vec![concat_last(&inputs[0], &inputs[1])?]
+    } else if name.starts_with("cache_update") {
+        need(inputs, 3, name)?;
+        let pos = scalar_pos(&inputs[2])?;
+        vec![cache_update(&inputs[0], &inputs[1], pos)?]
+    } else if name.starts_with("sdpa") {
+        need(inputs, 4, name)?;
+        let pos = scalar_pos(&inputs[3])?;
+        vec![sdpa_gqa(&inputs[0], &inputs[1], &inputs[2], pos)?]
+    } else if name.starts_with("silu") {
+        need(inputs, 1, name)?;
+        vec![unary(&inputs[0], silu)?]
+    } else if name.starts_with("softmax") {
+        // covers softmax_naive_* too — same math, different memory traffic
+        need(inputs, 1, name)?;
+        vec![softmax_rows(&inputs[0])?]
+    } else if name.starts_with("argmax") {
+        need(inputs, 1, name)?;
+        vec![argmax_rows(&inputs[0])?]
+    } else if name.starts_with("add") {
+        need(inputs, 2, name)?;
+        vec![binary_same(&inputs[0], &inputs[1], |a, b| a + b)?]
+    } else if name.starts_with("mul") {
+        need(inputs, 2, name)?;
+        vec![binary_same(&inputs[0], &inputs[1], |a, b| a * b)?]
+    } else {
+        return Err(Error::Runtime(format!(
+            "reference runtime has no implementation for kernel '{name}'"
+        )));
+    };
+
+    // Enforce the manifest's output contract (the PJRT path gets this from
+    // the lowered module; here we check explicitly).
+    if outs.len() != spec.outputs.len() {
+        return Err(Error::Runtime(format!(
+            "kernel {name}: produced {} outputs, manifest says {}",
+            outs.len(),
+            spec.outputs.len()
+        )));
+    }
+    for (i, (o, s)) in outs.iter().zip(&spec.outputs).enumerate() {
+        if o.shape != s.shape || o.dtype() != s.dtype {
+            return Err(Error::Runtime(format!(
+                "kernel {name}: output {i} is {:?}/{}, manifest wants {:?}/{}",
+                o.shape,
+                o.dtype(),
+                s.shape,
+                s.dtype
+            )));
+        }
+    }
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+    use crate::webgpu::KernelIoSpec;
+
+    fn spec(name: &str, outputs: Vec<KernelIoSpec>) -> KernelSpec {
+        KernelSpec {
+            name: name.into(),
+            file: String::new(),
+            inputs: vec![],
+            outputs,
+            tags: vec![],
+            flops: 0.0,
+            notes: String::new(),
+        }
+    }
+
+    fn io(shape: Vec<usize>, dtype: DType) -> KernelIoSpec {
+        KernelIoSpec { shape, dtype }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let x = Tensor::f32(vec![1, 2], vec![3.0, 4.0]).unwrap();
+        let eye = Tensor::f32(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let s = spec("matmul_2_2", vec![io(vec![1, 2], DType::F32)]);
+        let out = execute_kernel(&s, &[x, eye]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_rms() {
+        let x = Tensor::f32(vec![1, 4], vec![1.0, -2.0, 3.0, -4.0]).unwrap();
+        let w = Tensor::f32(vec![4], vec![1.0; 4]).unwrap();
+        let s = spec("rmsnorm_4", vec![io(vec![1, 4], DType::F32)]);
+        let out = execute_kernel(&s, &[x, w]).unwrap();
+        let v = out[0].as_f32().unwrap();
+        let rms: f32 = (v.iter().map(|a| a * a).sum::<f32>() / 4.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-3, "rms {rms}");
+    }
+
+    #[test]
+    fn fused_rmsnorm_matches_decomposition_bitwise() {
+        let x = Tensor::f32(vec![1, 8], (0..8).map(|i| i as f32 * 0.37 - 1.1).collect()).unwrap();
+        let w = Tensor::f32(vec![8], (0..8).map(|i| 0.5 + i as f32 * 0.1).collect()).unwrap();
+        let fused = rmsnorm(&x, &w).unwrap();
+        let x2 = unary(&x, |a| a * a).unwrap();
+        let m = rms_mean(&x2).unwrap();
+        let me = unary(&m, |a| a + RMS_EPS).unwrap();
+        let r = unary(&me, |a| 1.0 / a.sqrt()).unwrap();
+        let xn = mul_scalar_t(&x, &r).unwrap();
+        let dec = mul_lastdim(&xn, &w).unwrap();
+        assert_eq!(fused.as_f32().unwrap(), dec.as_f32().unwrap());
+    }
+
+    #[test]
+    fn rotary_matches_unfused_chain_bitwise() {
+        let x = Tensor::f32(vec![2, 4], (0..8).map(|i| (i as f32).sin()).collect()).unwrap();
+        let cos = Tensor::f32(vec![4], vec![0.9, 0.8, 0.9, 0.8]).unwrap();
+        let sin = Tensor::f32(vec![4], vec![0.1, 0.2, 0.1, 0.2]).unwrap();
+        let fused = rotary(&x, &cos, &sin).unwrap();
+        // unfused: halves -> neg -> concat -> mul_vec x2 -> add
+        let half = 2;
+        let xd = x.as_f32().unwrap();
+        let mut x1 = Vec::new();
+        let mut x2 = Vec::new();
+        for r in 0..2 {
+            x1.extend_from_slice(&xd[r * 4..r * 4 + half]);
+            x2.extend_from_slice(&xd[r * 4 + half..r * 4 + 4]);
+        }
+        let x1 = Tensor::f32(vec![2, 2], x1).unwrap();
+        let x2 = Tensor::f32(vec![2, 2], x2).unwrap();
+        let x2n = unary(&x2, |a| -a).unwrap();
+        let rot = concat_last(&x2n, &x1).unwrap();
+        let a = mul_lastdim(&x, &cos).unwrap();
+        let b = mul_lastdim(&rot, &sin).unwrap();
+        let dec = binary_same(&a, &b, |p, q| p + q).unwrap();
+        assert_eq!(fused.as_f32().unwrap(), dec.as_f32().unwrap());
+    }
+
+    #[test]
+    fn sdpa_single_position_returns_value_row() {
+        // With one valid cache row, attention output == that row's V.
+        let q = Tensor::f32(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let mut k = vec![0f32; 4 * 1 * 2];
+        let mut v = vec![0f32; 4 * 1 * 2];
+        k[0] = 1.0;
+        k[1] = 2.0;
+        v[0] = 5.0;
+        v[1] = -3.0;
+        let k = Tensor::f32(vec![4, 1, 2], k).unwrap();
+        let v = Tensor::f32(vec![4, 1, 2], v).unwrap();
+        let out = sdpa_gqa(&q, &k, &v, 1).unwrap();
+        assert_eq!(out.as_f32().unwrap(), &[5.0, -3.0, 5.0, -3.0]);
+    }
+
+    #[test]
+    fn cache_update_writes_row() {
+        let cache = Tensor::zeros_f32(vec![3, 1, 2]);
+        let row = Tensor::f32(vec![1, 2], vec![7.0, 8.0]).unwrap();
+        let out = cache_update(&cache, &row, 1).unwrap();
+        assert_eq!(out.as_f32().unwrap(), &[0.0, 0.0, 7.0, 8.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        let x = Tensor::f32(vec![1, 4], vec![1.0, 9.0, 9.0, 0.0]).unwrap();
+        let s = spec("argmax_4", vec![io(vec![1], DType::I32)]);
+        let out = execute_kernel(&s, &[x]).unwrap();
+        assert_eq!(out[0].as_i32().unwrap(), &[1]);
+    }
+
+    #[test]
+    fn softmax_rows_normalize() {
+        let x = Tensor::f32(vec![2, 3], vec![0.0, 1.0, 2.0, -5.0, 0.0, 5.0]).unwrap();
+        let out = softmax_rows(&x).unwrap();
+        let v = out.as_f32().unwrap();
+        for r in 0..2 {
+            let sum: f32 = v[r * 3..(r + 1) * 3].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn unknown_kernel_rejected() {
+        let s = spec("warp_drive_9000", vec![]);
+        assert!(execute_kernel(&s, &[]).is_err());
+    }
+}

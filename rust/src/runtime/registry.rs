@@ -1,6 +1,16 @@
-//! Kernel registry: manifest.json -> kernel specs + lazy-compiled PJRT
-//! executables. Implements [`KernelRunner`] so the WebGPU substrate can
-//! execute dispatches against real AOT kernels.
+//! Kernel registry: kernel specs + an execution backend.
+//!
+//! Two backends implement [`KernelRunner`] behind one `Registry` API:
+//!
+//! - **Reference** (default): the pure-Rust interpreter in
+//!   [`super::reference`], driven by either an on-disk `manifest.json` or
+//!   the built-in manifest in [`super::builtin`]. Always available.
+//! - **PJRT** (`--features pjrt`): lazy-compiled PJRT executables from the
+//!   AOT HLO-text artifacts, as the paper's real-system mode.
+//!
+//! `Registry::open()` discovers artifacts and falls back to the built-in
+//! manifest + reference interpreter when none exist, so the deterministic
+//! suite runs hermetically offline.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -10,7 +20,10 @@ use crate::tensor::{DType, Tensor};
 use crate::webgpu::{KernelIoSpec, KernelRunner};
 use crate::{Error, Result};
 
-use super::client::{ArtifactPaths, PjrtRuntime};
+use super::client::ArtifactPaths;
+#[cfg(feature = "pjrt")]
+use super::client::PjrtRuntime;
+use super::reference::ReferenceRuntime;
 
 /// One AOT kernel's metadata from the manifest.
 #[derive(Debug, Clone)]
@@ -40,9 +53,44 @@ pub struct ManifestConfig {
     pub rms_eps: f64,
 }
 
+/// The execution backend behind a [`Registry`].
+pub enum KernelRuntime {
+    /// Pure-Rust host interpreter (always available; the default).
+    Reference(ReferenceRuntime),
+    /// PJRT CPU client executing AOT HLO artifacts.
+    #[cfg(feature = "pjrt")]
+    Pjrt(PjrtRuntime),
+}
+
+impl KernelRuntime {
+    pub fn platform(&self) -> String {
+        match self {
+            KernelRuntime::Reference(r) => r.platform(),
+            #[cfg(feature = "pjrt")]
+            KernelRuntime::Pjrt(p) => p.platform(),
+        }
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        match self {
+            KernelRuntime::Reference(r) => r.is_loaded(name),
+            #[cfg(feature = "pjrt")]
+            KernelRuntime::Pjrt(p) => p.is_loaded(name),
+        }
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        match self {
+            KernelRuntime::Reference(r) => r.loaded_count(),
+            #[cfg(feature = "pjrt")]
+            KernelRuntime::Pjrt(p) => p.loaded_count(),
+        }
+    }
+}
+
 pub struct Registry {
     pub dir: PathBuf,
-    pub runtime: PjrtRuntime,
+    pub runtime: KernelRuntime,
     pub kernels: HashMap<String, KernelSpec>,
     pub configs: HashMap<String, ManifestConfig>,
 }
@@ -64,10 +112,25 @@ fn parse_io(v: &json::Value) -> Result<KernelIoSpec> {
 }
 
 impl Registry {
-    /// Load manifest + create the PJRT client. Kernels compile lazily on
-    /// first execution (or eagerly via [`Registry::preload`]).
+    /// Open the artifact registry if one exists; otherwise fall back to the
+    /// built-in manifest + host reference interpreter (the hermetic mode
+    /// the tests and benches use — no `make artifacts` required).
     pub fn open() -> Result<Self> {
-        Self::open_at(ArtifactPaths::discover()?.dir)
+        match ArtifactPaths::discover() {
+            Ok(p) => Self::open_at(p.dir),
+            Err(_) => Self::builtin(),
+        }
+    }
+
+    /// Registry over the built-in manifest, executed by the reference
+    /// interpreter.
+    pub fn builtin() -> Result<Self> {
+        Ok(Registry {
+            dir: PathBuf::from("<builtin>"),
+            runtime: KernelRuntime::Reference(ReferenceRuntime::new()),
+            kernels: super::builtin::builtin_kernels(),
+            configs: super::builtin::builtin_configs(),
+        })
     }
 
     pub fn open_at(dir: PathBuf) -> Result<Self> {
@@ -146,7 +209,10 @@ impl Registry {
             }
         }
 
-        let runtime = PjrtRuntime::cpu()?;
+        #[cfg(feature = "pjrt")]
+        let runtime = KernelRuntime::Pjrt(PjrtRuntime::cpu()?);
+        #[cfg(not(feature = "pjrt"))]
+        let runtime = KernelRuntime::Reference(ReferenceRuntime::new());
         Ok(Registry { dir, runtime, kernels, configs })
     }
 
@@ -162,13 +228,20 @@ impl Registry {
             .ok_or_else(|| Error::Artifact(format!("config '{name}' not in manifest")))
     }
 
-    /// Ensure a kernel is compiled (no-op if cached).
+    /// Ensure a kernel is compiled/available (no-op if cached).
     pub fn ensure_loaded(&self, name: &str) -> Result<()> {
         if self.runtime.is_loaded(name) {
             return Ok(());
         }
         let spec = self.spec(name)?;
-        self.runtime.load_hlo_text(name, &self.dir.join(&spec.file))
+        match &self.runtime {
+            KernelRuntime::Reference(r) => {
+                r.mark_loaded(&spec.name);
+                Ok(())
+            }
+            #[cfg(feature = "pjrt")]
+            KernelRuntime::Pjrt(p) => p.load_hlo_text(name, &self.dir.join(&spec.file)),
+        }
     }
 
     /// Eagerly compile every kernel carrying `tag` (e.g. "tiny" at engine
@@ -209,7 +282,11 @@ impl Registry {
             }
         }
         self.ensure_loaded(name)?;
-        self.runtime.execute(name, inputs)
+        match &self.runtime {
+            KernelRuntime::Reference(r) => r.execute(spec, inputs),
+            #[cfg(feature = "pjrt")]
+            KernelRuntime::Pjrt(p) => p.execute(name, inputs),
+        }
     }
 }
 
@@ -223,5 +300,40 @@ impl KernelRunner for Registry {
         let flops = self.spec(kernel).map(|s| s.flops).unwrap_or(0.0);
         let (outs, ns) = self.execute(kernel, inputs)?;
         Ok((outs, ns, flops))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registry_executes_reference_kernels() {
+        let reg = Registry::builtin().unwrap();
+        assert_eq!(reg.runtime.platform(), "host-reference");
+        let x = Tensor::f32(vec![1, 64], (0..64).map(|i| i as f32 / 64.0).collect()).unwrap();
+        let w = Tensor::f32(vec![64], vec![1.0; 64]).unwrap();
+        let (outs, ns) = reg.execute("rmsnorm_64", &[x, w]).unwrap();
+        assert_eq!(outs[0].shape, vec![1, 64]);
+        assert!(ns > 0);
+        assert!(reg.runtime.is_loaded("rmsnorm_64"));
+    }
+
+    #[test]
+    fn preload_marks_tagged_kernels() {
+        let reg = Registry::builtin().unwrap();
+        let n = reg.preload("tiny").unwrap();
+        assert!(n > 20, "only {n} tiny kernels");
+        assert_eq!(reg.runtime.loaded_count(), n);
+    }
+
+    #[test]
+    fn open_at_missing_dir_errors_and_builtin_covers_fallback() {
+        // (No env mutation here: set_var races the parallel test harness.)
+        assert!(Registry::open_at(PathBuf::from("/nonexistent/for/test")).is_err());
+        // The builtin registry open() falls back to has full coverage.
+        let reg = Registry::builtin().unwrap();
+        assert!(reg.kernels.contains_key("sdpa_tiny"));
+        assert!(reg.configs.contains_key("qwen-tiny"));
     }
 }

@@ -1,0 +1,477 @@
+//! The multi-session serving engine.
+//!
+//! One `ServingEngine` owns the shared substrate — device, prepared
+//! pipelines, bind-group layouts, buffer pool, pinned weights — and drives
+//! up to `max_concurrent` sessions by interleaving decode steps round-
+//! robin. Scheduling is continuous: new requests are admitted from the
+//! FIFO backlog between rounds and finished sessions retire immediately,
+//! releasing their pooled buffers to the next admit.
+//!
+//! The scheduler's throughput lever is fixed-cost amortization: every
+//! session in a round encodes its decode step (dispatch-phase + framework
+//! costs are per-dispatch and do NOT amortize — the paper's per-operation
+//! wall), then ALL logits buffers are read back behind one synchronization
+//! point (`Device::map_read_many`), so the backend's fixed map/sync cost
+//! (~0.1 ms Vulkan, ~1.8 ms Metal per token at N=1) is paid once per round
+//! instead of once per session.
+
+use std::collections::HashMap;
+
+use crate::engine::inference::EngineConfig;
+use crate::engine::GraphExecutor;
+use crate::fx::builder::{build_decode_graph, GraphDims};
+use crate::fx::graph::FxGraph;
+use crate::model::weights::ModelWeights;
+use crate::runtime::hostops;
+use crate::runtime::registry::Registry;
+use crate::tensor::Tensor;
+use crate::webgpu::queue::{bind_buffers, kernel_layout};
+use crate::webgpu::{
+    BindGroupLayoutId, BufferId, ComputePipelineId, Device, ShaderModuleDesc,
+};
+use crate::{Error, Result};
+
+use super::metrics::ServeReport;
+use super::queue::RequestQueue;
+use super::session::SessionState;
+
+/// Serving configuration: the per-session engine config plus admission
+/// control.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub engine: EngineConfig,
+    /// Maximum sessions decoded concurrently; further requests queue.
+    pub max_concurrent: usize,
+}
+
+/// Pre-created device-argmax pipeline (Appendix H variant), shared by all
+/// sessions.
+pub(crate) struct ArgmaxPrepared {
+    #[allow(dead_code)] // kept for diagnostics/logging
+    kernel: String,
+    pipeline: ComputePipelineId,
+    layout: BindGroupLayoutId,
+}
+
+/// An encoded-but-unfinished decode step: the logits tensor (host copy,
+/// chained GPU-side without sync) and the live logits buffer awaiting its
+/// synchronizing readback.
+pub struct StepHandle {
+    pub logits: Tensor,
+    pub logits_buf: Option<BufferId>,
+}
+
+pub struct ServingEngine<'r> {
+    pub config: ServeConfig,
+    pub dims: GraphDims,
+    pub graph: FxGraph,
+    /// The shared substrate: device + pipeline/layout/bind-group caches +
+    /// buffer pool + pinned weights. Sessions own nothing GPU-side.
+    pub executor: GraphExecutor<'r>,
+    pub weights: ModelWeights,
+    /// FIFO backlog (admission control).
+    pub queue: RequestQueue,
+    /// Sessions currently being interleaved, in admission order.
+    pub active: Vec<SessionState>,
+    /// Retired sessions, in completion order.
+    pub finished: Vec<SessionState>,
+    argmax: Option<ArgmaxPrepared>,
+}
+
+impl<'r> ServingEngine<'r> {
+    pub fn new(registry: &'r Registry, config: ServeConfig) -> Result<Self> {
+        let ec = &config.engine;
+        let mc = registry.config(&ec.model)?;
+        let dims = GraphDims::from_manifest(mc);
+        let graph = build_decode_graph(&dims, ec.fusion);
+        graph.validate()?;
+        let mut device = Device::new(ec.profile.clone());
+        device.kernel_time_policy = ec.kernel_time_policy;
+        let mut executor = GraphExecutor::new(device, registry, ec.framework_ns_per_op);
+        executor.prepare(&graph)?;
+
+        let argmax = if ec.device_argmax {
+            let name = format!("argmax_{}", dims.vocab);
+            registry.ensure_loaded(&name)?;
+            let spec = registry.spec(&name)?;
+            let layout = kernel_layout(&mut executor.device, &name, 1, 1)?;
+            let module = executor.device.create_shader_module(ShaderModuleDesc {
+                label: name.clone(),
+                kernel: name.clone(),
+                inputs: spec.inputs.clone(),
+                outputs: spec.outputs.clone(),
+            })?;
+            let pipeline = executor.device.create_compute_pipeline(&name, module, layout)?;
+            Some(ArgmaxPrepared { kernel: name, pipeline, layout })
+        } else {
+            None
+        };
+
+        let weights = ModelWeights::synthesize(&dims, ec.weight_seed);
+        // PERF (§Perf L3): weights live in persistent device buffers —
+        // uploaded once here, bound directly on every dispatch, shared by
+        // every session.
+        executor.pin_inputs(&graph, &weights.by_name)?;
+
+        Ok(ServingEngine {
+            config,
+            dims,
+            graph,
+            executor,
+            weights,
+            queue: RequestQueue::new(),
+            active: Vec::new(),
+            finished: Vec::new(),
+            argmax,
+        })
+    }
+
+    /// Reseed the virtual-cost jitter (independent benchmark runs).
+    pub fn reseed(&mut self, seed: u64) {
+        self.executor.device.reseed_jitter(seed);
+    }
+
+    /// Current virtual time.
+    pub fn now_ns(&self) -> u64 {
+        self.executor.device.clock.now_ns()
+    }
+
+    /// Enqueue a request. Never rejects for capacity — requests beyond
+    /// `max_concurrent` wait in the FIFO backlog.
+    pub fn submit(&mut self, prompt: &[usize], n_new: usize) -> Result<u64> {
+        if prompt.is_empty() || n_new == 0 {
+            return Err(Error::Graph("prompt and n_new must be non-empty".into()));
+        }
+        let steps = prompt.len() + n_new - 1;
+        if steps > self.dims.max_seq {
+            return Err(Error::Graph(format!(
+                "request needs {steps} decode steps but KV capacity is {}",
+                self.dims.max_seq
+            )));
+        }
+        let now = self.now_ns();
+        Ok(self.queue.push(prompt.to_vec(), n_new, now))
+    }
+
+    /// Admit queued requests (FIFO) up to `max_concurrent`.
+    pub fn admit(&mut self) {
+        while self.active.len() < self.config.max_concurrent {
+            let Some(req) = self.queue.pop() else { break };
+            let now = self.executor.device.clock.now_ns();
+            self.active.push(SessionState::new(
+                req.id,
+                req.prompt,
+                req.n_new,
+                &self.dims,
+                req.enqueued_ns,
+                now,
+            ));
+        }
+    }
+
+    /// Build a detached session (used by the single-request `Engine`
+    /// wrapper, which owns its session instead of enrolling it).
+    pub fn create_session(&self, prompt: Vec<usize>, n_new: usize, id: u64) -> SessionState {
+        let now = self.executor.device.clock.now_ns();
+        SessionState::new(id, prompt, n_new, &self.dims, now, now)
+    }
+
+    /// Encode one decode step for `s`: host embedding gather, then the full
+    /// per-kernel dispatch stream through the shared executor. Does NOT
+    /// synchronize — the logits buffer stays live in the returned handle.
+    pub fn encode_session(
+        &mut self,
+        s: &mut SessionState,
+        token: usize,
+        was_prompt: bool,
+    ) -> Result<StepHandle> {
+        let ServingEngine { executor, graph, dims, weights, .. } = self;
+        Self::encode_inner(executor, graph, dims, weights, s, token, was_prompt)
+    }
+
+    /// Finish one session's step on its own: one synchronizing readback
+    /// (or the device-argmax dispatch), token selection, metrics.
+    pub fn finish_session(&mut self, s: &mut SessionState, h: StepHandle) -> Result<usize> {
+        let ServingEngine { executor, argmax, .. } = self;
+        Self::finish_inner(executor, argmax.as_ref(), s, h)
+    }
+
+    fn encode_inner(
+        executor: &mut GraphExecutor<'r>,
+        graph: &FxGraph,
+        dims: &GraphDims,
+        weights: &ModelWeights,
+        s: &mut SessionState,
+        token: usize,
+        was_prompt: bool,
+    ) -> Result<StepHandle> {
+        if s.pos >= dims.max_seq {
+            return Err(Error::Graph(format!(
+                "KV cache capacity {} exhausted",
+                dims.max_seq
+            )));
+        }
+        // Attribution snapshots (virtual-clock deltas belong to this
+        // session — the shared device accumulates across all of them).
+        let ph0 = executor.device.timeline.virtual_ns;
+        let k0 = executor.device.timeline.kernel_virtual_ns;
+        let sy0 = executor.device.timeline.sync_virtual_ns;
+        let fw0 = executor.framework_virtual_ns;
+        let d0 = executor.dispatch_count;
+
+        // Host embedding gather (Table 10 "Other": embedding).
+        let x = hostops::embed(&weights.embedding, token)?;
+        let mut inputs: HashMap<String, Tensor> = HashMap::new();
+        inputs.insert("x".into(), x);
+        inputs.insert("pos_i".into(), Tensor::scalar_i32(s.pos as i32));
+        inputs.insert("pos_ip1".into(), Tensor::scalar_i32(s.pos as i32 + 1));
+        inputs.insert("pos_f".into(), Tensor::scalar_f32(s.pos as f32));
+        inputs.insert("inv_freq".into(), weights.inv_freq.clone());
+        for (l, (k, v)) in s.caches.iter().enumerate() {
+            inputs.insert(format!("l{l}.k_cache"), k.clone());
+            inputs.insert(format!("l{l}.v_cache"), v.clone());
+        }
+        // Weights are NOT passed per step: they were pinned into persistent
+        // device buffers at engine construction (executor.pin_inputs).
+
+        let (mut outs, logits_buf) = executor.run(graph, &inputs)?;
+
+        // Update this session's caches for its next step.
+        for l in 0..dims.layers {
+            let k = outs
+                .remove(&format!("l{l}.k_cache"))
+                .ok_or_else(|| Error::Graph(format!("missing l{l}.k_cache output")))?;
+            let v = outs
+                .remove(&format!("l{l}.v_cache"))
+                .ok_or_else(|| Error::Graph(format!("missing l{l}.v_cache output")))?;
+            s.caches[l] = (k, v);
+        }
+        s.pos += 1;
+
+        let logits = outs
+            .remove("logits")
+            .ok_or_else(|| Error::Graph("missing logits output".into()))?;
+
+        s.metrics.steps += 1;
+        let dp = executor.dispatch_count - d0;
+        s.metrics.dispatches += dp;
+        if was_prompt {
+            s.metrics.prefill_steps += 1;
+            s.metrics.prefill_dispatches += dp;
+        }
+        let tl = &executor.device.timeline;
+        for i in 0..8 {
+            s.metrics.phase_virtual_ns[i] += tl.virtual_ns[i] - ph0[i];
+        }
+        s.metrics.kernel_virtual_ns += tl.kernel_virtual_ns - k0;
+        s.metrics.sync_virtual_ns += tl.sync_virtual_ns - sy0;
+        s.metrics.framework_virtual_ns += executor.framework_virtual_ns - fw0;
+
+        Ok(StepHandle { logits, logits_buf })
+    }
+
+    fn finish_inner(
+        executor: &mut GraphExecutor<'r>,
+        argmax: Option<&ArgmaxPrepared>,
+        s: &mut SessionState,
+        h: StepHandle,
+    ) -> Result<usize> {
+        let ph0 = executor.device.timeline.virtual_ns;
+        let sy0 = executor.device.timeline.sync_virtual_ns;
+        let k0 = executor.device.timeline.kernel_virtual_ns;
+        let d0 = executor.device.timeline.dispatches();
+        let next = if let Some(prep) = argmax {
+            // Device-side argmax: one more dispatch, then a 4-byte readback.
+            let idx = Self::run_device_argmax(executor, prep, &h.logits)?;
+            if let Some(buf) = h.logits_buf {
+                executor.release_logits(buf)?;
+            }
+            idx
+        } else if let Some(buf) = h.logits_buf {
+            // Full-logits readback (map pays sync + per-byte transfer),
+            // then host argmax — the production path.
+            let bytes = executor
+                .device
+                .map_read_many(&[buf])?
+                .into_iter()
+                .next()
+                .expect("one mapped buffer");
+            executor.release_logits(buf)?;
+            argmax_bytes(&bytes)
+        } else {
+            h.logits.argmax_row()?
+        };
+        let tl = &executor.device.timeline;
+        for i in 0..8 {
+            s.metrics.phase_virtual_ns[i] += tl.virtual_ns[i] - ph0[i];
+        }
+        s.metrics.sync_virtual_ns += tl.sync_virtual_ns - sy0;
+        // Device-argmax issues an extra dispatch outside the executor's
+        // graph walk: attribute its kernel time + dispatch here so
+        // per-session sums keep tiling the device timeline exactly.
+        s.metrics.kernel_virtual_ns += tl.kernel_virtual_ns - k0;
+        s.metrics.dispatches += tl.dispatches() - d0;
+        let now = executor.device.clock.now_ns();
+        s.note_token(next, now);
+        Ok(next)
+    }
+
+    fn run_device_argmax(
+        executor: &mut GraphExecutor<'r>,
+        prep: &ArgmaxPrepared,
+        logits: &Tensor,
+    ) -> Result<usize> {
+        use crate::webgpu::{BufferDesc, BufferUsage};
+        let (pipeline, layout) = (prep.pipeline, prep.layout);
+        let dev = &mut executor.device;
+        let in_buf = dev.create_buffer(BufferDesc {
+            label: "argmax-in".into(),
+            size: logits.size_bytes(),
+            usage: BufferUsage::STORAGE | BufferUsage::COPY_DST,
+        })?;
+        dev.write_buffer(in_buf, 0, logits.data.as_bytes())?;
+        let out_buf = dev.create_buffer(BufferDesc {
+            label: "argmax-out".into(),
+            size: 4,
+            usage: BufferUsage::STORAGE | BufferUsage::MAP_READ,
+        })?;
+        let group = bind_buffers(dev, "argmax", layout, &[in_buf], &[out_buf])?;
+        let enc = dev.create_command_encoder("argmax");
+        dev.begin_compute_pass(enc)?;
+        dev.set_pipeline(enc, pipeline)?;
+        dev.set_bind_group(enc, group)?;
+        dev.dispatch_workgroups(enc, 1, 1, 1)?;
+        dev.end_compute_pass(enc)?;
+        let cb = dev.finish(enc)?;
+        let registry = executor.registry();
+        executor.device.submit(&[cb], registry)?;
+        // Only 4 bytes cross the bus — the Appendix H point.
+        let bytes = executor.device.map_read(out_buf)?;
+        let idx = i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
+        executor.device.destroy_buffer(in_buf)?;
+        executor.device.destroy_buffer(out_buf)?;
+        Ok(idx)
+    }
+
+    /// One scheduler round: admit, encode one decode step for every active
+    /// session (round-robin order = admission order), finish them behind a
+    /// single coalesced readback, retire completed sessions. Returns the
+    /// number of sessions stepped.
+    pub fn step_round(&mut self) -> Result<usize> {
+        self.admit();
+        let n = self.active.len();
+        if n == 0 {
+            return Ok(0);
+        }
+        let mut handles: Vec<Option<StepHandle>> = Vec::with_capacity(n);
+        for i in 0..n {
+            let ServingEngine { executor, graph, dims, weights, active, .. } = &mut *self;
+            let s = &mut active[i];
+            let (token, was_prompt) = s.take_input().ok_or_else(|| {
+                Error::Graph(format!("session {} has no input token", s.id))
+            })?;
+            let h = Self::encode_inner(executor, graph, dims, weights, s, token, was_prompt)?;
+            handles.push(Some(h));
+        }
+
+        if self.argmax.is_some() {
+            // Device-argmax path: per-session finish (each pays its own
+            // 4-byte readback; Appendix H trades transfer for dispatches).
+            for (i, slot) in handles.iter_mut().enumerate() {
+                let h = slot.take().expect("encoded handle");
+                let ServingEngine { executor, argmax, active, .. } = &mut *self;
+                Self::finish_inner(executor, argmax.as_ref(), &mut active[i], h)?;
+            }
+        } else {
+            // Coalesced finish: ONE synchronization covers every session's
+            // logits readback — the amortized fixed cost.
+            let mut buf_ids: Vec<BufferId> = Vec::with_capacity(n);
+            let mut owners: Vec<usize> = Vec::with_capacity(n);
+            for (i, h) in handles.iter().enumerate() {
+                if let Some(b) = h.as_ref().and_then(|h| h.logits_buf) {
+                    buf_ids.push(b);
+                    owners.push(i);
+                }
+            }
+            let sy0 = self.executor.device.timeline.sync_virtual_ns;
+            let all_bytes = self.executor.device.map_read_many(&buf_ids)?;
+            let sync_cost = self.executor.device.timeline.sync_virtual_ns - sy0;
+            // Split the shared sync exactly across participants (remainder
+            // to the first) so per-session sums match the device timeline.
+            let k = owners.len() as u64;
+            if k > 0 {
+                let share = sync_cost / k;
+                let first = sync_cost - share * (k - 1);
+                for (j, &i) in owners.iter().enumerate() {
+                    self.active[i].metrics.sync_virtual_ns +=
+                        if j == 0 { first } else { share };
+                }
+            }
+            let now = self.executor.device.clock.now_ns();
+            let mut bytes_iter = all_bytes.into_iter();
+            let mut owner_pos = 0usize;
+            for (i, slot) in handles.iter_mut().enumerate() {
+                let h = slot.take().expect("encoded handle");
+                let next = if owner_pos < owners.len() && owners[owner_pos] == i {
+                    owner_pos += 1;
+                    let bytes = bytes_iter.next().expect("mapped logits bytes");
+                    argmax_bytes(&bytes)
+                } else {
+                    h.logits.argmax_row()?
+                };
+                if let Some(b) = h.logits_buf {
+                    self.executor.release_logits(b)?;
+                }
+                self.active[i].note_token(next, now);
+            }
+        }
+
+        // Retire finished sessions (continuous scheduling: their pooled
+        // buffers are immediately reusable by the next admitted session).
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].finished() {
+                let s = self.active.remove(i);
+                self.finished.push(s);
+            } else {
+                i += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Drive every queued + active session to completion; report aggregates
+    /// over the sessions completed by THIS call.
+    pub fn run_to_completion(&mut self) -> Result<ServeReport> {
+        if self.config.max_concurrent == 0 {
+            return Err(Error::Graph("max_concurrent must be >= 1".into()));
+        }
+        let t0 = self.now_ns();
+        let f0 = self.finished.len();
+        while !self.queue.is_empty() || !self.active.is_empty() {
+            self.step_round()?;
+        }
+        let wall = self.now_ns() - t0;
+        Ok(ServeReport::from_sessions(&self.finished[f0..], wall))
+    }
+
+    /// Take ownership of the retired sessions (completion order).
+    pub fn drain_finished(&mut self) -> Vec<SessionState> {
+        std::mem::take(&mut self.finished)
+    }
+}
+
+/// Host argmax over a little-endian f32 byte buffer (the mapped logits
+/// row); first maximum wins, matching `Tensor::argmax_row`.
+pub fn argmax_bytes(bytes: &[u8]) -> usize {
+    let mut best = 0usize;
+    let mut bestv = f32::NEG_INFINITY;
+    for (i, c) in bytes.chunks_exact(4).enumerate() {
+        let x = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        if x > bestv {
+            bestv = x;
+            best = i;
+        }
+    }
+    best
+}

@@ -1,0 +1,126 @@
+//! Aggregate serving metrics: the per-run report `wdb serve-bench` and the
+//! serving bench harness table-ify.
+
+use super::session::SessionState;
+
+/// Aggregate results of one serving run (a batch of sessions driven to
+/// completion), in virtual ns of the shared device clock.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub sessions: usize,
+    pub total_tokens: usize,
+    /// Virtual wall time of the whole run (first admit to last retire).
+    pub wall_virtual_ns: u64,
+    /// total_tokens / wall — the serving-side headline metric.
+    pub agg_tok_per_s: f64,
+    pub mean_ttft_ms: f64,
+    pub max_ttft_ms: f64,
+    /// Mean of per-session generation throughput (tokens / generation ns).
+    pub mean_session_tok_per_s: f64,
+    /// Total dispatches across sessions.
+    pub dispatches: u64,
+    /// Dispatches per decode step (uniform across sessions of one config).
+    pub dispatches_per_step: u64,
+    /// Aggregate per-phase dispatch CPU cost (`DISPATCH_PHASES` order).
+    pub phase_virtual_ns: [u64; 8],
+    pub framework_virtual_ns: u64,
+    pub sync_virtual_ns: u64,
+    pub kernel_virtual_ns: u64,
+    pub ttft_ms: Vec<f64>,
+}
+
+impl ServeReport {
+    pub fn from_sessions(sessions: &[SessionState], wall_virtual_ns: u64) -> Self {
+        let n = sessions.len();
+        let total_tokens: usize = sessions.iter().map(|s| s.tokens.len()).sum();
+        let mut phase = [0u64; 8];
+        let mut framework = 0u64;
+        let mut sync = 0u64;
+        let mut kernel = 0u64;
+        let mut dispatches = 0u64;
+        let mut steps = 0u64;
+        let mut ttft_ms = Vec::with_capacity(n);
+        let mut tps_sum = 0f64;
+        for s in sessions {
+            for i in 0..8 {
+                phase[i] += s.metrics.phase_virtual_ns[i];
+            }
+            framework += s.metrics.framework_virtual_ns;
+            sync += s.metrics.sync_virtual_ns;
+            kernel += s.metrics.kernel_virtual_ns;
+            dispatches += s.metrics.dispatches;
+            steps += s.metrics.steps;
+            ttft_ms.push(s.metrics.ttft_ns() as f64 / 1e6);
+            let gen_ns = s.metrics.generation_ns().max(1);
+            tps_sum += s.tokens.len() as f64 / (gen_ns as f64 / 1e9);
+        }
+        let wall = wall_virtual_ns.max(1);
+        ServeReport {
+            sessions: n,
+            total_tokens,
+            wall_virtual_ns,
+            agg_tok_per_s: total_tokens as f64 / (wall as f64 / 1e9),
+            mean_ttft_ms: if n > 0 {
+                ttft_ms.iter().sum::<f64>() / n as f64
+            } else {
+                0.0
+            },
+            max_ttft_ms: ttft_ms.iter().cloned().fold(0.0, f64::max),
+            mean_session_tok_per_s: if n > 0 { tps_sum / n as f64 } else { 0.0 },
+            dispatches,
+            dispatches_per_step: if steps > 0 { dispatches / steps } else { 0 },
+            phase_virtual_ns: phase,
+            framework_virtual_ns: framework,
+            sync_virtual_ns: sync,
+            kernel_virtual_ns: kernel,
+            ttft_ms,
+        }
+    }
+
+    /// Total dispatch-phase CPU ns.
+    pub fn phase_total_ns(&self) -> u64 {
+        self.phase_virtual_ns.iter().sum()
+    }
+
+    /// Microseconds of `ns` per generated token.
+    pub fn us_per_token(&self, ns: u64) -> f64 {
+        ns as f64 / 1e3 / self.total_tokens.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fx::builder::GraphDims;
+
+    #[test]
+    fn empty_report_is_sane() {
+        let r = ServeReport::from_sessions(&[], 1_000);
+        assert_eq!(r.sessions, 0);
+        assert_eq!(r.total_tokens, 0);
+        assert_eq!(r.agg_tok_per_s, 0.0);
+    }
+
+    #[test]
+    fn aggregates_two_sessions() {
+        let dims = GraphDims::qwen_tiny();
+        let mut a = SessionState::new(0, vec![1], 2, &dims, 0, 0);
+        let mut b = SessionState::new(1, vec![2], 2, &dims, 0, 0);
+        for s in [&mut a, &mut b] {
+            let _ = s.take_input();
+            s.note_token(10, 1_000_000);
+            let _ = s.take_input();
+            s.note_token(11, 2_000_000);
+            s.metrics.dispatches = 10;
+            s.metrics.steps = 2;
+            s.metrics.phase_virtual_ns[7] = 500;
+        }
+        let r = ServeReport::from_sessions(&[a, b], 2_000_000);
+        assert_eq!(r.sessions, 2);
+        assert_eq!(r.total_tokens, 4);
+        assert_eq!(r.dispatches, 20);
+        assert_eq!(r.dispatches_per_step, 5);
+        assert_eq!(r.phase_virtual_ns[7], 1000);
+        assert!((r.agg_tok_per_s - 2000.0).abs() < 1e-6);
+    }
+}

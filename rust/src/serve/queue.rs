@@ -1,0 +1,93 @@
+//! FIFO request queue + admission bookkeeping.
+//!
+//! Admission control is deliberately simple (the WebLLM/OpenAI-front-end
+//! shape): requests past `max_concurrent` queue rather than erroring, and
+//! the scheduler admits strictly in arrival order between decode rounds.
+
+use std::collections::VecDeque;
+
+/// One queued generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<usize>,
+    pub n_new: usize,
+    /// Virtual clock at submission (TTFT measurements include queueing).
+    pub enqueued_ns: u64,
+}
+
+/// Strictly-FIFO backlog.
+#[derive(Debug, Default)]
+pub struct RequestQueue {
+    backlog: VecDeque<Request>,
+    next_id: u64,
+    /// Total requests ever pushed.
+    pub submitted: u64,
+    /// Total requests ever popped (admitted).
+    pub admitted: u64,
+}
+
+impl RequestQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue a request; returns its id. Ids are assigned in arrival
+    /// order, so FIFO admission implies ids pop in increasing order.
+    pub fn push(&mut self, prompt: Vec<usize>, n_new: usize, enqueued_ns: u64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.submitted += 1;
+        self.backlog.push_back(Request { id, prompt, n_new, enqueued_ns });
+        id
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        let r = self.backlog.pop_front();
+        if r.is_some() {
+            self.admitted += 1;
+        }
+        r
+    }
+
+    pub fn len(&self) -> usize {
+        self.backlog.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.backlog.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_arrival_order() {
+        let mut q = RequestQueue::new();
+        let a = q.push(vec![1], 1, 0);
+        let b = q.push(vec![2], 1, 5);
+        let c = q.push(vec![3], 1, 9);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop().unwrap().id, a);
+        assert_eq!(q.pop().unwrap().id, b);
+        assert_eq!(q.pop().unwrap().id, c);
+        assert!(q.pop().is_none());
+        assert_eq!(q.submitted, 3);
+        assert_eq!(q.admitted, 3);
+    }
+
+    #[test]
+    fn ids_are_monotone() {
+        let mut q = RequestQueue::new();
+        let mut last = None;
+        for i in 0..10 {
+            let id = q.push(vec![i], 1, i as u64);
+            if let Some(l) = last {
+                assert!(id > l);
+            }
+            last = Some(id);
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Per-session decode state + metrics.
+//!
+//! This is the state that used to live inside the single-request engine
+//! (KV caches, position, pending prompt) split out so the serving engine
+//! can interleave many sessions over ONE shared executor: everything GPU-
+//! side (device, prepared pipelines, bind-group layouts, buffer pool,
+//! pinned weights) is shared; everything here is private to one request.
+
+use crate::fx::builder::GraphDims;
+use crate::tensor::Tensor;
+
+/// Timing/attribution metrics for one session, in virtual nanoseconds of
+/// the shared device clock.
+#[derive(Debug, Clone, Default)]
+pub struct SessionMetrics {
+    /// Clock when the request entered the queue.
+    pub enqueued_ns: u64,
+    /// Clock when the scheduler admitted it (became active).
+    pub admitted_ns: u64,
+    /// Clock when the first generated token was selected (the paper's
+    /// TTFT measurement point: prefill + first decode step + sync).
+    pub first_token_ns: u64,
+    /// Clock when the last requested token was produced.
+    pub finished_ns: u64,
+    /// Clock when the most recent token was produced (per-token deltas).
+    pub last_token_ns: u64,
+    /// Decode steps executed (prefill + generation).
+    pub steps: u64,
+    /// Steps that consumed a prompt token.
+    pub prefill_steps: u64,
+    /// WebGPU dispatches attributed to this session.
+    pub dispatches: u64,
+    /// Dispatches issued during prefill steps.
+    pub prefill_dispatches: u64,
+    /// Per-phase dispatch CPU cost attributed to this session, in
+    /// `DISPATCH_PHASES` order (from `PhaseTimeline` deltas around this
+    /// session's encodes).
+    pub phase_virtual_ns: [u64; 8],
+    /// Framework (per-op) overhead attributed to this session.
+    pub framework_virtual_ns: u64,
+    /// Synchronization (readback/map) cost attributed to this session; a
+    /// coalesced multi-session readback is split across its participants.
+    pub sync_virtual_ns: u64,
+    /// GPU kernel time enqueued by this session's dispatches.
+    pub kernel_virtual_ns: u64,
+    /// Per generated token: [TTFT, then per-decode-step deltas].
+    pub per_token_ns: Vec<u64>,
+}
+
+impl SessionMetrics {
+    /// Request-level time to first token (includes queueing).
+    pub fn ttft_ns(&self) -> u64 {
+        self.first_token_ns.saturating_sub(self.enqueued_ns)
+    }
+
+    /// Total dispatch-phase CPU cost.
+    pub fn phase_total_ns(&self) -> u64 {
+        self.phase_virtual_ns.iter().sum()
+    }
+
+    pub fn generation_ns(&self) -> u64 {
+        self.finished_ns.saturating_sub(self.admitted_ns)
+    }
+}
+
+/// One in-flight request's decode state.
+#[derive(Debug, Clone)]
+pub struct SessionState {
+    pub id: u64,
+    pub prompt: Vec<usize>,
+    /// Number of tokens to generate; the session retires once reached.
+    pub n_new: usize,
+    /// Per-layer (K, V) caches — the session-private half of the state
+    /// split; shape `[max_seq, kv_heads, head_dim]` each.
+    pub caches: Vec<(Tensor, Tensor)>,
+    /// Current decode position (rows of the cache that are valid).
+    pub pos: usize,
+    /// Prompt tokens consumed so far.
+    fed: usize,
+    /// Most recent output token (the next step's input once the prompt is
+    /// exhausted).
+    pub last_token: Option<usize>,
+    /// Generated tokens (excludes prompt-echo; index 0 is the token
+    /// produced by the step that consumed the final prompt token).
+    pub tokens: Vec<usize>,
+    pub metrics: SessionMetrics,
+}
+
+impl SessionState {
+    pub fn new(
+        id: u64,
+        prompt: Vec<usize>,
+        n_new: usize,
+        dims: &GraphDims,
+        enqueued_ns: u64,
+        admitted_ns: u64,
+    ) -> Self {
+        let shape = vec![dims.max_seq, dims.kv_heads, dims.head_dim];
+        let caches = (0..dims.layers)
+            .map(|_| (Tensor::zeros_f32(shape.clone()), Tensor::zeros_f32(shape.clone())))
+            .collect();
+        SessionState {
+            id,
+            prompt,
+            n_new,
+            caches,
+            pos: 0,
+            fed: 0,
+            last_token: None,
+            tokens: Vec::new(),
+            metrics: SessionMetrics {
+                enqueued_ns,
+                admitted_ns,
+                ..SessionMetrics::default()
+            },
+        }
+    }
+
+    /// The next input token: unconsumed prompt tokens first, then the most
+    /// recent output. Returns `(token, consumed_a_prompt_token)`; `None`
+    /// only for a promptless session that has not produced anything yet.
+    pub fn take_input(&mut self) -> Option<(usize, bool)> {
+        if self.fed < self.prompt.len() {
+            let t = self.prompt[self.fed];
+            self.fed += 1;
+            Some((t, true))
+        } else {
+            self.last_token.map(|t| (t, false))
+        }
+    }
+
+    /// True while this step's input still comes from the prompt.
+    pub fn in_prefill(&self) -> bool {
+        self.fed < self.prompt.len()
+    }
+
+    pub fn finished(&self) -> bool {
+        self.tokens.len() >= self.n_new
+    }
+
+    /// Record a produced token at virtual time `now`. Tokens produced
+    /// before the whole prompt is consumed are intermediate prefill logits
+    /// and are not part of the generated stream (matching the single-
+    /// request engine's accounting).
+    pub fn note_token(&mut self, token: usize, now: u64) {
+        self.last_token = Some(token);
+        if self.fed < self.prompt.len() {
+            return; // intermediate prefill output, unused
+        }
+        if self.tokens.is_empty() {
+            self.metrics.first_token_ns = now;
+            self.metrics
+                .per_token_ns
+                .push(now.saturating_sub(self.metrics.admitted_ns));
+        } else {
+            self.metrics
+                .per_token_ns
+                .push(now.saturating_sub(self.metrics.last_token_ns));
+        }
+        self.metrics.last_token_ns = now;
+        self.tokens.push(token);
+        if self.finished() {
+            self.metrics.finished_ns = now;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn session(prompt: Vec<usize>, n_new: usize) -> SessionState {
+        SessionState::new(1, prompt, n_new, &GraphDims::qwen_tiny(), 100, 100)
+    }
+
+    #[test]
+    fn prompt_feeds_before_generated_tokens() {
+        let mut s = session(vec![7, 8], 2);
+        assert_eq!(s.take_input(), Some((7, true)));
+        s.note_token(42, 200); // intermediate prefill output
+        assert!(s.tokens.is_empty());
+        assert_eq!(s.take_input(), Some((8, true)));
+        s.note_token(43, 300); // consumed last prompt token -> first gen
+        assert_eq!(s.tokens, vec![43]);
+        assert_eq!(s.metrics.first_token_ns, 300);
+        assert_eq!(s.take_input(), Some((43, false)));
+        s.note_token(44, 450);
+        assert!(s.finished());
+        assert_eq!(s.metrics.finished_ns, 450);
+        assert_eq!(s.metrics.per_token_ns, vec![200, 150]);
+    }
+
+    #[test]
+    fn promptless_session_has_no_input() {
+        let mut s = session(vec![], 1);
+        assert_eq!(s.take_input(), None);
+        s.note_token(9, 150);
+        assert_eq!(s.take_input(), Some((9, false)));
+    }
+
+    #[test]
+    fn caches_sized_by_dims() {
+        let s = session(vec![1], 1);
+        let d = GraphDims::qwen_tiny();
+        assert_eq!(s.caches.len(), d.layers);
+        assert_eq!(s.caches[0].0.shape, vec![d.max_seq, d.kv_heads, d.head_dim]);
+    }
+
+    #[test]
+    fn ttft_includes_queueing() {
+        let mut s = SessionState::new(1, vec![5], 1, &GraphDims::qwen_tiny(), 50, 80);
+        let _ = s.take_input();
+        s.note_token(1, 130);
+        assert_eq!(s.metrics.ttft_ns(), 80); // 130 - enqueued 50
+        assert_eq!(s.metrics.per_token_ns, vec![50]); // 130 - admitted 80
+    }
+}

@@ -5,7 +5,10 @@
 //! spirit: each test states an invariant and hammers it with generated
 //! cases; failures print the offending seed.
 
+use wdb::engine::EngineConfig;
 use wdb::fx::builder::{build_decode_graph, expected_dispatches, FusionConfig, GraphDims};
+use wdb::runtime::Registry;
+use wdb::serve::{RequestQueue, ServeConfig, ServingEngine};
 use wdb::fx::census::Census;
 use wdb::fx::fusion;
 use wdb::model::rng::XorShiftRng;
@@ -283,6 +286,145 @@ fn tensor_argmax_agrees_with_scan() {
             .unwrap()
             .0;
         assert_eq!(got, want);
+    }
+}
+
+// ------------------------------------------------------------- serving ----
+/// Under randomly-sized interleaved multi-session runs, the shared
+/// VirtualClock must stay monotone round-over-round, and the per-session
+/// attribution must tile the device's PhaseTimeline exactly: every phase,
+/// the sync total, the framework total, and the dispatch count each equal
+/// the sum over sessions (nothing double-counted, nothing lost).
+#[test]
+fn multi_session_attribution_tiles_device_timeline() {
+    let reg = Registry::builtin().unwrap();
+    let mut rng = XorShiftRng::new(0x5E21);
+    for trial in 0..6 {
+        let max_concurrent = 1 + rng.below(3);
+        let n_requests = 1 + rng.below(4);
+        let mut se = ServingEngine::new(
+            &reg,
+            ServeConfig { engine: EngineConfig::tiny_fused(), max_concurrent },
+        )
+        .unwrap();
+        se.reseed(0xA110 + trial as u64);
+        for _ in 0..n_requests {
+            let plen = 1 + rng.below(3);
+            let prompt: Vec<usize> = (0..plen).map(|_| 32 + rng.below(200)).collect();
+            se.submit(&prompt, 1 + rng.below(3)).unwrap();
+        }
+        let mut last_now = se.now_ns();
+        loop {
+            let stepped = se.step_round().unwrap();
+            let now = se.now_ns();
+            assert!(now >= last_now, "trial {trial}: clock went backwards");
+            last_now = now;
+            if stepped == 0 {
+                break;
+            }
+        }
+        let done = se.drain_finished();
+        assert_eq!(done.len(), n_requests, "trial {trial}");
+
+        let tl = &se.executor.device.timeline;
+        for i in 0..8 {
+            let attributed: u64 = done.iter().map(|s| s.metrics.phase_virtual_ns[i]).sum();
+            assert_eq!(
+                attributed, tl.virtual_ns[i],
+                "trial {trial}: phase {i} attribution {attributed} != timeline {}",
+                tl.virtual_ns[i]
+            );
+        }
+        let sync: u64 = done.iter().map(|s| s.metrics.sync_virtual_ns).sum();
+        assert_eq!(sync, tl.sync_virtual_ns, "trial {trial}: sync attribution");
+        let kernel: u64 = done.iter().map(|s| s.metrics.kernel_virtual_ns).sum();
+        assert_eq!(kernel, tl.kernel_virtual_ns, "trial {trial}: kernel attribution");
+        let fw: u64 = done.iter().map(|s| s.metrics.framework_virtual_ns).sum();
+        assert_eq!(fw, se.executor.framework_virtual_ns, "trial {trial}: framework");
+        let dispatches: u64 = done.iter().map(|s| s.metrics.dispatches).sum();
+        assert_eq!(dispatches, se.executor.dispatch_count, "trial {trial}: dispatches");
+        assert_eq!(dispatches, tl.dispatches(), "trial {trial}: timeline dispatches");
+        // Phase-sum invariant: totals are the sum of their parts.
+        assert_eq!(tl.total_virtual_ns(), tl.virtual_ns.iter().sum::<u64>());
+    }
+}
+
+/// FIFO admission-order invariants under arbitrary arrival/completion
+/// interleavings: the set of admitted ids is always a prefix of the
+/// arrival order, the active count never exceeds `max_concurrent`, and
+/// every submitted request eventually completes exactly once.
+#[test]
+fn fifo_admission_under_random_interleavings() {
+    let reg = Registry::builtin().unwrap();
+    let mut rng = XorShiftRng::new(0xF1F0);
+    for trial in 0..5 {
+        let max_concurrent = 1 + rng.below(3);
+        let mut se = ServingEngine::new(
+            &reg,
+            ServeConfig { engine: EngineConfig::tiny_fused(), max_concurrent },
+        )
+        .unwrap();
+        let mut submitted: Vec<u64> = Vec::new();
+        for _ in 0..14 {
+            if rng.below(2) == 0 {
+                let id = se.submit(&[40 + rng.below(100)], 1 + rng.below(2)).unwrap();
+                if let Some(&last) = submitted.last() {
+                    assert!(id > last, "ids must be arrival-ordered");
+                }
+                submitted.push(id);
+            } else {
+                se.step_round().unwrap();
+            }
+            assert!(
+                se.active.len() <= max_concurrent,
+                "trial {trial}: active {} > cap {max_concurrent}",
+                se.active.len()
+            );
+            // Admitted ids (active + finished) must be a FIFO prefix of
+            // the arrival order.
+            let mut admitted: Vec<u64> = se
+                .active
+                .iter()
+                .chain(se.finished.iter())
+                .map(|s| s.id)
+                .collect();
+            admitted.sort_unstable();
+            assert_eq!(
+                admitted,
+                submitted[..admitted.len()].to_vec(),
+                "trial {trial}: admission skipped the FIFO order"
+            );
+        }
+        while se.step_round().unwrap() > 0 {}
+        let done = se.drain_finished();
+        let mut done_ids: Vec<u64> = done.iter().map(|s| s.id).collect();
+        done_ids.sort_unstable();
+        assert_eq!(done_ids, submitted, "trial {trial}: completion set mismatch");
+        for s in &done {
+            assert_eq!(s.tokens.len(), s.n_new, "trial {trial}: short generation");
+        }
+    }
+}
+
+/// The queue itself is FIFO under arbitrary push/pop interleavings.
+#[test]
+fn request_queue_is_fifo_for_random_op_sequences() {
+    let mut rng = XorShiftRng::new(0x0F1F);
+    for _ in 0..100 {
+        let mut q = RequestQueue::new();
+        let mut expected: std::collections::VecDeque<u64> = Default::default();
+        for step in 0..40 {
+            if rng.below(3) < 2 {
+                let id = q.push(vec![rng.below(100)], 1 + rng.below(5), step as u64);
+                expected.push_back(id);
+            } else if let Some(r) = q.pop() {
+                assert_eq!(Some(r.id), expected.pop_front(), "queue broke FIFO");
+            } else {
+                assert!(expected.is_empty());
+            }
+            assert_eq!(q.len(), expected.len());
+        }
+        assert_eq!(q.submitted as usize, q.len() + q.admitted as usize);
     }
 }
 

@@ -389,6 +389,121 @@ fn batching_reduces_per_dispatch_overhead_but_sync_negates_it() {
     assert!(flushed >= unbatched, "per-token sync must negate batching");
 }
 
+// -------------------------------------------------- session isolation ----
+// Device-level invariants the multi-session serving engine depends on.
+
+#[test]
+fn destroying_one_sessions_buffers_keeps_other_bind_groups_valid() {
+    // Two "sessions" each own buffers + a bind group over the SAME shared
+    // pipeline. Destroying session A's buffers must not invalidate session
+    // B's bind group — only A's own dispatches may fail.
+    let mut dev = device();
+    let (pipeline, layout, a_in, a_out) = trivial_pipeline(&mut dev);
+    let b_in = storage_buffer(&mut dev, 256);
+    let b_out = storage_buffer(&mut dev, 256);
+    let group_a = bind_buffers(&mut dev, "session-a", layout, &[a_in], &[a_out]).unwrap();
+    let group_b = bind_buffers(&mut dev, "session-b", layout, &[b_in], &[b_out]).unwrap();
+
+    dev.destroy_buffer(a_in).unwrap();
+    dev.destroy_buffer(a_out).unwrap();
+
+    // Session B still dispatches cleanly.
+    let enc = dev.create_command_encoder("b");
+    dev.begin_compute_pass(enc).unwrap();
+    dev.set_pipeline(enc, pipeline).unwrap();
+    dev.set_bind_group(enc, group_b).unwrap();
+    dev.dispatch_workgroups(enc, 1, 1, 1).unwrap();
+    dev.end_compute_pass(enc).unwrap();
+    let cb = dev.finish(enc).unwrap();
+    dev.submit(&[cb], &NullRunner).unwrap();
+    assert_eq!(dev.stats.dispatches_executed, 1);
+
+    // Session A's group now fails at submit-time liveness validation.
+    let enc = dev.create_command_encoder("a");
+    dev.begin_compute_pass(enc).unwrap();
+    dev.set_pipeline(enc, pipeline).unwrap();
+    dev.set_bind_group(enc, group_a).unwrap();
+    dev.dispatch_workgroups(enc, 1, 1, 1).unwrap();
+    dev.end_compute_pass(enc).unwrap();
+    let cb = dev.finish(enc).unwrap();
+    assert!(dev.submit(&[cb], &NullRunner).is_err());
+    // And B keeps working afterwards — the failure is contained.
+    run_kernel_dispatch(&mut dev, pipeline, layout, &[b_in], &[b_out], (1, 1, 1), &NullRunner)
+        .unwrap();
+    assert_eq!(dev.stats.dispatches_executed, 2);
+}
+
+#[test]
+fn retired_sessions_pooled_buffers_rebind_with_valid_usage() {
+    // The executor's pool creates buffers with the full activation usage
+    // set; a retired session's buffers must re-bind into a NEW session's
+    // bind group and pass usage-flag validation unchanged.
+    let mut dev = device();
+    let (pipeline, layout, _, _) = trivial_pipeline(&mut dev);
+    let pool_usage = BufferUsage::STORAGE
+        | BufferUsage::COPY_DST
+        | BufferUsage::COPY_SRC
+        | BufferUsage::MAP_READ;
+    let recycled_in = dev
+        .create_buffer(BufferDesc { label: "pool-256".into(), size: 256, usage: pool_usage })
+        .unwrap();
+    let recycled_out = dev
+        .create_buffer(BufferDesc { label: "pool-256".into(), size: 256, usage: pool_usage })
+        .unwrap();
+
+    // "Session 1" uses the buffers and retires (buffers return to pool).
+    run_kernel_dispatch(
+        &mut dev, pipeline, layout, &[recycled_in], &[recycled_out], (1, 1, 1), &NullRunner,
+    )
+    .unwrap();
+
+    // "Session 2" re-acquires the same buffers: write, re-bind, dispatch,
+    // map — every usage check must pass, zero validation errors.
+    dev.write_buffer(recycled_in, 0, &[1u8; 64]).unwrap();
+    let group2 =
+        bind_buffers(&mut dev, "session-2", layout, &[recycled_in], &[recycled_out]).unwrap();
+    let enc = dev.create_command_encoder("s2");
+    dev.begin_compute_pass(enc).unwrap();
+    dev.set_pipeline(enc, pipeline).unwrap();
+    dev.set_bind_group(enc, group2).unwrap();
+    dev.dispatch_workgroups(enc, 1, 1, 1).unwrap();
+    dev.end_compute_pass(enc).unwrap();
+    let cb = dev.finish(enc).unwrap();
+    dev.submit(&[cb], &NullRunner).unwrap();
+    let bytes = dev.map_read(recycled_out).unwrap();
+    assert_eq!(bytes.len(), 256);
+    assert_eq!(dev.stats.validation_errors, 0);
+    assert_eq!(dev.stats.dispatches_executed, 2);
+}
+
+#[test]
+fn coalesced_map_read_many_validates_each_buffer() {
+    let mut dev = device();
+    let ok_a = storage_buffer(&mut dev, 64);
+    let ok_b = storage_buffer(&mut dev, 128);
+    // Happy path: one sync, every buffer's bytes.
+    let out = dev.map_read_many(&[ok_a, ok_b]).unwrap();
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].len(), 64);
+    assert_eq!(out[1].len(), 128);
+    // Missing MAP_READ usage on ANY buffer fails the whole call.
+    let no_map = dev
+        .create_buffer(BufferDesc {
+            label: "nm".into(),
+            size: 16,
+            usage: BufferUsage::STORAGE,
+        })
+        .unwrap();
+    assert!(dev.map_read_many(&[ok_a, no_map]).is_err());
+    // Destroyed buffers fail too.
+    dev.destroy_buffer(ok_b).unwrap();
+    assert!(dev.map_read_many(&[ok_a, ok_b]).is_err());
+    // Empty set is a no-op (no sync cost).
+    let t0 = dev.clock.now_ns();
+    assert!(dev.map_read_many(&[]).unwrap().is_empty());
+    assert_eq!(dev.clock.now_ns(), t0);
+}
+
 #[test]
 fn error_paths_never_corrupt_device() {
     // After a storm of invalid calls the device still works.
