@@ -1,0 +1,66 @@
+//! Bench: eager vs planned execution — real host wall time of driving the
+//! substrate plus the virtual-clock framework-overhead delta (table P1's
+//! bench twin). The eager walk pays HashMap lookups, per-op allocations
+//! and a host round-trip per intermediate; the planned replay walks a
+//! flat pre-resolved step array, so both the virtual model *and* the real
+//! host cost of a decode step should drop.
+
+#[path = "harness.rs"]
+mod harness;
+
+use wdb::engine::{Engine, EngineConfig, ExecMode};
+use wdb::model::ByteTokenizer;
+use wdb::runtime::Registry;
+use wdb::serve::{ServeConfig, ServingEngine};
+
+fn main() {
+    const SEED: u64 = 0x91A4;
+    let registry = Registry::open().expect("registry");
+    let prompt = ByteTokenizer::new(512).paper_prompt();
+    let tokens = 8;
+
+    harness::header();
+    let mut results = Vec::new();
+    for (name, exec) in [("eager", ExecMode::Eager), ("planned", ExecMode::Planned)] {
+        let cfg = EngineConfig { exec, ..EngineConfig::tiny_fused() };
+        let mut engine = Engine::new(&registry, cfg).expect("engine");
+        let r = harness::bench(&format!("decode/{name}/8tok"), 2, 8, || {
+            engine.reseed(SEED);
+            engine.generate(&prompt, tokens).expect("generate");
+        });
+        let fw = engine.executor.framework_virtual_ns;
+        let ops = engine.executor.dispatch_count;
+        results.push((name, r.mean_ns, fw as f64 / 1e3 / ops.max(1) as f64));
+    }
+    println!();
+    for (name, wall, fw_us) in &results {
+        println!(
+            "{name:<8} real {} / run, framework {fw_us:.2} us/op (virtual)",
+            harness::fmt_ns(*wall)
+        );
+    }
+    if let [(_, _, eager_fw), (_, _, planned_fw)] = results.as_slice() {
+        println!(
+            "framework overhead ratio (eager/planned): {:.1}x",
+            eager_fw / planned_fw.max(1e-9)
+        );
+    }
+
+    // Plan-build vs replay attribution at N=1 serving.
+    let mut se = ServingEngine::new(
+        &registry,
+        ServeConfig { engine: EngineConfig::tiny_planned(), max_concurrent: 1 },
+    )
+    .expect("serving engine");
+    se.reseed(SEED);
+    se.submit(&prompt, tokens).expect("submit");
+    let report = se.run_to_completion().expect("serve");
+    let runner = se.executor.plan_runner().expect("planned");
+    println!(
+        "plan build: {:.3} ms virtual / {:.3} ms real; replay {:.1} us/step over {} steps",
+        runner.build_virtual_ns as f64 / 1e6,
+        runner.build_real_ns as f64 / 1e6,
+        report.encode_virtual_ns as f64 / 1e3 / report.steps.max(1) as f64,
+        report.steps
+    );
+}

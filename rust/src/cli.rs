@@ -124,6 +124,7 @@ pub fn run(args: Args) -> Result<()> {
         "batch-sweep" => cmd_batch_sweep(&args),
         "serve" => cmd_serve(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "plan-bench" => cmd_plan_bench(&args),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
@@ -152,7 +153,12 @@ Commands:
   serve-bench [--sessions 1,2,4,8] [--tokens 16] [--profile dawn]
               [--out DIR]         multi-session serving scaling table:
                                   aggregate tok/s + per-phase attribution
-                                  vs concurrent session count";
+                                  vs concurrent session count
+  plan-bench [--tokens 8] [--dps 16] [--profile dawn] [--out DIR]
+                                  table P1: eager vs planned per-op
+                                  framework overhead across workloads x
+                                  {fused, unfused}, plan-build vs replay
+                                  cost attribution, token-parity check";
 
 fn dims_by_model(name: &str) -> Result<GraphDims> {
     Ok(match name {
@@ -313,6 +319,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
             device_argmax: args.has("device-argmax"),
             weight_seed: 0xC0FFEE,
             kernel_time_policy: policy,
+            ..EngineConfig::tiny_fused()
         };
         let mut engine = Engine::new(&registry, cfg)?;
         let r = run_protocol(&mut engine, &prompt, tokens, warmup, runs)?;
@@ -545,6 +552,155 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             let path = write_results(&dir, &format!("serve_bench_{}", t.id), &t.to_json())?;
             eprintln!("wrote {}", path.display());
         }
+    }
+    Ok(())
+}
+
+/// One plan-bench cell: run a workload x fusion through one exec mode on
+/// a fresh 1-session serving engine. Returns (token stream, report,
+/// submits, plan build (virtual ns, real ns) when planned).
+#[allow(clippy::type_complexity, clippy::too_many_arguments)]
+fn plan_bench_run(
+    registry: &Registry,
+    dims: GraphDims,
+    fusion: FusionConfig,
+    exec: crate::engine::ExecMode,
+    profile: &ImplementationProfile,
+    dps: usize,
+    prompt: &[usize],
+    tokens: usize,
+    seed: u64,
+) -> Result<(Vec<usize>, crate::serve::ServeReport, u64, Option<(u64, u64)>)> {
+    use crate::serve::{ServeConfig, ServingEngine};
+    let cfg = EngineConfig {
+        fusion,
+        profile: profile.clone(),
+        exec,
+        dispatches_per_submit: dps,
+        dims_override: Some(dims),
+        ..EngineConfig::tiny_fused()
+    };
+    let mut se = ServingEngine::new(registry, ServeConfig { engine: cfg, max_concurrent: 1 })?;
+    se.reseed(seed);
+    se.submit(prompt, tokens)?;
+    let report = se.run_to_completion()?;
+    let submits = se.executor.device.stats.submits;
+    let build = se
+        .executor
+        .plan_runner()
+        .map(|r| (r.build_virtual_ns, r.build_real_ns));
+    let mut done = se.drain_finished();
+    let toks = done.remove(0).tokens;
+    Ok((toks, report, submits, build))
+}
+
+fn cmd_plan_bench(args: &Args) -> Result<()> {
+    use crate::engine::overhead::PlannedOverheadDelta;
+    use crate::engine::ExecMode;
+    use crate::fx::workloads::decode_workloads;
+    use crate::fx::PassManager;
+    use crate::tables::plan::{plan_table, PlanBenchRow};
+
+    const SEED: u64 = 0x91A4;
+    let registry = Registry::open()?;
+    let tokens = args.flag_usize("tokens", 8).max(1);
+    let dps = args.flag_usize("dps", 16).max(1);
+    let profile = profile_by_name(args.flag("profile").unwrap_or("dawn"))?;
+    let tok = ByteTokenizer::new(registry.config("qwen-tiny")?.vocab);
+    let prompt = tok.paper_prompt();
+
+    println!(
+        "Plan bench: eager vs planned execution ({} tokens, {} dispatches/submit, \
+         profile {})\n",
+        tokens, dps, profile.name
+    );
+
+    // The pass-manager pipeline that feeds the planner, shown once.
+    let g = crate::fx::build_decode_graph(&GraphDims::qwen_tiny(), FusionConfig::unfused());
+    let (_, reports) = PassManager::for_fusion(FusionConfig::fused(), "tiny").run(&g)?;
+    println!("fusion pass pipeline (qwen-tiny, feeds the planner):");
+    for r in &reports {
+        println!(
+            "  {:<14} {:>4} -> {:<4} dispatches (-{})",
+            r.name,
+            r.dispatches_before,
+            r.dispatches_after,
+            r.saved()
+        );
+    }
+    println!();
+
+    let mut rows = Vec::new();
+    for wl in decode_workloads() {
+        for (fname, fusion) in
+            [("unfused", FusionConfig::unfused()), ("fused", FusionConfig::fused())]
+        {
+            let (e_toks, e_rep, e_submits, _) = plan_bench_run(
+                &registry, wl.dims, fusion, ExecMode::Eager, &profile, dps, &prompt,
+                tokens, SEED,
+            )?;
+            let (p_toks, p_rep, p_submits, build) = plan_bench_run(
+                &registry, wl.dims, fusion, ExecMode::Planned, &profile, dps, &prompt,
+                tokens, SEED,
+            )?;
+            let (build_v, build_r) = build.unwrap_or((0, 0));
+            let steps = e_rep.steps.max(1) as f64;
+            // One implementation of the per-op framework math for the
+            // table, the summary, and the unit-tested helper.
+            let delta = PlannedOverheadDelta::derive(
+                e_rep.framework_virtual_ns,
+                e_rep.dispatches,
+                p_rep.framework_virtual_ns,
+                p_rep.dispatches,
+            );
+            rows.push(PlanBenchRow {
+                workload: wl.name.to_string(),
+                fusion: fname,
+                dispatches_per_step: e_rep.dispatches_per_step,
+                eager_fw_us_per_op: delta.eager_fw_us_per_op,
+                planned_fw_us_per_op: delta.planned_fw_us_per_op,
+                eager_submits_per_step: e_submits as f64 / steps,
+                planned_submits_per_step: p_submits as f64 / p_rep.steps.max(1) as f64,
+                plan_build_virtual_ms: build_v as f64 / 1e6,
+                plan_build_real_ms: build_r as f64 / 1e6,
+                planned_replay_us_per_step: p_rep.encode_virtual_ns as f64
+                    / 1e3
+                    / p_rep.steps.max(1) as f64,
+                eager_tok_per_s: e_rep.agg_tok_per_s,
+                planned_tok_per_s: p_rep.agg_tok_per_s,
+                tokens_match: e_toks == p_toks,
+            });
+        }
+    }
+
+    let table = plan_table(&rows);
+    println!("{}", table.to_markdown());
+
+    for r in &rows {
+        if !r.tokens_match {
+            return Err(Error::Graph(format!(
+                "{} ({}): planned token stream diverged from eager",
+                r.workload, r.fusion
+            )));
+        }
+    }
+    // Acceptance summary on the reference (fused qwen-tiny) row.
+    if let Some(r) = rows.iter().find(|r| r.workload == "qwen-tiny" && r.fusion == "fused") {
+        let d = r.overhead_delta();
+        println!(
+            "reference profile ({}): planned framework overhead {:.2} us/op vs eager \
+             {:.1} us/op — {:.1}x lower (acceptance bar: >= 2x)",
+            profile.name,
+            d.planned_fw_us_per_op,
+            d.eager_fw_us_per_op,
+            d.ratio()
+        );
+    }
+
+    if let Some(out) = args.flag("out") {
+        let dir = std::path::PathBuf::from(out);
+        let path = write_results(&dir, "plan_bench_P1", &table.to_json())?;
+        eprintln!("wrote {}", path.display());
     }
     Ok(())
 }

@@ -1,127 +1,76 @@
-//! Graph executor: one WebGPU dispatch per kernel node, host ops in
-//! between, buffer pooling, per-op framework-overhead accounting.
+//! Graph executor: eager per-node execution plus planned replay.
 //!
-//! This is the torch-webgpu eager executor analogue: it walks the FX graph
-//! in order, paying (1) the per-op framework cost (Python interpreter /
-//! tensor metadata in the paper, ~59-71 us — a virtual-clock constant
-//! here), (2) the full 8-phase dispatch sequence per kernel node, and
-//! (3) kernel execution on the kernel runtime. Intermediate values chain
-//! GPU-side (no sync); only the caller's explicit `map_read` on the logits
-//! buffer synchronizes.
+//! **Eager mode** (default) is the torch-webgpu analogue the paper
+//! characterizes: it walks the FX graph per token, paying (1) the per-op
+//! framework cost (~59-71 us of interpreter/metadata work — a virtual-
+//! clock constant), (2) the full 8-phase dispatch sequence per kernel
+//! node (one encoder + submit each), and (3) kernel execution, with every
+//! intermediate activation round-tripped through a host tensor.
+//!
+//! **Planned mode** delegates to a [`PlanRunner`]: the graph is compiled
+//! once by the [`Planner`] into an [`ExecutionPlan`] (pre-resolved
+//! bindings, device-resident values, lifetime-aliased arena, encoder
+//! batching) and the per-token hot loop is an allocation-free replay.
+//! `wdb plan-bench` measures the framework-overhead delta between the two
+//! modes (table P1).
 //!
 //! Everything a `GraphExecutor` owns is **session-independent** and shared
 //! by the multi-session serving engine (`crate::serve`): the device, the
-//! prepared-pipeline cache, the bind-group-layout cache, the size-class
-//! buffer pool, the bind-group cache, and the pinned weight buffers.
-//! Per-session decode state (KV caches, position, generated tokens) lives
-//! in `crate::serve::SessionState` — the executor never sees it except as
-//! the `inputs` of one `run` call.
+//! prepared-pipeline pool, the bounded size-class buffer pool, the
+//! bind-group cache, the pinned weight buffers, and (in planned mode) the
+//! plan runner's arena. Per-session decode state lives in
+//! `crate::serve::SessionState`.
 
 use std::collections::HashMap;
+use std::time::Instant;
 
 use crate::fx::graph::FxGraph;
 use crate::fx::node::{HostOp, OpKind, ValueId};
+use crate::plan::{ExecutionPlan, PipelinePool, PlanConfig, PlanRunner, Planner};
 use crate::runtime::hostops;
 use crate::runtime::registry::Registry;
 use crate::tensor::Tensor;
-use crate::webgpu::queue::{bind_buffers, kernel_layout};
+use crate::webgpu::queue::bind_buffers;
 use crate::webgpu::{
-    BindGroupLayoutId, BufferDesc, BufferId, BufferUsage, ComputePipelineId,
-    Device, KernelIoSpec, ShaderModuleDesc,
+    BufferDesc, BufferId, BufferPool, BufferUsage, Device, KernelIoSpec,
 };
 use crate::{Error, Result};
 
-/// A prepared pipeline: compiled-pipeline id + its layout + IO specs.
-#[derive(Debug, Clone)]
-struct Prepared {
-    pipeline: ComputePipelineId,
-    layout: BindGroupLayoutId,
-    inputs: Vec<KernelIoSpec>,
-    outputs: Vec<KernelIoSpec>,
-    workgroups: (u32, u32, u32),
-}
-
-/// Shared prepared-pipeline + bind-group-layout cache. Pipelines compile
-/// once per kernel name (off the request path, like Dawn pipeline caching)
-/// and are reused by every session the serving engine interleaves.
-#[derive(Default)]
-struct PipelineCache {
-    prepared: HashMap<String, Prepared>,
-    layouts: HashMap<(usize, usize), BindGroupLayoutId>,
-}
-
-impl PipelineCache {
-    /// Create pipelines for every kernel a graph uses and compile the AOT
-    /// modules.
-    fn prepare(&mut self, device: &mut Device, registry: &Registry, graph: &FxGraph) -> Result<()> {
-        for name in graph.kernel_names() {
-            if self.prepared.contains_key(&name) {
-                continue;
-            }
-            registry.ensure_loaded(&name)?;
-            let spec = registry.spec(&name)?;
-            let key = (spec.inputs.len(), spec.outputs.len());
-            let layout = match self.layouts.get(&key) {
-                Some(&l) => l,
-                None => {
-                    let l = kernel_layout(device, &name, key.0, key.1)?;
-                    self.layouts.insert(key, l);
-                    l
-                }
-            };
-            let module = device.create_shader_module(ShaderModuleDesc {
-                label: name.clone(),
-                kernel: name.clone(),
-                inputs: spec.inputs.clone(),
-                outputs: spec.outputs.clone(),
-            })?;
-            let pipeline = device.create_compute_pipeline(&name, module, layout)?;
-            // Workgroup count: ceil(out elements / 256) — matches the WGSL
-            // convention of 256-thread workgroups.
-            let out_elems: usize = spec.outputs.iter().map(KernelIoSpec::numel).sum();
-            let wg = ((out_elems + 255) / 256).max(1) as u32;
-            self.prepared.insert(
-                name.clone(),
-                Prepared {
-                    pipeline,
-                    layout,
-                    inputs: spec.inputs.clone(),
-                    outputs: spec.outputs.clone(),
-                    workgroups: (wg.min(65_535), 1, 1),
-                },
-            );
-        }
-        Ok(())
-    }
-}
+/// Eager bind-group cache: layout id -> bound-buffer key -> group. The
+/// nested map lets the hot path probe with a borrowed scratch slice.
+type BindGroupCache = HashMap<u64, HashMap<Vec<BufferId>, crate::webgpu::BindGroupId>>;
 
 pub struct GraphExecutor<'r> {
     pub device: Device,
     registry: &'r Registry,
-    pipelines: PipelineCache,
-    /// Size-class buffer pool (the paper's buffer-pooling experiment; on by
-    /// default because re-creating buffers per dispatch is purely hostile).
-    /// Shared across sessions: a retired session's buffers are recycled by
-    /// whichever session dispatches next.
-    pool: HashMap<usize, Vec<BufferId>>,
+    /// Shared prepared-pipeline + layout pool (compiles once per kernel
+    /// name, off the request path — Dawn-style pipeline caching).
+    pipelines: PipelinePool,
+    /// Bounded size-class pool for eager-mode activation buffers (the
+    /// paper's buffer-pooling experiment). Shared across sessions.
+    pub pool: BufferPool,
     /// PERF (§Perf L3): weights pinned into persistent device buffers at
-    /// prepare time — uploaded once, bound directly per dispatch. This is
-    /// also the faithful WebGPU pattern: weight buffers live on the GPU for
-    /// the model's lifetime; only activations move. One copy serves every
-    /// session.
+    /// prepare time — uploaded once, bound directly per dispatch. One copy
+    /// serves every session and both execution modes.
     pinned: HashMap<ValueId, BufferId>,
-    /// PERF: bind-group cache keyed by (layout, bound buffers) — the
-    /// paper's "bind group caching" experiment (hash-based lookup, §5.1).
-    /// With pinned weights + pooled activations the key set is small, so
-    /// bind-group creation cost is paid O(distinct bindings), not O(steps).
-    bind_cache: HashMap<(u64, Vec<BufferId>), crate::webgpu::BindGroupId>,
-    /// Per-op framework overhead (virtual ns) — the "Python/framework"
-    /// component of the paper's ~95 us per-operation overhead.
+    /// PERF: eager bind-group cache (the paper's "bind group caching"
+    /// experiment), probed with a reusable scratch key instead of building
+    /// a fresh `Vec` per dispatch.
+    bind_cache: BindGroupCache,
+    /// Reusable hot-path scratch (no per-dispatch allocations).
+    key_scratch: Vec<BufferId>,
+    in_scratch: Vec<BufferId>,
+    out_scratch: Vec<BufferId>,
+    borrowed_scratch: Vec<(usize, BufferId)>,
+    /// Planned-mode state: present after [`GraphExecutor::enable_plan`].
+    planned: Option<PlanRunner>,
+    /// Per-op framework overhead (virtual ns) charged in eager mode — the
+    /// "Python/framework" component of the paper's ~95 us per-op cost.
     pub framework_ns_per_op: u64,
-    /// Dispatches issued since construction.
+    /// Dispatches issued since construction (both modes).
     pub dispatch_count: u64,
-    /// Accumulated framework-overhead virtual ns (for per-session and
-    /// per-phase attribution in the serving metrics).
+    /// Accumulated framework-overhead virtual ns (both modes; serving
+    /// attribution diffs this around each session's encode).
     pub framework_virtual_ns: u64,
 }
 
@@ -130,10 +79,15 @@ impl<'r> GraphExecutor<'r> {
         GraphExecutor {
             device,
             registry,
-            pipelines: PipelineCache::default(),
-            pool: HashMap::new(),
+            pipelines: PipelinePool::new(),
+            pool: BufferPool::new(None),
             pinned: HashMap::new(),
             bind_cache: HashMap::new(),
+            key_scratch: Vec::new(),
+            in_scratch: Vec::new(),
+            out_scratch: Vec::new(),
+            borrowed_scratch: Vec::new(),
+            planned: None,
             framework_ns_per_op,
             dispatch_count: 0,
             framework_virtual_ns: 0,
@@ -164,32 +118,42 @@ impl<'r> GraphExecutor<'r> {
     }
 
     /// Create pipelines for every kernel a graph uses (off the request
-    /// path; shared across all sessions).
+    /// path; shared across all sessions and both execution modes).
     pub fn prepare(&mut self, graph: &FxGraph) -> Result<()> {
         self.pipelines.prepare(&mut self.device, self.registry, graph)
     }
 
-    fn acquire(&mut self, size: usize) -> Result<BufferId> {
-        if let Some(free) = self.pool.get_mut(&size) {
-            if let Some(b) = free.pop() {
-                return Ok(b);
-            }
-        }
-        self.device.create_buffer(BufferDesc {
-            label: format!("pool-{size}"),
-            size,
-            usage: BufferUsage::STORAGE
-                | BufferUsage::COPY_DST
-                | BufferUsage::COPY_SRC
-                | BufferUsage::MAP_READ,
-        })
+    /// Compile `graph` into an [`ExecutionPlan`] and materialize its
+    /// runner: subsequent `run` calls replay the plan instead of
+    /// interpreting the graph. Build cost (compile + arena + bind groups)
+    /// is tracked on the runner, separate from replay cost.
+    pub fn enable_plan(&mut self, graph: &FxGraph, cfg: PlanConfig) -> Result<()> {
+        let t0 = Instant::now();
+        let v0 = self.device.clock.now_ns();
+        let plan = {
+            let GraphExecutor { device, registry, pipelines, pinned, .. } = &mut *self;
+            Planner::new(*registry).compile(device, pipelines, graph, pinned, &cfg)?
+        };
+        let mut runner = PlanRunner::materialize(&mut self.device, plan)?;
+        runner.build_virtual_ns = self.device.clock.now_ns() - v0;
+        runner.build_real_ns = t0.elapsed().as_nanos() as u64;
+        self.planned = Some(runner);
+        Ok(())
     }
 
-    fn release(&mut self, size: usize, id: BufferId) {
-        self.pool.entry(size).or_default().push(id);
+    pub fn plan_runner(&self) -> Option<&PlanRunner> {
+        self.planned.as_ref()
     }
 
-    /// Execute the graph. `inputs` must cover every graph input.
+    pub fn plan(&self) -> Option<&ExecutionPlan> {
+        self.planned.as_ref().map(|r| &r.plan)
+    }
+
+    pub fn is_planned(&self) -> bool {
+        self.planned.is_some()
+    }
+
+    /// Execute the graph. `inputs` must cover every non-pinned graph input.
     /// Returns (named outputs, the logits output's live buffer id) — the
     /// caller `map_read`s that buffer to model the per-token sync.
     pub fn run(
@@ -197,9 +161,71 @@ impl<'r> GraphExecutor<'r> {
         graph: &FxGraph,
         inputs: &HashMap<String, Tensor>,
     ) -> Result<(HashMap<String, Tensor>, Option<BufferId>)> {
+        self.run_with_ring(graph, inputs, 0)
+    }
+
+    /// `run` with an explicit logits-ring index (planned mode): sessions
+    /// replayed in the same scheduler round pass distinct indices so their
+    /// logits survive until the round's coalesced readback. Eager mode
+    /// ignores the index.
+    pub fn run_with_ring(
+        &mut self,
+        graph: &FxGraph,
+        inputs: &HashMap<String, Tensor>,
+        ring_idx: usize,
+    ) -> Result<(HashMap<String, Tensor>, Option<BufferId>)> {
+        if self.planned.is_some() {
+            let GraphExecutor {
+                device, registry, planned, dispatch_count, framework_virtual_ns, ..
+            } = self;
+            let runner = planned.as_mut().expect("planned mode checked above");
+            // Fail loudly if the caller's graph is not the one the plan
+            // was compiled from — replaying a stale plan would silently
+            // produce the wrong outputs.
+            let fp = crate::plan::GraphFingerprint::of(graph);
+            if fp != runner.plan.fingerprint {
+                return Err(Error::Graph(format!(
+                    "planned executor got a different graph ({fp:?}) than the \
+                     compiled plan ({:?}); call enable_plan for it first",
+                    runner.plan.fingerprint
+                )));
+            }
+            let (outs, logits_buf, delta) = runner.replay(device, *registry, inputs, ring_idx)?;
+            *dispatch_count += delta.dispatches;
+            *framework_virtual_ns += delta.framework_ns;
+            return Ok((outs, logits_buf));
+        }
+        self.run_eager(graph, inputs)
+    }
+
+    /// The eager per-node walk (the torch-webgpu pathology the plan
+    /// removes): per-op framework cost, per-op encoder + submit, host
+    /// round-trip per intermediate.
+    fn run_eager(
+        &mut self,
+        graph: &FxGraph,
+        inputs: &HashMap<String, Tensor>,
+    ) -> Result<(HashMap<String, Tensor>, Option<BufferId>)> {
+        let GraphExecutor {
+            device,
+            registry,
+            pipelines,
+            pool,
+            pinned,
+            bind_cache,
+            key_scratch,
+            in_scratch,
+            out_scratch,
+            borrowed_scratch,
+            framework_ns_per_op,
+            dispatch_count,
+            framework_virtual_ns,
+            ..
+        } = self;
+
         let mut values: Vec<Option<Tensor>> = vec![None; graph.n_values];
         for (name, &vid) in &graph.inputs {
-            if self.pinned.contains_key(&vid) {
+            if pinned.contains_key(&vid) {
                 continue; // weight lives in its persistent device buffer
             }
             let t = inputs
@@ -210,36 +236,32 @@ impl<'r> GraphExecutor<'r> {
 
         let logits_value = graph.outputs.get("logits").copied();
         let mut logits_buffer: Option<BufferId> = None;
-        let mut borrowed: Vec<(usize, BufferId)> = Vec::with_capacity(8);
 
         for node in &graph.nodes {
             match &node.op {
                 OpKind::Host(op) => {
-                    self.run_host(*op, node.inputs.as_slice(), &node.outputs, &mut values)?;
+                    run_host(&node.name, *op, &node.inputs, &node.outputs, &mut values)?;
                 }
                 OpKind::Kernel(kname) => {
                     // (1) framework overhead — Python interpreter / tensor
                     // metadata cost in torch-webgpu (drifted per run).
-                    let fw = self.device.drifted_cost(self.framework_ns_per_op);
-                    self.device.clock.advance_cpu(fw);
-                    self.framework_virtual_ns += fw;
+                    let fw = device.drifted_cost(*framework_ns_per_op);
+                    device.clock.advance_cpu(fw);
+                    *framework_virtual_ns += fw;
 
-                    let prep = self
-                        .pipelines
-                        .prepared
-                        .get(kname)
-                        .ok_or_else(|| {
-                            Error::Graph(format!("kernel '{kname}' not prepared"))
-                        })?
-                        .clone();
+                    let prep = pipelines.get(kname).ok_or_else(|| {
+                        Error::Graph(format!("kernel '{kname}' not prepared"))
+                    })?;
 
                     // (2) bind inputs: pinned weights directly, activations
-                    // via pooled upload.
-                    borrowed.clear();
-                    let mut in_bufs = Vec::with_capacity(prep.inputs.len());
+                    // via pooled upload. Scratch vecs are reused — no
+                    // per-dispatch allocation on the steady state.
+                    in_scratch.clear();
+                    out_scratch.clear();
+                    borrowed_scratch.clear();
                     for (i, spec) in prep.inputs.iter().enumerate() {
-                        if let Some(&buf) = self.pinned.get(&node.inputs[i]) {
-                            in_bufs.push(buf);
+                        if let Some(&buf) = pinned.get(&node.inputs[i]) {
+                            in_scratch.push(buf);
                             continue;
                         }
                         let t = values[node.inputs[i].0].as_ref().ok_or_else(|| {
@@ -252,52 +274,52 @@ impl<'r> GraphExecutor<'r> {
                             )));
                         }
                         let size = spec.size_bytes();
-                        let buf = self.acquire(size)?;
-                        self.device.write_buffer(buf, 0, t.data.as_bytes())?;
-                        in_bufs.push(buf);
-                        borrowed.push((size, buf));
+                        let buf = pool.acquire(device, size)?;
+                        device.write_buffer(buf, 0, t.data.as_bytes())?;
+                        in_scratch.push(buf);
+                        borrowed_scratch.push((size, buf));
                     }
-                    let mut out_bufs = Vec::with_capacity(prep.outputs.len());
                     for spec in &prep.outputs {
                         let size = spec.size_bytes();
-                        let buf = self.acquire(size)?;
-                        out_bufs.push(buf);
-                        borrowed.push((size, buf));
+                        let buf = pool.acquire(device, size)?;
+                        out_scratch.push(buf);
+                        borrowed_scratch.push((size, buf));
                     }
 
                     // (3) the 8-phase dispatch sequence. Bind groups are
-                    // cached by (layout, buffers) — hash-based lookup.
-                    let mut key_bufs = in_bufs.clone();
-                    key_bufs.extend_from_slice(&out_bufs);
-                    let cache_key = (prep.layout.0, key_bufs);
-                    let group = match self.bind_cache.get(&cache_key) {
+                    // cached by (layout, buffers); the probe borrows the
+                    // scratch key, cloning only on the insert (miss) path.
+                    key_scratch.clear();
+                    key_scratch.extend_from_slice(in_scratch.as_slice());
+                    key_scratch.extend_from_slice(out_scratch.as_slice());
+                    let by_layout = bind_cache.entry(prep.layout.0).or_default();
+                    let group = match by_layout.get(key_scratch.as_slice()) {
                         Some(&g) => g,
                         None => {
                             let g = bind_buffers(
-                                &mut self.device, &node.name, prep.layout, &in_bufs, &out_bufs,
+                                device,
+                                &node.name,
+                                prep.layout,
+                                in_scratch.as_slice(),
+                                out_scratch.as_slice(),
                             )?;
-                            self.bind_cache.insert(cache_key, g);
+                            by_layout.insert(key_scratch.clone(), g);
                             g
                         }
                     };
-                    let enc = self.device.create_command_encoder(&node.name);
-                    self.device.begin_compute_pass(enc)?;
-                    self.device.set_pipeline(enc, prep.pipeline)?;
-                    self.device.set_bind_group(enc, group)?;
-                    self.device.dispatch_workgroups(
-                        enc,
-                        prep.workgroups.0,
-                        prep.workgroups.1,
-                        prep.workgroups.2,
-                    )?;
-                    self.device.end_compute_pass(enc)?;
-                    let cb = self.device.finish(enc)?;
-                    self.device.submit(&[cb], self.registry)?;
-                    self.dispatch_count += 1;
+                    let enc = device.create_command_encoder(&node.name);
+                    device.begin_compute_pass(enc)?;
+                    device.set_pipeline(enc, prep.pipeline)?;
+                    device.set_bind_group(enc, group)?;
+                    device.dispatch_workgroups(enc, prep.grid.0, prep.grid.1, prep.grid.2)?;
+                    device.end_compute_pass(enc)?;
+                    let cb = device.finish(enc)?;
+                    device.submit(&[cb], *registry)?;
+                    *dispatch_count += 1;
 
                     // (4) chain outputs GPU-side (peek: no sync cost).
                     for (j, spec) in prep.outputs.iter().enumerate() {
-                        let bytes = self.device.peek_buffer(out_bufs[j])?.to_vec();
+                        let bytes = device.peek_buffer(out_scratch[j])?.to_vec();
                         let t = bytes_to_tensor(spec, &bytes)?;
                         values[node.outputs[j].0] = Some(t);
                     }
@@ -305,11 +327,12 @@ impl<'r> GraphExecutor<'r> {
                     // Keep the logits buffer alive for the caller's map_read.
                     let produces_logits =
                         logits_value.is_some_and(|lv| node.outputs.contains(&lv));
-                    for &(size, buf) in &borrowed {
-                        if produces_logits && Some(buf) == out_bufs.last().copied() {
+                    let last_out = out_scratch.last().copied();
+                    for &(size, buf) in borrowed_scratch.iter() {
+                        if produces_logits && Some(buf) == last_out {
                             logits_buffer = Some(buf);
                         } else {
-                            self.release(size, buf);
+                            pool.release(size, buf);
                         }
                     }
                 }
@@ -335,79 +358,64 @@ impl<'r> GraphExecutor<'r> {
         self.registry.spec(name)
     }
 
-    /// Return the logits buffer to the pool once the caller is done with it.
+    /// Return the logits buffer to the pool once the caller is done with
+    /// it. Plan-owned ring buffers are permanent and stay put.
     pub fn release_logits(&mut self, buf: BufferId) -> Result<()> {
-        let size = self.device.buffer_size(buf)?;
-        self.release(size, buf);
-        Ok(())
-    }
-
-    fn run_host(
-        &mut self,
-        op: HostOp,
-        inputs: &[ValueId],
-        outputs: &[ValueId],
-        values: &mut [Option<Tensor>],
-    ) -> Result<()> {
-        let get = |v: ValueId, values: &[Option<Tensor>]| -> Result<Tensor> {
-            values[v.0]
-                .clone()
-                .ok_or_else(|| Error::Graph(format!("host op input {v:?} missing")))
-        };
-        match op {
-            HostOp::Embed => {
-                // Engine performs embedding before run(); unused in graphs.
-                return Err(Error::Graph("Embed host op not graph-executable".into()));
-            }
-            HostOp::SplitKv => {
-                let kv = get(inputs[0], values)?;
-                let (k, v) = hostops::split_kv(&kv)?;
-                values[outputs[0].0] = Some(k);
-                values[outputs[1].0] = Some(v);
-            }
-            HostOp::ToHeads { heads, head_dim } => {
-                let x = get(inputs[0], values)?;
-                values[outputs[0].0] = Some(hostops::to_heads(&x, heads, head_dim)?);
-            }
-            HostOp::FromHeads => {
-                let x = get(inputs[0], values)?;
-                values[outputs[0].0] = Some(hostops::from_heads(&x)?);
-            }
-            HostOp::Halves => {
-                let x = get(inputs[0], values)?;
-                let (a, b) = hostops::halves(&x)?;
-                values[outputs[0].0] = Some(a);
-                values[outputs[1].0] = Some(b);
+        if let Some(runner) = &self.planned {
+            if runner.owns_buffer(buf) {
+                return Ok(());
             }
         }
+        let size = self.device.buffer_size(buf)?;
+        self.pool.release(size, buf);
         Ok(())
     }
 }
 
+fn run_host(
+    node_name: &str,
+    op: HostOp,
+    inputs: &[ValueId],
+    outputs: &[ValueId],
+    values: &mut [Option<Tensor>],
+) -> Result<()> {
+    let get = |v: ValueId, values: &[Option<Tensor>]| -> Result<Tensor> {
+        values[v.0]
+            .clone()
+            .ok_or_else(|| Error::Graph(format!("{node_name}: host op input {v:?} missing")))
+    };
+    match op {
+        HostOp::Embed => {
+            // Engine performs embedding before run(); unused in graphs.
+            Err(Error::Graph("Embed host op not graph-executable".into()))
+        }
+        HostOp::SplitKv => {
+            let kv = get(inputs[0], values)?;
+            let (k, v) = hostops::split_kv(&kv)?;
+            values[outputs[0].0] = Some(k);
+            values[outputs[1].0] = Some(v);
+            Ok(())
+        }
+        HostOp::ToHeads { heads, head_dim } => {
+            let x = get(inputs[0], values)?;
+            values[outputs[0].0] = Some(hostops::to_heads(&x, heads, head_dim)?);
+            Ok(())
+        }
+        HostOp::FromHeads => {
+            let x = get(inputs[0], values)?;
+            values[outputs[0].0] = Some(hostops::from_heads(&x)?);
+            Ok(())
+        }
+        HostOp::Halves => {
+            let x = get(inputs[0], values)?;
+            let (a, b) = hostops::halves(&x)?;
+            values[outputs[0].0] = Some(a);
+            values[outputs[1].0] = Some(b);
+            Ok(())
+        }
+    }
+}
+
 fn bytes_to_tensor(spec: &KernelIoSpec, bytes: &[u8]) -> Result<Tensor> {
-    use crate::tensor::DType;
-    let n = spec.numel();
-    if bytes.len() < n * 4 {
-        return Err(Error::Shape(format!(
-            "buffer {} B too small for spec {:?}",
-            bytes.len(),
-            spec.shape
-        )));
-    }
-    match spec.dtype {
-        DType::F32 => {
-            let v: Vec<f32> = bytes[..n * 4]
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            Tensor::f32(spec.shape.clone(), v)
-        }
-        DType::I32 => {
-            let v: Vec<i32> = bytes[..n * 4]
-                .chunks_exact(4)
-                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            Tensor::i32(spec.shape.clone(), v)
-        }
-    }
+    Tensor::from_le_bytes(spec.shape.clone(), spec.dtype, bytes)
 }

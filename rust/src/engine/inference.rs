@@ -26,6 +26,17 @@ use crate::{Error, Result};
 /// cost per op (paper §4.4).
 pub const TORCH_WEBGPU_FRAMEWORK_NS: u64 = 71_000;
 
+/// How the engine executes the decode graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Per-node graph interpretation with per-op framework cost — the
+    /// torch-webgpu pathology the paper characterizes.
+    Eager,
+    /// Compile-once [`crate::plan::ExecutionPlan`] replayed per token:
+    /// device-resident values, lifetime-aliased arena, encoder batching.
+    Planned,
+}
+
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub model: String,
@@ -41,6 +52,20 @@ pub struct EngineConfig {
     /// (default) keeps benchmark CV at the profile's jitter; `Measured`
     /// feeds real kernel wall time into the clock (the real-system mode).
     pub kernel_time_policy: crate::webgpu::device::KernelTimePolicy,
+    /// Eager interpretation (default) or compile-once plan replay.
+    pub exec: ExecMode,
+    /// Planned mode: dispatches carried per encoder/submit (the paper's
+    /// encoder-batching axis).
+    pub dispatches_per_submit: usize,
+    /// Planned mode: framework cost charged per replayed step (virtual
+    /// ns) — the replay loop's residual bookkeeping.
+    pub planned_framework_ns_per_step: u64,
+    /// Byte cap for the eager activation pool: `None` grows on demand,
+    /// `Some(cap)` errors past the cap instead of growing silently.
+    pub pool_cap_bytes: Option<usize>,
+    /// Override the manifest dims (executable workload variants — e.g.
+    /// tiny-kernel graphs at different layer counts).
+    pub dims_override: Option<crate::fx::builder::GraphDims>,
 }
 
 impl EngineConfig {
@@ -53,11 +78,21 @@ impl EngineConfig {
             device_argmax: false,
             weight_seed: 0xC0FFEE,
             kernel_time_policy: crate::webgpu::device::KernelTimePolicy::Calibrated,
+            exec: ExecMode::Eager,
+            dispatches_per_submit: 16,
+            planned_framework_ns_per_step: crate::plan::PLANNED_FRAMEWORK_NS,
+            pool_cap_bytes: None,
+            dims_override: None,
         }
     }
 
     pub fn tiny_unfused() -> Self {
         EngineConfig { fusion: FusionConfig::unfused(), ..Self::tiny_fused() }
+    }
+
+    /// Planned-execution twin of [`EngineConfig::tiny_fused`].
+    pub fn tiny_planned() -> Self {
+        EngineConfig { exec: ExecMode::Planned, ..Self::tiny_fused() }
     }
 }
 

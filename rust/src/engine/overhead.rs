@@ -73,9 +73,51 @@ impl OverheadAccounting {
     }
 }
 
+/// Eager-vs-planned framework overhead — the measurable delta the
+/// Planner/PlanRunner split exists to expose (table P1). Derived from the
+/// accumulated framework virtual ns and dispatch counts of two runs of
+/// the same workload.
+#[derive(Debug, Clone, Copy)]
+pub struct PlannedOverheadDelta {
+    pub eager_fw_us_per_op: f64,
+    pub planned_fw_us_per_op: f64,
+}
+
+impl PlannedOverheadDelta {
+    pub fn derive(
+        eager_fw_ns: u64,
+        eager_ops: u64,
+        planned_fw_ns: u64,
+        planned_ops: u64,
+    ) -> Self {
+        PlannedOverheadDelta {
+            eager_fw_us_per_op: eager_fw_ns as f64 / 1e3 / eager_ops.max(1) as f64,
+            planned_fw_us_per_op: planned_fw_ns as f64 / 1e3 / planned_ops.max(1) as f64,
+        }
+    }
+
+    /// How many times cheaper the planned replay's per-op framework cost
+    /// is (the acceptance bar is >= 2x).
+    pub fn ratio(&self) -> f64 {
+        if self.planned_fw_us_per_op <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.eager_fw_us_per_op / self.planned_fw_us_per_op
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn planned_delta_ratio() {
+        let d = PlannedOverheadDelta::derive(71_000 * 59, 59, 2_000 * 59, 59);
+        assert!((d.eager_fw_us_per_op - 71.0).abs() < 1e-9);
+        assert!((d.planned_fw_us_per_op - 2.0).abs() < 1e-9);
+        assert!((d.ratio() - 35.5).abs() < 1e-9);
+        assert!(PlannedOverheadDelta::derive(1, 1, 0, 1).ratio().is_infinite());
+    }
 
     #[test]
     fn paper_numbers_reproduce_table4() {

@@ -318,9 +318,15 @@ pub fn fuse_rotary(g: &FxGraph) -> FxGraph {
     splice(g, &dead, reps)
 }
 
-/// Apply every pass (the fully-fused configuration).
+/// Apply every pass (the fully-fused configuration) through the
+/// [`PassManager`](crate::fx::passes::PassManager), which validates SSA
+/// after each rewrite.
 pub fn fuse_all(g: &FxGraph, suffix: &str) -> FxGraph {
-    fuse_rotary(&fuse_kv(&fuse_mlp(&fuse_rmsnorm(g), suffix)))
+    use crate::fx::builder::FusionConfig;
+    let (out, _reports) = crate::fx::passes::PassManager::for_fusion(FusionConfig::fused(), suffix)
+        .run(g)
+        .expect("fusion passes preserve SSA");
+    out
 }
 
 #[cfg(test)]

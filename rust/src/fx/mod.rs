@@ -20,9 +20,11 @@ pub mod census;
 pub mod fusion;
 pub mod graph;
 pub mod node;
+pub mod passes;
 pub mod workloads;
 
 pub use builder::{build_decode_graph, FusionConfig, GraphDims};
 pub use census::{Census, CategoryCounts};
 pub use graph::FxGraph;
 pub use node::{Category, HostOp, Node, NodeId, ValueId};
+pub use passes::{PassManager, PassReport};

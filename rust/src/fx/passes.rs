@@ -1,0 +1,166 @@
+//! PassManager: a named, validated graph-rewrite pipeline.
+//!
+//! Generalizes the four hand-chained `fuse_*` calls into a registry of
+//! passes run in order, with SSA validation after every pass (a broken
+//! rewrite fails at the pass that broke it, not downstream in the
+//! executor) and a per-pass dispatch-savings report. This is the front
+//! half of the compile pipeline: `build graph -> PassManager -> Planner`.
+
+use super::builder::FusionConfig;
+use super::fusion;
+use super::graph::FxGraph;
+use crate::{Error, Result};
+
+/// What one pass did to the graph.
+#[derive(Debug, Clone)]
+pub struct PassReport {
+    pub name: String,
+    pub dispatches_before: usize,
+    pub dispatches_after: usize,
+}
+
+impl PassReport {
+    pub fn saved(&self) -> usize {
+        self.dispatches_before.saturating_sub(self.dispatches_after)
+    }
+}
+
+type PassFn = Box<dyn Fn(&FxGraph) -> FxGraph>;
+
+#[derive(Default)]
+pub struct PassManager {
+    passes: Vec<(String, PassFn)>,
+}
+
+impl PassManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a pass; passes run in registration order.
+    pub fn add<F>(&mut self, name: &str, pass: F) -> &mut Self
+    where
+        F: Fn(&FxGraph) -> FxGraph + 'static,
+    {
+        self.passes.push((name.to_string(), Box::new(pass)));
+        self
+    }
+
+    /// The canonical fusion pipeline for a [`FusionConfig`], in the same
+    /// order the hand-chained `fuse_all` applied: rmsnorm, mlp, kv,
+    /// rotary. `suffix` selects the per-config fused-kernel names.
+    pub fn for_fusion(cfg: FusionConfig, suffix: &str) -> Self {
+        let mut pm = Self::new();
+        if cfg.rmsnorm {
+            pm.add("fuse_rmsnorm", fusion::fuse_rmsnorm);
+        }
+        if cfg.mlp {
+            let s = suffix.to_string();
+            pm.add("fuse_mlp", move |g| fusion::fuse_mlp(g, &s));
+        }
+        if cfg.kv {
+            pm.add("fuse_kv", fusion::fuse_kv);
+        }
+        if cfg.rotary {
+            pm.add("fuse_rotary", fusion::fuse_rotary);
+        }
+        pm
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.passes.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.passes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.passes.is_empty()
+    }
+
+    /// Run every pass in order, validating SSA after each; returns the
+    /// rewritten graph plus per-pass reports.
+    pub fn run(&self, graph: &FxGraph) -> Result<(FxGraph, Vec<PassReport>)> {
+        let mut cur = graph.clone();
+        let mut reports = Vec::with_capacity(self.passes.len());
+        for (name, pass) in &self.passes {
+            let before = cur.dispatch_count();
+            let next = pass(&cur);
+            next.validate().map_err(|e| {
+                Error::Graph(format!("pass '{name}' produced an invalid graph: {e}"))
+            })?;
+            reports.push(PassReport {
+                name: name.clone(),
+                dispatches_before: before,
+                dispatches_after: next.dispatch_count(),
+            });
+            cur = next;
+        }
+        Ok((cur, reports))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fx::builder::{build_decode_graph, GraphDims};
+    use crate::fx::node::{Category, NodeId, OpKind, ValueId};
+
+    #[test]
+    fn for_fusion_matches_hand_chained_fuse_all() {
+        let dims = GraphDims::qwen_tiny();
+        let g = build_decode_graph(&dims, FusionConfig::unfused());
+        let (by_pm, reports) = PassManager::for_fusion(FusionConfig::fused(), "tiny")
+            .run(&g)
+            .unwrap();
+        let direct = build_decode_graph(&dims, FusionConfig::fused());
+        assert_eq!(by_pm.dispatch_count(), direct.dispatch_count());
+        assert_eq!(by_pm.kernel_names(), direct.kernel_names());
+        assert_eq!(reports.len(), 4);
+        assert!(reports.iter().all(|r| r.saved() > 0), "{reports:?}");
+        // Savings compose: sum of per-pass savings equals the total.
+        let total: usize = reports.iter().map(PassReport::saved).sum();
+        assert_eq!(total, g.dispatch_count() - by_pm.dispatch_count());
+    }
+
+    #[test]
+    fn partial_configs_register_matching_passes() {
+        let pm = PassManager::for_fusion(FusionConfig::rmsnorm_mlp(), "tiny");
+        assert_eq!(pm.names(), vec!["fuse_rmsnorm", "fuse_mlp"]);
+        let pm = PassManager::for_fusion(FusionConfig::unfused(), "tiny");
+        assert!(pm.is_empty());
+    }
+
+    #[test]
+    fn broken_pass_fails_at_the_pass_not_downstream() {
+        // A "pass" that emits a use-before-def graph must be caught by the
+        // post-pass validation with the pass's name in the error.
+        let mut pm = PassManager::new();
+        pm.add("break_ssa", |g| {
+            let mut out = g.clone();
+            let dangling = ValueId(out.n_values);
+            out.n_values += 1;
+            out.nodes.push(crate::fx::node::Node {
+                id: NodeId(out.nodes.len()),
+                name: "bad".into(),
+                op: OpKind::Kernel("k".into()),
+                category: Category::Other,
+                inputs: vec![dangling],
+                outputs: vec![],
+            });
+            out
+        });
+        let g = build_decode_graph(&GraphDims::qwen_tiny(), FusionConfig::fused());
+        let err = pm.run(&g).unwrap_err();
+        assert!(format!("{err}").contains("break_ssa"), "{err}");
+    }
+
+    #[test]
+    fn empty_manager_is_identity() {
+        let g = build_decode_graph(&GraphDims::qwen_tiny(), FusionConfig::fused());
+        let (out, reports) = PassManager::new().run(&g).unwrap();
+        assert_eq!(out.dispatch_count(), g.dispatch_count());
+        assert!(reports.is_empty());
+    }
+}

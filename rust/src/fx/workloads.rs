@@ -7,6 +7,29 @@
 //! replay them through any implementation profile and confirm the same
 //! per-dispatch band the LLM stream shows.
 
+use super::builder::GraphDims;
+
+/// One *executable* decode workload: a dims variant whose kernels all
+/// exist in the built-in manifest (tiny kernels are layer-count-agnostic,
+/// so varying `layers` yields distinct graph shapes that still execute
+/// hermetically). `wdb plan-bench` and the plan-parity property tests
+/// sweep these x {fused, unfused} x session counts.
+#[derive(Debug, Clone)]
+pub struct DecodeWorkload {
+    pub name: &'static str,
+    pub dims: GraphDims,
+}
+
+/// The executable decode-workload sweep.
+pub fn decode_workloads() -> Vec<DecodeWorkload> {
+    let tiny = GraphDims::qwen_tiny();
+    vec![
+        DecodeWorkload { name: "qwen-tiny-l1", dims: GraphDims { layers: 1, ..tiny } },
+        DecodeWorkload { name: "qwen-tiny-l2", dims: GraphDims { layers: 2, ..tiny } },
+        DecodeWorkload { name: "qwen-tiny", dims: tiny },
+    ]
+}
+
 /// One synthetic workload: name + dispatches per forward pass, by category.
 #[derive(Debug, Clone)]
 pub struct Workload {
@@ -79,6 +102,25 @@ mod tests {
     use super::*;
     use crate::profiler::measure_dispatch_overhead;
     use crate::webgpu::ImplementationProfile;
+
+    #[test]
+    fn decode_workloads_build_executable_graphs() {
+        use crate::fx::builder::{build_decode_graph, FusionConfig};
+        let reg = crate::runtime::Registry::builtin().unwrap();
+        for wl in decode_workloads() {
+            for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+                let g = build_decode_graph(&wl.dims, fusion);
+                g.validate().unwrap();
+                for name in g.kernel_names() {
+                    assert!(
+                        reg.kernels.contains_key(&name),
+                        "{}: kernel '{name}' not in builtin manifest",
+                        wl.name
+                    );
+                }
+            }
+        }
+    }
 
     #[test]
     fn dispatch_counts_are_architecture_shaped() {

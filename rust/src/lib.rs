@@ -15,8 +15,11 @@
 //!   an FX-style op graph with the paper's fusion passes, an
 //!   autoregressive inference engine, a **multi-session serving engine**
 //!   ([`serve`]) that interleaves concurrent decode streams over one
-//!   shared substrate, and the benchmark harness that regenerates every
-//!   table in the paper plus the serving-scaling table.
+//!   shared substrate, a **compile-once execution-plan pipeline**
+//!   ([`plan`]: Planner -> ExecutionPlan -> PlanRunner, with
+//!   device-resident values and buffer-lifetime aliasing), and the
+//!   benchmark harness that regenerates every table in the paper plus the
+//!   serving-scaling (S1/S2) and eager-vs-planned (P1) tables.
 //!
 //! Python never runs on the request path: with artifacts the `wdb` binary
 //! is self-contained, and without them the built-in manifest + host
@@ -42,6 +45,7 @@ pub mod engine;
 pub mod error;
 pub mod fx;
 pub mod model;
+pub mod plan;
 pub mod profiler;
 pub mod report;
 pub mod runtime;

@@ -1,0 +1,180 @@
+//! Liveness-based arena-slot assignment.
+//!
+//! Every device-resident value in an [`super::ExecutionPlan`] lives in one
+//! slot of a fixed arena of buffers. Slots are assigned by a linear scan
+//! over the plan's step order: a value's slot is allocated at its defining
+//! step and returned to the free list after its last use, so values whose
+//! live intervals do not overlap share a slot (the buffer-lifetime
+//! aliasing the WebLLM-style runtimes use to keep a whole decode step in a
+//! small fixed working set).
+//!
+//! Freeing happens strictly *after* the defs of the same step, so a kernel
+//! can never be handed one of its own input buffers as an output — the
+//! aliasing-safety invariant the plan tests assert.
+
+use std::collections::HashMap;
+
+/// Live interval of one storage root over plan steps. Steps are numbered
+/// 1..=n; `def == 0` means "uploaded before the first step", and
+/// `last_use == n + 1` marks graph outputs that must survive the whole
+/// replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    pub def: usize,
+    pub last_use: usize,
+}
+
+impl Interval {
+    /// Whether two intervals can safely share a slot under the
+    /// free-after-defs rule: one must end strictly before the other begins.
+    pub fn disjoint(self, other: Interval) -> bool {
+        self.last_use < other.def || other.last_use < self.def
+    }
+}
+
+/// One root value's placement, kept on the plan for tests/diagnostics.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotAssignment {
+    /// `ValueId.0` of the storage root.
+    pub value: usize,
+    pub slot: usize,
+    pub size: usize,
+    pub interval: Interval,
+}
+
+/// The arena layout: per-slot byte sizes plus the assignment table.
+#[derive(Debug, Clone, Default)]
+pub struct ArenaLayout {
+    /// Byte size of each arena slot (one device buffer per entry).
+    pub slot_sizes: Vec<usize>,
+    /// Root value id -> slot index.
+    pub value_slot: HashMap<usize, usize>,
+    pub assignments: Vec<SlotAssignment>,
+}
+
+impl ArenaLayout {
+    /// Total bytes the aliased arena holds.
+    pub fn arena_bytes(&self) -> usize {
+        self.slot_sizes.iter().sum()
+    }
+
+    /// Bytes a no-aliasing layout (one buffer per value) would need.
+    pub fn unaliased_bytes(&self) -> usize {
+        self.assignments.iter().map(|a| a.size).sum()
+    }
+}
+
+/// Assign slots to `(value, size, interval)` roots. `n_steps` is the plan
+/// step count (intervals use the 0..=n_steps+1 numbering above).
+pub fn assign_slots(roots: &[(usize, usize, Interval)], n_steps: usize) -> ArenaLayout {
+    let mut layout = ArenaLayout::default();
+    // size -> free slot indices (LIFO keeps reuse clustered).
+    let mut free: HashMap<usize, Vec<usize>> = HashMap::new();
+
+    // Walk def points in step order (upload defs at 0, then steps 1..=n).
+    for step in 0..=n_steps {
+        for &(value, size, interval) in roots {
+            if interval.def != step {
+                continue;
+            }
+            let slot = match free.get_mut(&size).and_then(Vec::pop) {
+                Some(s) => s,
+                None => {
+                    layout.slot_sizes.push(size);
+                    layout.slot_sizes.len() - 1
+                }
+            };
+            layout.value_slot.insert(value, slot);
+            layout.assignments.push(SlotAssignment { value, slot, size, interval });
+        }
+        // Free AFTER this step's defs: a slot released at step i is only
+        // reusable from step i + 1 on.
+        for &(value, size, interval) in roots {
+            if interval.last_use == step {
+                let slot = layout.value_slot[&value];
+                free.entry(size).or_default().push(slot);
+            }
+        }
+    }
+    layout
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iv(def: usize, last_use: usize) -> Interval {
+        Interval { def, last_use }
+    }
+
+    #[test]
+    fn non_overlapping_values_share_a_slot() {
+        let roots = vec![(0, 64, iv(1, 2)), (1, 64, iv(3, 4)), (2, 64, iv(5, 6))];
+        let l = assign_slots(&roots, 6);
+        assert_eq!(l.slot_sizes, vec![64]);
+        assert_eq!(l.value_slot[&0], l.value_slot[&1]);
+        assert_eq!(l.value_slot[&1], l.value_slot[&2]);
+        assert_eq!(l.arena_bytes(), 64);
+        assert_eq!(l.unaliased_bytes(), 192);
+    }
+
+    #[test]
+    fn overlapping_values_get_distinct_slots() {
+        let roots = vec![(0, 64, iv(1, 3)), (1, 64, iv(2, 4))];
+        let l = assign_slots(&roots, 4);
+        assert_ne!(l.value_slot[&0], l.value_slot[&1]);
+        assert_eq!(l.slot_sizes.len(), 2);
+    }
+
+    #[test]
+    fn freed_at_def_step_is_not_reused_same_step() {
+        // Value 1 is defined at the step where value 0 dies: they must NOT
+        // share (an output would alias its own input).
+        let roots = vec![(0, 32, iv(1, 2)), (1, 32, iv(2, 3))];
+        let l = assign_slots(&roots, 3);
+        assert_ne!(l.value_slot[&0], l.value_slot[&1]);
+        // ...but a def one step later can reuse it.
+        let roots2 = vec![(0, 32, iv(1, 2)), (1, 32, iv(3, 4))];
+        let l2 = assign_slots(&roots2, 4);
+        assert_eq!(l2.value_slot[&0], l2.value_slot[&1]);
+    }
+
+    #[test]
+    fn different_sizes_never_share() {
+        let roots = vec![(0, 32, iv(1, 1)), (1, 64, iv(2, 3))];
+        let l = assign_slots(&roots, 3);
+        assert_eq!(l.slot_sizes.len(), 2);
+    }
+
+    #[test]
+    fn assignments_respect_disjointness_invariant() {
+        // Random-ish intervals; any pair sharing a slot must be disjoint.
+        let mut roots = Vec::new();
+        let mut s: u64 = 0xDEAD_BEEF;
+        for v in 0..64usize {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            let def = 1 + (s % 40) as usize;
+            let len = (s >> 8) % 6;
+            roots.push((v, 128, iv(def, def + len as usize)));
+        }
+        let l = assign_slots(&roots, 48);
+        for a in &l.assignments {
+            for b in &l.assignments {
+                if a.value != b.value && a.slot == b.slot {
+                    assert!(
+                        a.interval.disjoint(b.interval),
+                        "values {} and {} share slot {} with overlapping \
+                         intervals {:?} / {:?}",
+                        a.value,
+                        b.value,
+                        a.slot,
+                        a.interval,
+                        b.interval
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Workgroup-grid computation: ceil-divide an output-element count into a
+//! dispatch grid that respects `max_compute_workgroups_per_dimension`.
+//!
+//! The eager executor used to clamp the 1-D workgroup count with
+//! `wg.min(65_535)`, silently under-dispatching any kernel with more than
+//! 65_535 * 256 (~16.7M) output elements. This module replaces the clamp
+//! with proper 2-D tiling: counts that exceed the per-dimension limit are
+//! folded into a `(x, y, 1)` grid whose product covers every workgroup,
+//! and counts too large even for a 2-D grid are a hard error instead of a
+//! silent miscomputation.
+
+use crate::{Error, Result};
+
+/// Threads per workgroup — matches the WGSL convention used by every AOT
+/// kernel (`@workgroup_size(256)`).
+pub const WORKGROUP_SIZE: usize = 256;
+
+/// Tile `out_elems` output elements (at [`WORKGROUP_SIZE`] threads per
+/// workgroup) into a dispatch grid with every dimension `<= max_per_dim`.
+///
+/// Returns `(x, 1, 1)` whenever the flat count fits, otherwise the
+/// smallest-row-count 2-D grid `(x, y, 1)` with `x * y >= workgroups`.
+pub fn tile_workgroups(out_elems: usize, max_per_dim: u32) -> Result<(u32, u32, u32)> {
+    let max = u64::from(max_per_dim.max(1));
+    let groups = (out_elems.div_ceil(WORKGROUP_SIZE).max(1)) as u64;
+    if groups <= max {
+        return Ok((groups as u32, 1, 1));
+    }
+    // Minimal number of rows, then balance columns; y >= groups/max implies
+    // x = ceil(groups / y) <= max.
+    let y = groups.div_ceil(max);
+    if y > max {
+        return Err(Error::LimitExceeded(format!(
+            "{groups} workgroups cannot tile into a 2-D grid with \
+             max {max_per_dim} per dimension"
+        )));
+    }
+    let x = groups.div_ceil(y);
+    Ok((x as u32, y as u32, 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MAX: u32 = 65_535;
+
+    #[test]
+    fn small_counts_stay_one_dimensional() {
+        assert_eq!(tile_workgroups(1, MAX).unwrap(), (1, 1, 1));
+        assert_eq!(tile_workgroups(256, MAX).unwrap(), (1, 1, 1));
+        assert_eq!(tile_workgroups(257, MAX).unwrap(), (2, 1, 1));
+        assert_eq!(tile_workgroups(512 * 256, MAX).unwrap(), (512, 1, 1));
+    }
+
+    #[test]
+    fn boundary_regression_no_silent_clamp() {
+        // Exactly at the limit: still 1-D.
+        let at = MAX as usize * WORKGROUP_SIZE;
+        assert_eq!(tile_workgroups(at, MAX).unwrap(), (MAX, 1, 1));
+        // One element past the limit: the old `wg.min(65_535)` clamp lost
+        // a workgroup here; tiling must cover all 65_536.
+        let (x, y, z) = tile_workgroups(at + 1, MAX).unwrap();
+        assert_eq!(z, 1);
+        assert!(x <= MAX && y <= MAX);
+        assert!(
+            (x as u64) * (y as u64) >= MAX as u64 + 1,
+            "grid ({x},{y}) does not cover {} workgroups",
+            MAX as u64 + 1
+        );
+        assert_eq!((x, y), (32_768, 2));
+    }
+
+    #[test]
+    fn coverage_property_over_random_counts() {
+        // xorshift-style sweep without pulling in the model RNG.
+        let mut s: u64 = 0x9E37_79B9_7F4A_7C15;
+        for _ in 0..200 {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            let elems = (s % (1u64 << 34)) as usize + 1;
+            let groups = elems.div_ceil(WORKGROUP_SIZE).max(1) as u64;
+            let (x, y, z) = tile_workgroups(elems, MAX).unwrap();
+            assert!(x >= 1 && y >= 1 && z == 1);
+            assert!(x <= MAX && y <= MAX);
+            assert!((x as u64) * (y as u64) >= groups, "elems {elems}");
+            // Never more than one extra row's worth of waste.
+            assert!((x as u64) * ((y as u64) - 1) < groups, "elems {elems}");
+        }
+    }
+
+    #[test]
+    fn impossible_grids_error_instead_of_clamping() {
+        // max 4 per dim -> at most 16 workgroups; 17 needs an error-free
+        // 2-D tile (5x4), 16*4+1 workgroups cannot fit.
+        assert_eq!(tile_workgroups(17 * 256, 4).unwrap(), (5, 4, 1));
+        assert!(tile_workgroups((4 * 4 + 1) * 256, 4).is_err());
+    }
+}

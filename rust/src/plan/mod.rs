@@ -1,0 +1,67 @@
+//! # Compile-once execution plans
+//!
+//! The planned execution pipeline: `fx` graph → [`Planner`] →
+//! [`ExecutionPlan`] → [`PlanRunner`] replay. This is the architecture
+//! WebLLM-style runtimes use to beat the paper's per-operation wall: all
+//! graph interpretation (HashMap lookups, shape checks, bind-group key
+//! construction, buffer acquire/release, host round-trips for
+//! activations) happens **once** at plan-build time; the decode loop
+//! replays a flat array of pre-resolved dispatches.
+//!
+//! - [`grid`] — 2-D workgroup tiling (fixes the silent 65_535 clamp).
+//! - [`pipelines`] — shared prepared-pipeline + layout pool.
+//! - [`arena`] — liveness intervals + buffer-lifetime slot aliasing.
+//! - [`planner`] — graph → plan compilation (value residency, alias
+//!   resolution, binding emission).
+//! - [`runner`] — arena materialization + the allocation-free replay
+//!   hot loop with `dispatches_per_submit` encoder batching.
+//!
+//! Eager execution stays available ([`crate::engine::GraphExecutor`]'s
+//! default mode) precisely so `wdb plan-bench` can measure the
+//! eager-vs-planned framework-overhead delta (table P1).
+
+pub mod arena;
+pub mod grid;
+pub mod pipelines;
+pub mod planner;
+pub mod runner;
+
+pub use arena::{ArenaLayout, Interval, SlotAssignment};
+pub use grid::{tile_workgroups, WORKGROUP_SIZE};
+pub use pipelines::{PipelinePool, PreparedKernel};
+pub use planner::{
+    Binding, DispatchStep, ExecutionPlan, GraphFingerprint, HostStep, LogitsSpec,
+    PlanStats, Planner, Readback, SlotRef, Step, Upload,
+};
+pub use runner::{PlanRunner, ReplayDelta};
+
+/// Default framework cost per replayed step (virtual ns): the plan walk's
+/// residual per-dispatch bookkeeping — array indexing and a cached
+/// bind-group id load — modeled after WebLLM-class runtimes that hoist
+/// planning out of the decode loop, vs the ~71 µs/op the torch-webgpu
+/// eager interpreter pays
+/// ([`crate::engine::inference::TORCH_WEBGPU_FRAMEWORK_NS`]).
+pub const PLANNED_FRAMEWORK_NS: u64 = 2_000;
+
+/// Plan compilation knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanConfig {
+    /// How many dispatches one encoder carries per submit (the paper's
+    /// encoder-batching axis, distinct from kernel fusion).
+    pub dispatches_per_submit: usize,
+    /// Framework cost charged per replayed step (virtual ns).
+    pub framework_ns_per_step: u64,
+    /// Logits ring depth — must cover the maximum number of sessions a
+    /// scheduler round replays before its coalesced readback.
+    pub logits_ring: usize,
+}
+
+impl Default for PlanConfig {
+    fn default() -> Self {
+        PlanConfig {
+            dispatches_per_submit: 16,
+            framework_ns_per_step: PLANNED_FRAMEWORK_NS,
+            logits_ring: 1,
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Shared prepared-pipeline + bind-group-layout pool.
+//!
+//! Pipelines compile once per kernel name (off the request path, the Dawn
+//! pipeline-caching pattern) and are shared by the eager executor, the
+//! planner, and every session the serving engine interleaves. Workgroup
+//! grids are precomputed here through [`super::grid::tile_workgroups`], so
+//! both execution modes inherit the 2-D tiling fix instead of the old
+//! silent `wg.min(65_535)` clamp.
+
+use std::collections::HashMap;
+
+use crate::fx::graph::FxGraph;
+use crate::runtime::registry::Registry;
+use crate::webgpu::{
+    BindGroupLayoutId, ComputePipelineId, Device, KernelIoSpec, ShaderModuleDesc,
+};
+use crate::Result;
+
+use super::grid::tile_workgroups;
+
+/// A prepared kernel: compiled-pipeline id + its layout + IO specs + the
+/// precomputed dispatch grid.
+#[derive(Debug, Clone)]
+pub struct PreparedKernel {
+    pub pipeline: ComputePipelineId,
+    pub layout: BindGroupLayoutId,
+    pub inputs: Vec<KernelIoSpec>,
+    pub outputs: Vec<KernelIoSpec>,
+    pub grid: (u32, u32, u32),
+}
+
+/// Prepared-pipeline cache keyed by kernel name, with bind-group layouts
+/// shared across kernels of the same (inputs, outputs) arity.
+#[derive(Default)]
+pub struct PipelinePool {
+    prepared: HashMap<String, PreparedKernel>,
+    layouts: HashMap<(usize, usize), BindGroupLayoutId>,
+}
+
+impl PipelinePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create pipelines for every kernel a graph uses and compile the AOT
+    /// modules. Idempotent per kernel name.
+    pub fn prepare(
+        &mut self,
+        device: &mut Device,
+        registry: &Registry,
+        graph: &FxGraph,
+    ) -> Result<()> {
+        for name in graph.kernel_names() {
+            if self.prepared.contains_key(&name) {
+                continue;
+            }
+            registry.ensure_loaded(&name)?;
+            let spec = registry.spec(&name)?;
+            let key = (spec.inputs.len(), spec.outputs.len());
+            let layout = match self.layouts.get(&key) {
+                Some(&l) => l,
+                None => {
+                    let l = crate::webgpu::queue::kernel_layout(device, &name, key.0, key.1)?;
+                    self.layouts.insert(key, l);
+                    l
+                }
+            };
+            let module = device.create_shader_module(ShaderModuleDesc {
+                label: name.clone(),
+                kernel: name.clone(),
+                inputs: spec.inputs.clone(),
+                outputs: spec.outputs.clone(),
+            })?;
+            let pipeline = device.create_compute_pipeline(&name, module, layout)?;
+            let out_elems: usize = spec.outputs.iter().map(KernelIoSpec::numel).sum();
+            let grid =
+                tile_workgroups(out_elems, device.limits.max_compute_workgroups_per_dimension)?;
+            self.prepared.insert(
+                name.clone(),
+                PreparedKernel {
+                    pipeline,
+                    layout,
+                    inputs: spec.inputs.clone(),
+                    outputs: spec.outputs.clone(),
+                    grid,
+                },
+            );
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, kernel: &str) -> Option<&PreparedKernel> {
+        self.prepared.get(kernel)
+    }
+
+    pub fn prepared_count(&self) -> usize {
+        self.prepared.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fx::builder::{build_decode_graph, FusionConfig, GraphDims};
+    use crate::webgpu::ImplementationProfile;
+
+    #[test]
+    fn prepares_every_graph_kernel_once() {
+        let reg = Registry::builtin().unwrap();
+        let mut device = Device::new(ImplementationProfile::zero_overhead());
+        let g = build_decode_graph(&GraphDims::qwen_tiny(), FusionConfig::fused());
+        let mut pool = PipelinePool::new();
+        pool.prepare(&mut device, &reg, &g).unwrap();
+        let n = pool.prepared_count();
+        assert_eq!(n, g.kernel_names().len());
+        // Re-preparing is a no-op.
+        pool.prepare(&mut device, &reg, &g).unwrap();
+        assert_eq!(pool.prepared_count(), n);
+        let prep = pool.get("rmsnorm_64").expect("prepared");
+        assert_eq!(prep.inputs.len(), 2);
+        assert_eq!(prep.grid, (1, 1, 1)); // 64 elems -> 1 workgroup
+    }
+}

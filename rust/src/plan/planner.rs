@@ -1,0 +1,745 @@
+//! The Planner: compiles an [`FxGraph`] once into an [`ExecutionPlan`].
+//!
+//! Planning hoists everything the eager executor re-derives per token out
+//! of the decode loop:
+//!
+//! - **Pre-resolved resources** — every step carries its pipeline, layout
+//!   and fully-resolved buffer bindings; the hot loop never touches a
+//!   HashMap or allocates.
+//! - **Value residency** — kernel outputs stay in their device buffers and
+//!   are bound directly by consumers. Pure shape ops (`ToHeads`,
+//!   `FromHeads`, `SplitKv`) become *aliases*: byte windows over the
+//!   producer's buffer, resolved at plan time into binding offsets, so
+//!   they cost nothing at replay. Only `Halves` (the unfused rotary
+//!   rotate-half split, a strided gather) materializes as a host step.
+//! - **Buffer-lifetime aliasing** — intermediates are packed into a fixed
+//!   arena by live-interval analysis ([`super::arena`]); non-overlapping
+//!   values share slots.
+//! - **Precomputed grids** — 2-D tiled workgroup counts from
+//!   [`super::grid`].
+//!
+//! The plan is pure data (ids + offsets); [`super::PlanRunner`] turns it
+//! into device buffers and cached bind groups and replays it per token.
+
+use std::collections::HashMap;
+
+use crate::fx::graph::FxGraph;
+use crate::fx::node::{HostOp, OpKind, ValueId};
+use crate::runtime::registry::Registry;
+use crate::tensor::DType;
+use crate::webgpu::{BindGroupLayoutId, BufferId, ComputePipelineId, Device};
+use crate::{Error, Result};
+
+use super::arena::{assign_slots, ArenaLayout, Interval};
+use super::pipelines::PipelinePool;
+use super::PlanConfig;
+
+/// A resolved byte window in the arena.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotRef {
+    pub slot: usize,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// One resolved buffer binding of a dispatch step.
+#[derive(Debug, Clone, Copy)]
+pub enum Binding {
+    /// Window over an arena slot.
+    Arena(SlotRef),
+    /// Window over a pinned weight buffer.
+    Pinned { buffer: BufferId, offset: usize, size: usize },
+    /// The logits output: substituted per replay with a ring buffer so the
+    /// deferred synchronizing readback survives later replays.
+    Ring,
+}
+
+/// One precompiled dispatch: everything `queue.submit` needs, resolved.
+#[derive(Debug, Clone)]
+pub struct DispatchStep {
+    pub name: String,
+    pub kernel: String,
+    pub pipeline: ComputePipelineId,
+    pub layout: BindGroupLayoutId,
+    /// Inputs then outputs, dense binding order.
+    pub bindings: Vec<Binding>,
+    pub grid: (u32, u32, u32),
+}
+
+/// The one host op that cannot alias: `Halves` (strided rotate-half
+/// split). Copies each source row's two halves into two fresh slots.
+#[derive(Debug, Clone)]
+pub struct HostStep {
+    pub name: String,
+    pub op: HostOp,
+    pub src: SlotRef,
+    pub rows: usize,
+    pub row_bytes: usize,
+    pub dst: [SlotRef; 2],
+}
+
+#[derive(Debug, Clone)]
+pub enum Step {
+    Dispatch(DispatchStep),
+    Host(HostStep),
+}
+
+/// A per-replay input upload into its arena slot.
+#[derive(Debug, Clone)]
+pub struct Upload {
+    pub name: String,
+    pub dst: SlotRef,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// A per-replay output readback (peek — the synchronizing `map_read` stays
+/// with the caller, exactly as in eager mode).
+#[derive(Debug, Clone)]
+pub struct Readback {
+    pub name: String,
+    pub src: SlotRef,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// The ring-backed deferred output (logits).
+#[derive(Debug, Clone)]
+pub struct LogitsSpec {
+    pub name: String,
+    pub size: usize,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// Structural plan statistics (build costs live on the runner).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanStats {
+    pub kernel_steps: usize,
+    pub host_steps: usize,
+    /// Shape-op values resolved into zero-cost byte-window aliases.
+    pub aliased_values: usize,
+    pub arena_slots: usize,
+    pub arena_bytes: usize,
+    /// Bytes a no-aliasing layout (one buffer per value) would need.
+    pub unaliased_bytes: usize,
+}
+
+/// Cheap identity of the graph a plan was compiled from — checked on
+/// every planned run so replaying a stale plan for a different graph
+/// fails loudly instead of silently returning the wrong outputs. Counts
+/// alone are not enough (two graphs can differ only in kernel names /
+/// wiring), so a structural FNV-1a hash over every node's op and value
+/// ids is included.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GraphFingerprint {
+    pub nodes: usize,
+    pub values: usize,
+    pub inputs: usize,
+    pub outputs: usize,
+    pub structure_hash: u64,
+}
+
+impl GraphFingerprint {
+    pub fn of(graph: &FxGraph) -> Self {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        for node in &graph.nodes {
+            match &node.op {
+                OpKind::Kernel(k) => eat(k.as_bytes()),
+                OpKind::Host(HostOp::Embed) => eat(b"h:embed"),
+                OpKind::Host(HostOp::SplitKv) => eat(b"h:split_kv"),
+                OpKind::Host(HostOp::ToHeads { heads, head_dim }) => {
+                    eat(b"h:to_heads");
+                    eat(&(*heads as u64).to_le_bytes());
+                    eat(&(*head_dim as u64).to_le_bytes());
+                }
+                OpKind::Host(HostOp::FromHeads) => eat(b"h:from_heads"),
+                OpKind::Host(HostOp::Halves) => eat(b"h:halves"),
+            }
+            for v in node.inputs.iter().chain(node.outputs.iter()) {
+                eat(&(v.0 as u64).to_le_bytes());
+            }
+        }
+        GraphFingerprint {
+            nodes: graph.nodes.len(),
+            values: graph.n_values,
+            inputs: graph.inputs.len(),
+            outputs: graph.outputs.len(),
+            structure_hash: h,
+        }
+    }
+}
+
+/// A compiled, replayable decode step. Pure data — resource ids and byte
+/// offsets — valid for the device whose pipelines it references.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    pub steps: Vec<Step>,
+    pub arena: ArenaLayout,
+    pub uploads: Vec<Upload>,
+    pub readbacks: Vec<Readback>,
+    pub logits: Option<LogitsSpec>,
+    /// Index into `steps` of the dispatch producing logits.
+    pub logits_step: Option<usize>,
+    pub dispatches_per_submit: usize,
+    pub framework_ns_per_step: u64,
+    pub logits_ring: usize,
+    /// Identity of the compiled graph (checked per planned run).
+    pub fingerprint: GraphFingerprint,
+    pub stats: PlanStats,
+}
+
+#[derive(Debug, Clone)]
+enum Kind {
+    Unknown,
+    Pinned(BufferId),
+    Root,
+    Alias { root: usize, offset: usize },
+}
+
+#[derive(Debug, Clone)]
+struct ValueMeta {
+    kind: Kind,
+    shape: Vec<usize>,
+    dtype: DType,
+    /// Byte size; 0 means "not yet typed".
+    size: usize,
+}
+
+enum ProtoStep {
+    Kernel(usize),
+    Halves(usize),
+}
+
+/// Compiles graphs against a device + prepared-pipeline pool.
+pub struct Planner<'r> {
+    pub registry: &'r Registry,
+}
+
+impl<'r> Planner<'r> {
+    pub fn new(registry: &'r Registry) -> Self {
+        Planner { registry }
+    }
+
+    /// Compile `graph` into an [`ExecutionPlan`]. `pinned` maps weight
+    /// values to their persistent device buffers (bound directly).
+    pub fn compile(
+        &self,
+        device: &mut Device,
+        pipelines: &mut PipelinePool,
+        graph: &FxGraph,
+        pinned: &HashMap<ValueId, BufferId>,
+        cfg: &PlanConfig,
+    ) -> Result<ExecutionPlan> {
+        graph.validate()?;
+        pipelines.prepare(device, self.registry, graph)?;
+
+        let mut meta: Vec<ValueMeta> = (0..graph.n_values)
+            .map(|_| ValueMeta {
+                kind: Kind::Unknown,
+                shape: Vec::new(),
+                dtype: DType::F32,
+                size: 0,
+            })
+            .collect();
+        for &vid in graph.inputs.values() {
+            meta[vid.0].kind = match pinned.get(&vid) {
+                Some(&buf) => Kind::Pinned(buf),
+                None => Kind::Root,
+            };
+        }
+
+        // Resolve a value to (root value index, byte offset within it).
+        fn resolve(meta: &[ValueMeta], v: usize) -> (usize, usize) {
+            match meta[v].kind {
+                Kind::Alias { root, offset } => (root, offset),
+                _ => (v, 0),
+            }
+        }
+
+        let mut proto: Vec<ProtoStep> = Vec::with_capacity(graph.nodes.len());
+        let mut aliased_values = 0usize;
+        // Root value -> def step / last-use step (step numbers 1..=n; 0 is
+        // the pre-step upload point).
+        let mut defs: HashMap<usize, usize> = HashMap::new();
+        let mut uses: HashMap<usize, usize> = HashMap::new();
+
+        for (ni, node) in graph.nodes.iter().enumerate() {
+            let step_no = proto.len() + 1;
+            match &node.op {
+                OpKind::Kernel(kname) => {
+                    let prep = pipelines
+                        .get(kname)
+                        .ok_or_else(|| Error::Graph(format!("kernel '{kname}' not prepared")))?;
+                    if node.inputs.len() != prep.inputs.len()
+                        || node.outputs.len() != prep.outputs.len()
+                    {
+                        return Err(Error::Graph(format!(
+                            "{}: node arity ({} in, {} out) != kernel spec ({}, {})",
+                            node.name,
+                            node.inputs.len(),
+                            node.outputs.len(),
+                            prep.inputs.len(),
+                            prep.outputs.len()
+                        )));
+                    }
+                    for (i, spec) in prep.inputs.iter().enumerate() {
+                        let v = node.inputs[i].0;
+                        if meta[v].size == 0 {
+                            // First consumer types a graph input.
+                            if matches!(meta[v].kind, Kind::Unknown) {
+                                return Err(Error::Graph(format!(
+                                    "{}: input {i} (value {v}) has no producer",
+                                    node.name
+                                )));
+                            }
+                            meta[v].shape = spec.shape.clone();
+                            meta[v].dtype = spec.dtype;
+                            meta[v].size = spec.size_bytes();
+                        } else if meta[v].shape != spec.shape {
+                            return Err(Error::Graph(format!(
+                                "{}: input {i} shape {:?} != kernel spec {:?}",
+                                node.name, meta[v].shape, spec.shape
+                            )));
+                        }
+                        let (root, _) = resolve(&meta, v);
+                        if !matches!(meta[root].kind, Kind::Pinned(_)) {
+                            let u = uses.entry(root).or_insert(0);
+                            *u = (*u).max(step_no);
+                        }
+                    }
+                    for (j, spec) in prep.outputs.iter().enumerate() {
+                        let v = node.outputs[j].0;
+                        meta[v] = ValueMeta {
+                            kind: Kind::Root,
+                            shape: spec.shape.clone(),
+                            dtype: spec.dtype,
+                            size: spec.size_bytes(),
+                        };
+                        defs.insert(v, step_no);
+                    }
+                    proto.push(ProtoStep::Kernel(ni));
+                }
+                OpKind::Host(op) => match op {
+                    HostOp::Embed => {
+                        return Err(Error::Graph(
+                            "Embed host op not graph-executable".into(),
+                        ));
+                    }
+                    HostOp::SplitKv => {
+                        let src = node.inputs[0].0;
+                        let m = &meta[src];
+                        if m.size == 0 || m.shape.len() != 2 || m.shape[1] % 2 != 0 {
+                            return Err(Error::Graph(format!(
+                                "{}: split_kv expects a typed [1, 2k] value, got {:?}",
+                                node.name, m.shape
+                            )));
+                        }
+                        let half_cols = m.shape[1] / 2;
+                        let half_bytes = m.size / 2;
+                        let dtype = m.dtype;
+                        let (root, base) = resolve(&meta, src);
+                        for (j, &out) in node.outputs.iter().enumerate() {
+                            meta[out.0] = ValueMeta {
+                                kind: Kind::Alias { root, offset: base + j * half_bytes },
+                                shape: vec![1, half_cols],
+                                dtype,
+                                size: half_bytes,
+                            };
+                            aliased_values += 1;
+                        }
+                    }
+                    HostOp::ToHeads { heads, head_dim } => {
+                        let src = node.inputs[0].0;
+                        let m = &meta[src];
+                        let numel: usize = m.shape.iter().product();
+                        if m.size == 0 || numel != heads * head_dim {
+                            return Err(Error::Graph(format!(
+                                "{}: to_heads({heads},{head_dim}) on shape {:?}",
+                                node.name, m.shape
+                            )));
+                        }
+                        let (dtype, size) = (m.dtype, m.size);
+                        let (root, base) = resolve(&meta, src);
+                        meta[node.outputs[0].0] = ValueMeta {
+                            kind: Kind::Alias { root, offset: base },
+                            shape: vec![*heads, *head_dim],
+                            dtype,
+                            size,
+                        };
+                        aliased_values += 1;
+                    }
+                    HostOp::FromHeads => {
+                        let src = node.inputs[0].0;
+                        let m = &meta[src];
+                        if m.size == 0 {
+                            return Err(Error::Graph(format!(
+                                "{}: from_heads on untyped value",
+                                node.name
+                            )));
+                        }
+                        let numel: usize = m.shape.iter().product();
+                        let (dtype, size) = (m.dtype, m.size);
+                        let (root, base) = resolve(&meta, src);
+                        meta[node.outputs[0].0] = ValueMeta {
+                            kind: Kind::Alias { root, offset: base },
+                            shape: vec![1, numel],
+                            dtype,
+                            size,
+                        };
+                        aliased_values += 1;
+                    }
+                    HostOp::Halves => {
+                        let src = node.inputs[0].0;
+                        let m = meta[src].clone();
+                        if m.size == 0 || m.shape.len() != 2 || m.shape[1] % 2 != 0 {
+                            return Err(Error::Graph(format!(
+                                "{}: halves expects a typed [h, 2k] value, got {:?}",
+                                node.name, m.shape
+                            )));
+                        }
+                        let (rows, cols) = (m.shape[0], m.shape[1]);
+                        let (root, _) = resolve(&meta, src);
+                        if matches!(meta[root].kind, Kind::Pinned(_)) {
+                            return Err(Error::Graph(format!(
+                                "{}: halves of a pinned weight is unsupported",
+                                node.name
+                            )));
+                        }
+                        for &out in &node.outputs {
+                            meta[out.0] = ValueMeta {
+                                kind: Kind::Root,
+                                shape: vec![rows, cols / 2],
+                                dtype: m.dtype,
+                                size: m.size / 2,
+                            };
+                            defs.insert(out.0, step_no);
+                        }
+                        let u = uses.entry(root).or_insert(0);
+                        *u = (*u).max(step_no);
+                        proto.push(ProtoStep::Halves(ni));
+                    }
+                },
+            }
+        }
+
+        let n_steps = proto.len();
+
+        // Graph outputs: logits is ring-backed (it must survive until the
+        // caller's deferred map_read); everything else is read at replay
+        // end and its slot extends to n_steps + 1.
+        let logits_vid = graph.outputs.get("logits").map(|v| v.0);
+        let mut logits_root: Option<usize> = None;
+        if let Some(lv) = logits_vid {
+            let (root, off) = resolve(&meta, lv);
+            if off != 0 || !matches!(meta[root].kind, Kind::Root) || !defs.contains_key(&root) {
+                return Err(Error::Graph(
+                    "logits output must be a whole kernel-produced value".into(),
+                ));
+            }
+            if uses.contains_key(&root) {
+                return Err(Error::Graph(
+                    "logits output consumed by a later step is unsupported".into(),
+                ));
+            }
+            logits_root = Some(root);
+        }
+        for (name, &vid) in &graph.outputs {
+            if Some(vid.0) == logits_vid {
+                continue;
+            }
+            let m = &meta[vid.0];
+            if m.size == 0 {
+                return Err(Error::Graph(format!("output '{name}' never produced")));
+            }
+            let (root, _) = resolve(&meta, vid.0);
+            if matches!(meta[root].kind, Kind::Pinned(_)) {
+                return Err(Error::Graph(format!(
+                    "output '{name}' aliases a pinned weight"
+                )));
+            }
+            let u = uses.entry(root).or_insert(0);
+            *u = (*u).max(n_steps + 1);
+        }
+
+        // Liveness roots -> arena slots. Skip pinned values and the
+        // ring-backed logits root.
+        let mut roots: Vec<(usize, usize, Interval)> = Vec::new();
+        for (v, m) in meta.iter().enumerate() {
+            if !matches!(m.kind, Kind::Root) || m.size == 0 {
+                continue;
+            }
+            if Some(v) == logits_root {
+                continue;
+            }
+            let def = defs.get(&v).copied().unwrap_or(0);
+            let last_use = uses.get(&v).copied().unwrap_or(def);
+            roots.push((v, m.size, Interval { def, last_use }));
+        }
+        let arena = assign_slots(&roots, n_steps);
+
+        // Resolve a value into a binding.
+        let bind_value = |meta: &[ValueMeta],
+                          arena: &ArenaLayout,
+                          v: usize,
+                          size: usize|
+         -> Result<Binding> {
+            let (root, offset) = resolve(meta, v);
+            match meta[root].kind {
+                Kind::Pinned(buffer) => Ok(Binding::Pinned { buffer, offset, size }),
+                Kind::Root => {
+                    if Some(root) == logits_root {
+                        return Ok(Binding::Ring);
+                    }
+                    let slot = *arena.value_slot.get(&root).ok_or_else(|| {
+                        Error::Graph(format!("value {root} has no arena slot"))
+                    })?;
+                    Ok(Binding::Arena(SlotRef { slot, offset, size }))
+                }
+                _ => Err(Error::Graph(format!("value {v} resolves to non-storage"))),
+            }
+        };
+
+        // Emit the final steps.
+        let mut steps: Vec<Step> = Vec::with_capacity(proto.len());
+        let mut logits_step: Option<usize> = None;
+        for p in &proto {
+            match *p {
+                ProtoStep::Kernel(ni) => {
+                    let node = &graph.nodes[ni];
+                    let kname = match &node.op {
+                        OpKind::Kernel(k) => k.clone(),
+                        OpKind::Host(_) => unreachable!("proto kernel step is a kernel node"),
+                    };
+                    let prep = pipelines.get(&kname).expect("prepared above");
+                    let mut bindings = Vec::with_capacity(node.inputs.len() + node.outputs.len());
+                    for (i, spec) in prep.inputs.iter().enumerate() {
+                        bindings.push(bind_value(
+                            &meta,
+                            &arena,
+                            node.inputs[i].0,
+                            spec.size_bytes(),
+                        )?);
+                    }
+                    for (j, spec) in prep.outputs.iter().enumerate() {
+                        let b = bind_value(&meta, &arena, node.outputs[j].0, spec.size_bytes())?;
+                        if matches!(b, Binding::Ring) {
+                            logits_step = Some(steps.len());
+                        }
+                        bindings.push(b);
+                    }
+                    steps.push(Step::Dispatch(DispatchStep {
+                        name: node.name.clone(),
+                        kernel: kname,
+                        pipeline: prep.pipeline,
+                        layout: prep.layout,
+                        bindings,
+                        grid: prep.grid,
+                    }));
+                }
+                ProtoStep::Halves(ni) => {
+                    let node = &graph.nodes[ni];
+                    let src_v = node.inputs[0].0;
+                    let (root, offset) = resolve(&meta, src_v);
+                    let src_meta = &meta[src_v];
+                    let slot = *arena.value_slot.get(&root).ok_or_else(|| {
+                        Error::Graph(format!("halves src value {root} has no arena slot"))
+                    })?;
+                    let src = SlotRef { slot, offset, size: src_meta.size };
+                    let rows = src_meta.shape[0];
+                    let row_bytes = src_meta.size / rows;
+                    let mut dst = [SlotRef { slot: 0, offset: 0, size: 0 }; 2];
+                    for (j, &out) in node.outputs.iter().enumerate() {
+                        let oslot = *arena.value_slot.get(&out.0).ok_or_else(|| {
+                            Error::Graph(format!("halves dst value {} has no slot", out.0))
+                        })?;
+                        dst[j] = SlotRef { slot: oslot, offset: 0, size: meta[out.0].size };
+                    }
+                    steps.push(Step::Host(HostStep {
+                        name: node.name.clone(),
+                        op: HostOp::Halves,
+                        src,
+                        rows,
+                        row_bytes,
+                        dst,
+                    }));
+                }
+            }
+        }
+
+        // Uploads: non-pinned graph inputs, name-sorted for determinism.
+        let mut input_names: Vec<&String> = graph.inputs.keys().collect();
+        input_names.sort();
+        let mut uploads = Vec::new();
+        for name in input_names {
+            let vid = graph.inputs[name];
+            let m = &meta[vid.0];
+            if matches!(m.kind, Kind::Pinned(_)) || m.size == 0 {
+                continue; // pinned weight or never consumed
+            }
+            let slot = *arena.value_slot.get(&vid.0).ok_or_else(|| {
+                Error::Graph(format!("input '{name}' has no arena slot"))
+            })?;
+            uploads.push(Upload {
+                name: name.clone(),
+                dst: SlotRef { slot, offset: 0, size: m.size },
+                shape: m.shape.clone(),
+                dtype: m.dtype,
+            });
+        }
+
+        // Readbacks: every named output except the ring-backed logits.
+        let mut out_names: Vec<&String> = graph.outputs.keys().collect();
+        out_names.sort();
+        let mut readbacks = Vec::new();
+        let mut logits = None;
+        for name in out_names {
+            let vid = graph.outputs[name];
+            let m = &meta[vid.0];
+            if Some(vid.0) == logits_vid {
+                logits = Some(LogitsSpec {
+                    name: name.clone(),
+                    size: m.size,
+                    shape: m.shape.clone(),
+                    dtype: m.dtype,
+                });
+                continue;
+            }
+            let (root, offset) = resolve(&meta, vid.0);
+            let slot = *arena.value_slot.get(&root).ok_or_else(|| {
+                Error::Graph(format!("output '{name}' has no arena slot"))
+            })?;
+            readbacks.push(Readback {
+                name: name.clone(),
+                src: SlotRef { slot, offset, size: m.size },
+                shape: m.shape.clone(),
+                dtype: m.dtype,
+            });
+        }
+        if logits_vid.is_some() && logits_step.is_none() {
+            return Err(Error::Graph("logits step not located in plan".into()));
+        }
+
+        let stats = PlanStats {
+            kernel_steps: steps
+                .iter()
+                .filter(|s| matches!(s, Step::Dispatch(_)))
+                .count(),
+            host_steps: steps.iter().filter(|s| matches!(s, Step::Host(_))).count(),
+            aliased_values,
+            arena_slots: arena.slot_sizes.len(),
+            arena_bytes: arena.arena_bytes(),
+            unaliased_bytes: arena.unaliased_bytes(),
+        };
+
+        Ok(ExecutionPlan {
+            steps,
+            arena,
+            uploads,
+            readbacks,
+            logits,
+            logits_step,
+            dispatches_per_submit: cfg.dispatches_per_submit.max(1),
+            framework_ns_per_step: cfg.framework_ns_per_step,
+            logits_ring: cfg.logits_ring.max(1),
+            fingerprint: GraphFingerprint::of(graph),
+            stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fx::builder::{build_decode_graph, FusionConfig, GraphDims};
+    use crate::webgpu::ImplementationProfile;
+
+    fn compile(fusion: FusionConfig) -> ExecutionPlan {
+        let reg = Registry::builtin().unwrap();
+        let mut device = Device::new(ImplementationProfile::zero_overhead());
+        let mut pool = PipelinePool::new();
+        let g = build_decode_graph(&GraphDims::qwen_tiny(), fusion);
+        Planner::new(&reg)
+            .compile(&mut device, &mut pool, &g, &HashMap::new(), &PlanConfig::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn fused_plan_has_one_step_per_dispatch_and_no_host_steps() {
+        let g = build_decode_graph(&GraphDims::qwen_tiny(), FusionConfig::fused());
+        let plan = compile(FusionConfig::fused());
+        assert_eq!(plan.stats.kernel_steps, g.dispatch_count());
+        // Fused graphs only carry alias-able shape ops (kv_split, heads).
+        assert_eq!(plan.stats.host_steps, 0);
+        assert!(plan.stats.aliased_values > 0);
+        assert!(plan.logits.is_some() && plan.logits_step.is_some());
+    }
+
+    #[test]
+    fn unfused_plan_materializes_only_halves() {
+        let dims = GraphDims::qwen_tiny();
+        let g = build_decode_graph(&dims, FusionConfig::unfused());
+        let plan = compile(FusionConfig::unfused());
+        assert_eq!(plan.stats.kernel_steps, g.dispatch_count());
+        // One halves per rotary application: 2 per layer.
+        assert_eq!(plan.stats.host_steps, 2 * dims.layers);
+    }
+
+    #[test]
+    fn aliasing_packs_the_arena_below_one_buffer_per_value() {
+        for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+            let plan = compile(fusion);
+            assert!(
+                plan.stats.arena_bytes < plan.stats.unaliased_bytes,
+                "{fusion:?}: arena {} !< unaliased {}",
+                plan.stats.arena_bytes,
+                plan.stats.unaliased_bytes
+            );
+            assert!(plan.stats.arena_slots < plan.arena.assignments.len());
+        }
+    }
+
+    #[test]
+    fn cache_outputs_read_back_logits_ring_backed() {
+        // Pin every weight input the way the engine does, so uploads are
+        // exactly the per-step values.
+        let reg = Registry::builtin().unwrap();
+        let mut device = Device::new(ImplementationProfile::zero_overhead());
+        let mut pool = PipelinePool::new();
+        let dims = GraphDims::qwen_tiny();
+        let g = build_decode_graph(&dims, FusionConfig::fused());
+        let per_step = ["x", "pos_i", "pos_ip1", "pos_f", "inv_freq"];
+        let mut pinned = HashMap::new();
+        for (name, &vid) in &g.inputs {
+            if per_step.contains(&name.as_str()) || name.ends_with("_cache") {
+                continue;
+            }
+            let buf = device
+                .create_buffer(crate::webgpu::BufferDesc {
+                    label: format!("w-{name}"),
+                    size: 1 << 20,
+                    usage: crate::webgpu::BufferUsage::STORAGE
+                        | crate::webgpu::BufferUsage::COPY_DST,
+                })
+                .unwrap();
+            pinned.insert(vid, buf);
+        }
+        let plan = Planner::new(&reg)
+            .compile(&mut device, &mut pool, &g, &pinned, &PlanConfig::default())
+            .unwrap();
+        assert_eq!(plan.readbacks.len(), 2 * dims.layers); // k/v caches
+        let lg = plan.logits.as_ref().unwrap();
+        assert_eq!(lg.shape, vec![1, dims.vocab]);
+        assert_eq!(lg.size, dims.vocab * 4);
+        // Uploads cover x, pos scalars, inv_freq and the per-layer caches.
+        assert_eq!(plan.uploads.len(), 4 + 1 + 2 * dims.layers);
+    }
+}

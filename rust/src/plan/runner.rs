@@ -1,0 +1,325 @@
+//! The PlanRunner: materializes an [`ExecutionPlan`] into device resources
+//! once, then replays it per token as the allocation-free hot loop.
+//!
+//! Materialization (plan-build time, off the decode loop) creates the
+//! arena buffers, the logits ring, and one bind group per dispatch step —
+//! so replay never creates a resource, never hashes a cache key, and never
+//! copies an activation through the host: it writes the per-step inputs,
+//! walks a flat step array issuing `set_pipeline` / `set_bind_group` /
+//! `dispatch`, and batches up to `dispatches_per_submit` dispatches into
+//! one encoder per submit (the paper's encoder-batching axis). Framework
+//! cost is charged once per step at the plan's (much smaller) replay rate,
+//! making eager-vs-planned framework overhead a measurable delta.
+//!
+//! The logits output is ring-backed: concurrent sessions in one scheduler
+//! round each replay into their own ring buffer, so the deferred
+//! synchronizing readback (`map_read_many`) still sees every session's
+//! logits after the round.
+
+use std::collections::HashMap;
+
+use crate::tensor::Tensor;
+use crate::webgpu::bindgroup::{BindGroupDesc, BindGroupEntry, BindGroupId};
+use crate::webgpu::{
+    BufferDesc, BufferId, BufferUsage, CommandEncoderId, Device, KernelRunner,
+};
+use crate::{Error, Result};
+
+use super::planner::{Binding, ExecutionPlan, Step};
+
+/// Per-replay cost deltas the executor folds into its own counters so
+/// serving attribution keeps tiling the device timeline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplayDelta {
+    pub framework_ns: u64,
+    pub dispatches: u64,
+    pub submits: u64,
+}
+
+pub struct PlanRunner {
+    pub plan: ExecutionPlan,
+    /// One device buffer per arena slot.
+    arena: Vec<BufferId>,
+    /// Cached bind group per dispatch step (None for host steps and the
+    /// ring-substituted logits step).
+    groups: Vec<Option<BindGroupId>>,
+    /// Ring buffers + their bind groups for the logits-producing step.
+    logits_ring: Vec<BufferId>,
+    logits_groups: Vec<BindGroupId>,
+    /// Reused scratch for the `Halves` host step (unfused graphs only).
+    scratch_a: Vec<u8>,
+    scratch_b: Vec<u8>,
+    /// Plan-build cost (compile + materialize), stamped by the caller.
+    pub build_virtual_ns: u64,
+    pub build_real_ns: u64,
+    pub replays: u64,
+}
+
+fn flush(
+    device: &mut Device,
+    runner: &dyn KernelRunner,
+    enc: &mut Option<CommandEncoderId>,
+) -> Result<()> {
+    if let Some(e) = enc.take() {
+        device.end_compute_pass(e)?;
+        let cb = device.finish(e)?;
+        device.submit(&[cb], runner)?;
+    }
+    Ok(())
+}
+
+impl PlanRunner {
+    /// Create the arena buffers, logits ring and per-step bind groups.
+    /// Everything here is plan-build cost, paid once.
+    pub fn materialize(device: &mut Device, plan: ExecutionPlan) -> Result<PlanRunner> {
+        let usage = BufferUsage::STORAGE
+            | BufferUsage::COPY_DST
+            | BufferUsage::COPY_SRC
+            | BufferUsage::MAP_READ;
+        let mut arena = Vec::with_capacity(plan.arena.slot_sizes.len());
+        for (i, &size) in plan.arena.slot_sizes.iter().enumerate() {
+            arena.push(device.create_buffer(BufferDesc {
+                label: format!("arena-{i}"),
+                size,
+                usage,
+            })?);
+        }
+        let mut logits_ring = Vec::new();
+        if let Some(lg) = &plan.logits {
+            for r in 0..plan.logits_ring {
+                logits_ring.push(device.create_buffer(BufferDesc {
+                    label: format!("logits-ring-{r}"),
+                    size: lg.size,
+                    usage,
+                })?);
+            }
+        }
+
+        let entry_for = |arena: &[BufferId], b: &Binding, binding: usize| -> BindGroupEntry {
+            match *b {
+                Binding::Arena(s) => BindGroupEntry {
+                    binding,
+                    buffer: arena[s.slot],
+                    offset: s.offset,
+                    size: s.size,
+                },
+                Binding::Pinned { buffer, offset, size } => {
+                    BindGroupEntry { binding, buffer, offset, size }
+                }
+                Binding::Ring => unreachable!("ring bindings are substituted per ring buffer"),
+            }
+        };
+
+        let mut groups: Vec<Option<BindGroupId>> = Vec::with_capacity(plan.steps.len());
+        let mut logits_groups = Vec::new();
+        for (i, step) in plan.steps.iter().enumerate() {
+            match step {
+                Step::Dispatch(d) => {
+                    if Some(i) == plan.logits_step {
+                        // One group per ring buffer, Ring slot substituted.
+                        for &ring_buf in &logits_ring {
+                            let entries = d
+                                .bindings
+                                .iter()
+                                .enumerate()
+                                .map(|(bi, b)| match b {
+                                    Binding::Ring => {
+                                        let size = plan
+                                            .logits
+                                            .as_ref()
+                                            .map(|l| l.size)
+                                            .unwrap_or(0);
+                                        BindGroupEntry {
+                                            binding: bi,
+                                            buffer: ring_buf,
+                                            offset: 0,
+                                            size,
+                                        }
+                                    }
+                                    other => entry_for(&arena, other, bi),
+                                })
+                                .collect();
+                            logits_groups.push(device.create_bind_group(BindGroupDesc {
+                                label: d.name.clone(),
+                                layout: d.layout,
+                                entries,
+                            })?);
+                        }
+                        groups.push(None);
+                    } else {
+                        let entries = d
+                            .bindings
+                            .iter()
+                            .enumerate()
+                            .map(|(bi, b)| entry_for(&arena, b, bi))
+                            .collect();
+                        groups.push(Some(device.create_bind_group(BindGroupDesc {
+                            label: d.name.clone(),
+                            layout: d.layout,
+                            entries,
+                        })?));
+                    }
+                }
+                Step::Host(_) => groups.push(None),
+            }
+        }
+
+        Ok(PlanRunner {
+            plan,
+            arena,
+            groups,
+            logits_ring,
+            logits_groups,
+            scratch_a: Vec::new(),
+            scratch_b: Vec::new(),
+            build_virtual_ns: 0,
+            build_real_ns: 0,
+            replays: 0,
+        })
+    }
+
+    /// True for buffers the runner owns (the logits ring) — they must not
+    /// be released into the executor's size-class pool.
+    pub fn owns_buffer(&self, buf: BufferId) -> bool {
+        self.logits_ring.contains(&buf)
+    }
+
+    pub fn arena_len(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// Replay the plan once. `ring_idx` selects the logits ring buffer
+    /// (the serving engine passes the session's position in the round).
+    /// Returns (named outputs, live logits buffer for the caller's
+    /// deferred `map_read`, cost deltas).
+    pub fn replay(
+        &mut self,
+        device: &mut Device,
+        runner: &dyn KernelRunner,
+        inputs: &HashMap<String, Tensor>,
+        ring_idx: usize,
+    ) -> Result<(HashMap<String, Tensor>, Option<BufferId>, ReplayDelta)> {
+        if self.plan.logits.is_some() && ring_idx >= self.logits_ring.len() {
+            return Err(Error::Graph(format!(
+                "ring index {ring_idx} >= logits ring size {}",
+                self.logits_ring.len()
+            )));
+        }
+        let mut delta = ReplayDelta::default();
+
+        for u in &self.plan.uploads {
+            let t = inputs
+                .get(&u.name)
+                .ok_or_else(|| Error::Graph(format!("missing graph input '{}'", u.name)))?;
+            if t.shape != u.shape {
+                return Err(Error::Graph(format!(
+                    "input '{}' shape {:?} != plan shape {:?}",
+                    u.name, t.shape, u.shape
+                )));
+            }
+            device.write_buffer(self.arena[u.dst.slot], u.dst.offset, t.data.as_bytes())?;
+        }
+
+        let mut enc: Option<CommandEncoderId> = None;
+        let mut pending = 0usize;
+        for (i, step) in self.plan.steps.iter().enumerate() {
+            match step {
+                Step::Dispatch(d) => {
+                    // Planned framework cost: the replay loop's per-step
+                    // bookkeeping, orders of magnitude below the eager
+                    // interpreter's per-op cost.
+                    let fw = device.drifted_cost(self.plan.framework_ns_per_step);
+                    device.clock.advance_cpu(fw);
+                    delta.framework_ns += fw;
+
+                    let e = match enc {
+                        Some(e) => e,
+                        None => {
+                            let e = device.create_command_encoder(&d.name);
+                            device.begin_compute_pass(e)?;
+                            enc = Some(e);
+                            pending = 0;
+                            e
+                        }
+                    };
+                    device.set_pipeline(e, d.pipeline)?;
+                    let group = if Some(i) == self.plan.logits_step {
+                        self.logits_groups[ring_idx]
+                    } else {
+                        self.groups[i].ok_or_else(|| {
+                            Error::Graph(format!("step {i} '{}' has no bind group", d.name))
+                        })?
+                    };
+                    device.set_bind_group(e, group)?;
+                    device.dispatch_workgroups(e, d.grid.0, d.grid.1, d.grid.2)?;
+                    delta.dispatches += 1;
+                    pending += 1;
+                    if pending >= self.plan.dispatches_per_submit {
+                        flush(device, runner, &mut enc)?;
+                        delta.submits += 1;
+                    }
+                }
+                Step::Host(h) => {
+                    // A host step reads device bytes: pending dispatches
+                    // must execute first, and its writes must not clobber
+                    // aliased slots a recorded-but-unsubmitted dispatch
+                    // still reads.
+                    if enc.is_some() {
+                        flush(device, runner, &mut enc)?;
+                        delta.submits += 1;
+                    }
+                    let half = h.row_bytes / 2;
+                    self.scratch_a.clear();
+                    self.scratch_b.clear();
+                    {
+                        let bytes = device.peek_buffer(self.arena[h.src.slot])?;
+                        let window = &bytes[h.src.offset..h.src.offset + h.src.size];
+                        for row in window.chunks_exact(h.row_bytes) {
+                            self.scratch_a.extend_from_slice(&row[..half]);
+                            self.scratch_b.extend_from_slice(&row[half..]);
+                        }
+                    }
+                    device.write_buffer(
+                        self.arena[h.dst[0].slot],
+                        h.dst[0].offset,
+                        &self.scratch_a,
+                    )?;
+                    device.write_buffer(
+                        self.arena[h.dst[1].slot],
+                        h.dst[1].offset,
+                        &self.scratch_b,
+                    )?;
+                }
+            }
+        }
+        if enc.is_some() {
+            flush(device, runner, &mut enc)?;
+            delta.submits += 1;
+        }
+
+        let mut outs = HashMap::with_capacity(self.plan.readbacks.len() + 1);
+        for rb in &self.plan.readbacks {
+            let t = {
+                let bytes = device.peek_buffer(self.arena[rb.src.slot])?;
+                Tensor::from_le_bytes(
+                    rb.shape.clone(),
+                    rb.dtype,
+                    &bytes[rb.src.offset..rb.src.offset + rb.src.size],
+                )?
+            };
+            outs.insert(rb.name.clone(), t);
+        }
+        let mut logits_buf = None;
+        if let Some(lg) = &self.plan.logits {
+            let buf = self.logits_ring[ring_idx];
+            let t = {
+                let bytes = device.peek_buffer(buf)?;
+                Tensor::from_le_bytes(lg.shape.clone(), lg.dtype, &bytes[..lg.size])?
+            };
+            outs.insert(lg.name.clone(), t);
+            logits_buf = Some(buf);
+        }
+        self.replays += 1;
+        Ok((outs, logits_buf, delta))
+    }
+}

@@ -76,18 +76,25 @@ pub struct ServingEngine<'r> {
     /// Retired sessions, in completion order.
     pub finished: Vec<SessionState>,
     argmax: Option<ArgmaxPrepared>,
+    /// Rotating logits-ring cursor for the public `encode_session` path:
+    /// consecutive encodes get distinct ring buffers, so up to
+    /// `max_concurrent` sessions can be encode/finish-interleaved through
+    /// the public API in planned mode without clobbering a deferred
+    /// logits readback. (`step_round` assigns indices by round position.)
+    ring_cursor: usize,
 }
 
 impl<'r> ServingEngine<'r> {
     pub fn new(registry: &'r Registry, config: ServeConfig) -> Result<Self> {
         let ec = &config.engine;
         let mc = registry.config(&ec.model)?;
-        let dims = GraphDims::from_manifest(mc);
+        let dims = ec.dims_override.unwrap_or_else(|| GraphDims::from_manifest(mc));
         let graph = build_decode_graph(&dims, ec.fusion);
         graph.validate()?;
         let mut device = Device::new(ec.profile.clone());
         device.kernel_time_policy = ec.kernel_time_policy;
         let mut executor = GraphExecutor::new(device, registry, ec.framework_ns_per_op);
+        executor.pool.set_cap(ec.pool_cap_bytes);
         executor.prepare(&graph)?;
 
         let argmax = if ec.device_argmax {
@@ -113,6 +120,21 @@ impl<'r> ServingEngine<'r> {
         // every session.
         executor.pin_inputs(&graph, &weights.by_name)?;
 
+        if ec.exec == crate::engine::ExecMode::Planned {
+            // Compile-once plan, shared by every session. The logits ring
+            // must cover one scheduler round (sessions replay before the
+            // round's coalesced readback). Build cost is tracked on the
+            // runner, separate from replay cost.
+            executor.enable_plan(
+                &graph,
+                crate::plan::PlanConfig {
+                    dispatches_per_submit: ec.dispatches_per_submit.max(1),
+                    framework_ns_per_step: ec.planned_framework_ns_per_step,
+                    logits_ring: config.max_concurrent.max(1),
+                },
+            )?;
+        }
+
         Ok(ServingEngine {
             config,
             dims,
@@ -123,6 +145,7 @@ impl<'r> ServingEngine<'r> {
             active: Vec::new(),
             finished: Vec::new(),
             argmax,
+            ring_cursor: 0,
         })
     }
 
@@ -179,14 +202,26 @@ impl<'r> ServingEngine<'r> {
     /// Encode one decode step for `s`: host embedding gather, then the full
     /// per-kernel dispatch stream through the shared executor. Does NOT
     /// synchronize — the logits buffer stays live in the returned handle.
+    /// Reserve the next logits-ring index. Every encode path (public
+    /// `encode_session` and `step_round`) draws from this one rotating
+    /// cursor, so any window of up to `max_concurrent` consecutive
+    /// encodes — however the caller mixes the two paths — gets distinct
+    /// ring buffers for its deferred readbacks.
+    fn next_ring(&mut self) -> usize {
+        let ring = self.ring_cursor;
+        self.ring_cursor = (ring + 1) % self.config.max_concurrent.max(1);
+        ring
+    }
+
     pub fn encode_session(
         &mut self,
         s: &mut SessionState,
         token: usize,
         was_prompt: bool,
     ) -> Result<StepHandle> {
+        let ring = self.next_ring();
         let ServingEngine { executor, graph, dims, weights, .. } = self;
-        Self::encode_inner(executor, graph, dims, weights, s, token, was_prompt)
+        Self::encode_inner(executor, graph, dims, weights, s, token, was_prompt, ring)
     }
 
     /// Finish one session's step on its own: one synchronizing readback
@@ -196,6 +231,7 @@ impl<'r> ServingEngine<'r> {
         Self::finish_inner(executor, argmax.as_ref(), s, h)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn encode_inner(
         executor: &mut GraphExecutor<'r>,
         graph: &FxGraph,
@@ -204,6 +240,7 @@ impl<'r> ServingEngine<'r> {
         s: &mut SessionState,
         token: usize,
         was_prompt: bool,
+        ring_idx: usize,
     ) -> Result<StepHandle> {
         if s.pos >= dims.max_seq {
             return Err(Error::Graph(format!(
@@ -218,6 +255,7 @@ impl<'r> ServingEngine<'r> {
         let sy0 = executor.device.timeline.sync_virtual_ns;
         let fw0 = executor.framework_virtual_ns;
         let d0 = executor.dispatch_count;
+        let c0 = executor.device.clock.now_ns();
 
         // Host embedding gather (Table 10 "Other": embedding).
         let x = hostops::embed(&weights.embedding, token)?;
@@ -234,7 +272,7 @@ impl<'r> ServingEngine<'r> {
         // Weights are NOT passed per step: they were pinned into persistent
         // device buffers at engine construction (executor.pin_inputs).
 
-        let (mut outs, logits_buf) = executor.run(graph, &inputs)?;
+        let (mut outs, logits_buf) = executor.run_with_ring(graph, &inputs, ring_idx)?;
 
         // Update this session's caches for its next step.
         for l in 0..dims.layers {
@@ -266,6 +304,10 @@ impl<'r> ServingEngine<'r> {
         s.metrics.kernel_virtual_ns += tl.kernel_virtual_ns - k0;
         s.metrics.sync_virtual_ns += tl.sync_virtual_ns - sy0;
         s.metrics.framework_virtual_ns += executor.framework_virtual_ns - fw0;
+        // Encode (planned: plan *replay*) CPU cost for this session — the
+        // counterpart of the engine-level plan-build cost, so build vs
+        // replay attribution is visible per session.
+        s.metrics.encode_virtual_ns += executor.device.clock.now_ns() - c0;
 
         Ok(StepHandle { logits, logits_buf })
     }
@@ -365,12 +407,17 @@ impl<'r> ServingEngine<'r> {
         }
         let mut handles: Vec<Option<StepHandle>> = Vec::with_capacity(n);
         for i in 0..n {
+            // In planned mode, each session in the round replays into its
+            // own logits-ring buffer (reserved from the shared cursor) so
+            // every logits row survives until the coalesced readback below.
+            let ring = self.next_ring();
             let ServingEngine { executor, graph, dims, weights, active, .. } = &mut *self;
             let s = &mut active[i];
             let (token, was_prompt) = s.take_input().ok_or_else(|| {
                 Error::Graph(format!("session {} has no input token", s.id))
             })?;
-            let h = Self::encode_inner(executor, graph, dims, weights, s, token, was_prompt)?;
+            let h =
+                Self::encode_inner(executor, graph, dims, weights, s, token, was_prompt, ring)?;
             handles.push(Some(h));
         }
 
@@ -452,7 +499,18 @@ impl<'r> ServingEngine<'r> {
             self.step_round()?;
         }
         let wall = self.now_ns() - t0;
-        Ok(ServeReport::from_sessions(&self.finished[f0..], wall))
+        let mut report = ServeReport::from_sessions(&self.finished[f0..], wall);
+        // Engine-level attribution: one-time plan-build cost (planned
+        // mode) and the bounded activation pool's counters.
+        if let Some(runner) = self.executor.plan_runner() {
+            report.planned = true;
+            report.plan_build_virtual_ns = runner.build_virtual_ns;
+            report.plan_build_real_ns = runner.build_real_ns;
+        }
+        let ps = self.executor.pool.stats();
+        report.pool_high_water_bytes = ps.high_water_bytes as u64;
+        report.pool_buffers_created = ps.created;
+        Ok(report)
     }
 
     /// Take ownership of the retired sessions (completion order).

@@ -19,6 +19,8 @@ pub struct ServeReport {
     pub mean_session_tok_per_s: f64,
     /// Total dispatches across sessions.
     pub dispatches: u64,
+    /// Total decode steps across sessions (prefill + generation).
+    pub steps: u64,
     /// Dispatches per decode step (uniform across sessions of one config).
     pub dispatches_per_step: u64,
     /// Aggregate per-phase dispatch CPU cost (`DISPATCH_PHASES` order).
@@ -26,7 +28,21 @@ pub struct ServeReport {
     pub framework_virtual_ns: u64,
     pub sync_virtual_ns: u64,
     pub kernel_virtual_ns: u64,
+    /// Per-session encode (planned: plan-replay) CPU cost, summed.
+    pub encode_virtual_ns: u64,
     pub ttft_ms: Vec<f64>,
+    /// True when the run replayed a compiled plan instead of eager-
+    /// interpreting the graph.
+    pub planned: bool,
+    /// One-time plan compile + materialize cost (virtual ns; 0 in eager
+    /// mode). Attributed at engine level — it precedes every session.
+    pub plan_build_virtual_ns: u64,
+    /// Real host ns of the plan build.
+    pub plan_build_real_ns: u64,
+    /// Peak outstanding bytes in the shared activation pool.
+    pub pool_high_water_bytes: u64,
+    /// Buffers the pool created over the run (reuse keeps this flat).
+    pub pool_buffers_created: u64,
 }
 
 impl ServeReport {
@@ -37,6 +53,7 @@ impl ServeReport {
         let mut framework = 0u64;
         let mut sync = 0u64;
         let mut kernel = 0u64;
+        let mut encode = 0u64;
         let mut dispatches = 0u64;
         let mut steps = 0u64;
         let mut ttft_ms = Vec::with_capacity(n);
@@ -48,6 +65,7 @@ impl ServeReport {
             framework += s.metrics.framework_virtual_ns;
             sync += s.metrics.sync_virtual_ns;
             kernel += s.metrics.kernel_virtual_ns;
+            encode += s.metrics.encode_virtual_ns;
             dispatches += s.metrics.dispatches;
             steps += s.metrics.steps;
             ttft_ms.push(s.metrics.ttft_ns() as f64 / 1e6);
@@ -68,12 +86,19 @@ impl ServeReport {
             max_ttft_ms: ttft_ms.iter().cloned().fold(0.0, f64::max),
             mean_session_tok_per_s: if n > 0 { tps_sum / n as f64 } else { 0.0 },
             dispatches,
+            steps,
             dispatches_per_step: if steps > 0 { dispatches / steps } else { 0 },
             phase_virtual_ns: phase,
             framework_virtual_ns: framework,
             sync_virtual_ns: sync,
             kernel_virtual_ns: kernel,
+            encode_virtual_ns: encode,
             ttft_ms,
+            planned: false,
+            plan_build_virtual_ns: 0,
+            plan_build_real_ns: 0,
+            pool_high_water_bytes: 0,
+            pool_buffers_created: 0,
         }
     }
 

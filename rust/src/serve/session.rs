@@ -43,6 +43,11 @@ pub struct SessionMetrics {
     pub sync_virtual_ns: u64,
     /// GPU kernel time enqueued by this session's dispatches.
     pub kernel_virtual_ns: u64,
+    /// Encode-side CPU cost of this session's steps (uploads + dispatch
+    /// phases + framework). In planned mode this is the session's share of
+    /// plan *replay* cost — the per-session counterpart of the engine-
+    /// level one-time plan-build cost in [`crate::serve::ServeReport`].
+    pub encode_virtual_ns: u64,
     /// Per generated token: [TTFT, then per-decode-step deltas].
     pub per_token_ns: Vec<u64>,
 }

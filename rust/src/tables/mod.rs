@@ -6,6 +6,7 @@ pub mod analysis;
 pub mod dispatch;
 pub mod e2e;
 pub mod kernels;
+pub mod plan;
 pub mod serving;
 
 use crate::report::TableDoc;

@@ -24,6 +24,7 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
             "dispatch (us/tok)",
             "sync (us/tok)",
             "gpu (us/tok)",
+            "pool HW (KiB)",
         ],
     );
     let base = rows.first().map(|(_, r)| r.agg_tok_per_s).unwrap_or(1.0);
@@ -38,6 +39,7 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
             f1(r.us_per_token(r.phase_total_ns())),
             f1(r.us_per_token(r.sync_virtual_ns)),
             f1(r.us_per_token(r.kernel_virtual_ns)),
+            f1(r.pool_high_water_bytes as f64 / 1024.0),
         ]);
     }
     t.note(

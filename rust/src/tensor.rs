@@ -115,6 +115,37 @@ impl Tensor {
         Tensor { shape: vec![1], data: TensorData::F32(vec![v]) }
     }
 
+    /// Decode a tensor from little-endian device-buffer bytes (the one
+    /// implementation behind the executor's output peeks and the plan
+    /// runner's readbacks). `bytes` may be longer than needed; excess is
+    /// ignored.
+    pub fn from_le_bytes(shape: Vec<usize>, dtype: DType, bytes: &[u8]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        let need = n * dtype.size_bytes();
+        if bytes.len() < need {
+            return Err(Error::Shape(format!(
+                "buffer {} B too small for shape {shape:?} ({need} B)",
+                bytes.len()
+            )));
+        }
+        match dtype {
+            DType::F32 => {
+                let v: Vec<f32> = bytes[..need]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Tensor::f32(shape, v)
+            }
+            DType::I32 => {
+                let v: Vec<i32> = bytes[..need]
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Tensor::i32(shape, v)
+            }
+        }
+    }
+
     pub fn dtype(&self) -> DType {
         self.data.dtype()
     }
@@ -242,5 +273,20 @@ mod tests {
         let t = Tensor::f32(vec![2], vec![1.5, -2.5]).unwrap();
         assert_eq!(t.data.as_bytes().len(), 8);
         assert_eq!(t.size_bytes(), 8);
+    }
+
+    #[test]
+    fn from_le_bytes_decodes_exactly() {
+        let t = Tensor::f32(vec![2, 2], vec![1.5, -2.5, 0.0, 3.25]).unwrap();
+        let back = Tensor::from_le_bytes(vec![2, 2], DType::F32, t.data.as_bytes()).unwrap();
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+        // Excess bytes ignored; short buffers rejected.
+        let mut long = t.data.as_bytes().to_vec();
+        long.extend_from_slice(&[0u8; 8]);
+        assert!(Tensor::from_le_bytes(vec![2, 2], DType::F32, &long).is_ok());
+        assert!(Tensor::from_le_bytes(vec![2, 2], DType::F32, &long[..12]).is_err());
+        let i = Tensor::i32(vec![2], vec![-7, 9]).unwrap();
+        let iback = Tensor::from_le_bytes(vec![2], DType::I32, i.data.as_bytes()).unwrap();
+        assert_eq!(iback.as_i32().unwrap(), &[-7, 9]);
     }
 }

@@ -26,6 +26,7 @@ pub mod device;
 pub mod encoder;
 pub mod limits;
 pub mod pipeline;
+pub mod pool;
 pub mod profile;
 pub mod queue;
 pub mod validation;
@@ -37,4 +38,5 @@ pub use device::{Device, KernelRunner, NullRunner};
 pub use encoder::{CommandBufferId, CommandEncoderId};
 pub use limits::Limits;
 pub use pipeline::{ComputePipelineId, KernelIoSpec, ShaderModuleDesc, ShaderModuleId};
+pub use pool::{BufferPool, PoolStats};
 pub use profile::{Backend, ImplementationProfile, Platform};

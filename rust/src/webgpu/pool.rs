@@ -1,0 +1,161 @@
+//! Bounded size-class buffer pool.
+//!
+//! The eager executor's activation buffers cycle through here (the
+//! paper's buffer-pooling experiment — re-creating buffers per dispatch
+//! is purely hostile). The pool is **bounded**: it tracks outstanding and
+//! high-water bytes, and past a configurable byte cap it errors instead
+//! of growing silently, so a leak (buffers acquired and never released)
+//! surfaces as a `LimitExceeded` rather than unbounded device memory.
+//! Stats are exported into the serving report.
+
+use std::collections::HashMap;
+
+use super::buffer::{BufferDesc, BufferId, BufferUsage};
+use super::device::Device;
+use crate::{Error, Result};
+
+/// Pool counters, all in bytes unless noted.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    /// Buffers created through the pool (count).
+    pub created: u64,
+    /// Acquisitions served from the free list (count).
+    pub reused: u64,
+    /// Bytes currently acquired and not yet released.
+    pub outstanding_bytes: usize,
+    /// Peak of `outstanding_bytes` over the pool's lifetime.
+    pub high_water_bytes: usize,
+    /// Total bytes of every buffer the pool has ever created (outstanding
+    /// + free-listed) — the quantity the cap bounds.
+    pub total_bytes: usize,
+}
+
+pub struct BufferPool {
+    free: HashMap<usize, Vec<BufferId>>,
+    cap_bytes: Option<usize>,
+    stats: PoolStats,
+}
+
+impl BufferPool {
+    pub fn new(cap_bytes: Option<usize>) -> Self {
+        BufferPool { free: HashMap::new(), cap_bytes, stats: PoolStats::default() }
+    }
+
+    pub fn set_cap(&mut self, cap_bytes: Option<usize>) {
+        self.cap_bytes = cap_bytes;
+    }
+
+    pub fn cap_bytes(&self) -> Option<usize> {
+        self.cap_bytes
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    /// Acquire a buffer of exactly `size` bytes: free-list reuse first,
+    /// otherwise a fresh allocation — which errors past the cap.
+    pub fn acquire(&mut self, device: &mut Device, size: usize) -> Result<BufferId> {
+        if let Some(free) = self.free.get_mut(&size) {
+            if let Some(b) = free.pop() {
+                self.stats.reused += 1;
+                self.stats.outstanding_bytes += size;
+                self.stats.high_water_bytes =
+                    self.stats.high_water_bytes.max(self.stats.outstanding_bytes);
+                return Ok(b);
+            }
+        }
+        if let Some(cap) = self.cap_bytes {
+            if self.stats.total_bytes + size > cap {
+                return Err(Error::LimitExceeded(format!(
+                    "buffer pool cap {cap} B exceeded: {} B held, {size} B requested",
+                    self.stats.total_bytes
+                )));
+            }
+        }
+        let b = device.create_buffer(BufferDesc {
+            label: format!("pool-{size}"),
+            size,
+            usage: BufferUsage::STORAGE
+                | BufferUsage::COPY_DST
+                | BufferUsage::COPY_SRC
+                | BufferUsage::MAP_READ,
+        })?;
+        self.stats.created += 1;
+        self.stats.total_bytes += size;
+        self.stats.outstanding_bytes += size;
+        self.stats.high_water_bytes =
+            self.stats.high_water_bytes.max(self.stats.outstanding_bytes);
+        Ok(b)
+    }
+
+    /// Return a buffer of `size` bytes to the free list.
+    pub fn release(&mut self, size: usize, id: BufferId) {
+        self.stats.outstanding_bytes = self.stats.outstanding_bytes.saturating_sub(size);
+        self.free.entry(size).or_default().push(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::webgpu::ImplementationProfile;
+
+    fn device() -> Device {
+        Device::new(ImplementationProfile::zero_overhead())
+    }
+
+    #[test]
+    fn reuses_before_creating() {
+        let mut d = device();
+        let mut p = BufferPool::new(None);
+        let a = p.acquire(&mut d, 256).unwrap();
+        p.release(256, a);
+        let b = p.acquire(&mut d, 256).unwrap();
+        assert_eq!(a, b, "free-listed buffer must be reused");
+        let s = p.stats();
+        assert_eq!(s.created, 1);
+        assert_eq!(s.reused, 1);
+        assert_eq!(s.total_bytes, 256);
+    }
+
+    #[test]
+    fn tracks_outstanding_and_high_water() {
+        let mut d = device();
+        let mut p = BufferPool::new(None);
+        let a = p.acquire(&mut d, 100).unwrap();
+        let b = p.acquire(&mut d, 200).unwrap();
+        assert_eq!(p.stats().outstanding_bytes, 300);
+        assert_eq!(p.stats().high_water_bytes, 300);
+        p.release(100, a);
+        p.release(200, b);
+        assert_eq!(p.stats().outstanding_bytes, 0);
+        assert_eq!(p.stats().high_water_bytes, 300, "high-water is sticky");
+    }
+
+    #[test]
+    fn cap_errors_instead_of_growing() {
+        let mut d = device();
+        let mut p = BufferPool::new(Some(256));
+        let a = p.acquire(&mut d, 200).unwrap();
+        let err = p.acquire(&mut d, 100);
+        assert!(
+            matches!(err, Err(Error::LimitExceeded(_))),
+            "over-cap acquire must error, got {err:?}"
+        );
+        // Reuse within the cap still works.
+        p.release(200, a);
+        assert!(p.acquire(&mut d, 200).is_ok());
+    }
+
+    #[test]
+    fn distinct_size_classes_do_not_mix() {
+        let mut d = device();
+        let mut p = BufferPool::new(None);
+        let a = p.acquire(&mut d, 64).unwrap();
+        p.release(64, a);
+        let b = p.acquire(&mut d, 128).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.stats().created, 2);
+    }
+}

@@ -1,0 +1,371 @@
+//! Planned-execution integration tests: bit-identical token parity with
+//! eager execution across every executable workload x fusion x session
+//! count, aliasing safety of the arena, allocation-free replay, the
+//! bounded buffer pool, and plan-build vs replay attribution.
+
+use wdb::engine::{Engine, EngineConfig, ExecMode};
+use wdb::fx::builder::{build_decode_graph, FusionConfig, GraphDims};
+use wdb::fx::workloads::decode_workloads;
+use wdb::model::ByteTokenizer;
+use wdb::runtime::Registry;
+use wdb::serve::{ServeConfig, ServingEngine};
+
+const SEED: u64 = 0x9141;
+
+fn registry() -> Registry {
+    Registry::builtin().expect("builtin registry")
+}
+
+fn cfg(dims: GraphDims, fusion: FusionConfig, exec: ExecMode) -> EngineConfig {
+    EngineConfig {
+        fusion,
+        exec,
+        dims_override: Some(dims),
+        ..EngineConfig::tiny_fused()
+    }
+}
+
+/// Run `sessions` identical-prompt requests and return each session's
+/// token stream, in admission order.
+fn run_sessions(
+    reg: &Registry,
+    config: EngineConfig,
+    sessions: usize,
+    prompt: &[usize],
+    tokens: usize,
+) -> Vec<Vec<usize>> {
+    let mut se = ServingEngine::new(reg, ServeConfig { engine: config, max_concurrent: sessions })
+        .expect("serving engine");
+    se.reseed(SEED);
+    for i in 0..sessions {
+        // Vary prompts slightly so cross-session buffer reuse bugs show.
+        let mut p = prompt.to_vec();
+        p[0] = (p[0] + i) % 500;
+        se.submit(&p, tokens).expect("submit");
+    }
+    se.run_to_completion().expect("serve");
+    se.drain_finished().into_iter().map(|s| s.tokens).collect()
+}
+
+/// Acceptance: planned execution produces token streams bit-identical to
+/// eager execution for every built-in workload (fused and unfused), at 1
+/// and 4 concurrent sessions.
+#[test]
+fn planned_matches_eager_across_workloads_fusion_sessions() {
+    let reg = registry();
+    let prompt = vec![72usize, 101, 108];
+    let tokens = 4;
+    for wl in decode_workloads() {
+        for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+            for sessions in [1usize, 4] {
+                let eager = run_sessions(
+                    &reg,
+                    cfg(wl.dims, fusion, ExecMode::Eager),
+                    sessions,
+                    &prompt,
+                    tokens,
+                );
+                let planned = run_sessions(
+                    &reg,
+                    cfg(wl.dims, fusion, ExecMode::Planned),
+                    sessions,
+                    &prompt,
+                    tokens,
+                );
+                assert_eq!(
+                    eager, planned,
+                    "{} {:?} N={sessions}: planned diverged from eager",
+                    wl.name, fusion
+                );
+            }
+        }
+    }
+}
+
+/// Planned mode with varying dispatches_per_submit still matches eager —
+/// encoder batching is a pure scheduling transform.
+#[test]
+fn encoder_batching_preserves_tokens() {
+    let reg = registry();
+    let prompt = ByteTokenizer::new(512).paper_prompt();
+    let dims = GraphDims::qwen_tiny();
+    let mut base = Engine::new(&reg, cfg(dims, FusionConfig::fused(), ExecMode::Eager)).unwrap();
+    let expect = base.generate(&prompt, 6).unwrap().tokens;
+    for dps in [1usize, 2, 7, 64, 10_000] {
+        let mut c = cfg(dims, FusionConfig::fused(), ExecMode::Planned);
+        c.dispatches_per_submit = dps;
+        let mut e = Engine::new(&reg, c).unwrap();
+        let got = e.generate(&prompt, 6).unwrap().tokens;
+        assert_eq!(got, expect, "dps={dps}");
+    }
+}
+
+/// Batching N dispatches per encoder must reduce submits (the paper's
+/// encoder-batching axis) without changing dispatch count.
+#[test]
+fn encoder_batching_reduces_submits() {
+    let reg = registry();
+    let prompt = vec![65usize];
+    let dims = GraphDims::qwen_tiny();
+    let run = |dps: usize| {
+        let mut c = cfg(dims, FusionConfig::fused(), ExecMode::Planned);
+        c.dispatches_per_submit = dps;
+        let mut e = Engine::new(&reg, c).unwrap();
+        let _ = e.generate(&prompt, 3).unwrap();
+        (e.executor.device.stats.submits, e.executor.dispatch_count)
+    };
+    let (s1, d1) = run(1);
+    let (s16, d16) = run(16);
+    assert_eq!(d1, d16, "same dispatches either way");
+    assert!(
+        s16 * 8 < s1,
+        "16 dispatches/submit must cut submits ~16x: {s16} vs {s1}"
+    );
+}
+
+/// Aliasing safety: no two live value intervals share an arena slot.
+#[test]
+fn no_overlapping_intervals_share_an_arena_slot() {
+    let reg = registry();
+    for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+        let se = ServingEngine::new(
+            &reg,
+            ServeConfig {
+                engine: cfg(GraphDims::qwen_tiny(), fusion, ExecMode::Planned),
+                max_concurrent: 1,
+            },
+        )
+        .unwrap();
+        let plan = se.executor.plan().expect("planned engine has a plan");
+        let a = &plan.arena.assignments;
+        assert!(!a.is_empty());
+        for (i, x) in a.iter().enumerate() {
+            for y in &a[i + 1..] {
+                if x.slot == y.slot {
+                    assert!(
+                        x.interval.disjoint(y.interval),
+                        "{fusion:?}: values {} and {} share slot {} with \
+                         overlapping intervals {:?} / {:?}",
+                        x.value,
+                        y.value,
+                        x.slot,
+                        x.interval,
+                        y.interval
+                    );
+                }
+            }
+        }
+        // Aliasing must actually save memory vs one-buffer-per-value.
+        assert!(plan.stats.arena_bytes < plan.stats.unaliased_bytes, "{fusion:?}");
+    }
+}
+
+/// The replay hot loop is resource-allocation-free: after the first
+/// generate, further tokens create zero buffers and zero bind groups.
+#[test]
+fn planned_replay_creates_no_resources() {
+    let reg = registry();
+    let prompt = vec![66usize, 67];
+    let mut e = Engine::new(
+        &reg,
+        cfg(GraphDims::qwen_tiny(), FusionConfig::fused(), ExecMode::Planned),
+    )
+    .unwrap();
+    let _ = e.generate(&prompt, 2).unwrap();
+    let bufs0 = e.executor.device.stats.buffers_created;
+    let groups0 = e.executor.device.stats.bind_groups_created;
+    let _ = e.generate(&prompt, 8).unwrap();
+    assert_eq!(e.executor.device.stats.buffers_created, bufs0, "buffers leaked");
+    assert_eq!(
+        e.executor.device.stats.bind_groups_created, groups0,
+        "bind groups created during replay"
+    );
+    assert_eq!(e.executor.device.stats.validation_errors, 0);
+}
+
+/// Eager mode's warmed bind-group cache also stops creating groups (the
+/// no-alloc bind path satellite): steady-state steps are pure cache hits.
+#[test]
+fn eager_bind_cache_reaches_steady_state() {
+    let reg = registry();
+    let prompt = vec![70usize];
+    let mut e = Engine::new(
+        &reg,
+        cfg(GraphDims::qwen_tiny(), FusionConfig::fused(), ExecMode::Eager),
+    )
+    .unwrap();
+    let _ = e.generate(&prompt, 3).unwrap();
+    let groups0 = e.executor.device.stats.bind_groups_created;
+    let _ = e.generate(&prompt, 6).unwrap();
+    assert_eq!(
+        e.executor.device.stats.bind_groups_created, groups0,
+        "steady-state eager steps must hit the bind-group cache"
+    );
+}
+
+/// Planned framework overhead per op must be at least 2x below eager
+/// (acceptance criterion; defaults give ~35x).
+#[test]
+fn planned_framework_overhead_at_least_2x_lower() {
+    let reg = registry();
+    let prompt = ByteTokenizer::new(512).paper_prompt();
+    let fw_per_op = |exec: ExecMode| {
+        let mut e =
+            Engine::new(&reg, cfg(GraphDims::qwen_tiny(), FusionConfig::fused(), exec)).unwrap();
+        e.reseed(SEED);
+        let _ = e.generate(&prompt, 6).unwrap();
+        e.executor.framework_virtual_ns as f64 / e.executor.dispatch_count.max(1) as f64
+    };
+    let eager = fw_per_op(ExecMode::Eager);
+    let planned = fw_per_op(ExecMode::Planned);
+    assert!(
+        eager >= 2.0 * planned,
+        "planned framework/op {planned} not >= 2x below eager {eager}"
+    );
+}
+
+/// Plan-build cost is attributed separately from replay cost.
+#[test]
+fn plan_build_vs_replay_attribution() {
+    let reg = registry();
+    let prompt = vec![65usize, 66];
+    let mut se = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: EngineConfig::tiny_planned(), max_concurrent: 1 },
+    )
+    .unwrap();
+    se.submit(&prompt, 3).unwrap();
+    let report = se.run_to_completion().unwrap();
+    assert!(report.planned);
+    assert!(report.plan_build_virtual_ns > 0, "bind-group creation is build cost");
+    assert!(report.plan_build_real_ns > 0);
+    assert!(report.encode_virtual_ns > 0, "replay cost attributed per session");
+    // Eager runs report no build cost.
+    let mut se2 = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: EngineConfig::tiny_fused(), max_concurrent: 1 },
+    )
+    .unwrap();
+    se2.submit(&prompt, 3).unwrap();
+    let r2 = se2.run_to_completion().unwrap();
+    assert!(!r2.planned);
+    assert_eq!(r2.plan_build_virtual_ns, 0);
+}
+
+/// Bounded pool: a tiny cap fails fast instead of growing silently; a
+/// generous cap reports high-water/creation stats in the serving report.
+#[test]
+fn pool_cap_errors_and_stats_surface() {
+    let reg = registry();
+    let mut small = EngineConfig::tiny_fused();
+    small.pool_cap_bytes = Some(1024); // far below one decode step's needs
+    let mut e = Engine::new(&reg, small).unwrap();
+    let err = e.generate(&[65], 2);
+    assert!(err.is_err(), "tiny pool cap must error, got {err:?}");
+
+    let mut big = EngineConfig::tiny_fused();
+    big.pool_cap_bytes = Some(64 << 20);
+    let mut se =
+        ServingEngine::new(&reg, ServeConfig { engine: big, max_concurrent: 2 }).unwrap();
+    se.submit(&[65, 66], 3).unwrap();
+    se.submit(&[70, 71], 3).unwrap();
+    let report = se.run_to_completion().unwrap();
+    assert!(report.pool_high_water_bytes > 0);
+    assert!(report.pool_buffers_created > 0);
+    assert!(report.pool_high_water_bytes <= 64 << 20);
+}
+
+/// Planned serving still amortizes the per-round sync and keeps the
+/// N-session token streams independent (ring isolation).
+#[test]
+fn planned_sessions_are_ring_isolated() {
+    let reg = registry();
+    let tokens = 5;
+    let prompts: Vec<Vec<usize>> = vec![vec![65, 66], vec![90, 91, 92], vec![120], vec![33, 34]];
+    // Sequential single-session truth.
+    let mut expect = Vec::new();
+    for p in &prompts {
+        let mut e = Engine::new(&reg, EngineConfig::tiny_planned()).unwrap();
+        expect.push(e.generate(p, tokens).unwrap().tokens);
+    }
+    // Interleaved 4-session run over ONE shared plan.
+    let mut se = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: EngineConfig::tiny_planned(), max_concurrent: 4 },
+    )
+    .unwrap();
+    let mut ids = Vec::new();
+    for p in &prompts {
+        ids.push(se.submit(p, tokens).unwrap());
+    }
+    se.run_to_completion().unwrap();
+    let done = se.drain_finished();
+    for (i, id) in ids.iter().enumerate() {
+        let s = done.iter().find(|s| s.id == *id).expect("finished");
+        assert_eq!(
+            s.tokens, expect[i],
+            "session {i} corrupted by shared-plan interleaving"
+        );
+    }
+}
+
+/// Public encode/finish API with overlapping deferred readbacks: two
+/// sessions encoded back-to-back before either finishes must land in
+/// distinct logits-ring buffers (the ring cursor), not clobber each other.
+#[test]
+fn public_encode_finish_interleave_is_ring_safe() {
+    let reg = registry();
+    // Sequential single-session truth.
+    let mut ea = Engine::new(&reg, EngineConfig::tiny_planned()).unwrap();
+    let ta = ea.generate(&[65], 3).unwrap().tokens;
+    let mut eb = Engine::new(&reg, EngineConfig::tiny_planned()).unwrap();
+    let tb = eb.generate(&[90], 3).unwrap().tokens;
+
+    let mut se = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: EngineConfig::tiny_planned(), max_concurrent: 2 },
+    )
+    .unwrap();
+    let mut a = se.create_session(vec![65], 3, 10);
+    let mut b = se.create_session(vec![90], 3, 11);
+    while !(a.finished() && b.finished()) {
+        // Both encodes outstanding before either finish: the deferred
+        // logits readbacks overlap.
+        let (tok_a, pa) = a.take_input().expect("a input");
+        let ha = se.encode_session(&mut a, tok_a, pa).unwrap();
+        let (tok_b, pb) = b.take_input().expect("b input");
+        let hb = se.encode_session(&mut b, tok_b, pb).unwrap();
+        se.finish_session(&mut a, ha).unwrap();
+        se.finish_session(&mut b, hb).unwrap();
+    }
+    assert_eq!(a.tokens, ta, "session A clobbered by overlapping encode");
+    assert_eq!(b.tokens, tb, "session B clobbered by overlapping encode");
+}
+
+/// The planner rejects nothing the builder emits: every fusion preset of
+/// every workload compiles and the plan step count matches the graph.
+#[test]
+fn every_preset_compiles_to_a_plan() {
+    let reg = registry();
+    for wl in decode_workloads() {
+        for fusion in [
+            FusionConfig::unfused(),
+            FusionConfig::rmsnorm_only(),
+            FusionConfig::rmsnorm_mlp(),
+            FusionConfig::rmsnorm_mlp_kv(),
+            FusionConfig::fused(),
+        ] {
+            let se = ServingEngine::new(
+                &reg,
+                ServeConfig {
+                    engine: cfg(wl.dims, fusion, ExecMode::Planned),
+                    max_concurrent: 1,
+                },
+            )
+            .unwrap_or_else(|e| panic!("{} {fusion:?}: {e}", wl.name));
+            let g = build_decode_graph(&wl.dims, fusion);
+            let plan = se.executor.plan().unwrap();
+            assert_eq!(plan.stats.kernel_steps, g.dispatch_count(), "{} {fusion:?}", wl.name);
+        }
+    }
+}
