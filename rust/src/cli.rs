@@ -94,6 +94,19 @@ pub fn profile_by_name(name: &str) -> Result<ImplementationProfile> {
     })
 }
 
+pub fn exec_mode_by_name(name: &str) -> Result<crate::engine::ExecMode> {
+    use crate::engine::ExecMode;
+    Ok(match name {
+        "eager" => ExecMode::Eager,
+        "planned" => ExecMode::Planned,
+        other => {
+            return Err(Error::Graph(format!(
+                "unknown exec mode '{other}' (eager|planned)"
+            )))
+        }
+    })
+}
+
 pub fn fusion_by_name(name: &str) -> Result<FusionConfig> {
     Ok(match name {
         "unfused" => FusionConfig::unfused(),
@@ -149,11 +162,14 @@ Commands:
   workloads                       CNN/ViT/U-Net dispatch streams (Table 1*)
   batch-sweep [--reps 5]          empirical crossover validation (App. F)
   serve [--requests 16] [--tokens 10] [--profile dawn]
-                                  FIFO request loop over the real engine
+        [--exec-mode planned]     FIFO request loop over the real engine
+                                  (planned replay + resident KV caches is
+                                  the serving default; eager opt-in)
   serve-bench [--sessions 1,2,4,8] [--tokens 16] [--profile dawn]
-              [--out DIR]         multi-session serving scaling table:
+              [--exec-mode planned] [--out DIR]
+                                  multi-session serving scaling table:
                                   aggregate tok/s + per-phase attribution
-                                  vs concurrent session count
+                                  + upload/resident bytes vs session count
   plan-bench [--tokens 8] [--dps 16] [--profile dawn] [--out DIR]
                                   table P1: eager vs planned per-op
                                   framework overhead across workloads x
@@ -432,9 +448,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.flag_usize("requests", 16);
     let tokens = args.flag_usize("tokens", 10);
     let profile = profile_by_name(args.flag("profile").unwrap_or("dawn"))?;
+    // Planned replay with device-resident KV caches is the serving
+    // default; --exec-mode eager keeps the pathology path benchmarkable.
+    let exec = match args.flag("exec-mode") {
+        Some(m) => exec_mode_by_name(m)?,
+        None => crate::engine::ExecMode::serving_default(),
+    };
     let mut engine = Engine::new(
         &registry,
-        EngineConfig { profile: profile.clone(), ..EngineConfig::tiny_fused() },
+        EngineConfig { profile: profile.clone(), exec, ..EngineConfig::tiny_fused() },
     )?;
     let tok = ByteTokenizer::new(registry.config("qwen-tiny")?.vocab);
 
@@ -446,7 +468,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     println!(
         "Serving {n_requests} requests x {tokens} tokens, batch=1 FIFO, \
-         profile {}\n",
+         profile {}, exec mode {exec:?}\n",
         profile.name
     );
     let wall0 = Instant::now();
@@ -497,12 +519,17 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let tokens = args.flag_usize("tokens", 16);
     let profile = profile_by_name(args.flag("profile").unwrap_or("dawn"))?;
     let counts = parse_session_counts(args.flag("sessions").unwrap_or("1,2,4,8"))?;
+    let exec = match args.flag("exec-mode") {
+        Some(m) => exec_mode_by_name(m)?,
+        None => crate::engine::ExecMode::serving_default(),
+    };
     let tok = ByteTokenizer::new(registry.config("qwen-tiny")?.vocab);
     let prompt = tok.paper_prompt();
-    let ec = EngineConfig { profile: profile.clone(), ..EngineConfig::tiny_fused() };
+    let ec = EngineConfig { profile: profile.clone(), exec, ..EngineConfig::tiny_fused() };
 
     println!(
-        "Serving scaling bench: {} tokens/session, prompt {} tokens, profile {}\n",
+        "Serving scaling bench: {} tokens/session, prompt {} tokens, profile {}, \
+         exec mode {exec:?}\n",
         tokens,
         prompt.len(),
         profile.name
@@ -548,8 +575,15 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 
     if let Some(out) = args.flag("out") {
         let dir = std::path::PathBuf::from(out);
+        // Mode-qualified names: planned + eager runs into one --out dir
+        // must not overwrite each other's trend data.
+        let mode = match exec {
+            crate::engine::ExecMode::Eager => "eager",
+            crate::engine::ExecMode::Planned => "planned",
+        };
         for t in [&scaling, &phases] {
-            let path = write_results(&dir, &format!("serve_bench_{}", t.id), &t.to_json())?;
+            let path =
+                write_results(&dir, &format!("serve_bench_{}_{mode}", t.id), &t.to_json())?;
             eprintln!("wrote {}", path.display());
         }
     }
@@ -666,6 +700,9 @@ fn cmd_plan_bench(args: &Args) -> Result<()> {
                 planned_replay_us_per_step: p_rep.encode_virtual_ns as f64
                     / 1e3
                     / p_rep.steps.max(1) as f64,
+                eager_upload_bytes_per_step: e_rep.upload_bytes_per_step(),
+                planned_upload_bytes_per_step: p_rep.upload_bytes_per_step(),
+                resident_kib: p_rep.resident_bytes as f64 / 1024.0,
                 eager_tok_per_s: e_rep.agg_tok_per_s,
                 planned_tok_per_s: p_rep.agg_tok_per_s,
                 tokens_match: e_toks == p_toks,
@@ -675,6 +712,14 @@ fn cmd_plan_bench(args: &Args) -> Result<()> {
 
     let table = plan_table(&rows);
     println!("{}", table.to_markdown());
+
+    // Persist the trend artifacts BEFORE the acceptance gates: a failing
+    // run is exactly when CI needs the JSON to diagnose the regression.
+    if let Some(out) = args.flag("out") {
+        let dir = std::path::PathBuf::from(out);
+        let path = write_results(&dir, "plan_bench_P1", &table.to_json())?;
+        eprintln!("wrote {}", path.display());
+    }
 
     for r in &rows {
         if !r.tokens_match {
@@ -695,12 +740,20 @@ fn cmd_plan_bench(args: &Args) -> Result<()> {
             d.eager_fw_us_per_op,
             d.ratio()
         );
-    }
-
-    if let Some(out) = args.flag("out") {
-        let dir = std::path::PathBuf::from(out);
-        let path = write_results(&dir, "plan_bench_P1", &table.to_json())?;
-        eprintln!("wrote {}", path.display());
+        println!(
+            "resident KV caches: per-step host upload {:.0} B -> {:.0} B — {:.0}x \
+             smaller (acceptance bar: >= 10x), {:.0} KiB resident per session",
+            r.eager_upload_bytes_per_step,
+            r.planned_upload_bytes_per_step,
+            r.upload_shrink(),
+            r.resident_kib
+        );
+        if r.upload_shrink() < 10.0 {
+            return Err(Error::Graph(format!(
+                "upload-bytes shrink {:.1}x below the 10x acceptance bar",
+                r.upload_shrink()
+            )));
+        }
     }
     Ok(())
 }
@@ -739,6 +792,15 @@ mod tests {
             assert!(profile_by_name(name).is_ok(), "{name}");
         }
         assert!(profile_by_name("opera").is_err());
+    }
+
+    #[test]
+    fn exec_mode_names_resolve_and_serving_defaults_planned() {
+        use crate::engine::ExecMode;
+        assert_eq!(exec_mode_by_name("eager").unwrap(), ExecMode::Eager);
+        assert_eq!(exec_mode_by_name("planned").unwrap(), ExecMode::Planned);
+        assert!(exec_mode_by_name("jit").is_err());
+        assert_eq!(ExecMode::serving_default(), ExecMode::Planned);
     }
 
     #[test]

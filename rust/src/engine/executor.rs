@@ -26,7 +26,9 @@ use std::time::Instant;
 
 use crate::fx::graph::FxGraph;
 use crate::fx::node::{HostOp, OpKind, ValueId};
-use crate::plan::{ExecutionPlan, PipelinePool, PlanConfig, PlanRunner, Planner};
+use crate::plan::{
+    CacheArena, DeviceKvCache, ExecutionPlan, PipelinePool, PlanConfig, PlanRunner, Planner,
+};
 use crate::runtime::hostops;
 use crate::runtime::registry::Registry;
 use crate::tensor::Tensor;
@@ -64,6 +66,9 @@ pub struct GraphExecutor<'r> {
     borrowed_scratch: Vec<(usize, BufferId)>,
     /// Planned-mode state: present after [`GraphExecutor::enable_plan`].
     planned: Option<PlanRunner>,
+    /// Session KV-cache allocator (planned mode with persistent values):
+    /// allocates each session's device-resident cache set from `pool`.
+    kv_arena: Option<CacheArena>,
     /// Per-op framework overhead (virtual ns) charged in eager mode — the
     /// "Python/framework" component of the paper's ~95 us per-op cost.
     pub framework_ns_per_op: u64,
@@ -88,6 +93,7 @@ impl<'r> GraphExecutor<'r> {
             out_scratch: Vec::new(),
             borrowed_scratch: Vec::new(),
             planned: None,
+            kv_arena: None,
             framework_ns_per_op,
             dispatch_count: 0,
             framework_virtual_ns: 0,
@@ -137,12 +143,65 @@ impl<'r> GraphExecutor<'r> {
         let mut runner = PlanRunner::materialize(&mut self.device, plan)?;
         runner.build_virtual_ns = self.device.clock.now_ns() - v0;
         runner.build_real_ns = t0.elapsed().as_nanos() as u64;
+        self.kv_arena = Some(CacheArena::new(runner.plan.persistent.clone()));
         self.planned = Some(runner);
         Ok(())
     }
 
     pub fn plan_runner(&self) -> Option<&PlanRunner> {
         self.planned.as_ref()
+    }
+
+    pub fn kv_arena(&self) -> Option<&CacheArena> {
+        self.kv_arena.as_ref()
+    }
+
+    /// Allocate a zeroed device-resident cache set for one session from
+    /// the shared bounded pool and register its bind groups with the plan
+    /// runner. Planned mode only.
+    pub fn alloc_kv_cache(&mut self) -> Result<DeviceKvCache> {
+        let GraphExecutor { device, pool, kv_arena, planned, .. } = self;
+        let arena = kv_arena
+            .as_mut()
+            .ok_or_else(|| Error::Graph("no plan enabled: cannot allocate KV cache".into()))?;
+        let cache = arena.allocate(device, pool)?;
+        if let Some(runner) = planned.as_mut() {
+            runner.register_cache(device, &cache)?;
+        }
+        Ok(cache)
+    }
+
+    /// Return a session's cache set to the pool (retire/reset path). The
+    /// runner's bind groups stay cached so a recycled set is free to
+    /// re-register.
+    pub fn release_kv_cache(&mut self, cache: DeviceKvCache) -> Result<()> {
+        let arena = self
+            .kv_arena
+            .as_mut()
+            .ok_or_else(|| Error::Graph("no plan enabled: cannot release KV cache".into()))?;
+        arena.release(&mut self.pool, cache)
+    }
+
+    /// Spill a session's device-resident caches to host tensors (spec
+    /// order) — the evict half of the spill path. Pays the coalesced
+    /// readback's sync + transfer cost.
+    pub fn spill_kv_cache(&mut self, cache: &DeviceKvCache) -> Result<Vec<Tensor>> {
+        let GraphExecutor { device, kv_arena, .. } = self;
+        let arena = kv_arena
+            .as_ref()
+            .ok_or_else(|| Error::Graph("no plan enabled: cannot spill KV cache".into()))?;
+        arena.spill_to_host(device, cache)
+    }
+
+    /// Upload host cache tensors (spec order) into a session's cache set —
+    /// the restore half of the spill path. By reference: no host-side copy
+    /// of the KV state, just the upload.
+    pub fn hydrate_kv_cache(&mut self, cache: &DeviceKvCache, tensors: &[&Tensor]) -> Result<()> {
+        let GraphExecutor { device, kv_arena, .. } = self;
+        let arena = kv_arena
+            .as_ref()
+            .ok_or_else(|| Error::Graph("no plan enabled: cannot hydrate KV cache".into()))?;
+        arena.upload_from_host(device, cache, tensors)
     }
 
     pub fn plan(&self) -> Option<&ExecutionPlan> {
@@ -174,6 +233,19 @@ impl<'r> GraphExecutor<'r> {
         inputs: &HashMap<String, Tensor>,
         ring_idx: usize,
     ) -> Result<(HashMap<String, Tensor>, Option<BufferId>)> {
+        self.run_with_session(graph, inputs, ring_idx, None)
+    }
+
+    /// `run_with_ring` plus the session's device-resident cache set —
+    /// required in planned mode when the plan carries persistent values
+    /// (KV caches). Eager mode ignores both extras.
+    pub fn run_with_session(
+        &mut self,
+        graph: &FxGraph,
+        inputs: &HashMap<String, Tensor>,
+        ring_idx: usize,
+        kv: Option<&DeviceKvCache>,
+    ) -> Result<(HashMap<String, Tensor>, Option<BufferId>)> {
         if self.planned.is_some() {
             let GraphExecutor {
                 device, registry, planned, dispatch_count, framework_virtual_ns, ..
@@ -190,7 +262,8 @@ impl<'r> GraphExecutor<'r> {
                     runner.plan.fingerprint
                 )));
             }
-            let (outs, logits_buf, delta) = runner.replay(device, *registry, inputs, ring_idx)?;
+            let (outs, logits_buf, delta) =
+                runner.replay(device, *registry, inputs, ring_idx, kv)?;
             *dispatch_count += delta.dispatches;
             *framework_virtual_ns += delta.framework_ns;
             return Ok((outs, logits_buf));
@@ -242,7 +315,11 @@ impl<'r> GraphExecutor<'r> {
                 OpKind::Host(op) => {
                     run_host(&node.name, *op, &node.inputs, &node.outputs, &mut values)?;
                 }
-                OpKind::Kernel(kname) => {
+                // Eager mode executes in-place kernels functionally: the
+                // output materializes in a fresh pooled buffer and round-
+                // trips through the host like any other value — exactly
+                // the per-step cache traffic the paper's pathology pays.
+                OpKind::Kernel(kname) | OpKind::InPlaceKernel(kname) => {
                     // (1) framework overhead — Python interpreter / tensor
                     // metadata cost in torch-webgpu (drifted per run).
                     let fw = device.drifted_cost(*framework_ns_per_op);

@@ -33,8 +33,18 @@ pub enum ExecMode {
     /// torch-webgpu pathology the paper characterizes.
     Eager,
     /// Compile-once [`crate::plan::ExecutionPlan`] replayed per token:
-    /// device-resident values, lifetime-aliased arena, encoder batching.
+    /// device-resident values + per-session KV caches, lifetime-aliased
+    /// arena, encoder batching.
     Planned,
+}
+
+impl ExecMode {
+    /// The serving-path default (`wdb serve` / `serve-bench`): planned
+    /// replay with device-resident caches. The single-request bench path
+    /// (`wdb e2e`) stays eager so the paper's pathology stays measurable.
+    pub fn serving_default() -> Self {
+        ExecMode::Planned
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -94,6 +104,13 @@ impl EngineConfig {
     pub fn tiny_planned() -> Self {
         EngineConfig { exec: ExecMode::Planned, ..Self::tiny_fused() }
     }
+
+    /// The serving default: planned replay with device-resident KV caches.
+    /// Eager stays [`EngineConfig::tiny_fused`]'s default so the paper's
+    /// per-op pathology remains directly measurable (`wdb e2e`).
+    pub fn tiny_serving() -> Self {
+        EngineConfig { exec: ExecMode::serving_default(), ..Self::tiny_fused() }
+    }
 }
 
 /// One generation run's measurements.
@@ -151,9 +168,15 @@ impl<'r> Engine<'r> {
         Ok(Engine { serving, session })
     }
 
-    /// Drop all decode state (KV caches, position, token history).
-    pub fn reset(&mut self) {
-        self.session = self.serving.create_session(Vec::new(), usize::MAX, 0);
+    /// Drop all decode state (KV caches, position, token history). A
+    /// device-resident cache set goes back to the shared pool first — a
+    /// fresh session re-allocates a zeroed set from the recycled buffers.
+    pub fn reset(&mut self) -> Result<()> {
+        let mut old = std::mem::replace(
+            &mut self.session,
+            self.serving.create_session(Vec::new(), usize::MAX, 0),
+        );
+        self.serving.release_session_cache(&mut old)
     }
 
     /// Reseed the virtual-cost jitter (independent benchmark runs).
@@ -174,7 +197,14 @@ impl<'r> Engine<'r> {
             return Err(Error::Graph("prompt and n_new must be non-empty".into()));
         }
         let wall0 = Instant::now();
-        self.session = self.serving.create_session(prompt.to_vec(), n_new, 0);
+        // Release the previous session's device cache set before replacing
+        // it, so back-to-back generates recycle the same pooled buffers
+        // instead of leaking a cache set per run.
+        let mut old = std::mem::replace(
+            &mut self.session,
+            self.serving.create_session(prompt.to_vec(), n_new, 0),
+        );
+        self.serving.release_session_cache(&mut old)?;
         while !self.session.finished() {
             let (token, was_prompt) = self
                 .session

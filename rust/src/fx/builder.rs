@@ -289,6 +289,10 @@ pub fn build_decode_graph(dims: &GraphDims, fusion: FusionConfig) -> FxGraph {
         let wd = b.g.input(&format!("{p}.wd"));
         let k_cache_in = b.g.input(&format!("{p}.k_cache"));
         let v_cache_in = b.g.input(&format!("{p}.v_cache"));
+        // KV caches are persistent session state, not per-step I/O: planners
+        // bind them to session-owned device buffers and append in place.
+        b.g.mark_persistent(&format!("{p}.k_cache"));
+        b.g.mark_persistent(&format!("{p}.v_cache"));
 
         // ---- attention ----
         let hn = b.rmsnorm(&format!("{p}.norm1"), x, norm1_w, fusion.rmsnorm);
@@ -359,13 +363,13 @@ pub fn build_decode_graph(dims: &GraphDims, fusion: FusionConfig) -> FxGraph {
         let q_rot = b.rotary(&format!("{p}.rope_q"), qh, cos, sin, dims.heads, fusion.rotary);
         let k_rot = b.rotary(&format!("{p}.rope_k"), kh, cos, sin, dims.kv_heads, fusion.rotary);
 
-        let k_cache = b.g.kernel(
+        let k_cache = b.g.in_place_kernel(
             &format!("{p}.k_cache_update"),
             &format!("cache_update_{suffix}"),
             Category::Concat,
             vec![k_cache_in, k_rot, pos_i],
         );
-        let v_cache = b.g.kernel(
+        let v_cache = b.g.in_place_kernel(
             &format!("{p}.v_cache_update"),
             &format!("cache_update_{suffix}"),
             Category::Concat,
@@ -569,5 +573,22 @@ mod tests {
             assert!(g.outputs.contains_key(&format!("l{l}.v_cache")));
         }
         assert!(g.outputs.contains_key("logits"));
+    }
+
+    #[test]
+    fn caches_are_persistent_and_updated_in_place() {
+        let dims = GraphDims::qwen_tiny();
+        for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+            let g = build_decode_graph(&dims, fusion);
+            // Layer-major persistent declaration order: l0.k, l0.v, l1.k, ...
+            let expect: Vec<String> = (0..dims.layers)
+                .flat_map(|l| [format!("l{l}.k_cache"), format!("l{l}.v_cache")])
+                .collect();
+            assert_eq!(g.persistent, expect, "{fusion:?}");
+            let in_place = g.nodes.iter().filter(|n| n.in_place()).count();
+            assert_eq!(in_place, 2 * dims.layers, "{fusion:?}");
+            // In-place nodes do not change the dispatch arithmetic.
+            assert_eq!(g.dispatch_count(), expected_dispatches(&dims, fusion));
+        }
     }
 }

@@ -98,6 +98,15 @@ impl Census {
     pub fn fused_dispatches(&self) -> usize {
         self.unfused_dispatches() - self.paper_fusion_savings().total()
     }
+
+    /// KV-cache appends per decode step (2 per layer, inside the Concat
+    /// row). In the executable graph these are the *in-place*
+    /// `cache_update` dispatches: they stay dispatches in every fusion
+    /// config (no fusion removes them), but with device-resident caches
+    /// they stop generating any per-step host traffic.
+    pub fn cache_appends(&self) -> usize {
+        2 * self.layers
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -155,6 +164,18 @@ mod tests {
         let c05 = Census::for_dims(&GraphDims::qwen25_05b());
         let ratio = c.fused_dispatches() as f64 / c05.fused_dispatches() as f64;
         assert!((ratio - 28.0 / 24.0).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn cache_appends_match_executable_in_place_nodes() {
+        use crate::fx::builder::{build_decode_graph, FusionConfig};
+        let dims = GraphDims::qwen_tiny();
+        let c = Census::for_dims(&dims);
+        let g = build_decode_graph(&dims, FusionConfig::fused());
+        let in_place = g.nodes.iter().filter(|n| n.in_place()).count();
+        assert_eq!(c.cache_appends(), in_place);
+        // They are a strict subset of the Concat census row.
+        assert!(c.cache_appends() <= c.compute.concat);
     }
 
     #[test]

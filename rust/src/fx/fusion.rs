@@ -39,8 +39,10 @@ fn producers(g: &FxGraph) -> HashMap<ValueId, usize> {
 
 fn kernel_name(n: &Node) -> &str {
     match &n.op {
+        // In-place kernels (cache updates) are never fusion candidates:
+        // return "" so no pattern matches them.
         OpKind::Kernel(k) => k,
-        OpKind::Host(_) => "",
+        OpKind::InPlaceKernel(_) | OpKind::Host(_) => "",
     }
 }
 
@@ -52,6 +54,7 @@ fn splice(g: &FxGraph, dead: &[bool], replacements: HashMap<usize, Vec<Node>>) -
         n_values: g.n_values,
         inputs: g.inputs.clone(),
         outputs: g.outputs.clone(),
+        persistent: g.persistent.clone(),
     };
     for (i, n) in g.nodes.iter().enumerate() {
         if let Some(reps) = replacements.get(&i) {

@@ -13,6 +13,13 @@ pub struct FxGraph {
     pub inputs: HashMap<String, ValueId>,
     /// Named outputs (logits, updated caches).
     pub outputs: HashMap<String, ValueId>,
+    /// Inputs that are *persistent state* (KV caches): they survive across
+    /// decode steps and may be kept device-resident by a planner instead of
+    /// being re-uploaded per step. Declaration order is preserved — it
+    /// defines the layout of a session's cache set (layer-major for the
+    /// decode builder). Eager executors ignore this and treat them as
+    /// ordinary per-step inputs.
+    pub persistent: Vec<String>,
 }
 
 impl FxGraph {
@@ -39,6 +46,19 @@ impl FxGraph {
         self.outputs.insert(name.to_string(), v);
     }
 
+    /// Declare an existing input as persistent state (see [`FxGraph::persistent`]).
+    pub fn mark_persistent(&mut self, name: &str) {
+        debug_assert!(self.inputs.contains_key(name), "persistent '{name}' is not an input");
+        if !self.persistent.iter().any(|n| n == name) {
+            self.persistent.push(name.to_string());
+        }
+    }
+
+    /// Value ids of the persistent inputs, in declaration order.
+    pub fn persistent_values(&self) -> Vec<ValueId> {
+        self.persistent.iter().map(|n| self.inputs[n]).collect()
+    }
+
     /// Append a kernel node with one output value.
     pub fn kernel(
         &mut self,
@@ -52,6 +72,28 @@ impl FxGraph {
             id: NodeId(self.nodes.len()),
             name: name.to_string(),
             op: OpKind::Kernel(kernel.to_string()),
+            category,
+            inputs,
+            outputs: vec![out],
+        });
+        out
+    }
+
+    /// Append an in-place kernel node: one dispatch whose single output
+    /// updates `inputs[0]`'s storage in place (see
+    /// [`OpKind::InPlaceKernel`]). SSA-wise the output is a fresh value.
+    pub fn in_place_kernel(
+        &mut self,
+        name: &str,
+        kernel: &str,
+        category: Category,
+        inputs: Vec<ValueId>,
+    ) -> ValueId {
+        let out = self.new_value();
+        self.nodes.push(Node {
+            id: NodeId(self.nodes.len()),
+            name: name.to_string(),
+            op: OpKind::InPlaceKernel(kernel.to_string()),
             category,
             inputs,
             outputs: vec![out],
@@ -152,6 +194,43 @@ impl FxGraph {
                 return Err(Error::Graph(format!("output '{name}' never produced")));
             }
         }
+        // In-place discipline: the state operand (input 0) is overwritten by
+        // the node's output, so it must be dead afterwards — no later node
+        // may read it and it must not be a named graph output. (Its SSA
+        // successor — the node's output — carries the updated state.)
+        for (i, node) in self.nodes.iter().enumerate() {
+            if !node.in_place() {
+                continue;
+            }
+            if node.inputs.is_empty() || node.outputs.len() != 1 {
+                return Err(Error::Graph(format!(
+                    "{}: in-place node needs >= 1 input and exactly 1 output",
+                    node.name
+                )));
+            }
+            let state = node.inputs[0];
+            for later in &self.nodes[i + 1..] {
+                if later.inputs.contains(&state) {
+                    return Err(Error::Graph(format!(
+                        "{}: in-place state {:?} read by later node '{}'",
+                        node.name, state, later.name
+                    )));
+                }
+            }
+            if let Some((name, _)) = self.outputs.iter().find(|(_, &v)| v == state) {
+                return Err(Error::Graph(format!(
+                    "{}: in-place state {:?} is graph output '{name}'",
+                    node.name, state
+                )));
+            }
+        }
+        for name in &self.persistent {
+            if !self.inputs.contains_key(name) {
+                return Err(Error::Graph(format!(
+                    "persistent '{name}' is not a graph input"
+                )));
+            }
+        }
         Ok(())
     }
 
@@ -198,6 +277,52 @@ mod tests {
         g.host("r", HostOp::FromHeads, Category::Shape, vec![x], 1);
         assert_eq!(g.dispatch_count(), 0);
         assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn in_place_state_must_be_dead_after_update() {
+        let mut g = FxGraph::new();
+        let cache = g.input("cache");
+        let row = g.input("row");
+        let updated = g.in_place_kernel("upd", "cache_update_t", Category::Concat, vec![cache, row]);
+        // Reading the updated value is fine...
+        let y = g.kernel("use", "sdpa_t", Category::Sdpa, vec![updated]);
+        g.mark_output("out", y);
+        assert!(g.validate().is_ok());
+        // ...but reading the stale pre-update value is not.
+        let mut bad = g.clone();
+        bad.kernel("stale", "k", Category::Other, vec![cache]);
+        assert!(bad.validate().is_err());
+        // Nor is exposing the stale value as a graph output.
+        let mut bad2 = g.clone();
+        bad2.mark_output("stale_cache", cache);
+        assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn in_place_nodes_dispatch_and_report_kernels() {
+        let mut g = FxGraph::new();
+        let c = g.input("c");
+        let v = g.in_place_kernel("u", "cache_update_t", Category::Concat, vec![c]);
+        g.mark_output("c_next", v);
+        assert_eq!(g.dispatch_count(), 1);
+        assert_eq!(g.kernel_names(), vec!["cache_update_t".to_string()]);
+        assert!(g.nodes[0].in_place());
+    }
+
+    #[test]
+    fn persistent_inputs_keep_declaration_order() {
+        let mut g = FxGraph::new();
+        for name in ["l0.k", "l0.v", "l1.k", "l1.v"] {
+            g.input(name);
+            g.mark_persistent(name);
+        }
+        g.mark_persistent("l0.k"); // idempotent
+        assert_eq!(g.persistent, vec!["l0.k", "l0.v", "l1.k", "l1.v"]);
+        assert_eq!(g.persistent_values().len(), 4);
+        let mut bad = g.clone();
+        bad.persistent.push("ghost".into());
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -52,6 +52,14 @@ pub enum HostOp {
 pub enum OpKind {
     /// One WebGPU dispatch running the named AOT kernel.
     Kernel(String),
+    /// One WebGPU dispatch whose *first output updates the first input's
+    /// storage in place*: the SSA output is a fresh value (validation is
+    /// unchanged), but executors may bind output 0 to input 0's buffer
+    /// instead of materializing a copy. This is how KV-cache appends stay
+    /// device-resident in planned mode; eager mode executes it exactly
+    /// like [`OpKind::Kernel`]. The state operand must be dead after this
+    /// node (checked by [`super::graph::FxGraph::validate`]).
+    InPlaceKernel(String),
     /// Host/metadata op — no dispatch.
     Host(HostOp),
 }
@@ -69,13 +77,18 @@ pub struct Node {
 
 impl Node {
     pub fn dispatches(&self) -> bool {
-        matches!(self.op, OpKind::Kernel(_))
+        matches!(self.op, OpKind::Kernel(_) | OpKind::InPlaceKernel(_))
     }
 
     pub fn kernel(&self) -> Option<&str> {
         match &self.op {
-            OpKind::Kernel(k) => Some(k),
+            OpKind::Kernel(k) | OpKind::InPlaceKernel(k) => Some(k),
             OpKind::Host(_) => None,
         }
+    }
+
+    /// True when output 0 updates input 0's storage in place.
+    pub fn in_place(&self) -> bool {
+        matches!(self.op, OpKind::InPlaceKernel(_))
     }
 }

@@ -11,10 +11,14 @@
 //! - [`grid`] — 2-D workgroup tiling (fixes the silent 65_535 clamp).
 //! - [`pipelines`] — shared prepared-pipeline + layout pool.
 //! - [`arena`] — liveness intervals + buffer-lifetime slot aliasing.
+//! - [`residency`] — Transient / StepInput / Persistent value classes and
+//!   the per-session KV-cache arena (session-owned device buffers over
+//!   the bounded pool).
 //! - [`planner`] — graph → plan compilation (value residency, alias
 //!   resolution, binding emission).
 //! - [`runner`] — arena materialization + the allocation-free replay
-//!   hot loop with `dispatches_per_submit` encoder batching.
+//!   hot loop with `dispatches_per_submit` encoder batching and
+//!   per-session persistent bind groups.
 //!
 //! Eager execution stays available ([`crate::engine::GraphExecutor`]'s
 //! default mode) precisely so `wdb plan-bench` can measure the
@@ -24,6 +28,7 @@ pub mod arena;
 pub mod grid;
 pub mod pipelines;
 pub mod planner;
+pub mod residency;
 pub mod runner;
 
 pub use arena::{ArenaLayout, Interval, SlotAssignment};
@@ -33,6 +38,7 @@ pub use planner::{
     Binding, DispatchStep, ExecutionPlan, GraphFingerprint, HostStep, LogitsSpec,
     PlanStats, Planner, Readback, SlotRef, Step, Upload,
 };
+pub use residency::{CacheArena, CacheArenaStats, DeviceKvCache, PersistentSpec, ResidencyClass};
 pub use runner::{PlanRunner, ReplayDelta};
 
 /// Default framework cost per replayed step (virtual ns): the plan walk's

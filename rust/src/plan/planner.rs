@@ -32,6 +32,7 @@ use crate::{Error, Result};
 
 use super::arena::{assign_slots, ArenaLayout, Interval};
 use super::pipelines::PipelinePool;
+use super::residency::{PersistentSpec, ResidencyClass};
 use super::PlanConfig;
 
 /// A resolved byte window in the arena.
@@ -49,6 +50,11 @@ pub enum Binding {
     Arena(SlotRef),
     /// Window over a pinned weight buffer.
     Pinned { buffer: BufferId, offset: usize, size: usize },
+    /// Window over a session-owned persistent buffer (KV cache): `idx`
+    /// selects the buffer from the session's `DeviceKvCache`, substituted
+    /// per session at bind-group-registration time. An in-place
+    /// `cache_update` binds the same `idx` as both input and output.
+    Persistent { idx: usize, offset: usize, size: usize },
     /// The logits output: substituted per replay with a ring buffer so the
     /// deferred synchronizing readback survives later replays.
     Ring,
@@ -123,6 +129,16 @@ pub struct PlanStats {
     pub arena_bytes: usize,
     /// Bytes a no-aliasing layout (one buffer per value) would need.
     pub unaliased_bytes: usize,
+    /// Values in the `Persistent` residency class (session-owned device
+    /// buffers — KV caches; never uploaded or read back per step).
+    pub persistent_values: usize,
+    /// Values in the `StepInput` residency class (per-step host uploads).
+    pub step_inputs: usize,
+    /// Host bytes uploaded per replay (sum of the `StepInput` sizes) —
+    /// the table P1 `upload_bytes` column.
+    pub upload_bytes_per_step: usize,
+    /// Device bytes of one session's persistent cache set.
+    pub resident_bytes: usize,
 }
 
 /// Cheap identity of the graph a plan was compiled from — checked on
@@ -154,6 +170,10 @@ impl GraphFingerprint {
         for node in &graph.nodes {
             match &node.op {
                 OpKind::Kernel(k) => eat(k.as_bytes()),
+                OpKind::InPlaceKernel(k) => {
+                    eat(b"ip:");
+                    eat(k.as_bytes());
+                }
                 OpKind::Host(HostOp::Embed) => eat(b"h:embed"),
                 OpKind::Host(HostOp::SplitKv) => eat(b"h:split_kv"),
                 OpKind::Host(HostOp::ToHeads { heads, head_dim }) => {
@@ -186,6 +206,14 @@ pub struct ExecutionPlan {
     pub arena: ArenaLayout,
     pub uploads: Vec<Upload>,
     pub readbacks: Vec<Readback>,
+    /// Persistent (session-owned, device-resident) values in declaration
+    /// order; `Binding::Persistent { idx }` indexes this list, as does a
+    /// session's `DeviceKvCache::buffers`.
+    pub persistent: Vec<PersistentSpec>,
+    /// Graph outputs that resolve to persistent state: they stay on the
+    /// device (no readback) — callers read the session's cache set via the
+    /// explicit spill path if they need host copies.
+    pub resident_outputs: Vec<(String, usize)>,
     pub logits: Option<LogitsSpec>,
     /// Index into `steps` of the dispatch producing logits.
     pub logits_step: Option<usize>,
@@ -197,10 +225,29 @@ pub struct ExecutionPlan {
     pub stats: PlanStats,
 }
 
+impl ExecutionPlan {
+    /// Residency class of a named graph input in this plan. `None` for
+    /// pinned weights (engine-owned device buffers, outside the three
+    /// session-facing classes) and for names the plan does not know.
+    /// Non-input values are always [`ResidencyClass::Transient`] — they
+    /// live in the plan's lifetime-aliased arena slots.
+    pub fn input_residency(&self, name: &str) -> Option<ResidencyClass> {
+        if self.persistent.iter().any(|p| p.name == name) {
+            Some(ResidencyClass::Persistent)
+        } else if self.uploads.iter().any(|u| u.name == name) {
+            Some(ResidencyClass::StepInput)
+        } else {
+            None
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 enum Kind {
     Unknown,
     Pinned(BufferId),
+    /// Session-owned persistent buffer (index into `ExecutionPlan::persistent`).
+    Persistent(usize),
     Root,
     Alias { root: usize, offset: usize },
 }
@@ -256,6 +303,18 @@ impl<'r> Planner<'r> {
                 None => Kind::Root,
             };
         }
+        // Persistent residency class: session-owned device buffers, bound
+        // per session instead of uploaded per step (declaration order
+        // defines the cache-set layout).
+        for (idx, vid) in graph.persistent_values().iter().enumerate() {
+            if pinned.contains_key(vid) {
+                return Err(Error::Graph(format!(
+                    "persistent input '{}' is also pinned",
+                    graph.persistent[idx]
+                )));
+            }
+            meta[vid.0].kind = Kind::Persistent(idx);
+        }
 
         // Resolve a value to (root value index, byte offset within it).
         fn resolve(meta: &[ValueMeta], v: usize) -> (usize, usize) {
@@ -275,7 +334,7 @@ impl<'r> Planner<'r> {
         for (ni, node) in graph.nodes.iter().enumerate() {
             let step_no = proto.len() + 1;
             match &node.op {
-                OpKind::Kernel(kname) => {
+                OpKind::Kernel(kname) | OpKind::InPlaceKernel(kname) => {
                     let prep = pipelines
                         .get(kname)
                         .ok_or_else(|| Error::Graph(format!("kernel '{kname}' not prepared")))?;
@@ -311,20 +370,48 @@ impl<'r> Planner<'r> {
                             )));
                         }
                         let (root, _) = resolve(&meta, v);
-                        if !matches!(meta[root].kind, Kind::Pinned(_)) {
+                        if !matches!(meta[root].kind, Kind::Pinned(_) | Kind::Persistent(_)) {
                             let u = uses.entry(root).or_insert(0);
                             *u = (*u).max(step_no);
                         }
                     }
-                    for (j, spec) in prep.outputs.iter().enumerate() {
-                        let v = node.outputs[j].0;
-                        meta[v] = ValueMeta {
-                            kind: Kind::Root,
+                    if node.in_place() {
+                        // The single output updates input 0's storage in
+                        // place: it becomes an alias of the persistent
+                        // root, so consumers (sdpa) bind the session's
+                        // cache buffer directly and nothing materializes.
+                        let state = node.inputs[0].0;
+                        let (root, off) = resolve(&meta, state);
+                        if !matches!(meta[root].kind, Kind::Persistent(_)) || off != 0 {
+                            return Err(Error::Graph(format!(
+                                "{}: in-place state must be a whole persistent value",
+                                node.name
+                            )));
+                        }
+                        let spec = &prep.outputs[0];
+                        if spec.shape != meta[root].shape {
+                            return Err(Error::Graph(format!(
+                                "{}: in-place output shape {:?} != state shape {:?}",
+                                node.name, spec.shape, meta[root].shape
+                            )));
+                        }
+                        meta[node.outputs[0].0] = ValueMeta {
+                            kind: Kind::Alias { root, offset: 0 },
                             shape: spec.shape.clone(),
                             dtype: spec.dtype,
                             size: spec.size_bytes(),
                         };
-                        defs.insert(v, step_no);
+                    } else {
+                        for (j, spec) in prep.outputs.iter().enumerate() {
+                            let v = node.outputs[j].0;
+                            meta[v] = ValueMeta {
+                                kind: Kind::Root,
+                                shape: spec.shape.clone(),
+                                dtype: spec.dtype,
+                                size: spec.size_bytes(),
+                            };
+                            defs.insert(v, step_no);
+                        }
                     }
                     proto.push(ProtoStep::Kernel(ni));
                 }
@@ -452,6 +539,7 @@ impl<'r> Planner<'r> {
             }
             logits_root = Some(root);
         }
+        let mut resident_outputs: Vec<(String, usize)> = Vec::new();
         for (name, &vid) in &graph.outputs {
             if Some(vid.0) == logits_vid {
                 continue;
@@ -466,9 +554,16 @@ impl<'r> Planner<'r> {
                     "output '{name}' aliases a pinned weight"
                 )));
             }
+            if let Kind::Persistent(idx) = meta[root].kind {
+                // Device-resident output: lives in the session's cache
+                // buffer, never read back on the hot path.
+                resident_outputs.push((name.clone(), idx));
+                continue;
+            }
             let u = uses.entry(root).or_insert(0);
             *u = (*u).max(n_steps + 1);
         }
+        resident_outputs.sort();
 
         // Liveness roots -> arena slots. Skip pinned values and the
         // ring-backed logits root.
@@ -495,6 +590,7 @@ impl<'r> Planner<'r> {
             let (root, offset) = resolve(meta, v);
             match meta[root].kind {
                 Kind::Pinned(buffer) => Ok(Binding::Pinned { buffer, offset, size }),
+                Kind::Persistent(idx) => Ok(Binding::Persistent { idx, offset, size }),
                 Kind::Root => {
                     if Some(root) == logits_root {
                         return Ok(Binding::Ring);
@@ -516,7 +612,7 @@ impl<'r> Planner<'r> {
                 ProtoStep::Kernel(ni) => {
                     let node = &graph.nodes[ni];
                     let kname = match &node.op {
-                        OpKind::Kernel(k) => k.clone(),
+                        OpKind::Kernel(k) | OpKind::InPlaceKernel(k) => k.clone(),
                         OpKind::Host(_) => unreachable!("proto kernel step is a kernel node"),
                     };
                     let prep = pipelines.get(&kname).expect("prepared above");
@@ -582,8 +678,8 @@ impl<'r> Planner<'r> {
         for name in input_names {
             let vid = graph.inputs[name];
             let m = &meta[vid.0];
-            if matches!(m.kind, Kind::Pinned(_)) || m.size == 0 {
-                continue; // pinned weight or never consumed
+            if matches!(m.kind, Kind::Pinned(_) | Kind::Persistent(_)) || m.size == 0 {
+                continue; // pinned weight, resident cache, or never consumed
             }
             let slot = *arena.value_slot.get(&vid.0).ok_or_else(|| {
                 Error::Graph(format!("input '{name}' has no arena slot"))
@@ -614,6 +710,9 @@ impl<'r> Planner<'r> {
                 continue;
             }
             let (root, offset) = resolve(&meta, vid.0);
+            if matches!(meta[root].kind, Kind::Persistent(_)) {
+                continue; // device-resident, listed in resident_outputs
+            }
             let slot = *arena.value_slot.get(&root).ok_or_else(|| {
                 Error::Graph(format!("output '{name}' has no arena slot"))
             })?;
@@ -628,6 +727,26 @@ impl<'r> Planner<'r> {
             return Err(Error::Graph("logits step not located in plan".into()));
         }
 
+        // Persistent specs, in the graph's declaration order (typed by
+        // their first consumer above).
+        let mut persistent = Vec::with_capacity(graph.persistent.len());
+        for (idx, name) in graph.persistent.iter().enumerate() {
+            let vid = graph.inputs[name];
+            let m = &meta[vid.0];
+            debug_assert!(matches!(m.kind, Kind::Persistent(i) if i == idx));
+            if m.size == 0 {
+                return Err(Error::Graph(format!(
+                    "persistent input '{name}' never consumed (untyped)"
+                )));
+            }
+            persistent.push(PersistentSpec {
+                name: name.clone(),
+                shape: m.shape.clone(),
+                dtype: m.dtype,
+                size: m.size,
+            });
+        }
+
         let stats = PlanStats {
             kernel_steps: steps
                 .iter()
@@ -638,6 +757,10 @@ impl<'r> Planner<'r> {
             arena_slots: arena.slot_sizes.len(),
             arena_bytes: arena.arena_bytes(),
             unaliased_bytes: arena.unaliased_bytes(),
+            persistent_values: persistent.len(),
+            step_inputs: uploads.len(),
+            upload_bytes_per_step: uploads.iter().map(|u| u.dst.size).sum(),
+            resident_bytes: persistent.iter().map(|p| p.size).sum(),
         };
 
         Ok(ExecutionPlan {
@@ -645,6 +768,8 @@ impl<'r> Planner<'r> {
             arena,
             uploads,
             readbacks,
+            persistent,
+            resident_outputs,
             logits,
             logits_step,
             dispatches_per_submit: cfg.dispatches_per_submit.max(1),
@@ -708,7 +833,7 @@ mod tests {
     }
 
     #[test]
-    fn cache_outputs_read_back_logits_ring_backed() {
+    fn caches_resident_uploads_step_inputs_only_logits_ring_backed() {
         // Pin every weight input the way the engine does, so uploads are
         // exactly the per-step values.
         let reg = Registry::builtin().unwrap();
@@ -735,11 +860,71 @@ mod tests {
         let plan = Planner::new(&reg)
             .compile(&mut device, &mut pool, &g, &pinned, &PlanConfig::default())
             .unwrap();
-        assert_eq!(plan.readbacks.len(), 2 * dims.layers); // k/v caches
+        // KV caches are persistent: no per-step readback, no per-step
+        // upload — they live in session-owned buffers and the updated
+        // cache outputs stay device-resident.
+        assert_eq!(plan.readbacks.len(), 0);
+        assert_eq!(plan.stats.persistent_values, 2 * dims.layers);
+        assert_eq!(plan.resident_outputs.len(), 2 * dims.layers);
+        assert_eq!(plan.persistent.len(), 2 * dims.layers);
+        // Layer-major cache-set layout.
+        assert_eq!(plan.persistent[0].name, "l0.k_cache");
+        assert_eq!(plan.persistent[1].name, "l0.v_cache");
+        for p in &plan.persistent {
+            assert_eq!(p.shape, vec![dims.max_seq, dims.kv_heads, dims.head_dim]);
+        }
+        assert_eq!(
+            plan.stats.resident_bytes,
+            2 * dims.layers * dims.max_seq * dims.kv_heads * dims.head_dim * 4
+        );
         let lg = plan.logits.as_ref().unwrap();
         assert_eq!(lg.shape, vec![1, dims.vocab]);
         assert_eq!(lg.size, dims.vocab * 4);
-        // Uploads cover x, pos scalars, inv_freq and the per-layer caches.
-        assert_eq!(plan.uploads.len(), 4 + 1 + 2 * dims.layers);
+        // Uploads are ONLY the step inputs: x, 3 pos uniforms, inv_freq.
+        assert_eq!(plan.uploads.len(), 5);
+        assert_eq!(plan.stats.step_inputs, 5);
+        // Per-token host traffic no longer scales with max_seq: token
+        // embedding + uniforms + rope frequencies only.
+        let expect_bytes = dims.hidden * 4 + 3 * 4 + (dims.head_dim / 2) * 4;
+        assert_eq!(plan.stats.upload_bytes_per_step, expect_bytes);
+        assert!(plan.stats.upload_bytes_per_step * 10 < plan.stats.resident_bytes);
+    }
+
+    #[test]
+    fn input_residency_classifies_caches_and_step_inputs() {
+        use crate::plan::residency::ResidencyClass;
+        let plan = compile(FusionConfig::fused());
+        assert_eq!(
+            plan.input_residency("l0.k_cache"),
+            Some(ResidencyClass::Persistent)
+        );
+        assert_eq!(plan.input_residency("x"), Some(ResidencyClass::StepInput));
+        assert_eq!(plan.input_residency("pos_i"), Some(ResidencyClass::StepInput));
+        assert_eq!(plan.input_residency("nope"), None);
+    }
+
+    #[test]
+    fn cache_update_binds_same_persistent_index_in_and_out() {
+        let plan = compile(FusionConfig::fused());
+        let mut checked = 0;
+        for step in &plan.steps {
+            let Step::Dispatch(d) = step else { continue };
+            if !d.name.contains("cache_update") {
+                continue;
+            }
+            // Bindings: [cache_in, row, pos, cache_out] — first and last
+            // must hit the same session cache buffer.
+            let Binding::Persistent { idx: i_in, offset: 0, .. } = d.bindings[0] else {
+                panic!("{}: input 0 not persistent: {:?}", d.name, d.bindings[0]);
+            };
+            let Binding::Persistent { idx: i_out, offset: 0, .. } =
+                d.bindings[d.bindings.len() - 1]
+            else {
+                panic!("{}: output not persistent", d.name);
+            };
+            assert_eq!(i_in, i_out, "{}: in-place update must alias", d.name);
+            checked += 1;
+        }
+        assert_eq!(checked, 2 * GraphDims::qwen_tiny().layers);
     }
 }

@@ -1,0 +1,286 @@
+//! Value residency: which storage class each graph value lives in, and the
+//! per-session cache arena that backs the `Persistent` class.
+//!
+//! The planner classifies every value of a decode graph into one of three
+//! residency classes ([`ResidencyClass`]):
+//!
+//! - **Transient** — intermediates produced and consumed inside one replay;
+//!   they live in the plan's lifetime-aliased arena slots.
+//! - **StepInput** — per-step host inputs (token embedding, position
+//!   uniforms, rope frequencies): the only bytes that cross the bus per
+//!   token once caches are resident.
+//! - **Persistent** — session state that survives across decode steps (the
+//!   KV caches): bound to *session-owned* device buffers and updated in
+//!   place by `cache_update` dispatches, never uploaded or read back on the
+//!   hot path.
+//!
+//! The [`CacheArena`] allocates one [`DeviceKvCache`] per session from the
+//! shared bounded [`BufferPool`] — so cache memory honors the same byte cap
+//! and high-water accounting as every other pooled allocation, and a
+//! retired session's cache buffers are immediately reusable by the next
+//! admit. Buffers are released in reverse acquisition order so the pool's
+//! LIFO free lists hand the *same* buffers (in the same order) to the next
+//! session, keeping the runner's per-cache-set bind groups cache-hot.
+
+use crate::tensor::{DType, Tensor};
+use crate::webgpu::{BufferId, BufferPool, Device};
+use crate::{Error, Result};
+
+/// Storage class of one graph value in a compiled plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResidencyClass {
+    /// Replay-local intermediate: lives in a lifetime-aliased arena slot.
+    Transient,
+    /// Per-step host upload (token embedding, position uniforms).
+    StepInput,
+    /// Session-owned device-resident state (KV caches).
+    Persistent,
+}
+
+/// One persistent value's contract: its graph input name and typed layout.
+/// Order within [`crate::plan::ExecutionPlan::persistent`] follows the
+/// graph's declaration order (layer-major `l{i}.k_cache`, `l{i}.v_cache`
+/// for the decode builder).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PersistentSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub size: usize,
+}
+
+/// A session's device-resident cache set: one buffer per persistent value,
+/// in plan order. Owned by the session (via `serve::KvCache`), allocated
+/// and released through the [`CacheArena`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeviceKvCache {
+    /// One device buffer per persistent spec, same order.
+    pub buffers: Vec<BufferId>,
+    /// Total device bytes held by this cache set.
+    pub resident_bytes: usize,
+}
+
+impl DeviceKvCache {
+    pub fn buffer(&self, idx: usize) -> Option<BufferId> {
+        self.buffers.get(idx).copied()
+    }
+}
+
+/// Counters for cache-set lifecycle (leak detection rides these plus the
+/// shared pool's high-water stats).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheArenaStats {
+    pub sets_allocated: u64,
+    pub sets_released: u64,
+    /// Device bytes per cache set (layers x 2 x max_seq x kv_heads x
+    /// head_dim x 4 for the decode builder).
+    pub resident_bytes_per_set: usize,
+}
+
+impl CacheArenaStats {
+    /// Cache sets currently held by live sessions.
+    pub fn sets_live(&self) -> u64 {
+        self.sets_allocated - self.sets_released
+    }
+}
+
+/// Per-session cache allocator over the shared bounded buffer pool.
+#[derive(Debug, Clone)]
+pub struct CacheArena {
+    specs: Vec<PersistentSpec>,
+    stats: CacheArenaStats,
+}
+
+impl CacheArena {
+    pub fn new(specs: Vec<PersistentSpec>) -> Self {
+        let resident: usize = specs.iter().map(|s| s.size).sum();
+        CacheArena {
+            specs,
+            stats: CacheArenaStats { resident_bytes_per_set: resident, ..Default::default() },
+        }
+    }
+
+    pub fn specs(&self) -> &[PersistentSpec] {
+        &self.specs
+    }
+
+    pub fn stats(&self) -> CacheArenaStats {
+        self.stats
+    }
+
+    /// Allocate a zeroed cache set for a new session. Buffers come from the
+    /// shared pool (honoring its byte cap); recycled buffers are cleared
+    /// device-side so no state leaks across sessions.
+    pub fn allocate(&mut self, device: &mut Device, pool: &mut BufferPool) -> Result<DeviceKvCache> {
+        let mut buffers = Vec::with_capacity(self.specs.len());
+        for spec in &self.specs {
+            // Acquire, then zero; the buffer joins the partial set before
+            // the clear so BOTH failure modes unwind through it.
+            let res = pool.acquire(device, spec.size).and_then(|b| {
+                buffers.push(b);
+                device.clear_buffer(b)
+            });
+            if let Err(e) = res {
+                // Unwind the partial set so a failed admit leaks nothing —
+                // in reverse, like a full release, so the pool's LIFO free
+                // lists keep handing out the same buffer order (the
+                // bind-group cache key).
+                for (b, s) in buffers.iter().zip(&self.specs).rev() {
+                    pool.release(s.size, *b);
+                }
+                return Err(e);
+            }
+        }
+        self.stats.sets_allocated += 1;
+        Ok(DeviceKvCache { buffers, resident_bytes: self.stats.resident_bytes_per_set })
+    }
+
+    /// Return a cache set to the pool. Reverse order keeps the pool's LIFO
+    /// free lists aligned so the next allocate sees the same buffer order.
+    /// Errors (releasing nothing) if the set does not match this arena's
+    /// specs — a silent partial release would defeat the leak accounting.
+    pub fn release(&mut self, pool: &mut BufferPool, cache: DeviceKvCache) -> Result<()> {
+        if cache.buffers.len() != self.specs.len() {
+            return Err(Error::Graph(format!(
+                "cache set has {} buffers, arena expects {}",
+                cache.buffers.len(),
+                self.specs.len()
+            )));
+        }
+        for (buf, spec) in cache.buffers.iter().zip(&self.specs).rev() {
+            pool.release(spec.size, *buf);
+        }
+        self.stats.sets_released += 1;
+        Ok(())
+    }
+
+    /// Spill a cache set to host tensors (eviction), in spec order. A real
+    /// device->host readback: the whole set is mapped behind ONE
+    /// synchronization point (`map_read_many`), so the spill's sync +
+    /// per-byte transfer cost lands in the virtual cost model instead of
+    /// moving O(layers x max_seq) bytes for free. The device buffers stay
+    /// allocated — pair with [`CacheArena::release`] to free them.
+    pub fn spill_to_host(&self, device: &mut Device, cache: &DeviceKvCache) -> Result<Vec<Tensor>> {
+        if cache.buffers.len() != self.specs.len() {
+            return Err(Error::Graph(format!(
+                "cache set has {} buffers, arena expects {}",
+                cache.buffers.len(),
+                self.specs.len()
+            )));
+        }
+        let all = device.map_read_many(&cache.buffers)?;
+        let mut out = Vec::with_capacity(self.specs.len());
+        for (bytes, spec) in all.iter().zip(&self.specs) {
+            out.push(Tensor::from_le_bytes(spec.shape.clone(), spec.dtype, &bytes[..spec.size])?);
+        }
+        Ok(out)
+    }
+
+    /// Upload host tensors (spec order) into a cache set — the restore half
+    /// of the evict-to-host spill path. Takes references so a resume does
+    /// not deep-copy the whole host KV state just to upload it.
+    pub fn upload_from_host(
+        &self,
+        device: &mut Device,
+        cache: &DeviceKvCache,
+        tensors: &[&Tensor],
+    ) -> Result<()> {
+        if tensors.len() != self.specs.len() || cache.buffers.len() != self.specs.len() {
+            return Err(Error::Graph(format!(
+                "cache restore: {} tensors / {} buffers vs {} specs",
+                tensors.len(),
+                cache.buffers.len(),
+                self.specs.len()
+            )));
+        }
+        for ((buf, spec), t) in cache.buffers.iter().zip(&self.specs).zip(tensors) {
+            if t.shape != spec.shape {
+                return Err(Error::Graph(format!(
+                    "cache restore '{}': host shape {:?} != spec {:?}",
+                    spec.name, t.shape, spec.shape
+                )));
+            }
+            device.write_buffer(*buf, 0, t.data.as_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::webgpu::ImplementationProfile;
+
+    fn arena(n: usize, size: usize) -> CacheArena {
+        let specs = (0..n)
+            .map(|i| PersistentSpec {
+                name: format!("l{}.{}_cache", i / 2, if i % 2 == 0 { "k" } else { "v" }),
+                shape: vec![size / 4],
+                dtype: DType::F32,
+                size,
+            })
+            .collect();
+        CacheArena::new(specs)
+    }
+
+    #[test]
+    fn allocate_release_reuses_same_buffers_in_order() {
+        let mut d = Device::new(ImplementationProfile::zero_overhead());
+        let mut pool = BufferPool::new(None);
+        let mut a = arena(4, 256);
+        let set1 = a.allocate(&mut d, &mut pool).unwrap();
+        let ids1 = set1.buffers.clone();
+        a.release(&mut pool, set1).unwrap();
+        let set2 = a.allocate(&mut d, &mut pool).unwrap();
+        assert_eq!(set2.buffers, ids1, "reverse-release must preserve order");
+        assert_eq!(pool.stats().created, 4, "second set fully recycled");
+        assert_eq!(a.stats().sets_live(), 1);
+    }
+
+    #[test]
+    fn recycled_buffers_are_zeroed() {
+        let mut d = Device::new(ImplementationProfile::zero_overhead());
+        let mut pool = BufferPool::new(None);
+        let mut a = arena(2, 64);
+        let set1 = a.allocate(&mut d, &mut pool).unwrap();
+        d.write_buffer(set1.buffers[0], 0, &[0xAB; 64]).unwrap();
+        a.release(&mut pool, set1).unwrap();
+        let set2 = a.allocate(&mut d, &mut pool).unwrap();
+        let bytes = d.peek_buffer(set2.buffers[0]).unwrap();
+        assert!(bytes.iter().all(|&b| b == 0), "stale session bytes leaked");
+    }
+
+    #[test]
+    fn pool_cap_bounds_cache_sets_and_failed_allocate_leaks_nothing() {
+        let mut d = Device::new(ImplementationProfile::zero_overhead());
+        let mut pool = BufferPool::new(Some(600));
+        let mut a = arena(2, 256); // one set = 512 B
+        let set1 = a.allocate(&mut d, &mut pool).unwrap();
+        let err = a.allocate(&mut d, &mut pool);
+        assert!(err.is_err(), "second set must exceed the 600 B cap");
+        // The failed allocate returned its partial set to the pool.
+        assert_eq!(pool.stats().outstanding_bytes, 512);
+        a.release(&mut pool, set1).unwrap();
+        assert_eq!(pool.stats().outstanding_bytes, 0);
+        assert!(a.allocate(&mut d, &mut pool).is_ok(), "reuse within cap");
+    }
+
+    #[test]
+    fn spill_and_restore_round_trip() {
+        let mut d = Device::new(ImplementationProfile::zero_overhead());
+        let mut pool = BufferPool::new(None);
+        let mut a = arena(2, 64);
+        let set = a.allocate(&mut d, &mut pool).unwrap();
+        let t = Tensor::f32(vec![16], (0..16).map(|i| i as f32).collect()).unwrap();
+        d.write_buffer(set.buffers[1], 0, t.data.as_bytes()).unwrap();
+        let spilled = a.spill_to_host(&mut d, &set).unwrap();
+        assert_eq!(spilled[1].as_f32().unwrap(), t.as_f32().unwrap());
+        // Clear, then restore (by reference — no deep copy) and read back.
+        d.clear_buffer(set.buffers[1]).unwrap();
+        let refs: Vec<&Tensor> = spilled.iter().collect();
+        a.upload_from_host(&mut d, &set, &refs).unwrap();
+        let bytes = d.peek_buffer(set.buffers[1]).unwrap().to_vec();
+        let back = Tensor::from_le_bytes(vec![16], DType::F32, &bytes).unwrap();
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+}

@@ -26,6 +26,7 @@ use crate::webgpu::{
 use crate::{Error, Result};
 
 use super::planner::{Binding, ExecutionPlan, Step};
+use super::residency::DeviceKvCache;
 
 /// Per-replay cost deltas the executor folds into its own counters so
 /// serving attribution keeps tiling the device timeline.
@@ -35,6 +36,10 @@ pub struct ReplayDelta {
     pub dispatches: u64,
     pub submits: u64,
 }
+
+/// Per-cache-set bind groups for the persistent steps: ordered buffer-set
+/// key -> (step index -> bind group).
+type SessionGroups = HashMap<Vec<BufferId>, HashMap<usize, BindGroupId>>;
 
 pub struct PlanRunner {
     pub plan: ExecutionPlan,
@@ -46,6 +51,14 @@ pub struct PlanRunner {
     /// Ring buffers + their bind groups for the logits-producing step.
     logits_ring: Vec<BufferId>,
     logits_groups: Vec<BindGroupId>,
+    /// Steps that bind persistent (session-owned) buffers — their bind
+    /// groups depend on the session's cache set.
+    persistent_steps: Vec<usize>,
+    /// Per-cache-set bind groups for the persistent steps, keyed by the
+    /// set's ordered buffer ids. A retired session's buffers return to the
+    /// pool in order, so the next session's set usually hits this cache —
+    /// steady-state replay creates no resources.
+    session_groups: SessionGroups,
     /// Reused scratch for the `Halves` host step (unfused graphs only).
     scratch_a: Vec<u8>,
     scratch_b: Vec<u8>,
@@ -106,16 +119,32 @@ impl PlanRunner {
                 Binding::Pinned { buffer, offset, size } => {
                     BindGroupEntry { binding, buffer, offset, size }
                 }
+                Binding::Persistent { .. } => {
+                    unreachable!("persistent bindings are substituted per session cache set")
+                }
                 Binding::Ring => unreachable!("ring bindings are substituted per ring buffer"),
             }
         };
 
         let mut groups: Vec<Option<BindGroupId>> = Vec::with_capacity(plan.steps.len());
         let mut logits_groups = Vec::new();
+        let mut persistent_steps = Vec::new();
         for (i, step) in plan.steps.iter().enumerate() {
             match step {
                 Step::Dispatch(d) => {
-                    if Some(i) == plan.logits_step {
+                    let touches_persistent =
+                        d.bindings.iter().any(|b| matches!(b, Binding::Persistent { .. }));
+                    if touches_persistent {
+                        if Some(i) == plan.logits_step {
+                            return Err(Error::Graph(format!(
+                                "step '{}' is both ring-backed and persistent",
+                                d.name
+                            )));
+                        }
+                        // Bind group deferred to register_cache (per session).
+                        persistent_steps.push(i);
+                        groups.push(None);
+                    } else if Some(i) == plan.logits_step {
                         // One group per ring buffer, Ring slot substituted.
                         for &ring_buf in &logits_ring {
                             let entries = d
@@ -170,12 +199,87 @@ impl PlanRunner {
             groups,
             logits_ring,
             logits_groups,
+            persistent_steps,
+            session_groups: HashMap::new(),
             scratch_a: Vec::new(),
             scratch_b: Vec::new(),
             build_virtual_ns: 0,
             build_real_ns: 0,
             replays: 0,
         })
+    }
+
+    /// Create (or reuse) the bind groups that wire a session's cache set
+    /// into the persistent steps. Idempotent per buffer set — a recycled
+    /// set (same buffers, same order) is a pure cache hit, so steady-state
+    /// session churn creates no bind groups.
+    pub fn register_cache(&mut self, device: &mut Device, kv: &DeviceKvCache) -> Result<()> {
+        if kv.buffers.len() != self.plan.persistent.len() {
+            return Err(Error::Graph(format!(
+                "cache set has {} buffers, plan expects {} persistent values",
+                kv.buffers.len(),
+                self.plan.persistent.len()
+            )));
+        }
+        for (buf, spec) in kv.buffers.iter().zip(&self.plan.persistent) {
+            if device.buffer_size(*buf)? < spec.size {
+                return Err(Error::Graph(format!(
+                    "cache buffer for '{}' smaller than spec ({} B)",
+                    spec.name, spec.size
+                )));
+            }
+        }
+        if self.session_groups.contains_key(&kv.buffers) {
+            return Ok(());
+        }
+        let mut by_step = HashMap::with_capacity(self.persistent_steps.len());
+        for &i in &self.persistent_steps {
+            let Step::Dispatch(d) = &self.plan.steps[i] else {
+                unreachable!("persistent steps are dispatches")
+            };
+            let entries = d
+                .bindings
+                .iter()
+                .enumerate()
+                .map(|(bi, b)| match *b {
+                    Binding::Persistent { idx, offset, size } => BindGroupEntry {
+                        binding: bi,
+                        buffer: kv.buffers[idx],
+                        offset,
+                        size,
+                    },
+                    Binding::Arena(s) => BindGroupEntry {
+                        binding: bi,
+                        buffer: self.arena[s.slot],
+                        offset: s.offset,
+                        size: s.size,
+                    },
+                    Binding::Pinned { buffer, offset, size } => {
+                        BindGroupEntry { binding: bi, buffer, offset, size }
+                    }
+                    Binding::Ring => unreachable!("checked at materialize"),
+                })
+                .collect();
+            by_step.insert(
+                i,
+                device.create_bind_group(BindGroupDesc {
+                    label: d.name.clone(),
+                    layout: d.layout,
+                    entries,
+                })?,
+            );
+        }
+        self.session_groups.insert(kv.buffers.clone(), by_step);
+        Ok(())
+    }
+
+    /// Cache-set orderings with registered bind groups. Bounded: cache
+    /// buffers come from the pool and are never destroyed, and reverse-
+    /// order release keeps handing sessions the same orderings, so groups
+    /// stay valid and the map does not grow under steady-state churn
+    /// (asserted by the residency tests).
+    pub fn registered_cache_sets(&self) -> usize {
+        self.session_groups.len()
     }
 
     /// True for buffers the runner owns (the logits ring) — they must not
@@ -189,15 +293,20 @@ impl PlanRunner {
     }
 
     /// Replay the plan once. `ring_idx` selects the logits ring buffer
-    /// (the serving engine passes the session's position in the round).
-    /// Returns (named outputs, live logits buffer for the caller's
-    /// deferred `map_read`, cost deltas).
+    /// (the serving engine passes the session's position in the round);
+    /// `kv` is the session's device-resident cache set (required when the
+    /// plan has persistent values, registered via
+    /// [`PlanRunner::register_cache`]). Per step only the `StepInput`
+    /// uploads cross the bus — K/V appends happen on-device through the
+    /// in-place `cache_update` dispatches. Returns (named outputs, live
+    /// logits buffer for the caller's deferred `map_read`, cost deltas).
     pub fn replay(
         &mut self,
         device: &mut Device,
         runner: &dyn KernelRunner,
         inputs: &HashMap<String, Tensor>,
         ring_idx: usize,
+        kv: Option<&DeviceKvCache>,
     ) -> Result<(HashMap<String, Tensor>, Option<BufferId>, ReplayDelta)> {
         if self.plan.logits.is_some() && ring_idx >= self.logits_ring.len() {
             return Err(Error::Graph(format!(
@@ -205,6 +314,19 @@ impl PlanRunner {
                 self.logits_ring.len()
             )));
         }
+        let session_groups = if self.plan.persistent.is_empty() {
+            None
+        } else {
+            let kv = kv.ok_or_else(|| {
+                Error::Graph(format!(
+                    "plan has {} persistent values but no session cache set was passed",
+                    self.plan.persistent.len()
+                ))
+            })?;
+            Some(self.session_groups.get(&kv.buffers).ok_or_else(|| {
+                Error::Graph("session cache set not registered with the plan runner".into())
+            })?)
+        };
         let mut delta = ReplayDelta::default();
 
         for u in &self.plan.uploads {
@@ -245,10 +367,17 @@ impl PlanRunner {
                     device.set_pipeline(e, d.pipeline)?;
                     let group = if Some(i) == self.plan.logits_step {
                         self.logits_groups[ring_idx]
+                    } else if let Some(g) = self.groups[i] {
+                        g
                     } else {
-                        self.groups[i].ok_or_else(|| {
-                            Error::Graph(format!("step {i} '{}' has no bind group", d.name))
-                        })?
+                        *session_groups
+                            .and_then(|m| m.get(&i))
+                            .ok_or_else(|| {
+                                Error::Graph(format!(
+                                    "step {i} '{}' has no bind group for this session",
+                                    d.name
+                                ))
+                            })?
                     };
                     device.set_bind_group(e, group)?;
                     device.dispatch_workgroups(e, d.grid.0, d.grid.1, d.grid.2)?;

@@ -33,7 +33,7 @@ use crate::{Error, Result};
 
 use super::metrics::ServeReport;
 use super::queue::RequestQueue;
-use super::session::SessionState;
+use super::session::{KvCache, SessionState};
 
 /// Serving configuration: the per-session engine config plus admission
 /// control.
@@ -176,20 +176,45 @@ impl<'r> ServingEngine<'r> {
         Ok(self.queue.push(prompt.to_vec(), n_new, now))
     }
 
-    /// Admit queued requests (FIFO) up to `max_concurrent`.
-    pub fn admit(&mut self) {
-        while self.active.len() < self.config.max_concurrent {
-            let Some(req) = self.queue.pop() else { break };
+    /// Admit queued requests (FIFO) up to `max_concurrent`. Admission is
+    /// cache-aware in planned mode: each admitted session claims its
+    /// device-resident cache set up front, and when the bounded pool
+    /// cannot back another set the request stays queued (deferred to a
+    /// later round, when a retiring session returns its set) instead of
+    /// poisoning the run mid-encode. If not even ONE session can be
+    /// backed, the capacity error surfaces — otherwise the scheduler
+    /// would spin forever on an unadmittable queue.
+    pub fn admit(&mut self) -> Result<()> {
+        while self.active.len() < self.config.max_concurrent && !self.queue.is_empty() {
+            let cache = if self.executor.is_planned() {
+                match self.executor.alloc_kv_cache() {
+                    Ok(c) => Some(c),
+                    // Only genuine capacity pressure defers (a retiring
+                    // session will return its set); any other fault — and
+                    // pressure with nothing running to free a set — must
+                    // surface, not be silently re-deferred every round.
+                    Err(Error::LimitExceeded(_)) if !self.active.is_empty() => break,
+                    Err(e) => return Err(e),
+                }
+            } else {
+                None
+            };
+            let req = self.queue.pop().expect("checked non-empty");
             let now = self.executor.device.clock.now_ns();
-            self.active.push(SessionState::new(
+            let mut s = SessionState::new(
                 req.id,
                 req.prompt,
                 req.n_new,
                 &self.dims,
                 req.enqueued_ns,
                 now,
-            ));
+            );
+            if let Some(c) = cache {
+                s.kv = KvCache::Device(c);
+            }
+            self.active.push(s);
         }
+        Ok(())
     }
 
     /// Build a detached session (used by the single-request `Engine`
@@ -248,6 +273,42 @@ impl<'r> ServingEngine<'r> {
                 dims.max_seq
             )));
         }
+        let planned = executor.is_planned();
+        // Upload accounting starts BEFORE promotion so a resume's cache
+        // re-hydration (a full host->device cache upload) is charged to
+        // this session's upload_bytes — parking and resuming every few
+        // tokens must not report as resident-cache traffic savings.
+        let w0 = executor.device.stats.bytes_written;
+        // Promote a planned session to device residency on its first
+        // encode (or after an evict): allocate a session-owned cache set
+        // from the bounded pool; hydrate spilled host state when resuming
+        // mid-generation. One-time per-session cost, off the token loop.
+        if planned && !s.kv.is_device() {
+            let cache = executor.alloc_kv_cache()?;
+            if s.pos > 0 {
+                // Layer-major [K, V] flattening matches the plan's
+                // persistent declaration order. References only — the
+                // host state is uploaded, not copied.
+                let res = match s.kv.as_host() {
+                    Some(host) => {
+                        let tensors: Vec<&Tensor> =
+                            host.iter().flat_map(|(k, v)| [k, v]).collect();
+                        executor.hydrate_kv_cache(&cache, &tensors)
+                    }
+                    None => Err(Error::Graph(
+                        "non-device KV cache must be host-resident".into(),
+                    )),
+                };
+                if let Err(e) = res {
+                    // A failed resume must not strand the freshly claimed
+                    // set (the hydrate error is the one worth surfacing).
+                    let _ = executor.release_kv_cache(cache);
+                    return Err(e);
+                }
+            }
+            s.kv = KvCache::Device(cache);
+        }
+
         // Attribution snapshots (virtual-clock deltas belong to this
         // session — the shared device accumulates across all of them).
         let ph0 = executor.device.timeline.virtual_ns;
@@ -265,32 +326,62 @@ impl<'r> ServingEngine<'r> {
         inputs.insert("pos_ip1".into(), Tensor::scalar_i32(s.pos as i32 + 1));
         inputs.insert("pos_f".into(), Tensor::scalar_f32(s.pos as f32));
         inputs.insert("inv_freq".into(), weights.inv_freq.clone());
-        for (l, (k, v)) in s.caches.iter().enumerate() {
-            inputs.insert(format!("l{l}.k_cache"), k.clone());
-            inputs.insert(format!("l{l}.v_cache"), v.clone());
+        if !planned {
+            // Lazily materialize zeroed host caches on the first eager
+            // encode (sessions are born with the empty placeholder so
+            // planned admits never pay the host allocation). Only valid at
+            // pos 0: a mid-generation session whose cache state was
+            // dropped must fail loudly, not decode against zeroed K/V.
+            if matches!(&s.kv, KvCache::Host(h) if h.is_empty()) {
+                if s.pos != 0 {
+                    return Err(Error::Graph(format!(
+                        "session {} lost its cache state mid-generation (pos {})",
+                        s.id, s.pos
+                    )));
+                }
+                s.kv = KvCache::host_zeroed(dims);
+            }
+            // Eager mode round-trips the caches host-side per step — the
+            // O(layers x max_seq) traffic the paper's pathology pays.
+            let host = s.kv.as_host().ok_or_else(|| {
+                Error::Graph("eager session must keep host-resident caches".into())
+            })?;
+            for (l, (k, v)) in host.iter().enumerate() {
+                inputs.insert(format!("l{l}.k_cache"), k.clone());
+                inputs.insert(format!("l{l}.v_cache"), v.clone());
+            }
         }
         // Weights are NOT passed per step: they were pinned into persistent
         // device buffers at engine construction (executor.pin_inputs).
 
-        let (mut outs, logits_buf) = executor.run_with_ring(graph, &inputs, ring_idx)?;
+        let (mut outs, logits_buf) =
+            executor.run_with_session(graph, &inputs, ring_idx, s.kv.as_device())?;
 
-        // Update this session's caches for its next step.
-        for l in 0..dims.layers {
-            let k = outs
-                .remove(&format!("l{l}.k_cache"))
-                .ok_or_else(|| Error::Graph(format!("missing l{l}.k_cache output")))?;
-            let v = outs
-                .remove(&format!("l{l}.v_cache"))
-                .ok_or_else(|| Error::Graph(format!("missing l{l}.v_cache output")))?;
-            s.caches[l] = (k, v);
+        if planned {
+            // K/V appends happened on-device (in-place cache_update): the
+            // session's cache set already holds the next step's state.
+            s.pos += 1;
+        } else {
+            // Update this session's host caches for its next step.
+            let host = s.kv.as_host_mut().expect("checked above");
+            for (l, kv) in host.iter_mut().enumerate() {
+                let k = outs
+                    .remove(&format!("l{l}.k_cache"))
+                    .ok_or_else(|| Error::Graph(format!("missing l{l}.k_cache output")))?;
+                let v = outs
+                    .remove(&format!("l{l}.v_cache"))
+                    .ok_or_else(|| Error::Graph(format!("missing l{l}.v_cache output")))?;
+                *kv = (k, v);
+            }
+            s.pos += 1;
         }
-        s.pos += 1;
 
         let logits = outs
             .remove("logits")
             .ok_or_else(|| Error::Graph("missing logits output".into()))?;
 
         s.metrics.steps += 1;
+        s.metrics.upload_bytes += executor.device.stats.bytes_written - w0;
         let dp = executor.dispatch_count - d0;
         s.metrics.dispatches += dp;
         if was_prompt {
@@ -400,7 +491,7 @@ impl<'r> ServingEngine<'r> {
     /// single coalesced readback, retire completed sessions. Returns the
     /// number of sessions stepped.
     pub fn step_round(&mut self) -> Result<usize> {
-        self.admit();
+        self.admit()?;
         let n = self.active.len();
         if n == 0 {
             return Ok(0);
@@ -474,17 +565,73 @@ impl<'r> ServingEngine<'r> {
         }
 
         // Retire finished sessions (continuous scheduling: their pooled
-        // buffers are immediately reusable by the next admitted session).
+        // buffers — including device-resident cache sets — are immediately
+        // reusable by the next admitted session).
         let mut i = 0;
         while i < self.active.len() {
             if self.active[i].finished() {
-                let s = self.active.remove(i);
+                let mut s = self.active.remove(i);
+                self.release_session_cache(&mut s)?;
                 self.finished.push(s);
             } else {
                 i += 1;
             }
         }
         Ok(n)
+    }
+
+    /// Return a session's device-resident cache set (if any) to the shared
+    /// pool. The session keeps its token history; its KV state is gone.
+    pub fn release_session_cache(&mut self, s: &mut SessionState) -> Result<()> {
+        if let KvCache::Device(cache) =
+            std::mem::replace(&mut s.kv, KvCache::Host(Vec::new()))
+        {
+            self.executor.release_kv_cache(cache)?;
+        }
+        Ok(())
+    }
+
+    /// Fully reset a session for reuse: rewind the prompt cursor, clear
+    /// the token history, drop the host cache state AND release any
+    /// device-resident cache set back to the pool (the next encode
+    /// re-materializes zeroed caches — recycled device buffers in planned
+    /// mode, host tensors in eager). This is the complete version of
+    /// [`SessionState::reset_host`] — host state alone is not enough once
+    /// caches live on the device.
+    pub fn reset_session(&mut self, s: &mut SessionState) -> Result<()> {
+        if let Some(cache) = s.reset_host() {
+            self.executor.release_kv_cache(cache)?;
+        }
+        Ok(())
+    }
+
+    /// Evict a session's KV state to host tensors mid-generation (the
+    /// spill path): device buffers return to the pool, decode position and
+    /// token history are preserved, and the next encode transparently
+    /// re-allocates and re-hydrates. Lets a server park cold sessions
+    /// without losing their context. No-op for host-resident sessions.
+    pub fn evict_session_cache(&mut self, s: &mut SessionState) -> Result<()> {
+        // Spill FIRST, while the session still owns its set: a failed
+        // readback leaves the session device-resident and fully usable,
+        // leaking nothing.
+        let spilled = match s.kv.as_device() {
+            Some(cache) => self.executor.spill_kv_cache(cache)?,
+            None => return Ok(()),
+        };
+        let KvCache::Device(cache) = std::mem::replace(&mut s.kv, KvCache::Host(Vec::new()))
+        else {
+            unreachable!("checked above")
+        };
+        // Spec order is layer-major [K, V]: re-pair per layer. The session
+        // becomes host-resident BEFORE the release, so even a release
+        // error leaves it consistent (context preserved).
+        let mut host = Vec::with_capacity(spilled.len() / 2);
+        let mut it = spilled.into_iter();
+        while let (Some(k), Some(v)) = (it.next(), it.next()) {
+            host.push((k, v));
+        }
+        s.kv = KvCache::Host(host);
+        self.executor.release_kv_cache(cache)
     }
 
     /// Drive every queued + active session to completion; report aggregates
@@ -501,11 +648,12 @@ impl<'r> ServingEngine<'r> {
         let wall = self.now_ns() - t0;
         let mut report = ServeReport::from_sessions(&self.finished[f0..], wall);
         // Engine-level attribution: one-time plan-build cost (planned
-        // mode) and the bounded activation pool's counters.
+        // mode), cache residency, and the bounded pool's counters.
         if let Some(runner) = self.executor.plan_runner() {
             report.planned = true;
             report.plan_build_virtual_ns = runner.build_virtual_ns;
             report.plan_build_real_ns = runner.build_real_ns;
+            report.resident_bytes = runner.plan.stats.resident_bytes as u64;
         }
         let ps = self.executor.pool.stats();
         report.pool_high_water_bytes = ps.high_water_bytes as u64;

@@ -30,9 +30,17 @@ pub struct ServeReport {
     pub kernel_virtual_ns: u64,
     /// Per-session encode (planned: plan-replay) CPU cost, summed.
     pub encode_virtual_ns: u64,
+    /// Host->device bytes uploaded across sessions (per-step inputs; in
+    /// eager mode also activations + caches — the traffic resident caches
+    /// remove).
+    pub upload_bytes: u64,
+    /// Device bytes of ONE session's resident KV-cache set (0 in eager
+    /// mode: caches live host-side and ride `upload_bytes` instead).
+    pub resident_bytes: u64,
     pub ttft_ms: Vec<f64>,
     /// True when the run replayed a compiled plan instead of eager-
-    /// interpreting the graph.
+    /// interpreting the graph (the [`ServeReport::exec_mode`] header
+    /// derives from this).
     pub planned: bool,
     /// One-time plan compile + materialize cost (virtual ns; 0 in eager
     /// mode). Attributed at engine level — it precedes every session.
@@ -54,6 +62,7 @@ impl ServeReport {
         let mut sync = 0u64;
         let mut kernel = 0u64;
         let mut encode = 0u64;
+        let mut upload_bytes = 0u64;
         let mut dispatches = 0u64;
         let mut steps = 0u64;
         let mut ttft_ms = Vec::with_capacity(n);
@@ -66,6 +75,7 @@ impl ServeReport {
             sync += s.metrics.sync_virtual_ns;
             kernel += s.metrics.kernel_virtual_ns;
             encode += s.metrics.encode_virtual_ns;
+            upload_bytes += s.metrics.upload_bytes;
             dispatches += s.metrics.dispatches;
             steps += s.metrics.steps;
             ttft_ms.push(s.metrics.ttft_ns() as f64 / 1e6);
@@ -93,6 +103,8 @@ impl ServeReport {
             sync_virtual_ns: sync,
             kernel_virtual_ns: kernel,
             encode_virtual_ns: encode,
+            upload_bytes,
+            resident_bytes: 0,
             ttft_ms,
             planned: false,
             plan_build_virtual_ns: 0,
@@ -110,6 +122,22 @@ impl ServeReport {
     /// Microseconds of `ns` per generated token.
     pub fn us_per_token(&self, ns: u64) -> f64 {
         ns as f64 / 1e3 / self.total_tokens.max(1) as f64
+    }
+
+    /// Host upload bytes per decode step (prefill + generation) — the
+    /// quantity device-resident caches shrink to embedding + uniforms.
+    pub fn upload_bytes_per_step(&self) -> f64 {
+        self.upload_bytes as f64 / self.steps.max(1) as f64
+    }
+
+    /// Execution-mode header for tables and artifact names, derived from
+    /// [`ServeReport::planned`] (single source of truth).
+    pub fn exec_mode(&self) -> &'static str {
+        if self.planned {
+            "planned"
+        } else {
+            "eager"
+        }
     }
 }
 

@@ -10,7 +10,10 @@
 //! WebLLM shape, without kernel-level batching — Appendix F territory):
 //!
 //! 1. **Admit** — requests queue FIFO; up to `max_concurrent` become
-//!    active. Exceeding the cap queues, never errors.
+//!    active. Exceeding the cap queues, never errors. Planned-mode
+//!    admission is cache-aware: a session claims its device-resident
+//!    cache set up front, and pool pressure defers admission to a later
+//!    round instead of failing mid-encode.
 //! 2. **Encode round** — each active session, in admission order, encodes
 //!    one decode step through the shared [`GraphExecutor`]: per-op
 //!    framework cost + the 8-phase dispatch sequence per kernel node.
@@ -23,7 +26,22 @@
 //!    selection is host argmax (or the Appendix H device-argmax variant,
 //!    which finishes per-session).
 //! 4. **Retire** — finished sessions leave immediately; their pooled
-//!    buffers are recycled by the next admit. Back to 1.
+//!    buffers — including planned mode's device-resident KV cache sets —
+//!    are recycled by the next admit. Back to 1.
+//!
+//! ## Execution modes and cache residency
+//!
+//! The serving default is **planned replay** (`ExecMode::serving_default()`):
+//! each session owns a device-resident KV cache set (`KvCache::Device`,
+//! allocated from the shared bounded pool via `plan::CacheArena`), K/V
+//! appends happen on-device through in-place `cache_update` dispatches,
+//! and per-step host traffic is just the token embedding + position
+//! uniforms (`SessionMetrics::upload_bytes`, table S1). Eager mode stays
+//! available (`--exec-mode eager`) and round-trips caches host-side per
+//! step — the paper's measured pathology. Sessions can be parked with
+//! `ServingEngine::evict_session_cache` (spill to host, release buffers)
+//! and resume transparently; `ServingEngine::reset_session` releases the
+//! device set AND clears host state.
 //!
 //! ## How serving throughput relates to the paper's overhead accounting
 //!
@@ -56,4 +74,4 @@ pub mod session;
 pub use engine::{argmax_bytes, ServeConfig, ServingEngine, StepHandle};
 pub use metrics::ServeReport;
 pub use queue::{Request, RequestQueue};
-pub use session::{SessionMetrics, SessionState};
+pub use session::{KvCache, SessionMetrics, SessionState};

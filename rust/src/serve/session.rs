@@ -7,7 +7,72 @@
 //! pinned weights) is shared; everything here is private to one request.
 
 use crate::fx::builder::GraphDims;
+use crate::plan::DeviceKvCache;
 use crate::tensor::Tensor;
+
+/// Where a session's KV caches live.
+///
+/// - `Host` — one `(K, V)` tensor pair per layer, re-uploaded and read
+///   back every decode step (eager mode; also the spilled representation
+///   after an evict).
+/// - `Device` — a session-owned device-resident cache set updated in
+///   place by the plan's `cache_update` dispatches; per-step host traffic
+///   is just the token embedding + position uniforms (planned mode).
+///
+/// Sessions start `Host` (empty, lazily materialized); a planned engine
+/// promotes them to `Device` at admission (scheduled sessions, cache-aware:
+/// admission defers under pool pressure) or on first encode (detached and
+/// evicted sessions, hydrating spilled host state if `pos > 0`), and
+/// demotes them on evict/retire.
+#[derive(Debug, Clone)]
+pub enum KvCache {
+    Host(Vec<(Tensor, Tensor)>),
+    Device(DeviceKvCache),
+}
+
+impl KvCache {
+    pub fn host_zeroed(dims: &GraphDims) -> Self {
+        let shape = vec![dims.max_seq, dims.kv_heads, dims.head_dim];
+        KvCache::Host(
+            (0..dims.layers)
+                .map(|_| (Tensor::zeros_f32(shape.clone()), Tensor::zeros_f32(shape.clone())))
+                .collect(),
+        )
+    }
+
+    pub fn is_device(&self) -> bool {
+        matches!(self, KvCache::Device(_))
+    }
+
+    pub fn as_device(&self) -> Option<&DeviceKvCache> {
+        match self {
+            KvCache::Device(c) => Some(c),
+            KvCache::Host(_) => None,
+        }
+    }
+
+    pub fn as_host(&self) -> Option<&Vec<(Tensor, Tensor)>> {
+        match self {
+            KvCache::Host(c) => Some(c),
+            KvCache::Device(_) => None,
+        }
+    }
+
+    pub fn as_host_mut(&mut self) -> Option<&mut Vec<(Tensor, Tensor)>> {
+        match self {
+            KvCache::Host(c) => Some(c),
+            KvCache::Device(_) => None,
+        }
+    }
+
+    /// Device bytes held by this cache (0 while host-resident).
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            KvCache::Device(c) => c.resident_bytes,
+            KvCache::Host(_) => 0,
+        }
+    }
+}
 
 /// Timing/attribution metrics for one session, in virtual nanoseconds of
 /// the shared device clock.
@@ -48,6 +113,11 @@ pub struct SessionMetrics {
     /// plan *replay* cost — the per-session counterpart of the engine-
     /// level one-time plan-build cost in [`crate::serve::ServeReport`].
     pub encode_virtual_ns: u64,
+    /// Host->device bytes uploaded by this session's encodes (the paper's
+    /// per-step host traffic: with device-resident caches this is just the
+    /// token embedding + position uniforms; eager mode re-uploads every
+    /// activation and both caches per step).
+    pub upload_bytes: u64,
     /// Per generated token: [TTFT, then per-decode-step deltas].
     pub per_token_ns: Vec<u64>,
 }
@@ -75,9 +145,10 @@ pub struct SessionState {
     pub prompt: Vec<usize>,
     /// Number of tokens to generate; the session retires once reached.
     pub n_new: usize,
-    /// Per-layer (K, V) caches — the session-private half of the state
-    /// split; shape `[max_seq, kv_heads, head_dim]` each.
-    pub caches: Vec<(Tensor, Tensor)>,
+    /// Per-layer KV caches — the session-private half of the state split;
+    /// each layer's K/V is `[max_seq, kv_heads, head_dim]`. Host-resident
+    /// in eager mode, a [`DeviceKvCache`] handle in planned mode.
+    pub kv: KvCache,
     /// Current decode position (rows of the cache that are valid).
     pub pos: usize,
     /// Prompt tokens consumed so far.
@@ -100,15 +171,17 @@ impl SessionState {
         enqueued_ns: u64,
         admitted_ns: u64,
     ) -> Self {
-        let shape = vec![dims.max_seq, dims.kv_heads, dims.head_dim];
-        let caches = (0..dims.layers)
-            .map(|_| (Tensor::zeros_f32(shape.clone()), Tensor::zeros_f32(shape.clone())))
-            .collect();
+        let _ = dims; // cache layout comes from the engine at first encode
         SessionState {
             id,
             prompt,
             n_new,
-            caches,
+            // Lazily materialized: the engine promotes to a device cache
+            // set (planned, the serving default) or fills in zeroed host
+            // tensors (eager) on the first encode — a fresh session should
+            // not pay the O(layers x max_seq) host allocation it may never
+            // read.
+            kv: KvCache::Host(Vec::new()),
             pos: 0,
             fed: 0,
             last_token: None,
@@ -119,6 +192,30 @@ impl SessionState {
                 ..SessionMetrics::default()
             },
         }
+    }
+
+    /// Reset this session's host-side decode state: position, prompt
+    /// cursor, token history, and the cache contents (the KV cache reverts
+    /// to the lazily-materialized empty state, so the next encode starts
+    /// from zeroed caches in either mode).
+    ///
+    /// This is only HALF of a full reset: a device-resident cache must also
+    /// be released back to the pool — use
+    /// [`crate::serve::ServingEngine::reset_session`], which does both and
+    /// asserts nothing leaks via the pool's high-water stats. Calling this
+    /// directly on a device-resident session would strand its buffers, so
+    /// it downgrades to the empty host state and returns the old handle
+    /// for the caller to release.
+    pub fn reset_host(&mut self) -> Option<DeviceKvCache> {
+        let old = match std::mem::replace(&mut self.kv, KvCache::Host(Vec::new())) {
+            KvCache::Device(c) => Some(c),
+            KvCache::Host(_) => None,
+        };
+        self.pos = 0;
+        self.fed = 0;
+        self.last_token = None;
+        self.tokens.clear();
+        old
     }
 
     /// The next input token: unconsumed prompt tokens first, then the most
@@ -204,11 +301,41 @@ mod tests {
     }
 
     #[test]
-    fn caches_sized_by_dims() {
+    fn fresh_sessions_defer_cache_materialization() {
+        // Sessions are born with the empty host placeholder: planned mode
+        // (the serving default) promotes straight to a device cache set
+        // without ever paying the O(layers x max_seq) host allocation.
         let s = session(vec![1], 1);
+        assert!(s.kv.as_host().expect("fresh sessions are host-resident").is_empty());
+        assert_eq!(s.kv.resident_bytes(), 0);
+        // The eager materialization helper carries the full per-dims shape.
         let d = GraphDims::qwen_tiny();
-        assert_eq!(s.caches.len(), d.layers);
-        assert_eq!(s.caches[0].0.shape, vec![d.max_seq, d.kv_heads, d.head_dim]);
+        let host = KvCache::host_zeroed(&d);
+        let host = host.as_host().unwrap();
+        assert_eq!(host.len(), d.layers);
+        assert_eq!(host[0].0.shape, vec![d.max_seq, d.kv_heads, d.head_dim]);
+    }
+
+    #[test]
+    fn reset_host_clears_decode_state() {
+        let d = GraphDims::qwen_tiny();
+        let mut s = session(vec![7, 8], 2);
+        let _ = s.take_input();
+        s.note_token(1, 100);
+        let _ = s.take_input();
+        s.note_token(2, 200);
+        s.pos = 2;
+        s.kv = KvCache::host_zeroed(&d); // materialized (eager path)...
+        if let Some(host) = s.kv.as_host_mut() {
+            host[0].0 = Tensor::f32(vec![1], vec![5.0]).unwrap(); // ...and dirty
+        }
+        let old = s.reset_host();
+        assert!(old.is_none(), "host session has no device cache to hand back");
+        assert_eq!(s.pos, 0);
+        assert!(s.tokens.is_empty());
+        assert_eq!(s.take_input(), Some((7, true)), "prompt cursor rewound");
+        let host = s.kv.as_host().unwrap();
+        assert!(host.is_empty(), "reset reverts to the lazily-materialized state");
     }
 
     #[test]

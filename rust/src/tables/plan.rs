@@ -26,6 +26,14 @@ pub struct PlanBenchRow {
     /// Replay CPU cost per step (virtual us) — the recurring planned cost
     /// the build cost amortizes against.
     pub planned_replay_us_per_step: f64,
+    /// Host->device upload bytes per decode step in each mode. Eager
+    /// re-uploads activations + both KV caches (O(layers x max_seq));
+    /// planned uploads only the token embedding + position uniforms —
+    /// the cache residency headline.
+    pub eager_upload_bytes_per_step: f64,
+    pub planned_upload_bytes_per_step: f64,
+    /// Device bytes of one session's resident KV-cache set (planned).
+    pub resident_kib: f64,
     pub eager_tok_per_s: f64,
     pub planned_tok_per_s: f64,
     /// Token streams bit-identical between the modes.
@@ -45,6 +53,12 @@ impl PlanBenchRow {
     pub fn fw_ratio(&self) -> f64 {
         self.overhead_delta().ratio()
     }
+
+    /// How many times fewer host bytes planned replay uploads per step
+    /// (the >= 10x acceptance bar for device-resident caches).
+    pub fn upload_shrink(&self) -> f64 {
+        self.eager_upload_bytes_per_step / self.planned_upload_bytes_per_step.max(1e-9)
+    }
 }
 
 /// Render table P1.
@@ -63,6 +77,8 @@ pub fn plan_table(rows: &[PlanBenchRow]) -> TableDoc {
             "submits/step e->p",
             "build (ms v/r)",
             "replay (us/step)",
+            "upload (B/step) e->p",
+            "resident (KiB)",
             "eager tok/s",
             "planned tok/s",
             "speedup",
@@ -80,6 +96,13 @@ pub fn plan_table(rows: &[PlanBenchRow]) -> TableDoc {
             format!("{:.0}->{:.1}", r.eager_submits_per_step, r.planned_submits_per_step),
             format!("{:.2}/{:.2}", r.plan_build_virtual_ms, r.plan_build_real_ms),
             f1(r.planned_replay_us_per_step),
+            format!(
+                "{:.0}->{:.0} ({:.0}x)",
+                r.eager_upload_bytes_per_step,
+                r.planned_upload_bytes_per_step,
+                r.upload_shrink()
+            ),
+            f1(r.resident_kib),
             f1(r.eager_tok_per_s),
             f1(r.planned_tok_per_s),
             format!("{:.2}x", r.planned_tok_per_s / r.eager_tok_per_s.max(1e-9)),
@@ -93,6 +116,13 @@ pub fn plan_table(rows: &[PlanBenchRow]) -> TableDoc {
          dispatches per encoder/submit. Framework cost falls from the \
          eager interpreter's per-op charge to the replay loop's per-step \
          bookkeeping; the one-time build cost is reported separately.",
+    );
+    t.note(
+        "upload: host bytes per decode step. Planned mode keeps each \
+         session's KV caches device-resident ('resident' column) with \
+         in-place cache_update appends, so only the token embedding + \
+         position uniforms cross the bus — eager re-uploads activations \
+         and both caches every step.",
     );
     t.note(
         "'tokens' asserts bit-identical streams: planning is a pure \
@@ -117,6 +147,9 @@ mod tests {
             plan_build_virtual_ms: 0.5,
             plan_build_real_ms: 0.8,
             planned_replay_us_per_step: 300.0,
+            eager_upload_bytes_per_step: 80_000.0,
+            planned_upload_bytes_per_step: 300.0,
+            resident_kib: 64.0,
             eager_tok_per_s: 100.0,
             planned_tok_per_s: 300.0,
             tokens_match: true,
@@ -131,6 +164,16 @@ mod tests {
         assert!(md.contains("35.5x"));
         assert!(md.contains("identical"));
         assert!(md.contains("59->4.0"));
+        assert!(md.contains("80000->300 (267x)"));
+    }
+
+    #[test]
+    fn upload_shrink_ratio() {
+        let r = row();
+        assert!((r.upload_shrink() - 80_000.0 / 300.0).abs() < 1e-9);
+        let mut z = row();
+        z.planned_upload_bytes_per_step = 0.0;
+        assert!(z.upload_shrink() > 1e9, "zero planned upload guards");
     }
 
     #[test]

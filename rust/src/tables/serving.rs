@@ -10,10 +10,13 @@ use crate::webgpu::DISPATCH_PHASES;
 
 /// Throughput-scaling table: one row per session count.
 pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
+    let mode = rows.first().map(|(_, r)| r.exec_mode()).unwrap_or("eager");
     let mut t = TableDoc::new(
         "S1",
-        "Serving throughput vs concurrent sessions (shared substrate, \
-         interleaved decode, coalesced per-round sync)",
+        &format!(
+            "Serving throughput vs concurrent sessions (exec mode: {mode}; \
+             shared substrate, interleaved decode, coalesced per-round sync)"
+        ),
         &[
             "sessions",
             "tokens",
@@ -24,6 +27,8 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
             "dispatch (us/tok)",
             "sync (us/tok)",
             "gpu (us/tok)",
+            "upload (B/step)",
+            "resident (KiB/sess)",
             "pool HW (KiB)",
         ],
     );
@@ -39,6 +44,8 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
             f1(r.us_per_token(r.phase_total_ns())),
             f1(r.us_per_token(r.sync_virtual_ns)),
             f1(r.us_per_token(r.kernel_virtual_ns)),
+            f1(r.upload_bytes_per_step()),
+            f1(r.resident_bytes as f64 / 1024.0),
             f1(r.pool_high_water_bytes as f64 / 1024.0),
         ]);
     }
@@ -49,6 +56,12 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
          paper's wall (only fusion or kernel batching lowers them).",
     );
     t.note("speedup = aggregate tok/s relative to the N=1 row.");
+    t.note(
+        "upload = host bytes per decode step. Planned mode keeps KV caches \
+         device-resident (the 'resident' column, per session) and uploads \
+         only the token embedding + position uniforms; eager re-uploads \
+         activations and both caches every step.",
+    );
     t
 }
 

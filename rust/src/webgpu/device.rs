@@ -239,6 +239,25 @@ impl Device {
         Ok(())
     }
 
+    /// `encoder.clearBuffer`: zero-fill a buffer device-side. No host
+    /// bytes cross the bus (stats.bytes_written is untouched) — the cost
+    /// is a small fixed charge, like any other queue operation. Used when
+    /// a recycled pool buffer becomes a fresh session's KV cache.
+    pub fn clear_buffer(&mut self, id: BufferId) -> Result<()> {
+        let destroyed = self
+            .buffers
+            .get(&id)
+            .map(|b| b.destroyed)
+            .ok_or_else(|| Error::InvalidResource(format!("buffer {id:?}")))?;
+        if destroyed {
+            return Err(self.fail(Error::Validation("clear of destroyed buffer".into())));
+        }
+        self.buffers.get_mut(&id).unwrap().data.fill(0);
+        let cost = self.jitter.apply(WRITE_FIXED_NS, self.profile.jitter_pct);
+        self.clock.advance_cpu(cost);
+        Ok(())
+    }
+
     /// Raw (non-mapped) access for host-side ops — models torch-webgpu's
     /// CPU-side tensor metadata path, NOT a GPU readback (no sync cost).
     /// Only `map_read` models the synchronizing readback.

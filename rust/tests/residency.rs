@@ -1,0 +1,327 @@
+//! Device-resident KV cache integration tests: per-session cache
+//! isolation, reset-then-reuse at the capacity boundary, leak detection
+//! through the bounded pool's high-water stats, the evict-to-host spill
+//! path, and the upload-bytes acceptance bar (>= 10x shrink vs eager).
+
+use wdb::engine::{Engine, EngineConfig, ExecMode};
+use wdb::model::ByteTokenizer;
+use wdb::runtime::Registry;
+use wdb::serve::{ServeConfig, ServingEngine, SessionState};
+
+const SEED: u64 = 0x6E51;
+
+fn registry() -> Registry {
+    Registry::builtin().expect("builtin registry")
+}
+
+fn serving(reg: &Registry, exec: ExecMode, max_concurrent: usize) -> ServingEngine<'_> {
+    let cfg = EngineConfig { exec, ..EngineConfig::tiny_fused() };
+    let mut se = ServingEngine::new(reg, ServeConfig { engine: cfg, max_concurrent })
+        .expect("serving engine");
+    se.reseed(SEED);
+    se
+}
+
+/// One encode+finish step of a detached session through the public API.
+fn step_once(se: &mut ServingEngine, s: &mut SessionState) {
+    let (tok, was_prompt) = s.take_input().expect("input token");
+    let h = se.encode_session(s, tok, was_prompt).expect("encode");
+    se.finish_session(s, h).expect("finish");
+}
+
+/// Drive one detached session to completion through the public
+/// encode/finish API.
+fn drive(se: &mut ServingEngine, s: &mut SessionState) -> Vec<usize> {
+    while !s.finished() {
+        step_once(se, s);
+    }
+    s.tokens.clone()
+}
+
+/// Acceptance: with resident caches, per-step host upload bytes drop from
+/// O(layers x max_seq x kv_heads x head_dim) to the token embedding +
+/// position uniforms — at least 10x on the default decode workload — and
+/// the measured per-step traffic matches the plan's static accounting.
+#[test]
+fn resident_caches_shrink_upload_bytes_at_least_10x() {
+    let reg = registry();
+    let prompt = ByteTokenizer::new(512).paper_prompt();
+    let tokens = 6;
+    let run = |exec: ExecMode| {
+        let mut se = serving(&reg, exec, 1);
+        se.submit(&prompt, tokens).unwrap();
+        let report = se.run_to_completion().unwrap();
+        (report, se)
+    };
+    let (eager, _) = run(ExecMode::Eager);
+    let (planned, se) = run(ExecMode::Planned);
+    assert_eq!(eager.total_tokens, planned.total_tokens);
+    let e = eager.upload_bytes_per_step();
+    let p = planned.upload_bytes_per_step();
+    assert!(
+        p * 10.0 <= e,
+        "upload bytes/step must shrink >= 10x: eager {e:.0} vs planned {p:.0}"
+    );
+    // The measured planned traffic is exactly the plan's StepInput bytes
+    // (token embedding + 3 position uniforms + rope frequencies).
+    let plan = se.executor.plan().expect("planned engine has a plan");
+    assert_eq!(p, plan.stats.upload_bytes_per_step as f64);
+    assert!(plan.stats.persistent_values > 0);
+    assert_eq!(planned.resident_bytes, plan.stats.resident_bytes as u64);
+    // Eager still pays the cache round-trip: it uploads at least the full
+    // cache set every step.
+    assert!(e >= plan.stats.resident_bytes as f64);
+}
+
+/// Cross-session isolation: two live sessions own disjoint cache buffers,
+/// and stepping one session leaves the other's cache bytes bit-identical.
+#[test]
+fn session_cache_updates_never_touch_other_sessions_buffers() {
+    let reg = registry();
+    let mut se = serving(&reg, ExecMode::Planned, 2);
+    let mut a = se.create_session(vec![65, 66, 67], 6, 1);
+    let mut b = se.create_session(vec![90, 91], 6, 2);
+
+    step_once(&mut se, &mut a);
+    step_once(&mut se, &mut b);
+
+    let bufs_a = a.kv.as_device().expect("A promoted to device").buffers.clone();
+    let bufs_b = b.kv.as_device().expect("B promoted to device").buffers.clone();
+    assert!(
+        bufs_a.iter().all(|x| !bufs_b.contains(x)),
+        "live sessions must own disjoint cache buffers"
+    );
+
+    // Snapshot A's cache bytes, then advance only B.
+    let snap: Vec<Vec<u8>> = bufs_a
+        .iter()
+        .map(|&buf| se.executor.device.peek_buffer(buf).unwrap().to_vec())
+        .collect();
+    step_once(&mut se, &mut b);
+    step_once(&mut se, &mut b);
+    for (i, &buf) in bufs_a.iter().enumerate() {
+        assert_eq!(
+            se.executor.device.peek_buffer(buf).unwrap(),
+            snap[i].as_slice(),
+            "B's cache_update dispatches wrote into A's buffer {i}"
+        );
+    }
+    // And A still decodes correctly afterwards.
+    let ta = drive(&mut se, &mut a);
+    let mut solo = serving(&reg, ExecMode::Planned, 1);
+    let mut fresh = solo.create_session(vec![65, 66, 67], 6, 9);
+    assert_eq!(ta, drive(&mut solo, &mut fresh), "A corrupted by B's steps");
+}
+
+/// Reset-then-reuse at the max_seq boundary: fill a session's cache to
+/// capacity, confirm the capacity guard fires, reset (device buffers
+/// released + zeroed on realloc), and decode the same stream again.
+#[test]
+fn reset_then_reuse_at_max_seq_boundary() {
+    let reg = registry();
+    let dims = wdb::fx::builder::GraphDims::qwen_tiny();
+    let mut se = serving(&reg, ExecMode::Planned, 1);
+    let prompt = vec![65usize, 66];
+    let n_new = dims.max_seq - prompt.len() + 1; // steps == max_seq exactly
+    let mut s = se.create_session(prompt.clone(), n_new, 1);
+    let first = drive(&mut se, &mut s);
+    assert_eq!(s.pos, dims.max_seq, "cache filled to the boundary");
+
+    // One more step must hit the capacity guard, not corrupt memory.
+    let err = se.encode_session(&mut s, 5, false);
+    assert!(err.is_err(), "encode past max_seq must error");
+
+    // Full reset: host state rewound AND device cache released.
+    se.reset_session(&mut s).unwrap();
+    assert_eq!(s.pos, 0);
+    assert!(s.tokens.is_empty());
+    assert!(!s.kv.is_device(), "reset must release the device cache set");
+
+    let again = drive(&mut se, &mut s);
+    assert_eq!(again, first, "reset session must reproduce the stream");
+}
+
+/// Leak detection: cache sets return to the pool on retire, so repeated
+/// session batches keep the pool's created-buffer count and high-water
+/// bytes flat, outstanding bytes at zero, and the arena's live-set count
+/// balanced.
+#[test]
+fn retired_cache_sets_recycle_with_flat_high_water() {
+    let reg = registry();
+    let mut se = serving(&reg, ExecMode::Planned, 2);
+    se.submit(&[65, 66], 4).unwrap();
+    se.submit(&[70, 71], 4).unwrap();
+    se.run_to_completion().unwrap();
+    let ps1 = se.executor.pool.stats();
+    assert_eq!(ps1.outstanding_bytes, 0, "retire must release cache sets");
+    assert!(ps1.created > 0);
+
+    for batch in 0..3 {
+        se.submit(&[80 + batch, 81], 4).unwrap();
+        se.submit(&[85, 86 + batch], 4).unwrap();
+        se.run_to_completion().unwrap();
+    }
+    let ps2 = se.executor.pool.stats();
+    assert_eq!(
+        ps2.created, ps1.created,
+        "later batches must recycle cache buffers, not create"
+    );
+    assert_eq!(
+        ps2.high_water_bytes, ps1.high_water_bytes,
+        "cache-set high water must stay flat across batches (leak!)"
+    );
+    assert_eq!(ps2.outstanding_bytes, 0);
+    let arena = se.executor.kv_arena().expect("planned engine has a cache arena");
+    assert_eq!(arena.stats().sets_live(), 0, "every allocated set released");
+    assert_eq!(se.executor.device.stats.validation_errors, 0);
+    assert_eq!(se.drain_finished().len(), 8);
+}
+
+/// Steady-state session churn is fully allocation-free: after the first
+/// batch warms the pool and the per-cache-set bind groups, further batches
+/// create zero device buffers and zero bind groups.
+#[test]
+fn session_churn_creates_no_resources_after_warmup() {
+    let reg = registry();
+    let mut se = serving(&reg, ExecMode::Planned, 2);
+    se.submit(&[65], 3).unwrap();
+    se.submit(&[66], 3).unwrap();
+    se.run_to_completion().unwrap();
+    let bufs0 = se.executor.device.stats.buffers_created;
+    let groups0 = se.executor.device.stats.bind_groups_created;
+    se.submit(&[67], 3).unwrap();
+    se.submit(&[68], 3).unwrap();
+    se.run_to_completion().unwrap();
+    assert_eq!(se.executor.device.stats.buffers_created, bufs0, "buffers leaked");
+    assert_eq!(
+        se.executor.device.stats.bind_groups_created, groups0,
+        "recycled cache sets must hit the bind-group cache"
+    );
+    // The per-cache-set group map is bounded by the distinct buffer
+    // orderings, which reverse-order release keeps at the concurrency cap.
+    let runner = se.executor.plan_runner().expect("planned");
+    assert_eq!(runner.registered_cache_sets(), 2, "group map grew under churn");
+}
+
+/// Cache-aware admission: when the bounded pool can back only one resident
+/// cache set, excess requests stay queued (deferred to the retiring
+/// session's recycled set) instead of poisoning the run mid-encode; a cap
+/// too small for even one set surfaces the error instead of spinning.
+#[test]
+fn cache_pressure_defers_admission_instead_of_failing() {
+    let reg = registry();
+    let dims = wdb::fx::builder::GraphDims::qwen_tiny();
+    let set_bytes = 2 * dims.layers * dims.max_seq * dims.kv_heads * dims.head_dim * 4;
+
+    let mut cfg = EngineConfig { exec: ExecMode::Planned, ..EngineConfig::tiny_fused() };
+    cfg.pool_cap_bytes = Some(set_bytes); // exactly ONE session's set
+    let mut se =
+        ServingEngine::new(&reg, ServeConfig { engine: cfg, max_concurrent: 2 }).unwrap();
+    se.reseed(SEED);
+    let ida = se.submit(&[65, 66], 3).unwrap();
+    let idb = se.submit(&[70, 71], 3).unwrap();
+    let report = se.run_to_completion().expect("pressure must defer, not fail");
+    assert_eq!(report.sessions, 2, "both requests complete");
+    let done = se.drain_finished();
+    assert_eq!(done[0].id, ida, "FIFO under deferred admission");
+    assert_eq!(done[1].id, idb);
+    assert_eq!(
+        se.executor.pool.stats().total_bytes,
+        set_bytes,
+        "second session must run on the retired session's recycled set"
+    );
+
+    // Below one set, the very first admission must error (not spin).
+    let mut tiny = EngineConfig { exec: ExecMode::Planned, ..EngineConfig::tiny_fused() };
+    tiny.pool_cap_bytes = Some(set_bytes - 1);
+    let mut se2 =
+        ServingEngine::new(&reg, ServeConfig { engine: tiny, max_concurrent: 1 }).unwrap();
+    se2.submit(&[65], 2).unwrap();
+    assert!(se2.run_to_completion().is_err(), "sub-set cap must surface");
+}
+
+/// Evict-to-host spill path: a session parked mid-generation releases its
+/// device buffers, keeps its context host-side, and resumes bit-identically
+/// after transparent re-hydration.
+#[test]
+fn evict_mid_generation_resumes_bit_identically() {
+    let reg = registry();
+    let prompt = vec![72usize, 101, 108];
+    let tokens = 7;
+
+    let mut truth_se = serving(&reg, ExecMode::Planned, 1);
+    let mut truth = truth_se.create_session(prompt.clone(), tokens, 1);
+    let expect = drive(&mut truth_se, &mut truth);
+
+    let mut se = serving(&reg, ExecMode::Planned, 1);
+    let mut s = se.create_session(prompt.clone(), tokens, 2);
+    for _ in 0..3 {
+        let (tok, was_prompt) = s.take_input().unwrap();
+        let h = se.encode_session(&mut s, tok, was_prompt).unwrap();
+        se.finish_session(&mut s, h).unwrap();
+    }
+    let outstanding_before = se.executor.pool.stats().outstanding_bytes;
+    se.evict_session_cache(&mut s).unwrap();
+    assert!(!s.kv.is_device(), "evicted session is host-resident");
+    assert!(
+        se.executor.pool.stats().outstanding_bytes < outstanding_before,
+        "evict must return the cache set to the pool"
+    );
+    let host = s.kv.as_host().expect("spilled caches");
+    assert_eq!(host.len(), wdb::fx::builder::GraphDims::qwen_tiny().layers);
+    assert!(
+        host.iter().any(|(k, _)| k.as_f32().unwrap().iter().any(|&x| x != 0.0)),
+        "spilled cache must carry the session's context"
+    );
+
+    let got = drive(&mut se, &mut s);
+    assert_eq!(got, expect, "evict/re-hydrate changed the token stream");
+}
+
+/// Engine::generate recycles its session's cache set between runs (no
+/// leak across generates) and Engine::reset releases it explicitly.
+#[test]
+fn engine_generate_and_reset_recycle_cache_sets() {
+    let reg = registry();
+    let mut e = Engine::new(&reg, EngineConfig::tiny_planned()).unwrap();
+    let _ = e.generate(&[65, 66], 3).unwrap();
+    let created0 = e.executor.device.stats.buffers_created;
+    for _ in 0..3 {
+        let _ = e.generate(&[65, 66], 3).unwrap();
+    }
+    assert_eq!(
+        e.executor.device.stats.buffers_created, created0,
+        "back-to-back generates must recycle the cache set"
+    );
+    e.reset().unwrap();
+    assert_eq!(e.executor.pool.stats().outstanding_bytes, 0, "reset releases caches");
+    let arena = e.executor.kv_arena().unwrap();
+    assert_eq!(arena.stats().sets_live(), 0);
+}
+
+/// The serving default is planned replay with resident caches; eager stays
+/// available and bit-identical (the paper's pathology remains runnable).
+#[test]
+fn serving_default_is_planned_and_eager_stays_equivalent() {
+    assert_eq!(ExecMode::serving_default(), ExecMode::Planned);
+    let reg = registry();
+    let cfg = EngineConfig::tiny_serving();
+    assert_eq!(cfg.exec, ExecMode::Planned);
+    let prompt = ByteTokenizer::new(512).paper_prompt();
+    let run = |exec: ExecMode| {
+        let mut se = serving(&reg, exec, 2);
+        se.submit(&prompt, 5).unwrap();
+        se.submit(&prompt, 5).unwrap();
+        let report = se.run_to_completion().unwrap();
+        let toks: Vec<Vec<usize>> = se.drain_finished().into_iter().map(|s| s.tokens).collect();
+        (toks, report)
+    };
+    let (eager_toks, eager_rep) = run(ExecMode::Eager);
+    let (planned_toks, planned_rep) = run(ExecMode::Planned);
+    assert_eq!(eager_toks, planned_toks, "modes must stay bit-identical");
+    assert_eq!(eager_rep.exec_mode(), "eager");
+    assert_eq!(planned_rep.exec_mode(), "planned");
+    assert!(planned_rep.planned);
+    assert!(planned_rep.resident_bytes > 0);
+    assert_eq!(eager_rep.resident_bytes, 0);
+}
