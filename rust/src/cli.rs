@@ -161,20 +161,29 @@ Commands:
       [--measured-kernel-time]    run the real tiny engine through PJRT
   workloads                       CNN/ViT/U-Net dispatch streams (Table 1*)
   batch-sweep [--reps 5]          empirical crossover validation (App. F)
-  serve [--requests 16] [--tokens 10] [--profile dawn]
-        [--exec-mode planned]     FIFO request loop over the real engine
-                                  (planned replay + resident KV caches is
-                                  the serving default; eager opt-in)
+  serve [--requests 16] [--tokens 10] [--concurrent 4] [--profile dawn]
+        [--exec-mode planned] [--batch-width 4 | --no-batch]
+                                  FIFO request loop over the serving engine
+                                  (planned replay + resident KV caches +
+                                  batched rounds is the serving default;
+                                  eager / interleaved opt-in). The report
+                                  header prints the exec mode and batch
+                                  width that actually ran.
   serve-bench [--sessions 1,2,4,8] [--tokens 16] [--profile dawn]
-              [--exec-mode planned] [--out DIR]
-                                  multi-session serving scaling table:
+              [--exec-mode planned] [--batch-width 4 | --no-batch]
+              [--out DIR]         multi-session serving scaling table:
                                   aggregate tok/s + per-phase attribution
-                                  + upload/resident bytes vs session count
+                                  + dispatches/round + upload/resident
+                                  bytes vs session count. With batching
+                                  on, hard-gates batched dispatches/round
+                                  <= interleaved/2 at every N >= 2.
   plan-bench [--tokens 8] [--dps 16] [--profile dawn] [--out DIR]
                                   table P1: eager vs planned per-op
                                   framework overhead across workloads x
                                   {fused, unfused}, plan-build vs replay
-                                  cost attribution, token-parity check";
+                                  cost attribution, token-parity check,
+                                  plus the batched-vs-interleaved N=4
+                                  framework-overhead delta row";
 
 fn dims_by_model(name: &str) -> Result<GraphDims> {
     Ok(match name {
@@ -442,54 +451,100 @@ fn cmd_batch_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the batched-decode width from `--batch-width` / `--no-batch`
+/// (default: [`crate::engine::DEFAULT_BATCH_WIDTH`]). 0 disables batching.
+fn batch_width_from_flags(args: &Args) -> Result<usize> {
+    if args.has("no-batch") {
+        if args.has("batch-width") {
+            return Err(Error::Graph(
+                "--no-batch conflicts with --batch-width".into(),
+            ));
+        }
+        return Ok(0);
+    }
+    match args.flag("batch-width") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| Error::Graph(format!("bad --batch-width '{v}'"))),
+        None => Ok(crate::engine::DEFAULT_BATCH_WIDTH),
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::serve::{ServeConfig, ServingEngine};
     use std::time::Instant;
     let registry = Registry::open()?;
     let n_requests = args.flag_usize("requests", 16);
     let tokens = args.flag_usize("tokens", 10);
+    let concurrent = args.flag_usize("concurrent", 4).max(1);
     let profile = profile_by_name(args.flag("profile").unwrap_or("dawn"))?;
     // Planned replay with device-resident KV caches is the serving
     // default; --exec-mode eager keeps the pathology path benchmarkable.
+    // Batched rounds are the default above 1 active session; --no-batch
+    // restores interleaved per-session replays.
     let exec = match args.flag("exec-mode") {
         Some(m) => exec_mode_by_name(m)?,
         None => crate::engine::ExecMode::serving_default(),
     };
-    let mut engine = Engine::new(
+    let batch_width = batch_width_from_flags(args)?;
+    let mut se = ServingEngine::new(
         &registry,
-        EngineConfig { profile: profile.clone(), exec, ..EngineConfig::tiny_fused() },
+        ServeConfig {
+            engine: EngineConfig {
+                profile: profile.clone(),
+                exec,
+                batch_width,
+                ..EngineConfig::tiny_fused()
+            },
+            max_concurrent: concurrent,
+        },
     )?;
+    se.reseed(0x5E11);
     let tok = ByteTokenizer::new(registry.config("qwen-tiny")?.vocab);
+    for i in 0..n_requests {
+        let prompt =
+            tok.encode(&format!("request {i}: the capital of France is"))[..5 + i % 4].to_vec();
+        se.submit(&prompt, tokens)?;
+    }
 
-    // FIFO queue of varied prompts (batch=1 — the paper's regime; batched
-    // serving would change the conclusions, per Appendix F).
-    let prompts: Vec<Vec<usize>> = (0..n_requests)
-        .map(|i| tok.encode(&format!("request {i}: the capital of France is"))[..5 + i % 4].to_vec())
-        .collect();
-
+    let wall0 = Instant::now();
+    let report = se.run_to_completion()?;
+    // Self-describing report header: exec mode (and batch width) come from
+    // the ServeReport itself, so bench artifacts and logs name the path
+    // that actually ran.
     println!(
-        "Serving {n_requests} requests x {tokens} tokens, batch=1 FIFO, \
-         profile {}, exec mode {exec:?}\n",
+        "serve report: exec mode {} | {} requests x {tokens} tokens | \
+         {} concurrent | profile {}",
+        report.mode_label(),
+        report.sessions,
+        concurrent,
         profile.name
     );
-    let wall0 = Instant::now();
-    let mut latencies_ms: Vec<f64> = Vec::with_capacity(n_requests);
-    let mut total_tokens = 0usize;
-    let t0 = engine.executor.device.clock.now_ns();
-    for (i, prompt) in prompts.iter().enumerate() {
-        engine.reseed(0x5E11 + i as u64);
-        let r = engine.generate(prompt, tokens)?;
-        latencies_ms.push(r.total_ns as f64 / 1e6);
-        total_tokens += r.tokens.len();
-    }
-    let total_virtual_ms = (engine.executor.device.clock.now_ns() - t0) as f64 / 1e6;
-    let mut sorted = latencies_ms.clone();
+    println!(
+        "rounds: {} ({:.1} dispatches/round)",
+        report.rounds,
+        report.dispatches_per_round()
+    );
+    let done = se.drain_finished();
+    let mut sorted: Vec<f64> = done
+        .iter()
+        .map(|s| s.metrics.finished_ns.saturating_sub(s.metrics.enqueued_ns) as f64 / 1e6)
+        .collect();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| sorted[(p * (sorted.len() - 1) as f64).round() as usize];
-    println!("requests completed: {n_requests} ({total_tokens} tokens)");
-    println!("latency p50 / p95 / max: {:.1} / {:.1} / {:.1} ms",
-             pct(0.50), pct(0.95), sorted[sorted.len() - 1]);
-    println!("aggregate throughput: {:.1} tok/s (virtual)",
-             total_tokens as f64 / (total_virtual_ms / 1e3));
+    println!("requests completed: {} ({} tokens)", report.sessions, report.total_tokens);
+    if !sorted.is_empty() {
+        println!(
+            "request latency p50 / p95 / max: {:.1} / {:.1} / {:.1} ms",
+            pct(0.50),
+            pct(0.95),
+            sorted[sorted.len() - 1]
+        );
+    }
+    println!(
+        "aggregate throughput: {:.1} tok/s (virtual); mean TTFT {:.1} ms",
+        report.agg_tok_per_s, report.mean_ttft_ms
+    );
     println!("real wall: {:.1} s on this host", wall0.elapsed().as_secs_f64());
     Ok(())
 }
@@ -523,13 +578,19 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         Some(m) => exec_mode_by_name(m)?,
         None => crate::engine::ExecMode::serving_default(),
     };
+    let batch_width = batch_width_from_flags(args)?;
     let tok = ByteTokenizer::new(registry.config("qwen-tiny")?.vocab);
     let prompt = tok.paper_prompt();
-    let ec = EngineConfig { profile: profile.clone(), exec, ..EngineConfig::tiny_fused() };
+    let ec = EngineConfig {
+        profile: profile.clone(),
+        exec,
+        batch_width,
+        ..EngineConfig::tiny_fused()
+    };
 
     println!(
         "Serving scaling bench: {} tokens/session, prompt {} tokens, profile {}, \
-         exec mode {exec:?}\n",
+         exec mode {exec:?}, batch width {batch_width}\n",
         tokens,
         prompt.len(),
         profile.name
@@ -575,10 +636,11 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 
     if let Some(out) = args.flag("out") {
         let dir = std::path::PathBuf::from(out);
-        // Mode-qualified names: planned + eager runs into one --out dir
-        // must not overwrite each other's trend data.
+        // Mode-qualified names: planned (batched or interleaved) + eager
+        // runs into one --out dir must not overwrite each other's trends.
         let mode = match exec {
             crate::engine::ExecMode::Eager => "eager",
+            crate::engine::ExecMode::Planned if batch_width >= 2 => "planned_batched",
             crate::engine::ExecMode::Planned => "planned",
         };
         for t in [&scaling, &phases] {
@@ -586,6 +648,48 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 write_results(&dir, &format!("serve_bench_{}_{mode}", t.id), &t.to_json())?;
             eprintln!("wrote {}", path.display());
         }
+    }
+
+    // Batched-vs-interleaved delta + the HARD dispatch gate: for every
+    // multi-session row, an interleaved (--no-batch) twin must pay at
+    // least 2x the batched dispatches per round. Runs after the artifact
+    // dump so a failing gate still leaves the JSON for diagnosis.
+    if exec == crate::engine::ExecMode::Planned && batch_width >= 2 {
+        println!();
+        for (n, r) in &rows {
+            if *n < 2 {
+                continue;
+            }
+            let mut twin_cfg = ec.clone();
+            twin_cfg.batch_width = 0;
+            let mut twin = ServingEngine::new(
+                &registry,
+                ServeConfig { engine: twin_cfg, max_concurrent: *n },
+            )?;
+            twin.reseed(SEED);
+            for _ in 0..*n {
+                twin.submit(&prompt, tokens)?;
+            }
+            let ir = twin.run_to_completion()?;
+            println!(
+                "N={n}: batched {:.1} vs interleaved {:.1} dispatches/round \
+                 ({:.1}x fewer), framework {:.2} -> {:.2} us/tok",
+                r.dispatches_per_round(),
+                ir.dispatches_per_round(),
+                ir.dispatches_per_round() / r.dispatches_per_round().max(1e-9),
+                ir.us_per_token(ir.framework_virtual_ns),
+                r.us_per_token(r.framework_virtual_ns),
+            );
+            if r.dispatches_per_round() * 2.0 > ir.dispatches_per_round() {
+                return Err(Error::Graph(format!(
+                    "batched dispatch gate failed at N={n}: {:.1} dispatches/round \
+                     > interleaved {:.1} / 2",
+                    r.dispatches_per_round(),
+                    ir.dispatches_per_round()
+                )));
+            }
+        }
+        println!("batched dispatch gate: OK (batched <= interleaved/2 at every N >= 2)");
     }
     Ok(())
 }
@@ -710,7 +814,62 @@ fn cmd_plan_bench(args: &Args) -> Result<()> {
         }
     }
 
-    let table = plan_table(&rows);
+    // Batched vs interleaved framework-overhead delta at N=4 sessions:
+    // both runs are PLANNED; the delta is per-round dispatch count and
+    // per-token framework cost, the Appendix F amortization.
+    let run_n4 = |bw: usize| -> Result<(Vec<Vec<usize>>, crate::serve::ServeReport)> {
+        use crate::serve::{ServeConfig, ServingEngine};
+        let cfg = EngineConfig {
+            profile: profile.clone(),
+            exec: ExecMode::Planned,
+            dispatches_per_submit: dps,
+            batch_width: bw,
+            ..EngineConfig::tiny_fused()
+        };
+        let mut se =
+            ServingEngine::new(&registry, ServeConfig { engine: cfg, max_concurrent: 4 })?;
+        se.reseed(SEED);
+        for _ in 0..4 {
+            se.submit(&prompt, tokens)?;
+        }
+        let report = se.run_to_completion()?;
+        let toks = se.drain_finished().into_iter().map(|s| s.tokens).collect();
+        Ok((toks, report))
+    };
+    let (i_toks, i_rep) = run_n4(0)?;
+    let (b_toks, b_rep) = run_n4(crate::engine::DEFAULT_BATCH_WIDTH)?;
+    let batched_match = i_toks == b_toks;
+
+    let mut table = plan_table(&rows);
+    table.section("batched vs interleaved (planned serving, N=4 sessions)");
+    table.row(vec![
+        "qwen-tiny N=4".into(),
+        "batched".into(),
+        format!("{:.0}->{:.0}/rnd", i_rep.dispatches_per_round(), b_rep.dispatches_per_round()),
+        format!("{:.2}", i_rep.us_per_token(i_rep.framework_virtual_ns)),
+        format!("{:.2}", b_rep.us_per_token(b_rep.framework_virtual_ns)),
+        format!(
+            "{:.1}x",
+            i_rep.us_per_token(i_rep.framework_virtual_ns)
+                / b_rep.us_per_token(b_rep.framework_virtual_ns).max(1e-9)
+        ),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.1}", i_rep.agg_tok_per_s),
+        format!("{:.1}", b_rep.agg_tok_per_s),
+        format!("{:.2}x", b_rep.agg_tok_per_s / i_rep.agg_tok_per_s.max(1e-9)),
+        if batched_match { "identical".into() } else { "DIVERGED".into() },
+    ]);
+    table.note(
+        "batched-vs-interleaved row: both runs are planned at N=4 concurrent \
+         sessions; the 'eager' columns hold the interleaved run and the \
+         'planned' columns the batched run. Its framework cells are us per \
+         TOKEN (per-op cost is flat — issuing ~1/4 the dispatches per round \
+         is the win) and disp/step shows dispatches per ROUND.",
+    );
     println!("{}", table.to_markdown());
 
     // Persist the trend artifacts BEFORE the acceptance gates: a failing
@@ -728,6 +887,11 @@ fn cmd_plan_bench(args: &Args) -> Result<()> {
                 r.workload, r.fusion
             )));
         }
+    }
+    if !batched_match {
+        return Err(Error::Graph(
+            "N=4 batched serving token streams diverged from interleaved planned".into(),
+        ));
     }
     // Acceptance summary on the reference (fused qwen-tiny) row.
     if let Some(r) = rows.iter().find(|r| r.workload == "qwen-tiny" && r.fusion == "fused") {
@@ -801,6 +965,23 @@ mod tests {
         assert_eq!(exec_mode_by_name("planned").unwrap(), ExecMode::Planned);
         assert!(exec_mode_by_name("jit").is_err());
         assert_eq!(ExecMode::serving_default(), ExecMode::Planned);
+    }
+
+    #[test]
+    fn batch_width_flags_resolve() {
+        let a = parse_args(&argv(&["serve"]));
+        assert_eq!(
+            batch_width_from_flags(&a).unwrap(),
+            crate::engine::DEFAULT_BATCH_WIDTH
+        );
+        let a = parse_args(&argv(&["serve", "--batch-width", "6"]));
+        assert_eq!(batch_width_from_flags(&a).unwrap(), 6);
+        let a = parse_args(&argv(&["serve", "--no-batch"]));
+        assert_eq!(batch_width_from_flags(&a).unwrap(), 0);
+        let a = parse_args(&argv(&["serve", "--no-batch", "--batch-width", "2"]));
+        assert!(batch_width_from_flags(&a).is_err());
+        let a = parse_args(&argv(&["serve", "--batch-width", "wide"]));
+        assert!(batch_width_from_flags(&a).is_err());
     }
 
     #[test]

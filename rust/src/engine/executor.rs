@@ -27,7 +27,8 @@ use std::time::Instant;
 use crate::fx::graph::FxGraph;
 use crate::fx::node::{HostOp, OpKind, ValueId};
 use crate::plan::{
-    CacheArena, DeviceKvCache, ExecutionPlan, PipelinePool, PlanConfig, PlanRunner, Planner,
+    BatchedRunner, CacheArena, DeviceKvCache, ExecutionPlan, PipelinePool, PlanConfig,
+    PlanRunner, Planner, ReplayDelta,
 };
 use crate::runtime::hostops;
 use crate::runtime::registry::Registry;
@@ -55,6 +56,11 @@ pub struct GraphExecutor<'r> {
     /// prepare time — uploaded once, bound directly per dispatch. One copy
     /// serves every session and both execution modes.
     pinned: HashMap<ValueId, BufferId>,
+    /// The same pinned weight buffers keyed by graph-input NAME, so other
+    /// graphs over the same weights (the batched decode variant) can bind
+    /// the one uploaded copy instead of duplicating it. ValueIds are
+    /// graph-local; names are the cross-graph identity.
+    pinned_by_name: HashMap<String, BufferId>,
     /// PERF: eager bind-group cache (the paper's "bind group caching"
     /// experiment), probed with a reusable scratch key instead of building
     /// a fresh `Vec` per dispatch.
@@ -66,6 +72,11 @@ pub struct GraphExecutor<'r> {
     borrowed_scratch: Vec<(usize, BufferId)>,
     /// Planned-mode state: present after [`GraphExecutor::enable_plan`].
     planned: Option<PlanRunner>,
+    /// Batched-round state: present after
+    /// [`GraphExecutor::enable_batched_plan`]. Coexists with `planned` —
+    /// the serving engine uses the single-session plan for 1-active-session
+    /// rounds and the batched plan above that.
+    batched: Option<BatchedRunner>,
     /// Session KV-cache allocator (planned mode with persistent values):
     /// allocates each session's device-resident cache set from `pool`.
     kv_arena: Option<CacheArena>,
@@ -87,12 +98,14 @@ impl<'r> GraphExecutor<'r> {
             pipelines: PipelinePool::new(),
             pool: BufferPool::new(None),
             pinned: HashMap::new(),
+            pinned_by_name: HashMap::new(),
             bind_cache: HashMap::new(),
             key_scratch: Vec::new(),
             in_scratch: Vec::new(),
             out_scratch: Vec::new(),
             borrowed_scratch: Vec::new(),
             planned: None,
+            batched: None,
             kv_arena: None,
             framework_ns_per_op,
             dispatch_count: 0,
@@ -118,9 +131,23 @@ impl<'r> GraphExecutor<'r> {
             })?;
             self.device.write_buffer(buf, 0, t.data.as_bytes())?;
             self.pinned.insert(vid, buf);
+            self.pinned_by_name.insert(name.clone(), buf);
             pinned += 1;
         }
         Ok(pinned)
+    }
+
+    /// Derive a ValueId -> pinned-buffer map for ANY graph over the same
+    /// weight names (graphs have their own ValueId spaces; the uploaded
+    /// buffers are shared by name).
+    fn pinned_for(&self, graph: &FxGraph) -> HashMap<ValueId, BufferId> {
+        let mut map = HashMap::with_capacity(self.pinned_by_name.len());
+        for (name, &vid) in &graph.inputs {
+            if let Some(&buf) = self.pinned_by_name.get(name) {
+                map.insert(vid, buf);
+            }
+        }
+        map
     }
 
     /// Create pipelines for every kernel a graph uses (off the request
@@ -146,6 +173,70 @@ impl<'r> GraphExecutor<'r> {
         self.kv_arena = Some(CacheArena::new(runner.plan.persistent.clone()));
         self.planned = Some(runner);
         Ok(())
+    }
+
+    /// Compile the BATCHED decode graph into a plan and materialize its
+    /// [`BatchedRunner`] (cache-set-table binding, padding set, `[W,vocab]`
+    /// logits ring). Coexists with the single-session plan: the serving
+    /// engine replays this one when a round has >= 2 active sessions.
+    /// Weight inputs bind the buffers already pinned for the primary graph
+    /// (matched by name) — no duplicate weight uploads.
+    pub fn enable_batched_plan(
+        &mut self,
+        graph: &FxGraph,
+        cfg: PlanConfig,
+        width: usize,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let v0 = self.device.clock.now_ns();
+        let pinned_map = self.pinned_for(graph);
+        let plan = {
+            let GraphExecutor { device, registry, pipelines, .. } = &mut *self;
+            Planner::new(*registry).compile(device, pipelines, graph, &pinned_map, &cfg)?
+        };
+        let mut runner = BatchedRunner::materialize(&mut self.device, plan, width)?;
+        runner.inner_mut().build_virtual_ns = self.device.clock.now_ns() - v0;
+        runner.inner_mut().build_real_ns = t0.elapsed().as_nanos() as u64;
+        self.batched = Some(runner);
+        Ok(())
+    }
+
+    pub fn batched_runner(&self) -> Option<&BatchedRunner> {
+        self.batched.as_ref()
+    }
+
+    /// Replay the batched plan once over a cache-set table (slot ->
+    /// session cache set; `None` slots bind the padding set and must be
+    /// masked via the `slot_mask` input). `ring_idx` selects the chunk's
+    /// logits-ring buffer so every chunk of a round survives until the
+    /// round's single coalesced readback. Fails loudly if `graph` is not
+    /// the one the batched plan was compiled from.
+    pub fn run_batched(
+        &mut self,
+        graph: &FxGraph,
+        inputs: &HashMap<String, Tensor>,
+        ring_idx: usize,
+        table: &[Option<&DeviceKvCache>],
+    ) -> Result<(HashMap<String, Tensor>, Option<BufferId>, ReplayDelta)> {
+        let GraphExecutor {
+            device, registry, batched, dispatch_count, framework_virtual_ns, ..
+        } = self;
+        let runner = batched.as_mut().ok_or_else(|| {
+            Error::Graph("no batched plan enabled: call enable_batched_plan first".into())
+        })?;
+        let fp = crate::plan::GraphFingerprint::of(graph);
+        if fp != runner.plan().fingerprint {
+            return Err(Error::Graph(format!(
+                "batched executor got a different graph ({fp:?}) than the compiled \
+                 plan ({:?})",
+                runner.plan().fingerprint
+            )));
+        }
+        let (outs, logits_buf, delta) =
+            runner.replay(device, *registry, inputs, ring_idx, table)?;
+        *dispatch_count += delta.dispatches;
+        *framework_virtual_ns += delta.framework_ns;
+        Ok((outs, logits_buf, delta))
     }
 
     pub fn plan_runner(&self) -> Option<&PlanRunner> {
@@ -436,9 +527,15 @@ impl<'r> GraphExecutor<'r> {
     }
 
     /// Return the logits buffer to the pool once the caller is done with
-    /// it. Plan-owned ring buffers are permanent and stay put.
+    /// it. Plan-owned ring buffers (single-session and batched) are
+    /// permanent and stay put.
     pub fn release_logits(&mut self, buf: BufferId) -> Result<()> {
         if let Some(runner) = &self.planned {
+            if runner.owns_buffer(buf) {
+                return Ok(());
+            }
+        }
+        if let Some(runner) = &self.batched {
             if runner.owns_buffer(buf) {
                 return Ok(());
             }

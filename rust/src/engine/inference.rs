@@ -26,6 +26,12 @@ use crate::{Error, Result};
 /// cost per op (paper §4.4).
 pub const TORCH_WEBGPU_FRAMEWORK_NS: u64 = 71_000;
 
+/// Default batched-decode slot width for the serving engine. Rounds with
+/// >= 2 active planned sessions replay the batched graph (one dispatch per
+/// layer op for up to this many sessions); wider rounds run in chunks.
+/// `wdb serve`/`serve-bench` override with `--batch-width` / `--no-batch`.
+pub const DEFAULT_BATCH_WIDTH: usize = 4;
+
 /// How the engine executes the decode graph.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecMode {
@@ -73,6 +79,16 @@ pub struct EngineConfig {
     /// Byte cap for the eager activation pool: `None` grows on demand,
     /// `Some(cap)` errors past the cap instead of growing silently.
     pub pool_cap_bytes: Option<usize>,
+    /// Batched-decode slot width for multi-session serving rounds
+    /// (planned mode only). `0` or `1` disables batching: every round
+    /// interleaves per-session replays (the pre-batching behavior).
+    /// `>= 2` makes rounds with that many active sessions replay the
+    /// batched graph — one dispatch per layer op per round. Capped by the
+    /// serving engine at `max_concurrent`; requesting a width above
+    /// [`crate::fx::MAX_BATCH_WIDTH`] (the built-in kernel coverage)
+    /// fails at engine construction, regardless of `max_concurrent`.
+    /// Ignored by single-session engines.
+    pub batch_width: usize,
     /// Override the manifest dims (executable workload variants — e.g.
     /// tiny-kernel graphs at different layer counts).
     pub dims_override: Option<crate::fx::builder::GraphDims>,
@@ -92,6 +108,7 @@ impl EngineConfig {
             dispatches_per_submit: 16,
             planned_framework_ns_per_step: crate::plan::PLANNED_FRAMEWORK_NS,
             pool_cap_bytes: None,
+            batch_width: DEFAULT_BATCH_WIDTH,
             dims_override: None,
         }
     }

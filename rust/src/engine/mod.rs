@@ -13,5 +13,5 @@ pub mod overhead;
 pub mod protocol;
 
 pub use executor::GraphExecutor;
-pub use inference::{Engine, EngineConfig, ExecMode, GenResult};
+pub use inference::{Engine, EngineConfig, ExecMode, GenResult, DEFAULT_BATCH_WIDTH};
 pub use protocol::{run_protocol, ProtocolResult};

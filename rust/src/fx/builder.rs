@@ -476,6 +476,339 @@ pub fn build_decode_graph(dims: &GraphDims, fusion: FusionConfig) -> FxGraph {
     b.g
 }
 
+/// Widest batched decode graph the built-in kernel manifest can execute
+/// (`runtime::builtin` registers batched kernel specs for widths
+/// `2..=MAX_BATCH_WIDTH`).
+pub const MAX_BATCH_WIDTH: usize = 8;
+
+struct BB<'a> {
+    g: FxGraph,
+    d: &'a GraphDims,
+    w: usize,
+}
+
+impl<'a> BB<'a> {
+    /// Batched RMSNorm over `[W, H]`: row-wise identical to the
+    /// single-session kernels (fused or the 6-dispatch decomposition).
+    fn rmsnorm(&mut self, tag: &str, x: ValueId, w: ValueId, fused: bool) -> ValueId {
+        let (h, bw) = (self.d.hidden, self.w);
+        if fused {
+            return self.g.kernel(
+                &format!("{tag}.rmsnorm"),
+                &format!("rmsnorm_b{bw}_{h}"),
+                Category::Other,
+                vec![x, w],
+            );
+        }
+        let x2 = self.g.kernel(
+            &format!("{tag}.pow"),
+            &format!("rms_pow_b{bw}_{h}"),
+            Category::RmsComponent,
+            vec![x],
+        );
+        let m = self.g.kernel(
+            &format!("{tag}.mean"),
+            &format!("rms_mean_b{bw}_{h}"),
+            Category::RmsComponent,
+            vec![x2],
+        );
+        let me = self.g.kernel(
+            &format!("{tag}.add_eps"),
+            &format!("rms_add_eps_b{bw}"),
+            Category::Add,
+            vec![m],
+        );
+        let r = self.g.kernel(
+            &format!("{tag}.rsqrt"),
+            &format!("rms_rsqrt_b{bw}"),
+            Category::RmsComponent,
+            vec![me],
+        );
+        let xn = self.g.kernel(
+            &format!("{tag}.mul_x"),
+            &format!("rms_mul_x_b{bw}_{h}"),
+            Category::Multiply,
+            vec![x, r],
+        );
+        self.g.kernel(
+            &format!("{tag}.mul_w"),
+            &format!("rms_mul_w_b{bw}_{h}"),
+            Category::Multiply,
+            vec![xn, w],
+        )
+    }
+}
+
+/// Build the batched decode-step graph at slot width `width`.
+///
+/// One serving round with up to `width` active sessions replays this graph
+/// ONCE: every layer op is a single dispatch over `[W, ...]`-shaped values
+/// instead of `W` per-session dispatches — the Appendix F amortization.
+///
+/// Step inputs carry a leading batch dimension: `x` (`[W, H]` packed token
+/// embeddings), `pos_i`/`pos_ip1` (`[W]` i32 per-slot positions), `pos_f`
+/// (`[W]` f32), `slot_mask` (`[W]` i32; 0 = inactive slot, masked out of
+/// cache writes and attention), `slot_idx` (`[W]` i32; the per-slot
+/// cache-set index uniform — batch row `b` gathers/scatters cache set
+/// `slot_idx[b]`; the serving engine passes the identity mapping), and the
+/// width-independent `inv_freq`.
+///
+/// Per-slot KV cache sets stay isolated: slot `j`'s caches are the
+/// persistent inputs `s{j}.l{l}.k_cache` / `s{j}.l{l}.v_cache`, declared
+/// slot-major so each slot's slice of the plan's persistent list is
+/// exactly one session's layer-major cache set. The batched `cache_update`
+/// is one in-place dispatch per layer whose output `j` updates slot `j`'s
+/// state in place; the batched `sdpa` gathers per-slot K/V through the
+/// same cache-set bindings.
+///
+/// `fusion.rmsnorm` / `fusion.mlp` / `fusion.kv` select batched fused or
+/// decomposed kernels exactly like the single-session builder. Rotary is
+/// always the fused batched kernel: the unfused rotate-half chain needs a
+/// per-slot cos/sin broadcast that has no decomposed batched kernel (the
+/// fused reference kernel is the exact float32 composition of the unfused
+/// chain, so token streams are unaffected).
+pub fn build_batched_decode_graph(
+    dims: &GraphDims,
+    fusion: FusionConfig,
+    width: usize,
+) -> FxGraph {
+    assert!(width >= 2, "batched decode graphs need width >= 2 (got {width})");
+    let mut b = BB { g: FxGraph::new(), d: dims, w: width };
+    b.g.batch_width = width;
+    let (h, qd, kv, inter) = (dims.hidden, dims.q_dim(), dims.kv_dim(), dims.intermediate);
+    let (nh, kvh, d) = (dims.heads, dims.kv_heads, dims.head_dim);
+    let suffix = dims.suffix();
+    let bw = width;
+
+    let x0 = b.g.input("x");
+    let pos_i = b.g.input("pos_i");
+    let pos_ip1 = b.g.input("pos_ip1");
+    let pos_f = b.g.input("pos_f");
+    let slot_mask = b.g.input("slot_mask");
+    let slot_idx = b.g.input("slot_idx");
+    let inv_freq = b.g.input("inv_freq");
+
+    // Per-slot cache sets, declared SLOT-major so the plan's persistent
+    // list is a cache-set table: entries [j*2L .. (j+1)*2L) are slot j's
+    // layer-major set — the same layout a single session's DeviceKvCache
+    // uses, so sessions plug straight into slots.
+    for j in 0..width {
+        for l in 0..dims.layers {
+            for kind in ["k", "v"] {
+                let name = format!("s{j}.l{l}.{kind}_cache");
+                b.g.input(&name);
+                b.g.mark_persistent(&name);
+            }
+        }
+    }
+
+    // Per-slot rope table: each slot decodes at its own position.
+    let cs = b.g.kernel_multi(
+        "rope_table",
+        &format!("rope_cos_sin_b{bw}_{d}"),
+        Category::Other,
+        vec![pos_f, inv_freq],
+        2,
+    );
+    let (cos, sin) = (cs[0], cs[1]);
+
+    let mut x = x0;
+    for l in 0..dims.layers {
+        let p = format!("l{l}");
+        let norm1_w = b.g.input(&format!("{p}.norm1"));
+        let wo = b.g.input(&format!("{p}.wo"));
+        let norm2_w = b.g.input(&format!("{p}.norm2"));
+        let wd = b.g.input(&format!("{p}.wd"));
+
+        // ---- attention ----
+        let hn = b.rmsnorm(&format!("{p}.norm1"), x, norm1_w, fusion.rmsnorm);
+
+        let wq = b.g.input(&format!("{p}.wq"));
+        let q = b.g.kernel(
+            &format!("{p}.q_proj"),
+            &format!("matmul_b{bw}_{h}_{qd}"),
+            Category::Linear,
+            vec![hn, wq],
+        );
+        let (k, v) = if fusion.kv {
+            let wkv = b.g.input(&format!("{p}.wkv"));
+            // Two outputs (K rows, V rows): the [W, 2KV] row split is
+            // strided, so no host byte-window alias can represent it.
+            let parts = b.g.kernel_multi(
+                &format!("{p}.kv_proj"),
+                &format!("kv_fused_b{bw}_{h}_{}", 2 * kv),
+                Category::Linear,
+                vec![hn, wkv],
+                2,
+            );
+            (parts[0], parts[1])
+        } else {
+            let wk = b.g.input(&format!("{p}.wk"));
+            let wv = b.g.input(&format!("{p}.wv"));
+            let k = b.g.kernel(
+                &format!("{p}.k_proj"),
+                &format!("matmul_b{bw}_{h}_{kv}"),
+                Category::Linear,
+                vec![hn, wk],
+            );
+            let v = b.g.kernel(
+                &format!("{p}.v_proj"),
+                &format!("matmul_b{bw}_{h}_{kv}"),
+                Category::Linear,
+                vec![hn, wv],
+            );
+            (k, v)
+        };
+
+        // Rotary stays [W, heads*dim]-shaped: the batched kernels index
+        // heads internally, so no host reshape nodes are needed.
+        let q_rot = b.g.kernel(
+            &format!("{p}.rope_q.rotary"),
+            &format!("rotary_b{bw}_{nh}_{d}"),
+            Category::Other,
+            vec![q, cos, sin],
+        );
+        let k_rot = b.g.kernel(
+            &format!("{p}.rope_k.rotary"),
+            &format!("rotary_b{bw}_{kvh}_{d}"),
+            Category::Other,
+            vec![k, cos, sin],
+        );
+
+        // One gather/scatter cache append per layer per K/V: inputs are the
+        // W per-slot states, then rows + per-slot uniforms; output j
+        // updates state j in place.
+        let k_states: Vec<ValueId> = (0..width)
+            .map(|j| b.g.inputs[&format!("s{j}.{p}.k_cache")])
+            .collect();
+        let mut k_ins = k_states;
+        k_ins.extend([k_rot, pos_i, slot_mask, slot_idx]);
+        let k_caches = b.g.in_place_kernel_multi(
+            &format!("{p}.k_cache_update"),
+            &format!("cache_update_b{bw}_{suffix}"),
+            Category::Concat,
+            k_ins,
+            width,
+        );
+        let v_states: Vec<ValueId> = (0..width)
+            .map(|j| b.g.inputs[&format!("s{j}.{p}.v_cache")])
+            .collect();
+        let mut v_ins = v_states;
+        v_ins.extend([v, pos_i, slot_mask, slot_idx]);
+        let v_caches = b.g.in_place_kernel_multi(
+            &format!("{p}.v_cache_update"),
+            &format!("cache_update_b{bw}_{suffix}"),
+            Category::Concat,
+            v_ins,
+            width,
+        );
+        for j in 0..width {
+            b.g.mark_output(&format!("s{j}.{p}.k_cache"), k_caches[j]);
+            b.g.mark_output(&format!("s{j}.{p}.v_cache"), v_caches[j]);
+        }
+
+        // One attention dispatch per layer, gathering every slot's K/V.
+        let mut sdpa_ins = vec![q_rot];
+        sdpa_ins.extend(k_caches.iter().copied());
+        sdpa_ins.extend(v_caches.iter().copied());
+        sdpa_ins.extend([pos_ip1, slot_mask, slot_idx]);
+        let attn = b.g.kernel(
+            &format!("{p}.sdpa"),
+            &format!("sdpa_b{bw}_{suffix}"),
+            Category::Sdpa,
+            sdpa_ins,
+        );
+        let attn_out = b.g.kernel(
+            &format!("{p}.o_proj"),
+            &format!("matmul_b{bw}_{qd}_{h}"),
+            Category::Linear,
+            vec![attn, wo],
+        );
+        x = b.g.kernel(
+            &format!("{p}.resid1"),
+            &format!("add_b{bw}_{h}"),
+            Category::Add,
+            vec![x, attn_out],
+        );
+
+        // ---- MLP ----
+        let h2 = b.rmsnorm(&format!("{p}.norm2"), x, norm2_w, fusion.rmsnorm);
+        let act = if fusion.mlp {
+            let wg = b.g.input(&format!("{p}.wg"));
+            let wu = b.g.input(&format!("{p}.wu"));
+            b.g.kernel(
+                &format!("{p}.gate_up_silu"),
+                &format!("gate_up_silu_b{bw}_{suffix}"),
+                Category::Silu,
+                vec![h2, wg, wu],
+            )
+        } else {
+            let wg = b.g.input(&format!("{p}.wg"));
+            let wu = b.g.input(&format!("{p}.wu"));
+            let g_ = b.g.kernel(
+                &format!("{p}.gate_proj"),
+                &format!("matmul_b{bw}_{h}_{inter}"),
+                Category::Linear,
+                vec![h2, wg],
+            );
+            let u = b.g.kernel(
+                &format!("{p}.up_proj"),
+                &format!("matmul_b{bw}_{h}_{inter}"),
+                Category::Linear,
+                vec![h2, wu],
+            );
+            let s = b.g.kernel(
+                &format!("{p}.silu"),
+                &format!("silu_b{bw}_{inter}"),
+                Category::Silu,
+                vec![g_],
+            );
+            b.g.kernel(
+                &format!("{p}.gate_mul"),
+                &format!("mul_b{bw}_{inter}"),
+                Category::Multiply,
+                vec![s, u],
+            )
+        };
+        let down = b.g.kernel(
+            &format!("{p}.down_proj"),
+            &format!("matmul_b{bw}_{inter}_{h}"),
+            Category::Linear,
+            vec![act, wd],
+        );
+        x = b.g.kernel(
+            &format!("{p}.resid2"),
+            &format!("add_b{bw}_{h}"),
+            Category::Add,
+            vec![x, down],
+        );
+    }
+
+    // ---- final norm + lm head ----
+    let norm_f = b.g.input("norm_f");
+    let hf = b.rmsnorm("final_norm", x, norm_f, fusion.rmsnorm);
+    let w_lm = b.g.input("w_lm");
+    let logits = b.g.kernel(
+        "lm_head",
+        &format!("matmul_b{bw}_{h}_{}", dims.vocab),
+        Category::Linear,
+        vec![hf, w_lm],
+    );
+    b.g.mark_output("logits", logits);
+
+    debug_assert!(b.g.validate().is_ok());
+    b.g
+}
+
+/// Expected dispatch count per batched serving round. Width-independent —
+/// the whole point: one dispatch per layer op regardless of how many
+/// sessions the round packs. Rotary is always fused in the batched graph
+/// (see [`build_batched_decode_graph`]).
+pub fn expected_batched_dispatches(dims: &GraphDims, fusion: FusionConfig) -> usize {
+    let f = FusionConfig { rotary: true, ..fusion };
+    expected_dispatches(dims, f)
+}
+
 /// Expected dispatch count per decode step for tiny-config graphs (used by
 /// tests and the engine's accounting).
 pub fn expected_dispatches(dims: &GraphDims, fusion: FusionConfig) -> usize {
@@ -573,6 +906,91 @@ mod tests {
             assert!(g.outputs.contains_key(&format!("l{l}.v_cache")));
         }
         assert!(g.outputs.contains_key("logits"));
+    }
+
+    #[test]
+    fn batched_graph_validates_and_dispatches_are_width_independent() {
+        let dims = GraphDims::qwen_tiny();
+        for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+            let mut counts = Vec::new();
+            for width in [2usize, 3, 4, 8] {
+                let g = build_batched_decode_graph(&dims, fusion, width);
+                g.validate().unwrap();
+                assert_eq!(g.batch_width, width);
+                assert_eq!(
+                    g.dispatch_count(),
+                    expected_batched_dispatches(&dims, fusion),
+                    "{fusion:?} width {width}"
+                );
+                counts.push(g.dispatch_count());
+            }
+            // One dispatch per layer op, NOT per session: constant in W.
+            assert!(counts.windows(2).all(|w| w[0] == w[1]), "{fusion:?}: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn batched_fused_graph_is_one_dispatch_per_layer_op() {
+        let dims = GraphDims::qwen_tiny();
+        let g = build_batched_decode_graph(&dims, FusionConfig::fused(), 4);
+        // per layer: norm 1 + q 1 + kv 1 + rot 2 + cache 2 + sdpa 1 + o 1
+        //            + add 1 + norm 1 + gus 1 + down 1 + add 1 = 14
+        // + rope 1 + final norm 1 + lm 1 — same arithmetic as the
+        // single-session fused graph, amortized over up to 4 sessions.
+        assert_eq!(g.dispatch_count(), 4 * 14 + 3);
+        assert_eq!(
+            g.dispatch_count(),
+            build_decode_graph(&dims, FusionConfig::fused()).dispatch_count()
+        );
+    }
+
+    #[test]
+    fn batched_cache_sets_are_slot_major_and_isolated() {
+        let dims = GraphDims::qwen_tiny();
+        let width = 3;
+        let g = build_batched_decode_graph(&dims, FusionConfig::fused(), width);
+        // Slot-major persistent declaration: s0's full layer-major set,
+        // then s1's, ... — each slot's slice IS one session's cache set.
+        let expect: Vec<String> = (0..width)
+            .flat_map(|j| {
+                (0..dims.layers).flat_map(move |l| {
+                    [format!("s{j}.l{l}.k_cache"), format!("s{j}.l{l}.v_cache")]
+                })
+            })
+            .collect();
+        assert_eq!(g.persistent, expect);
+        // Every per-slot cache is both input and (updated) output.
+        for name in &expect {
+            assert!(g.inputs.contains_key(name), "{name} not an input");
+            assert!(g.outputs.contains_key(name), "{name} not an output");
+        }
+        // In-place cache updates carry one state per slot.
+        for n in g.nodes.iter().filter(|n| n.in_place()) {
+            assert_eq!(n.outputs.len(), width, "{}", n.name);
+            assert!(n.inputs.len() == width + 4, "{}: states + rows/pos/mask/idx", n.name);
+        }
+        assert_eq!(
+            g.nodes.iter().filter(|n| n.in_place()).count(),
+            2 * dims.layers
+        );
+    }
+
+    #[test]
+    fn batched_kernel_names_carry_width_and_slot_uniforms_exist() {
+        let dims = GraphDims::qwen_tiny();
+        let g = build_batched_decode_graph(&dims, FusionConfig::fused(), 4);
+        let names = g.kernel_names();
+        for expected in [
+            "matmul_b4_64_64", "kv_fused_b4_64_64", "rmsnorm_b4_64",
+            "rotary_b4_4_16", "rotary_b4_2_16", "cache_update_b4_tiny",
+            "sdpa_b4_tiny", "gate_up_silu_b4_tiny", "matmul_b4_176_64",
+            "add_b4_64", "matmul_b4_64_512", "rope_cos_sin_b4_16",
+        ] {
+            assert!(names.iter().any(|n| n == expected), "missing {expected}: {names:?}");
+        }
+        for input in ["x", "pos_i", "pos_ip1", "pos_f", "slot_mask", "slot_idx", "inv_freq"] {
+            assert!(g.inputs.contains_key(input), "missing step input {input}");
+        }
     }
 
     #[test]

@@ -107,6 +107,21 @@ impl Census {
     pub fn cache_appends(&self) -> usize {
         2 * self.layers
     }
+
+    /// Batched-round dispatch arithmetic (Appendix F): a serving round
+    /// that steps `sessions` active sessions interleaved issues
+    /// `sessions x d` dispatches, while the batched graph replays
+    /// `ceil(sessions / width)` chunks of `d` dispatches — each batched
+    /// dispatch covers a whole chunk, so the per-replay count is
+    /// batch-width-INDEPENDENT (the batch-shape consistency the builder
+    /// tests pin). Returns `(interleaved, batched)` per-round dispatch
+    /// counts at the paper's fused dispatch census.
+    pub fn batched_round_dispatches(&self, sessions: usize, width: usize) -> (usize, usize) {
+        assert!(sessions > 0 && width > 0);
+        let d = self.fused_dispatches();
+        let chunks = (sessions + width - 1) / width;
+        (sessions * d, chunks * d)
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -176,6 +191,21 @@ mod tests {
         assert_eq!(c.cache_appends(), in_place);
         // They are a strict subset of the Concat census row.
         assert!(c.cache_appends() <= c.compute.concat);
+    }
+
+    #[test]
+    fn batched_round_arithmetic_halves_dispatches_at_n4_w4() {
+        let c = Census::for_dims(&GraphDims::qwen25_05b());
+        let (interleaved, batched) = c.batched_round_dispatches(4, 4);
+        assert_eq!(interleaved, 4 * 564);
+        assert_eq!(batched, 564);
+        // The serve-bench acceptance gate's shape: batched <= interleaved/2.
+        assert!(batched * 2 <= interleaved);
+        // Ragged round: 5 sessions at width 4 need two chunks.
+        let (i5, b5) = c.batched_round_dispatches(5, 4);
+        assert_eq!((i5, b5), (5 * 564, 2 * 564));
+        // Per-replay count is width-independent for full chunks.
+        assert_eq!(c.batched_round_dispatches(2, 2).1, c.batched_round_dispatches(8, 8).1);
     }
 
     #[test]

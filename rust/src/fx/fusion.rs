@@ -55,6 +55,7 @@ fn splice(g: &FxGraph, dead: &[bool], replacements: HashMap<usize, Vec<Node>>) -
         inputs: g.inputs.clone(),
         outputs: g.outputs.clone(),
         persistent: g.persistent.clone(),
+        batch_width: g.batch_width,
     };
     for (i, n) in g.nodes.iter().enumerate() {
         if let Some(reps) = replacements.get(&i) {
@@ -198,6 +199,12 @@ pub fn fuse_mlp(g: &FxGraph, suffix: &str) -> FxGraph {
 /// K+V fusion: two same-shape projections off the same input merge into one
 /// concatenated-weight matmul + a host split. Requires the fused weight to
 /// be available as the graph input `<layer>.wkv`.
+///
+/// Batch-safe: in a batched graph the projections are `matmul_b{W}_{H}_{KV}`
+/// and the fused kernel emits the K and V rows as TWO outputs directly
+/// (`kv_fused_b{W}_{H}_{2KV}`) — the `[W, 2KV] -> 2 x [W, KV]` row split is
+/// strided, so the host `SplitKv` byte-window alias the single-session
+/// rewrite uses cannot represent it.
 pub fn fuse_kv(g: &FxGraph) -> FxGraph {
     let prod = producers(g);
     let mut dead = vec![false; g.nodes.len()];
@@ -215,41 +222,61 @@ pub fn fuse_kv(g: &FxGraph) -> FxGraph {
             continue;
         }
         let Some(kname) = kn.kernel() else { continue };
-        // matmul_{H}_{KV} -> kv_fused_{H}_{2KV}
+        // matmul_{H}_{KV} -> kv_fused_{H}_{2KV}, or the batched
+        // matmul_b{W}_{H}_{KV} -> kv_fused_b{W}_{H}_{2KV}.
         let parts: Vec<&str> = kname.split('_').collect();
-        if parts.len() != 3 || parts[0] != "matmul" {
+        let (batched_prefix, h, kv): (Option<String>, usize, usize) = if parts.len() == 3
+            && parts[0] == "matmul"
+        {
+            match (parts[1].parse::<usize>(), parts[2].parse::<usize>()) {
+                (Ok(a), Ok(b)) => (None, a, b),
+                _ => continue,
+            }
+        } else if parts.len() == 4 && parts[0] == "matmul" && parts[1].starts_with('b') {
+            let width_ok = parts[1][1..].parse::<usize>().is_ok();
+            match (width_ok, parts[2].parse::<usize>(), parts[3].parse::<usize>()) {
+                (true, Ok(a), Ok(b)) => (Some(parts[1].to_string()), a, b),
+                _ => continue,
+            }
+        } else {
             continue;
-        }
-        let (h, kv): (usize, usize) = match (parts[1].parse(), parts[2].parse()) {
-            (Ok(a), Ok(b)) => (a, b),
-            _ => continue,
         };
         let _ = prod; // producers not needed beyond here; keep for clarity
         let wkv = g2.input(&format!("{layer}.wkv"));
-        let fused_out = g2.new_value();
         dead[i] = true;
         dead[j] = true;
-        reps.insert(
-            i,
-            vec![
-                Node {
-                    id: NodeId(0),
-                    name: format!("{layer}.kv_proj"),
-                    op: OpKind::Kernel(format!("kv_fused_{h}_{}", 2 * kv)),
-                    category: Category::Linear,
-                    inputs: vec![kn.inputs[0], wkv],
-                    outputs: vec![fused_out],
-                },
-                Node {
-                    id: NodeId(0),
-                    name: format!("{layer}.kv_split"),
-                    op: OpKind::Host(HostOp::SplitKv),
-                    category: Category::Shape,
-                    inputs: vec![fused_out],
-                    outputs: vec![kn.outputs[0], vn.outputs[0]],
-                },
-            ],
-        );
+        let nodes = match &batched_prefix {
+            None => {
+                let fused_out = g2.new_value();
+                vec![
+                    Node {
+                        id: NodeId(0),
+                        name: format!("{layer}.kv_proj"),
+                        op: OpKind::Kernel(format!("kv_fused_{h}_{}", 2 * kv)),
+                        category: Category::Linear,
+                        inputs: vec![kn.inputs[0], wkv],
+                        outputs: vec![fused_out],
+                    },
+                    Node {
+                        id: NodeId(0),
+                        name: format!("{layer}.kv_split"),
+                        op: OpKind::Host(HostOp::SplitKv),
+                        category: Category::Shape,
+                        inputs: vec![fused_out],
+                        outputs: vec![kn.outputs[0], vn.outputs[0]],
+                    },
+                ]
+            }
+            Some(b) => vec![Node {
+                id: NodeId(0),
+                name: format!("{layer}.kv_proj"),
+                op: OpKind::Kernel(format!("kv_fused_{b}_{h}_{}", 2 * kv)),
+                category: Category::Linear,
+                inputs: vec![kn.inputs[0], wkv],
+                outputs: vec![kn.outputs[0], vn.outputs[0]],
+            }],
+        };
+        reps.insert(i, nodes);
     }
     let out = splice(&g2, &dead, reps);
     out
@@ -387,6 +414,50 @@ mod tests {
         assert_eq!(by_passes.dispatch_count(), direct.dispatch_count());
         // identical kernel usage
         assert_eq!(by_passes.kernel_names(), direct.kernel_names());
+    }
+
+    #[test]
+    fn fusion_passes_are_batch_safe() {
+        // Running the rewrite pipeline on a batched unfused graph must
+        // reach exactly the batched fused builder's graph (dispatch count
+        // and kernel set) and keep it valid — the batch-safety proof the
+        // batched planner relies on. Rotary is excluded: the batched
+        // builder always emits the fused rotary kernel.
+        use crate::fx::builder::build_batched_decode_graph;
+        use crate::fx::passes::PassManager;
+        let dims = GraphDims::qwen_tiny();
+        for width in [2usize, 4] {
+            let unfused = build_batched_decode_graph(&dims, FusionConfig::unfused(), width);
+            let (by_passes, reports) = PassManager::for_fusion(
+                FusionConfig::rmsnorm_mlp_kv(),
+                &format!("b{width}_tiny"),
+            )
+            .run(&unfused)
+            .unwrap();
+            let direct = build_batched_decode_graph(&dims, FusionConfig::fused(), width);
+            assert_eq!(by_passes.dispatch_count(), direct.dispatch_count(), "w={width}");
+            assert_eq!(by_passes.kernel_names(), direct.kernel_names(), "w={width}");
+            assert_eq!(by_passes.batch_width, width, "splice must preserve batch width");
+            assert!(reports.iter().all(|r| r.saved() > 0), "{reports:?}");
+        }
+    }
+
+    #[test]
+    fn batched_kv_fusion_emits_two_output_kernel_without_host_split() {
+        use crate::fx::builder::build_batched_decode_graph;
+        let dims = GraphDims::qwen_tiny();
+        let g = build_batched_decode_graph(&dims, FusionConfig::unfused(), 4);
+        let fused = fuse_kv(&g);
+        fused.validate().unwrap();
+        assert_eq!(g.dispatch_count() - fused.dispatch_count(), dims.layers);
+        assert!(fused.inputs.contains_key("l0.wkv"));
+        // No SplitKv host nodes: the batched row split is strided, the
+        // fused kernel emits K and V directly.
+        assert!(!fused
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, OpKind::Host(HostOp::SplitKv))));
+        assert!(fused.kernel_names().iter().any(|n| n == "kv_fused_b4_64_64"));
     }
 
     #[test]

@@ -5,7 +5,7 @@ use std::collections::HashMap;
 use super::node::{Category, HostOp, Node, NodeId, OpKind, ValueId};
 use crate::{Error, Result};
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct FxGraph {
     pub nodes: Vec<Node>,
     pub n_values: usize,
@@ -17,14 +17,38 @@ pub struct FxGraph {
     /// decode steps and may be kept device-resident by a planner instead of
     /// being re-uploaded per step. Declaration order is preserved — it
     /// defines the layout of a session's cache set (layer-major for the
-    /// decode builder). Eager executors ignore this and treat them as
-    /// ordinary per-step inputs.
+    /// decode builder; slot-major-then-layer-major for the batched builder).
+    /// Eager executors ignore this and treat them as ordinary per-step
+    /// inputs.
     pub persistent: Vec<String>,
+    /// Leading batch dimension of the graph's step inputs. `1` for the
+    /// ordinary single-session decode graph; `W >= 2` for the batched
+    /// decode variant, whose step inputs pack `W` session slots and whose
+    /// cache ops gather/scatter across `W` per-slot cache sets in one
+    /// dispatch. Validation enforces the batched in-place discipline
+    /// (pairwise output-j-aliases-input-j) for every graph; `batch_width`
+    /// additionally lets planners check batch-shape consistency.
+    pub batch_width: usize,
+}
+
+// Manual Default so `FxGraph::default()` honors the batch_width >= 1
+// invariant validate() enforces (a derived default would be 0: malformed).
+impl Default for FxGraph {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl FxGraph {
     pub fn new() -> Self {
-        Self::default()
+        FxGraph {
+            nodes: Vec::new(),
+            n_values: 0,
+            inputs: HashMap::new(),
+            outputs: HashMap::new(),
+            persistent: Vec::new(),
+            batch_width: 1,
+        }
     }
 
     pub fn new_value(&mut self) -> ValueId {
@@ -89,16 +113,32 @@ impl FxGraph {
         category: Category,
         inputs: Vec<ValueId>,
     ) -> ValueId {
-        let out = self.new_value();
+        self.in_place_kernel_multi(name, kernel, category, inputs, 1)[0]
+    }
+
+    /// Append an in-place kernel node with N outputs: one dispatch where
+    /// output `j` updates `inputs[j]`'s storage in place, for every
+    /// `j < n_out` (the batched cache-update shape: W per-slot cache
+    /// states followed by the packed rows and per-slot uniforms). SSA-wise
+    /// every output is a fresh value.
+    pub fn in_place_kernel_multi(
+        &mut self,
+        name: &str,
+        kernel: &str,
+        category: Category,
+        inputs: Vec<ValueId>,
+        n_out: usize,
+    ) -> Vec<ValueId> {
+        let outs: Vec<ValueId> = (0..n_out).map(|_| self.new_value()).collect();
         self.nodes.push(Node {
             id: NodeId(self.nodes.len()),
             name: name.to_string(),
             op: OpKind::InPlaceKernel(kernel.to_string()),
             category,
             inputs,
-            outputs: vec![out],
+            outputs: outs.clone(),
         });
-        out
+        outs
     }
 
     /// Append a kernel node with N output values.
@@ -194,34 +234,56 @@ impl FxGraph {
                 return Err(Error::Graph(format!("output '{name}' never produced")));
             }
         }
-        // In-place discipline: the state operand (input 0) is overwritten by
-        // the node's output, so it must be dead afterwards — no later node
-        // may read it and it must not be a named graph output. (Its SSA
-        // successor — the node's output — carries the updated state.)
+        // In-place discipline, pairwise: output `j` overwrites input `j`'s
+        // storage, so every state operand (inputs 0..n_out) must be dead
+        // afterwards — no later node may read it and it must not be a named
+        // graph output. (Its SSA successor — output `j` — carries the
+        // updated state.) The single-output cache_update is the n_out = 1
+        // case; the batched cache_update updates W per-slot states at once.
         for (i, node) in self.nodes.iter().enumerate() {
             if !node.in_place() {
                 continue;
             }
-            if node.inputs.is_empty() || node.outputs.len() != 1 {
+            let n_out = node.outputs.len();
+            if n_out == 0 || node.inputs.len() < n_out {
                 return Err(Error::Graph(format!(
-                    "{}: in-place node needs >= 1 input and exactly 1 output",
+                    "{}: in-place node needs >= 1 output and one state input per output",
                     node.name
                 )));
             }
-            let state = node.inputs[0];
-            for later in &self.nodes[i + 1..] {
-                if later.inputs.contains(&state) {
+            for &state in &node.inputs[..n_out] {
+                for later in &self.nodes[i + 1..] {
+                    if later.inputs.contains(&state) {
+                        return Err(Error::Graph(format!(
+                            "{}: in-place state {:?} read by later node '{}'",
+                            node.name, state, later.name
+                        )));
+                    }
+                }
+                if let Some((name, _)) = self.outputs.iter().find(|(_, &v)| v == state) {
                     return Err(Error::Graph(format!(
-                        "{}: in-place state {:?} read by later node '{}'",
-                        node.name, state, later.name
+                        "{}: in-place state {:?} is graph output '{name}'",
+                        node.name, state
                     )));
                 }
             }
-            if let Some((name, _)) = self.outputs.iter().find(|(_, &v)| v == state) {
-                return Err(Error::Graph(format!(
-                    "{}: in-place state {:?} is graph output '{name}'",
-                    node.name, state
-                )));
+        }
+        // Batch-shape consistency: a batched graph declares a uniform slot
+        // width; its batched in-place cache ops must update one state per
+        // slot (exactly `batch_width` outputs).
+        if self.batch_width == 0 {
+            return Err(Error::Graph("batch_width must be >= 1".into()));
+        }
+        if self.batch_width > 1 {
+            for node in &self.nodes {
+                if node.in_place() && node.outputs.len() != self.batch_width {
+                    return Err(Error::Graph(format!(
+                        "{}: batched in-place node has {} outputs, batch width is {}",
+                        node.name,
+                        node.outputs.len(),
+                        self.batch_width
+                    )));
+                }
             }
         }
         for name in &self.persistent {
@@ -308,6 +370,50 @@ mod tests {
         assert_eq!(g.dispatch_count(), 1);
         assert_eq!(g.kernel_names(), vec!["cache_update_t".to_string()]);
         assert!(g.nodes[0].in_place());
+    }
+
+    #[test]
+    fn multi_output_in_place_pairwise_discipline() {
+        // Output j aliases input j: every state operand must be dead after.
+        let mut g = FxGraph::new();
+        let c0 = g.input("c0");
+        let c1 = g.input("c1");
+        let rows = g.input("rows");
+        let outs = g.in_place_kernel_multi(
+            "upd", "cache_update_b2_t", Category::Concat, vec![c0, c1, rows], 2,
+        );
+        let y = g.kernel("use", "sdpa_b2_t", Category::Sdpa, vec![outs[0], outs[1]]);
+        g.mark_output("out", y);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.dispatch_count(), 2);
+        // Reading either stale state afterwards breaks the discipline.
+        for stale in [c0, c1] {
+            let mut bad = g.clone();
+            bad.kernel("stale", "k", Category::Other, vec![stale]);
+            assert!(bad.validate().is_err(), "{stale:?}");
+        }
+        // Fewer state inputs than outputs is malformed.
+        let mut bad = FxGraph::new();
+        let c = bad.input("c");
+        bad.in_place_kernel_multi("u", "k", Category::Concat, vec![c], 2);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn batched_graphs_require_one_state_per_slot() {
+        let mut g = FxGraph::new();
+        g.batch_width = 3;
+        let c0 = g.input("c0");
+        let c1 = g.input("c1");
+        // 2 outputs on a width-3 graph: batch-shape inconsistency.
+        let outs = g.in_place_kernel_multi("u", "k", Category::Concat, vec![c0, c1], 2);
+        g.mark_output("o", outs[0]);
+        g.mark_output("o2", outs[1]);
+        assert!(g.validate().is_err());
+        g.batch_width = 2;
+        assert!(g.validate().is_ok());
+        g.batch_width = 0;
+        assert!(g.validate().is_err(), "zero width is malformed");
     }
 
     #[test]

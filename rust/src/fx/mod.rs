@@ -23,7 +23,9 @@ pub mod node;
 pub mod passes;
 pub mod workloads;
 
-pub use builder::{build_decode_graph, FusionConfig, GraphDims};
+pub use builder::{
+    build_batched_decode_graph, build_decode_graph, FusionConfig, GraphDims, MAX_BATCH_WIDTH,
+};
 pub use census::{Census, CategoryCounts};
 pub use graph::FxGraph;
 pub use node::{Category, HostOp, Node, NodeId, ValueId};

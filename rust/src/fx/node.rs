@@ -52,13 +52,15 @@ pub enum HostOp {
 pub enum OpKind {
     /// One WebGPU dispatch running the named AOT kernel.
     Kernel(String),
-    /// One WebGPU dispatch whose *first output updates the first input's
-    /// storage in place*: the SSA output is a fresh value (validation is
-    /// unchanged), but executors may bind output 0 to input 0's buffer
-    /// instead of materializing a copy. This is how KV-cache appends stay
-    /// device-resident in planned mode; eager mode executes it exactly
-    /// like [`OpKind::Kernel`]. The state operand must be dead after this
-    /// node (checked by [`super::graph::FxGraph::validate`]).
+    /// One WebGPU dispatch whose *output `j` updates input `j`'s storage
+    /// in place* (pairwise, for every output): the SSA outputs are fresh
+    /// values, but executors may bind each output to its state input's
+    /// buffer instead of materializing copies. The single-output form is
+    /// how KV-cache appends stay device-resident in planned mode; the
+    /// multi-output form is the BATCHED cache append, one state per batch
+    /// slot. Eager mode executes it exactly like [`OpKind::Kernel`].
+    /// Every state operand must be dead after this node (checked by
+    /// [`super::graph::FxGraph::validate`]).
     InPlaceKernel(String),
     /// Host/metadata op — no dispatch.
     Host(HostOp),
@@ -87,7 +89,8 @@ impl Node {
         }
     }
 
-    /// True when output 0 updates input 0's storage in place.
+    /// True when output `j` updates input `j`'s storage in place (for
+    /// every output — see [`OpKind::InPlaceKernel`]).
     pub fn in_place(&self) -> bool {
         matches!(self.op, OpKind::InPlaceKernel(_))
     }

@@ -30,6 +30,33 @@ pub fn decode_workloads() -> Vec<DecodeWorkload> {
     ]
 }
 
+/// One executable BATCHED decode workload: a dims variant plus the slot
+/// width its batched graph packs. Unit tests sweep these to exercise
+/// batch widths (graph build, planning, kernel coverage) without standing
+/// up the serving engine.
+#[derive(Debug, Clone)]
+pub struct BatchedDecodeWorkload {
+    pub name: &'static str,
+    pub dims: GraphDims,
+    pub width: usize,
+}
+
+/// The executable batched decode-workload sweep: tiny dims x the widths
+/// the property tests and the serving default use.
+pub fn batched_decode_workloads() -> Vec<BatchedDecodeWorkload> {
+    let tiny = GraphDims::qwen_tiny();
+    vec![
+        BatchedDecodeWorkload { name: "qwen-tiny-b2", dims: tiny, width: 2 },
+        BatchedDecodeWorkload { name: "qwen-tiny-b3", dims: tiny, width: 3 },
+        BatchedDecodeWorkload { name: "qwen-tiny-b4", dims: tiny, width: 4 },
+        BatchedDecodeWorkload {
+            name: "qwen-tiny-l2-b4",
+            dims: GraphDims { layers: 2, ..tiny },
+            width: 4,
+        },
+    ]
+}
+
 /// One synthetic workload: name + dispatches per forward pass, by category.
 #[derive(Debug, Clone)]
 pub struct Workload {
@@ -111,6 +138,26 @@ mod tests {
             for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
                 let g = build_decode_graph(&wl.dims, fusion);
                 g.validate().unwrap();
+                for name in g.kernel_names() {
+                    assert!(
+                        reg.kernels.contains_key(&name),
+                        "{}: kernel '{name}' not in builtin manifest",
+                        wl.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_workloads_build_executable_graphs() {
+        use crate::fx::builder::{build_batched_decode_graph, FusionConfig};
+        let reg = crate::runtime::Registry::builtin().unwrap();
+        for wl in batched_decode_workloads() {
+            for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+                let g = build_batched_decode_graph(&wl.dims, fusion, wl.width);
+                g.validate().unwrap();
+                assert_eq!(g.batch_width, wl.width, "{}", wl.name);
                 for name in g.kernel_names() {
                     assert!(
                         reg.kernels.contains_key(&name),

@@ -32,11 +32,15 @@
 //! one buffer pool and one pinned copy of the weights, and round-robins
 //! decode steps across up to `max_concurrent` sessions with FIFO admission
 //! beyond that. Fixed per-step synchronization cost is paid once per round
-//! (coalesced readback) instead of once per session — the serving-side
-//! analogue of the paper's fusion result; per-dispatch and framework
-//! overheads remain per-operation, exactly as the paper's accounting
-//! predicts. See `rust/src/serve/mod.rs` for the scheduling model and
-//! `wdb serve-bench` for the scaling table.
+//! (coalesced readback) instead of once per session, and in the planned
+//! serving default rounds with >= 2 active sessions replay a BATCHED plan
+//! (`fx::build_batched_decode_graph` + `plan::BatchedRunner`): one
+//! dispatch per layer op covers a whole chunk of sessions, so the
+//! per-dispatch + framework overheads the paper shows interleaving cannot
+//! amortize fall by the batch factor (Appendix F). See
+//! `rust/src/serve/mod.rs` for the scheduling model and `wdb serve-bench`
+//! for the scaling table (`disp/round` column + batched-vs-interleaved
+//! gate).
 
 pub mod baselines;
 pub mod cli;

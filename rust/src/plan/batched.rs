@@ -1,0 +1,227 @@
+//! Batched-plan execution: one replay serves a whole serving round.
+//!
+//! A [`BatchedRunner`] wraps a [`PlanRunner`] compiled from the batched
+//! decode graph ([`crate::fx::build_batched_decode_graph`]) at a fixed slot
+//! `width`. Where the single-session runner binds ONE session's cache set,
+//! the batched runner binds a **cache-set table**: the plan's persistent
+//! list is slot-major (`s{j}.l{l}.{k,v}_cache`), so slot `j`'s slice is
+//! exactly one session's layer-major [`DeviceKvCache`] — sessions plug
+//! into slots without copies, and per-session cache buffers stay isolated
+//! (the batched cache ops scatter through the `slot_idx` uniform into the
+//! per-slot bindings; they never address another slot's buffers).
+//!
+//! Partial rounds (fewer active sessions than `width`) bind the runner's
+//! own **padding set** in the empty slots and mask them via `slot_mask`,
+//! so no recompile and no re-materialization happens as sessions retire or
+//! admit mid-run — the ragged-round case the property tests pin.
+//!
+//! Arena liveness is sized for the widest batch by construction: the
+//! batched graph's transient values are `[W, ...]`-shaped, so the plan's
+//! lifetime-aliased arena already accommodates a full round.
+
+use std::collections::HashMap;
+
+use crate::tensor::Tensor;
+use crate::webgpu::{BufferDesc, BufferId, BufferUsage, Device, KernelRunner};
+use crate::{Error, Result};
+
+use super::planner::ExecutionPlan;
+use super::residency::DeviceKvCache;
+use super::runner::{PlanRunner, ReplayDelta};
+
+/// Batch-shape consistency checks for a plan compiled from a batched
+/// decode graph: slot-major persistent layout with identical per-slot
+/// specs, width-shaped step inputs, and a width-leading logits row.
+pub fn validate_batched_plan(plan: &ExecutionPlan, width: usize) -> Result<()> {
+    if width < 2 {
+        return Err(Error::Graph(format!("batched plans need width >= 2, got {width}")));
+    }
+    if plan.persistent.is_empty() || plan.persistent.len() % width != 0 {
+        return Err(Error::Graph(format!(
+            "batched plan: {} persistent values not divisible into {width} slots",
+            plan.persistent.len()
+        )));
+    }
+    let per_slot = plan.persistent.len() / width;
+    for j in 0..width {
+        let prefix = format!("s{j}.");
+        for k in 0..per_slot {
+            let spec = &plan.persistent[j * per_slot + k];
+            if !spec.name.starts_with(&prefix) {
+                return Err(Error::Graph(format!(
+                    "batched plan: persistent '{}' not slot-major (expected slot {j})",
+                    spec.name
+                )));
+            }
+            // Every slot must carry the same cache-set layout as slot 0,
+            // so any session's set can occupy any slot.
+            let base = &plan.persistent[k];
+            if spec.shape != base.shape || spec.dtype != base.dtype || spec.size != base.size {
+                return Err(Error::Graph(format!(
+                    "batched plan: slot {j} spec '{}' differs from slot 0 '{}'",
+                    spec.name, base.name
+                )));
+            }
+        }
+    }
+    for (name, leading) in [("x", width), ("slot_mask", width), ("slot_idx", width)] {
+        let up = plan
+            .uploads
+            .iter()
+            .find(|u| u.name == name)
+            .ok_or_else(|| {
+                Error::Graph(format!("batched plan: step input '{name}' missing"))
+            })?;
+        if up.shape.first().copied() != Some(leading) {
+            return Err(Error::Graph(format!(
+                "batched plan: step input '{name}' shape {:?} lacks leading width {leading}",
+                up.shape
+            )));
+        }
+    }
+    match &plan.logits {
+        Some(lg) if lg.shape.first().copied() == Some(width) => {}
+        Some(lg) => {
+            return Err(Error::Graph(format!(
+                "batched plan: logits shape {:?} lacks leading width {width}",
+                lg.shape
+            )));
+        }
+        None => return Err(Error::Graph("batched plan: no logits output".into())),
+    }
+    Ok(())
+}
+
+/// Replays a batched plan over a per-round cache-set table.
+pub struct BatchedRunner {
+    runner: PlanRunner,
+    width: usize,
+    per_slot: usize,
+    /// Runner-owned padding cache set bound into empty (masked) slots —
+    /// raw device buffers outside the pooled accounting, never written
+    /// (masked slots skip cache scatters) and never read back.
+    padding: Vec<BufferId>,
+    /// Reusable flattened-table scratch (capacity width x per_slot):
+    /// refilled per replay so the hot loop allocates nothing steady-state,
+    /// matching the plan layer's allocation-free-replay discipline.
+    flat: DeviceKvCache,
+    /// Batched rounds replayed.
+    pub rounds: u64,
+}
+
+impl BatchedRunner {
+    /// Validate the plan's batch shape, create the padding set, and
+    /// materialize the inner runner (arena, logits ring, bind groups).
+    pub fn materialize(device: &mut Device, plan: ExecutionPlan, width: usize) -> Result<Self> {
+        validate_batched_plan(&plan, width)?;
+        let per_slot = plan.persistent.len() / width;
+        let usage = BufferUsage::STORAGE
+            | BufferUsage::COPY_DST
+            | BufferUsage::COPY_SRC
+            | BufferUsage::MAP_READ;
+        let mut padding = Vec::with_capacity(per_slot);
+        for spec in &plan.persistent[..per_slot] {
+            padding.push(device.create_buffer(BufferDesc {
+                label: format!("batch-pad-{}", spec.name),
+                size: spec.size,
+                usage,
+            })?);
+        }
+        let runner = PlanRunner::materialize(device, plan)?;
+        let flat = DeviceKvCache {
+            buffers: Vec::with_capacity(width * per_slot),
+            resident_bytes: 0,
+        };
+        Ok(BatchedRunner { runner, width, per_slot, padding, flat, rounds: 0 })
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Persistent values per slot (one session's cache-set length).
+    pub fn per_slot(&self) -> usize {
+        self.per_slot
+    }
+
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.runner.plan
+    }
+
+    pub fn inner(&self) -> &PlanRunner {
+        &self.runner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut PlanRunner {
+        &mut self.runner
+    }
+
+    /// Distinct cache-set tables with registered bind groups.
+    pub fn registered_tables(&self) -> usize {
+        self.runner.registered_cache_sets()
+    }
+
+    /// True for buffers the batched runner owns (its logits ring and the
+    /// padding set) — they must never be released into the pooled
+    /// free lists.
+    pub fn owns_buffer(&self, buf: BufferId) -> bool {
+        self.runner.owns_buffer(buf) || self.padding.contains(&buf)
+    }
+
+    /// Refill the flattened-table scratch: each slot's session cache set
+    /// (or the padding set for `None`) in the plan's slot-major persistent
+    /// binding order. No allocation once the scratch capacity is warm.
+    fn fill_flat(&mut self, table: &[Option<&DeviceKvCache>]) -> Result<()> {
+        if table.len() > self.width {
+            return Err(Error::Graph(format!(
+                "cache-set table has {} slots, batched plan width is {}",
+                table.len(),
+                self.width
+            )));
+        }
+        self.flat.buffers.clear();
+        for j in 0..self.width {
+            match table.get(j).copied().flatten() {
+                Some(kv) => {
+                    if kv.buffers.len() != self.per_slot {
+                        return Err(Error::Graph(format!(
+                            "slot {j}: session cache set has {} buffers, plan expects {}",
+                            kv.buffers.len(),
+                            self.per_slot
+                        )));
+                    }
+                    self.flat.buffers.extend_from_slice(&kv.buffers);
+                }
+                None => self.flat.buffers.extend_from_slice(&self.padding),
+            }
+        }
+        Ok(())
+    }
+
+    /// Replay the batched plan once: one dispatch per layer op covering
+    /// every active slot in `table`. `inputs` are the packed step inputs
+    /// (`x [W, H]`, per-slot pos/mask/idx uniforms, `inv_freq`);
+    /// `ring_idx` selects this chunk's logits-ring buffer (chunks of one
+    /// round pass distinct indices so every `[W, vocab]` row block
+    /// survives until the round's single coalesced readback). The table's
+    /// bind groups are registered on first sight and are pure cache hits
+    /// thereafter (the pool's LIFO recycling keeps steady-state churn on
+    /// the same tables). Returns (named outputs, the live logits buffer,
+    /// cost deltas).
+    pub fn replay(
+        &mut self,
+        device: &mut Device,
+        runner: &dyn KernelRunner,
+        inputs: &HashMap<String, Tensor>,
+        ring_idx: usize,
+        table: &[Option<&DeviceKvCache>],
+    ) -> Result<(HashMap<String, Tensor>, Option<BufferId>, ReplayDelta)> {
+        self.fill_flat(table)?;
+        self.runner.register_cache(device, &self.flat)?;
+        let out = self
+            .runner
+            .replay(device, runner, inputs, ring_idx, Some(&self.flat))?;
+        self.rounds += 1;
+        Ok(out)
+    }
+}

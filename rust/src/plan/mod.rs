@@ -19,12 +19,16 @@
 //! - [`runner`] — arena materialization + the allocation-free replay
 //!   hot loop with `dispatches_per_submit` encoder batching and
 //!   per-session persistent bind groups.
+//! - [`batched`] — batched-plan replay over a per-round *cache-set table*
+//!   (one session cache set per slot, padding + `slot_mask` for partial
+//!   rounds): one dispatch per layer op serves a whole serving round.
 //!
 //! Eager execution stays available ([`crate::engine::GraphExecutor`]'s
 //! default mode) precisely so `wdb plan-bench` can measure the
 //! eager-vs-planned framework-overhead delta (table P1).
 
 pub mod arena;
+pub mod batched;
 pub mod grid;
 pub mod pipelines;
 pub mod planner;
@@ -32,6 +36,7 @@ pub mod residency;
 pub mod runner;
 
 pub use arena::{ArenaLayout, Interval, SlotAssignment};
+pub use batched::{validate_batched_plan, BatchedRunner};
 pub use grid::{tile_workgroups, WORKGROUP_SIZE};
 pub use pipelines::{PipelinePool, PreparedKernel};
 pub use planner::{

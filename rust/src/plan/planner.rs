@@ -376,31 +376,41 @@ impl<'r> Planner<'r> {
                         }
                     }
                     if node.in_place() {
-                        // The single output updates input 0's storage in
-                        // place: it becomes an alias of the persistent
-                        // root, so consumers (sdpa) bind the session's
-                        // cache buffer directly and nothing materializes.
-                        let state = node.inputs[0].0;
-                        let (root, off) = resolve(&meta, state);
-                        if !matches!(meta[root].kind, Kind::Persistent(_)) || off != 0 {
+                        // Pairwise in-place: output j updates input j's
+                        // storage in place, so each becomes an alias of its
+                        // persistent root and consumers (sdpa) bind the
+                        // session's cache buffer directly — nothing
+                        // materializes. The single-output cache_update is
+                        // the 1-pair case; the batched cache_update carries
+                        // one pair per slot.
+                        if node.outputs.len() > node.inputs.len() {
                             return Err(Error::Graph(format!(
-                                "{}: in-place state must be a whole persistent value",
+                                "{}: in-place node needs one state input per output",
                                 node.name
                             )));
                         }
-                        let spec = &prep.outputs[0];
-                        if spec.shape != meta[root].shape {
-                            return Err(Error::Graph(format!(
-                                "{}: in-place output shape {:?} != state shape {:?}",
-                                node.name, spec.shape, meta[root].shape
-                            )));
+                        for (j, spec) in prep.outputs.iter().enumerate() {
+                            let state = node.inputs[j].0;
+                            let (root, off) = resolve(&meta, state);
+                            if !matches!(meta[root].kind, Kind::Persistent(_)) || off != 0 {
+                                return Err(Error::Graph(format!(
+                                    "{}: in-place state {j} must be a whole persistent value",
+                                    node.name
+                                )));
+                            }
+                            if spec.shape != meta[root].shape {
+                                return Err(Error::Graph(format!(
+                                    "{}: in-place output {j} shape {:?} != state shape {:?}",
+                                    node.name, spec.shape, meta[root].shape
+                                )));
+                            }
+                            meta[node.outputs[j].0] = ValueMeta {
+                                kind: Kind::Alias { root, offset: 0 },
+                                shape: spec.shape.clone(),
+                                dtype: spec.dtype,
+                                size: spec.size_bytes(),
+                            };
                         }
-                        meta[node.outputs[0].0] = ValueMeta {
-                            kind: Kind::Alias { root, offset: 0 },
-                            shape: spec.shape.clone(),
-                            dtype: spec.dtype,
-                            size: spec.size_bytes(),
-                        };
                     } else {
                         for (j, spec) in prep.outputs.iter().enumerate() {
                             let v = node.outputs[j].0;
@@ -901,6 +911,44 @@ mod tests {
         assert_eq!(plan.input_residency("x"), Some(ResidencyClass::StepInput));
         assert_eq!(plan.input_residency("pos_i"), Some(ResidencyClass::StepInput));
         assert_eq!(plan.input_residency("nope"), None);
+    }
+
+    #[test]
+    fn batched_graph_compiles_with_slot_major_cache_table() {
+        use crate::fx::builder::build_batched_decode_graph;
+        use crate::plan::batched::validate_batched_plan;
+        let width = 4usize;
+        let reg = Registry::builtin().unwrap();
+        let mut device = Device::new(ImplementationProfile::zero_overhead());
+        // Batched cache ops bind 2W+5 storage buffers: the serving engine
+        // requests raised limits (requiredLimits) before compiling.
+        device.limits.max_bindings_per_group = 2 * width + 5;
+        let mut pool = PipelinePool::new();
+        let dims = GraphDims::qwen_tiny();
+        for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+            let g = build_batched_decode_graph(&dims, fusion, width);
+            let plan = Planner::new(&reg)
+                .compile(&mut device, &mut pool, &g, &HashMap::new(), &PlanConfig::default())
+                .unwrap();
+            validate_batched_plan(&plan, width).unwrap();
+            assert_eq!(plan.stats.kernel_steps, g.dispatch_count(), "{fusion:?}");
+            // Slot-major cache-set table: W slots x 2L caches each, every
+            // slot shaped exactly like a single session's set.
+            assert_eq!(plan.persistent.len(), width * 2 * dims.layers);
+            assert_eq!(plan.persistent[0].name, "s0.l0.k_cache");
+            assert_eq!(plan.persistent[2 * dims.layers].name, "s1.l0.k_cache");
+            for p in &plan.persistent {
+                assert_eq!(p.shape, vec![dims.max_seq, dims.kv_heads, dims.head_dim]);
+            }
+            // Logits pack one row per slot; cache outputs stay resident.
+            assert_eq!(
+                plan.logits.as_ref().unwrap().shape,
+                vec![width, dims.vocab]
+            );
+            assert_eq!(plan.resident_outputs.len(), width * 2 * dims.layers);
+            // The wrong width is rejected (2L per slot won't divide).
+            assert!(validate_batched_plan(&plan, 3).is_err());
+        }
     }
 
     #[test]

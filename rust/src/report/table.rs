@@ -47,8 +47,15 @@ impl TableDoc {
         self
     }
 
-    /// JSON form for `report::write_results` (id/title/columns/rows/notes),
-    /// matching the layout `wdb all-tables` dumps.
+    /// Version of the table-JSON layout consumed by the CI trend
+    /// artifacts. Bumped to 2 when table S1 gained the `disp/round`
+    /// column and serving runs became mode-labelled with their batch
+    /// width — downstream trend tooling keys on this to re-align columns.
+    pub const SCHEMA_VERSION: u32 = 2;
+
+    /// JSON form for `report::write_results`
+    /// (schema/id/title/columns/rows/notes), matching the layout
+    /// `wdb all-tables` dumps.
     pub fn to_json(&self) -> super::json::Value {
         use super::json::{self, Value};
         let rows = self
@@ -57,6 +64,7 @@ impl TableDoc {
             .map(|r| Value::Arr(r.iter().map(|c| json::s(c)).collect()))
             .collect();
         json::obj(vec![
+            ("schema", json::num(Self::SCHEMA_VERSION as f64)),
             ("id", json::s(&self.id)),
             ("title", json::s(&self.title)),
             (
@@ -153,6 +161,18 @@ mod tests {
     fn rejects_ragged_rows() {
         let mut t = TableDoc::new("T0", "demo", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_carries_schema_version() {
+        let mut t = TableDoc::new("T0", "demo", &["a"]);
+        t.row(vec!["x".into()]);
+        let v = t.to_json();
+        assert_eq!(
+            v.get("schema").and_then(|s| s.as_f64()),
+            Some(TableDoc::SCHEMA_VERSION as f64)
+        );
+        assert_eq!(TableDoc::SCHEMA_VERSION, 2);
     }
 
     #[test]

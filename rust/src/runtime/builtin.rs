@@ -135,6 +135,72 @@ pub fn builtin_kernels() -> HashMap<String, KernelSpec> {
           vec![io(&[1, inter])], &["tiny", "fused", "mlp"],
           2.0 * matmul_flops(1, h, inter), "MLP gate+up+silu fusion (3 -> 1)");
 
+    // ---- batched (multi-slot) decode kernels: one dispatch per layer op
+    // covering up to W session slots (Appendix F's amortization). Cache ops
+    // bind W per-slot cache buffers plus per-slot pos/mask/slot-index
+    // uniforms; everything else is the row-extended single-session shape.
+    // Registered for every width the batched serving path may request.
+    for w in 2..=crate::fx::builder::MAX_BATCH_WIDTH {
+        let bt = &["tiny", "batch"];
+        b.add(&format!("matmul_b{w}_{h}_{qd}"), vec![io(&[w, h]), io(&[h, qd])],
+              vec![io(&[w, qd])], bt, matmul_flops(w, h, qd), "batched q/o projection");
+        b.add(&format!("matmul_b{w}_{h}_{kv}"), vec![io(&[w, h]), io(&[h, kv])],
+              vec![io(&[w, kv])], bt, matmul_flops(w, h, kv), "batched separate k/v projection");
+        b.add(&format!("matmul_b{w}_{h}_{inter}"), vec![io(&[w, h]), io(&[h, inter])],
+              vec![io(&[w, inter])], bt, matmul_flops(w, h, inter), "batched gate/up projection");
+        b.add(&format!("matmul_b{w}_{inter}_{h}"), vec![io(&[w, inter]), io(&[inter, h])],
+              vec![io(&[w, h])], bt, matmul_flops(w, inter, h), "batched down projection");
+        b.add(&format!("matmul_b{w}_{h}_{v}"), vec![io(&[w, h]), io(&[h, v])],
+              vec![io(&[w, v])], bt, matmul_flops(w, h, v), "batched lm head");
+        b.add(&format!("kv_fused_b{w}_{h}_{}", 2 * kv), vec![io(&[w, h]), io(&[h, 2 * kv])],
+              vec![io(&[w, kv]), io(&[w, kv])], bt, matmul_flops(w, h, 2 * kv),
+              "batched K+V fusion: strided row split emits two outputs");
+
+        b.add(&format!("rmsnorm_b{w}_{h}"), vec![io(&[w, h]), io(&[h])], vec![io(&[w, h])],
+              bt, 0.0, "batched fused RMSNorm");
+        b.add(&format!("rms_pow_b{w}_{h}"), vec![io(&[w, h])], vec![io(&[w, h])], bt, 0.0, "");
+        b.add(&format!("rms_mean_b{w}_{h}"), vec![io(&[w, h])], vec![io(&[w, 1])], bt, 0.0, "");
+        b.add(&format!("rms_add_eps_b{w}"), vec![io(&[w, 1])], vec![io(&[w, 1])], bt, 0.0, "");
+        b.add(&format!("rms_rsqrt_b{w}"), vec![io(&[w, 1])], vec![io(&[w, 1])], bt, 0.0, "");
+        b.add(&format!("rms_mul_x_b{w}_{h}"), vec![io(&[w, h]), io(&[w, 1])],
+              vec![io(&[w, h])], bt, 0.0, "");
+        b.add(&format!("rms_mul_w_b{w}_{h}"), vec![io(&[w, h]), io(&[h])],
+              vec![io(&[w, h])], bt, 0.0, "");
+
+        b.add(&format!("rope_cos_sin_b{w}_{d}"), vec![io(&[w]), io(&[half])],
+              vec![io(&[w, d]), io(&[w, d])], bt, 0.0, "per-slot rope table");
+        b.add(&format!("rotary_b{w}_{nh}_{d}"), vec![io(&[w, nh * d]), io(&[w, d]), io(&[w, d])],
+              vec![io(&[w, nh * d])], bt, 0.0, "batched fused rotary (q heads)");
+        b.add(&format!("rotary_b{w}_{kvh}_{d}"), vec![io(&[w, kvh * d]), io(&[w, d]), io(&[w, d])],
+              vec![io(&[w, kvh * d])], bt, 0.0, "batched fused rotary (kv heads)");
+
+        // Gather/scatter cache ops: W per-slot cache states + packed rows
+        // + per-slot pos/mask/cache-set-index uniforms.
+        let mut cu_in: Vec<KernelIoSpec> = (0..w).map(|_| io(&[s, kvh, d])).collect();
+        cu_in.extend([io(&[w, kvh * d]), io_i32(&[w]), io_i32(&[w]), io_i32(&[w])]);
+        let cu_out: Vec<KernelIoSpec> = (0..w).map(|_| io(&[s, kvh, d])).collect();
+        b.add(&format!("cache_update_b{w}_tiny"), cu_in, cu_out, &["tiny", "batch", "cache"],
+              0.0, "in-place per-slot cache scatter (output j updates state j)");
+
+        let mut sd_in: Vec<KernelIoSpec> = vec![io(&[w, nh * d])];
+        sd_in.extend((0..2 * w).map(|_| io(&[s, kvh, d])));
+        sd_in.extend([io_i32(&[w]), io_i32(&[w]), io_i32(&[w])]);
+        b.add(&format!("sdpa_b{w}_tiny"), sd_in, vec![io(&[w, nh * d])],
+              &["tiny", "batch", "attention"],
+              2.0 * (w * nh) as f64 * d as f64 * s as f64 * 2.0,
+              "batched GQA gathering per-slot caches");
+
+        b.add(&format!("gate_up_silu_b{w}_tiny"), vec![io(&[w, h]), io(&[h, inter]), io(&[h, inter])],
+              vec![io(&[w, inter])], &["tiny", "batch", "mlp"],
+              2.0 * matmul_flops(w, h, inter), "batched MLP gate+up+silu fusion");
+        b.add(&format!("silu_b{w}_{inter}"), vec![io(&[w, inter])], vec![io(&[w, inter])],
+              bt, 0.0, "");
+        b.add(&format!("mul_b{w}_{inter}"), vec![io(&[w, inter]), io(&[w, inter])],
+              vec![io(&[w, inter])], bt, 0.0, "");
+        b.add(&format!("add_b{w}_{h}"), vec![io(&[w, h]), io(&[w, h])], vec![io(&[w, h])],
+              bt, 0.0, "");
+    }
+
     b.add(&format!("argmax_{v}"), vec![io(&[1, v])], vec![io_i32(&[1])],
           &["tiny", "argmax"], 0.0, "");
     b.add(&format!("softmax_{v}"), vec![io(&[1, v])], vec![io(&[1, v])],
@@ -268,6 +334,29 @@ mod tests {
         ] {
             assert!(kernels.contains_key(name), "missing '{name}'");
         }
+    }
+
+    #[test]
+    fn builtin_covers_every_batched_graph_kernel_at_every_width() {
+        use crate::fx::builder::{build_batched_decode_graph, MAX_BATCH_WIDTH};
+        let kernels = builtin_kernels();
+        let dims = GraphDims::qwen_tiny();
+        for w in 2..=MAX_BATCH_WIDTH {
+            for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+                let g = build_batched_decode_graph(&dims, fusion, w);
+                for name in g.kernel_names() {
+                    assert!(kernels.contains_key(&name), "w={w}: missing kernel '{name}'");
+                }
+            }
+        }
+        // Gather/scatter arities: W states + rows + 3 per-slot uniforms in,
+        // W states out; sdpa gathers 2W caches.
+        let cu = &kernels["cache_update_b4_tiny"];
+        assert_eq!((cu.inputs.len(), cu.outputs.len()), (4 + 4, 4));
+        let sd = &kernels["sdpa_b4_tiny"];
+        assert_eq!((sd.inputs.len(), sd.outputs.len()), (1 + 8 + 3, 1));
+        let kvf = &kernels["kv_fused_b2_64_64"];
+        assert_eq!(kvf.outputs.len(), 2);
     }
 
     #[test]

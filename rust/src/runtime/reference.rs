@@ -127,10 +127,26 @@ fn mul_lastdim(x: &Tensor, v: &Tensor) -> Result<Tensor> {
     Tensor::f32(x.shape.clone(), out)
 }
 
-/// `x * r` where `r` is a single scalar (rms_mul_x).
-fn mul_scalar_t(x: &Tensor, r: &Tensor) -> Result<Tensor> {
-    let s = f32s(r, "mul_scalar")?[0];
-    unary(x, |a| a * s)
+/// `x * r` where `r` holds one scalar per ROW of `x` (rms_mul_x). The
+/// single-session kernel is the rows == 1 case — numerically identical to
+/// the old whole-tensor scalar multiply — and the batched `[W, 1]` scale
+/// applies each slot's rsqrt to its own row only.
+fn mul_row_scalar(x: &Tensor, r: &Tensor) -> Result<Tensor> {
+    let rows = *x.shape.first().ok_or_else(|| Error::Shape("mul_scalar: 0-d".into()))?;
+    if r.numel() != rows || rows == 0 {
+        return Err(Error::Shape(format!(
+            "mul_scalar: {:?} rows vs {:?} scales",
+            x.shape, r.shape
+        )));
+    }
+    let (xd, rd) = (f32s(x, "mul_scalar")?, f32s(r, "mul_scalar")?);
+    let d = xd.len() / rows;
+    let out: Vec<f32> = xd
+        .iter()
+        .enumerate()
+        .map(|(i, &a)| a * rd[i / d])
+        .collect();
+    Tensor::f32(x.shape.clone(), out)
 }
 
 fn silu(x: f32) -> f32 {
@@ -162,13 +178,14 @@ fn softmax_rows(x: &Tensor) -> Result<Tensor> {
 
 /// Fused RMSNorm, written as the exact composition of the 6-dispatch
 /// decomposition (pow, mean, +eps, rsqrt, mul_x, mul_w) so fused and
-/// unfused flows agree bit-for-bit.
+/// unfused flows agree bit-for-bit. Every component is row-wise, so the
+/// batched `[W, H]` kernel is bit-identical to looping the single-row one.
 fn rmsnorm(x: &Tensor, w: &Tensor) -> Result<Tensor> {
     let x2 = unary(x, |a| a * a)?;
     let m = rms_mean(&x2)?;
     let me = unary(&m, |a| a + RMS_EPS)?;
     let r = unary(&me, |a| 1.0 / a.sqrt())?;
-    let xn = mul_scalar_t(x, &r)?;
+    let xn = mul_row_scalar(x, &r)?;
     mul_lastdim(&xn, w)
 }
 
@@ -363,6 +380,202 @@ fn concat_last(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     Tensor::f32(vec![rows, ca + cb], out)
 }
 
+// ------------------------------------------------- batched (slot) kernels --
+//
+// The `*_b{W}_*` kernels execute one dispatch over W session slots. Each
+// is written as a per-slot loop over the corresponding single-session
+// implementation, so batched decode is BIT-IDENTICAL to interleaving the
+// single-session kernels — the property the batched serving round's
+// equivalence tests pin. Cache ops gather/scatter across W separately
+// bound per-slot cache buffers through the `slot_idx` uniform, with
+// `slot_mask = 0` rows skipped entirely (partial rounds).
+
+/// Slice row `b` of a `[W, D]` tensor into `shape` (numel D).
+fn slot_row(x: &Tensor, b: usize, shape: Vec<usize>) -> Result<Tensor> {
+    let d: usize = shape.iter().product();
+    let xd = f32s(x, "slot_row")?;
+    if (b + 1) * d > xd.len() {
+        return Err(Error::Shape(format!(
+            "slot_row: row {b} of {:?} as {shape:?}",
+            x.shape
+        )));
+    }
+    Tensor::f32(shape, xd[b * d..(b + 1) * d].to_vec())
+}
+
+fn i32_slots<'a>(t: &'a Tensor, w: usize, what: &str) -> Result<&'a [i32]> {
+    let v = t
+        .as_i32()
+        .map_err(|_| Error::Runtime(format!("{what}: expected i32 per-slot uniform")))?;
+    if v.len() != w {
+        return Err(Error::Shape(format!("{what}: {} uniforms for {w} slots", v.len())));
+    }
+    Ok(v)
+}
+
+/// Batched K+V projection: one matmul against the concatenated weight,
+/// rows split per slot into the K and V outputs (the `[W, 2KV]` split is
+/// strided, so the kernel emits two outputs instead of a host alias).
+fn kv_fused_batched(x: &Tensor, wkv: &Tensor) -> Result<Vec<Tensor>> {
+    let m = matmul(x, wkv)?;
+    let (rows, two_kv) = (m.shape[0], m.shape[1]);
+    if two_kv % 2 != 0 {
+        return Err(Error::Shape(format!("kv_fused_b: odd columns {two_kv}")));
+    }
+    let kvc = two_kv / 2;
+    let md = f32s(&m, "kv_fused_b")?;
+    let mut k = Vec::with_capacity(rows * kvc);
+    let mut v = Vec::with_capacity(rows * kvc);
+    for r in 0..rows {
+        k.extend_from_slice(&md[r * two_kv..r * two_kv + kvc]);
+        v.extend_from_slice(&md[r * two_kv + kvc..(r + 1) * two_kv]);
+    }
+    Ok(vec![
+        Tensor::f32(vec![rows, kvc], k)?,
+        Tensor::f32(vec![rows, kvc], v)?,
+    ])
+}
+
+/// Batched rope table: each slot's cos/sin row at its own position.
+fn rope_cos_sin_batched(pos: &Tensor, inv_freq: &Tensor) -> Result<Vec<Tensor>> {
+    let ps = f32s(pos, "rope_b")?;
+    let w = ps.len();
+    let d = 2 * inv_freq.numel();
+    let mut cos = Vec::with_capacity(w * d);
+    let mut sin = Vec::with_capacity(w * d);
+    for &p in ps {
+        let cs = rope_cos_sin(&Tensor::scalar_f32(p), inv_freq)?;
+        cos.extend_from_slice(f32s(&cs[0], "rope_b")?);
+        sin.extend_from_slice(f32s(&cs[1], "rope_b")?);
+    }
+    Ok(vec![
+        Tensor::f32(vec![w, d], cos)?,
+        Tensor::f32(vec![w, d], sin)?,
+    ])
+}
+
+/// Batched rotary: `x` is `[W, heads*d]`, cos/sin are `[W, d]` (per-slot
+/// rows); each slot's heads rotate with that slot's table.
+fn rotary_batched(x: &Tensor, cos: &Tensor, sin: &Tensor) -> Result<Tensor> {
+    if x.shape.len() != 2 || cos.shape.len() != 2 || sin.shape != cos.shape {
+        return Err(Error::Shape(format!(
+            "rotary_b: x {:?} cos {:?} sin {:?}",
+            x.shape, cos.shape, sin.shape
+        )));
+    }
+    let (w, d) = (cos.shape[0], cos.shape[1]);
+    if x.shape[0] != w || d == 0 || x.shape[1] % d != 0 {
+        return Err(Error::Shape(format!(
+            "rotary_b: x {:?} vs table {:?}",
+            x.shape, cos.shape
+        )));
+    }
+    let heads = x.shape[1] / d;
+    let mut out = Vec::with_capacity(w * heads * d);
+    for b in 0..w {
+        let xb = slot_row(x, b, vec![heads, d])?;
+        let cb = slot_row(cos, b, vec![d])?;
+        let sb = slot_row(sin, b, vec![d])?;
+        out.extend_from_slice(f32s(&rotary(&xb, &cb, &sb)?, "rotary_b")?);
+    }
+    Tensor::f32(vec![w, heads * d], out)
+}
+
+/// Batched in-place cache append: inputs are the W per-slot cache states,
+/// then `rows [W, KVH*D]`, `pos [W]`, `slot_mask [W]`, `slot_idx [W]`.
+/// Output j is slot j's (possibly unchanged) state; batch row b scatters
+/// its row into cache set `slot_idx[b]` at `pos[b]` unless masked.
+fn cache_update_batched(inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    if inputs.len() < 5 {
+        return Err(Error::Runtime(format!(
+            "cache_update_b: needs >= 5 inputs, got {}",
+            inputs.len()
+        )));
+    }
+    let w = inputs.len() - 4;
+    let caches = &inputs[..w];
+    let rows = &inputs[w];
+    let pos = i32_slots(&inputs[w + 1], w, "cache_update_b pos")?;
+    let mask = i32_slots(&inputs[w + 2], w, "cache_update_b mask")?;
+    let slots = i32_slots(&inputs[w + 3], w, "cache_update_b slot_idx")?;
+    if caches[0].shape.len() != 3 {
+        return Err(Error::Shape(format!(
+            "cache_update_b: cache shape {:?}",
+            caches[0].shape
+        )));
+    }
+    let (kvh, d) = (caches[0].shape[1], caches[0].shape[2]);
+    if rows.shape != [w, kvh * d] {
+        return Err(Error::Shape(format!(
+            "cache_update_b: rows {:?} for {w} slots of [{kvh}, {d}]",
+            rows.shape
+        )));
+    }
+    let mut outs: Vec<Tensor> = caches.to_vec();
+    for b in 0..w {
+        if mask[b] == 0 {
+            continue;
+        }
+        let t = slots[b];
+        if t < 0 || t as usize >= w {
+            return Err(Error::Shape(format!(
+                "cache_update_b: slot_idx[{b}] = {t} out of {w} slots"
+            )));
+        }
+        let row = slot_row(rows, b, vec![kvh, d])?;
+        outs[t as usize] = cache_update(&outs[t as usize], &row, pos[b].max(0) as usize)?;
+    }
+    Ok(outs)
+}
+
+/// Batched grouped-query attention: inputs are `q [W, NH*D]`, the W
+/// per-slot K caches, the W per-slot V caches, then `pos_ip1 [W]`,
+/// `slot_mask [W]`, `slot_idx [W]`. Batch row b attends over cache set
+/// `slot_idx[b]`; masked rows produce zeros (their logits are never read).
+fn sdpa_batched(inputs: &[Tensor]) -> Result<Tensor> {
+    if inputs.len() < 7 || (inputs.len() - 4) % 2 != 0 {
+        return Err(Error::Runtime(format!(
+            "sdpa_b: bad input count {}",
+            inputs.len()
+        )));
+    }
+    let w = (inputs.len() - 4) / 2;
+    let q = &inputs[0];
+    let ks = &inputs[1..1 + w];
+    let vs = &inputs[1 + w..1 + 2 * w];
+    let pos = i32_slots(&inputs[1 + 2 * w], w, "sdpa_b pos")?;
+    let mask = i32_slots(&inputs[2 + 2 * w], w, "sdpa_b mask")?;
+    let slots = i32_slots(&inputs[3 + 2 * w], w, "sdpa_b slot_idx")?;
+    if q.shape.len() != 2 || q.shape[0] != w || ks[0].shape.len() != 3 {
+        return Err(Error::Shape(format!(
+            "sdpa_b: q {:?} for {w} slots, k {:?}",
+            q.shape, ks[0].shape
+        )));
+    }
+    let qcols = q.shape[1];
+    let d = ks[0].shape[2];
+    if d == 0 || qcols % d != 0 {
+        return Err(Error::Shape(format!("sdpa_b: q cols {qcols} vs head dim {d}")));
+    }
+    let heads = qcols / d;
+    let mut out = vec![0f32; w * qcols];
+    for b in 0..w {
+        if mask[b] == 0 {
+            continue;
+        }
+        let t = slots[b];
+        if t < 0 || t as usize >= w {
+            return Err(Error::Shape(format!(
+                "sdpa_b: slot_idx[{b}] = {t} out of {w} slots"
+            )));
+        }
+        let qb = slot_row(q, b, vec![heads, d])?;
+        let o = sdpa_gqa(&qb, &ks[t as usize], &vs[t as usize], pos[b].max(0) as usize)?;
+        out[b * qcols..(b + 1) * qcols].copy_from_slice(f32s(&o, "sdpa_b")?);
+    }
+    Tensor::f32(vec![w, qcols], out)
+}
+
 // --------------------------------------------------------------- dispatch --
 
 fn need(inputs: &[Tensor], n: usize, name: &str) -> Result<()> {
@@ -380,8 +593,25 @@ pub fn execute_kernel(spec: &KernelSpec, inputs: &[Tensor]) -> Result<Vec<Tensor
     let name = spec.name.as_str();
     // Ordering matters: check longer/more-specific prefixes before shorter
     // ones (e.g. "matmul" before "mul_", "rms_mul_x" before "rms_mul_w",
-    // "softmax_naive" before "softmax").
-    let outs: Vec<Tensor> = if name.starts_with("matmul") || name.starts_with("kv_fused") {
+    // "softmax_naive" before "softmax") — and the batched `*_b{W}` forms
+    // whose input layout differs from their single-session counterparts
+    // before those counterparts. Row-wise batched kernels (matmul_b*,
+    // rmsnorm_b*, rms_*_b*, silu_b*, mul_b*, add_b*) need no special
+    // casing: the shared implementations are row-safe.
+    let outs: Vec<Tensor> = if name.starts_with("kv_fused_b") {
+        need(inputs, 2, name)?;
+        kv_fused_batched(&inputs[0], &inputs[1])?
+    } else if name.starts_with("rope_cos_sin_b") {
+        need(inputs, 2, name)?;
+        rope_cos_sin_batched(&inputs[0], &inputs[1])?
+    } else if name.starts_with("rotary_b") {
+        need(inputs, 3, name)?;
+        vec![rotary_batched(&inputs[0], &inputs[1], &inputs[2])?]
+    } else if name.starts_with("cache_update_b") {
+        cache_update_batched(inputs)?
+    } else if name.starts_with("sdpa_b") {
+        vec![sdpa_batched(inputs)?]
+    } else if name.starts_with("matmul") || name.starts_with("kv_fused") {
         need(inputs, 2, name)?;
         vec![matmul(&inputs[0], &inputs[1])?]
     } else if name.starts_with("gate_up_silu") {
@@ -407,7 +637,7 @@ pub fn execute_kernel(spec: &KernelSpec, inputs: &[Tensor]) -> Result<Vec<Tensor
         vec![unary(&inputs[0], |a| 1.0 / a.sqrt())?]
     } else if name.starts_with("rms_mul_x") {
         need(inputs, 2, name)?;
-        vec![mul_scalar_t(&inputs[0], &inputs[1])?]
+        vec![mul_row_scalar(&inputs[0], &inputs[1])?]
     } else if name.starts_with("rms_mul_w") || name.starts_with("mul_vec") {
         need(inputs, 2, name)?;
         vec![mul_lastdim(&inputs[0], &inputs[1])?]
@@ -527,7 +757,7 @@ mod tests {
         let m = rms_mean(&x2).unwrap();
         let me = unary(&m, |a| a + RMS_EPS).unwrap();
         let r = unary(&me, |a| 1.0 / a.sqrt()).unwrap();
-        let xn = mul_scalar_t(&x, &r).unwrap();
+        let xn = mul_row_scalar(&x, &r).unwrap();
         let dec = mul_lastdim(&xn, &w).unwrap();
         assert_eq!(fused.as_f32().unwrap(), dec.as_f32().unwrap());
     }
@@ -604,5 +834,156 @@ mod tests {
     fn unknown_kernel_rejected() {
         let s = spec("warp_drive_9000", vec![]);
         assert!(execute_kernel(&s, &[]).is_err());
+    }
+
+    // ---- batched kernels: numerics-checked against looping the
+    // single-session kernels, bit-for-bit ----
+
+    fn ramp(shape: Vec<usize>, scale: f32, offset: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::f32(shape, (0..n).map(|i| (i as f32) * scale + offset).collect()).unwrap()
+    }
+
+    #[test]
+    fn batched_rmsnorm_rows_match_single_rows_bitwise() {
+        let w = 3;
+        let h = 8;
+        let x = ramp(vec![w, h], 0.13, -0.7);
+        let g = ramp(vec![h], 0.05, 0.4);
+        let batched = rmsnorm(&x, &g).unwrap();
+        for b in 0..w {
+            let xb = slot_row(&x, b, vec![1, h]).unwrap();
+            let single = rmsnorm(&xb, &g).unwrap();
+            assert_eq!(
+                &batched.as_f32().unwrap()[b * h..(b + 1) * h],
+                single.as_f32().unwrap(),
+                "row {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_rotary_and_rope_match_single_loop_bitwise() {
+        let (w, heads, d) = (4usize, 2usize, 8usize);
+        let pos = Tensor::f32(vec![w], vec![0.0, 3.0, 7.0, 1.0]).unwrap();
+        let inv = ramp(vec![d / 2], 0.21, 0.05);
+        let cs = rope_cos_sin_batched(&pos, &inv).unwrap();
+        let x = ramp(vec![w, heads * d], 0.07, -1.2);
+        let out = rotary_batched(&x, &cs[0], &cs[1]).unwrap();
+        for b in 0..w {
+            let p = pos.as_f32().unwrap()[b];
+            let single_cs = rope_cos_sin(&Tensor::scalar_f32(p), &inv).unwrap();
+            assert_eq!(
+                slot_row(&cs[0], b, vec![d]).unwrap().as_f32().unwrap(),
+                single_cs[0].as_f32().unwrap(),
+                "cos row {b}"
+            );
+            let xb = slot_row(&x, b, vec![heads, d]).unwrap();
+            let single = rotary(&xb, &single_cs[0], &single_cs[1]).unwrap();
+            assert_eq!(
+                &out.as_f32().unwrap()[b * heads * d..(b + 1) * heads * d],
+                single.as_f32().unwrap(),
+                "rotary row {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_kv_fused_matches_matmul_then_split_bitwise() {
+        let (w, h, kv) = (3usize, 4usize, 3usize);
+        let x = ramp(vec![w, h], 0.31, -0.2);
+        let wkv = ramp(vec![h, 2 * kv], 0.11, 0.9);
+        let outs = kv_fused_batched(&x, &wkv).unwrap();
+        for b in 0..w {
+            let xb = slot_row(&x, b, vec![1, h]).unwrap();
+            let m = matmul(&xb, &wkv).unwrap();
+            let md = m.as_f32().unwrap();
+            assert_eq!(&outs[0].as_f32().unwrap()[b * kv..(b + 1) * kv], &md[..kv]);
+            assert_eq!(&outs[1].as_f32().unwrap()[b * kv..(b + 1) * kv], &md[kv..]);
+        }
+    }
+
+    #[test]
+    fn batched_cache_update_scatters_and_masks_per_slot() {
+        let (w, s, kvh, d) = (3usize, 4usize, 1usize, 2usize);
+        let caches: Vec<Tensor> = (0..w)
+            .map(|j| ramp(vec![s, kvh, d], 0.0, j as f32 + 1.0))
+            .collect();
+        let rows = ramp(vec![w, kvh * d], 1.0, 100.0);
+        let pos = Tensor::i32(vec![w], vec![1, 2, 3]).unwrap();
+        let mask = Tensor::i32(vec![w], vec![1, 0, 1]).unwrap();
+        let idx = Tensor::i32(vec![w], vec![0, 1, 2]).unwrap();
+        let mut inputs = caches.clone();
+        inputs.extend([rows.clone(), pos, mask, idx]);
+        let outs = cache_update_batched(&inputs).unwrap();
+        // Active slots match the single-session kernel exactly.
+        let r0 = slot_row(&rows, 0, vec![kvh, d]).unwrap();
+        assert_eq!(
+            outs[0].as_f32().unwrap(),
+            cache_update(&caches[0], &r0, 1).unwrap().as_f32().unwrap()
+        );
+        let r2 = slot_row(&rows, 2, vec![kvh, d]).unwrap();
+        assert_eq!(
+            outs[2].as_f32().unwrap(),
+            cache_update(&caches[2], &r2, 3).unwrap().as_f32().unwrap()
+        );
+        // The masked slot's state is bit-identical to its input.
+        assert_eq!(outs[1].as_f32().unwrap(), caches[1].as_f32().unwrap());
+    }
+
+    #[test]
+    fn batched_cache_update_follows_slot_idx_permutation() {
+        // Row b lands in cache set slot_idx[b]: a swapped index routes
+        // row 0 into slot 1 and row 1 into slot 0.
+        let (w, s, kvh, d) = (2usize, 2usize, 1usize, 2usize);
+        let caches: Vec<Tensor> = (0..w).map(|_| Tensor::zeros_f32(vec![s, kvh, d])).collect();
+        let rows = Tensor::f32(vec![w, kvh * d], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let pos = Tensor::i32(vec![w], vec![0, 0]).unwrap();
+        let mask = Tensor::i32(vec![w], vec![1, 1]).unwrap();
+        let idx = Tensor::i32(vec![w], vec![1, 0]).unwrap();
+        let mut inputs = caches;
+        inputs.extend([rows, pos, mask, idx]);
+        let outs = cache_update_batched(&inputs).unwrap();
+        assert_eq!(&outs[1].as_f32().unwrap()[..2], &[1.0, 2.0]);
+        assert_eq!(&outs[0].as_f32().unwrap()[..2], &[3.0, 4.0]);
+        // Out-of-range index fails loudly.
+        let mut bad = outs.clone();
+        bad.extend([
+            Tensor::f32(vec![w, kvh * d], vec![0.0; 4]).unwrap(),
+            Tensor::i32(vec![w], vec![0, 0]).unwrap(),
+            Tensor::i32(vec![w], vec![1, 1]).unwrap(),
+            Tensor::i32(vec![w], vec![0, 9]).unwrap(),
+        ]);
+        assert!(cache_update_batched(&bad).is_err());
+    }
+
+    #[test]
+    fn batched_sdpa_matches_single_loop_and_zeroes_masked_rows() {
+        let (w, heads, kvh, d, s) = (3usize, 2usize, 1usize, 2usize, 4usize);
+        let q = ramp(vec![w, heads * d], 0.17, -0.4);
+        let ks: Vec<Tensor> = (0..w).map(|j| ramp(vec![s, kvh, d], 0.09, j as f32)).collect();
+        let vs: Vec<Tensor> = (0..w).map(|j| ramp(vec![s, kvh, d], 0.05, -(j as f32))).collect();
+        let pos = Tensor::i32(vec![w], vec![2, 4, 1]).unwrap();
+        let mask = Tensor::i32(vec![w], vec![1, 1, 0]).unwrap();
+        let idx = Tensor::i32(vec![w], vec![0, 1, 2]).unwrap();
+        let mut inputs = vec![q.clone()];
+        inputs.extend(ks.iter().cloned());
+        inputs.extend(vs.iter().cloned());
+        inputs.extend([pos, mask, idx]);
+        let out = sdpa_batched(&inputs).unwrap();
+        for b in 0..2 {
+            let qb = slot_row(&q, b, vec![heads, d]).unwrap();
+            let p = [2usize, 4][b];
+            let single = sdpa_gqa(&qb, &ks[b], &vs[b], p).unwrap();
+            assert_eq!(
+                &out.as_f32().unwrap()[b * heads * d..(b + 1) * heads * d],
+                single.as_f32().unwrap(),
+                "slot {b}"
+            );
+        }
+        assert!(
+            out.as_f32().unwrap()[2 * heads * d..].iter().all(|&x| x == 0.0),
+            "masked slot must produce zeros"
+        );
     }
 }

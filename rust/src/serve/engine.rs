@@ -19,9 +19,12 @@ use std::collections::HashMap;
 
 use crate::engine::inference::EngineConfig;
 use crate::engine::GraphExecutor;
-use crate::fx::builder::{build_decode_graph, GraphDims};
+use crate::fx::builder::{
+    build_batched_decode_graph, build_decode_graph, GraphDims, MAX_BATCH_WIDTH,
+};
 use crate::fx::graph::FxGraph;
 use crate::model::weights::ModelWeights;
+use crate::plan::DeviceKvCache;
 use crate::runtime::hostops;
 use crate::runtime::registry::Registry;
 use crate::tensor::Tensor;
@@ -82,6 +85,17 @@ pub struct ServingEngine<'r> {
     /// the public API in planned mode without clobbering a deferred
     /// logits readback. (`step_round` assigns indices by round position.)
     ring_cursor: usize,
+    /// The batched decode graph (planned mode with `batch_width >= 2`):
+    /// scheduler rounds with >= 2 active sessions replay its compiled plan
+    /// — one dispatch per layer op per chunk of `batch_width` sessions —
+    /// instead of interleaving per-session replays. `None` disables
+    /// batching (eager mode, `--no-batch`, or max_concurrent == 1).
+    pub batched_graph: Option<FxGraph>,
+    /// Effective batched slot width (0 when batching is disabled).
+    pub batch_width: usize,
+    /// Scheduler rounds completed (any path) — the denominator of the
+    /// `dispatches_per_round` serving metric.
+    pub rounds: u64,
 }
 
 impl<'r> ServingEngine<'r> {
@@ -91,8 +105,45 @@ impl<'r> ServingEngine<'r> {
         let dims = ec.dims_override.unwrap_or_else(|| GraphDims::from_manifest(mc));
         let graph = build_decode_graph(&dims, ec.fusion);
         graph.validate()?;
+        // Batched decode engages only for planned multi-session serving:
+        // eager mode, single-session engines, and the device-argmax finish
+        // variant (whose per-session argmax dispatch expects single-row
+        // logits) keep the exact pre-batching paths — the paper's batch=1
+        // pathology stays measurable, and nothing compiles a plan it will
+        // never replay (or mislabels its report as batched).
+        let batch_width = if ec.exec == crate::engine::ExecMode::Planned
+            && config.max_concurrent >= 2
+            && ec.batch_width >= 2
+            && !ec.device_argmax
+        {
+            // Validate the REQUESTED width, before the max_concurrent
+            // clamp: the same --batch-width must be accepted or rejected
+            // independently of --concurrent.
+            if ec.batch_width > MAX_BATCH_WIDTH {
+                return Err(Error::Graph(format!(
+                    "batch width {} exceeds built-in kernel coverage \
+                     (<= {MAX_BATCH_WIDTH}); pass --no-batch or a smaller --batch-width",
+                    ec.batch_width
+                )));
+            }
+            ec.batch_width.min(config.max_concurrent)
+        } else {
+            0
+        };
         let mut device = Device::new(ec.profile.clone());
         device.kernel_time_policy = ec.kernel_time_policy;
+        if batch_width >= 2 {
+            // The batched cache ops bind 2W per-slot cache buffers plus q
+            // and 3 per-slot uniforms in one group — above the 8-binding
+            // WebGPU default. Request raised limits up front, the
+            // requestDevice({requiredLimits}) pattern real WebGPU engines
+            // use (desktop adapters expose far higher storage-buffer
+            // counts than the spec floor).
+            let need = 2 * batch_width + 5;
+            if device.limits.max_bindings_per_group < need {
+                device.limits.max_bindings_per_group = need;
+            }
+        }
         let mut executor = GraphExecutor::new(device, registry, ec.framework_ns_per_op);
         executor.pool.set_cap(ec.pool_cap_bytes);
         executor.prepare(&graph)?;
@@ -135,6 +186,34 @@ impl<'r> ServingEngine<'r> {
             )?;
         }
 
+        // Batched plan alongside the single-session one: rounds with >= 2
+        // active sessions replay this graph once per chunk of batch_width
+        // sessions; 1-active rounds (and the public encode/finish API) keep
+        // the single-session path byte-for-byte. Weight bindings reuse the
+        // buffers pinned above (matched by name) — one copy serves both
+        // plans. The logits ring covers one whole round's chunks
+        // (ceil(max_concurrent / width)), so every chunk's [W, vocab] row
+        // block survives until the round's ONE coalesced readback — the
+        // same fixed-sync amortization the interleaved path has.
+        let batched_graph = if batch_width >= 2 {
+            let bg = build_batched_decode_graph(&dims, ec.fusion, batch_width);
+            bg.validate()?;
+            let chunks_per_round =
+                (config.max_concurrent + batch_width - 1) / batch_width;
+            executor.enable_batched_plan(
+                &bg,
+                crate::plan::PlanConfig {
+                    dispatches_per_submit: ec.dispatches_per_submit.max(1),
+                    framework_ns_per_step: ec.planned_framework_ns_per_step,
+                    logits_ring: chunks_per_round.max(1),
+                },
+                batch_width,
+            )?;
+            Some(bg)
+        } else {
+            None
+        };
+
         Ok(ServingEngine {
             config,
             dims,
@@ -146,6 +225,9 @@ impl<'r> ServingEngine<'r> {
             finished: Vec::new(),
             argmax,
             ring_cursor: 0,
+            batched_graph,
+            batch_width,
+            rounds: 0,
         })
     }
 
@@ -256,6 +338,42 @@ impl<'r> ServingEngine<'r> {
         Self::finish_inner(executor, argmax.as_ref(), s, h)
     }
 
+    /// Promote a planned session to device residency (first encode or
+    /// after an evict): allocate a session-owned cache set from the
+    /// bounded pool; hydrate spilled host state when resuming
+    /// mid-generation. One-time per-session cost, off the token loop.
+    /// No-op for already-device-resident sessions. Shared by the
+    /// single-session encode path and the batched round packer.
+    fn promote_to_device(executor: &mut GraphExecutor<'r>, s: &mut SessionState) -> Result<()> {
+        if s.kv.is_device() {
+            return Ok(());
+        }
+        let cache = executor.alloc_kv_cache()?;
+        if s.pos > 0 {
+            // Layer-major [K, V] flattening matches the plan's persistent
+            // declaration order. References only — the host state is
+            // uploaded, not copied.
+            let res = match s.kv.as_host() {
+                Some(host) => {
+                    let tensors: Vec<&Tensor> =
+                        host.iter().flat_map(|(k, v)| [k, v]).collect();
+                    executor.hydrate_kv_cache(&cache, &tensors)
+                }
+                None => Err(Error::Graph(
+                    "non-device KV cache must be host-resident".into(),
+                )),
+            };
+            if let Err(e) = res {
+                // A failed resume must not strand the freshly claimed
+                // set (the hydrate error is the one worth surfacing).
+                let _ = executor.release_kv_cache(cache);
+                return Err(e);
+            }
+        }
+        s.kv = KvCache::Device(cache);
+        Ok(())
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn encode_inner(
         executor: &mut GraphExecutor<'r>,
@@ -279,34 +397,8 @@ impl<'r> ServingEngine<'r> {
         // this session's upload_bytes — parking and resuming every few
         // tokens must not report as resident-cache traffic savings.
         let w0 = executor.device.stats.bytes_written;
-        // Promote a planned session to device residency on its first
-        // encode (or after an evict): allocate a session-owned cache set
-        // from the bounded pool; hydrate spilled host state when resuming
-        // mid-generation. One-time per-session cost, off the token loop.
-        if planned && !s.kv.is_device() {
-            let cache = executor.alloc_kv_cache()?;
-            if s.pos > 0 {
-                // Layer-major [K, V] flattening matches the plan's
-                // persistent declaration order. References only — the
-                // host state is uploaded, not copied.
-                let res = match s.kv.as_host() {
-                    Some(host) => {
-                        let tensors: Vec<&Tensor> =
-                            host.iter().flat_map(|(k, v)| [k, v]).collect();
-                        executor.hydrate_kv_cache(&cache, &tensors)
-                    }
-                    None => Err(Error::Graph(
-                        "non-device KV cache must be host-resident".into(),
-                    )),
-                };
-                if let Err(e) = res {
-                    // A failed resume must not strand the freshly claimed
-                    // set (the hydrate error is the one worth surfacing).
-                    let _ = executor.release_kv_cache(cache);
-                    return Err(e);
-                }
-            }
-            s.kv = KvCache::Device(cache);
+        if planned {
+            Self::promote_to_device(executor, s)?;
         }
 
         // Attribution snapshots (virtual-clock deltas belong to this
@@ -486,16 +578,34 @@ impl<'r> ServingEngine<'r> {
         Ok(idx)
     }
 
-    /// One scheduler round: admit, encode one decode step for every active
-    /// session (round-robin order = admission order), finish them behind a
-    /// single coalesced readback, retire completed sessions. Returns the
-    /// number of sessions stepped.
+    /// One scheduler round: admit, step every active session once, retire
+    /// completed sessions. Returns the number of sessions stepped.
+    ///
+    /// With batching enabled (planned mode, `batch_width >= 2`) and >= 2
+    /// active sessions, the round replays the BATCHED plan — active
+    /// sessions pack into batch slots and each layer op is ONE dispatch
+    /// per chunk of `batch_width` sessions instead of one per session.
+    /// Rounds with a single active session (and the device-argmax finish
+    /// variant, whose per-session argmax dispatch expects single-row
+    /// logits) keep the interleaved path byte-for-byte.
     pub fn step_round(&mut self) -> Result<usize> {
         self.admit()?;
         let n = self.active.len();
         if n == 0 {
             return Ok(0);
         }
+        if n >= 2 && self.batched_graph.is_some() && self.argmax.is_none() {
+            self.step_round_batched()?;
+        } else {
+            self.step_round_interleaved(n)?;
+        }
+        self.rounds += 1;
+        self.retire_finished()
+    }
+
+    /// The pre-batching round body: per-session encodes, then a coalesced
+    /// finish. Also the N = 1 round shape under batching.
+    fn step_round_interleaved(&mut self, n: usize) -> Result<()> {
         let mut handles: Vec<Option<StepHandle>> = Vec::with_capacity(n);
         for i in 0..n {
             // In planned mode, each session in the round replays into its
@@ -537,13 +647,8 @@ impl<'r> ServingEngine<'r> {
             // Split the shared sync exactly across participants (remainder
             // to the first) so per-session sums match the device timeline.
             let k = owners.len() as u64;
-            if k > 0 {
-                let share = sync_cost / k;
-                let first = sync_cost - share * (k - 1);
-                for (j, &i) in owners.iter().enumerate() {
-                    self.active[i].metrics.sync_virtual_ns +=
-                        if j == 0 { first } else { share };
-                }
+            for (j, &i) in owners.iter().enumerate() {
+                self.active[i].metrics.sync_virtual_ns += share(sync_cost, k, j);
             }
             let now = self.executor.device.clock.now_ns();
             let mut bytes_iter = all_bytes.into_iter();
@@ -563,20 +668,183 @@ impl<'r> ServingEngine<'r> {
                 self.active[i].note_token(next, now);
             }
         }
+        Ok(())
+    }
 
-        // Retire finished sessions (continuous scheduling: their pooled
-        // buffers — including device-resident cache sets — are immediately
-        // reusable by the next admitted session).
+    /// The batched round body: pack active sessions into batch slots in
+    /// admission order (chunks of `batch_width`; ragged chunks mask their
+    /// unused slots — no recompile), upload ONE concatenated
+    /// token/position buffer per chunk, replay the batched plan per chunk
+    /// (one dispatch per layer op, K/V appends scattered into each
+    /// session's own cache set, each chunk into its own logits-ring
+    /// buffer), then read EVERY chunk's `[W, vocab]` logits row block back
+    /// behind ONE round-level synchronization and demultiplex rows to
+    /// sessions — the coalesced-sync amortization of the interleaved path,
+    /// kept intact when N exceeds the batch width.
+    fn step_round_batched(&mut self) -> Result<()> {
+        let n = self.active.len();
+        let width = self.batch_width;
+        let (hidden, vocab, max_seq) = (self.dims.hidden, self.dims.vocab, self.dims.max_seq);
+        // Per-chunk replay outputs awaiting the round's single readback.
+        let mut chunk_bufs: Vec<BufferId> = Vec::new();
+        let mut chunk_bounds: Vec<(usize, usize)> = Vec::new();
+        let mut start = 0usize;
+        let mut ring = 0usize;
+        while start < n {
+            let count = width.min(n - start);
+            // ---- pack: residency, input tokens, per-slot uniforms ----
+            let mut xbuf = vec![0f32; width * hidden];
+            let mut pos_i = vec![0i32; width];
+            let mut pos_ip1 = vec![0i32; width];
+            let mut pos_f = vec![0f32; width];
+            let mut mask = vec![0i32; width];
+            let slot_idx: Vec<i32> = (0..width as i32).collect();
+            let mut was_prompt = vec![false; width];
+            {
+                let ServingEngine { executor, weights, active, .. } = &mut *self;
+                for b in 0..count {
+                    let s = &mut active[start + b];
+                    if s.pos >= max_seq {
+                        return Err(Error::Graph(format!(
+                            "KV cache capacity {max_seq} exhausted"
+                        )));
+                    }
+                    // Hydration of a resumed session is charged to it.
+                    let w0 = executor.device.stats.bytes_written;
+                    Self::promote_to_device(executor, s)?;
+                    s.metrics.upload_bytes += executor.device.stats.bytes_written - w0;
+                    let (token, wp) = s.take_input().ok_or_else(|| {
+                        Error::Graph(format!("session {} has no input token", s.id))
+                    })?;
+                    was_prompt[b] = wp;
+                    let emb = hostops::embed(&weights.embedding, token)?;
+                    xbuf[b * hidden..(b + 1) * hidden].copy_from_slice(emb.as_f32()?);
+                    pos_i[b] = s.pos as i32;
+                    pos_ip1[b] = s.pos as i32 + 1;
+                    pos_f[b] = s.pos as f32;
+                    mask[b] = 1;
+                }
+            }
+            let mut inputs: HashMap<String, Tensor> = HashMap::with_capacity(7);
+            inputs.insert("x".into(), Tensor::f32(vec![width, hidden], xbuf)?);
+            inputs.insert("pos_i".into(), Tensor::i32(vec![width], pos_i)?);
+            inputs.insert("pos_ip1".into(), Tensor::i32(vec![width], pos_ip1)?);
+            inputs.insert("pos_f".into(), Tensor::f32(vec![width], pos_f)?);
+            inputs.insert("slot_mask".into(), Tensor::i32(vec![width], mask)?);
+            inputs.insert("slot_idx".into(), Tensor::i32(vec![width], slot_idx)?);
+            inputs.insert("inv_freq".into(), self.weights.inv_freq.clone());
+
+            // ---- one replay per chunk, shared-cost snapshots around it ----
+            let ph0 = self.executor.device.timeline.virtual_ns;
+            let k0 = self.executor.device.timeline.kernel_virtual_ns;
+            let fw0 = self.executor.framework_virtual_ns;
+            let d0 = self.executor.dispatch_count;
+            let w0 = self.executor.device.stats.bytes_written;
+            let c0 = self.executor.device.clock.now_ns();
+            let logits_buf = {
+                let ServingEngine { executor, batched_graph, active, .. } = &mut *self;
+                let graph = batched_graph.as_ref().expect("batched path checked");
+                let table: Vec<Option<&DeviceKvCache>> = (0..width)
+                    .map(|b| {
+                        if b < count {
+                            active[start + b].kv.as_device()
+                        } else {
+                            None // padding set, masked out
+                        }
+                    })
+                    .collect();
+                let (_outs, logits_buf, _delta) =
+                    executor.run_batched(graph, &inputs, ring, &table)?;
+                logits_buf
+            };
+
+            // ---- split the chunk's shared costs across its sessions so
+            // per-session sums keep tiling the engine totals ----
+            let tl = self.executor.device.timeline.virtual_ns;
+            let kernel_d = self.executor.device.timeline.kernel_virtual_ns - k0;
+            let fw_d = self.executor.framework_virtual_ns - fw0;
+            let disp_d = self.executor.dispatch_count - d0;
+            let upload_d = self.executor.device.stats.bytes_written - w0;
+            let encode_d = self.executor.device.clock.now_ns() - c0;
+            let k = count as u64;
+            for b in 0..count {
+                let s = &mut self.active[start + b];
+                for i in 0..8 {
+                    s.metrics.phase_virtual_ns[i] += share(tl[i] - ph0[i], k, b);
+                }
+                s.metrics.kernel_virtual_ns += share(kernel_d, k, b);
+                s.metrics.framework_virtual_ns += share(fw_d, k, b);
+                let dshare = share(disp_d, k, b);
+                s.metrics.dispatches += dshare;
+                s.metrics.upload_bytes += share(upload_d, k, b);
+                s.metrics.encode_virtual_ns += share(encode_d, k, b);
+                s.metrics.steps += 1;
+                if was_prompt[b] {
+                    s.metrics.prefill_steps += 1;
+                    s.metrics.prefill_dispatches += dshare;
+                }
+                // The on-device scatter already appended this step's K/V.
+                s.pos += 1;
+            }
+
+            chunk_bufs.push(logits_buf.ok_or_else(|| {
+                Error::Graph("batched plan produced no logits buffer".into())
+            })?);
+            chunk_bounds.push((start, count));
+            start += count;
+            ring += 1;
+        }
+
+        // ---- ONE synchronizing readback for the WHOLE round (all chunks'
+        // ring buffers behind a single map), then per-slot demux ----
+        let sy0 = self.executor.device.timeline.sync_virtual_ns;
+        let all_bytes = self.executor.device.map_read_many(&chunk_bufs)?;
+        let sync_d = self.executor.device.timeline.sync_virtual_ns - sy0;
+        for &buf in &chunk_bufs {
+            self.executor.release_logits(buf)?;
+        }
+        let now = self.executor.device.clock.now_ns();
+        let row = vocab * 4;
+        let k_all = n as u64;
+        let mut sess_j = 0usize;
+        for (&(cstart, ccount), bytes) in chunk_bounds.iter().zip(&all_bytes) {
+            for b in 0..ccount {
+                let s = &mut self.active[cstart + b];
+                s.metrics.sync_virtual_ns += share(sync_d, k_all, sess_j);
+                sess_j += 1;
+                let next = argmax_bytes(&bytes[b * row..(b + 1) * row]);
+                s.note_token(next, now);
+            }
+        }
+        Ok(())
+    }
+
+    /// Retire finished sessions (continuous scheduling: their pooled
+    /// buffers — including device-resident cache sets — are immediately
+    /// reusable by the next admitted session). Returns the number of
+    /// sessions that were stepped this round (pre-retire active count).
+    ///
+    /// Sessions leave in admission order (FIFO completion bookkeeping) but
+    /// their cache sets are released in REVERSE admission order: the
+    /// pool's LIFO free lists then hand the next admissions the same
+    /// buffer sets in the same slot order, keeping both the per-set bind
+    /// groups and the batched cache-set-TABLE bind groups cache-hot when
+    /// a whole round retires together.
+    fn retire_finished(&mut self) -> Result<usize> {
+        let n = self.active.len();
+        let mut done: Vec<SessionState> = Vec::new();
         let mut i = 0;
         while i < self.active.len() {
             if self.active[i].finished() {
-                let mut s = self.active.remove(i);
-                self.release_session_cache(&mut s)?;
-                self.finished.push(s);
+                done.push(self.active.remove(i));
             } else {
                 i += 1;
             }
         }
+        for s in done.iter_mut().rev() {
+            self.release_session_cache(s)?;
+        }
+        self.finished.extend(done);
         Ok(n)
     }
 
@@ -642,18 +910,29 @@ impl<'r> ServingEngine<'r> {
         }
         let t0 = self.now_ns();
         let f0 = self.finished.len();
+        let r0 = self.rounds;
         while !self.queue.is_empty() || !self.active.is_empty() {
             self.step_round()?;
         }
         let wall = self.now_ns() - t0;
         let mut report = ServeReport::from_sessions(&self.finished[f0..], wall);
+        report.rounds = self.rounds - r0;
         // Engine-level attribution: one-time plan-build cost (planned
-        // mode), cache residency, and the bounded pool's counters.
+        // mode), cache residency, batching, and the pool's counters.
         if let Some(runner) = self.executor.plan_runner() {
             report.planned = true;
             report.plan_build_virtual_ns = runner.build_virtual_ns;
             report.plan_build_real_ns = runner.build_real_ns;
             report.resident_bytes = runner.plan.stats.resident_bytes as u64;
+        }
+        if self.batched_graph.is_some() {
+            report.batch_width = self.batch_width;
+            if let Some(br) = self.executor.batched_runner() {
+                // The batched plan's build cost is one-time too; fold it
+                // into the engine-level build attribution.
+                report.plan_build_virtual_ns += br.inner().build_virtual_ns;
+                report.plan_build_real_ns += br.inner().build_real_ns;
+            }
         }
         let ps = self.executor.pool.stats();
         report.pool_high_water_bytes = ps.high_water_bytes as u64;
@@ -664,6 +943,18 @@ impl<'r> ServingEngine<'r> {
     /// Take ownership of the retired sessions (completion order).
     pub fn drain_finished(&mut self) -> Vec<SessionState> {
         std::mem::take(&mut self.finished)
+    }
+}
+
+/// Split a shared per-chunk cost evenly across its `k` participants
+/// (remainder to the first) so per-session sums keep tiling the engine
+/// totals exactly — the same convention as the coalesced-sync split.
+fn share(total: u64, k: u64, j: usize) -> u64 {
+    let base = total / k;
+    if j == 0 {
+        total - base * (k - 1)
+    } else {
+        base
     }
 }
 

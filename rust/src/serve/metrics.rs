@@ -38,6 +38,14 @@ pub struct ServeReport {
     /// mode: caches live host-side and ride `upload_bytes` instead).
     pub resident_bytes: u64,
     pub ttft_ms: Vec<f64>,
+    /// Scheduler rounds completed by the run (the denominator of
+    /// [`ServeReport::dispatches_per_round`] — table S1's batching
+    /// evidence column).
+    pub rounds: u64,
+    /// Batched slot width the run served with (0 = interleaved rounds;
+    /// >= 2 = rounds with that many active sessions replayed the batched
+    /// plan, one dispatch per layer op per chunk).
+    pub batch_width: usize,
     /// True when the run replayed a compiled plan instead of eager-
     /// interpreting the graph (the [`ServeReport::exec_mode`] header
     /// derives from this).
@@ -106,6 +114,8 @@ impl ServeReport {
             upload_bytes,
             resident_bytes: 0,
             ttft_ms,
+            rounds: 0,
+            batch_width: 0,
             planned: false,
             plan_build_virtual_ns: 0,
             plan_build_real_ns: 0,
@@ -139,6 +149,23 @@ impl ServeReport {
             "eager"
         }
     }
+
+    /// Self-describing mode label for report headers: exec mode plus the
+    /// batched slot width when round batching was active.
+    pub fn mode_label(&self) -> String {
+        if self.batch_width >= 2 {
+            format!("{}+batched(w={})", self.exec_mode(), self.batch_width)
+        } else {
+            self.exec_mode().to_string()
+        }
+    }
+
+    /// WebGPU dispatches per scheduler round — the batched-decode headline:
+    /// interleaved rounds pay N x (dispatches/step); batched rounds pay
+    /// ceil(N / width) x (dispatches/step).
+    pub fn dispatches_per_round(&self) -> f64 {
+        self.dispatches as f64 / self.rounds.max(1) as f64
+    }
 }
 
 #[cfg(test)]
@@ -152,6 +179,21 @@ mod tests {
         assert_eq!(r.sessions, 0);
         assert_eq!(r.total_tokens, 0);
         assert_eq!(r.agg_tok_per_s, 0.0);
+    }
+
+    #[test]
+    fn mode_label_and_dispatches_per_round() {
+        let mut r = ServeReport::from_sessions(&[], 1_000);
+        assert_eq!(r.mode_label(), "eager");
+        r.planned = true;
+        assert_eq!(r.mode_label(), "planned");
+        r.batch_width = 4;
+        assert_eq!(r.mode_label(), "planned+batched(w=4)");
+        r.dispatches = 236;
+        r.rounds = 4;
+        assert!((r.dispatches_per_round() - 59.0).abs() < 1e-9);
+        r.rounds = 0; // guard: no division by zero
+        assert!((r.dispatches_per_round() - 236.0).abs() < 1e-9);
     }
 
     #[test]

@@ -6,8 +6,13 @@
 //!
 //! ## Scheduling model
 //!
-//! The scheduler is **continuous batching at batch=1 granularity** (the
-//! WebLLM shape, without kernel-level batching — Appendix F territory):
+//! The scheduler is **continuous batching** (the WebLLM shape). In the
+//! planned serving default, rounds with >= 2 active sessions replay the
+//! BATCHED plan — sessions pack into batch slots and every layer op is
+//! one dispatch per chunk of `batch_width` sessions (the Appendix F
+//! amortization; see `ARCHITECTURE.md`'s batched-round lifecycle).
+//! `--no-batch` (or eager mode, or a single active session) keeps the
+//! batch=1 granularity below:
 //!
 //! 1. **Admit** — requests queue FIFO; up to `max_concurrent` become
 //!    active. Exceeding the cap queues, never errors. Planned-mode

@@ -1,0 +1,414 @@
+//! Batched-decode integration tests: bit-identical equivalence between
+//! batched serving rounds and interleaved planned decode across session
+//! counts x fusion configs x ragged rounds, cross-slot cache isolation at
+//! the byte level (mirroring `residency.rs`), partial-round masking
+//! without recompiles, and the dispatches-per-round acceptance gate.
+
+use wdb::engine::{EngineConfig, ExecMode, DEFAULT_BATCH_WIDTH};
+use wdb::fx::builder::FusionConfig;
+use wdb::runtime::Registry;
+use wdb::serve::{ServeConfig, ServeReport, ServingEngine};
+
+const SEED: u64 = 0xBA7C4;
+
+fn registry() -> Registry {
+    Registry::builtin().expect("builtin registry")
+}
+
+fn cfg(fusion: FusionConfig, batch_width: usize) -> EngineConfig {
+    EngineConfig {
+        fusion,
+        exec: ExecMode::Planned,
+        batch_width,
+        ..EngineConfig::tiny_fused()
+    }
+}
+
+/// Run `prompts[i]` for `n_news[i]` tokens each on one engine; return each
+/// session's token stream keyed by submission order.
+fn run_sessions(
+    reg: &Registry,
+    config: EngineConfig,
+    max_concurrent: usize,
+    prompts: &[Vec<usize>],
+    n_news: &[usize],
+) -> Vec<Vec<usize>> {
+    let mut se = ServingEngine::new(reg, ServeConfig { engine: config, max_concurrent })
+        .expect("serving engine");
+    se.reseed(SEED);
+    let mut ids = Vec::new();
+    for (p, &n) in prompts.iter().zip(n_news) {
+        ids.push(se.submit(p, n).expect("submit"));
+    }
+    se.run_to_completion().expect("serve");
+    let done = se.drain_finished();
+    ids.iter()
+        .map(|id| {
+            done.iter()
+                .find(|s| s.id == *id)
+                .expect("session finished")
+                .tokens
+                .clone()
+        })
+        .collect()
+}
+
+/// Acceptance: batched decode is bit-identical to interleaved planned
+/// decode for sessions {2, 3, 4} x {fused, unfused}, with RAGGED rounds —
+/// every session requests a different token count, so sessions retire
+/// mid-run and later rounds run partially masked (and eventually fall back
+/// to the single-session path at 1 active).
+#[test]
+fn batched_matches_interleaved_across_sessions_fusion_ragged() {
+    let reg = registry();
+    for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+        for sessions in [2usize, 3, 4] {
+            let prompts: Vec<Vec<usize>> = (0..sessions)
+                .map(|i| vec![65 + i * 7, 90 + i, 120 + i * 3][..1 + i % 3].to_vec())
+                .collect();
+            let n_news: Vec<usize> = (0..sessions).map(|i| 3 + 2 * i).collect();
+            let interleaved =
+                run_sessions(&reg, cfg(fusion, 0), sessions, &prompts, &n_news);
+            let batched = run_sessions(
+                &reg,
+                cfg(fusion, DEFAULT_BATCH_WIDTH),
+                sessions,
+                &prompts,
+                &n_news,
+            );
+            assert_eq!(
+                interleaved, batched,
+                "{fusion:?} N={sessions}: batched diverged from interleaved"
+            );
+            // Ragged by construction: distinct lengths retire at
+            // different rounds.
+            assert!(n_news.windows(2).all(|w| w[0] != w[1]));
+        }
+    }
+}
+
+/// Partial rounds mask empty slots — no recompile, no new pipelines, and
+/// a 3-active round on a width-4 plan still decodes correctly.
+#[test]
+fn partial_rounds_mask_slots_without_recompile() {
+    let reg = registry();
+    let prompts: Vec<Vec<usize>> = vec![vec![65, 66], vec![90], vec![120, 121, 122]];
+    let n_news = [4usize, 4, 4];
+    let expect = run_sessions(&reg, cfg(FusionConfig::fused(), 0), 3, &prompts, &n_news);
+
+    let mut se = ServingEngine::new(
+        &reg,
+        // Width 4 with max_concurrent 4 but only 3 submissions: every
+        // chunk leaves slot 3 masked against the padding set.
+        ServeConfig { engine: cfg(FusionConfig::fused(), 4), max_concurrent: 4 },
+    )
+    .unwrap();
+    se.reseed(SEED);
+    assert_eq!(se.batch_width, 4);
+    for (p, &n) in prompts.iter().zip(&n_news) {
+        se.submit(p, n).unwrap();
+    }
+    // Pipelines exist after construction; rounds must not create more
+    // (masking handles the ragged width, never a recompile).
+    let pipes0 = se.executor.device.stats.pipelines_created;
+    se.run_to_completion().unwrap();
+    assert_eq!(
+        se.executor.device.stats.pipelines_created, pipes0,
+        "partial rounds must not recompile"
+    );
+    let runner = se.executor.batched_runner().expect("batched plan enabled");
+    assert!(runner.rounds > 0, "batched rounds must have run");
+    // Ragged retirement reshuffles slots, so more than one table may
+    // register — but the count stays bounded by the packings seen.
+    assert!((1..=3).contains(&runner.registered_tables()));
+    let got: Vec<Vec<usize>> = se.drain_finished().into_iter().map(|s| s.tokens).collect();
+    assert_eq!(got, expect);
+}
+
+/// Cross-slot cache isolation, byte level (mirrors
+/// `residency.rs::session_cache_updates_never_touch_other_sessions_buffers`):
+/// a detached session's device cache buffers are bit-identical before and
+/// after OTHER sessions' batched rounds, and the detached session still
+/// decodes the solo stream afterwards.
+#[test]
+fn batched_rounds_never_touch_other_sessions_cache_bytes() {
+    let reg = registry();
+    let solo_prompt = vec![72usize, 101, 108];
+    let tokens = 5;
+
+    // Solo truth on a batching-enabled engine (single-session path).
+    let mut solo_se = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: cfg(FusionConfig::fused(), 4), max_concurrent: 4 },
+    )
+    .unwrap();
+    solo_se.reseed(SEED);
+    let mut truth = solo_se.create_session(solo_prompt.clone(), tokens, 99);
+    while !truth.finished() {
+        let (t, p) = truth.take_input().unwrap();
+        let h = solo_se.encode_session(&mut truth, t, p).unwrap();
+        solo_se.finish_session(&mut truth, h).unwrap();
+    }
+
+    let mut se = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: cfg(FusionConfig::fused(), 4), max_concurrent: 4 },
+    )
+    .unwrap();
+    se.reseed(SEED);
+    // Detached session C steps twice through the public (single-session)
+    // API and then sits out while scheduled sessions run batched rounds.
+    let mut c = se.create_session(solo_prompt.clone(), tokens, 7);
+    for _ in 0..2 {
+        let (t, p) = c.take_input().unwrap();
+        let h = se.encode_session(&mut c, t, p).unwrap();
+        se.finish_session(&mut c, h).unwrap();
+    }
+    let c_bufs = c.kv.as_device().expect("C promoted to device").buffers.clone();
+    let snap: Vec<Vec<u8>> = c_bufs
+        .iter()
+        .map(|&b| se.executor.device.peek_buffer(b).unwrap().to_vec())
+        .collect();
+
+    // Two scheduled sessions decode through batched rounds.
+    se.submit(&[65, 66], 4).unwrap();
+    se.submit(&[90, 91], 4).unwrap();
+    se.run_to_completion().unwrap();
+    assert_eq!(se.drain_finished().len(), 2);
+
+    for (i, &b) in c_bufs.iter().enumerate() {
+        assert_eq!(
+            se.executor.device.peek_buffer(b).unwrap(),
+            snap[i].as_slice(),
+            "batched cache scatter wrote into detached session's buffer {i}"
+        );
+    }
+    // And C finishes with the solo stream.
+    while !c.finished() {
+        let (t, p) = c.take_input().unwrap();
+        let h = se.encode_session(&mut c, t, p).unwrap();
+        se.finish_session(&mut c, h).unwrap();
+    }
+    assert_eq!(c.tokens, truth.tokens, "detached session corrupted by batched rounds");
+}
+
+/// The KV state a session accumulates through batched rounds is
+/// byte-identical to the state the same request accumulates solo: spill
+/// both and compare tensors (slot scatter hits exactly the session's own
+/// buffers at exactly its positions).
+#[test]
+fn batched_kv_state_spills_bit_identical_to_solo() {
+    let reg = registry();
+    let prompt_a = vec![65usize, 66, 67];
+    let prompt_b = vec![90usize, 91];
+    let rounds = 3usize;
+
+    // Batched engine: two scheduled sessions, stepped `rounds` times.
+    let mut se = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: cfg(FusionConfig::fused(), 2), max_concurrent: 2 },
+    )
+    .unwrap();
+    se.reseed(SEED);
+    se.submit(&prompt_a, 8).unwrap();
+    se.submit(&prompt_b, 8).unwrap();
+    for _ in 0..rounds {
+        assert_eq!(se.step_round().unwrap(), 2);
+    }
+    let mut a = se.active.remove(0);
+    assert_eq!(a.pos, rounds);
+    se.evict_session_cache(&mut a).unwrap();
+    let spilled_a = a.kv.as_host().expect("spilled").clone();
+
+    // Solo twin of session A, same number of steps.
+    let mut solo = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: cfg(FusionConfig::fused(), 0), max_concurrent: 1 },
+    )
+    .unwrap();
+    solo.reseed(SEED);
+    let mut s = solo.create_session(prompt_a, 8, 1);
+    for _ in 0..rounds {
+        let (t, p) = s.take_input().unwrap();
+        let h = solo.encode_session(&mut s, t, p).unwrap();
+        solo.finish_session(&mut s, h).unwrap();
+    }
+    solo.evict_session_cache(&mut s).unwrap();
+    let spilled_solo = s.kv.as_host().expect("spilled").clone();
+
+    assert_eq!(spilled_a.len(), spilled_solo.len());
+    for (l, ((ka, va), (ks, vs))) in spilled_a.iter().zip(&spilled_solo).enumerate() {
+        assert_eq!(
+            ka.data.as_bytes(),
+            ks.data.as_bytes(),
+            "layer {l}: batched K cache bytes diverged from solo"
+        );
+        assert_eq!(
+            va.data.as_bytes(),
+            vs.data.as_bytes(),
+            "layer {l}: batched V cache bytes diverged from solo"
+        );
+    }
+}
+
+/// Acceptance gate shape: at N=4, a batched round encodes at most HALF the
+/// interleaved dispatches (it actually encodes ~1/4: one chunk of one
+/// dispatch per layer op). Also pins the report's self-description.
+#[test]
+fn batched_round_dispatches_at_most_half_of_interleaved_at_n4() {
+    let reg = registry();
+    let prompt = vec![65usize, 66];
+    let tokens = 5;
+    let run = |bw: usize| -> ServeReport {
+        let mut se = ServingEngine::new(
+            &reg,
+            ServeConfig { engine: cfg(FusionConfig::fused(), bw), max_concurrent: 4 },
+        )
+        .unwrap();
+        se.reseed(SEED);
+        for _ in 0..4 {
+            se.submit(&prompt, tokens).unwrap();
+        }
+        se.run_to_completion().unwrap()
+    };
+    let interleaved = run(0);
+    let batched = run(4);
+    assert_eq!(interleaved.total_tokens, batched.total_tokens);
+    assert!(interleaved.rounds > 0 && batched.rounds > 0);
+    assert!(
+        batched.dispatches_per_round() * 2.0 <= interleaved.dispatches_per_round(),
+        "gate: batched {:.1} disp/round !<= interleaved {:.1} / 2",
+        batched.dispatches_per_round(),
+        interleaved.dispatches_per_round()
+    );
+    // The batched run issues strictly fewer dispatches overall.
+    assert!(batched.dispatches < interleaved.dispatches);
+    // Self-describing report (the serve header satellite).
+    assert_eq!(batched.batch_width, 4);
+    assert_eq!(batched.mode_label(), "planned+batched(w=4)");
+    assert_eq!(interleaved.batch_width, 0);
+    assert_eq!(interleaved.mode_label(), "planned");
+}
+
+/// Batching never engages for eager mode or single-session engines, and a
+/// width above the built-in kernel coverage fails loudly at construction.
+#[test]
+fn batching_gates_on_mode_width_and_concurrency() {
+    let reg = registry();
+    let eager = ServingEngine::new(
+        &reg,
+        ServeConfig {
+            engine: EngineConfig { batch_width: 4, ..EngineConfig::tiny_fused() },
+            max_concurrent: 4,
+        },
+    )
+    .unwrap();
+    assert!(eager.batched_graph.is_none(), "eager engines must not batch");
+
+    let single = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: cfg(FusionConfig::fused(), 4), max_concurrent: 1 },
+    )
+    .unwrap();
+    assert!(single.batched_graph.is_none(), "N=1 engines must not batch");
+    assert_eq!(single.batch_width, 0);
+
+    let disabled = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: cfg(FusionConfig::fused(), 0), max_concurrent: 4 },
+    )
+    .unwrap();
+    assert!(disabled.batched_graph.is_none(), "--no-batch must disable");
+
+    let too_wide = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: cfg(FusionConfig::fused(), 64), max_concurrent: 64 },
+    );
+    assert!(too_wide.is_err(), "width beyond builtin kernel coverage must error");
+    // The REQUESTED width is validated before the max_concurrent clamp:
+    // the same --batch-width is rejected regardless of --concurrent.
+    let too_wide_low_mc = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: cfg(FusionConfig::fused(), 9), max_concurrent: 2 },
+    );
+    assert!(too_wide_low_mc.is_err(), "over-wide request must not pass via the clamp");
+
+    // Width caps at max_concurrent.
+    let capped = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: cfg(FusionConfig::fused(), 8), max_concurrent: 3 },
+    )
+    .unwrap();
+    assert_eq!(capped.batch_width, 3);
+}
+
+/// More sessions than the batch width run in chunks per round and still
+/// match the interleaved streams (N=6 over width 4 -> chunks of 4 + 2).
+#[test]
+fn chunked_rounds_above_width_match_interleaved() {
+    let reg = registry();
+    let sessions = 6usize;
+    let prompts: Vec<Vec<usize>> = (0..sessions).map(|i| vec![60 + i * 5]).collect();
+    let n_news: Vec<usize> = (0..sessions).map(|i| 3 + i % 2).collect();
+    let interleaved =
+        run_sessions(&reg, cfg(FusionConfig::fused(), 0), sessions, &prompts, &n_news);
+    let batched =
+        run_sessions(&reg, cfg(FusionConfig::fused(), 4), sessions, &prompts, &n_news);
+    assert_eq!(interleaved, batched, "chunked batched rounds diverged");
+}
+
+/// Late admission joins batched rounds mid-run (continuous scheduling) and
+/// every stream still matches the interleaved engine.
+#[test]
+fn mid_run_admission_joins_batched_rounds() {
+    let reg = registry();
+    let run = |bw: usize| -> Vec<Vec<usize>> {
+        let mut se = ServingEngine::new(
+            &reg,
+            ServeConfig { engine: cfg(FusionConfig::fused(), bw), max_concurrent: 2 },
+        )
+        .unwrap();
+        se.reseed(SEED);
+        let ida = se.submit(&[65, 66], 6).unwrap();
+        let idb = se.submit(&[90], 3).unwrap();
+        // B retires early; C is admitted from the backlog mid-run.
+        let idc = se.submit(&[120, 121], 4).unwrap();
+        se.run_to_completion().unwrap();
+        let done = se.drain_finished();
+        [ida, idb, idc]
+            .iter()
+            .map(|id| done.iter().find(|s| s.id == *id).unwrap().tokens.clone())
+            .collect()
+    };
+    assert_eq!(run(0), run(2), "admission churn diverged under batching");
+}
+
+/// SessionState is untouched by batching from the caller's view: steps
+/// count one per round, positions advance once per round, and per-session
+/// dispatch attribution sums to the engine total.
+#[test]
+fn batched_attribution_tiles_engine_totals() {
+    let reg = registry();
+    let mut se = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: cfg(FusionConfig::fused(), 4), max_concurrent: 4 },
+    )
+    .unwrap();
+    se.reseed(SEED);
+    for i in 0..4 {
+        se.submit(&[65 + i], 4).unwrap();
+    }
+    let report = se.run_to_completion().unwrap();
+    let total_attr: u64 = se.drain_finished().iter().map(|s| s.metrics.dispatches).sum();
+    assert_eq!(
+        total_attr, se.executor.dispatch_count,
+        "per-session dispatch shares must tile the engine total"
+    );
+    assert_eq!(report.dispatches, total_attr);
+    assert!(report.steps == 4 * 4, "one step per session per round");
+    // Identical-length sessions keep one stable slot packing: exactly ONE
+    // cache-set table is ever registered (bind groups stay cache-hot).
+    let runner = se.executor.batched_runner().expect("batched");
+    assert_eq!(runner.registered_tables(), 1, "stable rounds must reuse one table");
+    assert!(runner.rounds >= 4);
+}
