@@ -82,7 +82,9 @@ QWEN_TINY = ModelConfig(
     head_dim=16,
     intermediate=176,
     vocab=512,
-    max_seq=64,
+    # 160 rows so prompt-heavy serving benches (prompt 128 + 16 generated
+    # tokens) fit the tiny KV capacity (mirrored by the Rust builtin).
+    max_seq=160,
 )
 
 CONFIGS = {c.name: c for c in (QWEN25_05B, QWEN25_15B, QWEN_TINY)}

@@ -163,20 +163,27 @@ Commands:
   batch-sweep [--reps 5]          empirical crossover validation (App. F)
   serve [--requests 16] [--tokens 10] [--concurrent 4] [--profile dawn]
         [--exec-mode planned] [--batch-width 4 | --no-batch]
-                                  FIFO request loop over the serving engine
+        [--prefill-chunk 16]      FIFO request loop over the serving engine
                                   (planned replay + resident KV caches +
-                                  batched rounds is the serving default;
-                                  eager / interleaved opt-in). The report
-                                  header prints the exec mode and batch
-                                  width that actually ran.
+                                  batched rounds + chunked prefill is the
+                                  serving default; eager / interleaved /
+                                  token-by-token prefill opt-in via
+                                  --exec-mode eager / --no-batch /
+                                  --prefill-chunk 0). The report header
+                                  prints the mode that actually ran.
   serve-bench [--sessions 1,2,4,8] [--tokens 16] [--profile dawn]
               [--exec-mode planned] [--batch-width 4 | --no-batch]
+              [--prefill-chunk 16] [--prompt 128]
               [--out DIR]         multi-session serving scaling table:
                                   aggregate tok/s + per-phase attribution
-                                  + dispatches/round + upload/resident
-                                  bytes vs session count. With batching
-                                  on, hard-gates batched dispatches/round
-                                  <= interleaved/2 at every N >= 2.
+                                  + dispatches/round + prefill disp/tok
+                                  + upload/resident bytes vs session
+                                  count. With batching on, hard-gates
+                                  batched dispatches/round <=
+                                  interleaved/2 at every N >= 2; with
+                                  chunked prefill on and prompt >= 32,
+                                  hard-gates chunked prefill dispatches
+                                  <= token-by-token/4.
   plan-bench [--tokens 8] [--dps 16] [--profile dawn] [--out DIR]
                                   table P1: eager vs planned per-op
                                   framework overhead across workloads x
@@ -451,6 +458,36 @@ fn cmd_batch_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the chunked-prefill size from `--prefill-chunk` (default:
+/// [`crate::engine::DEFAULT_PREFILL_CHUNK`]). 0 disables chunking —
+/// prompts feed one token per round, the pre-chunking behavior.
+fn prefill_chunk_from_flags(args: &Args) -> Result<usize> {
+    match args.flag("prefill-chunk") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| Error::Graph(format!("bad --prefill-chunk '{v}'"))),
+        None => Ok(crate::engine::DEFAULT_PREFILL_CHUNK),
+    }
+}
+
+/// Resolve the benchmark prompt: `--prompt N` synthesizes an N-token
+/// prompt (deterministic byte pattern); absent, the paper's 5-token
+/// prompt is used.
+fn prompt_from_flags(args: &Args, tok: &ByteTokenizer) -> Result<Vec<usize>> {
+    match args.flag("prompt") {
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| Error::Graph(format!("bad --prompt '{v}'")))?;
+            if n == 0 {
+                return Err(Error::Graph("--prompt needs a positive token count".into()));
+            }
+            Ok((0..n).map(|i| 32 + (i * 7) % 200).collect())
+        }
+        None => Ok(tok.paper_prompt()),
+    }
+}
+
 /// Resolve the batched-decode width from `--batch-width` / `--no-batch`
 /// (default: [`crate::engine::DEFAULT_BATCH_WIDTH`]). 0 disables batching.
 fn batch_width_from_flags(args: &Args) -> Result<usize> {
@@ -487,6 +524,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => crate::engine::ExecMode::serving_default(),
     };
     let batch_width = batch_width_from_flags(args)?;
+    let prefill_chunk = prefill_chunk_from_flags(args)?;
     let mut se = ServingEngine::new(
         &registry,
         ServeConfig {
@@ -494,6 +532,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 profile: profile.clone(),
                 exec,
                 batch_width,
+                prefill_chunk,
                 ..EngineConfig::tiny_fused()
             },
             max_concurrent: concurrent,
@@ -579,18 +618,20 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         None => crate::engine::ExecMode::serving_default(),
     };
     let batch_width = batch_width_from_flags(args)?;
+    let prefill_chunk = prefill_chunk_from_flags(args)?;
     let tok = ByteTokenizer::new(registry.config("qwen-tiny")?.vocab);
-    let prompt = tok.paper_prompt();
+    let prompt = prompt_from_flags(args, &tok)?;
     let ec = EngineConfig {
         profile: profile.clone(),
         exec,
         batch_width,
+        prefill_chunk,
         ..EngineConfig::tiny_fused()
     };
 
     println!(
         "Serving scaling bench: {} tokens/session, prompt {} tokens, profile {}, \
-         exec mode {exec:?}, batch width {batch_width}\n",
+         exec mode {exec:?}, batch width {batch_width}, prefill chunk {prefill_chunk}\n",
         tokens,
         prompt.len(),
         profile.name
@@ -637,23 +678,38 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     if let Some(out) = args.flag("out") {
         let dir = std::path::PathBuf::from(out);
         // Mode-qualified names: planned (batched or interleaved) + eager
-        // runs into one --out dir must not overwrite each other's trends.
+        // runs into one --out dir must not overwrite each other's trends;
+        // prompt-heavy runs (--prompt) get a _p{len} suffix for the same
+        // reason.
         let mode = match exec {
             crate::engine::ExecMode::Eager => "eager",
             crate::engine::ExecMode::Planned if batch_width >= 2 => "planned_batched",
             crate::engine::ExecMode::Planned => "planned",
         };
+        let prompt_tag = if args.has("prompt") {
+            format!("_p{}", prompt.len())
+        } else {
+            String::new()
+        };
         for t in [&scaling, &phases] {
-            let path =
-                write_results(&dir, &format!("serve_bench_{}_{mode}", t.id), &t.to_json())?;
+            let path = write_results(
+                &dir,
+                &format!("serve_bench_{}_{mode}{prompt_tag}", t.id),
+                &t.to_json(),
+            )?;
             eprintln!("wrote {}", path.display());
         }
     }
 
     // Batched-vs-interleaved delta + the HARD dispatch gate: for every
     // multi-session row, an interleaved (--no-batch) twin must pay at
-    // least 2x the batched dispatches per round. Runs after the artifact
-    // dump so a failing gate still leaves the JSON for diagnosis.
+    // least 2x the batched DECODE dispatches. The gate excludes prompt
+    // ingestion: with chunked prefill (the default), the prompt phase
+    // replays identical per-session prefill chunks in both twins, which
+    // would dilute a whole-run ratio below 2x without any decode
+    // regression — prompt amortization is owned by the chunked-prefill
+    // gate below. Runs after the artifact dump so a failing gate still
+    // leaves the JSON for diagnosis.
     if exec == crate::engine::ExecMode::Planned && batch_width >= 2 {
         println!();
         for (n, r) in &rows {
@@ -671,25 +727,76 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 twin.submit(&prompt, tokens)?;
             }
             let ir = twin.run_to_completion()?;
+            let b_decode = r.dispatches - r.prefill_dispatches;
+            let i_decode = ir.dispatches - ir.prefill_dispatches;
             println!(
                 "N={n}: batched {:.1} vs interleaved {:.1} dispatches/round \
-                 ({:.1}x fewer), framework {:.2} -> {:.2} us/tok",
+                 ({:.1}x fewer; decode-only {b_decode} vs {i_decode}), \
+                 framework {:.2} -> {:.2} us/tok",
                 r.dispatches_per_round(),
                 ir.dispatches_per_round(),
                 ir.dispatches_per_round() / r.dispatches_per_round().max(1e-9),
                 ir.us_per_token(ir.framework_virtual_ns),
                 r.us_per_token(r.framework_virtual_ns),
             );
-            if r.dispatches_per_round() * 2.0 > ir.dispatches_per_round() {
+            if b_decode * 2 > i_decode {
                 return Err(Error::Graph(format!(
-                    "batched dispatch gate failed at N={n}: {:.1} dispatches/round \
-                     > interleaved {:.1} / 2",
-                    r.dispatches_per_round(),
-                    ir.dispatches_per_round()
+                    "batched dispatch gate failed at N={n}: {b_decode} decode \
+                     dispatches > interleaved {i_decode} / 2"
                 )));
             }
         }
-        println!("batched dispatch gate: OK (batched <= interleaved/2 at every N >= 2)");
+        println!(
+            "batched dispatch gate: OK (batched decode dispatches <= \
+             interleaved/2 at every N >= 2)"
+        );
+    }
+
+    // Chunked-prefill delta + HARD gate: for long prompts (>= 32 tokens,
+    // where the amortization is unambiguous), chunked prefill must issue
+    // at most 1/4 of the dispatches a pure token-by-token twin
+    // (--prefill-chunk 0 AND --no-batch, so prompt steps are un-amortized
+    // per-session decode steps) spends on prompt ingestion.
+    if exec == crate::engine::ExecMode::Planned && prefill_chunk >= 2 && prompt.len() >= 32 {
+        println!();
+        for (n, r) in &rows {
+            let mut twin_cfg = ec.clone();
+            twin_cfg.prefill_chunk = 0;
+            twin_cfg.batch_width = 0;
+            let mut twin = ServingEngine::new(
+                &registry,
+                ServeConfig { engine: twin_cfg, max_concurrent: *n },
+            )?;
+            twin.reseed(SEED);
+            for _ in 0..*n {
+                twin.submit(&prompt, tokens)?;
+            }
+            let tr = twin.run_to_completion()?;
+            println!(
+                "N={n}: prefill dispatches chunked {} vs token-by-token {} \
+                 ({:.1}x fewer; {:.2} vs {:.2} disp per prompt token), \
+                 mean prefill {:.2} -> {:.2} ms",
+                r.prefill_dispatches,
+                tr.prefill_dispatches,
+                tr.prefill_dispatches as f64 / r.prefill_dispatches.max(1) as f64,
+                tr.prefill_dispatches_per_prompt_token(),
+                r.prefill_dispatches_per_prompt_token(),
+                tr.mean_prefill_ms,
+                r.mean_prefill_ms,
+            );
+            if r.prefill_dispatches * 4 > tr.prefill_dispatches {
+                return Err(Error::Graph(format!(
+                    "chunked-prefill dispatch gate failed at N={n}: {} dispatches \
+                     > token-by-token {} / 4",
+                    r.prefill_dispatches, tr.prefill_dispatches
+                )));
+            }
+        }
+        println!(
+            "chunked-prefill dispatch gate: OK (chunked <= token-by-token/4 \
+             at prompt {})",
+            prompt.len()
+        );
     }
     Ok(())
 }
@@ -982,6 +1089,31 @@ mod tests {
         assert!(batch_width_from_flags(&a).is_err());
         let a = parse_args(&argv(&["serve", "--batch-width", "wide"]));
         assert!(batch_width_from_flags(&a).is_err());
+    }
+
+    #[test]
+    fn prefill_chunk_and_prompt_flags_resolve() {
+        let a = parse_args(&argv(&["serve"]));
+        assert_eq!(
+            prefill_chunk_from_flags(&a).unwrap(),
+            crate::engine::DEFAULT_PREFILL_CHUNK
+        );
+        let a = parse_args(&argv(&["serve", "--prefill-chunk", "8"]));
+        assert_eq!(prefill_chunk_from_flags(&a).unwrap(), 8);
+        let a = parse_args(&argv(&["serve", "--prefill-chunk", "0"]));
+        assert_eq!(prefill_chunk_from_flags(&a).unwrap(), 0);
+        let a = parse_args(&argv(&["serve", "--prefill-chunk", "wide"]));
+        assert!(prefill_chunk_from_flags(&a).is_err());
+
+        let tok = ByteTokenizer::new(512);
+        let a = parse_args(&argv(&["serve-bench"]));
+        assert_eq!(prompt_from_flags(&a, &tok).unwrap().len(), 5);
+        let a = parse_args(&argv(&["serve-bench", "--prompt", "128"]));
+        let p = prompt_from_flags(&a, &tok).unwrap();
+        assert_eq!(p.len(), 128);
+        assert!(p.iter().all(|&t| t < 512));
+        let a = parse_args(&argv(&["serve-bench", "--prompt", "0"]));
+        assert!(prompt_from_flags(&a, &tok).is_err());
     }
 
     #[test]

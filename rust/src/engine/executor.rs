@@ -28,7 +28,7 @@ use crate::fx::graph::FxGraph;
 use crate::fx::node::{HostOp, OpKind, ValueId};
 use crate::plan::{
     BatchedRunner, CacheArena, DeviceKvCache, ExecutionPlan, PipelinePool, PlanConfig,
-    PlanRunner, Planner, ReplayDelta,
+    PlanRunner, Planner, PrefillRunner, ReplayDelta,
 };
 use crate::runtime::hostops;
 use crate::runtime::registry::Registry;
@@ -77,6 +77,12 @@ pub struct GraphExecutor<'r> {
     /// the serving engine uses the single-session plan for 1-active-session
     /// rounds and the batched plan above that.
     batched: Option<BatchedRunner>,
+    /// Chunked-prefill state: present after
+    /// [`GraphExecutor::enable_prefill_plan`]. Shares the session's
+    /// `DeviceKvCache` with the single-session decode plan (identical
+    /// persistent layout, checked at enable time); the serving engine
+    /// replays it once per prompt chunk per session.
+    prefill: Option<PrefillRunner>,
     /// Session KV-cache allocator (planned mode with persistent values):
     /// allocates each session's device-resident cache set from `pool`.
     kv_arena: Option<CacheArena>,
@@ -106,6 +112,7 @@ impl<'r> GraphExecutor<'r> {
             borrowed_scratch: Vec::new(),
             planned: None,
             batched: None,
+            prefill: None,
             kv_arena: None,
             framework_ns_per_op,
             dispatch_count: 0,
@@ -205,6 +212,80 @@ impl<'r> GraphExecutor<'r> {
         self.batched.as_ref()
     }
 
+    /// Compile the chunked PREFILL graph into a plan and materialize its
+    /// [`PrefillRunner`]. Requires the single-session decode plan first:
+    /// both plans bind the SAME session cache sets, so their persistent
+    /// layouts must match exactly — checked here so a drifted builder
+    /// fails at engine construction, not mid-prompt. Weight inputs bind
+    /// the buffers already pinned for the primary graph (matched by
+    /// name) — no duplicate weight uploads.
+    pub fn enable_prefill_plan(
+        &mut self,
+        graph: &FxGraph,
+        cfg: PlanConfig,
+        chunk: usize,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let v0 = self.device.clock.now_ns();
+        let pinned_map = self.pinned_for(graph);
+        let plan = {
+            let GraphExecutor { device, registry, pipelines, .. } = &mut *self;
+            Planner::new(*registry).compile(device, pipelines, graph, &pinned_map, &cfg)?
+        };
+        let primary = self.planned.as_ref().ok_or_else(|| {
+            Error::Graph("enable_prefill_plan requires the decode plan to exist first".into())
+        })?;
+        if plan.persistent != primary.plan.persistent {
+            return Err(Error::Graph(
+                "prefill plan's persistent cache layout differs from the decode plan's \
+                 (the session cache set must plug into both)"
+                    .into(),
+            ));
+        }
+        let mut runner = PrefillRunner::materialize(&mut self.device, plan, chunk)?;
+        runner.inner_mut().build_virtual_ns = self.device.clock.now_ns() - v0;
+        runner.inner_mut().build_real_ns = t0.elapsed().as_nanos() as u64;
+        self.prefill = Some(runner);
+        Ok(())
+    }
+
+    pub fn prefill_runner(&self) -> Option<&PrefillRunner> {
+        self.prefill.as_ref()
+    }
+
+    /// Replay the prefill plan once over a session's resident cache set:
+    /// one `[C, H]` prompt chunk, C cache rows scattered per layer per
+    /// dispatch. `ring_idx` selects the prefill logits-ring buffer (final
+    /// chunks join the round's coalesced readback). Fails loudly if
+    /// `graph` is not the one the prefill plan was compiled from.
+    pub fn run_prefill(
+        &mut self,
+        graph: &FxGraph,
+        inputs: &HashMap<String, Tensor>,
+        ring_idx: usize,
+        kv: Option<&DeviceKvCache>,
+    ) -> Result<(HashMap<String, Tensor>, Option<BufferId>, ReplayDelta)> {
+        let GraphExecutor {
+            device, registry, prefill, dispatch_count, framework_virtual_ns, ..
+        } = self;
+        let runner = prefill.as_mut().ok_or_else(|| {
+            Error::Graph("no prefill plan enabled: call enable_prefill_plan first".into())
+        })?;
+        let fp = crate::plan::GraphFingerprint::of(graph);
+        if fp != runner.plan().fingerprint {
+            return Err(Error::Graph(format!(
+                "prefill executor got a different graph ({fp:?}) than the compiled \
+                 plan ({:?})",
+                runner.plan().fingerprint
+            )));
+        }
+        let (outs, logits_buf, delta) =
+            runner.replay(device, *registry, inputs, ring_idx, kv)?;
+        *dispatch_count += delta.dispatches;
+        *framework_virtual_ns += delta.framework_ns;
+        Ok((outs, logits_buf, delta))
+    }
+
     /// Replay the batched plan once over a cache-set table (slot ->
     /// session cache set; `None` slots bind the padding set and must be
     /// masked via the `slot_mask` input). `ring_idx` selects the chunk's
@@ -251,12 +332,18 @@ impl<'r> GraphExecutor<'r> {
     /// the shared bounded pool and register its bind groups with the plan
     /// runner. Planned mode only.
     pub fn alloc_kv_cache(&mut self) -> Result<DeviceKvCache> {
-        let GraphExecutor { device, pool, kv_arena, planned, .. } = self;
+        let GraphExecutor { device, pool, kv_arena, planned, prefill, .. } = self;
         let arena = kv_arena
             .as_mut()
             .ok_or_else(|| Error::Graph("no plan enabled: cannot allocate KV cache".into()))?;
         let cache = arena.allocate(device, pool)?;
         if let Some(runner) = planned.as_mut() {
+            runner.register_cache(device, &cache)?;
+        }
+        // The prefill plan binds the SAME set (identical persistent
+        // layout): register its bind groups too, so a session's first
+        // prompt chunk replays without a registration stall.
+        if let Some(runner) = prefill.as_mut() {
             runner.register_cache(device, &cache)?;
         }
         Ok(cache)
@@ -527,8 +614,8 @@ impl<'r> GraphExecutor<'r> {
     }
 
     /// Return the logits buffer to the pool once the caller is done with
-    /// it. Plan-owned ring buffers (single-session and batched) are
-    /// permanent and stay put.
+    /// it. Plan-owned ring buffers (single-session, batched, and prefill)
+    /// are permanent and stay put.
     pub fn release_logits(&mut self, buf: BufferId) -> Result<()> {
         if let Some(runner) = &self.planned {
             if runner.owns_buffer(buf) {
@@ -536,6 +623,11 @@ impl<'r> GraphExecutor<'r> {
             }
         }
         if let Some(runner) = &self.batched {
+            if runner.owns_buffer(buf) {
+                return Ok(());
+            }
+        }
+        if let Some(runner) = &self.prefill {
             if runner.owns_buffer(buf) {
                 return Ok(());
             }

@@ -32,6 +32,13 @@ pub const TORCH_WEBGPU_FRAMEWORK_NS: u64 = 71_000;
 /// `wdb serve`/`serve-bench` override with `--batch-width` / `--no-batch`.
 pub const DEFAULT_BATCH_WIDTH: usize = 4;
 
+/// Default chunked-prefill size for the serving engine: planned-mode
+/// sessions ingest their prompt in seq-dim batched chunks of this many
+/// tokens (one dispatch per layer op per chunk) instead of one decode
+/// step per prompt token. `wdb serve`/`serve-bench` override with
+/// `--prefill-chunk` (0 disables — token-by-token prompt ingestion).
+pub const DEFAULT_PREFILL_CHUNK: usize = 16;
+
 /// How the engine executes the decode graph.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ExecMode {
@@ -89,6 +96,15 @@ pub struct EngineConfig {
     /// fails at engine construction, regardless of `max_concurrent`.
     /// Ignored by single-session engines.
     pub batch_width: usize,
+    /// Chunked-prefill size for planned serving (`0` or `1` disables:
+    /// prompts feed one token per round, the pre-chunking behavior).
+    /// `>= 2` makes prompt ingestion replay the seq-dim prefill graph in
+    /// chunks of this many tokens — one dispatch per layer op per chunk,
+    /// the TTFT twin of `batch_width`'s decode amortization. Must be one
+    /// of [`crate::fx::PREFILL_CHUNKS`] (the built-in kernel coverage);
+    /// other values fail at engine construction. Ignored in eager mode
+    /// and by the device-argmax finish variant.
+    pub prefill_chunk: usize,
     /// Override the manifest dims (executable workload variants — e.g.
     /// tiny-kernel graphs at different layer counts).
     pub dims_override: Option<crate::fx::builder::GraphDims>,
@@ -109,6 +125,7 @@ impl EngineConfig {
             planned_framework_ns_per_step: crate::plan::PLANNED_FRAMEWORK_NS,
             pool_cap_bytes: None,
             batch_width: DEFAULT_BATCH_WIDTH,
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
             dims_override: None,
         }
     }

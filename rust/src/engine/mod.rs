@@ -13,5 +13,7 @@ pub mod overhead;
 pub mod protocol;
 
 pub use executor::GraphExecutor;
-pub use inference::{Engine, EngineConfig, ExecMode, GenResult, DEFAULT_BATCH_WIDTH};
+pub use inference::{
+    Engine, EngineConfig, ExecMode, GenResult, DEFAULT_BATCH_WIDTH, DEFAULT_PREFILL_CHUNK,
+};
 pub use protocol::{run_protocol, ProtocolResult};

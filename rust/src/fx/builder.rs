@@ -34,8 +34,9 @@ impl GraphDims {
             kv_heads: 2,
             head_dim: 16,
             intermediate: 176,
-            vocab: 512,
-            max_seq: 64,
+            // 160 rows so the prompt-heavy serving benches (prompt 128 +
+            // 16 generated tokens) fit the tiny KV capacity.
+            max_seq: 160,
             tiny_names: true,
         }
     }
@@ -137,6 +138,65 @@ impl FusionConfig {
     }
 }
 
+/// Single-row RMSNorm emitter (fused `rmsnorm_{H}` or the paper's
+/// 6-dispatch decomposition, §6.1) — ONE source for the single-row
+/// kernel-name contract, shared by the decode builder's norms and the
+/// prefill builder's final norm over the selected last row.
+fn emit_rmsnorm_row(
+    g: &mut FxGraph,
+    hidden: usize,
+    tag: &str,
+    x: ValueId,
+    w: ValueId,
+    fused: bool,
+) -> ValueId {
+    let h = hidden;
+    if fused {
+        return g.kernel(
+            &format!("{tag}.rmsnorm"),
+            &format!("rmsnorm_{h}"),
+            Category::Other,
+            vec![x, w],
+        );
+    }
+    let x2 = g.kernel(
+        &format!("{tag}.pow"),
+        &format!("rms_pow_{h}"),
+        Category::RmsComponent,
+        vec![x],
+    );
+    let m = g.kernel(
+        &format!("{tag}.mean"),
+        &format!("rms_mean_{h}"),
+        Category::RmsComponent,
+        vec![x2],
+    );
+    let me = g.kernel(
+        &format!("{tag}.add_eps"),
+        "rms_add_eps_1",
+        Category::Add,
+        vec![m],
+    );
+    let r = g.kernel(
+        &format!("{tag}.rsqrt"),
+        "rms_rsqrt_1",
+        Category::RmsComponent,
+        vec![me],
+    );
+    let xn = g.kernel(
+        &format!("{tag}.mul_x"),
+        &format!("rms_mul_x_{h}"),
+        Category::Multiply,
+        vec![x, r],
+    );
+    g.kernel(
+        &format!("{tag}.mul_w"),
+        &format!("rms_mul_w_{h}"),
+        Category::Multiply,
+        vec![xn, w],
+    )
+}
+
 struct B<'a> {
     g: FxGraph,
     d: &'a GraphDims,
@@ -144,52 +204,7 @@ struct B<'a> {
 
 impl<'a> B<'a> {
     fn rmsnorm(&mut self, tag: &str, x: ValueId, w: ValueId, fused: bool) -> ValueId {
-        let h = self.d.hidden;
-        if fused {
-            return self.g.kernel(
-                &format!("{tag}.rmsnorm"),
-                &format!("rmsnorm_{h}"),
-                Category::Other,
-                vec![x, w],
-            );
-        }
-        // The paper's 6-dispatch decomposition (§6.1).
-        let x2 = self.g.kernel(
-            &format!("{tag}.pow"),
-            &format!("rms_pow_{h}"),
-            Category::RmsComponent,
-            vec![x],
-        );
-        let m = self.g.kernel(
-            &format!("{tag}.mean"),
-            &format!("rms_mean_{h}"),
-            Category::RmsComponent,
-            vec![x2],
-        );
-        let me = self.g.kernel(
-            &format!("{tag}.add_eps"),
-            "rms_add_eps_1",
-            Category::Add,
-            vec![m],
-        );
-        let r = self.g.kernel(
-            &format!("{tag}.rsqrt"),
-            "rms_rsqrt_1",
-            Category::RmsComponent,
-            vec![me],
-        );
-        let xn = self.g.kernel(
-            &format!("{tag}.mul_x"),
-            &format!("rms_mul_x_{h}"),
-            Category::Multiply,
-            vec![x, r],
-        );
-        self.g.kernel(
-            &format!("{tag}.mul_w"),
-            &format!("rms_mul_w_{h}"),
-            Category::Multiply,
-            vec![xn, w],
-        )
+        emit_rmsnorm_row(&mut self.g, self.d.hidden, tag, x, w, fused)
     }
 
     fn rotary(
@@ -800,6 +815,327 @@ pub fn build_batched_decode_graph(
     b.g
 }
 
+/// Prefill chunk sizes the built-in kernel manifest can execute
+/// (`runtime::builtin` registers seq-dim `*_c{C}_*` kernel specs for each).
+pub const PREFILL_CHUNKS: [usize; 3] = [8, 16, 32];
+
+struct CB<'a> {
+    g: FxGraph,
+    d: &'a GraphDims,
+    c: usize,
+}
+
+impl<'a> CB<'a> {
+    /// Chunked RMSNorm over `[C, H]`: row-wise identical to the
+    /// single-token kernels (fused or the 6-dispatch decomposition).
+    fn rmsnorm_chunk(&mut self, tag: &str, x: ValueId, w: ValueId, fused: bool) -> ValueId {
+        let (h, c) = (self.d.hidden, self.c);
+        if fused {
+            return self.g.kernel(
+                &format!("{tag}.rmsnorm"),
+                &format!("rmsnorm_c{c}_{h}"),
+                Category::Other,
+                vec![x, w],
+            );
+        }
+        let x2 = self.g.kernel(
+            &format!("{tag}.pow"),
+            &format!("rms_pow_c{c}_{h}"),
+            Category::RmsComponent,
+            vec![x],
+        );
+        let m = self.g.kernel(
+            &format!("{tag}.mean"),
+            &format!("rms_mean_c{c}_{h}"),
+            Category::RmsComponent,
+            vec![x2],
+        );
+        let me = self.g.kernel(
+            &format!("{tag}.add_eps"),
+            &format!("rms_add_eps_c{c}"),
+            Category::Add,
+            vec![m],
+        );
+        let r = self.g.kernel(
+            &format!("{tag}.rsqrt"),
+            &format!("rms_rsqrt_c{c}"),
+            Category::RmsComponent,
+            vec![me],
+        );
+        let xn = self.g.kernel(
+            &format!("{tag}.mul_x"),
+            &format!("rms_mul_x_c{c}_{h}"),
+            Category::Multiply,
+            vec![x, r],
+        );
+        self.g.kernel(
+            &format!("{tag}.mul_w"),
+            &format!("rms_mul_w_c{c}_{h}"),
+            Category::Multiply,
+            vec![xn, w],
+        )
+    }
+
+    /// Single-row RMSNorm (the selected last prompt row): exactly the
+    /// decode builder's kernels via the shared emitter, so the final
+    /// norm + lm head are shared with the single-token plan.
+    fn rmsnorm_row(&mut self, tag: &str, x: ValueId, w: ValueId, fused: bool) -> ValueId {
+        emit_rmsnorm_row(&mut self.g, self.d.hidden, tag, x, w, fused)
+    }
+}
+
+/// Build the chunked PREFILL graph at sequence chunk `chunk`.
+///
+/// One replay ingests up to `chunk` consecutive prompt tokens of ONE
+/// session: every layer op is a single dispatch over `[C, ...]`-shaped
+/// values instead of `C` per-token decode steps — the prompt-phase twin of
+/// the batched decode amortization, and the reason chunked prefill
+/// collapses TTFT's dispatch bill by ~C×.
+///
+/// Step inputs carry a leading *sequence* dimension: `x` (`[C, H]` packed
+/// token embeddings for positions `pos_base..pos_base+C`), `pos_f` (`[C]`
+/// f32 per-position rotary angles), `pos_base` (`[1]` i32, the cache row
+/// of chunk row 0), `valid_len` (`[1]` i32; rows `>= valid_len` are a
+/// ragged tail — masked out of cache scatters and attention, so short
+/// final chunks replay the SAME plan with no recompile), and `inv_freq`.
+///
+/// The per-layer caches are the same layer-major persistent inputs as
+/// [`build_decode_graph`] (`l{l}.{k,v}_cache`), so a session's
+/// [`DeviceKvCache`](crate::plan::DeviceKvCache) plugs into both plans:
+/// `cache_update_c{C}` is ONE in-place dispatch scattering C rows at
+/// `pos_base..`, and `sdpa_prefill_c{C}` is the causal multi-token
+/// attention — chunk row `i` attends cache positions `0..pos_base+i+1`
+/// (cache history plus the preceding in-chunk rows, which the scatter has
+/// already written).
+///
+/// Only the LAST valid row's logits matter (intermediate prompt logits are
+/// discarded): `chunk_last_row` selects row `valid_len-1`, and the final
+/// norm + lm head run at single-row shapes — the logits output is the same
+/// `[1, vocab]` contract as the decode plan, so one coalesced readback
+/// serves mixed prefill/decode rounds.
+///
+/// Rotary is always the fused chunk kernel, exactly like the batched
+/// builder (the fused reference kernel is the exact float32 composition of
+/// the unfused chain, so token streams are unaffected); `fusion.rmsnorm` /
+/// `fusion.mlp` / `fusion.kv` select chunked fused or decomposed kernels
+/// like the other builders.
+pub fn build_prefill_graph(dims: &GraphDims, fusion: FusionConfig, chunk: usize) -> FxGraph {
+    assert!(chunk >= 2, "prefill graphs need chunk >= 2 (got {chunk})");
+    let mut b = CB { g: FxGraph::new(), d: dims, c: chunk };
+    b.g.seq_chunk = chunk;
+    let (h, qd, kv, inter) = (dims.hidden, dims.q_dim(), dims.kv_dim(), dims.intermediate);
+    let (nh, kvh, d) = (dims.heads, dims.kv_heads, dims.head_dim);
+    let suffix = dims.suffix();
+    let c = chunk;
+
+    let x0 = b.g.input("x");
+    let pos_f = b.g.input("pos_f");
+    let pos_base = b.g.input("pos_base");
+    let valid_len = b.g.input("valid_len");
+    let inv_freq = b.g.input("inv_freq");
+
+    // Per-position rope table: one cos/sin row per chunk position.
+    let cs = b.g.kernel_multi(
+        "rope_table",
+        &format!("rope_cos_sin_c{c}_{d}"),
+        Category::Other,
+        vec![pos_f, inv_freq],
+        2,
+    );
+    let (cos, sin) = (cs[0], cs[1]);
+
+    let mut x = x0;
+    for l in 0..dims.layers {
+        let p = format!("l{l}");
+        let norm1_w = b.g.input(&format!("{p}.norm1"));
+        let wo = b.g.input(&format!("{p}.wo"));
+        let norm2_w = b.g.input(&format!("{p}.norm2"));
+        let wd = b.g.input(&format!("{p}.wd"));
+        let k_cache_in = b.g.input(&format!("{p}.k_cache"));
+        let v_cache_in = b.g.input(&format!("{p}.v_cache"));
+        // The SAME layer-major persistent layout as the decode graph, so
+        // one session cache set serves both plans.
+        b.g.mark_persistent(&format!("{p}.k_cache"));
+        b.g.mark_persistent(&format!("{p}.v_cache"));
+
+        // ---- attention ----
+        let hn = b.rmsnorm_chunk(&format!("{p}.norm1"), x, norm1_w, fusion.rmsnorm);
+
+        let wq = b.g.input(&format!("{p}.wq"));
+        let q = b.g.kernel(
+            &format!("{p}.q_proj"),
+            &format!("matmul_c{c}_{h}_{qd}"),
+            Category::Linear,
+            vec![hn, wq],
+        );
+        let (k, v) = if fusion.kv {
+            let wkv = b.g.input(&format!("{p}.wkv"));
+            // Two outputs (K rows, V rows): the [C, 2KV] row split is
+            // strided, so no host byte-window alias can represent it.
+            let parts = b.g.kernel_multi(
+                &format!("{p}.kv_proj"),
+                &format!("kv_fused_c{c}_{h}_{}", 2 * kv),
+                Category::Linear,
+                vec![hn, wkv],
+                2,
+            );
+            (parts[0], parts[1])
+        } else {
+            let wk = b.g.input(&format!("{p}.wk"));
+            let wv = b.g.input(&format!("{p}.wv"));
+            let k = b.g.kernel(
+                &format!("{p}.k_proj"),
+                &format!("matmul_c{c}_{h}_{kv}"),
+                Category::Linear,
+                vec![hn, wk],
+            );
+            let v = b.g.kernel(
+                &format!("{p}.v_proj"),
+                &format!("matmul_c{c}_{h}_{kv}"),
+                Category::Linear,
+                vec![hn, wv],
+            );
+            (k, v)
+        };
+
+        // Rotary stays [C, heads*dim]-shaped: the chunk kernels index
+        // heads internally, so no host reshape nodes are needed.
+        let q_rot = b.g.kernel(
+            &format!("{p}.rope_q.rotary"),
+            &format!("rotary_c{c}_{nh}_{d}"),
+            Category::Other,
+            vec![q, cos, sin],
+        );
+        let k_rot = b.g.kernel(
+            &format!("{p}.rope_k.rotary"),
+            &format!("rotary_c{c}_{kvh}_{d}"),
+            Category::Other,
+            vec![k, cos, sin],
+        );
+
+        // ONE multi-row in-place scatter per layer per K/V: rows
+        // 0..valid_len land at cache positions pos_base.. in place.
+        let k_cache = b.g.in_place_kernel(
+            &format!("{p}.k_cache_update"),
+            &format!("cache_update_c{c}_{suffix}"),
+            Category::Concat,
+            vec![k_cache_in, k_rot, pos_base, valid_len],
+        );
+        let v_cache = b.g.in_place_kernel(
+            &format!("{p}.v_cache_update"),
+            &format!("cache_update_c{c}_{suffix}"),
+            Category::Concat,
+            vec![v_cache_in, v, pos_base, valid_len],
+        );
+        b.g.mark_output(&format!("{p}.k_cache"), k_cache);
+        b.g.mark_output(&format!("{p}.v_cache"), v_cache);
+
+        // Causal multi-token attention: row i attends cache 0..base+i+1.
+        let attn = b.g.kernel(
+            &format!("{p}.sdpa"),
+            &format!("sdpa_prefill_c{c}_{suffix}"),
+            Category::Sdpa,
+            vec![q_rot, k_cache, v_cache, pos_base, valid_len],
+        );
+        let attn_out = b.g.kernel(
+            &format!("{p}.o_proj"),
+            &format!("matmul_c{c}_{qd}_{h}"),
+            Category::Linear,
+            vec![attn, wo],
+        );
+        x = b.g.kernel(
+            &format!("{p}.resid1"),
+            &format!("add_c{c}_{h}"),
+            Category::Add,
+            vec![x, attn_out],
+        );
+
+        // ---- MLP ----
+        let h2 = b.rmsnorm_chunk(&format!("{p}.norm2"), x, norm2_w, fusion.rmsnorm);
+        let act = if fusion.mlp {
+            let wg = b.g.input(&format!("{p}.wg"));
+            let wu = b.g.input(&format!("{p}.wu"));
+            b.g.kernel(
+                &format!("{p}.gate_up_silu"),
+                &format!("gate_up_silu_c{c}_{suffix}"),
+                Category::Silu,
+                vec![h2, wg, wu],
+            )
+        } else {
+            let wg = b.g.input(&format!("{p}.wg"));
+            let wu = b.g.input(&format!("{p}.wu"));
+            let g_ = b.g.kernel(
+                &format!("{p}.gate_proj"),
+                &format!("matmul_c{c}_{h}_{inter}"),
+                Category::Linear,
+                vec![h2, wg],
+            );
+            let u = b.g.kernel(
+                &format!("{p}.up_proj"),
+                &format!("matmul_c{c}_{h}_{inter}"),
+                Category::Linear,
+                vec![h2, wu],
+            );
+            let s = b.g.kernel(
+                &format!("{p}.silu"),
+                &format!("silu_c{c}_{inter}"),
+                Category::Silu,
+                vec![g_],
+            );
+            b.g.kernel(
+                &format!("{p}.gate_mul"),
+                &format!("mul_c{c}_{inter}"),
+                Category::Multiply,
+                vec![s, u],
+            )
+        };
+        let down = b.g.kernel(
+            &format!("{p}.down_proj"),
+            &format!("matmul_c{c}_{inter}_{h}"),
+            Category::Linear,
+            vec![act, wd],
+        );
+        x = b.g.kernel(
+            &format!("{p}.resid2"),
+            &format!("add_c{c}_{h}"),
+            Category::Add,
+            vec![x, down],
+        );
+    }
+
+    // ---- last valid row -> final norm + lm head at single-row shapes ----
+    // Intermediate prompt positions' logits are never read, so only the
+    // chunk's last valid row pays the final-norm/lm-head compute, and the
+    // logits output keeps the decode plan's [1, vocab] contract.
+    let last = b.g.kernel(
+        "last_row",
+        &format!("chunk_last_row_c{c}_{h}"),
+        Category::Other,
+        vec![x, valid_len],
+    );
+    let norm_f = b.g.input("norm_f");
+    let hf = b.rmsnorm_row("final_norm", last, norm_f, fusion.rmsnorm);
+    let w_lm = b.g.input("w_lm");
+    let logits = b.g.kernel(
+        "lm_head",
+        &format!("matmul_{h}_{}", dims.vocab),
+        Category::Linear,
+        vec![hf, w_lm],
+    );
+    b.g.mark_output("logits", logits);
+
+    debug_assert!(b.g.validate().is_ok());
+    b.g
+}
+
+/// Expected dispatch count per prefill chunk: the batched-decode
+/// arithmetic (rotary always fused) plus the last-row selection dispatch.
+/// Chunk-size-independent — the amortization: one dispatch per layer op
+/// regardless of how many prompt positions the chunk carries.
+pub fn expected_prefill_dispatches(dims: &GraphDims, fusion: FusionConfig) -> usize {
+    expected_batched_dispatches(dims, fusion) + 1
+}
+
 /// Expected dispatch count per batched serving round. Width-independent —
 /// the whole point: one dispatch per layer op regardless of how many
 /// sessions the round packs. Rotary is always fused in the batched graph
@@ -989,6 +1325,76 @@ mod tests {
             assert!(names.iter().any(|n| n == expected), "missing {expected}: {names:?}");
         }
         for input in ["x", "pos_i", "pos_ip1", "pos_f", "slot_mask", "slot_idx", "inv_freq"] {
+            assert!(g.inputs.contains_key(input), "missing step input {input}");
+        }
+    }
+
+    #[test]
+    fn prefill_graph_validates_and_dispatches_are_chunk_independent() {
+        let dims = GraphDims::qwen_tiny();
+        for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+            let mut counts = Vec::new();
+            for chunk in PREFILL_CHUNKS {
+                let g = build_prefill_graph(&dims, fusion, chunk);
+                g.validate().unwrap();
+                assert_eq!(g.seq_chunk, chunk);
+                assert_eq!(g.batch_width, 1);
+                assert_eq!(
+                    g.dispatch_count(),
+                    expected_prefill_dispatches(&dims, fusion),
+                    "{fusion:?} chunk {chunk}"
+                );
+                counts.push(g.dispatch_count());
+            }
+            // One dispatch per layer op, NOT per prompt token: constant
+            // in C — a C-token chunk costs one decode step + last_row.
+            assert!(counts.windows(2).all(|w| w[0] == w[1]), "{fusion:?}: {counts:?}");
+        }
+        // Fused: the decode step's 14/layer + rope + last_row + norm + lm.
+        let g = build_prefill_graph(&dims, FusionConfig::fused(), 16);
+        assert_eq!(g.dispatch_count(), 4 * 14 + 4);
+    }
+
+    #[test]
+    fn prefill_cache_layout_matches_decode_plan() {
+        let dims = GraphDims::qwen_tiny();
+        for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+            let pg = build_prefill_graph(&dims, fusion, 16);
+            let dg = build_decode_graph(&dims, fusion);
+            // Identical layer-major persistent declaration order: one
+            // session's DeviceKvCache plugs into both plans.
+            assert_eq!(pg.persistent, dg.persistent, "{fusion:?}");
+            for name in &pg.persistent {
+                assert!(pg.inputs.contains_key(name) && pg.outputs.contains_key(name));
+            }
+            // One multi-row in-place scatter per layer per K/V.
+            assert_eq!(
+                pg.nodes.iter().filter(|n| n.in_place()).count(),
+                2 * dims.layers,
+                "{fusion:?}"
+            );
+            for n in pg.nodes.iter().filter(|n| n.in_place()) {
+                assert_eq!(n.outputs.len(), 1, "{}", n.name);
+                assert_eq!(n.inputs.len(), 4, "{}: state + rows + base + valid", n.name);
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_kernel_names_carry_chunk_and_step_inputs_exist() {
+        let dims = GraphDims::qwen_tiny();
+        let g = build_prefill_graph(&dims, FusionConfig::fused(), 16);
+        let names = g.kernel_names();
+        for expected in [
+            "matmul_c16_64_64", "kv_fused_c16_64_64", "rmsnorm_c16_64",
+            "rotary_c16_4_16", "rotary_c16_2_16", "cache_update_c16_tiny",
+            "sdpa_prefill_c16_tiny", "gate_up_silu_c16_tiny",
+            "matmul_c16_176_64", "add_c16_64", "rope_cos_sin_c16_16",
+            "chunk_last_row_c16_64", "rmsnorm_64", "matmul_64_512",
+        ] {
+            assert!(names.iter().any(|n| n == expected), "missing {expected}: {names:?}");
+        }
+        for input in ["x", "pos_f", "pos_base", "valid_len", "inv_freq"] {
             assert!(g.inputs.contains_key(input), "missing step input {input}");
         }
     }

@@ -56,6 +56,7 @@ fn splice(g: &FxGraph, dead: &[bool], replacements: HashMap<usize, Vec<Node>>) -
         outputs: g.outputs.clone(),
         persistent: g.persistent.clone(),
         batch_width: g.batch_width,
+        seq_chunk: g.seq_chunk,
     };
     for (i, n) in g.nodes.iter().enumerate() {
         if let Some(reps) = replacements.get(&i) {
@@ -200,11 +201,12 @@ pub fn fuse_mlp(g: &FxGraph, suffix: &str) -> FxGraph {
 /// concatenated-weight matmul + a host split. Requires the fused weight to
 /// be available as the graph input `<layer>.wkv`.
 ///
-/// Batch-safe: in a batched graph the projections are `matmul_b{W}_{H}_{KV}`
-/// and the fused kernel emits the K and V rows as TWO outputs directly
-/// (`kv_fused_b{W}_{H}_{2KV}`) — the `[W, 2KV] -> 2 x [W, KV]` row split is
-/// strided, so the host `SplitKv` byte-window alias the single-session
-/// rewrite uses cannot represent it.
+/// Batch- and seq-safe: in a batched (`matmul_b{W}_{H}_{KV}`) or chunked-
+/// prefill (`matmul_c{C}_{H}_{KV}`) graph the fused kernel emits the K and
+/// V rows as TWO outputs directly (`kv_fused_b{W}_…` / `kv_fused_c{C}_…`)
+/// — the `[rows, 2KV] -> 2 x [rows, KV]` row split is strided, so the host
+/// `SplitKv` byte-window alias the single-session rewrite uses cannot
+/// represent it.
 pub fn fuse_kv(g: &FxGraph) -> FxGraph {
     let prod = producers(g);
     let mut dead = vec![false; g.nodes.len()];
@@ -222,8 +224,9 @@ pub fn fuse_kv(g: &FxGraph) -> FxGraph {
             continue;
         }
         let Some(kname) = kn.kernel() else { continue };
-        // matmul_{H}_{KV} -> kv_fused_{H}_{2KV}, or the batched
-        // matmul_b{W}_{H}_{KV} -> kv_fused_b{W}_{H}_{2KV}.
+        // matmul_{H}_{KV} -> kv_fused_{H}_{2KV}, or the multi-row forms:
+        // batched matmul_b{W}_{H}_{KV} -> kv_fused_b{W}_{H}_{2KV} and
+        // chunked-prefill matmul_c{C}_{H}_{KV} -> kv_fused_c{C}_{H}_{2KV}.
         let parts: Vec<&str> = kname.split('_').collect();
         let (batched_prefix, h, kv): (Option<String>, usize, usize) = if parts.len() == 3
             && parts[0] == "matmul"
@@ -232,9 +235,12 @@ pub fn fuse_kv(g: &FxGraph) -> FxGraph {
                 (Ok(a), Ok(b)) => (None, a, b),
                 _ => continue,
             }
-        } else if parts.len() == 4 && parts[0] == "matmul" && parts[1].starts_with('b') {
-            let width_ok = parts[1][1..].parse::<usize>().is_ok();
-            match (width_ok, parts[2].parse::<usize>(), parts[3].parse::<usize>()) {
+        } else if parts.len() == 4
+            && parts[0] == "matmul"
+            && (parts[1].starts_with('b') || parts[1].starts_with('c'))
+        {
+            let rows_ok = parts[1][1..].parse::<usize>().is_ok();
+            match (rows_ok, parts[2].parse::<usize>(), parts[3].parse::<usize>()) {
                 (true, Ok(a), Ok(b)) => (Some(parts[1].to_string()), a, b),
                 _ => continue,
             }
@@ -458,6 +464,32 @@ mod tests {
             .iter()
             .any(|n| matches!(n.op, OpKind::Host(HostOp::SplitKv))));
         assert!(fused.kernel_names().iter().any(|n| n == "kv_fused_b4_64_64"));
+    }
+
+    #[test]
+    fn fusion_passes_are_seq_safe() {
+        // Running the rewrite pipeline on an unfused chunked-prefill graph
+        // must reach exactly the fused prefill builder's graph (dispatch
+        // count and kernel set) and keep it valid — the seq-safety proof
+        // the prefill planner relies on. Rotary is excluded: the prefill
+        // builder always emits the fused rotary kernel.
+        use crate::fx::builder::build_prefill_graph;
+        use crate::fx::passes::PassManager;
+        let dims = GraphDims::qwen_tiny();
+        for chunk in [8usize, 16] {
+            let unfused = build_prefill_graph(&dims, FusionConfig::unfused(), chunk);
+            let (by_passes, reports) = PassManager::for_fusion(
+                FusionConfig::rmsnorm_mlp_kv(),
+                &format!("c{chunk}_tiny"),
+            )
+            .run(&unfused)
+            .unwrap();
+            let direct = build_prefill_graph(&dims, FusionConfig::fused(), chunk);
+            assert_eq!(by_passes.dispatch_count(), direct.dispatch_count(), "c={chunk}");
+            assert_eq!(by_passes.kernel_names(), direct.kernel_names(), "c={chunk}");
+            assert_eq!(by_passes.seq_chunk, chunk, "splice must preserve the chunk");
+            assert!(reports.iter().all(|r| r.saved() > 0), "{reports:?}");
+        }
     }
 
     #[test]

@@ -29,6 +29,13 @@ pub struct FxGraph {
     /// (pairwise output-j-aliases-input-j) for every graph; `batch_width`
     /// additionally lets planners check batch-shape consistency.
     pub batch_width: usize,
+    /// Leading *sequence* dimension of the graph's step inputs. `1` for
+    /// decode-step graphs (one token per replay); `C >= 2` for the chunked
+    /// PREFILL variant, whose step inputs pack `C` consecutive prompt
+    /// positions of ONE session and whose cache ops scatter `C` rows per
+    /// layer per dispatch. Orthogonal to `batch_width` (slots batch across
+    /// sessions; chunks batch along one session's sequence).
+    pub seq_chunk: usize,
 }
 
 // Manual Default so `FxGraph::default()` honors the batch_width >= 1
@@ -48,6 +55,7 @@ impl FxGraph {
             outputs: HashMap::new(),
             persistent: Vec::new(),
             batch_width: 1,
+            seq_chunk: 1,
         }
     }
 
@@ -274,6 +282,14 @@ impl FxGraph {
         if self.batch_width == 0 {
             return Err(Error::Graph("batch_width must be >= 1".into()));
         }
+        if self.seq_chunk == 0 {
+            return Err(Error::Graph("seq_chunk must be >= 1".into()));
+        }
+        if self.batch_width > 1 && self.seq_chunk > 1 {
+            return Err(Error::Graph(
+                "a graph cannot batch both slots and sequence positions".into(),
+            ));
+        }
         if self.batch_width > 1 {
             for node in &self.nodes {
                 if node.in_place() && node.outputs.len() != self.batch_width {
@@ -414,6 +430,22 @@ mod tests {
         assert!(g.validate().is_ok());
         g.batch_width = 0;
         assert!(g.validate().is_err(), "zero width is malformed");
+    }
+
+    #[test]
+    fn seq_chunk_validation() {
+        let mut g = FxGraph::new();
+        let x = g.input("x");
+        let y = g.kernel("a", "k1", Category::Add, vec![x]);
+        g.mark_output("out", y);
+        g.seq_chunk = 16;
+        assert!(g.validate().is_ok());
+        g.seq_chunk = 0;
+        assert!(g.validate().is_err(), "zero chunk is malformed");
+        // Slot batching and sequence chunking are mutually exclusive.
+        g.seq_chunk = 8;
+        g.batch_width = 4;
+        assert!(g.validate().is_err());
     }
 
     #[test]

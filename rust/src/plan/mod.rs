@@ -22,6 +22,10 @@
 //! - [`batched`] — batched-plan replay over a per-round *cache-set table*
 //!   (one session cache set per slot, padding + `slot_mask` for partial
 //!   rounds): one dispatch per layer op serves a whole serving round.
+//! - [`prefill`] — chunked-prefill replay: one dispatch per layer op
+//!   ingests a whole `[C, H]` prompt chunk of ONE session into its
+//!   resident cache set (`valid_len` masks the ragged tail), so prompt
+//!   ingestion stops paying per-token dispatch bills.
 //!
 //! Eager execution stays available ([`crate::engine::GraphExecutor`]'s
 //! default mode) precisely so `wdb plan-bench` can measure the
@@ -32,11 +36,13 @@ pub mod batched;
 pub mod grid;
 pub mod pipelines;
 pub mod planner;
+pub mod prefill;
 pub mod residency;
 pub mod runner;
 
 pub use arena::{ArenaLayout, Interval, SlotAssignment};
 pub use batched::{validate_batched_plan, BatchedRunner};
+pub use prefill::{validate_prefill_plan, PrefillRunner};
 pub use grid::{tile_workgroups, WORKGROUP_SIZE};
 pub use pipelines::{PipelinePool, PreparedKernel};
 pub use planner::{

@@ -1,0 +1,142 @@
+//! Chunked-prefill plan execution: one replay ingests a whole prompt chunk.
+//!
+//! A [`PrefillRunner`] wraps a [`PlanRunner`] compiled from the prefill
+//! graph ([`crate::fx::build_prefill_graph`]) at a fixed sequence chunk
+//! `C`. Its persistent cache layout is IDENTICAL to the single-session
+//! decode plan's (layer-major `l{l}.{k,v}_cache`), so the session's
+//! [`DeviceKvCache`] plugs into both plans — the prefill chunk scatters C
+//! rows per layer per dispatch into the same device buffers the decode
+//! replays then read, with no copies and no re-registration beyond the
+//! runner's own per-cache-set bind groups.
+//!
+//! Ragged final chunks (fewer prompt tokens than `C`) replay the SAME
+//! plan: the `valid_len` uniform masks the tail rows out of the cache
+//! scatter and the causal attention, so no recompile and no second
+//! pipeline set exist for short prompts — the property the prefill tests
+//! pin alongside bit-identity with token-by-token ingestion.
+
+use std::collections::HashMap;
+
+use crate::tensor::Tensor;
+use crate::webgpu::{BufferId, Device, KernelRunner};
+use crate::{Error, Result};
+
+use super::planner::ExecutionPlan;
+use super::residency::DeviceKvCache;
+use super::runner::{PlanRunner, ReplayDelta};
+
+/// Chunk-shape consistency checks for a plan compiled from a prefill
+/// graph: chunk-leading `x` upload, the pos_base/valid_len uniforms, a
+/// resident cache set, and the single-row logits contract.
+pub fn validate_prefill_plan(plan: &ExecutionPlan, chunk: usize) -> Result<()> {
+    if chunk < 2 {
+        return Err(Error::Graph(format!("prefill plans need chunk >= 2, got {chunk}")));
+    }
+    if plan.persistent.is_empty() {
+        return Err(Error::Graph(
+            "prefill plan: no persistent cache values (prefill scatters into a \
+             resident session cache set)"
+            .into(),
+        ));
+    }
+    let x = plan
+        .uploads
+        .iter()
+        .find(|u| u.name == "x")
+        .ok_or_else(|| Error::Graph("prefill plan: step input 'x' missing".into()))?;
+    if x.shape.first().copied() != Some(chunk) {
+        return Err(Error::Graph(format!(
+            "prefill plan: step input 'x' shape {:?} lacks leading chunk {chunk}",
+            x.shape
+        )));
+    }
+    for name in ["pos_f", "pos_base", "valid_len"] {
+        if !plan.uploads.iter().any(|u| u.name == name) {
+            return Err(Error::Graph(format!(
+                "prefill plan: step input '{name}' missing"
+            )));
+        }
+    }
+    match &plan.logits {
+        // Only the selected last row is read back, whatever the chunk.
+        Some(lg) if lg.shape.first().copied() == Some(1) => {}
+        Some(lg) => {
+            return Err(Error::Graph(format!(
+                "prefill plan: logits shape {:?} must be the selected last row [1, vocab]",
+                lg.shape
+            )));
+        }
+        None => return Err(Error::Graph("prefill plan: no logits output".into())),
+    }
+    Ok(())
+}
+
+/// Replays a prefill plan: one chunk of ONE session's prompt per replay.
+pub struct PrefillRunner {
+    runner: PlanRunner,
+    chunk: usize,
+    /// Prefill chunk replays executed.
+    pub chunks: u64,
+}
+
+impl PrefillRunner {
+    /// Validate the plan's chunk shape and materialize the inner runner
+    /// (arena, logits ring, bind groups).
+    pub fn materialize(device: &mut Device, plan: ExecutionPlan, chunk: usize) -> Result<Self> {
+        validate_prefill_plan(&plan, chunk)?;
+        let runner = PlanRunner::materialize(device, plan)?;
+        Ok(PrefillRunner { runner, chunk, chunks: 0 })
+    }
+
+    /// Prompt positions one replay ingests (the ragged final chunk passes
+    /// a smaller `valid_len` instead of recompiling).
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.runner.plan
+    }
+
+    pub fn inner(&self) -> &PlanRunner {
+        &self.runner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut PlanRunner {
+        &mut self.runner
+    }
+
+    /// Wire a session's cache set into the prefill plan's persistent
+    /// steps. Idempotent per buffer set, exactly like the decode runner's
+    /// [`PlanRunner::register_cache`] — recycled sets are pure cache hits.
+    pub fn register_cache(&mut self, device: &mut Device, kv: &DeviceKvCache) -> Result<()> {
+        self.runner.register_cache(device, kv)
+    }
+
+    /// True for buffers the prefill runner owns (its logits ring) — they
+    /// must never be released into the pooled free lists.
+    pub fn owns_buffer(&self, buf: BufferId) -> bool {
+        self.runner.owns_buffer(buf)
+    }
+
+    /// Replay one prompt chunk: `inputs` are the packed step inputs
+    /// (`x [C, H]`, `pos_f [C]`, `pos_base`/`valid_len` uniforms,
+    /// `inv_freq`); `kv` is the session's resident cache set; `ring_idx`
+    /// selects the logits-ring buffer (each prefill session of a round
+    /// passes its own index so a final chunk's logits survive until the
+    /// round's coalesced readback). Returns (named outputs, the live
+    /// logits buffer — only worth mapping for FINAL chunks — and cost
+    /// deltas).
+    pub fn replay(
+        &mut self,
+        device: &mut Device,
+        runner: &dyn KernelRunner,
+        inputs: &HashMap<String, Tensor>,
+        ring_idx: usize,
+        kv: Option<&DeviceKvCache>,
+    ) -> Result<(HashMap<String, Tensor>, Option<BufferId>, ReplayDelta)> {
+        let out = self.runner.replay(device, runner, inputs, ring_idx, kv)?;
+        self.chunks += 1;
+        Ok(out)
+    }
+}

@@ -50,8 +50,11 @@ impl TableDoc {
     /// Version of the table-JSON layout consumed by the CI trend
     /// artifacts. Bumped to 2 when table S1 gained the `disp/round`
     /// column and serving runs became mode-labelled with their batch
-    /// width — downstream trend tooling keys on this to re-align columns.
-    pub const SCHEMA_VERSION: u32 = 2;
+    /// width; bumped to 3 when chunked prefill added S1's
+    /// `prefill disp/tok` column and S2's `(prefill ms)` /
+    /// `(first decode ms)` TTFT-split rows — downstream trend tooling
+    /// keys on this to re-align columns.
+    pub const SCHEMA_VERSION: u32 = 3;
 
     /// JSON form for `report::write_results`
     /// (schema/id/title/columns/rows/notes), matching the layout
@@ -172,7 +175,7 @@ mod tests {
             v.get("schema").and_then(|s| s.as_f64()),
             Some(TableDoc::SCHEMA_VERSION as f64)
         );
-        assert_eq!(TableDoc::SCHEMA_VERSION, 2);
+        assert_eq!(TableDoc::SCHEMA_VERSION, 3);
     }
 
     #[test]

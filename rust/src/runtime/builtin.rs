@@ -201,6 +201,72 @@ pub fn builtin_kernels() -> HashMap<String, KernelSpec> {
               bt, 0.0, "");
     }
 
+    // ---- chunked-prefill kernels: one dispatch per layer op covering up
+    // to C consecutive prompt positions of ONE session (the seq-dim twin
+    // of the batched amortization). Cache ops scatter C rows in place at
+    // pos_base..; sdpa_prefill is the causal multi-token attention (row i
+    // attends cache 0..pos_base+i+1); chunk_last_row selects the final
+    // valid row so the logits contract stays [1, vocab]. Rows >= valid_len
+    // (the ragged tail) are masked, so short final chunks reuse the same
+    // pipelines. Registered for every chunk size the prefill scheduler
+    // may request (PREFILL_CHUNKS).
+    for c in crate::fx::builder::PREFILL_CHUNKS {
+        let ct = &["tiny", "prefill"];
+        b.add(&format!("matmul_c{c}_{h}_{qd}"), vec![io(&[c, h]), io(&[h, qd])],
+              vec![io(&[c, qd])], ct, matmul_flops(c, h, qd), "chunked q/o projection");
+        b.add(&format!("matmul_c{c}_{h}_{kv}"), vec![io(&[c, h]), io(&[h, kv])],
+              vec![io(&[c, kv])], ct, matmul_flops(c, h, kv), "chunked separate k/v projection");
+        b.add(&format!("matmul_c{c}_{h}_{inter}"), vec![io(&[c, h]), io(&[h, inter])],
+              vec![io(&[c, inter])], ct, matmul_flops(c, h, inter), "chunked gate/up projection");
+        b.add(&format!("matmul_c{c}_{inter}_{h}"), vec![io(&[c, inter]), io(&[inter, h])],
+              vec![io(&[c, h])], ct, matmul_flops(c, inter, h), "chunked down projection");
+        b.add(&format!("kv_fused_c{c}_{h}_{}", 2 * kv), vec![io(&[c, h]), io(&[h, 2 * kv])],
+              vec![io(&[c, kv]), io(&[c, kv])], ct, matmul_flops(c, h, 2 * kv),
+              "chunked K+V fusion: strided row split emits two outputs");
+
+        b.add(&format!("rmsnorm_c{c}_{h}"), vec![io(&[c, h]), io(&[h])], vec![io(&[c, h])],
+              ct, 0.0, "chunked fused RMSNorm");
+        b.add(&format!("rms_pow_c{c}_{h}"), vec![io(&[c, h])], vec![io(&[c, h])], ct, 0.0, "");
+        b.add(&format!("rms_mean_c{c}_{h}"), vec![io(&[c, h])], vec![io(&[c, 1])], ct, 0.0, "");
+        b.add(&format!("rms_add_eps_c{c}"), vec![io(&[c, 1])], vec![io(&[c, 1])], ct, 0.0, "");
+        b.add(&format!("rms_rsqrt_c{c}"), vec![io(&[c, 1])], vec![io(&[c, 1])], ct, 0.0, "");
+        b.add(&format!("rms_mul_x_c{c}_{h}"), vec![io(&[c, h]), io(&[c, 1])],
+              vec![io(&[c, h])], ct, 0.0, "");
+        b.add(&format!("rms_mul_w_c{c}_{h}"), vec![io(&[c, h]), io(&[h])],
+              vec![io(&[c, h])], ct, 0.0, "");
+
+        b.add(&format!("rope_cos_sin_c{c}_{d}"), vec![io(&[c]), io(&[half])],
+              vec![io(&[c, d]), io(&[c, d])], ct, 0.0, "per-position rope table");
+        b.add(&format!("rotary_c{c}_{nh}_{d}"), vec![io(&[c, nh * d]), io(&[c, d]), io(&[c, d])],
+              vec![io(&[c, nh * d])], ct, 0.0, "chunked fused rotary (q heads)");
+        b.add(&format!("rotary_c{c}_{kvh}_{d}"), vec![io(&[c, kvh * d]), io(&[c, d]), io(&[c, d])],
+              vec![io(&[c, kvh * d])], ct, 0.0, "chunked fused rotary (kv heads)");
+
+        b.add(&format!("cache_update_c{c}_tiny"),
+              vec![io(&[s, kvh, d]), io(&[c, kvh * d]), io_i32(&[1]), io_i32(&[1])],
+              vec![io(&[s, kvh, d])], &["tiny", "prefill", "cache"], 0.0,
+              "in-place multi-row cache scatter (rows 0..valid_len at pos_base..)");
+        b.add(&format!("sdpa_prefill_c{c}_tiny"),
+              vec![io(&[c, nh * d]), io(&[s, kvh, d]), io(&[s, kvh, d]),
+                   io_i32(&[1]), io_i32(&[1])],
+              vec![io(&[c, nh * d])], &["tiny", "prefill", "attention"],
+              2.0 * (c * nh) as f64 * d as f64 * s as f64 * 2.0,
+              "causal multi-token GQA: row i attends cache 0..pos_base+i+1");
+
+        b.add(&format!("gate_up_silu_c{c}_tiny"),
+              vec![io(&[c, h]), io(&[h, inter]), io(&[h, inter])],
+              vec![io(&[c, inter])], &["tiny", "prefill", "mlp"],
+              2.0 * matmul_flops(c, h, inter), "chunked MLP gate+up+silu fusion");
+        b.add(&format!("silu_c{c}_{inter}"), vec![io(&[c, inter])], vec![io(&[c, inter])],
+              ct, 0.0, "");
+        b.add(&format!("mul_c{c}_{inter}"), vec![io(&[c, inter]), io(&[c, inter])],
+              vec![io(&[c, inter])], ct, 0.0, "");
+        b.add(&format!("add_c{c}_{h}"), vec![io(&[c, h]), io(&[c, h])], vec![io(&[c, h])],
+              ct, 0.0, "");
+        b.add(&format!("chunk_last_row_c{c}_{h}"), vec![io(&[c, h]), io_i32(&[1])],
+              vec![io(&[1, h])], ct, 0.0, "select row valid_len-1 for the lm head");
+    }
+
     b.add(&format!("argmax_{v}"), vec![io(&[1, v])], vec![io_i32(&[1])],
           &["tiny", "argmax"], 0.0, "");
     b.add(&format!("softmax_{v}"), vec![io(&[1, v])], vec![io(&[1, v])],
@@ -357,6 +423,35 @@ mod tests {
         assert_eq!((sd.inputs.len(), sd.outputs.len()), (1 + 8 + 3, 1));
         let kvf = &kernels["kv_fused_b2_64_64"];
         assert_eq!(kvf.outputs.len(), 2);
+    }
+
+    #[test]
+    fn builtin_covers_every_prefill_graph_kernel_at_every_chunk() {
+        use crate::fx::builder::{build_prefill_graph, PREFILL_CHUNKS};
+        let kernels = builtin_kernels();
+        let dims = GraphDims::qwen_tiny();
+        for c in PREFILL_CHUNKS {
+            for fusion in [
+                FusionConfig::unfused(),
+                FusionConfig::rmsnorm_only(),
+                FusionConfig::rmsnorm_mlp(),
+                FusionConfig::rmsnorm_mlp_kv(),
+                FusionConfig::fused(),
+            ] {
+                let g = build_prefill_graph(&dims, fusion, c);
+                for name in g.kernel_names() {
+                    assert!(kernels.contains_key(&name), "c={c}: missing kernel '{name}'");
+                }
+            }
+        }
+        // Prefill cache/attention arities: state + rows + base + valid in,
+        // updated state out; sdpa carries the two scalar uniforms.
+        let cu = &kernels["cache_update_c16_tiny"];
+        assert_eq!((cu.inputs.len(), cu.outputs.len()), (4, 1));
+        let sd = &kernels["sdpa_prefill_c16_tiny"];
+        assert_eq!((sd.inputs.len(), sd.outputs.len()), (5, 1));
+        let lr = &kernels["chunk_last_row_c16_64"];
+        assert_eq!(lr.outputs[0].shape, vec![1, 64]);
     }
 
     #[test]

@@ -576,6 +576,94 @@ fn sdpa_batched(inputs: &[Tensor]) -> Result<Tensor> {
     Tensor::f32(vec![w, qcols], out)
 }
 
+// ------------------------------------------------ chunked-prefill kernels --
+//
+// The `*_c{C}_*` kernels execute one dispatch over C consecutive prompt
+// positions of ONE session. The cache scatter and causal attention are
+// written as per-row loops over the single-token kernels, so a chunked
+// prefill is BIT-IDENTICAL to feeding the same tokens one decode step at a
+// time — the equivalence `rust/tests/prefill.rs` pins. Rows at or beyond
+// `valid_len` (the ragged tail of a short final chunk) are skipped by the
+// scatter and zeroed by the attention; their lanes never reach the cache
+// or the selected logits row. Row-wise chunk kernels (matmul_c*,
+// rmsnorm_c*, rms_*_c*, silu_c*, mul_c*, add_c*, gate_up_silu_c*,
+// rotary_c*, rope_cos_sin_c*, kv_fused_c*) reuse the shared row-safe
+// implementations.
+
+/// Chunked in-place cache scatter: writes rows `0..valid_len` of
+/// `rows [C, KVH*D]` at cache positions `pos_base..` — exactly a loop of
+/// the single-token `cache_update`.
+fn cache_update_prefill(inputs: &[Tensor]) -> Result<Tensor> {
+    let cache = &inputs[0];
+    let rows = &inputs[1];
+    let base = scalar_pos(&inputs[2])?;
+    let valid = scalar_pos(&inputs[3])?;
+    if cache.shape.len() != 3 || rows.shape.len() != 2 {
+        return Err(Error::Shape(format!(
+            "cache_update_c: cache {:?} rows {:?}",
+            cache.shape, rows.shape
+        )));
+    }
+    let (kvh, d) = (cache.shape[1], cache.shape[2]);
+    if rows.shape[1] != kvh * d || valid > rows.shape[0] {
+        return Err(Error::Shape(format!(
+            "cache_update_c: {valid} valid rows of {:?} into [{kvh}, {d}]",
+            rows.shape
+        )));
+    }
+    let mut out = cache.clone();
+    for i in 0..valid {
+        let row = slot_row(rows, i, vec![kvh, d])?;
+        out = cache_update(&out, &row, base + i)?;
+    }
+    Ok(out)
+}
+
+/// Causal multi-token prefill attention: chunk row `i` attends cache
+/// positions `0..pos_base+i+1` (the scatter has already written this
+/// chunk's rows), bit-identical per row to the single-token sdpa at that
+/// position. Rows `>= valid_len` produce zeros (never read).
+fn sdpa_prefill(inputs: &[Tensor]) -> Result<Tensor> {
+    let (q, k, v) = (&inputs[0], &inputs[1], &inputs[2]);
+    let base = scalar_pos(&inputs[3])?;
+    let valid = scalar_pos(&inputs[4])?;
+    if q.shape.len() != 2 || k.shape.len() != 3 || v.shape != k.shape {
+        return Err(Error::Shape(format!(
+            "sdpa_prefill: q {:?} k {:?} v {:?}",
+            q.shape, k.shape, v.shape
+        )));
+    }
+    let (c, qcols) = (q.shape[0], q.shape[1]);
+    let d = k.shape[2];
+    if d == 0 || qcols % d != 0 || valid > c {
+        return Err(Error::Shape(format!(
+            "sdpa_prefill: q {:?} vs head dim {d}, valid {valid}",
+            q.shape
+        )));
+    }
+    let heads = qcols / d;
+    let mut out = vec![0f32; c * qcols];
+    for i in 0..valid {
+        let qi = slot_row(q, i, vec![heads, d])?;
+        let o = sdpa_gqa(&qi, k, v, base + i + 1)?;
+        out[i * qcols..(i + 1) * qcols].copy_from_slice(f32s(&o, "sdpa_prefill")?);
+    }
+    Tensor::f32(vec![c, qcols], out)
+}
+
+/// Select row `valid_len - 1` of `x [C, H]` as `[1, H]` (the last prompt
+/// position's hidden state, fed to the final norm + lm head).
+fn chunk_last_row(x: &Tensor, valid_len: &Tensor) -> Result<Tensor> {
+    let valid = scalar_pos(valid_len)?;
+    if x.shape.len() != 2 || valid == 0 || valid > x.shape[0] {
+        return Err(Error::Shape(format!(
+            "chunk_last_row: row {valid}-1 of {:?}",
+            x.shape
+        )));
+    }
+    slot_row(x, valid - 1, vec![1, x.shape[1]])
+}
+
 // --------------------------------------------------------------- dispatch --
 
 fn need(inputs: &[Tensor], n: usize, name: &str) -> Result<()> {
@@ -593,24 +681,37 @@ pub fn execute_kernel(spec: &KernelSpec, inputs: &[Tensor]) -> Result<Vec<Tensor
     let name = spec.name.as_str();
     // Ordering matters: check longer/more-specific prefixes before shorter
     // ones (e.g. "matmul" before "mul_", "rms_mul_x" before "rms_mul_w",
-    // "softmax_naive" before "softmax") — and the batched `*_b{W}` forms
-    // whose input layout differs from their single-session counterparts
-    // before those counterparts. Row-wise batched kernels (matmul_b*,
-    // rmsnorm_b*, rms_*_b*, silu_b*, mul_b*, add_b*) need no special
-    // casing: the shared implementations are row-safe.
-    let outs: Vec<Tensor> = if name.starts_with("kv_fused_b") {
+    // "softmax_naive" before "softmax") — and the batched `*_b{W}` /
+    // chunked-prefill `*_c{C}` forms whose input layout differs from their
+    // single-token counterparts before those counterparts. Row-wise
+    // batched/chunked kernels (matmul_{b,c}*, rmsnorm_{b,c}*,
+    // rms_*_{b,c}*, silu_*, mul_*, add_*) need no special casing: the
+    // shared implementations are row-safe. The chunked kv/rope/rotary
+    // forms reuse the batched per-row bodies — same math, per sequence
+    // position instead of per slot.
+    let outs: Vec<Tensor> = if name.starts_with("kv_fused_b") || name.starts_with("kv_fused_c")
+    {
         need(inputs, 2, name)?;
         kv_fused_batched(&inputs[0], &inputs[1])?
-    } else if name.starts_with("rope_cos_sin_b") {
+    } else if name.starts_with("rope_cos_sin_b") || name.starts_with("rope_cos_sin_c") {
         need(inputs, 2, name)?;
         rope_cos_sin_batched(&inputs[0], &inputs[1])?
-    } else if name.starts_with("rotary_b") {
+    } else if name.starts_with("rotary_b") || name.starts_with("rotary_c") {
         need(inputs, 3, name)?;
         vec![rotary_batched(&inputs[0], &inputs[1], &inputs[2])?]
     } else if name.starts_with("cache_update_b") {
         cache_update_batched(inputs)?
+    } else if name.starts_with("cache_update_c") {
+        need(inputs, 4, name)?;
+        vec![cache_update_prefill(inputs)?]
+    } else if name.starts_with("sdpa_prefill") {
+        need(inputs, 5, name)?;
+        vec![sdpa_prefill(inputs)?]
     } else if name.starts_with("sdpa_b") {
         vec![sdpa_batched(inputs)?]
+    } else if name.starts_with("chunk_last_row") {
+        need(inputs, 2, name)?;
+        vec![chunk_last_row(&inputs[0], &inputs[1])?]
     } else if name.starts_with("matmul") || name.starts_with("kv_fused") {
         need(inputs, 2, name)?;
         vec![matmul(&inputs[0], &inputs[1])?]
@@ -955,6 +1056,89 @@ mod tests {
             Tensor::i32(vec![w], vec![0, 9]).unwrap(),
         ]);
         assert!(cache_update_batched(&bad).is_err());
+    }
+
+    // ---- chunked-prefill kernels: bit-identical to looping the
+    // single-token kernels over the chunk's positions ----
+
+    #[test]
+    fn prefill_cache_scatter_matches_single_update_loop_bitwise() {
+        let (c, s, kvh, d) = (4usize, 8usize, 2usize, 3usize);
+        let cache = ramp(vec![s, kvh, d], 0.01, -0.3);
+        let rows = ramp(vec![c, kvh * d], 0.2, 10.0);
+        let base = 2usize;
+        let valid = 3usize; // ragged tail: row 3 must not land
+        let inputs = [
+            cache.clone(),
+            rows.clone(),
+            Tensor::scalar_i32(base as i32),
+            Tensor::scalar_i32(valid as i32),
+        ];
+        let out = cache_update_prefill(&inputs).unwrap();
+        // Loop of single-token updates over the valid rows.
+        let mut expect = cache.clone();
+        for i in 0..valid {
+            let row = slot_row(&rows, i, vec![kvh, d]).unwrap();
+            expect = cache_update(&expect, &row, base + i).unwrap();
+        }
+        assert_eq!(out.as_f32().unwrap(), expect.as_f32().unwrap());
+        // The ragged row's target position stays untouched.
+        let tail = (base + valid) * kvh * d;
+        assert_eq!(
+            &out.as_f32().unwrap()[tail..tail + kvh * d],
+            &cache.as_f32().unwrap()[tail..tail + kvh * d]
+        );
+        // Overflowing the cache fails loudly.
+        let bad = [
+            cache.clone(),
+            rows,
+            Tensor::scalar_i32((s - 1) as i32),
+            Tensor::scalar_i32(3),
+        ];
+        assert!(cache_update_prefill(&bad).is_err());
+    }
+
+    #[test]
+    fn prefill_sdpa_matches_single_position_loop_and_zeroes_tail() {
+        let (c, s, heads, kvh, d) = (4usize, 8usize, 2usize, 1usize, 2usize);
+        let base = 3usize;
+        let valid = 3usize;
+        let q = ramp(vec![c, heads * d], 0.17, -0.4);
+        let k = ramp(vec![s, kvh, d], 0.09, 0.5);
+        let v = ramp(vec![s, kvh, d], 0.05, -0.8);
+        let inputs = [
+            q.clone(),
+            k.clone(),
+            v.clone(),
+            Tensor::scalar_i32(base as i32),
+            Tensor::scalar_i32(valid as i32),
+        ];
+        let out = sdpa_prefill(&inputs).unwrap();
+        for i in 0..valid {
+            let qi = slot_row(&q, i, vec![heads, d]).unwrap();
+            // Row i's causal window: cache history + the preceding
+            // in-chunk rows — exactly the single-token sdpa at base+i.
+            let single = sdpa_gqa(&qi, &k, &v, base + i + 1).unwrap();
+            assert_eq!(
+                &out.as_f32().unwrap()[i * heads * d..(i + 1) * heads * d],
+                single.as_f32().unwrap(),
+                "row {i}"
+            );
+        }
+        assert!(
+            out.as_f32().unwrap()[valid * heads * d..].iter().all(|&x| x == 0.0),
+            "ragged tail rows must produce zeros"
+        );
+    }
+
+    #[test]
+    fn chunk_last_row_selects_final_valid_row() {
+        let x = ramp(vec![4, 3], 1.0, 0.0);
+        let out = chunk_last_row(&x, &Tensor::scalar_i32(2)).unwrap();
+        assert_eq!(out.shape, vec![1, 3]);
+        assert_eq!(out.as_f32().unwrap(), &[3.0, 4.0, 5.0]); // row 1
+        assert!(chunk_last_row(&x, &Tensor::scalar_i32(0)).is_err());
+        assert!(chunk_last_row(&x, &Tensor::scalar_i32(5)).is_err());
     }
 
     #[test]

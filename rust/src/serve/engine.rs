@@ -15,12 +15,13 @@
 //! (~0.1 ms Vulkan, ~1.8 ms Metal per token at N=1) is paid once per round
 //! instead of once per session.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::engine::inference::EngineConfig;
 use crate::engine::GraphExecutor;
 use crate::fx::builder::{
-    build_batched_decode_graph, build_decode_graph, GraphDims, MAX_BATCH_WIDTH,
+    build_batched_decode_graph, build_decode_graph, build_prefill_graph, GraphDims,
+    MAX_BATCH_WIDTH, PREFILL_CHUNKS,
 };
 use crate::fx::graph::FxGraph;
 use crate::model::weights::ModelWeights;
@@ -64,6 +65,17 @@ pub struct StepHandle {
     pub logits_buf: Option<BufferId>,
 }
 
+/// One encoded unit of a scheduler round awaiting the round's single
+/// coalesced readback: the live logits buffer plus which sessions read
+/// which vocab row of it. A prefill final chunk and an interleaved decode
+/// step own one row (`[1, vocab]`); a batched decode chunk owns one row
+/// per packed session (`[W, vocab]`).
+struct EncodedChunk {
+    buf: BufferId,
+    /// (index into `active`, vocab-row index within `buf`).
+    owners: Vec<(usize, usize)>,
+}
+
 pub struct ServingEngine<'r> {
     pub config: ServeConfig,
     pub dims: GraphDims,
@@ -93,6 +105,15 @@ pub struct ServingEngine<'r> {
     pub batched_graph: Option<FxGraph>,
     /// Effective batched slot width (0 when batching is disabled).
     pub batch_width: usize,
+    /// The chunked-prefill graph (planned mode with `prefill_chunk >= 2`):
+    /// sessions still ingesting their prompt replay its compiled plan —
+    /// one dispatch per layer op per chunk of up to `prefill_chunk`
+    /// prompt tokens — instead of one decode step per prompt token.
+    /// `None` disables chunking (eager mode, `--prefill-chunk 0`, or the
+    /// device-argmax finish variant).
+    pub prefill_graph: Option<FxGraph>,
+    /// Effective prefill chunk size (0 when chunking is disabled).
+    pub prefill_chunk: usize,
     /// Scheduler rounds completed (any path) — the denominator of the
     /// `dispatches_per_round` serving metric.
     pub rounds: u64,
@@ -214,6 +235,49 @@ impl<'r> ServingEngine<'r> {
             None
         };
 
+        // Chunked-prefill plan alongside the decode plans: sessions still
+        // ingesting their prompt replay it once per round (one dispatch
+        // per layer op per chunk of `prefill_chunk` prompt tokens) and
+        // only FINAL chunks join the round's coalesced readback. Gated
+        // like batching: planned mode only (eager keeps the paper's
+        // per-token prompt pathology measurable) and not under
+        // device-argmax (whose finish path owns its own readback). Its
+        // persistent layout matches the decode plan's, so one session
+        // cache set serves prefill chunks and decode replays alike.
+        let prefill_chunk = if ec.exec == crate::engine::ExecMode::Planned
+            && ec.prefill_chunk >= 2
+            && !ec.device_argmax
+        {
+            if !PREFILL_CHUNKS.contains(&ec.prefill_chunk) {
+                return Err(Error::Graph(format!(
+                    "prefill chunk {} has no built-in kernel coverage (choose one \
+                     of {PREFILL_CHUNKS:?}, or 0 to disable chunked prefill)",
+                    ec.prefill_chunk
+                )));
+            }
+            ec.prefill_chunk
+        } else {
+            0
+        };
+        let prefill_graph = if prefill_chunk >= 2 {
+            let pg = build_prefill_graph(&dims, ec.fusion, prefill_chunk);
+            pg.validate()?;
+            executor.enable_prefill_plan(
+                &pg,
+                crate::plan::PlanConfig {
+                    dispatches_per_submit: ec.dispatches_per_submit.max(1),
+                    framework_ns_per_step: ec.planned_framework_ns_per_step,
+                    // Every prefill session of one round replays before
+                    // the round's single readback.
+                    logits_ring: config.max_concurrent.max(1),
+                },
+                prefill_chunk,
+            )?;
+            Some(pg)
+        } else {
+            None
+        };
+
         Ok(ServingEngine {
             config,
             dims,
@@ -227,6 +291,8 @@ impl<'r> ServingEngine<'r> {
             ring_cursor: 0,
             batched_graph,
             batch_width,
+            prefill_graph,
+            prefill_chunk,
             rounds: 0,
         })
     }
@@ -258,6 +324,25 @@ impl<'r> ServingEngine<'r> {
         Ok(self.queue.push(prompt.to_vec(), n_new, now))
     }
 
+    /// Lowest decode-slot index not held by an active session. Sticky
+    /// slot assignment: a session pins its slot at admission and frees it
+    /// only on retire, so ragged retirement never reshuffles the
+    /// surviving sessions' rows in the batched cache-set table — and a
+    /// replacement admission (which the pool hands the retiree's recycled
+    /// buffer set) lands in the retiree's slot, keeping the table's
+    /// bind-group key identical across churn.
+    fn lowest_free_slot(&self) -> usize {
+        let mut used = vec![false; self.config.max_concurrent.max(1)];
+        for s in &self.active {
+            if let Some(j) = s.slot {
+                if j < used.len() {
+                    used[j] = true;
+                }
+            }
+        }
+        used.iter().position(|&u| !u).unwrap_or(self.active.len())
+    }
+
     /// Admit queued requests (FIFO) up to `max_concurrent`. Admission is
     /// cache-aware in planned mode: each admitted session claims its
     /// device-resident cache set up front, and when the bounded pool
@@ -268,6 +353,7 @@ impl<'r> ServingEngine<'r> {
     /// would spin forever on an unadmittable queue.
     pub fn admit(&mut self) -> Result<()> {
         while self.active.len() < self.config.max_concurrent && !self.queue.is_empty() {
+            let slot = self.lowest_free_slot();
             let cache = if self.executor.is_planned() {
                 match self.executor.alloc_kv_cache() {
                     Ok(c) => Some(c),
@@ -294,6 +380,7 @@ impl<'r> ServingEngine<'r> {
             if let Some(c) = cache {
                 s.kv = KvCache::Device(c);
             }
+            s.slot = Some(slot);
             self.active.push(s);
         }
         Ok(())
@@ -491,6 +578,11 @@ impl<'r> ServingEngine<'r> {
         // counterpart of the engine-level plan-build cost, so build vs
         // replay attribution is visible per session.
         s.metrics.encode_virtual_ns += executor.device.clock.now_ns() - c0;
+        if was_prompt && !s.in_prefill() {
+            // This encode consumed the final prompt token: TTFT splits
+            // here into prompt ingestion vs first-token readback.
+            s.metrics.prefill_end_ns = executor.device.clock.now_ns();
+        }
 
         Ok(StepHandle { logits, logits_buf })
     }
@@ -578,14 +670,23 @@ impl<'r> ServingEngine<'r> {
         Ok(idx)
     }
 
-    /// One scheduler round: admit, step every active session once, retire
+    /// One scheduler round: admit, step every active session once (a
+    /// prefill-phase session's "step" ingests one PROMPT CHUNK), retire
     /// completed sessions. Returns the number of sessions stepped.
     ///
+    /// With chunked prefill enabled (planned mode, `prefill_chunk >= 2`),
+    /// sessions still consuming their prompt replay the PREFILL plan —
+    /// one dispatch per layer op per chunk of up to `prefill_chunk`
+    /// prompt tokens — while generating sessions decode through the
+    /// batched (or single-session) path in the SAME round: prompt
+    /// ingestion and decode interleave continuously, and one coalesced
+    /// readback finishes both.
+    ///
     /// With batching enabled (planned mode, `batch_width >= 2`) and >= 2
-    /// active sessions, the round replays the BATCHED plan — active
-    /// sessions pack into batch slots and each layer op is ONE dispatch
-    /// per chunk of `batch_width` sessions instead of one per session.
-    /// Rounds with a single active session (and the device-argmax finish
+    /// active decode sessions, decode replays the BATCHED plan — sessions
+    /// occupy their sticky slots and each layer op is ONE dispatch per
+    /// chunk of `batch_width` slots instead of one per session. Rounds
+    /// with a single active session (and the device-argmax finish
     /// variant, whose per-session argmax dispatch expects single-row
     /// logits) keep the interleaved path byte-for-byte.
     pub fn step_round(&mut self) -> Result<usize> {
@@ -594,7 +695,14 @@ impl<'r> ServingEngine<'r> {
         if n == 0 {
             return Ok(0);
         }
-        if n >= 2 && self.batched_graph.is_some() && self.argmax.is_none() {
+        let prefill_idx: Vec<usize> = if self.prefill_graph.is_some() {
+            (0..n).filter(|&i| self.active[i].in_prefill()).collect()
+        } else {
+            Vec::new()
+        };
+        if !prefill_idx.is_empty() {
+            self.step_round_prefill(prefill_idx)?;
+        } else if n >= 2 && self.batched_graph.is_some() && self.argmax.is_none() {
             self.step_round_batched()?;
         } else {
             self.step_round_interleaved(n)?;
@@ -671,27 +779,195 @@ impl<'r> ServingEngine<'r> {
         Ok(())
     }
 
-    /// The batched round body: pack active sessions into batch slots in
-    /// admission order (chunks of `batch_width`; ragged chunks mask their
-    /// unused slots — no recompile), upload ONE concatenated
-    /// token/position buffer per chunk, replay the batched plan per chunk
-    /// (one dispatch per layer op, K/V appends scattered into each
-    /// session's own cache set, each chunk into its own logits-ring
-    /// buffer), then read EVERY chunk's `[W, vocab]` logits row block back
-    /// behind ONE round-level synchronization and demultiplex rows to
-    /// sessions — the coalesced-sync amortization of the interleaved path,
-    /// kept intact when N exceeds the batch width.
+    /// The batched round body: every active session decodes through its
+    /// sticky slot's batched chunk, then ONE round-level readback.
     fn step_round_batched(&mut self) -> Result<()> {
+        let idx: Vec<usize> = (0..self.active.len()).collect();
+        let chunks = self.encode_batched_chunks(&idx)?;
+        self.finish_round(chunks)
+    }
+
+    /// A round containing prefill-phase sessions: each ingests one
+    /// `prefill_chunk`-sized slice of its prompt through the seq-dim
+    /// prefill plan (ONE replay per session per round — C cache rows
+    /// scattered per layer per dispatch), while generating sessions
+    /// decode through the batched (or single-session) path in the same
+    /// round — the continuous-batching shape. Only FINAL prompt chunks
+    /// (the ones whose last-row logits select the first generated token)
+    /// join the round's coalesced readback; intermediate chunks never
+    /// synchronize, which is exactly where chunked prefill's TTFT win
+    /// comes from.
+    fn step_round_prefill(&mut self, prefill_idx: Vec<usize>) -> Result<()> {
         let n = self.active.len();
+        let mut chunks: Vec<EncodedChunk> = Vec::new();
+        for (k, &i) in prefill_idx.iter().enumerate() {
+            if let Some(c) = self.encode_prefill_chunk(i, k)? {
+                chunks.push(c);
+            }
+        }
+        let decode_idx: Vec<usize> = (0..n).filter(|i| !prefill_idx.contains(i)).collect();
+        if !decode_idx.is_empty() {
+            if decode_idx.len() >= 2 && self.batched_graph.is_some() {
+                chunks.extend(self.encode_batched_chunks(&decode_idx)?);
+            } else {
+                for &i in &decode_idx {
+                    chunks.push(self.encode_decode_step(i)?);
+                }
+            }
+        }
+        self.finish_round(chunks)
+    }
+
+    /// Encode ONE prompt chunk for active session `i`: consume up to
+    /// `prefill_chunk` prompt tokens, upload the packed `[C, H]` rows +
+    /// per-position angles + `pos_base`/`valid_len` uniforms (the ragged
+    /// final chunk masks its tail — no recompile), and replay the prefill
+    /// plan once into logits ring buffer `ring`. Every cost delta goes to
+    /// the one session. Returns the chunk for the round's readback ONLY
+    /// when it consumed the final prompt token.
+    fn encode_prefill_chunk(&mut self, i: usize, ring: usize) -> Result<Option<EncodedChunk>> {
+        let chunk = self.prefill_chunk;
+        let (hidden, max_seq) = (self.dims.hidden, self.dims.max_seq);
+
+        // Upload accounting starts BEFORE promotion so a resumed
+        // session's cache re-hydration is charged to it (same convention
+        // as the decode paths).
+        let w0 = self.executor.device.stats.bytes_written;
+        {
+            let ServingEngine { executor, active, .. } = &mut *self;
+            Self::promote_to_device(executor, &mut active[i])?;
+        }
+        let ph0 = self.executor.device.timeline.virtual_ns;
+        let k0 = self.executor.device.timeline.kernel_virtual_ns;
+        let sy0 = self.executor.device.timeline.sync_virtual_ns;
+        let fw0 = self.executor.framework_virtual_ns;
+        let d0 = self.executor.dispatch_count;
+        let c0 = self.executor.device.clock.now_ns();
+
+        let (inputs, take) = {
+            let ServingEngine { weights, active, .. } = &mut *self;
+            let s = &mut active[i];
+            let range = s.peek_prompt_chunk(chunk);
+            let take = range.len();
+            debug_assert!(take >= 1, "prefill round scheduled an exhausted prompt");
+            if s.pos + take > max_seq {
+                return Err(Error::Graph(format!(
+                    "KV cache capacity {max_seq} exhausted during prefill"
+                )));
+            }
+            // Pack rows 0..take; the ragged tail stays zeroed — those
+            // rows are masked by valid_len everywhere that matters.
+            let mut xbuf = vec![0f32; chunk * hidden];
+            let mut pos_f = vec![0f32; chunk];
+            for (r, &t) in s.prompt[range.clone()].iter().enumerate() {
+                let emb = hostops::embed(&weights.embedding, t)?;
+                xbuf[r * hidden..(r + 1) * hidden].copy_from_slice(emb.as_f32()?);
+                pos_f[r] = (s.pos + r) as f32;
+            }
+            let mut inputs: HashMap<String, Tensor> = HashMap::with_capacity(5);
+            inputs.insert("x".into(), Tensor::f32(vec![chunk, hidden], xbuf)?);
+            inputs.insert("pos_f".into(), Tensor::f32(vec![chunk], pos_f)?);
+            inputs.insert("pos_base".into(), Tensor::scalar_i32(s.pos as i32));
+            inputs.insert("valid_len".into(), Tensor::scalar_i32(take as i32));
+            inputs.insert("inv_freq".into(), weights.inv_freq.clone());
+            s.consume_prompt(take);
+            (inputs, take)
+        };
+
+        let logits_buf = {
+            let ServingEngine { executor, prefill_graph, active, .. } = &mut *self;
+            let graph = prefill_graph.as_ref().expect("prefill path checked");
+            let kv = active[i].kv.as_device();
+            let (_outs, logits_buf, _delta) =
+                executor.run_prefill(graph, &inputs, ring, kv)?;
+            logits_buf
+        };
+
+        // ---- attribution: the whole chunk belongs to this session ----
+        let tl = self.executor.device.timeline.virtual_ns;
+        let kernel_d = self.executor.device.timeline.kernel_virtual_ns - k0;
+        let sync_d = self.executor.device.timeline.sync_virtual_ns - sy0;
+        let fw_d = self.executor.framework_virtual_ns - fw0;
+        let disp_d = self.executor.dispatch_count - d0;
+        let upload_d = self.executor.device.stats.bytes_written - w0;
+        let now = self.executor.device.clock.now_ns();
+        let s = &mut self.active[i];
+        for p in 0..8 {
+            s.metrics.phase_virtual_ns[p] += tl[p] - ph0[p];
+        }
+        s.metrics.kernel_virtual_ns += kernel_d;
+        s.metrics.sync_virtual_ns += sync_d;
+        s.metrics.framework_virtual_ns += fw_d;
+        s.metrics.dispatches += disp_d;
+        s.metrics.prefill_dispatches += disp_d;
+        s.metrics.upload_bytes += upload_d;
+        s.metrics.encode_virtual_ns += now - c0;
+        // Step accounting stays token-granular: a C-token chunk is C
+        // prompt steps, so per-step rates compare across ingestion modes.
+        s.metrics.steps += take as u64;
+        s.metrics.prefill_steps += take as u64;
+        // The on-device scatter already wrote this chunk's K/V rows.
+        s.pos += take;
+        let final_chunk = !s.in_prefill();
+        if final_chunk {
+            s.metrics.prefill_end_ns = now;
+        }
+        let buf = logits_buf.ok_or_else(|| {
+            Error::Graph("prefill plan produced no logits buffer".into())
+        })?;
+        Ok(if final_chunk {
+            Some(EncodedChunk { buf, owners: vec![(i, 0)] })
+        } else {
+            None
+        })
+    }
+
+    /// One planned single-session decode encode (a mixed round's decode
+    /// side when the batched path does not apply), as a round chunk.
+    fn encode_decode_step(&mut self, i: usize) -> Result<EncodedChunk> {
+        let ring = self.next_ring();
+        let h = {
+            let ServingEngine { executor, graph, dims, weights, active, .. } = &mut *self;
+            let s = &mut active[i];
+            let (token, was_prompt) = s.take_input().ok_or_else(|| {
+                Error::Graph(format!("session {} has no input token", s.id))
+            })?;
+            Self::encode_inner(executor, graph, dims, weights, s, token, was_prompt, ring)?
+        };
+        let buf = h.logits_buf.ok_or_else(|| {
+            Error::Graph("planned decode produced no logits buffer".into())
+        })?;
+        Ok(EncodedChunk { buf, owners: vec![(i, 0)] })
+    }
+
+    /// Pack the given active sessions into batched-plan replays by their
+    /// STICKY slots: chunk `c` covers slots `[c*W, (c+1)*W)`; rows whose
+    /// slot carries no decoding session this round (free slots, or
+    /// sessions still in prefill) are masked against the padding set, and
+    /// chunks with no session at all are skipped entirely. Uploads ONE
+    /// concatenated token/position buffer per chunk, replays the batched
+    /// plan per chunk (one dispatch per layer op, K/V appends scattered
+    /// into each session's own cache set, each chunk into its own
+    /// logits-ring buffer), splitting each chunk's shared costs evenly
+    /// across its sessions so per-session sums keep tiling the engine
+    /// totals.
+    fn encode_batched_chunks(&mut self, idx: &[usize]) -> Result<Vec<EncodedChunk>> {
         let width = self.batch_width;
-        let (hidden, vocab, max_seq) = (self.dims.hidden, self.dims.vocab, self.dims.max_seq);
-        // Per-chunk replay outputs awaiting the round's single readback.
-        let mut chunk_bufs: Vec<BufferId> = Vec::new();
-        let mut chunk_bounds: Vec<(usize, usize)> = Vec::new();
-        let mut start = 0usize;
-        let mut ring = 0usize;
-        while start < n {
-            let count = width.min(n - start);
+        let (hidden, max_seq) = (self.dims.hidden, self.dims.max_seq);
+        // chunk number -> [(row within chunk, active index)], row-sorted.
+        let mut by_chunk: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
+        for &i in idx {
+            let slot = self.active[i].slot.ok_or_else(|| {
+                Error::Graph(format!(
+                    "session {} has no decode slot (batched rounds need sticky slots)",
+                    self.active[i].id
+                ))
+            })?;
+            by_chunk.entry(slot / width).or_default().push((slot % width, i));
+        }
+        let mut chunks = Vec::with_capacity(by_chunk.len());
+        for (chunk_no, mut members) in by_chunk {
+            members.sort_unstable();
             // ---- pack: residency, input tokens, per-slot uniforms ----
             let mut xbuf = vec![0f32; width * hidden];
             let mut pos_i = vec![0i32; width];
@@ -702,8 +978,8 @@ impl<'r> ServingEngine<'r> {
             let mut was_prompt = vec![false; width];
             {
                 let ServingEngine { executor, weights, active, .. } = &mut *self;
-                for b in 0..count {
-                    let s = &mut active[start + b];
+                for &(row, i) in &members {
+                    let s = &mut active[i];
                     if s.pos >= max_seq {
                         return Err(Error::Graph(format!(
                             "KV cache capacity {max_seq} exhausted"
@@ -716,13 +992,13 @@ impl<'r> ServingEngine<'r> {
                     let (token, wp) = s.take_input().ok_or_else(|| {
                         Error::Graph(format!("session {} has no input token", s.id))
                     })?;
-                    was_prompt[b] = wp;
+                    was_prompt[row] = wp;
                     let emb = hostops::embed(&weights.embedding, token)?;
-                    xbuf[b * hidden..(b + 1) * hidden].copy_from_slice(emb.as_f32()?);
-                    pos_i[b] = s.pos as i32;
-                    pos_ip1[b] = s.pos as i32 + 1;
-                    pos_f[b] = s.pos as f32;
-                    mask[b] = 1;
+                    xbuf[row * hidden..(row + 1) * hidden].copy_from_slice(emb.as_f32()?);
+                    pos_i[row] = s.pos as i32;
+                    pos_ip1[row] = s.pos as i32 + 1;
+                    pos_f[row] = s.pos as f32;
+                    mask[row] = 1;
                 }
             }
             let mut inputs: HashMap<String, Tensor> = HashMap::with_capacity(7);
@@ -744,17 +1020,12 @@ impl<'r> ServingEngine<'r> {
             let logits_buf = {
                 let ServingEngine { executor, batched_graph, active, .. } = &mut *self;
                 let graph = batched_graph.as_ref().expect("batched path checked");
-                let table: Vec<Option<&DeviceKvCache>> = (0..width)
-                    .map(|b| {
-                        if b < count {
-                            active[start + b].kv.as_device()
-                        } else {
-                            None // padding set, masked out
-                        }
-                    })
-                    .collect();
+                let mut table: Vec<Option<&DeviceKvCache>> = vec![None; width];
+                for &(row, i) in &members {
+                    table[row] = active[i].kv.as_device();
+                }
                 let (_outs, logits_buf, _delta) =
-                    executor.run_batched(graph, &inputs, ring, &table)?;
+                    executor.run_batched(graph, &inputs, chunk_no, &table)?;
                 logits_buf
             };
 
@@ -766,53 +1037,68 @@ impl<'r> ServingEngine<'r> {
             let disp_d = self.executor.dispatch_count - d0;
             let upload_d = self.executor.device.stats.bytes_written - w0;
             let encode_d = self.executor.device.clock.now_ns() - c0;
-            let k = count as u64;
-            for b in 0..count {
-                let s = &mut self.active[start + b];
-                for i in 0..8 {
-                    s.metrics.phase_virtual_ns[i] += share(tl[i] - ph0[i], k, b);
+            let now_enc = self.executor.device.clock.now_ns();
+            let k = members.len() as u64;
+            for (j, &(row, i)) in members.iter().enumerate() {
+                let s = &mut self.active[i];
+                for p in 0..8 {
+                    s.metrics.phase_virtual_ns[p] += share(tl[p] - ph0[p], k, j);
                 }
-                s.metrics.kernel_virtual_ns += share(kernel_d, k, b);
-                s.metrics.framework_virtual_ns += share(fw_d, k, b);
-                let dshare = share(disp_d, k, b);
+                s.metrics.kernel_virtual_ns += share(kernel_d, k, j);
+                s.metrics.framework_virtual_ns += share(fw_d, k, j);
+                let dshare = share(disp_d, k, j);
                 s.metrics.dispatches += dshare;
-                s.metrics.upload_bytes += share(upload_d, k, b);
-                s.metrics.encode_virtual_ns += share(encode_d, k, b);
+                s.metrics.upload_bytes += share(upload_d, k, j);
+                s.metrics.encode_virtual_ns += share(encode_d, k, j);
                 s.metrics.steps += 1;
-                if was_prompt[b] {
+                if was_prompt[row] {
                     s.metrics.prefill_steps += 1;
                     s.metrics.prefill_dispatches += dshare;
+                    if !s.in_prefill() {
+                        s.metrics.prefill_end_ns = now_enc;
+                    }
                 }
                 // The on-device scatter already appended this step's K/V.
                 s.pos += 1;
             }
 
-            chunk_bufs.push(logits_buf.ok_or_else(|| {
-                Error::Graph("batched plan produced no logits buffer".into())
-            })?);
-            chunk_bounds.push((start, count));
-            start += count;
-            ring += 1;
+            chunks.push(EncodedChunk {
+                buf: logits_buf.ok_or_else(|| {
+                    Error::Graph("batched plan produced no logits buffer".into())
+                })?,
+                owners: members.iter().map(|&(row, i)| (i, row)).collect(),
+            });
         }
+        Ok(chunks)
+    }
 
-        // ---- ONE synchronizing readback for the WHOLE round (all chunks'
-        // ring buffers behind a single map), then per-slot demux ----
+    /// ONE synchronizing readback for the WHOLE round: every encoded
+    /// chunk's logits buffer behind a single `map_read_many`, the shared
+    /// sync cost split evenly across the round's readback participants
+    /// (remainder to the first), then per-row argmax demux and token
+    /// notes. A round with nothing to read back (only intermediate
+    /// prefill chunks) skips synchronization entirely.
+    fn finish_round(&mut self, chunks: Vec<EncodedChunk>) -> Result<()> {
+        if chunks.is_empty() {
+            return Ok(());
+        }
+        let bufs: Vec<BufferId> = chunks.iter().map(|c| c.buf).collect();
         let sy0 = self.executor.device.timeline.sync_virtual_ns;
-        let all_bytes = self.executor.device.map_read_many(&chunk_bufs)?;
+        let all_bytes = self.executor.device.map_read_many(&bufs)?;
         let sync_d = self.executor.device.timeline.sync_virtual_ns - sy0;
-        for &buf in &chunk_bufs {
+        for &buf in &bufs {
             self.executor.release_logits(buf)?;
         }
         let now = self.executor.device.clock.now_ns();
-        let row = vocab * 4;
-        let k_all = n as u64;
-        let mut sess_j = 0usize;
-        for (&(cstart, ccount), bytes) in chunk_bounds.iter().zip(&all_bytes) {
-            for b in 0..ccount {
-                let s = &mut self.active[cstart + b];
-                s.metrics.sync_virtual_ns += share(sync_d, k_all, sess_j);
-                sess_j += 1;
-                let next = argmax_bytes(&bytes[b * row..(b + 1) * row]);
+        let row_bytes = self.dims.vocab * 4;
+        let k_all: u64 = chunks.iter().map(|c| c.owners.len() as u64).sum();
+        let mut j = 0usize;
+        for (c, bytes) in chunks.iter().zip(&all_bytes) {
+            for &(i, row) in &c.owners {
+                let s = &mut self.active[i];
+                s.metrics.sync_virtual_ns += share(sync_d, k_all, j);
+                j += 1;
+                let next = argmax_bytes(&bytes[row * row_bytes..(row + 1) * row_bytes]);
                 s.note_token(next, now);
             }
         }
@@ -932,6 +1218,13 @@ impl<'r> ServingEngine<'r> {
                 // into the engine-level build attribution.
                 report.plan_build_virtual_ns += br.inner().build_virtual_ns;
                 report.plan_build_real_ns += br.inner().build_real_ns;
+            }
+        }
+        if self.prefill_graph.is_some() {
+            report.prefill_chunk = self.prefill_chunk;
+            if let Some(pr) = self.executor.prefill_runner() {
+                report.plan_build_virtual_ns += pr.inner().build_virtual_ns;
+                report.plan_build_real_ns += pr.inner().build_real_ns;
             }
         }
         let ps = self.executor.pool.stats();

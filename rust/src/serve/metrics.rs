@@ -15,12 +15,26 @@ pub struct ServeReport {
     pub agg_tok_per_s: f64,
     pub mean_ttft_ms: f64,
     pub max_ttft_ms: f64,
+    /// Mean per-session prompt-ingestion latency (admission to the encode
+    /// consuming the final prompt token) — the TTFT component chunked
+    /// prefill collapses (table S2's `(prefill ms)` row).
+    pub mean_prefill_ms: f64,
+    /// Mean per-session first-decode latency (end of prompt ingestion to
+    /// the first generated token's selection — the readback/sync side of
+    /// TTFT; table S2's `(first decode ms)` row).
+    pub mean_first_decode_ms: f64,
     /// Mean of per-session generation throughput (tokens / generation ns).
     pub mean_session_tok_per_s: f64,
     /// Total dispatches across sessions.
     pub dispatches: u64,
-    /// Total decode steps across sessions (prefill + generation).
+    /// Total decode steps across sessions (prefill + generation). Chunked
+    /// prefill counts one step per prompt TOKEN (a C-token chunk is C
+    /// steps), so per-step rates stay comparable across ingestion modes.
     pub steps: u64,
+    /// Prompt tokens ingested across sessions.
+    pub prefill_steps: u64,
+    /// Dispatches attributed to prompt ingestion across sessions.
+    pub prefill_dispatches: u64,
     /// Dispatches per decode step (uniform across sessions of one config).
     pub dispatches_per_step: u64,
     /// Aggregate per-phase dispatch CPU cost (`DISPATCH_PHASES` order).
@@ -46,6 +60,10 @@ pub struct ServeReport {
     /// >= 2 = rounds with that many active sessions replayed the batched
     /// plan, one dispatch per layer op per chunk).
     pub batch_width: usize,
+    /// Chunked-prefill size the run served with (0 = token-by-token
+    /// prompt ingestion; >= 2 = prompts replayed the seq-dim prefill plan
+    /// in chunks of that many tokens).
+    pub prefill_chunk: usize,
     /// True when the run replayed a compiled plan instead of eager-
     /// interpreting the graph (the [`ServeReport::exec_mode`] header
     /// derives from this).
@@ -73,6 +91,10 @@ impl ServeReport {
         let mut upload_bytes = 0u64;
         let mut dispatches = 0u64;
         let mut steps = 0u64;
+        let mut prefill_steps = 0u64;
+        let mut prefill_dispatches = 0u64;
+        let mut prefill_ms_sum = 0f64;
+        let mut first_decode_ms_sum = 0f64;
         let mut ttft_ms = Vec::with_capacity(n);
         let mut tps_sum = 0f64;
         for s in sessions {
@@ -86,6 +108,10 @@ impl ServeReport {
             upload_bytes += s.metrics.upload_bytes;
             dispatches += s.metrics.dispatches;
             steps += s.metrics.steps;
+            prefill_steps += s.metrics.prefill_steps;
+            prefill_dispatches += s.metrics.prefill_dispatches;
+            prefill_ms_sum += s.metrics.prefill_ns() as f64 / 1e6;
+            first_decode_ms_sum += s.metrics.first_decode_ns() as f64 / 1e6;
             ttft_ms.push(s.metrics.ttft_ns() as f64 / 1e6);
             let gen_ns = s.metrics.generation_ns().max(1);
             tps_sum += s.tokens.len() as f64 / (gen_ns as f64 / 1e9);
@@ -102,9 +128,13 @@ impl ServeReport {
                 0.0
             },
             max_ttft_ms: ttft_ms.iter().cloned().fold(0.0, f64::max),
+            mean_prefill_ms: if n > 0 { prefill_ms_sum / n as f64 } else { 0.0 },
+            mean_first_decode_ms: if n > 0 { first_decode_ms_sum / n as f64 } else { 0.0 },
             mean_session_tok_per_s: if n > 0 { tps_sum / n as f64 } else { 0.0 },
             dispatches,
             steps,
+            prefill_steps,
+            prefill_dispatches,
             dispatches_per_step: if steps > 0 { dispatches / steps } else { 0 },
             phase_virtual_ns: phase,
             framework_virtual_ns: framework,
@@ -116,6 +146,7 @@ impl ServeReport {
             ttft_ms,
             rounds: 0,
             batch_width: 0,
+            prefill_chunk: 0,
             planned: false,
             plan_build_virtual_ns: 0,
             plan_build_real_ns: 0,
@@ -151,13 +182,24 @@ impl ServeReport {
     }
 
     /// Self-describing mode label for report headers: exec mode plus the
-    /// batched slot width when round batching was active.
+    /// batched slot width and prefill chunk when those paths were active.
     pub fn mode_label(&self) -> String {
+        let mut label = self.exec_mode().to_string();
         if self.batch_width >= 2 {
-            format!("{}+batched(w={})", self.exec_mode(), self.batch_width)
-        } else {
-            self.exec_mode().to_string()
+            label.push_str(&format!("+batched(w={})", self.batch_width));
         }
+        if self.prefill_chunk >= 2 {
+            label.push_str(&format!("+prefill(c={})", self.prefill_chunk));
+        }
+        label
+    }
+
+    /// Prefill dispatches per prompt token — the chunked-prefill
+    /// headline (table S1's `prefill disp/tok` column): token-by-token
+    /// ingestion pays the full per-step dispatch count per prompt token;
+    /// a C-token chunk pays ~1/C of it.
+    pub fn prefill_dispatches_per_prompt_token(&self) -> f64 {
+        self.prefill_dispatches as f64 / self.prefill_steps.max(1) as f64
     }
 
     /// WebGPU dispatches per scheduler round — the batched-decode headline:
@@ -189,6 +231,17 @@ mod tests {
         assert_eq!(r.mode_label(), "planned");
         r.batch_width = 4;
         assert_eq!(r.mode_label(), "planned+batched(w=4)");
+        r.prefill_chunk = 16;
+        assert_eq!(r.mode_label(), "planned+batched(w=4)+prefill(c=16)");
+        r.batch_width = 0;
+        assert_eq!(r.mode_label(), "planned+prefill(c=16)");
+        r.prefill_chunk = 0;
+        r.batch_width = 4;
+        // Prefill dispatch-rate helper: 120 dispatches over 32 prompt
+        // tokens -> 3.75 per token (vs ~59 token-by-token).
+        r.prefill_dispatches = 120;
+        r.prefill_steps = 32;
+        assert!((r.prefill_dispatches_per_prompt_token() - 3.75).abs() < 1e-9);
         r.dispatches = 236;
         r.rounds = 4;
         assert!((r.dispatches_per_round() - 59.0).abs() < 1e-9);

@@ -8,11 +8,16 @@
 //!
 //! The scheduler is **continuous batching** (the WebLLM shape). In the
 //! planned serving default, rounds with >= 2 active sessions replay the
-//! BATCHED plan — sessions pack into batch slots and every layer op is
-//! one dispatch per chunk of `batch_width` sessions (the Appendix F
-//! amortization; see `ARCHITECTURE.md`'s batched-round lifecycle).
-//! `--no-batch` (or eager mode, or a single active session) keeps the
-//! batch=1 granularity below:
+//! BATCHED plan — sessions occupy sticky decode slots and every layer op
+//! is one dispatch per chunk of `batch_width` sessions (the Appendix F
+//! amortization; see `ARCHITECTURE.md`'s batched-round lifecycle) — and
+//! sessions still ingesting their prompt replay the chunked PREFILL plan
+//! instead: one dispatch per layer op per `prefill_chunk` prompt tokens,
+//! interleaved with the decode chunks in the same round, with only FINAL
+//! prompt chunks joining the round's coalesced readback (see
+//! `ARCHITECTURE.md`'s chunked-prefill lifecycle). `--no-batch` /
+//! `--prefill-chunk 0` (or eager mode, or a single active session) keep
+//! the batch=1 / token-by-token granularity below:
 //!
 //! 1. **Admit** — requests queue FIFO; up to `max_concurrent` become
 //!    active. Exceeding the cap queues, never errors. Planned-mode

@@ -85,6 +85,12 @@ pub struct SessionMetrics {
     /// Clock when the first generated token was selected (the paper's
     /// TTFT measurement point: prefill + first decode step + sync).
     pub first_token_ns: u64,
+    /// Clock when the encode that consumed the FINAL prompt token
+    /// finished (chunked prefill: the final chunk's replay; token-by-token:
+    /// the last prompt step's encode). TTFT splits at this point into
+    /// prompt ingestion ([`SessionMetrics::prefill_ns`]) and the first
+    /// token's readback/sync ([`SessionMetrics::first_decode_ns`]).
+    pub prefill_end_ns: u64,
     /// Clock when the last requested token was produced.
     pub finished_ns: u64,
     /// Clock when the most recent token was produced (per-token deltas).
@@ -128,6 +134,18 @@ impl SessionMetrics {
         self.first_token_ns.saturating_sub(self.enqueued_ns)
     }
 
+    /// Prompt-ingestion latency: admission to the encode that consumed
+    /// the final prompt token (the part chunked prefill collapses).
+    pub fn prefill_ns(&self) -> u64 {
+        self.prefill_end_ns.saturating_sub(self.admitted_ns)
+    }
+
+    /// First-decode latency: end of prompt ingestion to the first
+    /// generated token's selection (the readback/sync side of TTFT).
+    pub fn first_decode_ns(&self) -> u64 {
+        self.first_token_ns.saturating_sub(self.prefill_end_ns)
+    }
+
     /// Total dispatch-phase CPU cost.
     pub fn phase_total_ns(&self) -> u64 {
         self.phase_virtual_ns.iter().sum()
@@ -151,6 +169,11 @@ pub struct SessionState {
     pub kv: KvCache,
     /// Current decode position (rows of the cache that are valid).
     pub pos: usize,
+    /// Sticky decode-slot index (batched serving): assigned at admission,
+    /// freed only on retire, so ragged retirement never reshuffles the
+    /// surviving sessions' rows in the batched cache-set table. `None`
+    /// for detached sessions (single-request `Engine` driving).
+    pub slot: Option<usize>,
     /// Prompt tokens consumed so far.
     fed: usize,
     /// Most recent output token (the next step's input once the prompt is
@@ -183,6 +206,7 @@ impl SessionState {
             // read.
             kv: KvCache::Host(Vec::new()),
             pos: 0,
+            slot: None,
             fed: 0,
             last_token: None,
             tokens: Vec::new(),
@@ -234,6 +258,25 @@ impl SessionState {
     /// True while this step's input still comes from the prompt.
     pub fn in_prefill(&self) -> bool {
         self.fed < self.prompt.len()
+    }
+
+    /// Unconsumed prompt tokens.
+    pub fn remaining_prompt(&self) -> usize {
+        self.prompt.len() - self.fed
+    }
+
+    /// The next up-to-`max` unconsumed prompt token indices (empty once
+    /// the prompt is exhausted). Read-only: pair with
+    /// [`SessionState::consume_prompt`] once the chunk's encode succeeds.
+    pub fn peek_prompt_chunk(&self, max: usize) -> std::ops::Range<usize> {
+        let take = max.min(self.remaining_prompt());
+        self.fed..self.fed + take
+    }
+
+    /// Mark `n` prompt tokens consumed — the chunked-prefill counterpart
+    /// of [`SessionState::take_input`]'s one-token advance.
+    pub fn consume_prompt(&mut self, n: usize) {
+        self.fed = (self.fed + n).min(self.prompt.len());
     }
 
     pub fn finished(&self) -> bool {
@@ -290,6 +333,30 @@ mod tests {
         assert!(s.finished());
         assert_eq!(s.metrics.finished_ns, 450);
         assert_eq!(s.metrics.per_token_ns, vec![200, 150]);
+    }
+
+    #[test]
+    fn prompt_chunks_feed_then_note_first_token() {
+        let mut s = session(vec![10, 11, 12, 13, 14], 2);
+        assert_eq!(s.remaining_prompt(), 5);
+        let r = s.peek_prompt_chunk(4);
+        assert_eq!(r, 0..4);
+        s.consume_prompt(r.len());
+        assert!(s.in_prefill(), "one prompt token left");
+        // Ragged tail: only 1 token remains however large the chunk.
+        let r = s.peek_prompt_chunk(4);
+        assert_eq!(r, 4..5);
+        s.consume_prompt(r.len());
+        assert!(!s.in_prefill());
+        // The final chunk's last-row logits select the first generated
+        // token — note_token now records it.
+        s.note_token(42, 900);
+        assert_eq!(s.tokens, vec![42]);
+        assert_eq!(s.metrics.first_token_ns, 900);
+        // Prefill/first-decode split helpers.
+        s.metrics.prefill_end_ns = 700;
+        assert_eq!(s.metrics.prefill_ns(), 600); // admitted at 100
+        assert_eq!(s.metrics.first_decode_ns(), 200);
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
             "speedup",
             "mean TTFT (ms)",
             "disp/round",
+            "prefill disp/tok",
             "framework (us/tok)",
             "dispatch (us/tok)",
             "sync (us/tok)",
@@ -50,6 +51,7 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
             format!("{:.3}x", r.agg_tok_per_s / base),
             f2(r.mean_ttft_ms),
             f1(r.dispatches_per_round()),
+            f2(r.prefill_dispatches_per_prompt_token()),
             f1(r.us_per_token(r.framework_virtual_ns)),
             f1(r.us_per_token(r.phase_total_ns())),
             f1(r.us_per_token(r.sync_virtual_ns)),
@@ -80,6 +82,12 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
          only the token embedding + position uniforms; eager re-uploads \
          activations and both caches every step.",
     );
+    t.note(
+        "prefill disp/tok = dispatches per PROMPT token: token-by-token \
+         ingestion pays the full per-step dispatch count per prompt token; \
+         chunked prefill (the planned serving default) pays ~1/C of it, \
+         the prompt-phase twin of the batched-decode amortization.",
+    );
     t
 }
 
@@ -105,16 +113,29 @@ pub fn phase_attribution_table(rows: &[(usize, ServeReport)]) -> TableDoc {
     }
     let mut sync_cells = vec!["(sync)".to_string()];
     let mut fw_cells = vec!["(framework)".to_string()];
+    let mut pf_cells = vec!["(prefill ms)".to_string()];
+    let mut fd_cells = vec!["(first decode ms)".to_string()];
     for (_, r) in rows {
         sync_cells.push(f2(r.us_per_token(r.sync_virtual_ns)));
         fw_cells.push(f2(r.us_per_token(r.framework_virtual_ns)));
+        pf_cells.push(f2(r.mean_prefill_ms));
+        fd_cells.push(f2(r.mean_first_decode_ms));
     }
     t.row(sync_cells);
     t.row(fw_cells);
+    t.row(pf_cells);
+    t.row(fd_cells);
     t.note(
         "Phase costs per token are flat in N (per-dispatch, Table 20 \
          proportions); the (sync) row falls ~1/N as the coalesced readback \
          spreads its fixed cost across the round.",
+    );
+    t.note(
+        "TTFT attribution split: (prefill ms) is mean per-session prompt \
+         ingestion (admission to the final prompt token's encode — the \
+         part chunked prefill collapses ~C x); (first decode ms) is the \
+         first generated token's readback/sync tail. Both are absolute \
+         milliseconds, not per-token rates.",
     );
     t
 }
@@ -159,9 +180,22 @@ mod tests {
     fn phase_table_has_all_phases() {
         let rows = vec![(1, fake_report(1, 4))];
         let t = phase_attribution_table(&rows);
-        assert_eq!(t.rows.len(), 8 + 2); // 8 phases + sync + framework
+        // 8 phases + sync + framework + prefill/first-decode TTFT split
+        assert_eq!(t.rows.len(), 8 + 4);
         let md = t.to_markdown();
         assert!(md.contains("submit"));
         assert!(md.contains("(sync)"));
+        assert!(md.contains("(prefill ms)"));
+        assert!(md.contains("(first decode ms)"));
+    }
+
+    #[test]
+    fn scaling_table_has_prefill_dispatch_column() {
+        let mut r = fake_report(1, 4);
+        r.prefill_steps = 16;
+        r.prefill_dispatches = 60;
+        let md = scaling_table(&[(1, r)]).to_markdown();
+        assert!(md.contains("prefill disp/tok"));
+        assert!(md.contains("3.75"), "{md}");
     }
 }

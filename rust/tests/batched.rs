@@ -20,6 +20,10 @@ fn cfg(fusion: FusionConfig, batch_width: usize) -> EngineConfig {
         fusion,
         exec: ExecMode::Planned,
         batch_width,
+        // This suite pins BATCHED-DECODE behavior (one token per session
+        // per round); chunked prompt ingestion has its own equivalence
+        // suite in `tests/prefill.rs`.
+        prefill_chunk: 0,
         ..EngineConfig::tiny_fused()
     }
 }
@@ -381,6 +385,43 @@ fn mid_run_admission_joins_batched_rounds() {
             .collect()
     };
     assert_eq!(run(0), run(2), "admission churn diverged under batching");
+}
+
+/// Sticky slot assignment: sessions pin their decode slot at admission
+/// and free it only on retire, so ragged retirement never reshuffles the
+/// surviving sessions' rows — and a replacement admission (handed the
+/// retiree's recycled buffer set by the pool's LIFO free lists) lands in
+/// the retiree's slot, keeping the cache-set-table bind-group key
+/// IDENTICAL across churn: exactly ONE table registers over the whole
+/// churny run (pre-sticky, the admission-order repacking registered a new
+/// table whenever retirement reshuffled the survivors).
+#[test]
+fn sticky_slots_keep_cache_set_table_stable_across_churn() {
+    let reg = registry();
+    let mut se = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: cfg(FusionConfig::fused(), 4), max_concurrent: 3 },
+    )
+    .unwrap();
+    se.reseed(SEED);
+    let ida = se.submit(&[65], 8).unwrap(); // slot 0, rounds 1..=8
+    let idb = se.submit(&[70], 3).unwrap(); // slot 1, retires after round 3
+    let idc = se.submit(&[75], 8).unwrap(); // slot 2, rounds 1..=8
+    let idd = se.submit(&[80], 6).unwrap(); // takes B's slot 1 + buffers
+    se.run_to_completion().unwrap();
+    let runner = se.executor.batched_runner().expect("batched plan enabled");
+    assert_eq!(
+        runner.registered_tables(),
+        1,
+        "sticky slots + recycled sets must keep ONE table key across churn"
+    );
+    let done = se.drain_finished();
+    assert_eq!(done.len(), 4);
+    let slot_of = |id: u64| done.iter().find(|s| s.id == id).unwrap().slot;
+    assert_eq!(slot_of(ida), Some(0));
+    assert_eq!(slot_of(idb), Some(1));
+    assert_eq!(slot_of(idc), Some(2));
+    assert_eq!(slot_of(idd), Some(1), "replacement admission reuses the freed slot");
 }
 
 /// SessionState is untouched by batching from the caller's view: steps

@@ -48,7 +48,14 @@ fn resident_caches_shrink_upload_bytes_at_least_10x() {
     let prompt = ByteTokenizer::new(512).paper_prompt();
     let tokens = 6;
     let run = |exec: ExecMode| {
-        let mut se = serving(&reg, exec, 1);
+        // Token-by-token prompt ingestion: this test pins the per-STEP
+        // upload accounting against the decode plan's static StepInput
+        // bytes, which chunked prefill (its own suite: tests/prefill.rs)
+        // deliberately changes during the prompt phase.
+        let cfg = EngineConfig { exec, prefill_chunk: 0, ..EngineConfig::tiny_fused() };
+        let mut se = ServingEngine::new(&reg, ServeConfig { engine: cfg, max_concurrent: 1 })
+            .expect("serving engine");
+        se.reseed(SEED);
         se.submit(&prompt, tokens).unwrap();
         let report = se.run_to_completion().unwrap();
         (report, se)
