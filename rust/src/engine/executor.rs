@@ -28,7 +28,7 @@ use crate::fx::graph::FxGraph;
 use crate::fx::node::{HostOp, OpKind, ValueId};
 use crate::plan::{
     BatchedRunner, CacheArena, DeviceKvCache, ExecutionPlan, PipelinePool, PlanConfig,
-    PlanRunner, Planner, PrefillRunner, ReplayDelta,
+    PlanRunner, Planner, PrefillRunner, ReplayDelta, UnifiedRunner,
 };
 use crate::runtime::hostops;
 use crate::runtime::registry::Registry;
@@ -83,6 +83,13 @@ pub struct GraphExecutor<'r> {
     /// persistent layout, checked at enable time); the serving engine
     /// replays it once per prompt chunk per session.
     prefill: Option<PrefillRunner>,
+    /// Unified-round state: present after
+    /// [`GraphExecutor::enable_unified_plan`]. Binds the SAME slot-major
+    /// cache-set table as the batched plan (identical persistent layout,
+    /// checked at enable time); the serving engine replays it once per
+    /// MIXED prefill/decode round — one dispatch per layer op covers
+    /// prompts and generations together.
+    unified: Option<UnifiedRunner>,
     /// Session KV-cache allocator (planned mode with persistent values):
     /// allocates each session's device-resident cache set from `pool`.
     kv_arena: Option<CacheArena>,
@@ -113,6 +120,7 @@ impl<'r> GraphExecutor<'r> {
             planned: None,
             batched: None,
             prefill: None,
+            unified: None,
             kv_arena: None,
             framework_ns_per_op,
             dispatch_count: 0,
@@ -251,6 +259,84 @@ impl<'r> GraphExecutor<'r> {
 
     pub fn prefill_runner(&self) -> Option<&PrefillRunner> {
         self.prefill.as_ref()
+    }
+
+    /// Compile the UNIFIED round graph into a plan and materialize its
+    /// [`UnifiedRunner`] (cache-set-table binding, padding set, `[W,vocab]`
+    /// logits ring). Requires the batched plan first: both bind the SAME
+    /// slot-major cache-set table, so their persistent layouts must match
+    /// exactly — checked here so a drifted builder fails at engine
+    /// construction, not mid-round. Weight inputs bind the buffers already
+    /// pinned for the primary graph (matched by name) — no duplicate
+    /// weight uploads.
+    pub fn enable_unified_plan(
+        &mut self,
+        graph: &FxGraph,
+        cfg: PlanConfig,
+        width: usize,
+        chunk: usize,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let v0 = self.device.clock.now_ns();
+        let pinned_map = self.pinned_for(graph);
+        let plan = {
+            let GraphExecutor { device, registry, pipelines, .. } = &mut *self;
+            Planner::new(*registry).compile(device, pipelines, graph, &pinned_map, &cfg)?
+        };
+        let batched = self.batched.as_ref().ok_or_else(|| {
+            Error::Graph("enable_unified_plan requires the batched plan to exist first".into())
+        })?;
+        if plan.persistent != batched.plan().persistent {
+            return Err(Error::Graph(
+                "unified plan's persistent cache-set table differs from the batched \
+                 plan's (session cache sets must plug into both)"
+                    .into(),
+            ));
+        }
+        let mut runner = UnifiedRunner::materialize(&mut self.device, plan, width, chunk)?;
+        runner.inner_mut().build_virtual_ns = self.device.clock.now_ns() - v0;
+        runner.inner_mut().build_real_ns = t0.elapsed().as_nanos() as u64;
+        self.unified = Some(runner);
+        Ok(())
+    }
+
+    pub fn unified_runner(&self) -> Option<&UnifiedRunner> {
+        self.unified.as_ref()
+    }
+
+    /// Replay the unified plan once over a cache-set table: one dispatch
+    /// per layer op covers every active slot's prefill chunk or decode
+    /// step. `None` slots bind the padding set and must be masked via the
+    /// `slot_mask` input. `ring_idx` selects the chunk-of-slots'
+    /// logits-ring buffer so every chunk of a round survives until the
+    /// round's single coalesced readback. Fails loudly if `graph` is not
+    /// the one the unified plan was compiled from.
+    pub fn run_unified(
+        &mut self,
+        graph: &FxGraph,
+        inputs: &HashMap<String, Tensor>,
+        ring_idx: usize,
+        table: &[Option<&DeviceKvCache>],
+    ) -> Result<(HashMap<String, Tensor>, Option<BufferId>, ReplayDelta)> {
+        let GraphExecutor {
+            device, registry, unified, dispatch_count, framework_virtual_ns, ..
+        } = self;
+        let runner = unified.as_mut().ok_or_else(|| {
+            Error::Graph("no unified plan enabled: call enable_unified_plan first".into())
+        })?;
+        let fp = crate::plan::GraphFingerprint::of(graph);
+        if fp != runner.plan().fingerprint {
+            return Err(Error::Graph(format!(
+                "unified executor got a different graph ({fp:?}) than the compiled \
+                 plan ({:?})",
+                runner.plan().fingerprint
+            )));
+        }
+        let (outs, logits_buf, delta) =
+            runner.replay(device, *registry, inputs, ring_idx, table)?;
+        *dispatch_count += delta.dispatches;
+        *framework_virtual_ns += delta.framework_ns;
+        Ok((outs, logits_buf, delta))
     }
 
     /// Replay the prefill plan once over a session's resident cache set:
@@ -628,6 +714,11 @@ impl<'r> GraphExecutor<'r> {
             }
         }
         if let Some(runner) = &self.prefill {
+            if runner.owns_buffer(buf) {
+                return Ok(());
+            }
+        }
+        if let Some(runner) = &self.unified {
             if runner.owns_buffer(buf) {
                 return Ok(());
             }

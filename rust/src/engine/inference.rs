@@ -105,6 +105,15 @@ pub struct EngineConfig {
     /// other values fail at engine construction. Ignored in eager mode
     /// and by the device-argmax finish variant.
     pub prefill_chunk: usize,
+    /// Unified continuous-batching rounds (planned serving only, default
+    /// on): when both `batch_width >= 2` and `prefill_chunk >= 2` are in
+    /// effect, EVERY serving round replays the unified `[W*C, H]`
+    /// seq-x-batch graph — prefill chunks and decode steps share one
+    /// dispatch per layer op, so prompts arriving mid-run no longer cost
+    /// a separate prefill round. `false` falls back to the PR-4/PR-5
+    /// split scheduling (prefill rounds, then batched decode rounds) —
+    /// the comparison twin `wdb serve-bench --no-unified` measures.
+    pub unified: bool,
     /// Override the manifest dims (executable workload variants — e.g.
     /// tiny-kernel graphs at different layer counts).
     pub dims_override: Option<crate::fx::builder::GraphDims>,
@@ -126,6 +135,7 @@ impl EngineConfig {
             pool_cap_bytes: None,
             batch_width: DEFAULT_BATCH_WIDTH,
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
+            unified: true,
             dims_override: None,
         }
     }

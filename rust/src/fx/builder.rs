@@ -1128,11 +1128,417 @@ pub fn build_prefill_graph(dims: &GraphDims, fusion: FusionConfig, chunk: usize)
     b.g
 }
 
+struct UB<'a> {
+    g: FxGraph,
+    d: &'a GraphDims,
+    w: usize,
+    c: usize,
+}
+
+impl<'a> UB<'a> {
+    /// Unified RMSNorm over `[W*C, H]`: row-wise identical to the
+    /// single-token kernels (fused or the 6-dispatch decomposition).
+    fn rmsnorm(&mut self, tag: &str, x: ValueId, w: ValueId, fused: bool) -> ValueId {
+        let (h, bw, c) = (self.d.hidden, self.w, self.c);
+        if fused {
+            return self.g.kernel(
+                &format!("{tag}.rmsnorm"),
+                &format!("rmsnorm_b{bw}c{c}_{h}"),
+                Category::Other,
+                vec![x, w],
+            );
+        }
+        let x2 = self.g.kernel(
+            &format!("{tag}.pow"),
+            &format!("rms_pow_b{bw}c{c}_{h}"),
+            Category::RmsComponent,
+            vec![x],
+        );
+        let m = self.g.kernel(
+            &format!("{tag}.mean"),
+            &format!("rms_mean_b{bw}c{c}_{h}"),
+            Category::RmsComponent,
+            vec![x2],
+        );
+        let me = self.g.kernel(
+            &format!("{tag}.add_eps"),
+            &format!("rms_add_eps_b{bw}c{c}"),
+            Category::Add,
+            vec![m],
+        );
+        let r = self.g.kernel(
+            &format!("{tag}.rsqrt"),
+            &format!("rms_rsqrt_b{bw}c{c}"),
+            Category::RmsComponent,
+            vec![me],
+        );
+        let xn = self.g.kernel(
+            &format!("{tag}.mul_x"),
+            &format!("rms_mul_x_b{bw}c{c}_{h}"),
+            Category::Multiply,
+            vec![x, r],
+        );
+        self.g.kernel(
+            &format!("{tag}.mul_w"),
+            &format!("rms_mul_w_b{bw}c{c}_{h}"),
+            Category::Multiply,
+            vec![xn, w],
+        )
+    }
+
+    /// Batched RMSNorm over `[W, H]` (the per-slot last rows): exactly the
+    /// batched decode builder's kernels, so the unified tail shares the
+    /// batched plan's final-norm + lm-head contract.
+    fn rmsnorm_slots(&mut self, tag: &str, x: ValueId, w: ValueId, fused: bool) -> ValueId {
+        let (h, bw) = (self.d.hidden, self.w);
+        if fused {
+            return self.g.kernel(
+                &format!("{tag}.rmsnorm"),
+                &format!("rmsnorm_b{bw}_{h}"),
+                Category::Other,
+                vec![x, w],
+            );
+        }
+        let x2 = self.g.kernel(
+            &format!("{tag}.pow"),
+            &format!("rms_pow_b{bw}_{h}"),
+            Category::RmsComponent,
+            vec![x],
+        );
+        let m = self.g.kernel(
+            &format!("{tag}.mean"),
+            &format!("rms_mean_b{bw}_{h}"),
+            Category::RmsComponent,
+            vec![x2],
+        );
+        let me = self.g.kernel(
+            &format!("{tag}.add_eps"),
+            &format!("rms_add_eps_b{bw}"),
+            Category::Add,
+            vec![m],
+        );
+        let r = self.g.kernel(
+            &format!("{tag}.rsqrt"),
+            &format!("rms_rsqrt_b{bw}"),
+            Category::RmsComponent,
+            vec![me],
+        );
+        let xn = self.g.kernel(
+            &format!("{tag}.mul_x"),
+            &format!("rms_mul_x_b{bw}_{h}"),
+            Category::Multiply,
+            vec![x, r],
+        );
+        self.g.kernel(
+            &format!("{tag}.mul_w"),
+            &format!("rms_mul_w_b{bw}_{h}"),
+            Category::Multiply,
+            vec![xn, w],
+        )
+    }
+}
+
+/// Build the UNIFIED round graph at slot width `width` and sequence chunk
+/// `chunk`: the seq x batch merge of [`build_batched_decode_graph`] and
+/// [`build_prefill_graph`].
+///
+/// One serving round with up to `width` active sessions — any mix of
+/// prompt-ingesting (prefill) and generating (decode) sessions — replays
+/// this graph ONCE: every layer op is a single dispatch over
+/// `[W*C, ...]`-shaped values. Slot `j` owns rows `j*C .. (j+1)*C` and
+/// carries `valid_len[j]` live tokens starting at cache row `pos_base[j]`;
+/// a decode slot is simply a `valid_len = 1` prefill chunk, and a masked
+/// padding slot is `valid_len = 0`. That is continuous batching in the
+/// WebLLM sense: prefill chunks and decode steps share one dispatch
+/// stream instead of one batched-decode replay per chunk PLUS one prefill
+/// replay per prefill-phase session.
+///
+/// Step inputs: `x` (`[W*C, H]` packed token embeddings), `pos_f`
+/// (`[W*C]` f32 per-row rotary angles), and the per-SLOT i32 uniforms
+/// `pos_base` / `valid_len` / `slot_mask` / `slot_idx` (`[W]` each;
+/// `slot_idx[j]` is the cache-set index slot `j` gathers/scatters —
+/// the serving engine passes the identity mapping), plus the shared
+/// `inv_freq`.
+///
+/// Per-slot KV cache sets are declared SLOT-major exactly like the
+/// batched decode builder (`s{j}.l{l}.{k,v}_cache`), so the unified plan's
+/// persistent layout is the SAME cache-set table and sessions plug into
+/// slots unchanged. `cache_update_b{W}c{C}` is one in-place dispatch per
+/// layer per K/V scattering each slot's `valid_len` rows at `pos_base..`
+/// into that slot's cache; `sdpa_b{W}c{C}` is the causal per-slot
+/// multi-token attention (slot `j` row `i` attends cache positions
+/// `0..pos_base[j]+i+1`).
+///
+/// Only each slot's LAST valid row feeds the lm head:
+/// `slot_last_row_b{W}c{C}` selects row `valid_len[j]-1` of every live
+/// slot (zero rows for masked/empty slots), and the final norm + lm head
+/// run at the batched `[W, ...]` shapes — the logits output keeps the
+/// batched plan's `[W, vocab]` contract, so the round-level coalesced
+/// readback and logits ring are unchanged.
+///
+/// Rotary is always the fused kernel, exactly like the batched and
+/// prefill builders; `fusion.rmsnorm` / `fusion.mlp` / `fusion.kv` select
+/// fused or decomposed kernels like the other builders.
+pub fn build_unified_round_graph(
+    dims: &GraphDims,
+    fusion: FusionConfig,
+    width: usize,
+    chunk: usize,
+) -> FxGraph {
+    assert!(width >= 2, "unified round graphs need width >= 2 (got {width})");
+    assert!(chunk >= 2, "unified round graphs need chunk >= 2 (got {chunk})");
+    let mut b = UB { g: FxGraph::new(), d: dims, w: width, c: chunk };
+    b.g.batch_width = width;
+    b.g.seq_chunk = chunk;
+    let (h, qd, kv, inter) = (dims.hidden, dims.q_dim(), dims.kv_dim(), dims.intermediate);
+    let (nh, kvh, d) = (dims.heads, dims.kv_heads, dims.head_dim);
+    let suffix = dims.suffix();
+    let (bw, c) = (width, chunk);
+
+    let x0 = b.g.input("x");
+    let pos_f = b.g.input("pos_f");
+    let pos_base = b.g.input("pos_base");
+    let valid_len = b.g.input("valid_len");
+    let slot_mask = b.g.input("slot_mask");
+    let slot_idx = b.g.input("slot_idx");
+    let inv_freq = b.g.input("inv_freq");
+
+    // Per-slot cache sets, SLOT-major — identical to the batched decode
+    // builder's persistent layout, so the two plans share one cache-set
+    // table and sessions plug straight into slots.
+    for j in 0..width {
+        for l in 0..dims.layers {
+            for kind in ["k", "v"] {
+                let name = format!("s{j}.l{l}.{kind}_cache");
+                b.g.input(&name);
+                b.g.mark_persistent(&name);
+            }
+        }
+    }
+
+    // Per-row rope table: each of the W*C rows rotates at its own position.
+    let cs = b.g.kernel_multi(
+        "rope_table",
+        &format!("rope_cos_sin_b{bw}c{c}_{d}"),
+        Category::Other,
+        vec![pos_f, inv_freq],
+        2,
+    );
+    let (cos, sin) = (cs[0], cs[1]);
+
+    let mut x = x0;
+    for l in 0..dims.layers {
+        let p = format!("l{l}");
+        let norm1_w = b.g.input(&format!("{p}.norm1"));
+        let wo = b.g.input(&format!("{p}.wo"));
+        let norm2_w = b.g.input(&format!("{p}.norm2"));
+        let wd = b.g.input(&format!("{p}.wd"));
+
+        // ---- attention ----
+        let hn = b.rmsnorm(&format!("{p}.norm1"), x, norm1_w, fusion.rmsnorm);
+
+        let wq = b.g.input(&format!("{p}.wq"));
+        let q = b.g.kernel(
+            &format!("{p}.q_proj"),
+            &format!("matmul_b{bw}c{c}_{h}_{qd}"),
+            Category::Linear,
+            vec![hn, wq],
+        );
+        let (k, v) = if fusion.kv {
+            let wkv = b.g.input(&format!("{p}.wkv"));
+            // Two outputs (K rows, V rows): the [W*C, 2KV] row split is
+            // strided, so no host byte-window alias can represent it.
+            let parts = b.g.kernel_multi(
+                &format!("{p}.kv_proj"),
+                &format!("kv_fused_b{bw}c{c}_{h}_{}", 2 * kv),
+                Category::Linear,
+                vec![hn, wkv],
+                2,
+            );
+            (parts[0], parts[1])
+        } else {
+            let wk = b.g.input(&format!("{p}.wk"));
+            let wv = b.g.input(&format!("{p}.wv"));
+            let k = b.g.kernel(
+                &format!("{p}.k_proj"),
+                &format!("matmul_b{bw}c{c}_{h}_{kv}"),
+                Category::Linear,
+                vec![hn, wk],
+            );
+            let v = b.g.kernel(
+                &format!("{p}.v_proj"),
+                &format!("matmul_b{bw}c{c}_{h}_{kv}"),
+                Category::Linear,
+                vec![hn, wv],
+            );
+            (k, v)
+        };
+
+        // Rotary stays [W*C, heads*dim]-shaped: the kernels index heads
+        // internally, so no host reshape nodes are needed.
+        let q_rot = b.g.kernel(
+            &format!("{p}.rope_q.rotary"),
+            &format!("rotary_b{bw}c{c}_{nh}_{d}"),
+            Category::Other,
+            vec![q, cos, sin],
+        );
+        let k_rot = b.g.kernel(
+            &format!("{p}.rope_k.rotary"),
+            &format!("rotary_b{bw}c{c}_{kvh}_{d}"),
+            Category::Other,
+            vec![k, cos, sin],
+        );
+
+        // One gather/scatter cache append per layer per K/V: inputs are
+        // the W per-slot states, then rows + per-slot uniforms; output j
+        // scatters slot j's valid_len rows at pos_base[j].. in place.
+        let k_states: Vec<ValueId> = (0..width)
+            .map(|j| b.g.inputs[&format!("s{j}.{p}.k_cache")])
+            .collect();
+        let mut k_ins = k_states;
+        k_ins.extend([k_rot, pos_base, valid_len, slot_mask, slot_idx]);
+        let k_caches = b.g.in_place_kernel_multi(
+            &format!("{p}.k_cache_update"),
+            &format!("cache_update_b{bw}c{c}_{suffix}"),
+            Category::Concat,
+            k_ins,
+            width,
+        );
+        let v_states: Vec<ValueId> = (0..width)
+            .map(|j| b.g.inputs[&format!("s{j}.{p}.v_cache")])
+            .collect();
+        let mut v_ins = v_states;
+        v_ins.extend([v, pos_base, valid_len, slot_mask, slot_idx]);
+        let v_caches = b.g.in_place_kernel_multi(
+            &format!("{p}.v_cache_update"),
+            &format!("cache_update_b{bw}c{c}_{suffix}"),
+            Category::Concat,
+            v_ins,
+            width,
+        );
+        for j in 0..width {
+            b.g.mark_output(&format!("s{j}.{p}.k_cache"), k_caches[j]);
+            b.g.mark_output(&format!("s{j}.{p}.v_cache"), v_caches[j]);
+        }
+
+        // One attention dispatch per layer: slot j's rows run the causal
+        // prefill attention against cache set slot_idx[j].
+        let mut sdpa_ins = vec![q_rot];
+        sdpa_ins.extend(k_caches.iter().copied());
+        sdpa_ins.extend(v_caches.iter().copied());
+        sdpa_ins.extend([pos_base, valid_len, slot_mask, slot_idx]);
+        let attn = b.g.kernel(
+            &format!("{p}.sdpa"),
+            &format!("sdpa_b{bw}c{c}_{suffix}"),
+            Category::Sdpa,
+            sdpa_ins,
+        );
+        let attn_out = b.g.kernel(
+            &format!("{p}.o_proj"),
+            &format!("matmul_b{bw}c{c}_{qd}_{h}"),
+            Category::Linear,
+            vec![attn, wo],
+        );
+        x = b.g.kernel(
+            &format!("{p}.resid1"),
+            &format!("add_b{bw}c{c}_{h}"),
+            Category::Add,
+            vec![x, attn_out],
+        );
+
+        // ---- MLP ----
+        let h2 = b.rmsnorm(&format!("{p}.norm2"), x, norm2_w, fusion.rmsnorm);
+        let act = if fusion.mlp {
+            let wg = b.g.input(&format!("{p}.wg"));
+            let wu = b.g.input(&format!("{p}.wu"));
+            b.g.kernel(
+                &format!("{p}.gate_up_silu"),
+                &format!("gate_up_silu_b{bw}c{c}_{suffix}"),
+                Category::Silu,
+                vec![h2, wg, wu],
+            )
+        } else {
+            let wg = b.g.input(&format!("{p}.wg"));
+            let wu = b.g.input(&format!("{p}.wu"));
+            let g_ = b.g.kernel(
+                &format!("{p}.gate_proj"),
+                &format!("matmul_b{bw}c{c}_{h}_{inter}"),
+                Category::Linear,
+                vec![h2, wg],
+            );
+            let u = b.g.kernel(
+                &format!("{p}.up_proj"),
+                &format!("matmul_b{bw}c{c}_{h}_{inter}"),
+                Category::Linear,
+                vec![h2, wu],
+            );
+            let s = b.g.kernel(
+                &format!("{p}.silu"),
+                &format!("silu_b{bw}c{c}_{inter}"),
+                Category::Silu,
+                vec![g_],
+            );
+            b.g.kernel(
+                &format!("{p}.gate_mul"),
+                &format!("mul_b{bw}c{c}_{inter}"),
+                Category::Multiply,
+                vec![s, u],
+            )
+        };
+        let down = b.g.kernel(
+            &format!("{p}.down_proj"),
+            &format!("matmul_b{bw}c{c}_{inter}_{h}"),
+            Category::Linear,
+            vec![act, wd],
+        );
+        x = b.g.kernel(
+            &format!("{p}.resid2"),
+            &format!("add_b{bw}c{c}_{h}"),
+            Category::Add,
+            vec![x, down],
+        );
+    }
+
+    // ---- per-slot last valid row -> batched final norm + lm head ----
+    // Intermediate prompt positions' logits are never read: row j of the
+    // selection is slot j's row valid_len[j]-1 (zeros for masked/empty
+    // slots), and the tail runs at the batched [W, ...] shapes so the
+    // logits output keeps the batched plan's [W, vocab] contract.
+    let last = b.g.kernel(
+        "last_row",
+        &format!("slot_last_row_b{bw}c{c}_{h}"),
+        Category::Other,
+        vec![x, valid_len, slot_mask],
+    );
+    let norm_f = b.g.input("norm_f");
+    let hf = b.rmsnorm_slots("final_norm", last, norm_f, fusion.rmsnorm);
+    let w_lm = b.g.input("w_lm");
+    let logits = b.g.kernel(
+        "lm_head",
+        &format!("matmul_b{bw}_{h}_{}", dims.vocab),
+        Category::Linear,
+        vec![hf, w_lm],
+    );
+    b.g.mark_output("logits", logits);
+
+    debug_assert!(b.g.validate().is_ok());
+    b.g
+}
+
 /// Expected dispatch count per prefill chunk: the batched-decode
 /// arithmetic (rotary always fused) plus the last-row selection dispatch.
 /// Chunk-size-independent — the amortization: one dispatch per layer op
 /// regardless of how many prompt positions the chunk carries.
 pub fn expected_prefill_dispatches(dims: &GraphDims, fusion: FusionConfig) -> usize {
+    expected_batched_dispatches(dims, fusion) + 1
+}
+
+/// Expected dispatch count per UNIFIED round: the batched-decode
+/// arithmetic (rotary always fused) plus the per-slot last-row selection
+/// dispatch. Width- AND chunk-independent — the whole point: one dispatch
+/// per layer op regardless of how many sessions the round packs or how
+/// many prompt tokens each slot carries.
+pub fn expected_unified_dispatches(dims: &GraphDims, fusion: FusionConfig) -> usize {
     expected_batched_dispatches(dims, fusion) + 1
 }
 
@@ -1395,6 +1801,100 @@ mod tests {
             assert!(names.iter().any(|n| n == expected), "missing {expected}: {names:?}");
         }
         for input in ["x", "pos_f", "pos_base", "valid_len", "inv_freq"] {
+            assert!(g.inputs.contains_key(input), "missing step input {input}");
+        }
+    }
+
+    #[test]
+    fn unified_graph_validates_and_dispatches_are_width_and_chunk_independent() {
+        let dims = GraphDims::qwen_tiny();
+        for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+            let mut counts = Vec::new();
+            for width in [2usize, 4, 8] {
+                for chunk in PREFILL_CHUNKS {
+                    let g = build_unified_round_graph(&dims, fusion, width, chunk);
+                    g.validate().unwrap();
+                    assert_eq!(g.batch_width, width);
+                    assert_eq!(g.seq_chunk, chunk);
+                    assert_eq!(
+                        g.dispatch_count(),
+                        expected_unified_dispatches(&dims, fusion),
+                        "{fusion:?} width {width} chunk {chunk}"
+                    );
+                    counts.push(g.dispatch_count());
+                }
+            }
+            // One dispatch per layer op, NOT per session or per prompt
+            // token: constant in both W and C.
+            assert!(counts.windows(2).all(|w| w[0] == w[1]), "{fusion:?}: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn unified_fused_graph_is_one_dispatch_per_layer_op() {
+        let dims = GraphDims::qwen_tiny();
+        let g = build_unified_round_graph(&dims, FusionConfig::fused(), 4, 16);
+        // per layer: norm 1 + q 1 + kv 1 + rot 2 + cache 2 + sdpa 1 + o 1
+        //            + add 1 + norm 1 + gus 1 + down 1 + add 1 = 14
+        // + rope 1 + slot_last_row 1 + final norm 1 + lm 1 — the prefill
+        // arithmetic, now amortized over up to 4 MIXED prefill/decode
+        // sessions instead of one prefill session.
+        assert_eq!(g.dispatch_count(), 4 * 14 + 4);
+        assert_eq!(
+            g.dispatch_count(),
+            build_prefill_graph(&dims, FusionConfig::fused(), 16).dispatch_count()
+        );
+    }
+
+    #[test]
+    fn unified_cache_sets_match_batched_layout() {
+        let dims = GraphDims::qwen_tiny();
+        let (width, chunk) = (3usize, 8usize);
+        let g = build_unified_round_graph(&dims, FusionConfig::fused(), width, chunk);
+        let bg = build_batched_decode_graph(&dims, FusionConfig::fused(), width);
+        // The unified plan's persistent layout IS the batched cache-set
+        // table: slot-major then layer-major, so sessions plug into the
+        // same slots and the cache arena needs no new layout.
+        assert_eq!(g.persistent, bg.persistent);
+        for name in &g.persistent {
+            assert!(g.inputs.contains_key(name), "{name} not an input");
+            assert!(g.outputs.contains_key(name), "{name} not an output");
+        }
+        // In-place cache updates carry one state per slot, plus packed
+        // rows and the four per-slot uniforms.
+        for n in g.nodes.iter().filter(|n| n.in_place()) {
+            assert_eq!(n.outputs.len(), width, "{}", n.name);
+            assert_eq!(
+                n.inputs.len(),
+                width + 5,
+                "{}: states + rows/base/valid/mask/idx",
+                n.name
+            );
+        }
+        assert_eq!(
+            g.nodes.iter().filter(|n| n.in_place()).count(),
+            2 * dims.layers
+        );
+    }
+
+    #[test]
+    fn unified_kernel_names_carry_width_chunk_and_step_inputs_exist() {
+        let dims = GraphDims::qwen_tiny();
+        let g = build_unified_round_graph(&dims, FusionConfig::fused(), 4, 16);
+        let names = g.kernel_names();
+        for expected in [
+            "matmul_b4c16_64_64", "kv_fused_b4c16_64_64", "rmsnorm_b4c16_64",
+            "rotary_b4c16_4_16", "rotary_b4c16_2_16", "cache_update_b4c16_tiny",
+            "sdpa_b4c16_tiny", "gate_up_silu_b4c16_tiny", "matmul_b4c16_176_64",
+            "add_b4c16_64", "rope_cos_sin_b4c16_16", "slot_last_row_b4c16_64",
+            // The tail is the batched [W, ...] contract: batched final
+            // norm + batched lm head, logits [W, vocab].
+            "rmsnorm_b4_64", "matmul_b4_64_512",
+        ] {
+            assert!(names.iter().any(|n| n == expected), "missing {expected}: {names:?}");
+        }
+        for input in ["x", "pos_f", "pos_base", "valid_len", "slot_mask", "slot_idx", "inv_freq"]
+        {
             assert!(g.inputs.contains_key(input), "missing step input {input}");
         }
     }

@@ -225,8 +225,9 @@ pub fn fuse_kv(g: &FxGraph) -> FxGraph {
         }
         let Some(kname) = kn.kernel() else { continue };
         // matmul_{H}_{KV} -> kv_fused_{H}_{2KV}, or the multi-row forms:
-        // batched matmul_b{W}_{H}_{KV} -> kv_fused_b{W}_{H}_{2KV} and
-        // chunked-prefill matmul_c{C}_{H}_{KV} -> kv_fused_c{C}_{H}_{2KV}.
+        // batched matmul_b{W}_{H}_{KV} -> kv_fused_b{W}_{H}_{2KV},
+        // chunked-prefill matmul_c{C}_{H}_{KV} -> kv_fused_c{C}_{H}_{2KV},
+        // and unified matmul_b{W}c{C}_{H}_{KV} -> kv_fused_b{W}c{C}_{H}_{2KV}.
         let parts: Vec<&str> = kname.split('_').collect();
         let (batched_prefix, h, kv): (Option<String>, usize, usize) = if parts.len() == 3
             && parts[0] == "matmul"
@@ -239,7 +240,16 @@ pub fn fuse_kv(g: &FxGraph) -> FxGraph {
             && parts[0] == "matmul"
             && (parts[1].starts_with('b') || parts[1].starts_with('c'))
         {
-            let rows_ok = parts[1][1..].parse::<usize>().is_ok();
+            let seg = &parts[1][1..];
+            // "4" (b4/c16) or the unified "4c16" (b4c16).
+            let rows_ok = seg.parse::<usize>().is_ok()
+                || (parts[1].starts_with('b')
+                    && seg
+                        .split_once('c')
+                        .map(|(w, ch)| {
+                            w.parse::<usize>().is_ok() && ch.parse::<usize>().is_ok()
+                        })
+                        .unwrap_or(false));
             match (rows_ok, parts[2].parse::<usize>(), parts[3].parse::<usize>()) {
                 (true, Ok(a), Ok(b)) => (Some(parts[1].to_string()), a, b),
                 _ => continue,
@@ -487,6 +497,37 @@ mod tests {
             let direct = build_prefill_graph(&dims, FusionConfig::fused(), chunk);
             assert_eq!(by_passes.dispatch_count(), direct.dispatch_count(), "c={chunk}");
             assert_eq!(by_passes.kernel_names(), direct.kernel_names(), "c={chunk}");
+            assert_eq!(by_passes.seq_chunk, chunk, "splice must preserve the chunk");
+            assert!(reports.iter().all(|r| r.saved() > 0), "{reports:?}");
+        }
+    }
+
+    #[test]
+    fn fusion_passes_are_seq_batch_safe() {
+        // Running the rewrite pipeline on an unfused UNIFIED round graph
+        // must reach exactly the fused unified builder's graph (dispatch
+        // count and kernel set) and keep it valid — the combined-shape
+        // safety proof the unified planner relies on. Rotary is excluded:
+        // the unified builder always emits the fused rotary kernel.
+        use crate::fx::builder::build_unified_round_graph;
+        use crate::fx::passes::PassManager;
+        let dims = GraphDims::qwen_tiny();
+        for (width, chunk) in [(2usize, 8usize), (4, 16)] {
+            let unfused = build_unified_round_graph(&dims, FusionConfig::unfused(), width, chunk);
+            let (by_passes, reports) = PassManager::for_fusion(
+                FusionConfig::rmsnorm_mlp_kv(),
+                &format!("b{width}c{chunk}_tiny"),
+            )
+            .run(&unfused)
+            .unwrap();
+            let direct = build_unified_round_graph(&dims, FusionConfig::fused(), width, chunk);
+            assert_eq!(
+                by_passes.dispatch_count(),
+                direct.dispatch_count(),
+                "w={width} c={chunk}"
+            );
+            assert_eq!(by_passes.kernel_names(), direct.kernel_names(), "w={width} c={chunk}");
+            assert_eq!(by_passes.batch_width, width, "splice must preserve batch width");
             assert_eq!(by_passes.seq_chunk, chunk, "splice must preserve the chunk");
             assert!(reports.iter().all(|r| r.saved() > 0), "{reports:?}");
         }

@@ -285,11 +285,10 @@ impl FxGraph {
         if self.seq_chunk == 0 {
             return Err(Error::Graph("seq_chunk must be >= 1".into()));
         }
-        if self.batch_width > 1 && self.seq_chunk > 1 {
-            return Err(Error::Graph(
-                "a graph cannot batch both slots and sequence positions".into(),
-            ));
-        }
+        // batch_width > 1 && seq_chunk > 1 is the UNIFIED round graph:
+        // step inputs pack W slots x C sequence positions ([W*C, ...] rows
+        // plus per-slot uniforms), and the in-place rule below still holds
+        // — one state output per SLOT, positions share the slot's scatter.
         if self.batch_width > 1 {
             for node in &self.nodes {
                 if node.in_place() && node.outputs.len() != self.batch_width {
@@ -442,10 +441,12 @@ mod tests {
         assert!(g.validate().is_ok());
         g.seq_chunk = 0;
         assert!(g.validate().is_err(), "zero chunk is malformed");
-        // Slot batching and sequence chunking are mutually exclusive.
+        // Slot batching and sequence chunking COMPOSE (the unified round
+        // graph batches both); the in-place one-state-per-slot discipline
+        // still applies to the combined shape.
         g.seq_chunk = 8;
         g.batch_width = 4;
-        assert!(g.validate().is_err());
+        assert!(g.validate().is_ok(), "unified seq x batch graphs must validate");
     }
 
     #[test]

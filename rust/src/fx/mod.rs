@@ -24,8 +24,8 @@ pub mod passes;
 pub mod workloads;
 
 pub use builder::{
-    build_batched_decode_graph, build_decode_graph, build_prefill_graph, FusionConfig,
-    GraphDims, MAX_BATCH_WIDTH, PREFILL_CHUNKS,
+    build_batched_decode_graph, build_decode_graph, build_prefill_graph,
+    build_unified_round_graph, FusionConfig, GraphDims, MAX_BATCH_WIDTH, PREFILL_CHUNKS,
 };
 pub use census::{Census, CategoryCounts};
 pub use graph::FxGraph;

@@ -26,6 +26,10 @@
 //!   ingests a whole `[C, H]` prompt chunk of ONE session into its
 //!   resident cache set (`valid_len` masks the ragged tail), so prompt
 //!   ingestion stops paying per-token dispatch bills.
+//! - [`unified`] — unified-round replay over the same cache-set table:
+//!   `[W*C, H]` seq-x-batch steps where each slot carries `valid_len`
+//!   tokens (prefill chunk, decode step, or padding), so a MIXED
+//!   prefill/decode round is one dispatch per layer op.
 //!
 //! Eager execution stays available ([`crate::engine::GraphExecutor`]'s
 //! default mode) precisely so `wdb plan-bench` can measure the
@@ -39,10 +43,12 @@ pub mod planner;
 pub mod prefill;
 pub mod residency;
 pub mod runner;
+pub mod unified;
 
 pub use arena::{ArenaLayout, Interval, SlotAssignment};
 pub use batched::{validate_batched_plan, BatchedRunner};
 pub use prefill::{validate_prefill_plan, PrefillRunner};
+pub use unified::{validate_unified_plan, UnifiedRunner};
 pub use grid::{tile_workgroups, WORKGROUP_SIZE};
 pub use pipelines::{PipelinePool, PreparedKernel};
 pub use planner::{

@@ -1,0 +1,247 @@
+//! Unified-round plan execution: one replay serves a mixed
+//! prefill/decode round.
+//!
+//! A [`UnifiedRunner`] wraps a [`PlanRunner`] compiled from the unified
+//! round graph ([`crate::fx::build_unified_round_graph`]) at a fixed slot
+//! `width` W and sequence chunk `C`. Every step input is `[W*C, ...]`
+//! seq-x-batch shaped: slot `j` owns rows `j*C..(j+1)*C` and carries
+//! `valid_len[j]` live tokens — a prefill member fills up to C rows, a
+//! decode member exactly one, a padding slot zero. The persistent layout
+//! is IDENTICAL to the batched decode plan's slot-major cache-set table
+//! (`s{j}.l{l}.{k,v}_cache`), so the same per-session [`DeviceKvCache`]
+//! sets plug into slots without copies, and the same padding-set +
+//! `slot_mask` machinery covers partial rounds.
+//!
+//! This is the continuous-batching shape: prompts arriving mid-run join
+//! the SAME replay the decoding sessions already occupy, so a mixed round
+//! costs one dispatch per layer op instead of a prefill round plus a
+//! decode round — the dispatch-overhead amortization the serve-bench
+//! mixed-round gate enforces.
+
+use std::collections::HashMap;
+
+use crate::tensor::Tensor;
+use crate::webgpu::{BufferDesc, BufferId, BufferUsage, Device, KernelRunner};
+use crate::{Error, Result};
+
+use super::planner::ExecutionPlan;
+use super::residency::DeviceKvCache;
+use super::runner::{PlanRunner, ReplayDelta};
+
+/// Seq-x-batch consistency checks for a plan compiled from a unified
+/// round graph: the batched slot-major persistent layout, `[W*C]`-leading
+/// row inputs, `[W]`-leading per-slot uniforms, and a width-leading
+/// logits block (one selected last row per slot).
+pub fn validate_unified_plan(plan: &ExecutionPlan, width: usize, chunk: usize) -> Result<()> {
+    if width < 2 {
+        return Err(Error::Graph(format!("unified plans need width >= 2, got {width}")));
+    }
+    if chunk < 2 {
+        return Err(Error::Graph(format!("unified plans need chunk >= 2, got {chunk}")));
+    }
+    if plan.persistent.is_empty() || plan.persistent.len() % width != 0 {
+        return Err(Error::Graph(format!(
+            "unified plan: {} persistent values not divisible into {width} slots",
+            plan.persistent.len()
+        )));
+    }
+    let per_slot = plan.persistent.len() / width;
+    for j in 0..width {
+        let prefix = format!("s{j}.");
+        for k in 0..per_slot {
+            let spec = &plan.persistent[j * per_slot + k];
+            if !spec.name.starts_with(&prefix) {
+                return Err(Error::Graph(format!(
+                    "unified plan: persistent '{}' not slot-major (expected slot {j})",
+                    spec.name
+                )));
+            }
+            let base = &plan.persistent[k];
+            if spec.shape != base.shape || spec.dtype != base.dtype || spec.size != base.size {
+                return Err(Error::Graph(format!(
+                    "unified plan: slot {j} spec '{}' differs from slot 0 '{}'",
+                    spec.name, base.name
+                )));
+            }
+        }
+    }
+    let rows = width * chunk;
+    for (name, leading) in [
+        ("x", rows),
+        ("pos_f", rows),
+        ("pos_base", width),
+        ("valid_len", width),
+        ("slot_mask", width),
+        ("slot_idx", width),
+    ] {
+        let up = plan
+            .uploads
+            .iter()
+            .find(|u| u.name == name)
+            .ok_or_else(|| {
+                Error::Graph(format!("unified plan: step input '{name}' missing"))
+            })?;
+        if up.shape.first().copied() != Some(leading) {
+            return Err(Error::Graph(format!(
+                "unified plan: step input '{name}' shape {:?} lacks leading {leading}",
+                up.shape
+            )));
+        }
+    }
+    match &plan.logits {
+        Some(lg) if lg.shape.first().copied() == Some(width) => {}
+        Some(lg) => {
+            return Err(Error::Graph(format!(
+                "unified plan: logits shape {:?} lacks leading width {width}",
+                lg.shape
+            )));
+        }
+        None => return Err(Error::Graph("unified plan: no logits output".into())),
+    }
+    Ok(())
+}
+
+/// Replays a unified seq-x-batch plan over a per-round cache-set table.
+pub struct UnifiedRunner {
+    runner: PlanRunner,
+    width: usize,
+    chunk: usize,
+    per_slot: usize,
+    /// Runner-owned padding cache set bound into empty (masked) slots —
+    /// raw device buffers outside the pooled accounting, never written
+    /// (masked slots skip cache scatters) and never read back.
+    padding: Vec<BufferId>,
+    /// Reusable flattened-table scratch (capacity width x per_slot),
+    /// refilled per replay so the hot loop allocates nothing steady-state.
+    flat: DeviceKvCache,
+    /// Unified rounds replayed.
+    pub rounds: u64,
+}
+
+impl UnifiedRunner {
+    /// Validate the plan's seq-x-batch shape, create the padding set, and
+    /// materialize the inner runner (arena, logits ring, bind groups).
+    pub fn materialize(
+        device: &mut Device,
+        plan: ExecutionPlan,
+        width: usize,
+        chunk: usize,
+    ) -> Result<Self> {
+        validate_unified_plan(&plan, width, chunk)?;
+        let per_slot = plan.persistent.len() / width;
+        let usage = BufferUsage::STORAGE
+            | BufferUsage::COPY_DST
+            | BufferUsage::COPY_SRC
+            | BufferUsage::MAP_READ;
+        let mut padding = Vec::with_capacity(per_slot);
+        for spec in &plan.persistent[..per_slot] {
+            padding.push(device.create_buffer(BufferDesc {
+                label: format!("unified-pad-{}", spec.name),
+                size: spec.size,
+                usage,
+            })?);
+        }
+        let runner = PlanRunner::materialize(device, plan)?;
+        let flat = DeviceKvCache {
+            buffers: Vec::with_capacity(width * per_slot),
+            resident_bytes: 0,
+        };
+        Ok(UnifiedRunner { runner, width, chunk, per_slot, padding, flat, rounds: 0 })
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Sequence positions one slot can ingest per round (prefill members
+    /// pack up to `chunk` prompt rows; decode members use one).
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Persistent values per slot (one session's cache-set length).
+    pub fn per_slot(&self) -> usize {
+        self.per_slot
+    }
+
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.runner.plan
+    }
+
+    pub fn inner(&self) -> &PlanRunner {
+        &self.runner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut PlanRunner {
+        &mut self.runner
+    }
+
+    /// Distinct cache-set tables with registered bind groups.
+    pub fn registered_tables(&self) -> usize {
+        self.runner.registered_cache_sets()
+    }
+
+    /// True for buffers the unified runner owns (its logits ring and the
+    /// padding set) — they must never be released into the pooled
+    /// free lists.
+    pub fn owns_buffer(&self, buf: BufferId) -> bool {
+        self.runner.owns_buffer(buf) || self.padding.contains(&buf)
+    }
+
+    /// Refill the flattened-table scratch: each slot's session cache set
+    /// (or the padding set for `None`) in the plan's slot-major persistent
+    /// binding order. No allocation once the scratch capacity is warm.
+    fn fill_flat(&mut self, table: &[Option<&DeviceKvCache>]) -> Result<()> {
+        if table.len() > self.width {
+            return Err(Error::Graph(format!(
+                "cache-set table has {} slots, unified plan width is {}",
+                table.len(),
+                self.width
+            )));
+        }
+        self.flat.buffers.clear();
+        for j in 0..self.width {
+            match table.get(j).copied().flatten() {
+                Some(kv) => {
+                    if kv.buffers.len() != self.per_slot {
+                        return Err(Error::Graph(format!(
+                            "slot {j}: session cache set has {} buffers, plan expects {}",
+                            kv.buffers.len(),
+                            self.per_slot
+                        )));
+                    }
+                    self.flat.buffers.extend_from_slice(&kv.buffers);
+                }
+                None => self.flat.buffers.extend_from_slice(&self.padding),
+            }
+        }
+        Ok(())
+    }
+
+    /// Replay the unified plan once: one dispatch per layer op covering
+    /// every active slot's prefill chunk or decode step in `table`.
+    /// `inputs` are the packed step inputs (`x [W*C, H]`, `pos_f [W*C]`,
+    /// per-slot `pos_base`/`valid_len`/`slot_mask`/`slot_idx` uniforms,
+    /// `inv_freq`); `ring_idx` selects this chunk-of-slots' logits-ring
+    /// buffer (chunks of one round pass distinct indices so every
+    /// `[W, vocab]` block survives until the round's single coalesced
+    /// readback). The table's bind groups are registered on first sight
+    /// and are pure cache hits thereafter. Returns (named outputs, the
+    /// live logits buffer, cost deltas).
+    pub fn replay(
+        &mut self,
+        device: &mut Device,
+        runner: &dyn KernelRunner,
+        inputs: &HashMap<String, Tensor>,
+        ring_idx: usize,
+        table: &[Option<&DeviceKvCache>],
+    ) -> Result<(HashMap<String, Tensor>, Option<BufferId>, ReplayDelta)> {
+        self.fill_flat(table)?;
+        self.runner.register_cache(device, &self.flat)?;
+        let out = self
+            .runner
+            .replay(device, runner, inputs, ring_idx, Some(&self.flat))?;
+        self.rounds += 1;
+        Ok(out)
+    }
+}

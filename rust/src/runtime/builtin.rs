@@ -267,6 +267,100 @@ pub fn builtin_kernels() -> HashMap<String, KernelSpec> {
               vec![io(&[1, h])], ct, 0.0, "select row valid_len-1 for the lm head");
     }
 
+    // ---- unified (seq x batch) round kernels: one dispatch per layer op
+    // covering up to W session slots x C sequence positions — the merge of
+    // the batched-decode and chunked-prefill amortizations (continuous
+    // batching). Slot j owns rows j*C..(j+1)*C and carries valid_len[j]
+    // live tokens at cache rows pos_base[j]..; a decode slot is a
+    // valid_len = 1 chunk, a padding slot valid_len = 0. Cache ops bind W
+    // per-slot cache buffers plus the four per-slot uniforms
+    // (pos_base/valid_len/slot_mask/slot_idx); slot_last_row selects each
+    // slot's final valid row so the tail keeps the batched [W, vocab]
+    // logits contract. Registered for every width x chunk the unified
+    // serving path may request.
+    for w in 2..=crate::fx::builder::MAX_BATCH_WIDTH {
+        for c in crate::fx::builder::PREFILL_CHUNKS {
+            let r = w * c;
+            let ut = &["tiny", "unified"];
+            b.add(&format!("matmul_b{w}c{c}_{h}_{qd}"), vec![io(&[r, h]), io(&[h, qd])],
+                  vec![io(&[r, qd])], ut, matmul_flops(r, h, qd), "unified q/o projection");
+            b.add(&format!("matmul_b{w}c{c}_{h}_{kv}"), vec![io(&[r, h]), io(&[h, kv])],
+                  vec![io(&[r, kv])], ut, matmul_flops(r, h, kv),
+                  "unified separate k/v projection");
+            b.add(&format!("matmul_b{w}c{c}_{h}_{inter}"), vec![io(&[r, h]), io(&[h, inter])],
+                  vec![io(&[r, inter])], ut, matmul_flops(r, h, inter),
+                  "unified gate/up projection");
+            b.add(&format!("matmul_b{w}c{c}_{inter}_{h}"), vec![io(&[r, inter]), io(&[inter, h])],
+                  vec![io(&[r, h])], ut, matmul_flops(r, inter, h), "unified down projection");
+            b.add(&format!("kv_fused_b{w}c{c}_{h}_{}", 2 * kv),
+                  vec![io(&[r, h]), io(&[h, 2 * kv])],
+                  vec![io(&[r, kv]), io(&[r, kv])], ut, matmul_flops(r, h, 2 * kv),
+                  "unified K+V fusion: strided row split emits two outputs");
+
+            b.add(&format!("rmsnorm_b{w}c{c}_{h}"), vec![io(&[r, h]), io(&[h])],
+                  vec![io(&[r, h])], ut, 0.0, "unified fused RMSNorm");
+            b.add(&format!("rms_pow_b{w}c{c}_{h}"), vec![io(&[r, h])], vec![io(&[r, h])],
+                  ut, 0.0, "");
+            b.add(&format!("rms_mean_b{w}c{c}_{h}"), vec![io(&[r, h])], vec![io(&[r, 1])],
+                  ut, 0.0, "");
+            b.add(&format!("rms_add_eps_b{w}c{c}"), vec![io(&[r, 1])], vec![io(&[r, 1])],
+                  ut, 0.0, "");
+            b.add(&format!("rms_rsqrt_b{w}c{c}"), vec![io(&[r, 1])], vec![io(&[r, 1])],
+                  ut, 0.0, "");
+            b.add(&format!("rms_mul_x_b{w}c{c}_{h}"), vec![io(&[r, h]), io(&[r, 1])],
+                  vec![io(&[r, h])], ut, 0.0, "");
+            b.add(&format!("rms_mul_w_b{w}c{c}_{h}"), vec![io(&[r, h]), io(&[h])],
+                  vec![io(&[r, h])], ut, 0.0, "");
+
+            b.add(&format!("rope_cos_sin_b{w}c{c}_{d}"), vec![io(&[r]), io(&[half])],
+                  vec![io(&[r, d]), io(&[r, d])], ut, 0.0, "per-row rope table");
+            b.add(&format!("rotary_b{w}c{c}_{nh}_{d}"),
+                  vec![io(&[r, nh * d]), io(&[r, d]), io(&[r, d])],
+                  vec![io(&[r, nh * d])], ut, 0.0, "unified fused rotary (q heads)");
+            b.add(&format!("rotary_b{w}c{c}_{kvh}_{d}"),
+                  vec![io(&[r, kvh * d]), io(&[r, d]), io(&[r, d])],
+                  vec![io(&[r, kvh * d])], ut, 0.0, "unified fused rotary (kv heads)");
+
+            // Gather/scatter cache ops: W per-slot cache states + packed
+            // rows + per-slot base/valid/mask/cache-set-index uniforms.
+            let mut cu_in: Vec<KernelIoSpec> = (0..w).map(|_| io(&[s, kvh, d])).collect();
+            cu_in.extend([
+                io(&[r, kvh * d]),
+                io_i32(&[w]),
+                io_i32(&[w]),
+                io_i32(&[w]),
+                io_i32(&[w]),
+            ]);
+            let cu_out: Vec<KernelIoSpec> = (0..w).map(|_| io(&[s, kvh, d])).collect();
+            b.add(&format!("cache_update_b{w}c{c}_tiny"), cu_in, cu_out,
+                  &["tiny", "unified", "cache"], 0.0,
+                  "in-place per-slot multi-row scatter (output j updates state j)");
+
+            let mut sd_in: Vec<KernelIoSpec> = vec![io(&[r, nh * d])];
+            sd_in.extend((0..2 * w).map(|_| io(&[s, kvh, d])));
+            sd_in.extend([io_i32(&[w]), io_i32(&[w]), io_i32(&[w]), io_i32(&[w])]);
+            b.add(&format!("sdpa_b{w}c{c}_tiny"), sd_in, vec![io(&[r, nh * d])],
+                  &["tiny", "unified", "attention"],
+                  2.0 * (r * nh) as f64 * d as f64 * s as f64 * 2.0,
+                  "causal per-slot GQA: slot j row i attends cache 0..pos_base[j]+i+1");
+
+            b.add(&format!("gate_up_silu_b{w}c{c}_tiny"),
+                  vec![io(&[r, h]), io(&[h, inter]), io(&[h, inter])],
+                  vec![io(&[r, inter])], &["tiny", "unified", "mlp"],
+                  2.0 * matmul_flops(r, h, inter), "unified MLP gate+up+silu fusion");
+            b.add(&format!("silu_b{w}c{c}_{inter}"), vec![io(&[r, inter])],
+                  vec![io(&[r, inter])], ut, 0.0, "");
+            b.add(&format!("mul_b{w}c{c}_{inter}"), vec![io(&[r, inter]), io(&[r, inter])],
+                  vec![io(&[r, inter])], ut, 0.0, "");
+            b.add(&format!("add_b{w}c{c}_{h}"), vec![io(&[r, h]), io(&[r, h])],
+                  vec![io(&[r, h])], ut, 0.0, "");
+            b.add(&format!("slot_last_row_b{w}c{c}_{h}"),
+                  vec![io(&[r, h]), io_i32(&[w]), io_i32(&[w])],
+                  vec![io(&[w, h])], ut, 0.0,
+                  "select each slot's row valid_len-1 (zeros for masked/empty slots)");
+        }
+    }
+
     b.add(&format!("argmax_{v}"), vec![io(&[1, v])], vec![io_i32(&[1])],
           &["tiny", "argmax"], 0.0, "");
     b.add(&format!("softmax_{v}"), vec![io(&[1, v])], vec![io(&[1, v])],
@@ -452,6 +546,36 @@ mod tests {
         assert_eq!((sd.inputs.len(), sd.outputs.len()), (5, 1));
         let lr = &kernels["chunk_last_row_c16_64"];
         assert_eq!(lr.outputs[0].shape, vec![1, 64]);
+    }
+
+    #[test]
+    fn builtin_covers_every_unified_graph_kernel_at_every_width_and_chunk() {
+        use crate::fx::builder::{build_unified_round_graph, MAX_BATCH_WIDTH, PREFILL_CHUNKS};
+        let kernels = builtin_kernels();
+        let dims = GraphDims::qwen_tiny();
+        for w in 2..=MAX_BATCH_WIDTH {
+            for c in PREFILL_CHUNKS {
+                for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+                    let g = build_unified_round_graph(&dims, fusion, w, c);
+                    for name in g.kernel_names() {
+                        assert!(
+                            kernels.contains_key(&name),
+                            "w={w} c={c}: missing kernel '{name}'"
+                        );
+                    }
+                }
+            }
+        }
+        // Gather/scatter arities: W states + rows + 4 per-slot uniforms in,
+        // W states out; sdpa gathers 2W caches + 4 uniforms.
+        let cu = &kernels["cache_update_b4c16_tiny"];
+        assert_eq!((cu.inputs.len(), cu.outputs.len()), (4 + 5, 4));
+        let sd = &kernels["sdpa_b4c16_tiny"];
+        assert_eq!((sd.inputs.len(), sd.outputs.len()), (1 + 8 + 4, 1));
+        // slot_last_row keeps the batched [W, H] tail contract.
+        let lr = &kernels["slot_last_row_b4c16_64"];
+        assert_eq!(lr.inputs.len(), 3);
+        assert_eq!(lr.outputs[0].shape, vec![4, 64]);
     }
 
     #[test]

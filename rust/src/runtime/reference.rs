@@ -664,6 +664,183 @@ fn chunk_last_row(x: &Tensor, valid_len: &Tensor) -> Result<Tensor> {
     slot_row(x, valid - 1, vec![1, x.shape[1]])
 }
 
+// ------------------------------------------------ unified (seq x batch) --
+//
+// The `*_b{W}c{C}*` kernels execute one dispatch over W session slots x C
+// sequence positions: slot j owns rows j*C..(j+1)*C and carries
+// valid_len[j] live tokens at cache rows pos_base[j].. — a decode slot is
+// a valid_len = 1 chunk, a padding slot valid_len = 0. The cache scatter
+// and causal attention are written as per-slot-per-row loops over the
+// single-token kernels, so a unified round is BIT-IDENTICAL to running
+// each slot's prefill chunk or decode step separately — the property the
+// differential schedule suite (`rust/tests/schedules.rs`) pins. Row-wise
+// unified kernels (matmul_b*c*, rmsnorm_b*c*, rms_*_b*c*, silu, mul, add,
+// gate_up_silu, kv_fused, rope_cos_sin, rotary) reuse the shared row-safe
+// implementations via the batched branches.
+
+/// True when `name`'s first `_`-delimited segment after `prefix` embeds a
+/// 'c' — i.e. the kernel is the unified `*_b{W}c{C}_*` form rather than the
+/// batched `*_b{W}_*` form ("cache_update_b4c16_tiny" -> "4c16" -> true;
+/// "cache_update_b4_tiny" -> "4" -> false).
+fn unified_width_segment(name: &str, prefix: &str) -> bool {
+    name.strip_prefix(prefix)
+        .and_then(|rest| rest.split('_').next())
+        .map(|seg| seg.contains('c'))
+        .unwrap_or(false)
+}
+
+/// Unified in-place cache scatter: inputs are the W per-slot cache states,
+/// then `rows [W*C, KVH*D]`, `pos_base [W]`, `valid_len [W]`,
+/// `slot_mask [W]`, `slot_idx [W]`. Output j is slot j's (possibly
+/// unchanged) state; slot b scatters its rows `b*C..b*C+valid_len[b]` into
+/// cache set `slot_idx[b]` at positions `pos_base[b]..` unless masked.
+fn cache_update_unified(inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    if inputs.len() < 6 {
+        return Err(Error::Runtime(format!(
+            "cache_update_bc: needs >= 6 inputs, got {}",
+            inputs.len()
+        )));
+    }
+    let w = inputs.len() - 5;
+    let caches = &inputs[..w];
+    let rows = &inputs[w];
+    let base = i32_slots(&inputs[w + 1], w, "cache_update_bc pos_base")?;
+    let valid = i32_slots(&inputs[w + 2], w, "cache_update_bc valid_len")?;
+    let mask = i32_slots(&inputs[w + 3], w, "cache_update_bc mask")?;
+    let slots = i32_slots(&inputs[w + 4], w, "cache_update_bc slot_idx")?;
+    if caches[0].shape.len() != 3 || rows.shape.len() != 2 {
+        return Err(Error::Shape(format!(
+            "cache_update_bc: cache {:?} rows {:?}",
+            caches[0].shape, rows.shape
+        )));
+    }
+    let (kvh, d) = (caches[0].shape[1], caches[0].shape[2]);
+    if rows.shape[1] != kvh * d || rows.shape[0] % w != 0 {
+        return Err(Error::Shape(format!(
+            "cache_update_bc: rows {:?} for {w} slots of [{kvh}, {d}]",
+            rows.shape
+        )));
+    }
+    let c = rows.shape[0] / w;
+    let mut outs: Vec<Tensor> = caches.to_vec();
+    for b in 0..w {
+        if mask[b] == 0 {
+            continue;
+        }
+        let t = slots[b];
+        if t < 0 || t as usize >= w {
+            return Err(Error::Shape(format!(
+                "cache_update_bc: slot_idx[{b}] = {t} out of {w} slots"
+            )));
+        }
+        let vl = valid[b].max(0) as usize;
+        if vl > c {
+            return Err(Error::Shape(format!(
+                "cache_update_bc: valid_len[{b}] = {vl} exceeds chunk {c}"
+            )));
+        }
+        let b0 = base[b].max(0) as usize;
+        for i in 0..vl {
+            let row = slot_row(rows, b * c + i, vec![kvh, d])?;
+            outs[t as usize] = cache_update(&outs[t as usize], &row, b0 + i)?;
+        }
+    }
+    Ok(outs)
+}
+
+/// Unified causal grouped-query attention: inputs are `q [W*C, NH*D]`, the
+/// W per-slot K caches, the W per-slot V caches, then `pos_base [W]`,
+/// `valid_len [W]`, `slot_mask [W]`, `slot_idx [W]`. Slot b row i attends
+/// cache set `slot_idx[b]` positions `0..pos_base[b]+i+1` (the scatter has
+/// already written this round's rows); masked slots and ragged-tail rows
+/// produce zeros (their logits are never read).
+fn sdpa_unified(inputs: &[Tensor]) -> Result<Tensor> {
+    if inputs.len() < 7 || (inputs.len() - 5) % 2 != 0 {
+        return Err(Error::Runtime(format!(
+            "sdpa_bc: bad input count {}",
+            inputs.len()
+        )));
+    }
+    let w = (inputs.len() - 5) / 2;
+    let q = &inputs[0];
+    let ks = &inputs[1..1 + w];
+    let vs = &inputs[1 + w..1 + 2 * w];
+    let base = i32_slots(&inputs[1 + 2 * w], w, "sdpa_bc pos_base")?;
+    let valid = i32_slots(&inputs[2 + 2 * w], w, "sdpa_bc valid_len")?;
+    let mask = i32_slots(&inputs[3 + 2 * w], w, "sdpa_bc mask")?;
+    let slots = i32_slots(&inputs[4 + 2 * w], w, "sdpa_bc slot_idx")?;
+    if q.shape.len() != 2 || q.shape[0] % w != 0 || ks[0].shape.len() != 3 {
+        return Err(Error::Shape(format!(
+            "sdpa_bc: q {:?} for {w} slots, k {:?}",
+            q.shape, ks[0].shape
+        )));
+    }
+    let (c, qcols) = (q.shape[0] / w, q.shape[1]);
+    let d = ks[0].shape[2];
+    if d == 0 || qcols % d != 0 {
+        return Err(Error::Shape(format!("sdpa_bc: q cols {qcols} vs head dim {d}")));
+    }
+    let heads = qcols / d;
+    let mut out = vec![0f32; w * c * qcols];
+    for b in 0..w {
+        if mask[b] == 0 {
+            continue;
+        }
+        let t = slots[b];
+        if t < 0 || t as usize >= w {
+            return Err(Error::Shape(format!(
+                "sdpa_bc: slot_idx[{b}] = {t} out of {w} slots"
+            )));
+        }
+        let vl = valid[b].max(0) as usize;
+        if vl > c {
+            return Err(Error::Shape(format!(
+                "sdpa_bc: valid_len[{b}] = {vl} exceeds chunk {c}"
+            )));
+        }
+        let b0 = base[b].max(0) as usize;
+        for i in 0..vl {
+            let r = b * c + i;
+            let qi = slot_row(q, r, vec![heads, d])?;
+            let o = sdpa_gqa(&qi, &ks[t as usize], &vs[t as usize], b0 + i + 1)?;
+            out[r * qcols..(r + 1) * qcols].copy_from_slice(f32s(&o, "sdpa_bc")?);
+        }
+    }
+    Tensor::f32(vec![w * c, qcols], out)
+}
+
+/// Select each slot's row `valid_len[j] - 1` of `x [W*C, H]` as `[W, H]`
+/// (the last live position's hidden state per slot, fed to the batched
+/// final norm + lm head). Masked and empty (`valid_len = 0`) slots yield
+/// zero rows — their logits-ring lanes are never read.
+fn slot_last_row(x: &Tensor, valid_len: &Tensor, slot_mask: &Tensor) -> Result<Tensor> {
+    let w = valid_len.numel();
+    if x.shape.len() != 2 || w == 0 || x.shape[0] % w != 0 {
+        return Err(Error::Shape(format!(
+            "slot_last_row: x {:?} for {w} slots",
+            x.shape
+        )));
+    }
+    let (c, h) = (x.shape[0] / w, x.shape[1]);
+    let valid = i32_slots(valid_len, w, "slot_last_row valid_len")?;
+    let mask = i32_slots(slot_mask, w, "slot_last_row mask")?;
+    let mut out = vec![0f32; w * h];
+    for b in 0..w {
+        if mask[b] == 0 || valid[b] <= 0 {
+            continue;
+        }
+        let vl = valid[b] as usize;
+        if vl > c {
+            return Err(Error::Shape(format!(
+                "slot_last_row: valid_len[{b}] = {vl} exceeds chunk {c}"
+            )));
+        }
+        let row = slot_row(x, b * c + vl - 1, vec![h])?;
+        out[b * h..(b + 1) * h].copy_from_slice(f32s(&row, "slot_last_row")?);
+    }
+    Tensor::f32(vec![w, h], out)
+}
+
 // --------------------------------------------------------------- dispatch --
 
 fn need(inputs: &[Tensor], n: usize, name: &str) -> Result<()> {
@@ -700,7 +877,14 @@ pub fn execute_kernel(spec: &KernelSpec, inputs: &[Tensor]) -> Result<Vec<Tensor
         need(inputs, 3, name)?;
         vec![rotary_batched(&inputs[0], &inputs[1], &inputs[2])?]
     } else if name.starts_with("cache_update_b") {
-        cache_update_batched(inputs)?
+        // `cache_update_b{W}c{C}_*` (unified seq x batch) vs
+        // `cache_update_b{W}_*` (batched decode): the width segment of the
+        // unified form carries an embedded 'c'.
+        if unified_width_segment(name, "cache_update_b") {
+            cache_update_unified(inputs)?
+        } else {
+            cache_update_batched(inputs)?
+        }
     } else if name.starts_with("cache_update_c") {
         need(inputs, 4, name)?;
         vec![cache_update_prefill(inputs)?]
@@ -708,10 +892,17 @@ pub fn execute_kernel(spec: &KernelSpec, inputs: &[Tensor]) -> Result<Vec<Tensor
         need(inputs, 5, name)?;
         vec![sdpa_prefill(inputs)?]
     } else if name.starts_with("sdpa_b") {
-        vec![sdpa_batched(inputs)?]
+        if unified_width_segment(name, "sdpa_b") {
+            vec![sdpa_unified(inputs)?]
+        } else {
+            vec![sdpa_batched(inputs)?]
+        }
     } else if name.starts_with("chunk_last_row") {
         need(inputs, 2, name)?;
         vec![chunk_last_row(&inputs[0], &inputs[1])?]
+    } else if name.starts_with("slot_last_row") {
+        need(inputs, 3, name)?;
+        vec![slot_last_row(&inputs[0], &inputs[1], &inputs[2])?]
     } else if name.starts_with("matmul") || name.starts_with("kv_fused") {
         need(inputs, 2, name)?;
         vec![matmul(&inputs[0], &inputs[1])?]
@@ -1139,6 +1330,124 @@ mod tests {
         assert_eq!(out.as_f32().unwrap(), &[3.0, 4.0, 5.0]); // row 1
         assert!(chunk_last_row(&x, &Tensor::scalar_i32(0)).is_err());
         assert!(chunk_last_row(&x, &Tensor::scalar_i32(5)).is_err());
+    }
+
+    // ---- unified (seq x batch) kernels: bit-identical to looping the
+    // chunked-prefill / single-token kernels per slot ----
+
+    #[test]
+    fn unified_cache_scatter_matches_per_slot_prefill_loop_bitwise() {
+        let (w, c, s, kvh, d) = (3usize, 4usize, 16usize, 2usize, 3usize);
+        let caches: Vec<Tensor> = (0..w)
+            .map(|j| ramp(vec![s, kvh, d], 0.01, j as f32 - 0.3))
+            .collect();
+        let rows = ramp(vec![w * c, kvh * d], 0.2, 10.0);
+        // Slot 0: full prefill chunk. Slot 1: masked padding. Slot 2:
+        // decode step (valid_len = 1) routed into cache set 1.
+        let base = Tensor::i32(vec![w], vec![2, 0, 7]).unwrap();
+        let valid = Tensor::i32(vec![w], vec![4, 0, 1]).unwrap();
+        let mask = Tensor::i32(vec![w], vec![1, 0, 1]).unwrap();
+        let idx = Tensor::i32(vec![w], vec![0, 2, 1]).unwrap();
+        let mut inputs = caches.clone();
+        inputs.extend([rows.clone(), base, valid, mask, idx]);
+        let outs = cache_update_unified(&inputs).unwrap();
+        assert_eq!(outs.len(), w);
+        // Slot 0 == looping cache_update over its 4 rows from position 2.
+        let mut expect0 = caches[0].clone();
+        for i in 0..4 {
+            let row = slot_row(&rows, i, vec![kvh, d]).unwrap();
+            expect0 = cache_update(&expect0, &row, 2 + i).unwrap();
+        }
+        assert_eq!(outs[0].as_f32().unwrap(), expect0.as_f32().unwrap());
+        // Slot 2's single decode row == one cache_update at position 7 on
+        // cache set 1.
+        let row2 = slot_row(&rows, 2 * c, vec![kvh, d]).unwrap();
+        let expect1 = cache_update(&caches[1], &row2, 7).unwrap();
+        assert_eq!(outs[1].as_f32().unwrap(), expect1.as_f32().unwrap());
+        // The masked padding slot's cache set is bit-identical untouched.
+        assert_eq!(outs[2].as_f32().unwrap(), caches[2].as_f32().unwrap());
+        // valid_len beyond the chunk fails loudly.
+        let mut bad = caches.clone();
+        bad.extend([
+            rows,
+            Tensor::i32(vec![w], vec![0, 0, 0]).unwrap(),
+            Tensor::i32(vec![w], vec![(c + 1) as i32, 0, 0]).unwrap(),
+            Tensor::i32(vec![w], vec![1, 0, 0]).unwrap(),
+            Tensor::i32(vec![w], vec![0, 1, 2]).unwrap(),
+        ]);
+        assert!(cache_update_unified(&bad).is_err());
+    }
+
+    #[test]
+    fn unified_sdpa_matches_per_slot_row_loop_and_zeroes_tail() {
+        let (w, c, s, heads, kvh, d) = (3usize, 4usize, 16usize, 2usize, 1usize, 2usize);
+        let q = ramp(vec![w * c, heads * d], 0.17, -0.4);
+        let ks: Vec<Tensor> = (0..w).map(|j| ramp(vec![s, kvh, d], 0.09, j as f32)).collect();
+        let vs: Vec<Tensor> = (0..w).map(|j| ramp(vec![s, kvh, d], 0.05, -(j as f32))).collect();
+        // Slot 0: ragged prefill (3 of 4 rows). Slot 1: decode step against
+        // cache set 2. Slot 2: masked padding.
+        let base = Tensor::i32(vec![w], vec![3, 6, 0]).unwrap();
+        let valid = Tensor::i32(vec![w], vec![3, 1, 0]).unwrap();
+        let mask = Tensor::i32(vec![w], vec![1, 1, 0]).unwrap();
+        let idx = Tensor::i32(vec![w], vec![0, 2, 1]).unwrap();
+        let mut inputs = vec![q.clone()];
+        inputs.extend(ks.iter().cloned());
+        inputs.extend(vs.iter().cloned());
+        inputs.extend([base, valid, mask, idx]);
+        let out = sdpa_unified(&inputs).unwrap();
+        assert_eq!(out.shape, vec![w * c, heads * d]);
+        let od = out.as_f32().unwrap();
+        // Slot 0 rows 0..3 == single-token sdpa at positions base+i.
+        for i in 0..3 {
+            let qi = slot_row(&q, i, vec![heads, d]).unwrap();
+            let single = sdpa_gqa(&qi, &ks[0], &vs[0], 3 + i + 1).unwrap();
+            assert_eq!(
+                &od[i * heads * d..(i + 1) * heads * d],
+                single.as_f32().unwrap(),
+                "slot 0 row {i}"
+            );
+        }
+        // Slot 0's ragged row 3 is zero.
+        assert!(od[3 * heads * d..4 * heads * d].iter().all(|&x| x == 0.0));
+        // Slot 1 row 0 == decode-step sdpa against cache set 2.
+        let q1 = slot_row(&q, c, vec![heads, d]).unwrap();
+        let single = sdpa_gqa(&q1, &ks[2], &vs[2], 7).unwrap();
+        assert_eq!(
+            &od[c * heads * d..(c + 1) * heads * d],
+            single.as_f32().unwrap()
+        );
+        assert!(od[(c + 1) * heads * d..2 * c * heads * d].iter().all(|&x| x == 0.0));
+        // The masked padding slot's rows are all zeros.
+        assert!(od[2 * c * heads * d..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn slot_last_row_selects_per_slot_and_zeroes_empty_slots() {
+        let (w, c, h) = (3usize, 4usize, 3usize);
+        let x = ramp(vec![w * c, h], 1.0, 0.0);
+        let valid = Tensor::i32(vec![w], vec![4, 1, 0]).unwrap();
+        let mask = Tensor::i32(vec![w], vec![1, 1, 0]).unwrap();
+        let out = slot_last_row(&x, &valid, &mask).unwrap();
+        assert_eq!(out.shape, vec![w, h]);
+        let od = out.as_f32().unwrap();
+        let xd = x.as_f32().unwrap();
+        // Slot 0: row 3 (its last valid). Slot 1: row c*1 + 0 (decode).
+        assert_eq!(&od[..h], &xd[3 * h..4 * h]);
+        assert_eq!(&od[h..2 * h], &xd[c * h..(c * h + h)]);
+        // Padding slot (valid_len = 0, masked) yields zeros — NOT an error,
+        // unlike chunk_last_row.
+        assert!(od[2 * h..].iter().all(|&x| x == 0.0));
+        // valid_len beyond the chunk still fails loudly.
+        let bad_valid = Tensor::i32(vec![w], vec![5, 1, 0]).unwrap();
+        assert!(slot_last_row(&x, &bad_valid, &mask).is_err());
+    }
+
+    #[test]
+    fn unified_dispatch_disambiguates_from_batched_by_name() {
+        assert!(unified_width_segment("cache_update_b4c16_tiny", "cache_update_b"));
+        assert!(!unified_width_segment("cache_update_b4_tiny", "cache_update_b"));
+        assert!(unified_width_segment("sdpa_b8c32_tiny", "sdpa_b"));
+        assert!(!unified_width_segment("sdpa_b8_tiny", "sdpa_b"));
     }
 
     #[test]

@@ -20,8 +20,8 @@ use std::collections::{BTreeMap, HashMap};
 use crate::engine::inference::EngineConfig;
 use crate::engine::GraphExecutor;
 use crate::fx::builder::{
-    build_batched_decode_graph, build_decode_graph, build_prefill_graph, GraphDims,
-    MAX_BATCH_WIDTH, PREFILL_CHUNKS,
+    build_batched_decode_graph, build_decode_graph, build_prefill_graph,
+    build_unified_round_graph, GraphDims, MAX_BATCH_WIDTH, PREFILL_CHUNKS,
 };
 use crate::fx::graph::FxGraph;
 use crate::model::weights::ModelWeights;
@@ -114,6 +114,14 @@ pub struct ServingEngine<'r> {
     pub prefill_graph: Option<FxGraph>,
     /// Effective prefill chunk size (0 when chunking is disabled).
     pub prefill_chunk: usize,
+    /// The unified round graph (planned mode with `batch_width >= 2` AND
+    /// `prefill_chunk >= 2` AND `unified` on, the serving default): EVERY
+    /// scheduler round replays its compiled `[W*C, H]` seq-x-batch plan —
+    /// prefill chunks and decode steps occupy slots of the SAME replay
+    /// (decode = a `valid_len = 1` chunk), so a mixed round of prompts and
+    /// generations is one dispatch per layer op. `None` falls back to the
+    /// split scheduling (prefill rounds, then batched decode rounds).
+    pub unified_graph: Option<FxGraph>,
     /// Scheduler rounds completed (any path) — the denominator of the
     /// `dispatches_per_round` serving metric.
     pub rounds: u64,
@@ -159,8 +167,10 @@ impl<'r> ServingEngine<'r> {
             // WebGPU default. Request raised limits up front, the
             // requestDevice({requiredLimits}) pattern real WebGPU engines
             // use (desktop adapters expose far higher storage-buffer
-            // counts than the spec floor).
-            let need = 2 * batch_width + 5;
+            // counts than the spec floor). The unified sdpa binds one more
+            // uniform (pos_base + valid_len + slot_mask + slot_idx).
+            let unified_eligible = ec.unified && ec.prefill_chunk >= 2;
+            let need = 2 * batch_width + if unified_eligible { 6 } else { 5 };
             if device.limits.max_bindings_per_group < need {
                 device.limits.max_bindings_per_group = need;
             }
@@ -278,6 +288,36 @@ impl<'r> ServingEngine<'r> {
             None
         };
 
+        // Unified continuous-batching plan on top of both: when the
+        // batched AND chunked-prefill paths are in effect (and `unified`
+        // is not turned off), EVERY round replays the `[W*C, H]`
+        // seq-x-batch graph instead — prefill chunks and decode steps
+        // share one dispatch per layer op, so prompts arriving mid-run no
+        // longer cost a separate prefill round. The persistent layout is
+        // the batched plan's slot-major cache-set table (checked at
+        // enable time), so the same sticky slots and session cache sets
+        // serve all three plans. The logits ring covers one round's
+        // chunks-of-slots, exactly like the batched ring.
+        let unified_graph = if batch_width >= 2 && prefill_chunk >= 2 && ec.unified {
+            let ug = build_unified_round_graph(&dims, ec.fusion, batch_width, prefill_chunk);
+            ug.validate()?;
+            let chunks_per_round =
+                (config.max_concurrent + batch_width - 1) / batch_width;
+            executor.enable_unified_plan(
+                &ug,
+                crate::plan::PlanConfig {
+                    dispatches_per_submit: ec.dispatches_per_submit.max(1),
+                    framework_ns_per_step: ec.planned_framework_ns_per_step,
+                    logits_ring: chunks_per_round.max(1),
+                },
+                batch_width,
+                prefill_chunk,
+            )?;
+            Some(ug)
+        } else {
+            None
+        };
+
         Ok(ServingEngine {
             config,
             dims,
@@ -293,6 +333,7 @@ impl<'r> ServingEngine<'r> {
             batch_width,
             prefill_graph,
             prefill_chunk,
+            unified_graph,
             rounds: 0,
         })
     }
@@ -695,6 +736,14 @@ impl<'r> ServingEngine<'r> {
         if n == 0 {
             return Ok(0);
         }
+        if self.unified_graph.is_some() {
+            // Unified continuous batching: EVERY round — all-prefill,
+            // all-decode, mixed, even single-session — replays the
+            // seq-x-batch plan once per chunk of `batch_width` slots.
+            self.step_round_unified()?;
+            self.rounds += 1;
+            return self.retire_finished();
+        }
         let prefill_idx: Vec<usize> = if self.prefill_graph.is_some() {
             (0..n).filter(|&i| self.active[i].in_prefill()).collect()
         } else {
@@ -1072,6 +1121,196 @@ impl<'r> ServingEngine<'r> {
         Ok(chunks)
     }
 
+    /// The unified round body: every active session — still-ingesting
+    /// prompts and generating sessions alike — steps through its sticky
+    /// slot of ONE seq-x-batch replay per chunk of `batch_width` slots,
+    /// then the round's single readback.
+    fn step_round_unified(&mut self) -> Result<()> {
+        let idx: Vec<usize> = (0..self.active.len()).collect();
+        let chunks = self.encode_unified_chunks(&idx)?;
+        self.finish_round(chunks)
+    }
+
+    /// Pack the given active sessions into unified-plan replays by their
+    /// STICKY slots: chunk-of-slots `c` covers slots `[c*W, (c+1)*W)`;
+    /// slot `j` owns rows `j*C..(j+1)*C` of the `[W*C, H]` step input. A
+    /// prefill-phase member packs up to `prefill_chunk` prompt rows
+    /// (`valid_len` = the ragged take); a decoding member packs exactly
+    /// one row (`valid_len` = 1) — a decode step IS a one-token chunk;
+    /// slots with no member this round are masked padding (`valid_len` =
+    /// 0) against the padding set. ONE replay per chunk-of-slots covers
+    /// them all — one dispatch per layer op for a MIXED prompt/decode
+    /// round, the continuous-batching amortization the serve-bench
+    /// mixed-round gate enforces. Shared costs split evenly across
+    /// members; step accounting stays token-granular. Only decode members
+    /// and FINAL prompt chunks join the round's coalesced readback
+    /// (intermediate chunks never synchronize).
+    fn encode_unified_chunks(&mut self, idx: &[usize]) -> Result<Vec<EncodedChunk>> {
+        let width = self.batch_width;
+        let chunk = self.prefill_chunk;
+        let rows = width * chunk;
+        let (hidden, max_seq) = (self.dims.hidden, self.dims.max_seq);
+        // chunk-of-slots number -> [(row within chunk, active index)].
+        let mut by_chunk: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
+        for &i in idx {
+            let slot = self.active[i].slot.ok_or_else(|| {
+                Error::Graph(format!(
+                    "session {} has no decode slot (unified rounds need sticky slots)",
+                    self.active[i].id
+                ))
+            })?;
+            by_chunk.entry(slot / width).or_default().push((slot % width, i));
+        }
+        let mut chunks = Vec::with_capacity(by_chunk.len());
+        for (chunk_no, mut members) in by_chunk {
+            members.sort_unstable();
+            // ---- pack: residency, prompt chunks / decode tokens,
+            // per-slot uniforms ----
+            let mut xbuf = vec![0f32; rows * hidden];
+            let mut pos_f = vec![0f32; rows];
+            let mut pos_base = vec![0i32; width];
+            let mut valid_len = vec![0i32; width];
+            let mut mask = vec![0i32; width];
+            let slot_idx: Vec<i32> = (0..width as i32).collect();
+            // Tokens each member advanced, whether they were prompt rows,
+            // and whether a prompt member consumed its FINAL token.
+            let mut taken = vec![0usize; width];
+            let mut was_prefill = vec![false; width];
+            let mut final_prefill = vec![false; width];
+            {
+                let ServingEngine { executor, weights, active, .. } = &mut *self;
+                for &(row, i) in &members {
+                    let s = &mut active[i];
+                    // Hydration of a resumed session is charged to it.
+                    let w0 = executor.device.stats.bytes_written;
+                    Self::promote_to_device(executor, s)?;
+                    s.metrics.upload_bytes += executor.device.stats.bytes_written - w0;
+                    if s.in_prefill() {
+                        let range = s.peek_prompt_chunk(chunk);
+                        let take = range.len();
+                        if s.pos + take > max_seq {
+                            return Err(Error::Graph(format!(
+                                "KV cache capacity {max_seq} exhausted during prefill"
+                            )));
+                        }
+                        for (r, &t) in s.prompt[range.clone()].iter().enumerate() {
+                            let emb = hostops::embed(&weights.embedding, t)?;
+                            let at = (row * chunk + r) * hidden;
+                            xbuf[at..at + hidden].copy_from_slice(emb.as_f32()?);
+                            pos_f[row * chunk + r] = (s.pos + r) as f32;
+                        }
+                        pos_base[row] = s.pos as i32;
+                        valid_len[row] = take as i32;
+                        mask[row] = 1;
+                        s.consume_prompt(take);
+                        taken[row] = take;
+                        was_prefill[row] = true;
+                        final_prefill[row] = !s.in_prefill();
+                    } else {
+                        if s.pos >= max_seq {
+                            return Err(Error::Graph(format!(
+                                "KV cache capacity {max_seq} exhausted"
+                            )));
+                        }
+                        let (token, _) = s.take_input().ok_or_else(|| {
+                            Error::Graph(format!("session {} has no input token", s.id))
+                        })?;
+                        let emb = hostops::embed(&weights.embedding, token)?;
+                        let at = row * chunk * hidden;
+                        xbuf[at..at + hidden].copy_from_slice(emb.as_f32()?);
+                        pos_f[row * chunk] = s.pos as f32;
+                        pos_base[row] = s.pos as i32;
+                        valid_len[row] = 1;
+                        mask[row] = 1;
+                        taken[row] = 1;
+                    }
+                }
+            }
+            let mut inputs: HashMap<String, Tensor> = HashMap::with_capacity(7);
+            inputs.insert("x".into(), Tensor::f32(vec![rows, hidden], xbuf)?);
+            inputs.insert("pos_f".into(), Tensor::f32(vec![rows], pos_f)?);
+            inputs.insert("pos_base".into(), Tensor::i32(vec![width], pos_base)?);
+            inputs.insert("valid_len".into(), Tensor::i32(vec![width], valid_len)?);
+            inputs.insert("slot_mask".into(), Tensor::i32(vec![width], mask)?);
+            inputs.insert("slot_idx".into(), Tensor::i32(vec![width], slot_idx)?);
+            inputs.insert("inv_freq".into(), self.weights.inv_freq.clone());
+
+            // ---- one replay per chunk-of-slots, shared-cost snapshots ----
+            let ph0 = self.executor.device.timeline.virtual_ns;
+            let k0 = self.executor.device.timeline.kernel_virtual_ns;
+            let fw0 = self.executor.framework_virtual_ns;
+            let d0 = self.executor.dispatch_count;
+            let w0 = self.executor.device.stats.bytes_written;
+            let c0 = self.executor.device.clock.now_ns();
+            let logits_buf = {
+                let ServingEngine { executor, unified_graph, active, .. } = &mut *self;
+                let graph = unified_graph.as_ref().expect("unified path checked");
+                let mut table: Vec<Option<&DeviceKvCache>> = vec![None; width];
+                for &(row, i) in &members {
+                    table[row] = active[i].kv.as_device();
+                }
+                let (_outs, logits_buf, _delta) =
+                    executor.run_unified(graph, &inputs, chunk_no, &table)?;
+                logits_buf
+            };
+
+            // ---- split the chunk's shared costs across its members so
+            // per-session sums keep tiling the engine totals ----
+            let tl = self.executor.device.timeline.virtual_ns;
+            let kernel_d = self.executor.device.timeline.kernel_virtual_ns - k0;
+            let fw_d = self.executor.framework_virtual_ns - fw0;
+            let disp_d = self.executor.dispatch_count - d0;
+            let upload_d = self.executor.device.stats.bytes_written - w0;
+            let encode_d = self.executor.device.clock.now_ns() - c0;
+            let now_enc = self.executor.device.clock.now_ns();
+            let k = members.len() as u64;
+            for (j, &(row, i)) in members.iter().enumerate() {
+                let s = &mut self.active[i];
+                for p in 0..8 {
+                    s.metrics.phase_virtual_ns[p] += share(tl[p] - ph0[p], k, j);
+                }
+                s.metrics.kernel_virtual_ns += share(kernel_d, k, j);
+                s.metrics.framework_virtual_ns += share(fw_d, k, j);
+                let dshare = share(disp_d, k, j);
+                s.metrics.dispatches += dshare;
+                s.metrics.upload_bytes += share(upload_d, k, j);
+                s.metrics.encode_virtual_ns += share(encode_d, k, j);
+                // Step accounting stays token-granular: a C-token chunk
+                // is C prompt steps, a decode step is one.
+                s.metrics.steps += taken[row] as u64;
+                if was_prefill[row] {
+                    s.metrics.prefill_steps += taken[row] as u64;
+                    s.metrics.prefill_dispatches += dshare;
+                    if final_prefill[row] {
+                        s.metrics.prefill_end_ns = now_enc;
+                    }
+                }
+                // The on-device scatter already wrote this member's rows.
+                s.pos += taken[row];
+            }
+
+            // Readback membership: decode steps and FINAL prompt chunks
+            // own their slot's logits row; intermediate chunks (and
+            // padding) never synchronize.
+            let owners: Vec<(usize, usize)> = members
+                .iter()
+                .filter(|&&(row, _)| !was_prefill[row] || final_prefill[row])
+                .map(|&(row, i)| (i, row))
+                .collect();
+            if owners.is_empty() {
+                // All-intermediate chunk: nothing reads back this round.
+                continue;
+            }
+            chunks.push(EncodedChunk {
+                buf: logits_buf.ok_or_else(|| {
+                    Error::Graph("unified plan produced no logits buffer".into())
+                })?,
+                owners,
+            });
+        }
+        Ok(chunks)
+    }
+
     /// ONE synchronizing readback for the WHOLE round: every encoded
     /// chunk's logits buffer behind a single `map_read_many`, the shared
     /// sync cost split evenly across the round's readback participants
@@ -1225,6 +1464,13 @@ impl<'r> ServingEngine<'r> {
             if let Some(pr) = self.executor.prefill_runner() {
                 report.plan_build_virtual_ns += pr.inner().build_virtual_ns;
                 report.plan_build_real_ns += pr.inner().build_real_ns;
+            }
+        }
+        if self.unified_graph.is_some() {
+            report.unified = true;
+            if let Some(ur) = self.executor.unified_runner() {
+                report.plan_build_virtual_ns += ur.inner().build_virtual_ns;
+                report.plan_build_real_ns += ur.inner().build_real_ns;
             }
         }
         let ps = self.executor.pool.stats();

@@ -64,6 +64,11 @@ pub struct ServeReport {
     /// prompt ingestion; >= 2 = prompts replayed the seq-dim prefill plan
     /// in chunks of that many tokens).
     pub prefill_chunk: usize,
+    /// True when EVERY round replayed the unified `[W*C, H]` seq-x-batch
+    /// plan (continuous batching: prefill chunks and decode steps share
+    /// one dispatch per layer op per chunk of `batch_width` slots).
+    /// `batch_width`/`prefill_chunk` then report the unified plan's W/C.
+    pub unified: bool,
     /// True when the run replayed a compiled plan instead of eager-
     /// interpreting the graph (the [`ServeReport::exec_mode`] header
     /// derives from this).
@@ -147,6 +152,7 @@ impl ServeReport {
             rounds: 0,
             batch_width: 0,
             prefill_chunk: 0,
+            unified: false,
             planned: false,
             plan_build_virtual_ns: 0,
             plan_build_real_ns: 0,
@@ -183,8 +189,17 @@ impl ServeReport {
 
     /// Self-describing mode label for report headers: exec mode plus the
     /// batched slot width and prefill chunk when those paths were active.
+    /// A unified run subsumes both — every round replayed the one
+    /// seq-x-batch plan — so it labels as `+unified(w=W,c=C)` instead.
     pub fn mode_label(&self) -> String {
         let mut label = self.exec_mode().to_string();
+        if self.unified && self.batch_width >= 2 && self.prefill_chunk >= 2 {
+            label.push_str(&format!(
+                "+unified(w={},c={})",
+                self.batch_width, self.prefill_chunk
+            ));
+            return label;
+        }
         if self.batch_width >= 2 {
             label.push_str(&format!("+batched(w={})", self.batch_width));
         }
@@ -233,6 +248,10 @@ mod tests {
         assert_eq!(r.mode_label(), "planned+batched(w=4)");
         r.prefill_chunk = 16;
         assert_eq!(r.mode_label(), "planned+batched(w=4)+prefill(c=16)");
+        // Unified subsumes the batched + prefill labels.
+        r.unified = true;
+        assert_eq!(r.mode_label(), "planned+unified(w=4,c=16)");
+        r.unified = false;
         r.batch_width = 0;
         assert_eq!(r.mode_label(), "planned+prefill(c=16)");
         r.prefill_chunk = 0;

@@ -1,0 +1,274 @@
+//! Randomized differential serving-schedule suite — the unified-round
+//! correctness acceptance gate.
+//!
+//! A seeded generator produces serving schedules (staggered Poisson-ish
+//! arrivals, prompt lengths spanning the chunking equivalence classes
+//! {1, C-1, C, C+1, 3C+5, 128}, varied generation lengths so sessions
+//! retire mid-run, and more requests than `max_concurrent` so admission
+//! churns slots). Every schedule runs through THREE scheduling modes over
+//! the same weights:
+//!
+//!   - **unified**      — the serving default: every round replays the
+//!                        seq-x-batch `[W*C, H]` graph (mixed
+//!                        prefill/decode rounds, one dispatch per layer
+//!                        op per chunk of slots);
+//!   - **split**        — `unified: false`: PR-4/PR-5 scheduling (chunked
+//!                        prefill rounds, then batched decode rounds);
+//!   - **interleaved**  — `batch_width: 0, prefill_chunk: 0`: per-session
+//!                        planned replays, token-by-token prompts.
+//!
+//! The suite asserts BYTE-level equivalence: identical token streams for
+//! every request, and identical spilled-KV-cache bytes for a probe
+//! session evicted mid-run right after its first generated token (the
+//! same per-session state point in all three modes, however many rounds
+//! each mode took to reach it). A failure prints the offending seed.
+//!
+//! Seeds are split across several #[test] fns so the default test
+//! harness runs them in parallel.
+
+use wdb::engine::{EngineConfig, ExecMode};
+use wdb::fx::builder::FusionConfig;
+use wdb::model::rng::XorShiftRng;
+use wdb::runtime::Registry;
+use wdb::serve::{ServeConfig, ServingEngine};
+
+/// Virtual-cost jitter seed — identical across modes so virtual-time
+/// bookkeeping differences can never masquerade as scheduling effects.
+const RESEED: u64 = 0x5C4ED;
+/// The default prefill chunk the length classes are derived from.
+const CHUNK: usize = 16;
+/// qwen-tiny KV capacity: prompt + generated - 1 must fit.
+const MAX_SEQ: usize = 160;
+
+fn registry() -> Registry {
+    Registry::builtin().expect("builtin registry")
+}
+
+struct Req {
+    prompt: Vec<usize>,
+    gen: usize,
+    /// Scheduler-loop iteration at which the request is submitted.
+    arrival: usize,
+}
+
+struct Schedule {
+    max_concurrent: usize,
+    /// Request index whose KV cache is spilled and compared mid-run.
+    target: usize,
+    reqs: Vec<Req>,
+}
+
+/// Deterministic schedule for one seed. Always oversubscribed (more
+/// requests than `max_concurrent`), always at least one mid-run arrival
+/// candidate, every generation length >= 2 so the KV probe target is
+/// still active right after its first token.
+fn gen_schedule(seed: u64) -> Schedule {
+    let mut rng = XorShiftRng::new(0xD1FF ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let max_concurrent = 2 + rng.below(4); // 2..=5 slots
+    let n_reqs = max_concurrent + 1 + rng.below(4); // strictly > max_concurrent
+    let lens = [1usize, CHUNK - 1, CHUNK, CHUNK + 1, 3 * CHUNK + 5];
+    let reqs = (0..n_reqs)
+        .map(|i| {
+            // The 128-token long-prompt class is sampled sparingly: it
+            // dominates debug-profile wall time without adding new
+            // equivalence classes beyond 3C+5.
+            let plen = if rng.below(8) == 0 { 128 } else { lens[rng.below(lens.len())] };
+            let prompt: Vec<usize> =
+                (0..plen).map(|t| 7 + (t * 13 + i * 31 + seed as usize) % 500).collect();
+            let gen = 2 + rng.below(6); // 2..=7
+            assert!(plen + gen - 1 <= MAX_SEQ);
+            let arrival = if rng.below(2) == 0 { 0 } else { 1 + rng.below(8) };
+            Req { prompt, gen, arrival }
+        })
+        .collect::<Vec<_>>();
+    let target = rng.below(n_reqs);
+    Schedule { max_concurrent, target, reqs }
+}
+
+fn unified_cfg() -> EngineConfig {
+    EngineConfig { fusion: FusionConfig::fused(), exec: ExecMode::Planned, ..EngineConfig::tiny_fused() }
+}
+
+fn split_cfg() -> EngineConfig {
+    EngineConfig { unified: false, ..unified_cfg() }
+}
+
+fn interleaved_cfg() -> EngineConfig {
+    EngineConfig { batch_width: 0, prefill_chunk: 0, ..unified_cfg() }
+}
+
+/// Drive one engine through the schedule: submit each request at its
+/// arrival iteration, step rounds until everything drains, and spill the
+/// probe session's KV cache the first round it holds a generated token
+/// (it re-hydrates next round — the resume path is part of the suite).
+/// Returns (per-request token streams, probe KV bytes per layer tensor).
+fn run_schedule(
+    reg: &Registry,
+    cfg: EngineConfig,
+    sched: &Schedule,
+) -> (Vec<Vec<usize>>, Vec<Vec<u8>>) {
+    let mut se = ServingEngine::new(
+        reg,
+        ServeConfig { engine: cfg, max_concurrent: sched.max_concurrent },
+    )
+    .expect("serving engine");
+    se.reseed(RESEED);
+    let mut ids: Vec<Option<u64>> = vec![None; sched.reqs.len()];
+    let mut kv: Vec<Vec<u8>> = Vec::new();
+    let mut it = 0usize;
+    loop {
+        for (i, rq) in sched.reqs.iter().enumerate() {
+            if rq.arrival == it {
+                ids[i] = Some(se.submit(&rq.prompt, rq.gen).expect("submit"));
+            }
+        }
+        let pending = sched.reqs.iter().any(|rq| rq.arrival > it);
+        if se.active.is_empty() && se.queue.is_empty() {
+            if !pending {
+                break;
+            }
+            it += 1;
+            continue;
+        }
+        se.step_round().expect("step_round");
+        // KV probe: the first round after which the target session has
+        // recorded a generated token, its cache holds exactly
+        // prompt.len() rows in EVERY mode (per-session progress is
+        // measured in its own steps, not rounds) — spill and snapshot.
+        if kv.is_empty() {
+            if let Some(tid) = ids[sched.target] {
+                if let Some(pos) =
+                    se.active.iter().position(|s| s.id == tid && !s.tokens.is_empty())
+                {
+                    let mut s = se.active.remove(pos);
+                    assert_eq!(s.pos, s.prompt.len(), "probe point must be post-prefill");
+                    se.evict_session_cache(&mut s).expect("evict");
+                    for (k, v) in s.kv.as_host().expect("spilled") {
+                        kv.push(k.data.as_bytes().to_vec());
+                        kv.push(v.data.as_bytes().to_vec());
+                    }
+                    se.active.insert(pos, s);
+                }
+            }
+        }
+        it += 1;
+        assert!(it < 10_000, "schedule failed to drain");
+    }
+    let done = se.drain_finished();
+    let toks = ids
+        .iter()
+        .map(|id| {
+            let id = id.expect("all requests submitted");
+            done.iter().find(|s| s.id == id).expect("finished").tokens.clone()
+        })
+        .collect();
+    (toks, kv)
+}
+
+/// The differential core: three modes, one schedule, byte identity.
+fn differential(reg: &Registry, seeds: std::ops::Range<u64>) {
+    for seed in seeds {
+        let sched = gen_schedule(seed);
+        let ctx = format!(
+            "seed {seed} (max_concurrent={}, requests={}, target={})",
+            sched.max_concurrent,
+            sched.reqs.len(),
+            sched.target
+        );
+        let (u_toks, u_kv) = run_schedule(reg, unified_cfg(), &sched);
+        let (s_toks, s_kv) = run_schedule(reg, split_cfg(), &sched);
+        let (i_toks, i_kv) = run_schedule(reg, interleaved_cfg(), &sched);
+        assert_eq!(u_toks, s_toks, "{ctx}: unified vs split token streams diverged");
+        assert_eq!(u_toks, i_toks, "{ctx}: unified vs interleaved token streams diverged");
+        // The probe session generated at least one token in every mode,
+        // so the spill always captured a snapshot.
+        assert!(!u_kv.is_empty(), "{ctx}: probe never fired");
+        assert_eq!(u_kv, s_kv, "{ctx}: unified vs split spilled-KV bytes diverged");
+        assert_eq!(u_kv, i_kv, "{ctx}: unified vs interleaved spilled-KV bytes diverged");
+    }
+}
+
+#[test]
+fn schedule_seeds_00_09() {
+    differential(&registry(), 0..10);
+}
+
+#[test]
+fn schedule_seeds_10_19() {
+    differential(&registry(), 10..20);
+}
+
+#[test]
+fn schedule_seeds_20_29() {
+    differential(&registry(), 20..30);
+}
+
+#[test]
+fn schedule_seeds_30_39() {
+    differential(&registry(), 30..40);
+}
+
+#[test]
+fn schedule_seeds_40_49() {
+    differential(&registry(), 40..50);
+}
+
+/// Oversubscription past the kernel batch width: 6 concurrent slots over
+/// width-4 unified replays (two chunk-of-slots per round) with 8 staggered
+/// requests, still byte-identical across all three modes.
+#[test]
+fn oversubscribed_wide_rounds_match_across_modes() {
+    let reg = registry();
+    let lens = [1usize, 15, 16, 17, 53, 5, 33, 2];
+    let sched = Schedule {
+        max_concurrent: 6,
+        target: 4,
+        reqs: lens
+            .iter()
+            .enumerate()
+            .map(|(i, &plen)| Req {
+                prompt: (0..plen).map(|t| 11 + (t * 17 + i * 41) % 480).collect(),
+                gen: 2 + (i * 5) % 6,
+                arrival: (i / 3) * 2, // arrivals in waves: 0, 0, 0, 2, 2, 2, 4, 4
+            })
+            .collect(),
+    };
+    let (u_toks, u_kv) = run_schedule(&reg, unified_cfg(), &sched);
+    let (s_toks, s_kv) = run_schedule(&reg, split_cfg(), &sched);
+    let (i_toks, i_kv) = run_schedule(&reg, interleaved_cfg(), &sched);
+    assert_eq!(u_toks, s_toks, "wide rounds: unified vs split diverged");
+    assert_eq!(u_toks, i_toks, "wide rounds: unified vs interleaved diverged");
+    assert_eq!(u_kv, s_kv, "wide rounds: spilled-KV bytes diverged (split)");
+    assert_eq!(u_kv, i_kv, "wide rounds: spilled-KV bytes diverged (interleaved)");
+}
+
+/// The unfused op flow takes the same three-way differential: unified
+/// rounds are fusion-agnostic (one fixed schedule keeps this cheap — the
+/// fused flow gets the 50-seed sweep above).
+#[test]
+fn unfused_schedule_matches_across_modes() {
+    let reg = registry();
+    let sched = Schedule {
+        max_concurrent: 3,
+        target: 1,
+        reqs: [(17usize, 4usize, 0usize), (1, 5, 0), (16, 3, 1), (15, 4, 3), (53, 2, 3)]
+            .iter()
+            .map(|&(plen, gen, arrival)| Req {
+                prompt: (0..plen).map(|t| 23 + (t * 7) % 450).collect(),
+                gen,
+                arrival,
+            })
+            .collect(),
+    };
+    let unfused = |mut cfg: EngineConfig| {
+        cfg.fusion = FusionConfig::unfused();
+        cfg
+    };
+    let (u_toks, u_kv) = run_schedule(&reg, unfused(unified_cfg()), &sched);
+    let (s_toks, s_kv) = run_schedule(&reg, unfused(split_cfg()), &sched);
+    let (i_toks, i_kv) = run_schedule(&reg, unfused(interleaved_cfg()), &sched);
+    assert_eq!(u_toks, s_toks, "unfused: unified vs split diverged");
+    assert_eq!(u_toks, i_toks, "unfused: unified vs interleaved diverged");
+    assert_eq!(u_kv, s_kv, "unfused: spilled-KV bytes diverged (split)");
+    assert_eq!(u_kv, i_kv, "unfused: spilled-KV bytes diverged (interleaved)");
+}

@@ -1,0 +1,304 @@
+//! Unified-round conformance tests: the dispatch census (expected counts
+//! vs runner-recorded counts), masked-slot edge cases (padding slots,
+//! all-prefill / all-decode / single-session rounds, retire-and-replace
+//! churn), the readback-membership rule, and the engagement gates.
+//!
+//! Everything runs against the built-in manifest + host reference runtime
+//! — hermetic and deterministic.
+
+use wdb::engine::{EngineConfig, ExecMode};
+use wdb::fx::builder::{
+    expected_batched_dispatches, expected_prefill_dispatches, expected_unified_dispatches,
+    FusionConfig,
+};
+use wdb::runtime::Registry;
+use wdb::serve::{ServeConfig, ServingEngine};
+
+const SEED: u64 = 0x07F1;
+
+fn registry() -> Registry {
+    Registry::builtin().expect("builtin registry")
+}
+
+fn cfg(fusion: FusionConfig) -> EngineConfig {
+    EngineConfig { fusion, exec: ExecMode::Planned, ..EngineConfig::tiny_fused() }
+}
+
+fn prompt_of(len: usize) -> Vec<usize> {
+    (0..len).map(|i| 33 + (i * 11) % 400).collect()
+}
+
+fn engine(reg: &Registry, config: EngineConfig, max_concurrent: usize) -> ServingEngine<'_> {
+    let mut se = ServingEngine::new(reg, ServeConfig { engine: config, max_concurrent })
+        .expect("serving engine");
+    se.reseed(SEED);
+    se
+}
+
+/// Dispatch census, runner-recorded: with one chunk-of-slots, EVERY
+/// unified round — the all-prefill first round included — costs exactly
+/// `expected_unified_dispatches`, for both fusion configs. The fused
+/// count is the batched 59 plus the one slot-last-row selection dispatch.
+#[test]
+fn unified_round_dispatches_match_expected_census() {
+    let reg = registry();
+    assert_eq!(expected_unified_dispatches(&wdb::fx::builder::GraphDims::qwen_tiny(),
+        FusionConfig::fused()), 60);
+    // The census is constant in both W and C (one dispatch per layer op,
+    // never per session or per row) — sweep chunk sizes and both fusion
+    // configs; width sweeps live in the wide-round and gating tests.
+    for (fusion, chunk) in [
+        (FusionConfig::unfused(), 16),
+        (FusionConfig::fused(), 8),
+        (FusionConfig::fused(), 16),
+        (FusionConfig::fused(), 32),
+    ] {
+        let mut se = engine(&reg, EngineConfig { prefill_chunk: chunk, ..cfg(fusion) }, 4);
+        let expected = expected_unified_dispatches(&se.dims, fusion) as u64;
+        for _ in 0..4 {
+            se.submit(&prompt_of(5), 4).expect("submit");
+        }
+        let mut rounds = 0u64;
+        loop {
+            let d0 = se.executor.dispatch_count;
+            if se.step_round().expect("step_round") == 0 {
+                break;
+            }
+            rounds += 1;
+            assert_eq!(
+                se.executor.dispatch_count - d0,
+                expected,
+                "{fusion:?} chunk {chunk} round {rounds}: a unified round is ONE replay"
+            );
+        }
+        // prompt 5 = one prefill chunk at every chunk size, then 3 decode
+        // rounds (identical prompts retire together).
+        assert_eq!(rounds, 4, "{fusion:?} chunk {chunk}");
+    }
+}
+
+/// Census for the split-scheduling twins the unified path subsumes:
+/// chunked-prefill rounds record `expected_prefill_dispatches` and
+/// batched decode rounds record `expected_batched_dispatches` per replay.
+#[test]
+fn split_mode_dispatches_match_expected_census() {
+    let reg = registry();
+    let fusion = FusionConfig::fused();
+
+    // Prefill rounds: one session, prompt = 2 chunks, 1 generated token.
+    let mut se = engine(&reg, EngineConfig { unified: false, ..cfg(fusion) }, 1);
+    let exp_prefill = expected_prefill_dispatches(&se.dims, fusion) as u64;
+    se.submit(&prompt_of(32), 1).expect("submit");
+    for round in 0..2 {
+        let d0 = se.executor.dispatch_count;
+        se.step_round().expect("step_round");
+        assert_eq!(se.executor.dispatch_count - d0, exp_prefill, "prefill round {round}");
+    }
+    assert!(se.active.is_empty(), "2 chunks + 1 token = exactly 2 rounds");
+
+    // Batched decode rounds: 4 one-token prompts, prefill chunking off.
+    let mut se = engine(&reg, EngineConfig { unified: false, prefill_chunk: 0, ..cfg(fusion) }, 4);
+    let exp_batched = expected_batched_dispatches(&se.dims, fusion) as u64;
+    for t in 0..4usize {
+        se.submit(&[40 + t], 3).expect("submit");
+    }
+    loop {
+        let d0 = se.executor.dispatch_count;
+        if se.step_round().expect("step_round") == 0 {
+            break;
+        }
+        assert_eq!(se.executor.dispatch_count - d0, exp_batched, "batched round");
+    }
+}
+
+/// Oversubscription past the kernel batch width: 6 sessions over width-4
+/// replays pack TWO chunk-of-slots per round — 2x the unified census,
+/// never per-session work. The second chunk carries two live slots and
+/// two `valid_len = 0` padding slots.
+#[test]
+fn wide_rounds_cost_one_replay_per_chunk_of_slots() {
+    let reg = registry();
+    let fusion = FusionConfig::fused();
+    let mut se = engine(&reg, cfg(fusion), 6);
+    let expected = expected_unified_dispatches(&se.dims, fusion) as u64;
+    for t in 0..6usize {
+        se.submit(&[50 + t], 3).expect("submit");
+    }
+    loop {
+        let d0 = se.executor.dispatch_count;
+        if se.step_round().expect("step_round") == 0 {
+            break;
+        }
+        assert_eq!(
+            se.executor.dispatch_count - d0,
+            2 * expected,
+            "6 slots / width 4 = 2 replays per round"
+        );
+    }
+    let runner = se.executor.unified_runner().expect("unified plan enabled");
+    assert_eq!(runner.width(), 4);
+    assert_eq!(runner.chunk(), 16);
+}
+
+/// A whole unified run is self-describing: the report carries the
+/// unified flag, the subsuming mode label, and a dispatches/round equal
+/// to the census (constant-membership run, one chunk-of-slots).
+#[test]
+fn unified_report_reflects_census_and_mode() {
+    let reg = registry();
+    let fusion = FusionConfig::fused();
+    let mut se = engine(&reg, cfg(fusion), 4);
+    let expected = expected_unified_dispatches(&se.dims, fusion) as u64;
+    for _ in 0..4 {
+        se.submit(&prompt_of(5), 4).expect("submit");
+    }
+    let report = se.run_to_completion().expect("serve");
+    assert!(report.unified);
+    assert_eq!(report.mode_label(), "planned+unified(w=4,c=16)");
+    assert_eq!(report.dispatches, report.rounds * expected);
+    assert!((report.dispatches_per_round() - expected as f64).abs() < 1e-9);
+    // Step accounting stays token-granular through unified rounds.
+    assert_eq!(report.prefill_steps, 4 * 5);
+    assert_eq!(report.steps, 4 * (5 + 4 - 1));
+}
+
+/// Masked-slot edge case: a single active session in a width-4 engine
+/// still rounds through the unified replay (three `valid_len = 0`
+/// padding slots), costs exactly the census — no per-slot work for
+/// padding — and stays bit-identical to the interleaved engine.
+#[test]
+fn single_active_session_rounds_stay_unified_and_identical() {
+    let reg = registry();
+    let fusion = FusionConfig::fused();
+
+    let mut se = engine(&reg, cfg(fusion), 4);
+    let expected = expected_unified_dispatches(&se.dims, fusion) as u64;
+    se.submit(&prompt_of(20), 5).expect("submit");
+    loop {
+        let d0 = se.executor.dispatch_count;
+        if se.step_round().expect("step_round") == 0 {
+            break;
+        }
+        assert_eq!(se.executor.dispatch_count - d0, expected, "padding slots must be free");
+    }
+    let unified: Vec<usize> = se.drain_finished().remove(0).tokens;
+
+    let mut se = engine(
+        &reg,
+        EngineConfig { batch_width: 0, prefill_chunk: 0, ..cfg(fusion) },
+        4,
+    );
+    se.submit(&prompt_of(20), 5).expect("submit");
+    se.run_to_completion().expect("serve");
+    assert_eq!(
+        unified,
+        se.drain_finished().remove(0).tokens,
+        "single-session unified rounds diverged from interleaved"
+    );
+}
+
+/// Readback membership: rounds whose members are ALL intermediate prompt
+/// chunks never synchronize (no logits are live); the round that carries
+/// a final chunk or a decode step pays the one coalesced sync.
+#[test]
+fn intermediate_prefill_rounds_skip_readback() {
+    let reg = registry();
+    let mut se = engine(&reg, cfg(FusionConfig::fused()), 2);
+    // Two 40-token prompts: rounds 1-2 are all-intermediate chunks
+    // (16 + 16 rows), round 3 is the final ragged chunk (8 rows) that
+    // produces both first tokens.
+    se.submit(&prompt_of(40), 2).expect("submit");
+    se.submit(&prompt_of(40), 2).expect("submit");
+    let s0 = se.executor.device.timeline.sync_virtual_ns;
+    se.step_round().expect("round 1");
+    se.step_round().expect("round 2");
+    assert_eq!(
+        se.executor.device.timeline.sync_virtual_ns, s0,
+        "all-intermediate rounds must not synchronize"
+    );
+    se.step_round().expect("round 3");
+    assert!(
+        se.executor.device.timeline.sync_virtual_ns > s0,
+        "the final-chunk round pays the round's one readback"
+    );
+}
+
+/// Retire-and-replace churn across unified rounds: mixed prompt lengths
+/// and generation lengths, ragged masked chunk tails, and a queued 4th
+/// request that takes the retired session's slot (and its LIFO-recycled
+/// cache set) — with ZERO pipelines created after engine construction
+/// and ONE registered cache-set table. Lifetimes are crafted so every
+/// round keeps all three slots covered (a padding-bound slot is a
+/// DIFFERENT table key, legitimately so — this pins the steady churn
+/// shape): a/c/d all retire together in round 6.
+#[test]
+fn churned_rounds_create_no_pipelines_and_one_table() {
+    let reg = registry();
+    let mut se = engine(&reg, cfg(FusionConfig::fused()), 3);
+    // Round-by-round: r1 a-chunk(16)+b-t1+c-t1; r2 a-final(4)->t1,
+    // b-t2 retires; r3 d admitted into slot 1, d-chunk(16); r4
+    // d-final(1)->t1; r5-r6 all-decode; a, c, d finish in round 6.
+    let ida = se.submit(&prompt_of(20), 5).expect("submit a");
+    let idb = se.submit(&[90], 2).expect("submit b");
+    let idc = se.submit(&prompt_of(5), 6).expect("submit c");
+    let idd = se.submit(&prompt_of(17), 3).expect("submit d (queued until b retires)");
+    let pipes0 = se.executor.device.stats.pipelines_created;
+    let report = se.run_to_completion().expect("serve");
+    assert_eq!(report.rounds, 6);
+    assert_eq!(
+        se.executor.device.stats.pipelines_created, pipes0,
+        "masked ragged tails + churn must not recompile"
+    );
+    let runner = se.executor.unified_runner().expect("unified plan enabled");
+    assert_eq!(
+        runner.registered_tables(),
+        1,
+        "sticky slots + recycled cache sets must keep ONE table across churn"
+    );
+    let done = se.drain_finished();
+    assert_eq!(done.len(), 4);
+    let slot_of = |id: u64| done.iter().find(|s| s.id == id).unwrap().slot;
+    assert_eq!(slot_of(ida), Some(0));
+    assert_eq!(slot_of(idb), Some(1));
+    assert_eq!(slot_of(idc), Some(2));
+    assert_eq!(slot_of(idd), Some(1), "replacement admission reuses the freed slot");
+}
+
+/// Engagement gates: unified rounds require planned exec, batching,
+/// chunked prefill, host-side argmax, and >= 2 concurrent slots; the
+/// default serving config engages them, and `unified: false` falls back
+/// to split scheduling with the batched/prefill graphs still available.
+#[test]
+fn unified_gates_on_mode_width_chunk_argmax_and_concurrency() {
+    let reg = registry();
+    let fused = FusionConfig::fused();
+
+    let on = engine(&reg, cfg(fused), 2);
+    assert!(on.unified_graph.is_some(), "serving default must engage unified rounds");
+    assert!(on.executor.unified_runner().is_some());
+    assert_eq!(on.executor.unified_runner().unwrap().width(), 2, "width clamps to slots");
+
+    let off = engine(&reg, EngineConfig { unified: false, ..cfg(fused) }, 2);
+    assert!(off.unified_graph.is_none(), "--no-unified must fall back to split");
+    assert!(off.batched_graph.is_some());
+    assert!(off.prefill_graph.is_some());
+
+    let eager = engine(&reg, EngineConfig { exec: ExecMode::Eager, ..EngineConfig::tiny_fused() }, 2);
+    assert!(eager.unified_graph.is_none(), "eager engines must not unify");
+
+    let argmax = engine(
+        &reg,
+        EngineConfig { device_argmax: true, ..cfg(fused) },
+        2,
+    );
+    assert!(argmax.unified_graph.is_none(), "device-argmax finish keeps split rounds");
+
+    let single = engine(&reg, cfg(fused), 1);
+    assert!(single.unified_graph.is_none(), "1-slot engines have nothing to batch");
+
+    let no_batch = engine(&reg, EngineConfig { batch_width: 0, ..cfg(fused) }, 4);
+    assert!(no_batch.unified_graph.is_none(), "--no-batch disables unified rounds");
+
+    let no_chunk = engine(&reg, EngineConfig { prefill_chunk: 0, ..cfg(fused) }, 4);
+    assert!(no_chunk.unified_graph.is_none(), "--prefill-chunk 0 disables unified rounds");
+}
