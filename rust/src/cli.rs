@@ -164,6 +164,7 @@ Commands:
   serve [--requests 16] [--tokens 10] [--concurrent 4] [--profile dawn]
         [--exec-mode planned] [--batch-width 4 | --no-batch]
         [--prefill-chunk 16] [--no-unified]
+        [--speculate K | --no-speculate]
                                   FIFO request loop over the serving engine
                                   (planned replay + resident KV caches +
                                   UNIFIED continuous-batching rounds — one
@@ -172,15 +173,21 @@ Commands:
                                   interleaved / token-by-token prefill /
                                   split prefill-then-decode scheduling
                                   opt-in via --exec-mode eager / --no-batch
-                                  / --prefill-chunk 0 / --no-unified). The
-                                  report header prints the mode that ran.
+                                  / --prefill-chunk 0 / --no-unified;
+                                  --speculate K drafts up to K tokens per
+                                  session per round via n-gram self-drafting
+                                  and verifies them in ONE chunk replay,
+                                  default off). The report header prints
+                                  the mode that ran.
   serve-bench [--sessions 1,2,4,8] [--tokens 16] [--profile dawn]
               [--exec-mode planned] [--batch-width 4 | --no-batch]
               [--prefill-chunk 16] [--prompt 128] [--no-unified]
+              [--speculate K | --no-speculate]
               [--out DIR]         multi-session serving scaling table:
                                   aggregate tok/s + per-phase attribution
-                                  + dispatches/round + prefill disp/tok
-                                  + upload/resident bytes vs session
+                                  + dispatches/round + tok/round +
+                                  acceptance + prefill disp/tok +
+                                  upload/resident bytes vs session
                                   count. With batching on, hard-gates
                                   batched dispatches/round <=
                                   interleaved/2 at every N >= 2; with
@@ -190,7 +197,12 @@ Commands:
                                   rounds on and prompt >= 2 chunks,
                                   hard-gates mixed-round dispatches/round
                                   <= split scheduling/2 at every N >= 4
-                                  under mid-run prompt arrivals.
+                                  under mid-run prompt arrivals; with
+                                  --speculate K, hard-gates token-stream
+                                  identity vs a --no-speculate twin at
+                                  every N (plus tokens/round >= 1.5x the
+                                  twin on the repetitive workload:
+                                  --prompt 32 with --tokens >= 96).
   plan-bench [--tokens 8] [--dps 16] [--profile dawn] [--out DIR]
                                   table P1: eager vs planned per-op
                                   framework overhead across workloads x
@@ -514,6 +526,60 @@ fn batch_width_from_flags(args: &Args) -> Result<usize> {
     }
 }
 
+/// Resolve the speculative draft length from `--speculate K` /
+/// `--no-speculate` (default: 0, off). K >= 1 drafts up to K tokens per
+/// session per round and verifies them in one chunk replay; the engine
+/// clamps K to `prefill_chunk - 1` and only engages it on the unified
+/// scheduling path.
+fn speculate_from_flags(args: &Args) -> Result<usize> {
+    if args.has("no-speculate") {
+        if args.has("speculate") {
+            return Err(Error::Graph(
+                "--no-speculate conflicts with --speculate".into(),
+            ));
+        }
+        return Ok(0);
+    }
+    match args.flag("speculate") {
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| Error::Graph(format!("bad --speculate '{v}'"))),
+        None => Ok(0),
+    }
+}
+
+/// Fixed seed every serve-bench engine (rows and twins) is reseeded with,
+/// so twin runs are comparable call-for-call.
+const SERVE_BENCH_SEED: u64 = 0x5EBE;
+
+/// The serve-bench twin-run primitive: build a fresh serving engine with
+/// `cfg`, reseed it with the bench seed, submit every `(prompt, tokens)`
+/// request in order, and run it dry. Returns the per-request token streams
+/// (submission order) plus the report — every delta/gate in the bench
+/// compares runs through this one path so twins differ ONLY in config.
+fn run_twin(
+    registry: &Registry,
+    cfg: EngineConfig,
+    max_concurrent: usize,
+    requests: &[(Vec<usize>, usize)],
+) -> Result<(Vec<Vec<usize>>, crate::serve::ServeReport)> {
+    use crate::serve::{ServeConfig, ServingEngine};
+    let mut se =
+        ServingEngine::new(registry, ServeConfig { engine: cfg, max_concurrent })?;
+    se.reseed(SERVE_BENCH_SEED);
+    let mut ids = Vec::with_capacity(requests.len());
+    for (prompt, tokens) in requests {
+        ids.push(se.submit(prompt, *tokens)?);
+    }
+    let report = se.run_to_completion()?;
+    let done = se.drain_finished();
+    let toks = ids
+        .iter()
+        .map(|id| done.iter().find(|s| s.id == *id).unwrap().tokens.clone())
+        .collect();
+    Ok((toks, report))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     use crate::serve::{ServeConfig, ServingEngine};
     use std::time::Instant;
@@ -534,6 +600,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let batch_width = batch_width_from_flags(args)?;
     let prefill_chunk = prefill_chunk_from_flags(args)?;
+    let speculate = speculate_from_flags(args)?;
     let mut se = ServingEngine::new(
         &registry,
         ServeConfig {
@@ -543,6 +610,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 batch_width,
                 prefill_chunk,
                 unified: !args.has("no-unified"),
+                speculate,
                 ..EngineConfig::tiny_fused()
             },
             max_concurrent: concurrent,
@@ -616,9 +684,6 @@ fn parse_session_counts(s: &str) -> Result<Vec<usize>> {
 }
 
 fn cmd_serve_bench(args: &Args) -> Result<()> {
-    use crate::serve::{ServeConfig, ServingEngine};
-
-    const SEED: u64 = 0x5EBE;
     let registry = Registry::open()?;
     let tokens = args.flag_usize("tokens", 16);
     let profile = profile_by_name(args.flag("profile").unwrap_or("dawn"))?;
@@ -629,6 +694,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     };
     let batch_width = batch_width_from_flags(args)?;
     let prefill_chunk = prefill_chunk_from_flags(args)?;
+    let speculate = speculate_from_flags(args)?;
     let tok = ByteTokenizer::new(registry.config("qwen-tiny")?.vocab);
     let prompt = prompt_from_flags(args, &tok)?;
     let unified = !args.has("no-unified");
@@ -638,13 +704,16 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         batch_width,
         prefill_chunk,
         unified,
+        speculate,
         ..EngineConfig::tiny_fused()
     };
+    // Uniform bench workload: every row/twin submits n copies of this.
+    let uniform = |n: usize| vec![(prompt.clone(), tokens); n];
 
     println!(
         "Serving scaling bench: {} tokens/session, prompt {} tokens, profile {}, \
          exec mode {exec:?}, batch width {batch_width}, prefill chunk {prefill_chunk}, \
-         unified rounds {}\n",
+         unified rounds {}, speculate {speculate}\n",
         tokens,
         prompt.len(),
         profile.name,
@@ -654,21 +723,15 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // Single-session engine baseline: the N=1 serving row must match it
     // (same shared-substrate path, same seed, same call sequence).
     let mut engine = Engine::new(&registry, ec.clone())?;
-    engine.reseed(SEED);
+    engine.reseed(SERVE_BENCH_SEED);
     let base = engine.generate(&prompt, tokens)?;
 
     let mut rows = Vec::with_capacity(counts.len());
+    let mut row_toks = Vec::with_capacity(counts.len());
     for &n in &counts {
-        let mut se = ServingEngine::new(
-            &registry,
-            ServeConfig { engine: ec.clone(), max_concurrent: n },
-        )?;
-        se.reseed(SEED);
-        for _ in 0..n {
-            se.submit(&prompt, tokens)?;
-        }
-        let report = se.run_to_completion()?;
+        let (toks, report) = run_twin(&registry, ec.clone(), n, &uniform(n))?;
         rows.push((n, report));
+        row_toks.push(toks);
     }
 
     let scaling = crate::tables::serving::scaling_table(&rows);
@@ -697,6 +760,11 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         // reason.
         let mode = match exec {
             crate::engine::ExecMode::Eager => "eager",
+            crate::engine::ExecMode::Planned
+                if unified && batch_width >= 2 && prefill_chunk >= 2 && speculate >= 1 =>
+            {
+                "planned_spec"
+            }
             crate::engine::ExecMode::Planned
                 if unified && batch_width >= 2 && prefill_chunk >= 2 =>
             {
@@ -747,30 +815,14 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             let br = if unified && prefill_chunk >= 2 {
                 let mut bcfg = ec.clone();
                 bcfg.unified = false;
-                let mut bt = ServingEngine::new(
-                    &registry,
-                    ServeConfig { engine: bcfg, max_concurrent: *n },
-                )?;
-                bt.reseed(SEED);
-                for _ in 0..*n {
-                    bt.submit(&prompt, tokens)?;
-                }
-                br_owned = bt.run_to_completion()?;
+                br_owned = run_twin(&registry, bcfg, *n, &uniform(*n))?.1;
                 &br_owned
             } else {
                 r
             };
             let mut twin_cfg = ec.clone();
             twin_cfg.batch_width = 0;
-            let mut twin = ServingEngine::new(
-                &registry,
-                ServeConfig { engine: twin_cfg, max_concurrent: *n },
-            )?;
-            twin.reseed(SEED);
-            for _ in 0..*n {
-                twin.submit(&prompt, tokens)?;
-            }
-            let ir = twin.run_to_completion()?;
+            let (_, ir) = run_twin(&registry, twin_cfg, *n, &uniform(*n))?;
             let b_decode = br.dispatches - br.prefill_dispatches;
             let i_decode = ir.dispatches - ir.prefill_dispatches;
             println!(
@@ -807,15 +859,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             let mut twin_cfg = ec.clone();
             twin_cfg.prefill_chunk = 0;
             twin_cfg.batch_width = 0;
-            let mut twin = ServingEngine::new(
-                &registry,
-                ServeConfig { engine: twin_cfg, max_concurrent: *n },
-            )?;
-            twin.reseed(SEED);
-            for _ in 0..*n {
-                twin.submit(&prompt, tokens)?;
-            }
-            let tr = twin.run_to_completion()?;
+            let (_, tr) = run_twin(&registry, twin_cfg, *n, &uniform(*n))?;
             println!(
                 "N={n}: prefill dispatches chunked {} vs token-by-token {} \
                  ({:.1}x fewer; {:.2} vs {:.2} disp per prompt token), \
@@ -864,33 +908,15 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         if prompt.len() + 6 <= max_seq {
             println!();
             for &n in counts.iter().filter(|&&n| n >= 4) {
-                let run_mixed = |uni: bool| -> Result<(
-                    Vec<Vec<usize>>,
-                    crate::serve::ServeReport,
-                )> {
+                // Staggered gen lengths retire sessions at different
+                // rounds, so backlog prompts arrive mid-run — the mixed
+                // rounds the gate measures.
+                let mixed: Vec<(Vec<usize>, usize)> =
+                    (0..2 * n).map(|i| (prompt.clone(), 4 + i % 3)).collect();
+                let run_mixed = |uni: bool| {
                     let mut cfg = ec.clone();
                     cfg.unified = uni;
-                    let mut se = ServingEngine::new(
-                        &registry,
-                        ServeConfig { engine: cfg, max_concurrent: n },
-                    )?;
-                    se.reseed(SEED);
-                    let mut ids = Vec::new();
-                    for i in 0..2 * n {
-                        // Staggered gen lengths retire sessions at
-                        // different rounds, so backlog prompts arrive
-                        // mid-run — the mixed rounds the gate measures.
-                        ids.push(se.submit(&prompt, 4 + i % 3)?);
-                    }
-                    let report = se.run_to_completion()?;
-                    let done = se.drain_finished();
-                    let toks = ids
-                        .iter()
-                        .map(|id| {
-                            done.iter().find(|s| s.id == *id).unwrap().tokens.clone()
-                        })
-                        .collect();
-                    Ok((toks, report))
+                    run_twin(&registry, cfg, n, &mixed)
                 };
                 let (u_toks, ur) = run_mixed(true)?;
                 let (s_toks, sr) = run_mixed(false)?;
@@ -926,6 +952,67 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                  dispatches/round at every N >= 4 with mid-run prompts)"
             );
         }
+    }
+
+    // Speculative-decode delta + HARD gates: with --speculate on and the
+    // unified path engaged, every row's token streams must be
+    // BIT-IDENTICAL to a --no-speculate twin — speculation is a
+    // scheduling change, never a sampling change. On top of that, on the
+    // canonical repetitive workload (--prompt 32 with tokens >= 96, where
+    // greedy decode settles into a short cycle the n-gram drafter
+    // predicts) each row must emit at least 1.5x the tokens per round of
+    // its twin; other workloads print the delta but only the identity
+    // gate is hard (acceptance is workload-dependent by design).
+    if exec == crate::engine::ExecMode::Planned
+        && speculate >= 1
+        && batch_width >= 2
+        && prefill_chunk >= 2
+        && unified
+    {
+        println!();
+        let gate_throughput = args.has("prompt") && prompt.len() == 32 && tokens >= 96;
+        for ((n, sr), s_toks) in rows.iter().zip(&row_toks) {
+            let mut twin_cfg = ec.clone();
+            twin_cfg.speculate = 0;
+            let (t_toks, tr) = run_twin(&registry, twin_cfg, *n, &uniform(*n))?;
+            if *s_toks != t_toks {
+                return Err(Error::Graph(format!(
+                    "speculative token streams diverged from the \
+                     --no-speculate twin at N={n}"
+                )));
+            }
+            println!(
+                "N={n}: speculative {:.2} vs plain {:.2} tokens/round \
+                 ({:.2}x; acceptance {:.2}, {} drafted / {} accepted over \
+                 {} vs {} rounds)",
+                sr.tokens_per_round(),
+                tr.tokens_per_round(),
+                sr.tokens_per_round() / tr.tokens_per_round().max(1e-9),
+                sr.acceptance_rate(),
+                sr.drafted,
+                sr.accepted,
+                sr.rounds,
+                tr.rounds,
+            );
+            if gate_throughput && sr.tokens_per_round() < 1.5 * tr.tokens_per_round() {
+                return Err(Error::Graph(format!(
+                    "speculative tokens/round gate failed at N={n}: {:.2} < \
+                     1.5 * plain {:.2}",
+                    sr.tokens_per_round(),
+                    tr.tokens_per_round()
+                )));
+            }
+        }
+        println!(
+            "speculative identity gate: OK (token streams bit-identical to \
+             --no-speculate at every N){}",
+            if gate_throughput {
+                "; tokens/round gate: OK (>= 1.5x plain at every N)"
+            } else {
+                "; tokens/round gate: skipped (needs the repetitive \
+                 workload: --prompt 32 with --tokens >= 96)"
+            }
+        );
     }
     Ok(())
 }
@@ -1243,6 +1330,20 @@ mod tests {
         assert!(p.iter().all(|&t| t < 512));
         let a = parse_args(&argv(&["serve-bench", "--prompt", "0"]));
         assert!(prompt_from_flags(&a, &tok).is_err());
+    }
+
+    #[test]
+    fn speculate_flags_resolve() {
+        let a = parse_args(&argv(&["serve"]));
+        assert_eq!(speculate_from_flags(&a).unwrap(), 0);
+        let a = parse_args(&argv(&["serve", "--speculate", "4"]));
+        assert_eq!(speculate_from_flags(&a).unwrap(), 4);
+        let a = parse_args(&argv(&["serve-bench", "--no-speculate"]));
+        assert_eq!(speculate_from_flags(&a).unwrap(), 0);
+        let a = parse_args(&argv(&["serve", "--no-speculate", "--speculate", "2"]));
+        assert!(speculate_from_flags(&a).is_err());
+        let a = parse_args(&argv(&["serve", "--speculate", "many"]));
+        assert!(speculate_from_flags(&a).is_err());
     }
 
     #[test]

@@ -114,6 +114,15 @@ pub struct EngineConfig {
     /// split scheduling (prefill rounds, then batched decode rounds) —
     /// the comparison twin `wdb serve-bench --no-unified` measures.
     pub unified: bool,
+    /// Speculative decode draft depth: up to this many n-gram-drafted
+    /// tokens per session are verified in ONE unified chunk replay
+    /// (`valid_len = accepted + 1` instead of 1). `0` disables. Only the
+    /// unified planned path speculates (it needs the multi-row logits
+    /// tail); token streams stay bit-identical to non-speculative greedy
+    /// decode at every acceptance rate — rejected rows are rolled back by
+    /// rewinding the session position. `wdb serve`/`serve-bench` override
+    /// with `--speculate K`.
+    pub speculate: usize,
     /// Override the manifest dims (executable workload variants — e.g.
     /// tiny-kernel graphs at different layer counts).
     pub dims_override: Option<crate::fx::builder::GraphDims>,
@@ -136,6 +145,7 @@ impl EngineConfig {
             batch_width: DEFAULT_BATCH_WIDTH,
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             unified: true,
+            speculate: 0,
             dims_override: None,
         }
     }

@@ -34,6 +34,7 @@ impl GraphDims {
             kv_heads: 2,
             head_dim: 16,
             intermediate: 176,
+            vocab: 512,
             // 160 rows so the prompt-heavy serving benches (prompt 128 +
             // 16 generated tokens) fit the tiny KV capacity.
             max_seq: 160,
@@ -920,6 +921,31 @@ impl<'a> CB<'a> {
 /// `fusion.mlp` / `fusion.kv` select chunked fused or decomposed kernels
 /// like the other builders.
 pub fn build_prefill_graph(dims: &GraphDims, fusion: FusionConfig, chunk: usize) -> FxGraph {
+    build_prefill_graph_impl(dims, fusion, chunk, false)
+}
+
+/// Multi-row (speculative verify) variant of [`build_prefill_graph`]: the
+/// tail keeps rows `0..valid_len` (`chunk_rows` instead of
+/// `chunk_last_row`), runs the final norm at the chunked `[C, H]` shapes,
+/// and scores EVERY row through a `[C, vocab]` lm head — so one chunk
+/// replay verifies `valid_len` drafted tokens instead of emitting one.
+/// Same dispatch count as the last-row tail (1-for-1 kernel swap); rows
+/// `< valid_len` are bit-identical to what `chunk_last_row` would select
+/// at each prefix length, because every tail op is row-wise.
+pub fn build_prefill_graph_multi_row(
+    dims: &GraphDims,
+    fusion: FusionConfig,
+    chunk: usize,
+) -> FxGraph {
+    build_prefill_graph_impl(dims, fusion, chunk, true)
+}
+
+fn build_prefill_graph_impl(
+    dims: &GraphDims,
+    fusion: FusionConfig,
+    chunk: usize,
+    multi_row: bool,
+) -> FxGraph {
     assert!(chunk >= 2, "prefill graphs need chunk >= 2 (got {chunk})");
     let mut b = CB { g: FxGraph::new(), d: dims, c: chunk };
     b.g.seq_chunk = chunk;
@@ -1103,25 +1129,44 @@ pub fn build_prefill_graph(dims: &GraphDims, fusion: FusionConfig, chunk: usize)
         );
     }
 
-    // ---- last valid row -> final norm + lm head at single-row shapes ----
-    // Intermediate prompt positions' logits are never read, so only the
-    // chunk's last valid row pays the final-norm/lm-head compute, and the
-    // logits output keeps the decode plan's [1, vocab] contract.
-    let last = b.g.kernel(
-        "last_row",
-        &format!("chunk_last_row_c{c}_{h}"),
-        Category::Other,
-        vec![x, valid_len],
-    );
+    // ---- tail: row selection -> final norm + lm head ----
+    // Last-row tail: intermediate prompt positions' logits are never read,
+    // so only the chunk's last valid row pays the final-norm/lm-head
+    // compute, and the logits output keeps the decode plan's [1, vocab]
+    // contract. Multi-row tail (speculative verify): rows 0..valid_len all
+    // reach the lm head at the chunked [C, ...] shapes, logits [C, vocab],
+    // so one replay scores every drafted position.
     let norm_f = b.g.input("norm_f");
-    let hf = b.rmsnorm_row("final_norm", last, norm_f, fusion.rmsnorm);
     let w_lm = b.g.input("w_lm");
-    let logits = b.g.kernel(
-        "lm_head",
-        &format!("matmul_{h}_{}", dims.vocab),
-        Category::Linear,
-        vec![hf, w_lm],
-    );
+    let logits = if multi_row {
+        let rows = b.g.kernel(
+            "last_row",
+            &format!("chunk_rows_c{c}_{h}"),
+            Category::Other,
+            vec![x, valid_len],
+        );
+        let hf = b.rmsnorm_chunk("final_norm", rows, norm_f, fusion.rmsnorm);
+        b.g.kernel(
+            "lm_head",
+            &format!("matmul_c{c}_{h}_{}", dims.vocab),
+            Category::Linear,
+            vec![hf, w_lm],
+        )
+    } else {
+        let last = b.g.kernel(
+            "last_row",
+            &format!("chunk_last_row_c{c}_{h}"),
+            Category::Other,
+            vec![x, valid_len],
+        );
+        let hf = b.rmsnorm_row("final_norm", last, norm_f, fusion.rmsnorm);
+        b.g.kernel(
+            "lm_head",
+            &format!("matmul_{h}_{}", dims.vocab),
+            Category::Linear,
+            vec![hf, w_lm],
+        )
+    };
     b.g.mark_output("logits", logits);
 
     debug_assert!(b.g.validate().is_ok());
@@ -1284,6 +1329,33 @@ pub fn build_unified_round_graph(
     fusion: FusionConfig,
     width: usize,
     chunk: usize,
+) -> FxGraph {
+    build_unified_round_graph_impl(dims, fusion, width, chunk, false)
+}
+
+/// Multi-row (speculative verify) variant of [`build_unified_round_graph`]:
+/// the tail keeps each slot's rows `0..valid_len[j]` (`slot_rows` instead
+/// of `slot_last_row`), runs the final norm at the unified `[W*C, H]`
+/// shapes, and scores every row through a `[W*C, vocab]` lm head — slot
+/// `j`'s verified positions are logits rows `j*C..j*C+valid_len[j]`. Same
+/// dispatch count as the last-row tail (1-for-1 kernel swap); kept rows
+/// are bit-identical to the last-row tail's selection at each prefix
+/// length, because every tail op is row-wise.
+pub fn build_unified_round_graph_multi_row(
+    dims: &GraphDims,
+    fusion: FusionConfig,
+    width: usize,
+    chunk: usize,
+) -> FxGraph {
+    build_unified_round_graph_impl(dims, fusion, width, chunk, true)
+}
+
+fn build_unified_round_graph_impl(
+    dims: &GraphDims,
+    fusion: FusionConfig,
+    width: usize,
+    chunk: usize,
+    multi_row: bool,
 ) -> FxGraph {
     assert!(width >= 2, "unified round graphs need width >= 2 (got {width})");
     assert!(chunk >= 2, "unified round graphs need chunk >= 2 (got {chunk})");
@@ -1499,26 +1571,45 @@ pub fn build_unified_round_graph(
         );
     }
 
-    // ---- per-slot last valid row -> batched final norm + lm head ----
-    // Intermediate prompt positions' logits are never read: row j of the
-    // selection is slot j's row valid_len[j]-1 (zeros for masked/empty
-    // slots), and the tail runs at the batched [W, ...] shapes so the
-    // logits output keeps the batched plan's [W, vocab] contract.
-    let last = b.g.kernel(
-        "last_row",
-        &format!("slot_last_row_b{bw}c{c}_{h}"),
-        Category::Other,
-        vec![x, valid_len, slot_mask],
-    );
+    // ---- tail: per-slot row selection -> final norm + lm head ----
+    // Last-row tail: row j of the selection is slot j's row valid_len[j]-1
+    // (zeros for masked/empty slots), and the tail runs at the batched
+    // [W, ...] shapes so the logits output keeps the batched plan's
+    // [W, vocab] contract. Multi-row tail (speculative verify): each
+    // slot's rows 0..valid_len[j] all reach the lm head at the unified
+    // [W*C, ...] shapes, logits [W*C, vocab] — slot j's drafted positions
+    // are rows j*C..j*C+valid_len[j] of the logits block.
     let norm_f = b.g.input("norm_f");
-    let hf = b.rmsnorm_slots("final_norm", last, norm_f, fusion.rmsnorm);
     let w_lm = b.g.input("w_lm");
-    let logits = b.g.kernel(
-        "lm_head",
-        &format!("matmul_b{bw}_{h}_{}", dims.vocab),
-        Category::Linear,
-        vec![hf, w_lm],
-    );
+    let logits = if multi_row {
+        let rows = b.g.kernel(
+            "last_row",
+            &format!("slot_rows_b{bw}c{c}_{h}"),
+            Category::Other,
+            vec![x, valid_len, slot_mask],
+        );
+        let hf = b.rmsnorm("final_norm", rows, norm_f, fusion.rmsnorm);
+        b.g.kernel(
+            "lm_head",
+            &format!("matmul_b{bw}c{c}_{h}_{}", dims.vocab),
+            Category::Linear,
+            vec![hf, w_lm],
+        )
+    } else {
+        let last = b.g.kernel(
+            "last_row",
+            &format!("slot_last_row_b{bw}c{c}_{h}"),
+            Category::Other,
+            vec![x, valid_len, slot_mask],
+        );
+        let hf = b.rmsnorm_slots("final_norm", last, norm_f, fusion.rmsnorm);
+        b.g.kernel(
+            "lm_head",
+            &format!("matmul_b{bw}_{h}_{}", dims.vocab),
+            Category::Linear,
+            vec![hf, w_lm],
+        )
+    };
     b.g.mark_output("logits", logits);
 
     debug_assert!(b.g.validate().is_ok());
@@ -1896,6 +1987,63 @@ mod tests {
         for input in ["x", "pos_f", "pos_base", "valid_len", "slot_mask", "slot_idx", "inv_freq"]
         {
             assert!(g.inputs.contains_key(input), "missing step input {input}");
+        }
+    }
+
+    #[test]
+    fn multi_row_graphs_validate_and_keep_single_row_dispatch_counts() {
+        // The speculative-verify tail is a 1-for-1 kernel swap: row-keep
+        // instead of row-select, widened final norm + lm head. Dispatch
+        // arithmetic must be untouched — the expected_* helpers stay valid
+        // for both variants.
+        let dims = GraphDims::qwen_tiny();
+        for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+            for chunk in PREFILL_CHUNKS {
+                let m = build_prefill_graph_multi_row(&dims, fusion, chunk);
+                m.validate().unwrap();
+                assert_eq!(m.seq_chunk, chunk);
+                assert_eq!(
+                    m.dispatch_count(),
+                    build_prefill_graph(&dims, fusion, chunk).dispatch_count(),
+                    "{fusion:?} chunk {chunk}"
+                );
+                for width in [2usize, 4, 8] {
+                    let u = build_unified_round_graph_multi_row(&dims, fusion, width, chunk);
+                    u.validate().unwrap();
+                    assert_eq!((u.batch_width, u.seq_chunk), (width, chunk));
+                    assert_eq!(
+                        u.dispatch_count(),
+                        build_unified_round_graph(&dims, fusion, width, chunk).dispatch_count(),
+                        "{fusion:?} width {width} chunk {chunk}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_row_tails_swap_row_keep_and_widened_lm_head() {
+        let dims = GraphDims::qwen_tiny();
+        let p = build_prefill_graph_multi_row(&dims, FusionConfig::fused(), 16);
+        let names = p.kernel_names();
+        for expected in ["chunk_rows_c16_64", "rmsnorm_c16_64", "matmul_c16_64_512"] {
+            assert!(names.iter().any(|n| n == expected), "missing {expected}: {names:?}");
+        }
+        assert!(!names.iter().any(|n| n == "chunk_last_row_c16_64"), "{names:?}");
+        assert!(!names.iter().any(|n| n == "matmul_64_512"), "{names:?}");
+
+        let u = build_unified_round_graph_multi_row(&dims, FusionConfig::fused(), 4, 16);
+        let names = u.kernel_names();
+        for expected in ["slot_rows_b4c16_64", "rmsnorm_b4c16_64", "matmul_b4c16_64_512"] {
+            assert!(names.iter().any(|n| n == expected), "missing {expected}: {names:?}");
+        }
+        assert!(!names.iter().any(|n| n == "slot_last_row_b4c16_64"), "{names:?}");
+        assert!(!names.iter().any(|n| n == "matmul_b4_64_512"), "{names:?}");
+        // Same step inputs as the single-row unified graph — the engine's
+        // packing code is shared between the two.
+        for input in ["x", "pos_f", "pos_base", "valid_len", "slot_mask", "slot_idx", "inv_freq"]
+        {
+            assert!(u.inputs.contains_key(input), "missing step input {input}");
         }
     }
 

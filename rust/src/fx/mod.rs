@@ -25,7 +25,9 @@ pub mod workloads;
 
 pub use builder::{
     build_batched_decode_graph, build_decode_graph, build_prefill_graph,
-    build_unified_round_graph, FusionConfig, GraphDims, MAX_BATCH_WIDTH, PREFILL_CHUNKS,
+    build_prefill_graph_multi_row, build_unified_round_graph,
+    build_unified_round_graph_multi_row, FusionConfig, GraphDims, MAX_BATCH_WIDTH,
+    PREFILL_CHUNKS,
 };
 pub use census::{Census, CategoryCounts};
 pub use graph::FxGraph;

@@ -58,11 +58,15 @@ pub fn validate_prefill_plan(plan: &ExecutionPlan, chunk: usize) -> Result<()> {
         }
     }
     match &plan.logits {
-        // Only the selected last row is read back, whatever the chunk.
+        // Last-row tail: only the selected last row is read back, whatever
+        // the chunk. Multi-row (speculative verify) tail: every chunk row
+        // is scored, so the logits block is chunk-leading.
         Some(lg) if lg.shape.first().copied() == Some(1) => {}
+        Some(lg) if lg.shape.first().copied() == Some(chunk) => {}
         Some(lg) => {
             return Err(Error::Graph(format!(
-                "prefill plan: logits shape {:?} must be the selected last row [1, vocab]",
+                "prefill plan: logits shape {:?} must be the selected last row \
+                 [1, vocab] or the multi-row [chunk, vocab]",
                 lg.shape
             )));
         }

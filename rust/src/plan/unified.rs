@@ -89,10 +89,15 @@ pub fn validate_unified_plan(plan: &ExecutionPlan, width: usize, chunk: usize) -
         }
     }
     match &plan.logits {
+        // Last-row tail: one selected row per slot. Multi-row (speculative
+        // verify) tail: every slot row is scored, so the logits block is
+        // [W*C, vocab] with slot j's rows at j*C..j*C+valid_len[j].
         Some(lg) if lg.shape.first().copied() == Some(width) => {}
+        Some(lg) if lg.shape.first().copied() == Some(rows) => {}
         Some(lg) => {
             return Err(Error::Graph(format!(
-                "unified plan: logits shape {:?} lacks leading width {width}",
+                "unified plan: logits shape {:?} lacks leading width {width} \
+                 or multi-row {rows}",
                 lg.shape
             )));
         }

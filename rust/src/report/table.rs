@@ -52,9 +52,11 @@ impl TableDoc {
     /// column and serving runs became mode-labelled with their batch
     /// width; bumped to 3 when chunked prefill added S1's
     /// `prefill disp/tok` column and S2's `(prefill ms)` /
-    /// `(first decode ms)` TTFT-split rows — downstream trend tooling
-    /// keys on this to re-align columns.
-    pub const SCHEMA_VERSION: u32 = 3;
+    /// `(first decode ms)` TTFT-split rows; bumped to 4 when speculative
+    /// decode added S1's `tok/round` + `accept` columns and `+spec(k=N)`
+    /// mode labels — downstream trend tooling keys on this to re-align
+    /// columns.
+    pub const SCHEMA_VERSION: u32 = 4;
 
     /// JSON form for `report::write_results`
     /// (schema/id/title/columns/rows/notes), matching the layout
@@ -175,7 +177,7 @@ mod tests {
             v.get("schema").and_then(|s| s.as_f64()),
             Some(TableDoc::SCHEMA_VERSION as f64)
         );
-        assert_eq!(TableDoc::SCHEMA_VERSION, 3);
+        assert_eq!(TableDoc::SCHEMA_VERSION, 4);
     }
 
     #[test]

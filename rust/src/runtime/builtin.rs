@@ -265,6 +265,12 @@ pub fn builtin_kernels() -> HashMap<String, KernelSpec> {
               ct, 0.0, "");
         b.add(&format!("chunk_last_row_c{c}_{h}"), vec![io(&[c, h]), io_i32(&[1])],
               vec![io(&[1, h])], ct, 0.0, "select row valid_len-1 for the lm head");
+        b.add(&format!("chunk_rows_c{c}_{h}"), vec![io(&[c, h]), io_i32(&[1])],
+              vec![io(&[c, h])], ct, 0.0,
+              "keep rows 0..valid_len, zero the ragged tail (speculative verify)");
+        b.add(&format!("matmul_c{c}_{h}_{v}"), vec![io(&[c, h]), io(&[h, v])],
+              vec![io(&[c, v])], ct, matmul_flops(c, h, v),
+              "chunked lm head: logits for every verified row");
     }
 
     // ---- unified (seq x batch) round kernels: one dispatch per layer op
@@ -358,6 +364,13 @@ pub fn builtin_kernels() -> HashMap<String, KernelSpec> {
                   vec![io(&[r, h]), io_i32(&[w]), io_i32(&[w])],
                   vec![io(&[w, h])], ut, 0.0,
                   "select each slot's row valid_len-1 (zeros for masked/empty slots)");
+            b.add(&format!("slot_rows_b{w}c{c}_{h}"),
+                  vec![io(&[r, h]), io_i32(&[w]), io_i32(&[w])],
+                  vec![io(&[r, h])], ut, 0.0,
+                  "keep each slot's rows 0..valid_len[j], zero ragged tails and masked slots");
+            b.add(&format!("matmul_b{w}c{c}_{h}_{v}"), vec![io(&[r, h]), io(&[h, v])],
+                  vec![io(&[r, v])], ut, matmul_flops(r, h, v),
+                  "unified lm head: logits for every verified row");
         }
     }
 
@@ -576,6 +589,46 @@ mod tests {
         let lr = &kernels["slot_last_row_b4c16_64"];
         assert_eq!(lr.inputs.len(), 3);
         assert_eq!(lr.outputs[0].shape, vec![4, 64]);
+    }
+
+    #[test]
+    fn builtin_covers_every_multi_row_graph_kernel() {
+        use crate::fx::builder::{
+            build_prefill_graph_multi_row, build_unified_round_graph_multi_row, MAX_BATCH_WIDTH,
+            PREFILL_CHUNKS,
+        };
+        let kernels = builtin_kernels();
+        let dims = GraphDims::qwen_tiny();
+        for c in PREFILL_CHUNKS {
+            for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+                let g = build_prefill_graph_multi_row(&dims, fusion, c);
+                for name in g.kernel_names() {
+                    assert!(kernels.contains_key(&name), "c={c}: missing kernel '{name}'");
+                }
+            }
+            for w in 2..=MAX_BATCH_WIDTH {
+                for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+                    let g = build_unified_round_graph_multi_row(&dims, fusion, w, c);
+                    for name in g.kernel_names() {
+                        assert!(
+                            kernels.contains_key(&name),
+                            "w={w} c={c}: missing kernel '{name}'"
+                        );
+                    }
+                }
+            }
+        }
+        // Multi-row tails keep every verify row: [C, H] / [W*C, H] out of the
+        // row-keep kernels, [C, V] / [W*C, V] out of the widened lm heads.
+        let cr = &kernels["chunk_rows_c16_64"];
+        assert_eq!(cr.outputs[0].shape, vec![16, 64]);
+        let sr = &kernels["slot_rows_b4c16_64"];
+        assert_eq!(sr.inputs.len(), 3);
+        assert_eq!(sr.outputs[0].shape, vec![4 * 16, 64]);
+        let lm = &kernels["matmul_c16_64_512"];
+        assert_eq!(lm.outputs[0].shape, vec![16, 512]);
+        let blm = &kernels["matmul_b4c16_64_512"];
+        assert_eq!(blm.outputs[0].shape, vec![4 * 16, 512]);
     }
 
     #[test]

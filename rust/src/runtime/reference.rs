@@ -664,6 +664,27 @@ fn chunk_last_row(x: &Tensor, valid_len: &Tensor) -> Result<Tensor> {
     slot_row(x, valid - 1, vec![1, x.shape[1]])
 }
 
+/// Keep rows `0..valid_len` of `x [C, H]`, zeroing the ragged tail — the
+/// multi-row (speculative verify) twin of [`chunk_last_row`]: every kept
+/// row reaches the final norm + lm head, so one replay scores `valid_len`
+/// drafted positions. Kept rows are bit-copies, so row `v-1` of the
+/// output at any prefix length `v <= valid_len` equals what
+/// `chunk_last_row` would select with `valid_len = v`.
+fn chunk_rows(x: &Tensor, valid_len: &Tensor) -> Result<Tensor> {
+    let valid = scalar_pos(valid_len)?;
+    if x.shape.len() != 2 || valid == 0 || valid > x.shape[0] {
+        return Err(Error::Shape(format!(
+            "chunk_rows: rows 0..{valid} of {:?}",
+            x.shape
+        )));
+    }
+    let (c, h) = (x.shape[0], x.shape[1]);
+    let src = f32s(x, "chunk_rows")?;
+    let mut out = vec![0f32; c * h];
+    out[..valid * h].copy_from_slice(&src[..valid * h]);
+    Tensor::f32(vec![c, h], out)
+}
+
 // ------------------------------------------------ unified (seq x batch) --
 //
 // The `*_b{W}c{C}*` kernels execute one dispatch over W session slots x C
@@ -841,6 +862,37 @@ fn slot_last_row(x: &Tensor, valid_len: &Tensor, slot_mask: &Tensor) -> Result<T
     Tensor::f32(vec![w, h], out)
 }
 
+/// Keep each slot's rows `j*C..j*C+valid_len[j]` of `x [W*C, H]`, zeroing
+/// ragged tails and masked/empty slots — the multi-row (speculative
+/// verify) twin of [`slot_last_row`]: every kept row reaches the unified
+/// final norm + lm head, so slot `j`'s drafted positions land at logits
+/// rows `j*C..j*C+valid_len[j]`.
+fn slot_rows(x: &Tensor, valid_len: &Tensor, slot_mask: &Tensor) -> Result<Tensor> {
+    let w = valid_len.numel();
+    if x.shape.len() != 2 || w == 0 || x.shape[0] % w != 0 {
+        return Err(Error::Shape(format!("slot_rows: x {:?} for {w} slots", x.shape)));
+    }
+    let (c, h) = (x.shape[0] / w, x.shape[1]);
+    let valid = i32_slots(valid_len, w, "slot_rows valid_len")?;
+    let mask = i32_slots(slot_mask, w, "slot_rows mask")?;
+    let src = f32s(x, "slot_rows")?;
+    let mut out = vec![0f32; w * c * h];
+    for b in 0..w {
+        if mask[b] == 0 || valid[b] <= 0 {
+            continue;
+        }
+        let vl = valid[b] as usize;
+        if vl > c {
+            return Err(Error::Shape(format!(
+                "slot_rows: valid_len[{b}] = {vl} exceeds chunk {c}"
+            )));
+        }
+        let lo = b * c * h;
+        out[lo..lo + vl * h].copy_from_slice(&src[lo..lo + vl * h]);
+    }
+    Tensor::f32(vec![w * c, h], out)
+}
+
 // --------------------------------------------------------------- dispatch --
 
 fn need(inputs: &[Tensor], n: usize, name: &str) -> Result<()> {
@@ -900,9 +952,15 @@ pub fn execute_kernel(spec: &KernelSpec, inputs: &[Tensor]) -> Result<Vec<Tensor
     } else if name.starts_with("chunk_last_row") {
         need(inputs, 2, name)?;
         vec![chunk_last_row(&inputs[0], &inputs[1])?]
+    } else if name.starts_with("chunk_rows") {
+        need(inputs, 2, name)?;
+        vec![chunk_rows(&inputs[0], &inputs[1])?]
     } else if name.starts_with("slot_last_row") {
         need(inputs, 3, name)?;
         vec![slot_last_row(&inputs[0], &inputs[1], &inputs[2])?]
+    } else if name.starts_with("slot_rows") {
+        need(inputs, 3, name)?;
+        vec![slot_rows(&inputs[0], &inputs[1], &inputs[2])?]
     } else if name.starts_with("matmul") || name.starts_with("kv_fused") {
         need(inputs, 2, name)?;
         vec![matmul(&inputs[0], &inputs[1])?]
@@ -1332,6 +1390,52 @@ mod tests {
         assert!(chunk_last_row(&x, &Tensor::scalar_i32(5)).is_err());
     }
 
+    /// The multi-row selection is bit-identical to looping chunk_last_row
+    /// over every prefix length 1..=valid_len: row v-1 of chunk_rows(x, k)
+    /// equals chunk_last_row(x, v) for all v <= k, and the ragged tail is
+    /// zeroed.
+    #[test]
+    fn chunk_rows_matches_chunk_last_row_prefix_loop_bitwise() {
+        let (c, h) = (6usize, 5usize);
+        let x = ramp(vec![c, h], 0.31, -2.0);
+        for valid in 1..=c {
+            let rows = chunk_rows(&x, &Tensor::scalar_i32(valid as i32)).unwrap();
+            assert_eq!(rows.shape, vec![c, h]);
+            let rd = rows.as_f32().unwrap();
+            for v in 1..=valid {
+                let last = chunk_last_row(&x, &Tensor::scalar_i32(v as i32)).unwrap();
+                assert_eq!(
+                    &rd[(v - 1) * h..v * h],
+                    last.as_f32().unwrap(),
+                    "valid {valid} prefix {v}"
+                );
+            }
+            assert!(rd[valid * h..].iter().all(|&e| e == 0.0), "ragged tail valid {valid}");
+        }
+        assert!(chunk_rows(&x, &Tensor::scalar_i32(0)).is_err());
+        assert!(chunk_rows(&x, &Tensor::scalar_i32(c as i32 + 1)).is_err());
+    }
+
+    /// The multi-row lm head composes row-wise: matmul over the chunk_rows
+    /// output scores each kept row exactly as the single-row tail would
+    /// (chunk_last_row -> matmul at each prefix length).
+    #[test]
+    fn multi_row_lm_head_matches_single_row_tail_per_prefix_bitwise() {
+        let (c, h, v) = (4usize, 3usize, 6usize);
+        let x = ramp(vec![c, h], 0.17, 0.9);
+        let w_lm = ramp(vec![h, v], -0.08, 1.1);
+        let valid = 3usize;
+        let rows = chunk_rows(&x, &Tensor::scalar_i32(valid as i32)).unwrap();
+        let logits = matmul(&rows, &w_lm).unwrap();
+        assert_eq!(logits.shape, vec![c, v]);
+        let ld = logits.as_f32().unwrap();
+        for p in 1..=valid {
+            let last = chunk_last_row(&x, &Tensor::scalar_i32(p as i32)).unwrap();
+            let single = matmul(&last, &w_lm).unwrap();
+            assert_eq!(&ld[(p - 1) * v..p * v], single.as_f32().unwrap(), "prefix {p}");
+        }
+    }
+
     // ---- unified (seq x batch) kernels: bit-identical to looping the
     // chunked-prefill / single-token kernels per slot ----
 
@@ -1440,6 +1544,46 @@ mod tests {
         // valid_len beyond the chunk still fails loudly.
         let bad_valid = Tensor::i32(vec![w], vec![5, 1, 0]).unwrap();
         assert!(slot_last_row(&x, &bad_valid, &mask).is_err());
+    }
+
+    /// Per-slot multi-row selection is bit-identical to looping
+    /// slot_last_row over every per-slot prefix length, with ragged tails
+    /// AND masked slots zeroed.
+    #[test]
+    fn slot_rows_matches_slot_last_row_prefix_loop_bitwise() {
+        let (w, c, h) = (3usize, 4usize, 3usize);
+        let x = ramp(vec![w * c, h], 1.0, 0.0);
+        // Slot 0: full spec chunk. Slot 1: decode (valid 1). Slot 2: masked.
+        let valid = Tensor::i32(vec![w], vec![3, 1, 2]).unwrap();
+        let mask = Tensor::i32(vec![w], vec![1, 1, 0]).unwrap();
+        let out = slot_rows(&x, &valid, &mask).unwrap();
+        assert_eq!(out.shape, vec![w * c, h]);
+        let od = out.as_f32().unwrap();
+        // Every live slot's row v-1 equals slot_last_row at prefix v.
+        for (b, vl) in [(0usize, 3usize), (1, 1)] {
+            for v in 1..=vl {
+                let mut pv = vec![0i32; w];
+                pv[b] = v as i32;
+                let prefix_valid = Tensor::i32(vec![w], pv).unwrap();
+                let last = slot_last_row(&x, &prefix_valid, &mask).unwrap();
+                let ld = last.as_f32().unwrap();
+                assert_eq!(
+                    &od[(b * c + v - 1) * h..(b * c + v) * h],
+                    &ld[b * h..(b + 1) * h],
+                    "slot {b} prefix {v}"
+                );
+            }
+            // Ragged tail rows are zeroed.
+            assert!(
+                od[(b * c + vl) * h..(b + 1) * c * h].iter().all(|&e| e == 0.0),
+                "slot {b} tail"
+            );
+        }
+        // Masked slot 2 is fully zeroed despite valid_len = 2.
+        assert!(od[2 * c * h..].iter().all(|&e| e == 0.0), "masked slot");
+        // valid_len beyond the chunk still fails loudly.
+        let bad_valid = Tensor::i32(vec![w], vec![5, 1, 0]).unwrap();
+        assert!(slot_rows(&x, &bad_valid, &mask).is_err());
     }
 
     #[test]

@@ -1,0 +1,140 @@
+//! Device-free n-gram self-drafting for speculative decode.
+//!
+//! The drafter proposes up to `k` next tokens for a session from nothing
+//! but the session's OWN token history (prompt + generated so far): an
+//! order-3-then-2 suffix match. If the last 3 tokens have occurred before,
+//! the token that followed that occurrence is drafted; otherwise the last
+//! 2; otherwise drafting stops. Each drafted token is appended to the
+//! working context before drafting the next, so one call can propose a
+//! whole k-token continuation of a repeating pattern.
+//!
+//! Design constraints, in order:
+//!
+//! - **Zero device work.** Drafting runs on the host between rounds; a
+//!   wrong draft costs nothing but the dead verify rows it occupied
+//!   (see `ARCHITECTURE.md`'s speculative lifecycle). The dispatch bill —
+//!   the paper's dominant batch-1 cost — is paid per verify *round*, so
+//!   any acceptance rate > 0 amortizes it across > 1 generated token.
+//! - **Deterministic.** Proposals depend only on the history slice, so
+//!   speculative scheduling replays byte-identically across runs — the
+//!   differential schedule suite relies on this.
+//! - **Allocation-light.** The per-call scratch is one Vec sized by the
+//!   history plus k; the scan is a plain backward walk (the tiny-config
+//!   histories serving benches produce are far too short for an index to
+//!   pay off).
+//!
+//! Greedy decode over a repetitive workload (the bench's cycling prompt)
+//! settles into short token cycles, which is exactly the structure an
+//! n-gram self-drafter predicts — acceptance >= 0.6 on the repetitive
+//! serve-bench workload is the tentpole gate.
+
+/// Highest-order suffix the drafter matches before falling back.
+const MAX_ORDER: usize = 3;
+/// Lowest-order suffix worth matching: order-1 self-drafting degenerates
+/// to "repeat the most recent bigram", which mispredicts far more than it
+/// accepts on non-repetitive text and wastes verify rows.
+const MIN_ORDER: usize = 2;
+
+/// Propose up to `k` draft tokens continuing `history` (prompt followed by
+/// every emitted token, most recent last). Returns fewer than `k` — often
+/// zero — when no order-3 or order-2 suffix of the working context has a
+/// prior occurrence: an honest "no idea" keeps the verify chunk small
+/// instead of burning rows on noise.
+pub fn draft_ngram(history: &[usize], k: usize) -> Vec<usize> {
+    let mut ctx: Vec<usize> = Vec::with_capacity(history.len() + k);
+    ctx.extend_from_slice(history);
+    let mut out = Vec::with_capacity(k);
+    while out.len() < k {
+        match next_by_suffix(&ctx) {
+            Some(t) => {
+                ctx.push(t);
+                out.push(t);
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+/// One-step prediction: the token that followed the most recent earlier
+/// occurrence of the context's longest matching suffix (order 3 first,
+/// then 2).
+fn next_by_suffix(ctx: &[usize]) -> Option<usize> {
+    for order in (MIN_ORDER..=MAX_ORDER).rev() {
+        if ctx.len() < order + 1 {
+            continue;
+        }
+        let suffix = &ctx[ctx.len() - order..];
+        // Most recent prior occurrence wins: walk candidate start
+        // positions backward, excluding the suffix's own position.
+        for start in (0..ctx.len() - order).rev() {
+            if &ctx[start..start + order] == suffix {
+                return Some(ctx[start + order]);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeating_cycle_is_fully_drafted() {
+        // History ends mid-cycle; the drafter should continue the cycle.
+        let h = [5, 8, 2, 5, 8, 2, 5, 8];
+        assert_eq!(draft_ngram(&h, 4), vec![2, 5, 8, 2]);
+    }
+
+    #[test]
+    fn order3_wins_over_order2_on_ambiguous_bigrams() {
+        // The bigram (1, 2) is followed by 9 early and 7 late; the
+        // trigram (0, 1, 2) disambiguates to 9.
+        let h = [0, 1, 2, 9, 4, 1, 2, 7, 0, 1, 2];
+        assert_eq!(draft_ngram(&h, 1), vec![9]);
+    }
+
+    #[test]
+    fn order2_fallback_fires_without_a_trigram_match() {
+        // No earlier trigram ends (3, 4), but the bigram (3, 4) -> 6.
+        let h = [3, 4, 6, 1, 3, 4];
+        assert_eq!(draft_ngram(&h, 1), vec![6]);
+    }
+
+    #[test]
+    fn most_recent_occurrence_wins_within_an_order() {
+        // (1, 2) -> 5 early, (1, 2) -> 8 later: recency picks 8. Distinct
+        // predecessors (0/9/4) keep every trigram suffix unique so the
+        // order-2 path decides.
+        let h = [0, 1, 2, 5, 9, 1, 2, 8, 4, 1, 2];
+        assert_eq!(draft_ngram(&h, 1), vec![8]);
+    }
+
+    #[test]
+    fn no_match_drafts_nothing() {
+        assert_eq!(draft_ngram(&[1, 2, 3, 4, 5], 4), Vec::<usize>::new());
+        assert_eq!(draft_ngram(&[], 4), Vec::<usize>::new());
+        assert_eq!(draft_ngram(&[7], 4), Vec::<usize>::new());
+        assert_eq!(draft_ngram(&[7, 7], 4), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn short_cycles_extend_through_drafted_tokens() {
+        // After drafting one 7, the working context's suffix (7, 7)
+        // matches again — drafted tokens feed later drafts.
+        let h = [7, 7, 7];
+        assert_eq!(draft_ngram(&h, 3), vec![7, 7, 7]);
+    }
+
+    #[test]
+    fn k_zero_is_a_no_op() {
+        assert_eq!(draft_ngram(&[1, 1, 1, 1], 0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let h: Vec<usize> = (0..64).map(|i| (i * 5) % 9).collect();
+        assert_eq!(draft_ngram(&h, 4), draft_ngram(&h, 4));
+    }
+}

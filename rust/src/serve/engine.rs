@@ -21,7 +21,8 @@ use crate::engine::inference::EngineConfig;
 use crate::engine::GraphExecutor;
 use crate::fx::builder::{
     build_batched_decode_graph, build_decode_graph, build_prefill_graph,
-    build_unified_round_graph, GraphDims, MAX_BATCH_WIDTH, PREFILL_CHUNKS,
+    build_unified_round_graph, build_unified_round_graph_multi_row, GraphDims,
+    MAX_BATCH_WIDTH, PREFILL_CHUNKS,
 };
 use crate::fx::graph::FxGraph;
 use crate::model::weights::ModelWeights;
@@ -35,6 +36,7 @@ use crate::webgpu::{
 };
 use crate::{Error, Result};
 
+use super::draft::draft_ngram;
 use super::metrics::ServeReport;
 use super::queue::RequestQueue;
 use super::session::{KvCache, SessionState};
@@ -67,13 +69,46 @@ pub struct StepHandle {
 
 /// One encoded unit of a scheduler round awaiting the round's single
 /// coalesced readback: the live logits buffer plus which sessions read
-/// which vocab row of it. A prefill final chunk and an interleaved decode
+/// which vocab rows of it. A prefill final chunk and an interleaved decode
 /// step own one row (`[1, vocab]`); a batched decode chunk owns one row
-/// per packed session (`[W, vocab]`).
+/// per packed session (`[W, vocab]`); a speculative verify member of a
+/// multi-row unified chunk owns `1 + drafted` consecutive rows of the
+/// `[W*C, vocab]` buffer.
 struct EncodedChunk {
     buf: BufferId,
-    /// (index into `active`, vocab-row index within `buf`).
-    owners: Vec<(usize, usize)>,
+    owners: Vec<ChunkOwner>,
+}
+
+/// One readback participant of an [`EncodedChunk`].
+struct ChunkOwner {
+    /// Index into `active`.
+    session: usize,
+    /// First vocab-row index within the chunk's logits buffer.
+    row: usize,
+    /// Consecutive rows owned starting at `row` (1 except for speculative
+    /// verifies, where it is `1 + drafted.len()`).
+    rows: usize,
+    /// Speculative verify state; `None` for plain single-token owners.
+    spec: Option<SpecOwner>,
+}
+
+impl ChunkOwner {
+    /// A plain one-row owner (every non-speculative readback).
+    fn single(session: usize, row: usize) -> Self {
+        ChunkOwner { session, row, rows: 1, spec: None }
+    }
+}
+
+/// The deferred state a speculative verify needs at demux time: the
+/// drafted tokens occupying rows `1..rows` (row 0 re-verifies the
+/// committed input token) and the decode position of row 0, which is the
+/// rewind base for the accept/rollback arithmetic (`pos = pos0 +
+/// accepted_prefix_len`). Rejected rows' KV entries are simply dead: the
+/// causal mask keeps later steps from attending past the rewound `pos`,
+/// and resumed decoding overwrites them in place.
+struct SpecOwner {
+    drafted: Vec<usize>,
+    pos0: usize,
 }
 
 pub struct ServingEngine<'r> {
@@ -122,6 +157,13 @@ pub struct ServingEngine<'r> {
     /// generations is one dispatch per layer op. `None` falls back to the
     /// split scheduling (prefill rounds, then batched decode rounds).
     pub unified_graph: Option<FxGraph>,
+    /// Speculative decode depth: up to `speculate` n-gram-drafted tokens
+    /// per decode session are verified in ONE unified chunk replay
+    /// (row 0 = the committed input, rows `1..=k` = the draft), with
+    /// host-side greedy accept/rollback at readback. Engages only on the
+    /// unified path and is clamped to `prefill_chunk - 1` (the draft must
+    /// fit one chunk alongside its committed row). 0 = off.
+    pub speculate: usize,
     /// Scheduler rounds completed (any path) — the denominator of the
     /// `dispatches_per_round` serving metric.
     pub rounds: u64,
@@ -298,8 +340,31 @@ impl<'r> ServingEngine<'r> {
         // enable time), so the same sticky slots and session cache sets
         // serve all three plans. The logits ring covers one round's
         // chunks-of-slots, exactly like the batched ring.
+        // Speculative decode rides the unified path exclusively: the
+        // draft rows ARE seq-dim chunk rows, so verifying k tokens reuses
+        // the prefill machinery (scatter at pos_base.., causal mask over
+        // valid_len rows) with a multi-row logits tail. Clamped so the
+        // committed token + draft fit one chunk.
+        let speculate = if batch_width >= 2 && prefill_chunk >= 2 && ec.unified {
+            ec.speculate.min(prefill_chunk - 1)
+        } else {
+            0
+        };
         let unified_graph = if batch_width >= 2 && prefill_chunk >= 2 && ec.unified {
-            let ug = build_unified_round_graph(&dims, ec.fusion, batch_width, prefill_chunk);
+            let ug = if speculate >= 1 {
+                // Multi-row tail: logits for EVERY valid row (`[W*C,
+                // vocab]`), so a verify chunk reads all k+1 next-token
+                // distributions from one replay. Same dispatch count —
+                // the three tail kernels swap 1-for-1.
+                build_unified_round_graph_multi_row(
+                    &dims,
+                    ec.fusion,
+                    batch_width,
+                    prefill_chunk,
+                )
+            } else {
+                build_unified_round_graph(&dims, ec.fusion, batch_width, prefill_chunk)
+            };
             ug.validate()?;
             let chunks_per_round =
                 (config.max_concurrent + batch_width - 1) / batch_width;
@@ -334,6 +399,7 @@ impl<'r> ServingEngine<'r> {
             prefill_graph,
             prefill_chunk,
             unified_graph,
+            speculate,
             rounds: 0,
         })
     }
@@ -965,7 +1031,7 @@ impl<'r> ServingEngine<'r> {
             Error::Graph("prefill plan produced no logits buffer".into())
         })?;
         Ok(if final_chunk {
-            Some(EncodedChunk { buf, owners: vec![(i, 0)] })
+            Some(EncodedChunk { buf, owners: vec![ChunkOwner::single(i, 0)] })
         } else {
             None
         })
@@ -986,7 +1052,7 @@ impl<'r> ServingEngine<'r> {
         let buf = h.logits_buf.ok_or_else(|| {
             Error::Graph("planned decode produced no logits buffer".into())
         })?;
-        Ok(EncodedChunk { buf, owners: vec![(i, 0)] })
+        Ok(EncodedChunk { buf, owners: vec![ChunkOwner::single(i, 0)] })
     }
 
     /// Pack the given active sessions into batched-plan replays by their
@@ -1115,7 +1181,7 @@ impl<'r> ServingEngine<'r> {
                 buf: logits_buf.ok_or_else(|| {
                     Error::Graph("batched plan produced no logits buffer".into())
                 })?,
-                owners: members.iter().map(|&(row, i)| (i, row)).collect(),
+                owners: members.iter().map(|&(row, i)| ChunkOwner::single(i, row)).collect(),
             });
         }
         Ok(chunks)
@@ -1149,6 +1215,7 @@ impl<'r> ServingEngine<'r> {
         let width = self.batch_width;
         let chunk = self.prefill_chunk;
         let rows = width * chunk;
+        let speculate = self.speculate;
         let (hidden, max_seq) = (self.dims.hidden, self.dims.max_seq);
         // chunk-of-slots number -> [(row within chunk, active index)].
         let mut by_chunk: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
@@ -1177,6 +1244,11 @@ impl<'r> ServingEngine<'r> {
             let mut taken = vec![0usize; width];
             let mut was_prefill = vec![false; width];
             let mut final_prefill = vec![false; width];
+            // Deferred accept/rollback state for speculative verify rows
+            // (`taken` stays 0 for these: position and step advance wait
+            // for the readback's greedy match).
+            let mut spec_state: Vec<Option<SpecOwner>> =
+                (0..width).map(|_| None).collect();
             {
                 let ServingEngine { executor, weights, active, .. } = &mut *self;
                 for &(row, i) in &members {
@@ -1215,14 +1287,46 @@ impl<'r> ServingEngine<'r> {
                         let (token, _) = s.take_input().ok_or_else(|| {
                             Error::Graph(format!("session {} has no input token", s.id))
                         })?;
-                        let emb = hostops::embed(&weights.embedding, token)?;
-                        let at = row * chunk * hidden;
-                        xbuf[at..at + hidden].copy_from_slice(emb.as_f32()?);
-                        pos_f[row * chunk] = s.pos as f32;
-                        pos_base[row] = s.pos as i32;
-                        valid_len[row] = 1;
-                        mask[row] = 1;
-                        taken[row] = 1;
+                        if speculate >= 1 {
+                            // Speculative verify: row 0 re-feeds the
+                            // committed token, rows 1..=k feed the n-gram
+                            // draft — this slot is a valid_len = 1 + k
+                            // chunk whose one replay yields every draft
+                            // row's next-token logits. The draft is
+                            // clamped so the session never overshoots its
+                            // request or the KV capacity; position/step
+                            // advance is DEFERRED to the readback's
+                            // accept/rollback (a rejected row rewinds).
+                            let remaining = s.n_new - s.tokens.len();
+                            let k_eff = speculate
+                                .min(remaining.saturating_sub(1))
+                                .min(max_seq - 1 - s.pos);
+                            let mut hist =
+                                Vec::with_capacity(s.prompt.len() + s.tokens.len());
+                            hist.extend_from_slice(&s.prompt);
+                            hist.extend_from_slice(&s.tokens);
+                            let drafted = draft_ngram(&hist, k_eff);
+                            let inputs = std::iter::once(&token).chain(drafted.iter());
+                            for (r, &t) in inputs.enumerate() {
+                                let emb = hostops::embed(&weights.embedding, t)?;
+                                let at = (row * chunk + r) * hidden;
+                                xbuf[at..at + hidden].copy_from_slice(emb.as_f32()?);
+                                pos_f[row * chunk + r] = (s.pos + r) as f32;
+                            }
+                            pos_base[row] = s.pos as i32;
+                            valid_len[row] = (1 + drafted.len()) as i32;
+                            mask[row] = 1;
+                            spec_state[row] = Some(SpecOwner { drafted, pos0: s.pos });
+                        } else {
+                            let emb = hostops::embed(&weights.embedding, token)?;
+                            let at = row * chunk * hidden;
+                            xbuf[at..at + hidden].copy_from_slice(emb.as_f32()?);
+                            pos_f[row * chunk] = s.pos as f32;
+                            pos_base[row] = s.pos as i32;
+                            valid_len[row] = 1;
+                            mask[row] = 1;
+                            taken[row] = 1;
+                        }
                     }
                 }
             }
@@ -1290,13 +1394,32 @@ impl<'r> ServingEngine<'r> {
             }
 
             // Readback membership: decode steps and FINAL prompt chunks
-            // own their slot's logits row; intermediate chunks (and
-            // padding) never synchronize.
-            let owners: Vec<(usize, usize)> = members
-                .iter()
-                .filter(|&&(row, _)| !was_prefill[row] || final_prefill[row])
-                .map(|&(row, i)| (i, row))
-                .collect();
+            // own their slot's logits rows; intermediate chunks (and
+            // padding) never synchronize. The single-row contract packs
+            // one vocab row per slot (`[W, vocab]`); the multi-row
+            // (speculative) contract keeps EVERY chunk row (`[W*C,
+            // vocab]`), so slot `j`'s rows start at `j * chunk`: prefill
+            // finals read their last valid row, verifies read all
+            // `1 + drafted` rows.
+            let mut owners: Vec<ChunkOwner> = Vec::new();
+            for &(row, i) in &members {
+                if was_prefill[row] && !final_prefill[row] {
+                    continue;
+                }
+                owners.push(if let Some(spec) = spec_state[row].take() {
+                    let owned = 1 + spec.drafted.len();
+                    ChunkOwner {
+                        session: i,
+                        row: row * chunk,
+                        rows: owned,
+                        spec: Some(spec),
+                    }
+                } else if speculate >= 1 {
+                    ChunkOwner::single(i, row * chunk + taken[row] - 1)
+                } else {
+                    ChunkOwner::single(i, row)
+                });
+            }
             if owners.is_empty() {
                 // All-intermediate chunk: nothing reads back this round.
                 continue;
@@ -1333,12 +1456,49 @@ impl<'r> ServingEngine<'r> {
         let k_all: u64 = chunks.iter().map(|c| c.owners.len() as u64).sum();
         let mut j = 0usize;
         for (c, bytes) in chunks.iter().zip(&all_bytes) {
-            for &(i, row) in &c.owners {
-                let s = &mut self.active[i];
+            for o in &c.owners {
+                let s = &mut self.active[o.session];
                 s.metrics.sync_virtual_ns += share(sync_d, k_all, j);
                 j += 1;
-                let next = argmax_bytes(&bytes[row * row_bytes..(row + 1) * row_bytes]);
-                s.note_token(next, now);
+                let Some(spec) = &o.spec else {
+                    let next =
+                        argmax_bytes(&bytes[o.row * row_bytes..(o.row + 1) * row_bytes]);
+                    s.note_token(next, now);
+                    continue;
+                };
+                // Speculative accept/rollback. Row r's argmax is what
+                // greedy decode emits after consuming the row's input, so
+                // row 0 is always real; row r's output counts only while
+                // every drafted input before it matched the real stream —
+                // the greedy-matched prefix. The deferred position advance
+                // lands exactly past the accepted rows: rejected rows'
+                // scattered KV entries sit beyond the rewound `pos`, never
+                // attended (causal mask) and overwritten by later steps,
+                // and the final emitted token becomes `last_token`, so the
+                // next round naturally resubmits from the divergence.
+                let outs: Vec<usize> = (0..o.rows)
+                    .map(|r| {
+                        let at = (o.row + r) * row_bytes;
+                        argmax_bytes(&bytes[at..at + row_bytes])
+                    })
+                    .collect();
+                let mut emitted = vec![outs[0]];
+                for r in 1..o.rows {
+                    if spec.drafted[r - 1] == emitted[r - 1] {
+                        emitted.push(outs[r]);
+                    } else {
+                        break;
+                    }
+                }
+                let remaining = s.n_new.saturating_sub(s.tokens.len());
+                emitted.truncate(remaining.max(1));
+                s.metrics.drafted += spec.drafted.len() as u64;
+                s.metrics.accepted += (emitted.len() - 1) as u64;
+                s.metrics.steps += emitted.len() as u64;
+                s.pos = spec.pos0 + emitted.len();
+                for &t in &emitted {
+                    s.note_token(t, now);
+                }
             }
         }
         Ok(())
@@ -1468,6 +1628,7 @@ impl<'r> ServingEngine<'r> {
         }
         if self.unified_graph.is_some() {
             report.unified = true;
+            report.speculate = self.speculate;
             if let Some(ur) = self.executor.unified_runner() {
                 report.plan_build_virtual_ns += ur.inner().build_virtual_ns;
                 report.plan_build_real_ns += ur.inner().build_real_ns;

@@ -69,6 +69,14 @@ pub struct ServeReport {
     /// one dispatch per layer op per chunk of `batch_width` slots).
     /// `batch_width`/`prefill_chunk` then report the unified plan's W/C.
     pub unified: bool,
+    /// Speculative draft depth the run served with (0 = off; >= 1 = up to
+    /// that many n-gram-drafted tokens verified per session per unified
+    /// round). [`ServeReport::tokens_per_round`] is the headline it moves.
+    pub speculate: usize,
+    /// Speculative decode: draft tokens submitted to verify rounds.
+    pub drafted: u64,
+    /// Speculative decode: draft tokens accepted (greedy-matched).
+    pub accepted: u64,
     /// True when the run replayed a compiled plan instead of eager-
     /// interpreting the graph (the [`ServeReport::exec_mode`] header
     /// derives from this).
@@ -100,6 +108,8 @@ impl ServeReport {
         let mut prefill_dispatches = 0u64;
         let mut prefill_ms_sum = 0f64;
         let mut first_decode_ms_sum = 0f64;
+        let mut drafted = 0u64;
+        let mut accepted = 0u64;
         let mut ttft_ms = Vec::with_capacity(n);
         let mut tps_sum = 0f64;
         for s in sessions {
@@ -115,6 +125,8 @@ impl ServeReport {
             steps += s.metrics.steps;
             prefill_steps += s.metrics.prefill_steps;
             prefill_dispatches += s.metrics.prefill_dispatches;
+            drafted += s.metrics.drafted;
+            accepted += s.metrics.accepted;
             prefill_ms_sum += s.metrics.prefill_ns() as f64 / 1e6;
             first_decode_ms_sum += s.metrics.first_decode_ns() as f64 / 1e6;
             ttft_ms.push(s.metrics.ttft_ns() as f64 / 1e6);
@@ -153,6 +165,9 @@ impl ServeReport {
             batch_width: 0,
             prefill_chunk: 0,
             unified: false,
+            speculate: 0,
+            drafted,
+            accepted,
             planned: false,
             plan_build_virtual_ns: 0,
             plan_build_real_ns: 0,
@@ -198,6 +213,9 @@ impl ServeReport {
                 "+unified(w={},c={})",
                 self.batch_width, self.prefill_chunk
             ));
+            if self.speculate >= 1 {
+                label.push_str(&format!("+spec(k={})", self.speculate));
+            }
             return label;
         }
         if self.batch_width >= 2 {
@@ -222,6 +240,25 @@ impl ServeReport {
     /// ceil(N / width) x (dispatches/step).
     pub fn dispatches_per_round(&self) -> f64 {
         self.dispatches as f64 / self.rounds.max(1) as f64
+    }
+
+    /// Generated tokens per scheduler round — the speculative-decode
+    /// headline: non-speculative greedy decode emits at most one token per
+    /// session per round; accepted drafts push this past 1x (the
+    /// per-generated-token share of the paper's per-round dispatch bill
+    /// falls by the same factor).
+    pub fn tokens_per_round(&self) -> f64 {
+        self.total_tokens as f64 / self.rounds.max(1) as f64
+    }
+
+    /// Fraction of drafted tokens the verify rounds accepted (0.0 when
+    /// nothing was drafted).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
     }
 }
 
@@ -251,6 +288,10 @@ mod tests {
         // Unified subsumes the batched + prefill labels.
         r.unified = true;
         assert_eq!(r.mode_label(), "planned+unified(w=4,c=16)");
+        // Speculation only labels (and only engages) on the unified path.
+        r.speculate = 4;
+        assert_eq!(r.mode_label(), "planned+unified(w=4,c=16)+spec(k=4)");
+        r.speculate = 0;
         r.unified = false;
         r.batch_width = 0;
         assert_eq!(r.mode_label(), "planned+prefill(c=16)");
@@ -266,6 +307,36 @@ mod tests {
         assert!((r.dispatches_per_round() - 59.0).abs() < 1e-9);
         r.rounds = 0; // guard: no division by zero
         assert!((r.dispatches_per_round() - 236.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speculative_counters_and_rates() {
+        let mut r = ServeReport::from_sessions(&[], 1_000);
+        // Nothing drafted: rate is 0, not NaN.
+        assert_eq!(r.acceptance_rate(), 0.0);
+        r.drafted = 20;
+        r.accepted = 15;
+        assert!((r.acceptance_rate() - 0.75).abs() < 1e-9);
+        r.total_tokens = 18;
+        r.rounds = 9;
+        assert!((r.tokens_per_round() - 2.0).abs() < 1e-9);
+        r.rounds = 0; // guard: no division by zero
+        assert!((r.tokens_per_round() - 18.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggregates_drafted_and_accepted_from_sessions() {
+        let dims = GraphDims::qwen_tiny();
+        let mut a = SessionState::new(0, vec![1], 2, &dims, 0, 0);
+        let mut b = SessionState::new(1, vec![2], 2, &dims, 0, 0);
+        a.metrics.drafted = 6;
+        a.metrics.accepted = 4;
+        b.metrics.drafted = 2;
+        b.metrics.accepted = 2;
+        let r = ServeReport::from_sessions(&[a, b], 1_000);
+        assert_eq!(r.drafted, 8);
+        assert_eq!(r.accepted, 6);
+        assert!((r.acceptance_rate() - 0.75).abs() < 1e-9);
     }
 
     #[test]

@@ -76,11 +76,13 @@
 //! [`Device::map_read_many`]: crate::webgpu::Device::map_read_many
 //! [`PhaseTimeline`]: crate::webgpu::PhaseTimeline
 
+pub mod draft;
 pub mod engine;
 pub mod metrics;
 pub mod queue;
 pub mod session;
 
+pub use draft::draft_ngram;
 pub use engine::{argmax_bytes, ServeConfig, ServingEngine, StepHandle};
 pub use metrics::ServeReport;
 pub use queue::{Request, RequestQueue};

@@ -124,6 +124,11 @@ pub struct SessionMetrics {
     /// token embedding + position uniforms; eager mode re-uploads every
     /// activation and both caches per step).
     pub upload_bytes: u64,
+    /// Speculative decode: draft tokens submitted to verify rounds.
+    pub drafted: u64,
+    /// Speculative decode: draft tokens accepted (greedy-matched). The
+    /// per-session acceptance rate is `accepted / drafted`.
+    pub accepted: u64,
     /// Per generated token: [TTFT, then per-decode-step deltas].
     pub per_token_ns: Vec<u64>,
 }

@@ -32,6 +32,8 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
             "speedup",
             "mean TTFT (ms)",
             "disp/round",
+            "tok/round",
+            "accept",
             "prefill disp/tok",
             "framework (us/tok)",
             "dispatch (us/tok)",
@@ -51,6 +53,8 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
             format!("{:.3}x", r.agg_tok_per_s / base),
             f2(r.mean_ttft_ms),
             f1(r.dispatches_per_round()),
+            f2(r.tokens_per_round()),
+            f2(r.acceptance_rate()),
             f2(r.prefill_dispatches_per_prompt_token()),
             f1(r.us_per_token(r.framework_virtual_ns)),
             f1(r.us_per_token(r.phase_total_ns())),
@@ -87,6 +91,13 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
          ingestion pays the full per-step dispatch count per prompt token; \
          chunked prefill (the planned serving default) pays ~1/C of it, \
          the prompt-phase twin of the batched-decode amortization.",
+    );
+    t.note(
+        "tok/round = generated tokens per serving round: 1 x sessions \
+         without speculation; speculative decode (+spec modes) lifts it by \
+         verifying k drafted tokens per session in the same one-replay \
+         round. accept = accepted drafts / drafted (0 with speculation \
+         off).",
     );
     t
 }
@@ -173,7 +184,21 @@ mod tests {
         let md = scaling_table(&rows).to_markdown();
         assert!(md.contains("S1"));
         assert!(md.contains("sessions"));
+        assert!(md.contains("tok/round"));
+        assert!(md.contains("accept"));
         assert!(md.lines().filter(|l| l.starts_with('|')).count() >= 4);
+    }
+
+    #[test]
+    fn scaling_table_reports_speculative_columns() {
+        let mut r = fake_report(1, 6);
+        r.rounds = 3;
+        r.drafted = 4;
+        r.accepted = 3;
+        let md = scaling_table(&[(1, r)]).to_markdown();
+        // 6 tokens over 3 rounds; 3 of 4 drafts accepted.
+        assert!(md.contains("2.00"), "{md}");
+        assert!(md.contains("0.75"), "{md}");
     }
 
     #[test]

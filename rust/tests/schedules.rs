@@ -5,13 +5,18 @@
 //! arrivals, prompt lengths spanning the chunking equivalence classes
 //! {1, C-1, C, C+1, 3C+5, 128}, varied generation lengths so sessions
 //! retire mid-run, and more requests than `max_concurrent` so admission
-//! churns slots). Every schedule runs through THREE scheduling modes over
+//! churns slots). Every schedule runs through FOUR scheduling modes over
 //! the same weights:
 //!
 //!   - **unified**      — the serving default: every round replays the
 //!                        seq-x-batch `[W*C, H]` graph (mixed
 //!                        prefill/decode rounds, one dispatch per layer
 //!                        op per chunk of slots);
+//!   - **speculative**  — unified plus `speculate: 3`: decode slots carry
+//!                        up to 3 n-gram-drafted tokens per round, scored
+//!                        by the multi-row verify tail and greedily
+//!                        accepted/rewound on the host — a scheduling
+//!                        change only, never a sampling change;
 //!   - **split**        — `unified: false`: PR-4/PR-5 scheduling (chunked
 //!                        prefill rounds, then batched decode rounds);
 //!   - **interleaved**  — `batch_width: 0, prefill_chunk: 0`: per-session
@@ -20,8 +25,11 @@
 //! The suite asserts BYTE-level equivalence: identical token streams for
 //! every request, and identical spilled-KV-cache bytes for a probe
 //! session evicted mid-run right after its first generated token (the
-//! same per-session state point in all three modes, however many rounds
-//! each mode took to reach it). A failure prints the offending seed.
+//! same per-session state point in all four modes, however many rounds
+//! each mode took to reach it — the probe fires at the final prefill
+//! chunk, before any speculative round touches the session, so rejected
+//! drafts' dead KV rows can never enter the comparison). A failure prints
+//! the offending seed.
 //!
 //! Seeds are split across several #[test] fns so the default test
 //! harness runs them in parallel.
@@ -86,7 +94,15 @@ fn gen_schedule(seed: u64) -> Schedule {
 }
 
 fn unified_cfg() -> EngineConfig {
-    EngineConfig { fusion: FusionConfig::fused(), exec: ExecMode::Planned, ..EngineConfig::tiny_fused() }
+    EngineConfig {
+        fusion: FusionConfig::fused(),
+        exec: ExecMode::Planned,
+        ..EngineConfig::tiny_fused()
+    }
+}
+
+fn spec_cfg() -> EngineConfig {
+    EngineConfig { speculate: 3, ..unified_cfg() }
 }
 
 fn split_cfg() -> EngineConfig {
@@ -176,13 +192,16 @@ fn differential(reg: &Registry, seeds: std::ops::Range<u64>) {
             sched.target
         );
         let (u_toks, u_kv) = run_schedule(reg, unified_cfg(), &sched);
+        let (p_toks, p_kv) = run_schedule(reg, spec_cfg(), &sched);
         let (s_toks, s_kv) = run_schedule(reg, split_cfg(), &sched);
         let (i_toks, i_kv) = run_schedule(reg, interleaved_cfg(), &sched);
+        assert_eq!(u_toks, p_toks, "{ctx}: unified vs speculative token streams diverged");
         assert_eq!(u_toks, s_toks, "{ctx}: unified vs split token streams diverged");
         assert_eq!(u_toks, i_toks, "{ctx}: unified vs interleaved token streams diverged");
         // The probe session generated at least one token in every mode,
         // so the spill always captured a snapshot.
         assert!(!u_kv.is_empty(), "{ctx}: probe never fired");
+        assert_eq!(u_kv, p_kv, "{ctx}: unified vs speculative spilled-KV bytes diverged");
         assert_eq!(u_kv, s_kv, "{ctx}: unified vs split spilled-KV bytes diverged");
         assert_eq!(u_kv, i_kv, "{ctx}: unified vs interleaved spilled-KV bytes diverged");
     }
@@ -234,10 +253,13 @@ fn oversubscribed_wide_rounds_match_across_modes() {
             .collect(),
     };
     let (u_toks, u_kv) = run_schedule(&reg, unified_cfg(), &sched);
+    let (p_toks, p_kv) = run_schedule(&reg, spec_cfg(), &sched);
     let (s_toks, s_kv) = run_schedule(&reg, split_cfg(), &sched);
     let (i_toks, i_kv) = run_schedule(&reg, interleaved_cfg(), &sched);
+    assert_eq!(u_toks, p_toks, "wide rounds: unified vs speculative diverged");
     assert_eq!(u_toks, s_toks, "wide rounds: unified vs split diverged");
     assert_eq!(u_toks, i_toks, "wide rounds: unified vs interleaved diverged");
+    assert_eq!(u_kv, p_kv, "wide rounds: spilled-KV bytes diverged (speculative)");
     assert_eq!(u_kv, s_kv, "wide rounds: spilled-KV bytes diverged (split)");
     assert_eq!(u_kv, i_kv, "wide rounds: spilled-KV bytes diverged (interleaved)");
 }
@@ -265,10 +287,13 @@ fn unfused_schedule_matches_across_modes() {
         cfg
     };
     let (u_toks, u_kv) = run_schedule(&reg, unfused(unified_cfg()), &sched);
+    let (p_toks, p_kv) = run_schedule(&reg, unfused(spec_cfg()), &sched);
     let (s_toks, s_kv) = run_schedule(&reg, unfused(split_cfg()), &sched);
     let (i_toks, i_kv) = run_schedule(&reg, unfused(interleaved_cfg()), &sched);
+    assert_eq!(u_toks, p_toks, "unfused: unified vs speculative diverged");
     assert_eq!(u_toks, s_toks, "unfused: unified vs split diverged");
     assert_eq!(u_toks, i_toks, "unfused: unified vs interleaved diverged");
+    assert_eq!(u_kv, p_kv, "unfused: spilled-KV bytes diverged (speculative)");
     assert_eq!(u_kv, s_kv, "unfused: spilled-KV bytes diverged (split)");
     assert_eq!(u_kv, i_kv, "unfused: spilled-KV bytes diverged (interleaved)");
 }

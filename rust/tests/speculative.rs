@@ -1,0 +1,174 @@
+//! Speculative multi-token decode acceptance suite.
+//!
+//! The tentpole contract, pinned at fixed seeds: speculation is a
+//! SCHEDULING change, never a sampling change — token streams must be
+//! bit-identical to plain greedy decode at every acceptance rate — and on
+//! the repetitive bench workload (synthetic 32-token prompt, long
+//! generation, where greedy decode settles into a short token cycle the
+//! order-2/3 n-gram drafter predicts) it must clear the tentpole gates:
+//! acceptance >= 0.6 and tokens/round >= 1.5x a --no-speculate twin.
+//!
+//! Engagement gating is also pinned: speculation rides the unified
+//! scheduling path exclusively, so every config that disables unified
+//! rounds (eager exec, --no-unified, width/chunk 0, device argmax,
+//! single-slot engines) must resolve to speculate = 0 — those paths keep
+//! their pre-speculation behavior byte-for-byte.
+
+use wdb::engine::{EngineConfig, ExecMode};
+use wdb::runtime::Registry;
+use wdb::serve::{ServeConfig, ServeReport, ServingEngine};
+
+/// Same fixed seed the serve bench uses for rows and twins.
+const SEED: u64 = 0x5EBE;
+
+fn registry() -> Registry {
+    Registry::builtin().expect("builtin registry")
+}
+
+fn cfg(speculate: usize) -> EngineConfig {
+    EngineConfig { exec: ExecMode::Planned, speculate, ..EngineConfig::tiny_fused() }
+}
+
+/// The serve bench's synthetic prompt (`--prompt N`).
+fn synth_prompt(n: usize) -> Vec<usize> {
+    (0..n).map(|i| 32 + (i * 7) % 200).collect()
+}
+
+/// Build, reseed, submit `requests`, run dry. Returns the per-request
+/// token streams (submission order) and the report.
+fn run(
+    reg: &Registry,
+    cfg: EngineConfig,
+    max_concurrent: usize,
+    requests: &[(Vec<usize>, usize)],
+) -> (Vec<Vec<usize>>, ServeReport) {
+    let mut se = ServingEngine::new(reg, ServeConfig { engine: cfg, max_concurrent })
+        .expect("serving engine");
+    se.reseed(SEED);
+    let ids: Vec<u64> = requests
+        .iter()
+        .map(|(prompt, tokens)| se.submit(prompt, *tokens).expect("submit"))
+        .collect();
+    let report = se.run_to_completion().expect("run");
+    let done = se.drain_finished();
+    let toks = ids
+        .iter()
+        .map(|id| done.iter().find(|s| s.id == *id).expect("finished").tokens.clone())
+        .collect();
+    (toks, report)
+}
+
+/// The tentpole gate, at the bench's fixed seed: on the repetitive
+/// workload, speculation emits >= 1.5x the tokens per round of a plain
+/// twin at >= 0.6 acceptance, with bit-identical token streams.
+#[test]
+fn repetitive_workload_clears_acceptance_and_throughput_gates() {
+    let reg = registry();
+    let reqs: Vec<(Vec<usize>, usize)> = vec![(synth_prompt(32), 120); 4];
+    let (spec_toks, sr) = run(&reg, cfg(4), 4, &reqs);
+    let (plain_toks, pr) = run(&reg, cfg(0), 4, &reqs);
+    assert_eq!(spec_toks, plain_toks, "speculation changed the token streams");
+    assert!(
+        sr.acceptance_rate() >= 0.6,
+        "acceptance {:.2} < 0.6 ({} drafted / {} accepted)",
+        sr.acceptance_rate(),
+        sr.drafted,
+        sr.accepted
+    );
+    assert!(
+        sr.tokens_per_round() >= 1.5 * pr.tokens_per_round(),
+        "tokens/round {:.2} < 1.5 x plain {:.2} ({} vs {} rounds)",
+        sr.tokens_per_round(),
+        pr.tokens_per_round(),
+        sr.rounds,
+        pr.rounds
+    );
+}
+
+/// Identity must hold regardless of acceptance: a short non-repetitive
+/// prompt (the paper's serve workload shape) drafts little or nothing,
+/// and the streams still match bit-for-bit.
+#[test]
+fn non_repetitive_streams_stay_bit_identical() {
+    let reg = registry();
+    let reqs: Vec<(Vec<usize>, usize)> = (0..3)
+        .map(|i| ((0..5 + i).map(|t| 40 + (t * 11 + i) % 300).collect(), 12))
+        .collect();
+    let (spec_toks, sr) = run(&reg, cfg(4), 3, &reqs);
+    let (plain_toks, _) = run(&reg, cfg(0), 3, &reqs);
+    assert_eq!(spec_toks, plain_toks);
+    assert_eq!(sr.speculate, 4, "unified path should have engaged speculation");
+}
+
+/// Draft length clamps so committed token + draft always fit the chunk
+/// and the KV capacity: near-max_seq sessions and tiny generation budgets
+/// must not overrun (and stay identical to plain decode).
+#[test]
+fn draft_length_clamps_at_sequence_and_generation_limits() {
+    let reg = registry();
+    // prompt + gen - 1 = 159 = max_seq - 1: the tightest admissible fit.
+    let near_cap = vec![(synth_prompt(150), 10); 2];
+    let (s, _) = run(&reg, cfg(4), 2, &near_cap);
+    let (p, _) = run(&reg, cfg(0), 2, &near_cap);
+    assert_eq!(s, p, "near-capacity sessions diverged");
+    // remaining - 1 = 1: at most one draft row per round is admissible.
+    let tiny_gen = vec![(synth_prompt(32), 2); 4];
+    let (s, _) = run(&reg, cfg(4), 4, &tiny_gen);
+    let (p, _) = run(&reg, cfg(0), 4, &tiny_gen);
+    assert_eq!(s, p, "tiny-generation sessions diverged");
+}
+
+/// ServeReport plumbs the speculative counters and labels the mode.
+#[test]
+fn report_counts_drafts_and_labels_the_mode() {
+    let reg = registry();
+    let reqs: Vec<(Vec<usize>, usize)> = vec![(synth_prompt(32), 120); 2];
+    let (_, r) = run(&reg, cfg(4), 2, &reqs);
+    assert_eq!(r.speculate, 4);
+    assert!(r.drafted > 0, "repetitive workload should draft");
+    assert!(r.accepted > 0, "repetitive workload should accept");
+    assert!(r.accepted <= r.drafted);
+    assert!(r.acceptance_rate() > 0.0 && r.acceptance_rate() <= 1.0);
+    assert!(
+        r.mode_label().contains("+spec(k=4)"),
+        "mode label missing speculation: {}",
+        r.mode_label()
+    );
+    // Plain runs advertise no speculation and count nothing.
+    let (_, r0) = run(&reg, cfg(0), 2, &reqs[..1]);
+    assert_eq!((r0.speculate, r0.drafted, r0.accepted), (0, 0, 0));
+    assert!(!r0.mode_label().contains("+spec"));
+}
+
+/// Speculation rides the unified path only: every config that disables
+/// unified rounds resolves to speculate = 0.
+#[test]
+fn speculation_disengages_off_the_unified_path() {
+    let reg = registry();
+    let off = [
+        EngineConfig { exec: ExecMode::Eager, ..cfg(4) },
+        EngineConfig { unified: false, ..cfg(4) },
+        EngineConfig { batch_width: 0, ..cfg(4) },
+        EngineConfig { prefill_chunk: 0, ..cfg(4) },
+        EngineConfig { device_argmax: true, ..cfg(4) },
+    ];
+    for ec in off {
+        let se = ServingEngine::new(&reg, ServeConfig { engine: ec, max_concurrent: 4 })
+            .expect("serving engine");
+        assert_eq!(se.speculate, 0);
+    }
+    // Single-slot engines never batch, so they never speculate either.
+    let se = ServingEngine::new(&reg, ServeConfig { engine: cfg(4), max_concurrent: 1 })
+        .expect("serving engine");
+    assert_eq!(se.speculate, 0);
+    // And the engaged path clamps the draft length into one chunk.
+    let se = ServingEngine::new(
+        &reg,
+        ServeConfig {
+            engine: EngineConfig { prefill_chunk: 8, ..cfg(99) },
+            max_concurrent: 4,
+        },
+    )
+    .expect("serving engine");
+    assert_eq!(se.speculate, 7, "speculate must clamp to prefill_chunk - 1");
+}

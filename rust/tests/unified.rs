@@ -283,7 +283,11 @@ fn unified_gates_on_mode_width_chunk_argmax_and_concurrency() {
     assert!(off.batched_graph.is_some());
     assert!(off.prefill_graph.is_some());
 
-    let eager = engine(&reg, EngineConfig { exec: ExecMode::Eager, ..EngineConfig::tiny_fused() }, 2);
+    let eager = engine(
+        &reg,
+        EngineConfig { exec: ExecMode::Eager, ..EngineConfig::tiny_fused() },
+        2,
+    );
     assert!(eager.unified_graph.is_none(), "eager engines must not unify");
 
     let argmax = engine(
