@@ -164,7 +164,7 @@ Commands:
   serve [--requests 16] [--tokens 10] [--concurrent 4] [--profile dawn]
         [--exec-mode planned] [--batch-width 4 | --no-batch]
         [--prefill-chunk 16] [--no-unified]
-        [--speculate K | --no-speculate]
+        [--speculate K | --no-speculate] [--inject-faults SEED]
                                   FIFO request loop over the serving engine
                                   (planned replay + resident KV caches +
                                   UNIFIED continuous-batching rounds — one
@@ -177,12 +177,17 @@ Commands:
                                   --speculate K drafts up to K tokens per
                                   session per round via n-gram self-drafting
                                   and verifies them in ONE chunk replay,
-                                  default off). The report header prints
-                                  the mode that ran.
+                                  default off; --inject-faults SEED arms
+                                  a deterministic transient-fault schedule
+                                  in the device layer — recovery rolls the
+                                  hit sessions back to their last committed
+                                  token and replays, never changing the
+                                  streams). The report header prints the
+                                  mode that ran.
   serve-bench [--sessions 1,2,4,8] [--tokens 16] [--profile dawn]
               [--exec-mode planned] [--batch-width 4 | --no-batch]
               [--prefill-chunk 16] [--prompt 128] [--no-unified]
-              [--speculate K | --no-speculate]
+              [--speculate K | --no-speculate] [--inject-faults SEED]
               [--out DIR]         multi-session serving scaling table:
                                   aggregate tok/s + per-phase attribution
                                   + dispatches/round + tok/round +
@@ -202,7 +207,11 @@ Commands:
                                   identity vs a --no-speculate twin at
                                   every N (plus tokens/round >= 1.5x the
                                   twin on the repetitive workload:
-                                  --prompt 32 with --tokens >= 96).
+                                  --prompt 32 with --tokens >= 96); with
+                                  --inject-faults SEED, hard-gates token-
+                                  stream identity vs a fault-free twin at
+                                  every N (faults may cost time, never
+                                  tokens) and zero failed sessions.
   plan-bench [--tokens 8] [--dps 16] [--profile dawn] [--out DIR]
                                   table P1: eager vs planned per-op
                                   framework overhead across workloads x
@@ -548,6 +557,21 @@ fn speculate_from_flags(args: &Args) -> Result<usize> {
     }
 }
 
+/// Resolve the fault-injection seed from `--inject-faults SEED` (default:
+/// off). A seed arms a deterministic transient-fault schedule (dispatch
+/// failures, allocation failures, map timeouts) in the device layer;
+/// quarantine + snapshot-replay recovery must keep every token stream
+/// byte-identical, which `serve-bench` hard-gates against a no-fault twin.
+fn fault_seed_from_flags(args: &Args) -> Result<Option<u64>> {
+    match args.flag("inject-faults") {
+        Some(v) => v
+            .parse::<u64>()
+            .map(Some)
+            .map_err(|_| Error::Graph(format!("bad --inject-faults '{v}' (needs a u64 seed)"))),
+        None => Ok(None),
+    }
+}
+
 /// Fixed seed every serve-bench engine (rows and twins) is reseeded with,
 /// so twin runs are comparable call-for-call.
 const SERVE_BENCH_SEED: u64 = 0x5EBE;
@@ -601,6 +625,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let batch_width = batch_width_from_flags(args)?;
     let prefill_chunk = prefill_chunk_from_flags(args)?;
     let speculate = speculate_from_flags(args)?;
+    let fault_seed = fault_seed_from_flags(args)?;
     let mut se = ServingEngine::new(
         &registry,
         ServeConfig {
@@ -611,6 +636,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 prefill_chunk,
                 unified: !args.has("no-unified"),
                 speculate,
+                fault_seed,
                 ..EngineConfig::tiny_fused()
             },
             max_concurrent: concurrent,
@@ -642,6 +668,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.rounds,
         report.dispatches_per_round()
     );
+    if fault_seed.is_some() {
+        println!(
+            "faults: {} injected, {} retries, {} sessions recovered, {} failed, \
+             {} pool evictions",
+            report.faults_injected,
+            report.retries,
+            report.recovered_sessions,
+            report.failed_sessions,
+            report.pool_evictions
+        );
+    }
     let done = se.drain_finished();
     let mut sorted: Vec<f64> = done
         .iter()
@@ -698,6 +735,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let tok = ByteTokenizer::new(registry.config("qwen-tiny")?.vocab);
     let prompt = prompt_from_flags(args, &tok)?;
     let unified = !args.has("no-unified");
+    let fault_seed = fault_seed_from_flags(args)?;
     let ec = EngineConfig {
         profile: profile.clone(),
         exec,
@@ -705,6 +743,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         prefill_chunk,
         unified,
         speculate,
+        fault_seed,
         ..EngineConfig::tiny_fused()
     };
     // Uniform bench workload: every row/twin submits n copies of this.
@@ -713,11 +752,14 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     println!(
         "Serving scaling bench: {} tokens/session, prompt {} tokens, profile {}, \
          exec mode {exec:?}, batch width {batch_width}, prefill chunk {prefill_chunk}, \
-         unified rounds {}, speculate {speculate}\n",
+         unified rounds {}, speculate {speculate}, fault injection {}\n",
         tokens,
         prompt.len(),
         profile.name,
-        if unified && batch_width >= 2 && prefill_chunk >= 2 { "on" } else { "off" }
+        if unified && batch_width >= 2 && prefill_chunk >= 2 { "on" } else { "off" },
+        fault_seed
+            .map(|s| format!("seed {s}"))
+            .unwrap_or_else(|| "off".into())
     );
 
     // Single-session engine baseline: the N=1 serving row must match it
@@ -778,10 +820,13 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         } else {
             String::new()
         };
+        // Fault-injected runs are a different experiment: tag the artifact
+        // so a +faults trend never overwrites the fault-free one.
+        let fault_tag = fault_seed.map(|s| format!("_f{s}")).unwrap_or_default();
         for t in [&scaling, &phases] {
             let path = write_results(
                 &dir,
-                &format!("serve_bench_{}_{mode}{prompt_tag}", t.id),
+                &format!("serve_bench_{}_{mode}{prompt_tag}{fault_tag}", t.id),
                 &t.to_json(),
             )?;
             eprintln!("wrote {}", path.display());
@@ -796,8 +841,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // would dilute a whole-run ratio below 2x without any decode
     // regression — prompt amortization is owned by the chunked-prefill
     // gate below. Runs after the artifact dump so a failing gate still
-    // leaves the JSON for diagnosis.
-    if exec == crate::engine::ExecMode::Planned && batch_width >= 2 {
+    // leaves the JSON for diagnosis. Dispatch-ratio gates only run
+    // fault-free: retry replays add dispatches, so a fault-injected run
+    // measures recovery (its own gate below), not amortization.
+    if exec == crate::engine::ExecMode::Planned && batch_width >= 2 && fault_seed.is_none() {
         println!();
         for (n, r) in &rows {
             if *n < 2 {
@@ -853,7 +900,11 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // at most 1/4 of the dispatches a pure token-by-token twin
     // (--prefill-chunk 0 AND --no-batch, so prompt steps are un-amortized
     // per-session decode steps) spends on prompt ingestion.
-    if exec == crate::engine::ExecMode::Planned && prefill_chunk >= 2 && prompt.len() >= 32 {
+    if exec == crate::engine::ExecMode::Planned
+        && prefill_chunk >= 2
+        && prompt.len() >= 32
+        && fault_seed.is_none()
+    {
         println!();
         for (n, r) in &rows {
             let mut twin_cfg = ec.clone();
@@ -903,6 +954,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         && unified
         && prompt.len() >= 2 * prefill_chunk
         && counts.iter().any(|&n| n >= 4)
+        && fault_seed.is_none()
     {
         let max_seq = GraphDims::from_manifest(registry.config("qwen-tiny")?).max_seq;
         if prompt.len() + 6 <= max_seq {
@@ -968,6 +1020,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         && batch_width >= 2
         && prefill_chunk >= 2
         && unified
+        && fault_seed.is_none()
     {
         println!();
         let gate_throughput = args.has("prompt") && prompt.len() == 32 && tokens >= 96;
@@ -1012,6 +1065,48 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 "; tokens/round gate: skipped (needs the repetitive \
                  workload: --prompt 32 with --tokens >= 96)"
             }
+        );
+    }
+
+    // Fault-injection recovery delta + HARD gate: with --inject-faults
+    // SEED every row above ran under a seeded deterministic transient
+    // fault schedule (dispatch failures, allocation failures, map-read
+    // timeouts injected at the device layer). Recovery is per-session
+    // quarantine + snapshot-replay off the evict-to-host checkpoint; the
+    // gate demands every row's token streams stay BYTE-IDENTICAL to a
+    // fault-free twin — faults may cost time and retries, never tokens —
+    // and that no session exhausts its retry budget under a schedule that
+    // is transient by construction.
+    if let Some(seed) = fault_seed {
+        println!();
+        for ((n, fr), f_toks) in rows.iter().zip(&row_toks) {
+            let mut twin_cfg = ec.clone();
+            twin_cfg.fault_seed = None;
+            let (c_toks, _) = run_twin(&registry, twin_cfg, *n, &uniform(*n))?;
+            if *f_toks != c_toks {
+                return Err(Error::Graph(format!(
+                    "fault-injected token streams diverged from the fault-free \
+                     twin at N={n} (seed {seed})"
+                )));
+            }
+            println!(
+                "N={n}: {} faults injected (seed {seed}), {} retries, {} \
+                 sessions recovered, {} pool evictions — token streams \
+                 identical to the fault-free twin",
+                fr.faults_injected, fr.retries, fr.recovered_sessions, fr.pool_evictions
+            );
+            if fr.failed_sessions > 0 {
+                return Err(Error::Graph(format!(
+                    "fault recovery gate failed at N={n}: {} session(s) \
+                     exhausted the retry budget under a transient-only \
+                     schedule (seed {seed})",
+                    fr.failed_sessions
+                )));
+            }
+        }
+        println!(
+            "fault recovery gate: OK (token streams byte-identical to the \
+             fault-free twin at every N; zero failed sessions)"
         );
     }
     Ok(())
@@ -1344,6 +1439,19 @@ mod tests {
         assert!(speculate_from_flags(&a).is_err());
         let a = parse_args(&argv(&["serve", "--speculate", "many"]));
         assert!(speculate_from_flags(&a).is_err());
+    }
+
+    #[test]
+    fn fault_seed_flags_resolve() {
+        let a = parse_args(&argv(&["serve-bench"]));
+        assert_eq!(fault_seed_from_flags(&a).unwrap(), None);
+        let a = parse_args(&argv(&["serve-bench", "--inject-faults", "7"]));
+        assert_eq!(fault_seed_from_flags(&a).unwrap(), Some(7));
+        let a = parse_args(&argv(&["serve-bench", "--inject-faults", "nope"]));
+        assert!(fault_seed_from_flags(&a).is_err());
+        // Bare flag (no seed) parses as the literal "true" -> rejected.
+        let a = parse_args(&argv(&["serve-bench", "--inject-faults"]));
+        assert!(fault_seed_from_flags(&a).is_err());
     }
 
     #[test]

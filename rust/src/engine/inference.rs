@@ -123,6 +123,14 @@ pub struct EngineConfig {
     /// rewinding the session position. `wdb serve`/`serve-bench` override
     /// with `--speculate K`.
     pub speculate: usize,
+    /// Deterministic fault injection: `Some(seed)` installs a seeded
+    /// [`crate::webgpu::FaultPlan`] (transient dispatch failures,
+    /// allocation failures, readback timeouts) on the serving engine's
+    /// device at construction. The recovery layer (per-session quarantine
+    /// + snapshot-replay) must keep token streams byte-identical to the
+    /// uninjected twin — `wdb serve-bench --inject-faults` gates on it.
+    /// `None` (default) injects nothing.
+    pub fault_seed: Option<u64>,
     /// Override the manifest dims (executable workload variants — e.g.
     /// tiny-kernel graphs at different layer counts).
     pub dims_override: Option<crate::fx::builder::GraphDims>,
@@ -146,6 +154,7 @@ impl EngineConfig {
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             unified: true,
             speculate: 0,
+            fault_seed: None,
             dims_override: None,
         }
     }

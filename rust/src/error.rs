@@ -34,6 +34,38 @@ pub enum Error {
     Json(String),
 
     Xla(String),
+
+    /// A transient, retryable fault (injected or environmental): the
+    /// operation failed but the device is still usable and an identical
+    /// retry is expected to succeed. Session-scoped recovery (rollback +
+    /// replay) applies; the fault never needs to abort healthy sessions.
+    Transient(String),
+
+    /// The device itself is gone (WebGPU device loss). Fatal and
+    /// device-scoped: no retry on this device can succeed, every
+    /// session's device state is invalid.
+    DeviceLost(String),
+
+    /// An internal invariant was violated — the typed replacement for
+    /// `unwrap()`/`expect()` in the serving and plan layers. Always a
+    /// bug, never retryable.
+    Internal(String),
+}
+
+impl Error {
+    /// Session-scoped, retryable classification: rollback-and-replay
+    /// recovery applies. `LimitExceeded` counts as transient because
+    /// allocation pressure is relieved by eviction/retirement — the
+    /// serving layer defers or evicts instead of failing (ROADMAP item
+    /// 1's "admission defers, never fails").
+    pub fn is_transient(&self) -> bool {
+        matches!(self, Error::Transient(_) | Error::LimitExceeded(_))
+    }
+
+    /// Device-scoped, fatal classification: the whole engine must stop.
+    pub fn is_device_lost(&self) -> bool {
+        matches!(self, Error::DeviceLost(_))
+    }
 }
 
 impl fmt::Display for Error {
@@ -49,6 +81,9 @@ impl fmt::Display for Error {
             Error::Io(e) => write!(f, "{e}"),
             Error::Json(m) => write!(f, "json error: {m}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Transient(m) => write!(f, "transient fault: {m}"),
+            Error::DeviceLost(m) => write!(f, "device lost: {m}"),
+            Error::Internal(m) => write!(f, "internal error: {m}"),
         }
     }
 }

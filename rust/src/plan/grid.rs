@@ -40,6 +40,7 @@ pub fn tile_workgroups(out_elems: usize, max_per_dim: u32) -> Result<(u32, u32, 
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

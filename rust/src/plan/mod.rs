@@ -35,6 +35,11 @@
 //! default mode) precisely so `wdb plan-bench` can measure the
 //! eager-vs-planned framework-overhead delta (table P1).
 
+// Plan build and replay run inside serving rounds: failures must surface
+// as typed `Error`s the recovery layer can classify, never as panics.
+// New `unwrap()`/`expect()` sites fail clippy review.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod arena;
 pub mod batched;
 pub mod grid;

@@ -99,6 +99,7 @@ impl PipelinePool {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::fx::builder::{build_decode_graph, FusionConfig, GraphDims};

@@ -625,7 +625,11 @@ impl<'r> Planner<'r> {
                         OpKind::Kernel(k) | OpKind::InPlaceKernel(k) => k.clone(),
                         OpKind::Host(_) => unreachable!("proto kernel step is a kernel node"),
                     };
-                    let prep = pipelines.get(&kname).expect("prepared above");
+                    let prep = pipelines.get(&kname).ok_or_else(|| {
+                        Error::Internal(format!(
+                            "kernel {kname} missing from prepared pipeline pool"
+                        ))
+                    })?;
                     let mut bindings = Vec::with_capacity(node.inputs.len() + node.outputs.len());
                     for (i, spec) in prep.inputs.iter().enumerate() {
                         bindings.push(bind_value(
@@ -792,6 +796,7 @@ impl<'r> Planner<'r> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::fx::builder::{build_decode_graph, FusionConfig, GraphDims};

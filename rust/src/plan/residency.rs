@@ -207,6 +207,7 @@ impl CacheArena {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::webgpu::ImplementationProfile;

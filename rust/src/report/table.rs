@@ -54,9 +54,10 @@ impl TableDoc {
     /// `prefill disp/tok` column and S2's `(prefill ms)` /
     /// `(first decode ms)` TTFT-split rows; bumped to 4 when speculative
     /// decode added S1's `tok/round` + `accept` columns and `+spec(k=N)`
-    /// mode labels — downstream trend tooling keys on this to re-align
-    /// columns.
-    pub const SCHEMA_VERSION: u32 = 4;
+    /// mode labels; bumped to 5 when fault-injected serving added S1's
+    /// `faults` + `recov` columns and `+faults(seed=N)` mode labels —
+    /// downstream trend tooling keys on this to re-align columns.
+    pub const SCHEMA_VERSION: u32 = 5;
 
     /// JSON form for `report::write_results`
     /// (schema/id/title/columns/rows/notes), matching the layout
@@ -177,7 +178,7 @@ mod tests {
             v.get("schema").and_then(|s| s.as_f64()),
             Some(TableDoc::SCHEMA_VERSION as f64)
         );
-        assert_eq!(TableDoc::SCHEMA_VERSION, 4);
+        assert_eq!(TableDoc::SCHEMA_VERSION, 5);
     }
 
     #[test]

@@ -32,14 +32,30 @@ use crate::runtime::registry::Registry;
 use crate::tensor::Tensor;
 use crate::webgpu::queue::{bind_buffers, kernel_layout};
 use crate::webgpu::{
-    BindGroupLayoutId, BufferId, ComputePipelineId, Device, ShaderModuleDesc,
+    BindGroupLayoutId, BufferId, ComputePipelineId, Device, FaultInjector, FaultPlan,
+    ShaderModuleDesc,
 };
 use crate::{Error, Result};
 
 use super::draft::draft_ngram;
 use super::metrics::ServeReport;
 use super::queue::RequestQueue;
-use super::session::{KvCache, SessionState};
+use super::session::{KvCache, SessionSnapshot, SessionState};
+
+/// Consecutive transient faults one session may accumulate before it is
+/// abandoned (retired with whatever tokens it committed). Strictly above
+/// the largest seeded fault plan (4 triggers), so every seeded schedule
+/// recovers; only persistent hand-built plans exhaust it.
+const MAX_SESSION_RETRIES: u32 = 6;
+
+/// Bounded in-place retries for a synchronizing readback (the mapped
+/// buffers keep their contents across an injected timeout, so the retry
+/// re-issues the identical map). Covers a worst-case seeded plan of 4
+/// consecutive map timeouts.
+const MAX_MAP_RETRIES: u32 = 4;
+
+/// Maximum quarantine backoff, in rounds a faulted session sits out.
+const MAX_COOLDOWN: u32 = 2;
 
 /// Serving configuration: the per-session engine config plus admission
 /// control.
@@ -167,6 +183,15 @@ pub struct ServingEngine<'r> {
     /// Scheduler rounds completed (any path) — the denominator of the
     /// `dispatches_per_round` serving metric.
     pub rounds: u64,
+    /// Transient-fault recoveries performed engine-wide: quarantined
+    /// chunks, re-issued readbacks, and retried admissions.
+    pub retries: u64,
+    /// Retired sessions that survived >= 1 transient fault.
+    pub recovered_sessions: u64,
+    /// Sessions abandoned after exhausting their retry budget.
+    pub failed_sessions: u64,
+    /// Seed of the installed fault plan (`None` = no injection).
+    pub fault_seed: Option<u64>,
 }
 
 impl<'r> ServingEngine<'r> {
@@ -383,6 +408,16 @@ impl<'r> ServingEngine<'r> {
             None
         };
 
+        // Arm fault injection LAST: construction-time allocations (plan
+        // arenas, pinned weights, logits rings) never fault, so every
+        // injected opportunity lands in steady-state serving — the
+        // reproducible-in-CI failure modes the recovery layer handles.
+        if let Some(seed) = ec.fault_seed {
+            executor
+                .device
+                .install_fault_injector(FaultInjector::new(FaultPlan::seeded(seed)));
+        }
+
         Ok(ServingEngine {
             config,
             dims,
@@ -401,7 +436,18 @@ impl<'r> ServingEngine<'r> {
             unified_graph,
             speculate,
             rounds: 0,
+            retries: 0,
+            recovered_sessions: 0,
+            failed_sessions: 0,
+            fault_seed: ec.fault_seed,
         })
+    }
+
+    /// Install a hand-built fault plan (tests pin exact fault kind x
+    /// phase matrices this way; `EngineConfig::fault_seed` covers the
+    /// randomized differential arm).
+    pub fn install_fault_plan(&mut self, plan: FaultPlan) {
+        self.executor.device.install_fault_injector(FaultInjector::new(plan));
     }
 
     /// Reseed the virtual-cost jitter (independent benchmark runs).
@@ -464,17 +510,31 @@ impl<'r> ServingEngine<'r> {
             let cache = if self.executor.is_planned() {
                 match self.executor.alloc_kv_cache() {
                     Ok(c) => Some(c),
-                    // Only genuine capacity pressure defers (a retiring
-                    // session will return its set); any other fault — and
-                    // pressure with nothing running to free a set — must
-                    // surface, not be silently re-deferred every round.
-                    Err(Error::LimitExceeded(_)) if !self.active.is_empty() => break,
+                    // Transient pressure while sessions are running defers
+                    // the admission (a retiring session will return its
+                    // set, or the one-shot fault clears). Deferral never
+                    // changes token streams — scheduling only shifts which
+                    // round a session starts in.
+                    Err(e) if e.is_transient() && !self.active.is_empty() => break,
+                    // Genuine capacity with nothing running to free a set
+                    // must surface — otherwise the scheduler would spin
+                    // forever on an unadmittable queue.
+                    Err(e @ Error::LimitExceeded(_)) => return Err(e),
+                    // An injected one-shot allocation fault on an idle
+                    // engine: the trigger is consumed, so one inline
+                    // retry is exact recovery.
+                    Err(e) if e.is_transient() => {
+                        self.retries += 1;
+                        Some(self.executor.alloc_kv_cache()?)
+                    }
                     Err(e) => return Err(e),
                 }
             } else {
                 None
             };
-            let req = self.queue.pop().expect("checked non-empty");
+            let req = self.queue.pop().ok_or_else(|| {
+                Error::Internal("admission raced an empty queue".into())
+            })?;
             let now = self.executor.device.clock.now_ns();
             let mut s = SessionState::new(
                 req.id,
@@ -528,8 +588,30 @@ impl<'r> ServingEngine<'r> {
     /// Finish one session's step on its own: one synchronizing readback
     /// (or the device-argmax dispatch), token selection, metrics.
     pub fn finish_session(&mut self, s: &mut SessionState, h: StepHandle) -> Result<usize> {
-        let ServingEngine { executor, argmax, .. } = self;
-        Self::finish_inner(executor, argmax.as_ref(), s, h)
+        let ServingEngine { executor, argmax, retries, .. } = self;
+        Self::finish_inner(executor, argmax.as_ref(), s, h, retries)
+    }
+
+    /// Bounded in-place retry for a synchronizing readback. An injected
+    /// map timeout leaves the mapped buffers' contents intact (nothing was
+    /// consumed), so re-issuing the identical map is safe and yields
+    /// identical bytes — the retry is invisible to the token stream.
+    fn map_read_retry(
+        device: &mut Device,
+        bufs: &[BufferId],
+        retries: &mut u64,
+    ) -> Result<Vec<Vec<u8>>> {
+        let mut attempt = 0u32;
+        loop {
+            match device.map_read_many(bufs) {
+                Ok(b) => return Ok(b),
+                Err(e) if e.is_transient() && attempt < MAX_MAP_RETRIES => {
+                    attempt += 1;
+                    *retries += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     /// Promote a planned session to device residency (first encode or
@@ -649,7 +731,9 @@ impl<'r> ServingEngine<'r> {
             s.pos += 1;
         } else {
             // Update this session's host caches for its next step.
-            let host = s.kv.as_host_mut().expect("checked above");
+            let host = s.kv.as_host_mut().ok_or_else(|| {
+                Error::Internal("eager session lost its host caches mid-encode".into())
+            })?;
             for (l, kv) in host.iter_mut().enumerate() {
                 let k = outs
                     .remove(&format!("l{l}.k_cache"))
@@ -699,6 +783,7 @@ impl<'r> ServingEngine<'r> {
         argmax: Option<&ArgmaxPrepared>,
         s: &mut SessionState,
         h: StepHandle,
+        retries: &mut u64,
     ) -> Result<usize> {
         let ph0 = executor.device.timeline.virtual_ns;
         let sy0 = executor.device.timeline.sync_virtual_ns;
@@ -714,12 +799,21 @@ impl<'r> ServingEngine<'r> {
         } else if let Some(buf) = h.logits_buf {
             // Full-logits readback (map pays sync + per-byte transfer),
             // then host argmax — the production path.
-            let bytes = executor
-                .device
-                .map_read_many(&[buf])?
-                .into_iter()
-                .next()
-                .expect("one mapped buffer");
+            let res = Self::map_read_retry(&mut executor.device, &[buf], retries)
+                .and_then(|v| {
+                    v.into_iter().next().ok_or_else(|| {
+                        Error::Internal("readback mapped no buffer".into())
+                    })
+                });
+            let bytes = match res {
+                Ok(b) => b,
+                Err(e) => {
+                    // Ring buffers are plan-owned (release is a no-op);
+                    // pooled eager buffers must still be returned.
+                    let _ = executor.release_logits(buf);
+                    return Err(e);
+                }
+            };
             executor.release_logits(buf)?;
             argmax_bytes(&bytes)
         } else {
@@ -797,108 +891,251 @@ impl<'r> ServingEngine<'r> {
     /// variant, whose per-session argmax dispatch expects single-row
     /// logits) keep the interleaved path byte-for-byte.
     pub fn step_round(&mut self) -> Result<usize> {
+        self.sweep_failed()?;
         self.admit()?;
         let n = self.active.len();
         if n == 0 {
             return Ok(0);
         }
+        // Quarantine backoff: a faulted session sits out `cooldown`
+        // rounds (bounded — see MAX_COOLDOWN) while the rest of the
+        // fleet keeps stepping. Sitting out never perturbs token
+        // streams: per-session decode math is scheduling-independent.
+        let mut eligible: Vec<usize> = Vec::with_capacity(n);
+        for i in 0..n {
+            if self.active[i].cooldown > 0 {
+                self.active[i].cooldown -= 1;
+            } else {
+                eligible.push(i);
+            }
+        }
+        if eligible.is_empty() {
+            // Every session is cooling down; the round still advances
+            // the backoff clocks decremented above.
+            self.rounds += 1;
+            return self.retire_finished();
+        }
         if self.unified_graph.is_some() {
             // Unified continuous batching: EVERY round — all-prefill,
             // all-decode, mixed, even single-session — replays the
             // seq-x-batch plan once per chunk of `batch_width` slots.
-            self.step_round_unified()?;
+            self.step_round_unified(&eligible)?;
             self.rounds += 1;
             return self.retire_finished();
         }
+        // Quarantined sessions at the ladder's bottom rung (degrade >= 2)
+        // step token-by-token even through their prompt, so they never
+        // join a seq-dim prefill replay again.
         let prefill_idx: Vec<usize> = if self.prefill_graph.is_some() {
-            (0..n).filter(|&i| self.active[i].in_prefill()).collect()
+            eligible
+                .iter()
+                .copied()
+                .filter(|&i| self.active[i].in_prefill() && self.active[i].degrade < 2)
+                .collect()
         } else {
             Vec::new()
         };
         if !prefill_idx.is_empty() {
-            self.step_round_prefill(prefill_idx)?;
-        } else if n >= 2 && self.batched_graph.is_some() && self.argmax.is_none() {
-            self.step_round_batched()?;
+            self.step_round_prefill(&eligible, &prefill_idx)?;
+        } else if eligible.len() >= 2
+            && self.batched_graph.is_some()
+            && self.argmax.is_none()
+        {
+            self.step_round_batched(&eligible)?;
         } else {
-            self.step_round_interleaved(n)?;
+            self.step_round_interleaved(&eligible)?;
         }
         self.rounds += 1;
         self.retire_finished()
     }
 
-    /// The pre-batching round body: per-session encodes, then a coalesced
-    /// finish. Also the N = 1 round shape under batching.
-    fn step_round_interleaved(&mut self, n: usize) -> Result<()> {
-        let mut handles: Vec<Option<StepHandle>> = Vec::with_capacity(n);
-        for i in 0..n {
-            // In planned mode, each session in the round replays into its
-            // own logits-ring buffer (reserved from the shared cursor) so
-            // every logits row survives until the coalesced readback below.
-            let ring = self.next_ring();
-            let ServingEngine { executor, graph, dims, weights, active, .. } = &mut *self;
-            let s = &mut active[i];
-            let (token, was_prompt) = s.take_input().ok_or_else(|| {
-                Error::Graph(format!("session {} has no input token", s.id))
-            })?;
-            let h =
-                Self::encode_inner(executor, graph, dims, weights, s, token, was_prompt, ring)?;
-            handles.push(Some(h));
+    /// Quarantine the sessions implicated in a failed encode: roll each
+    /// back to its pre-encode snapshot, spill its KV state to host (the
+    /// checkpoint is exactly the last committed token — every device row
+    /// the partial encode dirtied sits at a position >= the rolled-back
+    /// `pos`, dead under the causal mask until the retry overwrites it
+    /// with identical values), then schedule bounded backoff and one rung
+    /// of the degradation ladder. Fault granularity is the encode unit: a
+    /// fused chunk's fault cannot be attributed to one member, so all its
+    /// members roll back — but the round's OTHER chunks complete. Fatal
+    /// (device-scoped) errors propagate instead.
+    fn quarantine(&mut self, snaps: &[(usize, SessionSnapshot)], e: Error) -> Result<()> {
+        if !e.is_transient() {
+            return Err(e);
         }
-
-        if self.argmax.is_some() {
-            // Device-argmax path: per-session finish (each pays its own
-            // 4-byte readback; Appendix H trades transfer for dispatches).
-            for (i, slot) in handles.iter_mut().enumerate() {
-                let h = slot.take().expect("encoded handle");
-                let ServingEngine { executor, argmax, active, .. } = &mut *self;
-                Self::finish_inner(executor, argmax.as_ref(), &mut active[i], h)?;
-            }
-        } else {
-            // Coalesced finish: ONE synchronization covers every session's
-            // logits readback — the amortized fixed cost.
-            let mut buf_ids: Vec<BufferId> = Vec::with_capacity(n);
-            let mut owners: Vec<usize> = Vec::with_capacity(n);
-            for (i, h) in handles.iter().enumerate() {
-                if let Some(b) = h.as_ref().and_then(|h| h.logits_buf) {
-                    buf_ids.push(b);
-                    owners.push(i);
-                }
-            }
-            let sy0 = self.executor.device.timeline.sync_virtual_ns;
-            let all_bytes = self.executor.device.map_read_many(&buf_ids)?;
-            let sync_cost = self.executor.device.timeline.sync_virtual_ns - sy0;
-            // Split the shared sync exactly across participants (remainder
-            // to the first) so per-session sums match the device timeline.
-            let k = owners.len() as u64;
-            for (j, &i) in owners.iter().enumerate() {
-                self.active[i].metrics.sync_virtual_ns += share(sync_cost, k, j);
-            }
-            let now = self.executor.device.clock.now_ns();
-            let mut bytes_iter = all_bytes.into_iter();
-            let mut owner_pos = 0usize;
-            for (i, slot) in handles.iter_mut().enumerate() {
-                let h = slot.take().expect("encoded handle");
-                let next = if owner_pos < owners.len() && owners[owner_pos] == i {
-                    owner_pos += 1;
-                    let bytes = bytes_iter.next().expect("mapped logits bytes");
-                    argmax_bytes(&bytes)
-                } else {
-                    h.logits.argmax_row()?
-                };
-                if let Some(b) = h.logits_buf {
-                    self.executor.release_logits(b)?;
-                }
-                self.active[i].note_token(next, now);
+        let ServingEngine { executor, active, retries, .. } = &mut *self;
+        *retries += 1;
+        for &(i, snap) in snaps {
+            let s = &mut active[i];
+            s.rollback(snap);
+            // Checkpoint-by-spill: the evict-to-host path IS the snapshot
+            // store — the session resumes from recycled pool buffers via
+            // the ordinary promote/hydrate path. A fatal error during the
+            // spill itself propagates.
+            Self::evict_kv_to_host(executor, s, retries)?;
+            s.retries += 1;
+            s.total_retries += 1;
+            s.cooldown = (s.retries - 1).min(MAX_COOLDOWN);
+            s.degrade = (s.degrade + 1).min(2);
+            if s.retries > MAX_SESSION_RETRIES {
+                s.failed = true;
             }
         }
         Ok(())
     }
 
-    /// The batched round body: every active session decodes through its
-    /// sticky slot's batched chunk, then ONE round-level readback.
-    fn step_round_batched(&mut self) -> Result<()> {
-        let idx: Vec<usize> = (0..self.active.len()).collect();
-        let chunks = self.encode_batched_chunks(&idx)?;
+    /// Retire sessions that exhausted their retry budget. They leave with
+    /// whatever tokens they committed (every emitted token was read back
+    /// before the fault — the stream is a consistent prefix), freeing
+    /// their slot and cache set for the backlog.
+    fn sweep_failed(&mut self) -> Result<()> {
+        if !self.active.iter().any(|s| s.failed) {
+            return Ok(());
+        }
+        let mut done: Vec<SessionState> = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].failed {
+                done.push(self.active.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        for s in done.iter_mut().rev() {
+            self.release_session_cache(s)?;
+        }
+        self.failed_sessions += done.len() as u64;
+        self.finished.extend(done);
+        Ok(())
+    }
+
+    /// The pre-batching round body: per-session encodes, then a coalesced
+    /// finish. Also the N = 1 round shape under batching. A session whose
+    /// encode faults transiently is quarantined alone; the others' steps
+    /// still finish this round.
+    fn step_round_interleaved(&mut self, eligible: &[usize]) -> Result<()> {
+        let mut handles: Vec<(usize, StepHandle)> = Vec::with_capacity(eligible.len());
+        for &i in eligible {
+            // In planned mode, each session in the round replays into its
+            // own logits-ring buffer (reserved from the shared cursor) so
+            // every logits row survives until the coalesced readback below.
+            let ring = self.next_ring();
+            let snap = self.active[i].snapshot();
+            let res = {
+                let ServingEngine { executor, graph, dims, weights, active, .. } =
+                    &mut *self;
+                let s = &mut active[i];
+                match s.take_input() {
+                    Some((token, was_prompt)) => Self::encode_inner(
+                        executor, graph, dims, weights, s, token, was_prompt, ring,
+                    ),
+                    None => Err(Error::Internal(format!(
+                        "session {} has no input token",
+                        s.id
+                    ))),
+                }
+            };
+            match res {
+                Ok(h) => handles.push((i, h)),
+                Err(e) => self.quarantine(&[(i, snap)], e)?,
+            }
+        }
+
+        if self.argmax.is_some() {
+            // Device-argmax path: per-session finish (each pays its own
+            // 4-byte readback; Appendix H trades transfer for dispatches).
+            for (i, h) in handles {
+                let ServingEngine { executor, argmax, active, retries, .. } = &mut *self;
+                Self::finish_inner(executor, argmax.as_ref(), &mut active[i], h, retries)?;
+                self.active[i].retries = 0;
+            }
+        } else {
+            // Coalesced finish: ONE synchronization covers every session's
+            // logits readback — the amortized fixed cost.
+            let mut buf_ids: Vec<BufferId> = Vec::with_capacity(handles.len());
+            for (_, h) in &handles {
+                if let Some(b) = h.logits_buf {
+                    buf_ids.push(b);
+                }
+            }
+            let sy0 = self.executor.device.timeline.sync_virtual_ns;
+            let all_bytes = {
+                let ServingEngine { executor, retries, .. } = &mut *self;
+                match Self::map_read_retry(&mut executor.device, &buf_ids, retries) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        for &b in &buf_ids {
+                            let _ = executor.release_logits(b);
+                        }
+                        return Err(e);
+                    }
+                }
+            };
+            let sync_cost = self.executor.device.timeline.sync_virtual_ns - sy0;
+            // Split the shared sync exactly across participants (remainder
+            // to the first) so per-session sums match the device timeline.
+            let k = buf_ids.len() as u64;
+            let mut j = 0usize;
+            for (i, h) in &handles {
+                if h.logits_buf.is_some() {
+                    self.active[*i].metrics.sync_virtual_ns += share(sync_cost, k, j);
+                    j += 1;
+                }
+            }
+            let now = self.executor.device.clock.now_ns();
+            let mut bytes_iter = all_bytes.into_iter();
+            for (i, h) in handles {
+                let next = if let Some(b) = h.logits_buf {
+                    let bytes = bytes_iter.next().ok_or_else(|| {
+                        Error::Internal(
+                            "coalesced readback mapped fewer buffers than requested".into(),
+                        )
+                    })?;
+                    self.executor.release_logits(b)?;
+                    argmax_bytes(&bytes)
+                } else {
+                    h.logits.argmax_row()?
+                };
+                let s = &mut self.active[i];
+                s.retries = 0;
+                s.note_token(next, now);
+            }
+        }
+        Ok(())
+    }
+
+    /// The batched round body: healthy sessions decode through their
+    /// sticky slots' batched chunks; quarantined (degraded) ones run solo
+    /// single-token replays so a flaky session cannot keep faulting whole
+    /// multi-session chunks. Then ONE round-level readback.
+    fn step_round_batched(&mut self, eligible: &[usize]) -> Result<()> {
+        let mut chunks: Vec<EncodedChunk> = Vec::new();
+        let healthy: Vec<usize> = eligible
+            .iter()
+            .copied()
+            .filter(|&i| self.active[i].degrade == 0)
+            .collect();
+        if healthy.len() >= 2 {
+            chunks.extend(self.encode_batched_chunks(&healthy)?);
+        } else {
+            for &i in &healthy {
+                let snap = self.active[i].snapshot();
+                match self.encode_decode_step(i) {
+                    Ok(c) => chunks.push(c),
+                    Err(e) => self.quarantine(&[(i, snap)], e)?,
+                }
+            }
+        }
+        for &i in eligible {
+            if self.active[i].degrade == 0 {
+                continue;
+            }
+            let snap = self.active[i].snapshot();
+            match self.encode_decode_step(i) {
+                Ok(c) => chunks.push(c),
+                Err(e) => self.quarantine(&[(i, snap)], e)?,
+            }
+        }
         self.finish_round(chunks)
     }
 
@@ -912,21 +1149,48 @@ impl<'r> ServingEngine<'r> {
     /// join the round's coalesced readback; intermediate chunks never
     /// synchronize, which is exactly where chunked prefill's TTFT win
     /// comes from.
-    fn step_round_prefill(&mut self, prefill_idx: Vec<usize>) -> Result<()> {
-        let n = self.active.len();
+    fn step_round_prefill(&mut self, eligible: &[usize], prefill_idx: &[usize]) -> Result<()> {
         let mut chunks: Vec<EncodedChunk> = Vec::new();
         for (k, &i) in prefill_idx.iter().enumerate() {
-            if let Some(c) = self.encode_prefill_chunk(i, k)? {
-                chunks.push(c);
+            let snap = self.active[i].snapshot();
+            match self.encode_prefill_chunk(i, k) {
+                Ok(Some(c)) => chunks.push(c),
+                Ok(None) => {}
+                Err(e) => self.quarantine(&[(i, snap)], e)?,
             }
         }
-        let decode_idx: Vec<usize> = (0..n).filter(|i| !prefill_idx.contains(i)).collect();
+        // Everything else: decoding sessions, plus quarantined prompt
+        // ingesters at the ladder's bottom rung (token-by-token prefill).
+        let decode_idx: Vec<usize> = eligible
+            .iter()
+            .copied()
+            .filter(|i| !prefill_idx.contains(i))
+            .collect();
         if !decode_idx.is_empty() {
-            if decode_idx.len() >= 2 && self.batched_graph.is_some() {
-                chunks.extend(self.encode_batched_chunks(&decode_idx)?);
+            let healthy: Vec<usize> = decode_idx
+                .iter()
+                .copied()
+                .filter(|&i| self.active[i].degrade == 0)
+                .collect();
+            if healthy.len() >= 2 && self.batched_graph.is_some() {
+                chunks.extend(self.encode_batched_chunks(&healthy)?);
             } else {
-                for &i in &decode_idx {
-                    chunks.push(self.encode_decode_step(i)?);
+                for &i in &healthy {
+                    let snap = self.active[i].snapshot();
+                    match self.encode_decode_step(i) {
+                        Ok(c) => chunks.push(c),
+                        Err(e) => self.quarantine(&[(i, snap)], e)?,
+                    }
+                }
+            }
+            for &i in &decode_idx {
+                if self.active[i].degrade == 0 {
+                    continue;
+                }
+                let snap = self.active[i].snapshot();
+                match self.encode_decode_step(i) {
+                    Ok(c) => chunks.push(c),
+                    Err(e) => self.quarantine(&[(i, snap)], e)?,
                 }
             }
         }
@@ -991,7 +1255,9 @@ impl<'r> ServingEngine<'r> {
 
         let logits_buf = {
             let ServingEngine { executor, prefill_graph, active, .. } = &mut *self;
-            let graph = prefill_graph.as_ref().expect("prefill path checked");
+            let graph = prefill_graph
+                .as_ref()
+                .ok_or_else(|| Error::Internal("prefill plan missing".into()))?;
             let kv = active[i].kv.as_device();
             let (_outs, logits_buf, _delta) =
                 executor.run_prefill(graph, &inputs, ring, kv)?;
@@ -1068,7 +1334,6 @@ impl<'r> ServingEngine<'r> {
     /// totals.
     fn encode_batched_chunks(&mut self, idx: &[usize]) -> Result<Vec<EncodedChunk>> {
         let width = self.batch_width;
-        let (hidden, max_seq) = (self.dims.hidden, self.dims.max_seq);
         // chunk number -> [(row within chunk, active index)], row-sorted.
         let mut by_chunk: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
         for &i in idx {
@@ -1083,117 +1348,181 @@ impl<'r> ServingEngine<'r> {
         let mut chunks = Vec::with_capacity(by_chunk.len());
         for (chunk_no, mut members) in by_chunk {
             members.sort_unstable();
-            // ---- pack: residency, input tokens, per-slot uniforms ----
-            let mut xbuf = vec![0f32; width * hidden];
-            let mut pos_i = vec![0i32; width];
-            let mut pos_ip1 = vec![0i32; width];
-            let mut pos_f = vec![0f32; width];
-            let mut mask = vec![0i32; width];
-            let slot_idx: Vec<i32> = (0..width as i32).collect();
-            let mut was_prompt = vec![false; width];
-            {
-                let ServingEngine { executor, weights, active, .. } = &mut *self;
-                for &(row, i) in &members {
-                    let s = &mut active[i];
-                    if s.pos >= max_seq {
-                        return Err(Error::Graph(format!(
-                            "KV cache capacity {max_seq} exhausted"
-                        )));
-                    }
-                    // Hydration of a resumed session is charged to it.
-                    let w0 = executor.device.stats.bytes_written;
-                    Self::promote_to_device(executor, s)?;
-                    s.metrics.upload_bytes += executor.device.stats.bytes_written - w0;
-                    let (token, wp) = s.take_input().ok_or_else(|| {
-                        Error::Graph(format!("session {} has no input token", s.id))
-                    })?;
-                    was_prompt[row] = wp;
-                    let emb = hostops::embed(&weights.embedding, token)?;
-                    xbuf[row * hidden..(row + 1) * hidden].copy_from_slice(emb.as_f32()?);
-                    pos_i[row] = s.pos as i32;
-                    pos_ip1[row] = s.pos as i32 + 1;
-                    pos_f[row] = s.pos as f32;
-                    mask[row] = 1;
-                }
+            // Fault isolation boundary: a transient fault inside one
+            // chunk replay quarantines ONLY that chunk's members (rolled
+            // back to their pre-pack snapshots); the round's other chunks
+            // proceed.
+            let snaps: Vec<(usize, SessionSnapshot)> = members
+                .iter()
+                .map(|&(_, i)| (i, self.active[i].snapshot()))
+                .collect();
+            match self.encode_batched_chunk(chunk_no, &members) {
+                Ok(c) => chunks.push(c),
+                Err(e) => self.quarantine(&snaps, e)?,
             }
-            let mut inputs: HashMap<String, Tensor> = HashMap::with_capacity(7);
-            inputs.insert("x".into(), Tensor::f32(vec![width, hidden], xbuf)?);
-            inputs.insert("pos_i".into(), Tensor::i32(vec![width], pos_i)?);
-            inputs.insert("pos_ip1".into(), Tensor::i32(vec![width], pos_ip1)?);
-            inputs.insert("pos_f".into(), Tensor::f32(vec![width], pos_f)?);
-            inputs.insert("slot_mask".into(), Tensor::i32(vec![width], mask)?);
-            inputs.insert("slot_idx".into(), Tensor::i32(vec![width], slot_idx)?);
-            inputs.insert("inv_freq".into(), self.weights.inv_freq.clone());
-
-            // ---- one replay per chunk, shared-cost snapshots around it ----
-            let ph0 = self.executor.device.timeline.virtual_ns;
-            let k0 = self.executor.device.timeline.kernel_virtual_ns;
-            let fw0 = self.executor.framework_virtual_ns;
-            let d0 = self.executor.dispatch_count;
-            let w0 = self.executor.device.stats.bytes_written;
-            let c0 = self.executor.device.clock.now_ns();
-            let logits_buf = {
-                let ServingEngine { executor, batched_graph, active, .. } = &mut *self;
-                let graph = batched_graph.as_ref().expect("batched path checked");
-                let mut table: Vec<Option<&DeviceKvCache>> = vec![None; width];
-                for &(row, i) in &members {
-                    table[row] = active[i].kv.as_device();
-                }
-                let (_outs, logits_buf, _delta) =
-                    executor.run_batched(graph, &inputs, chunk_no, &table)?;
-                logits_buf
-            };
-
-            // ---- split the chunk's shared costs across its sessions so
-            // per-session sums keep tiling the engine totals ----
-            let tl = self.executor.device.timeline.virtual_ns;
-            let kernel_d = self.executor.device.timeline.kernel_virtual_ns - k0;
-            let fw_d = self.executor.framework_virtual_ns - fw0;
-            let disp_d = self.executor.dispatch_count - d0;
-            let upload_d = self.executor.device.stats.bytes_written - w0;
-            let encode_d = self.executor.device.clock.now_ns() - c0;
-            let now_enc = self.executor.device.clock.now_ns();
-            let k = members.len() as u64;
-            for (j, &(row, i)) in members.iter().enumerate() {
-                let s = &mut self.active[i];
-                for p in 0..8 {
-                    s.metrics.phase_virtual_ns[p] += share(tl[p] - ph0[p], k, j);
-                }
-                s.metrics.kernel_virtual_ns += share(kernel_d, k, j);
-                s.metrics.framework_virtual_ns += share(fw_d, k, j);
-                let dshare = share(disp_d, k, j);
-                s.metrics.dispatches += dshare;
-                s.metrics.upload_bytes += share(upload_d, k, j);
-                s.metrics.encode_virtual_ns += share(encode_d, k, j);
-                s.metrics.steps += 1;
-                if was_prompt[row] {
-                    s.metrics.prefill_steps += 1;
-                    s.metrics.prefill_dispatches += dshare;
-                    if !s.in_prefill() {
-                        s.metrics.prefill_end_ns = now_enc;
-                    }
-                }
-                // The on-device scatter already appended this step's K/V.
-                s.pos += 1;
-            }
-
-            chunks.push(EncodedChunk {
-                buf: logits_buf.ok_or_else(|| {
-                    Error::Graph("batched plan produced no logits buffer".into())
-                })?,
-                owners: members.iter().map(|&(row, i)| ChunkOwner::single(i, row)).collect(),
-            });
         }
         Ok(chunks)
     }
 
-    /// The unified round body: every active session — still-ingesting
+    /// Pack and replay ONE batched chunk (see [`Self::encode_batched_chunks`]
+    /// for the slot layout). Fallible as a unit: any error leaves only the
+    /// chunk's own members dirty, all at dead (masked) cache rows.
+    fn encode_batched_chunk(
+        &mut self,
+        chunk_no: usize,
+        members: &[(usize, usize)],
+    ) -> Result<EncodedChunk> {
+        let width = self.batch_width;
+        let (hidden, max_seq) = (self.dims.hidden, self.dims.max_seq);
+        // ---- pack: residency, input tokens, per-slot uniforms ----
+        let mut xbuf = vec![0f32; width * hidden];
+        let mut pos_i = vec![0i32; width];
+        let mut pos_ip1 = vec![0i32; width];
+        let mut pos_f = vec![0f32; width];
+        let mut mask = vec![0i32; width];
+        let slot_idx: Vec<i32> = (0..width as i32).collect();
+        let mut was_prompt = vec![false; width];
+        {
+            let ServingEngine { executor, weights, active, .. } = &mut *self;
+            for &(row, i) in members {
+                let s = &mut active[i];
+                if s.pos >= max_seq {
+                    return Err(Error::Graph(format!(
+                        "KV cache capacity {max_seq} exhausted"
+                    )));
+                }
+                // Hydration of a resumed session is charged to it.
+                let w0 = executor.device.stats.bytes_written;
+                Self::promote_to_device(executor, s)?;
+                s.metrics.upload_bytes += executor.device.stats.bytes_written - w0;
+                let (token, wp) = s.take_input().ok_or_else(|| {
+                    Error::Internal(format!("session {} has no input token", s.id))
+                })?;
+                was_prompt[row] = wp;
+                let emb = hostops::embed(&weights.embedding, token)?;
+                xbuf[row * hidden..(row + 1) * hidden].copy_from_slice(emb.as_f32()?);
+                pos_i[row] = s.pos as i32;
+                pos_ip1[row] = s.pos as i32 + 1;
+                pos_f[row] = s.pos as f32;
+                mask[row] = 1;
+            }
+        }
+        let mut inputs: HashMap<String, Tensor> = HashMap::with_capacity(7);
+        inputs.insert("x".into(), Tensor::f32(vec![width, hidden], xbuf)?);
+        inputs.insert("pos_i".into(), Tensor::i32(vec![width], pos_i)?);
+        inputs.insert("pos_ip1".into(), Tensor::i32(vec![width], pos_ip1)?);
+        inputs.insert("pos_f".into(), Tensor::f32(vec![width], pos_f)?);
+        inputs.insert("slot_mask".into(), Tensor::i32(vec![width], mask)?);
+        inputs.insert("slot_idx".into(), Tensor::i32(vec![width], slot_idx)?);
+        inputs.insert("inv_freq".into(), self.weights.inv_freq.clone());
+
+        // ---- one replay per chunk, shared-cost snapshots around it ----
+        let ph0 = self.executor.device.timeline.virtual_ns;
+        let k0 = self.executor.device.timeline.kernel_virtual_ns;
+        let fw0 = self.executor.framework_virtual_ns;
+        let d0 = self.executor.dispatch_count;
+        let w0 = self.executor.device.stats.bytes_written;
+        let c0 = self.executor.device.clock.now_ns();
+        let logits_buf = {
+            let ServingEngine { executor, batched_graph, active, .. } = &mut *self;
+            let graph = batched_graph
+                .as_ref()
+                .ok_or_else(|| Error::Internal("batched plan missing".into()))?;
+            let mut table: Vec<Option<&DeviceKvCache>> = vec![None; width];
+            for &(row, i) in members {
+                table[row] = active[i].kv.as_device();
+            }
+            let (_outs, logits_buf, _delta) =
+                executor.run_batched(graph, &inputs, chunk_no, &table)?;
+            logits_buf
+        };
+
+        // ---- split the chunk's shared costs across its sessions so
+        // per-session sums keep tiling the engine totals ----
+        let tl = self.executor.device.timeline.virtual_ns;
+        let kernel_d = self.executor.device.timeline.kernel_virtual_ns - k0;
+        let fw_d = self.executor.framework_virtual_ns - fw0;
+        let disp_d = self.executor.dispatch_count - d0;
+        let upload_d = self.executor.device.stats.bytes_written - w0;
+        let encode_d = self.executor.device.clock.now_ns() - c0;
+        let now_enc = self.executor.device.clock.now_ns();
+        let k = members.len() as u64;
+        for (j, &(row, i)) in members.iter().enumerate() {
+            let s = &mut self.active[i];
+            for p in 0..8 {
+                s.metrics.phase_virtual_ns[p] += share(tl[p] - ph0[p], k, j);
+            }
+            s.metrics.kernel_virtual_ns += share(kernel_d, k, j);
+            s.metrics.framework_virtual_ns += share(fw_d, k, j);
+            let dshare = share(disp_d, k, j);
+            s.metrics.dispatches += dshare;
+            s.metrics.upload_bytes += share(upload_d, k, j);
+            s.metrics.encode_virtual_ns += share(encode_d, k, j);
+            s.metrics.steps += 1;
+            if was_prompt[row] {
+                s.metrics.prefill_steps += 1;
+                s.metrics.prefill_dispatches += dshare;
+                if !s.in_prefill() {
+                    s.metrics.prefill_end_ns = now_enc;
+                }
+            }
+            // The on-device scatter already appended this step's K/V.
+            s.pos += 1;
+        }
+
+        Ok(EncodedChunk {
+            buf: logits_buf.ok_or_else(|| {
+                Error::Graph("batched plan produced no logits buffer".into())
+            })?,
+            owners: members.iter().map(|&(row, i)| ChunkOwner::single(i, row)).collect(),
+        })
+    }
+
+    /// The unified round body: every eligible session — still-ingesting
     /// prompts and generating sessions alike — steps through its sticky
     /// slot of ONE seq-x-batch replay per chunk of `batch_width` slots,
     /// then the round's single readback.
-    fn step_round_unified(&mut self) -> Result<()> {
-        let idx: Vec<usize> = (0..self.active.len()).collect();
-        let chunks = self.encode_unified_chunks(&idx)?;
+    ///
+    /// Quarantined sessions ride the degradation ladder instead of the
+    /// unified chunks: rung 1 replays SOLO (a prefill chunk for prompt
+    /// ingesters, a single-token decode replay otherwise — the split
+    /// scheduling shape), rung 2 goes token-by-token through the
+    /// single-session plan even mid-prompt (the interleaved shape; for a
+    /// decode-phase session rungs 1 and 2 coincide). Solo paths never
+    /// speculate, and the ladder is sticky until the session retires —
+    /// repeated faults cannot re-poison multi-session replays. Every rung
+    /// computes the identical deterministic token stream; only dispatch
+    /// amortization is sacrificed.
+    fn step_round_unified(&mut self, eligible: &[usize]) -> Result<()> {
+        let mut chunks: Vec<EncodedChunk> = Vec::new();
+        let unified_idx: Vec<usize> = eligible
+            .iter()
+            .copied()
+            .filter(|&i| self.active[i].degrade == 0)
+            .collect();
+        if !unified_idx.is_empty() {
+            chunks.extend(self.encode_unified_chunks(&unified_idx)?);
+        }
+        let mut prefill_ring = 0usize;
+        for &i in eligible {
+            if self.active[i].degrade == 0 {
+                continue;
+            }
+            let snap = self.active[i].snapshot();
+            let solo_prefill = self.active[i].degrade == 1 && self.active[i].in_prefill();
+            let res = if solo_prefill {
+                let ring = prefill_ring;
+                prefill_ring += 1;
+                self.encode_prefill_chunk(i, ring)
+            } else {
+                self.encode_decode_step(i).map(Some)
+            };
+            match res {
+                Ok(Some(c)) => chunks.push(c),
+                Ok(None) => {}
+                Err(e) => self.quarantine(&[(i, snap)], e)?,
+            }
+        }
         self.finish_round(chunks)
     }
 
@@ -1213,10 +1542,6 @@ impl<'r> ServingEngine<'r> {
     /// (intermediate chunks never synchronize).
     fn encode_unified_chunks(&mut self, idx: &[usize]) -> Result<Vec<EncodedChunk>> {
         let width = self.batch_width;
-        let chunk = self.prefill_chunk;
-        let rows = width * chunk;
-        let speculate = self.speculate;
-        let (hidden, max_seq) = (self.dims.hidden, self.dims.max_seq);
         // chunk-of-slots number -> [(row within chunk, active index)].
         let mut by_chunk: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
         for &i in idx {
@@ -1231,6 +1556,41 @@ impl<'r> ServingEngine<'r> {
         let mut chunks = Vec::with_capacity(by_chunk.len());
         for (chunk_no, mut members) in by_chunk {
             members.sort_unstable();
+            // Fault isolation boundary: a transient fault inside one
+            // chunk-of-slots replay quarantines ONLY that chunk's members
+            // (rolled back to their pre-pack snapshots); the round's
+            // other chunks proceed — a single session-scoped fault never
+            // aborts a round with healthy sessions elsewhere in it.
+            let snaps: Vec<(usize, SessionSnapshot)> = members
+                .iter()
+                .map(|&(_, i)| (i, self.active[i].snapshot()))
+                .collect();
+            match self.encode_unified_chunk(chunk_no, &members) {
+                Ok(Some(c)) => chunks.push(c),
+                Ok(None) => {}
+                Err(e) => self.quarantine(&snaps, e)?,
+            }
+        }
+        Ok(chunks)
+    }
+
+    /// Pack and replay ONE unified chunk-of-slots (see
+    /// [`Self::encode_unified_chunks`] for the slot/row layout). Fallible
+    /// as a unit: any error leaves only this chunk's members dirty, and
+    /// only at dead (masked) cache rows at positions >= each member's
+    /// rolled-back `pos`. Returns `None` for an all-intermediate chunk
+    /// (nothing to read back this round).
+    fn encode_unified_chunk(
+        &mut self,
+        chunk_no: usize,
+        members: &[(usize, usize)],
+    ) -> Result<Option<EncodedChunk>> {
+        let width = self.batch_width;
+        let chunk = self.prefill_chunk;
+        let rows = width * chunk;
+        let speculate = self.speculate;
+        let (hidden, max_seq) = (self.dims.hidden, self.dims.max_seq);
+        {
             // ---- pack: residency, prompt chunks / decode tokens,
             // per-slot uniforms ----
             let mut xbuf = vec![0f32; rows * hidden];
@@ -1251,7 +1611,7 @@ impl<'r> ServingEngine<'r> {
                 (0..width).map(|_| None).collect();
             {
                 let ServingEngine { executor, weights, active, .. } = &mut *self;
-                for &(row, i) in &members {
+                for &(row, i) in members {
                     let s = &mut active[i];
                     // Hydration of a resumed session is charged to it.
                     let w0 = executor.device.stats.bytes_written;
@@ -1348,9 +1708,11 @@ impl<'r> ServingEngine<'r> {
             let c0 = self.executor.device.clock.now_ns();
             let logits_buf = {
                 let ServingEngine { executor, unified_graph, active, .. } = &mut *self;
-                let graph = unified_graph.as_ref().expect("unified path checked");
+                let graph = unified_graph
+                    .as_ref()
+                    .ok_or_else(|| Error::Internal("unified plan missing".into()))?;
                 let mut table: Vec<Option<&DeviceKvCache>> = vec![None; width];
-                for &(row, i) in &members {
+                for &(row, i) in members {
                     table[row] = active[i].kv.as_device();
                 }
                 let (_outs, logits_buf, _delta) =
@@ -1402,7 +1764,7 @@ impl<'r> ServingEngine<'r> {
             // finals read their last valid row, verifies read all
             // `1 + drafted` rows.
             let mut owners: Vec<ChunkOwner> = Vec::new();
-            for &(row, i) in &members {
+            for &(row, i) in members {
                 if was_prefill[row] && !final_prefill[row] {
                     continue;
                 }
@@ -1422,16 +1784,15 @@ impl<'r> ServingEngine<'r> {
             }
             if owners.is_empty() {
                 // All-intermediate chunk: nothing reads back this round.
-                continue;
+                return Ok(None);
             }
-            chunks.push(EncodedChunk {
+            Ok(Some(EncodedChunk {
                 buf: logits_buf.ok_or_else(|| {
                     Error::Graph("unified plan produced no logits buffer".into())
                 })?,
                 owners,
-            });
+            }))
         }
-        Ok(chunks)
     }
 
     /// ONE synchronizing readback for the WHOLE round: every encoded
@@ -1446,7 +1807,20 @@ impl<'r> ServingEngine<'r> {
         }
         let bufs: Vec<BufferId> = chunks.iter().map(|c| c.buf).collect();
         let sy0 = self.executor.device.timeline.sync_virtual_ns;
-        let all_bytes = self.executor.device.map_read_many(&bufs)?;
+        let all_bytes = {
+            let ServingEngine { executor, retries, .. } = &mut *self;
+            match Self::map_read_retry(&mut executor.device, &bufs, retries) {
+                Ok(b) => b,
+                Err(e) => {
+                    // A readback that stays down past its retry budget is
+                    // round-fatal: return the ring buffers and surface it.
+                    for &b in &bufs {
+                        let _ = executor.release_logits(b);
+                    }
+                    return Err(e);
+                }
+            }
+        };
         let sync_d = self.executor.device.timeline.sync_virtual_ns - sy0;
         for &buf in &bufs {
             self.executor.release_logits(buf)?;
@@ -1458,6 +1832,9 @@ impl<'r> ServingEngine<'r> {
         for (c, bytes) in chunks.iter().zip(&all_bytes) {
             for o in &c.owners {
                 let s = &mut self.active[o.session];
+                // Tokens committed: the consecutive-fault streak is over
+                // (the sticky degrade rung and total_retries remain).
+                s.retries = 0;
                 s.metrics.sync_virtual_ns += share(sync_d, k_all, j);
                 j += 1;
                 let Some(spec) = &o.spec else {
@@ -1527,6 +1904,11 @@ impl<'r> ServingEngine<'r> {
             }
         }
         for s in done.iter_mut().rev() {
+            if s.total_retries > 0 && !s.failed {
+                // Completed in full despite >= 1 transient fault — the
+                // recovery ledger the fault gates assert on.
+                self.recovered_sessions += 1;
+            }
             self.release_session_cache(s)?;
         }
         self.finished.extend(done);
@@ -1564,16 +1946,44 @@ impl<'r> ServingEngine<'r> {
     /// re-allocates and re-hydrates. Lets a server park cold sessions
     /// without losing their context. No-op for host-resident sessions.
     pub fn evict_session_cache(&mut self, s: &mut SessionState) -> Result<()> {
+        let ServingEngine { executor, retries, .. } = self;
+        Self::evict_kv_to_host(executor, s, retries)
+    }
+
+    /// The spill body behind [`Self::evict_session_cache`], borrow-split so
+    /// quarantine can call it on a session inside `self.active`. The spill
+    /// readback rides the bounded transient-retry loop: a one-shot map
+    /// timeout during checkpointing must not turn a recoverable fault into
+    /// a run-fatal one.
+    fn evict_kv_to_host(
+        executor: &mut GraphExecutor<'r>,
+        s: &mut SessionState,
+        retries: &mut u64,
+    ) -> Result<()> {
         // Spill FIRST, while the session still owns its set: a failed
         // readback leaves the session device-resident and fully usable,
         // leaking nothing.
         let spilled = match s.kv.as_device() {
-            Some(cache) => self.executor.spill_kv_cache(cache)?,
+            Some(cache) => {
+                let mut attempt = 0u32;
+                loop {
+                    match executor.spill_kv_cache(cache) {
+                        Ok(t) => break t,
+                        Err(e) if e.is_transient() && attempt < MAX_MAP_RETRIES => {
+                            attempt += 1;
+                            *retries += 1;
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+            }
             None => return Ok(()),
         };
         let KvCache::Device(cache) = std::mem::replace(&mut s.kv, KvCache::Host(Vec::new()))
         else {
-            unreachable!("checked above")
+            return Err(Error::Internal(
+                "device-resident session lost its cache between spill and release".into(),
+            ));
         };
         // Spec order is layer-major [K, V]: re-pair per layer. The session
         // becomes host-resident BEFORE the release, so even a release
@@ -1584,7 +1994,7 @@ impl<'r> ServingEngine<'r> {
             host.push((k, v));
         }
         s.kv = KvCache::Host(host);
-        self.executor.release_kv_cache(cache)
+        executor.release_kv_cache(cache)
     }
 
     /// Drive every queued + active session to completion; report aggregates
@@ -1637,6 +2047,13 @@ impl<'r> ServingEngine<'r> {
         let ps = self.executor.pool.stats();
         report.pool_high_water_bytes = ps.high_water_bytes as u64;
         report.pool_buffers_created = ps.created;
+        report.pool_evictions = ps.evictions;
+        // Fault/recovery ledger (zeroes when no injector is installed).
+        report.faults_injected = self.executor.device.faults_injected();
+        report.retries = self.retries;
+        report.recovered_sessions = self.recovered_sessions;
+        report.failed_sessions = self.failed_sessions;
+        report.fault_seed = self.fault_seed;
         Ok(report)
     }
 

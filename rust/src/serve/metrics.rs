@@ -90,6 +90,24 @@ pub struct ServeReport {
     pub pool_high_water_bytes: u64,
     /// Buffers the pool created over the run (reuse keeps this flat).
     pub pool_buffers_created: u64,
+    /// Idle buffers the pool destroyed to admit an over-cap acquire
+    /// (evict-LRU-then-retry; 0 = the cap was never under pressure).
+    pub pool_evictions: u64,
+    /// Faults the installed injector fired over the run (0 = none
+    /// installed or none triggered).
+    pub faults_injected: u64,
+    /// Transient-fault recoveries engine-wide: quarantined chunks,
+    /// re-issued readbacks/spills, retried admissions.
+    pub retries: u64,
+    /// Retired sessions that completed in full despite >= 1 transient
+    /// fault — byte-identical streams to the uninjected twin.
+    pub recovered_sessions: u64,
+    /// Sessions abandoned after exhausting their retry budget (their
+    /// committed-token prefix still reports).
+    pub failed_sessions: u64,
+    /// Seed of the installed fault plan (`None` = no injection) — makes
+    /// every faulted run reproducible from its report header.
+    pub fault_seed: Option<u64>,
 }
 
 impl ServeReport {
@@ -173,6 +191,12 @@ impl ServeReport {
             plan_build_real_ns: 0,
             pool_high_water_bytes: 0,
             pool_buffers_created: 0,
+            pool_evictions: 0,
+            faults_injected: 0,
+            retries: 0,
+            recovered_sessions: 0,
+            failed_sessions: 0,
+            fault_seed: None,
         }
     }
 
@@ -216,6 +240,9 @@ impl ServeReport {
             if self.speculate >= 1 {
                 label.push_str(&format!("+spec(k={})", self.speculate));
             }
+            if let Some(seed) = self.fault_seed {
+                label.push_str(&format!("+faults(seed={seed})"));
+            }
             return label;
         }
         if self.batch_width >= 2 {
@@ -223,6 +250,9 @@ impl ServeReport {
         }
         if self.prefill_chunk >= 2 {
             label.push_str(&format!("+prefill(c={})", self.prefill_chunk));
+        }
+        if let Some(seed) = self.fault_seed {
+            label.push_str(&format!("+faults(seed={seed})"));
         }
         label
     }
@@ -291,10 +321,21 @@ mod tests {
         // Speculation only labels (and only engages) on the unified path.
         r.speculate = 4;
         assert_eq!(r.mode_label(), "planned+unified(w=4,c=16)+spec(k=4)");
+        // Fault injection labels on every path (it rides the device layer,
+        // not an execution mode).
+        r.fault_seed = Some(7);
+        assert_eq!(
+            r.mode_label(),
+            "planned+unified(w=4,c=16)+spec(k=4)+faults(seed=7)"
+        );
+        r.fault_seed = None;
         r.speculate = 0;
         r.unified = false;
         r.batch_width = 0;
         assert_eq!(r.mode_label(), "planned+prefill(c=16)");
+        r.fault_seed = Some(11);
+        assert_eq!(r.mode_label(), "planned+prefill(c=16)+faults(seed=11)");
+        r.fault_seed = None;
         r.prefill_chunk = 0;
         r.batch_width = 4;
         // Prefill dispatch-rate helper: 120 dispatches over 32 prompt

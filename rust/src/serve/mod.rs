@@ -76,6 +76,11 @@
 //! [`Device::map_read_many`]: crate::webgpu::Device::map_read_many
 //! [`PhaseTimeline`]: crate::webgpu::PhaseTimeline
 
+// The serving layer is fault-tolerant by contract: every failure path is
+// a typed `Error` (transient vs fatal, session- vs device-scoped), never
+// a panic. New `unwrap()`/`expect()` sites fail clippy review.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod draft;
 pub mod engine;
 pub mod metrics;
@@ -86,4 +91,4 @@ pub use draft::draft_ngram;
 pub use engine::{argmax_bytes, ServeConfig, ServingEngine, StepHandle};
 pub use metrics::ServeReport;
 pub use queue::{Request, RequestQueue};
-pub use session::{KvCache, SessionMetrics, SessionState};
+pub use session::{KvCache, SessionMetrics, SessionSnapshot, SessionState};

@@ -161,6 +161,15 @@ impl SessionMetrics {
     }
 }
 
+/// The committed logical cursor of a session — everything a transient
+/// fault can dirty. Captured by [`SessionState::snapshot`] before each
+/// fallible encode, restored by [`SessionState::rollback`] on failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionSnapshot {
+    pub pos: usize,
+    fed: usize,
+}
+
 /// One in-flight request's decode state.
 #[derive(Debug, Clone)]
 pub struct SessionState {
@@ -188,6 +197,23 @@ pub struct SessionState {
     /// produced by the step that consumed the final prompt token).
     pub tokens: Vec<usize>,
     pub metrics: SessionMetrics,
+    /// Consecutive transient faults charged to this session's current
+    /// recovery episode; reset to 0 by a successfully committed step.
+    pub retries: u32,
+    /// Lifetime transient faults recovered by this session (sticky; a
+    /// retired session with `total_retries > 0 && !failed` counts as
+    /// recovered in the serve report).
+    pub total_retries: u64,
+    /// Degradation-ladder rung, latched until retire: 0 = unified rounds,
+    /// 1 = split scheduling (solo prefill chunk / solo decode step),
+    /// 2 = interleaved token-by-token. Escalates one rung per fault.
+    pub degrade: u8,
+    /// Quarantine backoff: rounds this session sits out before its next
+    /// retry (decremented once per round while positive).
+    pub cooldown: u32,
+    /// Set once `retries` exceeds the engine's bound: the session is
+    /// abandoned and retired with whatever tokens it committed.
+    pub failed: bool,
 }
 
 impl SessionState {
@@ -220,7 +246,30 @@ impl SessionState {
                 admitted_ns,
                 ..SessionMetrics::default()
             },
+            retries: 0,
+            total_retries: 0,
+            degrade: 0,
+            cooldown: 0,
+            failed: false,
         }
+    }
+
+    /// Capture the committed logical cursor — decode position and prompt
+    /// cursor — before a fallible encode. KV rows at or beyond `pos` are
+    /// dead (never attended by causal SDPA, overwritten by the next
+    /// committed scatter), so `{pos, fed}` alone is a complete
+    /// checkpoint: [`SessionState::rollback`] plus the spill/re-hydrate
+    /// path restores exactly the last committed token's state.
+    pub fn snapshot(&self) -> SessionSnapshot {
+        SessionSnapshot { pos: self.pos, fed: self.fed }
+    }
+
+    /// Rewind to a [`SessionState::snapshot`] taken before a failed
+    /// encode. Token history and `last_token` are untouched: a fault is
+    /// only ever observed before the round's readback commits tokens.
+    pub fn rollback(&mut self, snap: SessionSnapshot) {
+        self.pos = snap.pos;
+        self.fed = snap.fed;
     }
 
     /// Reset this session's host-side decode state: position, prompt
@@ -316,6 +365,7 @@ impl SessionState {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -408,6 +458,35 @@ mod tests {
         assert_eq!(s.take_input(), Some((7, true)), "prompt cursor rewound");
         let host = s.kv.as_host().unwrap();
         assert!(host.is_empty(), "reset reverts to the lazily-materialized state");
+    }
+
+    #[test]
+    fn snapshot_rollback_rewinds_the_logical_cursor() {
+        let mut s = session(vec![10, 11, 12], 2);
+        let r = s.peek_prompt_chunk(2);
+        s.consume_prompt(r.len());
+        s.pos += 2;
+        let snap = s.snapshot();
+        // A failed chunk: prompt cursor and position advanced, then the
+        // replay faulted before the readback.
+        let r = s.peek_prompt_chunk(2);
+        s.consume_prompt(r.len());
+        s.pos += 1;
+        s.rollback(snap);
+        assert_eq!(s.pos, 2);
+        assert_eq!(s.remaining_prompt(), 1, "prompt cursor rewound too");
+        // The retry re-reads the same chunk.
+        assert_eq!(s.peek_prompt_chunk(2), 2..3);
+    }
+
+    #[test]
+    fn fresh_sessions_start_healthy() {
+        let s = session(vec![1], 1);
+        assert_eq!(s.retries, 0);
+        assert_eq!(s.total_retries, 0);
+        assert_eq!(s.degrade, 0);
+        assert_eq!(s.cooldown, 0);
+        assert!(!s.failed);
     }
 
     #[test]

@@ -42,6 +42,8 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
             "upload (B/step)",
             "resident (KiB/sess)",
             "pool HW (KiB)",
+            "faults",
+            "recov",
         ],
     );
     let base = rows.first().map(|(_, r)| r.agg_tok_per_s).unwrap_or(1.0);
@@ -63,6 +65,8 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
             f1(r.upload_bytes_per_step()),
             f1(r.resident_bytes as f64 / 1024.0),
             f1(r.pool_high_water_bytes as f64 / 1024.0),
+            r.faults_injected.to_string(),
+            r.recovered_sessions.to_string(),
         ]);
     }
     t.note(
@@ -98,6 +102,14 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
          verifying k drafted tokens per session in the same one-replay \
          round. accept = accepted drafts / drafted (0 with speculation \
          off).",
+    );
+    t.note(
+        "faults = injected transient faults absorbed during the run \
+         (+faults modes only, 0 otherwise); recov = sessions that hit at \
+         least one fault, rolled back to their last committed-token \
+         checkpoint, and still completed. Recovery rides the evict-to-host \
+         spill path, so the token streams stay byte-identical to the \
+         fault-free run.",
     );
     t
 }
@@ -212,6 +224,20 @@ mod tests {
         assert!(md.contains("(sync)"));
         assert!(md.contains("(prefill ms)"));
         assert!(md.contains("(first decode ms)"));
+    }
+
+    #[test]
+    fn scaling_table_reports_fault_columns() {
+        let mut r = fake_report(2, 4);
+        r.faults_injected = 3;
+        r.recovered_sessions = 2;
+        let md = scaling_table(&[(2, r)]).to_markdown();
+        assert!(md.contains("faults"), "{md}");
+        assert!(md.contains("recov"), "{md}");
+        // Cell values land in the row (exact-match on small ints is safe
+        // here: no other column renders a bare "3" for this report).
+        let row = md.lines().find(|l| l.starts_with("| 2 ")).unwrap();
+        assert!(row.contains(" 3 "), "{row}");
     }
 
     #[test]

@@ -18,6 +18,7 @@ use super::encoder::{
     Command, CommandBuffer, CommandBufferId, CommandEncoder, CommandEncoderId,
     EncoderState,
 };
+use super::fault::{FaultInjector, FaultKind};
 use super::limits::Limits;
 use super::pipeline::{
     ComputePipeline, ComputePipelineId, ShaderModule, ShaderModuleDesc,
@@ -109,6 +110,9 @@ pub struct Device {
     /// paper reports.
     drift: f64,
     jitter: Jitter,
+    /// Optional deterministic fault injection (CI-reproducible failure
+    /// modes). `None` in normal operation: the checks cost one branch.
+    fault: Option<FaultInjector>,
     next_id: u64,
     pub(crate) buffers: HashMap<BufferId, Buffer>,
     layouts: HashMap<BindGroupLayoutId, BindGroupLayout>,
@@ -140,6 +144,7 @@ impl Device {
             kernel_time_policy: KernelTimePolicy::Measured,
             synced_since_submit: true,
             drift: 1.0,
+            fault: None,
             next_id: 1,
             buffers: HashMap::new(),
             layouts: HashMap::new(),
@@ -189,10 +194,47 @@ impl Device {
         e
     }
 
+    // ---------------------------------------------------- fault injection --
+    /// Arm deterministic fault injection. Installed AFTER construction-
+    /// time setup (plan build, weight pinning) by callers that want only
+    /// steady-state opportunities to fault.
+    pub fn install_fault_injector(&mut self, inj: FaultInjector) {
+        self.fault = Some(inj);
+    }
+
+    /// Faults fired so far (0 when no injector is armed).
+    pub fn faults_injected(&self) -> u64 {
+        self.fault.as_ref().map_or(0, |f| f.injected())
+    }
+
+    /// Convert a fired fault kind into its typed error. `DispatchFail`/
+    /// `AllocFail`/`MapTimeout` are transient (the one-shot trigger is
+    /// consumed, an identical retry succeeds); `DeviceLost` is fatal.
+    fn fault_error(&mut self, kind: FaultKind, what: &str) -> Error {
+        let e = match kind {
+            FaultKind::DispatchFail => {
+                Error::Transient(format!("injected dispatch failure at {what}"))
+            }
+            FaultKind::AllocFail => {
+                Error::Transient(format!("injected allocation failure at {what}"))
+            }
+            FaultKind::MapTimeout => {
+                Error::Transient(format!("injected map timeout at {what}"))
+            }
+            FaultKind::DeviceLost => {
+                Error::DeviceLost(format!("injected device loss at {what}"))
+            }
+        };
+        self.fail(e)
+    }
+
     // ------------------------------------------------------------ buffers --
     pub fn create_buffer(&mut self, desc: BufferDesc) -> Result<BufferId> {
         if let Err(e) = validation::validate_buffer_desc(&desc, &self.limits) {
             return Err(self.fail(e));
+        }
+        if let Some(kind) = self.fault.as_mut().and_then(|f| f.on_alloc()) {
+            return Err(self.fault_error(kind, "create_buffer"));
         }
         let id = BufferId(self.id());
         self.buffers.insert(id, Buffer::new(desc));
@@ -315,6 +357,9 @@ impl Device {
     pub fn map_read_many(&mut self, ids: &[BufferId]) -> Result<Vec<Vec<u8>>> {
         if ids.is_empty() {
             return Ok(Vec::new());
+        }
+        if let Some(kind) = self.fault.as_mut().and_then(|f| f.on_map()) {
+            return Err(self.fault_error(kind, "map_read_many"));
         }
         let mut out: Vec<Vec<u8>> = Vec::with_capacity(ids.len());
         let mut total = 0usize;
@@ -553,6 +598,9 @@ impl Device {
                 group.desc.entries.len(),
                 pipe.n_inputs + pipe.n_outputs
             ))));
+        }
+        if let Some(kind) = self.fault.as_mut().and_then(|f| f.on_dispatch()) {
+            return Err(self.fault_error(kind, "dispatch_workgroups"));
         }
         let e = self.encoder_mut(enc)?;
         e.commands.push(Command::Dispatch { x, y, z });

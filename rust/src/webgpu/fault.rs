@@ -1,0 +1,234 @@
+//! Deterministic fault injection for the dispatch substrate.
+//!
+//! Real WebGPU deployments must survive the failure modes the paper's
+//! validation-heavy dispatch path implies: device loss, allocation
+//! failure under memory pressure, and hung readbacks. This module makes
+//! every one of them reproducible in CI without a GPU: a [`FaultPlan`]
+//! names *which* opportunity fails (the Nth dispatch, the Nth buffer
+//! allocation, the Nth coalesced readback), the [`FaultInjector`]
+//! counts opportunities as the [`super::device::Device`] reaches them
+//! and fires each trigger exactly once.
+//!
+//! Triggers are **one-shot**, which is what makes injected faults
+//! transient: the failed call consumed the trigger, so an identical
+//! retry succeeds. Seeded plans ([`FaultPlan::seeded`]) draw only
+//! transient kinds — they drive the differential suite's byte-identity
+//! arm, which requires every session to recover. Device loss is only
+//! ever injected by hand-built plans (it is fatal by definition).
+
+use crate::model::rng::XorShiftRng;
+
+/// What kind of failure a trigger injects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `dispatch_workgroups` fails validation-side after the real
+    /// validation checks pass (a spurious device-side rejection).
+    /// Transient: the command was never recorded.
+    DispatchFail,
+    /// `create_buffer` fails as if the allocator were out of memory.
+    /// Transient: memory pressure is relieved by eviction/retirement.
+    AllocFail,
+    /// `map_read_many` times out before the buffers map. Transient: the
+    /// buffers still hold their contents, a re-issued map succeeds.
+    MapTimeout,
+    /// The device is lost. Fatal and device-scoped: once fired, every
+    /// subsequent injection checkpoint also fails.
+    DeviceLost,
+}
+
+/// One injected failure: the `at`-th opportunity (1-based) of the
+/// trigger's counter class fails. [`FaultKind::DispatchFail`] and
+/// [`FaultKind::DeviceLost`] count dispatch calls, [`FaultKind::AllocFail`]
+/// counts buffer creations, [`FaultKind::MapTimeout`] counts coalesced
+/// readbacks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultTrigger {
+    pub kind: FaultKind,
+    pub at: u64,
+}
+
+/// A reproducible schedule of fault triggers.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub triggers: Vec<FaultTrigger>,
+}
+
+impl FaultPlan {
+    pub fn new(triggers: Vec<FaultTrigger>) -> Self {
+        FaultPlan { triggers }
+    }
+
+    /// Derive a transient-only plan from a seed: 2–4 triggers, biased
+    /// toward dispatch failures (the plentiful opportunity class —
+    /// hundreds per serving run), with allocation failures and map
+    /// timeouts placed early where their opportunity counters actually
+    /// reach (steady-state pool reuse means `create_buffer` is rare).
+    /// Never draws [`FaultKind::DeviceLost`]: seeded plans drive the
+    /// byte-identity differential arm, which requires recovery.
+    pub fn seeded(seed: u64) -> Self {
+        let mut rng =
+            XorShiftRng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xFA71);
+        let n = 2 + rng.below(3); // 2..=4 triggers
+        let mut triggers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = match rng.below(4) {
+                0 | 1 => FaultTrigger {
+                    kind: FaultKind::DispatchFail,
+                    at: 1 + rng.below(1500) as u64,
+                },
+                2 => FaultTrigger {
+                    kind: FaultKind::MapTimeout,
+                    at: 1 + rng.below(30) as u64,
+                },
+                _ => FaultTrigger {
+                    kind: FaultKind::AllocFail,
+                    at: 1 + rng.below(40) as u64,
+                },
+            };
+            triggers.push(t);
+        }
+        FaultPlan { triggers }
+    }
+}
+
+/// Counts fault opportunities and fires the plan's triggers. Installed
+/// on a [`super::device::Device`] via `install_fault_injector`; the
+/// device consults `on_dispatch`/`on_alloc`/`on_map` at each
+/// opportunity and converts a returned kind into the matching typed
+/// error.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    fired: Vec<bool>,
+    dispatch_calls: u64,
+    alloc_calls: u64,
+    map_calls: u64,
+    injected: u64,
+    lost: bool,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        let n = plan.triggers.len();
+        FaultInjector {
+            plan,
+            fired: vec![false; n],
+            dispatch_calls: 0,
+            alloc_calls: 0,
+            map_calls: 0,
+            injected: 0,
+            lost: false,
+        }
+    }
+
+    /// Faults fired so far (observability: `ServeReport.faults_injected`).
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    /// Whether a `DeviceLost` trigger has fired (latched).
+    pub fn device_lost(&self) -> bool {
+        self.lost
+    }
+
+    fn check(&mut self, calls: u64, kinds: &[FaultKind]) -> Option<FaultKind> {
+        if self.lost {
+            return Some(FaultKind::DeviceLost);
+        }
+        for (i, t) in self.plan.triggers.iter().enumerate() {
+            if !self.fired[i] && t.at == calls && kinds.contains(&t.kind) {
+                self.fired[i] = true;
+                self.injected += 1;
+                if t.kind == FaultKind::DeviceLost {
+                    self.lost = true;
+                }
+                return Some(t.kind);
+            }
+        }
+        None
+    }
+
+    /// A dispatch opportunity (also the counter class for device loss).
+    pub fn on_dispatch(&mut self) -> Option<FaultKind> {
+        self.dispatch_calls += 1;
+        let calls = self.dispatch_calls;
+        self.check(calls, &[FaultKind::DispatchFail, FaultKind::DeviceLost])
+    }
+
+    /// A buffer-allocation opportunity.
+    pub fn on_alloc(&mut self) -> Option<FaultKind> {
+        self.alloc_calls += 1;
+        let calls = self.alloc_calls;
+        self.check(calls, &[FaultKind::AllocFail])
+    }
+
+    /// A coalesced-readback opportunity.
+    pub fn on_map(&mut self) -> Option<FaultKind> {
+        self.map_calls += 1;
+        let calls = self.map_calls;
+        self.check(calls, &[FaultKind::MapTimeout])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triggers_fire_once_at_their_opportunity() {
+        let mut inj = FaultInjector::new(FaultPlan::new(vec![FaultTrigger {
+            kind: FaultKind::DispatchFail,
+            at: 3,
+        }]));
+        assert_eq!(inj.on_dispatch(), None);
+        assert_eq!(inj.on_dispatch(), None);
+        assert_eq!(inj.on_dispatch(), Some(FaultKind::DispatchFail));
+        // One-shot: the retry of the same opportunity class succeeds.
+        assert_eq!(inj.on_dispatch(), None);
+        assert_eq!(inj.injected(), 1);
+    }
+
+    #[test]
+    fn counter_classes_are_independent() {
+        let mut inj = FaultInjector::new(FaultPlan::new(vec![
+            FaultTrigger { kind: FaultKind::AllocFail, at: 1 },
+            FaultTrigger { kind: FaultKind::MapTimeout, at: 2 },
+        ]));
+        // Dispatch opportunity 1 does not fire the alloc trigger.
+        assert_eq!(inj.on_dispatch(), None);
+        assert_eq!(inj.on_alloc(), Some(FaultKind::AllocFail));
+        assert_eq!(inj.on_map(), None);
+        assert_eq!(inj.on_map(), Some(FaultKind::MapTimeout));
+        assert_eq!(inj.injected(), 2);
+    }
+
+    #[test]
+    fn device_loss_latches() {
+        let mut inj = FaultInjector::new(FaultPlan::new(vec![FaultTrigger {
+            kind: FaultKind::DeviceLost,
+            at: 2,
+        }]));
+        assert_eq!(inj.on_dispatch(), None);
+        assert_eq!(inj.on_dispatch(), Some(FaultKind::DeviceLost));
+        assert!(inj.device_lost());
+        // Every subsequent opportunity of every class fails too.
+        assert_eq!(inj.on_dispatch(), Some(FaultKind::DeviceLost));
+        assert_eq!(inj.on_alloc(), Some(FaultKind::DeviceLost));
+        assert_eq!(inj.on_map(), Some(FaultKind::DeviceLost));
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_transient_only() {
+        let a = FaultPlan::seeded(42);
+        let b = FaultPlan::seeded(42);
+        assert_eq!(a.triggers, b.triggers);
+        assert!((2..=4).contains(&a.triggers.len()));
+        for t in &a.triggers {
+            assert_ne!(t.kind, FaultKind::DeviceLost, "seeded plans must be recoverable");
+            assert!(t.at >= 1, "opportunity indices are 1-based");
+        }
+        // Different seeds diverge (probabilistically; these two do).
+        let c = FaultPlan::seeded(43);
+        assert_ne!(a.triggers, c.triggers);
+    }
+}

@@ -24,6 +24,7 @@ pub mod buffer;
 pub mod clock;
 pub mod device;
 pub mod encoder;
+pub mod fault;
 pub mod limits;
 pub mod pipeline;
 pub mod pool;
@@ -36,6 +37,7 @@ pub use buffer::{BufferDesc, BufferId, BufferUsage};
 pub use clock::{PhaseTimeline, VirtualClock, DISPATCH_PHASES};
 pub use device::{Device, KernelRunner, NullRunner};
 pub use encoder::{CommandBufferId, CommandEncoderId};
+pub use fault::{FaultInjector, FaultKind, FaultPlan, FaultTrigger};
 pub use limits::Limits;
 pub use pipeline::{ComputePipelineId, KernelIoSpec, ShaderModuleDesc, ShaderModuleId};
 pub use pool::{BufferPool, PoolStats};

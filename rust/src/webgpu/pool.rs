@@ -6,7 +6,12 @@
 //! high-water bytes, and past a configurable byte cap it errors instead
 //! of growing silently, so a leak (buffers acquired and never released)
 //! surfaces as a `LimitExceeded` rather than unbounded device memory.
-//! Stats are exported into the serving report.
+//! Before erroring, an over-cap acquire first evicts free-listed (idle)
+//! buffers — largest size class first, oldest within a class — so
+//! transient pressure from mixed size classes resolves itself instead
+//! of aborting the serving round. Only if the free lists cannot make
+//! room does the acquire fail. Stats (including evictions) are exported
+//! into the serving report.
 
 use std::collections::HashMap;
 
@@ -28,6 +33,9 @@ pub struct PoolStats {
     /// Total bytes of every buffer the pool has ever created (outstanding
     /// + free-listed) — the quantity the cap bounds.
     pub total_bytes: usize,
+    /// Free-listed buffers destroyed to make room for an over-cap
+    /// acquire (count).
+    pub evictions: u64,
 }
 
 pub struct BufferPool {
@@ -67,6 +75,9 @@ impl BufferPool {
         }
         if let Some(cap) = self.cap_bytes {
             if self.stats.total_bytes + size > cap {
+                self.evict_lru(device, size, cap)?;
+            }
+            if self.stats.total_bytes + size > cap {
                 return Err(Error::LimitExceeded(format!(
                     "buffer pool cap {cap} B exceeded: {} B held, {size} B requested",
                     self.stats.total_bytes
@@ -87,6 +98,39 @@ impl BufferPool {
         self.stats.high_water_bytes =
             self.stats.high_water_bytes.max(self.stats.outstanding_bytes);
         Ok(b)
+    }
+
+    /// Destroy idle (free-listed) buffers until `size` more bytes fit
+    /// under `cap`, or the free lists run dry. Deterministic order —
+    /// largest size class first, and within a class the oldest (front
+    /// of the list, LRU: `release` pushes to the back) — so twin runs
+    /// evict identically. The requested class's own free list is
+    /// necessarily empty here (a free-list hit returns before the cap
+    /// check), so eviction only ever reclaims *other* classes.
+    fn evict_lru(&mut self, device: &mut Device, size: usize, cap: usize) -> Result<()> {
+        let mut classes: Vec<usize> = self
+            .free
+            .iter()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(&s, _)| s)
+            .collect();
+        classes.sort_unstable_by(|a, b| b.cmp(a));
+        'outer: for class in classes {
+            while self.stats.total_bytes + size > cap {
+                let Some(list) = self.free.get_mut(&class) else { break };
+                if list.is_empty() {
+                    break;
+                }
+                let id = list.remove(0);
+                device.destroy_buffer(id)?;
+                self.stats.total_bytes = self.stats.total_bytes.saturating_sub(class);
+                self.stats.evictions += 1;
+            }
+            if self.stats.total_bytes + size <= cap {
+                break 'outer;
+            }
+        }
+        Ok(())
     }
 
     /// Return a buffer of `size` bytes to the free list.
@@ -141,11 +185,60 @@ mod tests {
         let err = p.acquire(&mut d, 100);
         assert!(
             matches!(err, Err(Error::LimitExceeded(_))),
-            "over-cap acquire must error, got {err:?}"
+            "over-cap acquire with no idle buffers must error, got {err:?}"
         );
+        assert_eq!(p.stats().evictions, 0, "nothing idle to evict");
         // Reuse within the cap still works.
         p.release(200, a);
         assert!(p.acquire(&mut d, 200).is_ok());
+    }
+
+    #[test]
+    fn over_cap_acquire_evicts_idle_buffers_before_erroring() {
+        let mut d = device();
+        let mut p = BufferPool::new(Some(512));
+        // Fill the cap with two idle classes: 2x128 free-listed + 256 held.
+        let a = p.acquire(&mut d, 128).unwrap();
+        let b = p.acquire(&mut d, 128).unwrap();
+        let _held = p.acquire(&mut d, 256).unwrap();
+        p.release(128, a);
+        p.release(128, b);
+        assert_eq!(p.stats().total_bytes, 512);
+        // A 200 B acquire does not fit (512 + 200 > 512) but the idle
+        // 128 B buffers can be evicted: two evictions free 256 B.
+        let c = p.acquire(&mut d, 200);
+        assert!(c.is_ok(), "eviction must make room, got {c:?}");
+        let s = p.stats();
+        assert_eq!(s.evictions, 2, "both idle 128 B buffers evicted");
+        assert_eq!(s.total_bytes, 512 - 256 + 200);
+        // The evicted buffers are gone from the device, not leaked into
+        // the free lists: a fresh 128 B acquire (after parking the 200 B
+        // buffer, which eviction then reclaims) creates a new buffer.
+        let before = s.created;
+        p.release(200, c.unwrap());
+        let _ = p.acquire(&mut d, 128).unwrap();
+        let s = p.stats();
+        assert_eq!(s.created, before + 1);
+        assert_eq!(s.evictions, 3, "the idle 200 B buffer was reclaimed too");
+    }
+
+    #[test]
+    fn eviction_order_is_deterministic_largest_class_first() {
+        let mut d = device();
+        let mut p = BufferPool::new(Some(1024));
+        let big = p.acquire(&mut d, 512).unwrap();
+        let small = p.acquire(&mut d, 128).unwrap();
+        p.release(512, big);
+        p.release(128, small);
+        // Needs 384 freed: the 512 B class (largest first) alone covers it.
+        assert!(p.acquire(&mut d, 768).is_ok());
+        let s = p.stats();
+        assert_eq!(s.evictions, 1, "one eviction from the largest class suffices");
+        // The small class survived and is still reusable.
+        let before = s.created;
+        let again = p.acquire(&mut d, 128).unwrap();
+        assert_eq!(again, small);
+        assert_eq!(p.stats().created, before);
     }
 
     #[test]

@@ -1,0 +1,311 @@
+//! Fault-injection matrix for the serving engine: every injected failure
+//! kind (dispatch failure, allocation failure, map-read timeout, device
+//! loss), in every round phase (prefill, decode), under every scheduling
+//! mode (unified, split, interleaved), must either be absorbed by
+//! per-session quarantine + snapshot-replay recovery with BYTE-IDENTICAL
+//! token streams — or, for device loss, surface as the typed fatal error.
+//!
+//! Trigger placement is derived from a clean twin's dispatch counts
+//! rather than hard-coded opportunity indices, so the matrix stays valid
+//! when kernel fusion or scheduling changes the dispatch bill: the
+//! prefill trigger lands halfway through the prompt-phase dispatches,
+//! the decode trigger halfway through the decode-phase remainder.
+
+use wdb::engine::{EngineConfig, ExecMode};
+use wdb::fx::builder::FusionConfig;
+use wdb::runtime::Registry;
+use wdb::serve::{ServeConfig, ServeReport, ServingEngine, SessionState};
+use wdb::webgpu::{FaultKind, FaultPlan, FaultTrigger};
+
+/// Virtual-cost jitter seed — identical for clean and faulty twins so the
+/// only difference between runs is the fault plan.
+const RESEED: u64 = 0xFA57;
+const PROMPT_LEN: usize = 5;
+const TOKENS: usize = 8;
+
+fn registry() -> Registry {
+    Registry::builtin().expect("builtin registry")
+}
+
+fn unified_cfg() -> EngineConfig {
+    EngineConfig {
+        fusion: FusionConfig::fused(),
+        exec: ExecMode::Planned,
+        ..EngineConfig::tiny_fused()
+    }
+}
+
+fn split_cfg() -> EngineConfig {
+    EngineConfig { unified: false, ..unified_cfg() }
+}
+
+fn interleaved_cfg() -> EngineConfig {
+    EngineConfig { batch_width: 0, prefill_chunk: 0, ..unified_cfg() }
+}
+
+fn modes() -> [(&'static str, EngineConfig); 3] {
+    [
+        ("unified", unified_cfg()),
+        ("split", split_cfg()),
+        ("interleaved", interleaved_cfg()),
+    ]
+}
+
+/// Drive `n` oversubscription-free sessions (distinct prompts) through one
+/// engine, optionally arming a hand-built fault plan after construction
+/// (mirroring the `fault_seed` arming point: plan build never faults).
+/// Returns (per-request token streams in submission order, report,
+/// finished sessions).
+fn run_sessions(
+    reg: &Registry,
+    cfg: EngineConfig,
+    plan: Option<FaultPlan>,
+    n: usize,
+) -> (Vec<Vec<usize>>, ServeReport, Vec<SessionState>) {
+    let mut se = ServingEngine::new(reg, ServeConfig { engine: cfg, max_concurrent: n })
+        .expect("serving engine");
+    if let Some(p) = plan {
+        se.install_fault_plan(p);
+    }
+    se.reseed(RESEED);
+    let ids: Vec<u64> = (0..n)
+        .map(|i| {
+            let prompt: Vec<usize> =
+                (0..PROMPT_LEN).map(|t| 7 + (t * 13 + i * 31) % 500).collect();
+            se.submit(&prompt, TOKENS).expect("submit")
+        })
+        .collect();
+    let report = se.run_to_completion().expect("run_to_completion");
+    let done = se.drain_finished();
+    let toks = ids
+        .iter()
+        .map(|id| done.iter().find(|s| s.id == *id).expect("finished").tokens.clone())
+        .collect();
+    (toks, report, done)
+}
+
+/// A faulty run whose plan is transient-only must complete every session
+/// with the clean twin's exact token streams, inject at least one fault,
+/// and fail nobody.
+fn assert_recovers(
+    label: &str,
+    reg: &Registry,
+    cfg: EngineConfig,
+    plan: FaultPlan,
+    n: usize,
+    clean_toks: &[Vec<usize>],
+) -> ServeReport {
+    let (f_toks, f_rep, done) = run_sessions(reg, cfg, Some(plan), n);
+    assert_eq!(clean_toks, &f_toks[..], "{label}: token streams diverged under faults");
+    assert!(f_rep.faults_injected >= 1, "{label}: the trigger never fired");
+    assert!(f_rep.retries >= 1, "{label}: a fault fired but nothing retried");
+    assert_eq!(f_rep.failed_sessions, 0, "{label}: transient fault failed a session");
+    assert!(done.iter().all(|s| !s.failed), "{label}: a drained session is marked failed");
+    f_rep
+}
+
+/// Dispatch-phase trigger placement off the clean twin's dispatch split.
+fn prefill_at(clean: &ServeReport) -> u64 {
+    (clean.prefill_dispatches / 2).max(1)
+}
+
+fn decode_at(clean: &ServeReport) -> u64 {
+    clean.prefill_dispatches + (clean.dispatches - clean.prefill_dispatches) / 2
+}
+
+#[test]
+fn dispatch_fault_in_prefill_recovers_in_every_mode() {
+    let reg = registry();
+    for (label, cfg) in modes() {
+        let (c_toks, c_rep, _) = run_sessions(&reg, cfg.clone(), None, 2);
+        assert!(c_rep.prefill_dispatches >= 2, "{label}: no prompt phase to fault");
+        let plan = FaultPlan::new(vec![FaultTrigger {
+            kind: FaultKind::DispatchFail,
+            at: prefill_at(&c_rep),
+        }]);
+        let f_rep = assert_recovers(label, &reg, cfg, plan, 2, &c_toks);
+        // Quarantine rolled the hit session(s) back and replayed: the
+        // recovery is attributed, not silent.
+        assert!(
+            f_rep.recovered_sessions >= 1,
+            "{label}: no session recorded as recovered"
+        );
+    }
+}
+
+#[test]
+fn dispatch_fault_in_decode_recovers_in_every_mode() {
+    let reg = registry();
+    for (label, cfg) in modes() {
+        let (c_toks, c_rep, _) = run_sessions(&reg, cfg.clone(), None, 2);
+        assert!(
+            c_rep.dispatches > c_rep.prefill_dispatches,
+            "{label}: no decode phase to fault"
+        );
+        let plan = FaultPlan::new(vec![FaultTrigger {
+            kind: FaultKind::DispatchFail,
+            at: decode_at(&c_rep),
+        }]);
+        let f_rep = assert_recovers(label, &reg, cfg, plan, 2, &c_toks);
+        assert!(
+            f_rep.recovered_sessions >= 1,
+            "{label}: no session recorded as recovered"
+        );
+    }
+}
+
+#[test]
+fn map_timeout_recovers_in_every_mode() {
+    let reg = registry();
+    for (label, cfg) in modes() {
+        let (c_toks, _, _) = run_sessions(&reg, cfg.clone(), None, 2);
+        // The second coalesced readback of the run times out; the bounded
+        // map-retry loop re-issues it without touching any session state,
+        // so no quarantine (and no recovered_sessions) is expected.
+        let plan = FaultPlan::new(vec![FaultTrigger { kind: FaultKind::MapTimeout, at: 2 }]);
+        assert_recovers(label, &reg, cfg, plan, 2, &c_toks);
+    }
+}
+
+#[test]
+fn alloc_fault_at_admission_recovers_in_every_mode() {
+    let reg = registry();
+    for (label, cfg) in modes() {
+        let (c_toks, _, _) = run_sessions(&reg, cfg.clone(), None, 2);
+        // The very first buffer creation after arming is the first
+        // session's KV-cache allocation (plan-owned buffers predate the
+        // injector); admission retries it inline.
+        let plan = FaultPlan::new(vec![FaultTrigger { kind: FaultKind::AllocFail, at: 1 }]);
+        assert_recovers(label, &reg, cfg, plan, 2, &c_toks);
+    }
+}
+
+/// Fault isolation: in interleaved mode every replay belongs to exactly
+/// one session, so a single decode-phase dispatch fault must quarantine
+/// exactly one session — the others' rounds continue uninterrupted.
+#[test]
+fn single_fault_quarantines_only_the_implicated_session() {
+    let reg = registry();
+    let (c_toks, c_rep, _) = run_sessions(&reg, interleaved_cfg(), None, 3);
+    let plan = FaultPlan::new(vec![FaultTrigger {
+        kind: FaultKind::DispatchFail,
+        at: decode_at(&c_rep),
+    }]);
+    let f_rep = assert_recovers("isolation", &reg, interleaved_cfg(), plan, 3, &c_toks);
+    assert_eq!(
+        f_rep.recovered_sessions, 1,
+        "a solo-replay fault must implicate exactly one session"
+    );
+}
+
+/// Several transient faults of different kinds in one run: all absorbed.
+#[test]
+fn mixed_fault_plan_recovers_on_the_unified_path() {
+    let reg = registry();
+    let (c_toks, c_rep, _) = run_sessions(&reg, unified_cfg(), None, 3);
+    let plan = FaultPlan::new(vec![
+        FaultTrigger { kind: FaultKind::AllocFail, at: 1 },
+        FaultTrigger { kind: FaultKind::DispatchFail, at: prefill_at(&c_rep) },
+        FaultTrigger { kind: FaultKind::DispatchFail, at: decode_at(&c_rep) },
+        FaultTrigger { kind: FaultKind::MapTimeout, at: 3 },
+    ]);
+    let f_rep = assert_recovers("mixed", &reg, unified_cfg(), plan, 3, &c_toks);
+    assert!(f_rep.faults_injected >= 3, "most of the mixed plan should land");
+}
+
+/// Seeded plans (the differential-suite arm and the CI bench gate) must
+/// recover across a spread of seeds with streams identical to clean.
+#[test]
+fn seeded_plans_recover_with_identical_streams() {
+    let reg = registry();
+    let (c_toks, _, _) = run_sessions(&reg, unified_cfg(), None, 3);
+    for seed in 0..6u64 {
+        let cfg = EngineConfig { fault_seed: Some(seed), ..unified_cfg() };
+        let (f_toks, f_rep, done) = run_sessions(&reg, cfg, None, 3);
+        assert_eq!(c_toks, f_toks, "seed {seed}: streams diverged");
+        assert_eq!(f_rep.failed_sessions, 0, "seed {seed}: a session failed");
+        assert_eq!(f_rep.fault_seed, Some(seed), "seed {seed}: report lost its seed");
+        assert!(done.iter().all(|s| !s.failed));
+    }
+}
+
+/// Device loss is fatal and device-scoped: the run aborts with the typed
+/// error instead of quarantining, in every scheduling mode.
+#[test]
+fn device_loss_is_fatal_in_every_mode() {
+    let reg = registry();
+    for (label, cfg) in modes() {
+        let mut se = ServingEngine::new(
+            &reg,
+            ServeConfig { engine: cfg, max_concurrent: 2 },
+        )
+        .expect("serving engine");
+        se.install_fault_plan(FaultPlan::new(vec![FaultTrigger {
+            kind: FaultKind::DeviceLost,
+            at: 10,
+        }]));
+        se.reseed(RESEED);
+        for i in 0..2usize {
+            let prompt: Vec<usize> =
+                (0..PROMPT_LEN).map(|t| 7 + (t * 13 + i * 31) % 500).collect();
+            se.submit(&prompt, TOKENS).expect("submit");
+        }
+        let err = se.run_to_completion().expect_err("device loss must abort the run");
+        assert!(err.is_device_lost(), "{label}: wrong error class: {err}");
+    }
+}
+
+/// A session facing persistent (non-one-shot) faults exhausts its retry
+/// budget, is marked failed and swept — and the engine TERMINATES instead
+/// of spinning, with the failure attributed in the report.
+#[test]
+fn persistent_faults_fail_sessions_but_terminate() {
+    let reg = registry();
+    // Every dispatch opportunity fails: no replay can ever complete.
+    let triggers: Vec<FaultTrigger> = (1..=20_000u64)
+        .map(|at| FaultTrigger { kind: FaultKind::DispatchFail, at })
+        .collect();
+    let mut se = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: unified_cfg(), max_concurrent: 2 },
+    )
+    .expect("serving engine");
+    se.install_fault_plan(FaultPlan::new(triggers));
+    se.reseed(RESEED);
+    for i in 0..2usize {
+        let prompt: Vec<usize> =
+            (0..PROMPT_LEN).map(|t| 7 + (t * 13 + i * 31) % 500).collect();
+        se.submit(&prompt, TOKENS).expect("submit");
+    }
+    let report = se.run_to_completion().expect("persistent faults are still session-scoped");
+    assert_eq!(report.failed_sessions, 2, "both sessions must exhaust the retry budget");
+    assert_eq!(report.recovered_sessions, 0);
+    let done = se.drain_finished();
+    assert_eq!(done.len(), 2, "failed sessions are swept into finished");
+    for s in &done {
+        assert!(s.failed, "session {} should be marked failed", s.id);
+        assert!(
+            s.tokens.len() < TOKENS,
+            "a session that never replayed cannot have finished generating"
+        );
+    }
+}
+
+/// The `+faults(seed=N)` mode label and fault counters surface in the
+/// report so bench artifacts name the experiment that actually ran.
+#[test]
+fn report_carries_fault_observability() {
+    let reg = registry();
+    let cfg = EngineConfig { fault_seed: Some(9), ..unified_cfg() };
+    let (_, rep, _) = run_sessions(&reg, cfg, None, 2);
+    assert!(
+        rep.mode_label().ends_with("+faults(seed=9)"),
+        "mode label missing the faults tag: {}",
+        rep.mode_label()
+    );
+    let clean = run_sessions(&reg, unified_cfg(), None, 2).1;
+    assert_eq!(clean.fault_seed, None);
+    assert!(!clean.mode_label().contains("+faults"));
+    assert_eq!(clean.faults_injected, 0);
+    assert_eq!(clean.retries, 0);
+}

@@ -20,7 +20,13 @@
 //!   - **split**        — `unified: false`: PR-4/PR-5 scheduling (chunked
 //!                        prefill rounds, then batched decode rounds);
 //!   - **interleaved**  — `batch_width: 0, prefill_chunk: 0`: per-session
-//!                        planned replays, token-by-token prompts.
+//!                        planned replays, token-by-token prompts;
+//!   - **fault**        — unified plus a schedule-derived seeded transient
+//!                        fault plan (dispatch failures, allocation
+//!                        failures, map-read timeouts injected at the
+//!                        device layer): quarantine + snapshot-replay
+//!                        recovery must absorb every fault without moving
+//!                        a single token or KV byte.
 //!
 //! The suite asserts BYTE-level equivalence: identical token streams for
 //! every request, and identical spilled-KV-cache bytes for a probe
@@ -113,6 +119,15 @@ fn interleaved_cfg() -> EngineConfig {
     EngineConfig { batch_width: 0, prefill_chunk: 0, ..unified_cfg() }
 }
 
+/// Unified scheduling under a seeded transient-fault plan derived from the
+/// schedule seed (so every schedule exercises a different fault mix).
+fn fault_cfg(seed: u64) -> EngineConfig {
+    EngineConfig {
+        fault_seed: Some(0xFA_17 ^ seed.wrapping_mul(0x9E37_79B9)),
+        ..unified_cfg()
+    }
+}
+
 /// Drive one engine through the schedule: submit each request at its
 /// arrival iteration, step rounds until everything drains, and spill the
 /// probe session's KV cache the first round it holds a generated token
@@ -195,15 +210,18 @@ fn differential(reg: &Registry, seeds: std::ops::Range<u64>) {
         let (p_toks, p_kv) = run_schedule(reg, spec_cfg(), &sched);
         let (s_toks, s_kv) = run_schedule(reg, split_cfg(), &sched);
         let (i_toks, i_kv) = run_schedule(reg, interleaved_cfg(), &sched);
+        let (f_toks, f_kv) = run_schedule(reg, fault_cfg(seed), &sched);
         assert_eq!(u_toks, p_toks, "{ctx}: unified vs speculative token streams diverged");
         assert_eq!(u_toks, s_toks, "{ctx}: unified vs split token streams diverged");
         assert_eq!(u_toks, i_toks, "{ctx}: unified vs interleaved token streams diverged");
+        assert_eq!(u_toks, f_toks, "{ctx}: unified vs fault-injected token streams diverged");
         // The probe session generated at least one token in every mode,
         // so the spill always captured a snapshot.
         assert!(!u_kv.is_empty(), "{ctx}: probe never fired");
         assert_eq!(u_kv, p_kv, "{ctx}: unified vs speculative spilled-KV bytes diverged");
         assert_eq!(u_kv, s_kv, "{ctx}: unified vs split spilled-KV bytes diverged");
         assert_eq!(u_kv, i_kv, "{ctx}: unified vs interleaved spilled-KV bytes diverged");
+        assert_eq!(u_kv, f_kv, "{ctx}: unified vs fault-injected spilled-KV bytes diverged");
     }
 }
 
@@ -262,6 +280,23 @@ fn oversubscribed_wide_rounds_match_across_modes() {
     assert_eq!(u_kv, p_kv, "wide rounds: spilled-KV bytes diverged (speculative)");
     assert_eq!(u_kv, s_kv, "wide rounds: spilled-KV bytes diverged (split)");
     assert_eq!(u_kv, i_kv, "wide rounds: spilled-KV bytes diverged (interleaved)");
+}
+
+/// Speculation and fault injection composed: a quarantined session stops
+/// drafting while degraded, yet token streams and spilled-KV bytes must
+/// still match the clean unified run. A seed subset keeps this cheap —
+/// each feature already takes the full 50-seed sweep on its own.
+#[test]
+fn speculative_fault_schedules_match_clean_unified() {
+    let reg = registry();
+    for seed in 0..8u64 {
+        let sched = gen_schedule(seed);
+        let (u_toks, u_kv) = run_schedule(&reg, unified_cfg(), &sched);
+        let cfg = EngineConfig { speculate: 3, ..fault_cfg(seed) };
+        let (f_toks, f_kv) = run_schedule(&reg, cfg, &sched);
+        assert_eq!(u_toks, f_toks, "seed {seed}: spec+faults token streams diverged");
+        assert_eq!(u_kv, f_kv, "seed {seed}: spec+faults spilled-KV bytes diverged");
+    }
 }
 
 /// The unfused op flow takes the same three-way differential: unified
