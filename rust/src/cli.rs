@@ -164,6 +164,7 @@ Commands:
   serve [--requests 16] [--tokens 10] [--concurrent 4] [--profile dawn]
         [--exec-mode planned] [--batch-width 4 | --no-batch]
         [--prefill-chunk 16] [--no-unified]
+        [--kv-block 16 | --no-paged] [--pool-cap-kv N]
         [--speculate K | --no-speculate] [--inject-faults SEED]
                                   FIFO request loop over the serving engine
                                   (planned replay + resident KV caches +
@@ -182,11 +183,21 @@ Commands:
                                   in the device layer — recovery rolls the
                                   hit sessions back to their last committed
                                   token and replays, never changing the
-                                  streams). The report header prints the
-                                  mode that ran.
+                                  streams; paged KV residency — fixed
+                                  kv_block-token blocks from a shared pool
+                                  + per-slot block tables, with a per-block
+                                  LRU pager — is the planned default:
+                                  --kv-block N picks the block size,
+                                  --no-paged restores PR 3 contiguous
+                                  sets, --pool-cap-kv N caps the KV pool
+                                  at N contiguous sets' bytes in either
+                                  layout). The report header prints the
+                                  mode that ran plus block-pool high-water
+                                  and page-in/out counts.
   serve-bench [--sessions 1,2,4,8] [--tokens 16] [--profile dawn]
               [--exec-mode planned] [--batch-width 4 | --no-batch]
               [--prefill-chunk 16] [--prompt 128] [--no-unified]
+              [--kv-block 16 | --no-paged] [--pool-cap-kv N]
               [--speculate K | --no-speculate] [--inject-faults SEED]
               [--out DIR]         multi-session serving scaling table:
                                   aggregate tok/s + per-phase attribution
@@ -211,7 +222,14 @@ Commands:
                                   --inject-faults SEED, hard-gates token-
                                   stream identity vs a fault-free twin at
                                   every N (faults may cost time, never
-                                  tokens) and zero failed sessions.
+                                  tokens) and zero failed sessions; with
+                                  paged KV on (the planned default),
+                                  hard-gates token-stream identity vs a
+                                  --no-paged contiguous twin at every N
+                                  and ZERO failed sessions even when
+                                  --pool-cap-kv oversubscribes the pool
+                                  (admission defers and pages, never
+                                  fails).
   plan-bench [--tokens 8] [--dps 16] [--profile dawn] [--out DIR]
                                   table P1: eager vs planned per-op
                                   framework overhead across workloads x
@@ -557,6 +575,57 @@ fn speculate_from_flags(args: &Args) -> Result<usize> {
     }
 }
 
+/// Resolve the paged-KV layout from `--kv-block N` / `--no-paged`
+/// (default: paged on at [`crate::engine::DEFAULT_KV_BLOCK`] tokens per
+/// block). Returns `(paged, kv_block)` for [`EngineConfig`]; block-size
+/// validity (membership in [`crate::fx::KV_BLOCKS`], divides `max_seq`)
+/// is enforced by `ServingEngine::new` so every entry point fails the
+/// same way.
+fn paged_from_flags(args: &Args) -> Result<(bool, usize)> {
+    if args.has("no-paged") {
+        if args.has("kv-block") {
+            return Err(Error::Graph("--no-paged conflicts with --kv-block".into()));
+        }
+        return Ok((false, 0));
+    }
+    match args.flag("kv-block") {
+        Some(v) => v
+            .parse::<usize>()
+            .map(|b| (true, b))
+            .map_err(|_| Error::Graph(format!("bad --kv-block '{v}'"))),
+        None => Ok((true, crate::engine::DEFAULT_KV_BLOCK)),
+    }
+}
+
+/// Contiguous bytes of one session's full KV-cache set (K + V planes x
+/// layers x max_seq rows of f32): the unit `--pool-cap-kv` counts in, so
+/// `--pool-cap-kv N` means "device memory for N PR 3 contiguous sessions"
+/// in both layouts — equal N is an equal-cap density comparison.
+fn kv_set_bytes(dims: &GraphDims) -> usize {
+    2 * dims.layers * dims.max_seq * dims.kv_heads * dims.head_dim * 4
+}
+
+/// Resolve `--pool-cap-kv N` (default: uncapped). Paged runs translate
+/// the cap into a block-group budget the per-block LRU pager spills past
+/// (admission defers and pages, never fails); contiguous runs cap the
+/// BufferPool the PR 3 way (whole-set evict-to-host).
+fn pool_cap_from_flags(args: &Args, dims: &GraphDims) -> Result<Option<usize>> {
+    match args.flag("pool-cap-kv") {
+        Some(v) => {
+            let n = v
+                .parse::<usize>()
+                .map_err(|_| Error::Graph(format!("bad --pool-cap-kv '{v}'")))?;
+            if n == 0 {
+                return Err(Error::Graph(
+                    "--pool-cap-kv needs a positive contiguous-set count".into(),
+                ));
+            }
+            Ok(Some(n * kv_set_bytes(dims)))
+        }
+        None => Ok(None),
+    }
+}
+
 /// Resolve the fault-injection seed from `--inject-faults SEED` (default:
 /// off). A seed arms a deterministic transient-fault schedule (dispatch
 /// failures, allocation failures, map timeouts) in the device layer;
@@ -626,6 +695,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let prefill_chunk = prefill_chunk_from_flags(args)?;
     let speculate = speculate_from_flags(args)?;
     let fault_seed = fault_seed_from_flags(args)?;
+    let (paged, kv_block) = paged_from_flags(args)?;
+    let dims = GraphDims::from_manifest(registry.config("qwen-tiny")?);
+    let pool_cap_bytes = pool_cap_from_flags(args, &dims)?;
     let mut se = ServingEngine::new(
         &registry,
         ServeConfig {
@@ -637,6 +709,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 unified: !args.has("no-unified"),
                 speculate,
                 fault_seed,
+                paged,
+                kv_block,
+                pool_cap_bytes,
                 ..EngineConfig::tiny_fused()
             },
             max_concurrent: concurrent,
@@ -677,6 +752,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             report.recovered_sessions,
             report.failed_sessions,
             report.pool_evictions
+        );
+    }
+    if report.kv_block > 0 {
+        println!(
+            "paged KV: block {} tokens ({} B/group), pool high-water {} groups \
+             ({:.0} KiB), {} page-ins / {} page-outs, {} sessions resident at peak",
+            report.kv_block,
+            report.kv_group_bytes,
+            report.kv_pool_high_water_groups,
+            (report.kv_pool_high_water_groups * report.kv_group_bytes) as f64 / 1024.0,
+            report.kv_page_ins,
+            report.kv_page_outs,
+            report.resident_sessions_hw
         );
     }
     let done = se.drain_finished();
@@ -736,6 +824,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let prompt = prompt_from_flags(args, &tok)?;
     let unified = !args.has("no-unified");
     let fault_seed = fault_seed_from_flags(args)?;
+    let (paged, kv_block) = paged_from_flags(args)?;
+    let dims = GraphDims::from_manifest(registry.config("qwen-tiny")?);
+    let pool_cap_bytes = pool_cap_from_flags(args, &dims)?;
     let ec = EngineConfig {
         profile: profile.clone(),
         exec,
@@ -744,6 +835,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         unified,
         speculate,
         fault_seed,
+        paged,
+        kv_block,
+        pool_cap_bytes,
         ..EngineConfig::tiny_fused()
     };
     // Uniform bench workload: every row/twin submits n copies of this.
@@ -752,11 +846,16 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     println!(
         "Serving scaling bench: {} tokens/session, prompt {} tokens, profile {}, \
          exec mode {exec:?}, batch width {batch_width}, prefill chunk {prefill_chunk}, \
-         unified rounds {}, speculate {speculate}, fault injection {}\n",
+         unified rounds {}, paged KV {}, pool cap {}, speculate {speculate}, \
+         fault injection {}\n",
         tokens,
         prompt.len(),
         profile.name,
         if unified && batch_width >= 2 && prefill_chunk >= 2 { "on" } else { "off" },
+        if paged { format!("block {kv_block}") } else { "off".into() },
+        pool_cap_bytes
+            .map(|b| format!("{} contiguous sets ({} KiB)", b / kv_set_bytes(&dims), b / 1024))
+            .unwrap_or_else(|| "uncapped".into()),
         fault_seed
             .map(|s| format!("seed {s}"))
             .unwrap_or_else(|| "off".into())
@@ -794,6 +893,25 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         );
     }
 
+    // Self-describing paged-pool summary: block-pool high water, pager
+    // traffic, and peak session density per row.
+    let paged_b = rows.iter().map(|(_, r)| r.kv_block).max().unwrap_or(0);
+    if paged_b > 0 {
+        println!();
+        for (n, r) in &rows {
+            println!(
+                "N={n}: block pool high-water {} groups ({:.0} KiB), {} page-ins \
+                 / {} page-outs, {} sessions resident at peak, spilled-block HW {}",
+                r.kv_pool_high_water_groups,
+                (r.kv_pool_high_water_groups * r.kv_group_bytes) as f64 / 1024.0,
+                r.kv_page_ins,
+                r.kv_page_outs,
+                r.resident_sessions_hw,
+                r.kv_blocks_spilled_hw,
+            );
+        }
+    }
+
     if let Some(out) = args.flag("out") {
         let dir = std::path::PathBuf::from(out);
         // Mode-qualified names: planned (batched or interleaved) + eager
@@ -815,18 +933,28 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             crate::engine::ExecMode::Planned if batch_width >= 2 => "planned_batched",
             crate::engine::ExecMode::Planned => "planned",
         };
+        // Paged KV is the planned serving default, but it changes what
+        // the residency columns mean — qualify the artifact so paged and
+        // --no-paged trends never overwrite each other.
+        let mode = if paged_b > 0 { format!("{mode}_paged") } else { mode.to_string() };
         let prompt_tag = if args.has("prompt") {
             format!("_p{}", prompt.len())
         } else {
             String::new()
         };
+        // Capped (oversubscription) runs are a different experiment from
+        // uncapped density runs: tag them with the set-count cap.
+        let cap_tag = args
+            .flag("pool-cap-kv")
+            .map(|n| format!("_cap{n}"))
+            .unwrap_or_default();
         // Fault-injected runs are a different experiment: tag the artifact
         // so a +faults trend never overwrites the fault-free one.
         let fault_tag = fault_seed.map(|s| format!("_f{s}")).unwrap_or_default();
         for t in [&scaling, &phases] {
             let path = write_results(
                 &dir,
-                &format!("serve_bench_{}_{mode}{prompt_tag}{fault_tag}", t.id),
+                &format!("serve_bench_{}_{mode}{prompt_tag}{cap_tag}{fault_tag}", t.id),
                 &t.to_json(),
             )?;
             eprintln!("wrote {}", path.display());
@@ -1068,6 +1196,63 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         );
     }
 
+    // Paged-residency delta + HARD gates: with the paged layout engaged
+    // (the planned serving default) every row's token streams must be
+    // BYTE-IDENTICAL to a --no-paged contiguous twin at the same pool
+    // cap — the block table is a pure layout indirection, never a
+    // numerics or scheduling change — and no session may fail: under
+    // memory pressure (--pool-cap-kv below the working set) paged
+    // admission DEFERS AND PAGES, it never rejects, so a failed session
+    // under oversubscription is a pager bug. The identity twin only runs
+    // fault-free (fault rows already gate identity against their own
+    // fault-free twin below, which inherits the paged layout).
+    if paged_b > 0 {
+        println!();
+        if fault_seed.is_none() {
+            for ((n, pr), p_toks) in rows.iter().zip(&row_toks) {
+                let mut twin_cfg = ec.clone();
+                twin_cfg.paged = false;
+                let (c_toks, cr) = run_twin(&registry, twin_cfg, *n, &uniform(*n))?;
+                if *p_toks != c_toks {
+                    return Err(Error::Graph(format!(
+                        "paged token streams diverged from the --no-paged twin \
+                         at N={n}"
+                    )));
+                }
+                println!(
+                    "N={n}: paged {} sessions resident at peak vs contiguous {} \
+                     (pool HW {} groups, {} page-ins / {} page-outs) — token \
+                     streams identical to --no-paged",
+                    pr.resident_sessions_hw,
+                    cr.resident_sessions_hw,
+                    pr.kv_pool_high_water_groups,
+                    pr.kv_page_ins,
+                    pr.kv_page_outs,
+                );
+            }
+        }
+        for (n, r) in &rows {
+            if r.failed_sessions > 0 {
+                return Err(Error::Graph(format!(
+                    "paged admission gate failed at N={n}: {} session(s) failed \
+                     — oversubscribed paged serving must defer and page, never \
+                     fail",
+                    r.failed_sessions
+                )));
+            }
+        }
+        println!(
+            "paged admission gate: OK (zero failed sessions at every N{}){}",
+            if pool_cap_bytes.is_some() { " under the KV pool cap" } else { "" },
+            if fault_seed.is_none() {
+                "; paged identity gate: OK (token streams byte-identical to \
+                 --no-paged at every N)"
+            } else {
+                ""
+            }
+        );
+    }
+
     // Fault-injection recovery delta + HARD gate: with --inject-faults
     // SEED every row above ran under a seeded deterministic transient
     // fault schedule (dispatch failures, allocation failures, map-read
@@ -1225,6 +1410,10 @@ fn cmd_plan_bench(args: &Args) -> Result<()> {
                 eager_upload_bytes_per_step: e_rep.upload_bytes_per_step(),
                 planned_upload_bytes_per_step: p_rep.upload_bytes_per_step(),
                 resident_kib: p_rep.resident_bytes as f64 / 1024.0,
+                kv_block: p_rep.kv_block,
+                kv_blocks_resident_hw: p_rep.kv_pool_high_water_groups,
+                kv_blocks_spilled_hw: p_rep.kv_blocks_spilled_hw,
+                kv_bytes_per_tok: p_rep.kv_bytes_per_token(),
                 eager_tok_per_s: e_rep.agg_tok_per_s,
                 planned_tok_per_s: p_rep.agg_tok_per_s,
                 tokens_match: e_toks == p_toks,
@@ -1439,6 +1628,42 @@ mod tests {
         assert!(speculate_from_flags(&a).is_err());
         let a = parse_args(&argv(&["serve", "--speculate", "many"]));
         assert!(speculate_from_flags(&a).is_err());
+    }
+
+    #[test]
+    fn paged_flags_resolve() {
+        let a = parse_args(&argv(&["serve"]));
+        assert_eq!(
+            paged_from_flags(&a).unwrap(),
+            (true, crate::engine::DEFAULT_KV_BLOCK)
+        );
+        let a = parse_args(&argv(&["serve", "--kv-block", "8"]));
+        assert_eq!(paged_from_flags(&a).unwrap(), (true, 8));
+        let a = parse_args(&argv(&["serve", "--no-paged"]));
+        assert_eq!(paged_from_flags(&a).unwrap(), (false, 0));
+        let a = parse_args(&argv(&["serve", "--no-paged", "--kv-block", "8"]));
+        assert!(paged_from_flags(&a).is_err());
+        let a = parse_args(&argv(&["serve", "--kv-block", "wide"]));
+        assert!(paged_from_flags(&a).is_err());
+    }
+
+    #[test]
+    fn pool_cap_flag_resolves() {
+        let dims = GraphDims::qwen_tiny();
+        let a = parse_args(&argv(&["serve"]));
+        assert_eq!(pool_cap_from_flags(&a, &dims).unwrap(), None);
+        let a = parse_args(&argv(&["serve", "--pool-cap-kv", "4"]));
+        assert_eq!(
+            pool_cap_from_flags(&a, &dims).unwrap(),
+            Some(4 * kv_set_bytes(&dims))
+        );
+        // qwen-tiny contiguous set: 2 planes x 4 layers x 160 rows x
+        // 2 kv heads x 16 head dim x 4 B = 160 KiB.
+        assert_eq!(kv_set_bytes(&dims), 163_840);
+        let a = parse_args(&argv(&["serve", "--pool-cap-kv", "0"]));
+        assert!(pool_cap_from_flags(&a, &dims).is_err());
+        let a = parse_args(&argv(&["serve", "--pool-cap-kv", "tiny"]));
+        assert!(pool_cap_from_flags(&a, &dims).is_err());
     }
 
     #[test]

@@ -27,8 +27,9 @@ use std::time::Instant;
 use crate::fx::graph::FxGraph;
 use crate::fx::node::{HostOp, OpKind, ValueId};
 use crate::plan::{
-    BatchedRunner, CacheArena, DeviceKvCache, ExecutionPlan, PipelinePool, PlanConfig,
-    PlanRunner, Planner, PrefillRunner, ReplayDelta, UnifiedRunner,
+    validate_paged_persistent, BatchedRunner, BlockArena, CacheArena, DeviceKvCache,
+    ExecutionPlan, PipelinePool, PlanConfig, PlanRunner, Planner, PrefillRunner,
+    ReplayDelta, UnifiedRunner,
 };
 use crate::runtime::hostops;
 use crate::runtime::registry::Registry;
@@ -42,6 +43,26 @@ use crate::{Error, Result};
 /// Eager bind-group cache: layout id -> bound-buffer key -> group. The
 /// nested map lets the hot path probe with a borrowed scratch slice.
 type BindGroupCache = HashMap<u64, HashMap<Vec<BufferId>, crate::webgpu::BindGroupId>>;
+
+/// Shared paged-KV pool state: the pool planes every paged plan binds as
+/// its persistent set, plus the physical block-group allocator the
+/// serving pager drives. Created once by
+/// [`GraphExecutor::enable_paged_pool`], OUTSIDE the size-class
+/// [`BufferPool`] — the planes are permanent device residents like pinned
+/// weights; the *logical* residency budget lives in the [`BlockArena`],
+/// not the pool byte cap.
+pub struct PagedPool {
+    /// Pool planes as a registered cache set (layer-major
+    /// `pool.l{l}.k_cache`, `pool.l{l}.v_cache`).
+    pub set: DeviceKvCache,
+    /// Physical block-group ids + pager counters.
+    pub arena: BlockArena,
+    /// Tokens per KV block (the `kv_block` uniform's value).
+    pub kv_block: usize,
+    /// Bytes of one group's slice of ONE plane
+    /// (`kv_block * kv_heads * head_dim * 4`).
+    pub plane_slice_bytes: usize,
+}
 
 pub struct GraphExecutor<'r> {
     pub device: Device,
@@ -93,6 +114,10 @@ pub struct GraphExecutor<'r> {
     /// Session KV-cache allocator (planned mode with persistent values):
     /// allocates each session's device-resident cache set from `pool`.
     kv_arena: Option<CacheArena>,
+    /// Paged-KV state: present after [`GraphExecutor::enable_paged_pool`].
+    /// When set, the paged plan variants bind these shared pool planes and
+    /// sessions hold block tables instead of contiguous cache sets.
+    paged: Option<PagedPool>,
     /// Per-op framework overhead (virtual ns) charged in eager mode — the
     /// "Python/framework" component of the paper's ~95 us per-op cost.
     pub framework_ns_per_op: u64,
@@ -122,6 +147,7 @@ impl<'r> GraphExecutor<'r> {
             prefill: None,
             unified: None,
             kv_arena: None,
+            paged: None,
             framework_ns_per_op,
             dispatch_count: 0,
             framework_virtual_ns: 0,
@@ -190,6 +216,136 @@ impl<'r> GraphExecutor<'r> {
         Ok(())
     }
 
+    /// Create the shared paged-KV pool planes and block allocator from the
+    /// decode plan's persistent specs (`pool.l{l}.{k,v}_cache`, shape
+    /// `[POOL_ROWS, kv_heads, head_dim]`). The planes are raw device
+    /// buffers outside the size-class pool; physical capacity is fixed at
+    /// `POOL_ROWS / kv_block` groups and `budget_groups` is the logical
+    /// residency budget the serving pager enforces. Registers the planes
+    /// with the decode plan runner and installs them as its default cache
+    /// set, so paged decode replays pass `kv: None`. Requires
+    /// `enable_plan` with a PAGED decode graph first; the paged batched /
+    /// prefill / unified enables then bind the same planes automatically.
+    pub fn enable_paged_pool(&mut self, kv_block: usize, budget_groups: usize) -> Result<()> {
+        let planned = self.planned.as_ref().ok_or_else(|| {
+            Error::Graph("enable_paged_pool requires the paged decode plan first".into())
+        })?;
+        validate_paged_persistent(&planned.plan)?;
+        let specs = planned.plan.persistent.clone();
+        let rows = specs[0].shape.first().copied().unwrap_or(0);
+        if rows == 0 || kv_block == 0 || rows % kv_block != 0 {
+            return Err(Error::Graph(format!(
+                "paged pool: {rows} pool rows not divisible by kv_block {kv_block}"
+            )));
+        }
+        for spec in &specs {
+            if spec.shape != specs[0].shape || spec.size != specs[0].size {
+                return Err(Error::Graph(format!(
+                    "paged pool: plane '{}' layout differs from '{}'",
+                    spec.name, specs[0].name
+                )));
+            }
+        }
+        let usage = BufferUsage::STORAGE
+            | BufferUsage::COPY_DST
+            | BufferUsage::COPY_SRC
+            | BufferUsage::MAP_READ;
+        let mut buffers = Vec::with_capacity(specs.len());
+        let mut total = 0usize;
+        for spec in &specs {
+            buffers.push(self.device.create_buffer(BufferDesc {
+                label: format!("paged-{}", spec.name),
+                size: spec.size,
+                usage,
+            })?);
+            total += spec.size;
+        }
+        let set = DeviceKvCache { buffers, resident_bytes: total };
+        {
+            let GraphExecutor { device, planned, .. } = self;
+            let runner = planned.as_mut().ok_or_else(|| {
+                Error::Graph("enable_paged_pool requires the paged decode plan first".into())
+            })?;
+            runner.register_cache(device, &set)?;
+            runner.set_default_cache(set.clone())?;
+        }
+        let plane_slice_bytes = specs[0].size / rows * kv_block;
+        let capacity = rows / kv_block;
+        let group_bytes = plane_slice_bytes * specs.len();
+        self.paged = Some(PagedPool {
+            set,
+            arena: BlockArena::new(capacity, budget_groups, group_bytes),
+            kv_block,
+            plane_slice_bytes,
+        });
+        Ok(())
+    }
+
+    pub fn paged_pool(&self) -> Option<&PagedPool> {
+        self.paged.as_ref()
+    }
+
+    pub fn paged_pool_mut(&mut self) -> Option<&mut PagedPool> {
+        self.paged.as_mut()
+    }
+
+    pub fn paged_enabled(&self) -> bool {
+        self.paged.is_some()
+    }
+
+    /// Read whole block-groups off the pool planes: for each group, its
+    /// slice of EVERY plane in persistent order, concatenated plane-major
+    /// — the host layout `PagedSlot::Host` parks. ONE `map_read_ranges`
+    /// sync covers all groups, so a pager round or full-session evict pays
+    /// one synchronization point however many blocks it spills.
+    pub fn read_paged_groups(&mut self, groups: &[u32]) -> Result<Vec<Vec<u8>>> {
+        let GraphExecutor { device, paged, .. } = self;
+        let pool = paged
+            .as_ref()
+            .ok_or_else(|| Error::Graph("paged pool not enabled".into()))?;
+        let sl = pool.plane_slice_bytes;
+        let planes = pool.set.buffers.len();
+        let mut ranges = Vec::with_capacity(groups.len() * planes);
+        for &g in groups {
+            let off = g as usize * sl;
+            for &buf in &pool.set.buffers {
+                ranges.push((buf, off, sl));
+            }
+        }
+        let chunks = device.map_read_ranges(&ranges)?;
+        let mut out = Vec::with_capacity(groups.len());
+        for gi in 0..groups.len() {
+            let mut bytes = Vec::with_capacity(planes * sl);
+            for p in 0..planes {
+                bytes.extend_from_slice(&chunks[gi * planes + p]);
+            }
+            out.push(bytes);
+        }
+        Ok(out)
+    }
+
+    /// Upload one block-group's plane-major host bytes back into the pool
+    /// planes — the restore half of a page-out (and of hydrate-from-host).
+    pub fn write_paged_group(&mut self, group: u32, bytes: &[u8]) -> Result<()> {
+        let GraphExecutor { device, paged, .. } = self;
+        let pool = paged
+            .as_ref()
+            .ok_or_else(|| Error::Graph("paged pool not enabled".into()))?;
+        let sl = pool.plane_slice_bytes;
+        if bytes.len() != sl * pool.set.buffers.len() {
+            return Err(Error::Graph(format!(
+                "paged group upload: {} bytes != {} planes x {sl} B",
+                bytes.len(),
+                pool.set.buffers.len()
+            )));
+        }
+        let off = group as usize * sl;
+        for (p, &buf) in pool.set.buffers.iter().enumerate() {
+            device.write_buffer(buf, off, &bytes[p * sl..(p + 1) * sl])?;
+        }
+        Ok(())
+    }
+
     /// Compile the BATCHED decode graph into a plan and materialize its
     /// [`BatchedRunner`] (cache-set-table binding, padding set, `[W,vocab]`
     /// logits ring). Coexists with the single-session plan: the serving
@@ -209,7 +365,11 @@ impl<'r> GraphExecutor<'r> {
             let GraphExecutor { device, registry, pipelines, .. } = &mut *self;
             Planner::new(*registry).compile(device, pipelines, graph, &pinned_map, &cfg)?
         };
-        let mut runner = BatchedRunner::materialize(&mut self.device, plan, width)?;
+        let mut runner = if let Some(pp) = &self.paged {
+            BatchedRunner::materialize_paged(&mut self.device, plan, width, &pp.set)?
+        } else {
+            BatchedRunner::materialize(&mut self.device, plan, width)?
+        };
         runner.inner_mut().build_virtual_ns = self.device.clock.now_ns() - v0;
         runner.inner_mut().build_real_ns = t0.elapsed().as_nanos() as u64;
         self.batched = Some(runner);
@@ -250,7 +410,11 @@ impl<'r> GraphExecutor<'r> {
                     .into(),
             ));
         }
-        let mut runner = PrefillRunner::materialize(&mut self.device, plan, chunk)?;
+        let mut runner = if let Some(pp) = &self.paged {
+            PrefillRunner::materialize_paged(&mut self.device, plan, chunk, &pp.set)?
+        } else {
+            PrefillRunner::materialize(&mut self.device, plan, chunk)?
+        };
         runner.inner_mut().build_virtual_ns = self.device.clock.now_ns() - v0;
         runner.inner_mut().build_real_ns = t0.elapsed().as_nanos() as u64;
         self.prefill = Some(runner);
@@ -293,7 +457,11 @@ impl<'r> GraphExecutor<'r> {
                     .into(),
             ));
         }
-        let mut runner = UnifiedRunner::materialize(&mut self.device, plan, width, chunk)?;
+        let mut runner = if let Some(pp) = &self.paged {
+            UnifiedRunner::materialize_paged(&mut self.device, plan, width, chunk, &pp.set)?
+        } else {
+            UnifiedRunner::materialize(&mut self.device, plan, width, chunk)?
+        };
         runner.inner_mut().build_virtual_ns = self.device.clock.now_ns() - v0;
         runner.inner_mut().build_real_ns = t0.elapsed().as_nanos() as u64;
         self.unified = Some(runner);
@@ -418,6 +586,11 @@ impl<'r> GraphExecutor<'r> {
     /// the shared bounded pool and register its bind groups with the plan
     /// runner. Planned mode only.
     pub fn alloc_kv_cache(&mut self) -> Result<DeviceKvCache> {
+        if self.paged.is_some() {
+            return Err(Error::Graph(
+                "paged mode: sessions hold block tables, not contiguous cache sets".into(),
+            ));
+        }
         let GraphExecutor { device, pool, kv_arena, planned, prefill, .. } = self;
         let arena = kv_arena
             .as_mut()

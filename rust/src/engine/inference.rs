@@ -32,6 +32,11 @@ pub const TORCH_WEBGPU_FRAMEWORK_NS: u64 = 71_000;
 /// `wdb serve`/`serve-bench` override with `--batch-width` / `--no-batch`.
 pub const DEFAULT_BATCH_WIDTH: usize = 4;
 
+/// Default tokens-per-block for paged KV residency (planned serving).
+/// `wdb serve`/`serve-bench` override with `--kv-block`; `--no-paged`
+/// restores the contiguous per-session cache sets.
+pub const DEFAULT_KV_BLOCK: usize = 16;
+
 /// Default chunked-prefill size for the serving engine: planned-mode
 /// sessions ingest their prompt in seq-dim batched chunks of this many
 /// tokens (one dispatch per layer op per chunk) instead of one decode
@@ -123,6 +128,20 @@ pub struct EngineConfig {
     /// rewinding the session position. `wdb serve`/`serve-bench` override
     /// with `--speculate K`.
     pub speculate: usize,
+    /// Paged KV residency (planned serving only, default on): session KV
+    /// lives in fixed-size blocks of shared pool planes routed by per-slot
+    /// block tables, instead of one contiguous per-session cache set.
+    /// Sessions admit as long as scheduling allows — under memory
+    /// pressure the pager spills cold blocks to the host (LRU, coldest
+    /// prompt-prefix blocks first) rather than rejecting admits. Token
+    /// streams stay byte-identical to contiguous caching.
+    /// `wdb serve`/`serve-bench` override with `--no-paged`.
+    pub paged: bool,
+    /// Tokens per KV block in paged mode. Must be one of
+    /// [`crate::fx::KV_BLOCKS`] (and divide `max_seq`); other values fail
+    /// at engine construction. `wdb serve`/`serve-bench` override with
+    /// `--kv-block`.
+    pub kv_block: usize,
     /// Deterministic fault injection: `Some(seed)` installs a seeded
     /// [`crate::webgpu::FaultPlan`] (transient dispatch failures,
     /// allocation failures, readback timeouts) on the serving engine's
@@ -154,6 +173,8 @@ impl EngineConfig {
             prefill_chunk: DEFAULT_PREFILL_CHUNK,
             unified: true,
             speculate: 0,
+            paged: true,
+            kv_block: DEFAULT_KV_BLOCK,
             fault_seed: None,
             dims_override: None,
         }

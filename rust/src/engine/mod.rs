@@ -12,8 +12,9 @@ pub mod inference;
 pub mod overhead;
 pub mod protocol;
 
-pub use executor::GraphExecutor;
+pub use executor::{GraphExecutor, PagedPool};
 pub use inference::{
-    Engine, EngineConfig, ExecMode, GenResult, DEFAULT_BATCH_WIDTH, DEFAULT_PREFILL_CHUNK,
+    Engine, EngineConfig, ExecMode, GenResult, DEFAULT_BATCH_WIDTH, DEFAULT_KV_BLOCK,
+    DEFAULT_PREFILL_CHUNK,
 };
 pub use protocol::{run_protocol, ProtocolResult};

@@ -276,15 +276,33 @@ impl<'a> B<'a> {
 /// (`l{i}.k_cache`, `l{i}.v_cache`), `norm_f`, `w_lm`.
 /// Outputs: `logits`, updated `l{i}.k_cache` / `l{i}.v_cache`.
 pub fn build_decode_graph(dims: &GraphDims, fusion: FusionConfig) -> FxGraph {
+    build_decode_graph_impl(dims, fusion, false)
+}
+
+/// Paged-KV variant of [`build_decode_graph`]: the per-layer contiguous
+/// caches become shared pool planes (`pool.l{l}.{k,v}_cache`,
+/// `[POOL_ROWS, kvh, d]`), and the step inputs gain the session's
+/// `block_table` plus the `kv_block` scalar; `cache_update_paged` /
+/// `sdpa_paged` resolve logical rows through the two-level lookup. Same
+/// node count as the contiguous graph (1-for-1 kernel swap).
+pub fn build_decode_graph_paged(dims: &GraphDims, fusion: FusionConfig) -> FxGraph {
+    build_decode_graph_impl(dims, fusion, true)
+}
+
+fn build_decode_graph_impl(dims: &GraphDims, fusion: FusionConfig, paged: bool) -> FxGraph {
     let mut b = B { g: FxGraph::new(), d: dims };
     let (h, qd, kv, inter) = (dims.hidden, dims.q_dim(), dims.kv_dim(), dims.intermediate);
     let suffix = dims.suffix();
+    b.g.kv_paged = paged;
 
     let x0 = b.g.input("x");
     let pos_i = b.g.input("pos_i");
     let pos_ip1 = b.g.input("pos_ip1");
     let pos_f = b.g.input("pos_f");
     let inv_freq = b.g.input("inv_freq");
+    let paged_uniforms = paged.then(|| {
+        (b.g.input("block_table"), b.g.input("kv_block"))
+    });
 
     // Rope table, once per forward (cos/sin shared by all layers).
     let cs = b.g.kernel_multi(
@@ -303,12 +321,20 @@ pub fn build_decode_graph(dims: &GraphDims, fusion: FusionConfig) -> FxGraph {
         let wo = b.g.input(&format!("{p}.wo"));
         let norm2_w = b.g.input(&format!("{p}.norm2"));
         let wd = b.g.input(&format!("{p}.wd"));
-        let k_cache_in = b.g.input(&format!("{p}.k_cache"));
-        let v_cache_in = b.g.input(&format!("{p}.v_cache"));
-        // KV caches are persistent session state, not per-step I/O: planners
-        // bind them to session-owned device buffers and append in place.
-        b.g.mark_persistent(&format!("{p}.k_cache"));
-        b.g.mark_persistent(&format!("{p}.v_cache"));
+        // KV caches are persistent state, not per-step I/O: planners bind
+        // them to device buffers and append in place. Contiguous graphs own
+        // a per-session [max_seq, kvh, d] pair per layer; paged graphs
+        // share ONE [POOL_ROWS, kvh, d] pool plane pair per layer across
+        // every session, addressed through the block table.
+        let (k_name, v_name) = if paged {
+            (format!("pool.{p}.k_cache"), format!("pool.{p}.v_cache"))
+        } else {
+            (format!("{p}.k_cache"), format!("{p}.v_cache"))
+        };
+        let k_cache_in = b.g.input(&k_name);
+        let v_cache_in = b.g.input(&v_name);
+        b.g.mark_persistent(&k_name);
+        b.g.mark_persistent(&v_name);
 
         // ---- attention ----
         let hn = b.rmsnorm(&format!("{p}.norm1"), x, norm1_w, fusion.rmsnorm);
@@ -379,26 +405,41 @@ pub fn build_decode_graph(dims: &GraphDims, fusion: FusionConfig) -> FxGraph {
         let q_rot = b.rotary(&format!("{p}.rope_q"), qh, cos, sin, dims.heads, fusion.rotary);
         let k_rot = b.rotary(&format!("{p}.rope_k"), kh, cos, sin, dims.kv_heads, fusion.rotary);
 
+        let (cu_kernel, sd_kernel) = if paged {
+            (format!("cache_update_paged_{suffix}"), format!("sdpa_paged_{suffix}"))
+        } else {
+            (format!("cache_update_{suffix}"), format!("sdpa_{suffix}"))
+        };
+        let mut k_ins = vec![k_cache_in, k_rot, pos_i];
+        let mut v_ins = vec![v_cache_in, vh, pos_i];
+        if let Some((table, kvb)) = paged_uniforms {
+            k_ins.extend([table, kvb]);
+            v_ins.extend([table, kvb]);
+        }
         let k_cache = b.g.in_place_kernel(
             &format!("{p}.k_cache_update"),
-            &format!("cache_update_{suffix}"),
+            &cu_kernel,
             Category::Concat,
-            vec![k_cache_in, k_rot, pos_i],
+            k_ins,
         );
         let v_cache = b.g.in_place_kernel(
             &format!("{p}.v_cache_update"),
-            &format!("cache_update_{suffix}"),
+            &cu_kernel,
             Category::Concat,
-            vec![v_cache_in, vh, pos_i],
+            v_ins,
         );
-        b.g.mark_output(&format!("{p}.k_cache"), k_cache);
-        b.g.mark_output(&format!("{p}.v_cache"), v_cache);
+        b.g.mark_output(&k_name, k_cache);
+        b.g.mark_output(&v_name, v_cache);
 
+        let mut sd_ins = vec![q_rot, k_cache, v_cache, pos_ip1];
+        if let Some((table, kvb)) = paged_uniforms {
+            sd_ins.extend([table, kvb]);
+        }
         let attn = b.g.kernel(
             &format!("{p}.sdpa"),
-            &format!("sdpa_{suffix}"),
+            &sd_kernel,
             Category::Sdpa,
-            vec![q_rot, k_cache, v_cache, pos_ip1],
+            sd_ins,
         );
         let attn_flat = b.g.host(
             &format!("{p}.attn_flat"),
@@ -497,6 +538,36 @@ pub fn build_decode_graph(dims: &GraphDims, fusion: FusionConfig) -> FxGraph {
 /// `2..=MAX_BATCH_WIDTH`).
 pub const MAX_BATCH_WIDTH: usize = 8;
 
+/// Smallest supported paged-KV block size (tokens per block). The per-slot
+/// block table is sized for this worst case — `max_seq / KV_BLOCK_MIN`
+/// entries — so every block size `b` with `KV_BLOCK_MIN <= b`, `b` dividing
+/// `max_seq`, replays the SAME static kernel specs: the table stride is a
+/// compile-time constant and `kv_block` arrives as a scalar uniform.
+pub const KV_BLOCK_MIN: usize = 4;
+
+/// Paged-KV block sizes the engine accepts for `--kv-block`: multiples of
+/// [`KV_BLOCK_MIN`] that divide qwen-tiny's `max_seq` (160) and keep the
+/// fixed table stride exact. All replay the same static kernel specs.
+pub const KV_BLOCKS: [usize; 4] = [4, 8, 16, 32];
+
+/// Rows in each shared paged pool plane (`pool.l{l}.{k,v}_cache`,
+/// `[POOL_ROWS, kv_heads, head_dim]`): one full cache set per batch slot,
+/// so the worst-case working set of one encode round — `MAX_BATCH_WIDTH`
+/// sessions at `max_seq` tokens — always fits physically, whatever the
+/// logical pool budget. The plane byte size equals `MAX_BATCH_WIDTH`
+/// contiguous per-session planes; density comes from blocks being granted
+/// by ACTUAL tokens, not capacity.
+pub fn paged_pool_rows(dims: &GraphDims) -> usize {
+    MAX_BATCH_WIDTH * dims.max_seq
+}
+
+/// Fixed per-slot block-table stride (entries). Entries are physical block
+/// ids into the pool planes (`-1` = unallocated); logical row `p` of a slot
+/// resolves to pool row `table[p / kv_block] * kv_block + p % kv_block`.
+pub fn paged_table_len(dims: &GraphDims) -> usize {
+    dims.max_seq / KV_BLOCK_MIN
+}
+
 struct BB<'a> {
     g: FxGraph,
     d: &'a GraphDims,
@@ -588,9 +659,35 @@ pub fn build_batched_decode_graph(
     fusion: FusionConfig,
     width: usize,
 ) -> FxGraph {
+    build_batched_decode_graph_impl(dims, fusion, width, false)
+}
+
+/// Paged-KV variant of [`build_batched_decode_graph`]: the W slot-major
+/// cache sets and the `slot_idx` cache-set-index uniform collapse into ONE
+/// shared pool plane pair per layer (`pool.l{l}.{k,v}_cache`, layer-major —
+/// the SAME persistent layout as [`build_decode_graph_paged`], so all paged
+/// plans share one pool) plus per-slot `block_table` rows (`[W * stride]`
+/// i32) and the `kv_block` scalar. The `slot_idx` gather generalizes to the
+/// two-level `(table[p / b], p % b)` lookup. Same node count (1-for-1
+/// kernel swap), so the dispatch census is unchanged.
+pub fn build_batched_decode_graph_paged(
+    dims: &GraphDims,
+    fusion: FusionConfig,
+    width: usize,
+) -> FxGraph {
+    build_batched_decode_graph_impl(dims, fusion, width, true)
+}
+
+fn build_batched_decode_graph_impl(
+    dims: &GraphDims,
+    fusion: FusionConfig,
+    width: usize,
+    paged: bool,
+) -> FxGraph {
     assert!(width >= 2, "batched decode graphs need width >= 2 (got {width})");
     let mut b = BB { g: FxGraph::new(), d: dims, w: width };
     b.g.batch_width = width;
+    b.g.kv_paged = paged;
     let (h, qd, kv, inter) = (dims.hidden, dims.q_dim(), dims.kv_dim(), dims.intermediate);
     let (nh, kvh, d) = (dims.heads, dims.kv_heads, dims.head_dim);
     let suffix = dims.suffix();
@@ -601,19 +698,35 @@ pub fn build_batched_decode_graph(
     let pos_ip1 = b.g.input("pos_ip1");
     let pos_f = b.g.input("pos_f");
     let slot_mask = b.g.input("slot_mask");
-    let slot_idx = b.g.input("slot_idx");
+    let slot_idx = if paged { None } else { Some(b.g.input("slot_idx")) };
     let inv_freq = b.g.input("inv_freq");
+    let paged_uniforms = paged.then(|| {
+        (b.g.input("block_table"), b.g.input("kv_block"))
+    });
 
-    // Per-slot cache sets, declared SLOT-major so the plan's persistent
-    // list is a cache-set table: entries [j*2L .. (j+1)*2L) are slot j's
-    // layer-major set — the same layout a single session's DeviceKvCache
-    // uses, so sessions plug straight into slots.
-    for j in 0..width {
+    if paged {
+        // ONE shared pool plane pair per layer, layer-major — identical to
+        // the paged decode builder's persistent list, so every paged plan
+        // binds the same pool buffers.
         for l in 0..dims.layers {
             for kind in ["k", "v"] {
-                let name = format!("s{j}.l{l}.{kind}_cache");
+                let name = format!("pool.l{l}.{kind}_cache");
                 b.g.input(&name);
                 b.g.mark_persistent(&name);
+            }
+        }
+    } else {
+        // Per-slot cache sets, declared SLOT-major so the plan's persistent
+        // list is a cache-set table: entries [j*2L .. (j+1)*2L) are slot j's
+        // layer-major set — the same layout a single session's DeviceKvCache
+        // uses, so sessions plug straight into slots.
+        for j in 0..width {
+            for l in 0..dims.layers {
+                for kind in ["k", "v"] {
+                    let name = format!("s{j}.l{l}.{kind}_cache");
+                    b.g.input(&name);
+                    b.g.mark_persistent(&name);
+                }
             }
         }
     }
@@ -691,49 +804,79 @@ pub fn build_batched_decode_graph(
             vec![k, cos, sin],
         );
 
-        // One gather/scatter cache append per layer per K/V: inputs are the
-        // W per-slot states, then rows + per-slot uniforms; output j
-        // updates state j in place.
-        let k_states: Vec<ValueId> = (0..width)
-            .map(|j| b.g.inputs[&format!("s{j}.{p}.k_cache")])
-            .collect();
-        let mut k_ins = k_states;
-        k_ins.extend([k_rot, pos_i, slot_mask, slot_idx]);
-        let k_caches = b.g.in_place_kernel_multi(
-            &format!("{p}.k_cache_update"),
-            &format!("cache_update_b{bw}_{suffix}"),
-            Category::Concat,
-            k_ins,
-            width,
-        );
-        let v_states: Vec<ValueId> = (0..width)
-            .map(|j| b.g.inputs[&format!("s{j}.{p}.v_cache")])
-            .collect();
-        let mut v_ins = v_states;
-        v_ins.extend([v, pos_i, slot_mask, slot_idx]);
-        let v_caches = b.g.in_place_kernel_multi(
-            &format!("{p}.v_cache_update"),
-            &format!("cache_update_b{bw}_{suffix}"),
-            Category::Concat,
-            v_ins,
-            width,
-        );
-        for j in 0..width {
-            b.g.mark_output(&format!("s{j}.{p}.k_cache"), k_caches[j]);
-            b.g.mark_output(&format!("s{j}.{p}.v_cache"), v_caches[j]);
-        }
+        // One gather/scatter cache append per layer per K/V. Unpaged:
+        // inputs are the W per-slot states, then rows + per-slot uniforms;
+        // output j updates state j in place. Paged: ONE shared pool plane
+        // updated in place, with rows scattered through each slot's block
+        // table row.
+        let attn = if let Some((table, kvb)) = paged_uniforms {
+            let k_plane = b.g.inputs[&format!("pool.{p}.k_cache")];
+            let k_cache = b.g.in_place_kernel(
+                &format!("{p}.k_cache_update"),
+                &format!("cache_update_paged_b{bw}_{suffix}"),
+                Category::Concat,
+                vec![k_plane, k_rot, pos_i, slot_mask, table, kvb],
+            );
+            b.g.mark_output(&format!("pool.{p}.k_cache"), k_cache);
+            let v_plane = b.g.inputs[&format!("pool.{p}.v_cache")];
+            let v_cache = b.g.in_place_kernel(
+                &format!("{p}.v_cache_update"),
+                &format!("cache_update_paged_b{bw}_{suffix}"),
+                Category::Concat,
+                vec![v_plane, v, pos_i, slot_mask, table, kvb],
+            );
+            b.g.mark_output(&format!("pool.{p}.v_cache"), v_cache);
+            // One attention dispatch per layer, gathering every slot's
+            // prefix rows through its block-table row.
+            b.g.kernel(
+                &format!("{p}.sdpa"),
+                &format!("sdpa_paged_b{bw}_{suffix}"),
+                Category::Sdpa,
+                vec![q_rot, k_cache, v_cache, pos_ip1, slot_mask, table, kvb],
+            )
+        } else {
+            let slot_idx = slot_idx.expect("unpaged batched graph has slot_idx");
+            let k_states: Vec<ValueId> = (0..width)
+                .map(|j| b.g.inputs[&format!("s{j}.{p}.k_cache")])
+                .collect();
+            let mut k_ins = k_states;
+            k_ins.extend([k_rot, pos_i, slot_mask, slot_idx]);
+            let k_caches = b.g.in_place_kernel_multi(
+                &format!("{p}.k_cache_update"),
+                &format!("cache_update_b{bw}_{suffix}"),
+                Category::Concat,
+                k_ins,
+                width,
+            );
+            let v_states: Vec<ValueId> = (0..width)
+                .map(|j| b.g.inputs[&format!("s{j}.{p}.v_cache")])
+                .collect();
+            let mut v_ins = v_states;
+            v_ins.extend([v, pos_i, slot_mask, slot_idx]);
+            let v_caches = b.g.in_place_kernel_multi(
+                &format!("{p}.v_cache_update"),
+                &format!("cache_update_b{bw}_{suffix}"),
+                Category::Concat,
+                v_ins,
+                width,
+            );
+            for j in 0..width {
+                b.g.mark_output(&format!("s{j}.{p}.k_cache"), k_caches[j]);
+                b.g.mark_output(&format!("s{j}.{p}.v_cache"), v_caches[j]);
+            }
 
-        // One attention dispatch per layer, gathering every slot's K/V.
-        let mut sdpa_ins = vec![q_rot];
-        sdpa_ins.extend(k_caches.iter().copied());
-        sdpa_ins.extend(v_caches.iter().copied());
-        sdpa_ins.extend([pos_ip1, slot_mask, slot_idx]);
-        let attn = b.g.kernel(
-            &format!("{p}.sdpa"),
-            &format!("sdpa_b{bw}_{suffix}"),
-            Category::Sdpa,
-            sdpa_ins,
-        );
+            // One attention dispatch per layer, gathering every slot's K/V.
+            let mut sdpa_ins = vec![q_rot];
+            sdpa_ins.extend(k_caches.iter().copied());
+            sdpa_ins.extend(v_caches.iter().copied());
+            sdpa_ins.extend([pos_ip1, slot_mask, slot_idx]);
+            b.g.kernel(
+                &format!("{p}.sdpa"),
+                &format!("sdpa_b{bw}_{suffix}"),
+                Category::Sdpa,
+                sdpa_ins,
+            )
+        };
         let attn_out = b.g.kernel(
             &format!("{p}.o_proj"),
             &format!("matmul_b{bw}_{qd}_{h}"),
@@ -921,7 +1064,22 @@ impl<'a> CB<'a> {
 /// `fusion.mlp` / `fusion.kv` select chunked fused or decomposed kernels
 /// like the other builders.
 pub fn build_prefill_graph(dims: &GraphDims, fusion: FusionConfig, chunk: usize) -> FxGraph {
-    build_prefill_graph_impl(dims, fusion, chunk, false)
+    build_prefill_graph_impl(dims, fusion, chunk, false, false)
+}
+
+/// Paged-KV variant of [`build_prefill_graph`]: the session cache set
+/// (`l{l}.{k,v}_cache`) becomes the shared pool plane pair
+/// (`pool.l{l}.{k,v}_cache`, the SAME persistent layout as
+/// [`build_decode_graph_paged`]) plus a `block_table` (`[stride]` i32) and
+/// `kv_block` (`[1]` i32) uniform pair: the chunk scatter and the causal
+/// attention both route cache rows through `(table[p / b], p % b)`. Same
+/// node count (1-for-1 kernel swap), so the dispatch census is unchanged.
+pub fn build_prefill_graph_paged(
+    dims: &GraphDims,
+    fusion: FusionConfig,
+    chunk: usize,
+) -> FxGraph {
+    build_prefill_graph_impl(dims, fusion, chunk, false, true)
 }
 
 /// Multi-row (speculative verify) variant of [`build_prefill_graph`]: the
@@ -937,7 +1095,17 @@ pub fn build_prefill_graph_multi_row(
     fusion: FusionConfig,
     chunk: usize,
 ) -> FxGraph {
-    build_prefill_graph_impl(dims, fusion, chunk, true)
+    build_prefill_graph_impl(dims, fusion, chunk, true, false)
+}
+
+/// Paged multi-row variant: [`build_prefill_graph_multi_row`]'s every-row
+/// lm head on [`build_prefill_graph_paged`]'s pooled cache planes.
+pub fn build_prefill_graph_multi_row_paged(
+    dims: &GraphDims,
+    fusion: FusionConfig,
+    chunk: usize,
+) -> FxGraph {
+    build_prefill_graph_impl(dims, fusion, chunk, true, true)
 }
 
 fn build_prefill_graph_impl(
@@ -945,10 +1113,12 @@ fn build_prefill_graph_impl(
     fusion: FusionConfig,
     chunk: usize,
     multi_row: bool,
+    paged: bool,
 ) -> FxGraph {
     assert!(chunk >= 2, "prefill graphs need chunk >= 2 (got {chunk})");
     let mut b = CB { g: FxGraph::new(), d: dims, c: chunk };
     b.g.seq_chunk = chunk;
+    b.g.kv_paged = paged;
     let (h, qd, kv, inter) = (dims.hidden, dims.q_dim(), dims.kv_dim(), dims.intermediate);
     let (nh, kvh, d) = (dims.heads, dims.kv_heads, dims.head_dim);
     let suffix = dims.suffix();
@@ -959,6 +1129,9 @@ fn build_prefill_graph_impl(
     let pos_base = b.g.input("pos_base");
     let valid_len = b.g.input("valid_len");
     let inv_freq = b.g.input("inv_freq");
+    let paged_uniforms = paged.then(|| {
+        (b.g.input("block_table"), b.g.input("kv_block"))
+    });
 
     // Per-position rope table: one cos/sin row per chunk position.
     let cs = b.g.kernel_multi(
@@ -977,12 +1150,18 @@ fn build_prefill_graph_impl(
         let wo = b.g.input(&format!("{p}.wo"));
         let norm2_w = b.g.input(&format!("{p}.norm2"));
         let wd = b.g.input(&format!("{p}.wd"));
-        let k_cache_in = b.g.input(&format!("{p}.k_cache"));
-        let v_cache_in = b.g.input(&format!("{p}.v_cache"));
-        // The SAME layer-major persistent layout as the decode graph, so
-        // one session cache set serves both plans.
-        b.g.mark_persistent(&format!("{p}.k_cache"));
-        b.g.mark_persistent(&format!("{p}.v_cache"));
+        // The SAME layer-major persistent layout as the matching decode
+        // graph (session cache set unpaged, shared pool planes paged), so
+        // one cache binding serves both plans.
+        let (k_name, v_name) = if paged {
+            (format!("pool.{p}.k_cache"), format!("pool.{p}.v_cache"))
+        } else {
+            (format!("{p}.k_cache"), format!("{p}.v_cache"))
+        };
+        let k_cache_in = b.g.input(&k_name);
+        let v_cache_in = b.g.input(&v_name);
+        b.g.mark_persistent(&k_name);
+        b.g.mark_persistent(&v_name);
 
         // ---- attention ----
         let hn = b.rmsnorm_chunk(&format!("{p}.norm1"), x, norm1_w, fusion.rmsnorm);
@@ -1040,28 +1219,50 @@ fn build_prefill_graph_impl(
         );
 
         // ONE multi-row in-place scatter per layer per K/V: rows
-        // 0..valid_len land at cache positions pos_base.. in place.
+        // 0..valid_len land at cache positions pos_base.. in place —
+        // routed through the block table when paged.
+        let (cu_kernel, sd_kernel) = if paged {
+            (
+                format!("cache_update_paged_c{c}_{suffix}"),
+                format!("sdpa_prefill_paged_c{c}_{suffix}"),
+            )
+        } else {
+            (
+                format!("cache_update_c{c}_{suffix}"),
+                format!("sdpa_prefill_c{c}_{suffix}"),
+            )
+        };
+        let mut k_ins = vec![k_cache_in, k_rot, pos_base, valid_len];
+        let mut v_ins = vec![v_cache_in, v, pos_base, valid_len];
+        if let Some((table, kvb)) = paged_uniforms {
+            k_ins.extend([table, kvb]);
+            v_ins.extend([table, kvb]);
+        }
         let k_cache = b.g.in_place_kernel(
             &format!("{p}.k_cache_update"),
-            &format!("cache_update_c{c}_{suffix}"),
+            &cu_kernel,
             Category::Concat,
-            vec![k_cache_in, k_rot, pos_base, valid_len],
+            k_ins,
         );
         let v_cache = b.g.in_place_kernel(
             &format!("{p}.v_cache_update"),
-            &format!("cache_update_c{c}_{suffix}"),
+            &cu_kernel,
             Category::Concat,
-            vec![v_cache_in, v, pos_base, valid_len],
+            v_ins,
         );
-        b.g.mark_output(&format!("{p}.k_cache"), k_cache);
-        b.g.mark_output(&format!("{p}.v_cache"), v_cache);
+        b.g.mark_output(&k_name, k_cache);
+        b.g.mark_output(&v_name, v_cache);
 
         // Causal multi-token attention: row i attends cache 0..base+i+1.
+        let mut sd_ins = vec![q_rot, k_cache, v_cache, pos_base, valid_len];
+        if let Some((table, kvb)) = paged_uniforms {
+            sd_ins.extend([table, kvb]);
+        }
         let attn = b.g.kernel(
             &format!("{p}.sdpa"),
-            &format!("sdpa_prefill_c{c}_{suffix}"),
+            &sd_kernel,
             Category::Sdpa,
-            vec![q_rot, k_cache, v_cache, pos_base, valid_len],
+            sd_ins,
         );
         let attn_out = b.g.kernel(
             &format!("{p}.o_proj"),
@@ -1330,7 +1531,22 @@ pub fn build_unified_round_graph(
     width: usize,
     chunk: usize,
 ) -> FxGraph {
-    build_unified_round_graph_impl(dims, fusion, width, chunk, false)
+    build_unified_round_graph_impl(dims, fusion, width, chunk, false, false)
+}
+
+/// Paged-KV variant of [`build_unified_round_graph`]: the W slot-major
+/// cache sets and the `slot_idx` uniform collapse into the shared pool
+/// plane pair per layer (`pool.l{l}.{k,v}_cache`, the SAME persistent
+/// layout as [`build_decode_graph_paged`]) plus per-slot `block_table`
+/// rows (`[W * stride]` i32) and the `kv_block` scalar. Same node count
+/// (1-for-1 kernel swap), so the dispatch census is unchanged.
+pub fn build_unified_round_graph_paged(
+    dims: &GraphDims,
+    fusion: FusionConfig,
+    width: usize,
+    chunk: usize,
+) -> FxGraph {
+    build_unified_round_graph_impl(dims, fusion, width, chunk, false, true)
 }
 
 /// Multi-row (speculative verify) variant of [`build_unified_round_graph`]:
@@ -1347,7 +1563,19 @@ pub fn build_unified_round_graph_multi_row(
     width: usize,
     chunk: usize,
 ) -> FxGraph {
-    build_unified_round_graph_impl(dims, fusion, width, chunk, true)
+    build_unified_round_graph_impl(dims, fusion, width, chunk, true, false)
+}
+
+/// Paged multi-row variant: [`build_unified_round_graph_multi_row`]'s
+/// every-row lm head on [`build_unified_round_graph_paged`]'s pooled
+/// cache planes.
+pub fn build_unified_round_graph_multi_row_paged(
+    dims: &GraphDims,
+    fusion: FusionConfig,
+    width: usize,
+    chunk: usize,
+) -> FxGraph {
+    build_unified_round_graph_impl(dims, fusion, width, chunk, true, true)
 }
 
 fn build_unified_round_graph_impl(
@@ -1356,12 +1584,14 @@ fn build_unified_round_graph_impl(
     width: usize,
     chunk: usize,
     multi_row: bool,
+    paged: bool,
 ) -> FxGraph {
     assert!(width >= 2, "unified round graphs need width >= 2 (got {width})");
     assert!(chunk >= 2, "unified round graphs need chunk >= 2 (got {chunk})");
     let mut b = UB { g: FxGraph::new(), d: dims, w: width, c: chunk };
     b.g.batch_width = width;
     b.g.seq_chunk = chunk;
+    b.g.kv_paged = paged;
     let (h, qd, kv, inter) = (dims.hidden, dims.q_dim(), dims.kv_dim(), dims.intermediate);
     let (nh, kvh, d) = (dims.heads, dims.kv_heads, dims.head_dim);
     let suffix = dims.suffix();
@@ -1372,18 +1602,34 @@ fn build_unified_round_graph_impl(
     let pos_base = b.g.input("pos_base");
     let valid_len = b.g.input("valid_len");
     let slot_mask = b.g.input("slot_mask");
-    let slot_idx = b.g.input("slot_idx");
+    let slot_idx = if paged { None } else { Some(b.g.input("slot_idx")) };
     let inv_freq = b.g.input("inv_freq");
+    let paged_uniforms = paged.then(|| {
+        (b.g.input("block_table"), b.g.input("kv_block"))
+    });
 
-    // Per-slot cache sets, SLOT-major — identical to the batched decode
-    // builder's persistent layout, so the two plans share one cache-set
-    // table and sessions plug straight into slots.
-    for j in 0..width {
+    if paged {
+        // ONE shared pool plane pair per layer, layer-major — identical to
+        // the paged decode builder's persistent list, so every paged plan
+        // binds the same pool buffers.
         for l in 0..dims.layers {
             for kind in ["k", "v"] {
-                let name = format!("s{j}.l{l}.{kind}_cache");
+                let name = format!("pool.l{l}.{kind}_cache");
                 b.g.input(&name);
                 b.g.mark_persistent(&name);
+            }
+        }
+    } else {
+        // Per-slot cache sets, SLOT-major — identical to the batched decode
+        // builder's persistent layout, so the two plans share one cache-set
+        // table and sessions plug straight into slots.
+        for j in 0..width {
+            for l in 0..dims.layers {
+                for kind in ["k", "v"] {
+                    let name = format!("s{j}.l{l}.{kind}_cache");
+                    b.g.input(&name);
+                    b.g.mark_persistent(&name);
+                }
             }
         }
     }
@@ -1461,50 +1707,80 @@ fn build_unified_round_graph_impl(
             vec![k, cos, sin],
         );
 
-        // One gather/scatter cache append per layer per K/V: inputs are
-        // the W per-slot states, then rows + per-slot uniforms; output j
-        // scatters slot j's valid_len rows at pos_base[j].. in place.
-        let k_states: Vec<ValueId> = (0..width)
-            .map(|j| b.g.inputs[&format!("s{j}.{p}.k_cache")])
-            .collect();
-        let mut k_ins = k_states;
-        k_ins.extend([k_rot, pos_base, valid_len, slot_mask, slot_idx]);
-        let k_caches = b.g.in_place_kernel_multi(
-            &format!("{p}.k_cache_update"),
-            &format!("cache_update_b{bw}c{c}_{suffix}"),
-            Category::Concat,
-            k_ins,
-            width,
-        );
-        let v_states: Vec<ValueId> = (0..width)
-            .map(|j| b.g.inputs[&format!("s{j}.{p}.v_cache")])
-            .collect();
-        let mut v_ins = v_states;
-        v_ins.extend([v, pos_base, valid_len, slot_mask, slot_idx]);
-        let v_caches = b.g.in_place_kernel_multi(
-            &format!("{p}.v_cache_update"),
-            &format!("cache_update_b{bw}c{c}_{suffix}"),
-            Category::Concat,
-            v_ins,
-            width,
-        );
-        for j in 0..width {
-            b.g.mark_output(&format!("s{j}.{p}.k_cache"), k_caches[j]);
-            b.g.mark_output(&format!("s{j}.{p}.v_cache"), v_caches[j]);
-        }
+        // One gather/scatter cache append per layer per K/V. Unpaged:
+        // inputs are the W per-slot states, then rows + per-slot uniforms;
+        // output j scatters slot j's valid_len rows at pos_base[j].. in
+        // place. Paged: ONE shared pool plane updated in place, each
+        // slot's rows routed through its block-table row.
+        let attn = if let Some((table, kvb)) = paged_uniforms {
+            let k_plane = b.g.inputs[&format!("pool.{p}.k_cache")];
+            let k_cache = b.g.in_place_kernel(
+                &format!("{p}.k_cache_update"),
+                &format!("cache_update_paged_b{bw}c{c}_{suffix}"),
+                Category::Concat,
+                vec![k_plane, k_rot, pos_base, valid_len, slot_mask, table, kvb],
+            );
+            b.g.mark_output(&format!("pool.{p}.k_cache"), k_cache);
+            let v_plane = b.g.inputs[&format!("pool.{p}.v_cache")];
+            let v_cache = b.g.in_place_kernel(
+                &format!("{p}.v_cache_update"),
+                &format!("cache_update_paged_b{bw}c{c}_{suffix}"),
+                Category::Concat,
+                vec![v_plane, v, pos_base, valid_len, slot_mask, table, kvb],
+            );
+            b.g.mark_output(&format!("pool.{p}.v_cache"), v_cache);
+            // One attention dispatch per layer: slot j's rows run the
+            // causal prefill attention against its block-table prefix.
+            b.g.kernel(
+                &format!("{p}.sdpa"),
+                &format!("sdpa_paged_b{bw}c{c}_{suffix}"),
+                Category::Sdpa,
+                vec![q_rot, k_cache, v_cache, pos_base, valid_len, slot_mask, table, kvb],
+            )
+        } else {
+            let slot_idx = slot_idx.expect("unpaged unified graph has slot_idx");
+            let k_states: Vec<ValueId> = (0..width)
+                .map(|j| b.g.inputs[&format!("s{j}.{p}.k_cache")])
+                .collect();
+            let mut k_ins = k_states;
+            k_ins.extend([k_rot, pos_base, valid_len, slot_mask, slot_idx]);
+            let k_caches = b.g.in_place_kernel_multi(
+                &format!("{p}.k_cache_update"),
+                &format!("cache_update_b{bw}c{c}_{suffix}"),
+                Category::Concat,
+                k_ins,
+                width,
+            );
+            let v_states: Vec<ValueId> = (0..width)
+                .map(|j| b.g.inputs[&format!("s{j}.{p}.v_cache")])
+                .collect();
+            let mut v_ins = v_states;
+            v_ins.extend([v, pos_base, valid_len, slot_mask, slot_idx]);
+            let v_caches = b.g.in_place_kernel_multi(
+                &format!("{p}.v_cache_update"),
+                &format!("cache_update_b{bw}c{c}_{suffix}"),
+                Category::Concat,
+                v_ins,
+                width,
+            );
+            for j in 0..width {
+                b.g.mark_output(&format!("s{j}.{p}.k_cache"), k_caches[j]);
+                b.g.mark_output(&format!("s{j}.{p}.v_cache"), v_caches[j]);
+            }
 
-        // One attention dispatch per layer: slot j's rows run the causal
-        // prefill attention against cache set slot_idx[j].
-        let mut sdpa_ins = vec![q_rot];
-        sdpa_ins.extend(k_caches.iter().copied());
-        sdpa_ins.extend(v_caches.iter().copied());
-        sdpa_ins.extend([pos_base, valid_len, slot_mask, slot_idx]);
-        let attn = b.g.kernel(
-            &format!("{p}.sdpa"),
-            &format!("sdpa_b{bw}c{c}_{suffix}"),
-            Category::Sdpa,
-            sdpa_ins,
-        );
+            // One attention dispatch per layer: slot j's rows run the causal
+            // prefill attention against cache set slot_idx[j].
+            let mut sdpa_ins = vec![q_rot];
+            sdpa_ins.extend(k_caches.iter().copied());
+            sdpa_ins.extend(v_caches.iter().copied());
+            sdpa_ins.extend([pos_base, valid_len, slot_mask, slot_idx]);
+            b.g.kernel(
+                &format!("{p}.sdpa"),
+                &format!("sdpa_b{bw}c{c}_{suffix}"),
+                Category::Sdpa,
+                sdpa_ins,
+            )
+        };
         let attn_out = b.g.kernel(
             &format!("{p}.o_proj"),
             &format!("matmul_b{bw}c{c}_{qd}_{h}"),

@@ -36,6 +36,12 @@ pub struct FxGraph {
     /// layer per dispatch. Orthogonal to `batch_width` (slots batch across
     /// sessions; chunks batch along one session's sequence).
     pub seq_chunk: usize,
+    /// True for paged-KV graphs: per-slot cache sets are replaced by ONE
+    /// shared pool plane per (layer, K/V), addressed through per-slot block
+    /// tables. Cache ops then update a single state (the plane) regardless
+    /// of `batch_width`, so the one-state-per-slot in-place rule becomes a
+    /// one-state-per-plane rule.
+    pub kv_paged: bool,
 }
 
 // Manual Default so `FxGraph::default()` honors the batch_width >= 1
@@ -56,6 +62,7 @@ impl FxGraph {
             persistent: Vec::new(),
             batch_width: 1,
             seq_chunk: 1,
+            kv_paged: false,
         }
     }
 
@@ -289,7 +296,20 @@ impl FxGraph {
         // step inputs pack W slots x C sequence positions ([W*C, ...] rows
         // plus per-slot uniforms), and the in-place rule below still holds
         // — one state output per SLOT, positions share the slot's scatter.
-        if self.batch_width > 1 {
+        // Paged graphs scatter every slot through ONE shared plane: their
+        // in-place nodes always carry exactly one state output, whatever
+        // the slot width.
+        if self.kv_paged {
+            for node in &self.nodes {
+                if node.in_place() && node.outputs.len() != 1 {
+                    return Err(Error::Graph(format!(
+                        "{}: paged in-place node has {} outputs, expected 1 (the pool plane)",
+                        node.name,
+                        node.outputs.len()
+                    )));
+                }
+            }
+        } else if self.batch_width > 1 {
             for node in &self.nodes {
                 if node.in_place() && node.outputs.len() != self.batch_width {
                     return Err(Error::Graph(format!(

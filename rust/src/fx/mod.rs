@@ -24,10 +24,13 @@ pub mod passes;
 pub mod workloads;
 
 pub use builder::{
-    build_batched_decode_graph, build_decode_graph, build_prefill_graph,
-    build_prefill_graph_multi_row, build_unified_round_graph,
-    build_unified_round_graph_multi_row, FusionConfig, GraphDims, MAX_BATCH_WIDTH,
-    PREFILL_CHUNKS,
+    build_batched_decode_graph, build_batched_decode_graph_paged, build_decode_graph,
+    build_decode_graph_paged, build_prefill_graph, build_prefill_graph_multi_row,
+    build_prefill_graph_multi_row_paged, build_prefill_graph_paged,
+    build_unified_round_graph, build_unified_round_graph_multi_row,
+    build_unified_round_graph_multi_row_paged, build_unified_round_graph_paged,
+    paged_pool_rows, paged_table_len, FusionConfig, GraphDims, KV_BLOCKS, KV_BLOCK_MIN,
+    MAX_BATCH_WIDTH, PREFILL_CHUNKS,
 };
 pub use census::{Census, CategoryCounts};
 pub use graph::FxGraph;

@@ -27,7 +27,7 @@ use crate::{Error, Result};
 
 use super::planner::ExecutionPlan;
 use super::residency::DeviceKvCache;
-use super::runner::{PlanRunner, ReplayDelta};
+use super::runner::{validate_paged_persistent, PlanRunner, ReplayDelta};
 
 /// Batch-shape consistency checks for a plan compiled from a batched
 /// decode graph: slot-major persistent layout with identical per-slot
@@ -92,6 +92,59 @@ pub fn validate_batched_plan(plan: &ExecutionPlan, width: usize) -> Result<()> {
     Ok(())
 }
 
+/// Consistency checks for a plan compiled from a PAGED batched decode
+/// graph: the shared pool planes replace the slot-major cache-set table,
+/// and per-slot block tables (a `[W * table_len]` step input) do the slot
+/// routing instead of `slot_idx`.
+pub fn validate_batched_plan_paged(plan: &ExecutionPlan, width: usize) -> Result<()> {
+    if width < 2 {
+        return Err(Error::Graph(format!("batched plans need width >= 2, got {width}")));
+    }
+    validate_paged_persistent(plan)?;
+    for (name, leading) in [("x", width), ("slot_mask", width)] {
+        let up = plan
+            .uploads
+            .iter()
+            .find(|u| u.name == name)
+            .ok_or_else(|| {
+                Error::Graph(format!("paged batched plan: step input '{name}' missing"))
+            })?;
+        if up.shape.first().copied() != Some(leading) {
+            return Err(Error::Graph(format!(
+                "paged batched plan: step input '{name}' shape {:?} lacks leading \
+                 width {leading}",
+                up.shape
+            )));
+        }
+    }
+    // One concatenated per-slot table: [W * table_len] i32 entries.
+    let bt = plan
+        .uploads
+        .iter()
+        .find(|u| u.name == "block_table")
+        .ok_or_else(|| Error::Graph("paged batched plan: 'block_table' missing".into()))?;
+    match bt.shape.first().copied() {
+        Some(n) if n > 0 && n % width == 0 => {}
+        _ => {
+            return Err(Error::Graph(format!(
+                "paged batched plan: block_table shape {:?} is not [W * table_len]",
+                bt.shape
+            )));
+        }
+    }
+    match &plan.logits {
+        Some(lg) if lg.shape.first().copied() == Some(width) => {}
+        Some(lg) => {
+            return Err(Error::Graph(format!(
+                "paged batched plan: logits shape {:?} lacks leading width {width}",
+                lg.shape
+            )));
+        }
+        None => return Err(Error::Graph("paged batched plan: no logits output".into())),
+    }
+    Ok(())
+}
+
 /// Replays a batched plan over a per-round cache-set table.
 pub struct BatchedRunner {
     runner: PlanRunner,
@@ -105,6 +158,10 @@ pub struct BatchedRunner {
     /// refilled per replay so the hot loop allocates nothing steady-state,
     /// matching the plan layer's allocation-free-replay discipline.
     flat: DeviceKvCache,
+    /// Paged mode: the shared pool planes are the runner's default cache
+    /// set (bound once at materialize) and replays take NO cache-set table
+    /// — the uploaded block tables route slots instead.
+    paged: bool,
     /// Batched rounds replayed.
     pub rounds: u64,
 }
@@ -132,7 +189,40 @@ impl BatchedRunner {
             buffers: Vec::with_capacity(width * per_slot),
             resident_bytes: 0,
         };
-        Ok(BatchedRunner { runner, width, per_slot, padding, flat, rounds: 0 })
+        Ok(BatchedRunner { runner, width, per_slot, padding, flat, paged: false, rounds: 0 })
+    }
+
+    /// Materialize a PAGED batched runner: the plan's persistent list is
+    /// the shared pool planes (`pool`), registered once here and installed
+    /// as the runner's default cache set — so every replay binds the same
+    /// persistent bind groups regardless of which sessions occupy the
+    /// slots, and no padding set exists (masked slots carry `-1` block
+    /// tables the kernels never dereference).
+    pub fn materialize_paged(
+        device: &mut Device,
+        plan: ExecutionPlan,
+        width: usize,
+        pool: &DeviceKvCache,
+    ) -> Result<Self> {
+        validate_batched_plan_paged(&plan, width)?;
+        let mut runner = PlanRunner::materialize(device, plan)?;
+        runner.register_cache(device, pool)?;
+        runner.set_default_cache(pool.clone())?;
+        Ok(BatchedRunner {
+            runner,
+            width,
+            per_slot: 0,
+            padding: Vec::new(),
+            flat: DeviceKvCache { buffers: Vec::new(), resident_bytes: 0 },
+            paged: true,
+            rounds: 0,
+        })
+    }
+
+    /// True when this runner replays the paged plan (shared pool planes +
+    /// block tables) instead of the per-session cache-set table.
+    pub fn is_paged(&self) -> bool {
+        self.paged
     }
 
     pub fn width(&self) -> usize {
@@ -216,11 +306,21 @@ impl BatchedRunner {
         ring_idx: usize,
         table: &[Option<&DeviceKvCache>],
     ) -> Result<(HashMap<String, Tensor>, Option<BufferId>, ReplayDelta)> {
-        self.fill_flat(table)?;
-        self.runner.register_cache(device, &self.flat)?;
-        let out = self
-            .runner
-            .replay(device, runner, inputs, ring_idx, Some(&self.flat))?;
+        let out = if self.paged {
+            if !table.is_empty() {
+                return Err(Error::Graph(
+                    "paged batched plan takes no cache-set table (block tables \
+                     route slots)"
+                        .into(),
+                ));
+            }
+            self.runner.replay(device, runner, inputs, ring_idx, None)?
+        } else {
+            self.fill_flat(table)?;
+            self.runner.register_cache(device, &self.flat)?;
+            self.runner
+                .replay(device, runner, inputs, ring_idx, Some(&self.flat))?
+        };
         self.rounds += 1;
         Ok(out)
     }

@@ -51,17 +51,20 @@ pub mod runner;
 pub mod unified;
 
 pub use arena::{ArenaLayout, Interval, SlotAssignment};
-pub use batched::{validate_batched_plan, BatchedRunner};
-pub use prefill::{validate_prefill_plan, PrefillRunner};
-pub use unified::{validate_unified_plan, UnifiedRunner};
+pub use batched::{validate_batched_plan, validate_batched_plan_paged, BatchedRunner};
+pub use prefill::{validate_prefill_plan, validate_prefill_plan_paged, PrefillRunner};
+pub use unified::{validate_unified_plan, validate_unified_plan_paged, UnifiedRunner};
 pub use grid::{tile_workgroups, WORKGROUP_SIZE};
 pub use pipelines::{PipelinePool, PreparedKernel};
 pub use planner::{
     Binding, DispatchStep, ExecutionPlan, GraphFingerprint, HostStep, LogitsSpec,
     PlanStats, Planner, Readback, SlotRef, Step, Upload,
 };
-pub use residency::{CacheArena, CacheArenaStats, DeviceKvCache, PersistentSpec, ResidencyClass};
-pub use runner::{PlanRunner, ReplayDelta};
+pub use residency::{
+    BlockArena, BlockArenaStats, CacheArena, CacheArenaStats, DeviceKvCache, PagedKv, PagedSlot,
+    PersistentSpec, ResidencyClass,
+};
+pub use runner::{validate_paged_persistent, PlanRunner, ReplayDelta};
 
 /// Default framework cost per replayed step (virtual ns): the plan walk's
 /// residual per-dispatch bookkeeping — array indexing and a cached

@@ -23,7 +23,7 @@ use crate::{Error, Result};
 
 use super::planner::ExecutionPlan;
 use super::residency::DeviceKvCache;
-use super::runner::{PlanRunner, ReplayDelta};
+use super::runner::{validate_paged_persistent, PlanRunner, ReplayDelta};
 
 /// Chunk-shape consistency checks for a plan compiled from a prefill
 /// graph: chunk-leading `x` upload, the pos_base/valid_len uniforms, a
@@ -75,6 +75,47 @@ pub fn validate_prefill_plan(plan: &ExecutionPlan, chunk: usize) -> Result<()> {
     Ok(())
 }
 
+/// Consistency checks for a plan compiled from a PAGED prefill graph: the
+/// shared pool planes replace the per-session cache set, and ONE session's
+/// block table (a `[table_len]` step input) routes the chunk's scatter.
+pub fn validate_prefill_plan_paged(plan: &ExecutionPlan, chunk: usize) -> Result<()> {
+    if chunk < 2 {
+        return Err(Error::Graph(format!("prefill plans need chunk >= 2, got {chunk}")));
+    }
+    validate_paged_persistent(plan)?;
+    let x = plan
+        .uploads
+        .iter()
+        .find(|u| u.name == "x")
+        .ok_or_else(|| Error::Graph("paged prefill plan: step input 'x' missing".into()))?;
+    if x.shape.first().copied() != Some(chunk) {
+        return Err(Error::Graph(format!(
+            "paged prefill plan: step input 'x' shape {:?} lacks leading chunk {chunk}",
+            x.shape
+        )));
+    }
+    for name in ["pos_f", "pos_base", "valid_len"] {
+        if !plan.uploads.iter().any(|u| u.name == name) {
+            return Err(Error::Graph(format!(
+                "paged prefill plan: step input '{name}' missing"
+            )));
+        }
+    }
+    match &plan.logits {
+        Some(lg) if lg.shape.first().copied() == Some(1) => {}
+        Some(lg) if lg.shape.first().copied() == Some(chunk) => {}
+        Some(lg) => {
+            return Err(Error::Graph(format!(
+                "paged prefill plan: logits shape {:?} must be the selected last \
+                 row [1, vocab] or the multi-row [chunk, vocab]",
+                lg.shape
+            )));
+        }
+        None => return Err(Error::Graph("paged prefill plan: no logits output".into())),
+    }
+    Ok(())
+}
+
 /// Replays a prefill plan: one chunk of ONE session's prompt per replay.
 pub struct PrefillRunner {
     runner: PlanRunner,
@@ -89,6 +130,23 @@ impl PrefillRunner {
     pub fn materialize(device: &mut Device, plan: ExecutionPlan, chunk: usize) -> Result<Self> {
         validate_prefill_plan(&plan, chunk)?;
         let runner = PlanRunner::materialize(device, plan)?;
+        Ok(PrefillRunner { runner, chunk, chunks: 0 })
+    }
+
+    /// Materialize a PAGED prefill runner: the plan's persistent list is
+    /// the shared pool planes (`pool`), registered once here and installed
+    /// as the runner's default cache set — replays pass `kv: None` and the
+    /// uploaded block table routes the chunk into the session's blocks.
+    pub fn materialize_paged(
+        device: &mut Device,
+        plan: ExecutionPlan,
+        chunk: usize,
+        pool: &DeviceKvCache,
+    ) -> Result<Self> {
+        validate_prefill_plan_paged(&plan, chunk)?;
+        let mut runner = PlanRunner::materialize(device, plan)?;
+        runner.register_cache(device, pool)?;
+        runner.set_default_cache(pool.clone())?;
         Ok(PrefillRunner { runner, chunk, chunks: 0 })
     }
 

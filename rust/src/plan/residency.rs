@@ -206,6 +206,167 @@ impl CacheArena {
     }
 }
 
+// ------------------------------------------------------ paged KV residency --
+
+/// One logical KV block-group of a paged session: block id `j` covers
+/// logical token rows `[j*kv_block, (j+1)*kv_block)` of EVERY pool plane
+/// (all layers' K and V at once — one table entry serves the whole layer
+/// stack, so residency decisions are per token range, never per layer).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PagedSlot {
+    /// Backed by physical block-group `g` of the shared pool planes.
+    Resident(u32),
+    /// Paged out: the group's bytes parked on the host, plane-major
+    /// (layer-major `k`, `v` per layer — the same order as the pool's
+    /// persistent list), `kv_block * kv_heads * head_dim * 4` bytes per
+    /// plane slice.
+    Host(Vec<u8>),
+}
+
+/// A paged session's KV state: one [`PagedSlot`] per allocated logical
+/// block-group, in block order. Replaces the contiguous [`DeviceKvCache`]
+/// when the engine runs paged; the block table uploaded per replay is
+/// exactly `slots` mapped to `Resident(g) -> g`, `Host(_) -> -1`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PagedKv {
+    pub slots: Vec<PagedSlot>,
+    /// Pager LRU stamp: the round counter of the last encode chunk this
+    /// session participated in. Cold sessions (smallest stamp) spill first.
+    pub last_touch: u64,
+}
+
+impl PagedKv {
+    pub fn resident_groups(&self) -> usize {
+        self.slots.iter().filter(|s| matches!(s, PagedSlot::Resident(_))).count()
+    }
+
+    pub fn spilled_groups(&self) -> usize {
+        self.slots.len() - self.resident_groups()
+    }
+
+    pub fn resident_bytes(&self, group_bytes: usize) -> usize {
+        self.resident_groups() * group_bytes
+    }
+
+    pub fn spilled_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                PagedSlot::Resident(_) => 0,
+                PagedSlot::Host(b) => b.len(),
+            })
+            .sum()
+    }
+}
+
+/// Paged-pool counters exported into the serving report.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BlockArenaStats {
+    pub groups_allocated: u64,
+    pub groups_freed: u64,
+    /// Physical block-groups currently granted.
+    pub live_groups: usize,
+    /// Peak of `live_groups` — the pool high-water the serve header prints.
+    pub high_water_groups: usize,
+    /// Host -> device block restores (hydrates count here too).
+    pub page_ins: u64,
+    /// Device -> host block spills (full evicts count here too).
+    pub page_outs: u64,
+}
+
+/// Allocator of physical block-group ids over the shared pool planes.
+///
+/// Physical capacity is `POOL_ROWS / kv_block` groups — sized so one full
+/// encode chunk's worst-case working set (MAX_BATCH_WIDTH sessions at
+/// max_seq) always fits, which is why admission under paging never fails
+/// on memory: the pager only ever has to *defer and spill*, not reject.
+/// A LOGICAL budget (from `--pool-cap-kv` or the nominal contiguous-set
+/// equivalent) bounds steady-state residency below physical capacity; the
+/// engine's pre-chunk pager evicts LRU non-participant blocks back under
+/// budget after each round, so oversubscribed serving degrades to paging
+/// instead of erroring. Free ids are LIFO so twin runs grant identical
+/// block ids.
+#[derive(Debug, Clone)]
+pub struct BlockArena {
+    free: Vec<u32>,
+    capacity: usize,
+    budget_groups: usize,
+    group_bytes: usize,
+    stats: BlockArenaStats,
+}
+
+impl BlockArena {
+    pub fn new(capacity: usize, budget_groups: usize, group_bytes: usize) -> Self {
+        // Reverse initial order so the first pops grant 0, 1, 2, ...
+        let free: Vec<u32> = (0..capacity as u32).rev().collect();
+        BlockArena {
+            free,
+            capacity,
+            budget_groups: budget_groups.min(capacity).max(1),
+            group_bytes,
+            stats: BlockArenaStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn budget_groups(&self) -> usize {
+        self.budget_groups
+    }
+
+    pub fn group_bytes(&self) -> usize {
+        self.group_bytes
+    }
+
+    pub fn live_groups(&self) -> usize {
+        self.capacity - self.free.len()
+    }
+
+    /// Groups currently held beyond the logical budget (0 when under).
+    pub fn over_budget(&self) -> usize {
+        self.live_groups().saturating_sub(self.budget_groups)
+    }
+
+    pub fn stats(&self) -> BlockArenaStats {
+        let mut s = self.stats;
+        s.live_groups = self.live_groups();
+        s
+    }
+
+    pub fn note_page_in(&mut self) {
+        self.stats.page_ins += 1;
+    }
+
+    pub fn note_page_out(&mut self) {
+        self.stats.page_outs += 1;
+    }
+
+    /// Grant a physical block-group id. Physical exhaustion is a hard
+    /// error: the engine's pre-chunk pager must have spilled enough
+    /// non-participants first (and capacity covers any single chunk's
+    /// working set by construction, so hitting this is a pager bug).
+    pub fn alloc(&mut self) -> Result<u32> {
+        let g = self.free.pop().ok_or_else(|| {
+            Error::LimitExceeded(format!(
+                "paged KV pool physically exhausted ({} groups)",
+                self.capacity
+            ))
+        })?;
+        self.stats.groups_allocated += 1;
+        self.stats.high_water_groups = self.stats.high_water_groups.max(self.live_groups());
+        Ok(g)
+    }
+
+    /// Return a physical block-group id to the free list (LIFO).
+    pub fn free_group(&mut self, g: u32) {
+        debug_assert!((g as usize) < self.capacity && !self.free.contains(&g));
+        self.free.push(g);
+        self.stats.groups_freed += 1;
+    }
+}
+
 #[cfg(test)]
 #[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
@@ -264,6 +425,46 @@ mod tests {
         a.release(&mut pool, set1).unwrap();
         assert_eq!(pool.stats().outstanding_bytes, 0);
         assert!(a.allocate(&mut d, &mut pool).is_ok(), "reuse within cap");
+    }
+
+    #[test]
+    fn block_arena_grants_lifo_and_bounds_physical_capacity() {
+        let mut a = BlockArena::new(4, 2, 1024);
+        assert_eq!(a.budget_groups(), 2);
+        let g0 = a.alloc().unwrap();
+        let g1 = a.alloc().unwrap();
+        assert_eq!((g0, g1), (0, 1), "first grants are 0, 1, ...");
+        assert_eq!(a.over_budget(), 0);
+        let g2 = a.alloc().unwrap();
+        assert_eq!(a.over_budget(), 1, "third group exceeds the logical budget");
+        a.free_group(g1);
+        assert_eq!(a.alloc().unwrap(), 1, "freed ids are reused LIFO");
+        let _g3 = a.alloc().unwrap();
+        assert!(a.alloc().is_err(), "physical exhaustion is a hard error");
+        let s = a.stats();
+        assert_eq!(s.live_groups, 4);
+        assert_eq!(s.high_water_groups, 4);
+        assert_eq!(s.groups_allocated, 5);
+        assert_eq!(s.groups_freed, 1);
+        a.free_group(g2);
+        a.free_group(g0);
+        assert_eq!(a.stats().live_groups, 2);
+    }
+
+    #[test]
+    fn paged_kv_accounts_resident_and_spilled_bytes() {
+        let kv = PagedKv {
+            slots: vec![
+                PagedSlot::Host(vec![0u8; 128]),
+                PagedSlot::Resident(3),
+                PagedSlot::Resident(0),
+            ],
+            last_touch: 7,
+        };
+        assert_eq!(kv.resident_groups(), 2);
+        assert_eq!(kv.spilled_groups(), 1);
+        assert_eq!(kv.resident_bytes(128), 256);
+        assert_eq!(kv.spilled_bytes(), 128);
     }
 
     #[test]

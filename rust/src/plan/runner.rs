@@ -41,6 +41,42 @@ pub struct ReplayDelta {
 /// key -> (step index -> bind group).
 type SessionGroups = HashMap<Vec<BufferId>, HashMap<usize, BindGroupId>>;
 
+/// Check that a plan's persistent list is the shared PAGED pool-plane
+/// layout (layer-major `pool.l{l}.k_cache`, `pool.l{l}.v_cache`) — the
+/// contract every paged plan variant (solo, batched, prefill, unified)
+/// declares identically, so ONE pool set registers with all of them.
+pub fn validate_paged_persistent(plan: &ExecutionPlan) -> Result<()> {
+    if plan.persistent.is_empty() || plan.persistent.len() % 2 != 0 {
+        return Err(Error::Graph(format!(
+            "paged plan: {} persistent values are not layer-major K/V pool planes",
+            plan.persistent.len()
+        )));
+    }
+    for (i, spec) in plan.persistent.iter().enumerate() {
+        let expect =
+            format!("pool.l{}.{}_cache", i / 2, if i % 2 == 0 { "k" } else { "v" });
+        if spec.name != expect {
+            return Err(Error::Graph(format!(
+                "paged plan: persistent '{}' at index {i}, expected '{expect}'",
+                spec.name
+            )));
+        }
+    }
+    for name in ["block_table", "kv_block"] {
+        if !plan.uploads.iter().any(|u| u.name == name) {
+            return Err(Error::Graph(format!(
+                "paged plan: step input '{name}' missing"
+            )));
+        }
+    }
+    if plan.uploads.iter().any(|u| u.name == "slot_idx") {
+        return Err(Error::Graph(
+            "paged plan must not carry 'slot_idx' (block tables route slots)".into(),
+        ));
+    }
+    Ok(())
+}
+
 pub struct PlanRunner {
     pub plan: ExecutionPlan,
     /// One device buffer per arena slot.
@@ -62,6 +98,11 @@ pub struct PlanRunner {
     /// Reused scratch for the `Halves` host step (unfused graphs only).
     scratch_a: Vec<u8>,
     scratch_b: Vec<u8>,
+    /// Shared persistent set replays fall back to when the caller passes no
+    /// per-session cache — the paged pool planes, which every paged replay
+    /// binds regardless of which session is running (the block-table
+    /// step-input does the per-session routing instead).
+    default_kv: Option<DeviceKvCache>,
     /// Plan-build cost (compile + materialize), stamped by the caller.
     pub build_virtual_ns: u64,
     pub build_real_ns: u64,
@@ -203,6 +244,7 @@ impl PlanRunner {
             session_groups: HashMap::new(),
             scratch_a: Vec::new(),
             scratch_b: Vec::new(),
+            default_kv: None,
             build_virtual_ns: 0,
             build_real_ns: 0,
             replays: 0,
@@ -282,6 +324,20 @@ impl PlanRunner {
         self.session_groups.len()
     }
 
+    /// Install the shared pool set every replay binds when no per-session
+    /// cache is passed (paged mode: one set of pool planes for all
+    /// sessions). Must already be registered via
+    /// [`PlanRunner::register_cache`].
+    pub fn set_default_cache(&mut self, kv: DeviceKvCache) -> Result<()> {
+        if !self.session_groups.contains_key(&kv.buffers) {
+            return Err(Error::Graph(
+                "default cache set not registered with the plan runner".into(),
+            ));
+        }
+        self.default_kv = Some(kv);
+        Ok(())
+    }
+
     /// True for buffers the runner owns (the logits ring) — they must not
     /// be released into the executor's size-class pool.
     pub fn owns_buffer(&self, buf: BufferId) -> bool {
@@ -317,7 +373,7 @@ impl PlanRunner {
         let session_groups = if self.plan.persistent.is_empty() {
             None
         } else {
-            let kv = kv.ok_or_else(|| {
+            let kv = kv.or(self.default_kv.as_ref()).ok_or_else(|| {
                 Error::Graph(format!(
                     "plan has {} persistent values but no session cache set was passed",
                     self.plan.persistent.len()

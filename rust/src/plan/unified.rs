@@ -26,7 +26,7 @@ use crate::{Error, Result};
 
 use super::planner::ExecutionPlan;
 use super::residency::DeviceKvCache;
-use super::runner::{PlanRunner, ReplayDelta};
+use super::runner::{validate_paged_persistent, PlanRunner, ReplayDelta};
 
 /// Seq-x-batch consistency checks for a plan compiled from a unified
 /// round graph: the batched slot-major persistent layout, `[W*C]`-leading
@@ -106,6 +106,74 @@ pub fn validate_unified_plan(plan: &ExecutionPlan, width: usize, chunk: usize) -
     Ok(())
 }
 
+/// Consistency checks for a plan compiled from a PAGED unified round
+/// graph: the shared pool planes replace the slot-major cache-set table,
+/// per-slot block tables do the routing, and the seq-x-batch step-input
+/// shapes are unchanged from the unpaged unified plan.
+pub fn validate_unified_plan_paged(
+    plan: &ExecutionPlan,
+    width: usize,
+    chunk: usize,
+) -> Result<()> {
+    if width < 2 {
+        return Err(Error::Graph(format!("unified plans need width >= 2, got {width}")));
+    }
+    if chunk < 2 {
+        return Err(Error::Graph(format!("unified plans need chunk >= 2, got {chunk}")));
+    }
+    validate_paged_persistent(plan)?;
+    let rows = width * chunk;
+    for (name, leading) in [
+        ("x", rows),
+        ("pos_f", rows),
+        ("pos_base", width),
+        ("valid_len", width),
+        ("slot_mask", width),
+    ] {
+        let up = plan
+            .uploads
+            .iter()
+            .find(|u| u.name == name)
+            .ok_or_else(|| {
+                Error::Graph(format!("paged unified plan: step input '{name}' missing"))
+            })?;
+        if up.shape.first().copied() != Some(leading) {
+            return Err(Error::Graph(format!(
+                "paged unified plan: step input '{name}' shape {:?} lacks leading \
+                 {leading}",
+                up.shape
+            )));
+        }
+    }
+    let bt = plan
+        .uploads
+        .iter()
+        .find(|u| u.name == "block_table")
+        .ok_or_else(|| Error::Graph("paged unified plan: 'block_table' missing".into()))?;
+    match bt.shape.first().copied() {
+        Some(n) if n > 0 && n % width == 0 => {}
+        _ => {
+            return Err(Error::Graph(format!(
+                "paged unified plan: block_table shape {:?} is not [W * table_len]",
+                bt.shape
+            )));
+        }
+    }
+    match &plan.logits {
+        Some(lg) if lg.shape.first().copied() == Some(width) => {}
+        Some(lg) if lg.shape.first().copied() == Some(rows) => {}
+        Some(lg) => {
+            return Err(Error::Graph(format!(
+                "paged unified plan: logits shape {:?} lacks leading width {width} \
+                 or multi-row {rows}",
+                lg.shape
+            )));
+        }
+        None => return Err(Error::Graph("paged unified plan: no logits output".into())),
+    }
+    Ok(())
+}
+
 /// Replays a unified seq-x-batch plan over a per-round cache-set table.
 pub struct UnifiedRunner {
     runner: PlanRunner,
@@ -119,6 +187,10 @@ pub struct UnifiedRunner {
     /// Reusable flattened-table scratch (capacity width x per_slot),
     /// refilled per replay so the hot loop allocates nothing steady-state.
     flat: DeviceKvCache,
+    /// Paged mode: the shared pool planes are the runner's default cache
+    /// set (bound once at materialize) and replays take NO cache-set table
+    /// — the uploaded block tables route slots instead.
+    paged: bool,
     /// Unified rounds replayed.
     pub rounds: u64,
 }
@@ -151,7 +223,42 @@ impl UnifiedRunner {
             buffers: Vec::with_capacity(width * per_slot),
             resident_bytes: 0,
         };
-        Ok(UnifiedRunner { runner, width, chunk, per_slot, padding, flat, rounds: 0 })
+        Ok(UnifiedRunner { runner, width, chunk, per_slot, padding, flat, paged: false, rounds: 0 })
+    }
+
+    /// Materialize a PAGED unified runner: the plan's persistent list is
+    /// the shared pool planes (`pool`), registered once here and installed
+    /// as the runner's default cache set, so mixed prefill/decode rounds
+    /// replay against ONE persistent bind-group set whatever sessions
+    /// occupy the slots. No padding set exists — masked slots carry `-1`
+    /// block tables the kernels never dereference.
+    pub fn materialize_paged(
+        device: &mut Device,
+        plan: ExecutionPlan,
+        width: usize,
+        chunk: usize,
+        pool: &DeviceKvCache,
+    ) -> Result<Self> {
+        validate_unified_plan_paged(&plan, width, chunk)?;
+        let mut runner = PlanRunner::materialize(device, plan)?;
+        runner.register_cache(device, pool)?;
+        runner.set_default_cache(pool.clone())?;
+        Ok(UnifiedRunner {
+            runner,
+            width,
+            chunk,
+            per_slot: 0,
+            padding: Vec::new(),
+            flat: DeviceKvCache { buffers: Vec::new(), resident_bytes: 0 },
+            paged: true,
+            rounds: 0,
+        })
+    }
+
+    /// True when this runner replays the paged plan (shared pool planes +
+    /// block tables) instead of the per-session cache-set table.
+    pub fn is_paged(&self) -> bool {
+        self.paged
     }
 
     pub fn width(&self) -> usize {
@@ -241,11 +348,21 @@ impl UnifiedRunner {
         ring_idx: usize,
         table: &[Option<&DeviceKvCache>],
     ) -> Result<(HashMap<String, Tensor>, Option<BufferId>, ReplayDelta)> {
-        self.fill_flat(table)?;
-        self.runner.register_cache(device, &self.flat)?;
-        let out = self
-            .runner
-            .replay(device, runner, inputs, ring_idx, Some(&self.flat))?;
+        let out = if self.paged {
+            if !table.is_empty() {
+                return Err(Error::Graph(
+                    "paged unified plan takes no cache-set table (block tables \
+                     route slots)"
+                        .into(),
+                ));
+            }
+            self.runner.replay(device, runner, inputs, ring_idx, None)?
+        } else {
+            self.fill_flat(table)?;
+            self.runner.register_cache(device, &self.flat)?;
+            self.runner
+                .replay(device, runner, inputs, ring_idx, Some(&self.flat))?
+        };
         self.rounds += 1;
         Ok(out)
     }

@@ -55,9 +55,12 @@ impl TableDoc {
     /// `(first decode ms)` TTFT-split rows; bumped to 4 when speculative
     /// decode added S1's `tok/round` + `accept` columns and `+spec(k=N)`
     /// mode labels; bumped to 5 when fault-injected serving added S1's
-    /// `faults` + `recov` columns and `+faults(seed=N)` mode labels —
-    /// downstream trend tooling keys on this to re-align columns.
-    pub const SCHEMA_VERSION: u32 = 5;
+    /// `faults` + `recov` columns and `+faults(seed=N)` mode labels;
+    /// bumped to 6 when paged KV residency added S1/P1's
+    /// `blocks (res/spilled)` + `KV (B/tok)` columns and `+paged(b=N)`
+    /// mode labels — downstream trend tooling keys on this to re-align
+    /// columns.
+    pub const SCHEMA_VERSION: u32 = 6;
 
     /// JSON form for `report::write_results`
     /// (schema/id/title/columns/rows/notes), matching the layout
@@ -178,7 +181,7 @@ mod tests {
             v.get("schema").and_then(|s| s.as_f64()),
             Some(TableDoc::SCHEMA_VERSION as f64)
         );
-        assert_eq!(TableDoc::SCHEMA_VERSION, 5);
+        assert_eq!(TableDoc::SCHEMA_VERSION, 6);
     }
 
     #[test]

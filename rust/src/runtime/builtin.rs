@@ -125,6 +125,26 @@ pub fn builtin_kernels() -> HashMap<String, KernelSpec> {
           vec![io(&[nh, d])], &["tiny", "attention"],
           2.0 * nh as f64 * d as f64 * s as f64 * 2.0, "");
 
+    // ---- paged KV variants: caches live in ONE shared pool plane per
+    // (layer, K/V) of POOL_ROWS = MAX_BATCH_WIDTH x max_seq rows; logical
+    // position p of a slot resolves through a per-slot block table as
+    // table[p / kv_block] * kv_block + p % kv_block (two-level lookup).
+    // Inputs append the block table (fixed stride max_seq / KV_BLOCK_MIN,
+    // -1 = unallocated) and the kv_block scalar; the per-slot cache-set
+    // bindings and slot_idx collapse into the single plane + table.
+    let pr = crate::fx::builder::MAX_BATCH_WIDTH * s;
+    let btl = s / crate::fx::builder::KV_BLOCK_MIN;
+    b.add("cache_update_paged_tiny",
+          vec![io(&[pr, kvh, d]), io(&[kvh, d]), io_i32(&[1]), io_i32(&[btl]), io_i32(&[1])],
+          vec![io(&[pr, kvh, d])], &["tiny", "cache", "paged"], 0.0,
+          "two-level in-place scatter: row pos lands at table[pos/b]*b + pos%b");
+    b.add("sdpa_paged_tiny",
+          vec![io(&[nh, d]), io(&[pr, kvh, d]), io(&[pr, kvh, d]), io_i32(&[1]),
+               io_i32(&[btl]), io_i32(&[1])],
+          vec![io(&[nh, d])], &["tiny", "attention", "paged"],
+          2.0 * nh as f64 * d as f64 * s as f64 * 2.0,
+          "GQA gathering logical rows 0..pos+1 through the block table");
+
     b.add(&format!("silu_{inter}"), vec![io(&[1, inter])], vec![io(&[1, inter])],
           &["tiny", "mlp"], 0.0, "");
     b.add(&format!("mul_{inter}"), vec![io(&[1, inter]), io(&[1, inter])], vec![io(&[1, inter])],
@@ -190,6 +210,20 @@ pub fn builtin_kernels() -> HashMap<String, KernelSpec> {
               2.0 * (w * nh) as f64 * d as f64 * s as f64 * 2.0,
               "batched GQA gathering per-slot caches");
 
+        // Paged twins: one shared pool plane + per-slot block tables
+        // replace the W per-slot cache states and the slot-index uniform.
+        b.add(&format!("cache_update_paged_b{w}_tiny"),
+              vec![io(&[pr, kvh, d]), io(&[w, kvh * d]), io_i32(&[w]), io_i32(&[w]),
+                   io_i32(&[w * btl]), io_i32(&[1])],
+              vec![io(&[pr, kvh, d])], &["tiny", "batch", "cache", "paged"], 0.0,
+              "two-level per-slot scatter through W block tables");
+        b.add(&format!("sdpa_paged_b{w}_tiny"),
+              vec![io(&[w, nh * d]), io(&[pr, kvh, d]), io(&[pr, kvh, d]), io_i32(&[w]),
+                   io_i32(&[w]), io_i32(&[w * btl]), io_i32(&[1])],
+              vec![io(&[w, nh * d])], &["tiny", "batch", "attention", "paged"],
+              2.0 * (w * nh) as f64 * d as f64 * s as f64 * 2.0,
+              "batched GQA gathering each slot's rows through its block table");
+
         b.add(&format!("gate_up_silu_b{w}_tiny"), vec![io(&[w, h]), io(&[h, inter]), io(&[h, inter])],
               vec![io(&[w, inter])], &["tiny", "batch", "mlp"],
               2.0 * matmul_flops(w, h, inter), "batched MLP gate+up+silu fusion");
@@ -252,6 +286,20 @@ pub fn builtin_kernels() -> HashMap<String, KernelSpec> {
               vec![io(&[c, nh * d])], &["tiny", "prefill", "attention"],
               2.0 * (c * nh) as f64 * d as f64 * s as f64 * 2.0,
               "causal multi-token GQA: row i attends cache 0..pos_base+i+1");
+
+        // Paged twins: shared pool plane + one block table for the single
+        // prefilling session.
+        b.add(&format!("cache_update_paged_c{c}_tiny"),
+              vec![io(&[pr, kvh, d]), io(&[c, kvh * d]), io_i32(&[1]), io_i32(&[1]),
+                   io_i32(&[btl]), io_i32(&[1])],
+              vec![io(&[pr, kvh, d])], &["tiny", "prefill", "cache", "paged"], 0.0,
+              "two-level multi-row scatter (rows 0..valid_len at pos_base..)");
+        b.add(&format!("sdpa_prefill_paged_c{c}_tiny"),
+              vec![io(&[c, nh * d]), io(&[pr, kvh, d]), io(&[pr, kvh, d]),
+                   io_i32(&[1]), io_i32(&[1]), io_i32(&[btl]), io_i32(&[1])],
+              vec![io(&[c, nh * d])], &["tiny", "prefill", "attention", "paged"],
+              2.0 * (c * nh) as f64 * d as f64 * s as f64 * 2.0,
+              "causal multi-token GQA gathering rows through the block table");
 
         b.add(&format!("gate_up_silu_c{c}_tiny"),
               vec![io(&[c, h]), io(&[h, inter]), io(&[h, inter])],
@@ -349,6 +397,21 @@ pub fn builtin_kernels() -> HashMap<String, KernelSpec> {
                   &["tiny", "unified", "attention"],
                   2.0 * (r * nh) as f64 * d as f64 * s as f64 * 2.0,
                   "causal per-slot GQA: slot j row i attends cache 0..pos_base[j]+i+1");
+
+            // Paged twins: shared pool planes + W block tables replace the
+            // per-slot cache states and the cache-set-index uniform.
+            b.add(&format!("cache_update_paged_b{w}c{c}_tiny"),
+                  vec![io(&[pr, kvh, d]), io(&[r, kvh * d]), io_i32(&[w]), io_i32(&[w]),
+                       io_i32(&[w]), io_i32(&[w * btl]), io_i32(&[1])],
+                  vec![io(&[pr, kvh, d])], &["tiny", "unified", "cache", "paged"], 0.0,
+                  "two-level per-slot multi-row scatter through W block tables");
+            b.add(&format!("sdpa_paged_b{w}c{c}_tiny"),
+                  vec![io(&[r, nh * d]), io(&[pr, kvh, d]), io(&[pr, kvh, d]),
+                       io_i32(&[w]), io_i32(&[w]), io_i32(&[w]), io_i32(&[w * btl]),
+                       io_i32(&[1])],
+                  vec![io(&[r, nh * d])], &["tiny", "unified", "attention", "paged"],
+                  2.0 * (r * nh) as f64 * d as f64 * s as f64 * 2.0,
+                  "causal per-slot GQA gathering rows through W block tables");
 
             b.add(&format!("gate_up_silu_b{w}c{c}_tiny"),
                   vec![io(&[r, h]), io(&[h, inter]), io(&[h, inter])],
@@ -629,6 +692,77 @@ mod tests {
         assert_eq!(lm.outputs[0].shape, vec![16, 512]);
         let blm = &kernels["matmul_b4c16_64_512"];
         assert_eq!(blm.outputs[0].shape, vec![4 * 16, 512]);
+    }
+
+    #[test]
+    fn builtin_covers_every_paged_graph_kernel() {
+        use crate::fx::builder::{
+            build_batched_decode_graph_paged, build_decode_graph_paged,
+            build_prefill_graph_multi_row_paged, build_prefill_graph_paged,
+            build_unified_round_graph_multi_row_paged, build_unified_round_graph_paged,
+            MAX_BATCH_WIDTH, PREFILL_CHUNKS,
+        };
+        let kernels = builtin_kernels();
+        let dims = GraphDims::qwen_tiny();
+        for fusion in [FusionConfig::unfused(), FusionConfig::fused()] {
+            let g = build_decode_graph_paged(&dims, fusion);
+            for name in g.kernel_names() {
+                assert!(kernels.contains_key(&name), "decode: missing kernel '{name}'");
+            }
+            for w in 2..=MAX_BATCH_WIDTH {
+                let g = build_batched_decode_graph_paged(&dims, fusion, w);
+                for name in g.kernel_names() {
+                    assert!(kernels.contains_key(&name), "w={w}: missing kernel '{name}'");
+                }
+            }
+            for c in PREFILL_CHUNKS {
+                for g in [
+                    build_prefill_graph_paged(&dims, fusion, c),
+                    build_prefill_graph_multi_row_paged(&dims, fusion, c),
+                ] {
+                    for name in g.kernel_names() {
+                        assert!(kernels.contains_key(&name), "c={c}: missing kernel '{name}'");
+                    }
+                }
+                for w in 2..=MAX_BATCH_WIDTH {
+                    for g in [
+                        build_unified_round_graph_paged(&dims, fusion, w, c),
+                        build_unified_round_graph_multi_row_paged(&dims, fusion, w, c),
+                    ] {
+                        for name in g.kernel_names() {
+                            assert!(
+                                kernels.contains_key(&name),
+                                "w={w} c={c}: missing kernel '{name}'"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // Paged cache/attention arities: ONE pool plane in/out regardless of
+        // width — the block table + kv_block uniforms replace slot_idx and
+        // the per-slot state fan-in/fan-out.
+        let cu = &kernels["cache_update_paged_tiny"];
+        assert_eq!((cu.inputs.len(), cu.outputs.len()), (5, 1));
+        let sd = &kernels["sdpa_paged_tiny"];
+        assert_eq!((sd.inputs.len(), sd.outputs.len()), (6, 1));
+        let cu = &kernels["cache_update_paged_b4_tiny"];
+        assert_eq!((cu.inputs.len(), cu.outputs.len()), (6, 1));
+        let sd = &kernels["sdpa_paged_b4_tiny"];
+        assert_eq!((sd.inputs.len(), sd.outputs.len()), (7, 1));
+        let cu = &kernels["cache_update_paged_c16_tiny"];
+        assert_eq!((cu.inputs.len(), cu.outputs.len()), (6, 1));
+        let sd = &kernels["sdpa_prefill_paged_c16_tiny"];
+        assert_eq!((sd.inputs.len(), sd.outputs.len()), (7, 1));
+        let cu = &kernels["cache_update_paged_b4c16_tiny"];
+        assert_eq!((cu.inputs.len(), cu.outputs.len()), (7, 1));
+        let sd = &kernels["sdpa_paged_b4c16_tiny"];
+        assert_eq!((sd.inputs.len(), sd.outputs.len()), (8, 1));
+        // Pool planes are MAX_BATCH_WIDTH sessions' worth of rows.
+        assert_eq!(
+            kernels["cache_update_paged_tiny"].inputs[0].shape,
+            vec![MAX_BATCH_WIDTH * dims.max_seq, dims.kv_heads, dims.head_dim]
+        );
     }
 
     #[test]

@@ -893,6 +893,395 @@ fn slot_rows(x: &Tensor, valid_len: &Tensor, slot_mask: &Tensor) -> Result<Tenso
     Tensor::f32(vec![w * c, h], out)
 }
 
+// ------------------------------------------------------- paged KV kernels --
+//
+// The `*_paged_*` kernels run against ONE shared pool plane per (layer,
+// K/V) instead of per-session contiguous caches: logical cache position
+// `p` of a slot resolves through its block table as
+// `table[p / kv_block] * kv_block + p % kv_block`. Every interpreter
+// GATHERS the logical prefix into a contiguous tensor and reuses the
+// EXISTING single/chunked sdpa row loops (identical f32 loop order), and
+// SCATTERS written rows at their physical offsets — so paged serving is
+// BIT-IDENTICAL to the contiguous kernels, the property the paged arm of
+// `rust/tests/schedules.rs` pins. Masked slots and `valid_len = 0` slots
+// are skipped entirely (their table rows may be unallocated); a resolved
+// `-1` table entry inside a live range is a hard error, never a read.
+
+/// Decode the `(block_table, kv_block)` uniform pair: returns the raw
+/// table entries and the block size.
+fn paged_params<'a>(
+    table: &'a Tensor,
+    kvb: &Tensor,
+    what: &str,
+) -> Result<(&'a [i32], usize)> {
+    let t = table
+        .as_i32()
+        .map_err(|_| Error::Runtime(format!("{what}: expected i32 block table")))?;
+    let b = kvb
+        .as_i32()
+        .map_err(|_| Error::Runtime(format!("{what}: expected i32 kv_block")))?;
+    if b.len() != 1 || b[0] <= 0 {
+        return Err(Error::Shape(format!("{what}: bad kv_block uniform {b:?}")));
+    }
+    Ok((t, b[0] as usize))
+}
+
+/// Resolve logical cache position `p` to a physical pool row through
+/// `table` (block granularity `blk`), bounds-checked against `pool_rows`.
+fn paged_row(table: &[i32], blk: usize, p: usize, pool_rows: usize, what: &str) -> Result<usize> {
+    let g = *table.get(p / blk).ok_or_else(|| {
+        Error::Shape(format!("{what}: position {p} past block table ({} entries)", table.len()))
+    })?;
+    if g < 0 {
+        return Err(Error::Validation(format!(
+            "{what}: position {p} resolves to unallocated block {}",
+            p / blk
+        )));
+    }
+    let phys = g as usize * blk + p % blk;
+    if phys >= pool_rows {
+        return Err(Error::Shape(format!(
+            "{what}: physical row {phys} past pool ({pool_rows} rows)"
+        )));
+    }
+    Ok(phys)
+}
+
+/// Gather logical rows `0..n` of a pool plane into a contiguous
+/// `[n, kvh, d]` tensor — the exact prefix a contiguous cache would hold.
+fn gather_paged(
+    pool: &Tensor,
+    table: &[i32],
+    blk: usize,
+    n: usize,
+    what: &str,
+) -> Result<Tensor> {
+    if pool.shape.len() != 3 {
+        return Err(Error::Shape(format!("{what}: pool plane {:?}", pool.shape)));
+    }
+    let (pr, kvh, d) = (pool.shape[0], pool.shape[1], pool.shape[2]);
+    let src = f32s(pool, what)?;
+    let stride = kvh * d;
+    let mut out = vec![0f32; n * stride];
+    for p in 0..n {
+        let phys = paged_row(table, blk, p, pr, what)?;
+        out[p * stride..(p + 1) * stride]
+            .copy_from_slice(&src[phys * stride..(phys + 1) * stride]);
+    }
+    Tensor::f32(vec![n, kvh, d], out)
+}
+
+/// Single-token paged cache append: `[pool, row, pos, table, kv_block]`;
+/// the row lands at the physical row `pos` resolves to.
+fn cache_update_paged(inputs: &[Tensor]) -> Result<Tensor> {
+    let (pool, xrow) = (&inputs[0], &inputs[1]);
+    let pos = scalar_pos(&inputs[2])?;
+    let (table, blk) = paged_params(&inputs[3], &inputs[4], "cache_update_paged")?;
+    if pool.shape.len() != 3 {
+        return Err(Error::Shape(format!(
+            "cache_update_paged: pool {:?}",
+            pool.shape
+        )));
+    }
+    let phys = paged_row(table, blk, pos, pool.shape[0], "cache_update_paged")?;
+    cache_update(pool, xrow, phys)
+}
+
+/// Single-token paged attention: `[q, k_pool, v_pool, pos_ip1, table,
+/// kv_block]`; gathers the logical prefix and reuses the contiguous GQA.
+fn sdpa_paged(inputs: &[Tensor]) -> Result<Tensor> {
+    let (q, kp, vp) = (&inputs[0], &inputs[1], &inputs[2]);
+    let pos = scalar_pos(&inputs[3])?;
+    let (table, blk) = paged_params(&inputs[4], &inputs[5], "sdpa_paged")?;
+    let n = pos.max(1);
+    let k = gather_paged(kp, table, blk, n, "sdpa_paged")?;
+    let v = gather_paged(vp, table, blk, n, "sdpa_paged")?;
+    sdpa_gqa(q, &k, &v, pos)
+}
+
+/// Batched paged cache append: `[pool, rows [W, KVH*D], pos [W],
+/// slot_mask [W], table [W*stride], kv_block]`. Slot b scatters its row
+/// through its table row unless masked.
+fn cache_update_paged_batched(inputs: &[Tensor]) -> Result<Tensor> {
+    let (pool, rows) = (&inputs[0], &inputs[1]);
+    if pool.shape.len() != 3 || rows.shape.len() != 2 {
+        return Err(Error::Shape(format!(
+            "cache_update_paged_b: pool {:?} rows {:?}",
+            pool.shape, rows.shape
+        )));
+    }
+    let w = rows.shape[0];
+    let pos = i32_slots(&inputs[2], w, "cache_update_paged_b pos")?;
+    let mask = i32_slots(&inputs[3], w, "cache_update_paged_b mask")?;
+    let (table, blk) = paged_params(&inputs[4], &inputs[5], "cache_update_paged_b")?;
+    if w == 0 || table.len() % w != 0 {
+        return Err(Error::Shape(format!(
+            "cache_update_paged_b: {} table entries over {w} slots",
+            table.len()
+        )));
+    }
+    let tstride = table.len() / w;
+    let (pr, kvh, d) = (pool.shape[0], pool.shape[1], pool.shape[2]);
+    if rows.shape[1] != kvh * d {
+        return Err(Error::Shape(format!(
+            "cache_update_paged_b: rows {:?} for [{kvh}, {d}]",
+            rows.shape
+        )));
+    }
+    let stride = kvh * d;
+    let mut out = f32s(pool, "cache_update_paged_b")?.to_vec();
+    let src = f32s(rows, "cache_update_paged_b")?;
+    for b in 0..w {
+        if mask[b] == 0 {
+            continue;
+        }
+        let t = &table[b * tstride..(b + 1) * tstride];
+        let phys = paged_row(t, blk, pos[b].max(0) as usize, pr, "cache_update_paged_b")?;
+        out[phys * stride..(phys + 1) * stride]
+            .copy_from_slice(&src[b * stride..(b + 1) * stride]);
+    }
+    Tensor::f32(pool.shape.clone(), out)
+}
+
+/// Batched paged attention: `[q [W, NH*D], k_pool, v_pool, pos_ip1 [W],
+/// slot_mask [W], table [W*stride], kv_block]`. Slot b gathers its logical
+/// prefix through its table row; masked rows produce zeros.
+fn sdpa_paged_batched(inputs: &[Tensor]) -> Result<Tensor> {
+    let (q, kp, vp) = (&inputs[0], &inputs[1], &inputs[2]);
+    if q.shape.len() != 2 || kp.shape.len() != 3 {
+        return Err(Error::Shape(format!(
+            "sdpa_paged_b: q {:?} k {:?}",
+            q.shape, kp.shape
+        )));
+    }
+    let w = q.shape[0];
+    let pos = i32_slots(&inputs[3], w, "sdpa_paged_b pos")?;
+    let mask = i32_slots(&inputs[4], w, "sdpa_paged_b mask")?;
+    let (table, blk) = paged_params(&inputs[5], &inputs[6], "sdpa_paged_b")?;
+    if w == 0 || table.len() % w != 0 {
+        return Err(Error::Shape(format!(
+            "sdpa_paged_b: {} table entries over {w} slots",
+            table.len()
+        )));
+    }
+    let tstride = table.len() / w;
+    let qcols = q.shape[1];
+    let d = kp.shape[2];
+    if d == 0 || qcols % d != 0 {
+        return Err(Error::Shape(format!(
+            "sdpa_paged_b: q cols {qcols} vs head dim {d}"
+        )));
+    }
+    let heads = qcols / d;
+    let mut out = vec![0f32; w * qcols];
+    for b in 0..w {
+        if mask[b] == 0 {
+            continue;
+        }
+        let t = &table[b * tstride..(b + 1) * tstride];
+        let p = pos[b].max(0) as usize;
+        let n = p.max(1);
+        let k = gather_paged(kp, t, blk, n, "sdpa_paged_b")?;
+        let v = gather_paged(vp, t, blk, n, "sdpa_paged_b")?;
+        let qb = slot_row(q, b, vec![heads, d])?;
+        let o = sdpa_gqa(&qb, &k, &v, p)?;
+        out[b * qcols..(b + 1) * qcols].copy_from_slice(f32s(&o, "sdpa_paged_b")?);
+    }
+    Tensor::f32(vec![w, qcols], out)
+}
+
+/// Chunked paged cache scatter: `[pool, rows [C, KVH*D], pos_base,
+/// valid_len, table, kv_block]`; rows `0..valid_len` land at the physical
+/// rows `pos_base..` resolve to.
+fn cache_update_paged_prefill(inputs: &[Tensor]) -> Result<Tensor> {
+    let (pool, rows) = (&inputs[0], &inputs[1]);
+    let base = scalar_pos(&inputs[2])?;
+    let valid = scalar_pos(&inputs[3])?;
+    let (table, blk) = paged_params(&inputs[4], &inputs[5], "cache_update_paged_c")?;
+    if pool.shape.len() != 3 || rows.shape.len() != 2 {
+        return Err(Error::Shape(format!(
+            "cache_update_paged_c: pool {:?} rows {:?}",
+            pool.shape, rows.shape
+        )));
+    }
+    let (pr, kvh, d) = (pool.shape[0], pool.shape[1], pool.shape[2]);
+    if rows.shape[1] != kvh * d || valid > rows.shape[0] {
+        return Err(Error::Shape(format!(
+            "cache_update_paged_c: {valid} valid rows of {:?} into [{kvh}, {d}]",
+            rows.shape
+        )));
+    }
+    let stride = kvh * d;
+    let mut out = f32s(pool, "cache_update_paged_c")?.to_vec();
+    let src = f32s(rows, "cache_update_paged_c")?;
+    for i in 0..valid {
+        let phys = paged_row(table, blk, base + i, pr, "cache_update_paged_c")?;
+        out[phys * stride..(phys + 1) * stride]
+            .copy_from_slice(&src[i * stride..(i + 1) * stride]);
+    }
+    Tensor::f32(pool.shape.clone(), out)
+}
+
+/// Chunked paged causal attention: `[q [C, NH*D], k_pool, v_pool,
+/// pos_base, valid_len, table, kv_block]`. The logical prefix
+/// `0..pos_base+valid_len` is gathered ONCE, then each row reuses the
+/// contiguous GQA at its own position (which only reads rows `0..pos`).
+fn sdpa_prefill_paged(inputs: &[Tensor]) -> Result<Tensor> {
+    let (q, kp, vp) = (&inputs[0], &inputs[1], &inputs[2]);
+    let base = scalar_pos(&inputs[3])?;
+    let valid = scalar_pos(&inputs[4])?;
+    let (table, blk) = paged_params(&inputs[5], &inputs[6], "sdpa_prefill_paged")?;
+    if q.shape.len() != 2 || kp.shape.len() != 3 {
+        return Err(Error::Shape(format!(
+            "sdpa_prefill_paged: q {:?} k {:?}",
+            q.shape, kp.shape
+        )));
+    }
+    let (c, qcols) = (q.shape[0], q.shape[1]);
+    let d = kp.shape[2];
+    if d == 0 || qcols % d != 0 || valid > c {
+        return Err(Error::Shape(format!(
+            "sdpa_prefill_paged: q {:?} vs head dim {d}, valid {valid}",
+            q.shape
+        )));
+    }
+    let heads = qcols / d;
+    let mut out = vec![0f32; c * qcols];
+    if valid > 0 {
+        let n = base + valid;
+        let k = gather_paged(kp, table, blk, n, "sdpa_prefill_paged")?;
+        let v = gather_paged(vp, table, blk, n, "sdpa_prefill_paged")?;
+        for i in 0..valid {
+            let qi = slot_row(q, i, vec![heads, d])?;
+            let o = sdpa_gqa(&qi, &k, &v, base + i + 1)?;
+            out[i * qcols..(i + 1) * qcols].copy_from_slice(f32s(&o, "sdpa_prefill_paged")?);
+        }
+    }
+    Tensor::f32(vec![c, qcols], out)
+}
+
+/// Unified paged cache scatter: `[pool, rows [W*C, KVH*D], pos_base [W],
+/// valid_len [W], slot_mask [W], table [W*stride], kv_block]`. Slot b
+/// scatters rows `b*C..b*C+valid_len[b]` through its table row at
+/// positions `pos_base[b]..` unless masked.
+fn cache_update_paged_unified(inputs: &[Tensor]) -> Result<Tensor> {
+    let (pool, rows) = (&inputs[0], &inputs[1]);
+    if pool.shape.len() != 3 || rows.shape.len() != 2 {
+        return Err(Error::Shape(format!(
+            "cache_update_paged_bc: pool {:?} rows {:?}",
+            pool.shape, rows.shape
+        )));
+    }
+    let base_t = &inputs[2];
+    let w = base_t.numel();
+    let base = i32_slots(base_t, w, "cache_update_paged_bc pos_base")?;
+    let valid = i32_slots(&inputs[3], w, "cache_update_paged_bc valid_len")?;
+    let mask = i32_slots(&inputs[4], w, "cache_update_paged_bc mask")?;
+    let (table, blk) = paged_params(&inputs[5], &inputs[6], "cache_update_paged_bc")?;
+    if w == 0 || table.len() % w != 0 || rows.shape[0] % w != 0 {
+        return Err(Error::Shape(format!(
+            "cache_update_paged_bc: rows {:?} / {} table entries over {w} slots",
+            rows.shape,
+            table.len()
+        )));
+    }
+    let tstride = table.len() / w;
+    let c = rows.shape[0] / w;
+    let (pr, kvh, d) = (pool.shape[0], pool.shape[1], pool.shape[2]);
+    if rows.shape[1] != kvh * d {
+        return Err(Error::Shape(format!(
+            "cache_update_paged_bc: rows {:?} for [{kvh}, {d}]",
+            rows.shape
+        )));
+    }
+    let stride = kvh * d;
+    let mut out = f32s(pool, "cache_update_paged_bc")?.to_vec();
+    let src = f32s(rows, "cache_update_paged_bc")?;
+    for b in 0..w {
+        if mask[b] == 0 {
+            continue;
+        }
+        let vl = valid[b].max(0) as usize;
+        if vl > c {
+            return Err(Error::Shape(format!(
+                "cache_update_paged_bc: valid_len[{b}] = {vl} exceeds chunk {c}"
+            )));
+        }
+        let t = &table[b * tstride..(b + 1) * tstride];
+        let b0 = base[b].max(0) as usize;
+        for i in 0..vl {
+            let phys = paged_row(t, blk, b0 + i, pr, "cache_update_paged_bc")?;
+            let r = b * c + i;
+            out[phys * stride..(phys + 1) * stride]
+                .copy_from_slice(&src[r * stride..(r + 1) * stride]);
+        }
+    }
+    Tensor::f32(pool.shape.clone(), out)
+}
+
+/// Unified paged causal attention: `[q [W*C, NH*D], k_pool, v_pool,
+/// pos_base [W], valid_len [W], slot_mask [W], table [W*stride],
+/// kv_block]`. Each live slot gathers its prefix ONCE; masked slots and
+/// ragged-tail rows produce zeros.
+fn sdpa_paged_unified(inputs: &[Tensor]) -> Result<Tensor> {
+    let (q, kp, vp) = (&inputs[0], &inputs[1], &inputs[2]);
+    if q.shape.len() != 2 || kp.shape.len() != 3 {
+        return Err(Error::Shape(format!(
+            "sdpa_paged_bc: q {:?} k {:?}",
+            q.shape, kp.shape
+        )));
+    }
+    let base_t = &inputs[3];
+    let w = base_t.numel();
+    let base = i32_slots(base_t, w, "sdpa_paged_bc pos_base")?;
+    let valid = i32_slots(&inputs[4], w, "sdpa_paged_bc valid_len")?;
+    let mask = i32_slots(&inputs[5], w, "sdpa_paged_bc mask")?;
+    let (table, blk) = paged_params(&inputs[6], &inputs[7], "sdpa_paged_bc")?;
+    if w == 0 || table.len() % w != 0 || q.shape[0] % w != 0 {
+        return Err(Error::Shape(format!(
+            "sdpa_paged_bc: q {:?} / {} table entries over {w} slots",
+            q.shape,
+            table.len()
+        )));
+    }
+    let tstride = table.len() / w;
+    let (c, qcols) = (q.shape[0] / w, q.shape[1]);
+    let d = kp.shape[2];
+    if d == 0 || qcols % d != 0 {
+        return Err(Error::Shape(format!(
+            "sdpa_paged_bc: q cols {qcols} vs head dim {d}"
+        )));
+    }
+    let heads = qcols / d;
+    let mut out = vec![0f32; w * c * qcols];
+    for b in 0..w {
+        if mask[b] == 0 {
+            continue;
+        }
+        let vl = valid[b].max(0) as usize;
+        if vl > c {
+            return Err(Error::Shape(format!(
+                "sdpa_paged_bc: valid_len[{b}] = {vl} exceeds chunk {c}"
+            )));
+        }
+        if vl == 0 {
+            continue;
+        }
+        let t = &table[b * tstride..(b + 1) * tstride];
+        let b0 = base[b].max(0) as usize;
+        let n = b0 + vl;
+        let k = gather_paged(kp, t, blk, n, "sdpa_paged_bc")?;
+        let v = gather_paged(vp, t, blk, n, "sdpa_paged_bc")?;
+        for i in 0..vl {
+            let r = b * c + i;
+            let qi = slot_row(q, r, vec![heads, d])?;
+            let o = sdpa_gqa(&qi, &k, &v, b0 + i + 1)?;
+            out[r * qcols..(r + 1) * qcols].copy_from_slice(f32s(&o, "sdpa_paged_bc")?);
+        }
+    }
+    Tensor::f32(vec![w * c, qcols], out)
+}
+
 // --------------------------------------------------------------- dispatch --
 
 fn need(inputs: &[Tensor], n: usize, name: &str) -> Result<()> {
@@ -918,8 +1307,38 @@ pub fn execute_kernel(spec: &KernelSpec, inputs: &[Tensor]) -> Result<Vec<Tensor
     // shared implementations are row-safe. The chunked kv/rope/rotary
     // forms reuse the batched per-row bodies — same math, per sequence
     // position instead of per slot.
-    let outs: Vec<Tensor> = if name.starts_with("kv_fused_b") || name.starts_with("kv_fused_c")
-    {
+    // Paged forms first: "sdpa_prefill_paged" shares the "sdpa_prefill"
+    // prefix and "cache_update_paged*" shares "cache_update", so the paged
+    // group must win before the contiguous checks run.
+    let outs: Vec<Tensor> = if name.starts_with("cache_update_paged_b") {
+        if unified_width_segment(name, "cache_update_paged_b") {
+            need(inputs, 7, name)?;
+            vec![cache_update_paged_unified(inputs)?]
+        } else {
+            need(inputs, 6, name)?;
+            vec![cache_update_paged_batched(inputs)?]
+        }
+    } else if name.starts_with("cache_update_paged_c") {
+        need(inputs, 6, name)?;
+        vec![cache_update_paged_prefill(inputs)?]
+    } else if name.starts_with("cache_update_paged") {
+        need(inputs, 5, name)?;
+        vec![cache_update_paged(inputs)?]
+    } else if name.starts_with("sdpa_prefill_paged") {
+        need(inputs, 7, name)?;
+        vec![sdpa_prefill_paged(inputs)?]
+    } else if name.starts_with("sdpa_paged_b") {
+        if unified_width_segment(name, "sdpa_paged_b") {
+            need(inputs, 8, name)?;
+            vec![sdpa_paged_unified(inputs)?]
+        } else {
+            need(inputs, 7, name)?;
+            vec![sdpa_paged_batched(inputs)?]
+        }
+    } else if name.starts_with("sdpa_paged") {
+        need(inputs, 6, name)?;
+        vec![sdpa_paged(inputs)?]
+    } else if name.starts_with("kv_fused_b") || name.starts_with("kv_fused_c") {
         need(inputs, 2, name)?;
         kv_fused_batched(&inputs[0], &inputs[1])?
     } else if name.starts_with("rope_cos_sin_b") || name.starts_with("rope_cos_sin_c") {
@@ -1622,5 +2041,149 @@ mod tests {
             out.as_f32().unwrap()[2 * heads * d..].iter().all(|&x| x == 0.0),
             "masked slot must produce zeros"
         );
+    }
+
+    fn i1(v: i32) -> Tensor {
+        Tensor::i32(vec![1], vec![v]).unwrap()
+    }
+
+    #[test]
+    fn paged_decode_matches_contiguous_bitwise_through_scrambled_table() {
+        // Pool of 8 rows, block = 2; the table maps logical blocks
+        // [0, 1, 2] to scrambled physical blocks [3, 0, 2], block 3
+        // unallocated. A decode loop must be bit-identical to the
+        // contiguous kernels at every step.
+        let (kvh, d, heads) = (1usize, 2usize, 2usize);
+        let (pr, blk) = (8usize, 2usize);
+        let table = Tensor::i32(vec![4], vec![3, 0, 2, -1]).unwrap();
+        let kvb = i1(blk as i32);
+        let mut ck = Tensor::f32(vec![6, kvh, d], vec![0.0; 6 * kvh * d]).unwrap();
+        let mut pk = Tensor::f32(vec![pr, kvh, d], vec![0.0; pr * kvh * d]).unwrap();
+        for p in 0..6usize {
+            let row = ramp(vec![kvh, d], 0.11, p as f32);
+            ck = cache_update(&ck, &row, p).unwrap();
+            pk = cache_update_paged(&[
+                pk.clone(), row, i1(p as i32), table.clone(), kvb.clone(),
+            ]).unwrap();
+            let q = ramp(vec![heads, d], 0.2, -0.3 - p as f32);
+            let a = sdpa_gqa(&q, &ck, &ck, p + 1).unwrap();
+            let b = sdpa_paged(&[
+                q, pk.clone(), pk.clone(), i1((p + 1) as i32), table.clone(), kvb.clone(),
+            ]).unwrap();
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap(), "pos {p}");
+        }
+        // The logical prefix reassembles bitwise through the table.
+        let g = gather_paged(&pk, table.as_i32().unwrap(), blk, 6, "test").unwrap();
+        assert_eq!(g.as_f32().unwrap(), ck.as_f32().unwrap());
+        // Writing or reading through an unallocated block fails loudly.
+        let row = ramp(vec![kvh, d], 0.3, 0.0);
+        assert!(cache_update_paged(&[
+            pk.clone(), row, i1(6), table.clone(), kvb.clone(),
+        ]).is_err());
+        let q = ramp(vec![heads, d], 0.2, 0.1);
+        assert!(sdpa_paged(&[
+            q, pk.clone(), pk, i1(7), table, kvb,
+        ]).is_err());
+    }
+
+    #[test]
+    fn paged_prefill_matches_contiguous_bitwise() {
+        let (kvh, d, heads, c) = (1usize, 2usize, 2usize, 4usize);
+        let (pr, blk) = (8usize, 2usize);
+        let table = Tensor::i32(vec![4], vec![2, 0, 3, 1]).unwrap();
+        let kvb = i1(blk as i32);
+        // Pre-existing history: rows 0 and 1 written single-token.
+        let mut ck = Tensor::f32(vec![8, kvh, d], vec![0.0; 8 * kvh * d]).unwrap();
+        let mut pk = Tensor::f32(vec![pr, kvh, d], vec![0.0; pr * kvh * d]).unwrap();
+        for p in 0..2usize {
+            let row = ramp(vec![kvh, d], 0.13, p as f32);
+            ck = cache_update(&ck, &row, p).unwrap();
+            pk = cache_update_paged(&[
+                pk.clone(), row, i1(p as i32), table.clone(), kvb.clone(),
+            ]).unwrap();
+        }
+        // Chunk of 4 with 3 valid rows scattered at base 2.
+        let rows = ramp(vec![c, kvh * d], 0.07, 0.5);
+        ck = cache_update_prefill(&[ck.clone(), rows.clone(), i1(2), i1(3)]).unwrap();
+        pk = cache_update_paged_prefill(&[
+            pk.clone(), rows, i1(2), i1(3), table.clone(), kvb.clone(),
+        ]).unwrap();
+        let g = gather_paged(&pk, table.as_i32().unwrap(), blk, 5, "test").unwrap();
+        assert_eq!(g.as_f32().unwrap(), &ck.as_f32().unwrap()[..5 * kvh * d]);
+        let q = ramp(vec![c, heads * d], 0.19, -0.8);
+        let a = sdpa_prefill(&[q.clone(), ck.clone(), ck, i1(2), i1(3)]).unwrap();
+        let b = sdpa_prefill_paged(&[q, pk.clone(), pk, i1(2), i1(3), table, kvb]).unwrap();
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+    }
+
+    #[test]
+    fn paged_batched_and_unified_match_contiguous_bitwise() {
+        // Two slots with disjoint scrambled tables in one pool; masked
+        // width-padding slots are skipped without touching their (-1)
+        // tables.
+        let (w, kvh, d, heads, c) = (2usize, 1usize, 2usize, 2usize, 3usize);
+        let (pr, blk) = (16usize, 2usize);
+        let tables = Tensor::i32(vec![2 * 4], vec![0, 1, -1, -1, 4, 2, -1, -1]).unwrap();
+        let kvb = i1(blk as i32);
+        // Contiguous twin state: one [4, kvh, d] cache per slot.
+        let mut cs: Vec<Tensor> = (0..w)
+            .map(|_| Tensor::f32(vec![4, kvh, d], vec![0.0; 4 * kvh * d]).unwrap())
+            .collect();
+        let mut pool = Tensor::f32(vec![pr, kvh, d], vec![0.0; pr * kvh * d]).unwrap();
+        // Unified round: slot 0 prefills 3 rows at base 0, slot 1 two
+        // rows at base 0 (ragged tail).
+        let rows = ramp(vec![w * c, kvh * d], 0.07, 0.4);
+        let base = Tensor::i32(vec![w], vec![0, 0]).unwrap();
+        let valid = Tensor::i32(vec![w], vec![3, 2]).unwrap();
+        let mask = Tensor::i32(vec![w], vec![1, 1]).unwrap();
+        let idx = Tensor::i32(vec![w], vec![0, 1]).unwrap();
+        let mut ins: Vec<Tensor> = cs.clone();
+        ins.extend([rows.clone(), base.clone(), valid.clone(), mask.clone(), idx.clone()]);
+        cs = cache_update_unified(&ins).unwrap();
+        pool = cache_update_paged_unified(&[
+            pool.clone(), rows, base.clone(), valid.clone(), mask.clone(),
+            tables.clone(), kvb.clone(),
+        ]).unwrap();
+        let q = ramp(vec![w * c, heads * d], 0.21, -0.6);
+        let mut ins: Vec<Tensor> = vec![q.clone()];
+        ins.extend(cs.iter().cloned());
+        ins.extend(cs.iter().cloned());
+        ins.extend([base.clone(), valid.clone(), mask.clone(), idx.clone()]);
+        let a = sdpa_unified(&ins).unwrap();
+        let b = sdpa_paged_unified(&[
+            q, pool.clone(), pool.clone(), base, valid, mask.clone(),
+            tables.clone(), kvb.clone(),
+        ]).unwrap();
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap(), "unified round");
+
+        // Batched decode round on top: slot 0 appends at pos 3, slot 1 at
+        // pos 2.
+        let drow = ramp(vec![w, kvh * d], 0.09, 1.2);
+        let pos = Tensor::i32(vec![w], vec![3, 2]).unwrap();
+        let mut ins: Vec<Tensor> = cs.clone();
+        ins.extend([drow.clone(), pos.clone(), mask.clone(), idx.clone()]);
+        cs = cache_update_batched(&ins).unwrap();
+        pool = cache_update_paged_batched(&[
+            pool.clone(), drow, pos, mask.clone(), tables.clone(), kvb.clone(),
+        ]).unwrap();
+        let q = ramp(vec![w, heads * d], 0.23, 0.9);
+        let pos_ip1 = Tensor::i32(vec![w], vec![4, 3]).unwrap();
+        let mut ins: Vec<Tensor> = vec![q.clone()];
+        ins.extend(cs.iter().cloned());
+        ins.extend(cs.iter().cloned());
+        ins.extend([pos_ip1.clone(), mask.clone(), idx]);
+        let a = sdpa_batched(&ins).unwrap();
+        let b = sdpa_paged_batched(&[
+            q, pool.clone(), pool, pos_ip1, mask, tables, kvb,
+        ]).unwrap();
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap(), "batched round");
+    }
+
+    #[test]
+    fn paged_dispatch_disambiguates_by_name() {
+        assert!(unified_width_segment("cache_update_paged_b4c16_tiny", "cache_update_paged_b"));
+        assert!(!unified_width_segment("cache_update_paged_b4_tiny", "cache_update_paged_b"));
+        assert!(unified_width_segment("sdpa_paged_b8c32_tiny", "sdpa_paged_b"));
+        assert!(!unified_width_segment("sdpa_paged_b8_tiny", "sdpa_paged_b"));
     }
 }

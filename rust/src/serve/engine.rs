@@ -20,16 +20,18 @@ use std::collections::{BTreeMap, HashMap};
 use crate::engine::inference::EngineConfig;
 use crate::engine::GraphExecutor;
 use crate::fx::builder::{
-    build_batched_decode_graph, build_decode_graph, build_prefill_graph,
-    build_unified_round_graph, build_unified_round_graph_multi_row, GraphDims,
-    MAX_BATCH_WIDTH, PREFILL_CHUNKS,
+    build_batched_decode_graph, build_batched_decode_graph_paged, build_decode_graph,
+    build_decode_graph_paged, build_prefill_graph, build_prefill_graph_paged,
+    build_unified_round_graph, build_unified_round_graph_multi_row,
+    build_unified_round_graph_multi_row_paged, build_unified_round_graph_paged,
+    paged_table_len, GraphDims, KV_BLOCKS, MAX_BATCH_WIDTH, PREFILL_CHUNKS,
 };
 use crate::fx::graph::FxGraph;
 use crate::model::weights::ModelWeights;
-use crate::plan::DeviceKvCache;
+use crate::plan::{DeviceKvCache, PagedKv, PagedSlot};
 use crate::runtime::hostops;
 use crate::runtime::registry::Registry;
-use crate::tensor::Tensor;
+use crate::tensor::{DType, Tensor};
 use crate::webgpu::queue::{bind_buffers, kernel_layout};
 use crate::webgpu::{
     BindGroupLayoutId, BufferId, ComputePipelineId, Device, FaultInjector, FaultPlan,
@@ -192,6 +194,19 @@ pub struct ServingEngine<'r> {
     pub failed_sessions: u64,
     /// Seed of the installed fault plan (`None` = no injection).
     pub fault_seed: Option<u64>,
+    /// Paged-KV block size in tokens (0 = contiguous per-session cache
+    /// sets, the pre-paging layout). When nonzero, every graph above was
+    /// built with block-table indirection and sessions hold
+    /// [`KvCache::Paged`] block tables instead of `DeviceKvCache` sets.
+    pub kv_block: usize,
+    /// Monotone LRU clock for the per-block pager: each residency
+    /// pre-pass stamps the blocks it touches, and eviction victims are
+    /// chosen oldest-stamp-first.
+    pager_clock: u64,
+    /// High-water mark of simultaneously KV-resident sessions (any block
+    /// on device) — the session-density metric the paged layout exists
+    /// to raise.
+    pub resident_sessions_hw: usize,
 }
 
 impl<'r> ServingEngine<'r> {
@@ -199,7 +214,39 @@ impl<'r> ServingEngine<'r> {
         let ec = &config.engine;
         let mc = registry.config(&ec.model)?;
         let dims = ec.dims_override.unwrap_or_else(|| GraphDims::from_manifest(mc));
-        let graph = build_decode_graph(&dims, ec.fusion);
+        // Paged KV residency engages only for planned execution: eager
+        // mode interprets ops against host tensors and keeps the
+        // contiguous layout (the paper's measurable baseline), and the
+        // device-argmax finish variant predates session caches entirely.
+        // When on, EVERY graph below is built with block-table
+        // indirection — mixing paged and contiguous plans over one
+        // executor would need two persistent layouts.
+        let kv_block = if ec.paged
+            && ec.exec == crate::engine::ExecMode::Planned
+            && !ec.device_argmax
+        {
+            if !KV_BLOCKS.contains(&ec.kv_block) {
+                return Err(Error::Graph(format!(
+                    "kv block {} has no built-in kernel coverage (choose one \
+                     of {KV_BLOCKS:?}, or --no-paged)",
+                    ec.kv_block
+                )));
+            }
+            if dims.max_seq % ec.kv_block != 0 {
+                return Err(Error::Graph(format!(
+                    "kv block {} does not divide the {} KV capacity rows",
+                    ec.kv_block, dims.max_seq
+                )));
+            }
+            ec.kv_block
+        } else {
+            0
+        };
+        let graph = if kv_block > 0 {
+            build_decode_graph_paged(&dims, ec.fusion)
+        } else {
+            build_decode_graph(&dims, ec.fusion)
+        };
         graph.validate()?;
         // Batched decode engages only for planned multi-session serving:
         // eager mode, single-session engines, and the device-argmax finish
@@ -243,7 +290,14 @@ impl<'r> ServingEngine<'r> {
             }
         }
         let mut executor = GraphExecutor::new(device, registry, ec.framework_ns_per_op);
-        executor.pool.set_cap(ec.pool_cap_bytes);
+        // Under paging the byte cap governs KV residency (a block-group
+        // budget on the shared pool, below) rather than the activation
+        // pool: the planes are raw device buffers outside the BufferPool,
+        // and capping activations at a KV-sized budget would starve the
+        // plan arena the cap was never meant to bound.
+        if kv_block == 0 {
+            executor.pool.set_cap(ec.pool_cap_bytes);
+        }
         executor.prepare(&graph)?;
 
         let argmax = if ec.device_argmax {
@@ -284,6 +338,23 @@ impl<'r> ServingEngine<'r> {
             )?;
         }
 
+        // Shared block pool behind every paged plan: MAX_BATCH_WIDTH x
+        // max_seq rows per K/V plane per layer, carved into
+        // `max_seq / kv_block`-row groups handed out by a BlockArena.
+        // `--pool-cap-kv` translates to a group budget at the SAME byte
+        // cap the contiguous layout would spend on whole cache sets, so
+        // paged-vs-contiguous density comparisons are equal-cap. The
+        // budget is a soft LRU watermark (the pager spills past it);
+        // physical pool rows are the hard wall.
+        if kv_block > 0 {
+            let group_bytes = 2 * dims.layers * kv_block * dims.kv_heads * dims.head_dim * 4;
+            let budget_groups = match ec.pool_cap_bytes {
+                Some(cap) => (cap / group_bytes).max(1),
+                None => usize::MAX,
+            };
+            executor.enable_paged_pool(kv_block, budget_groups)?;
+        }
+
         // Batched plan alongside the single-session one: rounds with >= 2
         // active sessions replay this graph once per chunk of batch_width
         // sessions; 1-active rounds (and the public encode/finish API) keep
@@ -294,7 +365,11 @@ impl<'r> ServingEngine<'r> {
         // block survives until the round's ONE coalesced readback — the
         // same fixed-sync amortization the interleaved path has.
         let batched_graph = if batch_width >= 2 {
-            let bg = build_batched_decode_graph(&dims, ec.fusion, batch_width);
+            let bg = if kv_block > 0 {
+                build_batched_decode_graph_paged(&dims, ec.fusion, batch_width)
+            } else {
+                build_batched_decode_graph(&dims, ec.fusion, batch_width)
+            };
             bg.validate()?;
             let chunks_per_round =
                 (config.max_concurrent + batch_width - 1) / batch_width;
@@ -337,7 +412,11 @@ impl<'r> ServingEngine<'r> {
             0
         };
         let prefill_graph = if prefill_chunk >= 2 {
-            let pg = build_prefill_graph(&dims, ec.fusion, prefill_chunk);
+            let pg = if kv_block > 0 {
+                build_prefill_graph_paged(&dims, ec.fusion, prefill_chunk)
+            } else {
+                build_prefill_graph(&dims, ec.fusion, prefill_chunk)
+            };
             pg.validate()?;
             executor.enable_prefill_plan(
                 &pg,
@@ -376,19 +455,29 @@ impl<'r> ServingEngine<'r> {
             0
         };
         let unified_graph = if batch_width >= 2 && prefill_chunk >= 2 && ec.unified {
-            let ug = if speculate >= 1 {
+            let ug = match (speculate >= 1, kv_block > 0) {
                 // Multi-row tail: logits for EVERY valid row (`[W*C,
                 // vocab]`), so a verify chunk reads all k+1 next-token
                 // distributions from one replay. Same dispatch count —
                 // the three tail kernels swap 1-for-1.
-                build_unified_round_graph_multi_row(
+                (true, true) => build_unified_round_graph_multi_row_paged(
                     &dims,
                     ec.fusion,
                     batch_width,
                     prefill_chunk,
-                )
-            } else {
-                build_unified_round_graph(&dims, ec.fusion, batch_width, prefill_chunk)
+                ),
+                (true, false) => build_unified_round_graph_multi_row(
+                    &dims,
+                    ec.fusion,
+                    batch_width,
+                    prefill_chunk,
+                ),
+                (false, true) => {
+                    build_unified_round_graph_paged(&dims, ec.fusion, batch_width, prefill_chunk)
+                }
+                (false, false) => {
+                    build_unified_round_graph(&dims, ec.fusion, batch_width, prefill_chunk)
+                }
             };
             ug.validate()?;
             let chunks_per_round =
@@ -440,6 +529,9 @@ impl<'r> ServingEngine<'r> {
             recovered_sessions: 0,
             failed_sessions: 0,
             fault_seed: ec.fault_seed,
+            kv_block,
+            pager_clock: 0,
+            resident_sessions_hw: 0,
         })
     }
 
@@ -507,7 +599,14 @@ impl<'r> ServingEngine<'r> {
     pub fn admit(&mut self) -> Result<()> {
         while self.active.len() < self.config.max_concurrent && !self.queue.is_empty() {
             let slot = self.lowest_free_slot();
-            let cache = if self.executor.is_planned() {
+            // Paged mode never allocates at admission: sessions start with
+            // an empty block table and the residency pre-pass grows it on
+            // demand, paging colder blocks to the host under pressure.
+            // Admission therefore DEFERS AND PAGES, NEVER FAILS — the
+            // oversubscription contract the block pool exists to provide.
+            let cache = if self.kv_block > 0 {
+                None
+            } else if self.executor.is_planned() {
                 match self.executor.alloc_kv_cache() {
                     Ok(c) => Some(c),
                     // Transient pressure while sessions are running defers
@@ -546,6 +645,8 @@ impl<'r> ServingEngine<'r> {
             );
             if let Some(c) = cache {
                 s.kv = KvCache::Device(c);
+            } else if self.kv_block > 0 {
+                s.kv = KvCache::Paged(PagedKv::default());
             }
             s.slot = Some(slot);
             self.active.push(s);
@@ -581,7 +682,20 @@ impl<'r> ServingEngine<'r> {
         was_prompt: bool,
     ) -> Result<StepHandle> {
         let ring = self.next_ring();
-        let ServingEngine { executor, graph, dims, weights, .. } = self;
+        let ServingEngine { executor, graph, dims, weights, pager_clock, kv_block, .. } =
+            self;
+        if *kv_block > 0 {
+            // Detached sessions page against themselves only: the
+            // single-request wrapper owns its session, so cross-session
+            // LRU has no victims to consider.
+            Self::ensure_resident(
+                executor,
+                std::slice::from_mut(s),
+                dims,
+                &[(0, (s.pos + 1).min(dims.max_seq))],
+                pager_clock,
+            )?;
+        }
         Self::encode_inner(executor, graph, dims, weights, s, token, was_prompt, ring)
     }
 
@@ -621,7 +735,9 @@ impl<'r> ServingEngine<'r> {
     /// No-op for already-device-resident sessions. Shared by the
     /// single-session encode path and the batched round packer.
     fn promote_to_device(executor: &mut GraphExecutor<'r>, s: &mut SessionState) -> Result<()> {
-        if s.kv.is_device() {
+        if s.kv.is_device() || s.kv.is_paged() {
+            // Paged sessions are made resident block-by-block by the
+            // pager pre-pass, never by whole-cache promotion.
             return Ok(());
         }
         let cache = executor.alloc_kv_cache()?;
@@ -647,6 +763,320 @@ impl<'r> ServingEngine<'r> {
             }
         }
         s.kv = KvCache::Device(cache);
+        Ok(())
+    }
+
+    // ---------------------------------------------- paged KV residency ----
+
+    /// Logical KV blocks covering `rows` session rows at block size `b`.
+    fn blocks_for(rows: usize, b: usize) -> usize {
+        (rows + b - 1) / b
+    }
+
+    /// Convert a session's whole-cache host state (a contiguous spill, or
+    /// the empty placeholder a fresh session is born with) into the paged
+    /// representation: per-block host slots holding the plane-major
+    /// `[l0.k, l0.v, l1.k, l1.v, ...]` group image, blocks
+    /// `0..blocks_for(kv_hw)`. No-op for sessions already paged.
+    fn promote_to_paged(s: &mut SessionState, dims: &GraphDims, b: usize) -> Result<()> {
+        if s.kv.is_paged() {
+            return Ok(());
+        }
+        let Some(host) = s.kv.as_host() else {
+            return Err(Error::Internal(format!(
+                "paged mode: session {} holds a contiguous device cache",
+                s.id
+            )));
+        };
+        if host.is_empty() {
+            if s.kv_hw > 0 {
+                return Err(Error::Graph(format!(
+                    "session {} lost its cache state mid-generation (pos {})",
+                    s.id, s.pos
+                )));
+            }
+            s.kv = KvCache::Paged(PagedKv::default());
+            return Ok(());
+        }
+        let row_bytes = dims.kv_heads * dims.head_dim * 4;
+        let slice = b * row_bytes;
+        let nb = Self::blocks_for(s.kv_hw, b);
+        let mut slots = Vec::with_capacity(nb);
+        for j in 0..nb {
+            let mut img = Vec::with_capacity(2 * dims.layers * slice);
+            for (k, v) in host {
+                for t in [k, v] {
+                    let bytes = t.data.as_bytes();
+                    img.extend_from_slice(&bytes[j * slice..(j + 1) * slice]);
+                }
+            }
+            slots.push(PagedSlot::Host(img));
+        }
+        s.kv = KvCache::Paged(PagedKv { slots, last_touch: 0 });
+        Ok(())
+    }
+
+    /// Serialize a session's block table for upload: `Resident(g) -> g`,
+    /// spilled/unallocated -> `-1`. Always `stride` entries — the fixed
+    /// `paged_table_len` layout every paged kernel indexes into.
+    fn table_entries(pk: &PagedKv, stride: usize) -> Vec<i32> {
+        let mut t = vec![-1i32; stride];
+        for (j, slot) in pk.slots.iter().enumerate().take(stride) {
+            if let PagedSlot::Resident(g) = slot {
+                t[j] = *g as i32;
+            }
+        }
+        t
+    }
+
+    /// How many of `active` hold device-resident KV state right now (a
+    /// contiguous set, or >= 1 resident block) — the density the paged
+    /// high-water mark tracks.
+    fn count_resident(active: &[SessionState]) -> usize {
+        active
+            .iter()
+            .filter(|s| {
+                s.kv.is_device()
+                    || s.kv.as_paged().map_or(false, |p| p.resident_groups() > 0)
+            })
+            .count()
+    }
+
+    /// The per-block pager (Phase A of every paged encode path): runs
+    /// BEFORE a chunk packs its inputs and guarantees that every block a
+    /// member's replay will touch — all blocks covering rows
+    /// `[0, rows_end)` — is resident in the shared pool planes. Under
+    /// pressure it pages the coldest non-member blocks out to host (LRU
+    /// by pager stamp, ties by session id then LOWEST block index, so
+    /// cold prompt-prefix blocks park before hot tails), honoring the
+    /// logical group budget when candidates exist and physical capacity
+    /// always. ONE coalesced readback covers all of a pass's page-outs.
+    ///
+    /// `sessions` is the victim universe as well as the member store:
+    /// round paths pass the whole active set; the detached single-session
+    /// path passes just that session (it can only evict itself).
+    fn ensure_resident(
+        executor: &mut GraphExecutor<'r>,
+        sessions: &mut [SessionState],
+        dims: &GraphDims,
+        members: &[(usize, usize)],
+        pager_clock: &mut u64,
+    ) -> Result<()> {
+        let Some(pool) = executor.paged_pool() else {
+            return Err(Error::Internal("paged session without a paged pool".into()));
+        };
+        let b = pool.kv_block;
+        let capacity = pool.arena.capacity();
+        let budget = pool.arena.budget_groups();
+        let live = pool.arena.live_groups();
+        *pager_clock += 1;
+        let stamp = *pager_clock;
+
+        // Member needs: promote spilled members to the paged
+        // representation, stamp them hot, count the groups to grant.
+        let mut needed = 0usize;
+        for &(i, rows_end) in members {
+            let s = &mut sessions[i];
+            Self::promote_to_paged(s, dims, b)?;
+            let pk = s.kv.as_paged_mut().ok_or_else(|| {
+                Error::Internal(format!("session {} failed paged promotion", s.id))
+            })?;
+            pk.last_touch = stamp;
+            let nb = Self::blocks_for(rows_end, b);
+            for j in 0..nb {
+                match pk.slots.get(j) {
+                    Some(PagedSlot::Resident(_)) => {}
+                    _ => needed += 1,
+                }
+            }
+            s.metrics.kv_blocks_hw = s.metrics.kv_blocks_hw.max(nb as u64);
+        }
+
+        // Eviction target: enough to fit physically (hard), plus enough
+        // to respect the logical budget (soft — if every resident block
+        // belongs to this chunk's members, we run over budget rather
+        // than evict what the replay is about to touch).
+        let phys_short = needed.saturating_sub(capacity - live);
+        let over_budget = (live + needed).saturating_sub(budget);
+        let want_evict = phys_short.max(over_budget);
+        if want_evict > 0 {
+            // Candidates: every resident block EXCEPT the members' needed
+            // prefixes (blocks beyond a member's rows_end are evictable —
+            // conservative speculative over-allocation from earlier
+            // rounds can be reclaimed).
+            let mut cands: Vec<(u64, u64, usize, usize, u32)> = Vec::new();
+            for (i, s) in sessions.iter().enumerate() {
+                let Some(pk) = s.kv.as_paged() else { continue };
+                let prot = members
+                    .iter()
+                    .find(|&&(m, _)| m == i)
+                    .map(|&(_, rows_end)| Self::blocks_for(rows_end, b))
+                    .unwrap_or(0);
+                for (j, slot) in pk.slots.iter().enumerate() {
+                    if j < prot {
+                        continue;
+                    }
+                    if let PagedSlot::Resident(g) = slot {
+                        cands.push((pk.last_touch, s.id, j, i, *g));
+                    }
+                }
+            }
+            cands.sort_unstable();
+            cands.truncate(want_evict);
+            if cands.len() < phys_short {
+                return Err(Error::LimitExceeded(format!(
+                    "paged KV pool cannot fit this round: {needed} blocks needed, \
+                     {} free, {} evictable",
+                    capacity - live,
+                    cands.len()
+                )));
+            }
+            // ONE coalesced readback for the whole pass's page-outs. An
+            // empty victim list (everything resident belongs to this
+            // chunk) means the budget is soft-exceeded: proceed.
+            let groups: Vec<u32> = cands.iter().map(|&(.., g)| g).collect();
+            let images = if groups.is_empty() {
+                Vec::new()
+            } else {
+                executor.read_paged_groups(&groups)?
+            };
+            for (&(_, _, j, i, g), img) in cands.iter().zip(images) {
+                let s = &mut sessions[i];
+                let pk = s.kv.as_paged_mut().ok_or_else(|| {
+                    Error::Internal("pager victim lost its paged state".into())
+                })?;
+                pk.slots[j] = PagedSlot::Host(img);
+                s.metrics.kv_blocks_spilled_hw =
+                    s.metrics.kv_blocks_spilled_hw.max(pk.spilled_groups() as u64);
+                let pool = executor.paged_pool_mut().ok_or_else(|| {
+                    Error::Internal("paged pool vanished mid-pass".into())
+                })?;
+                pool.arena.free_group(g);
+                pool.arena.note_page_out();
+            }
+        }
+
+        // Grant + hydrate the members' missing blocks, in block order.
+        for &(i, rows_end) in members {
+            let nb = Self::blocks_for(rows_end, b);
+            for j in 0..nb {
+                let hydrate = match sessions[i].kv.as_paged().and_then(|pk| pk.slots.get(j))
+                {
+                    Some(PagedSlot::Resident(_)) => continue,
+                    Some(PagedSlot::Host(_)) => true,
+                    None => false,
+                };
+                let g = executor
+                    .paged_pool_mut()
+                    .ok_or_else(|| Error::Internal("paged pool vanished mid-pass".into()))?
+                    .arena
+                    .alloc()?;
+                let pk = sessions[i].kv.as_paged_mut().ok_or_else(|| {
+                    Error::Internal("pager member lost its paged state".into())
+                })?;
+                if hydrate {
+                    let PagedSlot::Host(bytes) =
+                        std::mem::replace(&mut pk.slots[j], PagedSlot::Resident(g))
+                    else {
+                        return Err(Error::Internal(
+                            "paged slot changed kind mid-hydration".into(),
+                        ));
+                    };
+                    if let Err(e) = executor.write_paged_group(g, &bytes) {
+                        // Roll the slot back so a transient upload fault
+                        // quarantines with the context intact on host.
+                        let pk = sessions[i].kv.as_paged_mut().ok_or_else(|| {
+                            Error::Internal("pager member lost its paged state".into())
+                        })?;
+                        pk.slots[j] = PagedSlot::Host(bytes);
+                        if let Some(pool) = executor.paged_pool_mut() {
+                            pool.arena.free_group(g);
+                        }
+                        return Err(e);
+                    }
+                    let pool = executor.paged_pool_mut().ok_or_else(|| {
+                        Error::Internal("paged pool vanished mid-pass".into())
+                    })?;
+                    pool.arena.note_page_in();
+                } else {
+                    // Fresh block: the replay's cache_update scatter writes
+                    // it; no upload. Slots grow densely from the left.
+                    debug_assert_eq!(j, pk.slots.len());
+                    pk.slots.push(PagedSlot::Resident(g));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the pager for a round chunk's members (`(active index,
+    /// rows_end)` pairs) and attribute its traffic — page-out readbacks,
+    /// page-in uploads, timeline deltas — evenly across those members
+    /// (remainder to the first), mirroring the chunk-cost split: victims
+    /// pay nothing, because their parking is the members' pressure. Also
+    /// advances the resident-density high-water mark. No-op in
+    /// contiguous mode.
+    fn pager_pass(&mut self, members: &[(usize, usize)]) -> Result<()> {
+        if self.kv_block == 0 || members.is_empty() {
+            return Ok(());
+        }
+        let ph0 = self.executor.device.timeline.virtual_ns;
+        let k0 = self.executor.device.timeline.kernel_virtual_ns;
+        let sy0 = self.executor.device.timeline.sync_virtual_ns;
+        let fw0 = self.executor.framework_virtual_ns;
+        let w0 = self.executor.device.stats.bytes_written;
+        let c0 = self.executor.device.clock.now_ns();
+        {
+            let ServingEngine { executor, active, dims, pager_clock, .. } = &mut *self;
+            Self::ensure_resident(executor, active, dims, members, pager_clock)?;
+        }
+        let tl = self.executor.device.timeline.virtual_ns;
+        let kernel_d = self.executor.device.timeline.kernel_virtual_ns - k0;
+        let sync_d = self.executor.device.timeline.sync_virtual_ns - sy0;
+        let fw_d = self.executor.framework_virtual_ns - fw0;
+        let upload_d = self.executor.device.stats.bytes_written - w0;
+        let encode_d = self.executor.device.clock.now_ns() - c0;
+        let k = members.len() as u64;
+        for (j, &(i, _)) in members.iter().enumerate() {
+            let s = &mut self.active[i];
+            for p in 0..8 {
+                s.metrics.phase_virtual_ns[p] += share(tl[p] - ph0[p], k, j);
+            }
+            s.metrics.kernel_virtual_ns += share(kernel_d, k, j);
+            s.metrics.sync_virtual_ns += share(sync_d, k, j);
+            s.metrics.framework_virtual_ns += share(fw_d, k, j);
+            s.metrics.upload_bytes += share(upload_d, k, j);
+            s.metrics.encode_virtual_ns += share(encode_d, k, j);
+        }
+        let resident = Self::count_resident(&self.active);
+        self.resident_sessions_hw = self.resident_sessions_hw.max(resident);
+        Ok(())
+    }
+
+    /// Insert the per-replay paged step inputs — this session's block
+    /// table (fixed `paged_table_len` stride) and the `kv_block` uniform —
+    /// when the executor runs paged. No-op otherwise.
+    fn insert_paged_inputs(
+        executor: &GraphExecutor<'r>,
+        dims: &GraphDims,
+        s: &SessionState,
+        inputs: &mut HashMap<String, Tensor>,
+    ) -> Result<()> {
+        let Some(pool) = executor.paged_pool() else {
+            return Ok(());
+        };
+        let stride = paged_table_len(dims);
+        let pk = s.kv.as_paged().ok_or_else(|| {
+            Error::Internal(format!(
+                "paged mode: session {} is not block-backed at encode",
+                s.id
+            ))
+        })?;
+        inputs.insert(
+            "block_table".into(),
+            Tensor::i32(vec![stride], Self::table_entries(pk, stride))?,
+        );
+        inputs.insert("kv_block".into(), Tensor::scalar_i32(pool.kv_block as i32));
         Ok(())
     }
 
@@ -694,6 +1124,7 @@ impl<'r> ServingEngine<'r> {
         inputs.insert("pos_ip1".into(), Tensor::scalar_i32(s.pos as i32 + 1));
         inputs.insert("pos_f".into(), Tensor::scalar_f32(s.pos as f32));
         inputs.insert("inv_freq".into(), weights.inv_freq.clone());
+        Self::insert_paged_inputs(executor, dims, s, &mut inputs)?;
         if !planned {
             // Lazily materialize zeroed host caches on the first eager
             // encode (sessions are born with the empty placeholder so
@@ -729,6 +1160,9 @@ impl<'r> ServingEngine<'r> {
             // K/V appends happened on-device (in-place cache_update): the
             // session's cache set already holds the next step's state.
             s.pos += 1;
+            // Rows written high-water: the paged spill reconstructs rows
+            // >= this mark as zeros (matching contiguous zeroed-at-alloc).
+            s.kv_hw = s.kv_hw.max(s.pos);
         } else {
             // Update this session's host caches for its next step.
             let host = s.kv.as_host_mut().ok_or_else(|| {
@@ -963,7 +1397,7 @@ impl<'r> ServingEngine<'r> {
         if !e.is_transient() {
             return Err(e);
         }
-        let ServingEngine { executor, active, retries, .. } = &mut *self;
+        let ServingEngine { executor, active, dims, retries, .. } = &mut *self;
         *retries += 1;
         for &(i, snap) in snaps {
             let s = &mut active[i];
@@ -972,7 +1406,7 @@ impl<'r> ServingEngine<'r> {
             // store — the session resumes from recycled pool buffers via
             // the ordinary promote/hydrate path. A fatal error during the
             // spill itself propagates.
-            Self::evict_kv_to_host(executor, s, retries)?;
+            Self::evict_kv_to_host(executor, dims, s, retries)?;
             s.retries += 1;
             s.total_retries += 1;
             s.cooldown = (s.retries - 1).min(MAX_COOLDOWN);
@@ -1021,20 +1455,22 @@ impl<'r> ServingEngine<'r> {
             // every logits row survives until the coalesced readback below.
             let ring = self.next_ring();
             let snap = self.active[i].snapshot();
-            let res = {
-                let ServingEngine { executor, graph, dims, weights, active, .. } =
-                    &mut *self;
-                let s = &mut active[i];
-                match s.take_input() {
-                    Some((token, was_prompt)) => Self::encode_inner(
-                        executor, graph, dims, weights, s, token, was_prompt, ring,
-                    ),
-                    None => Err(Error::Internal(format!(
-                        "session {} has no input token",
-                        s.id
-                    ))),
-                }
-            };
+            let res = self
+                .pager_pass(&[(i, (self.active[i].pos + 1).min(self.dims.max_seq))])
+                .and_then(|()| {
+                    let ServingEngine { executor, graph, dims, weights, active, .. } =
+                        &mut *self;
+                    let s = &mut active[i];
+                    match s.take_input() {
+                        Some((token, was_prompt)) => Self::encode_inner(
+                            executor, graph, dims, weights, s, token, was_prompt, ring,
+                        ),
+                        None => Err(Error::Internal(format!(
+                            "session {} has no input token",
+                            s.id
+                        ))),
+                    }
+                });
             match res {
                 Ok(h) => handles.push((i, h)),
                 Err(e) => self.quarantine(&[(i, snap)], e)?,
@@ -1208,6 +1644,14 @@ impl<'r> ServingEngine<'r> {
         let chunk = self.prefill_chunk;
         let (hidden, max_seq) = (self.dims.hidden, self.dims.max_seq);
 
+        // Paged pre-pass: make every block this chunk's scatter touches
+        // resident before anything packs.
+        {
+            let s = &self.active[i];
+            let rows_end = (s.pos + s.peek_prompt_chunk(chunk).len()).min(max_seq);
+            self.pager_pass(&[(i, rows_end)])?;
+        }
+
         // Upload accounting starts BEFORE promotion so a resumed
         // session's cache re-hydration is charged to it (same convention
         // as the decode paths).
@@ -1289,6 +1733,7 @@ impl<'r> ServingEngine<'r> {
         s.metrics.prefill_steps += take as u64;
         // The on-device scatter already wrote this chunk's K/V rows.
         s.pos += take;
+        s.kv_hw = s.kv_hw.max(s.pos);
         let final_chunk = !s.in_prefill();
         if final_chunk {
             s.metrics.prefill_end_ns = now;
@@ -1306,6 +1751,7 @@ impl<'r> ServingEngine<'r> {
     /// One planned single-session decode encode (a mixed round's decode
     /// side when the batched path does not apply), as a round chunk.
     fn encode_decode_step(&mut self, i: usize) -> Result<EncodedChunk> {
+        self.pager_pass(&[(i, (self.active[i].pos + 1).min(self.dims.max_seq))])?;
         let ring = self.next_ring();
         let h = {
             let ServingEngine { executor, graph, dims, weights, active, .. } = &mut *self;
@@ -1374,6 +1820,13 @@ impl<'r> ServingEngine<'r> {
     ) -> Result<EncodedChunk> {
         let width = self.batch_width;
         let (hidden, max_seq) = (self.dims.hidden, self.dims.max_seq);
+        // Paged pre-pass: one residency pass covers the whole chunk (its
+        // page traffic splits across exactly these members).
+        let needs: Vec<(usize, usize)> = members
+            .iter()
+            .map(|&(_, i)| (i, (self.active[i].pos + 1).min(max_seq)))
+            .collect();
+        self.pager_pass(&needs)?;
         // ---- pack: residency, input tokens, per-slot uniforms ----
         let mut xbuf = vec![0f32; width * hidden];
         let mut pos_i = vec![0i32; width];
@@ -1413,8 +1866,28 @@ impl<'r> ServingEngine<'r> {
         inputs.insert("pos_ip1".into(), Tensor::i32(vec![width], pos_ip1)?);
         inputs.insert("pos_f".into(), Tensor::f32(vec![width], pos_f)?);
         inputs.insert("slot_mask".into(), Tensor::i32(vec![width], mask)?);
-        inputs.insert("slot_idx".into(), Tensor::i32(vec![width], slot_idx)?);
         inputs.insert("inv_freq".into(), self.weights.inv_freq.clone());
+        if let Some(pool) = self.executor.paged_pool() {
+            // Paged: per-row block tables replace slot-indexed cache sets
+            // (the plan binds the shared pool planes; `slot_idx` is not a
+            // declared input of the paged batched graph).
+            let stride = paged_table_len(&self.dims);
+            let mut tbl = vec![-1i32; width * stride];
+            for &(row, i) in members {
+                let pk = self.active[i].kv.as_paged().ok_or_else(|| {
+                    Error::Internal(format!(
+                        "paged mode: session {} is not block-backed at encode",
+                        self.active[i].id
+                    ))
+                })?;
+                tbl[row * stride..(row + 1) * stride]
+                    .copy_from_slice(&Self::table_entries(pk, stride));
+            }
+            inputs.insert("block_table".into(), Tensor::i32(vec![width * stride], tbl)?);
+            inputs.insert("kv_block".into(), Tensor::scalar_i32(pool.kv_block as i32));
+        } else {
+            inputs.insert("slot_idx".into(), Tensor::i32(vec![width], slot_idx)?);
+        }
 
         // ---- one replay per chunk, shared-cost snapshots around it ----
         let ph0 = self.executor.device.timeline.virtual_ns;
@@ -1428,10 +1901,17 @@ impl<'r> ServingEngine<'r> {
             let graph = batched_graph
                 .as_ref()
                 .ok_or_else(|| Error::Internal("batched plan missing".into()))?;
-            let mut table: Vec<Option<&DeviceKvCache>> = vec![None; width];
-            for &(row, i) in members {
-                table[row] = active[i].kv.as_device();
-            }
+            // Paged chunks bind the shared pool planes (the uploaded
+            // block tables do the routing) — the cache-set table is empty.
+            let table: Vec<Option<&DeviceKvCache>> = if executor.paged_enabled() {
+                Vec::new()
+            } else {
+                let mut t: Vec<Option<&DeviceKvCache>> = vec![None; width];
+                for &(row, i) in members {
+                    t[row] = active[i].kv.as_device();
+                }
+                t
+            };
             let (_outs, logits_buf, _delta) =
                 executor.run_batched(graph, &inputs, chunk_no, &table)?;
             logits_buf
@@ -1468,6 +1948,7 @@ impl<'r> ServingEngine<'r> {
             }
             // The on-device scatter already appended this step's K/V.
             s.pos += 1;
+            s.kv_hw = s.kv_hw.max(s.pos);
         }
 
         Ok(EncodedChunk {
@@ -1590,6 +2071,30 @@ impl<'r> ServingEngine<'r> {
         let rows = width * chunk;
         let speculate = self.speculate;
         let (hidden, max_seq) = (self.dims.hidden, self.dims.max_seq);
+        // Paged pre-pass: each member's upper row bound mirrors the pack
+        // below — a prompt chunk's take, a verify slot's worst-case
+        // `1 + k` draft rows (the n-gram draft may come up shorter; the
+        // extra block, if any, is evictable next round), a decode row.
+        let needs: Vec<(usize, usize)> = members
+            .iter()
+            .map(|&(_, i)| {
+                let s = &self.active[i];
+                let rows_end = if s.in_prefill() {
+                    s.pos + s.peek_prompt_chunk(chunk).len()
+                } else if speculate >= 1 {
+                    let remaining = s.n_new.saturating_sub(s.tokens.len());
+                    s.pos
+                        + 1
+                        + speculate
+                            .min(remaining.saturating_sub(1))
+                            .min(max_seq.saturating_sub(s.pos + 1))
+                } else {
+                    s.pos + 1
+                };
+                (i, rows_end.min(max_seq))
+            })
+            .collect();
+        self.pager_pass(&needs)?;
         {
             // ---- pack: residency, prompt chunks / decode tokens,
             // per-slot uniforms ----
@@ -1602,6 +2107,9 @@ impl<'r> ServingEngine<'r> {
             // Tokens each member advanced, whether they were prompt rows,
             // and whether a prompt member consumed its FINAL token.
             let mut taken = vec![0usize; width];
+            // Rows the replay's scatter will have written per slot
+            // (`pos_base + valid_len`) — the kv_hw commit below.
+            let mut rows_written = vec![0usize; width];
             let mut was_prefill = vec![false; width];
             let mut final_prefill = vec![false; width];
             // Deferred accept/rollback state for speculative verify rows
@@ -1636,6 +2144,7 @@ impl<'r> ServingEngine<'r> {
                         mask[row] = 1;
                         s.consume_prompt(take);
                         taken[row] = take;
+                        rows_written[row] = s.pos + take;
                         was_prefill[row] = true;
                         final_prefill[row] = !s.in_prefill();
                     } else {
@@ -1676,6 +2185,7 @@ impl<'r> ServingEngine<'r> {
                             pos_base[row] = s.pos as i32;
                             valid_len[row] = (1 + drafted.len()) as i32;
                             mask[row] = 1;
+                            rows_written[row] = s.pos + 1 + drafted.len();
                             spec_state[row] = Some(SpecOwner { drafted, pos0: s.pos });
                         } else {
                             let emb = hostops::embed(&weights.embedding, token)?;
@@ -1686,6 +2196,7 @@ impl<'r> ServingEngine<'r> {
                             valid_len[row] = 1;
                             mask[row] = 1;
                             taken[row] = 1;
+                            rows_written[row] = s.pos + 1;
                         }
                     }
                 }
@@ -1696,8 +2207,29 @@ impl<'r> ServingEngine<'r> {
             inputs.insert("pos_base".into(), Tensor::i32(vec![width], pos_base)?);
             inputs.insert("valid_len".into(), Tensor::i32(vec![width], valid_len)?);
             inputs.insert("slot_mask".into(), Tensor::i32(vec![width], mask)?);
-            inputs.insert("slot_idx".into(), Tensor::i32(vec![width], slot_idx)?);
             inputs.insert("inv_freq".into(), self.weights.inv_freq.clone());
+            if let Some(pool) = self.executor.paged_pool() {
+                // Paged: per-slot block tables replace slot-indexed cache
+                // sets (`slot_idx` is not a declared input of the paged
+                // unified graph).
+                let stride = paged_table_len(&self.dims);
+                let mut tbl = vec![-1i32; width * stride];
+                for &(row, i) in members {
+                    let pk = self.active[i].kv.as_paged().ok_or_else(|| {
+                        Error::Internal(format!(
+                            "paged mode: session {} is not block-backed at encode",
+                            self.active[i].id
+                        ))
+                    })?;
+                    tbl[row * stride..(row + 1) * stride]
+                        .copy_from_slice(&Self::table_entries(pk, stride));
+                }
+                inputs
+                    .insert("block_table".into(), Tensor::i32(vec![width * stride], tbl)?);
+                inputs.insert("kv_block".into(), Tensor::scalar_i32(pool.kv_block as i32));
+            } else {
+                inputs.insert("slot_idx".into(), Tensor::i32(vec![width], slot_idx)?);
+            }
 
             // ---- one replay per chunk-of-slots, shared-cost snapshots ----
             let ph0 = self.executor.device.timeline.virtual_ns;
@@ -1711,10 +2243,17 @@ impl<'r> ServingEngine<'r> {
                 let graph = unified_graph
                     .as_ref()
                     .ok_or_else(|| Error::Internal("unified plan missing".into()))?;
-                let mut table: Vec<Option<&DeviceKvCache>> = vec![None; width];
-                for &(row, i) in members {
-                    table[row] = active[i].kv.as_device();
-                }
+                // Paged chunks bind the shared pool planes; the uploaded
+                // block tables do the routing.
+                let table: Vec<Option<&DeviceKvCache>> = if executor.paged_enabled() {
+                    Vec::new()
+                } else {
+                    let mut t: Vec<Option<&DeviceKvCache>> = vec![None; width];
+                    for &(row, i) in members {
+                        t[row] = active[i].kv.as_device();
+                    }
+                    t
+                };
                 let (_outs, logits_buf, _delta) =
                     executor.run_unified(graph, &inputs, chunk_no, &table)?;
                 logits_buf
@@ -1753,6 +2292,12 @@ impl<'r> ServingEngine<'r> {
                 }
                 // The on-device scatter already wrote this member's rows.
                 s.pos += taken[row];
+                // All valid rows were scattered — including draft rows a
+                // later accept/rollback may rewind past. kv_hw tracks
+                // WRITTEN rows, which rewinds never un-write (the unpaged
+                // arm's contiguous buffer keeps those bytes too, so the
+                // paged spill must preserve them for byte-identity).
+                s.kv_hw = s.kv_hw.max(rows_written[row]);
             }
 
             // Readback membership: decode steps and FINAL prompt chunks
@@ -1893,6 +2438,12 @@ impl<'r> ServingEngine<'r> {
     /// groups and the batched cache-set-TABLE bind groups cache-hot when
     /// a whole round retires together.
     fn retire_finished(&mut self) -> Result<usize> {
+        // Density high-water BEFORE anything retires: every round ends
+        // here (including all-cooldown rounds), so the mark sees each
+        // round's full co-resident set — the >= 4x density the paged
+        // gate asserts on against the contiguous arm.
+        let resident = Self::count_resident(&self.active);
+        self.resident_sessions_hw = self.resident_sessions_hw.max(resident);
         let n = self.active.len();
         let mut done: Vec<SessionState> = Vec::new();
         let mut i = 0;
@@ -1915,13 +2466,30 @@ impl<'r> ServingEngine<'r> {
         Ok(n)
     }
 
-    /// Return a session's device-resident cache set (if any) to the shared
-    /// pool. The session keeps its token history; its KV state is gone.
+    /// Return a session's device-resident KV state — a contiguous cache
+    /// set, or its granted block groups — to the shared pool/arena. The
+    /// session keeps its token history; its KV state is gone. Discards are
+    /// not page-outs: nothing crosses back to host.
     pub fn release_session_cache(&mut self, s: &mut SessionState) -> Result<()> {
-        if let KvCache::Device(cache) =
-            std::mem::replace(&mut s.kv, KvCache::Host(Vec::new()))
-        {
-            self.executor.release_kv_cache(cache)?;
+        match std::mem::replace(&mut s.kv, KvCache::Host(Vec::new())) {
+            KvCache::Device(cache) => self.executor.release_kv_cache(cache)?,
+            KvCache::Paged(pk) => Self::free_paged_groups(&mut self.executor, pk)?,
+            KvCache::Host(_) => {}
+        }
+        Ok(())
+    }
+
+    /// Return every granted block group of a dropped paged session to the
+    /// arena, silently (no page-out notes — the data is discarded, not
+    /// parked).
+    fn free_paged_groups(executor: &mut GraphExecutor<'r>, pk: PagedKv) -> Result<()> {
+        let pool = executor.paged_pool_mut().ok_or_else(|| {
+            Error::Internal("paged session without a paged pool".into())
+        })?;
+        for slot in pk.slots {
+            if let PagedSlot::Resident(g) = slot {
+                pool.arena.free_group(g);
+            }
         }
         Ok(())
     }
@@ -1934,8 +2502,10 @@ impl<'r> ServingEngine<'r> {
     /// [`SessionState::reset_host`] — host state alone is not enough once
     /// caches live on the device.
     pub fn reset_session(&mut self, s: &mut SessionState) -> Result<()> {
-        if let Some(cache) = s.reset_host() {
-            self.executor.release_kv_cache(cache)?;
+        match s.reset_host() {
+            KvCache::Device(cache) => self.executor.release_kv_cache(cache)?,
+            KvCache::Paged(pk) => Self::free_paged_groups(&mut self.executor, pk)?,
+            KvCache::Host(_) => {}
         }
         Ok(())
     }
@@ -1946,8 +2516,8 @@ impl<'r> ServingEngine<'r> {
     /// re-allocates and re-hydrates. Lets a server park cold sessions
     /// without losing their context. No-op for host-resident sessions.
     pub fn evict_session_cache(&mut self, s: &mut SessionState) -> Result<()> {
-        let ServingEngine { executor, retries, .. } = self;
-        Self::evict_kv_to_host(executor, s, retries)
+        let ServingEngine { executor, dims, retries, .. } = self;
+        Self::evict_kv_to_host(executor, dims, s, retries)
     }
 
     /// The spill body behind [`Self::evict_session_cache`], borrow-split so
@@ -1957,9 +2527,13 @@ impl<'r> ServingEngine<'r> {
     /// a run-fatal one.
     fn evict_kv_to_host(
         executor: &mut GraphExecutor<'r>,
+        dims: &GraphDims,
         s: &mut SessionState,
         retries: &mut u64,
     ) -> Result<()> {
+        if s.kv.is_paged() {
+            return Self::evict_paged_to_host(executor, dims, s, retries);
+        }
         // Spill FIRST, while the session still owns its set: a failed
         // readback leaves the session device-resident and fully usable,
         // leaking nothing.
@@ -1995,6 +2569,110 @@ impl<'r> ServingEngine<'r> {
         }
         s.kv = KvCache::Host(host);
         executor.release_kv_cache(cache)
+    }
+
+    /// The paged spill body: reconstruct the session's contiguous host
+    /// tensors from its block images (one coalesced readback for all its
+    /// resident groups, host slots copied in place), zero-filling rows
+    /// `>= kv_hw` — bit-for-bit what the contiguous arm's zeroed-at-alloc
+    /// tail holds — then free every granted group back to the arena. The
+    /// session resumes via the ordinary pager promote path.
+    fn evict_paged_to_host(
+        executor: &mut GraphExecutor<'r>,
+        dims: &GraphDims,
+        s: &mut SessionState,
+        retries: &mut u64,
+    ) -> Result<()> {
+        let Some(pool) = executor.paged_pool() else {
+            return Err(Error::Internal("paged session without a paged pool".into()));
+        };
+        let b = pool.kv_block;
+        let slice = pool.plane_slice_bytes;
+        let row_bytes = slice / b;
+        let planes = 2 * dims.layers;
+        let hw = s.kv_hw;
+        let pk_ref = s.kv.as_paged().ok_or_else(|| {
+            Error::Internal("paged session lost its block state mid-spill".into())
+        })?;
+        // Blocks that hold real rows; anything past them (conservative
+        // speculative over-allocation) is freed unread below.
+        let nb = Self::blocks_for(hw, b).min(pk_ref.slots.len());
+        let resident: Vec<(usize, u32)> = pk_ref.slots[..nb]
+            .iter()
+            .enumerate()
+            .filter_map(|(j, slot)| match slot {
+                PagedSlot::Resident(g) => Some((j, *g)),
+                _ => None,
+            })
+            .collect();
+        // Read FIRST, while the session still owns its groups: a failed
+        // readback leaves it block-resident and fully usable. Same
+        // bounded transient-retry loop as the contiguous spill.
+        let groups: Vec<u32> = resident.iter().map(|&(_, g)| g).collect();
+        let images = if groups.is_empty() {
+            Vec::new()
+        } else {
+            let mut attempt = 0u32;
+            loop {
+                match executor.read_paged_groups(&groups) {
+                    Ok(v) => break v,
+                    Err(e) if e.is_transient() && attempt < MAX_MAP_RETRIES => {
+                        attempt += 1;
+                        *retries += 1;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        };
+        let mut plane_bytes: Vec<Vec<u8>> =
+            (0..planes).map(|_| vec![0u8; dims.max_seq * row_bytes]).collect();
+        let mut fill = |j: usize, img: &[u8], planes_out: &mut [Vec<u8>]| {
+            let keep = (hw.min((j + 1) * b).saturating_sub(j * b)) * row_bytes;
+            for (p, plane) in planes_out.iter_mut().enumerate() {
+                let at = j * b * row_bytes;
+                plane[at..at + keep].copy_from_slice(&img[p * slice..p * slice + keep]);
+            }
+        };
+        for (&(j, _), img) in resident.iter().zip(&images) {
+            fill(j, img, &mut plane_bytes);
+        }
+        for (j, slot) in pk_ref.slots[..nb].iter().enumerate() {
+            if let PagedSlot::Host(bytes) = slot {
+                fill(j, bytes, &mut plane_bytes);
+            }
+        }
+        // Re-pair planes per layer in spec order [l0.k, l0.v, ...]; the
+        // session becomes host-resident BEFORE the groups are freed, so
+        // an arena inconsistency cannot strand its context.
+        let shape = vec![dims.max_seq, dims.kv_heads, dims.head_dim];
+        let mut host = Vec::with_capacity(dims.layers);
+        let mut it = plane_bytes.into_iter();
+        while let (Some(kb), Some(vb)) = (it.next(), it.next()) {
+            host.push((
+                Tensor::from_le_bytes(shape.clone(), DType::F32, &kb)?,
+                Tensor::from_le_bytes(shape.clone(), DType::F32, &vb)?,
+            ));
+        }
+        let KvCache::Paged(pk) = std::mem::replace(&mut s.kv, KvCache::Host(host)) else {
+            return Err(Error::Internal(
+                "paged session lost its block state between read and free".into(),
+            ));
+        };
+        let pool = executor.paged_pool_mut().ok_or_else(|| {
+            Error::Internal("paged pool vanished mid-spill".into())
+        })?;
+        for (j, slot) in pk.slots.into_iter().enumerate() {
+            if let PagedSlot::Resident(g) = slot {
+                pool.arena.free_group(g);
+                if j < nb {
+                    // Data-bearing blocks leaving the device are
+                    // page-outs; never-written grants return silently.
+                    pool.arena.note_page_out();
+                }
+            }
+        }
+        s.metrics.kv_blocks_spilled_hw = s.metrics.kv_blocks_spilled_hw.max(nb as u64);
+        Ok(())
     }
 
     /// Drive every queued + active session to completion; report aggregates
@@ -2048,6 +2726,16 @@ impl<'r> ServingEngine<'r> {
         report.pool_high_water_bytes = ps.high_water_bytes as u64;
         report.pool_buffers_created = ps.created;
         report.pool_evictions = ps.evictions;
+        // Paged-residency ledger (zeroes in contiguous mode).
+        if let Some(pool) = self.executor.paged_pool() {
+            let st = pool.arena.stats();
+            report.kv_block = self.kv_block;
+            report.kv_group_bytes = pool.arena.group_bytes() as u64;
+            report.kv_pool_high_water_groups = st.high_water_groups as u64;
+            report.kv_page_ins = st.page_ins;
+            report.kv_page_outs = st.page_outs;
+        }
+        report.resident_sessions_hw = self.resident_sessions_hw as u64;
         // Fault/recovery ledger (zeroes when no injector is installed).
         report.faults_injected = self.executor.device.faults_injected();
         report.retries = self.retries;

@@ -108,6 +108,25 @@ pub struct ServeReport {
     /// Seed of the installed fault plan (`None` = no injection) — makes
     /// every faulted run reproducible from its report header.
     pub fault_seed: Option<u64>,
+    /// Paged KV block size in tokens (0 = contiguous per-session cache
+    /// sets — the pre-paging layout).
+    pub kv_block: usize,
+    /// Device bytes of ONE block group (all 2xlayers plane slices; 0 in
+    /// contiguous mode).
+    pub kv_group_bytes: u64,
+    /// Peak simultaneously-granted block groups in the shared pool.
+    pub kv_pool_high_water_groups: u64,
+    /// Host->device block hydrations the pager performed.
+    pub kv_page_ins: u64,
+    /// Device->host block spills (LRU page-outs + quarantine evictions).
+    pub kv_page_outs: u64,
+    /// Summed per-session high-water block-table lengths.
+    pub kv_blocks_hw: u64,
+    /// Summed per-session high-water spilled-block counts.
+    pub kv_blocks_spilled_hw: u64,
+    /// High-water mark of simultaneously KV-resident sessions — the
+    /// density metric paged residency exists to raise at equal pool cap.
+    pub resident_sessions_hw: u64,
 }
 
 impl ServeReport {
@@ -128,6 +147,8 @@ impl ServeReport {
         let mut first_decode_ms_sum = 0f64;
         let mut drafted = 0u64;
         let mut accepted = 0u64;
+        let mut kv_blocks_hw = 0u64;
+        let mut kv_blocks_spilled_hw = 0u64;
         let mut ttft_ms = Vec::with_capacity(n);
         let mut tps_sum = 0f64;
         for s in sessions {
@@ -145,6 +166,8 @@ impl ServeReport {
             prefill_dispatches += s.metrics.prefill_dispatches;
             drafted += s.metrics.drafted;
             accepted += s.metrics.accepted;
+            kv_blocks_hw += s.metrics.kv_blocks_hw;
+            kv_blocks_spilled_hw += s.metrics.kv_blocks_spilled_hw;
             prefill_ms_sum += s.metrics.prefill_ns() as f64 / 1e6;
             first_decode_ms_sum += s.metrics.first_decode_ns() as f64 / 1e6;
             ttft_ms.push(s.metrics.ttft_ns() as f64 / 1e6);
@@ -197,6 +220,14 @@ impl ServeReport {
             recovered_sessions: 0,
             failed_sessions: 0,
             fault_seed: None,
+            kv_block: 0,
+            kv_group_bytes: 0,
+            kv_pool_high_water_groups: 0,
+            kv_page_ins: 0,
+            kv_page_outs: 0,
+            kv_blocks_hw,
+            kv_blocks_spilled_hw,
+            resident_sessions_hw: 0,
         }
     }
 
@@ -232,6 +263,11 @@ impl ServeReport {
     /// seq-x-batch plan — so it labels as `+unified(w=W,c=C)` instead.
     pub fn mode_label(&self) -> String {
         let mut label = self.exec_mode().to_string();
+        if self.kv_block > 0 {
+            // The KV layout qualifies the exec mode itself (every plan of
+            // the run was built with block-table indirection).
+            label.push_str(&format!("+paged(b={})", self.kv_block));
+        }
         if self.unified && self.batch_width >= 2 && self.prefill_chunk >= 2 {
             label.push_str(&format!(
                 "+unified(w={},c={})",
@@ -281,6 +317,20 @@ impl ServeReport {
         self.total_tokens as f64 / self.rounds.max(1) as f64
     }
 
+    /// Peak device KV bytes per ACTUAL stored token row — the internal-
+    /// fragmentation headline. Contiguous sets pay `max_seq` rows per
+    /// resident session regardless of occupancy; paged residency pays at
+    /// most one ragged tail block per session. `steps` (prompt + generated
+    /// tokens) is the run's stored-row count.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        let peak = if self.kv_block > 0 {
+            self.kv_pool_high_water_groups * self.kv_group_bytes
+        } else {
+            self.resident_sessions_hw * self.resident_bytes
+        };
+        peak as f64 / self.steps.max(1) as f64
+    }
+
     /// Fraction of drafted tokens the verify rounds accepted (0.0 when
     /// nothing was drafted).
     pub fn acceptance_rate(&self) -> f64 {
@@ -318,6 +368,10 @@ mod tests {
         // Unified subsumes the batched + prefill labels.
         r.unified = true;
         assert_eq!(r.mode_label(), "planned+unified(w=4,c=16)");
+        // Paged residency qualifies the exec mode itself.
+        r.kv_block = 16;
+        assert_eq!(r.mode_label(), "planned+paged(b=16)+unified(w=4,c=16)");
+        r.kv_block = 0;
         // Speculation only labels (and only engages) on the unified path.
         r.speculate = 4;
         assert_eq!(r.mode_label(), "planned+unified(w=4,c=16)+spec(k=4)");

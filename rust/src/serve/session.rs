@@ -7,7 +7,7 @@
 //! pinned weights) is shared; everything here is private to one request.
 
 use crate::fx::builder::GraphDims;
-use crate::plan::DeviceKvCache;
+use crate::plan::{DeviceKvCache, PagedKv};
 use crate::tensor::Tensor;
 
 /// Where a session's KV caches live.
@@ -18,16 +18,22 @@ use crate::tensor::Tensor;
 /// - `Device` — a session-owned device-resident cache set updated in
 ///   place by the plan's `cache_update` dispatches; per-step host traffic
 ///   is just the token embedding + position uniforms (planned mode).
+/// - `Paged` — per-block residency over the engine's shared pool planes
+///   (paged planned mode, the serving default): the session owns a block
+///   table whose entries are either physical pool block-groups or
+///   host-parked block bytes; the pager moves individual blocks, not
+///   whole sessions.
 ///
 /// Sessions start `Host` (empty, lazily materialized); a planned engine
-/// promotes them to `Device` at admission (scheduled sessions, cache-aware:
-/// admission defers under pool pressure) or on first encode (detached and
-/// evicted sessions, hydrating spilled host state if `pos > 0`), and
-/// demotes them on evict/retire.
+/// promotes them to `Device` (or `Paged`) at admission (scheduled
+/// sessions, cache-aware: admission defers under pool pressure) or on
+/// first encode (detached and evicted sessions, hydrating spilled host
+/// state if `pos > 0`), and demotes them on evict/retire.
 #[derive(Debug, Clone)]
 pub enum KvCache {
     Host(Vec<(Tensor, Tensor)>),
     Device(DeviceKvCache),
+    Paged(PagedKv),
 }
 
 impl KvCache {
@@ -44,32 +50,54 @@ impl KvCache {
         matches!(self, KvCache::Device(_))
     }
 
+    pub fn is_paged(&self) -> bool {
+        matches!(self, KvCache::Paged(_))
+    }
+
     pub fn as_device(&self) -> Option<&DeviceKvCache> {
         match self {
             KvCache::Device(c) => Some(c),
-            KvCache::Host(_) => None,
+            _ => None,
+        }
+    }
+
+    pub fn as_paged(&self) -> Option<&PagedKv> {
+        match self {
+            KvCache::Paged(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    pub fn as_paged_mut(&mut self) -> Option<&mut PagedKv> {
+        match self {
+            KvCache::Paged(p) => Some(p),
+            _ => None,
         }
     }
 
     pub fn as_host(&self) -> Option<&Vec<(Tensor, Tensor)>> {
         match self {
             KvCache::Host(c) => Some(c),
-            KvCache::Device(_) => None,
+            _ => None,
         }
     }
 
     pub fn as_host_mut(&mut self) -> Option<&mut Vec<(Tensor, Tensor)>> {
         match self {
             KvCache::Host(c) => Some(c),
-            KvCache::Device(_) => None,
+            _ => None,
         }
     }
 
-    /// Device bytes held by this cache (0 while host-resident).
+    /// Device bytes held by this cache (0 while host-resident). Paged
+    /// sessions need the engine's block-group size:
+    /// `PagedKv::resident_bytes(group_bytes)` — this shape-free accessor
+    /// reports 0 for them, and the serving report sums paged residency
+    /// through the block arena instead.
     pub fn resident_bytes(&self) -> usize {
         match self {
             KvCache::Device(c) => c.resident_bytes,
-            KvCache::Host(_) => 0,
+            KvCache::Host(_) | KvCache::Paged(_) => 0,
         }
     }
 }
@@ -126,6 +154,12 @@ pub struct SessionMetrics {
     pub upload_bytes: u64,
     /// Speculative decode: draft tokens submitted to verify rounds.
     pub drafted: u64,
+    /// Paged KV: high-water block-table length (blocks the session's
+    /// residency passes granted or promised; 0 in contiguous mode).
+    pub kv_blocks_hw: u64,
+    /// Paged KV: high-water count of this session's blocks parked on the
+    /// host at once (pager page-outs or a full quarantine spill).
+    pub kv_blocks_spilled_hw: u64,
     /// Speculative decode: draft tokens accepted (greedy-matched). The
     /// per-session acceptance rate is `accepted / drafted`.
     pub accepted: u64,
@@ -183,6 +217,13 @@ pub struct SessionState {
     pub kv: KvCache,
     /// Current decode position (rows of the cache that are valid).
     pub pos: usize,
+    /// Cache-write high-water: the highest `rows_end` a SUCCESSFUL replay
+    /// scattered for this session (committed speculative draft rows
+    /// included). Monotonic — a rewind moves `pos` back but never `kv_hw`,
+    /// so spill reconstruction knows exactly which block rows hold real
+    /// device bytes (rows `>= kv_hw` are zeros by construction, matching
+    /// the contiguous cache's zeroed tail bit-for-bit).
+    pub kv_hw: usize,
     /// Sticky decode-slot index (batched serving): assigned at admission,
     /// freed only on retire, so ragged retirement never reshuffles the
     /// surviving sessions' rows in the batched cache-set table. `None`
@@ -237,6 +278,7 @@ impl SessionState {
             // read.
             kv: KvCache::Host(Vec::new()),
             pos: 0,
+            kv_hw: 0,
             slot: None,
             fed: 0,
             last_token: None,
@@ -277,19 +319,18 @@ impl SessionState {
     /// to the lazily-materialized empty state, so the next encode starts
     /// from zeroed caches in either mode).
     ///
-    /// This is only HALF of a full reset: a device-resident cache must also
-    /// be released back to the pool — use
+    /// This is only HALF of a full reset: a device-resident cache set (or
+    /// a paged block table's resident groups) must also be released back
+    /// to its allocator — use
     /// [`crate::serve::ServingEngine::reset_session`], which does both and
     /// asserts nothing leaks via the pool's high-water stats. Calling this
     /// directly on a device-resident session would strand its buffers, so
-    /// it downgrades to the empty host state and returns the old handle
+    /// it downgrades to the empty host state and returns the old cache
     /// for the caller to release.
-    pub fn reset_host(&mut self) -> Option<DeviceKvCache> {
-        let old = match std::mem::replace(&mut self.kv, KvCache::Host(Vec::new())) {
-            KvCache::Device(c) => Some(c),
-            KvCache::Host(_) => None,
-        };
+    pub fn reset_host(&mut self) -> KvCache {
+        let old = std::mem::replace(&mut self.kv, KvCache::Host(Vec::new()));
         self.pos = 0;
+        self.kv_hw = 0;
         self.fed = 0;
         self.last_token = None;
         self.tokens.clear();
@@ -452,7 +493,10 @@ mod tests {
             host[0].0 = Tensor::f32(vec![1], vec![5.0]).unwrap(); // ...and dirty
         }
         let old = s.reset_host();
-        assert!(old.is_none(), "host session has no device cache to hand back");
+        assert!(
+            old.as_device().is_none() && old.as_paged().is_none(),
+            "host session has no device cache to hand back"
+        );
         assert_eq!(s.pos, 0);
         assert!(s.tokens.is_empty());
         assert_eq!(s.take_input(), Some((7, true)), "prompt cursor rewound");

@@ -34,6 +34,14 @@ pub struct PlanBenchRow {
     pub planned_upload_bytes_per_step: f64,
     /// Device bytes of one session's resident KV-cache set (planned).
     pub resident_kib: f64,
+    /// Paged KV block size of the planned run (0 = contiguous layout).
+    pub kv_block: usize,
+    /// Paged KV: pool high-water resident groups / session spilled-block
+    /// high water (both 0 in contiguous mode).
+    pub kv_blocks_resident_hw: u64,
+    pub kv_blocks_spilled_hw: u64,
+    /// Peak device KV bytes per actually stored token row (planned run).
+    pub kv_bytes_per_tok: f64,
     pub eager_tok_per_s: f64,
     pub planned_tok_per_s: f64,
     /// Token streams bit-identical between the modes.
@@ -79,6 +87,8 @@ pub fn plan_table(rows: &[PlanBenchRow]) -> TableDoc {
             "replay (us/step)",
             "upload (B/step) e->p",
             "resident (KiB)",
+            "blocks (res/spilled)",
+            "KV (B/tok)",
             "eager tok/s",
             "planned tok/s",
             "speedup",
@@ -103,6 +113,12 @@ pub fn plan_table(rows: &[PlanBenchRow]) -> TableDoc {
                 r.upload_shrink()
             ),
             f1(r.resident_kib),
+            if r.kv_block > 0 {
+                format!("{}/{}", r.kv_blocks_resident_hw, r.kv_blocks_spilled_hw)
+            } else {
+                "-".to_string()
+            },
+            f1(r.kv_bytes_per_tok),
             f1(r.eager_tok_per_s),
             f1(r.planned_tok_per_s),
             format!("{:.2}x", r.planned_tok_per_s / r.eager_tok_per_s.max(1e-9)),
@@ -128,6 +144,12 @@ pub fn plan_table(rows: &[PlanBenchRow]) -> TableDoc {
         "'tokens' asserts bit-identical streams: planning is a pure \
          scheduling transform, numerics are untouched.",
     );
+    t.note(
+        "blocks = paged-KV pool high-water resident groups / spilled-block \
+         high water ('-' = contiguous layout); KV (B/tok) = peak device KV \
+         bytes per actually stored token row — paged residency grows the \
+         footprint with the session's real length instead of max_seq.",
+    );
     t
 }
 
@@ -150,6 +172,10 @@ mod tests {
             eager_upload_bytes_per_step: 80_000.0,
             planned_upload_bytes_per_step: 300.0,
             resident_kib: 64.0,
+            kv_block: 16,
+            kv_blocks_resident_hw: 9,
+            kv_blocks_spilled_hw: 0,
+            kv_bytes_per_tok: 1200.0,
             eager_tok_per_s: 100.0,
             planned_tok_per_s: 300.0,
             tokens_match: true,
@@ -165,6 +191,12 @@ mod tests {
         assert!(md.contains("identical"));
         assert!(md.contains("59->4.0"));
         assert!(md.contains("80000->300 (267x)"));
+        assert!(md.contains("9/0"));
+        assert!(md.contains("1200.0"));
+        let mut contiguous = row();
+        contiguous.kv_block = 0;
+        let md = plan_table(&[contiguous]).to_markdown();
+        assert!(md.contains(" - "), "{md}");
     }
 
     #[test]

@@ -41,6 +41,8 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
             "gpu (us/tok)",
             "upload (B/step)",
             "resident (KiB/sess)",
+            "blocks (res/spilled)",
+            "KV (B/tok)",
             "pool HW (KiB)",
             "faults",
             "recov",
@@ -64,6 +66,12 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
             f1(r.us_per_token(r.kernel_virtual_ns)),
             f1(r.upload_bytes_per_step()),
             f1(r.resident_bytes as f64 / 1024.0),
+            if r.kv_block > 0 {
+                format!("{}/{}", r.kv_pool_high_water_groups, r.kv_blocks_spilled_hw)
+            } else {
+                "-".to_string()
+            },
+            f1(r.kv_bytes_per_token()),
             f1(r.pool_high_water_bytes as f64 / 1024.0),
             r.faults_injected.to_string(),
             r.recovered_sessions.to_string(),
@@ -102,6 +110,15 @@ pub fn scaling_table(rows: &[(usize, ServeReport)]) -> TableDoc {
          verifying k drafted tokens per session in the same one-replay \
          round. accept = accepted drafts / drafted (0 with speculation \
          off).",
+    );
+    t.note(
+        "blocks = paged-KV pool high-water resident groups / summed \
+         per-session spilled-block high waters ('-' in contiguous mode); \
+         KV (B/tok) = peak device KV bytes per actually stored token row. \
+         Contiguous sets pay max_seq rows per resident session regardless \
+         of occupancy; paged (+paged modes) pays at most one ragged tail \
+         block per session, so short sessions stop renting full-capacity \
+         sets.",
     );
     t.note(
         "faults = injected transient faults absorbed during the run \
@@ -238,6 +255,25 @@ mod tests {
         // here: no other column renders a bare "3" for this report).
         let row = md.lines().find(|l| l.starts_with("| 2 ")).unwrap();
         assert!(row.contains(" 3 "), "{row}");
+    }
+
+    #[test]
+    fn scaling_table_reports_paged_block_columns() {
+        // Contiguous rows render '-' in the blocks column.
+        let md = scaling_table(&[(1, fake_report(1, 4))]).to_markdown();
+        assert!(md.contains("blocks (res/spilled)"), "{md}");
+        assert!(md.contains("KV (B/tok)"), "{md}");
+        assert!(md.contains(" - "), "{md}");
+        // Paged rows render res/spilled and bytes-per-stored-token.
+        let mut r = fake_report(2, 4);
+        r.kv_block = 16;
+        r.kv_group_bytes = 16_384;
+        r.kv_pool_high_water_groups = 5;
+        r.kv_blocks_spilled_hw = 3;
+        // steps = 8 (2 sessions x 4) -> 5 * 16384 / 8 = 10240.0
+        let md = scaling_table(&[(2, r)]).to_markdown();
+        assert!(md.contains("5/3"), "{md}");
+        assert!(md.contains("10240.0"), "{md}");
     }
 
     #[test]

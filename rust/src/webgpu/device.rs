@@ -395,6 +395,71 @@ impl Device {
         Ok(out)
     }
 
+    /// Ranged coalesced readback: map several `(buffer, offset, len)`
+    /// windows behind ONE synchronization point. The GPU-frontier wait and
+    /// the backend's fixed map cost are paid once (like
+    /// [`Device::map_read_many`]); the per-byte transfer cost scales with
+    /// the SUM of the requested windows, not whole buffers. This is what
+    /// makes per-block KV paging cheaper than whole-set spills: a page-out
+    /// of k blocks moves k x block bytes, not layers x max_seq.
+    pub fn map_read_ranges(
+        &mut self,
+        ranges: &[(BufferId, usize, usize)],
+    ) -> Result<Vec<Vec<u8>>> {
+        if ranges.is_empty() {
+            return Ok(Vec::new());
+        }
+        if let Some(kind) = self.fault.as_mut().and_then(|f| f.on_map()) {
+            return Err(self.fault_error(kind, "map_read_ranges"));
+        }
+        let mut out: Vec<Vec<u8>> = Vec::with_capacity(ranges.len());
+        let mut total = 0usize;
+        for &(id, offset, len) in ranges {
+            let (bytes, usage, size) = {
+                let buf = self
+                    .buffers
+                    .get(&id)
+                    .ok_or_else(|| Error::InvalidResource(format!("buffer {id:?}")))?;
+                if buf.destroyed {
+                    return Err(self.fail(Error::InvalidResource(format!(
+                        "buffer {id:?} destroyed"
+                    ))));
+                }
+                let size = buf.data.len();
+                if offset + len > size {
+                    (Vec::new(), buf.desc.usage, size)
+                } else {
+                    (
+                        buf.data[offset..offset + len].to_vec(),
+                        buf.desc.usage,
+                        size,
+                    )
+                }
+            };
+            if !usage.contains(BufferUsage::MAP_READ) {
+                return Err(self.fail(Error::Validation(
+                    "map_read requires MAP_READ usage".into(),
+                )));
+            }
+            if offset + len > size {
+                return Err(self.fail(Error::Validation(format!(
+                    "map range {offset}+{len} past buffer size {size}"
+                ))));
+            }
+            total += len;
+            out.push(bytes);
+        }
+        let cost = self.profile.map_fixed_ns
+            + (total as f64 * self.profile.map_per_byte_ns) as u64;
+        let cost = self.drifted_cost(cost);
+        self.clock.sync(cost);
+        self.synced_since_submit = true;
+        self.stats.bytes_mapped += total as u64;
+        self.timeline.sync_virtual_ns += cost;
+        self.timeline.sync_calls += 1;
+        Ok(out)
+    }
+
     /// `device.poll(Wait)` / `onSubmittedWorkDone`: block until the GPU
     /// frontier, paying the profile's sync cost. This is what single-op
     /// benchmarks pay per dispatch (the ~20x conflation).

@@ -73,6 +73,26 @@ impl BufferPool {
                 return Ok(b);
             }
         }
+        self.create_buffer(device, size)
+    }
+
+    /// Allocate a fresh `size`-byte buffer through the cap: re-probe the
+    /// exact-size free list first (a same-size idle buffer must be reused,
+    /// never evicted around), then evict other idle classes if the cap
+    /// demands it, then create. `acquire` funnels here after its own
+    /// free-list check; the re-probe keeps direct callers from churning —
+    /// without it, an over-cap `create_buffer` would destroy the largest
+    /// idle class even when an exact-size buffer sits idle.
+    pub fn create_buffer(&mut self, device: &mut Device, size: usize) -> Result<BufferId> {
+        if let Some(free) = self.free.get_mut(&size) {
+            if let Some(b) = free.pop() {
+                self.stats.reused += 1;
+                self.stats.outstanding_bytes += size;
+                self.stats.high_water_bytes =
+                    self.stats.high_water_bytes.max(self.stats.outstanding_bytes);
+                return Ok(b);
+            }
+        }
         if let Some(cap) = self.cap_bytes {
             if self.stats.total_bytes + size > cap {
                 self.evict_lru(device, size, cap)?;
@@ -239,6 +259,38 @@ mod tests {
         let again = p.acquire(&mut d, 128).unwrap();
         assert_eq!(again, small);
         assert_eq!(p.stats().created, before);
+    }
+
+    #[test]
+    fn pool_evictions() {
+        // Regression: an over-cap `create_buffer` must prefer exact-size
+        // free-list reuse over evicting the largest idle class. Before the
+        // re-probe, a direct `create_buffer(512)` at a full cap destroyed
+        // the idle 512 B buffer (largest class) and created a new one —
+        // one pointless eviction plus one pointless creation.
+        let mut d = device();
+        let mut p = BufferPool::new(Some(1024));
+        let big = p.acquire(&mut d, 512).unwrap();
+        let small = p.acquire(&mut d, 256).unwrap();
+        p.release(512, big);
+        p.release(256, small);
+        assert_eq!(p.stats().total_bytes, 768);
+        // Cap is 1024; a fresh 512 would overflow (768 + 512 > 1024), but
+        // an exact-size 512 B buffer is idle: it must be reused, with zero
+        // evictions and zero new creations.
+        let again = p.create_buffer(&mut d, 512).unwrap();
+        assert_eq!(again, big, "exact-size idle buffer must be reused");
+        let s = p.stats();
+        assert_eq!(s.evictions, 0, "no eviction when a same-size buffer is free");
+        assert_eq!(s.created, 2, "no new buffer created");
+        assert_eq!(s.reused, 1);
+        // With the exact class empty, over-cap creation still evicts
+        // other idle classes (here the 256 B one) before erroring.
+        let other = p.create_buffer(&mut d, 512).unwrap();
+        assert_ne!(other, again);
+        let s = p.stats();
+        assert_eq!(s.evictions, 1, "idle 256 B class evicted to make room");
+        assert_eq!(s.created, 3);
     }
 
     #[test]

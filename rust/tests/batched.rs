@@ -24,6 +24,11 @@ fn cfg(fusion: FusionConfig, batch_width: usize) -> EngineConfig {
         // per round); chunked prompt ingestion has its own equivalence
         // suite in `tests/prefill.rs`.
         prefill_chunk: 0,
+        // And it pins the PR 5 contiguous cache-set contract (per-session
+        // DeviceKvCache buffers, slot_idx gather); the paged block-table
+        // layout has its own suite in `tests/paged.rs` and takes the full
+        // 50-seed differential sweep in `tests/schedules.rs`.
+        paged: false,
         ..EngineConfig::tiny_fused()
     }
 }

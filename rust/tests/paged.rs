@@ -1,0 +1,348 @@
+//! Paged KV residency integration tests — the PR 9 acceptance gates.
+//!
+//! The paged layout (fixed `kv_block`-token blocks from a shared pool +
+//! per-slot block tables, with a per-block LRU pager) is the planned
+//! serving default. This suite pins its contract against the PR 3
+//! contiguous baseline:
+//!
+//!   - block-boundary prompt lengths ({b-1, b, b+1, 3b+5}) produce
+//!     byte-identical token streams AND spilled-KV bytes vs `paged: false`;
+//!   - a partially filled tail block evicts to host and re-hydrates
+//!     bit-identically mid-generation;
+//!   - speculative rewind across a block boundary never moves a byte;
+//!   - the dispatch census is unchanged — the block table is bound as a
+//!     uniform, so paged rounds encode exactly the contiguous counts;
+//!   - >= 4x sessions resident at equal pool cap (the density headline);
+//!   - 2x oversubscription defers and pages, never fails.
+
+use wdb::engine::{EngineConfig, ExecMode, DEFAULT_KV_BLOCK};
+use wdb::fx::builder::GraphDims;
+use wdb::runtime::Registry;
+use wdb::serve::{ServeConfig, ServeReport, ServingEngine, SessionState};
+
+const SEED: u64 = 0x9A6ED;
+
+fn registry() -> Registry {
+    Registry::builtin().expect("builtin registry")
+}
+
+fn paged_cfg() -> EngineConfig {
+    let cfg = EngineConfig { exec: ExecMode::Planned, ..EngineConfig::tiny_fused() };
+    assert!(cfg.paged, "paged is the planned serving default");
+    assert_eq!(cfg.kv_block, DEFAULT_KV_BLOCK);
+    cfg
+}
+
+fn contiguous_cfg() -> EngineConfig {
+    EngineConfig { paged: false, ..paged_cfg() }
+}
+
+/// Contiguous bytes of one session's full KV-cache set — the equal-cap
+/// unit for density comparisons.
+fn set_bytes() -> usize {
+    let dims = GraphDims::qwen_tiny();
+    2 * dims.layers * dims.max_seq * dims.kv_heads * dims.head_dim * 4
+}
+
+/// Run `reqs` (all submitted up front) to completion; probe the target
+/// session's spilled-KV bytes the first round it holds >= `probe_tokens`
+/// generated tokens (0 disables the probe). The probe evicts to host and
+/// lets the next round re-hydrate — the spill/resume path is part of
+/// every comparison. Returns (streams, probe KV bytes, report).
+fn run(
+    reg: &Registry,
+    cfg: EngineConfig,
+    max_concurrent: usize,
+    reqs: &[(Vec<usize>, usize)],
+    target: usize,
+    probe_tokens: usize,
+) -> (Vec<Vec<usize>>, Vec<Vec<u8>>, ServeReport) {
+    let mut se = ServingEngine::new(reg, ServeConfig { engine: cfg, max_concurrent })
+        .expect("serving engine");
+    se.reseed(SEED);
+    let ids: Vec<u64> = reqs
+        .iter()
+        .map(|(prompt, gen)| se.submit(prompt, *gen).expect("submit"))
+        .collect();
+    let mut kv: Vec<Vec<u8>> = Vec::new();
+    if probe_tokens > 0 {
+        let mut rounds = 0usize;
+        while kv.is_empty() && (!se.active.is_empty() || !se.queue.is_empty()) {
+            se.step_round().expect("step_round");
+            if let Some(pos) = se
+                .active
+                .iter()
+                .position(|s| s.id == ids[target] && s.tokens.len() >= probe_tokens)
+            {
+                let mut s = se.active.remove(pos);
+                se.evict_session_cache(&mut s).expect("evict");
+                assert!(!s.kv.is_device(), "evicted session is host-resident");
+                for (k, v) in s.kv.as_host().expect("spilled") {
+                    kv.push(k.data.as_bytes().to_vec());
+                    kv.push(v.data.as_bytes().to_vec());
+                }
+                se.active.insert(pos, s);
+            }
+            rounds += 1;
+            assert!(rounds < 10_000, "probe failed to fire");
+        }
+    }
+    // Sessions that finished before the probe fired are excluded from the
+    // report's aggregates (probing tests only read streams + KV bytes);
+    // probe-free runs get the full-run report.
+    let report = se.run_to_completion().expect("drain report");
+    let done = se.drain_finished();
+    let toks = ids
+        .iter()
+        .map(|id| done.iter().find(|s| s.id == *id).expect("finished").tokens.clone())
+        .collect();
+    (toks, kv, report)
+}
+
+/// Block-boundary prompt lengths: one prompt per chunking class around the
+/// default 16-token block ({b-1, b, b+1, 3b+5}), probed right after the
+/// first generated token (so the spill holds a ragged tail block in the
+/// paged arm). Token streams and spilled-KV bytes must match the
+/// contiguous twin byte-for-byte — the block table is a layout
+/// indirection, not a numerics change.
+#[test]
+fn block_boundary_prompts_match_contiguous() {
+    let reg = registry();
+    let b = DEFAULT_KV_BLOCK;
+    for plen in [b - 1, b, b + 1, 3 * b + 5] {
+        let prompt: Vec<usize> = (0..plen).map(|t| 9 + (t * 13) % 490).collect();
+        let reqs = vec![(prompt, 6)];
+        let (p_toks, p_kv, _) = run(&reg, paged_cfg(), 1, &reqs, 0, 1);
+        let (c_toks, c_kv, _) = run(&reg, contiguous_cfg(), 1, &reqs, 0, 1);
+        assert_eq!(p_toks, c_toks, "prompt {plen}: paged token stream diverged");
+        assert!(!p_kv.is_empty(), "prompt {plen}: probe never fired");
+        assert_eq!(p_kv, c_kv, "prompt {plen}: spilled-KV bytes diverged");
+    }
+}
+
+/// Partial tail-block evict/hydrate through the detached-session API: a
+/// session parked mid-generation at a position that only part-fills its
+/// last block frees every resident block, keeps a contiguous-equivalent
+/// host image, and resumes bit-identically.
+#[test]
+fn partial_tail_block_evicts_and_resumes_bit_identically() {
+    let reg = registry();
+    let b = DEFAULT_KV_BLOCK;
+    // prompt (b + 5) + 3 steps parks at b + 8: one full block plus an
+    // 8-row tail.
+    let prompt: Vec<usize> = (0..b + 5).map(|t| 31 + (t * 7) % 450).collect();
+    let tokens = 8;
+
+    let drive = |se: &mut ServingEngine, s: &mut SessionState| {
+        while !s.finished() {
+            let (t, p) = s.take_input().unwrap();
+            let h = se.encode_session(s, t, p).unwrap();
+            se.finish_session(s, h).unwrap();
+        }
+        s.tokens.clone()
+    };
+    let spill_at = |cfg: EngineConfig| {
+        let mut se =
+            ServingEngine::new(&reg, ServeConfig { engine: cfg, max_concurrent: 1 }).unwrap();
+        se.reseed(SEED);
+        let mut s = se.create_session(prompt.clone(), tokens, 1);
+        for _ in 0..prompt.len() + 3 {
+            let (t, p) = s.take_input().unwrap();
+            let h = se.encode_session(&mut s, t, p).unwrap();
+            se.finish_session(&mut s, h).unwrap();
+        }
+        se.evict_session_cache(&mut s).unwrap();
+        assert!(!s.kv.is_device(), "evicted session is host-resident");
+        let host: Vec<Vec<u8>> = s
+            .kv
+            .as_host()
+            .expect("spilled")
+            .iter()
+            .flat_map(|(k, v)| [k.data.as_bytes().to_vec(), v.data.as_bytes().to_vec()])
+            .collect();
+        let got = drive(&mut se, &mut s);
+        (host, got)
+    };
+
+    let mut truth_se = ServingEngine::new(
+        &reg,
+        ServeConfig { engine: paged_cfg(), max_concurrent: 1 },
+    )
+    .unwrap();
+    truth_se.reseed(SEED);
+    let mut truth = truth_se.create_session(prompt.clone(), tokens, 9);
+    let expect = drive(&mut truth_se, &mut truth);
+
+    let (p_host, p_toks) = spill_at(paged_cfg());
+    let (c_host, c_toks) = spill_at(contiguous_cfg());
+    assert_eq!(p_toks, expect, "paged evict/re-hydrate changed the token stream");
+    assert_eq!(c_toks, expect, "contiguous twin diverged");
+    assert!(
+        p_host.iter().any(|bytes| bytes.iter().any(|&x| x != 0)),
+        "spilled cache must carry the session's context"
+    );
+    assert_eq!(
+        p_host, c_host,
+        "partial tail-block spill must reconstruct the contiguous image"
+    );
+}
+
+/// Speculative rewind across block boundaries: with the smallest block
+/// size (4 tokens) every multi-token draft straddles an edge, and
+/// rejected drafts leave dead rows past the committed position in BOTH
+/// layouts (the device scattered them before host-side verification).
+/// Streams must match plain decode, and the mid-run spill must match the
+/// contiguous speculative twin byte-for-byte — including the dead rows.
+#[test]
+fn speculative_rewind_across_block_boundary_matches_contiguous() {
+    let reg = registry();
+    // Repetitive prompt: the n-gram drafter gets real acceptances, so
+    // accepted AND rejected drafts both cross 4-token block edges.
+    let prompt: Vec<usize> = (0..9).map(|t| 40 + t % 3).collect();
+    let reqs = vec![(prompt, 24)];
+    let small = |speculate: usize, paged: bool| EngineConfig {
+        kv_block: if paged { 4 } else { DEFAULT_KV_BLOCK },
+        speculate,
+        paged,
+        ..paged_cfg()
+    };
+    let (ps_toks, ps_kv, ps_rep) = run(&reg, small(3, true), 1, &reqs, 0, 10);
+    let (cs_toks, cs_kv, _) = run(&reg, small(3, false), 1, &reqs, 0, 10);
+    let (pp_toks, _, _) = run(&reg, small(0, true), 1, &reqs, 0, 0);
+    assert!(ps_rep.drafted > 0, "repetitive workload must actually draft");
+    assert_eq!(ps_toks, pp_toks, "speculation changed the paged token stream");
+    assert_eq!(ps_toks, cs_toks, "paged speculative stream diverged from contiguous");
+    assert!(!ps_kv.is_empty(), "probe never fired");
+    assert_eq!(
+        ps_kv, cs_kv,
+        "spilled-KV bytes after speculative rewind diverged (dead draft rows \
+         must match the contiguous layout)"
+    );
+}
+
+/// Dispatch census unchanged: the block table rides the existing uniform
+/// upload path, so paged unified / split / interleaved rounds encode
+/// exactly the contiguous dispatch counts (prefill and decode phases
+/// alike).
+#[test]
+fn paged_dispatch_census_matches_contiguous() {
+    let reg = registry();
+    let reqs: Vec<(Vec<usize>, usize)> = [(33usize, 5usize), (16, 4), (7, 6), (50, 3)]
+        .iter()
+        .map(|&(plen, gen)| ((0..plen).map(|t| 17 + (t * 11) % 470).collect(), gen))
+        .collect();
+    let variants: [(&str, Box<dyn Fn(EngineConfig) -> EngineConfig>); 3] = [
+        ("unified", Box::new(|c| c)),
+        ("split", Box::new(|c| EngineConfig { unified: false, ..c })),
+        (
+            "interleaved",
+            Box::new(|c| EngineConfig { batch_width: 0, prefill_chunk: 0, ..c }),
+        ),
+    ];
+    for (label, make) in &variants {
+        let (p_toks, _, p_rep) = run(&reg, make(paged_cfg()), 3, &reqs, 0, 0);
+        let (c_toks, _, c_rep) = run(&reg, make(contiguous_cfg()), 3, &reqs, 0, 0);
+        assert_eq!(p_toks, c_toks, "{label}: token streams diverged");
+        assert_eq!(
+            p_rep.dispatches, c_rep.dispatches,
+            "{label}: paged rounds changed the dispatch census"
+        );
+        assert_eq!(
+            p_rep.prefill_dispatches, c_rep.prefill_dispatches,
+            "{label}: paged prefill changed the dispatch census"
+        );
+        assert_eq!(p_rep.rounds, c_rep.rounds, "{label}: round count diverged");
+    }
+}
+
+/// The density headline (acceptance gate): at an equal pool cap of 4
+/// contiguous sets, short sessions pay one 16-token block instead of a
+/// full max_seq set, so >= 4x more sessions sit resident at peak than the
+/// contiguous baseline — with identical token streams.
+#[test]
+fn paged_holds_4x_sessions_resident_at_equal_pool_cap() {
+    let reg = registry();
+    let cap = Some(4 * set_bytes());
+    let reqs: Vec<(Vec<usize>, usize)> = (0..16)
+        .map(|i| ((0..8).map(|t| 21 + (t * 5 + i * 29) % 460).collect(), 4))
+        .collect();
+    let capped = |paged: bool| EngineConfig {
+        pool_cap_bytes: cap,
+        paged,
+        ..paged_cfg()
+    };
+    let (p_toks, _, p_rep) = run(&reg, capped(true), 16, &reqs, 0, 0);
+    let (c_toks, _, c_rep) = run(&reg, capped(false), 16, &reqs, 0, 0);
+    let (u_toks, _, _) = run(&reg, contiguous_cfg(), 16, &reqs, 0, 0);
+    assert_eq!(p_toks, c_toks, "equal-cap paged vs contiguous streams diverged");
+    assert_eq!(p_toks, u_toks, "capped streams diverged from uncapped");
+    assert!(
+        c_rep.resident_sessions_hw >= 1 && c_rep.resident_sessions_hw <= 4,
+        "contiguous baseline must be capped at 4 resident sets, got {}",
+        c_rep.resident_sessions_hw
+    );
+    assert!(
+        p_rep.resident_sessions_hw >= 4 * c_rep.resident_sessions_hw,
+        "paged must hold >= 4x sessions resident at equal cap: paged {} vs \
+         contiguous {}",
+        p_rep.resident_sessions_hw,
+        c_rep.resident_sessions_hw
+    );
+    assert_eq!(p_rep.failed_sessions, 0);
+    assert!(p_rep.kv_pool_high_water_groups >= 16, "one block per live session");
+}
+
+/// Graceful oversubscription (acceptance gate): sessions needing ~2.4x
+/// the block budget of a one-set pool cap keep serving — admission
+/// defers and the LRU pager spills cold blocks host-side (page-outs > 0,
+/// page-ins > 0 as they come back) — and NOTHING fails. Streams stay
+/// identical to the uncapped paged run and the contiguous baseline.
+#[test]
+fn oversubscribed_pool_pages_and_never_fails() {
+    let reg = registry();
+    let reqs: Vec<(Vec<usize>, usize)> = (0..8)
+        .map(|i| ((0..40).map(|t| 13 + (t * 3 + i * 37) % 480).collect(), 8))
+        .collect();
+    let capped = EngineConfig {
+        pool_cap_bytes: Some(set_bytes()), // 10 blocks; 8 sessions want 24
+        ..paged_cfg()
+    };
+    let (o_toks, _, o_rep) = run(&reg, capped, 8, &reqs, 0, 0);
+    let (p_toks, _, p_rep) = run(&reg, paged_cfg(), 8, &reqs, 0, 0);
+    let (c_toks, _, _) = run(&reg, contiguous_cfg(), 8, &reqs, 0, 0);
+    assert_eq!(o_toks, p_toks, "oversubscription changed the token streams");
+    assert_eq!(p_toks, c_toks, "paged streams diverged from contiguous");
+    assert_eq!(o_rep.failed_sessions, 0, "oversubscribed admission must never fail");
+    assert_eq!(o_rep.sessions, 8, "every request completes");
+    assert!(o_rep.kv_page_outs > 0, "a 2x-oversubscribed pool must page out");
+    assert!(o_rep.kv_page_ins > 0, "paged-out blocks must come back");
+    assert!(
+        o_rep.kv_blocks_spilled_hw > 0,
+        "some session must have held spilled blocks"
+    );
+    // The uncapped run never pages.
+    assert_eq!(p_rep.kv_page_outs, 0);
+    assert_eq!(p_rep.kv_page_ins, 0);
+}
+
+/// The paged report ledger self-describes: block size, group bytes, and
+/// the `+paged(b=N)` mode label land in the report; the contiguous twin
+/// stays unlabeled.
+#[test]
+fn report_carries_paged_ledger_and_mode_label() {
+    let reg = registry();
+    let reqs = vec![(vec![65usize, 66, 67], 4), (vec![70, 71], 4)];
+    let (_, _, p_rep) = run(&reg, paged_cfg(), 2, &reqs, 0, 0);
+    assert_eq!(p_rep.kv_block, DEFAULT_KV_BLOCK);
+    let dims = GraphDims::qwen_tiny();
+    assert_eq!(
+        p_rep.kv_group_bytes as usize,
+        2 * dims.layers * DEFAULT_KV_BLOCK * dims.kv_heads * dims.head_dim * 4
+    );
+    assert!(p_rep.kv_pool_high_water_groups > 0);
+    assert!(p_rep.mode_label().contains("+paged(b=16)"), "{}", p_rep.mode_label());
+    assert!(p_rep.kv_bytes_per_token() > 0.0);
+    let (_, _, c_rep) = run(&reg, contiguous_cfg(), 2, &reqs, 0, 0);
+    assert_eq!(c_rep.kv_block, 0);
+    assert!(!c_rep.mode_label().contains("paged"), "{}", c_rep.mode_label());
+}

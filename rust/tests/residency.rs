@@ -15,7 +15,11 @@ fn registry() -> Registry {
 }
 
 fn serving(reg: &Registry, exec: ExecMode, max_concurrent: usize) -> ServingEngine<'_> {
-    let cfg = EngineConfig { exec, ..EngineConfig::tiny_fused() };
+    // This suite pins the PR 3 CONTIGUOUS residency contract (per-session
+    // DeviceKvCache sets, whole-set evict/hydrate, cache-set pool
+    // accounting); the paged block-table layout has its own suite in
+    // `tests/paged.rs`.
+    let cfg = EngineConfig { exec, paged: false, ..EngineConfig::tiny_fused() };
     let mut se = ServingEngine::new(reg, ServeConfig { engine: cfg, max_concurrent })
         .expect("serving engine");
     se.reseed(SEED);
@@ -52,7 +56,8 @@ fn resident_caches_shrink_upload_bytes_at_least_10x() {
         // upload accounting against the decode plan's static StepInput
         // bytes, which chunked prefill (its own suite: tests/prefill.rs)
         // deliberately changes during the prompt phase.
-        let cfg = EngineConfig { exec, prefill_chunk: 0, ..EngineConfig::tiny_fused() };
+        let cfg =
+            EngineConfig { exec, prefill_chunk: 0, paged: false, ..EngineConfig::tiny_fused() };
         let mut se = ServingEngine::new(&reg, ServeConfig { engine: cfg, max_concurrent: 1 })
             .expect("serving engine");
         se.reseed(SEED);
@@ -220,7 +225,10 @@ fn cache_pressure_defers_admission_instead_of_failing() {
     let dims = wdb::fx::builder::GraphDims::qwen_tiny();
     let set_bytes = 2 * dims.layers * dims.max_seq * dims.kv_heads * dims.head_dim * 4;
 
-    let mut cfg = EngineConfig { exec: ExecMode::Planned, ..EngineConfig::tiny_fused() };
+    // Contiguous admission semantics (paged admission never rejects — it
+    // pages instead; that contract is pinned in `tests/paged.rs`).
+    let mut cfg =
+        EngineConfig { exec: ExecMode::Planned, paged: false, ..EngineConfig::tiny_fused() };
     cfg.pool_cap_bytes = Some(set_bytes); // exactly ONE session's set
     let mut se =
         ServingEngine::new(&reg, ServeConfig { engine: cfg, max_concurrent: 2 }).unwrap();
@@ -239,7 +247,8 @@ fn cache_pressure_defers_admission_instead_of_failing() {
     );
 
     // Below one set, the very first admission must error (not spin).
-    let mut tiny = EngineConfig { exec: ExecMode::Planned, ..EngineConfig::tiny_fused() };
+    let mut tiny =
+        EngineConfig { exec: ExecMode::Planned, paged: false, ..EngineConfig::tiny_fused() };
     tiny.pool_cap_bytes = Some(set_bytes - 1);
     let mut se2 =
         ServingEngine::new(&reg, ServeConfig { engine: tiny, max_concurrent: 1 }).unwrap();
@@ -314,6 +323,7 @@ fn serving_default_is_planned_and_eager_stays_equivalent() {
     let reg = registry();
     let cfg = EngineConfig::tiny_serving();
     assert_eq!(cfg.exec, ExecMode::Planned);
+    assert!(cfg.paged, "paged KV residency is the planned serving default");
     let prompt = ByteTokenizer::new(512).paper_prompt();
     let run = |exec: ExecMode| {
         let mut se = serving(&reg, exec, 2);

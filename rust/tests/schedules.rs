@@ -26,7 +26,15 @@
 //!                        failures, map-read timeouts injected at the
 //!                        device layer): quarantine + snapshot-replay
 //!                        recovery must absorb every fault without moving
-//!                        a single token or KV byte.
+//!                        a single token or KV byte;
+//!   - **contiguous**   — unified with `paged: false`: the paged KV
+//!                        layout (the planned default in every arm above:
+//!                        block tables + shared block pool + per-block
+//!                        LRU pager) swapped back for PR 3 per-session
+//!                        contiguous cache sets — the block-table
+//!                        indirection is a pure layout change, so token
+//!                        streams AND spilled-KV bytes must match
+//!                        byte-for-byte.
 //!
 //! The suite asserts BYTE-level equivalence: identical token streams for
 //! every request, and identical spilled-KV-cache bytes for a probe
@@ -117,6 +125,12 @@ fn split_cfg() -> EngineConfig {
 
 fn interleaved_cfg() -> EngineConfig {
     EngineConfig { batch_width: 0, prefill_chunk: 0, ..unified_cfg() }
+}
+
+/// The paged layout swapped back for PR 3 contiguous cache sets: the
+/// `--no-paged` differential arm.
+fn contiguous_cfg() -> EngineConfig {
+    EngineConfig { paged: false, ..unified_cfg() }
 }
 
 /// Unified scheduling under a seeded transient-fault plan derived from the
@@ -211,10 +225,12 @@ fn differential(reg: &Registry, seeds: std::ops::Range<u64>) {
         let (s_toks, s_kv) = run_schedule(reg, split_cfg(), &sched);
         let (i_toks, i_kv) = run_schedule(reg, interleaved_cfg(), &sched);
         let (f_toks, f_kv) = run_schedule(reg, fault_cfg(seed), &sched);
+        let (c_toks, c_kv) = run_schedule(reg, contiguous_cfg(), &sched);
         assert_eq!(u_toks, p_toks, "{ctx}: unified vs speculative token streams diverged");
         assert_eq!(u_toks, s_toks, "{ctx}: unified vs split token streams diverged");
         assert_eq!(u_toks, i_toks, "{ctx}: unified vs interleaved token streams diverged");
         assert_eq!(u_toks, f_toks, "{ctx}: unified vs fault-injected token streams diverged");
+        assert_eq!(u_toks, c_toks, "{ctx}: paged vs contiguous token streams diverged");
         // The probe session generated at least one token in every mode,
         // so the spill always captured a snapshot.
         assert!(!u_kv.is_empty(), "{ctx}: probe never fired");
@@ -222,6 +238,7 @@ fn differential(reg: &Registry, seeds: std::ops::Range<u64>) {
         assert_eq!(u_kv, s_kv, "{ctx}: unified vs split spilled-KV bytes diverged");
         assert_eq!(u_kv, i_kv, "{ctx}: unified vs interleaved spilled-KV bytes diverged");
         assert_eq!(u_kv, f_kv, "{ctx}: unified vs fault-injected spilled-KV bytes diverged");
+        assert_eq!(u_kv, c_kv, "{ctx}: paged vs contiguous spilled-KV bytes diverged");
     }
 }
 
@@ -296,6 +313,25 @@ fn speculative_fault_schedules_match_clean_unified() {
         let (f_toks, f_kv) = run_schedule(&reg, cfg, &sched);
         assert_eq!(u_toks, f_toks, "seed {seed}: spec+faults token streams diverged");
         assert_eq!(u_kv, f_kv, "seed {seed}: spec+faults spilled-KV bytes diverged");
+    }
+}
+
+/// The smallest block size (4 tokens) maximizes block-boundary crossings
+/// per schedule — every prompt length class straddles several blocks and
+/// each decode step lands a new tail block far more often than the
+/// default 16-token layout. A seed subset must stay byte-identical to the
+/// default-block unified run (block size is a layout knob, not a
+/// numerics knob).
+#[test]
+fn small_block_schedules_match_default_block() {
+    let reg = registry();
+    for seed in 0..8u64 {
+        let sched = gen_schedule(seed);
+        let (u_toks, u_kv) = run_schedule(&reg, unified_cfg(), &sched);
+        let cfg = EngineConfig { kv_block: 4, ..unified_cfg() };
+        let (b_toks, b_kv) = run_schedule(&reg, cfg, &sched);
+        assert_eq!(u_toks, b_toks, "seed {seed}: kv_block=4 token streams diverged");
+        assert_eq!(u_kv, b_kv, "seed {seed}: kv_block=4 spilled-KV bytes diverged");
     }
 }
 
