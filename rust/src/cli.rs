@@ -137,6 +137,7 @@ pub fn run(args: Args) -> Result<()> {
         "batch-sweep" => cmd_batch_sweep(&args),
         "serve" => cmd_serve(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "trace-summary" => cmd_trace_summary(&args),
         "plan-bench" => cmd_plan_bench(&args),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
@@ -166,6 +167,7 @@ Commands:
         [--prefill-chunk 16] [--no-unified]
         [--kv-block 16 | --no-paged] [--pool-cap-kv N]
         [--speculate K | --no-speculate] [--inject-faults SEED]
+        [--trace-out FILE.json] [--trace-ring N]
                                   FIFO request loop over the serving engine
                                   (planned replay + resident KV caches +
                                   UNIFIED continuous-batching rounds — one
@@ -193,12 +195,23 @@ Commands:
                                   at N contiguous sets' bytes in either
                                   layout). The report header prints the
                                   mode that ran plus block-pool high-water
-                                  and page-in/out counts.
+                                  and page-in/out counts, and histogram-
+                                  backed TTFT/ITL p50/p99. --trace-out
+                                  FILE.json exports the full span trace
+                                  (round > chunk > replay > dispatch,
+                                  per-slot lanes) as Chrome-trace JSON;
+                                  --trace-ring N keeps the most recent N
+                                  events in a fixed ring instead (default
+                                  sink discards events; histograms always
+                                  record). Tracing never perturbs the
+                                  virtual clock — token streams are
+                                  bit-identical with it on or off.
   serve-bench [--sessions 1,2,4,8] [--tokens 16] [--profile dawn]
               [--exec-mode planned] [--batch-width 4 | --no-batch]
               [--prefill-chunk 16] [--prompt 128] [--no-unified]
               [--kv-block 16 | --no-paged] [--pool-cap-kv N]
               [--speculate K | --no-speculate] [--inject-faults SEED]
+              [--trace-out FILE.json] [--trace-ring N]
               [--out DIR]         multi-session serving scaling table:
                                   aggregate tok/s + per-phase attribution
                                   + dispatches/round + tok/round +
@@ -229,7 +242,19 @@ Commands:
                                   and ZERO failed sessions even when
                                   --pool-cap-kv oversubscribes the pool
                                   (admission defers and pages, never
-                                  fails).
+                                  fails). --trace-out FILE.json re-runs
+                                  the largest N with the Chrome sink,
+                                  hard-gates token-stream + dispatch-count
+                                  identity vs the untraced row, and writes
+                                  the span trace for `wdb trace-summary`.
+  trace-summary FILE.json         validate an exported Chrome trace
+                                  (field shape + balanced B/E spans) and
+                                  print table T1: the per-phase / per-op
+                                  time breakdown reconstructed from spans
+                                  alone, plus the tiling proof — sum of
+                                  round spans must reproduce the report's
+                                  wall clock within 1% (hard error past
+                                  that).
   plan-bench [--tokens 8] [--dps 16] [--profile dawn] [--out DIR]
                                   table P1: eager vs planned per-op
                                   framework overhead across workloads x
@@ -641,6 +666,50 @@ fn fault_seed_from_flags(args: &Args) -> Result<Option<u64>> {
     }
 }
 
+/// Resolve the tracer flags: `--trace-out FILE.json` selects the Chrome
+/// sink (retain everything, export on exit), `--trace-ring N` alone
+/// selects the fixed-capacity ring sink, neither leaves the default Null
+/// sink (histograms still record). Returns the config plus the export
+/// path, if any.
+fn trace_config_from_flags(args: &Args) -> Result<(crate::trace::TraceConfig, Option<String>)> {
+    use crate::trace::{TraceConfig, TraceSinkKind};
+    let out = args.flag("trace-out").map(str::to_string);
+    let ring = match args.flag("trace-ring") {
+        Some(v) => {
+            let n = v
+                .parse::<usize>()
+                .map_err(|_| Error::Graph(format!("bad --trace-ring '{v}'")))?;
+            if n == 0 {
+                return Err(Error::Graph("--trace-ring needs a positive event count".into()));
+            }
+            Some(n)
+        }
+        None => None,
+    };
+    let mut cfg = TraceConfig::default();
+    if let Some(n) = ring {
+        cfg.sink = TraceSinkKind::Ring;
+        cfg.ring = n;
+    }
+    // --trace-out wins: export needs the full stream retained.
+    if out.is_some() {
+        cfg.sink = TraceSinkKind::Chrome;
+    }
+    Ok((cfg, out))
+}
+
+/// Write an exported Chrome-trace document, creating parent directories
+/// so `--trace-out DIR/trace.json` works before any `--out` dump ran.
+fn write_trace_file(path: &str, doc: &crate::report::json::Value) -> Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, crate::report::json::to_string_pretty(doc))?;
+    Ok(())
+}
+
 /// Fixed seed every serve-bench engine (rows and twins) is reseeded with,
 /// so twin runs are comparable call-for-call.
 const SERVE_BENCH_SEED: u64 = 0x5EBE;
@@ -698,6 +767,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (paged, kv_block) = paged_from_flags(args)?;
     let dims = GraphDims::from_manifest(registry.config("qwen-tiny")?);
     let pool_cap_bytes = pool_cap_from_flags(args, &dims)?;
+    let (trace, trace_out) = trace_config_from_flags(args)?;
     let mut se = ServingEngine::new(
         &registry,
         ServeConfig {
@@ -712,6 +782,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 paged,
                 kv_block,
                 pool_cap_bytes,
+                trace,
                 ..EngineConfig::tiny_fused()
             },
             max_concurrent: concurrent,
@@ -787,6 +858,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "aggregate throughput: {:.1} tok/s (virtual); mean TTFT {:.1} ms",
         report.agg_tok_per_s, report.mean_ttft_ms
     );
+    // Histogram-backed percentiles (log-bucketed, +/-6.25%): the means
+    // above stay the pre-v7 compat surface, these are the tail view.
+    println!(
+        "TTFT p50 / p90 / p99: {:.2} / {:.2} / {:.2} ms | ITL p50 / p99: \
+         {:.2} / {:.2} ms (histogram-backed)",
+        report.ttft_p50_ms(),
+        report.ttft_p90_ms(),
+        report.ttft_p99_ms(),
+        report.itl_p50_ms(),
+        report.itl_p99_ms()
+    );
+    if trace.sink != crate::trace::TraceSinkKind::Null {
+        println!(
+            "trace: {} events retained ({} dropped), sink {:?}",
+            se.tracer().total_events() - se.tracer().dropped_events(),
+            se.tracer().dropped_events(),
+            trace.sink
+        );
+    }
+    if let Some(path) = &trace_out {
+        let doc = se.export_chrome_trace(&report);
+        write_trace_file(path, &doc)?;
+        eprintln!("wrote {path}");
+    }
     println!("real wall: {:.1} s on this host", wall0.elapsed().as_secs_f64());
     Ok(())
 }
@@ -827,6 +922,15 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let (paged, kv_block) = paged_from_flags(args)?;
     let dims = GraphDims::from_manifest(registry.config("qwen-tiny")?);
     let pool_cap_bytes = pool_cap_from_flags(args, &dims)?;
+    let (trace_cfg, trace_out) = trace_config_from_flags(args)?;
+    // Bench rows and twins keep the ring/null sink (their engines are
+    // throwaway); the Chrome sink runs once in the dedicated --trace-out
+    // pass below, gated for identity against its untraced row.
+    let row_trace = if trace_cfg.sink == crate::trace::TraceSinkKind::Chrome {
+        crate::trace::TraceConfig::default()
+    } else {
+        trace_cfg
+    };
     let ec = EngineConfig {
         profile: profile.clone(),
         exec,
@@ -838,6 +942,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         paged,
         kv_block,
         pool_cap_bytes,
+        trace: row_trace,
         ..EngineConfig::tiny_fused()
     };
     // Uniform bench workload: every row/twin submits n copies of this.
@@ -959,6 +1064,59 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             )?;
             eprintln!("wrote {}", path.display());
         }
+    }
+
+    // Dedicated traced run for --trace-out: re-run the largest N with
+    // the Chrome sink and hard-gate that tracing changed NOTHING —
+    // token streams and dispatch counts must match the untraced row
+    // bit-for-bit (instrumentation only reads the virtual clock). The
+    // export carries the report's wall clock so `wdb trace-summary` can
+    // prove the round spans tile it. Runs before the scheduling gates so
+    // a failing gate still leaves the trace for diagnosis.
+    if let Some(path) = &trace_out {
+        use crate::serve::{ServeConfig, ServingEngine};
+        let idx = (0..counts.len()).max_by_key(|&i| counts[i]).unwrap();
+        let n_max = counts[idx];
+        let mut tcfg = ec.clone();
+        tcfg.trace = crate::trace::TraceConfig {
+            sink: crate::trace::TraceSinkKind::Chrome,
+            ..Default::default()
+        };
+        let mut se =
+            ServingEngine::new(&registry, ServeConfig { engine: tcfg, max_concurrent: n_max })?;
+        se.reseed(SERVE_BENCH_SEED);
+        let reqs = uniform(n_max);
+        let mut ids = Vec::with_capacity(reqs.len());
+        for (p, t) in &reqs {
+            ids.push(se.submit(p, *t)?);
+        }
+        let report = se.run_to_completion()?;
+        let done = se.drain_finished();
+        let toks: Vec<Vec<usize>> = ids
+            .iter()
+            .map(|id| done.iter().find(|s| s.id == *id).unwrap().tokens.clone())
+            .collect();
+        if toks != row_toks[idx] {
+            return Err(Error::Graph(format!(
+                "traced run token streams diverged from the untraced N={n_max} \
+                 row — tracing must not perturb the schedule"
+            )));
+        }
+        if report.dispatches != rows[idx].1.dispatches {
+            return Err(Error::Graph(format!(
+                "traced run dispatch count {} != untraced {} at N={n_max} — \
+                 tracing must not add or drop dispatches",
+                report.dispatches, rows[idx].1.dispatches
+            )));
+        }
+        let doc = se.export_chrome_trace(&report);
+        write_trace_file(path, &doc)?;
+        println!(
+            "\ntrace identity gate: OK (token streams + dispatch counts \
+             bit-identical with the Chrome sink at N={n_max}); {} events retained",
+            se.tracer().total_events()
+        );
+        eprintln!("wrote {path}");
     }
 
     // Batched-vs-interleaved delta + the HARD dispatch gate: for every
@@ -1293,6 +1451,67 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             "fault recovery gate: OK (token streams byte-identical to the \
              fault-free twin at every N; zero failed sessions)"
         );
+    }
+    Ok(())
+}
+
+/// `wdb trace-summary FILE.json`: validate an exported Chrome trace and
+/// print table T1 — the per-phase / per-op breakdown reconstructed from
+/// spans alone — plus the tiling proof (sum of `round` spans must
+/// reproduce the report's wall clock within 1%).
+fn cmd_trace_summary(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.flag("file"))
+        .ok_or_else(|| Error::Graph("usage: wdb trace-summary FILE.json".into()))?;
+    let text = std::fs::read_to_string(path)?;
+    let doc = crate::report::json::parse(&text)?;
+    let stats = crate::trace::chrome::validate(&doc)?;
+    println!(
+        "trace shape: OK ({} events over {} tracks, {} slot lanes; {} span \
+         pairs, {} complete, {} instants)",
+        stats.events,
+        stats.tracks,
+        stats.slot_tracks,
+        stats.span_pairs,
+        stats.complete_events,
+        stats.instant_events
+    );
+    let sum = crate::trace::summary::summarize(&doc)?;
+    if sum.dropped_events > 0 {
+        println!(
+            "note: {} events were dropped at capture (ring overflow) — span \
+             totals undercount",
+            sum.dropped_events
+        );
+    }
+    println!();
+    println!("{}", sum.table().to_markdown());
+    match sum.tiling_delta() {
+        Some(delta) => {
+            println!(
+                "tiling check: round spans {:.3} ms vs report wall {:.3} ms \
+                 (delta {:.3}%)",
+                sum.round_span_ns / 1e6,
+                sum.wall_virtual_ns.unwrap_or(0.0) / 1e6,
+                delta * 100.0
+            );
+            if delta > 0.01 {
+                return Err(Error::Graph(format!(
+                    "tiling check failed: round spans reconstruct {:.3} ms but \
+                     the report wall was {:.3} ms ({:.3}% > 1%)",
+                    sum.round_span_ns / 1e6,
+                    sum.wall_virtual_ns.unwrap_or(0.0) / 1e6,
+                    delta * 100.0
+                )));
+            }
+            println!("tiling check: OK (round spans tile the serving wall within 1%)");
+        }
+        None => println!(
+            "tiling check: skipped (trace carries no otherData.wall_virtual_ns)"
+        ),
     }
     Ok(())
 }

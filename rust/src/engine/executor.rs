@@ -757,6 +757,7 @@ impl<'r> GraphExecutor<'r> {
                 // trips through the host like any other value — exactly
                 // the per-step cache traffic the paper's pathology pays.
                 OpKind::Kernel(kname) | OpKind::InPlaceKernel(kname) => {
+                    let t_op = device.clock.now_ns();
                     // (1) framework overhead — Python interpreter / tensor
                     // metadata cost in torch-webgpu (drifted per run).
                     let fw = device.drifted_cost(*framework_ns_per_op);
@@ -830,6 +831,19 @@ impl<'r> GraphExecutor<'r> {
                     let cb = device.finish(enc)?;
                     device.submit(&[cb], *registry)?;
                     *dispatch_count += 1;
+                    if device.trace.on() {
+                        // Retroactive per-op span with the fx node name:
+                        // framework + upload + 8-phase encode + submit.
+                        let op = device.trace.intern(&node.name);
+                        let now = device.clock.now_ns();
+                        device.trace.complete(
+                            op,
+                            crate::trace::TRACK_ENGINE,
+                            t_op,
+                            now - t_op,
+                            0,
+                        );
+                    }
 
                     // (4) chain outputs GPU-side (peek: no sync cost).
                     for (j, spec) in prep.outputs.iter().enumerate() {

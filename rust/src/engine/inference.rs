@@ -150,6 +150,14 @@ pub struct EngineConfig {
     /// uninjected twin — `wdb serve-bench --inject-faults` gates on it.
     /// `None` (default) injects nothing.
     pub fault_seed: Option<u64>,
+    /// Span tracer configuration for the serving engine's device: `Null`
+    /// (default) discards events, `Ring` keeps the most recent
+    /// `trace.ring` events in a fixed-capacity buffer, `Chrome` retains
+    /// everything for `--trace-out` export. Tracing never perturbs the
+    /// virtual clock or the jitter stream, so token streams are
+    /// bit-identical across sinks. `wdb serve`/`serve-bench` override
+    /// with `--trace-out` / `--trace-ring`.
+    pub trace: crate::trace::TraceConfig,
     /// Override the manifest dims (executable workload variants — e.g.
     /// tiny-kernel graphs at different layer counts).
     pub dims_override: Option<crate::fx::builder::GraphDims>,
@@ -176,6 +184,7 @@ impl EngineConfig {
             paged: true,
             kv_block: DEFAULT_KV_BLOCK,
             fault_seed: None,
+            trace: crate::trace::TraceConfig::default(),
             dims_override: None,
         }
     }

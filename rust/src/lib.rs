@@ -57,6 +57,7 @@ pub mod serve;
 pub mod stats;
 pub mod tables;
 pub mod tensor;
+pub mod trace;
 pub mod webgpu;
 
 pub use error::{Error, Result};

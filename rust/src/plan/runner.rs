@@ -19,6 +19,7 @@
 use std::collections::HashMap;
 
 use crate::tensor::Tensor;
+use crate::trace::{names as trace_names, TRACK_ENGINE};
 use crate::webgpu::bindgroup::{BindGroupDesc, BindGroupEntry, BindGroupId};
 use crate::webgpu::{
     BufferDesc, BufferId, BufferUsage, CommandEncoderId, Device, KernelRunner,
@@ -364,6 +365,24 @@ impl PlanRunner {
         ring_idx: usize,
         kv: Option<&DeviceKvCache>,
     ) -> Result<(HashMap<String, Tensor>, Option<BufferId>, ReplayDelta)> {
+        // REPLAY span wraps the whole replay; closed on both Ok and Err
+        // paths so fault-injected failures keep the span stack balanced.
+        let t0 = device.clock.now_ns();
+        device.trace.begin(trace_names::REPLAY, TRACK_ENGINE, t0);
+        let res = self.replay_inner(device, runner, inputs, ring_idx, kv);
+        let t1 = device.clock.now_ns();
+        device.trace.end(trace_names::REPLAY, TRACK_ENGINE, t1);
+        res
+    }
+
+    fn replay_inner(
+        &mut self,
+        device: &mut Device,
+        runner: &dyn KernelRunner,
+        inputs: &HashMap<String, Tensor>,
+        ring_idx: usize,
+        kv: Option<&DeviceKvCache>,
+    ) -> Result<(HashMap<String, Tensor>, Option<BufferId>, ReplayDelta)> {
         if self.plan.logits.is_some() && ring_idx >= self.logits_ring.len() {
             return Err(Error::Graph(format!(
                 "ring index {ring_idx} >= logits ring size {}",
@@ -403,6 +422,7 @@ impl PlanRunner {
         for (i, step) in self.plan.steps.iter().enumerate() {
             match step {
                 Step::Dispatch(d) => {
+                    let t_op = device.clock.now_ns();
                     // Planned framework cost: the replay loop's per-step
                     // bookkeeping, orders of magnitude below the eager
                     // interpreter's per-op cost.
@@ -437,6 +457,13 @@ impl PlanRunner {
                     };
                     device.set_bind_group(e, group)?;
                     device.dispatch_workgroups(e, d.grid.0, d.grid.1, d.grid.2)?;
+                    if device.trace.on() {
+                        // Retroactive per-op span carrying the fx node name:
+                        // framework share + encode phases for this dispatch.
+                        let op = device.trace.intern(&d.name);
+                        let now = device.clock.now_ns();
+                        device.trace.complete(op, TRACK_ENGINE, t_op, now - t_op, 0);
+                    }
                     delta.dispatches += 1;
                     pending += 1;
                     if pending >= self.plan.dispatches_per_submit {

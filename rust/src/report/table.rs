@@ -58,9 +58,11 @@ impl TableDoc {
     /// `faults` + `recov` columns and `+faults(seed=N)` mode labels;
     /// bumped to 6 when paged KV residency added S1/P1's
     /// `blocks (res/spilled)` + `KV (B/tok)` columns and `+paged(b=N)`
-    /// mode labels — downstream trend tooling keys on this to re-align
-    /// columns.
-    pub const SCHEMA_VERSION: u32 = 6;
+    /// mode labels; bumped to 7 when the observability layer added S2's
+    /// histogram-backed `(ttft p50/p99 ms)` + `(itl p50/p99 ms)` rows and
+    /// the `wdb trace-summary` T1 table — downstream trend tooling keys
+    /// on this to re-align columns.
+    pub const SCHEMA_VERSION: u32 = 7;
 
     /// JSON form for `report::write_results`
     /// (schema/id/title/columns/rows/notes), matching the layout
@@ -181,7 +183,7 @@ mod tests {
             v.get("schema").and_then(|s| s.as_f64()),
             Some(TableDoc::SCHEMA_VERSION as f64)
         );
-        assert_eq!(TableDoc::SCHEMA_VERSION, 6);
+        assert_eq!(TableDoc::SCHEMA_VERSION, 7);
     }
 
     #[test]

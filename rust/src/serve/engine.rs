@@ -275,6 +275,11 @@ impl<'r> ServingEngine<'r> {
         };
         let mut device = Device::new(ec.profile.clone());
         device.kernel_time_policy = ec.kernel_time_policy;
+        // Install the span tracer before any instrumented path runs. The
+        // tracer only READS the virtual clock — it never advances it and
+        // never draws jitter — so Null/Ring/Chrome sinks produce
+        // bit-identical token and KV streams.
+        device.trace = crate::trace::Tracer::new(&ec.trace);
         if batch_width >= 2 {
             // The batched cache ops bind 2W per-slot cache buffers plus q
             // and 3 per-slot uniforms in one group — above the 8-binding
@@ -722,6 +727,13 @@ impl<'r> ServingEngine<'r> {
                 Err(e) if e.is_transient() && attempt < MAX_MAP_RETRIES => {
                     attempt += 1;
                     *retries += 1;
+                    let ts = device.clock.now_ns();
+                    device.trace.instant(
+                        crate::trace::names::RETRY,
+                        crate::trace::TRACK_ENGINE,
+                        ts,
+                        u64::from(attempt),
+                    );
                 }
                 Err(e) => return Err(e),
             }
@@ -954,6 +966,15 @@ impl<'r> ServingEngine<'r> {
                 pool.arena.free_group(g);
                 pool.arena.note_page_out();
             }
+            if !groups.is_empty() {
+                let ts = executor.device.clock.now_ns();
+                executor.device.trace.instant(
+                    crate::trace::names::PAGE_OUT,
+                    crate::trace::TRACK_PAGER,
+                    ts,
+                    groups.len() as u64,
+                );
+            }
         }
 
         // Grant + hydrate the members' missing blocks, in block order.
@@ -998,6 +1019,13 @@ impl<'r> ServingEngine<'r> {
                         Error::Internal("paged pool vanished mid-pass".into())
                     })?;
                     pool.arena.note_page_in();
+                    let ts = executor.device.clock.now_ns();
+                    executor.device.trace.instant(
+                        crate::trace::names::PAGE_IN,
+                        crate::trace::TRACK_PAGER,
+                        ts,
+                        1,
+                    );
                 } else {
                     // Fresh block: the replay's cache_update scatter writes
                     // it; no upload. Slots grow densely from the left.
@@ -1026,10 +1054,24 @@ impl<'r> ServingEngine<'r> {
         let fw0 = self.executor.framework_virtual_ns;
         let w0 = self.executor.device.stats.bytes_written;
         let c0 = self.executor.device.clock.now_ns();
-        {
+        self.executor.device.trace.begin(
+            crate::trace::names::PAGER,
+            crate::trace::TRACK_PAGER,
+            c0,
+        );
+        let res = {
             let ServingEngine { executor, active, dims, pager_clock, .. } = &mut *self;
-            Self::ensure_resident(executor, active, dims, members, pager_clock)?;
-        }
+            Self::ensure_resident(executor, active, dims, members, pager_clock)
+        };
+        // End the PAGER span on BOTH paths so a fault mid-pass leaves the
+        // trace balanced.
+        let c1 = self.executor.device.clock.now_ns();
+        self.executor.device.trace.end(
+            crate::trace::names::PAGER,
+            crate::trace::TRACK_PAGER,
+            c1,
+        );
+        res?;
         let tl = self.executor.device.timeline.virtual_ns;
         let kernel_d = self.executor.device.timeline.kernel_virtual_ns - k0;
         let sync_d = self.executor.device.timeline.sync_virtual_ns - sy0;
@@ -1037,16 +1079,17 @@ impl<'r> ServingEngine<'r> {
         let upload_d = self.executor.device.stats.bytes_written - w0;
         let encode_d = self.executor.device.clock.now_ns() - c0;
         let k = members.len() as u64;
+        let rot = self.rounds;
         for (j, &(i, _)) in members.iter().enumerate() {
             let s = &mut self.active[i];
             for p in 0..8 {
-                s.metrics.phase_virtual_ns[p] += share(tl[p] - ph0[p], k, j);
+                s.metrics.phase_virtual_ns[p] += share(tl[p] - ph0[p], k, j, rot);
             }
-            s.metrics.kernel_virtual_ns += share(kernel_d, k, j);
-            s.metrics.sync_virtual_ns += share(sync_d, k, j);
-            s.metrics.framework_virtual_ns += share(fw_d, k, j);
-            s.metrics.upload_bytes += share(upload_d, k, j);
-            s.metrics.encode_virtual_ns += share(encode_d, k, j);
+            s.metrics.kernel_virtual_ns += share(kernel_d, k, j, rot);
+            s.metrics.sync_virtual_ns += share(sync_d, k, j, rot);
+            s.metrics.framework_virtual_ns += share(fw_d, k, j, rot);
+            s.metrics.upload_bytes += share(upload_d, k, j, rot);
+            s.metrics.encode_virtual_ns += share(encode_d, k, j, rot);
         }
         let resident = Self::count_resident(&self.active);
         self.resident_sessions_hw = self.resident_sessions_hw.max(resident);
@@ -1265,6 +1308,11 @@ impl<'r> ServingEngine<'r> {
         s.metrics.dispatches += tl.dispatches() - d0;
         let now = executor.device.clock.now_ns();
         s.note_token(next, now);
+        let track = s
+            .slot
+            .map(crate::trace::slot_track)
+            .unwrap_or(crate::trace::TRACK_ENGINE);
+        executor.device.trace.instant(crate::trace::names::TOKEN, track, now, next as u64);
         Ok(next)
     }
 
@@ -1325,6 +1373,28 @@ impl<'r> ServingEngine<'r> {
     /// variant, whose per-session argmax dispatch expects single-row
     /// logits) keep the interleaved path byte-for-byte.
     pub fn step_round(&mut self) -> Result<usize> {
+        // ROUND span around the whole scheduler round. Begin/end fire on
+        // both the Ok and Err paths so faulted rounds leave the trace
+        // balanced, and the round-duration histogram feeds the report's
+        // percentile rows regardless of sink.
+        let t0 = self.executor.device.clock.now_ns();
+        self.executor.device.trace.begin(
+            crate::trace::names::ROUND,
+            crate::trace::TRACK_ENGINE,
+            t0,
+        );
+        let res = self.step_round_inner();
+        let t1 = self.executor.device.clock.now_ns();
+        self.executor.device.trace.end(
+            crate::trace::names::ROUND,
+            crate::trace::TRACK_ENGINE,
+            t1,
+        );
+        self.executor.device.trace.metrics.round_ns.record(t1 - t0);
+        res
+    }
+
+    fn step_round_inner(&mut self) -> Result<usize> {
         self.sweep_failed()?;
         self.admit()?;
         let n = self.active.len();
@@ -1401,6 +1471,17 @@ impl<'r> ServingEngine<'r> {
         *retries += 1;
         for &(i, snap) in snaps {
             let s = &mut active[i];
+            let ts = executor.device.clock.now_ns();
+            let track = s
+                .slot
+                .map(crate::trace::slot_track)
+                .unwrap_or(crate::trace::TRACK_ENGINE);
+            executor.device.trace.instant(
+                crate::trace::names::QUARANTINE,
+                track,
+                ts,
+                s.id,
+            );
             s.rollback(snap);
             // Checkpoint-by-spill: the evict-to-host path IS the snapshot
             // store — the session resumes from recycled pool buffers via
@@ -1511,10 +1592,11 @@ impl<'r> ServingEngine<'r> {
             // Split the shared sync exactly across participants (remainder
             // to the first) so per-session sums match the device timeline.
             let k = buf_ids.len() as u64;
+            let rot = self.rounds;
             let mut j = 0usize;
             for (i, h) in &handles {
                 if h.logits_buf.is_some() {
-                    self.active[*i].metrics.sync_virtual_ns += share(sync_cost, k, j);
+                    self.active[*i].metrics.sync_virtual_ns += share(sync_cost, k, j, rot);
                     j += 1;
                 }
             }
@@ -1535,6 +1617,16 @@ impl<'r> ServingEngine<'r> {
                 let s = &mut self.active[i];
                 s.retries = 0;
                 s.note_token(next, now);
+                let track = s
+                    .slot
+                    .map(crate::trace::slot_track)
+                    .unwrap_or(crate::trace::TRACK_ENGINE);
+                self.executor.device.trace.instant(
+                    crate::trace::names::TOKEN,
+                    track,
+                    now,
+                    next as u64,
+                );
             }
         }
         Ok(())
@@ -1641,6 +1733,40 @@ impl<'r> ServingEngine<'r> {
     /// the one session. Returns the chunk for the round's readback ONLY
     /// when it consumed the final prompt token.
     fn encode_prefill_chunk(&mut self, i: usize, ring: usize) -> Result<Option<EncodedChunk>> {
+        let t0 = self.executor.device.clock.now_ns();
+        self.executor.device.trace.begin(
+            crate::trace::names::CHUNK,
+            crate::trace::TRACK_ENGINE,
+            t0,
+        );
+        let res = self.encode_prefill_chunk_inner(i, ring);
+        let t1 = self.executor.device.clock.now_ns();
+        self.executor.device.trace.end(
+            crate::trace::names::CHUNK,
+            crate::trace::TRACK_ENGINE,
+            t1,
+        );
+        // Per-slot step span over the whole chunk encode (the prefill
+        // chunk has exactly one owner).
+        if res.is_ok() && self.executor.device.trace.on() {
+            if let Some(slot) = self.active[i].slot {
+                self.executor.device.trace.complete(
+                    crate::trace::names::SLOT_STEP,
+                    crate::trace::slot_track(slot),
+                    t0,
+                    t1 - t0,
+                    self.active[i].id,
+                );
+            }
+        }
+        res
+    }
+
+    fn encode_prefill_chunk_inner(
+        &mut self,
+        i: usize,
+        ring: usize,
+    ) -> Result<Option<EncodedChunk>> {
         let chunk = self.prefill_chunk;
         let (hidden, max_seq) = (self.dims.hidden, self.dims.max_seq);
 
@@ -1751,6 +1877,34 @@ impl<'r> ServingEngine<'r> {
     /// One planned single-session decode encode (a mixed round's decode
     /// side when the batched path does not apply), as a round chunk.
     fn encode_decode_step(&mut self, i: usize) -> Result<EncodedChunk> {
+        let t0 = self.executor.device.clock.now_ns();
+        self.executor.device.trace.begin(
+            crate::trace::names::CHUNK,
+            crate::trace::TRACK_ENGINE,
+            t0,
+        );
+        let res = self.encode_decode_step_inner(i);
+        let t1 = self.executor.device.clock.now_ns();
+        self.executor.device.trace.end(
+            crate::trace::names::CHUNK,
+            crate::trace::TRACK_ENGINE,
+            t1,
+        );
+        if res.is_ok() && self.executor.device.trace.on() {
+            if let Some(slot) = self.active[i].slot {
+                self.executor.device.trace.complete(
+                    crate::trace::names::SLOT_STEP,
+                    crate::trace::slot_track(slot),
+                    t0,
+                    t1 - t0,
+                    self.active[i].id,
+                );
+            }
+        }
+        res
+    }
+
+    fn encode_decode_step_inner(&mut self, i: usize) -> Result<EncodedChunk> {
         self.pager_pass(&[(i, (self.active[i].pos + 1).min(self.dims.max_seq))])?;
         let ring = self.next_ring();
         let h = {
@@ -1814,6 +1968,27 @@ impl<'r> ServingEngine<'r> {
     /// for the slot layout). Fallible as a unit: any error leaves only the
     /// chunk's own members dirty, all at dead (masked) cache rows.
     fn encode_batched_chunk(
+        &mut self,
+        chunk_no: usize,
+        members: &[(usize, usize)],
+    ) -> Result<EncodedChunk> {
+        let t0 = self.executor.device.clock.now_ns();
+        self.executor.device.trace.begin(
+            crate::trace::names::CHUNK,
+            crate::trace::TRACK_ENGINE,
+            t0,
+        );
+        let res = self.encode_batched_chunk_inner(chunk_no, members);
+        let t1 = self.executor.device.clock.now_ns();
+        self.executor.device.trace.end(
+            crate::trace::names::CHUNK,
+            crate::trace::TRACK_ENGINE,
+            t1,
+        );
+        res
+    }
+
+    fn encode_batched_chunk_inner(
         &mut self,
         chunk_no: usize,
         members: &[(usize, usize)],
@@ -1927,17 +2102,18 @@ impl<'r> ServingEngine<'r> {
         let encode_d = self.executor.device.clock.now_ns() - c0;
         let now_enc = self.executor.device.clock.now_ns();
         let k = members.len() as u64;
+        let rot = self.rounds;
         for (j, &(row, i)) in members.iter().enumerate() {
             let s = &mut self.active[i];
             for p in 0..8 {
-                s.metrics.phase_virtual_ns[p] += share(tl[p] - ph0[p], k, j);
+                s.metrics.phase_virtual_ns[p] += share(tl[p] - ph0[p], k, j, rot);
             }
-            s.metrics.kernel_virtual_ns += share(kernel_d, k, j);
-            s.metrics.framework_virtual_ns += share(fw_d, k, j);
-            let dshare = share(disp_d, k, j);
+            s.metrics.kernel_virtual_ns += share(kernel_d, k, j, rot);
+            s.metrics.framework_virtual_ns += share(fw_d, k, j, rot);
+            let dshare = share(disp_d, k, j, rot);
             s.metrics.dispatches += dshare;
-            s.metrics.upload_bytes += share(upload_d, k, j);
-            s.metrics.encode_virtual_ns += share(encode_d, k, j);
+            s.metrics.upload_bytes += share(upload_d, k, j, rot);
+            s.metrics.encode_virtual_ns += share(encode_d, k, j, rot);
             s.metrics.steps += 1;
             if was_prompt[row] {
                 s.metrics.prefill_steps += 1;
@@ -1949,6 +2125,21 @@ impl<'r> ServingEngine<'r> {
             // The on-device scatter already appended this step's K/V.
             s.pos += 1;
             s.kv_hw = s.kv_hw.max(s.pos);
+        }
+        // Per-slot step spans: one retroactive Complete per member over
+        // the chunk's replay window, on the member's slot track.
+        if self.executor.device.trace.on() {
+            for &(_, i) in members {
+                if let Some(slot) = self.active[i].slot {
+                    self.executor.device.trace.complete(
+                        crate::trace::names::SLOT_STEP,
+                        crate::trace::slot_track(slot),
+                        c0,
+                        encode_d,
+                        self.active[i].id,
+                    );
+                }
+            }
         }
 
         Ok(EncodedChunk {
@@ -2062,6 +2253,27 @@ impl<'r> ServingEngine<'r> {
     /// rolled-back `pos`. Returns `None` for an all-intermediate chunk
     /// (nothing to read back this round).
     fn encode_unified_chunk(
+        &mut self,
+        chunk_no: usize,
+        members: &[(usize, usize)],
+    ) -> Result<Option<EncodedChunk>> {
+        let t0 = self.executor.device.clock.now_ns();
+        self.executor.device.trace.begin(
+            crate::trace::names::CHUNK,
+            crate::trace::TRACK_ENGINE,
+            t0,
+        );
+        let res = self.encode_unified_chunk_inner(chunk_no, members);
+        let t1 = self.executor.device.clock.now_ns();
+        self.executor.device.trace.end(
+            crate::trace::names::CHUNK,
+            crate::trace::TRACK_ENGINE,
+            t1,
+        );
+        res
+    }
+
+    fn encode_unified_chunk_inner(
         &mut self,
         chunk_no: usize,
         members: &[(usize, usize)],
@@ -2269,17 +2481,18 @@ impl<'r> ServingEngine<'r> {
             let encode_d = self.executor.device.clock.now_ns() - c0;
             let now_enc = self.executor.device.clock.now_ns();
             let k = members.len() as u64;
+            let rot = self.rounds;
             for (j, &(row, i)) in members.iter().enumerate() {
                 let s = &mut self.active[i];
                 for p in 0..8 {
-                    s.metrics.phase_virtual_ns[p] += share(tl[p] - ph0[p], k, j);
+                    s.metrics.phase_virtual_ns[p] += share(tl[p] - ph0[p], k, j, rot);
                 }
-                s.metrics.kernel_virtual_ns += share(kernel_d, k, j);
-                s.metrics.framework_virtual_ns += share(fw_d, k, j);
-                let dshare = share(disp_d, k, j);
+                s.metrics.kernel_virtual_ns += share(kernel_d, k, j, rot);
+                s.metrics.framework_virtual_ns += share(fw_d, k, j, rot);
+                let dshare = share(disp_d, k, j, rot);
                 s.metrics.dispatches += dshare;
-                s.metrics.upload_bytes += share(upload_d, k, j);
-                s.metrics.encode_virtual_ns += share(encode_d, k, j);
+                s.metrics.upload_bytes += share(upload_d, k, j, rot);
+                s.metrics.encode_virtual_ns += share(encode_d, k, j, rot);
                 // Step accounting stays token-granular: a C-token chunk
                 // is C prompt steps, a decode step is one.
                 s.metrics.steps += taken[row] as u64;
@@ -2298,6 +2511,21 @@ impl<'r> ServingEngine<'r> {
                 // arm's contiguous buffer keeps those bytes too, so the
                 // paged spill must preserve them for byte-identity).
                 s.kv_hw = s.kv_hw.max(rows_written[row]);
+            }
+            // Per-slot step spans: one retroactive Complete per member
+            // over the chunk's replay window, on the member's slot track.
+            if self.executor.device.trace.on() {
+                for &(_, i) in members {
+                    if let Some(slot) = self.active[i].slot {
+                        self.executor.device.trace.complete(
+                            crate::trace::names::SLOT_STEP,
+                            crate::trace::slot_track(slot),
+                            c0,
+                            encode_d,
+                            self.active[i].id,
+                        );
+                    }
+                }
             }
 
             // Readback membership: decode steps and FINAL prompt chunks
@@ -2373,19 +2601,30 @@ impl<'r> ServingEngine<'r> {
         let now = self.executor.device.clock.now_ns();
         let row_bytes = self.dims.vocab * 4;
         let k_all: u64 = chunks.iter().map(|c| c.owners.len() as u64).sum();
+        let rot = self.rounds;
         let mut j = 0usize;
         for (c, bytes) in chunks.iter().zip(&all_bytes) {
             for o in &c.owners {
                 let s = &mut self.active[o.session];
+                let track = s
+                    .slot
+                    .map(crate::trace::slot_track)
+                    .unwrap_or(crate::trace::TRACK_ENGINE);
                 // Tokens committed: the consecutive-fault streak is over
                 // (the sticky degrade rung and total_retries remain).
                 s.retries = 0;
-                s.metrics.sync_virtual_ns += share(sync_d, k_all, j);
+                s.metrics.sync_virtual_ns += share(sync_d, k_all, j, rot);
                 j += 1;
                 let Some(spec) = &o.spec else {
                     let next =
                         argmax_bytes(&bytes[o.row * row_bytes..(o.row + 1) * row_bytes]);
                     s.note_token(next, now);
+                    self.executor.device.trace.instant(
+                        crate::trace::names::TOKEN,
+                        track,
+                        now,
+                        next as u64,
+                    );
                     continue;
                 };
                 // Speculative accept/rollback. Row r's argmax is what
@@ -2420,6 +2659,14 @@ impl<'r> ServingEngine<'r> {
                 s.pos = spec.pos0 + emitted.len();
                 for &t in &emitted {
                     s.note_token(t, now);
+                }
+                for &t in &emitted {
+                    self.executor.device.trace.instant(
+                        crate::trace::names::TOKEN,
+                        track,
+                        now,
+                        t as u64,
+                    );
                 }
             }
         }
@@ -2742,7 +2989,33 @@ impl<'r> ServingEngine<'r> {
         report.recovered_sessions = self.recovered_sessions;
         report.failed_sessions = self.failed_sessions;
         report.fault_seed = self.fault_seed;
+        // Tracer-side observability: engine-level histograms (recorded
+        // regardless of sink) and the event ledger.
+        report.round_hist = self.executor.device.trace.metrics.round_ns.clone();
+        report.map_wait_hist = self.executor.device.trace.metrics.map_wait_ns.clone();
+        report.trace_events = self.executor.device.trace.total_events();
+        report.trace_dropped_events = self.executor.device.trace.dropped_events();
         Ok(report)
+    }
+
+    /// The device's span tracer (read access for export/inspection).
+    pub fn tracer(&self) -> &crate::trace::Tracer {
+        &self.executor.device.trace
+    }
+
+    /// Export the retained trace as a Chrome-trace JSON document. The
+    /// `otherData` block carries the report's wall-clock so
+    /// `wdb trace-summary` can prove the ROUND spans tile it exactly.
+    pub fn export_chrome_trace(&self, report: &ServeReport) -> crate::report::json::Value {
+        crate::trace::chrome::export(
+            &self.executor.device.trace,
+            &[
+                ("wall_virtual_ns", report.wall_virtual_ns as f64),
+                ("rounds", report.rounds as f64),
+                ("total_events", self.executor.device.trace.total_events() as f64),
+                ("dropped_events", self.executor.device.trace.dropped_events() as f64),
+            ],
+        )
     }
 
     /// Take ownership of the retired sessions (completion order).
@@ -2751,15 +3024,46 @@ impl<'r> ServingEngine<'r> {
     }
 }
 
-/// Split a shared per-chunk cost evenly across its `k` participants
-/// (remainder to the first) so per-session sums keep tiling the engine
-/// totals exactly — the same convention as the coalesced-sync split.
-fn share(total: u64, k: u64, j: usize) -> u64 {
+/// Split a shared per-chunk cost evenly across its `k` participants so
+/// per-session sums keep tiling the engine totals exactly — the same
+/// convention as the coalesced-sync split. The sub-`k` remainder rotates
+/// with `rot` (the engine's round counter) instead of always landing on
+/// the first member: over a run the extra nanoseconds spread round-robin
+/// across positions, so position-0 sessions no longer accumulate a
+/// systematic per-round bias.
+fn share(total: u64, k: u64, j: usize, rot: u64) -> u64 {
     let base = total / k;
-    if j == 0 {
-        total - base * (k - 1)
-    } else {
-        base
+    let rem = total % k;
+    debug_assert_eq!(base * k + rem, total);
+    base + u64::from((j as u64 + rot) % k < rem)
+}
+
+#[cfg(test)]
+mod share_tests {
+    use super::share;
+
+    #[test]
+    fn share_tiles_exactly_for_every_rotation() {
+        for total in [0u64, 1, 7, 8, 9, 1_000_003] {
+            for k in 1u64..=9 {
+                for rot in 0u64..=9 {
+                    let sum: u64 =
+                        (0..k as usize).map(|j| share(total, k, j, rot)).sum();
+                    assert_eq!(sum, total, "total={total} k={k} rot={rot}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn share_rotates_the_remainder() {
+        // total=7, k=3: rem=1 lands on member (0 - rot) mod 3.
+        assert_eq!(share(7, 3, 0, 0), 3);
+        assert_eq!(share(7, 3, 1, 0), 2);
+        assert_eq!(share(7, 3, 2, 0), 2);
+        assert_eq!(share(7, 3, 0, 1), 2);
+        assert_eq!(share(7, 3, 2, 1), 3);
+        assert_eq!(share(7, 3, 1, 2), 3);
     }
 }
 

@@ -2,6 +2,7 @@
 //! serving bench harness table-ify.
 
 use super::session::SessionState;
+use crate::trace::Histogram;
 
 /// Aggregate results of one serving run (a batch of sessions driven to
 /// completion), in virtual ns of the shared device clock.
@@ -127,6 +128,25 @@ pub struct ServeReport {
     /// High-water mark of simultaneously KV-resident sessions — the
     /// density metric paged residency exists to raise at equal pool cap.
     pub resident_sessions_hw: u64,
+    /// Per-session TTFT distribution (ns; log-bucketed, ±6.25%). Means
+    /// stay the S1/S2 compat surface; the p50/p90/p99 accessors below
+    /// read these.
+    pub ttft_hist: Histogram,
+    /// Per-session prompt-ingestion latency distribution (ns).
+    pub prefill_hist: Histogram,
+    /// Inter-token latency distribution (ns): every per-decode-step delta
+    /// AFTER a session's first token, across sessions.
+    pub itl_hist: Histogram,
+    /// Scheduler-round duration distribution (ns), from the tracer's
+    /// metrics registry (recorded regardless of sink).
+    pub round_hist: Histogram,
+    /// Synchronizing map-read wait distribution (ns), from the tracer.
+    pub map_wait_hist: Histogram,
+    /// Trace events emitted over the run (every sink counts; Null retains
+    /// none of them).
+    pub trace_events: u64,
+    /// Trace events the ring sink overwrote (0 for Null/Chrome sinks).
+    pub trace_dropped_events: u64,
 }
 
 impl ServeReport {
@@ -151,6 +171,9 @@ impl ServeReport {
         let mut kv_blocks_spilled_hw = 0u64;
         let mut ttft_ms = Vec::with_capacity(n);
         let mut tps_sum = 0f64;
+        let mut ttft_hist = Histogram::new();
+        let mut prefill_hist = Histogram::new();
+        let mut itl_hist = Histogram::new();
         for s in sessions {
             for i in 0..8 {
                 phase[i] += s.metrics.phase_virtual_ns[i];
@@ -171,6 +194,13 @@ impl ServeReport {
             prefill_ms_sum += s.metrics.prefill_ns() as f64 / 1e6;
             first_decode_ms_sum += s.metrics.first_decode_ns() as f64 / 1e6;
             ttft_ms.push(s.metrics.ttft_ns() as f64 / 1e6);
+            ttft_hist.record(s.metrics.ttft_ns());
+            prefill_hist.record(s.metrics.prefill_ns());
+            // per_token_ns[0] is TTFT-from-admission; everything after is
+            // an inter-token delta.
+            for &d in s.metrics.per_token_ns.iter().skip(1) {
+                itl_hist.record(d);
+            }
             let gen_ns = s.metrics.generation_ns().max(1);
             tps_sum += s.tokens.len() as f64 / (gen_ns as f64 / 1e9);
         }
@@ -228,6 +258,13 @@ impl ServeReport {
             kv_blocks_hw,
             kv_blocks_spilled_hw,
             resident_sessions_hw: 0,
+            ttft_hist,
+            prefill_hist,
+            itl_hist,
+            round_hist: Histogram::new(),
+            map_wait_hist: Histogram::new(),
+            trace_events: 0,
+            trace_dropped_events: 0,
         }
     }
 
@@ -339,6 +376,33 @@ impl ServeReport {
         } else {
             self.accepted as f64 / self.drafted as f64
         }
+    }
+
+    // ------------------------- latency percentiles (histogram-backed) ----
+
+    /// Median request-level TTFT in ms (0.0 with no sessions).
+    pub fn ttft_p50_ms(&self) -> f64 {
+        self.ttft_hist.percentile(0.50) as f64 / 1e6
+    }
+
+    /// p90 request-level TTFT in ms.
+    pub fn ttft_p90_ms(&self) -> f64 {
+        self.ttft_hist.percentile(0.90) as f64 / 1e6
+    }
+
+    /// p99 request-level TTFT in ms.
+    pub fn ttft_p99_ms(&self) -> f64 {
+        self.ttft_hist.percentile(0.99) as f64 / 1e6
+    }
+
+    /// Median inter-token latency in ms (0.0 with single-token sessions).
+    pub fn itl_p50_ms(&self) -> f64 {
+        self.itl_hist.percentile(0.50) as f64 / 1e6
+    }
+
+    /// p99 inter-token latency in ms.
+    pub fn itl_p99_ms(&self) -> f64 {
+        self.itl_hist.percentile(0.99) as f64 / 1e6
     }
 }
 

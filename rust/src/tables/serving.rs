@@ -155,16 +155,28 @@ pub fn phase_attribution_table(rows: &[(usize, ServeReport)]) -> TableDoc {
     let mut fw_cells = vec!["(framework)".to_string()];
     let mut pf_cells = vec!["(prefill ms)".to_string()];
     let mut fd_cells = vec!["(first decode ms)".to_string()];
+    let mut ttft_p50_cells = vec!["(ttft p50 ms)".to_string()];
+    let mut ttft_p99_cells = vec!["(ttft p99 ms)".to_string()];
+    let mut itl_p50_cells = vec!["(itl p50 ms)".to_string()];
+    let mut itl_p99_cells = vec!["(itl p99 ms)".to_string()];
     for (_, r) in rows {
         sync_cells.push(f2(r.us_per_token(r.sync_virtual_ns)));
         fw_cells.push(f2(r.us_per_token(r.framework_virtual_ns)));
         pf_cells.push(f2(r.mean_prefill_ms));
         fd_cells.push(f2(r.mean_first_decode_ms));
+        ttft_p50_cells.push(f2(r.ttft_p50_ms()));
+        ttft_p99_cells.push(f2(r.ttft_p99_ms()));
+        itl_p50_cells.push(f2(r.itl_p50_ms()));
+        itl_p99_cells.push(f2(r.itl_p99_ms()));
     }
     t.row(sync_cells);
     t.row(fw_cells);
     t.row(pf_cells);
     t.row(fd_cells);
+    t.row(ttft_p50_cells);
+    t.row(ttft_p99_cells);
+    t.row(itl_p50_cells);
+    t.row(itl_p99_cells);
     t.note(
         "Phase costs per token are flat in N (per-dispatch, Table 20 \
          proportions); the (sync) row falls ~1/N as the coalesced readback \
@@ -176,6 +188,13 @@ pub fn phase_attribution_table(rows: &[(usize, ServeReport)]) -> TableDoc {
          part chunked prefill collapses ~C x); (first decode ms) is the \
          first generated token's readback/sync tail. Both are absolute \
          milliseconds, not per-token rates.",
+    );
+    t.note(
+        "Latency percentiles (schema v7): (ttft p50/p99 ms) are per-\
+         session request-level TTFT quantiles, (itl p50/p99 ms) are \
+         inter-token-delta quantiles across all sessions' decode steps. \
+         Histogram-backed (log-bucketed, ±6.25%); means above stay the \
+         pre-v7 compat surface.",
     );
     t
 }
@@ -235,12 +254,17 @@ mod tests {
         let rows = vec![(1, fake_report(1, 4))];
         let t = phase_attribution_table(&rows);
         // 8 phases + sync + framework + prefill/first-decode TTFT split
-        assert_eq!(t.rows.len(), 8 + 4);
+        // + TTFT/ITL percentile rows (schema v7)
+        assert_eq!(t.rows.len(), 8 + 8);
         let md = t.to_markdown();
         assert!(md.contains("submit"));
         assert!(md.contains("(sync)"));
         assert!(md.contains("(prefill ms)"));
         assert!(md.contains("(first decode ms)"));
+        assert!(md.contains("(ttft p50 ms)"));
+        assert!(md.contains("(ttft p99 ms)"));
+        assert!(md.contains("(itl p50 ms)"));
+        assert!(md.contains("(itl p99 ms)"));
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Chrome-trace (chrome://tracing / Perfetto) JSON export + shape checker.
+//!
+//! One `pid` (the engine process), one `tid` per trace track: `tid 0` is
+//! the engine lane, `tid 1` the pager, `tid 10+i` batch slot `i`. Span
+//! begin/end pairs export as `B`/`E`, retroactive spans as `X` (with
+//! `dur`), point events as `i`. Timestamps are virtual-clock nanoseconds
+//! scaled to the microseconds the format expects.
+
+use std::collections::BTreeSet;
+
+use crate::report::json::{arr, num, obj, s, Value};
+use crate::{Error, Result};
+
+use super::{EventKind, TraceEvent, Tracer, SLOT_TRACK_BASE, TRACK_ENGINE, TRACK_PAGER};
+
+/// The single synthetic process id in exported traces.
+pub const PID: f64 = 1.0;
+
+fn track_label(track: u32) -> String {
+    match track {
+        TRACK_ENGINE => "engine".to_string(),
+        TRACK_PAGER => "pager".to_string(),
+        t if t >= SLOT_TRACK_BASE => format!("slot {}", t - SLOT_TRACK_BASE),
+        t => format!("track {t}"),
+    }
+}
+
+fn ts_us(ns: u64) -> f64 {
+    ns as f64 / 1000.0
+}
+
+/// Export the tracer's retained events as a Chrome-trace document.
+/// `other_data` lands in the top-level `otherData` object (the
+/// trace-summary tool uses `wall_virtual_ns` there for the tiling
+/// check).
+pub fn export(tracer: &Tracer, other_data: &[(&str, f64)]) -> Value {
+    let events = tracer.drain();
+    let mut out: Vec<Value> = Vec::with_capacity(events.len() + 8);
+
+    out.push(obj(vec![
+        ("name", s("process_name")),
+        ("ph", s("M")),
+        ("pid", num(PID)),
+        ("args", obj(vec![("name", s("wdb-serve"))])),
+    ]));
+    let tracks: BTreeSet<u32> = events.iter().map(|e| e.track).collect();
+    for &track in &tracks {
+        out.push(obj(vec![
+            ("name", s("thread_name")),
+            ("ph", s("M")),
+            ("pid", num(PID)),
+            ("tid", num(track as f64)),
+            ("args", obj(vec![("name", s(&track_label(track)))])),
+        ]));
+    }
+
+    for ev in &events {
+        out.push(event_json(tracer, ev));
+    }
+
+    let mut other: Vec<(&str, Value)> = Vec::with_capacity(other_data.len());
+    for (k, v) in other_data {
+        other.push((k, num(*v)));
+    }
+
+    obj(vec![
+        ("traceEvents", arr(out)),
+        ("displayTimeUnit", s("ns")),
+        ("otherData", obj(other)),
+    ])
+}
+
+fn event_json(tracer: &Tracer, ev: &TraceEvent) -> Value {
+    let mut fields: Vec<(&str, Value)> = vec![
+        ("name", s(tracer.name(ev.name))),
+        ("pid", num(PID)),
+        ("tid", num(ev.track as f64)),
+        ("ts", num(ts_us(ev.ts_ns))),
+        ("args", obj(vec![("arg", num(ev.arg as f64))])),
+    ];
+    match ev.kind {
+        EventKind::Begin => fields.push(("ph", s("B"))),
+        EventKind::End => fields.push(("ph", s("E"))),
+        EventKind::Complete => {
+            fields.push(("ph", s("X")));
+            fields.push(("dur", num(ts_us(ev.dur_ns))));
+        }
+        EventKind::Instant => {
+            fields.push(("ph", s("i")));
+            fields.push(("s", s("t")));
+        }
+    }
+    obj(fields)
+}
+
+/// Shape statistics from a validated Chrome-trace document.
+#[derive(Debug, Default)]
+pub struct ChromeStats {
+    pub events: usize,
+    /// Distinct non-metadata `tid`s seen.
+    pub tracks: usize,
+    /// Distinct slot lanes (`tid >= SLOT_TRACK_BASE`).
+    pub slot_tracks: usize,
+    pub complete_events: usize,
+    pub instant_events: usize,
+    /// Matched `B`/`E` span pairs.
+    pub span_pairs: usize,
+}
+
+fn field_f64(ev: &Value, key: &str) -> Result<f64> {
+    ev.req(key)?
+        .as_f64()
+        .ok_or_else(|| Error::Json(format!("trace event field '{key}' is not a number")))
+}
+
+/// Validate a Chrome-trace document: required fields per event
+/// (`ph`/`ts`/`pid`/`tid`, `dur` on `X`), and balanced LIFO `B`/`E`
+/// pairs per `(pid, tid)` lane. Returns shape stats for further checks.
+pub fn validate(doc: &Value) -> Result<ChromeStats> {
+    let events = doc
+        .req("traceEvents")?
+        .as_arr()
+        .ok_or_else(|| Error::Json("traceEvents is not an array".to_string()))?;
+    let mut stats = ChromeStats::default();
+    let mut tracks: BTreeSet<(u64, u64)> = BTreeSet::new();
+    let mut stacks: std::collections::HashMap<(u64, u64), Vec<String>> =
+        std::collections::HashMap::new();
+
+    for ev in events {
+        let ph = ev
+            .req("ph")?
+            .as_str()
+            .ok_or_else(|| Error::Json("trace event 'ph' is not a string".to_string()))?
+            .to_string();
+        let pid = field_f64(ev, "pid")? as u64;
+        if ph == "M" {
+            continue; // metadata carries no ts
+        }
+        let tid = field_f64(ev, "tid")? as u64;
+        let ts = field_f64(ev, "ts")?;
+        if ts < 0.0 {
+            return Err(Error::Json(format!("trace event has negative ts {ts}")));
+        }
+        let name = ev
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| Error::Json("trace event 'name' is not a string".to_string()))?
+            .to_string();
+        stats.events += 1;
+        tracks.insert((pid, tid));
+        match ph.as_str() {
+            "B" => stacks.entry((pid, tid)).or_default().push(name),
+            "E" => {
+                let stack = stacks.entry((pid, tid)).or_default();
+                match stack.pop() {
+                    Some(open) if open == name => stats.span_pairs += 1,
+                    Some(open) => {
+                        return Err(Error::Json(format!(
+                            "tid {tid}: E '{name}' closes B '{open}'"
+                        )));
+                    }
+                    None => {
+                        return Err(Error::Json(format!("tid {tid}: E '{name}' without B")));
+                    }
+                }
+            }
+            "X" => {
+                let dur = field_f64(ev, "dur")?;
+                if dur < 0.0 {
+                    return Err(Error::Json(format!("X event '{name}' has negative dur")));
+                }
+                stats.complete_events += 1;
+            }
+            "i" => stats.instant_events += 1,
+            other => {
+                return Err(Error::Json(format!("unexpected trace event phase '{other}'")));
+            }
+        }
+    }
+
+    for ((_, tid), stack) in &stacks {
+        if !stack.is_empty() {
+            return Err(Error::Json(format!(
+                "tid {tid}: {} unbalanced B event(s): {:?}",
+                stack.len(),
+                stack
+            )));
+        }
+    }
+
+    stats.tracks = tracks.len();
+    stats.slot_tracks = tracks.iter().filter(|(_, tid)| *tid >= SLOT_TRACK_BASE as u64).count();
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{names, slot_track, TraceConfig, TraceSinkKind};
+
+    fn chrome_tracer() -> Tracer {
+        Tracer::new(&TraceConfig { sink: TraceSinkKind::Chrome, ring: 0 })
+    }
+
+    #[test]
+    fn export_roundtrips_through_validator() {
+        let mut t = chrome_tracer();
+        t.begin(names::ROUND, TRACK_ENGINE, 1_000);
+        let op = t.intern("fx_matmul");
+        t.complete(op, TRACK_ENGINE, 1_100, 400, 0);
+        t.instant(names::TOKEN, slot_track(0), 1_600, 7);
+        t.end(names::ROUND, TRACK_ENGINE, 2_000);
+        let doc = export(&t, &[("wall_virtual_ns", 1_000.0)]);
+        let stats = validate(&doc).expect("exported trace must validate");
+        assert_eq!(stats.span_pairs, 1);
+        assert_eq!(stats.complete_events, 1);
+        assert_eq!(stats.instant_events, 1);
+        assert_eq!(stats.slot_tracks, 1);
+        assert_eq!(
+            doc.req("otherData").unwrap().req("wall_virtual_ns").unwrap().as_f64(),
+            Some(1_000.0)
+        );
+        // Survives serialize + reparse.
+        let text = crate::report::json::to_string_pretty(&doc);
+        let doc2 = crate::report::json::parse(&text).expect("reparse");
+        validate(&doc2).expect("reparsed trace must validate");
+    }
+
+    #[test]
+    fn validator_rejects_unbalanced_spans() {
+        let mut t = chrome_tracer();
+        t.begin(names::ROUND, TRACK_ENGINE, 0);
+        let doc = export(&t, &[]);
+        assert!(validate(&doc).is_err());
+    }
+
+    #[test]
+    fn validator_rejects_missing_fields() {
+        let doc = crate::report::json::parse(
+            r#"{"traceEvents": [{"name": "round", "ph": "B", "pid": 1}]}"#,
+        )
+        .unwrap();
+        assert!(validate(&doc).is_err());
+        let doc = crate::report::json::parse(
+            r#"{"traceEvents": [{"name": "op", "ph": "X", "pid": 1, "tid": 0, "ts": 5}]}"#,
+        )
+        .unwrap();
+        assert!(validate(&doc).is_err(), "X without dur must fail");
+    }
+}

@@ -1,0 +1,228 @@
+//! Streaming log-bucketed latency histograms.
+//!
+//! HDR-style: values below `1 << SUB_BITS` land in exact unit buckets;
+//! above that, each power-of-two octave is split into `1 << SUB_BITS`
+//! sub-buckets, bounding relative quantile error at ~1/2^SUB_BITS
+//! (±6.25% for SUB_BITS = 3). The bucket array is fixed-size and
+//! preallocated, so `record` never allocates — safe on the serving hot
+//! path. Percentiles are clamped to the observed `[min, max]` so small
+//! sample counts never report a value outside the data.
+
+/// Sub-bucket resolution: each octave is split into `1 << SUB_BITS` buckets.
+pub const SUB_BITS: u32 = 3;
+
+const SUB_COUNT: u64 = 1 << SUB_BITS;
+/// Highest index is for msb = 63: `((63 - SUB_BITS + 1) << SUB_BITS) + SUB_COUNT - 1`.
+const BUCKET_COUNT: usize = ((((63 - SUB_BITS) + 1) as usize) << SUB_BITS) + SUB_COUNT as usize;
+
+/// A fixed-capacity streaming histogram over `u64` samples (nanoseconds
+/// throughout this crate). Clone-able so reports can snapshot it.
+#[derive(Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count)
+            .field("sum", &self.sum)
+            .field("min", &self.min)
+            .field("max", &self.max)
+            .field("p50", &self.percentile(0.50))
+            .field("p99", &self.percentile(0.99))
+            .finish()
+    }
+}
+
+fn bucket_index(v: u64) -> usize {
+    if v < SUB_COUNT {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let shift = msb - SUB_BITS;
+    let octave = (msb - SUB_BITS + 1) as usize;
+    (octave << SUB_BITS) + ((v >> shift) & (SUB_COUNT - 1)) as usize
+}
+
+/// Midpoint of the value range covered by bucket `idx` (inverse of
+/// `bucket_index`, up to sub-bucket width).
+fn bucket_value(idx: usize) -> u64 {
+    let idx = idx as u64;
+    if idx < SUB_COUNT {
+        return idx;
+    }
+    let octave = idx >> SUB_BITS;
+    let sub = idx & (SUB_COUNT - 1);
+    let msb = octave as u32 + SUB_BITS - 1;
+    let width = 1u64 << (msb - SUB_BITS);
+    (1u64 << msb) + sub * width + width / 2
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; BUCKET_COUNT], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    /// Record one sample. Never allocates.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile `q` in `[0, 1]`: the representative value of the bucket
+    /// holding the `ceil(q * count)`-th sample, clamped to `[min, max]`.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= target {
+                return bucket_value(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram's samples into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, &o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = Histogram::new();
+        for v in 0..8 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.sum(), 28);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 7);
+        assert_eq!(h.percentile(0.0), 0);
+        assert_eq!(h.percentile(1.0), 7);
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_in_range() {
+        let mut last = 0usize;
+        for shift in 0..64u32 {
+            let v = 1u64 << shift;
+            for probe in [v, v + v / 3, v + v / 2, (v - 1).max(1)] {
+                let idx = bucket_index(probe);
+                assert!(idx < BUCKET_COUNT, "idx {idx} out of range for {probe}");
+            }
+            let idx = bucket_index(v);
+            assert!(idx >= last, "index not monotone at {v}");
+            last = idx;
+        }
+        assert!(bucket_index(u64::MAX) < BUCKET_COUNT);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut h = Histogram::new();
+        for v in [1_000u64, 10_000, 100_000, 1_000_000, 10_000_000] {
+            h.record(v);
+        }
+        // Each recorded value is its own percentile step; the reported
+        // quantile must be within one sub-bucket (±12.5% worst case for
+        // SUB_BITS=3 at bucket edges).
+        let p50 = h.percentile(0.5) as f64;
+        assert!((p50 - 100_000.0).abs() / 100_000.0 < 0.125, "p50 = {p50}");
+        let p99 = h.percentile(0.99) as f64;
+        assert!((p99 - 10_000_000.0).abs() / 10_000_000.0 < 0.125, "p99 = {p99}");
+    }
+
+    #[test]
+    fn percentiles_clamped_to_observed_range() {
+        let mut h = Histogram::new();
+        h.record(1_000_003);
+        assert_eq!(h.percentile(0.5), 1_000_003);
+        assert_eq!(h.percentile(0.99), 1_000_003);
+        assert_eq!(h.min(), 1_000_003);
+        assert_eq!(h.max(), 1_000_003);
+    }
+
+    #[test]
+    fn merge_folds_counts() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(10);
+        b.record(1_000_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), 10);
+        assert_eq!(a.max(), 1_000_000);
+    }
+
+    #[test]
+    fn empty_histogram_is_calm() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert!(h.is_empty());
+    }
+}

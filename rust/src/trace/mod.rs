@@ -1,0 +1,410 @@
+//! Span-level serving tracer and metrics registry.
+//!
+//! The paper's attribution argument (per-dispatch overhead only becomes
+//! actionable once API time is separated from kernel time) needs an
+//! in-engine record of *where inside a round* virtual time lands. This
+//! module provides that record at near-zero cost when disabled:
+//!
+//! - [`TraceEvent`] — a fixed-size (no heap payload) event: nested span
+//!   begin/end pairs, retroactive complete spans, or point instants, on
+//!   per-slot tracks plus dedicated engine/pager tracks.
+//! - [`Tracer`] — the emitter owned by the simulated `Device`. It holds
+//!   an interned name table (well-known names preallocated, fx op names
+//!   interned on first encounter — the only hot-path allocation, and
+//!   only during warmup) and a [`MetricsRegistry`] of streaming
+//!   histograms that record regardless of the active sink.
+//! - [`sink`] — `Null` (default), `Ring` (fixed capacity, drop-oldest),
+//!   and `Chrome` (unbounded, for `--trace-out`) sinks behind the
+//!   [`TraceSink`] trait.
+//!
+//! Determinism contract: instrumentation only *reads* the virtual clock
+//! — it never advances it and never draws jitter — so token streams and
+//! KV bytes are bit-identical across `Null`/`Ring`/`Chrome` sinks. The
+//! differential schedule suite pins this across all 50 seeds.
+
+pub mod chrome;
+pub mod hist;
+pub mod sink;
+pub mod summary;
+
+use std::collections::HashMap;
+
+pub use hist::Histogram;
+pub use sink::{ChromeSink, NullSink, RingSink, TraceSink};
+
+/// Interned event-name handle (index into the tracer's name table).
+pub type NameId = u32;
+/// Timeline lane. Maps to `tid` in the Chrome-trace export.
+pub type Track = u32;
+
+/// Engine-wide events: rounds, chunks, replays, dispatches, uploads.
+pub const TRACK_ENGINE: Track = 0;
+/// Pager activity: residency passes, page-in/page-out instants.
+pub const TRACK_PAGER: Track = 1;
+/// Per-slot tracks start here: slot `i` lives on track `10 + i`.
+pub const SLOT_TRACK_BASE: Track = 10;
+
+/// Track for batch slot `slot` (one Chrome-trace lane per slot).
+pub fn slot_track(slot: usize) -> Track {
+    SLOT_TRACK_BASE + slot as Track
+}
+
+/// Well-known (pre-interned) event names. Op-level dispatch events use
+/// lazily interned fx node names instead.
+pub mod names {
+    use super::NameId;
+
+    pub const ROUND: NameId = 0;
+    pub const CHUNK: NameId = 1;
+    pub const REPLAY: NameId = 2;
+    pub const UPLOAD: NameId = 3;
+    pub const READBACK: NameId = 4;
+    pub const PAGER: NameId = 5;
+    pub const PAGE_IN: NameId = 6;
+    pub const PAGE_OUT: NameId = 7;
+    pub const QUARANTINE: NameId = 8;
+    pub const RETRY: NameId = 9;
+    pub const FAULT: NameId = 10;
+    pub const TOKEN: NameId = 11;
+    pub const SLOT_STEP: NameId = 12;
+
+    /// Table order must match the constants above.
+    pub const WELL_KNOWN: &[&str] = &[
+        "round",
+        "chunk",
+        "replay",
+        "upload",
+        "readback",
+        "pager",
+        "page_in",
+        "page_out",
+        "quarantine",
+        "retry",
+        "fault",
+        "token",
+        "slot_step",
+    ];
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Span open (Chrome `B`). Must be balanced by an `End` on the same
+    /// track, LIFO-nested.
+    Begin,
+    /// Span close (Chrome `E`).
+    End,
+    /// Retroactive span (Chrome `X`): emitted once, after the fact, with
+    /// `ts_ns` + `dur_ns`. Used for leaf spans (dispatch/upload/readback/
+    /// slot-step) so fault error paths can never leave them unbalanced.
+    Complete,
+    /// Point event (Chrome `i`): page-in/out, quarantine, retry, fault,
+    /// token.
+    Instant,
+}
+
+/// Fixed-size trace record; no heap payload, so the ring sink can hold
+/// them inline.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    pub name: NameId,
+    pub track: Track,
+    /// Virtual-clock timestamp (ns).
+    pub ts_ns: u64,
+    /// Span length for `Complete` events; 0 otherwise.
+    pub dur_ns: u64,
+    /// Free-form attribution payload (session id, byte count, fault
+    /// kind, token id — per event name).
+    pub arg: u64,
+}
+
+/// Which sink a tracer should be built with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceSinkKind {
+    /// Discard events (histograms still record). The serving default.
+    #[default]
+    Null,
+    /// Keep the most recent `ring` events in a fixed-capacity buffer.
+    Ring,
+    /// Keep everything for Chrome-trace export.
+    Chrome,
+}
+
+/// Default `--trace-ring` capacity.
+pub const DEFAULT_RING_CAPACITY: usize = 65_536;
+
+/// Tracer configuration carried on `EngineConfig`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceConfig {
+    pub sink: TraceSinkKind,
+    /// Ring capacity (events) when `sink == Ring`.
+    pub ring: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { sink: TraceSinkKind::Null, ring: DEFAULT_RING_CAPACITY }
+    }
+}
+
+/// Streaming histograms recorded on the hot path regardless of sink, so
+/// percentile reporting never depends on event retention.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    /// `step_round` wall time per round (ns, virtual).
+    pub round_ns: Histogram,
+    /// Map-read stall per coalesced readback (ns, virtual): the CPU-side
+    /// wait from map request to buffer availability.
+    pub map_wait_ns: Histogram,
+}
+
+enum SinkImpl {
+    Null(NullSink),
+    Ring(RingSink),
+    Chrome(ChromeSink),
+}
+
+impl SinkImpl {
+    fn as_dyn(&self) -> &dyn TraceSink {
+        match self {
+            SinkImpl::Null(s) => s,
+            SinkImpl::Ring(s) => s,
+            SinkImpl::Chrome(s) => s,
+        }
+    }
+
+    fn as_dyn_mut(&mut self) -> &mut dyn TraceSink {
+        match self {
+            SinkImpl::Null(s) => s,
+            SinkImpl::Ring(s) => s,
+            SinkImpl::Chrome(s) => s,
+        }
+    }
+}
+
+/// The span tracer. Owned by the simulated `Device` so every layer that
+/// can reach `&mut Device` (runner, executor, serving engine) can emit
+/// without extra plumbing.
+pub struct Tracer {
+    enabled: bool,
+    names: Vec<String>,
+    lookup: HashMap<String, NameId>,
+    sink: SinkImpl,
+    /// Always-on streaming histograms (round duration, map-read wait).
+    pub metrics: MetricsRegistry,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("enabled", &self.enabled)
+            .field("names", &self.names.len())
+            .field("total_events", &self.total_events())
+            .field("dropped_events", &self.dropped_events())
+            .finish()
+    }
+}
+
+impl Tracer {
+    /// A tracer that records histograms but emits no events. This is
+    /// what a bare `Device` gets; the serving engine replaces it per
+    /// `TraceConfig`.
+    pub fn disabled() -> Self {
+        Self::build(false, SinkImpl::Null(NullSink::default()))
+    }
+
+    pub fn new(cfg: &TraceConfig) -> Self {
+        match cfg.sink {
+            TraceSinkKind::Null => Self::disabled(),
+            TraceSinkKind::Ring => Self::build(true, SinkImpl::Ring(RingSink::new(cfg.ring))),
+            TraceSinkKind::Chrome => Self::build(true, SinkImpl::Chrome(ChromeSink::default())),
+        }
+    }
+
+    fn build(enabled: bool, sink: SinkImpl) -> Self {
+        let names: Vec<String> = names::WELL_KNOWN.iter().map(|s| s.to_string()).collect();
+        let lookup = names.iter().enumerate().map(|(i, n)| (n.clone(), i as NameId)).collect();
+        Self { enabled, names, lookup, sink, metrics: MetricsRegistry::default() }
+    }
+
+    /// Whether event emission is live. Call sites that would do extra
+    /// work to *prepare* an event (name interning, attribution loops)
+    /// should gate on this; the emitters below also check it.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.enabled
+    }
+
+    /// Intern an event name (fx op names). Allocates only on first
+    /// encounter of a given name — warmup, in steady state it is one
+    /// hash lookup.
+    pub fn intern(&mut self, name: &str) -> NameId {
+        if let Some(&id) = self.lookup.get(name) {
+            return id;
+        }
+        let id = self.names.len() as NameId;
+        self.names.push(name.to_string());
+        self.lookup.insert(name.to_string(), id);
+        id
+    }
+
+    /// Resolve an interned id back to its name.
+    pub fn name(&self, id: NameId) -> &str {
+        self.names.get(id as usize).map(String::as_str).unwrap_or("?")
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    #[inline]
+    fn emit(&mut self, ev: TraceEvent) {
+        if self.enabled {
+            self.sink.as_dyn_mut().emit(ev);
+        }
+    }
+
+    /// Open a nested span on `track`.
+    #[inline]
+    pub fn begin(&mut self, name: NameId, track: Track, ts_ns: u64) {
+        self.emit(TraceEvent { kind: EventKind::Begin, name, track, ts_ns, dur_ns: 0, arg: 0 });
+    }
+
+    /// Close the innermost open span on `track`.
+    #[inline]
+    pub fn end(&mut self, name: NameId, track: Track, ts_ns: u64) {
+        self.emit(TraceEvent { kind: EventKind::End, name, track, ts_ns, dur_ns: 0, arg: 0 });
+    }
+
+    /// Emit a retroactive (complete) span.
+    #[inline]
+    pub fn complete(&mut self, name: NameId, track: Track, ts_ns: u64, dur_ns: u64, arg: u64) {
+        self.emit(TraceEvent { kind: EventKind::Complete, name, track, ts_ns, dur_ns, arg });
+    }
+
+    /// Emit a point event.
+    #[inline]
+    pub fn instant(&mut self, name: NameId, track: Track, ts_ns: u64, arg: u64) {
+        self.emit(TraceEvent { kind: EventKind::Instant, name, track, ts_ns, dur_ns: 0, arg });
+    }
+
+    /// Events currently retained by the sink, oldest first.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        self.sink.as_dyn().drain()
+    }
+
+    pub fn dropped_events(&self) -> u64 {
+        self.sink.as_dyn().dropped_events()
+    }
+
+    pub fn total_events(&self) -> u64 {
+        self.sink.as_dyn().total_events()
+    }
+}
+
+/// Check the span-stack invariant over an event stream: on every track,
+/// `Begin`/`End` pairs are balanced and LIFO-nested, and nothing is left
+/// open at the end. `Complete`/`Instant` events are exempt by
+/// construction. Only meaningful when the sink retained the full stream
+/// (ring large enough that `dropped_events() == 0`).
+pub fn validate_balance(events: &[TraceEvent]) -> std::result::Result<(), String> {
+    let mut stacks: HashMap<Track, Vec<NameId>> = HashMap::new();
+    for ev in events {
+        match ev.kind {
+            EventKind::Begin => stacks.entry(ev.track).or_default().push(ev.name),
+            EventKind::End => {
+                let stack = stacks.entry(ev.track).or_default();
+                match stack.pop() {
+                    Some(open) if open == ev.name => {}
+                    Some(open) => {
+                        return Err(format!(
+                            "track {}: end of name {} closes span of name {}",
+                            ev.track, ev.name, open
+                        ));
+                    }
+                    None => {
+                        return Err(format!(
+                            "track {}: end of name {} with no open span",
+                            ev.track, ev.name
+                        ));
+                    }
+                }
+            }
+            EventKind::Complete | EventKind::Instant => {}
+        }
+    }
+    for (track, stack) in &stacks {
+        if !stack.is_empty() {
+            return Err(format!("track {track}: {} span(s) left open", stack.len()));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring_tracer(cap: usize) -> Tracer {
+        Tracer::new(&TraceConfig { sink: TraceSinkKind::Ring, ring: cap })
+    }
+
+    #[test]
+    fn disabled_tracer_emits_nothing_but_records_metrics() {
+        let mut t = Tracer::disabled();
+        t.begin(names::ROUND, TRACK_ENGINE, 0);
+        t.end(names::ROUND, TRACK_ENGINE, 10);
+        t.metrics.round_ns.record(10);
+        assert_eq!(t.total_events(), 0);
+        assert!(t.drain().is_empty());
+        assert_eq!(t.metrics.round_ns.count(), 1);
+    }
+
+    #[test]
+    fn intern_is_stable_and_lazy() {
+        let mut t = ring_tracer(16);
+        let a = t.intern("fx_matmul_64x64");
+        let b = t.intern("fx_matmul_64x64");
+        assert_eq!(a, b);
+        assert_eq!(t.name(a), "fx_matmul_64x64");
+        // Well-known names resolve without interning.
+        assert_eq!(t.name(names::ROUND), "round");
+        assert_eq!(t.intern("round"), names::ROUND);
+    }
+
+    #[test]
+    fn balance_accepts_nested_and_rejects_crossed() {
+        let mut t = ring_tracer(64);
+        t.begin(names::ROUND, TRACK_ENGINE, 0);
+        t.begin(names::CHUNK, TRACK_ENGINE, 1);
+        t.complete(names::UPLOAD, TRACK_ENGINE, 2, 3, 0);
+        t.end(names::CHUNK, TRACK_ENGINE, 6);
+        t.end(names::ROUND, TRACK_ENGINE, 7);
+        assert!(validate_balance(&t.drain()).is_ok());
+
+        let mut t = ring_tracer(64);
+        t.begin(names::ROUND, TRACK_ENGINE, 0);
+        t.begin(names::CHUNK, TRACK_ENGINE, 1);
+        t.end(names::ROUND, TRACK_ENGINE, 2); // crossed
+        assert!(validate_balance(&t.drain()).is_err());
+
+        let mut t = ring_tracer(64);
+        t.begin(names::ROUND, TRACK_ENGINE, 0); // left open
+        assert!(validate_balance(&t.drain()).is_err());
+
+        let mut t = ring_tracer(64);
+        t.end(names::ROUND, TRACK_ENGINE, 0); // never opened
+        assert!(validate_balance(&t.drain()).is_err());
+    }
+
+    #[test]
+    fn tracks_balance_independently() {
+        let mut t = ring_tracer(64);
+        t.begin(names::ROUND, TRACK_ENGINE, 0);
+        t.begin(names::PAGER, TRACK_PAGER, 1);
+        t.end(names::PAGER, TRACK_PAGER, 2);
+        t.instant(names::TOKEN, slot_track(0), 3, 42);
+        t.end(names::ROUND, TRACK_ENGINE, 4);
+        assert!(validate_balance(&t.drain()).is_ok());
+    }
+}

@@ -1,0 +1,191 @@
+//! Trace sinks: where emitted [`TraceEvent`]s go.
+//!
+//! Three implementations with very different cost profiles:
+//! - [`NullSink`] — discards everything; the serving default. The only
+//!   per-event cost is the enabled-flag branch in the tracer itself.
+//! - [`RingSink`] — fixed-capacity preallocated ring. Overflow
+//!   overwrites the oldest event and bumps `dropped_events`; the buffer
+//!   never reallocates after construction.
+//! - [`ChromeSink`] — unbounded in-memory vector for chrome://tracing /
+//!   Perfetto export. Growable, so only used when `--trace-out` asks
+//!   for a full timeline.
+
+use super::TraceEvent;
+
+pub trait TraceSink {
+    /// Accept one event. Must not fail; drop policy is sink-specific.
+    fn emit(&mut self, ev: TraceEvent);
+
+    /// Events currently held, oldest first (chronological).
+    fn drain(&self) -> Vec<TraceEvent>;
+
+    /// Events discarded due to capacity (0 for unbounded sinks).
+    fn dropped_events(&self) -> u64;
+
+    /// Total events ever emitted (held + dropped + discarded).
+    fn total_events(&self) -> u64;
+}
+
+/// Discards every event; near-zero cost.
+#[derive(Debug, Default)]
+pub struct NullSink {
+    total: u64,
+}
+
+impl TraceSink for NullSink {
+    fn emit(&mut self, _ev: TraceEvent) {
+        self.total += 1;
+    }
+
+    fn drain(&self) -> Vec<TraceEvent> {
+        Vec::new()
+    }
+
+    fn dropped_events(&self) -> u64 {
+        0
+    }
+
+    fn total_events(&self) -> u64 {
+        self.total
+    }
+}
+
+/// Fixed-capacity ring buffer: keeps the most recent `capacity` events.
+#[derive(Debug)]
+pub struct RingSink {
+    buf: Vec<TraceEvent>,
+    capacity: usize,
+    /// Index of the oldest event once the ring has wrapped.
+    head: usize,
+    dropped: u64,
+    total: u64,
+}
+
+impl RingSink {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self { buf: Vec::with_capacity(capacity), capacity, head: 0, dropped: 0, total: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+impl TraceSink for RingSink {
+    fn emit(&mut self, ev: TraceEvent) {
+        self.total += 1;
+        if self.buf.len() < self.capacity {
+            self.buf.push(ev);
+        } else {
+            // Overwrite the oldest slot in place: no reallocation, ever.
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.capacity;
+            self.dropped += 1;
+        }
+    }
+
+    fn drain(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+
+    fn dropped_events(&self) -> u64 {
+        self.dropped
+    }
+
+    fn total_events(&self) -> u64 {
+        self.total
+    }
+}
+
+/// Unbounded sink feeding the Chrome-trace exporter.
+#[derive(Debug, Default)]
+pub struct ChromeSink {
+    buf: Vec<TraceEvent>,
+}
+
+impl TraceSink for ChromeSink {
+    fn emit(&mut self, ev: TraceEvent) {
+        self.buf.push(ev);
+    }
+
+    fn drain(&self) -> Vec<TraceEvent> {
+        self.buf.clone()
+    }
+
+    fn dropped_events(&self) -> u64 {
+        0
+    }
+
+    fn total_events(&self) -> u64 {
+        self.buf.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{EventKind, TRACK_ENGINE};
+
+    fn ev(ts: u64) -> TraceEvent {
+        TraceEvent {
+            kind: EventKind::Instant,
+            name: 0,
+            track: TRACK_ENGINE,
+            ts_ns: ts,
+            dur_ns: 0,
+            arg: 0,
+        }
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_without_reallocating() {
+        let mut ring = RingSink::new(4);
+        let base_ptr = ring.buf.as_ptr();
+        for t in 0..10 {
+            ring.emit(ev(t));
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.capacity(), 4);
+        assert_eq!(ring.dropped_events(), 6);
+        assert_eq!(ring.total_events(), 10);
+        // Oldest-first drain of the surviving tail.
+        let kept: Vec<u64> = ring.drain().iter().map(|e| e.ts_ns).collect();
+        assert_eq!(kept, vec![6, 7, 8, 9]);
+        // The backing storage was preallocated and never moved.
+        assert_eq!(ring.buf.as_ptr(), base_ptr);
+        assert_eq!(ring.buf.capacity(), 4);
+    }
+
+    #[test]
+    fn ring_under_capacity_keeps_everything() {
+        let mut ring = RingSink::new(8);
+        for t in 0..5 {
+            ring.emit(ev(t));
+        }
+        assert_eq!(ring.dropped_events(), 0);
+        let kept: Vec<u64> = ring.drain().iter().map(|e| e.ts_ns).collect();
+        assert_eq!(kept, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn null_sink_counts_but_keeps_nothing() {
+        let mut null = NullSink::default();
+        for t in 0..3 {
+            null.emit(ev(t));
+        }
+        assert_eq!(null.total_events(), 3);
+        assert!(null.drain().is_empty());
+    }
+}

@@ -1,0 +1,213 @@
+//! `wdb trace-summary`: per-phase / per-op time breakdown from an
+//! exported Chrome-trace document — the repo-local analogue of the
+//! paper's dispatch-vs-kernel attribution, recomputed from spans alone.
+//!
+//! The headline invariant (the "tiling proof"): every instant of virtual
+//! wall time inside `run_to_completion`'s serving loop is covered by
+//! exactly one `round` span, so summing `round` span durations out of
+//! the trace must reproduce the report's `wall_virtual_ns` (carried in
+//! `otherData`) within 1%.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::report::table::{f1, f2, TableDoc};
+use crate::report::json::Value;
+use crate::{Error, Result};
+
+use super::chrome;
+
+/// Aggregate for one event name.
+#[derive(Debug, Clone)]
+pub struct SummaryRow {
+    pub name: String,
+    /// "span" for B/E pairs, "complete" for X, "instant" for i.
+    pub kind: &'static str,
+    pub count: u64,
+    pub total_ns: f64,
+}
+
+#[derive(Debug)]
+pub struct TraceSummary {
+    /// Per-name aggregates, largest total first.
+    pub rows: Vec<SummaryRow>,
+    /// Sum of top-level `round` span durations (ns).
+    pub round_span_ns: f64,
+    /// The report's wall clock, if the exporter recorded it.
+    pub wall_virtual_ns: Option<f64>,
+    pub events: usize,
+    pub slot_tracks: usize,
+    pub dropped_events: u64,
+}
+
+impl TraceSummary {
+    /// Relative gap between the span-reconstructed round time and the
+    /// report's wall clock: `|round - wall| / wall`.
+    pub fn tiling_delta(&self) -> Option<f64> {
+        let wall = self.wall_virtual_ns?;
+        if wall <= 0.0 {
+            return None;
+        }
+        Some((self.round_span_ns - wall).abs() / wall)
+    }
+
+    /// Table T1: per-phase / per-op breakdown.
+    pub fn table(&self) -> TableDoc {
+        let mut t = TableDoc::new(
+            "T1",
+            "Per-phase / per-op time breakdown reconstructed from trace spans",
+            &["event", "kind", "count", "total (ms)", "mean (us)", "% of round"],
+        );
+        for row in &self.rows {
+            let mean_us =
+                if row.count == 0 { 0.0 } else { row.total_ns / row.count as f64 / 1e3 };
+            let share = if self.round_span_ns > 0.0 {
+                100.0 * row.total_ns / self.round_span_ns
+            } else {
+                0.0
+            };
+            t.row(vec![
+                row.name.clone(),
+                row.kind.to_string(),
+                row.count.to_string(),
+                f2(row.total_ns / 1e6),
+                f1(mean_us),
+                if row.kind == "instant" { "-".to_string() } else { f1(share) },
+            ]);
+        }
+        t.note(
+            "Span totals are wall-inclusive per name: nested spans (chunk \
+             inside round, dispatch inside replay) each count their own \
+             full extent, so percentages do not sum to 100.",
+        );
+        if let Some(delta) = self.tiling_delta() {
+            t.note(&format!(
+                "Tiling check: sum(round spans) = {:.3} ms vs report wall \
+                 {:.3} ms (delta {:.3}%).",
+                self.round_span_ns / 1e6,
+                self.wall_virtual_ns.unwrap_or(0.0) / 1e6,
+                delta * 100.0
+            ));
+        }
+        t
+    }
+}
+
+/// Aggregate a Chrome-trace document. Validates the shape first (field
+/// presence + balanced B/E pairs), so a malformed trace errors rather
+/// than summarizing garbage.
+pub fn summarize(doc: &Value) -> Result<TraceSummary> {
+    let stats = chrome::validate(doc)?;
+    let events = doc
+        .req("traceEvents")?
+        .as_arr()
+        .ok_or_else(|| Error::Json("traceEvents is not an array".to_string()))?;
+
+    // name -> (kind, count, total_ns); BTreeMap for deterministic order
+    // among equal totals.
+    let mut agg: BTreeMap<(String, &'static str), (u64, f64)> = BTreeMap::new();
+    let mut open: HashMap<(u64, u64), Vec<(String, f64)>> = HashMap::new();
+    let mut round_span_ns = 0.0;
+
+    for ev in events {
+        let ph = ev.req("ph")?.as_str().unwrap_or("");
+        if ph == "M" {
+            continue;
+        }
+        let name = ev.req("name")?.as_str().unwrap_or("?").to_string();
+        let pid = ev.req("pid")?.as_f64().unwrap_or(0.0) as u64;
+        let tid = ev.req("tid")?.as_f64().unwrap_or(0.0) as u64;
+        let ts_ns = ev.req("ts")?.as_f64().unwrap_or(0.0) * 1e3;
+        match ph {
+            "B" => open.entry((pid, tid)).or_default().push((name, ts_ns)),
+            "E" => {
+                // validate() already guaranteed the stack matches.
+                if let Some((open_name, t0)) = open.entry((pid, tid)).or_default().pop() {
+                    let dur = (ts_ns - t0).max(0.0);
+                    if open_name == "round" {
+                        round_span_ns += dur;
+                    }
+                    let e = agg.entry((open_name, "span")).or_insert((0, 0.0));
+                    e.0 += 1;
+                    e.1 += dur;
+                }
+            }
+            "X" => {
+                let dur_ns = ev.req("dur")?.as_f64().unwrap_or(0.0) * 1e3;
+                let e = agg.entry((name, "complete")).or_insert((0, 0.0));
+                e.0 += 1;
+                e.1 += dur_ns;
+            }
+            "i" => {
+                let e = agg.entry((name, "instant")).or_insert((0, 0.0));
+                e.0 += 1;
+            }
+            _ => {}
+        }
+    }
+
+    let mut rows: Vec<SummaryRow> = agg
+        .into_iter()
+        .map(|((name, kind), (count, total_ns))| SummaryRow { name, kind, count, total_ns })
+        .collect();
+    rows.sort_by(|a, b| {
+        b.total_ns.partial_cmp(&a.total_ns).unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    let other = doc.get("otherData");
+    let wall_virtual_ns = other.and_then(|o| o.get("wall_virtual_ns")).and_then(Value::as_f64);
+    let dropped_events = other
+        .and_then(|o| o.get("dropped_events"))
+        .and_then(Value::as_f64)
+        .unwrap_or(0.0) as u64;
+
+    Ok(TraceSummary {
+        rows,
+        round_span_ns,
+        wall_virtual_ns,
+        events: stats.events,
+        slot_tracks: stats.slot_tracks,
+        dropped_events,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{names, slot_track, TraceConfig, TraceSinkKind, Tracer, TRACK_ENGINE};
+
+    #[test]
+    fn summarize_reconstructs_round_time() {
+        let mut t = Tracer::new(&TraceConfig { sink: TraceSinkKind::Chrome, ring: 0 });
+        // Two rounds, 10_000 ns and 20_000 ns, with nested work.
+        t.begin(names::ROUND, TRACK_ENGINE, 0);
+        let op = t.intern("fx_matmul");
+        t.complete(op, TRACK_ENGINE, 2_000, 4_000, 0);
+        t.instant(names::TOKEN, slot_track(0), 9_000, 1);
+        t.end(names::ROUND, TRACK_ENGINE, 10_000);
+        t.begin(names::ROUND, TRACK_ENGINE, 10_000);
+        t.complete(op, TRACK_ENGINE, 12_000, 6_000, 0);
+        t.end(names::ROUND, TRACK_ENGINE, 30_000);
+        let doc = chrome::export(&t, &[("wall_virtual_ns", 30_000.0)]);
+        let sum = summarize(&doc).expect("summarize");
+        assert_eq!(sum.round_span_ns, 30_000.0);
+        assert_eq!(sum.tiling_delta(), Some(0.0));
+        assert_eq!(sum.slot_tracks, 1);
+        let round = sum.rows.iter().find(|r| r.name == "round").unwrap();
+        assert_eq!(round.count, 2);
+        let op_row = sum.rows.iter().find(|r| r.name == "fx_matmul").unwrap();
+        assert_eq!(op_row.count, 2);
+        assert_eq!(op_row.total_ns, 10_000.0);
+        let md = sum.table().to_markdown();
+        assert!(md.contains("T1"), "{md}");
+        assert!(md.contains("fx_matmul"), "{md}");
+        assert!(md.contains("Tiling check"), "{md}");
+    }
+
+    #[test]
+    fn summarize_rejects_malformed_trace() {
+        let doc =
+            crate::report::json::parse(r#"{"traceEvents": [{"ph": "B", "name": "round"}]}"#)
+                .unwrap();
+        assert!(summarize(&doc).is_err());
+    }
+}

@@ -27,6 +27,7 @@ use super::pipeline::{
 use super::profile::ImplementationProfile;
 use super::validation;
 use crate::tensor::{DType, Tensor, TensorData};
+use crate::trace::{names as trace_names, Tracer, TRACK_ENGINE};
 use crate::{Error, Result};
 
 /// Executes a named AOT kernel. Implemented by the PJRT runtime; a
@@ -101,6 +102,12 @@ pub struct Device {
     pub timeline: PhaseTimeline,
     pub stats: DeviceStats,
     pub kernel_time_policy: KernelTimePolicy,
+    /// Span tracer + always-on metrics registry. Disabled (Null sink) on
+    /// a bare device; the serving engine installs a configured tracer.
+    /// Instrumentation only READS the virtual clock — it never advances
+    /// it and never draws jitter — so enabling tracing cannot perturb
+    /// token streams.
+    pub trace: Tracer,
     /// True when a sync happened since the last submit — Metal-style
     /// sequential backpressure only builds up under back-to-back submits.
     synced_since_submit: bool,
@@ -142,6 +149,7 @@ impl Device {
             timeline: PhaseTimeline::new(),
             stats: DeviceStats::default(),
             kernel_time_policy: KernelTimePolicy::Measured,
+            trace: Tracer::disabled(),
             synced_since_submit: true,
             drift: 1.0,
             fault: None,
@@ -211,6 +219,8 @@ impl Device {
     /// `AllocFail`/`MapTimeout` are transient (the one-shot trigger is
     /// consumed, an identical retry succeeds); `DeviceLost` is fatal.
     fn fault_error(&mut self, kind: FaultKind, what: &str) -> Error {
+        let ts = self.clock.now_ns();
+        self.trace.instant(trace_names::FAULT, TRACK_ENGINE, ts, kind as u64);
         let e = match kind {
             FaultKind::DispatchFail => {
                 Error::Transient(format!("injected dispatch failure at {what}"))
@@ -277,7 +287,9 @@ impl Device {
         self.stats.bytes_written += data.len() as u64;
         let cost = WRITE_FIXED_NS + (data.len() as f64 * WRITE_PER_BYTE_NS) as u64;
         let cost = self.jitter.apply(cost, self.profile.jitter_pct);
+        let t0 = self.clock.now_ns();
         self.clock.advance_cpu(cost);
+        self.trace.complete(trace_names::UPLOAD, TRACK_ENGINE, t0, cost, data.len() as u64);
         Ok(())
     }
 
@@ -338,11 +350,15 @@ impl Device {
         let cost = self.profile.map_fixed_ns
             + (bytes.len() as f64 * self.profile.map_per_byte_ns) as u64;
         let cost = self.drifted_cost(cost);
+        let t0 = self.clock.now_ns();
         self.clock.sync(cost);
         self.synced_since_submit = true;
         self.stats.bytes_mapped += bytes.len() as u64;
         self.timeline.sync_virtual_ns += cost;
         self.timeline.sync_calls += 1;
+        let waited = self.clock.now_ns() - t0;
+        self.trace.metrics.map_wait_ns.record(waited);
+        self.trace.complete(trace_names::READBACK, TRACK_ENGINE, t0, waited, bytes.len() as u64);
         Ok(bytes)
     }
 
@@ -387,11 +403,15 @@ impl Device {
         let cost = self.profile.map_fixed_ns
             + (total as f64 * self.profile.map_per_byte_ns) as u64;
         let cost = self.drifted_cost(cost);
+        let t0 = self.clock.now_ns();
         self.clock.sync(cost);
         self.synced_since_submit = true;
         self.stats.bytes_mapped += total as u64;
         self.timeline.sync_virtual_ns += cost;
         self.timeline.sync_calls += 1;
+        let waited = self.clock.now_ns() - t0;
+        self.trace.metrics.map_wait_ns.record(waited);
+        self.trace.complete(trace_names::READBACK, TRACK_ENGINE, t0, waited, total as u64);
         Ok(out)
     }
 
@@ -452,11 +472,15 @@ impl Device {
         let cost = self.profile.map_fixed_ns
             + (total as f64 * self.profile.map_per_byte_ns) as u64;
         let cost = self.drifted_cost(cost);
+        let t0 = self.clock.now_ns();
         self.clock.sync(cost);
         self.synced_since_submit = true;
         self.stats.bytes_mapped += total as u64;
         self.timeline.sync_virtual_ns += cost;
         self.timeline.sync_calls += 1;
+        let waited = self.clock.now_ns() - t0;
+        self.trace.metrics.map_wait_ns.record(waited);
+        self.trace.complete(trace_names::READBACK, TRACK_ENGINE, t0, waited, total as u64);
         Ok(out)
     }
 

@@ -45,6 +45,14 @@
 //! drafts' dead KV rows can never enter the comparison). A failure prints
 //! the offending seed.
 //!
+//! The suite doubles as the tracer's acceptance gate: the speculative,
+//! split, and fault arms run with a live ring-sink tracer (the unified
+//! reference keeps the Null sink), so the token/KV identity asserts also
+//! prove tracing never perturbs the schedule, and every traced arm's
+//! retained stream must hold balanced LIFO span stacks on every track
+//! with zero ring drops — including across fault quarantine/replay and
+//! speculative rewind paths.
+//!
 //! Seeds are split across several #[test] fns so the default test
 //! harness runs them in parallel.
 
@@ -142,6 +150,17 @@ fn fault_cfg(seed: u64) -> EngineConfig {
     }
 }
 
+/// Arm with a live ring-sink tracer: large enough that no schedule in the
+/// suite ever wraps it, so `run_schedule` can demand zero drops plus a
+/// balanced span stack over the full retained stream.
+fn traced(mut cfg: EngineConfig) -> EngineConfig {
+    cfg.trace = wdb::trace::TraceConfig {
+        sink: wdb::trace::TraceSinkKind::Ring,
+        ring: 1 << 20,
+    };
+    cfg
+}
+
 /// Drive one engine through the schedule: submit each request at its
 /// arrival iteration, step rounds until everything drains, and spill the
 /// probe session's KV cache the first round it holds a generated token
@@ -199,6 +218,20 @@ fn run_schedule(
         it += 1;
         assert!(it < 10_000, "schedule failed to drain");
     }
+    // Tracer invariants for arms running an event-retaining sink: the
+    // ring never wrapped (so the stream below is complete) and every
+    // track's Begin/End pairs are balanced and LIFO-nested — fault
+    // quarantine, retries, and speculative rewinds included.
+    if se.tracer().on() {
+        assert_eq!(
+            se.tracer().dropped_events(),
+            0,
+            "trace ring overflowed mid-suite; raise the test ring capacity"
+        );
+        if let Err(e) = wdb::trace::validate_balance(&se.tracer().drain()) {
+            panic!("trace span-stack invariant violated: {e}");
+        }
+    }
     let done = se.drain_finished();
     let toks = ids
         .iter()
@@ -221,10 +254,13 @@ fn differential(reg: &Registry, seeds: std::ops::Range<u64>) {
             sched.target
         );
         let (u_toks, u_kv) = run_schedule(reg, unified_cfg(), &sched);
-        let (p_toks, p_kv) = run_schedule(reg, spec_cfg(), &sched);
-        let (s_toks, s_kv) = run_schedule(reg, split_cfg(), &sched);
+        // Speculative, split, and fault arms carry a live ring tracer:
+        // the identity asserts below then also pin sink-independence
+        // (tracing on vs the unified arm's Null sink moves nothing).
+        let (p_toks, p_kv) = run_schedule(reg, traced(spec_cfg()), &sched);
+        let (s_toks, s_kv) = run_schedule(reg, traced(split_cfg()), &sched);
         let (i_toks, i_kv) = run_schedule(reg, interleaved_cfg(), &sched);
-        let (f_toks, f_kv) = run_schedule(reg, fault_cfg(seed), &sched);
+        let (f_toks, f_kv) = run_schedule(reg, traced(fault_cfg(seed)), &sched);
         let (c_toks, c_kv) = run_schedule(reg, contiguous_cfg(), &sched);
         assert_eq!(u_toks, p_toks, "{ctx}: unified vs speculative token streams diverged");
         assert_eq!(u_toks, s_toks, "{ctx}: unified vs split token streams diverged");
@@ -309,7 +345,7 @@ fn speculative_fault_schedules_match_clean_unified() {
     for seed in 0..8u64 {
         let sched = gen_schedule(seed);
         let (u_toks, u_kv) = run_schedule(&reg, unified_cfg(), &sched);
-        let cfg = EngineConfig { speculate: 3, ..fault_cfg(seed) };
+        let cfg = traced(EngineConfig { speculate: 3, ..fault_cfg(seed) });
         let (f_toks, f_kv) = run_schedule(&reg, cfg, &sched);
         assert_eq!(u_toks, f_toks, "seed {seed}: spec+faults token streams diverged");
         assert_eq!(u_kv, f_kv, "seed {seed}: spec+faults spilled-KV bytes diverged");

@@ -1,0 +1,212 @@
+//! Tracer acceptance tests: the observability layer must be free —
+//! switching sinks (Null / Ring / Chrome) may never move a token, a
+//! dispatch, or a virtual nanosecond — and the exported Chrome trace must
+//! be well-formed and complete enough to reconstruct the serving
+//! timeline (the "tiling proof": summing `round` spans out of the trace
+//! reproduces the report's wall clock).
+//!
+//! Everything runs the mixed serving workload below: staggered prompt
+//! lengths spanning the chunking equivalence classes, so rounds mix
+//! prefill chunks and decode steps the way the paper's serving
+//! experiments do.
+
+use std::time::Instant;
+
+use wdb::engine::{EngineConfig, ExecMode};
+use wdb::fx::builder::FusionConfig;
+use wdb::runtime::Registry;
+use wdb::serve::{ServeConfig, ServeReport, ServingEngine};
+use wdb::trace::{TraceConfig, TraceSinkKind};
+
+const SEED: u64 = 0x7ACE;
+
+fn registry() -> Registry {
+    Registry::builtin().expect("builtin registry")
+}
+
+fn cfg_with(sink: TraceSinkKind, ring: usize) -> EngineConfig {
+    EngineConfig {
+        fusion: FusionConfig::fused(),
+        exec: ExecMode::Planned,
+        trace: TraceConfig { sink, ring },
+        ..EngineConfig::tiny_fused()
+    }
+}
+
+/// Mixed workload: prompt lengths straddle the prefill chunk (16) so the
+/// run has chunked-prefill rounds, mixed rounds, and pure decode rounds.
+const WORKLOAD: &[(usize, usize)] =
+    &[(24, 6), (15, 5), (16, 4), (33, 6), (1, 5), (17, 4)];
+
+fn prompt(plen: usize, salt: usize) -> Vec<usize> {
+    (0..plen).map(|t| 9 + (t * 13 + salt * 31) % 450).collect()
+}
+
+/// Build, run, and drain one serving engine over the mixed workload.
+/// Returns per-request token streams plus the report; the engine is
+/// handed back so Chrome-sink callers can export before dropping it.
+fn run(
+    reg: &Registry,
+    sink: TraceSinkKind,
+    ring: usize,
+) -> (Vec<Vec<usize>>, ServeReport, ServingEngine<'_>) {
+    let mut se = ServingEngine::new(
+        reg,
+        ServeConfig { engine: cfg_with(sink, ring), max_concurrent: 4 },
+    )
+    .expect("serving engine");
+    se.reseed(SEED);
+    let mut ids = Vec::with_capacity(WORKLOAD.len());
+    for (i, &(plen, gen)) in WORKLOAD.iter().enumerate() {
+        ids.push(se.submit(&prompt(plen, i), gen).expect("submit"));
+    }
+    let report = se.run_to_completion().expect("run");
+    let done = se.drain_finished();
+    let toks = ids
+        .iter()
+        .map(|id| done.iter().find(|s| s.id == *id).expect("finished").tokens.clone())
+        .collect();
+    (toks, report, se)
+}
+
+/// Sink independence: Null vs Ring vs Chrome produce bit-identical token
+/// streams, dispatch counts, and virtual wall clocks — instrumentation
+/// only reads the clock. Then the overhead gate: a live ring sink must
+/// cost at most 5% extra real wall time (min-of-5 per sink, interleaved
+/// so machine drift hits both alike, plus a 20 ms absolute floor so
+/// timer noise on sub-100 ms debug runs cannot flake the gate).
+#[test]
+fn ring_sink_is_free_and_within_overhead_budget() {
+    let reg = registry();
+    let (n_toks, n_rep, _) = run(&reg, TraceSinkKind::Null, 0);
+    let (r_toks, r_rep, se) = run(&reg, TraceSinkKind::Ring, 1 << 18);
+    assert_eq!(n_toks, r_toks, "ring sink moved a token");
+    assert_eq!(n_rep.dispatches, r_rep.dispatches, "ring sink changed dispatch count");
+    assert_eq!(n_rep.rounds, r_rep.rounds, "ring sink changed round count");
+    assert_eq!(
+        n_rep.wall_virtual_ns, r_rep.wall_virtual_ns,
+        "ring sink advanced the virtual clock"
+    );
+    assert!(r_rep.trace_events > 0, "ring sink retained nothing");
+    assert_eq!(r_rep.trace_dropped_events, 0, "test ring wrapped");
+    wdb::trace::validate_balance(&se.tracer().drain()).expect("balanced span stacks");
+    drop(se);
+
+    let mut null_min = f64::INFINITY;
+    let mut ring_min = f64::INFINITY;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        let _ = run(&reg, TraceSinkKind::Null, 0);
+        null_min = null_min.min(t0.elapsed().as_secs_f64());
+        let t0 = Instant::now();
+        let _ = run(&reg, TraceSinkKind::Ring, 1 << 18);
+        ring_min = ring_min.min(t0.elapsed().as_secs_f64());
+    }
+    assert!(
+        ring_min <= null_min * 1.05 + 0.020,
+        "ring-sink overhead gate failed: min wall {ring_min:.4}s vs null \
+         {null_min:.4}s (> 5% + 20ms)"
+    );
+}
+
+/// Chrome export shape: the document round-trips the validator, carries
+/// one lane per batch slot, names dispatches after their fx nodes, and
+/// counts one `token` instant per generated token.
+#[test]
+fn chrome_export_has_slot_tracks_op_names_and_token_instants() {
+    let reg = registry();
+    let (_, report, se) = run(&reg, TraceSinkKind::Chrome, 0);
+    let doc = se.export_chrome_trace(&report);
+    let stats = wdb::trace::chrome::validate(&doc).expect("exported trace must validate");
+    assert!(stats.span_pairs > 0, "no B/E spans exported");
+    assert!(
+        stats.slot_tracks >= 2,
+        "expected at least 2 slot lanes, got {}",
+        stats.slot_tracks
+    );
+
+    let events = doc.req("traceEvents").expect("traceEvents").as_arr().expect("array");
+    let name_of = |ev: &wdb::report::json::Value| {
+        ev.get("name").and_then(|n| n.as_str().map(str::to_string)).unwrap_or_default()
+    };
+    for well_known in ["round", "chunk", "replay", "token"] {
+        assert!(
+            events.iter().any(|e| name_of(e) == well_known),
+            "exported trace is missing '{well_known}' events"
+        );
+    }
+    assert!(
+        events.iter().any(|e| name_of(e).contains("q_proj")),
+        "dispatch events should carry fx node names (expected a *q_proj*)"
+    );
+    let token_instants = events
+        .iter()
+        .filter(|e| {
+            name_of(e) == "token"
+                && e.get("ph").and_then(|p| p.as_str()) == Some("i")
+        })
+        .count();
+    assert_eq!(
+        token_instants, report.total_tokens,
+        "one token instant per generated token"
+    );
+    let round_spans = events
+        .iter()
+        .filter(|e| {
+            name_of(e) == "round" && e.get("ph").and_then(|p| p.as_str()) == Some("B")
+        })
+        .count();
+    assert_eq!(round_spans as u64, report.rounds, "one round span per round");
+
+    // Serialize + reparse survives the validator too (what trace-summary
+    // reads back off disk).
+    let text = wdb::report::json::to_string_pretty(&doc);
+    let doc2 = wdb::report::json::parse(&text).expect("reparse");
+    wdb::trace::chrome::validate(&doc2).expect("reparsed trace must validate");
+}
+
+/// The tiling proof: `round` spans cover the serving loop's virtual wall
+/// exactly, so trace-summary's reconstruction must land within 1% of the
+/// report (here it should be exact — rounds abut with no gaps).
+#[test]
+fn round_spans_tile_the_report_wall() {
+    let reg = registry();
+    let (_, report, se) = run(&reg, TraceSinkKind::Chrome, 0);
+    let doc = se.export_chrome_trace(&report);
+    let sum = wdb::trace::summary::summarize(&doc).expect("summarize");
+    let delta = sum.tiling_delta().expect("exporter records wall_virtual_ns");
+    assert!(
+        delta <= 0.01,
+        "round spans reconstruct {:.3} ms but the report wall was {:.3} ms \
+         (delta {:.3}% > 1%)",
+        sum.round_span_ns / 1e6,
+        report.wall_virtual_ns as f64 / 1e6,
+        delta * 100.0
+    );
+    // T1 renders and names the dominant phases.
+    let md = sum.table().to_markdown();
+    assert!(md.contains("### T1"), "{md}");
+    assert!(md.contains("round"), "{md}");
+    assert!(md.contains("Tiling check"), "{md}");
+}
+
+/// Report-side histograms: recorded regardless of sink (percentiles never
+/// depend on event retention), percentile accessors are ordered, and the
+/// round histogram saw every round.
+#[test]
+fn report_histograms_record_under_the_null_sink() {
+    let reg = registry();
+    let (_, report, _) = run(&reg, TraceSinkKind::Null, 0);
+    assert_eq!(report.round_hist.count(), report.rounds, "one sample per round");
+    assert!(report.ttft_hist.count() > 0, "TTFT histogram empty");
+    assert!(report.itl_hist.count() > 0, "ITL histogram empty");
+    assert!(report.ttft_p50_ms() > 0.0);
+    assert!(report.ttft_p50_ms() <= report.ttft_p90_ms());
+    assert!(report.ttft_p90_ms() <= report.ttft_p99_ms());
+    assert!(report.itl_p50_ms() > 0.0);
+    assert!(report.itl_p50_ms() <= report.itl_p99_ms());
+    // The log-bucketed histogram quantizes within its bucket width:
+    // p50 tracks the exact mean within the paper's +/-6.25% bound scaled
+    // by the TTFT spread across the mixed workload.
+    assert!(report.mean_ttft_ms > 0.0);
+}
